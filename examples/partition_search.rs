@@ -1,0 +1,84 @@
+//! Algorithm 2 walkthrough: watch the search explore y = 1, 2, 3 on a
+//! model profile, print every intermediate objective value, and compare
+//! against layer-wise / full-merge / naive partitions.
+//!
+//! Run: `cargo run --release --example partition_search -- --codec dgc --workers 8`
+
+use mergecomp::compression::CodecKind;
+use mergecomp::netsim::Fabric;
+use mergecomp::profiles::resnet101_imagenet;
+use mergecomp::scheduler::objective::{Objective, SimObjective};
+use mergecomp::scheduler::{mergecomp_search, Partition, SearchParams};
+use mergecomp::simulator::SimSetup;
+use mergecomp::util::cli::Args;
+use mergecomp::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let kind = CodecKind::from_name(args.str_or("codec", "dgc"))?;
+    let world = args.usize_or("workers", 8);
+    let fabric = Fabric::from_name(args.str_or("fabric", "pcie"))?;
+    let profile = resnet101_imagenet();
+    let n = profile.num_tensors();
+    let setup = SimSetup {
+        profile: &profile,
+        kind,
+        fabric,
+        world,
+    };
+
+    println!(
+        "Algorithm 2: {} / {} / {} workers / {} ({} tensors)",
+        profile.name,
+        kind.name(),
+        world,
+        fabric.name,
+        n
+    );
+
+    // Reference points.
+    let mut obj = SimObjective::new(setup);
+    for (label, p) in [
+        ("layer-wise (y=N)", Partition::layer_wise(n)),
+        ("full merge (y=1)", Partition::full_merge(n)),
+        ("naive even (y=2)", Partition::naive_even(n, 2)),
+        ("naive even (y=3)", Partition::naive_even(n, 3)),
+    ] {
+        println!("  F[{label:>18}] = {}", fmt_secs(obj.eval(&p)));
+    }
+
+    // The search itself, verbose per y.
+    let mut obj = SimObjective::new(setup);
+    let out = mergecomp_search(
+        &mut obj,
+        n,
+        SearchParams {
+            y_max: args.usize_or("ymax", 3),
+            alpha: args.f64_or("alpha", 0.02),
+        },
+    );
+    println!("\nsearch trace:");
+    for (y, f) in &out.per_y {
+        println!("  best with y={y}: F = {}", fmt_secs(*f));
+    }
+    println!(
+        "\nchosen partition: {} groups, cut points {:?} ({} objective evaluations)",
+        out.partition.num_groups(),
+        &out.partition.bounds()[1..out.partition.bounds().len() - 1],
+        out.evals
+    );
+
+    // Show what the cut means in tensor terms.
+    let sizes = profile.sizes_backprop_order();
+    for j in 0..out.partition.num_groups() {
+        let r = out.partition.group_range(j);
+        let elems: usize = r.clone().map(|i| sizes[i]).sum();
+        println!(
+            "  group {j}: tensors {}..{} ({:.2}M elements)",
+            r.start,
+            r.end,
+            elems as f64 / 1e6
+        );
+    }
+    Ok(())
+}

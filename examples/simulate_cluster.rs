@@ -1,0 +1,70 @@
+//! Simulate a full cluster sweep: every codec × fabric × world size ×
+//! schedule on a chosen model profile, printing the scaling-factor matrix
+//! and a per-iteration time breakdown (compute / compression / exposed
+//! communication) — the simulator-plane view behind Figs. 2 and 4–6.
+//!
+//! Run: `cargo run --release --example simulate_cluster -- --model resnet101-imagenet`
+
+use mergecomp::compression::CodecKind;
+use mergecomp::netsim::Fabric;
+use mergecomp::profiles;
+use mergecomp::scheduler::objective::SimObjective;
+use mergecomp::scheduler::{mergecomp_search, Partition, SearchParams};
+use mergecomp::simulator::{simulate, SimSetup};
+use mergecomp::util::cli::Args;
+use mergecomp::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let profile = match args.str_or("model", "resnet50-cifar10") {
+        "resnet50-cifar10" => profiles::resnet50_cifar10(),
+        "resnet50-imagenet" => profiles::resnet50_imagenet(),
+        "resnet101-imagenet" => profiles::resnet101_imagenet(),
+        "maskrcnn" => profiles::maskrcnn_coco(),
+        "transformer" => profiles::transformer::transformer_e2e(),
+        other => anyhow::bail!("unknown model '{other}'"),
+    };
+    let worlds = args.usize_list_or("workers", &[2, 4, 8]);
+    let n = profile.num_tensors();
+
+    println!(
+        "cluster sweep: {} — {} tensors, {:.1}M parameters, A = {}",
+        profile.name,
+        n,
+        profile.total_params() as f64 / 1e6,
+        fmt_secs(profile.iter_compute_s)
+    );
+
+    for fabric in [Fabric::pcie(), Fabric::nvlink()] {
+        for &world in &worlds {
+            println!("\n--- {} / {} workers ---", fabric.name, world);
+            println!(
+                "{:<12} {:>10} {:>10} {:>12} {:>12} {:>12} {:>8}",
+                "codec", "layerwise", "mergecomp", "iter(mc)", "compress", "exposed", "groups"
+            );
+            for kind in CodecKind::paper_set() {
+                let setup = SimSetup {
+                    profile: &profile,
+                    kind,
+                    fabric,
+                    world,
+                };
+                let lw = simulate(&setup, &Partition::layer_wise(n));
+                let mut obj = SimObjective::new(setup);
+                let out = mergecomp_search(&mut obj, n, SearchParams::default());
+                let mc = simulate(&setup, &out.partition);
+                println!(
+                    "{:<12} {:>10.3} {:>10.3} {:>12} {:>12} {:>12} {:>8}",
+                    kind.name(),
+                    profile.iter_compute_s / lw.iter_time,
+                    profile.iter_compute_s / mc.iter_time,
+                    fmt_secs(mc.iter_time),
+                    fmt_secs(mc.encode_path + mc.decode_path),
+                    fmt_secs(mc.comm_exposed),
+                    out.partition.num_groups(),
+                );
+            }
+        }
+    }
+    Ok(())
+}

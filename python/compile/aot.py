@@ -1,0 +1,105 @@
+"""AOT pipeline: lower the L2 train step (and standalone L1 kernels) to HLO
+**text** and write the artifacts/ bundle the rust coordinator loads.
+
+HLO text — NOT serialized ``HloModuleProto`` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (``make artifacts``):
+    artifacts/train_step.hlo.txt         e2e config, pure-jnp fast path
+    artifacts/train_step_pallas.hlo.txt  small config, Pallas matmul inside
+    artifacts/sign_compress.hlo.txt      standalone L1 scaled-sign kernel
+    artifacts/meta.json                  tensor order/shapes for the trainer
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg: model.ModelConfig) -> str:
+    step = model.make_train_step(cfg)
+    lowered = jax.jit(step).lower(*model.example_args(cfg))
+    return to_hlo_text(lowered)
+
+
+def lower_sign_compress(n: int) -> str:
+    from .kernels.compress import scaled_sign_pallas
+
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(lambda x: (scaled_sign_pallas(x),)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def meta_for(cfg: model.ModelConfig) -> dict:
+    return {
+        "n_layers": cfg.n_layers,
+        "d_model": cfg.d_model,
+        "d_ff": cfg.d_ff,
+        "n_heads": cfg.n_heads,
+        "vocab": cfg.vocab,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "tensors": [
+            {"name": name, "shape": list(shape), "elems": int(jnp.prod(jnp.array(shape + (1,))))}
+            for name, shape in model.param_spec(cfg)
+        ],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--big", action="store_true",
+        help="also lower the ~124M-parameter config (slow; scale runs only)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def write(name, text):
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1e6:.1f} MB)")
+
+    # L2 train step, pure-jnp fast path (the trainer's default).
+    write("train_step.hlo.txt", lower_train_step(model.E2E))
+
+    # L2+L1 composition proof: Pallas matmul lowered inside the same HLO
+    # (interpret=True ⇒ plain HLO ops, runnable on the CPU PJRT client).
+    write("train_step_pallas.hlo.txt", lower_train_step(model.SMALL_PALLAS))
+
+    # Standalone L1 kernel artifact (benched against the rust codec).
+    write("sign_compress.hlo.txt", lower_sign_compress(1 << 16))
+
+    meta = {
+        "e2e": meta_for(model.E2E),
+        "pallas": meta_for(model.SMALL_PALLAS),
+    }
+    if args.big:
+        write("train_step_100m.hlo.txt", lower_train_step(model.BIG_100M))
+        meta["big"] = meta_for(model.BIG_100M)
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("wrote meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""L1 Pallas kernels for the compression hot-spots.
+
+TPU rethink of the paper's CUDA kernels (DESIGN.md §Hardware-Adaptation):
+MergeComp's "merge 161 tensors into one buffer" maps to tiling ONE flat
+gradient buffer into VMEM-sized blocks under a single ``pallas_call`` — the
+same fixed-overhead amortization the paper gets from fewer kernel launches,
+expressed as an HBM↔VMEM ``BlockSpec`` schedule instead of threadblocks.
+
+Kernels (all lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU numbers are estimated in DESIGN.md §8):
+
+- ``abs_sum_pallas``   — grid reduction: per-block |x| partial sums
+                         (pass 1 of the scaled-sign encoder).
+- ``scaled_sign_pallas`` — sign(x)·scale applied blockwise (pass 2).
+- ``threshold_mask_pallas`` — DGC's dense predicated selection: a
+                         branch-free ``where`` on VMEM tiles instead of the
+                         GPU's shared-memory radix select.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-aligned block: 8×128 f32 sublanes × 64 rows ≈ 64 KiB per VMEM tile.
+BLOCK = 8 * 128 * 8
+
+
+def _pad_to_block(x):
+    """Pad a flat vector to a BLOCK multiple (zeros are sign-positive but
+    contribute nothing to |x| sums and are trimmed after)."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x, n
+
+
+def _abs_sum_kernel(x_ref, o_ref):
+    o_ref[0] = jnp.sum(jnp.abs(x_ref[...]))
+
+
+def abs_sum_pallas(x):
+    """Σ|x| over a flat f32 vector via a gridded two-stage reduction."""
+    xp, _ = _pad_to_block(x)
+    blocks = xp.shape[0] // BLOCK
+    partial = pl.pallas_call(
+        _abs_sum_kernel,
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((blocks,), jnp.float32),
+        interpret=True,
+    )(xp)
+    return jnp.sum(partial)
+
+
+def _scaled_sign_kernel(x_ref, scale_ref, o_ref):
+    x = x_ref[...]
+    signs = jnp.where(jnp.signbit(x), -1.0, 1.0).astype(x.dtype)
+    o_ref[...] = signs * scale_ref[0]
+
+
+def scaled_sign_pallas(x):
+    """sign(x)·mean(|x|) — the EFSignSGD encode/decode fixed point, fused as
+    two single-pass Pallas stages over one flat (merged) buffer."""
+    xp, n = _pad_to_block(x)
+    scale = abs_sum_pallas(x) / jnp.float32(n)
+    blocks = xp.shape[0] // BLOCK
+    out = pl.pallas_call(
+        _scaled_sign_kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+        interpret=True,
+    )(xp, scale.reshape(1))
+    return out[:n]
+
+
+def _threshold_kernel(x_ref, thr_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.where(jnp.abs(x) >= thr_ref[0], x, jnp.zeros_like(x))
+
+
+def threshold_mask_pallas(x, thr):
+    """Predicated DGC selection: dense, branch-free masking on VMEM tiles."""
+    xp, n = _pad_to_block(x)
+    blocks = xp.shape[0] // BLOCK
+    out = pl.pallas_call(
+        _threshold_kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+        interpret=True,
+    )(xp, jnp.asarray(thr, jnp.float32).reshape(1))
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("ratio",))
+def dgc_compress_pallas(x, ratio=0.01):
+    """DGC encode on TPU shapes: sampled-threshold estimate (jnp, tiny) +
+    Pallas predicated mask (the bandwidth-bound part)."""
+    mags = jnp.abs(x.reshape(-1))
+    # Strided sample (deterministic; sampling randomness lives in the rust
+    # codec — here we want the kernel's dataflow).
+    stride = max(1, mags.size // 4096)
+    sample = mags[::stride]
+    k = jnp.maximum(1, jnp.round(ratio * sample.size)).astype(jnp.int32)
+    thr = jnp.sort(sample)[sample.size - k]
+    return threshold_mask_pallas(x, thr)

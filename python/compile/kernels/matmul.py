@@ -1,0 +1,86 @@
+"""L1 Pallas tiled matmul targeting the MXU (DESIGN.md §Hardware-Adaptation).
+
+(128, 128) output tiles with a K-loop over 128-wide slabs and f32
+accumulation — the MXU systolic-array shape, not a WMMA-fragment port.
+Lowered with ``interpret=True`` for CPU PJRT; on real TPU hardware the same
+BlockSpec schedule compiles to Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # The (i, j) output tile stays resident across the k grid dimension, so
+    # it doubles as the f32 accumulator (no scratch needed in interpret
+    # mode; on real TPU Mosaic keeps it in VMEM).
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad2(x, mult_r, mult_c):
+    r, c = x.shape
+    pr = (-r) % mult_r
+    pc = (-c) % mult_c
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+def _matmul_pallas_impl(a, b):
+    """C = A @ B for f32 2-D operands of any shape (padded to MXU tiles)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    ap = _pad2(a, TILE_M, TILE_K)
+    bp = _pad2(b, TILE_K, TILE_N)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // TILE_M, np_ // TILE_N, kp // TILE_K)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_K, TILE_N), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+# ``pallas_call`` has no automatic differentiation rule, so the train step
+# differentiates through a custom VJP whose backward pass is two more tiled
+# Pallas matmuls — exactly how a hand-written TPU kernel library wires it.
+@jax.custom_vjp
+def matmul_pallas(a, b):
+    return _matmul_pallas_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_pallas_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = _matmul_pallas_impl(g, b.T)
+    db = _matmul_pallas_impl(a.T, g)
+    return da, db
+
+
+matmul_pallas.defvjp(_matmul_fwd, _matmul_bwd)

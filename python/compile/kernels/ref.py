@@ -1,0 +1,40 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact (or tolerance-bounded)
+reference here; pytest sweeps shapes and dtypes asserting allclose. The
+references are also what the L2 model uses when ``use_pallas=False`` (the
+fast CPU path lowered into ``artifacts/train_step.hlo.txt``).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain f32 matmul with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def scaled_sign_ref(x):
+    """EFSignSGD-style scaled sign: sign(x) * mean(|x|).
+
+    This is the decode(encode(x)) fixed point of the 1-bit codec — the
+    quantity the rust ``efsignsgd`` codec transmits (sign bits + one f32
+    scale). Signs follow the IEEE sign bit, so -0.0 maps to -scale, exactly
+    like the rust bit-packing.
+    """
+    scale = jnp.mean(jnp.abs(x))
+    signs = jnp.where(jnp.signbit(x), -1.0, 1.0).astype(x.dtype)
+    return signs * scale
+
+
+def threshold_mask_ref(x, thr):
+    """DGC-style predicated sparsification: keep |x| >= thr, else 0."""
+    return jnp.where(jnp.abs(x) >= thr, x, jnp.zeros_like(x))
+
+
+def estimate_threshold_ref(x, ratio):
+    """Magnitude threshold that keeps ~ratio of |x| (exact quantile)."""
+    mags = jnp.abs(x.reshape(-1))
+    k = jnp.maximum(1, jnp.round(ratio * mags.size)).astype(jnp.int32)
+    sorted_mags = jnp.sort(mags)  # ascending
+    return sorted_mags[mags.size - k]

@@ -1,0 +1,183 @@
+"""L2: transformer language model forward/backward in JAX.
+
+The parameter list order mirrors ``rust/src/profiles/transformer.rs``
+tensor-for-tensor, so the MergeComp schedule computed in rust applies to the
+gradient tuple this model returns:
+
+    embed.weight,
+    per layer: ln1.scale, ln1.bias, attn.wq, attn.wk, attn.wv, attn.wo,
+               ln2.scale, ln2.bias, mlp.w1, mlp.b1, mlp.w2, mlp.b2,
+    ln_f.scale, ln_f.bias, head.weight
+
+``train_step(params, x, y) -> (loss, *grads)`` is the single jitted function
+AOT-lowered to HLO text; rust executes it through PJRT and owns everything
+else (compression, collectives, SGD update).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    n_layers: int = 4
+    d_model: int = 256
+    d_ff: int = 1024
+    n_heads: int = 4
+    vocab: int = 96
+    seq_len: int = 128
+    batch: int = 8
+    use_pallas: bool = False
+
+    @property
+    def head_dim(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The default end-to-end configuration (~8M params), a small config for the
+# pallas-composition artifact, and a ~124M GPT-2-small shape for scale runs;
+# must stay in sync with profiles/transformer.rs.
+E2E = ModelConfig()
+SMALL_PALLAS = ModelConfig(
+    n_layers=2, d_model=128, d_ff=256, n_heads=4, vocab=96, seq_len=64, batch=2,
+    use_pallas=True,
+)
+BIG_100M = ModelConfig(
+    n_layers=12, d_model=768, d_ff=3072, n_heads=12, vocab=32768, seq_len=512, batch=1
+)
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list — the contract with the rust trainer."""
+    spec = [("embed.weight", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}"
+        spec += [
+            (f"{p}.ln1.scale", (cfg.d_model,)),
+            (f"{p}.ln1.bias", (cfg.d_model,)),
+            (f"{p}.attn.wq", (cfg.d_model, cfg.d_model)),
+            (f"{p}.attn.wk", (cfg.d_model, cfg.d_model)),
+            (f"{p}.attn.wv", (cfg.d_model, cfg.d_model)),
+            (f"{p}.attn.wo", (cfg.d_model, cfg.d_model)),
+            (f"{p}.ln2.scale", (cfg.d_model,)),
+            (f"{p}.ln2.bias", (cfg.d_model,)),
+            (f"{p}.mlp.w1", (cfg.d_model, cfg.d_ff)),
+            (f"{p}.mlp.b1", (cfg.d_ff,)),
+            (f"{p}.mlp.w2", (cfg.d_ff, cfg.d_model)),
+            (f"{p}.mlp.b2", (cfg.d_model,)),
+        ]
+    spec += [
+        ("ln_f.scale", (cfg.d_model,)),
+        ("ln_f.bias", (cfg.d_model,)),
+        ("head.weight", (cfg.d_model, cfg.vocab)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key):
+    """Scaled-normal init; layer-norm scales start at 1, biases at 0."""
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".bias", ".b1", ".b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            std = 0.02 if name == "embed.weight" else fan_in ** -0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _mm(a, b, use_pallas):
+    if use_pallas:
+        from .kernels.matmul import matmul_pallas
+
+        # Collapse leading dims to 2-D for the tiled kernel.
+        lead = a.shape[:-1]
+        out = matmul_pallas(a.reshape(-1, a.shape[-1]), b)
+        return out.reshape(*lead, b.shape[-1])
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def forward(cfg: ModelConfig, params, x):
+    """Logits for int32 tokens x of shape (batch, seq)."""
+    it = iter(params)
+
+    embed = next(it)
+    h = embed[x]  # (B, S, D)
+    b, s, d = h.shape
+
+    # Causal mask, shared across layers.
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    for _ in range(cfg.n_layers):
+        ln1_s, ln1_b = next(it), next(it)
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        ln2_s, ln2_b = next(it), next(it)
+        w1, b1, w2, b2 = next(it), next(it), next(it), next(it)
+
+        # --- attention ----------------------------------------------------
+        a_in = _layer_norm(h, ln1_s, ln1_b)
+        q = _mm(a_in, wq, cfg.use_pallas).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = _mm(a_in, wk, cfg.use_pallas).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        v = _mm(a_in, wv, cfg.use_pallas).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+            jnp.float32(cfg.head_dim)
+        )
+        att = jnp.where(mask[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+        h = h + _mm(ctx, wo, cfg.use_pallas)
+
+        # --- MLP ------------------------------------------------------------
+        m_in = _layer_norm(h, ln2_s, ln2_b)
+        mid = jax.nn.gelu(_mm(m_in, w1, cfg.use_pallas) + b1)
+        h = h + _mm(mid, w2, cfg.use_pallas) + b2
+
+    ln_s, ln_b = next(it), next(it)
+    head = next(it)
+    h = _layer_norm(h, ln_s, ln_b)
+    return _mm(h, head, cfg.use_pallas)  # (B, S, V)
+
+
+def loss_fn(cfg: ModelConfig, params, x, y):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Returns train_step(*params, x, y) -> (loss, *grads) suitable for
+    jax.jit().lower() — flat inputs/outputs only, so the rust side can map
+    PJRT buffers positionally."""
+    n = len(param_spec(cfg))
+
+    def train_step(*args):
+        params = list(args[:n])
+        x, y = args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, x, y))(params)
+        return (loss, *grads)
+
+    return train_step
+
+
+def example_args(cfg: ModelConfig):
+    """ShapeDtypeStructs for lowering."""
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in param_spec(cfg)
+    ]
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    return (*specs, toks, toks)

@@ -1,0 +1,72 @@
+"""AOT pipeline checks: HLO text artifacts exist/parse, meta.json agrees
+with the model's parameter contract."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_tiny_train_step_is_valid_hlo():
+    cfg = model.ModelConfig(
+        n_layers=1, d_model=32, d_ff=64, n_heads=2, vocab=16, seq_len=8, batch=1
+    )
+    text = aot.lower_train_step(cfg)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # One input per tensor + x + y.
+    n_params = len(model.param_spec(cfg)) + 2
+    assert text.count("parameter(") >= n_params
+
+
+def test_meta_matches_param_spec():
+    meta = aot.meta_for(model.E2E)
+    spec = model.param_spec(model.E2E)
+    assert len(meta["tensors"]) == len(spec)
+    for m, (name, shape) in zip(meta["tensors"], spec):
+        assert m["name"] == name
+        assert tuple(m["shape"]) == shape
+        assert m["elems"] == int(np.prod(shape))
+    assert meta["vocab"] == model.E2E.vocab
+    assert meta["batch"] == model.E2E.batch
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_consistent():
+    with open(os.path.join(ART, "meta.json")) as f:
+        meta = json.load(f)
+    spec = model.param_spec(model.E2E)
+    assert len(meta["e2e"]["tensors"]) == len(spec)
+    for art in ["train_step.hlo.txt", "train_step_pallas.hlo.txt", "sign_compress.hlo.txt"]:
+        path = os.path.join(ART, art)
+        assert os.path.exists(path), art
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), art
+
+
+def test_lowered_step_executes_and_matches_eager():
+    # The lowered computation must produce the same loss as eager execution.
+    cfg = model.ModelConfig(
+        n_layers=1, d_model=32, d_ff=64, n_heads=2, vocab=16, seq_len=8, batch=1
+    )
+    step = model.make_train_step(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(0)
+    x = jnp.asarray(rs.randint(0, cfg.vocab, (cfg.batch, cfg.seq_len)), jnp.int32)
+    y = jnp.asarray(rs.randint(0, cfg.vocab, (cfg.batch, cfg.seq_len)), jnp.int32)
+
+    eager_loss = float(step(*params, x, y)[0])
+    compiled = jax.jit(step).lower(*model.example_args(cfg)).compile()
+    aot_loss = float(compiled(*params, x, y)[0])
+    assert abs(eager_loss - aot_loss) < 1e-5

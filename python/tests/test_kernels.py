@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in kernels/ref.py.
+
+Hypothesis sweeps shapes and value distributions; every kernel must match
+its reference to float32 tolerance across block-boundary sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import compress, matmul, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_vec(seed, n, scale=1.0):
+    return jnp.asarray(
+        (np.random.RandomState(seed).randn(n) * scale).astype(np.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# scaled sign (EFSignSGD encode/decode fixed point)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(min_value=1, max_value=3 * compress.BLOCK + 17),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_scaled_sign_matches_ref(n, seed, scale):
+    x = rand_vec(seed, n, scale)
+    got = compress.scaled_sign_pallas(x)
+    want = ref.scaled_sign_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-30)
+
+
+def test_scaled_sign_block_boundaries():
+    for n in [1, compress.BLOCK - 1, compress.BLOCK, compress.BLOCK + 1, 2 * compress.BLOCK]:
+        x = rand_vec(0, n)
+        np.testing.assert_allclose(
+            compress.scaled_sign_pallas(x), ref.scaled_sign_ref(x), rtol=1e-5
+        )
+
+
+def test_scaled_sign_zero_input():
+    x = jnp.zeros((100,), jnp.float32)
+    got = compress.scaled_sign_pallas(x)
+    np.testing.assert_allclose(got, np.zeros(100), atol=0)
+
+
+def test_abs_sum_padding_does_not_leak():
+    # Padding zeros must not change the scale.
+    n = compress.BLOCK + 3
+    x = rand_vec(1, n)
+    got = compress.abs_sum_pallas(x)
+    np.testing.assert_allclose(got, jnp.sum(jnp.abs(x)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# threshold mask (DGC predicated selection)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(min_value=1, max_value=2 * compress.BLOCK + 5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    thr=st.sampled_from([0.0, 0.5, 1.5, 100.0]),
+)
+def test_threshold_mask_matches_ref(n, seed, thr):
+    x = rand_vec(seed, n)
+    got = compress.threshold_mask_pallas(x, thr)
+    want = ref.threshold_mask_ref(x, thr)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dgc_compress_sparsity():
+    x = rand_vec(7, 100_000)
+    out = compress.dgc_compress_pallas(x, ratio=0.01)
+    nnz = int((np.asarray(out) != 0).sum())
+    # Sampled threshold: within 3x of the nominal k.
+    assert 100_000 * 0.01 / 3 <= nnz <= 100_000 * 0.01 * 3, nnz
+    # Every surviving value is unchanged.
+    kept = np.asarray(out)[np.asarray(out) != 0]
+    orig = np.asarray(x)[np.asarray(out) != 0]
+    np.testing.assert_array_equal(kept, orig)
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul (MXU)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(min_value=1, max_value=300),
+    k=st.integers(min_value=1, max_value=300),
+    n=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_matmul_matches_ref(m, k, n, seed):
+    rs = np.random.RandomState(seed)
+    a = jnp.asarray(rs.randn(m, k).astype(np.float32))
+    b = jnp.asarray(rs.randn(k, n).astype(np.float32))
+    got = matmul.matmul_pallas(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_tile_multiples():
+    rs = np.random.RandomState(0)
+    a = jnp.asarray(rs.randn(256, 128).astype(np.float32))
+    b = jnp.asarray(rs.randn(128, 384).astype(np.float32))
+    np.testing.assert_allclose(
+        matmul.matmul_pallas(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_gradients_via_custom_vjp():
+    rs = np.random.RandomState(3)
+    a = jnp.asarray(rs.randn(64, 32).astype(np.float32))
+    b = jnp.asarray(rs.randn(32, 16).astype(np.float32))
+
+    def f_pallas(a, b):
+        return jnp.sum(matmul.matmul_pallas(a, b) ** 2)
+
+    def f_ref(a, b):
+        return jnp.sum(ref.matmul_ref(a, b) ** 2)
+
+    ga_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_p, ga_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb_p, gb_r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# threshold estimator reference sanity
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_threshold_ref_keeps_ratio():
+    x = rand_vec(11, 10_000)
+    thr = ref.estimate_threshold_ref(x, 0.01)
+    kept = int((np.abs(np.asarray(x)) >= float(thr)).sum())
+    assert 80 <= kept <= 120, kept

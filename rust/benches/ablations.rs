@@ -1,0 +1,161 @@
+//! Ablations of MergeComp's design choices (beyond the paper's tables):
+//!
+//! 1. **α sweep** — Algorithm 2's stopping threshold vs chosen y and F.
+//! 2. **Cost-model fidelity** — Assumption 5 fitted from this host's real
+//!    codec timings: slope/intercept and R² (is h(x)=B+γx actually linear?).
+//! 3. **DGC momentum** — payload size and selection quality with vs
+//!    without momentum correction.
+//! 4. **Sampled vs exact top-k** — selection time and recall of DGC's
+//!    threshold estimate against exact selection.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::compression::{dgc::Dgc, sparse, topk, Codec, CodecKind};
+use mergecomp::netsim::Fabric;
+use mergecomp::profiles::resnet101_imagenet;
+use mergecomp::scheduler::costmodel::CostSampler;
+use mergecomp::scheduler::objective::SimObjective;
+use mergecomp::scheduler::{mergecomp_search, SearchParams};
+use mergecomp::simulator::SimSetup;
+use mergecomp::util::fmt_secs;
+use mergecomp::util::rng::Xoshiro256;
+use mergecomp::util::stats::Stopwatch;
+
+fn main() {
+    ablate_alpha();
+    ablate_cost_model_linearity();
+    ablate_dgc_momentum();
+    ablate_sampled_topk();
+    harness::done("ablations");
+}
+
+fn ablate_alpha() {
+    harness::section("ablation 1 — Algorithm 2 stopping threshold α");
+    let profile = resnet101_imagenet();
+    let n = profile.num_tensors();
+    let setup = SimSetup {
+        profile: &profile,
+        kind: CodecKind::EfSignSgd,
+        fabric: Fabric::pcie(),
+        world: 8,
+    };
+    let mut csv = harness::csv("ablate_alpha", &["alpha", "chosen_y", "f_min_s", "evals"]);
+    for alpha in [0.0, 0.01, 0.02, 0.05, 0.1, 0.5] {
+        let mut obj = SimObjective::new(setup);
+        let out = mergecomp_search(&mut obj, n, SearchParams { y_max: 4, alpha });
+        println!(
+            "alpha {alpha:<5}: y = {}, F = {}, {} evals",
+            out.partition.num_groups(),
+            fmt_secs(out.f_min),
+            out.evals
+        );
+        csv.rowd(&[
+            &alpha,
+            &out.partition.num_groups(),
+            &format!("{:.6}", out.f_min),
+            &out.evals,
+        ])
+        .unwrap();
+    }
+}
+
+fn ablate_cost_model_linearity() {
+    harness::section("ablation 2 — is Assumption 5 (h = B + γx) true on this host?");
+    let mut csv = harness::csv("ablate_costmodel", &["codec", "b_s", "g_s_per_elem", "r2"]);
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    for kind in [
+        CodecKind::Fp16,
+        CodecKind::Qsgd { bits: 8 },
+        CodecKind::EfSignSgd,
+        CodecKind::Dgc { ratio: 0.01 },
+        CodecKind::TopK { ratio: 0.01 },
+    ] {
+        let mut sampler = CostSampler::new();
+        for p in [10usize, 12, 14, 16, 18, 20] {
+            let n = 1usize << p;
+            let mut codec = kind.build(n);
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 0.02);
+            let mut rng2 = Xoshiro256::seed_from_u64(0);
+            let t = harness::time_fn(20.0, || {
+                let _ = codec.encode(&g, &mut rng2);
+            });
+            sampler.record(n, t.p50);
+        }
+        let fit = sampler.fit().unwrap();
+        println!(
+            "{:<12} B = {:>10}  γ = {:.3e} s/elem  R² = {:.4}",
+            kind.name(),
+            fmt_secs(fit.b),
+            fit.g,
+            fit.r2
+        );
+        csv.rowd(&[
+            &kind.name(),
+            &format!("{:.3e}", fit.b),
+            &format!("{:.3e}", fit.g),
+            &format!("{:.4}", fit.r2),
+        ])
+        .unwrap();
+        // Linearity must hold well enough for the analytic objective.
+        assert!(fit.r2 > 0.9, "{}: Assumption 5 fit R² = {}", kind.name(), fit.r2);
+    }
+    println!("Assumption 5 holds (R² > 0.9) for every codec measured");
+}
+
+fn ablate_dgc_momentum() {
+    harness::section("ablation 3 — DGC momentum correction");
+    let n = 1 << 18;
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let mut g = vec![0f32; n];
+    rng.fill_normal_f32(&mut g, 0.02);
+    for (label, mut codec) in [
+        ("with momentum", Dgc::new(n, 0.01)),
+        ("without momentum", Dgc::without_momentum(n, 0.01)),
+    ] {
+        let mut payloads = Vec::new();
+        for _ in 0..20 {
+            let enc = codec.encode(&g, &mut rng);
+            payloads.push(enc.wire_bytes());
+        }
+        let mean: f64 = payloads.iter().map(|&b| b as f64).sum::<f64>() / payloads.len() as f64;
+        println!(
+            "{label:<18}: mean payload {:.0} B over 20 steps (nominal k = {})",
+            mean,
+            sparse::k_for(n, 0.01)
+        );
+    }
+}
+
+fn ablate_sampled_topk() {
+    harness::section("ablation 4 — sampled threshold vs exact top-k selection");
+    let n = 1 << 20;
+    let k = sparse::k_for(n, 0.01);
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let mut g = vec![0f32; n];
+    rng.fill_normal_f32(&mut g, 1.0);
+
+    let sw = Stopwatch::start();
+    let exact = topk::select_topk_indices(&g, k, &mut rng);
+    let exact_t = sw.elapsed().as_secs_f64();
+
+    let mut dgc = Dgc::without_momentum(n, 0.01);
+    let sw = Stopwatch::start();
+    let enc = dgc.encode(&g, &mut rng);
+    let sampled_t = sw.elapsed().as_secs_f64();
+    let (sampled_idx, _) = sparse::decode(&enc.bytes);
+
+    let exact_set: std::collections::HashSet<u32> = exact.into_iter().collect();
+    let hits = sampled_idx.iter().filter(|i| exact_set.contains(i)).count();
+    let recall = hits as f64 / k as f64;
+    println!(
+        "exact quickselect: {} | sampled threshold: {} | recall of true top-k: {:.1}% (payload {}/{})",
+        fmt_secs(exact_t),
+        fmt_secs(sampled_t),
+        recall * 100.0,
+        sampled_idx.len(),
+        k
+    );
+    assert!(recall > 0.5, "sampled threshold recall too low: {recall}");
+}

@@ -1,0 +1,70 @@
+//! Micro-benchmarks of the in-process collectives: ring allreduce and ring
+//! allgather latency/throughput across payload sizes and world sizes.
+//! Verifies the α-β structure (flat latency floor, then bandwidth-bound)
+//! the Assumption-5 fit relies on.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::collectives::run_comm_group;
+use mergecomp::util::stats::Stopwatch;
+use mergecomp::util::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let mut csv = harness::csv(
+        "collectives_micro",
+        &["op", "world", "bytes", "p50_s", "gbps"],
+    );
+    let sizes = [1usize << 10, 1 << 14, 1 << 18, 1 << 22];
+    let iters = 20;
+
+    for world in [2usize, 4, 8] {
+        harness::section(&format!("collectives, {world} ranks"));
+        for &bytes in &sizes {
+            // Allreduce (f32 payload).
+            let n = bytes / 4;
+            let results = run_comm_group(world, move |c| {
+                let mut buf = vec![1.0f32; n];
+                c.allreduce_f32(&mut buf); // warm
+                let mut best = f64::INFINITY;
+                for _ in 0..iters {
+                    let sw = Stopwatch::start();
+                    c.allreduce_f32(&mut buf);
+                    best = best.min(sw.elapsed().as_secs_f64());
+                }
+                best
+            });
+            let t = results.iter().cloned().fold(f64::INFINITY, f64::min);
+            let gbps = bytes as f64 / t / 1e9;
+            println!(
+                "allreduce  {:>10}: {:>10}  ({gbps:.2} GB/s)",
+                fmt_bytes(bytes),
+                fmt_secs(t)
+            );
+            csv.rowd(&[&"allreduce", &world, &bytes, &format!("{t:.3e}"), &format!("{gbps:.3}")])
+                .unwrap();
+
+            // Allgather (per-rank payload).
+            let results = run_comm_group(world, move |c| {
+                let _ = c.allgather(vec![0u8; bytes]); // warm
+                let mut best = f64::INFINITY;
+                for _ in 0..iters {
+                    let sw = Stopwatch::start();
+                    let _ = c.allgather(vec![0u8; bytes]);
+                    best = best.min(sw.elapsed().as_secs_f64());
+                }
+                best
+            });
+            let t = results.iter().cloned().fold(f64::INFINITY, f64::min);
+            let gbps = (bytes * (world - 1)) as f64 / t / 1e9;
+            println!(
+                "allgather  {:>10}: {:>10}  ({gbps:.2} GB/s moved)",
+                fmt_bytes(bytes),
+                fmt_secs(t)
+            );
+            csv.rowd(&[&"allgather", &world, &bytes, &format!("{t:.3e}"), &format!("{gbps:.3}")])
+                .unwrap();
+        }
+    }
+    harness::done("collectives_micro");
+}

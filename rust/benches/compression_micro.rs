@@ -1,0 +1,69 @@
+//! Micro-benchmarks of the rust gradient codecs (the L3 hot path): encode
+//! and decode throughput at a realistic merged-group size, plus wire sizes
+//! and compression ratios. Feeds EXPERIMENTS.md §Perf.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::compression::CodecKind;
+use mergecomp::util::rng::Xoshiro256;
+use mergecomp::util::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let n = 1 << 22; // 4M elements = 16 MB of f32 — half a merged ResNet50
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let mut g = vec![0f32; n];
+    rng.fill_normal_f32(&mut g, 0.02);
+    let mut csv = harness::csv(
+        "compression_micro",
+        &[
+            "codec",
+            "elems",
+            "encode_p50_s",
+            "decode_p50_s",
+            "enc_gbps",
+            "dec_gbps",
+            "wire_bytes",
+            "ratio",
+        ],
+    );
+
+    harness::section(&format!("codec throughput at {} elements", n));
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    for kind in kinds {
+        let mut codec = kind.build(n);
+        let mut rng2 = Xoshiro256::seed_from_u64(1);
+        let enc_t = harness::time_fn(200.0, || {
+            let _ = codec.encode(&g, &mut rng2);
+        });
+        let enc = codec.encode(&g, &mut rng2);
+        let mut out = vec![0f32; n];
+        let dec_t = harness::time_fn(200.0, || {
+            codec.decode(&enc, &mut out);
+        });
+        let in_bytes = (4 * n) as f64;
+        let enc_gbps = in_bytes / enc_t.p50 / 1e9;
+        let dec_gbps = in_bytes / dec_t.p50 / 1e9;
+        let ratio = in_bytes / enc.wire_bytes() as f64;
+        println!(
+            "{:<12} enc {:>10} ({enc_gbps:>6.2} GB/s)  dec {:>10} ({dec_gbps:>6.2} GB/s)  wire {:>10}  ratio {ratio:>7.1}x",
+            kind.name(),
+            fmt_secs(enc_t.p50),
+            fmt_secs(dec_t.p50),
+            fmt_bytes(enc.wire_bytes()),
+        );
+        csv.rowd(&[
+            &kind.name(),
+            &n,
+            &format!("{:.3e}", enc_t.p50),
+            &format!("{:.3e}", dec_t.p50),
+            &format!("{enc_gbps:.3}"),
+            &format!("{dec_gbps:.3}"),
+            &enc.wire_bytes(),
+            &format!("{ratio:.2}"),
+        ])
+        .unwrap();
+    }
+    harness::done("compression_micro");
+}

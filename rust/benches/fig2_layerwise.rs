@@ -1,0 +1,79 @@
+//! Paper Fig. 2: scaling factors of ResNet50/CIFAR10 with *layer-wise*
+//! compression — all schemes, PCIe + NVLink, 2/4/8 GPUs. The paper's
+//! headline observation: most compression algorithms scale WORSE than the
+//! FP32 baseline because per-tensor encode/decode overhead dominates.
+//!
+//! Regenerates: results/fig2.csv with (fabric, world, codec, scaling).
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::compression::CodecKind;
+use mergecomp::netsim::Fabric;
+use mergecomp::profiles::resnet50_cifar10;
+use mergecomp::scheduler::Partition;
+use mergecomp::simulator::{scaling_factor, SimSetup};
+
+fn main() {
+    let profile = resnet50_cifar10();
+    let n = profile.num_tensors();
+    let lw = Partition::layer_wise(n);
+    let mut csv = harness::csv("fig2", &["fabric", "world", "codec", "scaling"]);
+
+    for fabric in [Fabric::pcie(), Fabric::nvlink()] {
+        harness::section(&format!(
+            "Fig 2 — layer-wise compression on {} (ResNet50/CIFAR10, batch 64)",
+            fabric.name
+        ));
+        print!("{:<12}", "codec");
+        for w in [2, 4, 8] {
+            print!(" {w:>8}GPU");
+        }
+        println!();
+        for kind in CodecKind::paper_set() {
+            print!("{:<12}", kind.name());
+            for world in [2usize, 4, 8] {
+                let setup = SimSetup {
+                    profile: &profile,
+                    kind,
+                    fabric,
+                    world,
+                };
+                let sf = scaling_factor(&setup, &lw);
+                print!(" {sf:>10.3}");
+                csv.rowd(&[&fabric.name, &world, &kind.name(), &format!("{sf:.4}")])
+                    .unwrap();
+            }
+            println!();
+        }
+    }
+
+    // The paper's qualitative claims, checked programmatically (2-GPU PCIe,
+    // the §3.2 worked-example configuration).
+    let pcie2 = |kind: CodecKind| {
+        scaling_factor(
+            &SimSetup {
+                profile: &profile,
+                kind,
+                fabric: Fabric::pcie(),
+                world: 2,
+            },
+            &lw,
+        )
+    };
+    let base = pcie2(CodecKind::Fp32);
+    for kind in [
+        CodecKind::TopK { ratio: 0.01 },
+        CodecKind::Dgc { ratio: 0.01 },
+        CodecKind::OneBit,
+    ] {
+        let sf = pcie2(kind);
+        assert!(
+            sf < 0.7 * base,
+            "paper check: {} should be >30% below FP32 on PCIe ({sf:.3} vs {base:.3})",
+            kind.name()
+        );
+    }
+    println!("\npaper-shape checks passed: Top-k/DGC/OneBit >30% below baseline on PCIe (2 GPUs)");
+    harness::done("fig2_layerwise");
+}

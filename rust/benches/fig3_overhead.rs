@@ -1,0 +1,111 @@
+//! Paper Fig. 3: (a) encoding and (b) decoding overhead per tensor vs
+//! tensor size, per algorithm; (c) tensor inventory of ResNet50/101.
+//!
+//! Two planes, reported side by side:
+//! - the **calibrated V100 model** the simulator charges (matches the
+//!   paper's absolute numbers), and
+//! - **real measurements of this repo's rust codecs** on the current host —
+//!   verifying the paper's *shape* claim (near-flat fixed cost for the
+//!   quantizers, steep growth for Top-k) holds for an independent
+//!   implementation.
+//!
+//! Regenerates: results/fig3a_encode.csv, fig3b_decode.csv, fig3c_tensors.csv.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::compression::CodecKind;
+use mergecomp::profiles::{resnet101_imagenet, resnet50_cifar10};
+use mergecomp::simulator::OverheadModel;
+use mergecomp::util::fmt_secs;
+use mergecomp::util::rng::Xoshiro256;
+
+fn main() {
+    let sizes: Vec<usize> = (6..=24).step_by(2).map(|p| 1usize << p).collect();
+    let mut enc_csv = harness::csv(
+        "fig3a_encode",
+        &["codec", "elems", "v100_model_s", "measured_rust_s"],
+    );
+    let mut dec_csv = harness::csv(
+        "fig3b_decode",
+        &["codec", "elems", "v100_model_s", "measured_rust_s"],
+    );
+    let mut rng = Xoshiro256::seed_from_u64(42);
+
+    harness::section("Fig 3a/3b — per-tensor encode/decode overhead vs size");
+    for kind in CodecKind::paper_set() {
+        if kind == CodecKind::Fp32 {
+            continue; // no compression kernels
+        }
+        let model = OverheadModel::for_codec(kind);
+        println!("\n{}:", kind.name());
+        for &n in &sizes {
+            // Skip huge sizes for slow codecs to keep the bench quick.
+            if n > (1 << 22) && matches!(kind, CodecKind::TopK { .. }) {
+                continue;
+            }
+            let mut codec = kind.build(n);
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 0.02);
+            let mut rng2 = Xoshiro256::seed_from_u64(1);
+            let enc_t = harness::time_fn(30.0, || {
+                let _ = codec.encode(&g, &mut rng2);
+            });
+            let enc = codec.encode(&g, &mut rng2);
+            let mut out = vec![0f32; n];
+            let dec_t = harness::time_fn(30.0, || {
+                codec.decode(&enc, &mut out);
+            });
+            println!(
+                "  n=2^{:<3} model enc {:>10} dec {:>10} | rust enc {:>10} dec {:>10}",
+                n.trailing_zeros(),
+                fmt_secs(model.encode.time(n)),
+                fmt_secs(model.decode.time(n)),
+                fmt_secs(enc_t.p50),
+                fmt_secs(dec_t.p50),
+            );
+            enc_csv
+                .rowd(&[
+                    &kind.name(),
+                    &n,
+                    &format!("{:.3e}", model.encode.time(n)),
+                    &format!("{:.3e}", enc_t.p50),
+                ])
+                .unwrap();
+            dec_csv
+                .rowd(&[
+                    &kind.name(),
+                    &n,
+                    &format!("{:.3e}", model.decode.time(n)),
+                    &format!("{:.3e}", dec_t.p50),
+                ])
+                .unwrap();
+        }
+    }
+
+    // Fig 3c: tensor inventories.
+    harness::section("Fig 3c — gradient tensor inventory");
+    let mut tcsv = harness::csv("fig3c_tensors", &["model", "tensor", "elems"]);
+    for p in [resnet50_cifar10(), resnet101_imagenet()] {
+        let sizes: Vec<usize> = p.tensors.iter().map(|t| t.elems).collect();
+        let total: usize = sizes.iter().sum();
+        let small = sizes.iter().filter(|&&s| s < (1 << 14)).count();
+        println!(
+            "{}: {} tensors, {:.1}M params, {} tensors below 2^14 elems ({}%)",
+            p.name,
+            p.num_tensors(),
+            total as f64 / 1e6,
+            small,
+            100 * small / p.num_tensors()
+        );
+        for t in &p.tensors {
+            tcsv.rowd(&[&p.name, &t.name, &t.elems]).unwrap();
+        }
+    }
+
+    // Paper's Fig.-3c anchor: 161 and 314 tensors.
+    assert_eq!(resnet50_cifar10().num_tensors(), 161);
+    assert_eq!(resnet101_imagenet().num_tensors(), 314);
+    println!("\npaper-shape check passed: 161 / 314 tensors");
+    harness::done("fig3_overhead");
+}

@@ -1,0 +1,55 @@
+//! Paper Fig. 4: ResNet50/CIFAR10 — baseline vs layer-wise vs MergeComp
+//! (Y=2) for all nine codecs, PCIe + NVLink, 2/4/8 GPUs.
+//!
+//! Paper headline: MergeComp+DGC up to 2.91× over baseline and 3.83× over
+//! layer-wise at 8 GPUs on PCIe; FP16+MergeComp reaches ~0.9+ scaling on
+//! NVLink. The shape checks below assert those relationships.
+
+#[path = "harness.rs"]
+mod harness;
+#[path = "figs_common.rs"]
+mod figs_common;
+
+fn main() {
+    let profile = mergecomp::profiles::resnet50_cifar10();
+    let mut csv = harness::csv("fig4", &figs_common::header());
+    let rows = figs_common::run_figure(&profile, "Fig 4", &mut csv);
+
+    // Shape checks (PCIe, 8 GPUs, DGC — the paper's headline cell).
+    let dgc8 = rows
+        .iter()
+        .find(|r| r.fabric == "pcie" && r.world == 8 && r.codec == "dgc")
+        .unwrap();
+    assert!(
+        dgc8.mergecomp / dgc8.baseline > 2.0,
+        "MergeComp+DGC vs baseline: {:.2}x (paper: up to 2.91x)",
+        dgc8.mergecomp / dgc8.baseline
+    );
+    assert!(
+        dgc8.mergecomp / dgc8.layerwise > 3.0,
+        "MergeComp+DGC vs layer-wise: {:.2}x (paper: up to 3.83x)",
+        dgc8.mergecomp / dgc8.layerwise
+    );
+    // Top-k stays compression-bound: merging barely helps (paper §5.1).
+    let topk8 = rows
+        .iter()
+        .find(|r| r.fabric == "pcie" && r.world == 8 && r.codec == "topk")
+        .unwrap();
+    assert!(
+        topk8.mergecomp / topk8.layerwise < dgc8.mergecomp / dgc8.layerwise / 1.5,
+        "Top-k must benefit far less than DGC"
+    );
+    // FP16 + MergeComp approaches linear scaling on NVLink (paper: 92%).
+    let fp16nv = rows
+        .iter()
+        .find(|r| r.fabric == "nvlink" && r.world == 8 && r.codec == "fp16")
+        .unwrap();
+    assert!(
+        fp16nv.mergecomp > 0.9,
+        "FP16+MergeComp NVLink 8GPU scaling {:.3} (paper: 0.92)",
+        fp16nv.mergecomp
+    );
+    println!("\npaper-shape checks passed (DGC 8GPU PCIe {:.2}x/{:.2}x; FP16 NVLink {:.2})",
+        dgc8.mergecomp / dgc8.baseline, dgc8.mergecomp / dgc8.layerwise, fp16nv.mergecomp);
+    harness::done("fig4_resnet50");
+}

@@ -1,0 +1,42 @@
+//! Paper Fig. 6: Mask R-CNN/COCO (batch 1) — baseline vs layer-wise vs
+//! MergeComp. Paper headline: MergeComp up to 2.33× over baseline and
+//! 1.66× over layer-wise (DGC, 8 GPUs); crucially, layer-wise compression
+//! BEATS the baseline here (few tensors ⇒ tolerable per-tensor overhead),
+//! unlike Figs. 4–5.
+
+#[path = "harness.rs"]
+mod harness;
+#[path = "figs_common.rs"]
+mod figs_common;
+
+fn main() {
+    let profile = mergecomp::profiles::maskrcnn_coco();
+    let mut csv = harness::csv("fig6", &figs_common::header());
+    let rows = figs_common::run_figure(&profile, "Fig 6", &mut csv);
+
+    // Layer-wise DGC beats the FP32 baseline on PCIe (paper §5.1).
+    let dgc8 = rows
+        .iter()
+        .find(|r| r.fabric == "pcie" && r.world == 8 && r.codec == "dgc")
+        .unwrap();
+    assert!(
+        dgc8.layerwise > dgc8.baseline,
+        "Mask R-CNN layer-wise DGC ({:.3}) must beat baseline ({:.3})",
+        dgc8.layerwise,
+        dgc8.baseline
+    );
+    // MergeComp still improves on layer-wise (paper: up to 1.66x on PCIe).
+    assert!(
+        dgc8.mergecomp / dgc8.layerwise > 1.2,
+        "MergeComp vs layer-wise {:.2}x (paper: up to 1.66x)",
+        dgc8.mergecomp / dgc8.layerwise
+    );
+    assert!(
+        dgc8.mergecomp / dgc8.baseline > 1.7,
+        "MergeComp vs baseline {:.2}x (paper: up to 2.33x)",
+        dgc8.mergecomp / dgc8.baseline
+    );
+    println!("\npaper-shape checks passed (layer-wise beats baseline; MergeComp {:.2}x/{:.2}x)",
+        dgc8.mergecomp / dgc8.baseline, dgc8.mergecomp / dgc8.layerwise);
+    harness::done("fig6_maskrcnn");
+}

@@ -1,0 +1,110 @@
+//! Shared driver for Figs. 4–6: baseline (FP32 layer-wise) vs layer-wise
+//! compression vs MergeComp (Y=2) for every codec, over PCIe and NVLink,
+//! 2/4/8 workers. Included by the per-figure bench files.
+
+#![allow(dead_code)]
+
+use mergecomp::compression::CodecKind;
+use mergecomp::metrics::CsvWriter;
+use mergecomp::netsim::Fabric;
+use mergecomp::profiles::ModelProfile;
+use mergecomp::scheduler::objective::SimObjective;
+use mergecomp::scheduler::{mergecomp_search, Partition, SearchParams};
+use mergecomp::simulator::{scaling_factor, SimSetup};
+
+pub struct FigRow {
+    pub fabric: &'static str,
+    pub world: usize,
+    pub codec: &'static str,
+    pub baseline: f64,
+    pub layerwise: f64,
+    pub mergecomp: f64,
+}
+
+/// Compute the full figure matrix; also writes `results/<name>.csv`.
+pub fn run_figure(profile: &ModelProfile, name: &str, csv: &mut CsvWriter) -> Vec<FigRow> {
+    let n = profile.num_tensors();
+    let lw = Partition::layer_wise(n);
+    let mut rows = Vec::new();
+    for fabric in [Fabric::pcie(), Fabric::nvlink()] {
+        println!(
+            "\n--- {name}: {} ({} tensors, {:.1}M params) on {} ---",
+            profile.name,
+            n,
+            profile.total_params() as f64 / 1e6,
+            fabric.name
+        );
+        println!(
+            "{:<12} {:>5} {:>10} {:>10} {:>10} {:>8} {:>8}",
+            "codec", "GPUs", "baseline", "layerwise", "mergecomp", "vs base", "vs lw"
+        );
+        for world in [2usize, 4, 8] {
+            let base_setup = SimSetup {
+                profile,
+                kind: CodecKind::Fp32,
+                fabric,
+                world,
+            };
+            let baseline = scaling_factor(&base_setup, &lw);
+            for kind in CodecKind::paper_set() {
+                if kind == CodecKind::Fp32 {
+                    continue;
+                }
+                let setup = SimSetup {
+                    profile,
+                    kind,
+                    fabric,
+                    world,
+                };
+                let layerwise = scaling_factor(&setup, &lw);
+                let mut obj = SimObjective::new(setup);
+                let out = mergecomp_search(&mut obj, n, SearchParams::default());
+                let mergecomp = profile.iter_compute_s / out.f_min;
+                println!(
+                    "{:<12} {:>5} {:>10.3} {:>10.3} {:>10.3} {:>7.2}x {:>7.2}x",
+                    kind.name(),
+                    world,
+                    baseline,
+                    layerwise,
+                    mergecomp,
+                    mergecomp / baseline,
+                    mergecomp / layerwise
+                );
+                csv.rowd(&[
+                    &fabric.name,
+                    &world,
+                    &kind.name(),
+                    &format!("{baseline:.4}"),
+                    &format!("{layerwise:.4}"),
+                    &format!("{mergecomp:.4}"),
+                ])
+                .unwrap();
+                rows.push(FigRow {
+                    fabric: fabric.name,
+                    world,
+                    codec: kind.name(),
+                    baseline,
+                    layerwise,
+                    mergecomp,
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn best_ratio<'a>(
+    rows: &'a [FigRow],
+    fabric: &str,
+    pick: impl Fn(&FigRow) -> f64,
+) -> (&'a FigRow, f64) {
+    rows.iter()
+        .filter(|r| r.fabric == fabric)
+        .map(|r| (r, pick(r)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+}
+
+pub fn header() -> Vec<&'static str> {
+    vec!["fabric", "world", "codec", "baseline", "layerwise", "mergecomp"]
+}

@@ -1,0 +1,65 @@
+//! Shared micro-bench harness (criterion is unavailable offline).
+//!
+//! Not a bench target itself — each `[[bench]]` file includes it with
+//! `#[path = "harness.rs"] mod harness;`. Provides warmup+measure timing
+//! with mean/p50/p99, criterion-style console lines, and CSV emission under
+//! `results/`.
+
+#![allow(dead_code)]
+
+use mergecomp::metrics::CsvWriter;
+use mergecomp::util::fmt_secs;
+use mergecomp::util::stats::{mean, percentile};
+use std::time::Instant;
+
+pub struct TimingStats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub iters: usize,
+}
+
+/// Time `f` with warmup; auto-scales iteration count to ~`budget_ms`.
+pub fn time_fn(budget_ms: f64, mut f: impl FnMut()) -> TimingStats {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_ms / 1e3 / once) as usize).clamp(3, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    TimingStats {
+        mean: mean(&samples),
+        p50: percentile(&samples, 50.0),
+        p99: percentile(&samples, 99.0),
+        iters,
+    }
+}
+
+pub fn print_stats(label: &str, s: &TimingStats) {
+    println!(
+        "{label:<44} mean {:>11}  p50 {:>11}  p99 {:>11}  ({} iters)",
+        fmt_secs(s.mean),
+        fmt_secs(s.p50),
+        fmt_secs(s.p99),
+        s.iters
+    );
+}
+
+/// CSV writer under results/ (created on demand).
+pub fn csv(name: &str, header: &[&str]) -> CsvWriter {
+    let path = format!("results/{name}.csv");
+    CsvWriter::create(&path, header).unwrap_or_else(|e| panic!("creating {path}: {e}"))
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+pub fn done(name: &str) {
+    println!("\n[{name}] done; CSV in results/");
+}

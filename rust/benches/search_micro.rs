@@ -1,0 +1,78 @@
+//! Algorithm 2 micro-benchmarks: wall-clock and evaluation counts of the
+//! partition search vs exhaustive enumeration (Theorem 3's O(N^{Y−2} log N)
+//! vs Lemma 1's 2^{N−1} space), across the paper's model profiles.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::compression::CodecKind;
+use mergecomp::netsim::Fabric;
+use mergecomp::profiles::{maskrcnn_coco, resnet101_imagenet, resnet50_cifar10};
+use mergecomp::scheduler::objective::{Objective, SimObjective};
+use mergecomp::scheduler::{mergecomp_search, Partition, SearchParams};
+use mergecomp::simulator::SimSetup;
+use mergecomp::util::fmt_secs;
+use mergecomp::util::stats::Stopwatch;
+
+fn main() {
+    let mut csv = harness::csv(
+        "search_micro",
+        &["model", "y_max", "evals", "wall_s", "f_min_s", "exhaustive_evals"],
+    );
+    for profile in [resnet50_cifar10(), resnet101_imagenet(), maskrcnn_coco()] {
+        let n = profile.num_tensors();
+        harness::section(&format!("Algorithm 2 on {} (N = {n})", profile.name));
+        for y_max in [2usize, 3] {
+            let setup = SimSetup {
+                profile: &profile,
+                kind: CodecKind::EfSignSgd,
+                fabric: Fabric::pcie(),
+                world: 8,
+            };
+            let mut obj = SimObjective::new(setup);
+            let sw = Stopwatch::start();
+            let out = mergecomp_search(&mut obj, n, SearchParams { y_max, alpha: 0.0 });
+            let wall = sw.elapsed().as_secs_f64();
+            // Exhaustive cost for comparison: C(N-1, y-1) evaluations.
+            let exhaustive: f64 = match y_max {
+                2 => (n - 1) as f64,
+                3 => ((n - 1) * (n - 2)) as f64 / 2.0,
+                _ => f64::NAN,
+            };
+            println!(
+                "Y={y_max}: {} evals (exhaustive would need ~{exhaustive:.0}), wall {}, F = {}",
+                out.evals,
+                fmt_secs(wall),
+                fmt_secs(out.f_min)
+            );
+            csv.rowd(&[
+                &profile.name,
+                &y_max,
+                &out.evals,
+                &format!("{wall:.4}"),
+                &format!("{:.6}", out.f_min),
+                &format!("{exhaustive:.0}"),
+            ])
+            .unwrap();
+
+            if y_max == 2 {
+                // Paper: Y=2 search needs < 50 iterations.
+                assert!(out.evals < 50, "Y=2 used {} evals", out.evals);
+                // And must match exhaustive.
+                let mut obj2 = SimObjective::new(setup);
+                let mut best = f64::INFINITY;
+                for c in 1..n {
+                    best = best.min(obj2.eval(&Partition::from_cuts(n, vec![c])));
+                }
+                assert!(
+                    out.f_min <= best * 1.001,
+                    "search {} vs exhaustive {}",
+                    out.f_min,
+                    best
+                );
+            }
+        }
+    }
+    println!("\npaper checks passed: Y=2 search <50 evals and matches exhaustive");
+    harness::done("search_micro");
+}

@@ -1,0 +1,85 @@
+//! Paper Table 2: MergeComp with Y ∈ {2, 3} vs Y = 1 (full merge), for
+//! FP16 / DGC / EFSignSGD on ResNet101/ImageNet over PCIe, 2/4/8 GPUs.
+//! Numbers are speedups normalized against Y = 1.
+//!
+//! Paper values: FP16 1.16–1.23×, DGC 1.04–1.06×, EFSignSGD 1.04–1.13×,
+//! with Y=3 ≈ Y=2 (the diminishing-returns argument for Y=2).
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::compression::CodecKind;
+use mergecomp::netsim::Fabric;
+use mergecomp::profiles::resnet101_imagenet;
+use mergecomp::scheduler::objective::SimObjective;
+use mergecomp::scheduler::{mergecomp_search, Partition, SearchParams};
+use mergecomp::simulator::{simulate, SimSetup};
+
+fn main() {
+    let profile = resnet101_imagenet();
+    let n = profile.num_tensors();
+    let mut csv = harness::csv("table2", &["codec", "world", "y", "speedup_vs_y1"]);
+
+    harness::section("Table 2 — MergeComp speedup vs Y=1 (ResNet101/ImageNet, PCIe)");
+    println!(
+        "{:<12} {:>6} {:>10} {:>10}",
+        "codec", "GPUs", "Y=2", "Y=3"
+    );
+    for kind in [
+        CodecKind::Fp16,
+        CodecKind::Dgc { ratio: 0.01 },
+        CodecKind::EfSignSgd,
+    ] {
+        for world in [2usize, 4, 8] {
+            let setup = SimSetup {
+                profile: &profile,
+                kind,
+                fabric: Fabric::pcie(),
+                world,
+            };
+            let f1 = simulate(&setup, &Partition::full_merge(n)).iter_time;
+            let mut speedups = Vec::new();
+            for y_max in [2usize, 3] {
+                let mut obj = SimObjective::new(setup);
+                let out = mergecomp_search(
+                    &mut obj,
+                    n,
+                    SearchParams {
+                        y_max,
+                        alpha: 0.0, // Table 2 explores the full Y range
+                    },
+                );
+                let speedup = f1 / out.f_min;
+                speedups.push(speedup);
+                csv.rowd(&[
+                    &kind.name(),
+                    &world,
+                    &y_max,
+                    &format!("{speedup:.3}"),
+                ])
+                .unwrap();
+            }
+            println!(
+                "{:<12} {:>6} {:>9.2}x {:>9.2}x",
+                kind.name(),
+                world,
+                speedups[0],
+                speedups[1]
+            );
+            // Paper shape: partitioning helps (≥1) and Y=3 gives at most a
+            // modest extra gain over Y=2 (the paper measures ≈0%; our cost
+            // surface yields up to ~15% for FP16's contended allreduce —
+            // recorded as a divergence in EXPERIMENTS.md).
+            assert!(speedups[0] >= 1.0 - 1e-9, "{}: Y=2 must not hurt", kind.name());
+            assert!(
+                speedups[1] >= speedups[0] - 1e-9 && speedups[1] <= speedups[0] * 1.25,
+                "{}: Y=3 ({:.3}) vs Y=2 ({:.3}) out of band",
+                kind.name(),
+                speedups[1],
+                speedups[0]
+            );
+        }
+    }
+    println!("\npaper-shape checks passed: Y≥2 helps; Y=3 ≈ Y=2 (diminishing returns)");
+    harness::done("table2_partition_y");
+}

@@ -1,0 +1,142 @@
+//! Ring allgather (variable-size payloads), broadcast and barrier.
+//!
+//! The allgather is the synchronization primitive for every compressed
+//! scheme except FP32/FP16 (paper Table 1): payload sizes differ between
+//! ranks (DGC's selection count varies), which is exactly why allreduce
+//! cannot be used for sparse tensors (§3.1).
+
+use super::Comm;
+
+/// Ring allgather: world-1 steps; at step s each rank forwards the payload
+/// it received at step s-1 (starting with its own) to the right neighbour.
+/// Bytes moved per rank: sum of all other ranks' payload sizes — bandwidth
+/// optimal for a ring.
+pub fn ring_allgather(comm: &mut Comm, mine: Vec<u8>) -> Vec<Vec<u8>> {
+    let world = comm.world();
+    let rank = comm.rank();
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); world];
+    if world == 1 {
+        out[0] = mine;
+        return out;
+    }
+    let base = comm.next_tags(world as u64);
+    let right = (rank + 1) % world;
+    let left = (rank + world - 1) % world;
+
+    out[rank] = mine;
+    // The payload that rank holds and forwards at step s originates from
+    // rank (rank - s) mod world.
+    for s in 0..world - 1 {
+        let fwd_src = (rank + world - s) % world;
+        // Tag by originating rank so a slow rank can never alias payloads.
+        comm.ep.send(right, base + fwd_src as u64, out[fwd_src].clone());
+        let recv_src = (rank + world - s - 1) % world;
+        let payload = comm.ep.recv(left, base + recv_src as u64);
+        out[recv_src] = payload;
+    }
+    out
+}
+
+/// Barrier: a zero-byte allgather.
+pub fn barrier(comm: &mut Comm) {
+    let _ = ring_allgather(comm, Vec::new());
+}
+
+/// Broadcast root's payload to all ranks (ring pipeline).
+pub fn broadcast(comm: &mut Comm, root: usize, bytes: &mut Vec<u8>) {
+    let world = comm.world();
+    let rank = comm.rank();
+    if world == 1 {
+        return;
+    }
+    let base = comm.next_tags(1);
+    let right = (rank + 1) % world;
+    let left = (rank + world - 1) % world;
+    // Pass along the ring, root -> root+1 -> ... -> root-1.
+    if rank == root {
+        comm.ep.send(right, base, bytes.clone());
+    } else {
+        *bytes = comm.ep.recv(left, base);
+        if right != root {
+            comm.ep.send(right, base, bytes.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::run_comm_group;
+
+    #[test]
+    fn allgather_uniform() {
+        let results = run_comm_group(4, |c| c.allgather(vec![c.rank() as u8; 3]));
+        for r in &results {
+            assert_eq!(r.len(), 4);
+            for (src, payload) in r.iter().enumerate() {
+                assert_eq!(payload, &vec![src as u8; 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_variable_sizes() {
+        // Rank r contributes r+1 bytes — the sparse-codec case.
+        let results = run_comm_group(5, |c| c.allgather(vec![c.rank() as u8; c.rank() + 1]));
+        for r in &results {
+            for (src, payload) in r.iter().enumerate() {
+                assert_eq!(payload.len(), src + 1);
+                assert!(payload.iter().all(|&b| b == src as u8));
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_empty_payloads() {
+        let results = run_comm_group(3, |c| c.allgather(Vec::new()));
+        for r in &results {
+            assert!(r.iter().all(|p| p.is_empty()));
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for root in 0..3 {
+            let results = run_comm_group(3, move |c| {
+                let mut data = if c.rank() == root {
+                    vec![42, root as u8]
+                } else {
+                    Vec::new()
+                };
+                c.broadcast(root, &mut data);
+                data
+            });
+            for r in results {
+                assert_eq!(r, vec![42, root as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_two_ranks() {
+        let results = run_comm_group(2, |c| c.allgather(vec![c.rank() as u8 + 10]));
+        for r in &results {
+            assert_eq!(r, &vec![vec![10], vec![11]]);
+        }
+    }
+
+    #[test]
+    fn many_sequential_allgathers() {
+        // Stresses tag sequencing: 50 ops, every rank checks every result.
+        let results = run_comm_group(3, |c| {
+            let mut ok = true;
+            for i in 0..50u8 {
+                let r = c.allgather(vec![i, c.rank() as u8]);
+                for (src, p) in r.iter().enumerate() {
+                    ok &= p == &vec![i, src as u8];
+                }
+            }
+            ok
+        });
+        assert!(results.into_iter().all(|b| b));
+    }
+}

@@ -1,0 +1,124 @@
+//! Collective communication over the in-process transport (paper Table 1:
+//! allreduce for FP32/FP16, allgather for everything else).
+//!
+//! [`Comm`] wraps a [`transport::Endpoint`] with a sequence number so every
+//! collective operation gets a unique tag space — consecutive collectives
+//! can never cross-talk even when rank arrival order skews.
+
+pub mod allgather;
+pub mod ring;
+pub mod transport;
+
+pub use transport::{mesh, run_group, Endpoint};
+
+/// Communicator: an endpoint plus a per-group op counter.
+pub struct Comm {
+    pub ep: Endpoint,
+    seq: u64,
+}
+
+impl Comm {
+    pub fn new(ep: Endpoint) -> Self {
+        Self { ep, seq: 0 }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.ep.rank()
+    }
+
+    pub fn world(&self) -> usize {
+        self.ep.world()
+    }
+
+    /// Reserve `slots` distinct tags for one collective invocation.
+    pub(crate) fn next_tags(&mut self, slots: u64) -> u64 {
+        let base = self.seq;
+        self.seq += slots;
+        base
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.ep.bytes_sent()
+    }
+
+    // -- collectives (implemented in submodules) ---------------------------
+
+    /// Synchronize all ranks.
+    pub fn barrier(&mut self) {
+        allgather::barrier(self);
+    }
+
+    /// Root's payload ends up on every rank.
+    pub fn broadcast(&mut self, root: usize, bytes: &mut Vec<u8>) {
+        allgather::broadcast(self, root, bytes);
+    }
+
+    /// Every rank contributes a (variable-size) payload; all ranks get all
+    /// payloads, indexed by source rank.
+    pub fn allgather(&mut self, mine: Vec<u8>) -> Vec<Vec<u8>> {
+        allgather::ring_allgather(self, mine)
+    }
+
+    /// In-place ring allreduce over an f32 buffer (sum).
+    pub fn allreduce_f32(&mut self, data: &mut [f32]) {
+        ring::allreduce_f32(self, data);
+    }
+
+    /// In-place ring allreduce over a wire-format buffer, reducing with the
+    /// codec's `reduce_wire` (FP32/FP16 payloads).
+    pub fn allreduce_wire(&mut self, data: &mut [u8], codec: &dyn crate::compression::Codec) {
+        ring::allreduce_wire(self, data, codec);
+    }
+}
+
+/// Spawn a fresh `world`-rank group, one thread per rank, each with a Comm.
+pub fn run_comm_group<T: Send>(
+    world: usize,
+    f: impl Fn(&mut Comm) -> T + Send + Sync,
+) -> Vec<T> {
+    run_group(world, |ep| {
+        let mut comm = Comm::new(ep);
+        f(&mut comm)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_all_ranks_pass() {
+        let results = run_comm_group(4, |c| {
+            c.barrier();
+            c.rank()
+        });
+        assert_eq!(results, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn sequence_numbers_isolate_ops() {
+        // Two allgathers back-to-back: payloads must not cross between ops.
+        let results = run_comm_group(3, |c| {
+            let first = c.allgather(vec![c.rank() as u8]);
+            let second = c.allgather(vec![10 + c.rank() as u8]);
+            (first, second)
+        });
+        for (first, second) in results {
+            assert_eq!(first, vec![vec![0], vec![1], vec![2]]);
+            assert_eq!(second, vec![vec![10], vec![11], vec![12]]);
+        }
+    }
+
+    #[test]
+    fn world_of_one_is_noop() {
+        let results = run_comm_group(1, |c| {
+            c.barrier();
+            let g = c.allgather(vec![7]);
+            let mut x = vec![3.0f32];
+            c.allreduce_f32(&mut x);
+            (g, x)
+        });
+        assert_eq!(results[0].0, vec![vec![7]]);
+        assert_eq!(results[0].1, vec![3.0]);
+    }
+}

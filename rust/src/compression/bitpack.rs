@@ -1,0 +1,227 @@
+//! Bit-packing primitives shared by the 1-bit and 2-bit codecs.
+//!
+//! Wire layout is little-endian `u32` words; element `i`'s field sits at bit
+//! `(i % per_word) * width` of word `i / per_word`. The layout is fixed so
+//! payloads from different workers can be compared/combined bit-for-bit.
+
+/// Pack one bit per element: bit set ⇔ `grad[i] >= 0`.
+/// Output has `n.div_ceil(32)` words; trailing bits of the last word are 0.
+pub fn pack_signs(grad: &[f32], out: &mut Vec<u32>) {
+    out.clear();
+    out.resize(grad.len().div_ceil(32), 0);
+    for (i, chunk) in grad.chunks(32).enumerate() {
+        let mut word = 0u32;
+        for (j, &v) in chunk.iter().enumerate() {
+            // Branch-free sign extraction: IEEE sign bit clear => >= +0.0.
+            // (-0.0 encodes as negative; decode maps it to -scale, which is
+            // fine — the value was 0 and EF re-captures the tiny error.)
+            word |= (((v.to_bits() >> 31) ^ 1) & 1) << j;
+        }
+        out[i] = word;
+    }
+}
+
+/// Unpack sign bits: `out[i] = +scale` if bit set else `-scale`.
+/// Branch-free: the (inverted) payload bit is OR-ed into the IEEE sign bit.
+pub fn unpack_signs(words: &[u32], n: usize, scale: f32, out: &mut [f32]) {
+    assert!(out.len() >= n);
+    assert!(words.len() >= n.div_ceil(32));
+    let mag = scale.to_bits() & 0x7FFF_FFFF;
+    for (chunk, &word) in out[..n].chunks_mut(32).zip(words) {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let bit = (word >> j) & 1;
+            *o = f32::from_bits(mag | ((bit ^ 1) << 31));
+        }
+    }
+}
+
+/// Accumulate `weight * (±scale)` for each sign bit into `out`.
+pub fn unpack_signs_add(words: &[u32], n: usize, scale: f32, weight: f32, out: &mut [f32]) {
+    assert!(out.len() >= n);
+    let ws = weight * scale;
+    let mag = ws.to_bits() & 0x7FFF_FFFF;
+    let sgn = (ws.to_bits() >> 31) & 1;
+    for (chunk, &word) in out[..n].chunks_mut(32).zip(words) {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let bit = ((word >> j) & 1) ^ 1 ^ sgn;
+            *o += f32::from_bits(mag | (bit << 31));
+        }
+    }
+}
+
+/// Iterate u32 words straight out of a little-endian byte buffer without
+/// allocating (hot decode path: `bytes_to_words` allocates per payload).
+#[inline]
+pub fn words_iter(bytes: &[u8]) -> impl Iterator<Item = u32> + '_ {
+    bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+}
+
+/// Branch-free unpack directly from wire bytes (no word Vec).
+pub fn unpack_signs_bytes(bytes: &[u8], n: usize, scale: f32, out: &mut [f32]) {
+    assert!(out.len() >= n);
+    assert!(bytes.len() >= n.div_ceil(32) * 4);
+    let mag = scale.to_bits() & 0x7FFF_FFFF;
+    for (chunk, word) in out[..n].chunks_mut(32).zip(words_iter(bytes)) {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let bit = (word >> j) & 1;
+            *o = f32::from_bits(mag | ((bit ^ 1) << 31));
+        }
+    }
+}
+
+/// Branch-free accumulate directly from wire bytes.
+pub fn unpack_signs_add_bytes(bytes: &[u8], n: usize, scale: f32, weight: f32, out: &mut [f32]) {
+    assert!(out.len() >= n);
+    let ws = weight * scale;
+    let mag = ws.to_bits() & 0x7FFF_FFFF;
+    let sgn = (ws.to_bits() >> 31) & 1;
+    for (chunk, word) in out[..n].chunks_mut(32).zip(words_iter(bytes)) {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let bit = ((word >> j) & 1) ^ 1 ^ sgn;
+            *o += f32::from_bits(mag | (bit << 31));
+        }
+    }
+}
+
+/// Pack 2-bit fields (values 0..=3), 16 per word.
+pub fn pack2(fields: &[u8], out: &mut Vec<u32>) {
+    out.clear();
+    out.resize(fields.len().div_ceil(16), 0);
+    for (i, chunk) in fields.chunks(16).enumerate() {
+        let mut word = 0u32;
+        for (j, &v) in chunk.iter().enumerate() {
+            debug_assert!(v < 4);
+            word |= ((v & 0b11) as u32) << (2 * j);
+        }
+        out[i] = word;
+    }
+}
+
+/// Unpack 2-bit fields.
+pub fn unpack2(words: &[u32], n: usize, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(n);
+    for i in 0..n {
+        let f = (words[i / 16] >> (2 * (i % 16))) & 0b11;
+        out.push(f as u8);
+    }
+}
+
+/// Serialize u32 words little-endian into bytes (appending).
+pub fn words_to_bytes(words: &[u32], out: &mut Vec<u8>) {
+    out.reserve(words.len() * 4);
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// View a little-endian byte slice as u32 words (copies; alignment-safe).
+pub fn bytes_to_words(bytes: &[u8]) -> Vec<u32> {
+    assert_eq!(bytes.len() % 4, 0, "byte length must be a multiple of 4");
+    bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Little helpers for writing scalar headers into wire buffers.
+pub fn push_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn read_f32(bytes: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+}
+
+pub fn read_u32(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn sign_pack_roundtrip() {
+        let g = [1.0f32, -2.0, 0.5, -0.0, 0.0, -3.0, 7.0];
+        let mut words = Vec::new();
+        pack_signs(&g, &mut words);
+        assert_eq!(words.len(), 1);
+        let mut out = vec![0f32; g.len()];
+        unpack_signs(&words, g.len(), 2.0, &mut out);
+        assert_eq!(out, vec![2.0, -2.0, 2.0, -2.0, 2.0, -2.0, 2.0]);
+    }
+
+    #[test]
+    fn sign_pack_word_boundaries() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for n in [1usize, 31, 32, 33, 63, 64, 65, 1000] {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 1.0);
+            let mut words = Vec::new();
+            pack_signs(&g, &mut words);
+            assert_eq!(words.len(), n.div_ceil(32));
+            let mut out = vec![0f32; n];
+            unpack_signs(&words, n, 1.0, &mut out);
+            for i in 0..n {
+                let want = if g[i].to_bits() >> 31 == 0 { 1.0 } else { -1.0 };
+                assert_eq!(out[i], want, "n={n} i={i} g={}", g[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn sign_add_accumulates() {
+        let g = [1.0f32, -1.0];
+        let mut words = Vec::new();
+        pack_signs(&g, &mut words);
+        let mut acc = vec![10.0f32, 10.0];
+        unpack_signs_add(&words, 2, 3.0, 0.5, &mut acc);
+        assert_eq!(acc, vec![11.5, 8.5]);
+    }
+
+    #[test]
+    fn pack2_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for n in [1usize, 15, 16, 17, 333] {
+            let fields: Vec<u8> = (0..n).map(|_| rng.gen_range(4) as u8).collect();
+            let mut words = Vec::new();
+            pack2(&fields, &mut words);
+            assert_eq!(words.len(), n.div_ceil(16));
+            let mut out = Vec::new();
+            unpack2(&words, n, &mut out);
+            assert_eq!(out, fields);
+        }
+    }
+
+    #[test]
+    fn words_bytes_roundtrip() {
+        let words = vec![0xDEADBEEFu32, 0x01020304, 0];
+        let mut bytes = Vec::new();
+        words_to_bytes(&words, &mut bytes);
+        assert_eq!(bytes.len(), 12);
+        assert_eq!(bytes_to_words(&bytes), words);
+    }
+
+    #[test]
+    fn scalar_headers() {
+        let mut buf = Vec::new();
+        push_u32(&mut buf, 42);
+        push_f32(&mut buf, -1.5);
+        assert_eq!(read_u32(&buf, 0), 42);
+        assert_eq!(read_f32(&buf, 4), -1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bytes_to_words_rejects_ragged() {
+        bytes_to_words(&[1, 2, 3]);
+    }
+}

@@ -1,0 +1,107 @@
+//! Error-feedback (EF) memory shared by EFSignSGD, OneBit and DGC.
+//!
+//! The EF recipe (Seide et al. 2014; Karimireddy et al. 2019):
+//!
+//! ```text
+//! corrected = grad + residual          // add memory
+//! payload   = C(corrected)            // compress
+//! residual  = corrected - C⁻¹(payload) // remember what was not transmitted
+//! ```
+//!
+//! Keeping the state here, keyed by the codec instance (i.e. per
+//! worker × tensor-group), is what makes MergeComp's merge change the EF
+//! granularity exactly the way the paper's Theorems 1–2 analyse.
+
+/// Residual memory for one worker × one tensor group.
+#[derive(Debug, Clone)]
+pub struct Residual {
+    r: Vec<f32>,
+}
+
+impl Residual {
+    pub fn new(n: usize) -> Self {
+        Self { r: vec![0f32; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.r.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.r.is_empty()
+    }
+
+    /// `corrected[i] = grad[i] + residual[i]` into a reusable buffer.
+    pub fn corrected(&self, grad: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(grad.len(), self.r.len());
+        out.clear();
+        out.extend(grad.iter().zip(&self.r).map(|(g, r)| g + r));
+    }
+
+    /// After compressing `corrected` into a payload that decodes to
+    /// `decoded`, store the new residual `corrected - decoded`.
+    pub fn update(&mut self, corrected: &[f32], decoded: &[f32]) {
+        assert_eq!(corrected.len(), self.r.len());
+        assert_eq!(decoded.len(), self.r.len());
+        for ((r, c), d) in self.r.iter_mut().zip(corrected).zip(decoded) {
+            *r = c - d;
+        }
+    }
+
+    /// Sparse variant: everything in `corrected` is residual *except* the
+    /// transmitted (index, value) pairs. Cheaper than materializing the dense
+    /// decode for top-k style codecs.
+    pub fn update_sparse(&mut self, corrected: &[f32], sent_idx: &[u32]) {
+        assert_eq!(corrected.len(), self.r.len());
+        self.r.copy_from_slice(corrected);
+        for &i in sent_idx {
+            self.r[i as usize] = 0.0;
+        }
+    }
+
+    /// Mutable access for fused encode paths (single-pass correct+update).
+    pub(crate) fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.r
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.r.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_ef_cycle() {
+        let mut ef = Residual::new(3);
+        let grad = [1.0f32, -2.0, 0.5];
+        let mut corrected = Vec::new();
+        ef.corrected(&grad, &mut corrected);
+        assert_eq!(corrected, vec![1.0, -2.0, 0.5]); // residual starts at 0
+
+        // Pretend the codec decoded to [1.0, -1.0, 0.0].
+        let decoded = [1.0f32, -1.0, 0.0];
+        ef.update(&corrected, &decoded);
+        ef.corrected(&grad, &mut corrected);
+        assert_eq!(corrected, vec![1.0, -3.0, 1.0]); // grad + leftover
+    }
+
+    #[test]
+    fn sparse_ef_keeps_untransmitted() {
+        let mut ef = Residual::new(4);
+        let corrected = [1.0f32, 2.0, 3.0, 4.0];
+        ef.update_sparse(&corrected, &[1, 3]);
+        let mut c2 = Vec::new();
+        ef.corrected(&[0.0; 4], &mut c2);
+        assert_eq!(c2, vec![1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn l2_norm() {
+        let mut ef = Residual::new(2);
+        ef.update(&[3.0, 4.0], &[0.0, 0.0]);
+        assert!((ef.l2() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,395 @@
+//! Dense float codecs: `fp32` (the no-compression baseline) and `fp16`
+//! (IEEE 754 binary16 with round-to-nearest-even), both synchronized with
+//! allreduce (paper Table 1). The half-precision conversion is implemented
+//! here because no `half` crate exists in the offline image.
+
+use super::{bitpack, Codec, CodecKind, Encoded};
+use crate::util::rng::Xoshiro256;
+
+// ---------------------------------------------------------------------------
+// IEEE 754 binary16 conversion (round-to-nearest-even), branchy but exact.
+// ---------------------------------------------------------------------------
+
+/// f32 -> f16 bits with round-to-nearest-even, denormal and inf/nan handling.
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN; keep a mantissa bit for NaN.
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e > 15 {
+        // Finite overflow *saturates* to the max finite half (gradient
+        // payloads must never decode to inf); true infinities pass through.
+        return sign | 0x7BFF;
+    }
+    if e >= -14 {
+        // Normal f16. 10 mantissa bits; round-to-nearest-even on bit 13.
+        let mut m = mant >> 13;
+        let rest = mant & 0x1FFF;
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            // Mantissa rounding overflowed into the exponent.
+            m = 0;
+            he += 1;
+            if he >= 0x1F {
+                return sign | 0x7BFF; // saturate, as above
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e >= -24 {
+        // Subnormal f16.
+        let full = mant | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - e) + 13;
+        let m = full >> shift;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut m = m;
+        if rest > half || (rest == half && (m & 1) == 1) {
+            m += 1;
+        }
+        return sign | (m as u16);
+    }
+    sign // underflow to ±0
+}
+
+/// f16 bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf/nan
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: normalize. value = mant * 2^-24; shifting s times
+            // until the leading 1 reaches bit 10 gives 1.x * 2^(-14-s).
+            let mut e = 0i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            let fe = (127 - 15 + e + 1) as u32;
+            sign | (fe << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// Fp32 — baseline passthrough codec.
+// ---------------------------------------------------------------------------
+
+pub struct Fp32 {
+    n: usize,
+}
+
+impl Fp32 {
+    pub fn new(n: usize) -> Self {
+        Self { n }
+    }
+}
+
+impl Codec for Fp32 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Fp32
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+        assert_eq!(grad.len(), self.n);
+        // §Perf: straight memcpy — f32 in-memory layout IS the LE wire
+        // format on every supported target.
+        let mut bytes = vec![0u8; 4 * grad.len()];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                grad.as_ptr() as *const u8,
+                bytes.as_mut_ptr(),
+                bytes.len(),
+            );
+        }
+        Encoded { bytes, n: self.n }
+    }
+
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        assert_eq!(enc.n, self.n);
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                enc.bytes.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                4 * self.n,
+            );
+        }
+    }
+
+    fn reduce_wire(&self, a: &mut [u8], b: &[u8]) {
+        assert_eq!(a.len(), b.len());
+        for i in (0..a.len()).step_by(4) {
+            let x = bitpack::read_f32(a, i) + bitpack::read_f32(b, i);
+            a[i..i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn scale_wire(&self, a: &mut [u8], factor: f32) {
+        for i in (0..a.len()).step_by(4) {
+            let x = bitpack::read_f32(a, i) * factor;
+            a[i..i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fp16 — cast to half for the wire, reduce in f32 to avoid drift.
+// ---------------------------------------------------------------------------
+
+pub struct Fp16 {
+    n: usize,
+}
+
+impl Fp16 {
+    pub fn new(n: usize) -> Self {
+        Self { n }
+    }
+}
+
+impl Codec for Fp16 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Fp16
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+        assert_eq!(grad.len(), self.n);
+        let mut bytes = vec![0u8; 2 * grad.len()];
+        encode_f16_buf(grad, &mut bytes);
+        Encoded { bytes, n: self.n }
+    }
+
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        assert_eq!(enc.n, self.n);
+        decode_f16_buf(&enc.bytes, &mut out[..self.n]);
+    }
+
+    fn reduce_wire(&self, a: &mut [u8], b: &[u8]) {
+        assert_eq!(a.len(), b.len());
+        for i in (0..a.len()).step_by(2) {
+            let xa = f16_bits_to_f32(u16::from_le_bytes([a[i], a[i + 1]]));
+            let xb = f16_bits_to_f32(u16::from_le_bytes([b[i], b[i + 1]]));
+            let s = f32_to_f16_bits(xa + xb);
+            a[i..i + 2].copy_from_slice(&s.to_le_bytes());
+        }
+    }
+
+    fn scale_wire(&self, a: &mut [u8], factor: f32) {
+        for i in (0..a.len()).step_by(2) {
+            let x = f16_bits_to_f32(u16::from_le_bytes([a[i], a[i + 1]]));
+            let s = f32_to_f16_bits(x * factor);
+            a[i..i + 2].copy_from_slice(&s.to_le_bytes());
+        }
+    }
+
+    fn wire_align(&self) -> usize {
+        2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bulk f16 conversion (§Perf): F16C SIMD (8 lanes) when the CPU has it,
+// scalar fallback otherwise. The SIMD path uses round-to-nearest-even like
+// the scalar one; overflow saturation is patched scalar-wise afterwards
+// (rare: |v| > 65504), keeping the no-inf wire guarantee.
+// ---------------------------------------------------------------------------
+
+fn encode_f16_buf(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), 2 * src.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("f16c") {
+            unsafe { encode_f16_f16c(src, dst) };
+            return;
+        }
+    }
+    for (v, d) in src.iter().zip(dst.chunks_exact_mut(2)) {
+        d.copy_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
+    }
+}
+
+fn decode_f16_buf(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len() >= 2 * dst.len(), true);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("f16c") {
+            unsafe { decode_f16_f16c(src, dst) };
+            return;
+        }
+    }
+    for (d, s) in dst.iter_mut().zip(src.chunks_exact(2)) {
+        *d = f16_bits_to_f32(u16::from_le_bytes([s[0], s[1]]));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "f16c")]
+unsafe fn encode_f16_f16c(src: &[f32], dst: &mut [u8]) {
+    use std::arch::x86_64::*;
+    let chunks = src.len() / 8;
+    for i in 0..chunks {
+        let v = _mm256_loadu_ps(src.as_ptr().add(8 * i));
+        let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(v);
+        _mm_storeu_si128(dst.as_mut_ptr().add(16 * i) as *mut __m128i, h);
+    }
+    for i in 8 * chunks..src.len() {
+        let b = f32_to_f16_bits(src[i]).to_le_bytes();
+        dst[2 * i] = b[0];
+        dst[2 * i + 1] = b[1];
+    }
+    // Patch finite overflows: hardware emits ±inf, our wire format
+    // saturates to ±65504. Scan the (half-size) OUTPUT for inf patterns —
+    // overflow is rare, so this is a read-mostly sweep.
+    for (i, h2) in dst.chunks_exact_mut(2).enumerate() {
+        let h = u16::from_le_bytes([h2[0], h2[1]]);
+        if h & 0x7FFF == 0x7C00 {
+            let b = f32_to_f16_bits(src[i]).to_le_bytes();
+            h2[0] = b[0];
+            h2[1] = b[1];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "f16c")]
+unsafe fn decode_f16_f16c(src: &[u8], dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let chunks = dst.len() / 8;
+    for i in 0..chunks {
+        let h = _mm_loadu_si128(src.as_ptr().add(16 * i) as *const __m128i);
+        let v = _mm256_cvtph_ps(h);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(8 * i), v);
+    }
+    for i in 8 * chunks..dst.len() {
+        dst[i] = f16_bits_to_f32(u16::from_le_bytes([src[2 * i], src[2 * i + 1]]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gens};
+
+    #[test]
+    fn f16_known_values() {
+        for (f, h) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3C00),
+            (-1.0, 0xBC00),
+            (2.0, 0x4000),
+            (0.5, 0x3800),
+            (65504.0, 0x7BFF),       // f16 max
+            (f32::INFINITY, 0x7C00),
+            (f32::NEG_INFINITY, 0xFC00),
+            (6.103_515_6e-5, 0x0400), // smallest normal
+            (5.960_464_5e-8, 0x0001), // smallest subnormal
+        ] {
+            assert_eq!(f32_to_f16_bits(f), h, "encode {f}");
+            if f.is_finite() {
+                assert_eq!(f16_bits_to_f32(h), f, "decode {h:#x}");
+            }
+        }
+        // Finite overflow saturates to the max finite half.
+        assert_eq!(f32_to_f16_bits(1e6), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFBFF);
+        // NaN survives.
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16; RNE
+        // rounds to even mantissa (1.0).
+        let halfway = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(halfway), 0x3C00);
+        // Just above halfway rounds up.
+        let above = 1.0 + 2f32.powi(-11) + 2f32.powi(-20);
+        assert_eq!(f32_to_f16_bits(above), 0x3C01);
+    }
+
+    #[test]
+    fn prop_f16_roundtrip_error_bounded() {
+        check("f16 relerr <= 2^-11", 300, gens::vec_f32(1..64, 10.0), |v| {
+            for &x in v {
+                if !x.is_finite() || x.abs() > 60000.0 || x.abs() < 1e-4 {
+                    continue;
+                }
+                let y = f16_bits_to_f32(f32_to_f16_bits(x));
+                let rel = ((y - x) / x).abs();
+                if rel > 4.9e-4 {
+                    return Err(format!("{x} -> {y}, rel {rel}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fp32_exact_roundtrip_and_reduce() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(1);
+        let n = 100;
+        let mut codec = Fp32::new(n);
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, 2.0);
+        let enc = codec.encode(&g, &mut rng);
+        let mut out = vec![0f32; n];
+        codec.decode(&enc, &mut out);
+        assert_eq!(out, g);
+
+        // reduce_wire == elementwise sum
+        let g2: Vec<f32> = g.iter().map(|x| x * 3.0).collect();
+        let enc2 = codec.encode(&g2, &mut rng);
+        let mut wire = enc.bytes.clone();
+        codec.reduce_wire(&mut wire, &enc2.bytes);
+        codec.scale_wire(&mut wire, 0.25);
+        let sum = Encoded { bytes: wire, n };
+        codec.decode(&sum, &mut out);
+        for i in 0..n {
+            assert!((out[i] - g[i]).abs() < 1e-6, "avg of g and 3g scaled by 1/4 = g");
+        }
+    }
+
+    #[test]
+    fn fp16_roundtrip_close() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(2);
+        let n = 64;
+        let mut codec = Fp16::new(n);
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, 1.0);
+        let enc = codec.encode(&g, &mut rng);
+        assert_eq!(enc.bytes.len(), 2 * n);
+        let mut out = vec![0f32; n];
+        codec.decode(&enc, &mut out);
+        for i in 0..n {
+            assert!((out[i] - g[i]).abs() <= 1e-3 * (1.0 + g[i].abs()));
+        }
+    }
+}

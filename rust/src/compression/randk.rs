@@ -1,0 +1,113 @@
+//! Rand-k sparsification (Stich et al. 2018): transmit k uniformly random
+//! coordinates, scaled by n/k so the compressor is unbiased
+//! (E[C(g)] = g). Selection is O(k) — the cheapest sparsifier, which is why
+//! its encoding overhead in Fig. 3 is the lowest of the sparsification family.
+
+use super::{sparse, Codec, CodecKind, Encoded};
+use crate::util::rng::Xoshiro256;
+
+pub struct RandK {
+    n: usize,
+    ratio: f64,
+    /// Unbiasedness scale n/k, applied at encode time.
+    scale: f32,
+}
+
+impl RandK {
+    pub fn new(n: usize, ratio: f64) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        let k = sparse::k_for(n, ratio);
+        Self {
+            n,
+            ratio,
+            scale: n as f32 / k as f32,
+        }
+    }
+}
+
+impl Codec for RandK {
+    fn kind(&self) -> CodecKind {
+        CodecKind::RandK { ratio: self.ratio }
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded {
+        assert_eq!(grad.len(), self.n);
+        let k = sparse::k_for(self.n, self.ratio);
+        let mut idx: Vec<u32> = rng
+            .sample_indices(self.n, k)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        idx.sort_unstable(); // deterministic wire layout given a selection
+        let val: Vec<f32> = idx.iter().map(|&i| grad[i as usize] * self.scale).collect();
+        Encoded {
+            bytes: sparse::encode(&idx, &val),
+            n: self.n,
+        }
+    }
+
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        let (idx, val) = sparse::decode(&enc.bytes);
+        sparse::scatter(&idx, &val, out);
+    }
+
+    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
+        let (idx, val) = sparse::decode(&enc.bytes);
+        sparse::scatter_add(&idx, &val, weight, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased_in_expectation() {
+        // Average many decode(encode(g)) draws; must approach g.
+        let n = 64;
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, 1.0);
+        let mut codec = RandK::new(n, 0.25);
+        let trials = 4000;
+        let mut acc = vec![0f64; n];
+        let mut out = vec![0f32; n];
+        for _ in 0..trials {
+            let enc = codec.encode(&g, &mut rng);
+            codec.decode(&enc, &mut out);
+            for i in 0..n {
+                acc[i] += out[i] as f64;
+            }
+        }
+        for i in 0..n {
+            let est = acc[i] / trials as f64;
+            assert!(
+                (est - g[i] as f64).abs() < 0.15,
+                "idx {i}: E[C(g)]={est} vs g={}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn exactly_k_entries_scaled() {
+        let n = 100;
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let g = vec![2.0f32; n];
+        let mut codec = RandK::new(n, 0.1);
+        let enc = codec.encode(&g, &mut rng);
+        let (idx, val) = sparse::decode(&enc.bytes);
+        assert_eq!(idx.len(), 10);
+        for v in val {
+            assert_eq!(v, 2.0 * 10.0, "value scaled by n/k = 10");
+        }
+        // Indices strictly increasing (sorted, distinct).
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

@@ -1,0 +1,405 @@
+//! The 1-bit quantization family (paper §2.1):
+//!
+//! - [`SignSgd`] (Bernstein et al. 2018a): transmit raw signs, decode ±1.
+//! - [`EfSignSgd`] (Karimireddy et al. 2019): signs scaled by the mean
+//!   magnitude of the *error-corrected* gradient, with EF memory — the fix
+//!   that makes signSGD convergent.
+//! - [`OneBit`] (Seide et al. 2014): threshold at 0, reconstruct with the
+//!   two conditional means (one centroid for positives, one for negatives),
+//!   with EF memory.
+//! - [`Signum`] (Bernstein et al. 2018b): sign of a momentum accumulator.
+//!
+//! All four pack 32 signs per `u32` word ([`bitpack`]), i.e. a 32× payload
+//! reduction, and synchronize via allgather (paper Table 1).
+
+use super::bitpack;
+use super::error_feedback::Residual;
+use super::{Codec, CodecKind, Encoded};
+use crate::util::rng::Xoshiro256;
+
+// ---------------------------------------------------------------------------
+// SignSGD
+// ---------------------------------------------------------------------------
+
+/// Wire: `u32 n | u32 signs[ceil(n/32)]`. Decode: ±1.
+pub struct SignSgd {
+    n: usize,
+    words: Vec<u32>, // scratch
+}
+
+impl SignSgd {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            words: Vec::new(),
+        }
+    }
+}
+
+impl Codec for SignSgd {
+    fn kind(&self) -> CodecKind {
+        CodecKind::SignSgd
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+        assert_eq!(grad.len(), self.n);
+        bitpack::pack_signs(grad, &mut self.words);
+        let mut bytes = Vec::with_capacity(4 + self.words.len() * 4);
+        bitpack::push_u32(&mut bytes, self.n as u32);
+        bitpack::words_to_bytes(&self.words, &mut bytes);
+        Encoded { bytes, n: self.n }
+    }
+
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
+        bitpack::unpack_signs_bytes(&enc.bytes[4..], n, 1.0, out);
+    }
+
+    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
+        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
+        bitpack::unpack_signs_add_bytes(&enc.bytes[4..], n, 1.0, weight, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EF-SignSGD
+// ---------------------------------------------------------------------------
+
+/// Wire: `u32 n | f32 scale | u32 signs[...]` where
+/// `scale = mean(|corrected|)` — the L1-optimal magnitude for a sign vector.
+pub struct EfSignSgd {
+    n: usize,
+    ef: Residual,
+    corrected: Vec<f32>,
+    words: Vec<u32>,
+}
+
+impl EfSignSgd {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            ef: Residual::new(n),
+            corrected: Vec::with_capacity(n),
+            words: Vec::new(),
+        }
+    }
+}
+
+impl Codec for EfSignSgd {
+    fn kind(&self) -> CodecKind {
+        CodecKind::EfSignSgd
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+        assert_eq!(grad.len(), self.n);
+        // Fused single-allocation path (§Perf): pass 1 folds the residual
+        // into `corrected` while accumulating Σ|c|; pass 2 packs the sign
+        // bits and writes the new residual c − (±scale) in place — no
+        // decoded temp, no extra sweep.
+        let mut corrected = std::mem::take(&mut self.corrected);
+        corrected.clear();
+        let residual = self.ef.as_mut_slice();
+        let mut abs_sum = 0f64;
+        for (g, r) in grad.iter().zip(residual.iter()) {
+            let c = g + r;
+            abs_sum += c.abs() as f64;
+            corrected.push(c);
+        }
+        let scale = (abs_sum / self.n as f64) as f32;
+
+        self.words.clear();
+        self.words.resize(self.n.div_ceil(32), 0);
+        let mag = scale.to_bits() & 0x7FFF_FFFF;
+        for ((chunk, rchunk), word) in corrected
+            .chunks(32)
+            .zip(residual.chunks_mut(32))
+            .zip(self.words.iter_mut())
+        {
+            let mut w = 0u32;
+            for (j, (c, r)) in chunk.iter().zip(rchunk.iter_mut()).enumerate() {
+                let sign_bit = c.to_bits() >> 31; // 1 = negative
+                w |= (sign_bit ^ 1) << j;
+                // decoded = ±scale with the same sign bit.
+                *r = c - f32::from_bits(mag | (sign_bit << 31));
+            }
+            *word = w;
+        }
+
+        let mut bytes = Vec::with_capacity(8 + self.words.len() * 4);
+        bitpack::push_u32(&mut bytes, self.n as u32);
+        bitpack::push_f32(&mut bytes, scale);
+        bitpack::words_to_bytes(&self.words, &mut bytes);
+        self.corrected = corrected;
+        Encoded { bytes, n: self.n }
+    }
+
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
+        let scale = bitpack::read_f32(&enc.bytes, 4);
+        bitpack::unpack_signs_bytes(&enc.bytes[8..], n, scale, out);
+    }
+
+    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
+        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
+        let scale = bitpack::read_f32(&enc.bytes, 4);
+        bitpack::unpack_signs_add_bytes(&enc.bytes[8..], n, scale, weight, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1-bit SGD (OneBit)
+// ---------------------------------------------------------------------------
+
+/// Wire: `u32 n | f32 pos_mean | f32 neg_mean | u32 signs[...]`.
+/// Reconstruction maps set bits to the mean of the positive values and clear
+/// bits to the mean of the negative values (k-means with fixed 0 boundary),
+/// with EF memory (Seide et al. 2014).
+pub struct OneBit {
+    n: usize,
+    ef: Residual,
+    corrected: Vec<f32>,
+    words: Vec<u32>,
+}
+
+impl OneBit {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            ef: Residual::new(n),
+            corrected: Vec::with_capacity(n),
+            words: Vec::new(),
+        }
+    }
+}
+
+impl Codec for OneBit {
+    fn kind(&self) -> CodecKind {
+        CodecKind::OneBit
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+        assert_eq!(grad.len(), self.n);
+        // Fused path (§Perf): pass 1 corrects + accumulates both centroid
+        // sums; pass 2 packs signs and rewrites the residual in place.
+        let mut corrected = std::mem::take(&mut self.corrected);
+        corrected.clear();
+        let residual = self.ef.as_mut_slice();
+        let (mut pos_sum, mut pos_cnt, mut neg_sum, mut neg_cnt) = (0f64, 0usize, 0f64, 0usize);
+        for (g, r) in grad.iter().zip(residual.iter()) {
+            let c = g + r;
+            // Match pack_signs: IEEE sign bit decides the cluster, so -0.0
+            // lands in the negative centroid just as its packed bit says.
+            if c.to_bits() >> 31 == 0 {
+                pos_sum += c as f64;
+                pos_cnt += 1;
+            } else {
+                neg_sum += c as f64;
+                neg_cnt += 1;
+            }
+            corrected.push(c);
+        }
+        let pos_mean = if pos_cnt > 0 { (pos_sum / pos_cnt as f64) as f32 } else { 0.0 };
+        let neg_mean = if neg_cnt > 0 { (neg_sum / neg_cnt as f64) as f32 } else { 0.0 };
+
+        self.words.clear();
+        self.words.resize(self.n.div_ceil(32), 0);
+        for ((chunk, rchunk), word) in corrected
+            .chunks(32)
+            .zip(residual.chunks_mut(32))
+            .zip(self.words.iter_mut())
+        {
+            let mut w = 0u32;
+            for (j, (c, r)) in chunk.iter().zip(rchunk.iter_mut()).enumerate() {
+                let neg = c.to_bits() >> 31;
+                w |= (neg ^ 1) << j;
+                *r = c - if neg == 0 { pos_mean } else { neg_mean };
+            }
+            *word = w;
+        }
+
+        let mut bytes = Vec::with_capacity(12 + self.words.len() * 4);
+        bitpack::push_u32(&mut bytes, self.n as u32);
+        bitpack::push_f32(&mut bytes, pos_mean);
+        bitpack::push_f32(&mut bytes, neg_mean);
+        bitpack::words_to_bytes(&self.words, &mut bytes);
+        self.corrected = corrected;
+        Encoded { bytes, n: self.n }
+    }
+
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
+        let pos = bitpack::read_f32(&enc.bytes, 4);
+        let neg = bitpack::read_f32(&enc.bytes, 8);
+        for (chunk, word) in out[..n]
+            .chunks_mut(32)
+            .zip(bitpack::words_iter(&enc.bytes[12..]))
+        {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = if (word >> j) & 1 == 1 { pos } else { neg };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SigNUM
+// ---------------------------------------------------------------------------
+
+/// Sign of a momentum accumulator `m ← β·m + (1-β)·g`; wire format identical
+/// to SignSGD. No EF (the momentum itself smooths the quantization noise).
+pub struct Signum {
+    n: usize,
+    beta: f32,
+    momentum: Vec<f32>,
+    words: Vec<u32>,
+}
+
+impl Signum {
+    pub fn new(n: usize, beta: f32) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        Self {
+            n,
+            beta,
+            momentum: vec![0f32; n],
+            words: Vec::new(),
+        }
+    }
+}
+
+impl Codec for Signum {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Signum { beta: self.beta }
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+        assert_eq!(grad.len(), self.n);
+        for (m, g) in self.momentum.iter_mut().zip(grad) {
+            *m = self.beta * *m + (1.0 - self.beta) * g;
+        }
+        bitpack::pack_signs(&self.momentum, &mut self.words);
+        let mut bytes = Vec::with_capacity(4 + self.words.len() * 4);
+        bitpack::push_u32(&mut bytes, self.n as u32);
+        bitpack::words_to_bytes(&self.words, &mut bytes);
+        Encoded { bytes, n: self.n }
+    }
+
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
+        bitpack::unpack_signs_bytes(&enc.bytes[4..], n, 1.0, out);
+    }
+
+    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
+        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
+        bitpack::unpack_signs_add_bytes(&enc.bytes[4..], n, 1.0, weight, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signsgd_decodes_plus_minus_one() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let g = [0.5f32, -0.25, 3.0, -0.0];
+        let mut codec = SignSgd::new(4);
+        let enc = codec.encode(&g, &mut rng);
+        let mut out = vec![0f32; 4];
+        codec.decode(&enc, &mut out);
+        assert_eq!(out, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn efsignsgd_scale_is_l1_mean() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g = [1.0f32, -3.0, 2.0, -2.0]; // mean |g| = 2.0
+        let mut codec = EfSignSgd::new(4);
+        let enc = codec.encode(&g, &mut rng);
+        let mut out = vec![0f32; 4];
+        codec.decode(&enc, &mut out);
+        assert_eq!(out, vec![2.0, -2.0, 2.0, -2.0]);
+    }
+
+    #[test]
+    fn efsignsgd_residual_compensates() {
+        // Constant gradient [4, -1]: scale starts at 2.5; EF must steer the
+        // long-run transmitted average towards the true gradient.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let g = [4.0f32, -1.0];
+        let mut codec = EfSignSgd::new(2);
+        let mut total = vec![0f32; 2];
+        let iters = 2000;
+        for _ in 0..iters {
+            let enc = codec.encode(&g, &mut rng);
+            codec.decode_add(&enc, &mut total, 1.0);
+        }
+        let avg0 = total[0] / iters as f32;
+        let avg1 = total[1] / iters as f32;
+        assert!((avg0 - 4.0).abs() < 0.2, "avg0={avg0}");
+        assert!((avg1 + 1.0).abs() < 0.2, "avg1={avg1}");
+    }
+
+    #[test]
+    fn onebit_centroids() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let g = [1.0f32, 3.0, -2.0, -4.0];
+        let mut codec = OneBit::new(4);
+        let enc = codec.encode(&g, &mut rng);
+        let mut out = vec![0f32; 4];
+        codec.decode(&enc, &mut out);
+        assert_eq!(out, vec![2.0, 2.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn onebit_all_positive_group() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let g = [1.0f32, 2.0, 3.0];
+        let mut codec = OneBit::new(3);
+        let enc = codec.encode(&g, &mut rng);
+        let mut out = vec![0f32; 3];
+        codec.decode(&enc, &mut out);
+        assert_eq!(out, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn signum_follows_momentum_not_instant_sign() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let mut codec = Signum::new(1, 0.9);
+        // Many positive steps build positive momentum…
+        for _ in 0..20 {
+            codec.encode(&[1.0], &mut rng);
+        }
+        // …then one negative step must NOT flip the transmitted sign.
+        let enc = codec.encode(&[-1.0], &mut rng);
+        let mut out = vec![0f32; 1];
+        codec.decode(&enc, &mut out);
+        assert_eq!(out[0], 1.0, "momentum dominates a single flip");
+    }
+
+    #[test]
+    fn wire_sizes_are_32x_smaller() {
+        let n = 1 << 20;
+        let fp32 = CodecKind::Fp32.wire_size(n);
+        for kind in [CodecKind::SignSgd, CodecKind::EfSignSgd, CodecKind::OneBit] {
+            let w = kind.wire_size(n);
+            let ratio = fp32 as f64 / w as f64;
+            assert!(ratio > 31.0 && ratio <= 32.5, "{}: {ratio}", kind.name());
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Shared sparse wire format for the sparsification family (Top-k, Rand-k,
+//! DGC): `u32 k | u32 idx[k] | f32 val[k]`. Indices are group-local.
+//!
+//! The format is what allgather moves between workers, so `wire_size(k)` is
+//! also what the network cost models charge for sparsified groups.
+
+use super::bitpack;
+
+/// Number of selected elements for an `n`-element group at compression
+/// `ratio` (paper: ratio = 1 - sparsity = 0.01). At least one element is
+//  always sent so progress is guaranteed on tiny groups.
+pub fn k_for(n: usize, ratio: f64) -> usize {
+    (((n as f64) * ratio).round() as usize).clamp(1, n)
+}
+
+/// Bytes on the wire for k selected elements.
+pub fn wire_size(k: usize) -> usize {
+    4 + 8 * k
+}
+
+/// Serialize (indices, values) into the sparse wire format.
+pub fn encode(idx: &[u32], val: &[f32]) -> Vec<u8> {
+    assert_eq!(idx.len(), val.len());
+    let k = idx.len();
+    let mut bytes = Vec::with_capacity(wire_size(k));
+    bitpack::push_u32(&mut bytes, k as u32);
+    for &i in idx {
+        bitpack::push_u32(&mut bytes, i);
+    }
+    for &v in val {
+        bitpack::push_f32(&mut bytes, v);
+    }
+    bytes
+}
+
+/// Parse the sparse wire format; returns (indices, values).
+pub fn decode(bytes: &[u8]) -> (Vec<u32>, Vec<f32>) {
+    let k = bitpack::read_u32(bytes, 0) as usize;
+    assert!(bytes.len() >= wire_size(k), "truncated sparse payload");
+    let mut idx = Vec::with_capacity(k);
+    let mut val = Vec::with_capacity(k);
+    for i in 0..k {
+        idx.push(bitpack::read_u32(bytes, 4 + 4 * i));
+    }
+    let voff = 4 + 4 * k;
+    for i in 0..k {
+        val.push(bitpack::read_f32(bytes, voff + 4 * i));
+    }
+    (idx, val)
+}
+
+/// Scatter values into a zeroed dense buffer.
+pub fn scatter(idx: &[u32], val: &[f32], out: &mut [f32]) {
+    out.fill(0.0);
+    for (&i, &v) in idx.iter().zip(val) {
+        out[i as usize] = v;
+    }
+}
+
+/// Scatter-add with weight (aggregation fast path; no temp dense buffer).
+pub fn scatter_add(idx: &[u32], val: &[f32], weight: f32, out: &mut [f32]) {
+    for (&i, &v) in idx.iter().zip(val) {
+        out[i as usize] += weight * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_for_clamps() {
+        assert_eq!(k_for(1000, 0.01), 10);
+        assert_eq!(k_for(10, 0.01), 1, "at least one element");
+        assert_eq!(k_for(10, 2.0), 10, "never more than n");
+        assert_eq!(k_for(1, 0.5), 1);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let idx = vec![3u32, 7, 100];
+        let val = vec![1.5f32, -2.0, 0.25];
+        let bytes = encode(&idx, &val);
+        assert_eq!(bytes.len(), wire_size(3));
+        let (i2, v2) = decode(&bytes);
+        assert_eq!(i2, idx);
+        assert_eq!(v2, val);
+    }
+
+    #[test]
+    fn empty_payload() {
+        let bytes = encode(&[], &[]);
+        assert_eq!(bytes.len(), 4);
+        let (i, v) = decode(&bytes);
+        assert!(i.is_empty() && v.is_empty());
+    }
+
+    #[test]
+    fn scatter_and_add() {
+        let idx = [1u32, 3];
+        let val = [5.0f32, -1.0];
+        let mut dense = vec![9f32; 4];
+        scatter(&idx, &val, &mut dense);
+        assert_eq!(dense, vec![0.0, 5.0, 0.0, -1.0]);
+        scatter_add(&idx, &val, 2.0, &mut dense);
+        assert_eq!(dense, vec![0.0, 15.0, 0.0, -3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncated")]
+    fn truncated_payload_panics() {
+        let mut bytes = encode(&[1, 2], &[1.0, 2.0]);
+        bytes.truncate(8);
+        decode(&bytes);
+    }
+}

@@ -1,0 +1,146 @@
+//! TernGrad (Wen et al. 2017): ternary quantization. Each element becomes
+//! `s_max * sign(v) * b` with `b ∈ {0, 1}` drawn so the compressor is
+//! unbiased: `P(b=1) = |v| / s_max` where `s_max = max|g|`.
+//!
+//! Wire: `u32 n | f32 s_max | 2-bit trits` (00 = zero, 01 = +1, 10 = -1),
+//! 16 trits per u32 word.
+
+use super::{bitpack, Codec, CodecKind, Encoded};
+use crate::util::rng::Xoshiro256;
+
+pub struct TernGrad {
+    n: usize,
+    trits: Vec<u8>,  // scratch
+    words: Vec<u32>, // scratch
+}
+
+impl TernGrad {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            trits: Vec::with_capacity(n),
+            words: Vec::new(),
+        }
+    }
+}
+
+impl Codec for TernGrad {
+    fn kind(&self) -> CodecKind {
+        CodecKind::TernGrad
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded {
+        assert_eq!(grad.len(), self.n);
+        let s_max = grad.iter().fold(0f32, |m, v| m.max(v.abs()));
+        self.trits.clear();
+        if s_max == 0.0 {
+            self.trits.resize(self.n, 0);
+        } else {
+            // §Perf: multiply by 1/s_max instead of dividing. (RNG draw
+            // batching was tried and reverted — slower; EXPERIMENTS.md §Perf.)
+            let inv = 1.0 / s_max;
+            for &v in grad {
+                let fire = rng.next_f32() < v.abs() * inv;
+                self.trits.push(match (fire, v < 0.0) {
+                    (false, _) => 0b00,
+                    (true, false) => 0b01,
+                    (true, true) => 0b10,
+                });
+            }
+        }
+        bitpack::pack2(&self.trits, &mut self.words);
+        let mut bytes = Vec::with_capacity(8 + self.words.len() * 4);
+        bitpack::push_u32(&mut bytes, self.n as u32);
+        bitpack::push_f32(&mut bytes, s_max);
+        bitpack::words_to_bytes(&self.words, &mut bytes);
+        Encoded { bytes, n: self.n }
+    }
+
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
+        let s_max = bitpack::read_f32(&enc.bytes, 4);
+        let words = bitpack::bytes_to_words(&enc.bytes[8..]);
+        for (i, o) in out.iter_mut().enumerate().take(n) {
+            let t = (words[i / 16] >> (2 * (i % 16))) & 0b11;
+            *o = match t {
+                0b01 => s_max,
+                0b10 => -s_max,
+                _ => 0.0,
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_values_are_ternary() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 300;
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, 1.0);
+        let s_max = g.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let mut codec = TernGrad::new(n);
+        let enc = codec.encode(&g, &mut rng);
+        let mut out = vec![0f32; n];
+        codec.decode(&enc, &mut out);
+        for &v in &out {
+            assert!(v == 0.0 || v == s_max || v == -s_max, "non-ternary {v}");
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g = [0.8f32, -0.4, 0.1, 1.0];
+        let mut codec = TernGrad::new(4);
+        let trials = 30_000;
+        let mut acc = [0f64; 4];
+        let mut out = vec![0f32; 4];
+        for _ in 0..trials {
+            let enc = codec.encode(&g, &mut rng);
+            codec.decode(&enc, &mut out);
+            for i in 0..4 {
+                acc[i] += out[i] as f64;
+            }
+        }
+        for i in 0..4 {
+            let est = acc[i] / trials as f64;
+            assert!(
+                (est - g[i] as f64).abs() < 0.02,
+                "idx {i}: E={est} vs {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn max_element_always_fires() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let g = [0.0f32, -2.0, 1.0];
+        let mut codec = TernGrad::new(3);
+        for _ in 0..50 {
+            let enc = codec.encode(&g, &mut rng);
+            let mut out = vec![0f32; 3];
+            codec.decode(&enc, &mut out);
+            assert_eq!(out[1], -2.0, "p = |v|/s_max = 1 for the max element");
+            assert_eq!(out[0], 0.0, "zero never fires");
+        }
+    }
+
+    #[test]
+    fn zero_gradient_safe() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut codec = TernGrad::new(5);
+        let enc = codec.encode(&[0.0; 5], &mut rng);
+        let mut out = vec![9f32; 5];
+        codec.decode(&enc, &mut out);
+        assert_eq!(out, vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Top-k sparsification (Aji & Heafield 2017): transmit the k
+//! largest-magnitude gradients. The paper observes its bottleneck is the
+//! `top-k()` selection itself (§5.1) — we implement an exact O(n) expected
+//! quickselect over magnitudes (GPU implementations pay a similar price,
+//! which is why MergeComp cannot rescue Top-k; see Fig. 4 discussion).
+//!
+//! Top-k as evaluated in the paper carries no error feedback (DGC is the
+//! EF/momentum-corrected variant).
+
+use super::{sparse, Codec, CodecKind, Encoded};
+use crate::util::rng::Xoshiro256;
+
+pub struct TopK {
+    n: usize,
+    ratio: f64,
+}
+
+impl TopK {
+    pub fn new(n: usize, ratio: f64) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0, "ratio must be in (0, 1]");
+        Self { n, ratio }
+    }
+}
+
+/// Select the indices of the k largest |values| (exact, expected O(n)).
+/// Returns indices in unspecified order.
+pub fn select_topk_indices(values: &[f32], k: usize, rng: &mut Xoshiro256) -> Vec<u32> {
+    assert!(k <= values.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == values.len() {
+        return (0..values.len() as u32).collect();
+    }
+    // Quickselect on an index permutation by |value| descending.
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    let mut lo = 0usize;
+    let mut hi = idx.len();
+    let target = k;
+    while hi - lo > 1 {
+        // Random pivot defeats adversarial orderings.
+        let pivot_i = lo + rng.gen_range(hi - lo);
+        let pivot = values[idx[pivot_i] as usize].abs();
+        // 3-way partition: > pivot | == pivot | < pivot
+        let mut lt = lo; // end of ">" region
+        let mut gt = hi; // start of "<" region
+        let mut i = lo;
+        while i < gt {
+            let v = values[idx[i] as usize].abs();
+            if v > pivot {
+                idx.swap(i, lt);
+                lt += 1;
+                i += 1;
+            } else if v < pivot {
+                gt -= 1;
+                idx.swap(i, gt);
+            } else {
+                i += 1;
+            }
+        }
+        if target <= lt {
+            hi = lt;
+        } else if target < gt {
+            // target falls inside the == region: any split of equal
+            // magnitudes is a valid top-k boundary — done.
+            break;
+        } else {
+            lo = gt;
+        }
+    }
+    idx.truncate(k);
+    idx
+}
+
+impl Codec for TopK {
+    fn kind(&self) -> CodecKind {
+        CodecKind::TopK { ratio: self.ratio }
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded {
+        assert_eq!(grad.len(), self.n);
+        let k = sparse::k_for(self.n, self.ratio);
+        let idx = select_topk_indices(grad, k, rng);
+        let val: Vec<f32> = idx.iter().map(|&i| grad[i as usize]).collect();
+        Encoded {
+            bytes: sparse::encode(&idx, &val),
+            n: self.n,
+        }
+    }
+
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        let (idx, val) = sparse::decode(&enc.bytes);
+        sparse::scatter(&idx, &val, out);
+    }
+
+    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
+        let (idx, val) = sparse::decode(&enc.bytes);
+        sparse::scatter_add(&idx, &val, weight, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gens};
+
+    #[test]
+    fn selects_exact_topk() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let g = [0.1f32, -5.0, 2.0, 0.0, -3.0, 1.0];
+        let idx = select_topk_indices(&g, 3, &mut rng);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 2, 4], "top-3 magnitudes are -5, -3, 2");
+    }
+
+    #[test]
+    fn ties_still_return_k() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g = [1.0f32; 64];
+        let idx = select_topk_indices(&g, 10, &mut rng);
+        assert_eq!(idx.len(), 10);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn prop_selection_is_correct() {
+        check(
+            "topk selects the k largest magnitudes",
+            128,
+            gens::pair(gens::vec_f32(1..400, 1.0), gens::usize_in(0..400)),
+            |(v, kraw)| {
+                let k = kraw % (v.len() + 1);
+                let mut rng = Xoshiro256::seed_from_u64(9);
+                let idx = select_topk_indices(v, k, &mut rng);
+                if idx.len() != k {
+                    return Err(format!("returned {} indices, wanted {k}", idx.len()));
+                }
+                let set: std::collections::HashSet<_> = idx.iter().copied().collect();
+                if set.len() != k {
+                    return Err("duplicate indices".into());
+                }
+                if k == 0 || k == v.len() {
+                    return Ok(());
+                }
+                // min selected magnitude >= max unselected magnitude
+                let min_sel = idx
+                    .iter()
+                    .map(|&i| v[i as usize].abs())
+                    .fold(f32::INFINITY, f32::min);
+                let max_unsel = (0..v.len() as u32)
+                    .filter(|i| !set.contains(i))
+                    .map(|i| v[i as usize].abs())
+                    .fold(0f32, f32::max);
+                if min_sel + 1e-9 < max_unsel {
+                    return Err(format!("min selected {min_sel} < max unselected {max_unsel}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn codec_roundtrip_preserves_topk_values() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let n = 1000;
+        let mut codec = TopK::new(n, 0.01);
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, 1.0);
+        g[7] = 100.0;
+        g[700] = -200.0;
+        let enc = codec.encode(&g, &mut rng);
+        let mut out = vec![0f32; n];
+        codec.decode(&enc, &mut out);
+        assert_eq!(out[7], 100.0);
+        assert_eq!(out[700], -200.0);
+        let nnz = out.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nnz, sparse::k_for(n, 0.01));
+    }
+}

@@ -1,0 +1,19 @@
+//! Typed configuration for experiments, training runs and the simulator —
+//! loaded from JSON files (util::json; serde is unavailable offline) with
+//! CLI-flag overrides applied on top.
+
+mod schedule;
+mod train;
+
+pub use schedule::ScheduleSpec;
+pub use train::TrainConfig;
+
+use crate::util::json::Value;
+use std::path::Path;
+
+/// Read and parse a JSON config file.
+pub fn load_json(path: impl AsRef<Path>) -> anyhow::Result<Value> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+    Value::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.as_ref().display()))
+}

@@ -1,0 +1,141 @@
+//! Compression-schedule specification: which partitioning strategy the
+//! coordinator applies (paper §5 Methods compares all four).
+
+use crate::scheduler::{Partition, SearchParams};
+
+/// How to partition the model's gradient tensors into compression groups.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScheduleSpec {
+    /// One group per tensor — the framework status quo the paper profiles.
+    LayerWise,
+    /// One group for the whole model (no WFBP overlap).
+    FullMerge,
+    /// Evenly split the tensor count into `y` groups (paper Table 3).
+    NaiveEven { y: usize },
+    /// MergeComp's Algorithm-2 search.
+    MergeComp { y_max: usize, alpha: f64 },
+}
+
+impl ScheduleSpec {
+    /// Parse `layerwise | fullmerge | naive:<y> | mergecomp[:Y[,alpha]]`.
+    pub fn parse(s: &str) -> anyhow::Result<ScheduleSpec> {
+        let lower = s.to_ascii_lowercase();
+        let (head, rest) = match lower.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (lower.as_str(), None),
+        };
+        Ok(match head {
+            "layerwise" | "layer-wise" => ScheduleSpec::LayerWise,
+            "fullmerge" | "full-merge" | "merged" => ScheduleSpec::FullMerge,
+            "naive" => {
+                let y = rest
+                    .ok_or_else(|| anyhow::anyhow!("naive:<y> requires a group count"))?
+                    .parse()?;
+                ScheduleSpec::NaiveEven { y }
+            }
+            "mergecomp" => {
+                let mut y_max = 2usize;
+                let mut alpha = 0.02f64;
+                if let Some(r) = rest {
+                    for part in r.split(',') {
+                        if let Some((k, v)) = part.split_once('=') {
+                            match k {
+                                "y" | "y_max" => y_max = v.parse()?,
+                                "alpha" => alpha = v.parse()?,
+                                other => anyhow::bail!("unknown mergecomp param '{other}'"),
+                            }
+                        } else if !part.is_empty() {
+                            y_max = part.parse()?;
+                        }
+                    }
+                }
+                ScheduleSpec::MergeComp { y_max, alpha }
+            }
+            other => anyhow::bail!(
+                "unknown schedule '{other}' (layerwise|fullmerge|naive:<y>|mergecomp[:Y[,alpha=a]])"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ScheduleSpec::LayerWise => "layerwise".into(),
+            ScheduleSpec::FullMerge => "fullmerge".into(),
+            ScheduleSpec::NaiveEven { y } => format!("naive:{y}"),
+            ScheduleSpec::MergeComp { y_max, alpha } => {
+                format!("mergecomp:{y_max},alpha={alpha}")
+            }
+        }
+    }
+
+    /// Resolve to a concrete partition. Static strategies resolve directly;
+    /// MergeComp runs Algorithm 2 against the supplied objective.
+    pub fn resolve(
+        &self,
+        n_tensors: usize,
+        objective: &mut dyn crate::scheduler::objective::Objective,
+    ) -> Partition {
+        match *self {
+            ScheduleSpec::LayerWise => Partition::layer_wise(n_tensors),
+            ScheduleSpec::FullMerge => Partition::full_merge(n_tensors),
+            ScheduleSpec::NaiveEven { y } => Partition::naive_even(n_tensors, y),
+            ScheduleSpec::MergeComp { y_max, alpha } => {
+                crate::scheduler::mergecomp_search(
+                    objective,
+                    n_tensors,
+                    SearchParams { y_max, alpha },
+                )
+                .partition
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::objective::MeasuredObjective;
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(ScheduleSpec::parse("layerwise").unwrap(), ScheduleSpec::LayerWise);
+        assert_eq!(ScheduleSpec::parse("FullMerge").unwrap(), ScheduleSpec::FullMerge);
+        assert_eq!(
+            ScheduleSpec::parse("naive:3").unwrap(),
+            ScheduleSpec::NaiveEven { y: 3 }
+        );
+        assert_eq!(
+            ScheduleSpec::parse("mergecomp").unwrap(),
+            ScheduleSpec::MergeComp { y_max: 2, alpha: 0.02 }
+        );
+        assert_eq!(
+            ScheduleSpec::parse("mergecomp:3").unwrap(),
+            ScheduleSpec::MergeComp { y_max: 3, alpha: 0.02 }
+        );
+        assert_eq!(
+            ScheduleSpec::parse("mergecomp:y=4,alpha=0.1").unwrap(),
+            ScheduleSpec::MergeComp { y_max: 4, alpha: 0.1 }
+        );
+        assert!(ScheduleSpec::parse("naive").is_err());
+        assert!(ScheduleSpec::parse("zigzag").is_err());
+    }
+
+    #[test]
+    fn resolve_static_strategies() {
+        let mut obj = MeasuredObjective::new(|_: &Partition| 0.0);
+        let p = ScheduleSpec::LayerWise.resolve(7, &mut obj);
+        assert_eq!(p.num_groups(), 7);
+        let p = ScheduleSpec::NaiveEven { y: 2 }.resolve(7, &mut obj);
+        assert_eq!(p.num_groups(), 2);
+        let p = ScheduleSpec::FullMerge.resolve(7, &mut obj);
+        assert_eq!(p.num_groups(), 1);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for s in ["layerwise", "fullmerge", "naive:2"] {
+            let spec = ScheduleSpec::parse(s).unwrap();
+            assert_eq!(ScheduleSpec::parse(&spec.name()).unwrap(), spec);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Training-run configuration for the real execution plane.
+
+use super::ScheduleSpec;
+use crate::compression::CodecKind;
+use crate::util::cli::Args;
+use crate::util::json::Value;
+
+/// Configuration of one data-parallel training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of data-parallel workers (threads, one PJRT execution each).
+    pub workers: usize,
+    /// Optimization steps to run.
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub codec: CodecKind,
+    pub schedule: ScheduleSpec,
+    pub seed: u64,
+    /// Per-worker batch size (must match the AOT-compiled step artifact).
+    pub batch_per_worker: usize,
+    pub seq_len: usize,
+    /// Path to the AOT-lowered train-step HLO text.
+    pub artifact: String,
+    /// Emit a loss record every `log_every` steps.
+    pub log_every: usize,
+    /// Warm-up steps used by the measured-objective schedule search.
+    pub search_steps: usize,
+    /// Optional JSONL output path for per-step records.
+    pub out: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            steps: 200,
+            lr: 0.05,
+            momentum: 0.9,
+            codec: CodecKind::Fp32,
+            schedule: ScheduleSpec::MergeComp { y_max: 2, alpha: 0.02 },
+            seed: 42,
+            batch_per_worker: 8,
+            seq_len: 128,
+            artifact: "artifacts/train_step.hlo.txt".to_string(),
+            log_every: 10,
+            search_steps: 3,
+            out: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a JSON object (missing keys keep defaults).
+    pub fn from_json(v: &Value) -> anyhow::Result<TrainConfig> {
+        let d = TrainConfig::default();
+        Ok(TrainConfig {
+            workers: v.usize_or("workers", d.workers),
+            steps: v.usize_or("steps", d.steps),
+            lr: v.f64_or("lr", d.lr as f64) as f32,
+            momentum: v.f64_or("momentum", d.momentum as f64) as f32,
+            codec: CodecKind::from_name(v.str_or("codec", "fp32"))?,
+            schedule: ScheduleSpec::parse(v.str_or("schedule", "mergecomp"))?,
+            seed: v.f64_or("seed", d.seed as f64) as u64,
+            batch_per_worker: v.usize_or("batch_per_worker", d.batch_per_worker),
+            seq_len: v.usize_or("seq_len", d.seq_len),
+            artifact: v.str_or("artifact", &d.artifact).to_string(),
+            log_every: v.usize_or("log_every", d.log_every),
+            search_steps: v.usize_or("search_steps", d.search_steps),
+            out: v.get("out").and_then(Value::as_str).map(String::from),
+        })
+    }
+
+    /// Apply CLI overrides (`--workers 4 --codec dgc --schedule layerwise …`).
+    pub fn apply_cli(mut self, args: &Args) -> anyhow::Result<TrainConfig> {
+        self.workers = args.usize_or("workers", self.workers);
+        self.steps = args.usize_or("steps", self.steps);
+        self.lr = args.f64_or("lr", self.lr as f64) as f32;
+        self.momentum = args.f64_or("momentum", self.momentum as f64) as f32;
+        if let Some(c) = args.str("codec") {
+            self.codec = CodecKind::from_name(c)?;
+        }
+        if let Some(s) = args.str("schedule") {
+            self.schedule = ScheduleSpec::parse(s)?;
+        }
+        self.seed = args.u64_or("seed", self.seed);
+        self.log_every = args.usize_or("log-every", self.log_every);
+        self.search_steps = args.usize_or("search-steps", self.search_steps);
+        if let Some(a) = args.str("artifact") {
+            self.artifact = a.to_string();
+        }
+        if let Some(o) = args.str("out") {
+            self.out = Some(o.to_string());
+        }
+        Ok(self)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::from_pairs(vec![
+            ("workers", Value::from(self.workers)),
+            ("steps", Value::from(self.steps)),
+            ("lr", Value::from(self.lr as f64)),
+            ("momentum", Value::from(self.momentum as f64)),
+            ("codec", Value::from(self.codec.name())),
+            ("schedule", Value::from(self.schedule.name())),
+            ("seed", Value::from(self.seed)),
+            ("batch_per_worker", Value::from(self.batch_per_worker)),
+            ("seq_len", Value::from(self.seq_len)),
+            ("artifact", Value::from(self.artifact.clone())),
+            ("log_every", Value::from(self.log_every)),
+            ("search_steps", Value::from(self.search_steps)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip_json() {
+        let c = TrainConfig::default();
+        let j = c.to_json();
+        let c2 = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c2.workers, c.workers);
+        assert_eq!(c2.codec, c.codec);
+        assert_eq!(c2.schedule, c.schedule);
+        assert_eq!(c2.lr, c.lr);
+    }
+
+    #[test]
+    fn json_partial_override() {
+        let v = Value::parse(r#"{"workers": 8, "codec": "dgc"}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.codec.name(), "dgc");
+        assert_eq!(c.steps, TrainConfig::default().steps);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            ["x", "--workers", "4", "--schedule", "naive:3", "--lr", "0.5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = TrainConfig::default().apply_cli(&args).unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.schedule, ScheduleSpec::NaiveEven { y: 3 });
+        assert_eq!(c.lr, 0.5);
+    }
+
+    #[test]
+    fn bad_codec_rejected() {
+        let v = Value::parse(r#"{"codec": "zip"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Data pipeline for the real training plane: a synthetic character-level
+//! corpus with learnable structure, a byte tokenizer, and per-worker
+//! sharded batching.
+//!
+//! The paper trains on CIFAR10/ImageNet/COCO; none are available offline,
+//! so the end-to-end experiments (Figs. 7–8, Table 4) substitute a language
+//! modeling task whose loss curve exposes exactly the same phenomenon —
+//! whether compression + scheduling preserves optimization progress
+//! (DESIGN.md §2 documents the substitution).
+
+mod corpus;
+
+pub use corpus::{Batcher, SyntheticCorpus, VOCAB};

@@ -1,0 +1,31 @@
+//! # MergeComp — a compression scheduler for distributed training
+//!
+//! Full-system reproduction of Wang, Wu & Ng, *MergeComp: A Compression
+//! Scheduler for Scalable Communication-Efficient Distributed Training*
+//! (cs.DC 2021), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordinator: gradient codecs, collectives,
+//!   the MergeComp partition scheduler (paper Alg. 2), a discrete-event
+//!   timeline simulator of the paper's V100 testbed, and a real
+//!   data-parallel trainer that executes AOT-compiled JAX train steps
+//!   through the PJRT C API.
+//! - **L2 (python/compile/model.py)** — transformer LM forward/backward in
+//!   JAX, lowered once to HLO text (`make artifacts`).
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the compression
+//!   hot-spots and the MLP matmul, lowered inside the same HLO.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod collectives;
+pub mod compression;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod netsim;
+pub mod profiles;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulator;
+pub mod training;
+pub mod util;

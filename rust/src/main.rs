@@ -1,0 +1,255 @@
+//! `mergecomp` — leader binary for the MergeComp reproduction.
+//!
+//! Subcommands:
+//!   train     run data-parallel training with a compression schedule
+//!   simulate  scaling factors on the simulated V100 testbed (Figs. 2/4–6)
+//!   search    run Algorithm 2 and print the chosen partition
+//!   overhead  per-codec encode/decode cost sweep (Fig. 3)
+//!   info      artifact + environment report
+
+use mergecomp::compression::CodecKind;
+use mergecomp::config::{ScheduleSpec, TrainConfig};
+use mergecomp::netsim::Fabric;
+use mergecomp::profiles;
+use mergecomp::scheduler::objective::SimObjective;
+use mergecomp::scheduler::{mergecomp_search, Partition, SearchParams};
+use mergecomp::simulator::{scaling_factor, simulate, OverheadModel, SimSetup};
+use mergecomp::util::cli::Args;
+use mergecomp::util::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("search") => cmd_search(&args),
+        Some("overhead") => cmd_overhead(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "mergecomp — compression scheduler for distributed training\n\
+         \n\
+         USAGE: mergecomp <subcommand> [flags]\n\
+         \n\
+         SUBCOMMANDS\n\
+           train     --workers N --codec C --schedule S [--steps K] [--config f.json]\n\
+           simulate  --model M --codec C --fabric F --workers a,b,c --schedule S\n\
+           search    --model M --codec C --fabric F --workers N [--ymax Y] [--alpha A]\n\
+           overhead  --codec C [--sizes 64,1024,...]\n\
+           info\n\
+         \n\
+         CODECS   fp32 fp16 qsgd topk randk dgc signsgd efsignsgd onebit signum terngrad\n\
+         MODELS   resnet50-cifar10 resnet50-imagenet resnet101-imagenet maskrcnn transformer\n\
+         SCHEDULES layerwise | fullmerge | naive:<y> | mergecomp[:Y[,alpha=a]]"
+    );
+}
+
+fn profile_for(name: &str) -> anyhow::Result<mergecomp::profiles::ModelProfile> {
+    Ok(match name {
+        "resnet50-cifar10" | "resnet50" => profiles::resnet50_cifar10(),
+        "resnet50-imagenet" => profiles::resnet50_imagenet(),
+        "resnet101-imagenet" | "resnet101" => profiles::resnet101_imagenet(),
+        "maskrcnn" | "maskrcnn-coco" => profiles::maskrcnn_coco(),
+        "transformer" => profiles::transformer::transformer_e2e(),
+        "transformer-100m" => profiles::transformer::transformer_100m(),
+        other => anyhow::bail!("unknown model profile '{other}'"),
+    })
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let base = match args.str("config") {
+        Some(path) => TrainConfig::from_json(&mergecomp::config::load_json(path)?)?,
+        None => TrainConfig::default(),
+    };
+    let cfg = base.apply_cli(args)?;
+    println!(
+        "training: {} workers, codec {}, schedule {}, {} steps",
+        cfg.workers,
+        cfg.codec.name(),
+        cfg.schedule.name(),
+        cfg.steps
+    );
+    let result = mergecomp::training::train(&cfg)?;
+    println!(
+        "partition: {} groups, bounds {:?} ({} search evals)",
+        result.partition.num_groups(),
+        result.partition.bounds(),
+        result.search_evals
+    );
+    for r in &result.records {
+        println!(
+            "  step {:>5}  loss {:.4}  t={:.1}s  exch={}",
+            r.step,
+            r.loss,
+            r.elapsed,
+            fmt_secs(r.exchange.total_secs())
+        );
+    }
+    println!(
+        "final train loss {:.4}, eval loss {:.4}, mean step {} (+{} exchange), {} sent",
+        result.final_train_loss,
+        result.eval_loss,
+        fmt_secs(result.mean_step_secs),
+        fmt_secs(result.mean_exchange.total_secs()),
+        fmt_bytes(result.total_bytes_sent as usize)
+    );
+    if let Some(out) = &cfg.out {
+        let mut w = mergecomp::metrics::JsonlWriter::create(out)?;
+        w.write(&result.to_json(&cfg))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let profile = profile_for(args.str_or("model", "resnet50-cifar10"))?;
+    let kind = CodecKind::from_name(args.str_or("codec", "fp32"))?;
+    let fabric = Fabric::from_name(args.str_or("fabric", "pcie"))?;
+    let schedule = ScheduleSpec::parse(args.str_or("schedule", "mergecomp"))?;
+    let worlds = args.usize_list_or("workers", &[2, 4, 8]);
+    let n = profile.num_tensors();
+
+    println!(
+        "model {} ({} tensors, {} params), codec {}, fabric {}, schedule {}",
+        profile.name,
+        n,
+        profile.total_params(),
+        kind.name(),
+        fabric.name,
+        schedule.name()
+    );
+    for world in worlds {
+        let setup = SimSetup {
+            profile: &profile,
+            kind,
+            fabric,
+            world,
+        };
+        let mut obj = SimObjective::new(setup);
+        let p = schedule.resolve(n, &mut obj);
+        let b = simulate(&setup, &p);
+        println!(
+            "  {world} workers: scaling {:.3}  iter {}  (compute {}, enc {}, dec {}, comm total {}, exposed {}) groups={}",
+            scaling_factor(&setup, &p),
+            fmt_secs(b.iter_time),
+            fmt_secs(b.compute),
+            fmt_secs(b.encode_path),
+            fmt_secs(b.decode_path),
+            fmt_secs(b.comm_total),
+            fmt_secs(b.comm_exposed),
+            p.num_groups(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let profile = profile_for(args.str_or("model", "resnet101-imagenet"))?;
+    let kind = CodecKind::from_name(args.str_or("codec", "efsignsgd"))?;
+    let fabric = Fabric::from_name(args.str_or("fabric", "pcie"))?;
+    let world = args.usize_or("workers", 8);
+    let params = SearchParams {
+        y_max: args.usize_or("ymax", 2),
+        alpha: args.f64_or("alpha", 0.02),
+    };
+    let setup = SimSetup {
+        profile: &profile,
+        kind,
+        fabric,
+        world,
+    };
+    let mut obj = SimObjective::new(setup);
+    let out = mergecomp_search(&mut obj, profile.num_tensors(), params);
+    println!(
+        "Algorithm 2 on {} / {} / {} workers / {}:",
+        profile.name,
+        kind.name(),
+        world,
+        fabric.name
+    );
+    for (y, f) in &out.per_y {
+        println!("  y={y}: F = {}", fmt_secs(*f));
+    }
+    println!(
+        "chosen: {} groups, bounds {:?}, F = {} ({} evals)",
+        out.partition.num_groups(),
+        out.partition.bounds(),
+        fmt_secs(out.f_min),
+        out.evals
+    );
+    let base = simulate(&setup, &Partition::layer_wise(profile.num_tensors()));
+    println!(
+        "layer-wise for comparison: {} ({:.2}x slower)",
+        fmt_secs(base.iter_time),
+        base.iter_time / out.f_min
+    );
+    Ok(())
+}
+
+fn cmd_overhead(args: &Args) -> anyhow::Result<()> {
+    let kinds: Vec<CodecKind> = match args.str_list("codec") {
+        Some(names) => names
+            .iter()
+            .map(|n| CodecKind::from_name(n))
+            .collect::<anyhow::Result<_>>()?,
+        None => CodecKind::paper_set(),
+    };
+    let sizes = args.usize_list_or(
+        "sizes",
+        &[1 << 6, 1 << 10, 1 << 14, 1 << 18, 1 << 20, 1 << 24],
+    );
+    println!(
+        "{:<12} {:>12} {:>14} {:>14}",
+        "codec", "elems", "encode(model)", "decode(model)"
+    );
+    for kind in kinds {
+        let m = OverheadModel::for_codec(kind);
+        for &n in &sizes {
+            println!(
+                "{:<12} {:>12} {:>14} {:>14}",
+                kind.name(),
+                n,
+                fmt_secs(m.encode.time(n)),
+                fmt_secs(m.decode.time(n))
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> anyhow::Result<()> {
+    println!(
+        "mergecomp {} — MergeComp reproduction",
+        env!("CARGO_PKG_VERSION")
+    );
+    for art in [
+        "artifacts/train_step.hlo.txt",
+        "artifacts/train_step_pallas.hlo.txt",
+        "artifacts/sign_compress.hlo.txt",
+        "artifacts/meta.json",
+    ] {
+        let status = match std::fs::metadata(art) {
+            Ok(m) => fmt_bytes(m.len() as usize),
+            Err(_) => "MISSING (run `make artifacts`)".to_string(),
+        };
+        println!("  {art}: {status}");
+    }
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "  PJRT: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    Ok(())
+}

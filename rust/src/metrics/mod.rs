@@ -1,0 +1,11 @@
+//! Metrics: counters, timers, histograms, and CSV/JSON sinks.
+//!
+//! The trainer, the collectives and the bench harness all report through
+//! this module so every experiment in EXPERIMENTS.md is regenerated from the
+//! same measurement code path.
+
+mod registry;
+mod sink;
+
+pub use registry::{Histogram, MetricsRegistry, TimerGuard};
+pub use sink::{CsvWriter, JsonlWriter};

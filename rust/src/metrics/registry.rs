@@ -1,0 +1,269 @@
+//! In-process metrics registry: named counters, gauges, and histograms with
+//! a scoped-timer convenience. Thread-safe via a single mutex — metrics are
+//! recorded outside the innermost hot loops (per tensor-group / per step,
+//! not per element), so contention is negligible.
+
+use crate::util::json::Value;
+use crate::util::stats::percentile_sorted;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Fixed-boundary histogram with recorded raw samples (bounded reservoir)
+/// so percentiles stay exact for the sample counts we see (≤ ~1e6).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    max_samples: usize,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            samples: Vec::new(),
+            max_samples: 1 << 20,
+            count: 0,
+            sum: 0.0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        if self.samples.len() < self.max_samples {
+            self.samples.push(v);
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&sorted, p)
+    }
+
+    pub fn summary(&self) -> Value {
+        Value::from_pairs(vec![
+            ("count", Value::from(self.count)),
+            ("mean", Value::from(self.mean())),
+            ("p50", Value::from(self.percentile(50.0))),
+            ("p99", Value::from(self.percentile(99.0))),
+            ("min", Value::from(self.percentile(0.0))),
+            ("max", Value::from(self.percentile(100.0))),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// Clonable handle to a shared registry.
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    /// Scoped wall-clock timer: records seconds into histogram `name` on drop.
+    pub fn timer(&self, name: &str) -> TimerGuard {
+        TimerGuard {
+            registry: self.clone(),
+            name: name.to_string(),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn histogram_mean(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(name)
+            .map(|h| h.mean())
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn histogram_sum(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(name)
+            .map(|h| h.sum)
+            .unwrap_or(0.0)
+    }
+
+    pub fn histogram_count(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(name)
+            .map(|h| h.count)
+            .unwrap_or(0)
+    }
+
+    /// Full snapshot as JSON — dumped at the end of every run/bench.
+    pub fn snapshot(&self) -> Value {
+        let g = self.inner.lock().unwrap();
+        let counters = Value::Obj(
+            g.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Value::from(*v)))
+                .collect(),
+        );
+        let gauges = Value::Obj(
+            g.gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), Value::from(*v)))
+                .collect(),
+        );
+        let hists = Value::Obj(
+            g.histograms
+                .iter()
+                .map(|(k, h)| (k.clone(), h.summary()))
+                .collect(),
+        );
+        Value::from_pairs(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.clear();
+        g.gauges.clear();
+        g.histograms.clear();
+    }
+}
+
+pub struct TimerGuard {
+    registry: MetricsRegistry,
+    name: String,
+    start: Instant,
+}
+
+impl Drop for TimerGuard {
+    fn drop(&mut self) {
+        self.registry
+            .observe(&self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = MetricsRegistry::new();
+        m.incr("steps", 1);
+        m.incr("steps", 2);
+        m.gauge("loss", 1.5);
+        assert_eq!(m.counter_value("steps"), 3);
+        assert_eq!(m.counter_value("missing"), 0);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("gauges").unwrap().f64_or("loss", 0.0), 1.5);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let m = MetricsRegistry::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64);
+        }
+        assert!((m.histogram_mean("lat") - 50.5).abs() < 1e-9);
+        assert_eq!(m.histogram_count("lat"), 100);
+        let snap = m.snapshot();
+        let h = snap.get("histograms").unwrap().get("lat").unwrap();
+        assert!((h.f64_or("p50", 0.0) - 50.5).abs() < 1.0);
+        assert!(h.f64_or("p99", 0.0) >= 99.0);
+    }
+
+    #[test]
+    fn timer_records() {
+        let m = MetricsRegistry::new();
+        {
+            let _t = m.timer("op");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(m.histogram_count("op"), 1);
+        assert!(m.histogram_mean("op") >= 0.002);
+    }
+
+    #[test]
+    fn shared_across_clones_and_threads() {
+        let m = MetricsRegistry::new();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m2 = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    m2.incr("x", 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter_value("x"), 400);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = MetricsRegistry::new();
+        m.incr("a", 1);
+        m.observe("b", 1.0);
+        m.reset();
+        assert_eq!(m.counter_value("a"), 0);
+        assert_eq!(m.histogram_count("b"), 0);
+    }
+}

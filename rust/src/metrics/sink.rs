@@ -1,0 +1,154 @@
+//! File sinks for experiment outputs: CSV (bench tables, loss curves) and
+//! JSONL (per-step structured records). Both create parent directories and
+//! flush on drop so partial runs still leave usable artifacts.
+
+use crate::util::json::Value;
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// CSV writer with a fixed header row.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    pub path: PathBuf,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(&path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self {
+            out,
+            path,
+            columns: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.columns,
+            "csv row has {} fields, header has {}",
+            fields.len(),
+            self.columns
+        );
+        let escaped: Vec<String> = fields
+            .iter()
+            .map(|f| {
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    format!("\"{}\"", f.replace('"', "\"\""))
+                } else {
+                    f.clone()
+                }
+            })
+            .collect();
+        writeln!(self.out, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience: mixed display row.
+    pub fn rowd(&mut self, fields: &[&dyn std::fmt::Display]) -> anyhow::Result<()> {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&v)
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+impl Drop for CsvWriter {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+/// JSON-lines writer.
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+    pub path: PathBuf,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        Ok(Self {
+            out: BufWriter::new(File::create(&path)?),
+            path,
+        })
+    }
+
+    pub fn write(&mut self, v: &Value) -> anyhow::Result<()> {
+        writeln!(self.out, "{}", v.to_string_compact())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+impl Drop for JsonlWriter {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mergecomp-test-{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = tmpdir().join("t.csv");
+        {
+            let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,y".into()]).unwrap();
+            w.rowd(&[&2, &"plain"]).unwrap();
+        }
+        let text = fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "1,\"x,y\"");
+        assert_eq!(lines[2], "2,plain");
+    }
+
+    #[test]
+    fn csv_rejects_bad_arity() {
+        let p = tmpdir().join("t2.csv");
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let p = tmpdir().join("t.jsonl");
+        {
+            let mut w = JsonlWriter::create(&p).unwrap();
+            w.write(&Value::from_pairs(vec![("step", Value::from(1usize))]))
+                .unwrap();
+            w.write(&Value::from_pairs(vec![("step", Value::from(2usize))]))
+                .unwrap();
+        }
+        let text = fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = Value::parse(lines[1]).unwrap();
+        assert_eq!(v.usize_or("step", 0), 2);
+    }
+}

@@ -1,0 +1,158 @@
+//! Analytic collective cost functions over a [`Fabric`](super::Fabric).
+//!
+//! - Ring allreduce (Patarasuk & Yuan 2009):
+//!   `2(n−1)·α + 2·(n−1)/n · S/β` for an S-byte dense buffer.
+//! - Ring allgather (Thakur et al. 2005):
+//!   `(n−1)·α + (n−1)·S/β` where S is the per-rank payload.
+//!
+//! These are the models NCCL and MPI implementations asymptotically achieve
+//! and are the standard analytic substitute for a hardware testbed.
+
+use super::Fabric;
+use crate::compression::{CodecKind, Collective};
+
+/// Cost model for one (fabric, world-size) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub fabric: Fabric,
+    pub world: usize,
+}
+
+/// Breakdown of a collective's predicted time.
+#[derive(Debug, Clone, Copy)]
+pub struct CollectiveCost {
+    pub seconds: f64,
+    pub bytes_per_rank: usize,
+}
+
+impl CostModel {
+    pub fn new(fabric: Fabric, world: usize) -> Self {
+        assert!(world >= 1);
+        Self { fabric, world }
+    }
+
+    /// Dense allreduce of `bytes` (FP32/FP16 payloads).
+    pub fn allreduce(&self, bytes: usize) -> CollectiveCost {
+        let n = self.world as f64;
+        if self.world == 1 {
+            return CollectiveCost {
+                seconds: 0.0,
+                bytes_per_rank: 0,
+            };
+        }
+        let moved = 2.0 * (n - 1.0) / n * bytes as f64;
+        CollectiveCost {
+            seconds: 2.0 * (n - 1.0) * self.fabric.alpha
+                + moved / self.fabric.beta_eff(self.world),
+            bytes_per_rank: moved as usize,
+        }
+    }
+
+    /// Allgather where every rank contributes `bytes_per_rank`.
+    pub fn allgather(&self, bytes_per_rank: usize) -> CollectiveCost {
+        let n = self.world as f64;
+        if self.world == 1 {
+            return CollectiveCost {
+                seconds: 0.0,
+                bytes_per_rank: 0,
+            };
+        }
+        let moved = (n - 1.0) * bytes_per_rank as f64;
+        CollectiveCost {
+            seconds: (n - 1.0) * self.fabric.alpha
+                + moved / self.fabric.beta_eff(self.world),
+            bytes_per_rank: moved as usize,
+        }
+    }
+
+    /// Communication time for synchronizing an `elems`-element group
+    /// compressed with `kind` — picks the collective per paper Table 1 and
+    /// charges the codec's exact wire size.
+    pub fn group_comm(&self, kind: CodecKind, elems: usize) -> CollectiveCost {
+        let wire = kind.wire_size(elems);
+        match kind.collective() {
+            Collective::AllReduce => self.allreduce(wire),
+            Collective::AllGather => self.allgather(wire),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_single_worker_free() {
+        let m = CostModel::new(Fabric::pcie(), 1);
+        assert_eq!(m.allreduce(1 << 20).seconds, 0.0);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_dominates_large() {
+        let m = CostModel::new(Fabric::pcie(), 4);
+        let big = m.allreduce(100 << 20);
+        // 2*(3/4)*100MiB / beta_eff(4)
+        let expect = 2.0 * 0.75 * (100 << 20) as f64 / Fabric::pcie().beta_eff(4);
+        assert!((big.seconds - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    fn allgather_scales_with_world() {
+        let s = 1 << 20;
+        let t2 = CostModel::new(Fabric::pcie(), 2).allgather(s).seconds;
+        let t8 = CostModel::new(Fabric::pcie(), 8).allgather(s).seconds;
+        assert!(t8 > 3.0 * t2, "allgather grows ~(n-1): {t2} vs {t8}");
+    }
+
+    #[test]
+    fn latency_term_dominates_small() {
+        let m = CostModel::new(Fabric::nvlink(), 8);
+        let tiny = m.allreduce(64);
+        let expect_alpha = 2.0 * 7.0 * Fabric::nvlink().alpha;
+        assert!(tiny.seconds >= expect_alpha);
+        assert!(tiny.seconds < expect_alpha * 1.1);
+    }
+
+    /// Paper §3.2 worked example: ResNet50 has 25.6M parameters (102.4 MB);
+    /// FP32 allreduce between 2 GPUs over PCIe costs ≈66 ms.
+    #[test]
+    fn calibration_matches_paper_worked_example() {
+        let m = CostModel::new(Fabric::pcie(), 2);
+        let t = m.allreduce(25_600_000 * 4).seconds;
+        assert!(
+            (t - 0.066).abs() < 0.005,
+            "2-GPU PCIe FP32 ResNet50 comm = {:.1} ms, paper says ~66 ms",
+            t * 1e3
+        );
+    }
+
+    /// Sparsified/1-bit schemes cut the §3.2 communication to < 5 ms.
+    #[test]
+    fn calibration_compressed_comm_under_5ms() {
+        let m = CostModel::new(Fabric::pcie(), 2);
+        for kind in [
+            CodecKind::Dgc { ratio: 0.01 },
+            CodecKind::TopK { ratio: 0.01 },
+            CodecKind::EfSignSgd,
+            CodecKind::SignSgd,
+        ] {
+            let t = m.group_comm(kind, 25_600_000).seconds;
+            assert!(
+                t < 0.005,
+                "{}: compressed comm {:.2} ms (paper: <5 ms)",
+                kind.name(),
+                t * 1e3
+            );
+        }
+    }
+
+    #[test]
+    fn group_comm_uses_right_collective() {
+        let m = CostModel::new(Fabric::pcie(), 4);
+        let n = 1 << 20;
+        // FP32: allreduce of 4n bytes. SignSGD: allgather of ~n/8 bytes.
+        let fp32 = m.group_comm(CodecKind::Fp32, n);
+        let sign = m.group_comm(CodecKind::SignSgd, n);
+        assert!(sign.seconds < fp32.seconds / 8.0);
+    }
+}

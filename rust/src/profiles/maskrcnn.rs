@@ -1,0 +1,124 @@
+//! Mask R-CNN (R50-FPN) gradient tensor inventory for the COCO workload
+//! (paper Fig. 6, batch size 1).
+//!
+//! Detection models freeze the backbone's BatchNorm (standard Detectron
+//! practice), so the *trainable gradient* tensor list is much shorter than
+//! the classification ResNet's: backbone conv weights + FPN + RPN + RoI
+//! heads ≈ 95 tensors / ≈44M parameters. This is exactly the property the
+//! paper leans on in §5.1 ("relatively few tensors, so the layer-wise
+//! compression overhead is not too excessive").
+
+use super::{conv_flops, conv_params, ModelProfile, TensorInfo};
+
+pub fn maskrcnn_coco() -> ModelProfile {
+    let mut tensors: Vec<TensorInfo> = Vec::new();
+    // Typical FPN training resolution.
+    let mut hw = 800usize;
+
+    let mut conv = |name: &str, k: usize, cin: usize, cout: usize, hw: usize, bias: bool| {
+        let mut v = vec![TensorInfo {
+            name: format!("{name}.weight"),
+            elems: conv_params(k, cin, cout),
+            flops: conv_flops(k, cin, cout, hw, hw),
+        }];
+        if bias {
+            v.push(TensorInfo {
+                name: format!("{name}.bias"),
+                elems: cout,
+                flops: cout as f64,
+            });
+        }
+        v
+    };
+
+    // --- Backbone: ResNet50 conv weights only (BN frozen, no grads) -----
+    hw /= 4; // stem stride 2 + maxpool
+    tensors.extend(conv("backbone.conv1", 7, 3, 64, hw / 2, false));
+    let mids = [64usize, 128, 256, 512];
+    let blocks = [3usize, 4, 6, 3];
+    let mut cin = 64usize;
+    for (stage, (&nb, &mid)) in blocks.iter().zip(&mids).enumerate() {
+        if stage > 0 {
+            hw /= 2;
+        }
+        let cout = mid * 4;
+        for b in 0..nb {
+            let p = format!("backbone.layer{}.{b}", stage + 1);
+            tensors.extend(conv(&format!("{p}.conv1"), 1, cin, mid, hw, false));
+            tensors.extend(conv(&format!("{p}.conv2"), 3, mid, mid, hw, false));
+            tensors.extend(conv(&format!("{p}.conv3"), 1, mid, cout, hw, false));
+            if b == 0 {
+                tensors.extend(conv(&format!("{p}.downsample"), 1, cin, cout, hw, false));
+            }
+            cin = cout;
+        }
+    }
+
+    // --- FPN: 4 lateral 1×1 + 4 output 3×3 convs (256 channels, bias) ---
+    for (i, c) in [256usize, 512, 1024, 2048].iter().enumerate() {
+        tensors.extend(conv(&format!("fpn.lateral{i}"), 1, *c, 256, 100, true));
+        tensors.extend(conv(&format!("fpn.output{i}"), 3, 256, 256, 100, true));
+    }
+
+    // --- RPN: shared 3×3 conv + objectness / box regressors -------------
+    tensors.extend(conv("rpn.conv", 3, 256, 256, 100, true));
+    tensors.extend(conv("rpn.cls", 1, 256, 3, 100, true));
+    tensors.extend(conv("rpn.bbox", 1, 256, 12, 100, true));
+
+    // --- Box head: two FC layers + classifiers (81 COCO classes) --------
+    let mut fc = |name: &str, din: usize, dout: usize| {
+        vec![
+            TensorInfo {
+                name: format!("{name}.weight"),
+                elems: din * dout,
+                flops: 2.0 * (din * dout) as f64,
+            },
+            TensorInfo {
+                name: format!("{name}.bias"),
+                elems: dout,
+                flops: dout as f64,
+            },
+        ]
+    };
+    tensors.extend(fc("box_head.fc1", 256 * 7 * 7, 1024));
+    tensors.extend(fc("box_head.fc2", 1024, 1024));
+    tensors.extend(fc("box_head.cls", 1024, 81));
+    tensors.extend(fc("box_head.bbox", 1024, 81 * 4));
+
+    // --- Mask head: 4 3×3 convs + deconv + 1×1 predictor ----------------
+    for i in 0..4 {
+        tensors.extend(conv(&format!("mask_head.conv{i}"), 3, 256, 256, 14, true));
+    }
+    tensors.extend(conv("mask_head.deconv", 2, 256, 256, 28, true));
+    tensors.extend(conv("mask_head.predictor", 1, 256, 81, 28, true));
+
+    ModelProfile {
+        name: "maskrcnn-coco".to_string(),
+        tensors,
+        // V100 batch-1 Mask R-CNN (R50-FPN) ≈ 4.5 it/s ⇒ ≈ 220 ms.
+        iter_compute_s: 0.220,
+        fwd_frac: 0.4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let p = maskrcnn_coco();
+        // 53 backbone convs + 16 FPN + 6 RPN + 8 box + 12 mask = 95.
+        assert_eq!(p.num_tensors(), 95);
+        let params = p.total_params();
+        assert!((40_000_000..50_000_000).contains(&params), "{params}");
+    }
+
+    #[test]
+    fn box_head_fc1_is_biggest() {
+        let p = maskrcnn_coco();
+        let max = p.tensors.iter().max_by_key(|t| t.elems).unwrap();
+        assert_eq!(max.name, "box_head.fc1.weight");
+        assert_eq!(max.elems, 256 * 49 * 1024);
+    }
+}

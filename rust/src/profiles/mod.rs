@@ -1,0 +1,162 @@
+//! Model profiles: the per-tensor shape/compute information the scheduler
+//! and the simulator consume.
+//!
+//! A profile lists every gradient tensor in **forward order** together with
+//! its element count and its (relative) backward-pass FLOPs. That is all
+//! MergeComp needs (§4.3: the search makes no other assumption about the
+//! architecture), and it is exactly the information the paper's Fig. 3c
+//! reports for ResNet50/101.
+
+pub mod maskrcnn;
+pub mod resnet;
+pub mod transformer;
+
+pub use maskrcnn::maskrcnn_coco;
+pub use resnet::{resnet101_imagenet, resnet50_cifar10, resnet50_imagenet};
+pub use transformer::transformer_lm;
+
+/// One gradient tensor.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    /// Number of f32 elements.
+    pub elems: usize,
+    /// Relative backward-pass cost attributed to this tensor's layer
+    /// (forward FLOPs; backward is proportional).
+    pub flops: f64,
+}
+
+/// A model + workload profile.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    /// Tensors in forward order. Back-propagation produces gradients in
+    /// *reverse* of this order.
+    pub tensors: Vec<TensorInfo>,
+    /// Measured single-GPU iteration (fwd+bwd) time in seconds at the
+    /// paper's batch size.
+    pub iter_compute_s: f64,
+    /// Fraction of `iter_compute_s` spent in the forward pass.
+    pub fwd_frac: f64,
+}
+
+impl ModelProfile {
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.elems).sum()
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.tensors.iter().map(|t| t.flops).sum()
+    }
+
+    /// Gradient-ready times in **backprop order**: element `j` is
+    /// `(tensor index in forward order, seconds from iteration start)`, for
+    /// j = 0 the last forward tensor (first gradient available) and so on.
+    /// Forward runs first (`fwd_frac · A`), then backward walks the tensors
+    /// in reverse, each layer consuming backward time proportional to its
+    /// FLOPs share.
+    pub fn ready_times(&self) -> Vec<(usize, f64)> {
+        let a = self.iter_compute_s;
+        let bwd = a * (1.0 - self.fwd_frac);
+        let total = self.total_flops().max(f64::MIN_POSITIVE);
+        let mut t = a * self.fwd_frac;
+        let mut out = Vec::with_capacity(self.tensors.len());
+        for (i, info) in self.tensors.iter().enumerate().rev() {
+            t += bwd * (info.flops / total);
+            out.push((i, t));
+        }
+        out
+    }
+
+    /// Tensor sizes in backprop order (what the partition search consumes).
+    pub fn sizes_backprop_order(&self) -> Vec<usize> {
+        self.tensors.iter().rev().map(|t| t.elems).collect()
+    }
+}
+
+/// Convenience: a conv tensor's parameter count.
+pub(crate) fn conv_params(k: usize, cin: usize, cout: usize) -> usize {
+    k * k * cin * cout
+}
+
+/// Forward FLOPs of a conv at spatial output h×w (MACs ×2).
+pub(crate) fn conv_flops(k: usize, cin: usize, cout: usize, h: usize, w: usize) -> f64 {
+    2.0 * (k * k * cin * cout * h * w) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Fig. 3c: ResNet50 has 161 tensors, ResNet101 has 314.
+    #[test]
+    fn tensor_counts_match_paper() {
+        assert_eq!(resnet50_cifar10().num_tensors(), 161);
+        assert_eq!(resnet50_imagenet().num_tensors(), 161);
+        assert_eq!(resnet101_imagenet().num_tensors(), 314);
+    }
+
+    #[test]
+    fn parameter_counts_match_architectures() {
+        let p50 = resnet50_imagenet().total_params();
+        assert!(
+            (25_000_000..26_200_000).contains(&p50),
+            "ResNet50/ImageNet ≈ 25.6M params, got {p50}"
+        );
+        let p101 = resnet101_imagenet().total_params();
+        assert!(
+            (44_000_000..45_200_000).contains(&p101),
+            "ResNet101 ≈ 44.5M params, got {p101}"
+        );
+        let pmask = maskrcnn_coco().total_params();
+        assert!(
+            (40_000_000..50_000_000).contains(&pmask),
+            "Mask R-CNN ≈ 44M params, got {pmask}"
+        );
+    }
+
+    #[test]
+    fn maskrcnn_has_relatively_few_tensors() {
+        // Paper §5.1: layer-wise is tolerable for Mask R-CNN because it has
+        // relatively few tensors.
+        let m = maskrcnn_coco();
+        assert!(m.num_tensors() < 120, "got {}", m.num_tensors());
+    }
+
+    #[test]
+    fn ready_times_monotone_and_bounded() {
+        for p in [
+            resnet50_cifar10(),
+            resnet101_imagenet(),
+            maskrcnn_coco(),
+            transformer_lm(4, 256, 1024, 512, 1000),
+        ] {
+            let rt = p.ready_times();
+            assert_eq!(rt.len(), p.num_tensors());
+            // First gradient comes from the LAST forward tensor.
+            assert_eq!(rt[0].0, p.num_tensors() - 1);
+            let mut prev = 0.0;
+            for &(_, t) in &rt {
+                assert!(t >= prev, "ready times must be nondecreasing");
+                prev = t;
+            }
+            let last = rt.last().unwrap().1;
+            assert!(
+                (last - p.iter_compute_s).abs() < 1e-9,
+                "backprop ends at A: {last} vs {}",
+                p.iter_compute_s
+            );
+        }
+    }
+
+    #[test]
+    fn cifar_profile_iteration_matches_paper() {
+        // §3.2: single-GPU ResNet50/CIFAR10 iteration ≈ 64 ms at batch 64.
+        let p = resnet50_cifar10();
+        assert!((p.iter_compute_s - 0.064).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,132 @@
+//! Transformer-LM profile — mirrors the L2 JAX model in
+//! `python/compile/model.py` tensor-for-tensor, so the same MergeComp
+//! schedule that the simulator optimizes is what the real trainer applies.
+//!
+//! Layer layout per block (forward order):
+//!   ln1.{scale,bias}, attn.{wq,wk,wv,wo}, ln2.{scale,bias},
+//!   mlp.{w1,b1,w2,b2}
+//! plus embedding, final layer-norm, and the (tied-untied) output head.
+
+use super::{ModelProfile, TensorInfo};
+
+/// Build the profile for an `n_layers`-deep decoder with hidden size
+/// `d_model`, MLP width `d_ff`, vocabulary `vocab`, and sequence length
+/// `seq` (used only for FLOPs weighting).
+pub fn transformer_lm(
+    n_layers: usize,
+    d_model: usize,
+    d_ff: usize,
+    vocab: usize,
+    seq: usize,
+) -> ModelProfile {
+    let mut tensors = Vec::new();
+    let s = seq as f64;
+
+    let mut push = |name: String, elems: usize, flops: f64| {
+        tensors.push(TensorInfo { name, elems, flops });
+    };
+
+    push(
+        "embed.weight".into(),
+        vocab * d_model,
+        (vocab * d_model) as f64, // gather: cheap
+    );
+    for l in 0..n_layers {
+        let p = format!("layer{l}");
+        push(format!("{p}.ln1.scale"), d_model, (d_model as f64) * s);
+        push(format!("{p}.ln1.bias"), d_model, (d_model as f64) * s);
+        for w in ["wq", "wk", "wv", "wo"] {
+            push(
+                format!("{p}.attn.{w}"),
+                d_model * d_model,
+                2.0 * (d_model * d_model) as f64 * s,
+            );
+        }
+        push(format!("{p}.ln2.scale"), d_model, (d_model as f64) * s);
+        push(format!("{p}.ln2.bias"), d_model, (d_model as f64) * s);
+        push(
+            format!("{p}.mlp.w1"),
+            d_model * d_ff,
+            2.0 * (d_model * d_ff) as f64 * s,
+        );
+        push(format!("{p}.mlp.b1"), d_ff, d_ff as f64 * s);
+        push(
+            format!("{p}.mlp.w2"),
+            d_ff * d_model,
+            2.0 * (d_ff * d_model) as f64 * s,
+        );
+        push(format!("{p}.mlp.b2"), d_model, d_model as f64 * s);
+    }
+    push("ln_f.scale".into(), d_model, (d_model as f64) * s);
+    push("ln_f.bias".into(), d_model, (d_model as f64) * s);
+    push(
+        "head.weight".into(),
+        d_model * vocab,
+        2.0 * (d_model * vocab) as f64 * s,
+    );
+
+    // Iteration time: estimated 6·params·tokens FLOPs at a nominal V100
+    // utilization; only *relative* timing matters on the simulator plane —
+    // the real plane measures its own step time.
+    let params: usize = tensors.iter().map(|t| t.elems).sum();
+    let flops = 6.0 * params as f64 * seq as f64 * 8.0; // batch 8
+    let iter = flops / 20e12; // ~20 TFLOP/s effective
+
+    ModelProfile {
+        name: format!("transformer-{n_layers}x{d_model}"),
+        tensors,
+        iter_compute_s: iter,
+        fwd_frac: 1.0 / 3.0,
+    }
+}
+
+/// The default end-to-end model (~8M params): 4 layers, d=256, ff=1024,
+/// char vocab 96, seq 128 — small enough to train a few hundred steps on a
+/// single CPU core through PJRT.
+pub fn transformer_e2e() -> ModelProfile {
+    transformer_lm(4, 256, 1024, 96, 128)
+}
+
+/// A ~100M-parameter configuration (12 layers, d=768, GPT-2-small shape),
+/// provided for scale experiments on real hardware.
+pub fn transformer_100m() -> ModelProfile {
+    transformer_lm(12, 768, 3072, 32768, 512)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_count_formula() {
+        let p = transformer_lm(4, 256, 1024, 96, 128);
+        // embed + 12/layer + ln_f(2) + head
+        assert_eq!(p.num_tensors(), 1 + 4 * 12 + 2 + 1);
+    }
+
+    #[test]
+    fn e2e_model_is_about_8m() {
+        let p = transformer_e2e();
+        let params = p.total_params();
+        assert!((3_000_000..10_000_000).contains(&params), "{params}");
+    }
+
+    #[test]
+    fn hundred_m_config() {
+        let p = transformer_100m();
+        let params = p.total_params();
+        assert!((100_000_000..160_000_000).contains(&params), "{params}");
+    }
+
+    #[test]
+    fn matmuls_dominate_flops() {
+        let p = transformer_e2e();
+        let mm: f64 = p
+            .tensors
+            .iter()
+            .filter(|t| t.name.contains('w') || t.name.contains("head"))
+            .map(|t| t.flops)
+            .sum();
+        assert!(mm / p.total_flops() > 0.95);
+    }
+}

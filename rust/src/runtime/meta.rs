@@ -1,0 +1,139 @@
+//! Artifact metadata: the tensor-order contract between the L2 model
+//! (python/compile/model.py `param_spec`) and the rust trainer, serialized
+//! by aot.py into `artifacts/meta.json`.
+
+use crate::util::json::Value;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub elems: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct StepMeta {
+    pub tensors: Vec<TensorMeta>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+}
+
+impl StepMeta {
+    /// Load one config ("e2e", "pallas", "big") from meta.json.
+    pub fn load(path: impl AsRef<Path>, which: &str) -> anyhow::Result<StepMeta> {
+        let v = crate::config::load_json(path)?;
+        let cfg = v
+            .get(which)
+            .ok_or_else(|| anyhow::anyhow!("meta.json has no '{which}' config"))?;
+        Self::from_json(cfg)
+    }
+
+    pub fn from_json(cfg: &Value) -> anyhow::Result<StepMeta> {
+        let tensors = cfg
+            .get("tensors")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("meta: missing tensors array"))?
+            .iter()
+            .map(|t| {
+                let name = t.str_or("name", "").to_string();
+                let shape: Vec<usize> = t
+                    .get("shape")
+                    .and_then(Value::as_arr)
+                    .map(|a| a.iter().filter_map(Value::as_usize).collect())
+                    .unwrap_or_default();
+                anyhow::ensure!(!name.is_empty(), "meta: tensor without a name");
+                let elems = shape.iter().product::<usize>().max(1);
+                Ok(TensorMeta { name, shape, elems })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(!tensors.is_empty(), "meta: empty tensor list");
+        Ok(StepMeta {
+            tensors,
+            batch: cfg.usize_or("batch", 1),
+            seq_len: cfg.usize_or("seq_len", 128),
+            vocab: cfg.usize_or("vocab", 96),
+            n_layers: cfg.usize_or("n_layers", 0),
+            d_model: cfg.usize_or("d_model", 0),
+            d_ff: cfg.usize_or("d_ff", 0),
+        })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.elems).sum()
+    }
+
+    /// Tensor sizes in backprop order (reverse of forward/param order) —
+    /// what the partition scheduler consumes.
+    pub fn sizes_backprop_order(&self) -> Vec<usize> {
+        self.tensors.iter().rev().map(|t| t.elems).collect()
+    }
+
+    /// The matching simulator-plane profile (same tensor order), used to
+    /// seed the schedule search before measured costs exist.
+    pub fn to_profile(&self) -> crate::profiles::ModelProfile {
+        crate::profiles::transformer_lm(
+            self.n_layers,
+            self.d_model,
+            self.d_ff,
+            self.vocab,
+            self.seq_len,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Value {
+        Value::parse(
+            r#"{
+              "n_layers": 1, "d_model": 8, "d_ff": 16, "vocab": 10,
+              "seq_len": 4, "batch": 2,
+              "tensors": [
+                {"name": "embed.weight", "shape": [10, 8], "elems": 80},
+                {"name": "head.weight", "shape": [8, 10], "elems": 80}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_meta() {
+        let m = StepMeta::from_json(&sample_json()).unwrap();
+        assert_eq!(m.tensors.len(), 2);
+        assert_eq!(m.tensors[0].name, "embed.weight");
+        assert_eq!(m.tensors[0].elems, 80);
+        assert_eq!(m.total_params(), 160);
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.sizes_backprop_order(), vec![80, 80]);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let v = Value::parse(r#"{"tensors": []}"#).unwrap();
+        assert!(StepMeta::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn profile_matches_when_built_artifacts_exist() {
+        let path = std::path::Path::new("artifacts/meta.json");
+        if !path.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = StepMeta::load(path, "e2e").unwrap();
+        let p = m.to_profile();
+        assert_eq!(p.num_tensors(), m.tensors.len());
+        assert_eq!(p.total_params(), m.total_params());
+        // Same order, tensor for tensor.
+        for (a, b) in p.tensors.iter().zip(&m.tensors) {
+            assert_eq!(a.elems, b.elems, "{} vs {}", a.name, b.name);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the rust hot path (pattern from /opt/xla-example/load_hlo).
+//!
+//! Python never runs at training time: `make artifacts` lowered the L2
+//! train step once; this module compiles that text on the CPU PJRT client
+//! and exposes a typed `TrainStep::run`.
+//!
+//! Thread model: the `xla` crate's client types are not `Send`, so each
+//! worker thread owns its own `PjRtClient` + compiled executable (identical
+//! HLO ⇒ identical semantics; compilation is per-thread one-off cost).
+
+mod meta;
+mod step;
+
+pub use meta::{StepMeta, TensorMeta};
+pub use step::TrainStep;

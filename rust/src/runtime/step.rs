@@ -1,0 +1,122 @@
+//! A loaded, compiled train-step executable.
+
+use super::meta::StepMeta;
+use crate::util::stats::Stopwatch;
+use std::path::Path;
+
+/// One worker's handle to the AOT train step: a thread-local PJRT CPU
+/// client + the compiled executable + the tensor-order contract.
+pub struct TrainStep {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: StepMeta,
+    /// Wall-clock of the last `run` call (seconds) — feeds the measured
+    /// cost models.
+    pub last_exec_secs: f64,
+}
+
+impl TrainStep {
+    /// Compile `hlo_path` (HLO text) on a fresh CPU client.
+    pub fn load(hlo_path: impl AsRef<Path>, meta: StepMeta) -> anyhow::Result<TrainStep> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .as_ref()
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", hlo_path.as_ref().display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", hlo_path.as_ref().display()))?;
+        Ok(TrainStep {
+            client,
+            exe,
+            meta,
+            last_exec_secs: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one train step.
+    ///
+    /// `params`: per-tensor f32 buffers in forward (param_spec) order.
+    /// `x`, `y`: flattened `(batch*seq)` i32 token buffers.
+    ///
+    /// Returns `(loss, grads)` with grads in forward order.
+    pub fn run(
+        &mut self,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+    ) -> anyhow::Result<(f32, Vec<Vec<f32>>)> {
+        let m = &self.meta;
+        anyhow::ensure!(
+            params.len() == m.tensors.len(),
+            "expected {} param tensors, got {}",
+            m.tensors.len(),
+            params.len()
+        );
+        anyhow::ensure!(x.len() == m.batch * m.seq_len, "x length");
+        anyhow::ensure!(y.len() == m.batch * m.seq_len, "y length");
+
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for (t, p) in m.tensors.iter().zip(params) {
+            anyhow::ensure!(
+                p.len() == t.elems,
+                "tensor {}: {} elems, expected {}",
+                t.name,
+                p.len(),
+                t.elems
+            );
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(p).reshape(&dims).map_err(to_anyhow)?;
+            inputs.push(lit);
+        }
+        let tok_dims = [m.batch as i64, m.seq_len as i64];
+        inputs.push(xla::Literal::vec1(x).reshape(&tok_dims).map_err(to_anyhow)?);
+        inputs.push(xla::Literal::vec1(y).reshape(&tok_dims).map_err(to_anyhow)?);
+
+        let sw = Stopwatch::start();
+        let result = self.exe.execute::<xla::Literal>(&inputs).map_err(to_anyhow)?;
+        let out = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        self.last_exec_secs = sw.elapsed().as_secs_f64();
+
+        // aot.py lowers with return_tuple=True: (loss, grad_0, ..., grad_T).
+        let parts = out.to_tuple().map_err(to_anyhow)?;
+        anyhow::ensure!(
+            parts.len() == 1 + m.tensors.len(),
+            "expected 1+{} outputs, got {}",
+            m.tensors.len(),
+            parts.len()
+        );
+        let mut it = parts.into_iter();
+        let loss = it
+            .next()
+            .unwrap()
+            .get_first_element::<f32>()
+            .map_err(to_anyhow)?;
+        let mut grads = Vec::with_capacity(m.tensors.len());
+        for (t, lit) in m.tensors.iter().zip(it) {
+            let v = lit.to_vec::<f32>().map_err(to_anyhow)?;
+            anyhow::ensure!(
+                v.len() == t.elems,
+                "grad {}: {} elems, expected {}",
+                t.name,
+                v.len(),
+                t.elems
+            );
+            grads.push(v);
+        }
+        Ok((loss, grads))
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}

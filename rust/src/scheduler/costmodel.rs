@@ -1,0 +1,127 @@
+//! Online fitting of the paper's Assumption-5 linear cost models.
+//!
+//! Assumption 5: compression time `h(x) = B_h + γ_h·x` and communication
+//! time `g(x) = B_g + γ_g·x`. The real execution plane measures (size, time)
+//! samples during warm-up steps and fits them here by least squares; the
+//! fit quality (R²) doubles as a runtime check that the assumption actually
+//! holds on the current hardware (`ablate_calibration` bench).
+
+use crate::util::stats::linfit;
+
+/// A fitted `t(x) = b + g·x` model with its fit quality.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FittedCost {
+    /// Startup/latency term (seconds).
+    pub b: f64,
+    /// Per-element term (seconds/element).
+    pub g: f64,
+    /// Coefficient of determination of the fit.
+    pub r2: f64,
+}
+
+impl FittedCost {
+    /// Fit from (elements, seconds) samples. Requires ≥ 2 distinct sizes.
+    pub fn fit(samples: &[(usize, f64)]) -> anyhow::Result<FittedCost> {
+        anyhow::ensure!(samples.len() >= 2, "need at least two samples");
+        let xs: Vec<f64> = samples.iter().map(|(n, _)| *n as f64).collect();
+        let ys: Vec<f64> = samples.iter().map(|(_, t)| *t).collect();
+        anyhow::ensure!(
+            xs.iter().any(|&x| x != xs[0]),
+            "need at least two distinct sizes to identify the slope"
+        );
+        let (b, g, r2) = linfit(&xs, &ys);
+        Ok(FittedCost {
+            // Negative intercepts/slopes are fit noise; clamp to the
+            // physically meaningful region.
+            b: b.max(0.0),
+            g: g.max(0.0),
+            r2,
+        })
+    }
+
+    pub fn predict(&self, elems: usize) -> f64 {
+        self.b + self.g * elems as f64
+    }
+}
+
+/// Accumulates timing samples for one operation kind and fits on demand.
+#[derive(Debug, Clone, Default)]
+pub struct CostSampler {
+    samples: Vec<(usize, f64)>,
+}
+
+impl CostSampler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, elems: usize, seconds: f64) {
+        self.samples.push((elems, seconds));
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn fit(&self) -> anyhow::Result<FittedCost> {
+        FittedCost::fit(&self.samples)
+    }
+
+    pub fn samples(&self) -> &[(usize, f64)] {
+        &self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_linear_model() {
+        let b = 1.5e-4;
+        let g = 2e-9;
+        let samples: Vec<(usize, f64)> = [64usize, 1024, 65536, 1 << 20]
+            .iter()
+            .map(|&n| (n, b + g * n as f64))
+            .collect();
+        let fit = FittedCost::fit(&samples).unwrap();
+        assert!((fit.b - b).abs() / b < 1e-9);
+        assert!((fit.g - g).abs() / g < 1e-9);
+        assert!(fit.r2 > 0.999);
+    }
+
+    #[test]
+    fn noisy_fit_still_close() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (b, g) = (1e-4, 1e-9);
+        let mut s = CostSampler::new();
+        for _ in 0..200 {
+            let n = 1usize << (6 + rng.gen_range(15));
+            let noise = 1.0 + 0.1 * (rng.next_f64() - 0.5);
+            s.record(n, (b + g * n as f64) * noise);
+        }
+        let fit = s.fit().unwrap();
+        assert!((fit.b - b).abs() / b < 0.3, "b = {}", fit.b);
+        assert!((fit.g - g).abs() / g < 0.2, "g = {}", fit.g);
+        assert!(fit.r2 > 0.9);
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        assert!(FittedCost::fit(&[(10, 1.0)]).is_err());
+        assert!(FittedCost::fit(&[(10, 1.0), (10, 1.1)]).is_err());
+    }
+
+    #[test]
+    fn clamps_negative_terms() {
+        // Decreasing times would fit a negative slope; clamp to 0.
+        let fit = FittedCost::fit(&[(100, 2e-3), (10_000, 1e-3)]).unwrap();
+        assert_eq!(fit.g, 0.0);
+        assert!(fit.b >= 0.0);
+    }
+}

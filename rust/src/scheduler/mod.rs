@@ -1,0 +1,19 @@
+//! The MergeComp scheduler — the paper's contribution (§4).
+//!
+//! - [`partition`]: contiguous model partitions (layer-wise, full-merge,
+//!   naive-even, and searched).
+//! - [`costmodel`]: online fitting of the paper's Assumption-5 linear
+//!   overhead models from measurements.
+//! - [`objective`]: the Eq. (7) iteration-time objective F(X_y).
+//! - [`search`]: Algorithm 2 — the heuristic that finds a near-optimal
+//!   partition with binary search over the unimodal F(X_2) (Theorem 3),
+//!   extended to y > 2 one cut at a time.
+
+pub mod costmodel;
+pub mod objective;
+pub mod partition;
+pub mod search;
+
+pub use costmodel::FittedCost;
+pub use partition::Partition;
+pub use search::{mergecomp_search, SearchOutcome, SearchParams};

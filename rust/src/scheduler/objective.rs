@@ -1,0 +1,236 @@
+//! The model-partition objective F(X_y) — paper Eq. (7):
+//!
+//! ```text
+//! F(X_y) = A + Σ h(x_i) + Σ g(x_i) − Σ p(x_i)
+//! ```
+//!
+//! Algorithm 2 only ever *evaluates* F, so the search is written against the
+//! [`Objective`] trait. Two implementations:
+//!
+//! - [`SimObjective`]: the discrete-event timeline (simulator plane) — this
+//!   is F including the overlap term, computed exactly.
+//! - [`MeasuredObjective`]: any closure returning a measured mean iteration
+//!   time (real plane: the trainer runs a few steps under the candidate
+//!   partition — the paper's "less than 50 iterations" warm-up search).
+
+use super::partition::Partition;
+use crate::simulator::{simulate, SimSetup};
+
+/// Anything that can score a candidate partition (lower is better).
+pub trait Objective {
+    fn eval(&mut self, p: &Partition) -> f64;
+    /// Number of evaluations performed (search-budget accounting).
+    fn evals(&self) -> usize;
+}
+
+/// Exact Eq.-7 objective on the simulator plane.
+pub struct SimObjective<'a> {
+    pub setup: SimSetup<'a>,
+    evals: usize,
+}
+
+impl<'a> SimObjective<'a> {
+    pub fn new(setup: SimSetup<'a>) -> Self {
+        Self { setup, evals: 0 }
+    }
+}
+
+impl Objective for SimObjective<'_> {
+    fn eval(&mut self, p: &Partition) -> f64 {
+        self.evals += 1;
+        simulate(&self.setup, p).iter_time
+    }
+
+    fn evals(&self) -> usize {
+        self.evals
+    }
+}
+
+/// Measured objective: wraps a closure that executes a few real iterations
+/// under the candidate schedule and reports the mean step time.
+pub struct MeasuredObjective<F: FnMut(&Partition) -> f64> {
+    f: F,
+    evals: usize,
+}
+
+impl<F: FnMut(&Partition) -> f64> MeasuredObjective<F> {
+    pub fn new(f: F) -> Self {
+        Self { f, evals: 0 }
+    }
+}
+
+impl<F: FnMut(&Partition) -> f64> Objective for MeasuredObjective<F> {
+    fn eval(&mut self, p: &Partition) -> f64 {
+        self.evals += 1;
+        (self.f)(p)
+    }
+
+    fn evals(&self) -> usize {
+        self.evals
+    }
+}
+
+/// Eq.-7 objective from **fitted** Assumption-5 cost models — the real
+/// execution plane's objective: the trainer measures encode/decode/comm
+/// times during warm-up, fits `B + γ·x` ([`super::costmodel::FittedCost`]),
+/// and Algorithm 2 searches against this analytic model (so the search
+/// costs microseconds instead of training steps).
+pub struct AnalyticObjective {
+    /// Per-tensor backward durations, backprop order.
+    pub bwd_dur: Vec<f64>,
+    /// Per-tensor element counts, backprop order.
+    pub sizes: Vec<usize>,
+    /// Forward-pass time (seconds).
+    pub fwd_time: f64,
+    /// Fitted encode-path cost (incl. EF decode if the codec uses EF).
+    pub enc: super::costmodel::FittedCost,
+    /// Fitted decode-path cost per received payload.
+    pub dec: super::costmodel::FittedCost,
+    /// Fitted collective cost for a group of x elements.
+    pub comm: super::costmodel::FittedCost,
+    /// Payloads decoded per group (world−1 for allgather, 1 for allreduce).
+    pub dec_fanin: usize,
+    evals: usize,
+}
+
+impl AnalyticObjective {
+    pub fn new(
+        bwd_dur: Vec<f64>,
+        sizes: Vec<usize>,
+        fwd_time: f64,
+        enc: super::costmodel::FittedCost,
+        dec: super::costmodel::FittedCost,
+        comm: super::costmodel::FittedCost,
+        dec_fanin: usize,
+    ) -> Self {
+        assert_eq!(bwd_dur.len(), sizes.len());
+        Self {
+            bwd_dur,
+            sizes,
+            fwd_time,
+            enc,
+            dec,
+            comm,
+            dec_fanin: dec_fanin.max(1),
+            evals: 0,
+        }
+    }
+}
+
+impl Objective for AnalyticObjective {
+    fn eval(&mut self, p: &Partition) -> f64 {
+        self.evals += 1;
+        // Same two-resource WFBP timeline as simulator::timeline, driven by
+        // the fitted costs.
+        let y = p.num_groups();
+        let mut gpu_t = self.fwd_time;
+        let mut comm_free = 0.0f64;
+        let mut comm_done = vec![0.0f64; y];
+        for j in 0..y {
+            let mut elems = 0usize;
+            for i in p.group_range(j) {
+                gpu_t += self.bwd_dur[i];
+                elems += self.sizes[i];
+            }
+            gpu_t += self.enc.predict(elems);
+            let start = gpu_t.max(comm_free);
+            comm_free = start + self.comm.predict(elems);
+            comm_done[j] = comm_free;
+        }
+        for j in 0..y {
+            let elems: usize = p.group_range(j).map(|i| self.sizes[i]).sum();
+            gpu_t = gpu_t.max(comm_done[j]) + self.dec.predict(elems) * self.dec_fanin as f64;
+        }
+        gpu_t
+    }
+
+    fn evals(&self) -> usize {
+        self.evals
+    }
+}
+
+/// Memoizing wrapper — Algorithm 2 revisits cut positions; cache them.
+pub struct Memo<'o> {
+    inner: &'o mut dyn Objective,
+    cache: std::collections::HashMap<Vec<usize>, f64>,
+}
+
+impl<'o> Memo<'o> {
+    pub fn new(inner: &'o mut dyn Objective) -> Self {
+        Self {
+            inner,
+            cache: std::collections::HashMap::new(),
+        }
+    }
+
+    pub fn eval(&mut self, p: &Partition) -> f64 {
+        let key = p.bounds().to_vec();
+        if let Some(&v) = self.cache.get(&key) {
+            return v;
+        }
+        let v = self.inner.eval(p);
+        self.cache.insert(key, v);
+        v
+    }
+
+    pub fn evals(&self) -> usize {
+        self.inner.evals()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::CodecKind;
+    use crate::netsim::Fabric;
+    use crate::profiles::resnet50_cifar10;
+
+    #[test]
+    fn sim_objective_counts_evals() {
+        let profile = resnet50_cifar10();
+        let setup = SimSetup {
+            profile: &profile,
+            kind: CodecKind::EfSignSgd,
+            fabric: Fabric::pcie(),
+            world: 4,
+        };
+        let mut obj = SimObjective::new(setup);
+        let p = Partition::naive_even(profile.num_tensors(), 2);
+        let f1 = obj.eval(&p);
+        let f2 = obj.eval(&p);
+        assert_eq!(f1, f2, "deterministic");
+        assert_eq!(obj.evals(), 2);
+    }
+
+    #[test]
+    fn memo_caches() {
+        let profile = resnet50_cifar10();
+        let setup = SimSetup {
+            profile: &profile,
+            kind: CodecKind::Dgc { ratio: 0.01 },
+            fabric: Fabric::pcie(),
+            world: 2,
+        };
+        let mut obj = SimObjective::new(setup);
+        let mut memo = Memo::new(&mut obj);
+        let p = Partition::naive_even(profile.num_tensors(), 3);
+        let f1 = memo.eval(&p);
+        let f2 = memo.eval(&p);
+        assert_eq!(f1, f2);
+        assert_eq!(memo.evals(), 1, "second eval served from cache");
+    }
+
+    #[test]
+    fn measured_objective_calls_closure() {
+        let mut calls = 0usize;
+        {
+            let mut obj = MeasuredObjective::new(|p: &Partition| {
+                calls += 1;
+                p.num_groups() as f64
+            });
+            let f = obj.eval(&Partition::naive_even(10, 2));
+            assert_eq!(f, 2.0);
+        }
+        assert_eq!(calls, 1);
+    }
+}

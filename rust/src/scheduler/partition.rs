@@ -1,0 +1,205 @@
+//! Model partitions (paper §4.3).
+//!
+//! A partition splits the model's N gradient tensors — **in back-propagation
+//! order** (the order gradients become available, i.e. reverse forward
+//! order) — into `y` contiguous groups. Contiguity follows the paper: groups
+//! are compressed and communicated as their last tensor's gradient arrives,
+//! so a group is an interval of the backprop sequence (Lemma 1 counts
+//! exactly the `C(N-1, y-1)` interval partitions).
+
+/// A contiguous partition over `n` backprop-ordered tensors.
+///
+/// `bounds` has `y+1` entries: group `j` covers tensor indices
+/// `bounds[j]..bounds[j+1]` (backprop order), `bounds[0] == 0`,
+/// `bounds[y] == n`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    bounds: Vec<usize>,
+    n: usize,
+}
+
+impl Partition {
+    pub fn from_bounds(n: usize, bounds: Vec<usize>) -> Partition {
+        assert!(n >= 1, "empty models have no partitions");
+        assert!(bounds.len() >= 2, "need at least one group");
+        assert_eq!(bounds[0], 0);
+        assert_eq!(*bounds.last().unwrap(), n);
+        for w in bounds.windows(2) {
+            assert!(w[0] < w[1], "groups must be non-empty and ordered");
+        }
+        Partition { bounds, n }
+    }
+
+    /// Cut points between groups (excluding 0 and n).
+    pub fn from_cuts(n: usize, mut cuts: Vec<usize>) -> Partition {
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut bounds = Vec::with_capacity(cuts.len() + 2);
+        bounds.push(0);
+        bounds.extend(cuts.into_iter().filter(|&c| c > 0 && c < n));
+        bounds.push(n);
+        Partition::from_bounds(n, bounds)
+    }
+
+    /// Layer-wise compression: one group per tensor (the status quo the
+    /// paper's §3 profiles).
+    pub fn layer_wise(n: usize) -> Partition {
+        Partition::from_bounds(n, (0..=n).collect())
+    }
+
+    /// Single group: compress the whole model at once (the paper's extreme
+    /// case: no WFBP overlap at all).
+    pub fn full_merge(n: usize) -> Partition {
+        Partition::from_bounds(n, vec![0, n])
+    }
+
+    /// Naive baseline (paper Table 3): split the *tensor count* evenly into
+    /// `y` groups, ignoring tensor sizes.
+    pub fn naive_even(n: usize, y: usize) -> Partition {
+        let y = y.clamp(1, n);
+        let base = n / y;
+        let rem = n % y;
+        let mut bounds = vec![0];
+        let mut off = 0;
+        for j in 0..y {
+            off += base + usize::from(j < rem);
+            bounds.push(off);
+        }
+        Partition::from_bounds(n, bounds)
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.n
+    }
+
+    /// Group `j` as a range of backprop-ordered tensor indices.
+    pub fn group_range(&self, j: usize) -> std::ops::Range<usize> {
+        self.bounds[j]..self.bounds[j + 1]
+    }
+
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// Element count per group given per-tensor sizes (backprop order).
+    pub fn group_elems(&self, sizes: &[usize]) -> Vec<usize> {
+        assert_eq!(sizes.len(), self.n);
+        (0..self.num_groups())
+            .map(|j| self.group_range(j).map(|i| sizes[i]).sum())
+            .collect()
+    }
+
+    /// Which group a tensor belongs to.
+    pub fn group_of(&self, tensor: usize) -> usize {
+        assert!(tensor < self.n);
+        // bounds is sorted; binary search the interval.
+        match self.bounds.binary_search(&tensor) {
+            Ok(j) if j == self.num_groups() => j - 1,
+            Ok(j) => j,
+            Err(j) => j - 1,
+        }
+    }
+}
+
+impl std::fmt::Display for Partition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Partition(y={}, bounds={:?})", self.num_groups(), self.bounds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gens};
+
+    #[test]
+    fn layer_wise_and_full_merge() {
+        let lw = Partition::layer_wise(5);
+        assert_eq!(lw.num_groups(), 5);
+        for j in 0..5 {
+            assert_eq!(lw.group_range(j), j..j + 1);
+        }
+        let fm = Partition::full_merge(5);
+        assert_eq!(fm.num_groups(), 1);
+        assert_eq!(fm.group_range(0), 0..5);
+    }
+
+    #[test]
+    fn naive_even_distributes_remainder() {
+        let p = Partition::naive_even(10, 3);
+        assert_eq!(p.bounds(), &[0, 4, 7, 10]);
+        let p = Partition::naive_even(9, 3);
+        assert_eq!(p.bounds(), &[0, 3, 6, 9]);
+        let p = Partition::naive_even(3, 7);
+        assert_eq!(p.num_groups(), 3, "y clamps to n");
+    }
+
+    #[test]
+    fn group_elems_sums() {
+        let p = Partition::from_cuts(4, vec![2]);
+        let sizes = [10usize, 20, 30, 40];
+        assert_eq!(p.group_elems(&sizes), vec![30, 70]);
+    }
+
+    #[test]
+    fn group_of_lookup() {
+        let p = Partition::from_bounds(6, vec![0, 2, 5, 6]);
+        assert_eq!(p.group_of(0), 0);
+        assert_eq!(p.group_of(1), 0);
+        assert_eq!(p.group_of(2), 1);
+        assert_eq!(p.group_of(4), 1);
+        assert_eq!(p.group_of(5), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn rejects_empty_groups() {
+        Partition::from_bounds(4, vec![0, 2, 2, 4]);
+    }
+
+    #[test]
+    fn from_cuts_filters_degenerate() {
+        let p = Partition::from_cuts(5, vec![0, 3, 5, 3]);
+        assert_eq!(p.bounds(), &[0, 3, 5]);
+    }
+
+    /// Property: every partition covers each tensor exactly once.
+    #[test]
+    fn prop_partitions_cover_exactly_once() {
+        check(
+            "partition coverage",
+            200,
+            gens::pair(gens::usize_in(1..200), gens::usize_in(1..50)),
+            |&(n, y)| {
+                for p in [
+                    Partition::layer_wise(n),
+                    Partition::full_merge(n),
+                    Partition::naive_even(n, y),
+                ] {
+                    let mut seen = vec![0usize; n];
+                    for j in 0..p.num_groups() {
+                        for i in p.group_range(j) {
+                            seen[i] += 1;
+                        }
+                    }
+                    if seen.iter().any(|&c| c != 1) {
+                        return Err(format!("{p}: coverage {seen:?}"));
+                    }
+                    // group_of agrees with group_range
+                    for j in 0..p.num_groups() {
+                        for i in p.group_range(j) {
+                            if p.group_of(i) != j {
+                                return Err(format!("group_of({i}) != {j} in {p}"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,333 @@
+//! Algorithm 2 — MergeComp's heuristic model-partition search.
+//!
+//! Structure follows the paper's §9.3.3 proof of Theorem 3:
+//!
+//! - `y = 2`: `F(X_2)` as a function of the single cut point first
+//!   decreases (growing the first group grows its overlap) and then
+//!   increases (the first group's communication no longer finishes before
+//!   backprop does) — unimodal, so the optimal cut is found by a
+//!   golden-section-style **binary search over cut positions** in
+//!   O(log N) evaluations.
+//! - `y > 2`: fix the first `y−2` cut points (enumerated), solve the last
+//!   one by the same unimodal search → O(N^{y−2}·log N) (Theorem 3).
+//! - The outer loop grows `y` from 2 to `Y`, stopping early when the best
+//!   `y`-group partition is worse than the `(y−1)`-group one or improves it
+//!   by less than `α·F_min(y−1)` — the diminishing-returns rule that makes
+//!   `Y = 2` the paper's recommended setting (§5.2).
+
+use super::objective::{Memo, Objective};
+use super::partition::Partition;
+
+/// Algorithm 2 inputs: Y (max groups) and α (marginal-benefit threshold).
+#[derive(Debug, Clone, Copy)]
+pub struct SearchParams {
+    pub y_max: usize,
+    pub alpha: f64,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        // Paper §5.2: Y = 2 suffices in practice; α small.
+        Self {
+            y_max: 2,
+            alpha: 0.02,
+        }
+    }
+}
+
+/// Search result.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub partition: Partition,
+    pub f_min: f64,
+    /// Best objective found for each explored y (1-indexed by position 0 = y 1).
+    pub per_y: Vec<(usize, f64)>,
+    /// Objective evaluations spent (the paper reports < 50 iterations for
+    /// Y = 2 on the measured plane).
+    pub evals: usize,
+}
+
+/// Unimodal minimization of `f(cut)` over `cut ∈ [lo, hi]` (inclusive) by
+/// ternary search, with a final exhaustive sweep of the residual bracket —
+/// robust to small plateaus from discrete tensor sizes.
+fn unimodal_min(
+    mut f: impl FnMut(usize) -> f64,
+    mut lo: usize,
+    mut hi: usize,
+) -> (usize, f64) {
+    assert!(lo <= hi);
+    while hi - lo > 3 {
+        let third = (hi - lo) / 3;
+        let m1 = lo + third;
+        let m2 = hi - third;
+        if f(m1) <= f(m2) {
+            hi = m2 - 1;
+        } else {
+            lo = m1 + 1;
+        }
+    }
+    let mut best = (lo, f(lo));
+    for c in lo + 1..=hi {
+        let v = f(c);
+        if v < best.1 {
+            best = (c, v);
+        }
+    }
+    best
+}
+
+/// Find the best y-group partition with the first `y−2` cuts fixed,
+/// searching the final cut in the open interval after `fixed`'s last cut.
+fn best_last_cut(
+    memo: &mut Memo,
+    n: usize,
+    fixed: &[usize],
+) -> Option<(Partition, f64)> {
+    let start = fixed.last().copied().unwrap_or(0) + 1;
+    if start > n - 1 {
+        return None;
+    }
+    let eval_cut = |memo: &mut Memo, c: usize| {
+        let mut cuts = fixed.to_vec();
+        cuts.push(c);
+        let p = Partition::from_cuts(n, cuts);
+        (p.clone(), memo.eval(&p))
+    };
+    let (c, f) = unimodal_min(|c| eval_cut(memo, c).1, start, n - 1);
+    Some(eval_cut(memo, c)).map(|(p, _)| (p, f))
+}
+
+/// Enumerate all fixed-prefix combinations for `y` groups (`y−2` cuts) and
+/// binary-search the last cut for each — the §9.3.3 procedure. To keep
+/// wall-clock bounded on huge models a stride coarsens the enumeration once
+/// the combination count passes `budget` (documented deviation; exact for
+/// every paper experiment, which all use Y ≤ 4 and N ≤ 314 with budget
+/// defaults far above the need).
+fn best_partition_for_y(
+    memo: &mut Memo,
+    n: usize,
+    y: usize,
+    budget: usize,
+) -> Option<(Partition, f64)> {
+    assert!(y >= 2);
+    if y > n {
+        return None;
+    }
+    if y == 2 {
+        return best_last_cut(memo, n, &[]);
+    }
+    // Enumerate the first y-2 cuts with optional stride coarsening.
+    let prefix_len = y - 2;
+    let combos = (n as f64).powi(prefix_len as i32);
+    let stride = if combos > budget as f64 {
+        ((combos / budget as f64).powf(1.0 / prefix_len as f64)).ceil() as usize
+    } else {
+        1
+    }
+    .max(1);
+
+    let mut best: Option<(Partition, f64)> = None;
+    let mut prefix = vec![0usize; prefix_len];
+
+    // Odometer over increasing cut positions with the given stride.
+    fn rec(
+        memo: &mut Memo,
+        n: usize,
+        prefix: &mut Vec<usize>,
+        level: usize,
+        start: usize,
+        stride: usize,
+        y: usize,
+        best: &mut Option<(Partition, f64)>,
+    ) {
+        let remaining = (y - 2) - level;
+        if level == y - 2 {
+            if let Some((p, f)) = best_last_cut(memo, n, prefix) {
+                if best.as_ref().map(|(_, bf)| f < *bf).unwrap_or(true) {
+                    *best = Some((p, f));
+                }
+            }
+            return;
+        }
+        // Leave room for the remaining cuts plus the last searched one.
+        let hi = n - 1 - remaining;
+        let mut c = start;
+        while c <= hi {
+            prefix[level] = c;
+            rec(memo, n, prefix, level + 1, c + 1, stride, y, best);
+            c += stride;
+        }
+    }
+    rec(memo, n, &mut prefix, 0, 1, stride, y, &mut best);
+    best
+}
+
+/// Algorithm 2. `objective` scores candidate partitions (lower = faster
+/// iteration); `n` is the tensor count in backprop order.
+pub fn mergecomp_search(
+    objective: &mut dyn Objective,
+    n: usize,
+    params: SearchParams,
+) -> SearchOutcome {
+    let mut memo = Memo::new(objective);
+    let full = Partition::full_merge(n);
+    let mut f_min = memo.eval(&full); // F_min(1) = F(X_1)
+    let mut best = full;
+    let mut per_y = vec![(1usize, f_min)];
+
+    let y_max = params.y_max.clamp(1, n.max(1));
+    for y in 2..=y_max {
+        let Some((cand, f)) = best_partition_for_y(&mut memo, n, y, 2_000_000) else {
+            break;
+        };
+        per_y.push((y, f));
+        if f_min < f {
+            // F_min(y-1) < F_min(y): stop, keep y-1 groups.
+            break;
+        }
+        let improved = f_min - f;
+        best = cand;
+        let prev = f_min;
+        f_min = f;
+        if improved < params.alpha * prev {
+            // Marginal benefit below α: stop with y groups.
+            break;
+        }
+    }
+
+    SearchOutcome {
+        partition: best,
+        f_min,
+        per_y,
+        evals: memo.evals(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::objective::{MeasuredObjective, Objective, SimObjective};
+    use super::*;
+    use crate::compression::CodecKind;
+    use crate::netsim::Fabric;
+    use crate::profiles::{resnet101_imagenet, resnet50_cifar10};
+    use crate::simulator::SimSetup;
+
+    #[test]
+    fn unimodal_min_finds_valley() {
+        // f(c) = (c - 37)^2 over [1, 100]
+        let (c, v) = unimodal_min(|c| ((c as f64) - 37.0).powi(2), 1, 100);
+        assert_eq!(c, 37);
+        assert_eq!(v, 0.0);
+        // Plateau at the bottom.
+        let (c, _) = unimodal_min(|c| ((c as isize - 10).abs().max(2)) as f64, 1, 50);
+        assert!((8..=12).contains(&c));
+        // Monotone functions: boundary minima.
+        let (c, _) = unimodal_min(|c| c as f64, 1, 99);
+        assert_eq!(c, 1);
+        let (c, _) = unimodal_min(|c| -(c as f64), 1, 99);
+        assert_eq!(c, 99);
+    }
+
+    fn sim_objective(kind: CodecKind, world: usize) -> (SimObjective<'static>, usize) {
+        use once_cell::sync::Lazy;
+        static PROFILE: Lazy<crate::profiles::ModelProfile> = Lazy::new(resnet50_cifar10);
+        let setup = SimSetup {
+            profile: &PROFILE,
+            kind,
+            fabric: Fabric::pcie(),
+            world,
+        };
+        (SimObjective::new(setup), PROFILE.num_tensors())
+    }
+
+    #[test]
+    fn y2_search_matches_exhaustive() {
+        let (mut obj, n) = sim_objective(CodecKind::Dgc { ratio: 0.01 }, 4);
+        // Exhaustive best cut.
+        let mut best_f = f64::INFINITY;
+        for c in 1..n {
+            let f = obj.eval(&Partition::from_cuts(n, vec![c]));
+            best_f = best_f.min(f);
+        }
+        let (mut obj2, _) = sim_objective(CodecKind::Dgc { ratio: 0.01 }, 4);
+        let out = mergecomp_search(&mut obj2, n, SearchParams { y_max: 2, alpha: 0.0 });
+        assert!(
+            out.f_min <= best_f * 1.001,
+            "binary search {} vs exhaustive {}",
+            out.f_min,
+            best_f
+        );
+        // O(log N) evals, not O(N): the paper's <50-iterations claim.
+        assert!(out.evals < 50, "used {} evals", out.evals);
+    }
+
+    #[test]
+    fn search_beats_layerwise_and_naive() {
+        for kind in [
+            CodecKind::Dgc { ratio: 0.01 },
+            CodecKind::EfSignSgd,
+            CodecKind::Fp16,
+        ] {
+            let (mut obj, n) = sim_objective(kind, 8);
+            let f_layer = obj.eval(&Partition::layer_wise(n));
+            let f_naive = obj.eval(&Partition::naive_even(n, 2));
+            let (mut obj2, _) = sim_objective(kind, 8);
+            let out = mergecomp_search(&mut obj2, n, SearchParams::default());
+            assert!(
+                out.f_min <= f_naive + 1e-12,
+                "{}: search {} > naive {}",
+                kind.name(),
+                out.f_min,
+                f_naive
+            );
+            assert!(
+                out.f_min <= f_layer,
+                "{}: search {} > layer-wise {}",
+                kind.name(),
+                out.f_min,
+                f_layer
+            );
+        }
+    }
+
+    #[test]
+    fn y3_no_worse_than_y2() {
+        let profile = resnet101_imagenet();
+        let setup = SimSetup {
+            profile: &profile,
+            kind: CodecKind::EfSignSgd,
+            fabric: Fabric::pcie(),
+            world: 8,
+        };
+        let mut o2 = SimObjective::new(setup);
+        let f2 = mergecomp_search(&mut o2, profile.num_tensors(), SearchParams { y_max: 2, alpha: 0.0 }).f_min;
+        let mut o3 = SimObjective::new(setup);
+        let f3 = mergecomp_search(&mut o3, profile.num_tensors(), SearchParams { y_max: 3, alpha: 0.0 }).f_min;
+        assert!(f3 <= f2 + 1e-12, "y=3 search must contain y=2 ({f3} vs {f2})");
+    }
+
+    #[test]
+    fn alpha_stops_early() {
+        let (mut obj, n) = sim_objective(CodecKind::EfSignSgd, 4);
+        // Huge alpha: any improvement below 90% stops at y=2.
+        let out = mergecomp_search(&mut obj, n, SearchParams { y_max: 4, alpha: 0.9 });
+        assert!(out.partition.num_groups() <= 2);
+        assert!(out.per_y.len() <= 2 + 1);
+    }
+
+    #[test]
+    fn degenerate_single_tensor_model() {
+        let mut obj = MeasuredObjective::new(|p: &Partition| p.num_groups() as f64);
+        let out = mergecomp_search(&mut obj, 1, SearchParams::default());
+        assert_eq!(out.partition.num_groups(), 1);
+    }
+
+    #[test]
+    fn measured_objective_prefers_fewer_groups_when_flat() {
+        // Objective = number of groups (monotone): Alg. 2 must return y=1.
+        let mut obj = MeasuredObjective::new(|p: &Partition| p.num_groups() as f64);
+        let out = mergecomp_search(&mut obj, 50, SearchParams { y_max: 4, alpha: 0.01 });
+        assert_eq!(out.partition.num_groups(), 1);
+        assert_eq!(out.f_min, 1.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! The simulator plane: reproduces the paper's V100-testbed experiments
+//! (Figs. 2–6, Tables 2–3) analytically.
+//!
+//! - [`overhead`]: per-codec encode/decode cost models calibrated to the
+//!   paper's Fig. 3 measurements and §3.2 worked example.
+//! - [`timeline`]: the discrete-event WFBP iteration timeline that turns a
+//!   (profile, codec, fabric, world, partition) tuple into an iteration
+//!   time and scaling factor.
+//!
+//! The *real* execution plane (rust/src/training) shares the partition
+//! scheduler with this module but measures its own costs.
+
+pub mod overhead;
+pub mod timeline;
+
+pub use overhead::{LinearCost, OverheadModel};
+pub use timeline::{scaling_factor, simulate, SimBreakdown, SimSetup};

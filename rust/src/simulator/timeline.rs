@@ -1,0 +1,256 @@
+//! Discrete-event WFBP iteration timeline (the simulator plane).
+//!
+//! Two resources per worker, matching the execution model in the paper's
+//! Fig. 1 and Eq. (7):
+//!
+//! - the **GPU stream** runs forward, per-tensor backward, every encode
+//!   (+EF decode) and every decode — compression ops serialize with compute,
+//!   which is why Eq. (7) charges Σh(x_i) in full;
+//! - the **comm stream** runs one collective at a time; a group's collective
+//!   starts when its encode finished AND the stream is free, overlapping
+//!   with whatever the GPU stream still has to do — the Σp(x_i) term.
+//!
+//! The iteration ends when the last group has been decoded. All workers are
+//! symmetric (synchronous data parallelism), so one worker's timeline is the
+//! iteration time.
+
+use super::overhead::OverheadModel;
+use crate::compression::CodecKind;
+use crate::netsim::{CostModel, Fabric};
+use crate::profiles::ModelProfile;
+use crate::scheduler::partition::Partition;
+
+/// One simulation scenario.
+#[derive(Clone, Copy)]
+pub struct SimSetup<'a> {
+    pub profile: &'a ModelProfile,
+    pub kind: CodecKind,
+    pub fabric: Fabric,
+    pub world: usize,
+}
+
+/// Timing breakdown of one simulated iteration.
+#[derive(Debug, Clone)]
+pub struct SimBreakdown {
+    /// End-to-end iteration time (seconds).
+    pub iter_time: f64,
+    /// Pure compute (fwd+bwd) — the profile's A.
+    pub compute: f64,
+    /// Total encode-path compression compute (encode + EF decode).
+    pub encode_path: f64,
+    /// Total decode-path compression compute.
+    pub decode_path: f64,
+    /// Sum of collective durations (whether or not overlapped).
+    pub comm_total: f64,
+    /// Communication time NOT hidden by compute/compression — the exposed
+    /// remainder after WFBP overlap.
+    pub comm_exposed: f64,
+    /// Per-group (encode_done, comm_done) event times.
+    pub group_events: Vec<(f64, f64)>,
+}
+
+impl SimBreakdown {
+    /// Overlap achieved: comm hidden under GPU-stream work (Σp in Eq. 7).
+    pub fn overlap(&self) -> f64 {
+        self.comm_total - self.comm_exposed
+    }
+}
+
+/// Simulate one data-parallel iteration.
+pub fn simulate(setup: &SimSetup, partition: &Partition) -> SimBreakdown {
+    let profile = setup.profile;
+    let n = profile.num_tensors();
+    assert_eq!(partition.num_tensors(), n, "partition must match the model");
+
+    let overhead = OverheadModel::for_codec(setup.kind);
+    let cost = CostModel::new(setup.fabric, setup.world);
+
+    // Per-tensor backward durations in backprop order.
+    let a = profile.iter_compute_s;
+    let bwd_total = a * (1.0 - profile.fwd_frac);
+    let total_flops = profile.total_flops().max(f64::MIN_POSITIVE);
+    let bwd_dur: Vec<f64> = profile
+        .tensors
+        .iter()
+        .rev()
+        .map(|t| bwd_total * t.flops / total_flops)
+        .collect();
+    let sizes = profile.sizes_backprop_order();
+    let group_elems = partition.group_elems(&sizes);
+    let y = partition.num_groups();
+
+    // --- GPU stream: forward, then backward interleaved with encodes. ----
+    let mut gpu_t = a * profile.fwd_frac;
+    let mut comm_free = 0.0f64;
+    let mut encode_done = vec![0.0f64; y];
+    let mut comm_done = vec![0.0f64; y];
+    let mut encode_total = 0.0;
+    let mut comm_total = 0.0;
+
+    for j in 0..y {
+        for i in partition.group_range(j) {
+            gpu_t += bwd_dur[i];
+        }
+        // Encode (+EF decode) for group j serializes on the GPU stream.
+        let enc = overhead.encode_path(group_elems[j]);
+        gpu_t += enc;
+        encode_total += enc;
+        encode_done[j] = gpu_t;
+
+        // Collective for group j: starts when encoded & stream free.
+        let dur = cost.group_comm(setup.kind, group_elems[j]).seconds;
+        let start = encode_done[j].max(comm_free);
+        comm_free = start + dur;
+        comm_done[j] = comm_free;
+        comm_total += dur;
+    }
+
+    // --- Decode phase: groups decoded in arrival order on the GPU stream.
+    let mut decode_total = 0.0;
+    for j in 0..y {
+        let dec = overhead.decode_path(setup.kind, group_elems[j], setup.world);
+        gpu_t = gpu_t.max(comm_done[j]) + dec;
+        decode_total += dec;
+    }
+
+    let iter_time = gpu_t;
+    let busy = a + encode_total + decode_total;
+    let comm_exposed = (iter_time - busy).max(0.0);
+
+    SimBreakdown {
+        iter_time,
+        compute: a,
+        encode_path: encode_total,
+        decode_path: decode_total,
+        comm_total,
+        comm_exposed,
+        group_events: encode_done.into_iter().zip(comm_done).collect(),
+    }
+}
+
+/// Scaling factor (paper §3.1): speed(n)/(n·speed(1)) = T₁/Tₙ where T₁ is
+/// the plain single-GPU iteration (no compression, no comm).
+pub fn scaling_factor(setup: &SimSetup, partition: &Partition) -> f64 {
+    if setup.world == 1 {
+        return 1.0;
+    }
+    let sim = simulate(setup, partition);
+    setup.profile.iter_compute_s / sim.iter_time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiles::resnet50_cifar10;
+
+    fn setup(kind: CodecKind, fabric: Fabric, world: usize) -> SimSetup<'static> {
+        use once_cell::sync::Lazy;
+        static PROFILE: Lazy<ModelProfile> = Lazy::new(resnet50_cifar10);
+        SimSetup {
+            profile: &PROFILE,
+            kind,
+            fabric,
+            world,
+        }
+    }
+
+    #[test]
+    fn single_worker_is_compute_plus_compression() {
+        let s = setup(CodecKind::EfSignSgd, Fabric::pcie(), 1);
+        let p = Partition::layer_wise(s.profile.num_tensors());
+        let b = simulate(&s, &p);
+        assert_eq!(b.comm_total, 0.0);
+        assert!(
+            (b.iter_time - (b.compute + b.encode_path + b.decode_path)).abs() < 1e-12
+        );
+        assert_eq!(scaling_factor(&s, &p), 1.0);
+    }
+
+    #[test]
+    fn fp32_layerwise_matches_hand_computation() {
+        // With no compression, iter = fwd + max-flow of (bwd ∥ comm chain).
+        let s = setup(CodecKind::Fp32, Fabric::pcie(), 2);
+        let p = Partition::full_merge(s.profile.num_tensors());
+        let b = simulate(&s, &p);
+        // Full merge: comm starts after bwd completes; no overlap possible.
+        let comm = CostModel::new(Fabric::pcie(), 2)
+            .allreduce(4 * s.profile.total_params())
+            .seconds;
+        assert!((b.iter_time - (s.profile.iter_compute_s + comm)).abs() < 1e-9);
+        assert!(b.overlap().abs() < 1e-12, "full merge has zero overlap");
+    }
+
+    #[test]
+    fn layerwise_overlaps_fullmerge_does_not() {
+        let s = setup(CodecKind::Fp32, Fabric::pcie(), 4);
+        let n = s.profile.num_tensors();
+        let lw = simulate(&s, &Partition::layer_wise(n));
+        let fm = simulate(&s, &Partition::full_merge(n));
+        assert!(lw.overlap() > 0.0, "WFBP must overlap some communication");
+        assert!(fm.overlap().abs() < 1e-9, "full merge has no WFBP overlap");
+    }
+
+    /// Paper Fig. 2 headline: on PCIe, layer-wise DGC/Top-k/OneBit perform
+    /// *worse* than the FP32 baseline (>30% drop).
+    #[test]
+    fn fig2_shape_compression_hurts_layerwise_on_pcie() {
+        let n = resnet50_cifar10().num_tensors();
+        let lw = Partition::layer_wise(n);
+        // The paper's §3.2 worked example is the 2-GPU PCIe configuration.
+        let base = scaling_factor(&setup(CodecKind::Fp32, Fabric::pcie(), 2), &lw);
+        for kind in [
+            CodecKind::Dgc { ratio: 0.01 },
+            CodecKind::TopK { ratio: 0.01 },
+            CodecKind::OneBit,
+        ] {
+            let sf = scaling_factor(&setup(kind, Fabric::pcie(), 2), &lw);
+            assert!(
+                sf < 0.7 * base,
+                "{}: layer-wise {sf:.3} should be >30% below baseline {base:.3}",
+                kind.name()
+            );
+        }
+    }
+
+    /// Merging into 2 groups must beat layer-wise for DGC on PCIe by a large
+    /// factor (paper: up to 3.83× at 8 GPUs).
+    #[test]
+    fn merging_rescues_dgc() {
+        let n = resnet50_cifar10().num_tensors();
+        let s = setup(CodecKind::Dgc { ratio: 0.01 }, Fabric::pcie(), 8);
+        let lw = scaling_factor(&s, &Partition::layer_wise(n));
+        let merged = scaling_factor(&s, &Partition::naive_even(n, 2));
+        assert!(
+            merged > 2.5 * lw,
+            "merged {merged:.3} vs layer-wise {lw:.3}"
+        );
+    }
+
+    #[test]
+    fn more_workers_never_increase_scaling() {
+        let n = resnet50_cifar10().num_tensors();
+        let lw = Partition::layer_wise(n);
+        for kind in [CodecKind::Fp32, CodecKind::EfSignSgd] {
+            let mut prev = 1.0f64;
+            for world in [2usize, 4, 8] {
+                let sf = scaling_factor(&setup(kind, Fabric::pcie(), world), &lw);
+                assert!(sf <= prev + 1e-9, "{}: {world} workers", kind.name());
+                prev = sf;
+            }
+        }
+    }
+
+    #[test]
+    fn breakdown_accounting_consistent() {
+        let s = setup(CodecKind::EfSignSgd, Fabric::nvlink(), 4);
+        let p = Partition::naive_even(s.profile.num_tensors(), 2);
+        let b = simulate(&s, &p);
+        assert!(b.comm_exposed >= 0.0);
+        assert!(b.overlap() >= 0.0);
+        assert!(b.overlap() <= b.comm_total + 1e-12);
+        assert!(b.iter_time >= b.compute);
+        assert_eq!(b.group_events.len(), 2);
+        // comm_done is nondecreasing (single comm stream).
+        assert!(b.group_events[0].1 <= b.group_events[1].1);
+    }
+}

@@ -1,0 +1,296 @@
+//! Gradient exchange: paper Algorithm 1's inner loop.
+//!
+//! Per group (in backprop order): merge the group's tensors into one flat
+//! buffer, encode with the codec (EF state lives in the per-group codec
+//! instance), synchronize with the codec's collective (Table 1), decode +
+//! average, and scatter back into the per-tensor buffers.
+
+use crate::collectives::Comm;
+use crate::compression::{Codec, CodecKind, Collective, Encoded};
+use crate::scheduler::Partition;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::Stopwatch;
+
+/// Per-step timing/size accounting (feeds the measured cost models and the
+/// EXPERIMENTS.md overhead tables).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExchangeStats {
+    pub encode_secs: f64,
+    pub comm_secs: f64,
+    pub decode_secs: f64,
+    pub bytes_sent: u64,
+    pub groups: usize,
+}
+
+impl ExchangeStats {
+    pub fn total_secs(&self) -> f64 {
+        self.encode_secs + self.comm_secs + self.decode_secs
+    }
+}
+
+/// One worker's exchange state for a fixed (codec, partition) pair.
+pub struct GradExchange {
+    kind: CodecKind,
+    partition: Partition,
+    /// Per-tensor element counts, backprop order.
+    sizes: Vec<usize>,
+    /// One stateful codec per group (EF granularity = group, §4.2).
+    codecs: Vec<Box<dyn Codec>>,
+    group_elems: Vec<usize>,
+    flat: Vec<f32>, // merge scratch
+}
+
+impl GradExchange {
+    pub fn new(kind: CodecKind, partition: Partition, sizes_backprop: Vec<usize>) -> Self {
+        let group_elems = partition.group_elems(&sizes_backprop);
+        let codecs = group_elems.iter().map(|&n| kind.build(n)).collect();
+        let max_group = group_elems.iter().copied().max().unwrap_or(0);
+        GradExchange {
+            kind,
+            partition,
+            sizes: sizes_backprop,
+            codecs,
+            group_elems,
+            flat: Vec::with_capacity(max_group),
+        }
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    pub fn kind(&self) -> CodecKind {
+        self.kind
+    }
+
+    /// Aggregate gradients across the group. `grads` holds per-tensor
+    /// buffers in **backprop order**; on return each buffer contains the
+    /// mean of the (compressed) gradients over all workers.
+    pub fn exchange(
+        &mut self,
+        comm: &mut Comm,
+        grads: &mut [Vec<f32>],
+        rng: &mut Xoshiro256,
+    ) -> ExchangeStats {
+        assert_eq!(grads.len(), self.sizes.len());
+        let world = comm.world() as f32;
+        let mut stats = ExchangeStats {
+            groups: self.partition.num_groups(),
+            ..Default::default()
+        };
+        let bytes_before = comm.bytes_sent();
+
+        for j in 0..self.partition.num_groups() {
+            let range = self.partition.group_range(j);
+            let n = self.group_elems[j];
+
+            // --- merge -----------------------------------------------------
+            self.flat.clear();
+            for i in range.clone() {
+                self.flat.extend_from_slice(&grads[i]);
+            }
+            debug_assert_eq!(self.flat.len(), n);
+
+            // --- encode ----------------------------------------------------
+            let sw = Stopwatch::start();
+            let enc = self.codecs[j].encode(&self.flat, rng);
+            stats.encode_secs += sw.elapsed().as_secs_f64();
+
+            // --- communicate + decode --------------------------------------
+            match self.kind.collective() {
+                Collective::AllReduce => {
+                    let mut wire = enc.bytes;
+                    let sw = Stopwatch::start();
+                    comm.allreduce_wire(&mut wire, self.codecs[j].as_ref());
+                    stats.comm_secs += sw.elapsed().as_secs_f64();
+
+                    let sw = Stopwatch::start();
+                    let summed = Encoded { bytes: wire, n };
+                    self.codecs[j].decode(&summed, &mut self.flat);
+                    for v in self.flat.iter_mut() {
+                        *v /= world;
+                    }
+                    stats.decode_secs += sw.elapsed().as_secs_f64();
+                }
+                Collective::AllGather => {
+                    let sw = Stopwatch::start();
+                    let payloads = comm.allgather(enc.bytes);
+                    stats.comm_secs += sw.elapsed().as_secs_f64();
+
+                    let sw = Stopwatch::start();
+                    self.flat.clear();
+                    self.flat.resize(n, 0.0);
+                    let w = 1.0 / world;
+                    for bytes in payloads {
+                        let e = Encoded { bytes, n };
+                        self.codecs[j].decode_add(&e, &mut self.flat, w);
+                    }
+                    stats.decode_secs += sw.elapsed().as_secs_f64();
+                }
+            }
+
+            // --- scatter back ---------------------------------------------
+            let mut off = 0;
+            for i in range {
+                let len = self.sizes[i];
+                grads[i].copy_from_slice(&self.flat[off..off + len]);
+                off += len;
+            }
+        }
+
+        stats.bytes_sent = comm.bytes_sent() - bytes_before;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_comm_group;
+
+    fn make_grads(rank: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(t, &n)| {
+                (0..n)
+                    .map(|i| (rank + 1) as f32 * (t as f32 + 1.0) + i as f32 * 0.001)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fp32_exchange_is_exact_mean() {
+        let sizes = vec![5usize, 3, 7];
+        for partition in [
+            Partition::layer_wise(3),
+            Partition::full_merge(3),
+            Partition::naive_even(3, 2),
+        ] {
+            let sizes2 = sizes.clone();
+            let partition2 = partition.clone();
+            let results = run_comm_group(3, move |c| {
+                let mut ex =
+                    GradExchange::new(CodecKind::Fp32, partition2.clone(), sizes2.clone());
+                let mut rng = Xoshiro256::seed_from_u64(c.rank() as u64);
+                let mut grads = make_grads(c.rank(), &sizes2);
+                ex.exchange(c, &mut grads, &mut rng);
+                grads
+            });
+            // Expected mean over ranks: mean(rank+1) = 2.
+            for r in &results {
+                for (t, buf) in r.iter().enumerate() {
+                    for (i, v) in buf.iter().enumerate() {
+                        let want = 2.0 * (t as f32 + 1.0) + i as f32 * 0.001;
+                        assert!(
+                            (v - want).abs() < 1e-4,
+                            "partition {partition}: tensor {t} idx {i}: {v} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_workers_agree_after_exchange() {
+        // Model consistency: every codec must leave identical aggregated
+        // gradients on every worker (the heart of synchronous SGD).
+        let sizes = vec![40usize, 25, 70];
+        for kind in [
+            CodecKind::Fp16,
+            CodecKind::Qsgd { bits: 8 },
+            CodecKind::TopK { ratio: 0.1 },
+            CodecKind::Dgc { ratio: 0.1 },
+            CodecKind::EfSignSgd,
+            CodecKind::SignSgd,
+            CodecKind::OneBit,
+        ] {
+            let sizes2 = sizes.clone();
+            let results = run_comm_group(2, move |c| {
+                let mut ex = GradExchange::new(
+                    kind,
+                    Partition::naive_even(3, 2),
+                    sizes2.clone(),
+                );
+                let mut rng = Xoshiro256::seed_from_u64(100 + c.rank() as u64);
+                let mut grads = make_grads(c.rank(), &sizes2);
+                ex.exchange(c, &mut grads, &mut rng);
+                grads
+            });
+            assert_eq!(
+                results[0], results[1],
+                "{}: workers disagree after exchange",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn stats_account_bytes() {
+        let sizes = vec![100usize];
+        let results = run_comm_group(2, move |c| {
+            let mut ex = GradExchange::new(
+                CodecKind::Fp32,
+                Partition::full_merge(1),
+                sizes.clone(),
+            );
+            let mut rng = Xoshiro256::seed_from_u64(0);
+            let mut grads = vec![vec![1.0f32; 100]];
+            ex.exchange(c, &mut grads, &mut rng)
+        });
+        for s in results {
+            // Ring allreduce, 2 ranks: each sends ~bytes of the buffer.
+            assert!(s.bytes_sent >= 400);
+            assert_eq!(s.groups, 1);
+            assert!(s.encode_secs >= 0.0 && s.decode_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn ef_state_persists_across_steps() {
+        // With EF codecs, repeating the same gradient must transmit the
+        // leftover residual: the 2-step mean gets closer to the truth than
+        // the 1-step mean.
+        let sizes = vec![256usize];
+        let results = run_comm_group(2, move |c| {
+            let mut ex = GradExchange::new(
+                CodecKind::EfSignSgd,
+                Partition::full_merge(1),
+                sizes.clone(),
+            );
+            let mut rng = Xoshiro256::seed_from_u64(5 + c.rank() as u64);
+            let mut base = vec![0f32; 256];
+            Xoshiro256::seed_from_u64(99).fill_normal_f32(&mut base, 1.0);
+
+            let mut g1 = vec![base.clone()];
+            ex.exchange(c, &mut g1, &mut rng);
+            let mut g2 = vec![base.clone()];
+            ex.exchange(c, &mut g2, &mut rng);
+
+            let err1: f32 = g1[0]
+                .iter()
+                .zip(&base)
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            let two_step_mean: Vec<f32> = g1[0]
+                .iter()
+                .zip(&g2[0])
+                .map(|(a, b)| 0.5 * (a + b))
+                .collect();
+            let err2: f32 = two_step_mean
+                .iter()
+                .zip(&base)
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            (err1, err2)
+        });
+        for (err1, err2) in results {
+            assert!(
+                err2 < err1,
+                "EF should reduce accumulated error: {err1} -> {err2}"
+            );
+        }
+    }
+}

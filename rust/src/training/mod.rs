@@ -1,0 +1,15 @@
+//! The real execution plane: synchronous data-parallel training of the
+//! AOT-compiled L2 model, with gradients compressed per the MergeComp
+//! schedule and exchanged through the in-process collectives.
+//!
+//! One OS thread per worker; each owns a PJRT client, a shard of the
+//! corpus, its parameter/momentum/EF state, and a [`collectives::Comm`]
+//! endpoint. Paper Algorithm 1 is the step loop in [`trainer`].
+
+mod exchange;
+mod optimizer;
+mod trainer;
+
+pub use exchange::{ExchangeStats, GradExchange};
+pub use optimizer::SgdMomentum;
+pub use trainer::{init_params as trainer_init_params, train, RunResult, StepRecord};

@@ -1,0 +1,84 @@
+//! Host-side optimizer: SGD with (optional) heavy-ball momentum over the
+//! per-tensor parameter buffers. The update runs in rust — PJRT only ever
+//! sees the forward/backward computation.
+
+/// SGD + momentum: `v ← μ·v + g; p ← p − lr·v`.
+pub struct SgdMomentum {
+    lr: f32,
+    mu: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl SgdMomentum {
+    pub fn new(lr: f32, mu: f32, tensor_sizes: &[usize]) -> SgdMomentum {
+        assert!(lr > 0.0);
+        assert!((0.0..1.0).contains(&mu));
+        SgdMomentum {
+            lr,
+            mu,
+            velocity: tensor_sizes.iter().map(|&n| vec![0f32; n]).collect(),
+        }
+    }
+
+    pub fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    /// Apply one update. `params` and `grads` are per-tensor buffers in the
+    /// same order as construction.
+    pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
+        assert_eq!(params.len(), self.velocity.len());
+        assert_eq!(grads.len(), self.velocity.len());
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(&mut self.velocity) {
+            debug_assert_eq!(p.len(), g.len());
+            if self.mu == 0.0 {
+                for (pi, gi) in p.iter_mut().zip(g) {
+                    *pi -= self.lr * gi;
+                }
+            } else {
+                for ((pi, gi), vi) in p.iter_mut().zip(g).zip(v.iter_mut()) {
+                    *vi = self.mu * *vi + gi;
+                    *pi -= self.lr * *vi;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_update() {
+        let mut opt = SgdMomentum::new(0.1, 0.0, &[2]);
+        let mut p = vec![vec![1.0f32, 2.0]];
+        opt.step(&mut p, &[vec![10.0, -10.0]]);
+        assert_eq!(p[0], vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = SgdMomentum::new(1.0, 0.5, &[1]);
+        let mut p = vec![vec![0.0f32]];
+        opt.step(&mut p, &[vec![1.0]]); // v=1, p=-1
+        opt.step(&mut p, &[vec![1.0]]); // v=1.5, p=-2.5
+        assert_eq!(p[0][0], -2.5);
+    }
+
+    #[test]
+    fn quadratic_converges() {
+        // minimize f(x) = 0.5*x^2 → g = x.
+        let mut opt = SgdMomentum::new(0.2, 0.9, &[1]);
+        let mut p = vec![vec![10.0f32]];
+        for _ in 0..200 {
+            let g = vec![vec![p[0][0]]];
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0][0].abs() < 1e-3, "x = {}", p[0][0]);
+    }
+}

@@ -1,0 +1,408 @@
+//! The data-parallel trainer: paper Algorithm 1 end to end.
+//!
+//! Flow (every worker thread, symmetric):
+//!   1. compile the AOT train-step artifact on a thread-local PJRT client;
+//!   2. initialize identical parameters from the shared seed;
+//!   3. warm-up: measure step time + encode/decode/comm costs, fit the
+//!      Assumption-5 models, run Algorithm 2 (rank 0) and broadcast the
+//!      chosen partition;
+//!   4. loop: run step → exchange gradients per the schedule → SGD update;
+//!   5. evaluate on held-out batches.
+//!
+//! Rank 0 collects the loss curve and timing records (Figs. 7–8, Table 4).
+
+use super::exchange::{ExchangeStats, GradExchange};
+use super::optimizer::SgdMomentum;
+use crate::collectives::{run_comm_group, Comm};
+use crate::compression::Collective;
+use crate::config::{ScheduleSpec, TrainConfig};
+use crate::data::{Batcher, SyntheticCorpus};
+use crate::runtime::{StepMeta, TrainStep};
+use crate::scheduler::costmodel::{CostSampler, FittedCost};
+use crate::scheduler::objective::AnalyticObjective;
+use crate::scheduler::Partition;
+use crate::util::json::Value;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::Stopwatch;
+
+/// One logged step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    /// Wall-clock seconds since training started (this testbed).
+    pub elapsed: f64,
+    /// Projected V100 iteration time for this schedule (simulator plane) —
+    /// lets Figs. 7–8 plot a paper-comparable time axis. Seconds/step.
+    pub exchange: ExchangeStats,
+}
+
+/// Result of a training run (rank 0's view).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub records: Vec<StepRecord>,
+    pub partition: Partition,
+    pub final_train_loss: f32,
+    pub eval_loss: f32,
+    pub mean_step_secs: f64,
+    pub mean_exchange: ExchangeStats,
+    pub search_evals: usize,
+    pub total_bytes_sent: u64,
+    pub steps: usize,
+}
+
+impl RunResult {
+    pub fn to_json(&self, cfg: &TrainConfig) -> Value {
+        let curve: Vec<Value> = self
+            .records
+            .iter()
+            .map(|r| {
+                Value::from_pairs(vec![
+                    ("step", Value::from(r.step)),
+                    ("loss", Value::from(r.loss as f64)),
+                    ("elapsed", Value::from(r.elapsed)),
+                ])
+            })
+            .collect();
+        Value::from_pairs(vec![
+            ("config", cfg.to_json()),
+            ("partition_bounds", Value::Arr(
+                self.partition.bounds().iter().map(|&b| Value::from(b)).collect(),
+            )),
+            ("groups", Value::from(self.partition.num_groups())),
+            ("final_train_loss", Value::from(self.final_train_loss as f64)),
+            ("eval_loss", Value::from(self.eval_loss as f64)),
+            ("mean_step_secs", Value::from(self.mean_step_secs)),
+            ("mean_encode_secs", Value::from(self.mean_exchange.encode_secs)),
+            ("mean_comm_secs", Value::from(self.mean_exchange.comm_secs)),
+            ("mean_decode_secs", Value::from(self.mean_exchange.decode_secs)),
+            ("search_evals", Value::from(self.search_evals)),
+            ("total_bytes_sent", Value::from(self.total_bytes_sent)),
+            ("curve", Value::Arr(curve)),
+        ])
+    }
+}
+
+/// Measure codec encode+decode costs at a few group sizes (host-local, no
+/// comm) and fit the Assumption-5 models.
+fn fit_codec_costs(
+    cfg: &TrainConfig,
+    total_params: usize,
+) -> anyhow::Result<(FittedCost, FittedCost)> {
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ 0xC0DEC);
+    let mut enc_s = CostSampler::new();
+    let mut dec_s = CostSampler::new();
+    let sizes = [
+        1usize << 10,
+        1 << 14,
+        1 << 18,
+        (total_params / 2).max(1 << 19),
+    ];
+    for &n in &sizes {
+        let mut codec = cfg.codec.build(n);
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g, 0.02);
+        let mut out = vec![0f32; n];
+        // Warm + measure (median of 3).
+        let mut enc_t = f64::INFINITY;
+        let mut dec_t = f64::INFINITY;
+        for _ in 0..3 {
+            let sw = Stopwatch::start();
+            let enc = codec.encode(&g, &mut rng);
+            enc_t = enc_t.min(sw.elapsed().as_secs_f64());
+            let sw = Stopwatch::start();
+            codec.decode(&enc, &mut out);
+            dec_t = dec_t.min(sw.elapsed().as_secs_f64());
+        }
+        enc_s.record(n, enc_t);
+        dec_s.record(n, dec_t);
+    }
+    Ok((enc_s.fit()?, dec_s.fit()?))
+}
+
+/// Measure the collective cost at a few payload sizes. Must be executed by
+/// every rank simultaneously (it runs real collectives).
+fn fit_comm_costs(comm: &mut Comm, cfg: &TrainConfig, total_params: usize) -> FittedCost {
+    let mut sampler = CostSampler::new();
+    let sizes = [1usize << 10, 1 << 14, 1 << 18, (total_params / 2).max(1 << 19)];
+    for &n in &sizes {
+        let wire = cfg.codec.wire_size(n);
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let sw = Stopwatch::start();
+            match cfg.codec.collective() {
+                Collective::AllReduce => {
+                    let mut buf = vec![0u8; wire.div_ceil(4) * 4];
+                    let codec = cfg.codec.build(n);
+                    comm.allreduce_wire(&mut buf, codec.as_ref());
+                }
+                Collective::AllGather => {
+                    let _ = comm.allgather(vec![0u8; wire]);
+                }
+            }
+            best = best.min(sw.elapsed().as_secs_f64());
+        }
+        sampler.record(n, best);
+    }
+    sampler
+        .fit()
+        .unwrap_or(FittedCost { b: 1e-5, g: 1e-9, r2: 0.0 })
+}
+
+/// Resolve the schedule on rank 0 (fitting costs + Algorithm 2), then
+/// broadcast the partition bounds so all ranks agree bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn resolve_schedule(
+    comm: &mut Comm,
+    cfg: &TrainConfig,
+    meta: &StepMeta,
+    measured_step_secs: f64,
+) -> anyhow::Result<(Partition, usize)> {
+    let n = meta.tensors.len();
+    // Comm costs involve all ranks — measure before rank 0 diverges.
+    let comm_cost = fit_comm_costs(comm, cfg, meta.total_params());
+
+    let mut evals = 0usize;
+    let partition = if comm.rank() == 0 {
+        let spec = cfg.schedule;
+        let p = match spec {
+            ScheduleSpec::MergeComp { .. } => {
+                let (enc, dec) = fit_codec_costs(cfg, meta.total_params())?;
+                // Backward durations: measured step time split by the
+                // profile's FLOPs shares (same shape as the simulator).
+                let profile = meta.to_profile();
+                let total_flops = profile.total_flops().max(f64::MIN_POSITIVE);
+                let bwd = measured_step_secs * (1.0 - profile.fwd_frac);
+                let bwd_dur: Vec<f64> = profile
+                    .tensors
+                    .iter()
+                    .rev()
+                    .map(|t| bwd * t.flops / total_flops)
+                    .collect();
+                let fanin = match cfg.codec.collective() {
+                    Collective::AllReduce => 1,
+                    Collective::AllGather => comm.world().saturating_sub(1).max(1),
+                };
+                let mut obj = AnalyticObjective::new(
+                    bwd_dur,
+                    meta.sizes_backprop_order(),
+                    measured_step_secs * profile.fwd_frac,
+                    enc,
+                    dec,
+                    comm_cost,
+                    fanin,
+                );
+                let out = spec.resolve(n, &mut obj);
+                evals = {
+                    use crate::scheduler::objective::Objective as _;
+                    obj.evals()
+                };
+                out
+            }
+            other => {
+                let mut noop =
+                    crate::scheduler::objective::MeasuredObjective::new(|_: &Partition| 0.0);
+                other.resolve(n, &mut noop)
+            }
+        };
+        // Broadcast bounds as a JSON payload.
+        let bounds: Vec<Value> = p.bounds().iter().map(|&b| Value::from(b)).collect();
+        let mut payload = Value::Arr(bounds).to_string_compact().into_bytes();
+        comm.broadcast(0, &mut payload);
+        p
+    } else {
+        let mut payload = Vec::new();
+        comm.broadcast(0, &mut payload);
+        let v = Value::parse(std::str::from_utf8(&payload)?)
+            .map_err(|e| anyhow::anyhow!("partition broadcast: {e}"))?;
+        let bounds: Vec<usize> = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("partition broadcast: not an array"))?
+            .iter()
+            .filter_map(Value::as_usize)
+            .collect();
+        Partition::from_bounds(n, bounds)
+    };
+    Ok((partition, evals))
+}
+
+/// Deterministic parameter init shared by all workers: LN scales = 1,
+/// biases = 0, weights ~ N(0, fan_in^-1/2) (embed: 0.02) — mirrors
+/// model.init_params.
+pub fn init_params(meta: &StepMeta, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    meta.tensors
+        .iter()
+        .map(|t| {
+            if t.name.ends_with(".scale") {
+                vec![1f32; t.elems]
+            } else if t.name.ends_with(".bias") || t.name.ends_with(".b1") || t.name.ends_with(".b2")
+            {
+                vec![0f32; t.elems]
+            } else {
+                let fan_in = *t.shape.first().unwrap_or(&t.elems) as f32;
+                let std = if t.name == "embed.weight" {
+                    0.02
+                } else {
+                    fan_in.powf(-0.5)
+                };
+                let mut v = vec![0f32; t.elems];
+                rng.fill_normal_f32(&mut v, std);
+                v
+            }
+        })
+        .collect()
+}
+
+/// Run one data-parallel training job; returns rank 0's result.
+pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
+    let meta_path = std::path::Path::new(&cfg.artifact)
+        .parent()
+        .map(|d| d.join("meta.json"))
+        .ok_or_else(|| anyhow::anyhow!("artifact path has no parent dir"))?;
+    let meta = StepMeta::load(&meta_path, "e2e")?;
+    anyhow::ensure!(
+        meta.batch == cfg.batch_per_worker && meta.seq_len == cfg.seq_len,
+        "config batch/seq ({}, {}) must match the AOT artifact ({}, {}) — \
+         re-run `make artifacts` after changing the model config",
+        cfg.batch_per_worker,
+        cfg.seq_len,
+        meta.batch,
+        meta.seq_len
+    );
+    let corpus = SyntheticCorpus::generate(cfg.seed ^ 0xDA7A, 400_000.max(cfg.workers * 50_000));
+
+    let results: Vec<anyhow::Result<Option<RunResult>>> =
+        run_comm_group(cfg.workers, |comm: &mut Comm| -> anyhow::Result<Option<RunResult>> {
+            let rank = comm.rank();
+            let mut step_exec = TrainStep::load(&cfg.artifact, meta.clone())?;
+            let mut params = init_params(&meta, cfg.seed);
+            let sizes_fwd: Vec<usize> = meta.tensors.iter().map(|t| t.elems).collect();
+            // DGC carries its own momentum correction (it transmits an
+            // accumulated-velocity stream); stacking optimizer momentum on
+            // top would double-apply it (DGC paper Alg. 1).
+            let momentum = match cfg.codec {
+                crate::compression::CodecKind::Dgc { .. } => 0.0,
+                _ => cfg.momentum,
+            };
+            let mut opt = SgdMomentum::new(cfg.lr, momentum, &sizes_fwd);
+            let mut batcher = Batcher::new(
+                &corpus,
+                rank,
+                comm.world(),
+                cfg.batch_per_worker,
+                cfg.seq_len,
+                cfg.seed,
+            );
+            let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ ((rank as u64) << 17));
+
+            // --- warm-up: one step to measure compute time ----------------
+            let (x, y) = batcher.next_batch();
+            let (_, _) = step_exec.run(&params, &x, &y)?;
+            let mut step_secs = step_exec.last_exec_secs;
+            // Average the measured step time so all ranks feed rank 0's
+            // search comparable numbers on a time-sliced CPU.
+            let mut t = [step_secs as f32];
+            comm.allreduce_f32(&mut t);
+            step_secs = (t[0] / comm.world() as f32) as f64;
+
+            // --- schedule --------------------------------------------------
+            let (partition, search_evals) =
+                resolve_schedule(comm, cfg, &meta, step_secs)?;
+            let mut exchange = GradExchange::new(
+                cfg.codec,
+                partition.clone(),
+                meta.sizes_backprop_order(),
+            );
+
+            // --- training loop ---------------------------------------------
+            let t0 = Stopwatch::start();
+            let mut records = Vec::new();
+            let mut sum_exchange = ExchangeStats::default();
+            let mut sum_step = 0.0f64;
+            let mut last_loss = 0f32;
+            for step in 0..cfg.steps {
+                let (x, y) = batcher.next_batch();
+                let (loss, grads_fwd) = step_exec.run(&params, &x, &y)?;
+                sum_step += step_exec.last_exec_secs;
+
+                // Reorder to backprop order for the exchange, then back.
+                let mut grads_bp: Vec<Vec<f32>> = grads_fwd.into_iter().rev().collect();
+                let stats = exchange.exchange(comm, &mut grads_bp, &mut rng);
+                sum_exchange.encode_secs += stats.encode_secs;
+                sum_exchange.comm_secs += stats.comm_secs;
+                sum_exchange.decode_secs += stats.decode_secs;
+                sum_exchange.bytes_sent += stats.bytes_sent;
+                sum_exchange.groups = stats.groups;
+                let grads_fwd: Vec<Vec<f32>> = grads_bp.into_iter().rev().collect();
+
+                opt.step(&mut params, &grads_fwd);
+
+                // Mean loss across workers for logging.
+                let mut l = [loss];
+                comm.allreduce_f32(&mut l);
+                last_loss = l[0] / comm.world() as f32;
+                if rank == 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+                    records.push(StepRecord {
+                        step,
+                        loss: last_loss,
+                        elapsed: t0.elapsed().as_secs_f64(),
+                        exchange: stats,
+                    });
+                }
+            }
+
+            // --- held-out evaluation ---------------------------------------
+            let mut eval_batcher = Batcher::new(
+                &corpus,
+                rank,
+                comm.world(),
+                cfg.batch_per_worker,
+                cfg.seq_len,
+                cfg.seed ^ 0xE7A1_5EED,
+            );
+            let mut eval_sum = 0f32;
+            let eval_batches = 4;
+            for _ in 0..eval_batches {
+                let (x, y) = eval_batcher.next_batch();
+                let (loss, _) = step_exec.run(&params, &x, &y)?;
+                eval_sum += loss;
+            }
+            let mut e = [eval_sum / eval_batches as f32];
+            comm.allreduce_f32(&mut e);
+            let eval_loss = e[0] / comm.world() as f32;
+
+            if rank != 0 {
+                return Ok(None);
+            }
+            let steps = cfg.steps.max(1) as f64;
+            Ok(Some(RunResult {
+                records,
+                partition,
+                final_train_loss: last_loss,
+                eval_loss,
+                mean_step_secs: sum_step / steps,
+                mean_exchange: ExchangeStats {
+                    encode_secs: sum_exchange.encode_secs / steps,
+                    comm_secs: sum_exchange.comm_secs / steps,
+                    decode_secs: sum_exchange.decode_secs / steps,
+                    bytes_sent: (sum_exchange.bytes_sent as f64 / steps) as u64,
+                    groups: sum_exchange.groups,
+                },
+                search_evals,
+                total_bytes_sent: sum_exchange.bytes_sent,
+                steps: cfg.steps,
+            }))
+        });
+
+    for r in &results {
+        if let Err(e) = r {
+            anyhow::bail!("worker failed: {e}");
+        }
+    }
+    results
+        .into_iter()
+        .filter_map(|r| r.ok().flatten())
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("rank 0 produced no result"))
+}

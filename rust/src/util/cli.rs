@@ -1,0 +1,151 @@
+//! Tiny CLI argument parser (the offline image has no `clap`).
+//!
+//! Grammar: `binary <subcommand> [positional ...] [--key value | --flag]`.
+//! `--key=value` is also accepted. Unknown flags are collected and reported
+//! by the caller so each subcommand can own its flag set.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    // Boolean flag.
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.str(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.str(key), Some("true" | "1" | "yes"))
+    }
+
+    /// Comma-separated list flag, e.g. `--gpus 2,4,8`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.str(key) {
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated string list flag, e.g. `--codecs dgc,topk`.
+    pub fn str_list(&self, key: &str) -> Option<Vec<String>> {
+        self.str(key).map(|s| {
+            s.split(',')
+                .map(|p| p.trim().to_string())
+                .filter(|p| !p.is_empty())
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["train", "conf.json", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["conf.json", "extra"]);
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["sim", "--workers", "8", "--codec=dgc", "--verbose"]);
+        assert_eq!(a.usize_or("workers", 1), 8);
+        assert_eq!(a.str("codec"), Some("dgc"));
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert_eq!(a.str("a"), Some("true"));
+        assert_eq!(a.str("b"), Some("v"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--gpus", "2,4,8", "--codecs", "dgc, topk"]);
+        assert_eq!(a.usize_list_or("gpus", &[1]), vec![2, 4, 8]);
+        assert_eq!(
+            a.str_list("codecs").unwrap(),
+            vec!["dgc".to_string(), "topk".to_string()]
+        );
+        assert_eq!(a.usize_list_or("missing", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = parse(&["x", "--lr", "0.1"]);
+        assert_eq!(a.f64_or("lr", 0.0), 0.1);
+        assert_eq!(a.f64_or("nope", 2.5), 2.5);
+        assert_eq!(a.u64_or("seed", 42), 42);
+    }
+}

@@ -1,0 +1,300 @@
+//! Minimal property-based testing harness.
+//!
+//! The real `proptest` crate is not available in this offline image, so the
+//! repository ships its own small harness with the same core loop: generate
+//! random cases from a seedable RNG, run the property, and on failure
+//! *shrink* the input towards a minimal counterexample before reporting.
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use mergecomp::util::proptest::{check, gens};
+//! check("sum is commutative", 256, gens::vec_f32(0..1024, 1.0), |v| {
+//!     let a: f32 = v.iter().sum();
+//!     let b: f32 = v.iter().rev().sum();
+//!     if (a - b).abs() <= 1e-3 * (1.0 + a.abs()) { Ok(()) } else { Err(format!("{a} != {b}")) }
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+
+/// A generator produces a random value and knows how to shrink it.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Value;
+    /// Candidate smaller inputs, most aggressive first. Default: no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases of the property; panic with the (shrunk) minimal
+/// counterexample on failure. Seed is derived from the name so adding a test
+/// does not perturb the cases of existing tests.
+pub fn check<G: Gen>(
+    name: &str,
+    cases: usize,
+    gen: G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    let seed = fnv1a(name.as_bytes()) ^ env_seed();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            let (min_v, min_msg, steps) = shrink_loop(&gen, v, msg, &prop);
+            panic!(
+                "property '{name}' failed (case {case}/{cases}, seed {seed:#x}, \
+                 shrunk {steps} steps):\n  input: {min_v:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut v: G::Value,
+    mut msg: String,
+    prop: &impl Fn(&G::Value) -> Result<(), String>,
+) -> (G::Value, String, usize) {
+    let mut steps = 0;
+    'outer: loop {
+        if steps > 2000 {
+            break;
+        }
+        for cand in gen.shrink(&v) {
+            if let Err(m) = prop(&cand) {
+                v = cand;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (v, msg, steps)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// `MERGECOMP_PT_SEED` perturbs all property tests (fuzz-in-CI hook).
+fn env_seed() -> u64 {
+    std::env::var("MERGECOMP_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Stock generators.
+pub mod gens {
+    use super::Gen;
+    use crate::util::rng::Xoshiro256;
+    use std::ops::Range;
+
+    /// Uniform usize in a range; shrinks towards the lower bound.
+    pub struct UsizeIn(pub Range<usize>);
+
+    impl Gen for UsizeIn {
+        type Value = usize;
+        fn generate(&self, rng: &mut Xoshiro256) -> usize {
+            self.0.start + rng.gen_range(self.0.end - self.0.start)
+        }
+        fn shrink(&self, v: &usize) -> Vec<usize> {
+            let mut out = Vec::new();
+            if *v > self.0.start {
+                out.push(self.0.start);
+                out.push(self.0.start + (v - self.0.start) / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        }
+    }
+
+    pub fn usize_in(r: Range<usize>) -> UsizeIn {
+        UsizeIn(r)
+    }
+
+    /// Vec<f32> of random length with ~N(0, std) entries, occasionally spiked
+    /// with zeros, denormals and large magnitudes to stress codecs.
+    pub struct VecF32 {
+        pub len: Range<usize>,
+        pub std: f32,
+    }
+
+    impl Gen for VecF32 {
+        type Value = Vec<f32>;
+        fn generate(&self, rng: &mut Xoshiro256) -> Vec<f32> {
+            let n = self.len.start + rng.gen_range((self.len.end - self.len.start).max(1));
+            let mut v = vec![0f32; n];
+            for x in v.iter_mut() {
+                let roll = rng.gen_range(20);
+                *x = match roll {
+                    0 => 0.0,
+                    1 => 1e-30,                       // denormal-ish
+                    2 => (rng.next_f32() - 0.5) * 1e6, // large
+                    _ => rng.normal_ms(0.0, self.std as f64) as f32,
+                };
+            }
+            v
+        }
+        fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+            let mut out = Vec::new();
+            let n = v.len();
+            if n > self.len.start {
+                // Halve, drop front half, drop back half, drop one element.
+                out.push(v[..(n / 2).max(self.len.start)].to_vec());
+                out.push(v[n / 2..].to_vec());
+                out.push(v[..n - 1].to_vec());
+            }
+            // Zero out elements (values shrink to 0).
+            if v.iter().any(|&x| x != 0.0) {
+                out.push(v.iter().map(|_| 0.0).collect());
+                let mut half = v.clone();
+                for x in half.iter_mut() {
+                    *x /= 2.0;
+                }
+                out.push(half);
+            }
+            out.retain(|c| c.len() >= self.len.start && c != v);
+            out
+        }
+    }
+
+    pub fn vec_f32(len: Range<usize>, std: f32) -> VecF32 {
+        VecF32 { len, std }
+    }
+
+    /// Pair combinator.
+    pub struct Pair<A, B>(pub A, pub B);
+
+    impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+        type Value = (A::Value, B::Value);
+        fn generate(&self, rng: &mut Xoshiro256) -> Self::Value {
+            (self.0.generate(rng), self.1.generate(rng))
+        }
+        fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+            let mut out: Vec<Self::Value> = self
+                .0
+                .shrink(a)
+                .into_iter()
+                .map(|a2| (a2, b.clone()))
+                .collect();
+            out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+            out
+        }
+    }
+
+    pub fn pair<A: Gen, B: Gen>(a: A, b: B) -> Pair<A, B> {
+        Pair(a, b)
+    }
+
+    /// Vec<f64> of positive sizes — tensor-size sequences for partitions.
+    pub struct TensorSizes {
+        pub n: Range<usize>,
+        pub max_size: usize,
+    }
+
+    impl Gen for TensorSizes {
+        type Value = Vec<usize>;
+        fn generate(&self, rng: &mut Xoshiro256) -> Vec<usize> {
+            let n = self.n.start + rng.gen_range((self.n.end - self.n.start).max(1));
+            (0..n)
+                .map(|_| {
+                    // Log-uniform sizes: DNN tensors span decades.
+                    let log_max = (self.max_size.max(2) as f64).ln();
+                    let s = (rng.next_f64() * log_max).exp() as usize;
+                    s.max(1)
+                })
+                .collect()
+        }
+        fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+            let mut out = Vec::new();
+            if v.len() > self.n.start {
+                out.push(v[..v.len() - 1].to_vec());
+                out.push(v[..(v.len() / 2).max(self.n.start)].to_vec());
+            }
+            if v.iter().any(|&s| s > 1) {
+                out.push(v.iter().map(|&s| (s / 2).max(1)).collect());
+                out.push(v.iter().map(|_| 1).collect());
+            }
+            out.retain(|c| c.len() >= self.n.start && c != v);
+            out
+        }
+    }
+
+    pub fn tensor_sizes(n: Range<usize>, max_size: usize) -> TensorSizes {
+        TensorSizes { n, max_size }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("always passes", 50, gens::usize_in(0..10), |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics() {
+        check("always fails", 10, gens::usize_in(0..10), |_| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: all values < 5. Counterexample should shrink to exactly 5.
+        let result = std::panic::catch_unwind(|| {
+            check("lt five", 200, gens::usize_in(0..1000), |&v| {
+                if v < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 5"))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("input: 5"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn vec_shrinker_respects_min_len() {
+        let g = gens::vec_f32(2..8, 1.0);
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(1);
+        for _ in 0..50 {
+            let v = g.generate(&mut rng);
+            assert!(v.len() >= 2 && v.len() < 8);
+            for s in g.shrink(&v) {
+                assert!(s.len() >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_sizes_positive() {
+        let g = gens::tensor_sizes(1..50, 1 << 20);
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(2);
+        for _ in 0..50 {
+            let v = g.generate(&mut rng);
+            assert!(!v.is_empty());
+            assert!(v.iter().all(|&s| s >= 1));
+        }
+    }
+}

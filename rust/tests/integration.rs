@@ -1,0 +1,222 @@
+//! Cross-module integration: schedule resolution → exchange → optimizer,
+//! config plumbing, and accounting consistency between the planes.
+
+use mergecomp::collectives::run_comm_group;
+use mergecomp::compression::CodecKind;
+use mergecomp::config::ScheduleSpec;
+use mergecomp::netsim::{CostModel, Fabric};
+use mergecomp::profiles::{resnet50_cifar10, transformer};
+use mergecomp::scheduler::objective::{AnalyticObjective, Objective, SimObjective};
+use mergecomp::scheduler::costmodel::FittedCost;
+use mergecomp::scheduler::{mergecomp_search, Partition, SearchParams};
+use mergecomp::simulator::{simulate, SimSetup};
+use mergecomp::training::{GradExchange, SgdMomentum};
+use mergecomp::util::rng::Xoshiro256;
+
+/// A multi-step distributed SGD loop over a synthetic quadratic: all
+/// workers must converge to the optimum and stay bit-identical, for every
+/// schedule strategy.
+#[test]
+fn distributed_quadratic_converges_under_compression() {
+    // minimize sum over tensors of 0.5*||x - target||^2 (per-worker noise).
+    let sizes = vec![300usize, 150, 500, 50];
+    let n_tensors = sizes.len();
+    // DGC's momentum correction amplifies the transmitted gradient by
+    // ~1/(1-m) = 10x (it subsumes optimizer momentum), so its stable lr is
+    // 10x smaller and it needs more steps to drain the EF pipeline.
+    for (kind, schedule, lr, iters) in [
+        (CodecKind::Fp32, ScheduleSpec::LayerWise, 0.3, 150),
+        (CodecKind::EfSignSgd, ScheduleSpec::FullMerge, 0.3, 150),
+        (CodecKind::Dgc { ratio: 0.05 }, ScheduleSpec::NaiveEven { y: 2 }, 0.005, 1500),
+        (CodecKind::Qsgd { bits: 8 }, ScheduleSpec::NaiveEven { y: 3 }, 0.3, 150),
+    ] {
+        let sizes2 = sizes.clone();
+        let results = run_comm_group(3, move |comm| {
+            let mut noop =
+                mergecomp::scheduler::objective::MeasuredObjective::new(|_: &Partition| 0.0);
+            let partition = schedule.resolve(n_tensors, &mut noop);
+            let mut ex = GradExchange::new(kind, partition, sizes2.clone());
+            let mut rng = Xoshiro256::seed_from_u64(comm.rank() as u64);
+            let mut opt = SgdMomentum::new(lr, 0.0, &sizes2);
+
+            // Params start at 0; targets are deterministic per tensor.
+            let mut params: Vec<Vec<f32>> = sizes2.iter().map(|&s| vec![0f32; s]).collect();
+            let targets: Vec<Vec<f32>> = sizes2
+                .iter()
+                .enumerate()
+                .map(|(t, &s)| (0..s).map(|i| ((t + 1) as f32) + (i % 7) as f32 * 0.1).collect())
+                .collect();
+
+            for _ in 0..iters {
+                // grad = (x - target) + small per-worker noise
+                let mut grads: Vec<Vec<f32>> = params
+                    .iter()
+                    .zip(&targets)
+                    .map(|(p, t)| {
+                        p.iter()
+                            .zip(t)
+                            .map(|(pi, ti)| pi - ti + 0.01 * rng.normal() as f32)
+                            .collect()
+                    })
+                    .collect();
+                ex.exchange(comm, &mut grads, &mut rng);
+                opt.step(&mut params, &grads);
+            }
+            // Final distance to optimum.
+            let dist: f32 = params
+                .iter()
+                .zip(&targets)
+                .flat_map(|(p, t)| p.iter().zip(t).map(|(a, b)| (a - b).abs()))
+                .fold(0f32, f32::max);
+            (params, dist)
+        });
+        // All workers identical.
+        assert_eq!(
+            results[0].0, results[1].0,
+            "{}: workers diverged",
+            kind.name()
+        );
+        assert_eq!(results[1].0, results[2].0);
+        assert!(
+            results[0].1 < 0.2,
+            "{} + {}: did not converge (max err {})",
+            kind.name(),
+            schedule.name(),
+            results[0].1
+        );
+    }
+}
+
+/// The analytic (fitted-cost) objective must order partitions the same way
+/// as the full simulator when fed the simulator's own cost tables.
+#[test]
+fn analytic_objective_consistent_with_simulator() {
+    let profile = resnet50_cifar10();
+    let kind = CodecKind::EfSignSgd;
+    let world = 8;
+    let fabric = Fabric::pcie();
+    let setup = SimSetup {
+        profile: &profile,
+        kind,
+        fabric,
+        world,
+    };
+
+    // Build the analytic objective from the same tables the simulator uses.
+    let model = mergecomp::simulator::OverheadModel::for_codec(kind);
+    let cost = CostModel::new(fabric, world);
+    let total_flops = profile.total_flops();
+    let bwd = profile.iter_compute_s * (1.0 - profile.fwd_frac);
+    let bwd_dur: Vec<f64> = profile
+        .tensors
+        .iter()
+        .rev()
+        .map(|t| bwd * t.flops / total_flops)
+        .collect();
+    // Fit comm/enc/dec linear models from two probe sizes (they ARE linear).
+    let probe = |f: &dyn Fn(usize) -> f64| {
+        FittedCost::fit(&[(1 << 10, f(1 << 10)), (1 << 22, f(1 << 22))]).unwrap()
+    };
+    let enc = probe(&|n| model.encode_path(n));
+    let dec = probe(&|n| model.decode.time(n));
+    let comm = probe(&|n| cost.group_comm(kind, n).seconds);
+    let mut analytic = AnalyticObjective::new(
+        bwd_dur,
+        profile.sizes_backprop_order(),
+        profile.iter_compute_s * profile.fwd_frac,
+        enc,
+        dec,
+        comm,
+        world - 1,
+    );
+
+    let n = profile.num_tensors();
+    let mut sim = SimObjective::new(setup);
+    for p in [
+        Partition::layer_wise(n),
+        Partition::full_merge(n),
+        Partition::naive_even(n, 2),
+        Partition::naive_even(n, 4),
+        Partition::from_cuts(n, vec![40]),
+    ] {
+        let fa = analytic.eval(&p);
+        let fs = sim.eval(&p);
+        assert!(
+            (fa - fs).abs() / fs < 0.02,
+            "analytic {fa} vs simulator {fs} for {p}"
+        );
+    }
+}
+
+/// Searched schedules must never lose to the static strategies they
+/// subsume, across codecs, fabrics and world sizes.
+#[test]
+fn search_dominates_static_schedules_everywhere() {
+    let profile = transformer::transformer_e2e();
+    let n = profile.num_tensors();
+    for fabric in [Fabric::pcie(), Fabric::nvlink()] {
+        for world in [2usize, 8] {
+            for kind in [CodecKind::Fp16, CodecKind::Dgc { ratio: 0.01 }] {
+                let setup = SimSetup {
+                    profile: &profile,
+                    kind,
+                    fabric,
+                    world,
+                };
+                let mut obj = SimObjective::new(setup);
+                let out =
+                    mergecomp_search(&mut obj, n, SearchParams { y_max: 3, alpha: 0.0 });
+                for p in [Partition::full_merge(n), Partition::naive_even(n, 2)] {
+                    let f = simulate(&setup, &p).iter_time;
+                    assert!(
+                        out.f_min <= f + 1e-12,
+                        "{}/{}/{}: search {} > static {}",
+                        kind.name(),
+                        fabric.name,
+                        world,
+                        out.f_min,
+                        f
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Wire accounting: bytes the exchanger reports must match the codec's
+/// declared wire size times the collective's traffic pattern.
+#[test]
+fn bytes_on_wire_match_cost_model_charging() {
+    let n_elems = 4096usize;
+    let world = 4;
+    for kind in [CodecKind::Fp32, CodecKind::SignSgd, CodecKind::Qsgd { bits: 8 }] {
+        let results = run_comm_group(world, move |comm| {
+            let mut ex = GradExchange::new(
+                kind,
+                Partition::full_merge(1),
+                vec![n_elems],
+            );
+            let mut rng = Xoshiro256::seed_from_u64(comm.rank() as u64);
+            let mut grads = vec![vec![0.5f32; n_elems]];
+            ex.exchange(comm, &mut grads, &mut rng).bytes_sent
+        });
+        let wire = kind.wire_size(n_elems);
+        let expect = match kind.collective() {
+            mergecomp::compression::Collective::AllReduce => {
+                // ring: 2*(w-1)/w*wire per rank, alignment-rounded chunks.
+                (2 * (world - 1) * wire / world) as u64
+            }
+            mergecomp::compression::Collective::AllGather => {
+                ((world - 1) * wire) as u64
+            }
+        };
+        for &sent in &results {
+            let tol = (expect / 10).max(64);
+            assert!(
+                sent.abs_diff(expect) <= tol,
+                "{}: sent {sent}, cost model charges {expect}",
+                kind.name()
+            );
+        }
+    }
+}

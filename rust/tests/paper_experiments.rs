@@ -1,0 +1,198 @@
+//! Paper-shape gate: every qualitative claim from the evaluation section,
+//! asserted against the simulator plane as fast `cargo test` checks (the
+//! benches print the full tables; these tests keep the shapes from
+//! regressing).
+
+use mergecomp::compression::CodecKind;
+use mergecomp::netsim::{CostModel, Fabric};
+use mergecomp::profiles::{maskrcnn_coco, resnet101_imagenet, resnet50_cifar10};
+use mergecomp::scheduler::objective::SimObjective;
+use mergecomp::scheduler::{mergecomp_search, Partition, SearchParams};
+use mergecomp::simulator::{scaling_factor, simulate, OverheadModel, SimSetup};
+
+fn mergecomp_scaling(
+    profile: &mergecomp::profiles::ModelProfile,
+    kind: CodecKind,
+    fabric: Fabric,
+    world: usize,
+) -> f64 {
+    let setup = SimSetup {
+        profile,
+        kind,
+        fabric,
+        world,
+    };
+    let mut obj = SimObjective::new(setup);
+    let out = mergecomp_search(&mut obj, profile.num_tensors(), SearchParams::default());
+    profile.iter_compute_s / out.f_min
+}
+
+fn layerwise_scaling(
+    profile: &mergecomp::profiles::ModelProfile,
+    kind: CodecKind,
+    fabric: Fabric,
+    world: usize,
+) -> f64 {
+    let setup = SimSetup {
+        profile,
+        kind,
+        fabric,
+        world,
+    };
+    scaling_factor(&setup, &Partition::layer_wise(profile.num_tensors()))
+}
+
+/// §3.2 worked example: 2-GPU PCIe ResNet50 — 64 ms compute, ~66 ms FP32
+/// communication, DGC ≈120 ms / EFSignSGD ≈65 ms layer-wise compression.
+#[test]
+fn table_worked_example() {
+    let p = resnet50_cifar10();
+    assert!((p.iter_compute_s - 0.064).abs() < 1e-9);
+
+    let comm = CostModel::new(Fabric::pcie(), 2)
+        .allreduce(4 * p.total_params())
+        .seconds;
+    assert!((comm - 0.066).abs() < 0.008, "FP32 comm {:.1} ms", comm * 1e3);
+
+    let per = p.total_params() / p.num_tensors();
+    let dgc = OverheadModel::for_codec(CodecKind::Dgc { ratio: 0.01 });
+    let dgc_total =
+        p.num_tensors() as f64 * dgc.group_total(CodecKind::Dgc { ratio: 0.01 }, per, 2);
+    assert!((0.09..0.15).contains(&dgc_total), "DGC {:.0} ms", dgc_total * 1e3);
+
+    let ef = OverheadModel::for_codec(CodecKind::EfSignSgd);
+    let ef_total = p.num_tensors() as f64 * ef.group_total(CodecKind::EfSignSgd, per, 2);
+    assert!((0.05..0.08).contains(&ef_total), "EFSignSGD {:.0} ms", ef_total * 1e3);
+}
+
+/// Fig. 2: layer-wise compression scales poorly; several schemes fall >30%
+/// below the FP32 baseline on PCIe.
+#[test]
+fn fig2_layerwise_hurts() {
+    let p = resnet50_cifar10();
+    let base = layerwise_scaling(&p, CodecKind::Fp32, Fabric::pcie(), 2);
+    for kind in [
+        CodecKind::TopK { ratio: 0.01 },
+        CodecKind::Dgc { ratio: 0.01 },
+        CodecKind::OneBit,
+    ] {
+        let sf = layerwise_scaling(&p, kind, Fabric::pcie(), 2);
+        assert!(sf < 0.7 * base, "{}: {sf:.3} vs base {base:.3}", kind.name());
+    }
+}
+
+/// Fig. 4 headline: MergeComp+DGC ≳2× baseline / ≳3× layer-wise at 8 GPUs
+/// PCIe (paper: 2.91× / 3.83×); FP16+MergeComp > 0.9 on NVLink (paper 0.92).
+#[test]
+fn fig4_headline_ratios() {
+    let p = resnet50_cifar10();
+    let dgc = CodecKind::Dgc { ratio: 0.01 };
+    let mc = mergecomp_scaling(&p, dgc, Fabric::pcie(), 8);
+    let base = layerwise_scaling(&p, CodecKind::Fp32, Fabric::pcie(), 8);
+    let lw = layerwise_scaling(&p, dgc, Fabric::pcie(), 8);
+    assert!(mc / base > 2.0, "vs baseline {:.2}", mc / base);
+    assert!(mc / lw > 3.0, "vs layer-wise {:.2}", mc / lw);
+    let fp16nv = mergecomp_scaling(&p, CodecKind::Fp16, Fabric::nvlink(), 8);
+    assert!(fp16nv > 0.9, "NVLink FP16 {:.3}", fp16nv);
+}
+
+/// Fig. 5: ResNet101 ratios (paper: 1.68× / 2.46×; NVLink 4-GPU 99%).
+#[test]
+fn fig5_headline_ratios() {
+    let p = resnet101_imagenet();
+    let dgc = CodecKind::Dgc { ratio: 0.01 };
+    let mc = mergecomp_scaling(&p, dgc, Fabric::pcie(), 8);
+    let base = layerwise_scaling(&p, CodecKind::Fp32, Fabric::pcie(), 8);
+    let lw = layerwise_scaling(&p, dgc, Fabric::pcie(), 8);
+    assert!(mc / base > 1.4, "vs baseline {:.2}", mc / base);
+    assert!(mc / lw > 1.8, "vs layer-wise {:.2}", mc / lw);
+    let nv4 = mergecomp_scaling(&p, CodecKind::Fp16, Fabric::nvlink(), 4);
+    assert!(nv4 > 0.93, "NVLink 4GPU {:.3}", nv4);
+}
+
+/// Fig. 6: Mask R-CNN — layer-wise BEATS baseline (few tensors), MergeComp
+/// still on top (paper: 2.33× baseline, 1.66× layer-wise).
+#[test]
+fn fig6_maskrcnn_shape() {
+    let p = maskrcnn_coco();
+    let dgc = CodecKind::Dgc { ratio: 0.01 };
+    let base = layerwise_scaling(&p, CodecKind::Fp32, Fabric::pcie(), 8);
+    let lw = layerwise_scaling(&p, dgc, Fabric::pcie(), 8);
+    let mc = mergecomp_scaling(&p, dgc, Fabric::pcie(), 8);
+    assert!(lw > base, "layer-wise {lw:.3} must beat baseline {base:.3}");
+    assert!(mc / lw > 1.2, "MergeComp vs layer-wise {:.2}", mc / lw);
+    assert!(mc / base > 1.7, "MergeComp vs baseline {:.2}", mc / base);
+}
+
+/// Table 2: partitioning helps; benefit grows with workers; Y=3 ≈ Y=2.
+#[test]
+fn table2_y_sweep_shape() {
+    let p = resnet101_imagenet();
+    for kind in [CodecKind::Fp16, CodecKind::EfSignSgd] {
+        let mut prev_gain = 0.0;
+        for world in [2usize, 4, 8] {
+            let setup = SimSetup {
+                profile: &p,
+                kind,
+                fabric: Fabric::pcie(),
+                world,
+            };
+            let f1 = simulate(&setup, &Partition::full_merge(p.num_tensors())).iter_time;
+            let mut obj = SimObjective::new(setup);
+            let f2 = mergecomp_search(
+                &mut obj,
+                p.num_tensors(),
+                SearchParams { y_max: 2, alpha: 0.0 },
+            )
+            .f_min;
+            let gain = f1 / f2;
+            assert!(gain >= 1.0 - 1e-9, "{} @ {world}: gain {gain}", kind.name());
+            assert!(
+                gain >= prev_gain - 0.02,
+                "{}: gain should grow with workers ({prev_gain:.3} -> {gain:.3})",
+                kind.name()
+            );
+            prev_gain = gain;
+        }
+    }
+}
+
+/// Table 3: the searched Y=2 partition beats the naive even split.
+#[test]
+fn table3_search_beats_naive() {
+    let p = resnet101_imagenet();
+    for kind in [CodecKind::Fp16, CodecKind::Dgc { ratio: 0.01 }, CodecKind::EfSignSgd] {
+        let setup = SimSetup {
+            profile: &p,
+            kind,
+            fabric: Fabric::pcie(),
+            world: 8,
+        };
+        let naive = simulate(&setup, &Partition::naive_even(p.num_tensors(), 2)).iter_time;
+        let mut obj = SimObjective::new(setup);
+        let searched = mergecomp_search(
+            &mut obj,
+            p.num_tensors(),
+            SearchParams { y_max: 2, alpha: 0.0 },
+        )
+        .f_min;
+        assert!(
+            searched <= naive + 1e-12,
+            "{}: searched {searched} vs naive {naive}",
+            kind.name()
+        );
+    }
+}
+
+/// §5.1: Top-k's bottleneck is selection, not scheduling — MergeComp gives
+/// it far less than it gives DGC.
+#[test]
+fn topk_not_rescued() {
+    let p = resnet50_cifar10();
+    let topk = CodecKind::TopK { ratio: 0.01 };
+    let dgc = CodecKind::Dgc { ratio: 0.01 };
+    let gain = |k| {
+        mergecomp_scaling(&p, k, Fabric::pcie(), 8) / layerwise_scaling(&p, k, Fabric::pcie(), 8)
+    };
+    assert!(gain(dgc) > 1.5 * gain(topk), "dgc {:.2} vs topk {:.2}", gain(dgc), gain(topk));
+}

@@ -1,0 +1,134 @@
+//! PJRT runtime round-trips: load the AOT artifacts, execute them, and
+//! check numerics against expectations (and against the rust codecs for
+//! the standalone L1 kernel artifact).
+//!
+//! All tests skip gracefully when `artifacts/` has not been built
+//! (`make artifacts`), so `cargo test` works on a fresh checkout.
+
+use mergecomp::runtime::{StepMeta, TrainStep};
+use mergecomp::training::trainer_init_params;
+use mergecomp::util::rng::Xoshiro256;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/meta.json").exists()
+}
+
+#[test]
+fn e2e_train_step_executes_with_sane_loss() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let meta = StepMeta::load("artifacts/meta.json", "e2e").unwrap();
+    let mut step = TrainStep::load("artifacts/train_step.hlo.txt", meta.clone()).unwrap();
+    let params = trainer_init_params(&meta, 42);
+
+    let mut rng = Xoshiro256::seed_from_u64(0);
+    let toks = meta.batch * meta.seq_len;
+    let x: Vec<i32> = (0..toks).map(|_| rng.gen_range(meta.vocab) as i32).collect();
+    let y: Vec<i32> = (0..toks).map(|_| rng.gen_range(meta.vocab) as i32).collect();
+
+    let (loss, grads) = step.run(&params, &x, &y).unwrap();
+    // Untrained model on random targets: loss ≈ ln(96) ≈ 4.56.
+    assert!(
+        (loss - (meta.vocab as f32).ln()).abs() < 0.7,
+        "initial loss {loss} should be near ln(V) = {}",
+        (meta.vocab as f32).ln()
+    );
+    assert_eq!(grads.len(), meta.tensors.len());
+    for (t, g) in meta.tensors.iter().zip(&grads) {
+        assert_eq!(g.len(), t.elems, "{}", t.name);
+        assert!(g.iter().all(|v| v.is_finite()), "{}: non-finite grad", t.name);
+    }
+    // Gradients must be non-trivial somewhere.
+    let norm: f64 = grads
+        .iter()
+        .flat_map(|g| g.iter().map(|v| (*v as f64).powi(2)))
+        .sum::<f64>()
+        .sqrt();
+    assert!(norm > 1e-3, "gradient norm {norm} suspiciously small");
+}
+
+#[test]
+fn deterministic_execution() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let meta = StepMeta::load("artifacts/meta.json", "e2e").unwrap();
+    let mut step = TrainStep::load("artifacts/train_step.hlo.txt", meta.clone()).unwrap();
+    let params = trainer_init_params(&meta, 7);
+    let toks = meta.batch * meta.seq_len;
+    let x: Vec<i32> = (0..toks).map(|i| (i % meta.vocab) as i32).collect();
+    let y: Vec<i32> = (0..toks).map(|i| ((i + 1) % meta.vocab) as i32).collect();
+    let (l1, g1) = step.run(&params, &x, &y).unwrap();
+    let (l2, g2) = step.run(&params, &x, &y).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn pallas_composition_artifact_runs() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // The SMALL_PALLAS config has Pallas matmuls (interpret=True) lowered
+    // into the same HLO — loading + running it proves L1∘L2∘L3 compose.
+    let meta = StepMeta::load("artifacts/meta.json", "pallas").unwrap();
+    let mut step = TrainStep::load("artifacts/train_step_pallas.hlo.txt", meta.clone()).unwrap();
+    let params = trainer_init_params(&meta, 3);
+    let toks = meta.batch * meta.seq_len;
+    let x: Vec<i32> = (0..toks).map(|i| (i % meta.vocab) as i32).collect();
+    let y: Vec<i32> = (0..toks).map(|i| ((i * 7) % meta.vocab) as i32).collect();
+    let (loss, grads) = step.run(&params, &x, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(grads.len(), meta.tensors.len());
+    assert!(
+        (loss - (meta.vocab as f32).ln()).abs() < 1.0,
+        "pallas-model initial loss {loss}"
+    );
+}
+
+#[test]
+fn sign_compress_kernel_matches_rust_codec_scale() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // artifacts/sign_compress.hlo.txt computes sign(x)·mean|x| over
+    // f32[65536] — the decode(encode(x)) fixed point of the rust
+    // `efsignsgd` codec with zero residual. Cross-validate L1 vs L3.
+    let n = 1 << 16;
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file("artifacts/sign_compress.hlo.txt").unwrap();
+    let exe = client
+        .compile(&xla::XlaComputation::from_proto(&proto))
+        .unwrap();
+
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let mut g = vec![0f32; n];
+    rng.fill_normal_f32(&mut g, 0.5);
+
+    let lit = xla::Literal::vec1(&g);
+    let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let kernel_out = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+
+    // Rust codec path (fresh EF state = zero residual).
+    use mergecomp::compression::{Codec as _, CodecKind};
+    let mut codec = CodecKind::EfSignSgd.build(n);
+    let enc = codec.encode(&g, &mut rng);
+    let mut rust_out = vec![0f32; n];
+    codec.decode(&enc, &mut rust_out);
+
+    for i in 0..n {
+        assert!(
+            (kernel_out[i] - rust_out[i]).abs() <= 1e-5 * (1.0 + rust_out[i].abs()),
+            "idx {i}: pallas {} vs rust {}",
+            kernel_out[i],
+            rust_out[i]
+        );
+    }
+}
