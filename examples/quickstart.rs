@@ -9,7 +9,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use mergecomp::collectives::run_comm_group;
-use mergecomp::compression::CodecKind;
+use mergecomp::compression::{Codec as _, CodecKind};
 use mergecomp::netsim::Fabric;
 use mergecomp::profiles::resnet50_cifar10;
 use mergecomp::scheduler::objective::SimObjective;

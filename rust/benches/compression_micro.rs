@@ -5,7 +5,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use mergecomp::compression::CodecKind;
+use mergecomp::compression::{Codec as _, CodecKind};
 use mergecomp::util::rng::Xoshiro256;
 use mergecomp::util::{fmt_bytes, fmt_secs};
 

@@ -14,7 +14,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use mergecomp::compression::CodecKind;
+use mergecomp::compression::{Codec as _, CodecKind};
 use mergecomp::profiles::{resnet101_imagenet, resnet50_cifar10};
 use mergecomp::simulator::OverheadModel;
 use mergecomp::util::fmt_secs;

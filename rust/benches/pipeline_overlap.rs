@@ -1,0 +1,223 @@
+//! Serial vs Pipelined exchange on the transformer profile: does the comm
+//! lane actually hide communication in the *measured* plane?
+//!
+//! For every codec in the paper set this bench runs the same multi-group
+//! exchange in both `PipelineMode`s on a 2-worker in-process cluster,
+//! reports mean per-step exchange wall time, and checks the acceptance
+//! criterion: with `Pipelined`, measured `comm_exposed < comm_total`
+//! (overlap observed for real), while `Serial` by construction exposes
+//! everything. It also compares the measured overlap fraction with the
+//! timeline simulator's prediction (`simulator::validate`).
+//!
+//! Outputs: `results/pipeline_overlap.csv` and
+//! `results/BENCH_pipeline.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::collectives::run_comm_group;
+use mergecomp::compression::CodecKind;
+use mergecomp::metrics::write_json;
+use mergecomp::netsim::Fabric;
+use mergecomp::profiles::transformer_lm;
+use mergecomp::scheduler::Partition;
+use mergecomp::simulator::{compare_overlap, simulate, SimSetup};
+use mergecomp::training::{ExchangeStats, GradExchange, PipelineMode};
+use mergecomp::util::json::Value;
+use mergecomp::util::rng::Xoshiro256;
+use mergecomp::util::stats::Stopwatch;
+
+// 2 ranks × (compute lane + comm lane) = 4 threads: fits a standard
+// 4-vCPU CI runner without oversubscription, keeping the timing-based
+// acceptance assert below robust to scheduler noise.
+const WORLD: usize = 2;
+const GROUPS: usize = 4;
+const WARMUP_STEPS: usize = 1;
+const STEPS: usize = 4;
+
+fn synth_grads(rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seed_from_u64(0xBE ^ ((rank as u64) << 20) ^ (step as u64));
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 0.02);
+            g
+        })
+        .collect()
+}
+
+/// Run the exchange loop in one mode; returns (per-step mean stats,
+/// per-step mean wall seconds) from rank 0's perspective.
+fn run_mode(
+    kind: CodecKind,
+    partition: &Partition,
+    sizes: &[usize],
+    mode: PipelineMode,
+) -> (ExchangeStats, f64) {
+    let partition = partition.clone();
+    let sizes = sizes.to_vec();
+    let mut results = run_comm_group(WORLD, move |c| {
+        let mut ex =
+            GradExchange::new(kind, partition.clone(), sizes.clone()).with_mode(mode);
+        let mut rng = Xoshiro256::seed_from_u64(1000 + c.rank() as u64);
+        let mut total = ExchangeStats::default();
+        let mut wall = 0.0f64;
+        for step in 0..WARMUP_STEPS + STEPS {
+            let mut grads = synth_grads(c.rank(), step, &sizes);
+            let sw = Stopwatch::start();
+            let stats = ex.exchange(c, &mut grads, &mut rng);
+            let secs = sw.elapsed().as_secs_f64();
+            if step >= WARMUP_STEPS {
+                total.accumulate(&stats);
+                wall += secs;
+            }
+        }
+        (total.scaled(STEPS as f64), wall / STEPS as f64)
+    });
+    results.remove(0)
+}
+
+fn main() {
+    let profile = transformer_lm(4, 128, 512, 2048, 64);
+    let sizes = profile.sizes_backprop_order();
+    let n = profile.num_tensors();
+    let partition = Partition::naive_even(n, GROUPS);
+
+    harness::section(&format!(
+        "Pipelined exchange overlap — {} ({} tensors, {} params), {} groups, {} workers",
+        profile.name,
+        n,
+        profile.total_params(),
+        partition.num_groups(),
+        WORLD
+    ));
+
+    let mut csv = harness::csv(
+        "pipeline_overlap",
+        &[
+            "codec",
+            "serial_step_secs",
+            "pipelined_step_secs",
+            "speedup",
+            "comm_total_secs",
+            "comm_exposed_secs",
+            "overlap_frac_measured",
+            "overlap_frac_sim",
+        ],
+    );
+
+    let mut rows = Vec::new();
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    let mut agg_comm_total = 0.0f64;
+    let mut agg_comm_exposed = 0.0f64;
+
+    for kind in kinds {
+        let (serial_stats, serial_wall) =
+            run_mode(kind, &partition, &sizes, PipelineMode::Serial);
+        let (pipe_stats, pipe_wall) =
+            run_mode(kind, &partition, &sizes, PipelineMode::Pipelined);
+
+        let setup = SimSetup {
+            profile: &profile,
+            kind,
+            fabric: Fabric::pcie(),
+            world: WORLD,
+        };
+        let sim = simulate(&setup, &partition);
+        let validation = compare_overlap(&sim, &pipe_stats);
+
+        let speedup = serial_wall / pipe_wall.max(1e-12);
+        agg_comm_total += pipe_stats.comm_secs;
+        agg_comm_exposed += pipe_stats.comm_exposed_secs;
+
+        println!(
+            "{:<10} serial {:>9.1}us  pipelined {:>9.1}us  ({speedup:>5.2}x)  \
+             comm {:>9.1}us exposed {:>9.1}us  overlap {:>5.1}% (sim {:>5.1}%)",
+            kind.name(),
+            serial_wall * 1e6,
+            pipe_wall * 1e6,
+            pipe_stats.comm_secs * 1e6,
+            pipe_stats.comm_exposed_secs * 1e6,
+            pipe_stats.overlap_frac() * 100.0,
+            validation.sim_overlap_frac * 100.0,
+        );
+        csv.rowd(&[
+            &kind.name(),
+            &serial_wall,
+            &pipe_wall,
+            &speedup,
+            &pipe_stats.comm_secs,
+            &pipe_stats.comm_exposed_secs,
+            &pipe_stats.overlap_frac(),
+            &validation.sim_overlap_frac,
+        ])
+        .unwrap();
+
+        // Serial mode must expose everything; its stats are the control.
+        assert_eq!(
+            serial_stats.comm_exposed_secs, serial_stats.comm_secs,
+            "{}: serial mode must expose all comm",
+            kind.name()
+        );
+
+        rows.push(Value::from_pairs(vec![
+            ("codec", Value::from(kind.name())),
+            ("serial_step_secs", Value::from(serial_wall)),
+            ("pipelined_step_secs", Value::from(pipe_wall)),
+            ("speedup", Value::from(speedup)),
+            ("comm_total_secs", Value::from(pipe_stats.comm_secs)),
+            (
+                "comm_exposed_secs",
+                Value::from(pipe_stats.comm_exposed_secs),
+            ),
+            (
+                "overlap_frac_measured",
+                Value::from(pipe_stats.overlap_frac()),
+            ),
+            (
+                "overlap_frac_sim",
+                Value::from(validation.sim_overlap_frac),
+            ),
+            ("sim_vs_measured_gap", Value::from(validation.gap)),
+            ("encode_secs", Value::from(pipe_stats.encode_secs)),
+            ("decode_secs", Value::from(pipe_stats.decode_secs)),
+            ("bytes_per_step", Value::from(pipe_stats.bytes_sent)),
+        ]));
+    }
+
+    // Acceptance: overlap observed in the measured plane — across the
+    // codec set, the pipelined engine must hide a nonzero fraction of its
+    // collective time on a multi-group partition.
+    assert!(
+        agg_comm_exposed < agg_comm_total,
+        "pipelined engine hid no communication: exposed {agg_comm_exposed:.6}s \
+         of {agg_comm_total:.6}s total"
+    );
+    let hidden_frac = 1.0 - agg_comm_exposed / agg_comm_total;
+    println!(
+        "\naggregate: comm_exposed {:.3}ms < comm_total {:.3}ms ({:.1}% hidden)",
+        agg_comm_exposed * 1e3,
+        agg_comm_total * 1e3,
+        hidden_frac * 100.0
+    );
+
+    let summary = Value::from_pairs(vec![
+        ("bench", Value::from("pipeline_overlap")),
+        ("profile", Value::from(profile.name.clone())),
+        ("world", Value::from(WORLD)),
+        ("groups", Value::from(partition.num_groups())),
+        ("steps", Value::from(STEPS)),
+        ("total_params", Value::from(profile.total_params())),
+        ("agg_comm_total_secs", Value::from(agg_comm_total)),
+        ("agg_comm_exposed_secs", Value::from(agg_comm_exposed)),
+        ("agg_hidden_frac", Value::from(hidden_frac)),
+        ("codecs", Value::Arr(rows)),
+    ]);
+    write_json("results/BENCH_pipeline.json", &summary)
+        .unwrap_or_else(|e| panic!("writing BENCH_pipeline.json: {e}"));
+
+    harness::done("pipeline_overlap");
+    println!("summary JSON: results/BENCH_pipeline.json");
+}

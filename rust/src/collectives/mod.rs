@@ -6,9 +6,11 @@
 //! can never cross-talk even when rank arrival order skews.
 
 pub mod allgather;
+pub mod nonblocking;
 pub mod ring;
 pub mod transport;
 
+pub use nonblocking::{lane_scope, CommCompletion, CommHandle, CommLane, CommOutcome};
 pub use transport::{mesh, run_group, Endpoint};
 
 /// Communicator: an endpoint plus a per-group op counter.

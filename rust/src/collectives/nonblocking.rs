@@ -1,0 +1,243 @@
+//! Non-blocking collectives: a dedicated communication thread (the "comm
+//! lane") that executes collectives while the caller keeps computing.
+//!
+//! The tagged transport is strictly blocking (MPI-style matched send/recv),
+//! so true overlap needs a second OS thread per worker — exactly the
+//! GPU-stream/comm-stream split the simulator's two-resource model (and the
+//! paper's Fig. 1 / Eq. 7) assumes. [`lane_scope`] borrows the worker's
+//! [`Comm`] into that thread for a bounded region; inside it,
+//! [`CommLane::start_allreduce`] / [`CommLane::start_allgather`] enqueue
+//! collectives and return a [`CommHandle`] whose `wait()` blocks only the
+//! moment the result is actually needed.
+//!
+//! Ordering contract: the lane executes operations strictly in submission
+//! order, so as long as every rank submits the same sequence of collectives
+//! (the symmetric-SPMD invariant the serial path already relies on), tag
+//! sequencing works out identically to the blocking path — the pipelined
+//! exchange is bit-for-bit equivalent to the serial one.
+
+use super::Comm;
+use crate::compression::{CodecKind, Collective};
+use crate::util::stats::Stopwatch;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// What a completed collective hands back.
+pub enum CommOutcome {
+    /// Allreduce: the wire buffer, reduced in place across ranks (summed,
+    /// not yet averaged — identical to `Comm::allreduce_wire`).
+    Reduced(Vec<u8>),
+    /// Allgather: every rank's payload, indexed by source rank. Entry
+    /// `[rank]` is the very buffer this rank submitted (reusable).
+    Gathered(Vec<Vec<u8>>),
+}
+
+/// Result of one asynchronous collective.
+pub struct CommCompletion {
+    pub outcome: CommOutcome,
+    /// Seconds the comm lane spent inside this collective (includes time
+    /// blocked on peers — the real occupancy of the comm resource).
+    pub secs: f64,
+}
+
+enum Op {
+    AllReduce {
+        wire: Vec<u8>,
+        kind: CodecKind,
+        n: usize,
+    },
+    AllGather {
+        wire: Vec<u8>,
+    },
+}
+
+struct Job {
+    op: Op,
+    done: Sender<CommCompletion>,
+}
+
+/// Waitable handle to an in-flight collective.
+pub struct CommHandle {
+    rx: Receiver<CommCompletion>,
+}
+
+impl CommHandle {
+    /// Block until the collective completes and take its result.
+    pub fn wait(self) -> CommCompletion {
+        self.rx
+            .recv()
+            .expect("comm lane terminated before completing the operation")
+    }
+}
+
+/// Submission side of the comm lane (lives on the compute thread).
+pub struct CommLane {
+    jobs: Sender<Job>,
+}
+
+impl CommLane {
+    /// Begin an in-place wire-format allreduce (FP32/FP16). `kind` must be
+    /// an allreduce codec; its wire reducer is stateless, so the lane builds
+    /// its own instance and the caller's codec state is never shared across
+    /// threads.
+    pub fn start_allreduce(&self, wire: Vec<u8>, kind: CodecKind, n: usize) -> CommHandle {
+        assert_eq!(
+            kind.collective(),
+            Collective::AllReduce,
+            "{}: start_allreduce needs an allreduce codec",
+            kind.name()
+        );
+        self.submit(Op::AllReduce { wire, kind, n })
+    }
+
+    /// Begin a variable-size allgather of this rank's payload.
+    pub fn start_allgather(&self, wire: Vec<u8>) -> CommHandle {
+        self.submit(Op::AllGather { wire })
+    }
+
+    fn submit(&self, op: Op) -> CommHandle {
+        let (done, rx) = channel();
+        self.jobs
+            .send(Job { op, done })
+            .expect("comm lane is gone (worker thread died)");
+        CommHandle { rx }
+    }
+}
+
+/// Run `f` with a dedicated comm thread owning `comm` for the duration.
+///
+/// Returns `(f's result, lane busy seconds)` — the busy time is the sum of
+/// all collective durations executed by the lane (`comm_total` in
+/// exchange-stats terms). The lane drains every submitted operation before
+/// `lane_scope` returns, so no collective is ever lost.
+pub fn lane_scope<R>(comm: &mut Comm, f: impl FnOnce(&CommLane) -> R) -> (R, f64) {
+    let (jobs, jrx) = channel::<Job>();
+    std::thread::scope(|s| {
+        let worker = s.spawn(move || {
+            let mut busy = 0.0f64;
+            while let Ok(job) = jrx.recv() {
+                let sw = Stopwatch::start();
+                let outcome = match job.op {
+                    Op::AllReduce { mut wire, kind, n } => {
+                        let reducer = kind.build(n);
+                        comm.allreduce_wire(&mut wire, reducer.as_ref());
+                        CommOutcome::Reduced(wire)
+                    }
+                    Op::AllGather { wire } => CommOutcome::Gathered(comm.allgather(wire)),
+                };
+                let secs = sw.elapsed().as_secs_f64();
+                busy += secs;
+                // A dropped handle just means the caller didn't care about
+                // the result; the collective itself already ran on every
+                // rank, so ignore the send error.
+                let _ = job.done.send(CommCompletion { outcome, secs });
+            }
+            busy
+        });
+        let lane = CommLane { jobs };
+        let r = f(&lane);
+        drop(lane); // close the job channel: the worker drains, then exits
+        let busy = worker.join().expect("comm lane panicked");
+        (r, busy)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::run_comm_group;
+    use super::*;
+    use crate::compression::Codec as _;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn async_allgather_matches_blocking() {
+        let results = run_comm_group(3, |c| {
+            let rank = c.rank() as u8;
+            // Blocking reference first (advances the tag space identically
+            // on every rank).
+            let blocking = c.allgather(vec![rank; 2]);
+            let (async_out, busy) = lane_scope(c, |lane| {
+                lane.start_allgather(vec![rank; 2]).wait().outcome
+            });
+            let gathered = match async_out {
+                CommOutcome::Gathered(g) => g,
+                _ => panic!("wrong outcome variant"),
+            };
+            assert!(busy >= 0.0);
+            (blocking, gathered)
+        });
+        for (blocking, gathered) in results {
+            assert_eq!(blocking, gathered);
+        }
+    }
+
+    #[test]
+    fn async_ops_execute_in_submission_order() {
+        // Two back-to-back allgathers started before either wait: results
+        // must match their submission, not interleave.
+        let results = run_comm_group(4, |c| {
+            let rank = c.rank() as u8;
+            let ((first, second), _) = lane_scope(c, |lane| {
+                let h1 = lane.start_allgather(vec![rank]);
+                let h2 = lane.start_allgather(vec![rank + 100]);
+                (h1.wait(), h2.wait())
+            });
+            let f = match first.outcome {
+                CommOutcome::Gathered(g) => g,
+                _ => panic!(),
+            };
+            let s = match second.outcome {
+                CommOutcome::Gathered(g) => g,
+                _ => panic!(),
+            };
+            (f, s)
+        });
+        for (f, s) in results {
+            for (src, p) in f.iter().enumerate() {
+                assert_eq!(p, &vec![src as u8]);
+            }
+            for (src, p) in s.iter().enumerate() {
+                assert_eq!(p, &vec![src as u8 + 100]);
+            }
+        }
+    }
+
+    #[test]
+    fn async_allreduce_matches_blocking() {
+        use crate::compression::CodecKind;
+        let n = 96;
+        let results = run_comm_group(2, move |c| {
+            let mut rng = Xoshiro256::seed_from_u64(c.rank() as u64);
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 1.0);
+            let mut codec = CodecKind::Fp32.build(n);
+            let mut wire = Vec::new();
+            codec.encode_into(&g, &mut rng, &mut wire);
+
+            // Blocking reference on a copy.
+            let mut blocking = wire.clone();
+            c.allreduce_wire(&mut blocking, codec.as_ref());
+
+            let (completion, _) = lane_scope(c, |lane| {
+                lane.start_allreduce(wire, CodecKind::Fp32, n).wait()
+            });
+            let reduced = match completion.outcome {
+                CommOutcome::Reduced(w) => w,
+                _ => panic!("wrong outcome variant"),
+            };
+            (blocking, reduced)
+        });
+        for (blocking, reduced) in results {
+            assert_eq!(blocking, reduced, "async allreduce must be bit-identical");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "allreduce codec")]
+    fn allgather_codec_rejected_for_allreduce() {
+        use crate::compression::CodecKind;
+        // Validation fires on submit, before any cross-rank traffic.
+        let (jobs, _jrx) = channel();
+        let lane = CommLane { jobs };
+        let _ = lane.start_allreduce(vec![0u8; 4], CodecKind::SignSgd, 8);
+    }
+}

@@ -15,7 +15,7 @@
 //! branch-free predicated mask instead of a data-dependent gather); see
 //! DESIGN.md §Hardware-Adaptation.
 
-use super::{sparse, Codec, CodecKind, Encoded};
+use super::{digest_f32s, sparse, Codec, CodecKind, STATE_DIGEST_SEED};
 use crate::util::rng::Xoshiro256;
 
 /// How many elements the threshold estimator samples (DGC uses ~0.1%–1% of
@@ -85,7 +85,7 @@ impl Codec for Dgc {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
 
         // u ← m·u + g ; v ← v + u   (or v ← v + g without momentum)
@@ -138,20 +138,25 @@ impl Codec for Dgc {
             }
         }
 
-        Encoded {
-            bytes: sparse::encode(&idx, &val),
-            n: self.n,
-        }
+        sparse::encode_into(&idx, &val, out);
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        let (idx, val) = sparse::decode(&enc.bytes);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        let (idx, val) = sparse::decode(wire);
         sparse::scatter(&idx, &val, out);
     }
 
-    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
-        let (idx, val) = sparse::decode(&enc.bytes);
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
+        let (idx, val) = sparse::decode(wire);
         sparse::scatter_add(&idx, &val, weight, out);
+    }
+
+    fn state_digest(&self) -> u64 {
+        let mut h = digest_f32s(STATE_DIGEST_SEED, &self.velocity);
+        if let Some(u) = &self.momentum_buf {
+            h = digest_f32s(h, u);
+        }
+        h
     }
 }
 

@@ -64,6 +64,11 @@ impl Residual {
         &mut self.r
     }
 
+    /// Read-only view of the residual (state fingerprints, diagnostics).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.r
+    }
+
     pub fn l2(&self) -> f64 {
         self.r.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
     }

@@ -3,7 +3,7 @@
 //! allreduce (paper Table 1). The half-precision conversion is implemented
 //! here because no `half` crate exists in the offline image.
 
-use super::{bitpack, Codec, CodecKind, Encoded};
+use super::{bitpack, Codec, CodecKind};
 use crate::util::rng::Xoshiro256;
 
 // ---------------------------------------------------------------------------
@@ -114,26 +114,27 @@ impl Codec for Fp32 {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], _rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         // §Perf: straight memcpy — f32 in-memory layout IS the LE wire
         // format on every supported target.
-        let mut bytes = vec![0u8; 4 * grad.len()];
+        out.clear();
+        out.resize(4 * grad.len(), 0);
         unsafe {
             std::ptr::copy_nonoverlapping(
                 grad.as_ptr() as *const u8,
-                bytes.as_mut_ptr(),
-                bytes.len(),
+                out.as_mut_ptr(),
+                out.len(),
             );
         }
-        Encoded { bytes, n: self.n }
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        assert_eq!(enc.n, self.n);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        assert!(wire.len() >= 4 * self.n, "short fp32 payload");
+        assert!(out.len() >= self.n);
         unsafe {
             std::ptr::copy_nonoverlapping(
-                enc.bytes.as_ptr(),
+                wire.as_ptr(),
                 out.as_mut_ptr() as *mut u8,
                 4 * self.n,
             );
@@ -179,16 +180,16 @@ impl Codec for Fp16 {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], _rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
-        let mut bytes = vec![0u8; 2 * grad.len()];
-        encode_f16_buf(grad, &mut bytes);
-        Encoded { bytes, n: self.n }
+        out.clear();
+        out.resize(2 * grad.len(), 0);
+        encode_f16_buf(grad, out);
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        assert_eq!(enc.n, self.n);
-        decode_f16_buf(&enc.bytes, &mut out[..self.n]);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        assert!(wire.len() >= 2 * self.n, "short fp16 payload");
+        decode_f16_buf(wire, &mut out[..self.n]);
     }
 
     fn reduce_wire(&self, a: &mut [u8], b: &[u8]) {
@@ -236,7 +237,7 @@ fn encode_f16_buf(src: &[f32], dst: &mut [u8]) {
 }
 
 fn decode_f16_buf(src: &[u8], dst: &mut [f32]) {
-    debug_assert_eq!(src.len() >= 2 * dst.len(), true);
+    debug_assert!(src.len() >= 2 * dst.len());
     #[cfg(target_arch = "x86_64")]
     {
         if is_x86_feature_detected!("f16c") {
@@ -295,6 +296,7 @@ unsafe fn decode_f16_f16c(src: &[u8], dst: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::Encoded;
     use crate::util::proptest::{check, gens};
 
     #[test]

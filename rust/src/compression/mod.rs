@@ -184,29 +184,83 @@ impl Encoded {
     }
 }
 
+/// Seed value for [`Codec::state_digest`] (FNV-1a 64-bit offset basis).
+pub const STATE_DIGEST_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold a slice of f32s into an FNV-1a digest (bit-exact: NaN payloads and
+/// signed zeros are distinguished). Used to fingerprint codec state for the
+/// Serial-vs-Pipelined equivalence tests.
+pub fn digest_f32s(mut h: u64, xs: &[f32]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
 /// A stateful gradient codec bound to a fixed group size `n`.
 ///
 /// Contract:
-/// - `encode` consumes the *raw* gradient (the codec adds its own error
-///   feedback / momentum state internally) and returns the wire payload.
-/// - `decode` overwrites `out` with the decompressed gradient.
-/// - `decode_add` accumulates `weight * decode(enc)` into `out` — used by the
-///   aggregation path so sparse codecs can scatter-add without a temp buffer.
+/// - `encode_into` consumes the *raw* gradient (the codec adds its own error
+///   feedback / momentum state internally) and writes the wire payload into
+///   a caller-provided buffer — the pipelined exchange engine reuses these
+///   buffers so the steady-state hot path is allocation-free.
+/// - `decode_into` overwrites `out` with the gradient decoded from raw wire
+///   bytes; `decode_add_into` accumulates `weight * decode(wire)` into `out`
+///   — used by the aggregation path so sparse codecs can scatter-add without
+///   a temp buffer.
+/// - `encode`/`decode`/`decode_add` are allocating/[`Encoded`]-typed
+///   conveniences layered on the `_into` primitives.
 /// - AllReduce codecs additionally implement `reduce_wire`/`scale_wire` so
 ///   the ring allreduce can reduce in wire format.
 pub trait Codec: Send {
     fn kind(&self) -> CodecKind;
     fn n(&self) -> usize;
 
-    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded;
-    fn decode(&self, enc: &Encoded, out: &mut [f32]);
+    /// Encode into a caller-provided buffer (cleared and refilled).
+    fn encode_into(&mut self, grad: &[f32], rng: &mut Xoshiro256, out: &mut Vec<u8>);
 
-    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
+    /// Decode raw wire bytes into `out` (first `n` elements overwritten).
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]);
+
+    /// Allocating convenience around [`Codec::encode_into`].
+    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded {
+        let mut bytes = Vec::new();
+        self.encode_into(grad, rng, &mut bytes);
+        Encoded {
+            bytes,
+            n: self.n(),
+        }
+    }
+
+    /// Convenience around [`Codec::decode_into`].
+    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
+        self.decode_into(&enc.bytes, out);
+    }
+
+    /// Accumulate `weight * decode(wire)` into `out`.
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
         let mut tmp = vec![0f32; self.n()];
-        self.decode(enc, &mut tmp);
+        self.decode_into(wire, &mut tmp);
         for (o, t) in out.iter_mut().zip(&tmp) {
             *o += weight * t;
         }
+    }
+
+    /// Convenience around [`Codec::decode_add_into`].
+    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
+        self.decode_add_into(&enc.bytes, out, weight);
+    }
+
+    /// FNV-1a fingerprint of the codec's mutable state (error-feedback
+    /// residual, momentum, …). Stateless codecs return the seed. The
+    /// pipeline equivalence tests assert Serial and Pipelined exchanges
+    /// leave identical state.
+    fn state_digest(&self) -> u64 {
+        STATE_DIGEST_SEED
     }
 
     /// Elementwise `a += b` in wire format (AllReduce codecs only).

@@ -14,7 +14,7 @@
 //!
 //! Stochastic rounding makes the compressor unbiased: `E[Q(v)] = v`.
 
-use super::{bitpack, Codec, CodecKind, Encoded};
+use super::{bitpack, Codec, CodecKind};
 use crate::util::rng::Xoshiro256;
 
 /// Elements sharing one codebook norm.
@@ -53,26 +53,27 @@ impl Codec for Qsgd {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         let buckets = Self::num_buckets(self.n);
-        let mut bytes = Vec::with_capacity(4 * buckets + self.n);
+        out.clear();
+        out.reserve(4 * buckets + self.n);
         let s = self.levels as f32;
 
         // Header: per-bucket L2 norms.
         for chunk in grad.chunks(BUCKET) {
             let norm =
                 (chunk.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()).sqrt() as f32;
-            bitpack::push_f32(&mut bytes, norm);
+            bitpack::push_f32(out, norm);
         }
         // Body: quantized levels. §Perf: multiply by the bucket's inverse
         // norm instead of dividing per element. (A two-draws-per-u64 RNG
         // batching variant was tried and REVERTED: the extra branch/state
         // cost more than the saved xoshiro step — see EXPERIMENTS.md §Perf.)
         for (b, chunk) in grad.chunks(BUCKET).enumerate() {
-            let norm = bitpack::read_f32(&bytes, 4 * b);
+            let norm = bitpack::read_f32(out, 4 * b);
             if norm == 0.0 {
-                bytes.resize(bytes.len() + chunk.len(), 0);
+                out.resize(out.len() + chunk.len(), 0);
                 continue;
             }
             let inv = s / norm;
@@ -84,24 +85,40 @@ impl Codec for Qsgd {
                 let level = floor as u32 + u32::from(rng.next_f32() < frac);
                 let level = level.min(self.levels) as u8;
                 let sign_bit = ((v.to_bits() >> 31) as u8) << 7;
-                bytes.push(sign_bit | level);
+                out.push(sign_bit | level);
             }
         }
-        Encoded { bytes, n: self.n }
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        let buckets = Self::num_buckets(enc.n);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        let buckets = Self::num_buckets(self.n);
         let body = 4 * buckets;
         let inv_s = 1.0 / self.levels as f32;
-        for (b, chunk) in out[..enc.n].chunks_mut(BUCKET).enumerate() {
+        for (b, chunk) in out[..self.n].chunks_mut(BUCKET).enumerate() {
             // §Perf: hoist the per-bucket scale out of the element loop.
-            let scale = bitpack::read_f32(&enc.bytes, 4 * b) * inv_s;
+            let scale = bitpack::read_f32(wire, 4 * b) * inv_s;
             let base = body + b * BUCKET;
             for (j, o) in chunk.iter_mut().enumerate() {
-                let q = enc.bytes[base + j];
+                let q = wire[base + j];
                 let mag = scale * (q & 0x7F) as f32;
                 *o = f32::from_bits(mag.to_bits() | ((q as u32 & 0x80) << 24));
+            }
+        }
+    }
+
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
+        // Aggregation fast path: no temp dense buffer.
+        let buckets = Self::num_buckets(self.n);
+        let body = 4 * buckets;
+        let inv_s = 1.0 / self.levels as f32;
+        for (b, chunk) in out[..self.n].chunks_mut(BUCKET).enumerate() {
+            let scale = bitpack::read_f32(wire, 4 * b) * inv_s;
+            let base = body + b * BUCKET;
+            for (j, o) in chunk.iter_mut().enumerate() {
+                let q = wire[base + j];
+                let mag = scale * (q & 0x7F) as f32;
+                let v = f32::from_bits(mag.to_bits() | ((q as u32 & 0x80) << 24));
+                *o += weight * v;
             }
         }
     }

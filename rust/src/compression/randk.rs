@@ -3,7 +3,7 @@
 //! (E[C(g)] = g). Selection is O(k) — the cheapest sparsifier, which is why
 //! its encoding overhead in Fig. 3 is the lowest of the sparsification family.
 
-use super::{sparse, Codec, CodecKind, Encoded};
+use super::{sparse, Codec, CodecKind};
 use crate::util::rng::Xoshiro256;
 
 pub struct RandK {
@@ -34,7 +34,7 @@ impl Codec for RandK {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         let k = sparse::k_for(self.n, self.ratio);
         let mut idx: Vec<u32> = rng
@@ -44,19 +44,16 @@ impl Codec for RandK {
             .collect();
         idx.sort_unstable(); // deterministic wire layout given a selection
         let val: Vec<f32> = idx.iter().map(|&i| grad[i as usize] * self.scale).collect();
-        Encoded {
-            bytes: sparse::encode(&idx, &val),
-            n: self.n,
-        }
+        sparse::encode_into(&idx, &val, out);
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        let (idx, val) = sparse::decode(&enc.bytes);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        let (idx, val) = sparse::decode(wire);
         sparse::scatter(&idx, &val, out);
     }
 
-    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
-        let (idx, val) = sparse::decode(&enc.bytes);
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
+        let (idx, val) = sparse::decode(wire);
         sparse::scatter_add(&idx, &val, weight, out);
     }
 }

@@ -14,7 +14,7 @@
 
 use super::bitpack;
 use super::error_feedback::Residual;
-use super::{Codec, CodecKind, Encoded};
+use super::{digest_f32s, Codec, CodecKind, STATE_DIGEST_SEED};
 use crate::util::rng::Xoshiro256;
 
 // ---------------------------------------------------------------------------
@@ -45,23 +45,23 @@ impl Codec for SignSgd {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], _rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         bitpack::pack_signs(grad, &mut self.words);
-        let mut bytes = Vec::with_capacity(4 + self.words.len() * 4);
-        bitpack::push_u32(&mut bytes, self.n as u32);
-        bitpack::words_to_bytes(&self.words, &mut bytes);
-        Encoded { bytes, n: self.n }
+        out.clear();
+        out.reserve(4 + self.words.len() * 4);
+        bitpack::push_u32(out, self.n as u32);
+        bitpack::words_to_bytes(&self.words, out);
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
-        bitpack::unpack_signs_bytes(&enc.bytes[4..], n, 1.0, out);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        let n = bitpack::read_u32(wire, 0) as usize;
+        bitpack::unpack_signs_bytes(&wire[4..], n, 1.0, out);
     }
 
-    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
-        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
-        bitpack::unpack_signs_add_bytes(&enc.bytes[4..], n, 1.0, weight, out);
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
+        let n = bitpack::read_u32(wire, 0) as usize;
+        bitpack::unpack_signs_add_bytes(&wire[4..], n, 1.0, weight, out);
     }
 }
 
@@ -98,7 +98,7 @@ impl Codec for EfSignSgd {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], _rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         // Fused single-allocation path (§Perf): pass 1 folds the residual
         // into `corrected` while accumulating Σ|c|; pass 2 packs the sign
@@ -133,24 +133,28 @@ impl Codec for EfSignSgd {
             *word = w;
         }
 
-        let mut bytes = Vec::with_capacity(8 + self.words.len() * 4);
-        bitpack::push_u32(&mut bytes, self.n as u32);
-        bitpack::push_f32(&mut bytes, scale);
-        bitpack::words_to_bytes(&self.words, &mut bytes);
+        out.clear();
+        out.reserve(8 + self.words.len() * 4);
+        bitpack::push_u32(out, self.n as u32);
+        bitpack::push_f32(out, scale);
+        bitpack::words_to_bytes(&self.words, out);
         self.corrected = corrected;
-        Encoded { bytes, n: self.n }
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
-        let scale = bitpack::read_f32(&enc.bytes, 4);
-        bitpack::unpack_signs_bytes(&enc.bytes[8..], n, scale, out);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        let n = bitpack::read_u32(wire, 0) as usize;
+        let scale = bitpack::read_f32(wire, 4);
+        bitpack::unpack_signs_bytes(&wire[8..], n, scale, out);
     }
 
-    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
-        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
-        let scale = bitpack::read_f32(&enc.bytes, 4);
-        bitpack::unpack_signs_add_bytes(&enc.bytes[8..], n, scale, weight, out);
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
+        let n = bitpack::read_u32(wire, 0) as usize;
+        let scale = bitpack::read_f32(wire, 4);
+        bitpack::unpack_signs_add_bytes(&wire[8..], n, scale, weight, out);
+    }
+
+    fn state_digest(&self) -> u64 {
+        digest_f32s(STATE_DIGEST_SEED, self.ef.as_slice())
     }
 }
 
@@ -189,7 +193,7 @@ impl Codec for OneBit {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], _rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         // Fused path (§Perf): pass 1 corrects + accumulates both centroid
         // sums; pass 2 packs signs and rewrites the residual in place.
@@ -229,27 +233,46 @@ impl Codec for OneBit {
             *word = w;
         }
 
-        let mut bytes = Vec::with_capacity(12 + self.words.len() * 4);
-        bitpack::push_u32(&mut bytes, self.n as u32);
-        bitpack::push_f32(&mut bytes, pos_mean);
-        bitpack::push_f32(&mut bytes, neg_mean);
-        bitpack::words_to_bytes(&self.words, &mut bytes);
+        out.clear();
+        out.reserve(12 + self.words.len() * 4);
+        bitpack::push_u32(out, self.n as u32);
+        bitpack::push_f32(out, pos_mean);
+        bitpack::push_f32(out, neg_mean);
+        bitpack::words_to_bytes(&self.words, out);
         self.corrected = corrected;
-        Encoded { bytes, n: self.n }
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
-        let pos = bitpack::read_f32(&enc.bytes, 4);
-        let neg = bitpack::read_f32(&enc.bytes, 8);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        let n = bitpack::read_u32(wire, 0) as usize;
+        let pos = bitpack::read_f32(wire, 4);
+        let neg = bitpack::read_f32(wire, 8);
         for (chunk, word) in out[..n]
             .chunks_mut(32)
-            .zip(bitpack::words_iter(&enc.bytes[12..]))
+            .zip(bitpack::words_iter(&wire[12..]))
         {
             for (j, o) in chunk.iter_mut().enumerate() {
                 *o = if (word >> j) & 1 == 1 { pos } else { neg };
             }
         }
+    }
+
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
+        // Aggregation fast path: no temp dense buffer.
+        let n = bitpack::read_u32(wire, 0) as usize;
+        let wpos = weight * bitpack::read_f32(wire, 4);
+        let wneg = weight * bitpack::read_f32(wire, 8);
+        for (chunk, word) in out[..n]
+            .chunks_mut(32)
+            .zip(bitpack::words_iter(&wire[12..]))
+        {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o += if (word >> j) & 1 == 1 { wpos } else { wneg };
+            }
+        }
+    }
+
+    fn state_digest(&self) -> u64 {
+        digest_f32s(STATE_DIGEST_SEED, self.ef.as_slice())
     }
 }
 
@@ -287,26 +310,30 @@ impl Codec for Signum {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], _rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], _rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         for (m, g) in self.momentum.iter_mut().zip(grad) {
             *m = self.beta * *m + (1.0 - self.beta) * g;
         }
         bitpack::pack_signs(&self.momentum, &mut self.words);
-        let mut bytes = Vec::with_capacity(4 + self.words.len() * 4);
-        bitpack::push_u32(&mut bytes, self.n as u32);
-        bitpack::words_to_bytes(&self.words, &mut bytes);
-        Encoded { bytes, n: self.n }
+        out.clear();
+        out.reserve(4 + self.words.len() * 4);
+        bitpack::push_u32(out, self.n as u32);
+        bitpack::words_to_bytes(&self.words, out);
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
-        bitpack::unpack_signs_bytes(&enc.bytes[4..], n, 1.0, out);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        let n = bitpack::read_u32(wire, 0) as usize;
+        bitpack::unpack_signs_bytes(&wire[4..], n, 1.0, out);
     }
 
-    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
-        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
-        bitpack::unpack_signs_add_bytes(&enc.bytes[4..], n, 1.0, weight, out);
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
+        let n = bitpack::read_u32(wire, 0) as usize;
+        bitpack::unpack_signs_add_bytes(&wire[4..], n, 1.0, weight, out);
+    }
+
+    fn state_digest(&self) -> u64 {
+        digest_f32s(STATE_DIGEST_SEED, &self.momentum)
     }
 }
 

@@ -18,18 +18,26 @@ pub fn wire_size(k: usize) -> usize {
     4 + 8 * k
 }
 
-/// Serialize (indices, values) into the sparse wire format.
-pub fn encode(idx: &[u32], val: &[f32]) -> Vec<u8> {
+/// Serialize (indices, values) into a caller-provided buffer (cleared
+/// first) — the allocation-free primitive the codec hot path uses.
+pub fn encode_into(idx: &[u32], val: &[f32], out: &mut Vec<u8>) {
     assert_eq!(idx.len(), val.len());
     let k = idx.len();
-    let mut bytes = Vec::with_capacity(wire_size(k));
-    bitpack::push_u32(&mut bytes, k as u32);
+    out.clear();
+    out.reserve(wire_size(k));
+    bitpack::push_u32(out, k as u32);
     for &i in idx {
-        bitpack::push_u32(&mut bytes, i);
+        bitpack::push_u32(out, i);
     }
     for &v in val {
-        bitpack::push_f32(&mut bytes, v);
+        bitpack::push_f32(out, v);
     }
+}
+
+/// Serialize (indices, values) into the sparse wire format.
+pub fn encode(idx: &[u32], val: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(wire_size(idx.len()));
+    encode_into(idx, val, &mut bytes);
     bytes
 }
 

@@ -5,7 +5,7 @@
 //! Wire: `u32 n | f32 s_max | 2-bit trits` (00 = zero, 01 = +1, 10 = -1),
 //! 16 trits per u32 word.
 
-use super::{bitpack, Codec, CodecKind, Encoded};
+use super::{bitpack, Codec, CodecKind};
 use crate::util::rng::Xoshiro256;
 
 pub struct TernGrad {
@@ -33,7 +33,7 @@ impl Codec for TernGrad {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         let s_max = grad.iter().fold(0f32, |m, v| m.max(v.abs()));
         self.trits.clear();
@@ -53,24 +53,41 @@ impl Codec for TernGrad {
             }
         }
         bitpack::pack2(&self.trits, &mut self.words);
-        let mut bytes = Vec::with_capacity(8 + self.words.len() * 4);
-        bitpack::push_u32(&mut bytes, self.n as u32);
-        bitpack::push_f32(&mut bytes, s_max);
-        bitpack::words_to_bytes(&self.words, &mut bytes);
-        Encoded { bytes, n: self.n }
+        out.clear();
+        out.reserve(8 + self.words.len() * 4);
+        bitpack::push_u32(out, self.n as u32);
+        bitpack::push_f32(out, s_max);
+        bitpack::words_to_bytes(&self.words, out);
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        let n = bitpack::read_u32(&enc.bytes, 0) as usize;
-        let s_max = bitpack::read_f32(&enc.bytes, 4);
-        let words = bitpack::bytes_to_words(&enc.bytes[8..]);
-        for (i, o) in out.iter_mut().enumerate().take(n) {
-            let t = (words[i / 16] >> (2 * (i % 16))) & 0b11;
-            *o = match t {
-                0b01 => s_max,
-                0b10 => -s_max,
-                _ => 0.0,
-            };
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        let n = bitpack::read_u32(wire, 0) as usize;
+        let s_max = bitpack::read_f32(wire, 4);
+        // One word read per 16 trits, no allocation.
+        for (chunk, word) in out[..n].chunks_mut(16).zip(bitpack::words_iter(&wire[8..])) {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                let t = (word >> (2 * j)) & 0b11;
+                *o = match t {
+                    0b01 => s_max,
+                    0b10 => -s_max,
+                    _ => 0.0,
+                };
+            }
+        }
+    }
+
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
+        // Aggregation fast path: no temp dense buffer.
+        let n = bitpack::read_u32(wire, 0) as usize;
+        let ws = weight * bitpack::read_f32(wire, 4);
+        for (chunk, word) in out[..n].chunks_mut(16).zip(bitpack::words_iter(&wire[8..])) {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                match (word >> (2 * j)) & 0b11 {
+                    0b01 => *o += ws,
+                    0b10 => *o -= ws,
+                    _ => {}
+                }
+            }
         }
     }
 }

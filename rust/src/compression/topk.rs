@@ -7,7 +7,7 @@
 //! Top-k as evaluated in the paper carries no error feedback (DGC is the
 //! EF/momentum-corrected variant).
 
-use super::{sparse, Codec, CodecKind, Encoded};
+use super::{sparse, Codec, CodecKind};
 use crate::util::rng::Xoshiro256;
 
 pub struct TopK {
@@ -81,24 +81,21 @@ impl Codec for TopK {
         self.n
     }
 
-    fn encode(&mut self, grad: &[f32], rng: &mut Xoshiro256) -> Encoded {
+    fn encode_into(&mut self, grad: &[f32], rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         let k = sparse::k_for(self.n, self.ratio);
         let idx = select_topk_indices(grad, k, rng);
         let val: Vec<f32> = idx.iter().map(|&i| grad[i as usize]).collect();
-        Encoded {
-            bytes: sparse::encode(&idx, &val),
-            n: self.n,
-        }
+        sparse::encode_into(&idx, &val, out);
     }
 
-    fn decode(&self, enc: &Encoded, out: &mut [f32]) {
-        let (idx, val) = sparse::decode(&enc.bytes);
+    fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
+        let (idx, val) = sparse::decode(wire);
         sparse::scatter(&idx, &val, out);
     }
 
-    fn decode_add(&self, enc: &Encoded, out: &mut [f32], weight: f32) {
-        let (idx, val) = sparse::decode(&enc.bytes);
+    fn decode_add_into(&self, wire: &[u8], out: &mut [f32], weight: f32) {
+        let (idx, val) = sparse::decode(wire);
         sparse::scatter_add(&idx, &val, weight, out);
     }
 }

@@ -2,6 +2,7 @@
 
 use super::ScheduleSpec;
 use crate::compression::CodecKind;
+use crate::coordinator::PipelineMode;
 use crate::util::cli::Args;
 use crate::util::json::Value;
 
@@ -16,6 +17,10 @@ pub struct TrainConfig {
     pub momentum: f32,
     pub codec: CodecKind,
     pub schedule: ScheduleSpec,
+    /// Exchange-engine scheduling: `Pipelined` overlaps each group's
+    /// collective with neighbouring groups' encode/decode (bit-identical
+    /// results; see `coordinator/`).
+    pub pipeline: PipelineMode,
     pub seed: u64,
     /// Per-worker batch size (must match the AOT-compiled step artifact).
     pub batch_per_worker: usize,
@@ -39,6 +44,7 @@ impl Default for TrainConfig {
             momentum: 0.9,
             codec: CodecKind::Fp32,
             schedule: ScheduleSpec::MergeComp { y_max: 2, alpha: 0.02 },
+            pipeline: PipelineMode::Pipelined,
             seed: 42,
             batch_per_worker: 8,
             seq_len: 128,
@@ -61,6 +67,7 @@ impl TrainConfig {
             momentum: v.f64_or("momentum", d.momentum as f64) as f32,
             codec: CodecKind::from_name(v.str_or("codec", "fp32"))?,
             schedule: ScheduleSpec::parse(v.str_or("schedule", "mergecomp"))?,
+            pipeline: PipelineMode::from_name(v.str_or("pipeline", d.pipeline.name()))?,
             seed: v.f64_or("seed", d.seed as f64) as u64,
             batch_per_worker: v.usize_or("batch_per_worker", d.batch_per_worker),
             seq_len: v.usize_or("seq_len", d.seq_len),
@@ -83,6 +90,9 @@ impl TrainConfig {
         if let Some(s) = args.str("schedule") {
             self.schedule = ScheduleSpec::parse(s)?;
         }
+        if let Some(p) = args.str("pipeline") {
+            self.pipeline = PipelineMode::from_name(p)?;
+        }
         self.seed = args.u64_or("seed", self.seed);
         self.log_every = args.usize_or("log-every", self.log_every);
         self.search_steps = args.usize_or("search-steps", self.search_steps);
@@ -103,6 +113,7 @@ impl TrainConfig {
             ("momentum", Value::from(self.momentum as f64)),
             ("codec", Value::from(self.codec.name())),
             ("schedule", Value::from(self.schedule.name())),
+            ("pipeline", Value::from(self.pipeline.name())),
             ("seed", Value::from(self.seed)),
             ("batch_per_worker", Value::from(self.batch_per_worker)),
             ("seq_len", Value::from(self.seq_len)),
@@ -125,6 +136,7 @@ mod tests {
         assert_eq!(c2.workers, c.workers);
         assert_eq!(c2.codec, c.codec);
         assert_eq!(c2.schedule, c.schedule);
+        assert_eq!(c2.pipeline, c.pipeline);
         assert_eq!(c2.lr, c.lr);
     }
 
@@ -148,6 +160,21 @@ mod tests {
         assert_eq!(c.workers, 4);
         assert_eq!(c.schedule, ScheduleSpec::NaiveEven { y: 3 });
         assert_eq!(c.lr, 0.5);
+    }
+
+    #[test]
+    fn pipeline_mode_overrides() {
+        assert_eq!(TrainConfig::default().pipeline, PipelineMode::Pipelined);
+        let v = Value::parse(r#"{"pipeline": "serial"}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.pipeline, PipelineMode::Serial);
+        let args = Args::parse(
+            ["x", "--pipeline", "pipelined"].iter().map(|s| s.to_string()),
+        );
+        let c = c.apply_cli(&args).unwrap();
+        assert_eq!(c.pipeline, PipelineMode::Pipelined);
+        let v = Value::parse(r#"{"pipeline": "bogus"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -1,0 +1,453 @@
+//! The exchange engine: merge → encode → collective → decode → scatter for
+//! every tensor group, in either [`PipelineMode`].
+//!
+//! Equivalence invariant (tested in `tests/pipeline_equivalence.rs`): both
+//! modes perform the *same* sequence of codec and collective operations —
+//! encodes in group order on the compute lane (so RNG draws and EF updates
+//! are identical), collectives in group order on one communicator (so tag
+//! sequencing and reduction order are identical), decodes in group order
+//! with the same accumulate-then-average arithmetic. Pipelining changes
+//! only *when* things run, never *what* runs — gradients and codec state
+//! are bit-identical.
+//!
+//! Allocation discipline: merge/decode scratch is double-buffered
+//! (`flats`), and wire payloads cycle through `wire_pool`, so the
+//! steady-state hot path performs no heap allocation beyond what the
+//! transport itself does.
+
+use super::{ExchangeStats, PipelineMode};
+use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome};
+use crate::compression::{Codec, CodecKind, Collective};
+use crate::scheduler::Partition;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::Stopwatch;
+
+/// One worker's exchange engine for a fixed (codec, partition) pair.
+pub struct ExchangeEngine {
+    kind: CodecKind,
+    partition: Partition,
+    /// Per-tensor element counts, backprop order.
+    sizes: Vec<usize>,
+    /// One stateful codec per group (EF granularity = group, §4.2).
+    codecs: Vec<Box<dyn Codec>>,
+    group_elems: Vec<usize>,
+    /// Double-buffered merge/decode scratch: slot `j % 2` serves group `j`,
+    /// so the in-flight group's decode buffer survives while the next
+    /// group merges into the other slot.
+    flats: [Vec<f32>; 2],
+    /// Recycled wire buffers (encode targets / returned payloads).
+    wire_pool: Vec<Vec<u8>>,
+}
+
+impl ExchangeEngine {
+    pub fn new(kind: CodecKind, partition: Partition, sizes_backprop: Vec<usize>) -> Self {
+        let group_elems = partition.group_elems(&sizes_backprop);
+        let codecs = group_elems.iter().map(|&n| kind.build(n)).collect();
+        let max_group = group_elems.iter().copied().max().unwrap_or(0);
+        ExchangeEngine {
+            kind,
+            partition,
+            sizes: sizes_backprop,
+            codecs,
+            group_elems,
+            flats: [Vec::with_capacity(max_group), Vec::with_capacity(max_group)],
+            wire_pool: Vec::new(),
+        }
+    }
+
+    pub fn kind(&self) -> CodecKind {
+        self.kind
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Fingerprint of all per-group codec state (EF residuals, momentum).
+    pub fn state_digest(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01B3;
+        self.codecs
+            .iter()
+            .fold(crate::compression::STATE_DIGEST_SEED, |h, c| {
+                h.wrapping_mul(PRIME) ^ c.state_digest()
+            })
+    }
+
+    /// Aggregate gradients across the group. `grads` holds per-tensor
+    /// buffers in **backprop order**; on return each buffer contains the
+    /// mean of the (compressed) gradients over all workers.
+    pub fn exchange(
+        &mut self,
+        comm: &mut Comm,
+        grads: &mut [Vec<f32>],
+        rng: &mut Xoshiro256,
+        mode: PipelineMode,
+    ) -> ExchangeStats {
+        assert_eq!(grads.len(), self.sizes.len());
+        match mode {
+            PipelineMode::Serial => self.exchange_serial(comm, grads, rng),
+            PipelineMode::Pipelined => self.exchange_pipelined(comm, grads, rng),
+        }
+    }
+
+    /// Legacy schedule: encode → collective → decode strictly per group on
+    /// the worker thread. `comm_exposed_secs == comm_secs` by definition.
+    fn exchange_serial(
+        &mut self,
+        comm: &mut Comm,
+        grads: &mut [Vec<f32>],
+        rng: &mut Xoshiro256,
+    ) -> ExchangeStats {
+        let world = comm.world() as f32;
+        let rank = comm.rank();
+        let y = self.partition.num_groups();
+        let mut stats = ExchangeStats {
+            groups: y,
+            ..Default::default()
+        };
+        let bytes_before = comm.bytes_sent();
+        let collective = self.kind.collective();
+
+        let ExchangeEngine {
+            kind: _,
+            partition,
+            sizes,
+            codecs,
+            group_elems,
+            flats,
+            wire_pool,
+        } = self;
+
+        for j in 0..y {
+            let n = group_elems[j];
+
+            // --- merge -----------------------------------------------------
+            let flat = &mut flats[0];
+            flat.clear();
+            for i in partition.group_range(j) {
+                flat.extend_from_slice(&grads[i]);
+            }
+            debug_assert_eq!(flat.len(), n);
+
+            // --- encode ----------------------------------------------------
+            let mut wire = wire_pool.pop().unwrap_or_default();
+            let sw = Stopwatch::start();
+            codecs[j].encode_into(flat, rng, &mut wire);
+            stats.encode_secs += sw.elapsed().as_secs_f64();
+
+            // --- communicate (blocking, on this thread) --------------------
+            let sw = Stopwatch::start();
+            let outcome = match collective {
+                Collective::AllReduce => {
+                    comm.allreduce_wire(&mut wire, codecs[j].as_ref());
+                    CommOutcome::Reduced(wire)
+                }
+                Collective::AllGather => CommOutcome::Gathered(comm.allgather(wire)),
+            };
+            stats.comm_secs += sw.elapsed().as_secs_f64();
+
+            // --- decode + scatter: the SAME helper the pipelined path uses,
+            // so the bit-identical guarantee is structural.
+            finish_group(
+                j,
+                outcome,
+                codecs,
+                partition,
+                sizes,
+                &mut flats[0],
+                grads,
+                wire_pool,
+                n,
+                world,
+                rank,
+                &mut stats,
+            );
+        }
+
+        stats.comm_exposed_secs = stats.comm_secs;
+        stats.bytes_sent = comm.bytes_sent() - bytes_before;
+        stats
+    }
+
+    /// Pipelined schedule: the comm lane runs group `j`'s collective while
+    /// the compute lane encodes group `j+1` and decodes group `j−1`.
+    fn exchange_pipelined(
+        &mut self,
+        comm: &mut Comm,
+        grads: &mut [Vec<f32>],
+        rng: &mut Xoshiro256,
+    ) -> ExchangeStats {
+        let world = comm.world() as f32;
+        let rank = comm.rank();
+        let y = self.partition.num_groups();
+        let mut stats = ExchangeStats {
+            groups: y,
+            ..Default::default()
+        };
+        let bytes_before = comm.bytes_sent();
+        let collective = self.kind.collective();
+
+        // Disjoint field borrows so the lane closure can mutate scratch
+        // state while `comm` itself lives on the comm-lane thread.
+        let ExchangeEngine {
+            kind,
+            partition,
+            sizes,
+            codecs,
+            group_elems,
+            flats,
+            wire_pool,
+        } = self;
+
+        let ((), _lane_busy) = lane_scope(comm, |lane| {
+            let mut inflight: Option<(usize, CommHandle)> = None;
+            for j in 0..y {
+                let n = group_elems[j];
+
+                // --- merge + encode group j (overlaps group j−1's comm) ---
+                let flat = &mut flats[j % 2];
+                flat.clear();
+                for i in partition.group_range(j) {
+                    flat.extend_from_slice(&grads[i]);
+                }
+                debug_assert_eq!(flat.len(), n);
+
+                let mut wire = wire_pool.pop().unwrap_or_default();
+                let sw = Stopwatch::start();
+                codecs[j].encode_into(flat, rng, &mut wire);
+                stats.encode_secs += sw.elapsed().as_secs_f64();
+
+                // --- hand group j to the comm lane ------------------------
+                let handle = match collective {
+                    Collective::AllReduce => lane.start_allreduce(wire, *kind, n),
+                    Collective::AllGather => lane.start_allgather(wire),
+                };
+
+                // --- drain group j−1 (its comm overlapped our encode) -----
+                if let Some((pj, ph)) = inflight.replace((j, handle)) {
+                    complete_group(
+                        pj,
+                        ph,
+                        codecs,
+                        partition,
+                        sizes,
+                        &mut flats[pj % 2],
+                        grads,
+                        wire_pool,
+                        group_elems[pj],
+                        world,
+                        rank,
+                        &mut stats,
+                    );
+                }
+            }
+            if let Some((pj, ph)) = inflight.take() {
+                complete_group(
+                    pj,
+                    ph,
+                    codecs,
+                    partition,
+                    sizes,
+                    &mut flats[pj % 2],
+                    grads,
+                    wire_pool,
+                    group_elems[pj],
+                    world,
+                    rank,
+                    &mut stats,
+                );
+            }
+        });
+
+        stats.bytes_sent = comm.bytes_sent() - bytes_before;
+        stats
+    }
+}
+
+/// Wait for group `j`'s collective, then hand its outcome to
+/// [`finish_group`]. Pipelined path only; the wait is the *exposed* comm.
+#[allow(clippy::too_many_arguments)]
+fn complete_group(
+    j: usize,
+    handle: CommHandle,
+    codecs: &[Box<dyn Codec>],
+    partition: &Partition,
+    sizes: &[usize],
+    flat: &mut Vec<f32>,
+    grads: &mut [Vec<f32>],
+    wire_pool: &mut Vec<Vec<u8>>,
+    n: usize,
+    world: f32,
+    rank: usize,
+    stats: &mut ExchangeStats,
+) {
+    // Only the time actually spent blocked here is *exposed* comm.
+    let sw = Stopwatch::start();
+    let done = handle.wait();
+    stats.comm_exposed_secs += sw.elapsed().as_secs_f64();
+    stats.comm_secs += done.secs;
+    finish_group(
+        j, done.outcome, codecs, partition, sizes, flat, grads, wire_pool, n, world, rank, stats,
+    );
+}
+
+/// Decode + average a completed collective into `flat`, scatter into the
+/// per-tensor gradient buffers, and recycle wire buffers. Shared by the
+/// Serial and Pipelined schedules — one copy of the arithmetic keeps the
+/// two modes bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn finish_group(
+    j: usize,
+    outcome: CommOutcome,
+    codecs: &[Box<dyn Codec>],
+    partition: &Partition,
+    sizes: &[usize],
+    flat: &mut Vec<f32>,
+    grads: &mut [Vec<f32>],
+    wire_pool: &mut Vec<Vec<u8>>,
+    n: usize,
+    world: f32,
+    rank: usize,
+    stats: &mut ExchangeStats,
+) {
+    match outcome {
+        CommOutcome::Reduced(wire) => {
+            let sw = Stopwatch::start();
+            codecs[j].decode_into(&wire, flat);
+            for v in flat.iter_mut() {
+                *v /= world;
+            }
+            stats.decode_secs += sw.elapsed().as_secs_f64();
+            wire_pool.push(wire);
+        }
+        CommOutcome::Gathered(mut payloads) => {
+            let sw = Stopwatch::start();
+            flat.clear();
+            flat.resize(n, 0.0);
+            let w = 1.0 / world;
+            for bytes in &payloads {
+                codecs[j].decode_add_into(bytes, flat, w);
+            }
+            stats.decode_secs += sw.elapsed().as_secs_f64();
+            wire_pool.push(std::mem::take(&mut payloads[rank]));
+        }
+    }
+
+    let mut off = 0;
+    for i in partition.group_range(j) {
+        let len = sizes[i];
+        grads[i].copy_from_slice(&flat[off..off + len]);
+        off += len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_comm_group;
+
+    fn make_grads(rank: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(t, &n)| {
+                (0..n)
+                    .map(|i| (rank + 1) as f32 * (t as f32 + 1.0) + i as f32 * 0.001)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pipelined_fp32_is_exact_mean() {
+        let sizes = vec![6usize, 10, 3, 9];
+        for y in [1usize, 2, 4] {
+            let sizes2 = sizes.clone();
+            let results = run_comm_group(3, move |c| {
+                let mut eng = ExchangeEngine::new(
+                    CodecKind::Fp32,
+                    Partition::naive_even(4, y),
+                    sizes2.clone(),
+                );
+                let mut rng = Xoshiro256::seed_from_u64(c.rank() as u64);
+                let mut grads = make_grads(c.rank(), &sizes2);
+                let stats = eng.exchange(c, &mut grads, &mut rng, PipelineMode::Pipelined);
+                assert_eq!(stats.groups, y.min(4));
+                (grads, stats.bytes_sent)
+            });
+            for (grads, bytes) in &results {
+                assert!(*bytes > 0);
+                for (t, buf) in grads.iter().enumerate() {
+                    for (i, v) in buf.iter().enumerate() {
+                        let want = 2.0 * (t as f32 + 1.0) + i as f32 * 0.001;
+                        assert!((v - want).abs() < 1e-4, "y={y} t={t} i={i}: {v} vs {want}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serial_and_pipelined_bit_identical_one_step() {
+        // Full 3-step equivalence over all paper codecs lives in
+        // tests/pipeline_equivalence.rs; this is the in-module smoke check.
+        let sizes = vec![40usize, 25, 70];
+        for kind in [CodecKind::EfSignSgd, CodecKind::Fp16] {
+            let run = |mode: PipelineMode| {
+                let sizes2 = sizes.clone();
+                run_comm_group(2, move |c| {
+                    let mut eng = ExchangeEngine::new(
+                        kind,
+                        Partition::naive_even(3, 2),
+                        sizes2.clone(),
+                    );
+                    let mut rng = Xoshiro256::seed_from_u64(7 + c.rank() as u64);
+                    let mut grads = make_grads(c.rank(), &sizes2);
+                    eng.exchange(c, &mut grads, &mut rng, mode);
+                    (grads, eng.state_digest())
+                })
+            };
+            let serial = run(PipelineMode::Serial);
+            let pipelined = run(PipelineMode::Pipelined);
+            assert_eq!(serial, pipelined, "{}: modes diverged", kind.name());
+        }
+    }
+
+    #[test]
+    fn serial_mode_exposes_all_comm() {
+        let results = run_comm_group(2, |c| {
+            let mut eng =
+                ExchangeEngine::new(CodecKind::Fp32, Partition::full_merge(1), vec![2048]);
+            let mut rng = Xoshiro256::seed_from_u64(0);
+            let mut grads = vec![vec![1.0f32; 2048]];
+            eng.exchange(c, &mut grads, &mut rng, PipelineMode::Serial)
+        });
+        for s in results {
+            assert_eq!(s.comm_exposed_secs, s.comm_secs);
+            assert!((s.overlap_frac() - 0.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn wire_pool_recycles_buffers() {
+        // After a first exchange primes the pool, later exchanges should
+        // not grow it beyond the pipeline depth.
+        let results = run_comm_group(2, |c| {
+            let mut eng = ExchangeEngine::new(
+                CodecKind::EfSignSgd,
+                Partition::naive_even(4, 4),
+                vec![64, 64, 64, 64],
+            );
+            let mut rng = Xoshiro256::seed_from_u64(3);
+            for _ in 0..3 {
+                let mut grads = make_grads(c.rank(), &[64, 64, 64, 64]);
+                eng.exchange(c, &mut grads, &mut rng, PipelineMode::Pipelined);
+            }
+            eng.wire_pool.len()
+        });
+        for pool in results {
+            // One recycled buffer per completed group is the ceiling.
+            assert!(pool <= 4, "pool grew to {pool}");
+        }
+    }
+}

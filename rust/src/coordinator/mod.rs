@@ -1,1 +1,168 @@
-// paper's L3 coordination contribution
+//! The coordinator: MergeComp's L3 execution engine for the measured plane.
+//!
+//! This module owns the **pipelined exchange engine** — the component that
+//! makes the paper's overlap claim (Fig. 1, Eq. 7) observable in the *real*
+//! trainer rather than only in the `simulator/` plane. It splits each
+//! worker into two lanes, mirroring the simulator's two-resource model:
+//!
+//! - the **compute lane** (the worker thread itself) merges each tensor
+//!   group, runs the codec's `encode_into` / `decode_into` against reusable
+//!   buffers, and scatters averaged gradients back;
+//! - the **comm lane** (a dedicated thread borrowed via
+//!   [`crate::collectives::lane_scope`]) executes one collective at a time,
+//!   in submission order, over the tagged transport.
+//!
+//! With [`PipelineMode::Pipelined`], group *j*'s collective runs while
+//! group *j+1* encodes and group *j−1* decodes — the software-pipelined
+//! schedule MG-WFBP-style systems use. [`PipelineMode::Serial`] preserves
+//! the strictly sequential encode → collective → decode loop; both modes
+//! produce **bit-identical** gradients and error-feedback state (enforced
+//! by `tests/pipeline_equivalence.rs`), because the per-group operation
+//! order seen by the codecs, the RNG, and the transport's tag sequence is
+//! the same in both.
+//!
+//! [`ExchangeStats`] separates `comm_secs` (total collective occupancy,
+//! measured on the comm lane) from `comm_exposed_secs` (time the compute
+//! lane actually stalled in `CommHandle::wait`) — the measured counterpart
+//! of the simulator's `comm_total` / `comm_exposed` split, and the quantity
+//! Eq. 7's Σp(x_i) overlap term hides.
+
+pub mod engine;
+
+pub use engine::ExchangeEngine;
+
+/// How the exchange engine schedules encode / collective / decode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipelineMode {
+    /// Strictly sequential per group (the legacy measured plane; zero
+    /// overlap by construction). The conservative default for library
+    /// users; the trainer defaults to `Pipelined`.
+    #[default]
+    Serial,
+    /// Dedicated comm lane; encode/decode of neighbouring groups overlap
+    /// the in-flight collective.
+    Pipelined,
+}
+
+impl PipelineMode {
+    pub fn from_name(name: &str) -> anyhow::Result<PipelineMode> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "serial" => PipelineMode::Serial,
+            "pipelined" | "pipeline" | "overlap" => PipelineMode::Pipelined,
+            other => anyhow::bail!("unknown pipeline mode '{other}' (serial|pipelined)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::Serial => "serial",
+            PipelineMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// Per-step timing/size accounting (feeds the measured cost models, the
+/// EXPERIMENTS.md overhead tables, and the simulator-vs-trainer overlap
+/// validation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExchangeStats {
+    pub encode_secs: f64,
+    /// Total collective occupancy (sum of collective durations, whether or
+    /// not they were hidden) — the measured analogue of the simulator's
+    /// `comm_total`.
+    pub comm_secs: f64,
+    pub decode_secs: f64,
+    /// Communication time the compute lane actually waited for — the
+    /// *exposed* remainder after pipeline overlap. Equals `comm_secs` in
+    /// `Serial` mode by definition.
+    pub comm_exposed_secs: f64,
+    pub bytes_sent: u64,
+    pub groups: usize,
+}
+
+impl ExchangeStats {
+    /// Total work performed (compute + comm occupancy, ignoring overlap).
+    pub fn total_secs(&self) -> f64 {
+        self.encode_secs + self.comm_secs + self.decode_secs
+    }
+
+    /// Wall-clock contribution of the exchange to the step: compression
+    /// compute plus only the comm that could not be hidden.
+    pub fn critical_path_secs(&self) -> f64 {
+        self.encode_secs + self.comm_exposed_secs + self.decode_secs
+    }
+
+    /// Communication hidden behind encode/decode (Σp in Eq. 7, measured).
+    pub fn overlap_secs(&self) -> f64 {
+        (self.comm_secs - self.comm_exposed_secs).max(0.0)
+    }
+
+    /// Fraction of comm hidden; 0 when there was no communication.
+    pub fn overlap_frac(&self) -> f64 {
+        if self.comm_secs > 0.0 {
+            self.overlap_secs() / self.comm_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Accumulate another step's stats (groups/bytes follow the addend).
+    pub fn accumulate(&mut self, other: &ExchangeStats) {
+        self.encode_secs += other.encode_secs;
+        self.comm_secs += other.comm_secs;
+        self.decode_secs += other.decode_secs;
+        self.comm_exposed_secs += other.comm_exposed_secs;
+        self.bytes_sent += other.bytes_sent;
+        self.groups = other.groups;
+    }
+
+    /// Divide all timings by `steps` (for per-step means).
+    pub fn scaled(&self, steps: f64) -> ExchangeStats {
+        ExchangeStats {
+            encode_secs: self.encode_secs / steps,
+            comm_secs: self.comm_secs / steps,
+            decode_secs: self.decode_secs / steps,
+            comm_exposed_secs: self.comm_exposed_secs / steps,
+            bytes_sent: (self.bytes_sent as f64 / steps) as u64,
+            groups: self.groups,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            assert_eq!(PipelineMode::from_name(m.name()).unwrap(), m);
+        }
+        assert!(PipelineMode::from_name("warp-drive").is_err());
+        assert_eq!(PipelineMode::default(), PipelineMode::Serial);
+    }
+
+    #[test]
+    fn stats_overlap_accounting() {
+        let s = ExchangeStats {
+            encode_secs: 1.0,
+            comm_secs: 4.0,
+            decode_secs: 0.5,
+            comm_exposed_secs: 1.0,
+            bytes_sent: 10,
+            groups: 2,
+        };
+        assert!((s.total_secs() - 5.5).abs() < 1e-12);
+        assert!((s.critical_path_secs() - 2.5).abs() < 1e-12);
+        assert!((s.overlap_secs() - 3.0).abs() < 1e-12);
+        assert!((s.overlap_frac() - 0.75).abs() < 1e-12);
+
+        let mut acc = ExchangeStats::default();
+        acc.accumulate(&s);
+        acc.accumulate(&s);
+        assert!((acc.comm_secs - 8.0).abs() < 1e-12);
+        let mean = acc.scaled(2.0);
+        assert!((mean.comm_secs - 4.0).abs() < 1e-12);
+        assert_eq!(mean.groups, 2);
+    }
+}

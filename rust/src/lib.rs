@@ -4,10 +4,12 @@
 //! Scheduler for Scalable Communication-Efficient Distributed Training*
 //! (cs.DC 2021), built as a three-layer Rust + JAX + Pallas stack:
 //!
-//! - **L3 (this crate)** — the coordinator: gradient codecs, collectives,
-//!   the MergeComp partition scheduler (paper Alg. 2), a discrete-event
-//!   timeline simulator of the paper's V100 testbed, and a real
-//!   data-parallel trainer that executes AOT-compiled JAX train steps
+//! - **L3 (this crate)** — the coordinator: gradient codecs, collectives
+//!   (blocking + non-blocking comm-lane), the pipelined exchange engine
+//!   (`coordinator/`) that overlaps encode/comm/decode in the measured
+//!   plane, the MergeComp partition scheduler (paper Alg. 2), a
+//!   discrete-event timeline simulator of the paper's V100 testbed, and a
+//!   real data-parallel trainer that executes AOT-compiled JAX train steps
 //!   through the PJRT C API.
 //! - **L2 (python/compile/model.py)** — transformer LM forward/backward in
 //!   JAX, lowered once to HLO text (`make artifacts`).
@@ -20,6 +22,7 @@
 pub mod collectives;
 pub mod compression;
 pub mod config;
+pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod netsim;

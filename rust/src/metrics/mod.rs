@@ -8,4 +8,4 @@ mod registry;
 mod sink;
 
 pub use registry::{Histogram, MetricsRegistry, TimerGuard};
-pub use sink::{CsvWriter, JsonlWriter};
+pub use sink::{write_json, CsvWriter, JsonlWriter};

@@ -68,6 +68,17 @@ impl Drop for CsvWriter {
     }
 }
 
+/// Write one pretty-printed JSON document to `path`, creating parent
+/// directories (bench summaries like `results/BENCH_pipeline.json`).
+pub fn write_json(path: impl AsRef<Path>, v: &Value) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::write(path, v.to_string_pretty() + "\n")?;
+    Ok(())
+}
+
 /// JSON-lines writer.
 pub struct JsonlWriter {
     out: BufWriter<File>,

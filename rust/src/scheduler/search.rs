@@ -229,15 +229,16 @@ mod tests {
     }
 
     fn sim_objective(kind: CodecKind, world: usize) -> (SimObjective<'static>, usize) {
-        use once_cell::sync::Lazy;
-        static PROFILE: Lazy<crate::profiles::ModelProfile> = Lazy::new(resnet50_cifar10);
+        static PROFILE: std::sync::OnceLock<crate::profiles::ModelProfile> =
+            std::sync::OnceLock::new();
+        let profile = PROFILE.get_or_init(resnet50_cifar10);
         let setup = SimSetup {
-            profile: &PROFILE,
+            profile,
             kind,
             fabric: Fabric::pcie(),
             world,
         };
-        (SimObjective::new(setup), PROFILE.num_tensors())
+        (SimObjective::new(setup), profile.num_tensors())
     }
 
     #[test]

@@ -6,12 +6,16 @@
 //! - [`timeline`]: the discrete-event WFBP iteration timeline that turns a
 //!   (profile, codec, fabric, world, partition) tuple into an iteration
 //!   time and scaling factor.
+//! - [`validate`]: compares the simulator's comm_total/comm_exposed split
+//!   against what the pipelined exchange engine measures in the trainer.
 //!
 //! The *real* execution plane (rust/src/training) shares the partition
 //! scheduler with this module but measures its own costs.
 
 pub mod overhead;
 pub mod timeline;
+pub mod validate;
 
 pub use overhead::{LinearCost, OverheadModel};
 pub use timeline::{scaling_factor, simulate, SimBreakdown, SimSetup};
+pub use validate::{compare_overlap, OverlapValidation};

@@ -144,10 +144,9 @@ mod tests {
     use crate::profiles::resnet50_cifar10;
 
     fn setup(kind: CodecKind, fabric: Fabric, world: usize) -> SimSetup<'static> {
-        use once_cell::sync::Lazy;
-        static PROFILE: Lazy<ModelProfile> = Lazy::new(resnet50_cifar10);
+        static PROFILE: std::sync::OnceLock<ModelProfile> = std::sync::OnceLock::new();
         SimSetup {
-            profile: &PROFILE,
+            profile: PROFILE.get_or_init(resnet50_cifar10),
             kind,
             fabric,
             world,

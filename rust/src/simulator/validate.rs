@@ -1,0 +1,86 @@
+//! Simulator-vs-trainer validation: compare the overlap the timeline
+//! simulator *predicts* with the overlap the pipelined exchange engine
+//! *measures*.
+//!
+//! The simulator's two-resource model splits communication into
+//! `comm_total` and `comm_exposed` (the part not hidden under GPU-stream
+//! work). Since the measured plane got its comm lane, [`ExchangeStats`]
+//! reports the same split for real — so the paper's Eq. 7 overlap term is
+//! now checkable against reality instead of being a modelling assumption.
+//! `benches/pipeline_overlap.rs` emits both sides into
+//! `results/BENCH_pipeline.json`.
+
+use super::SimBreakdown;
+use crate::coordinator::ExchangeStats;
+
+/// One (simulated, measured) overlap comparison.
+#[derive(Debug, Clone)]
+pub struct OverlapValidation {
+    /// Fraction of comm the simulator predicts is hidden.
+    pub sim_overlap_frac: f64,
+    /// Fraction of comm the trainer actually hid.
+    pub measured_overlap_frac: f64,
+    /// Simulated exposed comm per iteration (seconds).
+    pub sim_comm_exposed: f64,
+    /// Measured exposed comm per iteration (seconds).
+    pub measured_comm_exposed: f64,
+    /// `measured_overlap_frac - sim_overlap_frac`; negative means the real
+    /// pipeline hides less than the model promises.
+    pub gap: f64,
+}
+
+/// Compare a simulated iteration against measured per-step exchange stats
+/// (use per-step means for multi-step runs).
+pub fn compare_overlap(sim: &SimBreakdown, measured: &ExchangeStats) -> OverlapValidation {
+    let sim_frac = if sim.comm_total > 0.0 {
+        (sim.comm_total - sim.comm_exposed) / sim.comm_total
+    } else {
+        0.0
+    };
+    let meas_frac = measured.overlap_frac();
+    OverlapValidation {
+        sim_overlap_frac: sim_frac,
+        measured_overlap_frac: meas_frac,
+        sim_comm_exposed: sim.comm_exposed,
+        measured_comm_exposed: measured.comm_exposed_secs,
+        gap: meas_frac - sim_frac,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breakdown(comm_total: f64, comm_exposed: f64) -> SimBreakdown {
+        SimBreakdown {
+            iter_time: 1.0,
+            compute: 0.5,
+            encode_path: 0.1,
+            decode_path: 0.1,
+            comm_total,
+            comm_exposed,
+            group_events: vec![],
+        }
+    }
+
+    #[test]
+    fn fractions_and_gap() {
+        let sim = breakdown(2.0, 0.5); // 75% hidden in the model
+        let measured = ExchangeStats {
+            comm_secs: 2.0,
+            comm_exposed_secs: 1.0, // 50% hidden for real
+            ..Default::default()
+        };
+        let v = compare_overlap(&sim, &measured);
+        assert!((v.sim_overlap_frac - 0.75).abs() < 1e-12);
+        assert!((v.measured_overlap_frac - 0.5).abs() < 1e-12);
+        assert!((v.gap + 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_comm_is_zero_overlap() {
+        let v = compare_overlap(&breakdown(0.0, 0.0), &ExchangeStats::default());
+        assert_eq!(v.sim_overlap_frac, 0.0);
+        assert_eq!(v.measured_overlap_frac, 0.0);
+    }
+}

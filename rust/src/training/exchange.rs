@@ -1,66 +1,66 @@
-//! Gradient exchange: paper Algorithm 1's inner loop.
+//! Gradient exchange: paper Algorithm 1's inner loop, executed by the
+//! coordinator's [`ExchangeEngine`].
 //!
 //! Per group (in backprop order): merge the group's tensors into one flat
 //! buffer, encode with the codec (EF state lives in the per-group codec
 //! instance), synchronize with the codec's collective (Table 1), decode +
-//! average, and scatter back into the per-tensor buffers.
+//! average, and scatter back into the per-tensor buffers. With
+//! [`PipelineMode::Pipelined`] the collective for group *j* overlaps the
+//! encode of group *j+1* and the decode of group *j−1* on a dedicated comm
+//! lane; [`PipelineMode::Serial`] keeps the legacy strictly-sequential
+//! schedule. Both modes are bit-identical in results and codec state (see
+//! `tests/pipeline_equivalence.rs`).
 
 use crate::collectives::Comm;
-use crate::compression::{Codec, CodecKind, Collective, Encoded};
+use crate::compression::CodecKind;
+use crate::coordinator::ExchangeEngine;
+pub use crate::coordinator::{ExchangeStats, PipelineMode};
 use crate::scheduler::Partition;
 use crate::util::rng::Xoshiro256;
-use crate::util::stats::Stopwatch;
 
-/// Per-step timing/size accounting (feeds the measured cost models and the
-/// EXPERIMENTS.md overhead tables).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct ExchangeStats {
-    pub encode_secs: f64,
-    pub comm_secs: f64,
-    pub decode_secs: f64,
-    pub bytes_sent: u64,
-    pub groups: usize,
-}
-
-impl ExchangeStats {
-    pub fn total_secs(&self) -> f64 {
-        self.encode_secs + self.comm_secs + self.decode_secs
-    }
-}
-
-/// One worker's exchange state for a fixed (codec, partition) pair.
+/// One worker's exchange state for a fixed (codec, partition) pair — a thin
+/// mode-carrying wrapper over [`ExchangeEngine`].
 pub struct GradExchange {
-    kind: CodecKind,
-    partition: Partition,
-    /// Per-tensor element counts, backprop order.
-    sizes: Vec<usize>,
-    /// One stateful codec per group (EF granularity = group, §4.2).
-    codecs: Vec<Box<dyn Codec>>,
-    group_elems: Vec<usize>,
-    flat: Vec<f32>, // merge scratch
+    engine: ExchangeEngine,
+    mode: PipelineMode,
 }
 
 impl GradExchange {
+    /// Build with the conservative [`PipelineMode::Serial`] default; use
+    /// [`GradExchange::with_mode`] (or the trainer's `pipeline` config) to
+    /// enable overlap.
     pub fn new(kind: CodecKind, partition: Partition, sizes_backprop: Vec<usize>) -> Self {
-        let group_elems = partition.group_elems(&sizes_backprop);
-        let codecs = group_elems.iter().map(|&n| kind.build(n)).collect();
-        let max_group = group_elems.iter().copied().max().unwrap_or(0);
         GradExchange {
-            kind,
-            partition,
-            sizes: sizes_backprop,
-            codecs,
-            group_elems,
-            flat: Vec::with_capacity(max_group),
+            engine: ExchangeEngine::new(kind, partition, sizes_backprop),
+            mode: PipelineMode::default(),
         }
     }
 
+    pub fn with_mode(mut self, mode: PipelineMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn set_mode(&mut self, mode: PipelineMode) {
+        self.mode = mode;
+    }
+
+    pub fn mode(&self) -> PipelineMode {
+        self.mode
+    }
+
     pub fn partition(&self) -> &Partition {
-        &self.partition
+        self.engine.partition()
     }
 
     pub fn kind(&self) -> CodecKind {
-        self.kind
+        self.engine.kind()
+    }
+
+    /// Fingerprint of all per-group codec state (EF residual, momentum) —
+    /// used to prove Serial/Pipelined equivalence.
+    pub fn state_digest(&self) -> u64 {
+        self.engine.state_digest()
     }
 
     /// Aggregate gradients across the group. `grads` holds per-tensor
@@ -72,74 +72,7 @@ impl GradExchange {
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
     ) -> ExchangeStats {
-        assert_eq!(grads.len(), self.sizes.len());
-        let world = comm.world() as f32;
-        let mut stats = ExchangeStats {
-            groups: self.partition.num_groups(),
-            ..Default::default()
-        };
-        let bytes_before = comm.bytes_sent();
-
-        for j in 0..self.partition.num_groups() {
-            let range = self.partition.group_range(j);
-            let n = self.group_elems[j];
-
-            // --- merge -----------------------------------------------------
-            self.flat.clear();
-            for i in range.clone() {
-                self.flat.extend_from_slice(&grads[i]);
-            }
-            debug_assert_eq!(self.flat.len(), n);
-
-            // --- encode ----------------------------------------------------
-            let sw = Stopwatch::start();
-            let enc = self.codecs[j].encode(&self.flat, rng);
-            stats.encode_secs += sw.elapsed().as_secs_f64();
-
-            // --- communicate + decode --------------------------------------
-            match self.kind.collective() {
-                Collective::AllReduce => {
-                    let mut wire = enc.bytes;
-                    let sw = Stopwatch::start();
-                    comm.allreduce_wire(&mut wire, self.codecs[j].as_ref());
-                    stats.comm_secs += sw.elapsed().as_secs_f64();
-
-                    let sw = Stopwatch::start();
-                    let summed = Encoded { bytes: wire, n };
-                    self.codecs[j].decode(&summed, &mut self.flat);
-                    for v in self.flat.iter_mut() {
-                        *v /= world;
-                    }
-                    stats.decode_secs += sw.elapsed().as_secs_f64();
-                }
-                Collective::AllGather => {
-                    let sw = Stopwatch::start();
-                    let payloads = comm.allgather(enc.bytes);
-                    stats.comm_secs += sw.elapsed().as_secs_f64();
-
-                    let sw = Stopwatch::start();
-                    self.flat.clear();
-                    self.flat.resize(n, 0.0);
-                    let w = 1.0 / world;
-                    for bytes in payloads {
-                        let e = Encoded { bytes, n };
-                        self.codecs[j].decode_add(&e, &mut self.flat, w);
-                    }
-                    stats.decode_secs += sw.elapsed().as_secs_f64();
-                }
-            }
-
-            // --- scatter back ---------------------------------------------
-            let mut off = 0;
-            for i in range {
-                let len = self.sizes[i];
-                grads[i].copy_from_slice(&self.flat[off..off + len]);
-                off += len;
-            }
-        }
-
-        stats.bytes_sent = comm.bytes_sent() - bytes_before;
-        stats
+        self.engine.exchange(comm, grads, rng, self.mode)
     }
 }
 
@@ -163,30 +96,34 @@ mod tests {
     #[test]
     fn fp32_exchange_is_exact_mean() {
         let sizes = vec![5usize, 3, 7];
-        for partition in [
-            Partition::layer_wise(3),
-            Partition::full_merge(3),
-            Partition::naive_even(3, 2),
-        ] {
-            let sizes2 = sizes.clone();
-            let partition2 = partition.clone();
-            let results = run_comm_group(3, move |c| {
-                let mut ex =
-                    GradExchange::new(CodecKind::Fp32, partition2.clone(), sizes2.clone());
-                let mut rng = Xoshiro256::seed_from_u64(c.rank() as u64);
-                let mut grads = make_grads(c.rank(), &sizes2);
-                ex.exchange(c, &mut grads, &mut rng);
-                grads
-            });
-            // Expected mean over ranks: mean(rank+1) = 2.
-            for r in &results {
-                for (t, buf) in r.iter().enumerate() {
-                    for (i, v) in buf.iter().enumerate() {
-                        let want = 2.0 * (t as f32 + 1.0) + i as f32 * 0.001;
-                        assert!(
-                            (v - want).abs() < 1e-4,
-                            "partition {partition}: tensor {t} idx {i}: {v} vs {want}"
-                        );
+        for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            for partition in [
+                Partition::layer_wise(3),
+                Partition::full_merge(3),
+                Partition::naive_even(3, 2),
+            ] {
+                let sizes2 = sizes.clone();
+                let partition2 = partition.clone();
+                let results = run_comm_group(3, move |c| {
+                    let mut ex =
+                        GradExchange::new(CodecKind::Fp32, partition2.clone(), sizes2.clone())
+                            .with_mode(mode);
+                    let mut rng = Xoshiro256::seed_from_u64(c.rank() as u64);
+                    let mut grads = make_grads(c.rank(), &sizes2);
+                    ex.exchange(c, &mut grads, &mut rng);
+                    grads
+                });
+                // Expected mean over ranks: mean(rank+1) = 2.
+                for r in &results {
+                    for (t, buf) in r.iter().enumerate() {
+                        for (i, v) in buf.iter().enumerate() {
+                            let want = 2.0 * (t as f32 + 1.0) + i as f32 * 0.001;
+                            assert!(
+                                (v - want).abs() < 1e-4,
+                                "{} {partition}: tensor {t} idx {i}: {v} vs {want}",
+                                mode.name()
+                            );
+                        }
                     }
                 }
             }
@@ -198,32 +135,34 @@ mod tests {
         // Model consistency: every codec must leave identical aggregated
         // gradients on every worker (the heart of synchronous SGD).
         let sizes = vec![40usize, 25, 70];
-        for kind in [
-            CodecKind::Fp16,
-            CodecKind::Qsgd { bits: 8 },
-            CodecKind::TopK { ratio: 0.1 },
-            CodecKind::Dgc { ratio: 0.1 },
-            CodecKind::EfSignSgd,
-            CodecKind::SignSgd,
-            CodecKind::OneBit,
-        ] {
-            let sizes2 = sizes.clone();
-            let results = run_comm_group(2, move |c| {
-                let mut ex = GradExchange::new(
-                    kind,
-                    Partition::naive_even(3, 2),
-                    sizes2.clone(),
+        for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            for kind in [
+                CodecKind::Fp16,
+                CodecKind::Qsgd { bits: 8 },
+                CodecKind::TopK { ratio: 0.1 },
+                CodecKind::Dgc { ratio: 0.1 },
+                CodecKind::EfSignSgd,
+                CodecKind::SignSgd,
+                CodecKind::OneBit,
+            ] {
+                let sizes2 = sizes.clone();
+                let results = run_comm_group(2, move |c| {
+                    let mut ex =
+                        GradExchange::new(kind, Partition::naive_even(3, 2), sizes2.clone())
+                            .with_mode(mode);
+                    let mut rng = Xoshiro256::seed_from_u64(100 + c.rank() as u64);
+                    let mut grads = make_grads(c.rank(), &sizes2);
+                    ex.exchange(c, &mut grads, &mut rng);
+                    grads
+                });
+                assert_eq!(
+                    results[0],
+                    results[1],
+                    "{} ({}): workers disagree after exchange",
+                    kind.name(),
+                    mode.name()
                 );
-                let mut rng = Xoshiro256::seed_from_u64(100 + c.rank() as u64);
-                let mut grads = make_grads(c.rank(), &sizes2);
-                ex.exchange(c, &mut grads, &mut rng);
-                grads
-            });
-            assert_eq!(
-                results[0], results[1],
-                "{}: workers disagree after exchange",
-                kind.name()
-            );
+            }
         }
     }
 
@@ -231,11 +170,8 @@ mod tests {
     fn stats_account_bytes() {
         let sizes = vec![100usize];
         let results = run_comm_group(2, move |c| {
-            let mut ex = GradExchange::new(
-                CodecKind::Fp32,
-                Partition::full_merge(1),
-                sizes.clone(),
-            );
+            let mut ex =
+                GradExchange::new(CodecKind::Fp32, Partition::full_merge(1), sizes.clone());
             let mut rng = Xoshiro256::seed_from_u64(0);
             let mut grads = vec![vec![1.0f32; 100]];
             ex.exchange(c, &mut grads, &mut rng)
@@ -245,6 +181,8 @@ mod tests {
             assert!(s.bytes_sent >= 400);
             assert_eq!(s.groups, 1);
             assert!(s.encode_secs >= 0.0 && s.decode_secs >= 0.0);
+            // Serial mode exposes every comm second.
+            assert_eq!(s.comm_exposed_secs, s.comm_secs);
         }
     }
 
@@ -255,11 +193,8 @@ mod tests {
         // the 1-step mean.
         let sizes = vec![256usize];
         let results = run_comm_group(2, move |c| {
-            let mut ex = GradExchange::new(
-                CodecKind::EfSignSgd,
-                Partition::full_merge(1),
-                sizes.clone(),
-            );
+            let mut ex =
+                GradExchange::new(CodecKind::EfSignSgd, Partition::full_merge(1), sizes.clone());
             let mut rng = Xoshiro256::seed_from_u64(5 + c.rank() as u64);
             let mut base = vec![0f32; 256];
             Xoshiro256::seed_from_u64(99).fill_normal_f32(&mut base, 1.0);

@@ -10,6 +10,6 @@ mod exchange;
 mod optimizer;
 mod trainer;
 
-pub use exchange::{ExchangeStats, GradExchange};
+pub use exchange::{ExchangeStats, GradExchange, PipelineMode};
 pub use optimizer::SgdMomentum;
 pub use trainer::{init_params as trainer_init_params, train, RunResult, StepRecord};

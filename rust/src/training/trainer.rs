@@ -14,7 +14,7 @@
 use super::exchange::{ExchangeStats, GradExchange};
 use super::optimizer::SgdMomentum;
 use crate::collectives::{run_comm_group, Comm};
-use crate::compression::Collective;
+use crate::compression::{Codec as _, Collective};
 use crate::config::{ScheduleSpec, TrainConfig};
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::runtime::{StepMeta, TrainStep};
@@ -75,6 +75,14 @@ impl RunResult {
             ("mean_step_secs", Value::from(self.mean_step_secs)),
             ("mean_encode_secs", Value::from(self.mean_exchange.encode_secs)),
             ("mean_comm_secs", Value::from(self.mean_exchange.comm_secs)),
+            (
+                "mean_comm_exposed_secs",
+                Value::from(self.mean_exchange.comm_exposed_secs),
+            ),
+            (
+                "comm_overlap_frac",
+                Value::from(self.mean_exchange.overlap_frac()),
+            ),
             ("mean_decode_secs", Value::from(self.mean_exchange.decode_secs)),
             ("search_evals", Value::from(self.search_evals)),
             ("total_bytes_sent", Value::from(self.total_bytes_sent)),
@@ -313,7 +321,8 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 cfg.codec,
                 partition.clone(),
                 meta.sizes_backprop_order(),
-            );
+            )
+            .with_mode(cfg.pipeline);
 
             // --- training loop ---------------------------------------------
             let t0 = Stopwatch::start();
@@ -329,11 +338,7 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 // Reorder to backprop order for the exchange, then back.
                 let mut grads_bp: Vec<Vec<f32>> = grads_fwd.into_iter().rev().collect();
                 let stats = exchange.exchange(comm, &mut grads_bp, &mut rng);
-                sum_exchange.encode_secs += stats.encode_secs;
-                sum_exchange.comm_secs += stats.comm_secs;
-                sum_exchange.decode_secs += stats.decode_secs;
-                sum_exchange.bytes_sent += stats.bytes_sent;
-                sum_exchange.groups = stats.groups;
+                sum_exchange.accumulate(&stats);
                 let grads_fwd: Vec<Vec<f32>> = grads_bp.into_iter().rev().collect();
 
                 opt.step(&mut params, &grads_fwd);
@@ -382,13 +387,7 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 final_train_loss: last_loss,
                 eval_loss,
                 mean_step_secs: sum_step / steps,
-                mean_exchange: ExchangeStats {
-                    encode_secs: sum_exchange.encode_secs / steps,
-                    comm_secs: sum_exchange.comm_secs / steps,
-                    decode_secs: sum_exchange.decode_secs / steps,
-                    bytes_sent: (sum_exchange.bytes_sent as f64 / steps) as u64,
-                    groups: sum_exchange.groups,
-                },
+                mean_exchange: sum_exchange.scaled(steps),
                 search_evals,
                 total_bytes_sent: sum_exchange.bytes_sent,
                 steps: cfg.steps,
