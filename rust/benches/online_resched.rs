@@ -1,0 +1,194 @@
+//! Online rescheduling under network drift: steady-state iteration time of
+//! the **online** scheduler driver vs the **warmup-only** baseline vs a
+//! re-searching **oracle**.
+//!
+//! Scenario (numerically sized so the outcome is deterministic): a
+//! ~135M-parameter transformer on 8 workers with EFSignSGD, whose fabric
+//! collapses from NVLink-class to PCIe-class bandwidth mid-run
+//! (`NetScenario::fabric_step`). Post-drift, the optimal partition moves;
+//! the warmup-only schedule is ~20% off the oracle, while the online driver
+//! must re-converge to within the 5% acceptance margin.
+//!
+//! All three per-step curves land in `results/BENCH_online.json` (plus
+//! `results/online_resched.csv`), so CI records the adaptation trajectory,
+//! not just the endpoint.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::compression::CodecKind;
+use mergecomp::metrics::write_json;
+use mergecomp::netsim::{Fabric, NetScenario};
+use mergecomp::profiles::transformer::transformer_100m;
+use mergecomp::scheduler::{DriverConfig, SearchParams};
+use mergecomp::simulator::run_online_loop;
+use mergecomp::util::json::Value;
+
+const WORLD: usize = 8;
+const STEPS: usize = 240;
+const DRIFT_AT: usize = 60;
+const INTERVAL: usize = 20;
+const STEADY_WINDOW: usize = 40;
+
+fn driver_cfg() -> DriverConfig {
+    DriverConfig {
+        interval: INTERVAL,
+        ewma: 0.25,
+        hysteresis: 0.05,
+        search: SearchParams { y_max: 3, alpha: 0.02 },
+        min_samples: 4,
+    }
+}
+
+fn main() {
+    let profile = transformer_100m();
+    let kind = CodecKind::EfSignSgd;
+
+    harness::section(&format!(
+        "Online rescheduler under drift — {} ({} tensors, {} params), {}, {} workers",
+        profile.name,
+        profile.num_tensors(),
+        profile.total_params(),
+        kind.name(),
+        WORLD
+    ));
+
+    // --- headline: NVLink -> PCIe bandwidth step ---------------------------
+    let scenario = NetScenario::fabric_step(Fabric::nvlink(), Fabric::pcie(), DRIFT_AT);
+    let report = run_online_loop(&profile, kind, &scenario, WORLD, driver_cfg(), STEPS);
+
+    let mut csv = harness::csv(
+        "online_resched",
+        &["step", "online_secs", "warmup_secs", "oracle_secs", "groups", "epoch"],
+    );
+    for p in &report.points {
+        csv.rowd(&[
+            &p.step,
+            &p.online_secs,
+            &p.warmup_secs,
+            &p.oracle_secs,
+            &p.online_groups,
+            &p.epoch,
+        ])
+        .unwrap();
+    }
+
+    let (online, warmup, oracle) = report.steady_state(STEADY_WINDOW);
+    let online_gap = online / oracle - 1.0;
+    let warmup_gap = warmup / oracle - 1.0;
+    println!(
+        "warmup partition  {:?}\noracle partition  {:?}\nonline partition  {:?}",
+        report.warmup_partition.bounds(),
+        report.oracle_final.bounds(),
+        report.online_final.bounds()
+    );
+    println!(
+        "steady state (last {STEADY_WINDOW} steps): online {:.3} ms  warmup-only {:.3} ms  \
+         oracle {:.3} ms",
+        online * 1e3,
+        warmup * 1e3,
+        oracle * 1e3
+    );
+    println!(
+        "gaps vs oracle: online {:+.2}%  warmup-only {:+.2}%  \
+         ({} reschedules, converged at {:?}, {} search evals)",
+        online_gap * 100.0,
+        warmup_gap * 100.0,
+        report.reschedules,
+        report.converged_at,
+        report.search_evals
+    );
+
+    // --- acceptance --------------------------------------------------------
+    assert!(
+        report.reschedules >= 1,
+        "the driver never repartitioned under a drifting fabric"
+    );
+    assert!(
+        online <= oracle * 1.05,
+        "online steady state {online} not within 5% of the post-drift oracle {oracle}"
+    );
+    assert!(
+        warmup > oracle * 1.05,
+        "scenario lost its teeth: warmup-only baseline {warmup} is within 5% of the \
+         oracle {oracle}, so the comparison shows nothing"
+    );
+    assert!(
+        warmup >= online,
+        "warmup-only {warmup} beat the online driver {online}"
+    );
+    let deadline = DRIFT_AT + 3 * INTERVAL;
+    match report.converged_at {
+        Some(at) => assert!(at <= deadline, "converged at {at}, deadline {deadline}"),
+        None => panic!("online schedule never converged to the oracle"),
+    }
+
+    // --- secondary record: congestion bursts (hysteresis under noise) ------
+    let bursts = NetScenario::Bursts {
+        base: Fabric::nvlink(),
+        period: 10,
+        burst_len: 2,
+        beta_factor: 0.5,
+    };
+    let burst_report = run_online_loop(&profile, kind, &bursts, WORLD, driver_cfg(), 120);
+    println!(
+        "bursty control: {} reschedules over 120 steps (hysteresis holds: {})",
+        burst_report.reschedules,
+        burst_report.reschedules <= 2
+    );
+    assert!(
+        burst_report.reschedules <= 2,
+        "hysteresis failed: {} switches under noise bursts",
+        burst_report.reschedules
+    );
+
+    let curve: Vec<Value> = report
+        .points
+        .iter()
+        .map(|p| {
+            Value::from_pairs(vec![
+                ("step", Value::from(p.step)),
+                ("online_secs", Value::from(p.online_secs)),
+                ("warmup_secs", Value::from(p.warmup_secs)),
+                ("oracle_secs", Value::from(p.oracle_secs)),
+                ("groups", Value::from(p.online_groups)),
+                ("epoch", Value::from(p.epoch)),
+            ])
+        })
+        .collect();
+
+    let summary = Value::from_pairs(vec![
+        ("bench", Value::from("online_resched")),
+        ("profile", Value::from(profile.name.clone())),
+        ("codec", Value::from(kind.name())),
+        ("world", Value::from(WORLD)),
+        ("steps", Value::from(STEPS)),
+        ("drift_at", Value::from(DRIFT_AT)),
+        ("resched_interval", Value::from(INTERVAL)),
+        ("hysteresis_eps", Value::from(driver_cfg().hysteresis)),
+        ("ewma", Value::from(driver_cfg().ewma)),
+        ("warmup_bounds", report.warmup_partition.bounds_to_json()),
+        ("oracle_bounds", report.oracle_final.bounds_to_json()),
+        ("online_bounds", report.online_final.bounds_to_json()),
+        ("steady_online_secs", Value::from(online)),
+        ("steady_warmup_secs", Value::from(warmup)),
+        ("steady_oracle_secs", Value::from(oracle)),
+        ("online_gap_frac", Value::from(online_gap)),
+        ("warmup_gap_frac", Value::from(warmup_gap)),
+        ("online_within_5pct", Value::from(online <= oracle * 1.05)),
+        ("warmup_within_5pct", Value::from(warmup <= oracle * 1.05)),
+        ("reschedules", Value::from(report.reschedules)),
+        ("search_evals", Value::from(report.search_evals)),
+        (
+            "converged_at_step",
+            report.converged_at.map(Value::from).unwrap_or(Value::Null),
+        ),
+        ("burst_reschedules", Value::from(burst_report.reschedules)),
+        ("curve", Value::Arr(curve)),
+    ]);
+    write_json("results/BENCH_online.json", &summary)
+        .unwrap_or_else(|e| panic!("writing BENCH_online.json: {e}"));
+
+    harness::done("online_resched");
+    println!("summary JSON: results/BENCH_online.json");
+}

@@ -158,6 +158,23 @@ impl Codec for Dgc {
         }
         h
     }
+
+    fn state_planes(&self) -> Vec<&[f32]> {
+        let mut planes: Vec<&[f32]> = vec![&self.velocity];
+        if let Some(u) = &self.momentum_buf {
+            planes.push(u);
+        }
+        planes
+    }
+
+    fn load_state_planes(&mut self, planes: &[&[f32]]) {
+        let want = 1 + usize::from(self.momentum_buf.is_some());
+        assert_eq!(planes.len(), want, "dgc state-plane arity");
+        self.velocity.copy_from_slice(planes[0]);
+        if let Some(u) = &mut self.momentum_buf {
+            u.copy_from_slice(planes[1]);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -263,6 +263,28 @@ pub trait Codec: Send {
         STATE_DIGEST_SEED
     }
 
+    /// The codec's per-element state planes (EF residual, momentum, DGC
+    /// velocity, …) in a fixed order, each exactly `n()` long. Stateless
+    /// codecs expose no planes. Because merged tensors are concatenated in
+    /// backprop order, the engine can re-chunk these planes bit-exactly
+    /// when the partition changes ([`repartition`]).
+    ///
+    /// [`repartition`]: crate::coordinator::ExchangeEngine::repartition
+    fn state_planes(&self) -> Vec<&[f32]> {
+        Vec::new()
+    }
+
+    /// Overwrite the state planes (same order and lengths as
+    /// [`Codec::state_planes`]). Panics on arity or length mismatch.
+    fn load_state_planes(&mut self, planes: &[&[f32]]) {
+        assert!(
+            planes.is_empty(),
+            "{}: stateless codec given {} state planes",
+            self.kind().name(),
+            planes.len()
+        );
+    }
+
     /// Elementwise `a += b` in wire format (AllReduce codecs only).
     fn reduce_wire(&self, _a: &mut [u8], _b: &[u8]) {
         panic!("{}: reduce_wire on an allgather codec", self.kind().name());

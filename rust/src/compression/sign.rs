@@ -156,6 +156,15 @@ impl Codec for EfSignSgd {
     fn state_digest(&self) -> u64 {
         digest_f32s(STATE_DIGEST_SEED, self.ef.as_slice())
     }
+
+    fn state_planes(&self) -> Vec<&[f32]> {
+        vec![self.ef.as_slice()]
+    }
+
+    fn load_state_planes(&mut self, planes: &[&[f32]]) {
+        assert_eq!(planes.len(), 1, "efsignsgd has one state plane");
+        self.ef.as_mut_slice().copy_from_slice(planes[0]);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -274,6 +283,15 @@ impl Codec for OneBit {
     fn state_digest(&self) -> u64 {
         digest_f32s(STATE_DIGEST_SEED, self.ef.as_slice())
     }
+
+    fn state_planes(&self) -> Vec<&[f32]> {
+        vec![self.ef.as_slice()]
+    }
+
+    fn load_state_planes(&mut self, planes: &[&[f32]]) {
+        assert_eq!(planes.len(), 1, "onebit has one state plane");
+        self.ef.as_mut_slice().copy_from_slice(planes[0]);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -334,6 +352,15 @@ impl Codec for Signum {
 
     fn state_digest(&self) -> u64 {
         digest_f32s(STATE_DIGEST_SEED, &self.momentum)
+    }
+
+    fn state_planes(&self) -> Vec<&[f32]> {
+        vec![&self.momentum]
+    }
+
+    fn load_state_planes(&mut self, planes: &[&[f32]]) {
+        assert_eq!(planes.len(), 1, "signum has one state plane");
+        self.momentum.copy_from_slice(planes[0]);
     }
 }
 

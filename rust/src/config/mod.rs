@@ -5,7 +5,7 @@
 mod schedule;
 mod train;
 
-pub use schedule::ScheduleSpec;
+pub use schedule::{ScheduleSpec, SchedulingMode};
 pub use train::TrainConfig;
 
 use crate::util::json::Value;

@@ -1,7 +1,44 @@
 //! Compression-schedule specification: which partitioning strategy the
-//! coordinator applies (paper §5 Methods compares all four).
+//! coordinator applies (paper §5 Methods compares all four), and *when* the
+//! trainer resolves it ([`SchedulingMode`]).
 
 use crate::scheduler::{Partition, SearchParams};
+
+/// When the partition schedule is resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulingMode {
+    /// Measure continuously and re-run the search every `resched_interval`
+    /// steps via the scheduler driver (`scheduler::driver`). The default:
+    /// the schedule tracks the deployed system instead of a one-shot
+    /// calibration.
+    #[default]
+    Online,
+    /// Legacy one-shot path: fit costs from warmup measurements, search
+    /// once, never revisit.
+    Warmup,
+    /// Never measure or search: the spec must be a static strategy
+    /// (layerwise / fullmerge / naive), resolved up front.
+    Fixed,
+}
+
+impl SchedulingMode {
+    pub fn from_name(name: &str) -> anyhow::Result<SchedulingMode> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "online" => SchedulingMode::Online,
+            "warmup" | "warm-up" | "oneshot" => SchedulingMode::Warmup,
+            "fixed" | "static" => SchedulingMode::Fixed,
+            other => anyhow::bail!("unknown scheduling mode '{other}' (online|warmup|fixed)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulingMode::Online => "online",
+            SchedulingMode::Warmup => "warmup",
+            SchedulingMode::Fixed => "fixed",
+        }
+    }
+}
 
 /// How to partition the model's gradient tensors into compression groups.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -137,5 +174,19 @@ mod tests {
             let spec = ScheduleSpec::parse(s).unwrap();
             assert_eq!(ScheduleSpec::parse(&spec.name()).unwrap(), spec);
         }
+    }
+
+    #[test]
+    fn scheduling_mode_roundtrip() {
+        for m in [
+            SchedulingMode::Online,
+            SchedulingMode::Warmup,
+            SchedulingMode::Fixed,
+        ] {
+            assert_eq!(SchedulingMode::from_name(m.name()).unwrap(), m);
+        }
+        assert_eq!(SchedulingMode::from_name("static").unwrap(), SchedulingMode::Fixed);
+        assert!(SchedulingMode::from_name("sometimes").is_err());
+        assert_eq!(SchedulingMode::default(), SchedulingMode::Online);
     }
 }

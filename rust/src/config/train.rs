@@ -1,6 +1,6 @@
 //! Training-run configuration for the real execution plane.
 
-use super::ScheduleSpec;
+use super::{ScheduleSpec, SchedulingMode};
 use crate::compression::CodecKind;
 use crate::coordinator::PipelineMode;
 use crate::util::cli::Args;
@@ -17,6 +17,18 @@ pub struct TrainConfig {
     pub momentum: f32,
     pub codec: CodecKind,
     pub schedule: ScheduleSpec,
+    /// When the schedule is resolved: continuously (`Online`, via the
+    /// scheduler driver), once from warmup (`Warmup`), or never measured
+    /// (`Fixed`, static specs only). `--schedule online|warmup|fixed` is
+    /// accepted as a shorthand for `--sched-mode`.
+    pub sched_mode: SchedulingMode,
+    /// Steps between online reschedule attempts.
+    pub resched_interval: usize,
+    /// Weight of each new timing sample in the rolling cost fits, (0, 1].
+    pub resched_ewma: f64,
+    /// Hysteresis ε: repartition only when the predicted relative gain
+    /// exceeds this fraction.
+    pub resched_eps: f64,
     /// Exchange-engine scheduling: `Pipelined` overlaps each group's
     /// collective with neighbouring groups' encode/decode (bit-identical
     /// results; see `coordinator/`).
@@ -44,6 +56,10 @@ impl Default for TrainConfig {
             momentum: 0.9,
             codec: CodecKind::Fp32,
             schedule: ScheduleSpec::MergeComp { y_max: 2, alpha: 0.02 },
+            sched_mode: SchedulingMode::Online,
+            resched_interval: 25,
+            resched_ewma: 0.1,
+            resched_eps: 0.05,
             pipeline: PipelineMode::Pipelined,
             seed: 42,
             batch_per_worker: 8,
@@ -67,6 +83,10 @@ impl TrainConfig {
             momentum: v.f64_or("momentum", d.momentum as f64) as f32,
             codec: CodecKind::from_name(v.str_or("codec", "fp32"))?,
             schedule: ScheduleSpec::parse(v.str_or("schedule", "mergecomp"))?,
+            sched_mode: SchedulingMode::from_name(v.str_or("sched_mode", d.sched_mode.name()))?,
+            resched_interval: v.usize_or("resched_interval", d.resched_interval),
+            resched_ewma: v.f64_or("resched_ewma", d.resched_ewma),
+            resched_eps: v.f64_or("resched_eps", d.resched_eps),
             pipeline: PipelineMode::from_name(v.str_or("pipeline", d.pipeline.name()))?,
             seed: v.f64_or("seed", d.seed as f64) as u64,
             batch_per_worker: v.usize_or("batch_per_worker", d.batch_per_worker),
@@ -88,8 +108,20 @@ impl TrainConfig {
             self.codec = CodecKind::from_name(c)?;
         }
         if let Some(s) = args.str("schedule") {
-            self.schedule = ScheduleSpec::parse(s)?;
+            // `--schedule online|warmup|fixed` selects the scheduling mode
+            // (the ISSUE-facing shorthand); anything else is a partition
+            // strategy spec.
+            match SchedulingMode::from_name(s) {
+                Ok(mode) => self.sched_mode = mode,
+                Err(_) => self.schedule = ScheduleSpec::parse(s)?,
+            }
         }
+        if let Some(m) = args.str("sched-mode") {
+            self.sched_mode = SchedulingMode::from_name(m)?;
+        }
+        self.resched_interval = args.usize_or("resched-interval", self.resched_interval);
+        self.resched_ewma = args.f64_or("resched-ewma", self.resched_ewma);
+        self.resched_eps = args.f64_or("resched-eps", self.resched_eps);
         if let Some(p) = args.str("pipeline") {
             self.pipeline = PipelineMode::from_name(p)?;
         }
@@ -113,6 +145,10 @@ impl TrainConfig {
             ("momentum", Value::from(self.momentum as f64)),
             ("codec", Value::from(self.codec.name())),
             ("schedule", Value::from(self.schedule.name())),
+            ("sched_mode", Value::from(self.sched_mode.name())),
+            ("resched_interval", Value::from(self.resched_interval)),
+            ("resched_ewma", Value::from(self.resched_ewma)),
+            ("resched_eps", Value::from(self.resched_eps)),
             ("pipeline", Value::from(self.pipeline.name())),
             ("seed", Value::from(self.seed)),
             ("batch_per_worker", Value::from(self.batch_per_worker)),
@@ -181,5 +217,63 @@ mod tests {
     fn bad_codec_rejected() {
         let v = Value::parse(r#"{"codec": "zip"}"#).unwrap();
         assert!(TrainConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn online_knobs_roundtrip_and_default() {
+        let d = TrainConfig::default();
+        assert_eq!(d.sched_mode, SchedulingMode::Online);
+        let j = d.to_json();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.sched_mode, d.sched_mode);
+        assert_eq!(c.resched_interval, d.resched_interval);
+        assert_eq!(c.resched_ewma, d.resched_ewma);
+        assert_eq!(c.resched_eps, d.resched_eps);
+
+        let v = Value::parse(
+            r#"{"sched_mode": "warmup", "resched_interval": 7, "resched_eps": 0.2}"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.sched_mode, SchedulingMode::Warmup);
+        assert_eq!(c.resched_interval, 7);
+        assert_eq!(c.resched_eps, 0.2);
+    }
+
+    #[test]
+    fn schedule_flag_doubles_as_mode_shorthand() {
+        // `--schedule online` flips the mode, leaving the spec untouched.
+        let args = Args::parse(["x", "--schedule", "online"].iter().map(|s| s.to_string()));
+        let c = TrainConfig {
+            sched_mode: SchedulingMode::Fixed,
+            ..TrainConfig::default()
+        };
+        let c = c.apply_cli(&args).unwrap();
+        assert_eq!(c.sched_mode, SchedulingMode::Online);
+        assert_eq!(c.schedule, TrainConfig::default().schedule);
+
+        // A strategy spec still parses as before.
+        let args = Args::parse(["x", "--schedule", "naive:4"].iter().map(|s| s.to_string()));
+        let c = TrainConfig::default().apply_cli(&args).unwrap();
+        assert_eq!(c.schedule, ScheduleSpec::NaiveEven { y: 4 });
+
+        // Dedicated knobs.
+        let args = Args::parse(
+            [
+                "x",
+                "--sched-mode",
+                "fixed",
+                "--resched-interval",
+                "11",
+                "--resched-ewma",
+                "0.5",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let c = TrainConfig::default().apply_cli(&args).unwrap();
+        assert_eq!(c.sched_mode, SchedulingMode::Fixed);
+        assert_eq!(c.resched_interval, 11);
+        assert_eq!(c.resched_ewma, 0.5);
     }
 }

@@ -15,7 +15,7 @@
 //! steady-state hot path performs no heap allocation beyond what the
 //! transport itself does.
 
-use super::{ExchangeStats, PipelineMode};
+use super::{ExchangeStats, GroupSample, PipelineMode};
 use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome};
 use crate::compression::{Codec, CodecKind, Collective};
 use crate::scheduler::Partition;
@@ -37,6 +37,9 @@ pub struct ExchangeEngine {
     flats: [Vec<f32>; 2],
     /// Recycled wire buffers (encode targets / returned payloads).
     wire_pool: Vec<Vec<u8>>,
+    /// Per-group timings of the most recent exchange (one entry per group,
+    /// overwritten each step) — the online scheduler's measurement feed.
+    group_log: Vec<GroupSample>,
 }
 
 impl ExchangeEngine {
@@ -52,6 +55,7 @@ impl ExchangeEngine {
             group_elems,
             flats: [Vec::with_capacity(max_group), Vec::with_capacity(max_group)],
             wire_pool: Vec::new(),
+            group_log: Vec::new(),
         }
     }
 
@@ -71,6 +75,67 @@ impl ExchangeEngine {
             .fold(crate::compression::STATE_DIGEST_SEED, |h, c| {
                 h.wrapping_mul(PRIME) ^ c.state_digest()
             })
+    }
+
+    /// Per-group timings of the most recent [`ExchangeEngine::exchange`]
+    /// call, in group order — what the online scheduler's cost estimator
+    /// consumes. Empty before the first exchange.
+    pub fn group_samples(&self) -> &[GroupSample] {
+        &self.group_log
+    }
+
+    /// The codec state planes flattened to full-model length (backprop
+    /// order), one vector per plane. Partition-independent: re-chunking the
+    /// groups must leave this bit-identical (see [`ExchangeEngine::repartition`]).
+    pub fn flat_state(&self) -> Vec<Vec<f32>> {
+        let total: usize = self.sizes.iter().sum();
+        let n_planes = self
+            .codecs
+            .first()
+            .map(|c| c.state_planes().len())
+            .unwrap_or(0);
+        let mut planes = vec![Vec::with_capacity(total); n_planes];
+        for codec in &self.codecs {
+            for (flat, plane) in planes.iter_mut().zip(codec.state_planes()) {
+                flat.extend_from_slice(plane);
+            }
+        }
+        planes
+    }
+
+    /// Switch to a new partition over the same tensors, remapping all codec
+    /// state (EF residuals, momentum, DGC velocity) into the new grouping
+    /// **bit-exactly**: groups concatenate tensors in backprop order, so the
+    /// flattened state is partition-independent and re-chunking it loses
+    /// nothing (proven by `tests/online_resched.rs`). Scratch buffers are
+    /// retained; wire buffers re-grow on the next exchange.
+    pub fn repartition(&mut self, new: Partition) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            new.num_tensors() == self.sizes.len(),
+            "repartition: {} tensors, engine has {}",
+            new.num_tensors(),
+            self.sizes.len()
+        );
+        if new == self.partition {
+            return Ok(());
+        }
+
+        let flat_planes = self.flat_state();
+        let group_elems = new.group_elems(&self.sizes);
+        let mut codecs: Vec<Box<dyn Codec>> =
+            group_elems.iter().map(|&n| self.kind.build(n)).collect();
+        let mut off = 0;
+        for (codec, &n) in codecs.iter_mut().zip(&group_elems) {
+            let views: Vec<&[f32]> = flat_planes.iter().map(|p| &p[off..off + n]).collect();
+            codec.load_state_planes(&views);
+            off += n;
+        }
+
+        self.partition = new;
+        self.group_elems = group_elems;
+        self.codecs = codecs;
+        self.group_log.clear();
+        Ok(())
     }
 
     /// Aggregate gradients across the group. `grads` holds per-tensor
@@ -116,10 +181,15 @@ impl ExchangeEngine {
             group_elems,
             flats,
             wire_pool,
+            group_log,
         } = self;
+        group_log.clear();
+        group_log.resize(y, GroupSample::default());
 
         for j in 0..y {
             let n = group_elems[j];
+            group_log[j].group = j;
+            group_log[j].elems = n;
 
             // --- merge -----------------------------------------------------
             let flat = &mut flats[0];
@@ -133,7 +203,9 @@ impl ExchangeEngine {
             let mut wire = wire_pool.pop().unwrap_or_default();
             let sw = Stopwatch::start();
             codecs[j].encode_into(flat, rng, &mut wire);
-            stats.encode_secs += sw.elapsed().as_secs_f64();
+            let enc_secs = sw.elapsed().as_secs_f64();
+            stats.encode_secs += enc_secs;
+            group_log[j].encode_secs = enc_secs;
 
             // --- communicate (blocking, on this thread) --------------------
             let sw = Stopwatch::start();
@@ -144,10 +216,14 @@ impl ExchangeEngine {
                 }
                 Collective::AllGather => CommOutcome::Gathered(comm.allgather(wire)),
             };
-            stats.comm_secs += sw.elapsed().as_secs_f64();
+            let comm_secs = sw.elapsed().as_secs_f64();
+            stats.comm_secs += comm_secs;
+            group_log[j].comm_secs = comm_secs;
+            group_log[j].comm_exposed_secs = comm_secs;
 
             // --- decode + scatter: the SAME helper the pipelined path uses,
             // so the bit-identical guarantee is structural.
+            let dec_before = stats.decode_secs;
             finish_group(
                 j,
                 outcome,
@@ -162,6 +238,7 @@ impl ExchangeEngine {
                 rank,
                 &mut stats,
             );
+            group_log[j].decode_secs = stats.decode_secs - dec_before;
         }
 
         stats.comm_exposed_secs = stats.comm_secs;
@@ -197,12 +274,17 @@ impl ExchangeEngine {
             group_elems,
             flats,
             wire_pool,
+            group_log,
         } = self;
+        group_log.clear();
+        group_log.resize(y, GroupSample::default());
 
         let ((), _lane_busy) = lane_scope(comm, |lane| {
             let mut inflight: Option<(usize, CommHandle)> = None;
             for j in 0..y {
                 let n = group_elems[j];
+                group_log[j].group = j;
+                group_log[j].elems = n;
 
                 // --- merge + encode group j (overlaps group j−1's comm) ---
                 let flat = &mut flats[j % 2];
@@ -215,7 +297,9 @@ impl ExchangeEngine {
                 let mut wire = wire_pool.pop().unwrap_or_default();
                 let sw = Stopwatch::start();
                 codecs[j].encode_into(flat, rng, &mut wire);
-                stats.encode_secs += sw.elapsed().as_secs_f64();
+                let enc_secs = sw.elapsed().as_secs_f64();
+                stats.encode_secs += enc_secs;
+                group_log[j].encode_secs = enc_secs;
 
                 // --- hand group j to the comm lane ------------------------
                 let handle = match collective {
@@ -225,6 +309,7 @@ impl ExchangeEngine {
 
                 // --- drain group j−1 (its comm overlapped our encode) -----
                 if let Some((pj, ph)) = inflight.replace((j, handle)) {
+                    let before = (stats.comm_secs, stats.comm_exposed_secs, stats.decode_secs);
                     complete_group(
                         pj,
                         ph,
@@ -239,9 +324,13 @@ impl ExchangeEngine {
                         rank,
                         &mut stats,
                     );
+                    group_log[pj].comm_secs = stats.comm_secs - before.0;
+                    group_log[pj].comm_exposed_secs = stats.comm_exposed_secs - before.1;
+                    group_log[pj].decode_secs = stats.decode_secs - before.2;
                 }
             }
             if let Some((pj, ph)) = inflight.take() {
+                let before = (stats.comm_secs, stats.comm_exposed_secs, stats.decode_secs);
                 complete_group(
                     pj,
                     ph,
@@ -256,6 +345,9 @@ impl ExchangeEngine {
                     rank,
                     &mut stats,
                 );
+                group_log[pj].comm_secs = stats.comm_secs - before.0;
+                group_log[pj].comm_exposed_secs = stats.comm_exposed_secs - before.1;
+                group_log[pj].decode_secs = stats.decode_secs - before.2;
             }
         });
 
@@ -426,6 +518,81 @@ mod tests {
             assert_eq!(s.comm_exposed_secs, s.comm_secs);
             assert!((s.overlap_frac() - 0.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn group_samples_cover_every_group_and_sum_to_stats() {
+        for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            let results = run_comm_group(2, move |c| {
+                let mut eng = ExchangeEngine::new(
+                    CodecKind::EfSignSgd,
+                    Partition::naive_even(4, 3),
+                    vec![50, 20, 70, 10],
+                );
+                let mut rng = Xoshiro256::seed_from_u64(9);
+                let mut grads = make_grads(c.rank(), &[50, 20, 70, 10]);
+                let stats = eng.exchange(c, &mut grads, &mut rng, mode);
+                (eng.group_samples().to_vec(), stats)
+            });
+            for (samples, stats) in results {
+                assert_eq!(samples.len(), 3);
+                let mut elems = 0usize;
+                let (mut enc, mut com, mut dec) = (0.0, 0.0, 0.0);
+                for (j, s) in samples.iter().enumerate() {
+                    assert_eq!(s.group, j);
+                    assert!(s.elems > 0);
+                    elems += s.elems;
+                    enc += s.encode_secs;
+                    com += s.comm_secs;
+                    dec += s.decode_secs;
+                }
+                assert_eq!(elems, 150);
+                assert!((enc - stats.encode_secs).abs() < 1e-9);
+                assert!((com - stats.comm_secs).abs() < 1e-9);
+                assert!((dec - stats.decode_secs).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn repartition_preserves_flat_state_and_mean() {
+        let sizes = vec![40usize, 25, 70, 15];
+        let results = run_comm_group(2, move |c| {
+            let mut eng = ExchangeEngine::new(
+                CodecKind::EfSignSgd,
+                Partition::naive_even(4, 2),
+                sizes.clone(),
+            );
+            let mut rng = Xoshiro256::seed_from_u64(77 + c.rank() as u64);
+            let mut grads = make_grads(c.rank(), &sizes);
+            eng.exchange(c, &mut grads, &mut rng, PipelineMode::Pipelined);
+
+            let before = eng.flat_state();
+            eng.repartition(Partition::from_bounds(4, vec![0, 1, 3, 4])).unwrap();
+            let after = eng.flat_state();
+            assert_eq!(before.len(), after.len());
+            for (b, a) in before.iter().zip(&after) {
+                let same = b
+                    .iter()
+                    .zip(a)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "flat EF state changed across repartition");
+            }
+            assert_eq!(eng.partition().num_groups(), 3);
+
+            // The engine must still aggregate correctly after the switch.
+            let mut grads = make_grads(c.rank(), &sizes);
+            eng.exchange(c, &mut grads, &mut rng, PipelineMode::Serial);
+            grads
+        });
+        assert_eq!(results[0], results[1], "ranks diverged after repartition");
+    }
+
+    #[test]
+    fn repartition_rejects_wrong_tensor_count() {
+        let mut eng =
+            ExchangeEngine::new(CodecKind::Fp32, Partition::layer_wise(3), vec![4, 5, 6]);
+        assert!(eng.repartition(Partition::layer_wise(2)).is_err());
     }
 
     #[test]

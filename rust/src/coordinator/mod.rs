@@ -61,6 +61,25 @@ impl PipelineMode {
     }
 }
 
+/// One group's measured exchange timings from a single step — the raw
+/// observations the online [`CostEstimator`] fits its rolling Assumption-5
+/// models from. `comm_secs` is the collective's full occupancy (the α+β·size
+/// quantity the cost model predicts); `comm_exposed_secs` is only the part
+/// the compute lane actually waited for.
+///
+/// [`CostEstimator`]: crate::scheduler::estimator::CostEstimator
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GroupSample {
+    /// Group index within the step's partition.
+    pub group: usize,
+    /// Elements merged into the group.
+    pub elems: usize,
+    pub encode_secs: f64,
+    pub comm_secs: f64,
+    pub comm_exposed_secs: f64,
+    pub decode_secs: f64,
+}
+
 /// Per-step timing/size accounting (feeds the measured cost models, the
 /// EXPERIMENTS.md overhead tables, and the simulator-vs-trainer overlap
 /// validation).

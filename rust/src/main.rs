@@ -44,6 +44,8 @@ fn print_usage() {
          \n\
          SUBCOMMANDS\n\
            train     --workers N --codec C --schedule S [--steps K] [--config f.json]\n\
+                     [--sched-mode online|warmup|fixed] [--resched-interval K]\n\
+                     [--resched-ewma W] [--resched-eps E]\n\
            simulate  --model M --codec C --fabric F --workers a,b,c --schedule S\n\
            search    --model M --codec C --fabric F --workers N [--ymax Y] [--alpha A]\n\
            overhead  --codec C [--sizes 64,1024,...]\n\
@@ -51,7 +53,13 @@ fn print_usage() {
          \n\
          CODECS   fp32 fp16 qsgd topk randk dgc signsgd efsignsgd onebit signum terngrad\n\
          MODELS   resnet50-cifar10 resnet50-imagenet resnet101-imagenet maskrcnn transformer\n\
-         SCHEDULES layerwise | fullmerge | naive:<y> | mergecomp[:Y[,alpha=a]]"
+         SCHEDULES layerwise | fullmerge | naive:<y> | mergecomp[:Y[,alpha=a]]\n\
+         \n\
+         The schedule is resolved online by default: per-group timings feed a\n\
+         rolling cost model and Algorithm 2 re-runs every --resched-interval\n\
+         steps, repartitioning (EF state preserved bit-exactly) when the\n\
+         predicted gain beats --resched-eps. `--schedule online|warmup|fixed`\n\
+         is accepted as a shorthand for --sched-mode."
     );
 }
 
@@ -82,10 +90,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     );
     let result = mergecomp::training::train(&cfg)?;
     println!(
-        "partition: {} groups, bounds {:?} ({} search evals)",
+        "partition: {} groups, bounds {:?} ({} search evals, {} online reschedules, epoch {})",
         result.partition.num_groups(),
         result.partition.bounds(),
-        result.search_evals
+        result.search_evals,
+        result.reschedules,
+        result.schedule_epoch
     );
     for r in &result.records {
         println!(

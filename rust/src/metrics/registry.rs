@@ -119,6 +119,10 @@ impl MetricsRegistry {
             .unwrap_or(0)
     }
 
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
     pub fn histogram_mean(&self, name: &str) -> f64 {
         self.inner
             .lock()
@@ -210,6 +214,8 @@ mod tests {
         m.gauge("loss", 1.5);
         assert_eq!(m.counter_value("steps"), 3);
         assert_eq!(m.counter_value("missing"), 0);
+        assert_eq!(m.gauge_value("loss"), Some(1.5));
+        assert_eq!(m.gauge_value("missing"), None);
         let snap = m.snapshot();
         assert_eq!(snap.get("gauges").unwrap().f64_or("loss", 0.0), 1.5);
     }

@@ -1,0 +1,154 @@
+//! Time-varying network scenarios: the conditions the *online* scheduler
+//! exists for.
+//!
+//! The static [`Fabric`](super::Fabric) models a healthy steady-state link.
+//! Real clusters drift: a tenant saturates the PCIe switch, a flow gets
+//! rerouted, TCP incast collapses the effective bandwidth for seconds at a
+//! time. A [`NetScenario`] maps a step index to the fabric in effect at
+//! that step, which the simulator-plane validation and
+//! `benches/online_resched.rs` use to test whether the scheduler driver
+//! tracks the change and the warmup-only baseline does not.
+
+use super::Fabric;
+
+/// A deterministic step-indexed fabric trajectory.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetScenario {
+    /// No drift (control).
+    Static(Fabric),
+    /// Abrupt, persistent change at `at_step`: `from` before it, `to`
+    /// (complete with its own contention exponent) from it onwards — a
+    /// routing change, a new bandwidth hog, a failed link.
+    Step {
+        from: Fabric,
+        to: Fabric,
+        at_step: usize,
+    },
+    /// Periodic congestion: every `period` steps, a burst of `burst_len`
+    /// steps runs at degraded bandwidth (`beta_factor < 1`).
+    Bursts {
+        base: Fabric,
+        period: usize,
+        burst_len: usize,
+        beta_factor: f64,
+    },
+}
+
+impl NetScenario {
+    /// Convenience alias: a step from one named fabric to another.
+    pub fn fabric_step(from: Fabric, to: Fabric, at_step: usize) -> NetScenario {
+        NetScenario::Step { from, to, at_step }
+    }
+
+    /// The fabric in effect at `step`.
+    pub fn fabric_at(&self, step: usize) -> Fabric {
+        match *self {
+            NetScenario::Static(f) => f,
+            NetScenario::Step { from, to, at_step } => {
+                if step < at_step {
+                    from
+                } else {
+                    to
+                }
+            }
+            NetScenario::Bursts {
+                base,
+                period,
+                burst_len,
+                beta_factor,
+            } => {
+                let period = period.max(1);
+                if step % period < burst_len.min(period) {
+                    congested(base, beta_factor)
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// The first step at which the scenario differs from its step-0 fabric
+    /// (None for `Static`). The oracle/warmup comparison pivots here.
+    pub fn first_change(&self) -> Option<usize> {
+        match *self {
+            NetScenario::Static(_) => None,
+            NetScenario::Step { at_step, .. } => Some(at_step),
+            NetScenario::Bursts {
+                period, burst_len, ..
+            } => {
+                // Step 0 starts inside a burst; the first change is when it
+                // ends (or when the next burst begins, for burst_len 0).
+                if burst_len == 0 {
+                    None
+                } else {
+                    Some(burst_len.min(period.max(1)))
+                }
+            }
+        }
+    }
+}
+
+/// The base fabric at degraded bandwidth (same link, shared with a hog).
+fn congested(base: Fabric, beta_factor: f64) -> Fabric {
+    Fabric {
+        name: base.name,
+        alpha: base.alpha,
+        beta: base.beta * beta_factor,
+        contention: base.contention,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_never_changes() {
+        let s = NetScenario::Static(Fabric::pcie());
+        assert_eq!(s.fabric_at(0), s.fabric_at(1_000_000));
+        assert_eq!(s.first_change(), None);
+    }
+
+    #[test]
+    fn step_switches_once_and_persists() {
+        let s = NetScenario::Step {
+            from: Fabric::nvlink(),
+            to: Fabric::pcie(),
+            at_step: 100,
+        };
+        assert_eq!(s.fabric_at(99), Fabric::nvlink());
+        assert_eq!(s.fabric_at(100), Fabric::pcie());
+        assert_eq!(s.fabric_at(100), s.fabric_at(10_000), "drift persists");
+        assert_eq!(s.first_change(), Some(100));
+    }
+
+    #[test]
+    fn fabric_step_lands_exactly_on_target() {
+        // The full target fabric, including its contention exponent — a
+        // step to PCIe must model PCIe's multi-worker bandwidth collapse,
+        // not NVLink's point-to-point scaling at PCIe's 2-worker rate.
+        let s = NetScenario::fabric_step(Fabric::nvlink(), Fabric::pcie(), 5);
+        assert_eq!(s.fabric_at(4), Fabric::nvlink());
+        assert_eq!(s.fabric_at(5), Fabric::pcie());
+        assert!(s.fabric_at(5).beta_eff(8) < Fabric::pcie().beta, "contention applies");
+    }
+
+    #[test]
+    fn bursts_cycle() {
+        let s = NetScenario::Bursts {
+            base: Fabric::pcie(),
+            period: 10,
+            burst_len: 3,
+            beta_factor: 0.25,
+        };
+        for step in 0..30 {
+            let f = s.fabric_at(step);
+            if step % 10 < 3 {
+                assert!(f.beta < Fabric::pcie().beta, "step {step} should be congested");
+            } else {
+                assert_eq!(f, Fabric::pcie(), "step {step} should be clean");
+            }
+        }
+        assert_eq!(s.first_change(), Some(3));
+    }
+}

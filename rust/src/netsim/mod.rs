@@ -14,8 +14,10 @@
 //! `calibration_matches_paper_worked_example` below and EXPERIMENTS.md.
 
 pub mod cost;
+pub mod drift;
 
 pub use cost::{CollectiveCost, CostModel};
+pub use drift::NetScenario;
 
 /// A communication fabric: per-message latency + effective bandwidth +
 /// shared-bus contention.

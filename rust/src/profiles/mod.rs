@@ -76,6 +76,15 @@ impl ModelProfile {
     pub fn sizes_backprop_order(&self) -> Vec<usize> {
         self.tensors.iter().rev().map(|t| t.elems).collect()
     }
+
+    /// Per-tensor backward-FLOPs shares in backprop order (summing to ~1).
+    /// The single definition used by the trainer's live objective and the
+    /// simulator-plane validation objectives — they must split the measured
+    /// step time identically or the sim-vs-measured comparison drifts.
+    pub fn bwd_flop_shares(&self) -> Vec<f64> {
+        let total = self.total_flops().max(f64::MIN_POSITIVE);
+        self.tensors.iter().rev().map(|t| t.flops / total).collect()
+    }
 }
 
 /// Convenience: a conv tensor's parameter count.
@@ -151,6 +160,18 @@ mod tests {
                 p.iter_compute_s
             );
         }
+    }
+
+    #[test]
+    fn bwd_flop_shares_sum_to_one_in_backprop_order() {
+        let p = resnet50_cifar10();
+        let shares = p.bwd_flop_shares();
+        assert_eq!(shares.len(), p.num_tensors());
+        let sum: f64 = shares.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        // Backprop order: first share belongs to the LAST forward tensor.
+        let total = p.total_flops();
+        assert!((shares[0] - p.tensors.last().unwrap().flops / total).abs() < 1e-15);
     }
 
     #[test]

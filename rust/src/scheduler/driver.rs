@@ -1,0 +1,403 @@
+//! The online rescheduler: the measure → search → repartition loop.
+//!
+//! The warmup-only trainer resolved its partition exactly once and never
+//! revisited it, so any drift in network conditions or step time silently
+//! invalidated the schedule. The [`Driver`] closes the loop:
+//!
+//! 1. **measure** — every step, the exchange engine's per-group timings
+//!    ([`GroupSample`]) and the measured compute time feed the rolling
+//!    [`CostEstimator`];
+//! 2. **search** — every `interval` steps, rank 0 re-runs Algorithm 2
+//!    against an [`AnalyticObjective`] built from the *live* fits;
+//! 3. **repartition** — if the predicted gain beats the hysteresis
+//!    threshold ε, the new partition is adopted under a bumped **epoch**
+//!    and broadcast; every rank applies the identical switch via
+//!    `ExchangeEngine::repartition`, which remaps error-feedback state
+//!    bit-exactly.
+//!
+//! Hysteresis prevents thrash: tiny predicted gains (noise-level
+//! differences between neighbouring cuts) never trigger a switch, so under
+//! stationary conditions the schedule is stable, while a real bandwidth or
+//! latency shift produces a large predicted gain and a prompt switch.
+//!
+//! Consistency: partition switches must be applied on the same step on
+//! every rank or ranks would issue mismatched collectives. The decision is
+//! centralized (rank 0) and distributed through an **epoch-tagged
+//! broadcast** at fixed step boundaries (`due`); followers apply a switch
+//! iff the received epoch is ahead of theirs, and parse the bounds
+//! strictly — a malformed payload is an error, never a silently-dropped
+//! bound.
+//!
+//! [`AnalyticObjective`]: super::objective::AnalyticObjective
+
+use super::estimator::CostEstimator;
+use super::partition::Partition;
+use super::search::{mergecomp_search, SearchParams};
+use crate::collectives::Comm;
+use crate::coordinator::GroupSample;
+use crate::metrics::MetricsRegistry;
+use crate::util::json::Value;
+
+/// Online-rescheduling policy knobs (`config::TrainConfig` plumbs these
+/// from `--resched-interval`, `--resched-ewma`, `--resched-eps`).
+#[derive(Debug, Clone, Copy)]
+pub struct DriverConfig {
+    /// Steps between reschedule attempts.
+    pub interval: usize,
+    /// Weight of each new timing sample in the rolling fits, in (0, 1].
+    pub ewma: f64,
+    /// Hysteresis ε: switch only if the predicted relative gain over the
+    /// current partition exceeds this fraction.
+    pub hysteresis: f64,
+    /// Algorithm-2 parameters for each re-search.
+    pub search: SearchParams,
+    /// Don't search before this many group samples have been observed.
+    pub min_samples: u64,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        Self {
+            interval: 25,
+            ewma: 0.1,
+            hysteresis: 0.05,
+            search: SearchParams::default(),
+            min_samples: 8,
+        }
+    }
+}
+
+/// Outcome of one rank-0 reschedule attempt.
+#[derive(Debug, Clone)]
+pub enum Decision {
+    /// Keep the current partition (not enough data, search returned the
+    /// same partition, or the predicted gain was below ε).
+    Keep,
+    /// Adopt `partition`; the objective predicts `f_new` vs `f_current`.
+    Switch {
+        partition: Partition,
+        f_current: f64,
+        f_new: f64,
+    },
+}
+
+/// The online rescheduler for one training run. All ranks construct one
+/// (same config); only rank 0's estimator drives decisions, the others
+/// follow the epoch broadcast.
+pub struct Driver {
+    cfg: DriverConfig,
+    est: CostEstimator,
+    /// Per-tensor element counts, backprop order.
+    sizes: Vec<usize>,
+    /// Per-tensor backward-FLOPs shares, backprop order (sums to ~1).
+    bwd_shares: Vec<f64>,
+    fwd_frac: f64,
+    partition: Partition,
+    epoch: u64,
+    /// Number of adopted partition switches.
+    pub reschedules: usize,
+    /// Objective evaluations spent across all re-searches.
+    pub search_evals: usize,
+    metrics: MetricsRegistry,
+}
+
+impl Driver {
+    pub fn new(
+        cfg: DriverConfig,
+        est: CostEstimator,
+        sizes: Vec<usize>,
+        bwd_shares: Vec<f64>,
+        fwd_frac: f64,
+        initial: Partition,
+    ) -> Self {
+        assert_eq!(sizes.len(), bwd_shares.len());
+        assert_eq!(sizes.len(), initial.num_tensors());
+        Self {
+            cfg,
+            est,
+            sizes,
+            bwd_shares,
+            fwd_frac,
+            partition: initial,
+            epoch: 0,
+            reschedules: 0,
+            search_evals: 0,
+            metrics: MetricsRegistry::new(),
+        }
+    }
+
+    pub fn config(&self) -> &DriverConfig {
+        &self.cfg
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn estimator(&self) -> &CostEstimator {
+        &self.est
+    }
+
+    /// Reschedule counters / gains ("resched.*" namespace).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Feed one step's measurements (every rank calls this; cheap).
+    pub fn observe(&mut self, samples: &[GroupSample], compute_secs: f64) {
+        self.est.observe_step(samples, compute_secs);
+    }
+
+    /// Is `step` a reschedule boundary? Must be a pure function of the
+    /// config and the step so all ranks agree without communicating.
+    pub fn due(&self, step: usize) -> bool {
+        step > 0 && step % self.cfg.interval.max(1) == 0
+    }
+
+    /// Rank-0 decision: re-run Algorithm 2 against the live cost fits and
+    /// apply hysteresis. Does not communicate and does not mutate the
+    /// current schedule — pair with [`Driver::apply`] (local/simulated) or
+    /// [`Driver::sync`] (distributed).
+    pub fn decide(&mut self) -> Decision {
+        self.metrics.incr("resched.attempts", 1);
+        if self.est.group_samples_seen() < self.cfg.min_samples {
+            return Decision::Keep;
+        }
+        let obj = self
+            .est
+            .objective(self.sizes.clone(), &self.bwd_shares, self.fwd_frac);
+        let mut obj = match obj {
+            Some(o) => o,
+            None => return Decision::Keep,
+        };
+        use super::objective::Objective as _;
+        let f_current = obj.eval(&self.partition);
+        let out = mergecomp_search(&mut obj, self.sizes.len(), self.cfg.search);
+        self.search_evals += obj.evals();
+        let gain = (f_current - out.f_min) / f_current.max(f64::MIN_POSITIVE);
+        self.metrics.observe("resched.predicted_gain", gain);
+        if out.partition == self.partition || gain <= self.cfg.hysteresis {
+            return Decision::Keep;
+        }
+        Decision::Switch {
+            partition: out.partition,
+            f_current,
+            f_new: out.f_min,
+        }
+    }
+
+    /// Adopt a new partition locally, bumping the epoch. Used directly by
+    /// the single-process simulation loop; the trainer goes through
+    /// [`Driver::sync`] so every rank switches on the same step.
+    pub fn apply(&mut self, partition: Partition) {
+        assert_eq!(partition.num_tensors(), self.sizes.len());
+        self.partition = partition;
+        self.epoch += 1;
+        self.reschedules += 1;
+        self.metrics.incr("resched.switches", 1);
+        self.metrics.gauge("resched.epoch", self.epoch as f64);
+    }
+
+    /// Distribute one reschedule decision: rank 0 folds `decision` into its
+    /// schedule state and broadcasts `{epoch, bounds}`; followers adopt the
+    /// broadcast schedule iff its epoch is ahead of theirs (strictly parsed
+    /// — any malformed bound is an error). Every rank must call this at the
+    /// same step (`due`). Returns the new partition when this rank switched
+    /// (the caller then remaps its exchange engine).
+    pub fn sync(
+        &mut self,
+        comm: &mut Comm,
+        decision: Decision,
+    ) -> anyhow::Result<Option<Partition>> {
+        let n = self.sizes.len();
+        if comm.rank() == 0 {
+            let switched = match decision {
+                Decision::Switch { partition, .. } => {
+                    self.apply(partition);
+                    true
+                }
+                Decision::Keep => false,
+            };
+            let payload = Value::from_pairs(vec![
+                ("epoch", Value::from(self.epoch)),
+                ("bounds", self.partition.bounds_to_json()),
+            ]);
+            let mut bytes = payload.to_string_compact().into_bytes();
+            comm.broadcast(0, &mut bytes);
+            Ok(switched.then(|| self.partition.clone()))
+        } else {
+            let mut bytes = Vec::new();
+            comm.broadcast(0, &mut bytes);
+            let text = std::str::from_utf8(&bytes)
+                .map_err(|e| anyhow::anyhow!("schedule broadcast: invalid utf8: {e}"))?;
+            let v = Value::parse(text)
+                .map_err(|e| anyhow::anyhow!("schedule broadcast: {e}"))?;
+            let epoch = v
+                .get("epoch")
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("schedule broadcast: missing epoch"))?
+                as u64;
+            anyhow::ensure!(
+                epoch == self.epoch || epoch == self.epoch + 1,
+                "schedule broadcast: epoch {epoch} unreachable from local {}",
+                self.epoch
+            );
+            if epoch == self.epoch {
+                return Ok(None);
+            }
+            let bounds = v
+                .get("bounds")
+                .ok_or_else(|| anyhow::anyhow!("schedule broadcast: missing bounds"))?;
+            let partition = Partition::from_json_bounds(n, bounds)?;
+            self.apply(partition.clone());
+            Ok(Some(partition))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::run_comm_group;
+    use crate::coordinator::GroupSample;
+    use crate::scheduler::costmodel::FittedCost;
+
+    fn sample(elems: usize, enc: f64, comm: f64, dec: f64) -> GroupSample {
+        GroupSample {
+            group: 0,
+            elems,
+            encode_secs: enc,
+            comm_secs: comm,
+            comm_exposed_secs: comm,
+            decode_secs: dec,
+        }
+    }
+
+    fn driver_with(interval: usize, hysteresis: f64, n: usize) -> Driver {
+        let cfg = DriverConfig {
+            interval,
+            ewma: 0.25,
+            hysteresis,
+            search: SearchParams { y_max: 3, alpha: 0.0 },
+            min_samples: 4,
+        };
+        let est = CostEstimator::new(cfg.ewma, None, None, None);
+        Driver::new(
+            cfg,
+            est,
+            vec![10_000; n],
+            vec![1.0 / n as f64; n],
+            0.3,
+            Partition::full_merge(n),
+        )
+    }
+
+    /// Synthetic measured plane with comm ≈ compute (the partition-sensitive
+    /// sweet spot): under a full merge none of the collective is hidden, so
+    /// the search can win ~`bwd` seconds of overlap by splitting.
+    fn feed(d: &mut Driver, b: f64, g: f64, steps: usize) {
+        for _ in 0..steps {
+            // Two distinct sizes so the slope is identifiable.
+            let s1 = sample(4_000, 1e-5, b + g * 4_000.0, 1e-5);
+            let s2 = sample(36_000, 1e-5, b + g * 36_000.0, 1e-5);
+            d.observe(&[s1, s2], 4e-2);
+        }
+    }
+
+    #[test]
+    fn due_is_periodic_and_skips_step_zero() {
+        let d = driver_with(10, 0.05, 4);
+        assert!(!d.due(0));
+        assert!(d.due(10));
+        assert!(!d.due(11));
+        assert!(d.due(20));
+    }
+
+    #[test]
+    fn keeps_before_min_samples() {
+        let mut d = driver_with(10, 0.05, 4);
+        assert!(matches!(d.decide(), Decision::Keep));
+    }
+
+    #[test]
+    fn hysteresis_blocks_marginal_switches() {
+        // ε = ∞ effectively: even a real improvement must be kept.
+        let mut d = driver_with(10, 1e9, 8);
+        feed(&mut d, 1e-6, 1e-7, 50);
+        assert!(matches!(d.decide(), Decision::Keep));
+        assert_eq!(d.epoch(), 0);
+    }
+
+    #[test]
+    fn switches_when_gain_is_large_and_epoch_advances() {
+        let mut d = driver_with(10, 0.05, 8);
+        // Comm dominated by a steep slope: splitting overlaps comm under
+        // backward compute, so some multi-group partition beats full merge.
+        feed(&mut d, 1e-6, 5e-7, 60);
+        match d.decide() {
+            Decision::Switch { partition, f_current, f_new } => {
+                assert!(partition.num_groups() > 1);
+                assert!(f_new < f_current);
+                d.apply(partition);
+            }
+            Decision::Keep => panic!("expected a switch under comm-dominated costs"),
+        }
+        assert_eq!(d.epoch(), 1);
+        assert_eq!(d.reschedules, 1);
+        assert_eq!(d.metrics().counter_value("resched.switches"), 1);
+        // Stationary conditions after the switch: no thrash.
+        feed(&mut d, 1e-6, 5e-7, 60);
+        if let Decision::Switch { f_current, f_new, .. } = d.decide() {
+            panic!("thrash: re-switched {f_current} -> {f_new} with unchanged costs");
+        }
+    }
+
+    #[test]
+    fn sync_applies_same_epoch_and_partition_on_all_ranks() {
+        let results = run_comm_group(3, |c| {
+            let mut d = driver_with(10, 0.05, 8);
+            // Rank 0 decides a switch; followers pass Keep (ignored).
+            let decision = if c.rank() == 0 {
+                Decision::Switch {
+                    partition: Partition::naive_even(8, 3),
+                    f_current: 1.0,
+                    f_new: 0.5,
+                }
+            } else {
+                Decision::Keep
+            };
+            let switched = d.sync(c, decision).unwrap();
+            (d.epoch(), d.partition().bounds().to_vec(), switched.is_some())
+        });
+        for (epoch, bounds, switched) in &results {
+            assert_eq!(*epoch, 1);
+            assert_eq!(bounds, results[0].1.as_slice());
+            assert!(*switched);
+        }
+    }
+
+    #[test]
+    fn sync_keep_is_a_no_op_everywhere() {
+        let results = run_comm_group(2, |c| {
+            let mut d = driver_with(10, 0.05, 8);
+            let switched = d.sync(c, Decision::Keep).unwrap();
+            (d.epoch(), switched.is_none())
+        });
+        for (epoch, kept) in results {
+            assert_eq!(epoch, 0);
+            assert!(kept);
+        }
+    }
+
+    #[test]
+    fn estimator_priors_shape_the_first_fit() {
+        let prior = FittedCost { b: 5e-4, g: 2e-9, r2: 1.0 };
+        let est = CostEstimator::new(0.2, Some(prior), Some(prior), Some(prior));
+        assert_eq!(est.comm.fit().b, prior.b);
+        assert_eq!(est.comm.fit().g, prior.g);
+    }
+}

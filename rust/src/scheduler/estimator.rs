@@ -1,0 +1,335 @@
+//! Rolling cost estimation for the online scheduler.
+//!
+//! The warmup-only path fits the Assumption-5 models (`t(x) = B + γ·x`)
+//! once, from a handful of probe measurements, and never looks at the
+//! system again. This module replaces that with **exponentially weighted
+//! least squares**: every exchanged group contributes one `(elems, secs)`
+//! sample per cost kind (encode, decode, comm), old samples decay
+//! geometrically, and the fit therefore tracks whatever the fabric and the
+//! host are doing *right now* — the MG-WFBP observation that merge
+//! decisions must follow measured timings, not a one-shot calibration.
+//!
+//! Identifiability: a slope needs at least two well-separated sizes. A
+//! full-merge schedule only ever shows the estimator a single size, so each
+//! [`EwmaCost`] carries a prior (the warmup fit, or a default) and degrades
+//! gracefully: while the live x-spread is too small to identify γ, it
+//! returns the prior *rescaled* by the observed/predicted ratio — a pure
+//! bandwidth/latency drift at one size still moves the model in the right
+//! direction, which is what lets the search escape a stale full merge.
+//! Once the partition has ≥ 2 distinct group sizes, the full weighted fit
+//! takes over.
+
+use super::costmodel::FittedCost;
+use super::objective::AnalyticObjective;
+use crate::coordinator::GroupSample;
+
+/// Minimum coefficient of variation of the (weighted) sizes before the
+/// regression slope is trusted over the rescaled prior.
+const MIN_X_CV: f64 = 0.05;
+
+/// Exponentially weighted linear fit of `t(x) = b + g·x`.
+#[derive(Debug, Clone)]
+pub struct EwmaCost {
+    /// Weight of each new sample in (0, 1]; history is scaled by `1 - ewma`
+    /// per observation.
+    ewma: f64,
+    prior: FittedCost,
+    // Decayed moments of the weighted sample cloud.
+    w: f64,
+    sx: f64,
+    sy: f64,
+    sxx: f64,
+    sxy: f64,
+    syy: f64,
+    samples: u64,
+}
+
+impl EwmaCost {
+    pub fn new(ewma: f64, prior: FittedCost) -> Self {
+        assert!(ewma > 0.0 && ewma <= 1.0, "ewma weight must be in (0, 1]");
+        Self {
+            ewma,
+            prior,
+            w: 0.0,
+            sx: 0.0,
+            sy: 0.0,
+            sxx: 0.0,
+            sxy: 0.0,
+            syy: 0.0,
+            samples: 0,
+        }
+    }
+
+    /// Record one `(elems, seconds)` observation.
+    pub fn observe(&mut self, elems: usize, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        let x = elems as f64;
+        let keep = 1.0 - self.ewma;
+        self.w = self.w * keep + 1.0;
+        self.sx = self.sx * keep + x;
+        self.sy = self.sy * keep + secs;
+        self.sxx = self.sxx * keep + x * x;
+        self.sxy = self.sxy * keep + x * secs;
+        self.syy = self.syy * keep + secs * secs;
+        self.samples += 1;
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Current best model. Falls back to the rescaled prior while the live
+    /// sizes cannot identify a slope.
+    pub fn fit(&self) -> FittedCost {
+        if self.samples == 0 || self.w <= 0.0 {
+            return self.prior;
+        }
+        let mean_x = self.sx / self.w;
+        let var_x = (self.sxx / self.w - mean_x * mean_x).max(0.0);
+        let identifiable =
+            self.samples >= 2 && mean_x > 0.0 && var_x.sqrt() > MIN_X_CV * mean_x;
+        if !identifiable {
+            // Rescaled prior: mean observed / mean predicted at the sizes
+            // actually seen.
+            let predicted = self.prior.b * self.w + self.prior.g * self.sx;
+            let ratio = if predicted > 0.0 { self.sy / predicted } else { 1.0 };
+            let ratio = ratio.max(0.0);
+            return FittedCost {
+                b: self.prior.b * ratio,
+                g: self.prior.g * ratio,
+                r2: 0.0,
+            };
+        }
+        let denom = self.w * self.sxx - self.sx * self.sx;
+        let g = (self.w * self.sxy - self.sx * self.sy) / denom;
+        let b = (self.sy - g * self.sx) / self.w;
+        let var_y = (self.w * self.syy - self.sy * self.sy).max(0.0);
+        let cov = self.w * self.sxy - self.sx * self.sy;
+        let r2 = if var_y > 0.0 { (cov * cov) / (denom * var_y) } else { 1.0 };
+        FittedCost {
+            b: b.max(0.0),
+            g: g.max(0.0),
+            r2: r2.clamp(0.0, 1.0),
+        }
+    }
+}
+
+/// Scalar EWMA (for the measured compute-step time).
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    ewma: f64,
+    value: f64,
+    samples: u64,
+}
+
+impl Ewma {
+    pub fn new(ewma: f64) -> Self {
+        assert!(ewma > 0.0 && ewma <= 1.0);
+        Self {
+            ewma,
+            value: 0.0,
+            samples: 0,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        if self.samples == 0 {
+            self.value = v;
+        } else {
+            self.value += self.ewma * (v - self.value);
+        }
+        self.samples += 1;
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        (self.samples > 0).then_some(self.value)
+    }
+}
+
+/// Rolling per-codec cost models: encode path, decode path (full group,
+/// fan-in included), and the α+β·size collective cost — plus the EWMA'd
+/// compute-step time. One instance per worker; fed by
+/// [`GroupSample`]s from the exchange engine.
+#[derive(Debug, Clone)]
+pub struct CostEstimator {
+    pub enc: EwmaCost,
+    pub dec: EwmaCost,
+    pub comm: EwmaCost,
+    step_secs: Ewma,
+}
+
+/// Neutral priors when no warmup fit is available (loose V100-ish numbers;
+/// immediately rescaled by live observations).
+fn default_prior() -> FittedCost {
+    FittedCost {
+        b: 1e-4,
+        g: 1e-9,
+        r2: 0.0,
+    }
+}
+
+impl CostEstimator {
+    /// `ewma` is the weight of each new group sample (the config's
+    /// `resched_ewma`); priors default when `None`.
+    pub fn new(
+        ewma: f64,
+        enc_prior: Option<FittedCost>,
+        dec_prior: Option<FittedCost>,
+        comm_prior: Option<FittedCost>,
+    ) -> Self {
+        Self {
+            enc: EwmaCost::new(ewma, enc_prior.unwrap_or_else(default_prior)),
+            dec: EwmaCost::new(ewma, dec_prior.unwrap_or_else(default_prior)),
+            comm: EwmaCost::new(ewma, comm_prior.unwrap_or_else(default_prior)),
+            step_secs: Ewma::new(ewma),
+        }
+    }
+
+    /// Record one step's per-group timings plus the measured compute time.
+    pub fn observe_step(&mut self, samples: &[GroupSample], compute_secs: f64) {
+        for s in samples {
+            self.enc.observe(s.elems, s.encode_secs);
+            self.dec.observe(s.elems, s.decode_secs);
+            self.comm.observe(s.elems, s.comm_secs);
+        }
+        self.step_secs.observe(compute_secs);
+    }
+
+    /// EWMA'd compute (fwd+bwd) step seconds.
+    pub fn step_secs(&self) -> Option<f64> {
+        self.step_secs.value()
+    }
+
+    pub fn group_samples_seen(&self) -> u64 {
+        self.comm.samples()
+    }
+
+    /// Build the Eq.-7 analytic objective from the current fits. `bwd_shares`
+    /// are per-tensor backward-FLOPs fractions in backprop order (summing to
+    /// ~1); `fwd_frac` splits the measured step time. The measured decode
+    /// samples already include the allgather fan-in, so the objective's
+    /// `dec_fanin` is 1.
+    pub fn objective(
+        &self,
+        sizes: Vec<usize>,
+        bwd_shares: &[f64],
+        fwd_frac: f64,
+    ) -> Option<AnalyticObjective> {
+        let step = self.step_secs.value()?;
+        if self.group_samples_seen() == 0 {
+            return None;
+        }
+        assert_eq!(sizes.len(), bwd_shares.len());
+        let bwd = step * (1.0 - fwd_frac);
+        let bwd_dur: Vec<f64> = bwd_shares.iter().map(|s| bwd * s).collect();
+        Some(AnalyticObjective::new(
+            bwd_dur,
+            sizes,
+            step * fwd_frac,
+            self.enc.fit(),
+            self.dec.fit(),
+            self.comm.fit(),
+            1,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(elems: usize, enc: f64, comm: f64, dec: f64) -> GroupSample {
+        GroupSample {
+            group: 0,
+            elems,
+            encode_secs: enc,
+            comm_secs: comm,
+            comm_exposed_secs: comm,
+            decode_secs: dec,
+        }
+    }
+
+    #[test]
+    fn recovers_exact_linear_model() {
+        let (b, g) = (2e-4, 3e-9);
+        let mut e = EwmaCost::new(0.2, default_prior());
+        for _ in 0..50 {
+            for &n in &[1usize << 10, 1 << 14, 1 << 18, 1 << 20] {
+                e.observe(n, b + g * n as f64);
+            }
+        }
+        let f = e.fit();
+        assert!((f.b - b).abs() / b < 1e-6, "b = {}", f.b);
+        assert!((f.g - g).abs() / g < 1e-6, "g = {}", f.g);
+        assert!(f.r2 > 0.999);
+    }
+
+    #[test]
+    fn tracks_drift_away_from_initial_costs() {
+        let mut e = EwmaCost::new(0.2, default_prior());
+        let sizes = [1usize << 12, 1 << 16, 1 << 20];
+        // Regime A, then a 10x bandwidth (slope) drop.
+        for _ in 0..50 {
+            for &n in &sizes {
+                e.observe(n, 1e-4 + 1e-9 * n as f64);
+            }
+        }
+        for _ in 0..200 {
+            for &n in &sizes {
+                e.observe(n, 1e-4 + 1e-8 * n as f64);
+            }
+        }
+        let f = e.fit();
+        assert!((f.g - 1e-8).abs() / 1e-8 < 1e-3, "g = {} after drift", f.g);
+        assert!((f.b - 1e-4).abs() / 1e-4 < 1e-2, "b = {} after drift", f.b);
+    }
+
+    #[test]
+    fn single_size_falls_back_to_rescaled_prior() {
+        let prior = FittedCost { b: 1e-4, g: 1e-9, r2: 1.0 };
+        let mut e = EwmaCost::new(0.25, prior);
+        let n = 1usize << 20;
+        // Observed cost is 5x the prior's prediction at this single size:
+        // the model must scale up even though the slope is unidentifiable.
+        let t = 5.0 * prior.predict(n);
+        for _ in 0..100 {
+            e.observe(n, t);
+        }
+        let f = e.fit();
+        assert!((f.predict(n) - t).abs() / t < 1e-6, "predict {}", f.predict(n));
+        let ratio_b = f.b / prior.b;
+        let ratio_g = f.g / prior.g;
+        assert!((ratio_b - ratio_g).abs() < 1e-9, "prior shape preserved");
+        assert!((ratio_b - 5.0).abs() < 1e-6, "scaled by observed ratio");
+    }
+
+    #[test]
+    fn estimator_builds_objective_after_observations() {
+        let mut est = CostEstimator::new(0.2, None, None, None);
+        assert!(est.objective(vec![100, 200], &[0.5, 0.5], 0.3).is_none());
+        for _ in 0..10 {
+            est.observe_step(
+                &[sample(100, 1e-4, 2e-4, 5e-5), sample(200, 1.5e-4, 3e-4, 8e-5)],
+                1e-2,
+            );
+        }
+        let mut obj = est.objective(vec![100, 200], &[0.5, 0.5], 0.3).unwrap();
+        use crate::scheduler::objective::Objective as _;
+        let f = obj.eval(&crate::scheduler::Partition::full_merge(2));
+        assert!(f > 1e-2, "objective includes the measured compute time");
+        assert!(f.is_finite());
+    }
+
+    #[test]
+    fn rejects_bad_observations() {
+        let mut e = EwmaCost::new(0.5, default_prior());
+        e.observe(100, f64::NAN);
+        e.observe(100, -1.0);
+        assert_eq!(e.samples(), 0);
+    }
+}

@@ -1,19 +1,31 @@
-//! The MergeComp scheduler — the paper's contribution (§4).
+//! The MergeComp scheduler — the paper's contribution (§4), plus the online
+//! rescheduling loop that keeps it honest over time.
 //!
 //! - [`partition`]: contiguous model partitions (layer-wise, full-merge,
 //!   naive-even, and searched).
-//! - [`costmodel`]: online fitting of the paper's Assumption-5 linear
-//!   overhead models from measurements.
+//! - [`costmodel`]: one-shot fitting of the paper's Assumption-5 linear
+//!   overhead models from warmup measurements.
+//! - [`estimator`]: rolling, exponentially-weighted refits of the same
+//!   models from live per-group timings (the measure half of the online
+//!   loop).
 //! - [`objective`]: the Eq. (7) iteration-time objective F(X_y).
 //! - [`search`]: Algorithm 2 — the heuristic that finds a near-optimal
 //!   partition with binary search over the unimodal F(X_2) (Theorem 3),
 //!   extended to y > 2 one cut at a time.
+//! - [`driver`]: the measure → search → repartition loop: periodic
+//!   re-search against live fits, hysteresis against thrash, and the
+//!   epoch-tagged broadcast that applies switches consistently on every
+//!   rank.
 
 pub mod costmodel;
+pub mod driver;
+pub mod estimator;
 pub mod objective;
 pub mod partition;
 pub mod search;
 
 pub use costmodel::FittedCost;
+pub use driver::{Decision, Driver, DriverConfig};
+pub use estimator::CostEstimator;
 pub use partition::Partition;
 pub use search::{mergecomp_search, SearchOutcome, SearchParams};

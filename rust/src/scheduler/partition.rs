@@ -20,14 +20,58 @@ pub struct Partition {
 
 impl Partition {
     pub fn from_bounds(n: usize, bounds: Vec<usize>) -> Partition {
-        assert!(n >= 1, "empty models have no partitions");
-        assert!(bounds.len() >= 2, "need at least one group");
-        assert_eq!(bounds[0], 0);
-        assert_eq!(*bounds.last().unwrap(), n);
+        Partition::try_from_bounds(n, bounds).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Validating constructor for bounds from untrusted sources (schedule
+    /// broadcasts, config files): returns an error instead of panicking.
+    pub fn try_from_bounds(n: usize, bounds: Vec<usize>) -> anyhow::Result<Partition> {
+        anyhow::ensure!(n >= 1, "empty models have no partitions");
+        anyhow::ensure!(bounds.len() >= 2, "need at least one group");
+        anyhow::ensure!(bounds[0] == 0, "bounds must start at 0, got {}", bounds[0]);
+        let last = *bounds.last().unwrap();
+        anyhow::ensure!(last == n, "bounds must end at n = {n}, got {last}");
         for w in bounds.windows(2) {
-            assert!(w[0] < w[1], "groups must be non-empty and ordered");
+            anyhow::ensure!(
+                w[0] < w[1],
+                "groups must be non-empty and ordered ({} !< {})",
+                w[0],
+                w[1]
+            );
         }
-        Partition { bounds, n }
+        Ok(Partition { bounds, n })
+    }
+
+    /// Bounds as a JSON array (the wire format of the schedule broadcast).
+    pub fn bounds_to_json(&self) -> crate::util::json::Value {
+        crate::util::json::Value::Arr(
+            self.bounds
+                .iter()
+                .map(|&b| crate::util::json::Value::from(b))
+                .collect(),
+        )
+    }
+
+    /// Strict inverse of [`Partition::bounds_to_json`]: any missing,
+    /// non-array, or non-usize entry is an error — malformed bounds must
+    /// never be silently dropped (a dropped entry would merge two groups on
+    /// one rank only and corrupt training).
+    pub fn from_json_bounds(
+        n: usize,
+        v: &crate::util::json::Value,
+    ) -> anyhow::Result<Partition> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("partition bounds: not an array"))?;
+        let bounds = arr
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                b.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("partition bounds[{i}]: not a usize ({b:?})"))
+            })
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        Partition::try_from_bounds(n, bounds)
     }
 
     /// Cut points between groups (excluding 0 and n).
@@ -159,6 +203,35 @@ mod tests {
     #[should_panic(expected = "non-empty")]
     fn rejects_empty_groups() {
         Partition::from_bounds(4, vec![0, 2, 2, 4]);
+    }
+
+    #[test]
+    fn try_from_bounds_errors_instead_of_panicking() {
+        assert!(Partition::try_from_bounds(4, vec![0, 2, 4]).is_ok());
+        assert!(Partition::try_from_bounds(4, vec![0, 2, 2, 4]).is_err());
+        assert!(Partition::try_from_bounds(4, vec![1, 4]).is_err());
+        assert!(Partition::try_from_bounds(4, vec![0, 3]).is_err());
+        assert!(Partition::try_from_bounds(4, vec![0]).is_err());
+    }
+
+    #[test]
+    fn json_bounds_roundtrip_and_strictness() {
+        use crate::util::json::Value;
+        let p = Partition::from_bounds(6, vec![0, 2, 5, 6]);
+        let v = p.bounds_to_json();
+        let p2 = Partition::from_json_bounds(6, &v).unwrap();
+        assert_eq!(p, p2);
+
+        // A malformed entry must be an error, never silently dropped: with
+        // the old filter_map behavior [0, "x", 6] would collapse to [0, 6]
+        // and quietly merge two groups on one rank only.
+        let bad = Value::Arr(vec![Value::from(0usize), Value::from("x"), Value::from(6usize)]);
+        assert!(Partition::from_json_bounds(6, &bad).is_err());
+        let bad = Value::Arr(vec![Value::from(0usize), Value::from(2.5), Value::from(6usize)]);
+        assert!(Partition::from_json_bounds(6, &bad).is_err());
+        assert!(Partition::from_json_bounds(6, &Value::from("nope")).is_err());
+        // Wrong model size is an error too.
+        assert!(Partition::from_json_bounds(7, &v).is_err());
     }
 
     #[test]

@@ -18,4 +18,7 @@ pub mod validate;
 
 pub use overhead::{LinearCost, OverheadModel};
 pub use timeline::{scaling_factor, simulate, SimBreakdown, SimSetup};
-pub use validate::{compare_overlap, OverlapValidation};
+pub use validate::{
+    compare_overlap, linear_plane, plane_objective, run_online_loop, LinearPlane,
+    OnlineLoopReport, OnlineStepPoint, OverlapValidation,
+};

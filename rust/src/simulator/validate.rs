@@ -1,6 +1,7 @@
 //! Simulator-vs-trainer validation: compare the overlap the timeline
 //! simulator *predicts* with the overlap the pipelined exchange engine
-//! *measures*.
+//! *measures* — and validate the **online rescheduler** end to end against
+//! an oracle under time-varying network conditions.
 //!
 //! The simulator's two-resource model splits communication into
 //! `comm_total` and `comm_exposed` (the part not hidden under GPU-stream
@@ -9,9 +10,27 @@
 //! now checkable against reality instead of being a modelling assumption.
 //! `benches/pipeline_overlap.rs` emits both sides into
 //! `results/BENCH_pipeline.json`.
+//!
+//! The online half ([`run_online_loop`]): a [`NetScenario`] drives an
+//! exactly-affine synthetic measured plane ([`linear_plane`]); every step
+//! the scheduler [`Driver`] is fed the per-group timings that plane
+//! produces, and at each reschedule boundary it may re-search and switch.
+//! Because the generator is exactly linear, the rolling EWMA fit converges
+//! to the true post-drift coefficients, so a correct driver must reach the
+//! *same* partition an oracle search over the true costs finds — while the
+//! warmup-only baseline keeps the stale pre-drift partition. The per-step
+//! iteration-time curves for online / warmup-only / oracle feed
+//! `benches/online_resched.rs` (→ `results/BENCH_online.json`).
 
 use super::SimBreakdown;
-use crate::coordinator::ExchangeStats;
+use crate::compression::{CodecKind, Collective};
+use crate::coordinator::{ExchangeStats, GroupSample};
+use crate::netsim::{Fabric, NetScenario};
+use crate::profiles::ModelProfile;
+use crate::scheduler::costmodel::FittedCost;
+use crate::scheduler::objective::{AnalyticObjective, Objective as _};
+use crate::scheduler::{mergecomp_search, CostEstimator, Decision, Driver, DriverConfig, Partition};
+use crate::simulator::OverheadModel;
 
 /// One (simulated, measured) overlap comparison.
 #[derive(Debug, Clone)]
@@ -44,6 +63,259 @@ pub fn compare_overlap(sim: &SimBreakdown, measured: &ExchangeStats) -> OverlapV
         sim_comm_exposed: sim.comm_exposed,
         measured_comm_exposed: measured.comm_exposed_secs,
         gap: meas_frac - sim_frac,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Online-scheduler validation plane
+// ---------------------------------------------------------------------------
+
+/// Exactly-affine per-codec cost triple on one fabric: what a drift-free
+/// measurement of the system would fit. Decode covers the full group
+/// including the allgather fan-in, so objectives built from it use
+/// `dec_fanin = 1`.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearPlane {
+    pub enc: FittedCost,
+    pub dec: FittedCost,
+    pub comm: FittedCost,
+}
+
+/// Affine wire-size model `bytes(n) ≈ h + d·n` per codec (the exact
+/// `wire_size` staircase without its sub-word rounding, so the synthetic
+/// plane is exactly linear and the EWMA fit can recover it bit-for-bit).
+fn affine_wire(kind: CodecKind) -> (f64, f64) {
+    match kind {
+        CodecKind::Fp32 => (0.0, 4.0),
+        CodecKind::Fp16 => (0.0, 2.0),
+        CodecKind::Qsgd { .. } => (0.0, 1.0 + 4.0 / 512.0),
+        CodecKind::TopK { ratio } | CodecKind::RandK { ratio } | CodecKind::Dgc { ratio } => {
+            (4.0, 8.0 * ratio)
+        }
+        CodecKind::SignSgd | CodecKind::Signum { .. } => (4.0, 4.0 / 32.0),
+        CodecKind::EfSignSgd => (8.0, 4.0 / 32.0),
+        CodecKind::OneBit => (12.0, 4.0 / 32.0),
+        CodecKind::TernGrad => (8.0, 4.0 / 16.0),
+    }
+}
+
+/// The true Assumption-5 coefficients for `kind` on `fabric` with `world`
+/// workers: encode path (incl. EF decode) and full-group decode from the
+/// calibrated [`OverheadModel`], collective cost from the textbook ring
+/// formulas over the affine wire size.
+pub fn linear_plane(kind: CodecKind, fabric: &Fabric, world: usize) -> LinearPlane {
+    let m = OverheadModel::for_codec(kind);
+    let ef = kind.uses_error_feedback();
+    let enc = FittedCost {
+        b: m.encode.b + if ef { m.decode.b } else { 0.0 },
+        g: m.encode.g + if ef { m.decode.g } else { 0.0 },
+        r2: 1.0,
+    };
+    let fanin = match kind.collective() {
+        Collective::AllReduce => 1,
+        Collective::AllGather => world.saturating_sub(1).max(1),
+    };
+    let dec = FittedCost {
+        b: m.decode.b * fanin as f64,
+        g: m.decode.g * fanin as f64,
+        r2: 1.0,
+    };
+    let (h, d) = affine_wire(kind);
+    let w = world as f64;
+    let comm = if world <= 1 {
+        FittedCost { b: 0.0, g: 0.0, r2: 1.0 }
+    } else {
+        let beta_eff = fabric.beta_eff(world);
+        match kind.collective() {
+            Collective::AllReduce => {
+                let fac = 2.0 * (w - 1.0) / w;
+                FittedCost {
+                    b: 2.0 * (w - 1.0) * fabric.alpha + fac * h / beta_eff,
+                    g: fac * d / beta_eff,
+                    r2: 1.0,
+                }
+            }
+            Collective::AllGather => FittedCost {
+                b: (w - 1.0) * fabric.alpha + (w - 1.0) * h / beta_eff,
+                g: (w - 1.0) * d / beta_eff,
+                r2: 1.0,
+            },
+        }
+    };
+    LinearPlane { enc, dec, comm }
+}
+
+/// Eq.-7 objective for `profile` under the true costs of `plane`.
+pub fn plane_objective(profile: &ModelProfile, plane: &LinearPlane) -> AnalyticObjective {
+    let bwd = profile.iter_compute_s * (1.0 - profile.fwd_frac);
+    let bwd_dur: Vec<f64> = profile
+        .bwd_flop_shares()
+        .into_iter()
+        .map(|s| bwd * s)
+        .collect();
+    AnalyticObjective::new(
+        bwd_dur,
+        profile.sizes_backprop_order(),
+        profile.iter_compute_s * profile.fwd_frac,
+        plane.enc,
+        plane.dec,
+        plane.comm,
+        1,
+    )
+}
+
+/// One step of the online-vs-baselines comparison.
+#[derive(Debug, Clone)]
+pub struct OnlineStepPoint {
+    pub step: usize,
+    /// Iteration time of the driver's current partition under the true
+    /// current costs.
+    pub online_secs: f64,
+    /// Same for the frozen warmup-only partition.
+    pub warmup_secs: f64,
+    /// Same for an oracle that re-searches whenever the fabric changes.
+    pub oracle_secs: f64,
+    pub online_groups: usize,
+    pub epoch: u64,
+}
+
+/// Outcome of [`run_online_loop`].
+#[derive(Debug)]
+pub struct OnlineLoopReport {
+    pub points: Vec<OnlineStepPoint>,
+    /// The pre-drift search result every policy starts from.
+    pub warmup_partition: Partition,
+    /// The oracle's partition under the final fabric.
+    pub oracle_final: Partition,
+    /// The driver's partition at the end of the run.
+    pub online_final: Partition,
+    pub reschedules: usize,
+    pub search_evals: usize,
+    /// First step from which the online curve stays within `tol` of the
+    /// oracle for the remainder of the run (None: never).
+    pub converged_at: Option<usize>,
+}
+
+impl OnlineLoopReport {
+    /// Mean of the last `window` steps of each curve:
+    /// `(online, warmup, oracle)`.
+    pub fn steady_state(&self, window: usize) -> (f64, f64, f64) {
+        if self.points.is_empty() {
+            return (f64::NAN, f64::NAN, f64::NAN);
+        }
+        let k = window.clamp(1, self.points.len());
+        let tail = &self.points[self.points.len() - k..];
+        let n = tail.len() as f64;
+        (
+            tail.iter().map(|p| p.online_secs).sum::<f64>() / n,
+            tail.iter().map(|p| p.warmup_secs).sum::<f64>() / n,
+            tail.iter().map(|p| p.oracle_secs).sum::<f64>() / n,
+        )
+    }
+}
+
+/// Drive the scheduler [`Driver`] through `steps` simulated steps of
+/// `scenario` and compare it against the frozen warmup-only schedule and a
+/// re-searching oracle. The measured plane is synthesized from
+/// [`linear_plane`], i.e. drift-free and exactly affine, so convergence
+/// failures are scheduler bugs, not noise.
+pub fn run_online_loop(
+    profile: &ModelProfile,
+    kind: CodecKind,
+    scenario: &NetScenario,
+    world: usize,
+    cfg: DriverConfig,
+    steps: usize,
+) -> OnlineLoopReport {
+    let n = profile.num_tensors();
+    let sizes = profile.sizes_backprop_order();
+    let bwd_shares = profile.bwd_flop_shares();
+
+    // Warmup: the one-shot search every policy starts from.
+    let plane0 = linear_plane(kind, &scenario.fabric_at(0), world);
+    let mut warm_obj = plane_objective(profile, &plane0);
+    let warmup_partition = mergecomp_search(&mut warm_obj, n, cfg.search).partition;
+
+    let est = CostEstimator::new(cfg.ewma, Some(plane0.enc), Some(plane0.dec), Some(plane0.comm));
+    let mut driver = Driver::new(
+        cfg,
+        est,
+        sizes.clone(),
+        bwd_shares,
+        profile.fwd_frac,
+        warmup_partition.clone(),
+    );
+
+    let mut points = Vec::with_capacity(steps);
+    let mut oracle_fabric = scenario.fabric_at(0);
+    let mut oracle_partition = warmup_partition.clone();
+
+    for step in 0..steps {
+        let fabric = scenario.fabric_at(step);
+        let plane = linear_plane(kind, &fabric, world);
+
+        // Oracle re-searches whenever the fabric changes.
+        if fabric != oracle_fabric {
+            oracle_fabric = fabric;
+            let mut obj = plane_objective(profile, &plane);
+            oracle_partition = mergecomp_search(&mut obj, n, cfg.search).partition;
+        }
+
+        // Synthesize this step's measured per-group timings.
+        let samples: Vec<GroupSample> = (0..driver.partition().num_groups())
+            .map(|j| {
+                let elems: usize = driver
+                    .partition()
+                    .group_range(j)
+                    .map(|i| sizes[i])
+                    .sum();
+                GroupSample {
+                    group: j,
+                    elems,
+                    encode_secs: plane.enc.predict(elems),
+                    comm_secs: plane.comm.predict(elems),
+                    comm_exposed_secs: 0.0,
+                    decode_secs: plane.dec.predict(elems),
+                }
+            })
+            .collect();
+        driver.observe(&samples, profile.iter_compute_s);
+
+        if driver.due(step) {
+            if let Decision::Switch { partition, .. } = driver.decide() {
+                driver.apply(partition);
+            }
+        }
+
+        let mut truth = plane_objective(profile, &plane);
+        points.push(OnlineStepPoint {
+            step,
+            online_secs: truth.eval(driver.partition()),
+            warmup_secs: truth.eval(&warmup_partition),
+            oracle_secs: truth.eval(&oracle_partition),
+            online_groups: driver.partition().num_groups(),
+            epoch: driver.epoch(),
+        });
+    }
+
+    let tol = 5e-3;
+    let converged_at = match points
+        .iter()
+        .rposition(|p| p.online_secs > p.oracle_secs * (1.0 + tol))
+    {
+        Some(last_bad) if last_bad + 1 >= points.len() => None,
+        Some(last_bad) => Some(points[last_bad + 1].step),
+        None => Some(0),
+    };
+
+    OnlineLoopReport {
+        points,
+        warmup_partition,
+        oracle_final: oracle_partition,
+        online_final: driver.partition().clone(),
+        reschedules: driver.reschedules,
+        search_evals: driver.search_evals,
+        converged_at,
     }
 }
 
@@ -82,5 +354,130 @@ mod tests {
         let v = compare_overlap(&breakdown(0.0, 0.0), &ExchangeStats::default());
         assert_eq!(v.sim_overlap_frac, 0.0);
         assert_eq!(v.measured_overlap_frac, 0.0);
+    }
+
+    use crate::profiles::transformer::transformer_100m;
+    use crate::scheduler::SearchParams;
+
+    fn drift_cfg(interval: usize) -> DriverConfig {
+        DriverConfig {
+            interval,
+            ewma: 0.25,
+            hysteresis: 0.05,
+            search: SearchParams { y_max: 3, alpha: 0.02 },
+            min_samples: 4,
+        }
+    }
+
+    /// The headline scenario (numerically sized so the stale schedule is
+    /// >5% off post-drift): EFSignSGD on 8 workers, NVLink collapsing to
+    /// PCIe-class bandwidth mid-run.
+    fn headline_scenario(at_step: usize) -> NetScenario {
+        NetScenario::fabric_step(Fabric::nvlink(), Fabric::pcie(), at_step)
+    }
+
+    #[test]
+    fn online_loop_stays_put_without_drift() {
+        let profile = transformer_100m();
+        let scenario = NetScenario::Static(Fabric::pcie());
+        let report = run_online_loop(
+            &profile,
+            CodecKind::EfSignSgd,
+            &scenario,
+            8,
+            drift_cfg(5),
+            40,
+        );
+        assert_eq!(report.reschedules, 0, "no drift must mean no switches");
+        assert_eq!(report.online_final, report.warmup_partition);
+        assert_eq!(report.converged_at, Some(0));
+    }
+
+    #[test]
+    fn online_loop_converges_to_post_drift_oracle() {
+        let profile = transformer_100m();
+        let drift_at = 20;
+        let interval = 10;
+        let scenario = headline_scenario(drift_at);
+        let report = run_online_loop(
+            &profile,
+            CodecKind::EfSignSgd,
+            &scenario,
+            8,
+            drift_cfg(interval),
+            120,
+        );
+
+        // The drift must actually change the optimum, and the driver must
+        // adopt it.
+        assert_ne!(
+            report.warmup_partition, report.oracle_final,
+            "scenario must move the optimal partition"
+        );
+        assert!(report.reschedules >= 1, "driver never repartitioned");
+        assert!(report.search_evals > 0);
+
+        // Convergence within K = 3 reschedule intervals of the drift.
+        let deadline = drift_at + 3 * interval;
+        match report.converged_at {
+            Some(at) => assert!(
+                at <= deadline,
+                "converged at step {at}, deadline {deadline}"
+            ),
+            None => panic!("online schedule never converged to the oracle"),
+        }
+
+        // Steady state: online matches the oracle; the stale warmup-only
+        // schedule pays > 5% (the acceptance margin the bench asserts too).
+        let (online, warmup, oracle) = report.steady_state(20);
+        assert!(
+            online <= oracle * 1.01,
+            "online {online} vs oracle {oracle}"
+        );
+        assert!(
+            warmup > oracle * 1.05,
+            "warmup-only {warmup} should be >5% over oracle {oracle}"
+        );
+    }
+
+    #[test]
+    fn hysteresis_suppresses_burst_thrash() {
+        // Short congestion bursts that revert before the next reschedule
+        // boundary: the estimator sees a mixture, and the hysteresis keeps
+        // the schedule from flapping every interval.
+        let profile = transformer_100m();
+        let scenario = NetScenario::Bursts {
+            base: Fabric::nvlink(),
+            period: 10,
+            burst_len: 2,
+            beta_factor: 0.5,
+        };
+        let report = run_online_loop(
+            &profile,
+            CodecKind::EfSignSgd,
+            &scenario,
+            8,
+            drift_cfg(10),
+            100,
+        );
+        assert!(
+            report.reschedules <= 2,
+            "bursty noise caused {} switches",
+            report.reschedules
+        );
+    }
+
+    #[test]
+    fn linear_plane_matches_fabric_scaling() {
+        let fast = linear_plane(CodecKind::EfSignSgd, &Fabric::nvlink(), 8);
+        let slow = linear_plane(CodecKind::EfSignSgd, &Fabric::pcie(), 8);
+        assert!(slow.comm.g > 10.0 * fast.comm.g, "bandwidth term must scale");
+        // Encode/decode are host-side: fabric-independent.
+        assert_eq!(fast.enc.b, slow.enc.b);
+        assert_eq!(fast.dec.g, slow.dec.g);
+        // Single worker communicates nothing.
+        let solo = linear_plane(CodecKind::Fp32, &Fabric::pcie(), 1);
+        assert_eq!(solo.comm.b, 0.0);
+        assert_eq!(solo.comm.g, 0.0);
     }
 }

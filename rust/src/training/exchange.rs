@@ -14,7 +14,7 @@
 use crate::collectives::Comm;
 use crate::compression::CodecKind;
 use crate::coordinator::ExchangeEngine;
-pub use crate::coordinator::{ExchangeStats, PipelineMode};
+pub use crate::coordinator::{ExchangeStats, GroupSample, PipelineMode};
 use crate::scheduler::Partition;
 use crate::util::rng::Xoshiro256;
 
@@ -61,6 +61,23 @@ impl GradExchange {
     /// used to prove Serial/Pipelined equivalence.
     pub fn state_digest(&self) -> u64 {
         self.engine.state_digest()
+    }
+
+    /// Per-group measured timings of the most recent exchange (the online
+    /// scheduler's measurement feed).
+    pub fn group_samples(&self) -> &[GroupSample] {
+        self.engine.group_samples()
+    }
+
+    /// Switch to a new partition, remapping codec state bit-exactly (see
+    /// [`crate::coordinator::ExchangeEngine::repartition`]).
+    pub fn repartition(&mut self, new: Partition) -> anyhow::Result<()> {
+        self.engine.repartition(new)
+    }
+
+    /// Codec state planes flattened to full-model length (test support).
+    pub fn flat_state(&self) -> Vec<Vec<f32>> {
+        self.engine.flat_state()
     }
 
     /// Aggregate gradients across the group. `grads` holds per-tensor

@@ -15,12 +15,12 @@ use super::exchange::{ExchangeStats, GradExchange};
 use super::optimizer::SgdMomentum;
 use crate::collectives::{run_comm_group, Comm};
 use crate::compression::{Codec as _, Collective};
-use crate::config::{ScheduleSpec, TrainConfig};
+use crate::config::{ScheduleSpec, SchedulingMode, TrainConfig};
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::runtime::{StepMeta, TrainStep};
 use crate::scheduler::costmodel::{CostSampler, FittedCost};
 use crate::scheduler::objective::AnalyticObjective;
-use crate::scheduler::Partition;
+use crate::scheduler::{CostEstimator, Decision, Driver, DriverConfig, Partition, SearchParams};
 use crate::util::json::Value;
 use crate::util::rng::Xoshiro256;
 use crate::util::stats::Stopwatch;
@@ -41,12 +41,20 @@ pub struct StepRecord {
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub records: Vec<StepRecord>,
+    /// The partition in effect when training *ended* (online mode may have
+    /// switched away from the warmup choice).
     pub partition: Partition,
     pub final_train_loss: f32,
     pub eval_loss: f32,
     pub mean_step_secs: f64,
     pub mean_exchange: ExchangeStats,
+    /// Objective evaluations across the warmup search and every online
+    /// re-search.
     pub search_evals: usize,
+    /// Partition switches adopted by the online scheduler.
+    pub reschedules: usize,
+    /// Final schedule epoch (0 = never repartitioned).
+    pub schedule_epoch: u64,
     pub total_bytes_sent: u64,
     pub steps: usize,
 }
@@ -85,6 +93,8 @@ impl RunResult {
             ),
             ("mean_decode_secs", Value::from(self.mean_exchange.decode_secs)),
             ("search_evals", Value::from(self.search_evals)),
+            ("reschedules", Value::from(self.reschedules)),
+            ("schedule_epoch", Value::from(self.schedule_epoch)),
             ("total_bytes_sent", Value::from(self.total_bytes_sent)),
             ("curve", Value::Arr(curve)),
         ])
@@ -157,18 +167,53 @@ fn fit_comm_costs(comm: &mut Comm, cfg: &TrainConfig, total_params: usize) -> Fi
         .unwrap_or(FittedCost { b: 1e-5, g: 1e-9, r2: 0.0 })
 }
 
-/// Resolve the schedule on rank 0 (fitting costs + Algorithm 2), then
-/// broadcast the partition bounds so all ranks agree bit-for-bit.
-#[allow(clippy::too_many_arguments)]
+/// Cost models fitted during warmup — the online scheduler's priors.
+/// `enc`/`dec` are rank-0 only (only rank 0 searches); `comm` is measured
+/// collectively on every rank.
+#[derive(Debug, Clone, Copy, Default)]
+struct WarmupFits {
+    enc: Option<FittedCost>,
+    dec: Option<FittedCost>,
+    comm: Option<FittedCost>,
+}
+
+/// Resolve the initial schedule, then broadcast the partition bounds so all
+/// ranks agree bit-for-bit.
+///
+/// - `Fixed` mode: no measurement at all; the spec must be static.
+/// - `Warmup`/`Online`: rank 0 fits the Assumption-5 models from warmup
+///   measurements and runs Algorithm 2; `Online` additionally hands the
+///   fits back as estimator priors.
+///
+/// Followers parse the broadcast **strictly**: a malformed bound is an
+/// error. (The old path `filter_map(Value::as_usize)` silently dropped bad
+/// entries and then asserted — or worse, merged two groups on one rank
+/// only.)
 fn resolve_schedule(
     comm: &mut Comm,
     cfg: &TrainConfig,
     meta: &StepMeta,
     measured_step_secs: f64,
-) -> anyhow::Result<(Partition, usize)> {
+) -> anyhow::Result<(Partition, usize, WarmupFits)> {
     let n = meta.tensors.len();
+
+    if cfg.sched_mode == SchedulingMode::Fixed {
+        anyhow::ensure!(
+            !matches!(cfg.schedule, ScheduleSpec::MergeComp { .. }),
+            "--sched-mode fixed cannot resolve a mergecomp schedule (it needs \
+             measurements); pick a static --schedule or warmup/online mode"
+        );
+        let mut noop = crate::scheduler::objective::MeasuredObjective::new(|_: &Partition| 0.0);
+        // Static specs resolve identically on every rank — no broadcast.
+        return Ok((cfg.schedule.resolve(n, &mut noop), 0, WarmupFits::default()));
+    }
+
     // Comm costs involve all ranks — measure before rank 0 diverges.
     let comm_cost = fit_comm_costs(comm, cfg, meta.total_params());
+    let mut fits = WarmupFits {
+        comm: Some(comm_cost),
+        ..Default::default()
+    };
 
     let mut evals = 0usize;
     let partition = if comm.rank() == 0 {
@@ -176,6 +221,8 @@ fn resolve_schedule(
         let p = match spec {
             ScheduleSpec::MergeComp { .. } => {
                 let (enc, dec) = fit_codec_costs(cfg, meta.total_params())?;
+                fits.enc = Some(enc);
+                fits.dec = Some(dec);
                 // Backward durations: measured step time split by the
                 // profile's FLOPs shares (same shape as the simulator).
                 let profile = meta.to_profile();
@@ -214,8 +261,7 @@ fn resolve_schedule(
             }
         };
         // Broadcast bounds as a JSON payload.
-        let bounds: Vec<Value> = p.bounds().iter().map(|&b| Value::from(b)).collect();
-        let mut payload = Value::Arr(bounds).to_string_compact().into_bytes();
+        let mut payload = p.bounds_to_json().to_string_compact().into_bytes();
         comm.broadcast(0, &mut payload);
         p
     } else {
@@ -223,15 +269,10 @@ fn resolve_schedule(
         comm.broadcast(0, &mut payload);
         let v = Value::parse(std::str::from_utf8(&payload)?)
             .map_err(|e| anyhow::anyhow!("partition broadcast: {e}"))?;
-        let bounds: Vec<usize> = v
-            .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("partition broadcast: not an array"))?
-            .iter()
-            .filter_map(Value::as_usize)
-            .collect();
-        Partition::from_bounds(n, bounds)
+        Partition::from_json_bounds(n, &v)
+            .map_err(|e| anyhow::anyhow!("partition broadcast: {e}"))?
     };
-    Ok((partition, evals))
+    Ok((partition, evals, fits))
 }
 
 /// Deterministic parameter init shared by all workers: LN scales = 1,
@@ -315,7 +356,7 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
             step_secs = (t[0] / comm.world() as f32) as f64;
 
             // --- schedule --------------------------------------------------
-            let (partition, search_evals) =
+            let (partition, warmup_evals, fits) =
                 resolve_schedule(comm, cfg, &meta, step_secs)?;
             let mut exchange = GradExchange::new(
                 cfg.codec,
@@ -323,6 +364,50 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 meta.sizes_backprop_order(),
             )
             .with_mode(cfg.pipeline);
+
+            // --- online rescheduler (measure → search → repartition) -------
+            // Only meaningful for the searched schedule; static specs have
+            // nothing to re-search.
+            let online = cfg.sched_mode == SchedulingMode::Online
+                && matches!(cfg.schedule, ScheduleSpec::MergeComp { .. });
+            let mut driver = if online {
+                let profile = meta.to_profile();
+                let bwd_shares = profile.bwd_flop_shares();
+                let search = match cfg.schedule {
+                    ScheduleSpec::MergeComp { y_max, alpha } => SearchParams { y_max, alpha },
+                    _ => SearchParams::default(),
+                };
+                let dcfg = DriverConfig {
+                    interval: cfg.resched_interval.max(1),
+                    ewma: cfg.resched_ewma.clamp(1e-3, 1.0),
+                    hysteresis: cfg.resched_eps.max(0.0),
+                    search,
+                    min_samples: 8,
+                };
+                // The warmup decode fit measured one payload; the engine's
+                // per-group decode samples include the allgather fan-in, so
+                // scale the prior to match.
+                let fanin = match cfg.codec.collective() {
+                    Collective::AllReduce => 1,
+                    Collective::AllGather => comm.world().saturating_sub(1).max(1),
+                } as f64;
+                let dec_prior = fits.dec.map(|d| FittedCost {
+                    b: d.b * fanin,
+                    g: d.g * fanin,
+                    r2: d.r2,
+                });
+                let est = CostEstimator::new(dcfg.ewma, fits.enc, dec_prior, fits.comm);
+                Some(Driver::new(
+                    dcfg,
+                    est,
+                    meta.sizes_backprop_order(),
+                    bwd_shares,
+                    profile.fwd_frac,
+                    partition.clone(),
+                ))
+            } else {
+                None
+            };
 
             // --- training loop ---------------------------------------------
             let t0 = Stopwatch::start();
@@ -342,6 +427,20 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 let grads_fwd: Vec<Vec<f32>> = grads_bp.into_iter().rev().collect();
 
                 opt.step(&mut params, &grads_fwd);
+
+                // Online loop: feed measurements; at reschedule boundaries
+                // rank 0 re-searches and the epoch-tagged broadcast applies
+                // any switch on every rank at the same step, remapping EF
+                // state bit-exactly.
+                if let Some(d) = driver.as_mut() {
+                    d.observe(exchange.group_samples(), step_exec.last_exec_secs);
+                    if d.due(step) {
+                        let decision = if rank == 0 { d.decide() } else { Decision::Keep };
+                        if let Some(new_partition) = d.sync(comm, decision)? {
+                            exchange.repartition(new_partition)?;
+                        }
+                    }
+                }
 
                 // Mean loss across workers for logging.
                 let mut l = [loss];
@@ -381,14 +480,20 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 return Ok(None);
             }
             let steps = cfg.steps.max(1) as f64;
+            let (reschedules, online_evals, schedule_epoch) = driver
+                .as_ref()
+                .map(|d| (d.reschedules, d.search_evals, d.epoch()))
+                .unwrap_or((0, 0, 0));
             Ok(Some(RunResult {
                 records,
-                partition,
+                partition: exchange.partition().clone(),
                 final_train_loss: last_loss,
                 eval_loss,
                 mean_step_secs: sum_step / steps,
                 mean_exchange: sum_exchange.scaled(steps),
-                search_evals,
+                search_evals: warmup_evals + online_evals,
+                reschedules,
+                schedule_epoch,
                 total_bytes_sent: sum_exchange.bytes_sent,
                 steps: cfg.steps,
             }))

@@ -54,10 +54,18 @@ impl Args {
         self.str(key).unwrap_or(default)
     }
 
+    /// Parsed numeric flag, `None` when absent or unparseable.
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        self.str(key).and_then(|s| s.parse().ok())
+    }
+
+    /// Parsed numeric flag, `None` when absent or unparseable.
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.str(key).and_then(|s| s.parse().ok())
+    }
+
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.str(key)
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(default)
+        self.usize(key).unwrap_or(default)
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
@@ -67,9 +75,7 @@ impl Args {
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.str(key)
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(default)
+        self.f64(key).unwrap_or(default)
     }
 
     pub fn bool(&self, key: &str) -> bool {
@@ -147,5 +153,14 @@ mod tests {
         assert_eq!(a.f64_or("lr", 0.0), 0.1);
         assert_eq!(a.f64_or("nope", 2.5), 2.5);
         assert_eq!(a.u64_or("seed", 42), 42);
+    }
+
+    #[test]
+    fn optional_numeric_accessors() {
+        let a = parse(&["x", "--eps", "0.05", "--interval", "25", "--bad", "zzz"]);
+        assert_eq!(a.f64("eps"), Some(0.05));
+        assert_eq!(a.usize("interval"), Some(25));
+        assert_eq!(a.f64("missing"), None);
+        assert_eq!(a.usize("bad"), None);
     }
 }

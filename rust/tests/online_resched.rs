@@ -1,0 +1,287 @@
+//! Online-rescheduler correctness: repartitioning must be lossless, and the
+//! measure → search → repartition loop must converge under drift.
+//!
+//! The load-bearing invariant is the same one `pipeline_equivalence.rs`
+//! establishes for pipelining: a schedule mechanism may change *when*
+//! things happen, never *what* is computed. Here, `repartition` re-chunks
+//! the per-group codec state (EF residuals, momentum, DGC velocity) across
+//! new group boundaries. Because groups concatenate tensors in backprop
+//! order, a switch `P1 → P2 → P1` must be a bit-exact no-op — gradients
+//! and `state_digest()` of every following step match an engine that never
+//! repartitioned at all.
+
+use mergecomp::collectives::run_comm_group;
+use mergecomp::compression::CodecKind;
+use mergecomp::coordinator::GroupSample;
+use mergecomp::scheduler::{Decision, Driver, DriverConfig, Partition, SearchParams};
+use mergecomp::scheduler::{CostEstimator, FittedCost};
+use mergecomp::training::{GradExchange, PipelineMode};
+use mergecomp::util::proptest::{check, Gen};
+use mergecomp::util::rng::Xoshiro256;
+
+/// Per-tensor sizes (backprop order): uneven, with sub-word tails for the
+/// bit-packed codecs and multiple QSGD buckets.
+fn tensor_sizes() -> Vec<usize> {
+    vec![700, 33, 512, 129, 64, 257]
+}
+
+fn all_kinds() -> Vec<CodecKind> {
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    kinds
+}
+
+fn step_grads(rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng =
+        Xoshiro256::seed_from_u64(0xABCD ^ ((rank as u64) << 32) ^ ((step as u64) << 8));
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 0.5);
+            g
+        })
+        .collect()
+}
+
+fn bit_identical(a: &[Vec<f32>], b: &[Vec<f32>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(ta, tb)| {
+            ta.len() == tb.len()
+                && ta.iter().zip(tb).all(|(x, y)| x.to_bits() == y.to_bits())
+        })
+}
+
+/// Run `steps` exchanges; between step `switch_at` and the next one, detour
+/// through `via` and back (or do nothing when `via` is None — the control).
+fn run_with_detour(
+    kind: CodecKind,
+    home: Partition,
+    via: Option<Partition>,
+    steps: usize,
+) -> Vec<(Vec<Vec<f32>>, u64)> {
+    let sizes = tensor_sizes();
+    run_comm_group(2, move |c| {
+        let mut ex =
+            GradExchange::new(kind, home.clone(), sizes.clone()).with_mode(PipelineMode::Pipelined);
+        let mut rng = Xoshiro256::seed_from_u64(31 + c.rank() as u64);
+        let mut last = Vec::new();
+        for step in 0..steps {
+            if step == steps / 2 {
+                if let Some(p2) = &via {
+                    let flat_before = ex.flat_state();
+                    ex.repartition(p2.clone()).unwrap();
+                    let flat_mid = ex.flat_state();
+                    assert!(
+                        flat_before
+                            .iter()
+                            .zip(&flat_mid)
+                            .all(|(a, b)| bit_identical(
+                                std::slice::from_ref(a),
+                                std::slice::from_ref(b)
+                            )),
+                        "{}: flattened state changed across repartition",
+                        kind.name()
+                    );
+                    ex.repartition(home.clone()).unwrap();
+                }
+            }
+            let mut grads = step_grads(c.rank(), step, &sizes);
+            ex.exchange(c, &mut grads, &mut rng);
+            last = grads;
+        }
+        (last, ex.state_digest())
+    })
+}
+
+/// Deterministic sweep: for every paper codec, a `P1 → P2 → P1` round trip
+/// mid-training is invisible — gradients and EF state bit-identical to the
+/// never-repartitioned control.
+#[test]
+fn repartition_roundtrip_is_invisible_for_all_paper_codecs() {
+    let n = tensor_sizes().len();
+    let home = Partition::naive_even(n, 3);
+    for kind in all_kinds() {
+        for via in [
+            Partition::full_merge(n),
+            Partition::layer_wise(n),
+            Partition::from_bounds(n, vec![0, 1, 4, n]),
+        ] {
+            let control = run_with_detour(kind, home.clone(), None, 4);
+            let detoured = run_with_detour(kind, home.clone(), Some(via.clone()), 4);
+            for (rank, (ctl, det)) in control.iter().zip(&detoured).enumerate() {
+                assert!(
+                    bit_identical(&ctl.0, &det.0),
+                    "{} via {via}: rank {rank} gradients diverged",
+                    kind.name()
+                );
+                assert_eq!(
+                    ctl.1,
+                    det.1,
+                    "{} via {via}: rank {rank} state digest diverged",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+/// Random-cut generator for the property test.
+struct CutsGen {
+    n: usize,
+}
+
+impl Gen for CutsGen {
+    type Value = Vec<usize>;
+    fn generate(&self, rng: &mut Xoshiro256) -> Vec<usize> {
+        let k = rng.gen_range(self.n);
+        (0..k).map(|_| 1 + rng.gen_range(self.n - 1)).collect()
+    }
+    fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(Vec::new());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        out
+    }
+}
+
+/// Property: an *arbitrary* partition detour is invisible, for every codec
+/// with mutable state (and a stateless control).
+#[test]
+fn prop_arbitrary_repartition_preserves_gradients_and_state() {
+    let n = tensor_sizes().len();
+    let home = Partition::naive_even(n, 2);
+    for kind in [
+        CodecKind::EfSignSgd,
+        CodecKind::OneBit,
+        CodecKind::Dgc { ratio: 0.05 },
+        CodecKind::Signum { beta: 0.9 },
+        CodecKind::Qsgd { bits: 8 },
+    ] {
+        let home = home.clone();
+        check(
+            &format!("repartition invisible {}", kind.name()),
+            12,
+            CutsGen { n },
+            |cuts| {
+                let via = Partition::from_cuts(n, cuts.clone());
+                let control = run_with_detour(kind, home.clone(), None, 3);
+                let detoured = run_with_detour(kind, home.clone(), Some(via.clone()), 3);
+                for (ctl, det) in control.iter().zip(&detoured) {
+                    if !bit_identical(&ctl.0, &det.0) {
+                        return Err(format!("{}: gradients diverged via {via}", kind.name()));
+                    }
+                    if ctl.1 != det.1 {
+                        return Err(format!("{}: state digest diverged via {via}", kind.name()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The closed loop, multi-rank: measure → decide (rank 0) → epoch broadcast →
+// repartition, under a synthetic bandwidth collapse.
+// ---------------------------------------------------------------------------
+
+/// Synthetic linear comm plane: `t(elems) = b + g·elems`.
+fn synth_samples(p: &Partition, sizes: &[usize], b: f64, g: f64) -> Vec<GroupSample> {
+    (0..p.num_groups())
+        .map(|j| {
+            let elems: usize = p.group_range(j).map(|i| sizes[i]).sum();
+            GroupSample {
+                group: j,
+                elems,
+                encode_secs: 1e-5,
+                comm_secs: b + g * elems as f64,
+                comm_exposed_secs: 0.0,
+                decode_secs: 1e-5,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn drifting_bandwidth_drives_consistent_repartition_on_all_ranks() {
+    // The driver's cost-model tensors: 8 equal tensors of 10k elements.
+    // Pre-drift comm is negligible (full merge optimal); post-drift the
+    // per-element cost is 500x, so splitting wins back the backward-overlap
+    // and the driver must escape the stale full merge — starting from a
+    // single observed size, i.e. through the rescaled-prior fallback.
+    let n = 8usize;
+    let model_sizes = vec![10_000usize; n];
+    let (b, g_pre, g_post) = (1e-6, 1e-9, 5e-7);
+    let drift_at = 12usize;
+    let interval = 6usize;
+    let steps = 48usize;
+    // The engine exchanges a small real model with the same tensor count.
+    let wire_sizes = vec![96usize; n];
+
+    let results = run_comm_group(2, move |c| {
+        let cfg = DriverConfig {
+            interval,
+            ewma: 0.25,
+            hysteresis: 0.05,
+            search: SearchParams { y_max: 4, alpha: 0.0 },
+            min_samples: 4,
+        };
+        let prior = FittedCost { b, g: g_pre, r2: 1.0 };
+        let est = CostEstimator::new(cfg.ewma, None, None, Some(prior));
+        let mut driver = Driver::new(
+            cfg,
+            est,
+            model_sizes.clone(),
+            vec![1.0 / n as f64; n],
+            0.3,
+            Partition::full_merge(n),
+        );
+        let mut ex = GradExchange::new(
+            CodecKind::EfSignSgd,
+            Partition::full_merge(n),
+            wire_sizes.clone(),
+        );
+        let mut rng = Xoshiro256::seed_from_u64(500 + c.rank() as u64);
+
+        for step in 0..steps {
+            let mut grads = step_grads(c.rank(), step, &wire_sizes);
+            ex.exchange(c, &mut grads, &mut rng);
+
+            let g_now = if step < drift_at { g_pre } else { g_post };
+            let samples = synth_samples(driver.partition(), &model_sizes, b, g_now);
+            driver.observe(&samples, 4e-2);
+            if driver.due(step) {
+                let decision = if c.rank() == 0 { driver.decide() } else { Decision::Keep };
+                if let Some(p) = driver.sync(c, decision).unwrap() {
+                    ex.repartition(p).unwrap();
+                }
+            }
+        }
+
+        // One more exchange after all switches: ranks must still agree.
+        let mut grads = step_grads(c.rank(), 999, &wire_sizes);
+        ex.exchange(c, &mut grads, &mut rng);
+        (
+            driver.epoch(),
+            driver.partition().bounds().to_vec(),
+            ex.partition().bounds().to_vec(),
+            grads,
+        )
+    });
+
+    let (epoch0, dbounds0, ebounds0, grads0) = &results[0];
+    let (epoch1, dbounds1, ebounds1, grads1) = &results[1];
+    assert!(*epoch0 >= 1, "driver never repartitioned under a 500x drift");
+    assert_eq!(epoch0, epoch1, "ranks disagree on schedule epoch");
+    assert_eq!(dbounds0, dbounds1, "ranks disagree on the partition");
+    assert_eq!(ebounds0, dbounds0, "engine partition does not follow the driver");
+    assert_eq!(ebounds1, dbounds1);
+    assert!(dbounds0.len() > 2, "driver should have escaped the full merge");
+    assert!(
+        bit_identical(grads0, grads1),
+        "ranks diverged after online repartitioning"
+    );
+}
