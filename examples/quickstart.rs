@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             .iter()
             .map(|&s| vec![comm.rank() as f32 + 1.0; s])
             .collect();
-        let stats = ex.exchange(comm, &mut grads, &mut rng);
+        let stats = ex.exchange(comm, &mut grads, &mut rng).expect("exchange");
         (grads[0][0], stats.bytes_sent)
     });
     println!(

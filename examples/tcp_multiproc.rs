@@ -1,0 +1,60 @@
+//! Multi-process training over real TCP sockets on one machine.
+//!
+//! Spawns 4 `mergecomp train --transport tcp` worker *processes* over
+//! loopback via the same launcher CI's `multiproc-smoke` job uses, then
+//! checks that every rank exited 0 with bit-identical final parameters.
+//!
+//! Run:
+//!   cargo build --release
+//!   cargo run --release --example tcp_multiproc
+//!
+//! (Set MERGECOMP_BIN to point at a `mergecomp` binary explicitly.)
+
+use mergecomp::training::launch::{find_binary, launch_local, LaunchOptions};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let Some(binary) = find_binary(std::path::Path::new(".")) else {
+        eprintln!(
+            "skipping: no mergecomp binary found — run `cargo build --release` \
+             first (or set MERGECOMP_BIN)"
+        );
+        return Ok(());
+    };
+    let opts = LaunchOptions {
+        binary,
+        world: 4,
+        rendezvous: None,
+        out_dir: "results/tcp_multiproc".into(),
+        train_flags: [
+            "--synthetic",
+            "tiny",
+            "--codec",
+            "efsignsgd",
+            "--schedule",
+            "naive:2",
+            "--steps",
+            "5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        timeout: Duration::from_secs(240),
+    };
+    println!("launching {} TCP worker processes over loopback…", opts.world);
+    let report = launch_local(&opts)?;
+    for r in &report.ranks {
+        println!(
+            "rank {}: exit {:?}, param digest {}",
+            r.rank,
+            r.exit_code,
+            r.param_digest.as_deref().unwrap_or("-")
+        );
+    }
+    anyhow::ensure!(report.ok(), "multi-process run failed or digests diverged");
+    println!(
+        "all {} processes agreed bit-for-bit (rendezvous {})",
+        report.world, report.rendezvous
+    );
+    Ok(())
+}

@@ -25,11 +25,11 @@ fn main() {
             let n = bytes / 4;
             let results = run_comm_group(world, move |c| {
                 let mut buf = vec![1.0f32; n];
-                c.allreduce_f32(&mut buf); // warm
+                c.allreduce_f32(&mut buf).unwrap(); // warm
                 let mut best = f64::INFINITY;
                 for _ in 0..iters {
                     let sw = Stopwatch::start();
-                    c.allreduce_f32(&mut buf);
+                    c.allreduce_f32(&mut buf).unwrap();
                     best = best.min(sw.elapsed().as_secs_f64());
                 }
                 best
@@ -46,11 +46,11 @@ fn main() {
 
             // Allgather (per-rank payload).
             let results = run_comm_group(world, move |c| {
-                let _ = c.allgather(vec![0u8; bytes]); // warm
+                let _ = c.allgather(vec![0u8; bytes]).unwrap(); // warm
                 let mut best = f64::INFINITY;
                 for _ in 0..iters {
                     let sw = Stopwatch::start();
-                    let _ = c.allgather(vec![0u8; bytes]);
+                    let _ = c.allgather(vec![0u8; bytes]).unwrap();
                     best = best.min(sw.elapsed().as_secs_f64());
                 }
                 best

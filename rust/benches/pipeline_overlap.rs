@@ -66,7 +66,7 @@ fn run_mode(
         for step in 0..WARMUP_STEPS + STEPS {
             let mut grads = synth_grads(c.rank(), step, &sizes);
             let sw = Stopwatch::start();
-            let stats = ex.exchange(c, &mut grads, &mut rng);
+            let stats = ex.exchange(c, &mut grads, &mut rng).expect("exchange");
             let secs = sw.elapsed().as_secs_f64();
             if step >= WARMUP_STEPS {
                 total.accumulate(&stats);

@@ -5,19 +5,20 @@
 //! ranks (DGC's selection count varies), which is exactly why allreduce
 //! cannot be used for sparse tensors (§3.1).
 
+use super::transport::TransportError;
 use super::Comm;
 
 /// Ring allgather: world-1 steps; at step s each rank forwards the payload
 /// it received at step s-1 (starting with its own) to the right neighbour.
 /// Bytes moved per rank: sum of all other ranks' payload sizes — bandwidth
 /// optimal for a ring.
-pub fn ring_allgather(comm: &mut Comm, mine: Vec<u8>) -> Vec<Vec<u8>> {
+pub fn ring_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
     let world = comm.world();
     let rank = comm.rank();
     let mut out: Vec<Vec<u8>> = vec![Vec::new(); world];
     if world == 1 {
         out[0] = mine;
-        return out;
+        return Ok(out);
     }
     let base = comm.next_tags(world as u64);
     let right = (rank + 1) % world;
@@ -29,38 +30,45 @@ pub fn ring_allgather(comm: &mut Comm, mine: Vec<u8>) -> Vec<Vec<u8>> {
     for s in 0..world - 1 {
         let fwd_src = (rank + world - s) % world;
         // Tag by originating rank so a slow rank can never alias payloads.
-        comm.ep.send(right, base + fwd_src as u64, out[fwd_src].clone());
+        comm.ep
+            .send(right, base + fwd_src as u64, out[fwd_src].clone())?;
         let recv_src = (rank + world - s - 1) % world;
-        let payload = comm.ep.recv(left, base + recv_src as u64);
+        let payload = comm.ep.recv(left, base + recv_src as u64)?;
         out[recv_src] = payload;
     }
-    out
+    Ok(out)
 }
 
 /// Barrier: a zero-byte allgather.
-pub fn barrier(comm: &mut Comm) {
-    let _ = ring_allgather(comm, Vec::new());
+pub fn barrier(comm: &mut Comm) -> Result<(), TransportError> {
+    let _ = ring_allgather(comm, Vec::new())?;
+    Ok(())
 }
 
 /// Broadcast root's payload to all ranks (ring pipeline).
-pub fn broadcast(comm: &mut Comm, root: usize, bytes: &mut Vec<u8>) {
+pub fn broadcast(
+    comm: &mut Comm,
+    root: usize,
+    bytes: &mut Vec<u8>,
+) -> Result<(), TransportError> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {
-        return;
+        return Ok(());
     }
     let base = comm.next_tags(1);
     let right = (rank + 1) % world;
     let left = (rank + world - 1) % world;
     // Pass along the ring, root -> root+1 -> ... -> root-1.
     if rank == root {
-        comm.ep.send(right, base, bytes.clone());
+        comm.ep.send(right, base, bytes.clone())?;
     } else {
-        *bytes = comm.ep.recv(left, base);
+        *bytes = comm.ep.recv(left, base)?;
         if right != root {
-            comm.ep.send(right, base, bytes.clone());
+            comm.ep.send(right, base, bytes.clone())?;
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -69,7 +77,8 @@ mod tests {
 
     #[test]
     fn allgather_uniform() {
-        let results = run_comm_group(4, |c| c.allgather(vec![c.rank() as u8; 3]));
+        let results =
+            run_comm_group(4, |c| c.allgather(vec![c.rank() as u8; 3]).unwrap());
         for r in &results {
             assert_eq!(r.len(), 4);
             for (src, payload) in r.iter().enumerate() {
@@ -81,7 +90,9 @@ mod tests {
     #[test]
     fn allgather_variable_sizes() {
         // Rank r contributes r+1 bytes — the sparse-codec case.
-        let results = run_comm_group(5, |c| c.allgather(vec![c.rank() as u8; c.rank() + 1]));
+        let results = run_comm_group(5, |c| {
+            c.allgather(vec![c.rank() as u8; c.rank() + 1]).unwrap()
+        });
         for r in &results {
             for (src, payload) in r.iter().enumerate() {
                 assert_eq!(payload.len(), src + 1);
@@ -92,7 +103,7 @@ mod tests {
 
     #[test]
     fn allgather_empty_payloads() {
-        let results = run_comm_group(3, |c| c.allgather(Vec::new()));
+        let results = run_comm_group(3, |c| c.allgather(Vec::new()).unwrap());
         for r in &results {
             assert!(r.iter().all(|p| p.is_empty()));
         }
@@ -107,7 +118,7 @@ mod tests {
                 } else {
                     Vec::new()
                 };
-                c.broadcast(root, &mut data);
+                c.broadcast(root, &mut data).unwrap();
                 data
             });
             for r in results {
@@ -118,7 +129,7 @@ mod tests {
 
     #[test]
     fn allgather_two_ranks() {
-        let results = run_comm_group(2, |c| c.allgather(vec![c.rank() as u8 + 10]));
+        let results = run_comm_group(2, |c| c.allgather(vec![c.rank() as u8 + 10]).unwrap());
         for r in &results {
             assert_eq!(r, &vec![vec![10], vec![11]]);
         }
@@ -130,7 +141,7 @@ mod tests {
         let results = run_comm_group(3, |c| {
             let mut ok = true;
             for i in 0..50u8 {
-                let r = c.allgather(vec![i, c.rank() as u8]);
+                let r = c.allgather(vec![i, c.rank() as u8]).unwrap();
                 for (src, p) in r.iter().enumerate() {
                     ok &= p == &vec![i, src as u8];
                 }

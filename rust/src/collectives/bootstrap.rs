@@ -1,0 +1,311 @@
+//! Rendezvous bootstrap for the TCP transport.
+//!
+//! Protocol (all line-based ASCII, one connection per step):
+//!
+//! 1. Every rank binds a **data listener** on an ephemeral port.
+//! 2. Rank 0 listens on the rendezvous address; every other rank dials it
+//!    (with retry until the deadline) and sends `HELLO <rank> <data-addr>`.
+//! 3. Once all `world - 1` hellos have arrived, rank 0 answers each peer
+//!    with the full peer table: `TABLE <addr0> <addr1> … <addrW-1>`. The
+//!    rendezvous connections then close — they carry no training traffic.
+//! 4. Mesh formation ([`connect_mesh`]): every rank dials all ranks
+//!    **below** it (handshake line `PEER <rank>`) and accepts one
+//!    connection from every rank above it, yielding one stream per peer.
+//!
+//! Because each rank registers its data address only *after* binding its
+//! listener, and rank 0 releases the table only after all ranks have
+//! registered, every dial in step 4 targets a listener that is already
+//! bound — the only retries needed are against the rendezvous itself
+//! (rank 0's process may simply not have started yet).
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Read one `\n`-terminated line byte-by-byte (no buffering, so handshake
+/// reads can never swallow the binary frames that follow on data sockets).
+pub(crate) fn read_line_raw(stream: &mut TcpStream, max_len: usize) -> anyhow::Result<String> {
+    let mut line = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        stream
+            .read_exact(&mut byte)
+            .map_err(|e| anyhow::anyhow!("reading handshake line: {e}"))?;
+        if byte[0] == b'\n' {
+            break;
+        }
+        line.push(byte[0]);
+        anyhow::ensure!(line.len() <= max_len, "handshake line exceeds {max_len} bytes");
+    }
+    String::from_utf8(line).map_err(|e| anyhow::anyhow!("non-utf8 handshake: {e}"))
+}
+
+fn dial_with_retry(addr: &str, deadline: Instant) -> anyhow::Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    anyhow::bail!("dialing {addr}: {e} (deadline exceeded)");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn accept_with_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+    what: &str,
+) -> anyhow::Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| anyhow::anyhow!("listener nonblocking: {e}"))?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| anyhow::anyhow!("stream blocking: {e}"))?;
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(30)))
+                    .map_err(|e| anyhow::anyhow!("read timeout: {e}"))?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    anyhow::bail!("timed out waiting to accept {what}");
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => anyhow::bail!("accepting {what}: {e}"),
+        }
+    }
+}
+
+/// Run the rendezvous: every rank learns every rank's data address.
+///
+/// `hosted`: rank 0 may pass a pre-bound listener (tests bind port 0 to
+/// pick a free port); otherwise rank 0 binds `rendezvous_addr` itself.
+pub fn exchange_peer_table(
+    rank: usize,
+    world: usize,
+    rendezvous_addr: &str,
+    my_data_addr: &str,
+    hosted: Option<TcpListener>,
+    deadline: Instant,
+) -> anyhow::Result<Vec<String>> {
+    anyhow::ensure!(rank < world, "rank {rank} out of range for world {world}");
+    if world == 1 {
+        return Ok(vec![my_data_addr.to_string()]);
+    }
+    if rank == 0 {
+        let listener = match hosted {
+            Some(l) => l,
+            None => TcpListener::bind(rendezvous_addr)
+                .map_err(|e| anyhow::anyhow!("binding rendezvous {rendezvous_addr}: {e}"))?,
+        };
+        let mut table: Vec<Option<String>> = vec![None; world];
+        table[0] = Some(my_data_addr.to_string());
+        let mut peers: Vec<(usize, TcpStream)> = Vec::with_capacity(world - 1);
+        while peers.len() < world - 1 {
+            let mut stream = accept_with_deadline(&listener, deadline, "rendezvous hello")?;
+            let line = read_line_raw(&mut stream, 512)?;
+            let mut parts = line.split_whitespace();
+            anyhow::ensure!(
+                parts.next() == Some("HELLO"),
+                "rendezvous: expected HELLO, got '{line}'"
+            );
+            let peer: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("rendezvous: bad rank in '{line}'"))?;
+            let addr = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("rendezvous: missing addr in '{line}'"))?;
+            anyhow::ensure!(peer > 0 && peer < world, "rendezvous: rank {peer} out of range");
+            anyhow::ensure!(
+                table[peer].is_none(),
+                "rendezvous: duplicate registration for rank {peer}"
+            );
+            table[peer] = Some(addr.to_string());
+            peers.push((peer, stream));
+        }
+        let table: Vec<String> = table.into_iter().map(|a| a.unwrap()).collect();
+        let reply = format!("TABLE {}\n", table.join(" "));
+        for (peer, mut stream) in peers {
+            stream
+                .write_all(reply.as_bytes())
+                .map_err(|e| anyhow::anyhow!("sending table to rank {peer}: {e}"))?;
+            let _ = stream.shutdown(Shutdown::Write);
+        }
+        Ok(table)
+    } else {
+        let mut stream = dial_with_retry(rendezvous_addr, deadline)?;
+        let remaining = deadline
+            .saturating_duration_since(Instant::now())
+            .max(Duration::from_millis(100));
+        stream
+            .set_read_timeout(Some(remaining))
+            .map_err(|e| anyhow::anyhow!("read timeout: {e}"))?;
+        stream
+            .write_all(format!("HELLO {rank} {my_data_addr}\n").as_bytes())
+            .map_err(|e| anyhow::anyhow!("sending hello: {e}"))?;
+        let line = read_line_raw(&mut stream, 8192)?;
+        let mut parts = line.split_whitespace();
+        anyhow::ensure!(
+            parts.next() == Some("TABLE"),
+            "rendezvous: expected TABLE, got '{line}'"
+        );
+        let table: Vec<String> = parts.map(str::to_string).collect();
+        anyhow::ensure!(
+            table.len() == world,
+            "rendezvous: table has {} entries, expected {world}",
+            table.len()
+        );
+        Ok(table)
+    }
+}
+
+/// Form the full mesh: one stream per peer, `conns[p]` is the connection
+/// to rank `p` (`None` at index `rank`). Dials every lower rank, accepts
+/// from every higher rank.
+pub fn connect_mesh(
+    rank: usize,
+    world: usize,
+    table: &[String],
+    listener: &TcpListener,
+    deadline: Instant,
+) -> anyhow::Result<Vec<Option<TcpStream>>> {
+    anyhow::ensure!(table.len() == world, "peer table size mismatch");
+    let mut conns: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+    for peer in 0..rank {
+        let mut stream = dial_with_retry(&table[peer], deadline)?;
+        stream
+            .set_nodelay(true)
+            .map_err(|e| anyhow::anyhow!("nodelay: {e}"))?;
+        stream
+            .write_all(format!("PEER {rank}\n").as_bytes())
+            .map_err(|e| anyhow::anyhow!("peer handshake to rank {peer}: {e}"))?;
+        conns[peer] = Some(stream);
+    }
+    let mut remaining = world - 1 - rank;
+    while remaining > 0 {
+        let mut stream = accept_with_deadline(listener, deadline, "mesh peer")?;
+        stream
+            .set_nodelay(true)
+            .map_err(|e| anyhow::anyhow!("nodelay: {e}"))?;
+        let line = read_line_raw(&mut stream, 128)?;
+        let mut parts = line.split_whitespace();
+        anyhow::ensure!(
+            parts.next() == Some("PEER"),
+            "mesh handshake: expected PEER, got '{line}'"
+        );
+        let peer: usize = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("mesh handshake: bad rank in '{line}'"))?;
+        anyhow::ensure!(
+            peer > rank && peer < world,
+            "mesh handshake: unexpected rank {peer} (I am {rank} of {world})"
+        );
+        anyhow::ensure!(
+            conns[peer].is_none(),
+            "mesh handshake: duplicate connection from rank {peer}"
+        );
+        // Clear the handshake-phase read timeout: collective receives may
+        // legitimately block for a long time.
+        stream
+            .set_read_timeout(None)
+            .map_err(|e| anyhow::anyhow!("read timeout: {e}"))?;
+        conns[peer] = Some(stream);
+        remaining -= 1;
+    }
+    for (p, c) in conns.iter().enumerate() {
+        if p != rank {
+            anyhow::ensure!(c.is_some(), "mesh: no connection to rank {p}");
+        }
+    }
+    Ok(conns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deadline() -> Instant {
+        Instant::now() + Duration::from_secs(20)
+    }
+
+    #[test]
+    fn rendezvous_distributes_consistent_table() {
+        let world = 4;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let rdv = listener.local_addr().unwrap().to_string();
+        let mut hosted = Some(listener);
+        let tables: Vec<Vec<String>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..world)
+                .map(|rank| {
+                    let hosted = if rank == 0 { hosted.take() } else { None };
+                    let rdv = rdv.clone();
+                    s.spawn(move || {
+                        exchange_peer_table(
+                            rank,
+                            world,
+                            &rdv,
+                            &format!("127.0.0.1:{}", 9000 + rank),
+                            hosted,
+                            deadline(),
+                        )
+                        .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for t in &tables {
+            assert_eq!(t, &tables[0]);
+            assert_eq!(t.len(), world);
+            for (r, addr) in t.iter().enumerate() {
+                assert_eq!(addr, &format!("127.0.0.1:{}", 9000 + r));
+            }
+        }
+    }
+
+    #[test]
+    fn world_of_one_needs_no_network() {
+        let t =
+            exchange_peer_table(0, 1, "127.0.0.1:1", "127.0.0.1:9000", None, deadline()).unwrap();
+        assert_eq!(t, vec!["127.0.0.1:9000".to_string()]);
+    }
+
+    #[test]
+    fn full_mesh_connects_every_pair() {
+        let world = 3;
+        // Bind real data listeners and build the table from them.
+        let listeners: Vec<TcpListener> = (0..world)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let table: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let counts: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = listeners
+                .iter()
+                .enumerate()
+                .map(|(rank, listener)| {
+                    let table = table.clone();
+                    s.spawn(move || {
+                        let conns =
+                            connect_mesh(rank, world, &table, listener, deadline()).unwrap();
+                        conns.iter().filter(|c| c.is_some()).count()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(counts, vec![world - 1; world]);
+    }
+}

@@ -1,17 +1,29 @@
-//! Collective communication over the in-process transport (paper Table 1:
+//! Collective communication over a pluggable transport (paper Table 1:
 //! allreduce for FP32/FP16, allgather for everything else).
 //!
 //! [`Comm`] wraps a [`transport::Endpoint`] with a sequence number so every
 //! collective operation gets a unique tag space — consecutive collectives
-//! can never cross-talk even when rank arrival order skews.
+//! can never cross-talk even when rank arrival order skews. The endpoint's
+//! backend is either the in-process channel mesh ([`transport::mesh`] /
+//! [`run_group`]) or real TCP sockets ([`tcp`] + [`bootstrap`]); the
+//! collectives themselves are backend-agnostic.
+//!
+//! Failure semantics: every collective returns `Result<_,
+//! [`TransportError`]>`. A peer dying mid-collective fails the operation
+//! with the rank/peer/tag context instead of panicking the worker.
 
 pub mod allgather;
+pub mod bootstrap;
 pub mod nonblocking;
 pub mod ring;
+pub mod tcp;
 pub mod transport;
 
 pub use nonblocking::{lane_scope, CommCompletion, CommHandle, CommLane, CommOutcome};
-pub use transport::{mesh, run_group, Endpoint};
+pub use tcp::{run_tcp_group, tcp_endpoint, TcpConfig, TcpTransport};
+pub use transport::{
+    mesh, run_group, Endpoint, InProcTransport, Transport, TransportError, TransportKind,
+};
 
 /// Communicator: an endpoint plus a per-group op counter.
 pub struct Comm {
@@ -46,39 +58,57 @@ impl Comm {
     // -- collectives (implemented in submodules) ---------------------------
 
     /// Synchronize all ranks.
-    pub fn barrier(&mut self) {
-        allgather::barrier(self);
+    pub fn barrier(&mut self) -> Result<(), TransportError> {
+        allgather::barrier(self)
     }
 
     /// Root's payload ends up on every rank.
-    pub fn broadcast(&mut self, root: usize, bytes: &mut Vec<u8>) {
-        allgather::broadcast(self, root, bytes);
+    pub fn broadcast(&mut self, root: usize, bytes: &mut Vec<u8>) -> Result<(), TransportError> {
+        allgather::broadcast(self, root, bytes)
     }
 
     /// Every rank contributes a (variable-size) payload; all ranks get all
     /// payloads, indexed by source rank.
-    pub fn allgather(&mut self, mine: Vec<u8>) -> Vec<Vec<u8>> {
+    pub fn allgather(&mut self, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
         allgather::ring_allgather(self, mine)
     }
 
     /// In-place ring allreduce over an f32 buffer (sum).
-    pub fn allreduce_f32(&mut self, data: &mut [f32]) {
-        ring::allreduce_f32(self, data);
+    pub fn allreduce_f32(&mut self, data: &mut [f32]) -> Result<(), TransportError> {
+        ring::allreduce_f32(self, data)
     }
 
     /// In-place ring allreduce over a wire-format buffer, reducing with the
     /// codec's `reduce_wire` (FP32/FP16 payloads).
-    pub fn allreduce_wire(&mut self, data: &mut [u8], codec: &dyn crate::compression::Codec) {
-        ring::allreduce_wire(self, data, codec);
+    pub fn allreduce_wire(
+        &mut self,
+        data: &mut [u8],
+        codec: &dyn crate::compression::Codec,
+    ) -> Result<(), TransportError> {
+        ring::allreduce_wire(self, data, codec)
     }
 }
 
-/// Spawn a fresh `world`-rank group, one thread per rank, each with a Comm.
+/// Spawn a fresh `world`-rank group over the in-process mesh, one thread
+/// per rank, each with a Comm.
 pub fn run_comm_group<T: Send>(
     world: usize,
     f: impl Fn(&mut Comm) -> T + Send + Sync,
 ) -> Vec<T> {
     run_group(world, |ep| {
+        let mut comm = Comm::new(ep);
+        f(&mut comm)
+    })
+}
+
+/// Spawn a fresh `world`-rank group over loopback TCP sockets, one thread
+/// per rank, each with a Comm — the socket-path twin of
+/// [`run_comm_group`], used by the transport-equivalence suite.
+pub fn run_comm_group_tcp<T: Send>(
+    world: usize,
+    f: impl Fn(&mut Comm) -> T + Send + Sync,
+) -> Vec<T> {
+    run_tcp_group(world, |ep| {
         let mut comm = Comm::new(ep);
         f(&mut comm)
     })
@@ -91,7 +121,7 @@ mod tests {
     #[test]
     fn barrier_all_ranks_pass() {
         let results = run_comm_group(4, |c| {
-            c.barrier();
+            c.barrier().unwrap();
             c.rank()
         });
         assert_eq!(results, vec![0, 1, 2, 3]);
@@ -101,8 +131,8 @@ mod tests {
     fn sequence_numbers_isolate_ops() {
         // Two allgathers back-to-back: payloads must not cross between ops.
         let results = run_comm_group(3, |c| {
-            let first = c.allgather(vec![c.rank() as u8]);
-            let second = c.allgather(vec![10 + c.rank() as u8]);
+            let first = c.allgather(vec![c.rank() as u8]).unwrap();
+            let second = c.allgather(vec![10 + c.rank() as u8]).unwrap();
             (first, second)
         });
         for (first, second) in results {
@@ -114,13 +144,28 @@ mod tests {
     #[test]
     fn world_of_one_is_noop() {
         let results = run_comm_group(1, |c| {
-            c.barrier();
-            let g = c.allgather(vec![7]);
+            c.barrier().unwrap();
+            let g = c.allgather(vec![7]).unwrap();
             let mut x = vec![3.0f32];
-            c.allreduce_f32(&mut x);
+            c.allreduce_f32(&mut x).unwrap();
             (g, x)
         });
         assert_eq!(results[0].0, vec![vec![7]]);
         assert_eq!(results[0].1, vec![3.0]);
+    }
+
+    #[test]
+    fn collectives_identical_over_tcp_group() {
+        let results = run_comm_group_tcp(3, |c| {
+            c.barrier().unwrap();
+            let g = c.allgather(vec![c.rank() as u8; 2]).unwrap();
+            let mut x = vec![c.rank() as f32, 1.0];
+            c.allreduce_f32(&mut x).unwrap();
+            (g, x)
+        });
+        for (g, x) in &results {
+            assert_eq!(g, &vec![vec![0, 0], vec![1, 1], vec![2, 2]]);
+            assert_eq!(x, &vec![3.0, 3.0]);
+        }
     }
 }

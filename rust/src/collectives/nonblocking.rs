@@ -15,7 +15,13 @@
 //! (the symmetric-SPMD invariant the serial path already relies on), tag
 //! sequencing works out identically to the blocking path — the pipelined
 //! exchange is bit-for-bit equivalent to the serial one.
+//!
+//! Failure semantics: a collective that dies mid-flight (peer gone,
+//! connection reset) surfaces as a typed [`TransportError`] from
+//! [`CommHandle::wait`], carried through from whichever backend the `Comm`
+//! runs over.
 
+use super::transport::TransportError;
 use super::Comm;
 use crate::compression::{CodecKind, Collective};
 use crate::util::stats::Stopwatch;
@@ -52,20 +58,24 @@ enum Op {
 
 struct Job {
     op: Op,
-    done: Sender<CommCompletion>,
+    done: Sender<Result<CommCompletion, TransportError>>,
 }
 
 /// Waitable handle to an in-flight collective.
 pub struct CommHandle {
-    rx: Receiver<CommCompletion>,
+    rx: Receiver<Result<CommCompletion, TransportError>>,
 }
 
 impl CommHandle {
-    /// Block until the collective completes and take its result.
-    pub fn wait(self) -> CommCompletion {
-        self.rx
-            .recv()
-            .expect("comm lane terminated before completing the operation")
+    /// Block until the collective completes and take its result. A dead
+    /// peer mid-collective surfaces here as a typed [`TransportError`].
+    pub fn wait(self) -> Result<CommCompletion, TransportError> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(TransportError::Disconnected {
+                detail: "comm lane terminated before completing the operation".to_string(),
+            }),
+        }
     }
 }
 
@@ -116,20 +126,22 @@ pub fn lane_scope<R>(comm: &mut Comm, f: impl FnOnce(&CommLane) -> R) -> (R, f64
             let mut busy = 0.0f64;
             while let Ok(job) = jrx.recv() {
                 let sw = Stopwatch::start();
-                let outcome = match job.op {
+                let result = match job.op {
                     Op::AllReduce { mut wire, kind, n } => {
                         let reducer = kind.build(n);
-                        comm.allreduce_wire(&mut wire, reducer.as_ref());
-                        CommOutcome::Reduced(wire)
+                        comm.allreduce_wire(&mut wire, reducer.as_ref())
+                            .map(|()| CommOutcome::Reduced(wire))
                     }
-                    Op::AllGather { wire } => CommOutcome::Gathered(comm.allgather(wire)),
+                    Op::AllGather { wire } => comm.allgather(wire).map(CommOutcome::Gathered),
                 };
                 let secs = sw.elapsed().as_secs_f64();
                 busy += secs;
                 // A dropped handle just means the caller didn't care about
                 // the result; the collective itself already ran on every
                 // rank, so ignore the send error.
-                let _ = job.done.send(CommCompletion { outcome, secs });
+                let _ = job
+                    .done
+                    .send(result.map(|outcome| CommCompletion { outcome, secs }));
             }
             busy
         });
@@ -154,9 +166,9 @@ mod tests {
             let rank = c.rank() as u8;
             // Blocking reference first (advances the tag space identically
             // on every rank).
-            let blocking = c.allgather(vec![rank; 2]);
+            let blocking = c.allgather(vec![rank; 2]).unwrap();
             let (async_out, busy) = lane_scope(c, |lane| {
-                lane.start_allgather(vec![rank; 2]).wait().outcome
+                lane.start_allgather(vec![rank; 2]).wait().unwrap().outcome
             });
             let gathered = match async_out {
                 CommOutcome::Gathered(g) => g,
@@ -179,7 +191,7 @@ mod tests {
             let ((first, second), _) = lane_scope(c, |lane| {
                 let h1 = lane.start_allgather(vec![rank]);
                 let h2 = lane.start_allgather(vec![rank + 100]);
-                (h1.wait(), h2.wait())
+                (h1.wait().unwrap(), h2.wait().unwrap())
             });
             let f = match first.outcome {
                 CommOutcome::Gathered(g) => g,
@@ -215,10 +227,10 @@ mod tests {
 
             // Blocking reference on a copy.
             let mut blocking = wire.clone();
-            c.allreduce_wire(&mut blocking, codec.as_ref());
+            c.allreduce_wire(&mut blocking, codec.as_ref()).unwrap();
 
             let (completion, _) = lane_scope(c, |lane| {
-                lane.start_allreduce(wire, CodecKind::Fp32, n).wait()
+                lane.start_allreduce(wire, CodecKind::Fp32, n).wait().unwrap()
             });
             let reduced = match completion.outcome {
                 CommOutcome::Reduced(w) => w,
@@ -239,5 +251,25 @@ mod tests {
         let (jobs, _jrx) = channel();
         let lane = CommLane { jobs };
         let _ = lane.start_allreduce(vec![0u8; 4], CodecKind::SignSgd, 8);
+    }
+
+    #[test]
+    fn wait_on_dead_lane_is_typed_error() {
+        let (jobs, jrx) = channel::<Job>();
+        let lane = CommLane { jobs };
+        let (done, rx) = channel();
+        // Emulate a lane that died before running the op: the job (and its
+        // completion sender) is dropped without a reply.
+        lane.jobs
+            .send(Job { op: Op::AllGather { wire: vec![] }, done })
+            .unwrap();
+        drop(jrx);
+        drop(lane);
+        let handle = CommHandle { rx };
+        match handle.wait() {
+            Err(TransportError::Disconnected { .. }) => {}
+            Err(other) => panic!("wrong error: {other}"),
+            Ok(_) => panic!("expected an error from a dead lane"),
+        }
     }
 }

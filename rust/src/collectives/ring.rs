@@ -9,6 +9,7 @@
 //!   codec's `reduce_wire` (FP16 sums in half precision on the wire exactly
 //!   like NCCL's `ncclFloat16` reduction would).
 
+use super::transport::TransportError;
 use super::Comm;
 use crate::compression::Codec;
 
@@ -36,11 +37,11 @@ fn ring_allreduce_bytes(
     data: &mut [u8],
     align: usize,
     reduce: &dyn Fn(&mut [u8], &[u8]),
-) {
+) -> Result<(), TransportError> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 || data.is_empty() {
-        return;
+        return Ok(());
     }
     assert_eq!(
         data.len() % align,
@@ -59,8 +60,8 @@ fn ring_allreduce_bytes(
         let send_c = (rank + world - s) % world;
         let recv_c = (rank + world - s - 1) % world;
         let (lo, hi) = bounds[send_c];
-        comm.ep.send(right, base + s as u64, data[lo..hi].to_vec());
-        let incoming = comm.ep.recv(left, base + s as u64);
+        comm.ep.send(right, base + s as u64, data[lo..hi].to_vec())?;
+        let incoming = comm.ep.recv(left, base + s as u64)?;
         let (lo, hi) = bounds[recv_c];
         reduce(&mut data[lo..hi], &incoming);
     }
@@ -71,17 +72,18 @@ fn ring_allreduce_bytes(
         let recv_c = (rank + world - s) % world;
         let (lo, hi) = bounds[send_c];
         comm.ep
-            .send(right, base + (world - 1 + s) as u64, data[lo..hi].to_vec());
-        let incoming = comm.ep.recv(left, base + (world - 1 + s) as u64);
+            .send(right, base + (world - 1 + s) as u64, data[lo..hi].to_vec())?;
+        let incoming = comm.ep.recv(left, base + (world - 1 + s) as u64)?;
         let (lo, hi) = bounds[recv_c];
         data[lo..hi].copy_from_slice(&incoming);
     }
+    Ok(())
 }
 
 /// In-place f32 sum allreduce.
-pub fn allreduce_f32(comm: &mut Comm, data: &mut [f32]) {
+pub fn allreduce_f32(comm: &mut Comm, data: &mut [f32]) -> Result<(), TransportError> {
     if comm.world() == 1 || data.is_empty() {
-        return;
+        return Ok(());
     }
     // Reinterpret as bytes (little-endian in-memory layout is preserved).
     let bytes = unsafe {
@@ -94,21 +96,26 @@ pub fn allreduce_f32(comm: &mut Comm, data: &mut [f32]) {
             let xb = f32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]]);
             a[i..i + 4].copy_from_slice(&(xa + xb).to_le_bytes());
         }
-    });
+    })?;
     // On big-endian targets the byte reinterpretation above would be wrong;
     // all supported targets (x86-64, aarch64) are little-endian.
     #[cfg(target_endian = "big")]
     compile_error!("ring::allreduce_f32 assumes little-endian layout");
+    Ok(())
 }
 
 /// In-place allreduce of a codec wire buffer (FP32/FP16).
-pub fn allreduce_wire(comm: &mut Comm, data: &mut [u8], codec: &dyn Codec) {
+pub fn allreduce_wire(
+    comm: &mut Comm,
+    data: &mut [u8],
+    codec: &dyn Codec,
+) -> Result<(), TransportError> {
     if comm.world() == 1 || data.is_empty() {
-        return;
+        return Ok(());
     }
     ring_allreduce_bytes(comm, data, codec.wire_align(), &|a, b| {
         codec.reduce_wire(a, b)
-    });
+    })
 }
 
 #[cfg(test)]
@@ -141,7 +148,7 @@ mod tests {
             let results = run_comm_group(world, move |c| {
                 let mut data: Vec<f32> =
                     (0..n).map(|i| (i * (c.rank() + 1)) as f32).collect();
-                c.allreduce_f32(&mut data);
+                c.allreduce_f32(&mut data).unwrap();
                 data
             });
             let factor: f32 = (1..=world).map(|r| r as f32).sum();
@@ -158,7 +165,7 @@ mod tests {
         // 2 f32 elements across 4 ranks: some chunks are empty.
         let results = run_comm_group(4, |c| {
             let mut data = vec![c.rank() as f32, 1.0];
-            c.allreduce_f32(&mut data);
+            c.allreduce_f32(&mut data).unwrap();
             data
         });
         for r in &results {
@@ -178,10 +185,10 @@ mod tests {
             let mut codec = CodecKind::Fp32.build(n);
             let enc = codec.encode(&g, &mut rng);
             let mut wire = enc.bytes.clone();
-            c.allreduce_wire(&mut wire, codec.as_ref());
+            c.allreduce_wire(&mut wire, codec.as_ref()).unwrap();
 
             let mut direct = g.clone();
-            c.allreduce_f32(&mut direct);
+            c.allreduce_f32(&mut direct).unwrap();
 
             let mut out = vec![0f32; n];
             codec.decode(
@@ -212,7 +219,7 @@ mod tests {
             let mut codec = CodecKind::Fp16.build(n);
             let enc = codec.encode(&g, &mut rng);
             let mut wire = enc.bytes.clone();
-            c.allreduce_wire(&mut wire, codec.as_ref());
+            c.allreduce_wire(&mut wire, codec.as_ref()).unwrap();
             let mut out = vec![0f32; n];
             codec.decode(&crate::compression::Encoded { bytes: wire, n }, &mut out);
             out
@@ -229,7 +236,7 @@ mod tests {
         let world = 4;
         let results = run_comm_group(world, move |c| {
             let mut data = vec![1.0f32; n_bytes / 4];
-            c.allreduce_f32(&mut data);
+            c.allreduce_f32(&mut data).unwrap();
             c.bytes_sent()
         });
         let expect = (2 * (world - 1) * n_bytes / world) as u64;

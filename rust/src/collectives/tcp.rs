@@ -1,0 +1,499 @@
+//! TCP transport: length-prefixed, tag-matched frames over real sockets.
+//!
+//! Wire format per message (after the line-based bootstrap handshake):
+//!
+//! ```text
+//! [ tag: u64 LE ][ len: u32 LE ][ payload: len bytes ]
+//! ```
+//!
+//! The source rank is implicit per connection (established by the
+//! `PEER <rank>` handshake in `bootstrap.rs`). Threads per peer:
+//!
+//! - a **writer** thread drains a bounded outbound queue and writes frames
+//!   through a `BufWriter` (flushing whenever the queue runs dry), so
+//!   `Endpoint::send` never blocks on the network unless the queue is full
+//!   (real backpressure);
+//! - a **reader** thread reads frames and demuxes them into the same
+//!   single-inbox + stash structure the in-process channel mesh uses. On
+//!   EOF or connection reset it injects a [`CTRL_PEER_DOWN_TAG`] control
+//!   message, which `Endpoint::recv` surfaces as a typed
+//!   [`TransportError::PeerGone`] naming the rank, peer and tag — never a
+//!   hang, never a process-poisoning panic.
+//!
+//! Works identically whether the peers are OS processes (the
+//! `mergecomp train --transport tcp` worker mode, W processes over a real
+//! wire) or threads in one process ([`run_tcp_group`], used by the
+//! transport-equivalence tests to drive real sockets over loopback).
+
+use super::bootstrap;
+use super::transport::{Endpoint, Msg, Transport, TransportError, CTRL_PEER_DOWN_TAG};
+use std::io::{BufWriter, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Hard per-message ceiling (2 GiB): enforced on send so the u32 length
+/// header can never wrap, and on receive so a corrupt header fails loudly
+/// instead of desyncing the stream.
+const MAX_FRAME_BYTES: usize = 1 << 31;
+
+/// Outbound frames queued per peer before `send` blocks (backpressure).
+const OUTBOUND_QUEUE_DEPTH: usize = 128;
+
+/// Connection parameters for one rank of a TCP group.
+#[derive(Debug, Clone)]
+pub struct TcpConfig {
+    pub rank: usize,
+    pub world: usize,
+    /// Rendezvous address rank 0 listens on and everyone else dials.
+    pub rendezvous: String,
+    /// Host this rank binds its data listener on and advertises to peers
+    /// (must be routable from the other ranks; loopback for single-host).
+    pub advertise_host: String,
+    /// Bootstrap deadline: rendezvous + mesh formation must finish within
+    /// this budget (dial retries included).
+    pub timeout: Duration,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig {
+            rank: 0,
+            world: 1,
+            rendezvous: "127.0.0.1:29500".to_string(),
+            advertise_host: "127.0.0.1".to_string(),
+            timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+struct PeerWriter {
+    queue: SyncSender<(u64, Vec<u8>)>,
+    /// First write error observed by the writer thread, if any.
+    failed: Arc<Mutex<Option<String>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Socket backend implementing [`Transport`]. Build with
+/// [`TcpTransport::connect`] (full bootstrap) and wrap in an
+/// [`Endpoint`] via [`tcp_endpoint`].
+pub struct TcpTransport {
+    rank: usize,
+    world: usize,
+    writers: Vec<Option<PeerWriter>>,
+    inbox: Receiver<Msg>,
+    bytes_sent: u64,
+    msgs_sent: u64,
+}
+
+impl TcpTransport {
+    /// Full bootstrap: bind a data listener, run the rendezvous, form the
+    /// mesh, and spawn reader/writer threads for every peer.
+    ///
+    /// `hosted_rendezvous`: rank 0 may pass a pre-bound listener (tests
+    /// bind port 0 to pick a free port); `None` makes rank 0 bind
+    /// `cfg.rendezvous` itself.
+    pub fn connect(
+        cfg: &TcpConfig,
+        hosted_rendezvous: Option<TcpListener>,
+    ) -> anyhow::Result<TcpTransport> {
+        anyhow::ensure!(cfg.world >= 1, "world must be at least 1");
+        anyhow::ensure!(
+            cfg.rank < cfg.world,
+            "rank {} out of range for world {}",
+            cfg.rank,
+            cfg.world
+        );
+        let deadline = Instant::now() + cfg.timeout;
+        let listener = TcpListener::bind((cfg.advertise_host.as_str(), 0))
+            .map_err(|e| anyhow::anyhow!("binding data listener on {}: {e}", cfg.advertise_host))?;
+        let port = listener
+            .local_addr()
+            .map_err(|e| anyhow::anyhow!("data listener addr: {e}"))?
+            .port();
+        let my_addr = format!("{}:{}", cfg.advertise_host, port);
+        let table = bootstrap::exchange_peer_table(
+            cfg.rank,
+            cfg.world,
+            &cfg.rendezvous,
+            &my_addr,
+            hosted_rendezvous,
+            deadline,
+        )?;
+        let conns = bootstrap::connect_mesh(cfg.rank, cfg.world, &table, &listener, deadline)?;
+
+        let (inbox_tx, inbox) = channel::<Msg>();
+        let mut writers: Vec<Option<PeerWriter>> = Vec::with_capacity(cfg.world);
+        for (peer, conn) in conns.into_iter().enumerate() {
+            let Some(stream) = conn else {
+                writers.push(None);
+                continue;
+            };
+            // One clone per lane; the reader keeps the original so the
+            // socket closes only after the peer's FIN has been drained.
+            let write_half = stream
+                .try_clone()
+                .map_err(|e| anyhow::anyhow!("cloning stream to rank {peer}: {e}"))?;
+            let failed = Arc::new(Mutex::new(None));
+            let (queue, queue_rx) = sync_channel::<(u64, Vec<u8>)>(OUTBOUND_QUEUE_DEPTH);
+            let writer_failed = Arc::clone(&failed);
+            let handle = std::thread::Builder::new()
+                .name(format!("tcp-w{}-{peer}", cfg.rank))
+                .spawn(move || writer_loop(write_half, queue_rx, writer_failed))
+                .map_err(|e| anyhow::anyhow!("spawning writer thread: {e}"))?;
+            let reader_tx = inbox_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("tcp-r{}-{peer}", cfg.rank))
+                .spawn(move || reader_loop(peer, stream, reader_tx))
+                .map_err(|e| anyhow::anyhow!("spawning reader thread: {e}"))?;
+            writers.push(Some(PeerWriter {
+                queue,
+                failed,
+                handle: Some(handle),
+            }));
+        }
+        // Drop our own inbox sender: once every reader thread has exited,
+        // `next_msg` observes disconnection instead of blocking forever.
+        drop(inbox_tx);
+        Ok(TcpTransport {
+            rank: cfg.rank,
+            world: cfg.world,
+            writers,
+            inbox,
+            bytes_sent: 0,
+            msgs_sent: 0,
+        })
+    }
+
+    fn peer_gone(&self, peer: usize, tag: u64, detail: String) -> TransportError {
+        TransportError::PeerGone {
+            rank: self.rank,
+            peer,
+            tag: Some(tag),
+            detail,
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError> {
+        let len = bytes.len() as u64;
+        if bytes.len() > MAX_FRAME_BYTES {
+            return Err(self.peer_gone(
+                to,
+                tag,
+                format!("payload of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte frame limit"),
+            ));
+        }
+        let Some(writer) = self.writers[to].as_ref() else {
+            return Err(self.peer_gone(to, tag, "no connection to peer".to_string()));
+        };
+        if let Some(detail) = writer.failed.lock().unwrap().clone() {
+            return Err(self.peer_gone(to, tag, detail));
+        }
+        if writer.queue.send((tag, bytes)).is_err() {
+            let detail = writer
+                .failed
+                .lock()
+                .unwrap()
+                .clone()
+                .unwrap_or_else(|| "connection closed".to_string());
+            return Err(self.peer_gone(to, tag, detail));
+        }
+        self.bytes_sent += len;
+        self.msgs_sent += 1;
+        Ok(())
+    }
+
+    fn next_msg(&mut self) -> Result<Msg, TransportError> {
+        self.inbox.recv().map_err(|_| TransportError::Disconnected {
+            detail: "all peer connections closed".to_string(),
+        })
+    }
+
+    fn try_next_msg(&mut self) -> Result<Option<Msg>, TransportError> {
+        match self.inbox.try_recv() {
+            Ok(m) => Ok(Some(m)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(TransportError::Disconnected {
+                detail: "all peer connections closed".to_string(),
+            }),
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    fn msgs_sent(&self) -> u64 {
+        self.msgs_sent
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // Close every outbound queue, then wait for the writers to flush
+        // and FIN. Reader threads are left to drain until the peers'
+        // symmetric FINs arrive (they hold the socket, so it closes only
+        // once the peer is done writing — no RST races on teardown).
+        for slot in &mut self.writers {
+            if let Some(writer) = slot.take() {
+                let PeerWriter { queue, failed: _, handle } = writer;
+                drop(queue);
+                if let Some(h) = handle {
+                    let _ = h.join();
+                }
+            }
+        }
+    }
+}
+
+fn record_failure(failed: &Arc<Mutex<Option<String>>>, e: std::io::Error) {
+    let mut slot = failed.lock().unwrap();
+    if slot.is_none() {
+        *slot = Some(e.to_string());
+    }
+}
+
+fn write_frame(w: &mut impl Write, tag: u64, payload: &[u8]) -> std::io::Result<()> {
+    let mut header = [0u8; 12];
+    header[..8].copy_from_slice(&tag.to_le_bytes());
+    header[8..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)
+}
+
+/// Drain the outbound queue, writing frames until the queue closes (clean
+/// shutdown) or the socket errors (peer gone). Flushes whenever the queue
+/// runs dry so latency never waits on the buffer filling.
+fn writer_loop(
+    stream: TcpStream,
+    rx: Receiver<(u64, Vec<u8>)>,
+    failed: Arc<Mutex<Option<String>>>,
+) {
+    let mut w = BufWriter::with_capacity(1 << 16, &stream);
+    'outer: while let Ok(mut msg) = rx.recv() {
+        loop {
+            if let Err(e) = write_frame(&mut w, msg.0, &msg.1) {
+                record_failure(&failed, e);
+                break 'outer;
+            }
+            match rx.try_recv() {
+                Ok(next) => msg = next,
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
+                    if let Err(e) = w.flush() {
+                        record_failure(&failed, e);
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    let _ = w.flush();
+    drop(w);
+    // FIN: tells the peer's reader this rank is done sending.
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+/// Read frames from one peer and demux them into the shared inbox. On any
+/// error (EOF after the peer's FIN, connection reset) a control message
+/// marks the peer down, then the socket is drained so the peer's writer
+/// can never block on a full kernel buffer during teardown.
+fn reader_loop(peer: usize, mut stream: TcpStream, inbox: Sender<Msg>) {
+    let mut header = [0u8; 12];
+    loop {
+        if let Err(e) = stream.read_exact(&mut header) {
+            let _ = inbox.send((peer, CTRL_PEER_DOWN_TAG, e.to_string().into_bytes()));
+            return;
+        }
+        let tag = u64::from_le_bytes(header[..8].try_into().unwrap());
+        let len = u32::from_le_bytes(header[8..].try_into().unwrap()) as usize;
+        if len > MAX_FRAME_BYTES {
+            let msg = format!("corrupt frame: {len} byte payload");
+            let _ = inbox.send((peer, CTRL_PEER_DOWN_TAG, msg.into_bytes()));
+            return;
+        }
+        let mut payload = vec![0u8; len];
+        if let Err(e) = stream.read_exact(&mut payload) {
+            let _ = inbox.send((peer, CTRL_PEER_DOWN_TAG, e.to_string().into_bytes()));
+            return;
+        }
+        if inbox.send((peer, tag, payload)).is_err() {
+            // Local transport dropped; keep the socket drained until the
+            // peer's FIN so its writer can finish flushing.
+            let mut sink = [0u8; 1 << 16];
+            while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
+            return;
+        }
+    }
+}
+
+/// Bootstrap a TCP-backed [`Endpoint`] (the worker-mode entry point).
+pub fn tcp_endpoint(
+    cfg: &TcpConfig,
+    hosted_rendezvous: Option<TcpListener>,
+) -> anyhow::Result<Endpoint> {
+    Ok(Endpoint::new(Box::new(TcpTransport::connect(
+        cfg,
+        hosted_rendezvous,
+    )?)))
+}
+
+/// Run a closure on every rank of a fresh TCP group over loopback, one OS
+/// thread per rank — same contract as [`super::run_group`], but every
+/// message crosses a real socket. Used by the transport-equivalence tests
+/// and benches; multi-process runs go through `training::launch` instead.
+pub fn run_tcp_group<T: Send>(world: usize, f: impl Fn(Endpoint) -> T + Send + Sync) -> Vec<T> {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("binding loopback rendezvous");
+    let rendezvous = listener.local_addr().expect("rendezvous addr").to_string();
+    let mut hosted = Some(listener);
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let hosted = if rank == 0 { hosted.take() } else { None };
+                let rendezvous = rendezvous.clone();
+                scope.spawn(move || {
+                    let cfg = TcpConfig {
+                        rank,
+                        world,
+                        rendezvous,
+                        ..TcpConfig::default()
+                    };
+                    let ep = tcp_endpoint(&cfg, hosted).expect("tcp bootstrap");
+                    f(ep)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_send_recv_over_loopback() {
+        let results = run_tcp_group(2, |mut ep| {
+            if ep.rank() == 0 {
+                ep.send(1, 7, vec![1, 2, 3]).unwrap();
+                vec![]
+            } else {
+                ep.recv(0, 7).unwrap()
+            }
+        });
+        assert_eq!(results[1], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn tag_matching_reorders_over_sockets() {
+        let results = run_tcp_group(2, |mut ep| {
+            if ep.rank() == 0 {
+                ep.send(1, 1, vec![1]).unwrap();
+                ep.send(1, 2, vec![2]).unwrap();
+                ep.send(1, 3, vec![3]).unwrap();
+                vec![]
+            } else {
+                let a = ep.recv(0, 3).unwrap();
+                let b = ep.recv(0, 2).unwrap();
+                let c = ep.recv(0, 1).unwrap();
+                vec![a[0], b[0], c[0]]
+            }
+        });
+        assert_eq!(results[1], vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn all_to_all_with_large_payloads() {
+        let world = 4;
+        let n = 100_000;
+        let results = run_tcp_group(world, move |mut ep| {
+            let me = ep.rank() as u8;
+            for d in 0..ep.world() {
+                if d != ep.rank() {
+                    ep.send(d, 5, vec![me; n]).unwrap();
+                }
+            }
+            let mut ok = true;
+            for s in 0..ep.world() {
+                if s != ep.rank() {
+                    let m = ep.recv(s, 5).unwrap();
+                    ok &= m.len() == n && m.iter().all(|&b| b == s as u8);
+                }
+            }
+            ok
+        });
+        assert!(results.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn byte_accounting_counts_payload_bytes() {
+        let results = run_tcp_group(2, |mut ep| {
+            if ep.rank() == 0 {
+                ep.send(1, 0, vec![0u8; 100]).unwrap();
+                ep.send(1, 1, vec![0u8; 28]).unwrap();
+                // Make teardown deterministic: wait for the ack.
+                ep.recv(1, 2).unwrap();
+                (ep.bytes_sent(), ep.msgs_sent())
+            } else {
+                ep.recv(0, 0).unwrap();
+                ep.recv(0, 1).unwrap();
+                ep.send(0, 2, vec![1]).unwrap();
+                (ep.bytes_sent(), ep.msgs_sent())
+            }
+        });
+        assert_eq!(results[0], (128, 2));
+        assert_eq!(results[1], (1, 1));
+    }
+
+    #[test]
+    fn dead_peer_surfaces_as_typed_error_not_hang() {
+        let results = run_tcp_group(2, |mut ep| {
+            if ep.rank() == 1 {
+                // Rank 1 leaves immediately; dropping the transport FINs
+                // its sockets.
+                return None;
+            }
+            // Rank 0 blocks in recv: the peer's FIN must surface as
+            // PeerGone naming rank, peer and tag.
+            match ep.recv(1, 9) {
+                Ok(_) => Some("unexpected message".to_string()),
+                Err(TransportError::PeerGone { rank, peer, tag, .. }) => {
+                    assert_eq!(rank, 0);
+                    assert_eq!(peer, 1);
+                    assert_eq!(tag, Some(9));
+                    None
+                }
+                Err(other) => Some(format!("wrong error: {other}")),
+            }
+        });
+        assert_eq!(results, vec![None, None]);
+    }
+
+    #[test]
+    fn empty_payload_frames_roundtrip() {
+        let results = run_tcp_group(2, |mut ep| {
+            if ep.rank() == 0 {
+                ep.send(1, 0, Vec::new()).unwrap();
+                ep.recv(1, 1).unwrap().len()
+            } else {
+                let got = ep.recv(0, 0).unwrap();
+                ep.send(0, 1, Vec::new()).unwrap();
+                got.len()
+            }
+        });
+        assert_eq!(results, vec![0, 0]);
+    }
+}

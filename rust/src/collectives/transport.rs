@@ -1,105 +1,316 @@
 //! Point-to-point transport between ranks.
 //!
-//! The paper runs NCCL/MPI between 8 GPUs; here the workers are OS threads
-//! in one process, so the transport is a mesh of unbounded channels with
-//! tag matching (MPI semantics: a receive for `(from, tag)` only matches a
-//! message sent with that tag). Every byte that crosses an endpoint is
-//! counted, so experiments can report exact bytes-on-wire per collective.
+//! The paper runs NCCL/MPI between 8 GPUs; this module is the pluggable
+//! seam under the collectives. A [`Transport`] moves raw `(from, tag,
+//! payload)` messages; the [`Endpoint`] on top owns MPI-style tag matching
+//! (a receive for `(from, tag)` only matches a message sent with that tag)
+//! and the out-of-order stash — shared by every backend, so the collectives
+//! in `ring.rs` / `allgather.rs` / `nonblocking.rs` are backend-agnostic.
+//!
+//! Two backends exist:
+//! - [`InProcTransport`] (here): a mesh of unbounded channels between OS
+//!   threads in one process — the testing/bench fabric.
+//! - [`crate::collectives::tcp::TcpTransport`]: length-prefixed frames over
+//!   real sockets between OS processes, bootstrapped by a rendezvous
+//!   (`bootstrap.rs`).
+//!
+//! Every byte that crosses an endpoint is counted, so experiments can
+//! report exact bytes-on-wire per collective. Failures are **typed**: a
+//! dead peer surfaces as [`TransportError::PeerGone`] naming the rank, peer
+//! and tag instead of panicking the worker (the TCP backend maps connection
+//! reset onto the same error).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
 /// A message in flight: (source, tag, payload).
-type Msg = (usize, u64, Vec<u8>);
+pub type Msg = (usize, u64, Vec<u8>);
 
-/// Rank-local endpoint of the mesh. `recv` requires `&mut self` because
-/// out-of-order messages are stashed locally until a matching receive.
+/// Reserved tag used by backends to report an unreachable peer in-band
+/// (the TCP reader thread injects it on EOF/reset). Never used by
+/// collectives: `Comm` tags count up from 0.
+pub const CTRL_PEER_DOWN_TAG: u64 = u64::MAX;
+
+/// Typed transport failure — what a collective returns when a peer dies
+/// mid-operation instead of poisoning the process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// A specific peer is unreachable (worker thread died, connection
+    /// reset, socket closed).
+    PeerGone {
+        /// The rank observing the failure.
+        rank: usize,
+        /// The unreachable peer.
+        peer: usize,
+        /// The tag being sent/received when the failure surfaced, if any.
+        tag: Option<u64>,
+        detail: String,
+    },
+    /// The whole fabric is gone (mesh torn down, comm lane dead).
+    Disconnected { detail: String },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::PeerGone { rank, peer, tag, detail } => {
+                write!(f, "rank {rank}: peer {peer} is gone")?;
+                if let Some(t) = tag {
+                    write!(f, " (tag {t})")?;
+                }
+                write!(f, ": {detail}")
+            }
+            TransportError::Disconnected { detail } => {
+                write!(f, "transport disconnected: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// A point-to-point message mover between `world` ranks. Implementations
+/// deliver messages from any peer in arrival order; the [`Endpoint`] above
+/// them restores `(from, tag)` matching.
+pub trait Transport: Send {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+    /// Send one tagged payload to `to` (never `self.rank()`).
+    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError>;
+    /// Blocking: the next inbound message from any peer.
+    fn next_msg(&mut self) -> Result<Msg, TransportError>;
+    /// Non-blocking variant of [`Transport::next_msg`].
+    fn try_next_msg(&mut self) -> Result<Option<Msg>, TransportError>;
+    /// Total payload bytes this rank has sent.
+    fn bytes_sent(&self) -> u64;
+    fn msgs_sent(&self) -> u64;
+}
+
+/// Which transport backend a run uses (`TrainConfig.transport`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Channel mesh between OS threads in one process.
+    #[default]
+    InProc,
+    /// Length-prefixed TCP sockets between OS processes.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn from_name(name: &str) -> anyhow::Result<TransportKind> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "inproc" | "in-proc" | "thread" | "threads" => TransportKind::InProc,
+            "tcp" | "socket" | "sockets" => TransportKind::Tcp,
+            other => anyhow::bail!("unknown transport '{other}' (inproc|tcp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Rank-local endpoint: a backend plus the tag-matching stash. `recv`
+/// requires `&mut self` because out-of-order messages are stashed locally
+/// until a matching receive is posted.
 pub struct Endpoint {
-    rank: usize,
-    world: usize,
-    /// senders[d] delivers to rank d's inbox.
-    senders: Vec<Sender<Msg>>,
-    inbox: Receiver<Msg>,
+    transport: Box<dyn Transport>,
     /// Messages that arrived before their matching recv was posted.
     stash: HashMap<(usize, u64), Vec<Vec<u8>>>,
-    bytes_sent: Arc<AtomicU64>,
-    msgs_sent: Arc<AtomicU64>,
+    /// Peers reported down by the backend (via [`CTRL_PEER_DOWN_TAG`]).
+    dead: HashMap<usize, String>,
 }
 
 impl Endpoint {
+    pub fn new(transport: Box<dyn Transport>) -> Endpoint {
+        Endpoint {
+            transport,
+            stash: HashMap::new(),
+            dead: HashMap::new(),
+        }
+    }
+
     pub fn rank(&self) -> usize {
-        self.rank
+        self.transport.rank()
     }
 
     pub fn world(&self) -> usize {
-        self.world
+        self.transport.world()
     }
 
-    /// Total payload bytes this endpoint has sent (shared counter across the
-    /// mesh lives per-endpoint; sum over endpoints = bytes on the "wire").
+    /// Total payload bytes this endpoint has sent (sum over endpoints =
+    /// bytes on the "wire").
     pub fn bytes_sent(&self) -> u64 {
-        self.bytes_sent.load(Ordering::Relaxed)
+        self.transport.bytes_sent()
     }
 
     pub fn msgs_sent(&self) -> u64 {
-        self.msgs_sent.load(Ordering::Relaxed)
+        self.transport.msgs_sent()
     }
 
-    pub fn send(&self, to: usize, tag: u64, bytes: Vec<u8>) {
-        assert!(to < self.world, "rank {to} out of range");
-        assert_ne!(to, self.rank, "self-send is a bug in the collective");
-        self.bytes_sent.fetch_add(bytes.len() as u64, Ordering::Relaxed);
-        self.msgs_sent.fetch_add(1, Ordering::Relaxed);
-        // Receiver hung up ⇒ worker died; the collective can't complete.
-        self.senders[to]
-            .send((self.rank, tag, bytes))
-            .unwrap_or_else(|_| panic!("rank {to} is gone (worker thread died)"));
+    pub fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError> {
+        assert!(to < self.world(), "rank {to} out of range");
+        assert_ne!(to, self.rank(), "self-send is a bug in the collective");
+        self.transport.send(to, tag, bytes)
     }
 
     /// Blocking tag-matched receive.
-    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<u8> {
-        // Check the stash first.
-        if let Some(q) = self.stash.get_mut(&(from, tag)) {
-            if !q.is_empty() {
-                let m = q.remove(0);
-                if q.is_empty() {
-                    self.stash.remove(&(from, tag));
-                }
-                return m;
-            }
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>, TransportError> {
+        if let Some(m) = self.take_stashed(from, tag) {
+            return Ok(m);
+        }
+        if let Some(detail) = self.dead.get(&from) {
+            return Err(self.peer_gone(from, Some(tag), detail.clone()));
         }
         loop {
-            let (src, t, bytes) = self
-                .inbox
-                .recv()
-                .expect("mesh disconnected while receiving");
+            let (src, t, bytes) = self.transport.next_msg()?;
+            if t == CTRL_PEER_DOWN_TAG {
+                let detail = String::from_utf8_lossy(&bytes).into_owned();
+                self.dead.insert(src, detail.clone());
+                if src == from {
+                    return Err(self.peer_gone(from, Some(tag), detail));
+                }
+                continue;
+            }
             if src == from && t == tag {
-                return bytes;
+                return Ok(bytes);
             }
             self.stash.entry((src, t)).or_default().push(bytes);
         }
     }
 
     /// Non-blocking probe used by failure-injection tests.
-    pub fn try_recv(&mut self, from: usize, tag: u64) -> Option<Vec<u8>> {
-        if let Some(q) = self.stash.get_mut(&(from, tag)) {
-            if !q.is_empty() {
-                return Some(q.remove(0));
-            }
+    pub fn try_recv(&mut self, from: usize, tag: u64) -> Result<Option<Vec<u8>>, TransportError> {
+        if let Some(m) = self.take_stashed(from, tag) {
+            return Ok(Some(m));
         }
-        while let Ok((src, t, bytes)) = self.inbox.try_recv() {
+        while let Some((src, t, bytes)) = self.transport.try_next_msg()? {
+            if t == CTRL_PEER_DOWN_TAG {
+                let detail = String::from_utf8_lossy(&bytes).into_owned();
+                self.dead.insert(src, detail.clone());
+                if src == from {
+                    return Err(self.peer_gone(from, Some(tag), detail));
+                }
+                continue;
+            }
             if src == from && t == tag {
-                return Some(bytes);
+                return Ok(Some(bytes));
             }
             self.stash.entry((src, t)).or_default().push(bytes);
         }
-        None
+        if let Some(detail) = self.dead.get(&from) {
+            return Err(self.peer_gone(from, Some(tag), detail.clone()));
+        }
+        Ok(None)
+    }
+
+    fn take_stashed(&mut self, from: usize, tag: u64) -> Option<Vec<u8>> {
+        let q = self.stash.get_mut(&(from, tag))?;
+        if q.is_empty() {
+            return None;
+        }
+        let m = q.remove(0);
+        if q.is_empty() {
+            self.stash.remove(&(from, tag));
+        }
+        Some(m)
+    }
+
+    fn peer_gone(&self, peer: usize, tag: Option<u64>, detail: String) -> TransportError {
+        TransportError::PeerGone {
+            rank: self.rank(),
+            peer,
+            tag,
+            detail,
+        }
     }
 }
 
-/// Build a fully-connected mesh of `world` endpoints.
+/// In-process backend: a fully-connected mesh of unbounded channels, one
+/// inbox per rank. The workers are OS threads in one process.
+///
+/// Dropping an endpoint notifies every peer in-band (the same
+/// [`CTRL_PEER_DOWN_TAG`] control message the TCP reader injects on EOF),
+/// so a rank blocked in `recv` on a dead peer gets a typed
+/// [`TransportError::PeerGone`] instead of hanging — per-sender FIFO means
+/// the control message can never overtake data the peer sent before dying.
+pub struct InProcTransport {
+    rank: usize,
+    world: usize,
+    /// senders[d] delivers to rank d's inbox.
+    senders: Vec<Sender<Msg>>,
+    inbox: Receiver<Msg>,
+    bytes_sent: u64,
+    msgs_sent: u64,
+}
+
+impl Transport for InProcTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError> {
+        self.bytes_sent += bytes.len() as u64;
+        self.msgs_sent += 1;
+        // Receiver hung up ⇒ worker died; the collective can't complete.
+        self.senders[to]
+            .send((self.rank, tag, bytes))
+            .map_err(|_| TransportError::PeerGone {
+                rank: self.rank,
+                peer: to,
+                tag: Some(tag),
+                detail: "worker thread died (inbox closed)".to_string(),
+            })
+    }
+
+    fn next_msg(&mut self) -> Result<Msg, TransportError> {
+        self.inbox.recv().map_err(|_| TransportError::Disconnected {
+            detail: "mesh disconnected while receiving".to_string(),
+        })
+    }
+
+    fn try_next_msg(&mut self) -> Result<Option<Msg>, TransportError> {
+        match self.inbox.try_recv() {
+            Ok(m) => Ok(Some(m)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(TransportError::Disconnected {
+                detail: "mesh disconnected while receiving".to_string(),
+            }),
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    fn msgs_sent(&self) -> u64 {
+        self.msgs_sent
+    }
+}
+
+impl Drop for InProcTransport {
+    fn drop(&mut self) {
+        for (peer, sender) in self.senders.iter().enumerate() {
+            if peer != self.rank {
+                let _ = sender.send((
+                    self.rank,
+                    CTRL_PEER_DOWN_TAG,
+                    b"worker exited (endpoint dropped)".to_vec(),
+                ));
+            }
+        }
+    }
+}
+
+/// Build a fully-connected in-process mesh of `world` endpoints.
 pub fn mesh(world: usize) -> Vec<Endpoint> {
     assert!(world >= 1);
     let mut senders = Vec::with_capacity(world);
@@ -112,20 +323,21 @@ pub fn mesh(world: usize) -> Vec<Endpoint> {
     receivers
         .into_iter()
         .enumerate()
-        .map(|(rank, inbox)| Endpoint {
-            rank,
-            world,
-            senders: senders.clone(),
-            inbox,
-            stash: HashMap::new(),
-            bytes_sent: Arc::new(AtomicU64::new(0)),
-            msgs_sent: Arc::new(AtomicU64::new(0)),
+        .map(|(rank, inbox)| {
+            Endpoint::new(Box::new(InProcTransport {
+                rank,
+                world,
+                senders: senders.clone(),
+                inbox,
+                bytes_sent: 0,
+                msgs_sent: 0,
+            }))
         })
         .collect()
 }
 
-/// Run a closure on every rank of a fresh mesh, one OS thread per rank —
-/// the harness used by collective tests and the trainer.
+/// Run a closure on every rank of a fresh in-process mesh, one OS thread
+/// per rank — the harness used by collective tests and the trainer.
 pub fn run_group<T: Send>(world: usize, f: impl Fn(Endpoint) -> T + Send + Sync) -> Vec<T> {
     let endpoints = mesh(world);
     let f = &f;
@@ -146,10 +358,10 @@ mod tests {
     fn basic_send_recv() {
         let results = run_group(2, |mut ep| {
             if ep.rank() == 0 {
-                ep.send(1, 7, vec![1, 2, 3]);
+                ep.send(1, 7, vec![1, 2, 3]).unwrap();
                 vec![]
             } else {
-                ep.recv(0, 7)
+                ep.recv(0, 7).unwrap()
             }
         });
         assert_eq!(results[1], vec![1, 2, 3]);
@@ -159,15 +371,15 @@ mod tests {
     fn tag_matching_reorders() {
         let results = run_group(2, |mut ep| {
             if ep.rank() == 0 {
-                ep.send(1, 1, vec![1]);
-                ep.send(1, 2, vec![2]);
-                ep.send(1, 3, vec![3]);
+                ep.send(1, 1, vec![1]).unwrap();
+                ep.send(1, 2, vec![2]).unwrap();
+                ep.send(1, 3, vec![3]).unwrap();
                 vec![]
             } else {
                 // Receive in reverse tag order; stash must hold the rest.
-                let a = ep.recv(0, 3);
-                let b = ep.recv(0, 2);
-                let c = ep.recv(0, 1);
+                let a = ep.recv(0, 3).unwrap();
+                let b = ep.recv(0, 2).unwrap();
+                let c = ep.recv(0, 1).unwrap();
                 vec![a[0], b[0], c[0]]
             }
         });
@@ -179,11 +391,11 @@ mod tests {
         let results = run_group(2, |mut ep| {
             if ep.rank() == 0 {
                 for i in 0..5u8 {
-                    ep.send(1, 9, vec![i]);
+                    ep.send(1, 9, vec![i]).unwrap();
                 }
                 vec![]
             } else {
-                (0..5).map(|_| ep.recv(0, 9)[0]).collect()
+                (0..5).map(|_| ep.recv(0, 9).unwrap()[0]).collect()
             }
         });
         assert_eq!(results[1], vec![0, 1, 2, 3, 4]);
@@ -193,12 +405,12 @@ mod tests {
     fn byte_accounting() {
         let results = run_group(2, |mut ep| {
             if ep.rank() == 0 {
-                ep.send(1, 0, vec![0u8; 100]);
-                ep.send(1, 1, vec![0u8; 28]);
+                ep.send(1, 0, vec![0u8; 100]).unwrap();
+                ep.send(1, 1, vec![0u8; 28]).unwrap();
                 ep.bytes_sent()
             } else {
-                ep.recv(0, 0);
-                ep.recv(0, 1);
+                ep.recv(0, 0).unwrap();
+                ep.recv(0, 1).unwrap();
                 ep.bytes_sent()
             }
         });
@@ -213,13 +425,13 @@ mod tests {
             let me = ep.rank() as u8;
             for d in 0..ep.world() {
                 if d != ep.rank() {
-                    ep.send(d, 42, vec![me; 10]);
+                    ep.send(d, 42, vec![me; 10]).unwrap();
                 }
             }
             let mut sum = 0u32;
             for s in 0..ep.world() {
                 if s != ep.rank() {
-                    let m = ep.recv(s, 42);
+                    let m = ep.recv(s, 42).unwrap();
                     assert_eq!(m, vec![s as u8; 10]);
                     sum += m[0] as u32;
                 }
@@ -236,11 +448,51 @@ mod tests {
     fn try_recv_nonblocking() {
         let mut eps = mesh(2);
         let mut ep1 = eps.pop().unwrap();
-        let ep0 = eps.pop().unwrap();
-        assert!(ep1.try_recv(0, 5).is_none());
-        ep0.send(1, 5, vec![9]);
-        // Spin briefly: channel delivery is immediate in-process.
-        let got = ep1.try_recv(0, 5).unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        assert!(ep1.try_recv(0, 5).unwrap().is_none());
+        ep0.send(1, 5, vec![9]).unwrap();
+        // Channel delivery is immediate in-process.
+        let got = ep1.try_recv(0, 5).unwrap().unwrap();
         assert_eq!(got, vec![9]);
+    }
+
+    #[test]
+    fn send_to_dead_peer_is_typed_error() {
+        let mut eps = mesh(2);
+        let ep1 = eps.pop().unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        drop(ep1);
+        let err = ep0.send(1, 3, vec![1]).unwrap_err();
+        match err {
+            TransportError::PeerGone { rank, peer, tag, .. } => {
+                assert_eq!(rank, 0);
+                assert_eq!(peer, 1);
+                assert_eq!(tag, Some(3));
+            }
+            other => panic!("expected PeerGone, got {other}"),
+        }
+    }
+
+    #[test]
+    fn transport_kind_names_roundtrip() {
+        for k in [TransportKind::InProc, TransportKind::Tcp] {
+            assert_eq!(TransportKind::from_name(k.name()).unwrap(), k);
+        }
+        assert!(TransportKind::from_name("carrier-pigeon").is_err());
+        assert_eq!(TransportKind::default(), TransportKind::InProc);
+    }
+
+    #[test]
+    fn error_display_names_rank_peer_and_tag() {
+        let e = TransportError::PeerGone {
+            rank: 2,
+            peer: 0,
+            tag: Some(17),
+            detail: "connection reset".to_string(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("rank 2"), "{s}");
+        assert!(s.contains("peer 0"), "{s}");
+        assert!(s.contains("tag 17"), "{s}");
     }
 }

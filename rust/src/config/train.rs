@@ -1,6 +1,7 @@
 //! Training-run configuration for the real execution plane.
 
 use super::{ScheduleSpec, SchedulingMode};
+use crate::collectives::TransportKind;
 use crate::compression::CodecKind;
 use crate::coordinator::PipelineMode;
 use crate::util::cli::Args;
@@ -9,8 +10,28 @@ use crate::util::json::Value;
 /// Configuration of one data-parallel training run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
-    /// Number of data-parallel workers (threads, one PJRT execution each).
+    /// Number of data-parallel workers. With `--transport inproc` they are
+    /// threads in this process; with `--transport tcp` this is the world
+    /// size and each worker is a separate OS process (`--rank N` selects
+    /// which rank this process is). `--world` is accepted as an alias.
     pub workers: usize,
+    /// Which transport the collectives run over.
+    pub transport: TransportKind,
+    /// This process's rank (TCP transport only; inproc spawns all ranks).
+    pub rank: usize,
+    /// Rendezvous address: rank 0 listens, every other rank dials.
+    pub rendezvous: String,
+    /// Host this rank binds/advertises its data listener on — must be
+    /// routable from the other ranks (loopback for single-machine runs).
+    pub advertise_host: String,
+    /// Budget for the TCP rendezvous + mesh formation (seconds) — raise it
+    /// when ranks are started by hand on different machines.
+    pub bootstrap_timeout_secs: u64,
+    /// Synthetic step source: run the trainer against deterministic
+    /// profile-shaped gradients instead of the PJRT artifact (no XLA
+    /// needed — what CI's multi-process smoke run uses). The value names
+    /// the model profile ("tiny", "resnet50-cifar10", …).
+    pub synthetic: Option<String>,
     /// Optimization steps to run.
     pub steps: usize,
     pub lr: f32,
@@ -51,6 +72,12 @@ impl Default for TrainConfig {
     fn default() -> Self {
         Self {
             workers: 2,
+            transport: TransportKind::InProc,
+            rank: 0,
+            rendezvous: "127.0.0.1:29500".to_string(),
+            advertise_host: "127.0.0.1".to_string(),
+            bootstrap_timeout_secs: 60,
+            synthetic: None,
             steps: 200,
             lr: 0.05,
             momentum: 0.9,
@@ -78,6 +105,15 @@ impl TrainConfig {
         let d = TrainConfig::default();
         Ok(TrainConfig {
             workers: v.usize_or("workers", d.workers),
+            transport: TransportKind::from_name(v.str_or("transport", d.transport.name()))?,
+            rank: v.usize_or("rank", d.rank),
+            rendezvous: v.str_or("rendezvous", &d.rendezvous).to_string(),
+            advertise_host: v.str_or("advertise_host", &d.advertise_host).to_string(),
+            bootstrap_timeout_secs: v.usize_or(
+                "bootstrap_timeout_secs",
+                d.bootstrap_timeout_secs as usize,
+            ) as u64,
+            synthetic: v.get("synthetic").and_then(Value::as_str).map(String::from),
             steps: v.usize_or("steps", d.steps),
             lr: v.f64_or("lr", d.lr as f64) as f32,
             momentum: v.f64_or("momentum", d.momentum as f64) as f32,
@@ -100,7 +136,28 @@ impl TrainConfig {
 
     /// Apply CLI overrides (`--workers 4 --codec dgc --schedule layerwise …`).
     pub fn apply_cli(mut self, args: &Args) -> anyhow::Result<TrainConfig> {
+        // `--world` is the launcher-facing alias; `--workers` wins if both
+        // are given.
+        if let Some(w) = args.usize("world") {
+            self.workers = w;
+        }
         self.workers = args.usize_or("workers", self.workers);
+        if let Some(t) = args.str("transport") {
+            self.transport = TransportKind::from_name(t)?;
+        }
+        self.rank = args.usize_or("rank", self.rank);
+        if let Some(r) = args.str("rendezvous") {
+            self.rendezvous = r.to_string();
+        }
+        if let Some(a) = args.str("advertise") {
+            self.advertise_host = a.to_string();
+        }
+        self.bootstrap_timeout_secs =
+            args.u64_or("bootstrap-timeout-secs", self.bootstrap_timeout_secs);
+        if let Some(s) = args.str("synthetic") {
+            // Bare `--synthetic` selects the tiny profile.
+            self.synthetic = Some(if s == "true" { "tiny".to_string() } else { s.to_string() });
+        }
         self.steps = args.usize_or("steps", self.steps);
         self.lr = args.f64_or("lr", self.lr as f64) as f32;
         self.momentum = args.f64_or("momentum", self.momentum as f64) as f32;
@@ -140,6 +197,15 @@ impl TrainConfig {
     pub fn to_json(&self) -> Value {
         Value::from_pairs(vec![
             ("workers", Value::from(self.workers)),
+            ("transport", Value::from(self.transport.name())),
+            ("rank", Value::from(self.rank)),
+            ("rendezvous", Value::from(self.rendezvous.clone())),
+            ("advertise_host", Value::from(self.advertise_host.clone())),
+            ("bootstrap_timeout_secs", Value::from(self.bootstrap_timeout_secs)),
+            (
+                "synthetic",
+                self.synthetic.clone().map(Value::from).unwrap_or(Value::Null),
+            ),
             ("steps", Value::from(self.steps)),
             ("lr", Value::from(self.lr as f64)),
             ("momentum", Value::from(self.momentum as f64)),
@@ -211,6 +277,53 @@ mod tests {
         assert_eq!(c.pipeline, PipelineMode::Pipelined);
         let v = Value::parse(r#"{"pipeline": "bogus"}"#).unwrap();
         assert!(TrainConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn transport_fields_roundtrip_and_cli_override() {
+        let d = TrainConfig::default();
+        assert_eq!(d.transport, TransportKind::InProc);
+        assert_eq!(d.rank, 0);
+        assert!(d.synthetic.is_none());
+        let j = d.to_json();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.transport, d.transport);
+        assert_eq!(c.rendezvous, d.rendezvous);
+        assert!(c.synthetic.is_none());
+
+        let args = Args::parse(
+            [
+                "x",
+                "--transport",
+                "tcp",
+                "--rank",
+                "2",
+                "--world",
+                "4",
+                "--rendezvous",
+                "127.0.0.1:4242",
+                "--synthetic",
+                "tiny",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let c = TrainConfig::default().apply_cli(&args).unwrap();
+        assert_eq!(c.transport, TransportKind::Tcp);
+        assert_eq!(c.rank, 2);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.rendezvous, "127.0.0.1:4242");
+        assert_eq!(c.synthetic.as_deref(), Some("tiny"));
+
+        // Bare `--synthetic` (boolean form) selects the tiny profile.
+        let args = Args::parse(["x", "--synthetic"].iter().map(|s| s.to_string()));
+        let c = TrainConfig::default().apply_cli(&args).unwrap();
+        assert_eq!(c.synthetic.as_deref(), Some("tiny"));
+
+        let args = Args::parse(
+            ["x", "--transport", "smoke-signals"].iter().map(|s| s.to_string()),
+        );
+        assert!(TrainConfig::default().apply_cli(&args).is_err());
     }
 
     #[test]

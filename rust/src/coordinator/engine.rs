@@ -1,14 +1,20 @@
 //! The exchange engine: merge → encode → collective → decode → scatter for
 //! every tensor group, in either [`PipelineMode`].
 //!
-//! Equivalence invariant (tested in `tests/pipeline_equivalence.rs`): both
-//! modes perform the *same* sequence of codec and collective operations —
-//! encodes in group order on the compute lane (so RNG draws and EF updates
-//! are identical), collectives in group order on one communicator (so tag
+//! Equivalence invariant (tested in `tests/pipeline_equivalence.rs` and,
+//! across transports, `tests/transport_equivalence.rs`): both modes perform
+//! the *same* sequence of codec and collective operations — encodes in
+//! group order on the compute lane (so RNG draws and EF updates are
+//! identical), collectives in group order on one communicator (so tag
 //! sequencing and reduction order are identical), decodes in group order
 //! with the same accumulate-then-average arithmetic. Pipelining changes
 //! only *when* things run, never *what* runs — gradients and codec state
-//! are bit-identical.
+//! are bit-identical. The same argument applies to the transport backend:
+//! the engine sees only `Comm`, so sockets vs channels cannot change a bit.
+//!
+//! Failure semantics: a peer dying mid-collective fails the exchange with a
+//! typed [`TransportError`] (rank, peer, tag) instead of poisoning the
+//! process — the trainer turns it into a step-level error with context.
 //!
 //! Allocation discipline: merge/decode scratch is double-buffered
 //! (`flats`), and wire payloads cycle through `wire_pool`, so the
@@ -16,7 +22,7 @@
 //! transport itself does.
 
 use super::{ExchangeStats, GroupSample, PipelineMode};
-use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome};
+use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome, TransportError};
 use crate::compression::{Codec, CodecKind, Collective};
 use crate::scheduler::Partition;
 use crate::util::rng::Xoshiro256;
@@ -139,15 +145,17 @@ impl ExchangeEngine {
     }
 
     /// Aggregate gradients across the group. `grads` holds per-tensor
-    /// buffers in **backprop order**; on return each buffer contains the
-    /// mean of the (compressed) gradients over all workers.
+    /// buffers in **backprop order**; on success each buffer contains the
+    /// mean of the (compressed) gradients over all workers. A dead rank
+    /// fails the step with a typed [`TransportError`] naming the peer and
+    /// tag.
     pub fn exchange(
         &mut self,
         comm: &mut Comm,
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
         mode: PipelineMode,
-    ) -> ExchangeStats {
+    ) -> Result<ExchangeStats, TransportError> {
         assert_eq!(grads.len(), self.sizes.len());
         match mode {
             PipelineMode::Serial => self.exchange_serial(comm, grads, rng),
@@ -162,7 +170,7 @@ impl ExchangeEngine {
         comm: &mut Comm,
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
-    ) -> ExchangeStats {
+    ) -> Result<ExchangeStats, TransportError> {
         let world = comm.world() as f32;
         let rank = comm.rank();
         let y = self.partition.num_groups();
@@ -211,10 +219,10 @@ impl ExchangeEngine {
             let sw = Stopwatch::start();
             let outcome = match collective {
                 Collective::AllReduce => {
-                    comm.allreduce_wire(&mut wire, codecs[j].as_ref());
+                    comm.allreduce_wire(&mut wire, codecs[j].as_ref())?;
                     CommOutcome::Reduced(wire)
                 }
-                Collective::AllGather => CommOutcome::Gathered(comm.allgather(wire)),
+                Collective::AllGather => CommOutcome::Gathered(comm.allgather(wire)?),
             };
             let comm_secs = sw.elapsed().as_secs_f64();
             stats.comm_secs += comm_secs;
@@ -243,7 +251,7 @@ impl ExchangeEngine {
 
         stats.comm_exposed_secs = stats.comm_secs;
         stats.bytes_sent = comm.bytes_sent() - bytes_before;
-        stats
+        Ok(stats)
     }
 
     /// Pipelined schedule: the comm lane runs group `j`'s collective while
@@ -253,7 +261,7 @@ impl ExchangeEngine {
         comm: &mut Comm,
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
-    ) -> ExchangeStats {
+    ) -> Result<ExchangeStats, TransportError> {
         let world = comm.world() as f32;
         let rank = comm.rank();
         let y = self.partition.num_groups();
@@ -279,36 +287,59 @@ impl ExchangeEngine {
         group_log.clear();
         group_log.resize(y, GroupSample::default());
 
-        let ((), _lane_busy) = lane_scope(comm, |lane| {
-            let mut inflight: Option<(usize, CommHandle)> = None;
-            for j in 0..y {
-                let n = group_elems[j];
-                group_log[j].group = j;
-                group_log[j].elems = n;
+        let (result, _lane_busy) =
+            lane_scope(comm, |lane| -> Result<(), TransportError> {
+                let mut inflight: Option<(usize, CommHandle)> = None;
+                for j in 0..y {
+                    let n = group_elems[j];
+                    group_log[j].group = j;
+                    group_log[j].elems = n;
 
-                // --- merge + encode group j (overlaps group j−1's comm) ---
-                let flat = &mut flats[j % 2];
-                flat.clear();
-                for i in partition.group_range(j) {
-                    flat.extend_from_slice(&grads[i]);
+                    // --- merge + encode group j (overlaps group j−1's comm)
+                    let flat = &mut flats[j % 2];
+                    flat.clear();
+                    for i in partition.group_range(j) {
+                        flat.extend_from_slice(&grads[i]);
+                    }
+                    debug_assert_eq!(flat.len(), n);
+
+                    let mut wire = wire_pool.pop().unwrap_or_default();
+                    let sw = Stopwatch::start();
+                    codecs[j].encode_into(flat, rng, &mut wire);
+                    let enc_secs = sw.elapsed().as_secs_f64();
+                    stats.encode_secs += enc_secs;
+                    group_log[j].encode_secs = enc_secs;
+
+                    // --- hand group j to the comm lane ----------------------
+                    let handle = match collective {
+                        Collective::AllReduce => lane.start_allreduce(wire, *kind, n),
+                        Collective::AllGather => lane.start_allgather(wire),
+                    };
+
+                    // --- drain group j−1 (its comm overlapped our encode) ---
+                    if let Some((pj, ph)) = inflight.replace((j, handle)) {
+                        let before =
+                            (stats.comm_secs, stats.comm_exposed_secs, stats.decode_secs);
+                        complete_group(
+                            pj,
+                            ph,
+                            codecs,
+                            partition,
+                            sizes,
+                            &mut flats[pj % 2],
+                            grads,
+                            wire_pool,
+                            group_elems[pj],
+                            world,
+                            rank,
+                            &mut stats,
+                        )?;
+                        group_log[pj].comm_secs = stats.comm_secs - before.0;
+                        group_log[pj].comm_exposed_secs = stats.comm_exposed_secs - before.1;
+                        group_log[pj].decode_secs = stats.decode_secs - before.2;
+                    }
                 }
-                debug_assert_eq!(flat.len(), n);
-
-                let mut wire = wire_pool.pop().unwrap_or_default();
-                let sw = Stopwatch::start();
-                codecs[j].encode_into(flat, rng, &mut wire);
-                let enc_secs = sw.elapsed().as_secs_f64();
-                stats.encode_secs += enc_secs;
-                group_log[j].encode_secs = enc_secs;
-
-                // --- hand group j to the comm lane ------------------------
-                let handle = match collective {
-                    Collective::AllReduce => lane.start_allreduce(wire, *kind, n),
-                    Collective::AllGather => lane.start_allgather(wire),
-                };
-
-                // --- drain group j−1 (its comm overlapped our encode) -----
-                if let Some((pj, ph)) = inflight.replace((j, handle)) {
+                if let Some((pj, ph)) = inflight.take() {
                     let before = (stats.comm_secs, stats.comm_exposed_secs, stats.decode_secs);
                     complete_group(
                         pj,
@@ -323,36 +354,17 @@ impl ExchangeEngine {
                         world,
                         rank,
                         &mut stats,
-                    );
+                    )?;
                     group_log[pj].comm_secs = stats.comm_secs - before.0;
                     group_log[pj].comm_exposed_secs = stats.comm_exposed_secs - before.1;
                     group_log[pj].decode_secs = stats.decode_secs - before.2;
                 }
-            }
-            if let Some((pj, ph)) = inflight.take() {
-                let before = (stats.comm_secs, stats.comm_exposed_secs, stats.decode_secs);
-                complete_group(
-                    pj,
-                    ph,
-                    codecs,
-                    partition,
-                    sizes,
-                    &mut flats[pj % 2],
-                    grads,
-                    wire_pool,
-                    group_elems[pj],
-                    world,
-                    rank,
-                    &mut stats,
-                );
-                group_log[pj].comm_secs = stats.comm_secs - before.0;
-                group_log[pj].comm_exposed_secs = stats.comm_exposed_secs - before.1;
-                group_log[pj].decode_secs = stats.decode_secs - before.2;
-            }
-        });
+                Ok(())
+            });
+        result?;
 
         stats.bytes_sent = comm.bytes_sent() - bytes_before;
-        stats
+        Ok(stats)
     }
 }
 
@@ -372,15 +384,16 @@ fn complete_group(
     world: f32,
     rank: usize,
     stats: &mut ExchangeStats,
-) {
+) -> Result<(), TransportError> {
     // Only the time actually spent blocked here is *exposed* comm.
     let sw = Stopwatch::start();
-    let done = handle.wait();
+    let done = handle.wait()?;
     stats.comm_exposed_secs += sw.elapsed().as_secs_f64();
     stats.comm_secs += done.secs;
     finish_group(
         j, done.outcome, codecs, partition, sizes, flat, grads, wire_pool, n, world, rank, stats,
     );
+    Ok(())
 }
 
 /// Decode + average a completed collective into `flat`, scatter into the
@@ -463,7 +476,9 @@ mod tests {
                 );
                 let mut rng = Xoshiro256::seed_from_u64(c.rank() as u64);
                 let mut grads = make_grads(c.rank(), &sizes2);
-                let stats = eng.exchange(c, &mut grads, &mut rng, PipelineMode::Pipelined);
+                let stats = eng
+                    .exchange(c, &mut grads, &mut rng, PipelineMode::Pipelined)
+                    .unwrap();
                 assert_eq!(stats.groups, y.min(4));
                 (grads, stats.bytes_sent)
             });
@@ -495,7 +510,7 @@ mod tests {
                     );
                     let mut rng = Xoshiro256::seed_from_u64(7 + c.rank() as u64);
                     let mut grads = make_grads(c.rank(), &sizes2);
-                    eng.exchange(c, &mut grads, &mut rng, mode);
+                    eng.exchange(c, &mut grads, &mut rng, mode).unwrap();
                     (grads, eng.state_digest())
                 })
             };
@@ -513,6 +528,7 @@ mod tests {
             let mut rng = Xoshiro256::seed_from_u64(0);
             let mut grads = vec![vec![1.0f32; 2048]];
             eng.exchange(c, &mut grads, &mut rng, PipelineMode::Serial)
+                .unwrap()
         });
         for s in results {
             assert_eq!(s.comm_exposed_secs, s.comm_secs);
@@ -531,7 +547,7 @@ mod tests {
                 );
                 let mut rng = Xoshiro256::seed_from_u64(9);
                 let mut grads = make_grads(c.rank(), &[50, 20, 70, 10]);
-                let stats = eng.exchange(c, &mut grads, &mut rng, mode);
+                let stats = eng.exchange(c, &mut grads, &mut rng, mode).unwrap();
                 (eng.group_samples().to_vec(), stats)
             });
             for (samples, stats) in results {
@@ -565,7 +581,8 @@ mod tests {
             );
             let mut rng = Xoshiro256::seed_from_u64(77 + c.rank() as u64);
             let mut grads = make_grads(c.rank(), &sizes);
-            eng.exchange(c, &mut grads, &mut rng, PipelineMode::Pipelined);
+            eng.exchange(c, &mut grads, &mut rng, PipelineMode::Pipelined)
+                .unwrap();
 
             let before = eng.flat_state();
             eng.repartition(Partition::from_bounds(4, vec![0, 1, 3, 4])).unwrap();
@@ -582,7 +599,8 @@ mod tests {
 
             // The engine must still aggregate correctly after the switch.
             let mut grads = make_grads(c.rank(), &sizes);
-            eng.exchange(c, &mut grads, &mut rng, PipelineMode::Serial);
+            eng.exchange(c, &mut grads, &mut rng, PipelineMode::Serial)
+                .unwrap();
             grads
         });
         assert_eq!(results[0], results[1], "ranks diverged after repartition");
@@ -608,7 +626,8 @@ mod tests {
             let mut rng = Xoshiro256::seed_from_u64(3);
             for _ in 0..3 {
                 let mut grads = make_grads(c.rank(), &[64, 64, 64, 64]);
-                eng.exchange(c, &mut grads, &mut rng, PipelineMode::Pipelined);
+                eng.exchange(c, &mut grads, &mut rng, PipelineMode::Pipelined)
+                    .unwrap();
             }
             eng.wire_pool.len()
         });

@@ -2,6 +2,10 @@
 //!
 //! Subcommands:
 //!   train     run data-parallel training with a compression schedule
+//!             (--transport tcp turns this process into ONE rank of a
+//!             multi-process group — the worker mode)
+//!   launch    spawn W local `train --transport tcp` worker processes over
+//!             loopback and assert their results agree (CI's smoke path)
 //!   simulate  scaling factors on the simulated V100 testbed (Figs. 2/4–6)
 //!   search    run Algorithm 2 and print the chosen partition
 //!   overhead  per-codec encode/decode cost sweep (Fig. 3)
@@ -21,6 +25,7 @@ fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("launch") => cmd_launch(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("search") => cmd_search(&args),
         Some("overhead") => cmd_overhead(&args),
@@ -46,6 +51,12 @@ fn print_usage() {
            train     --workers N --codec C --schedule S [--steps K] [--config f.json]\n\
                      [--sched-mode online|warmup|fixed] [--resched-interval K]\n\
                      [--resched-ewma W] [--resched-eps E]\n\
+                     [--transport inproc|tcp --rank N --world W\n\
+                      --rendezvous HOST:PORT [--advertise HOST]\n\
+                      [--bootstrap-timeout-secs S]]\n\
+                     [--synthetic [PROFILE]]   (no PJRT needed; CI smoke path)\n\
+           launch    --workers N [--rendezvous HOST:PORT] [--out-dir D]\n\
+                     [--timeout-secs S] + any train flags (forwarded to all ranks)\n\
            simulate  --model M --codec C --fabric F --workers a,b,c --schedule S\n\
            search    --model M --codec C --fabric F --workers N [--ymax Y] [--alpha A]\n\
            overhead  --codec C [--sizes 64,1024,...]\n\
@@ -64,15 +75,7 @@ fn print_usage() {
 }
 
 fn profile_for(name: &str) -> anyhow::Result<mergecomp::profiles::ModelProfile> {
-    Ok(match name {
-        "resnet50-cifar10" | "resnet50" => profiles::resnet50_cifar10(),
-        "resnet50-imagenet" => profiles::resnet50_imagenet(),
-        "resnet101-imagenet" | "resnet101" => profiles::resnet101_imagenet(),
-        "maskrcnn" | "maskrcnn-coco" => profiles::maskrcnn_coco(),
-        "transformer" => profiles::transformer::transformer_e2e(),
-        "transformer-100m" => profiles::transformer::transformer_100m(),
-        other => anyhow::bail!("unknown model profile '{other}'"),
-    })
+    profiles::by_name(name)
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -82,43 +85,116 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
     let cfg = base.apply_cli(args)?;
     println!(
-        "training: {} workers, codec {}, schedule {}, {} steps",
+        "training: {} workers ({} transport{}), codec {}, schedule {}, {} steps{}",
         cfg.workers,
+        cfg.transport.name(),
+        if cfg.transport == mergecomp::collectives::TransportKind::Tcp {
+            format!(", this process is rank {}", cfg.rank)
+        } else {
+            String::new()
+        },
         cfg.codec.name(),
         cfg.schedule.name(),
-        cfg.steps
+        cfg.steps,
+        cfg.synthetic
+            .as_deref()
+            .map(|p| format!(", synthetic source '{p}'"))
+            .unwrap_or_default()
     );
     let result = mergecomp::training::train(&cfg)?;
-    println!(
-        "partition: {} groups, bounds {:?} ({} search evals, {} online reschedules, epoch {})",
-        result.partition.num_groups(),
-        result.partition.bounds(),
-        result.search_evals,
-        result.reschedules,
-        result.schedule_epoch
-    );
-    for r in &result.records {
+    // The digest line is the cross-process agreement contract: `launch`
+    // (and the CI smoke job) compare it across ranks.
+    println!("rank {} param digest {:016x}", result.rank, result.param_digest);
+    if result.rank == 0 {
         println!(
-            "  step {:>5}  loss {:.4}  t={:.1}s  exch={}",
-            r.step,
-            r.loss,
-            r.elapsed,
-            fmt_secs(r.exchange.total_secs())
+            "partition: {} groups, bounds {:?} ({} search evals, {} online reschedules, epoch {})",
+            result.partition.num_groups(),
+            result.partition.bounds(),
+            result.search_evals,
+            result.reschedules,
+            result.schedule_epoch
+        );
+        for r in &result.records {
+            println!(
+                "  step {:>5}  loss {:.4}  t={:.1}s  exch={}",
+                r.step,
+                r.loss,
+                r.elapsed,
+                fmt_secs(r.exchange.total_secs())
+            );
+        }
+        println!(
+            "final train loss {:.4}, eval loss {:.4}, mean step {} (+{} exchange), {} sent",
+            result.final_train_loss,
+            result.eval_loss,
+            fmt_secs(result.mean_step_secs),
+            fmt_secs(result.mean_exchange.total_secs()),
+            fmt_bytes(result.total_bytes_sent as usize)
         );
     }
-    println!(
-        "final train loss {:.4}, eval loss {:.4}, mean step {} (+{} exchange), {} sent",
-        result.final_train_loss,
-        result.eval_loss,
-        fmt_secs(result.mean_step_secs),
-        fmt_secs(result.mean_exchange.total_secs()),
-        fmt_bytes(result.total_bytes_sent as usize)
-    );
     if let Some(out) = &cfg.out {
         let mut w = mergecomp::metrics::JsonlWriter::create(out)?;
         w.write(&result.to_json(&cfg))?;
         println!("wrote {out}");
     }
+    Ok(())
+}
+
+/// Spawn W local `train --transport tcp` processes over loopback, wait for
+/// them, and fail unless every rank exited 0 with the same param digest.
+fn cmd_launch(args: &Args) -> anyhow::Result<()> {
+    let world = args.usize_or("workers", args.usize_or("world", 4));
+    let out_dir = args.str_or("out-dir", "results/launch");
+    // Flags owned by the launcher itself; everything else is forwarded to
+    // the worker `train` invocations verbatim.
+    const LAUNCHER_FLAGS: &[&str] = &[
+        "workers",
+        "world",
+        "out-dir",
+        "timeout-secs",
+        "rendezvous",
+        "transport",
+        "rank",
+        "out",
+    ];
+    let mut train_flags = Vec::new();
+    for (k, v) in &args.flags {
+        if LAUNCHER_FLAGS.contains(&k.as_str()) {
+            continue;
+        }
+        train_flags.push(format!("--{k}"));
+        train_flags.push(v.clone());
+    }
+    let opts = mergecomp::training::LaunchOptions {
+        binary: std::env::current_exe()
+            .map_err(|e| anyhow::anyhow!("locating own binary: {e}"))?,
+        world,
+        rendezvous: args.str("rendezvous").map(String::from),
+        out_dir: out_dir.into(),
+        train_flags,
+        timeout: std::time::Duration::from_secs(args.u64_or("timeout-secs", 600)),
+    };
+    println!("launching {world} local TCP workers (results in {out_dir}/)");
+    let report = mergecomp::training::launch_local(&opts)?;
+    println!("rendezvous: {}", report.rendezvous);
+    for r in &report.ranks {
+        println!(
+            "  rank {}: exit {:?}  digest {}  ({})",
+            r.rank,
+            r.exit_code,
+            r.param_digest.as_deref().unwrap_or("-"),
+            r.log_path.display()
+        );
+    }
+    anyhow::ensure!(
+        report.all_exited_zero,
+        "not every rank exited 0 — see the per-rank logs in {out_dir}/"
+    );
+    anyhow::ensure!(
+        report.digests_match,
+        "param digests diverged across ranks — transport bug, see {out_dir}/"
+    );
+    println!("all {world} ranks exited 0 with identical param digests");
     Ok(())
 }
 

@@ -15,6 +15,29 @@ pub use maskrcnn::maskrcnn_coco;
 pub use resnet::{resnet101_imagenet, resnet50_cifar10, resnet50_imagenet};
 pub use transformer::transformer_lm;
 
+/// A deliberately small transformer profile (a few thousand params across
+/// ~a dozen tensors) for smoke runs: the synthetic trainer path and CI's
+/// multi-process TCP job finish in seconds with it.
+pub fn tiny() -> ModelProfile {
+    let mut p = transformer_lm(2, 16, 32, 96, 16);
+    p.name = "tiny".to_string();
+    p
+}
+
+/// Look up a model profile by CLI name.
+pub fn by_name(name: &str) -> anyhow::Result<ModelProfile> {
+    Ok(match name {
+        "tiny" => tiny(),
+        "resnet50-cifar10" | "resnet50" => resnet50_cifar10(),
+        "resnet50-imagenet" => resnet50_imagenet(),
+        "resnet101-imagenet" | "resnet101" => resnet101_imagenet(),
+        "maskrcnn" | "maskrcnn-coco" => maskrcnn_coco(),
+        "transformer" => transformer::transformer_e2e(),
+        "transformer-100m" => transformer::transformer_100m(),
+        other => anyhow::bail!("unknown model profile '{other}'"),
+    })
+}
+
 /// One gradient tensor.
 #[derive(Debug, Clone)]
 pub struct TensorInfo {
@@ -160,6 +183,15 @@ mod tests {
                 p.iter_compute_s
             );
         }
+    }
+
+    #[test]
+    fn tiny_profile_is_actually_tiny_and_resolvable() {
+        let p = by_name("tiny").unwrap();
+        assert_eq!(p.name, "tiny");
+        assert!(p.total_params() < 50_000, "tiny grew to {}", p.total_params());
+        assert!(p.num_tensors() >= 4);
+        assert!(by_name("not-a-model").is_err());
     }
 
     #[test]

@@ -227,11 +227,11 @@ impl Driver {
                 ("bounds", self.partition.bounds_to_json()),
             ]);
             let mut bytes = payload.to_string_compact().into_bytes();
-            comm.broadcast(0, &mut bytes);
+            comm.broadcast(0, &mut bytes)?;
             Ok(switched.then(|| self.partition.clone()))
         } else {
             let mut bytes = Vec::new();
-            comm.broadcast(0, &mut bytes);
+            comm.broadcast(0, &mut bytes)?;
             let text = std::str::from_utf8(&bytes)
                 .map_err(|e| anyhow::anyhow!("schedule broadcast: invalid utf8: {e}"))?;
             let v = Value::parse(text)

@@ -11,7 +11,7 @@
 //! schedule. Both modes are bit-identical in results and codec state (see
 //! `tests/pipeline_equivalence.rs`).
 
-use crate::collectives::Comm;
+use crate::collectives::{Comm, TransportError};
 use crate::compression::CodecKind;
 use crate::coordinator::ExchangeEngine;
 pub use crate::coordinator::{ExchangeStats, GroupSample, PipelineMode};
@@ -81,14 +81,15 @@ impl GradExchange {
     }
 
     /// Aggregate gradients across the group. `grads` holds per-tensor
-    /// buffers in **backprop order**; on return each buffer contains the
-    /// mean of the (compressed) gradients over all workers.
+    /// buffers in **backprop order**; on success each buffer contains the
+    /// mean of the (compressed) gradients over all workers. A dead rank
+    /// fails the step with a typed [`TransportError`].
     pub fn exchange(
         &mut self,
         comm: &mut Comm,
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
-    ) -> ExchangeStats {
+    ) -> Result<ExchangeStats, TransportError> {
         self.engine.exchange(comm, grads, rng, self.mode)
     }
 }
@@ -127,7 +128,7 @@ mod tests {
                             .with_mode(mode);
                     let mut rng = Xoshiro256::seed_from_u64(c.rank() as u64);
                     let mut grads = make_grads(c.rank(), &sizes2);
-                    ex.exchange(c, &mut grads, &mut rng);
+                    ex.exchange(c, &mut grads, &mut rng).unwrap();
                     grads
                 });
                 // Expected mean over ranks: mean(rank+1) = 2.
@@ -169,7 +170,7 @@ mod tests {
                             .with_mode(mode);
                     let mut rng = Xoshiro256::seed_from_u64(100 + c.rank() as u64);
                     let mut grads = make_grads(c.rank(), &sizes2);
-                    ex.exchange(c, &mut grads, &mut rng);
+                    ex.exchange(c, &mut grads, &mut rng).unwrap();
                     grads
                 });
                 assert_eq!(
@@ -191,7 +192,7 @@ mod tests {
                 GradExchange::new(CodecKind::Fp32, Partition::full_merge(1), sizes.clone());
             let mut rng = Xoshiro256::seed_from_u64(0);
             let mut grads = vec![vec![1.0f32; 100]];
-            ex.exchange(c, &mut grads, &mut rng)
+            ex.exchange(c, &mut grads, &mut rng).unwrap()
         });
         for s in results {
             // Ring allreduce, 2 ranks: each sends ~bytes of the buffer.
@@ -217,9 +218,9 @@ mod tests {
             Xoshiro256::seed_from_u64(99).fill_normal_f32(&mut base, 1.0);
 
             let mut g1 = vec![base.clone()];
-            ex.exchange(c, &mut g1, &mut rng);
+            ex.exchange(c, &mut g1, &mut rng).unwrap();
             let mut g2 = vec![base.clone()];
-            ex.exchange(c, &mut g2, &mut rng);
+            ex.exchange(c, &mut g2, &mut rng).unwrap();
 
             let err1: f32 = g1[0]
                 .iter()

@@ -1,0 +1,230 @@
+//! Local multi-process launcher: spawn W `mergecomp train --transport tcp`
+//! worker processes over loopback and aggregate their results.
+//!
+//! This is the zero-to-multi-process path for one machine (CI's
+//! `multiproc-smoke` job and `examples/tcp_multiproc.rs` both go through
+//! it); multi-machine runs start the same `train` command by hand/SSH with
+//! `--rendezvous` pointing at rank 0's host (see EXPERIMENTS.md).
+//!
+//! Aggregation contract: every rank writes its [`RunResult`] JSON to
+//! `<out_dir>/rank<N>.json`; the launcher asserts that (a) every rank
+//! exited 0 and (b) every rank's `param_digest` equals rank 0's —
+//! synchronous SGD over a correct transport cannot produce anything else.
+//!
+//! [`RunResult`]: super::RunResult
+
+use crate::config::load_json;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// What to launch.
+#[derive(Debug, Clone)]
+pub struct LaunchOptions {
+    /// The `mergecomp` binary to spawn (usually `std::env::current_exe()`).
+    pub binary: PathBuf,
+    /// Number of worker processes (TCP world size).
+    pub world: usize,
+    /// Rendezvous address; `None` picks a free loopback port.
+    pub rendezvous: Option<String>,
+    /// Directory for per-rank JSON results and log files (created).
+    pub out_dir: PathBuf,
+    /// Extra flags forwarded verbatim to every `train` invocation
+    /// (e.g. `["--codec", "efsignsgd", "--steps", "5"]`).
+    pub train_flags: Vec<String>,
+    /// Kill the whole group after this budget.
+    pub timeout: Duration,
+}
+
+/// One worker process's fate.
+#[derive(Debug, Clone)]
+pub struct RankOutcome {
+    pub rank: usize,
+    /// Exit code; `None` if the process was killed (timeout).
+    pub exit_code: Option<i32>,
+    /// `param_digest` parsed from the rank's JSON result, if it exited 0.
+    pub param_digest: Option<String>,
+    pub out_path: PathBuf,
+    pub log_path: PathBuf,
+}
+
+/// Aggregated verdict of one launch.
+#[derive(Debug, Clone)]
+pub struct LaunchReport {
+    pub world: usize,
+    pub rendezvous: String,
+    pub ranks: Vec<RankOutcome>,
+    pub all_exited_zero: bool,
+    /// True iff every rank's digest is present and equal to rank 0's.
+    pub digests_match: bool,
+}
+
+impl LaunchReport {
+    pub fn ok(&self) -> bool {
+        self.all_exited_zero && self.digests_match
+    }
+}
+
+/// Bind-and-release a loopback port for the rendezvous. The tiny window
+/// before rank 0 re-binds it is tolerable on a single machine (ephemeral
+/// ports are not reused that fast), and peers retry their dials anyway.
+pub fn free_loopback_port() -> anyhow::Result<u16> {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| anyhow::anyhow!("probing for a free port: {e}"))?;
+    let port = listener
+        .local_addr()
+        .map_err(|e| anyhow::anyhow!("free port addr: {e}"))?
+        .port();
+    Ok(port)
+}
+
+/// Spawn `world` local worker processes over loopback TCP and wait for all
+/// of them; returns the per-rank outcomes plus the aggregate verdict. Does
+/// not error on rank failures or digest mismatches — inspect/assert on the
+/// report (`ok()`) so callers can print diagnostics first.
+pub fn launch_local(opts: &LaunchOptions) -> anyhow::Result<LaunchReport> {
+    anyhow::ensure!(opts.world >= 1, "world must be at least 1");
+    std::fs::create_dir_all(&opts.out_dir)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", opts.out_dir.display()))?;
+    let rendezvous = match &opts.rendezvous {
+        Some(r) => r.clone(),
+        None => format!("127.0.0.1:{}", free_loopback_port()?),
+    };
+
+    let mut children = Vec::with_capacity(opts.world);
+    for rank in 0..opts.world {
+        let out_path = opts.out_dir.join(format!("rank{rank}.json"));
+        let log_path = opts.out_dir.join(format!("rank{rank}.log"));
+        let log = std::fs::File::create(&log_path)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", log_path.display()))?;
+        let log_err = log
+            .try_clone()
+            .map_err(|e| anyhow::anyhow!("cloning log handle: {e}"))?;
+        let child = Command::new(&opts.binary)
+            .arg("train")
+            .arg("--transport")
+            .arg("tcp")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--world")
+            .arg(opts.world.to_string())
+            .arg("--rendezvous")
+            .arg(&rendezvous)
+            .arg("--out")
+            .arg(&out_path)
+            .args(&opts.train_flags)
+            .stdin(Stdio::null())
+            .stdout(Stdio::from(log))
+            .stderr(Stdio::from(log_err))
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawning rank {rank} ({}): {e}", opts.binary.display()))?;
+        children.push((rank, child, out_path, log_path));
+    }
+
+    // Poll until every child exits or the deadline passes.
+    let deadline = Instant::now() + opts.timeout;
+    let mut exit_codes: Vec<Option<i32>> = vec![None; opts.world];
+    let mut done = vec![false; opts.world];
+    while done.iter().any(|d| !d) {
+        for (i, (_rank, child, _, _)) in children.iter_mut().enumerate() {
+            if done[i] {
+                continue;
+            }
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    exit_codes[i] = status.code();
+                    done[i] = true;
+                }
+                Ok(None) => {}
+                Err(e) => anyhow::bail!("waiting on rank {i}: {e}"),
+            }
+        }
+        if done.iter().any(|d| !d) {
+            if Instant::now() >= deadline {
+                for (i, (_, child, _, _)) in children.iter_mut().enumerate() {
+                    if !done[i] {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                    }
+                }
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    let mut ranks = Vec::with_capacity(opts.world);
+    for (i, (rank, _child, out_path, log_path)) in children.into_iter().enumerate() {
+        let param_digest = if exit_codes[i] == Some(0) {
+            load_json(&out_path)
+                .ok()
+                .and_then(|v| v.get("param_digest").and_then(|d| d.as_str().map(String::from)))
+        } else {
+            None
+        };
+        ranks.push(RankOutcome {
+            rank,
+            exit_code: exit_codes[i],
+            param_digest,
+            out_path,
+            log_path,
+        });
+    }
+    let all_exited_zero = ranks.iter().all(|r| r.exit_code == Some(0));
+    let digests_match = match ranks.first().and_then(|r| r.param_digest.as_ref()) {
+        Some(d0) => ranks.iter().all(|r| r.param_digest.as_ref() == Some(d0)),
+        None => false,
+    };
+    Ok(LaunchReport {
+        world: opts.world,
+        rendezvous,
+        ranks,
+        all_exited_zero,
+        digests_match,
+    })
+}
+
+/// Locate a built `mergecomp` binary for out-of-tree callers (examples):
+/// `$MERGECOMP_BIN` if set, else `target/{release,debug}/mergecomp`
+/// relative to `dir`.
+pub fn find_binary(dir: &Path) -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("MERGECOMP_BIN") {
+        let p = PathBuf::from(p);
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    for profile in ["release", "debug"] {
+        let p = dir.join("target").join(profile).join("mergecomp");
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_port_is_usable() {
+        let port = free_loopback_port().unwrap();
+        assert!(port > 0);
+        // Must be re-bindable right away.
+        std::net::TcpListener::bind(("127.0.0.1", port)).unwrap();
+    }
+
+    #[test]
+    fn launch_rejects_empty_world() {
+        let opts = LaunchOptions {
+            binary: PathBuf::from("/nonexistent"),
+            world: 0,
+            rendezvous: None,
+            out_dir: std::env::temp_dir().join("mergecomp-launch-empty"),
+            train_flags: vec![],
+            timeout: Duration::from_secs(1),
+        };
+        assert!(launch_local(&opts).is_err());
+    }
+}

@@ -1,15 +1,23 @@
 //! The real execution plane: synchronous data-parallel training of the
-//! AOT-compiled L2 model, with gradients compressed per the MergeComp
-//! schedule and exchanged through the in-process collectives.
+//! AOT-compiled L2 model (or a deterministic synthetic step source), with
+//! gradients compressed per the MergeComp schedule and exchanged through
+//! the pluggable collectives.
 //!
-//! One OS thread per worker; each owns a PJRT client, a shard of the
-//! corpus, its parameter/momentum/EF state, and a [`collectives::Comm`]
-//! endpoint. Paper Algorithm 1 is the step loop in [`trainer`].
+//! With `TrainConfig.transport = inproc`, one OS thread per worker; with
+//! `tcp`, one OS *process* per worker over real sockets (see
+//! [`launch`] for the single-machine process launcher). Each rank owns a
+//! step source, a shard of the corpus, its parameter/momentum/EF state,
+//! and a [`crate::collectives::Comm`] endpoint. Paper Algorithm 1 is the
+//! step loop in [`trainer`].
 
 mod exchange;
+pub mod launch;
 mod optimizer;
 mod trainer;
 
 pub use exchange::{ExchangeStats, GradExchange, PipelineMode};
+pub use launch::{launch_local, LaunchOptions, LaunchReport, RankOutcome};
 pub use optimizer::SgdMomentum;
-pub use trainer::{init_params as trainer_init_params, train, RunResult, StepRecord};
+pub use trainer::{
+    init_params as trainer_init_params, params_digest, train, RunResult, StepRecord,
+};

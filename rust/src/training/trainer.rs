@@ -1,7 +1,10 @@
 //! The data-parallel trainer: paper Algorithm 1 end to end.
 //!
-//! Flow (every worker thread, symmetric):
-//!   1. compile the AOT train-step artifact on a thread-local PJRT client;
+//! Flow (every rank, symmetric):
+//!   1. build the step source: the AOT train-step artifact on a
+//!      thread-local PJRT client, or the synthetic profile-shaped source
+//!      (`--synthetic <profile>`, no XLA required — what CI's
+//!      multi-process smoke run uses);
 //!   2. initialize identical parameters from the shared seed;
 //!   3. warm-up: measure step time + encode/decode/comm costs, fit the
 //!      Assumption-5 models, run Algorithm 2 (rank 0) and broadcast the
@@ -9,15 +12,27 @@
 //!   4. loop: run step → exchange gradients per the schedule → SGD update;
 //!   5. evaluate on held-out batches.
 //!
-//! Rank 0 collects the loss curve and timing records (Figs. 7–8, Table 4).
+//! Deployment shapes ([`TrainConfig::transport`]):
+//! - `inproc`: `train` spawns all `workers` ranks as OS threads over the
+//!   channel mesh (the historical single-process mode);
+//! - `tcp`: this process IS one rank (`--rank N` of `--world W`); ranks
+//!   bootstrap through the rendezvous and exchange over real sockets. The
+//!   per-rank loop is byte-for-byte the same code either way, so the two
+//!   transports produce bit-identical parameters
+//!   (`tests/transport_equivalence.rs`, `tests/multiproc_launch.rs`).
+//!
+//! Rank 0 collects the loss curve and timing records (Figs. 7–8, Table 4);
+//! every rank reports [`RunResult::param_digest`] so a launcher can assert
+//! cross-process agreement.
 
 use super::exchange::{ExchangeStats, GradExchange};
 use super::optimizer::SgdMomentum;
-use crate::collectives::{run_comm_group, Comm};
+use crate::collectives::{run_comm_group, tcp_endpoint, Comm, TcpConfig, TransportKind};
 use crate::compression::{Codec as _, Collective};
 use crate::config::{ScheduleSpec, SchedulingMode, TrainConfig};
 use crate::data::{Batcher, SyntheticCorpus};
-use crate::runtime::{StepMeta, TrainStep};
+use crate::profiles::ModelProfile;
+use crate::runtime::{StepMeta, TensorMeta, TrainStep};
 use crate::scheduler::costmodel::{CostSampler, FittedCost};
 use crate::scheduler::objective::AnalyticObjective;
 use crate::scheduler::{CostEstimator, Decision, Driver, DriverConfig, Partition, SearchParams};
@@ -37,9 +52,13 @@ pub struct StepRecord {
     pub exchange: ExchangeStats,
 }
 
-/// Result of a training run (rank 0's view).
+/// Result of one rank's training run. Every rank produces one (the curve
+/// records are only collected on rank 0); `param_digest` lets launchers
+/// assert that separate processes ended bit-identical.
 #[derive(Debug, Clone)]
 pub struct RunResult {
+    /// The rank that produced this result.
+    pub rank: usize,
     pub records: Vec<StepRecord>,
     /// The partition in effect when training *ended* (online mode may have
     /// switched away from the warmup choice).
@@ -57,6 +76,10 @@ pub struct RunResult {
     pub schedule_epoch: u64,
     pub total_bytes_sent: u64,
     pub steps: usize,
+    /// FNV-1a over the exact bit patterns of the final parameters —
+    /// synchronous SGD means every rank must report the same value, and a
+    /// run over TCP must match the same config over the in-process mesh.
+    pub param_digest: u64,
 }
 
 impl RunResult {
@@ -74,6 +97,8 @@ impl RunResult {
             .collect();
         Value::from_pairs(vec![
             ("config", cfg.to_json()),
+            ("rank", Value::from(self.rank)),
+            ("param_digest", Value::from(format!("{:016x}", self.param_digest))),
             ("partition_bounds", Value::Arr(
                 self.partition.bounds().iter().map(|&b| Value::from(b)).collect(),
             )),
@@ -98,6 +123,154 @@ impl RunResult {
             ("total_bytes_sent", Value::from(self.total_bytes_sent)),
             ("curve", Value::Arr(curve)),
         ])
+    }
+}
+
+/// FNV-1a over every parameter tensor's length and exact f32 bit patterns.
+pub fn params_digest(params: &[Vec<f32>]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    let mix = |h: u64, bytes: &[u8]| {
+        let mut h = h;
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+        h
+    };
+    for t in params {
+        h = mix(h, &(t.len() as u64).to_le_bytes());
+        for v in t {
+            h = mix(h, &v.to_bits().to_le_bytes());
+        }
+    }
+    h
+}
+
+/// Everything rank-independent a training run needs, prepared once (per
+/// process) before ranks start.
+struct TrainSetup {
+    meta: StepMeta,
+    /// Simulator-plane profile matching `meta`'s tensor order — seeds the
+    /// schedule search before measured costs exist.
+    profile: ModelProfile,
+    /// Token corpus; `None` in synthetic mode (no batches are consumed).
+    corpus: Option<SyntheticCorpus>,
+}
+
+fn prepare_setup(cfg: &TrainConfig) -> anyhow::Result<TrainSetup> {
+    if let Some(name) = &cfg.synthetic {
+        let profile = crate::profiles::by_name(name)?;
+        let tensors: Vec<TensorMeta> = profile
+            .tensors
+            .iter()
+            .map(|t| TensorMeta {
+                name: t.name.clone(),
+                shape: vec![t.elems],
+                elems: t.elems,
+            })
+            .collect();
+        let meta = StepMeta {
+            tensors,
+            batch: cfg.batch_per_worker,
+            seq_len: cfg.seq_len,
+            vocab: 96,
+            n_layers: 0,
+            d_model: 0,
+            d_ff: 0,
+        };
+        return Ok(TrainSetup {
+            meta,
+            profile,
+            corpus: None,
+        });
+    }
+    let meta_path = std::path::Path::new(&cfg.artifact)
+        .parent()
+        .map(|d| d.join("meta.json"))
+        .ok_or_else(|| anyhow::anyhow!("artifact path has no parent dir"))?;
+    let meta = StepMeta::load(&meta_path, "e2e")?;
+    anyhow::ensure!(
+        meta.batch == cfg.batch_per_worker && meta.seq_len == cfg.seq_len,
+        "config batch/seq ({}, {}) must match the AOT artifact ({}, {}) — \
+         re-run `make artifacts` after changing the model config",
+        cfg.batch_per_worker,
+        cfg.seq_len,
+        meta.batch,
+        meta.seq_len
+    );
+    let profile = meta.to_profile();
+    let corpus = SyntheticCorpus::generate(cfg.seed ^ 0xDA7A, 400_000.max(cfg.workers * 50_000));
+    Ok(TrainSetup {
+        meta,
+        profile,
+        corpus: Some(corpus),
+    })
+}
+
+/// One rank's gradient source: the PJRT-executed artifact, or a
+/// deterministic synthetic generator shaped like the profile. The
+/// synthetic source draws per-(seed, rank, step) gradients so the exchange
+/// performs real cross-rank averaging, and its determinism is what makes
+/// cross-transport digests comparable.
+enum StepRunner {
+    Pjrt {
+        exec: TrainStep,
+        batcher: Batcher,
+    },
+    Synthetic {
+        sizes_fwd: Vec<usize>,
+        seed: u64,
+        rank: usize,
+        next_step: u64,
+        last_secs: f64,
+    },
+}
+
+impl StepRunner {
+    fn run(&mut self, params: &[Vec<f32>]) -> anyhow::Result<(f32, Vec<Vec<f32>>)> {
+        match self {
+            StepRunner::Pjrt { exec, batcher } => {
+                let (x, y) = batcher.next_batch();
+                exec.run(params, &x, &y)
+            }
+            StepRunner::Synthetic {
+                sizes_fwd,
+                seed,
+                rank,
+                next_step,
+                last_secs,
+            } => {
+                let sw = Stopwatch::start();
+                let step = *next_step;
+                *next_step += 1;
+                let mut rng = Xoshiro256::seed_from_u64(
+                    *seed ^ 0x57E9_57E9 ^ ((*rank as u64) << 32) ^ (step << 8),
+                );
+                let grads: Vec<Vec<f32>> = sizes_fwd
+                    .iter()
+                    .map(|&n| {
+                        let mut g = vec![0f32; n];
+                        rng.fill_normal_f32(&mut g, 0.02);
+                        g
+                    })
+                    .collect();
+                let mut noise = [0f32; 1];
+                rng.fill_normal_f32(&mut noise, 1.0);
+                // A smooth synthetic curve: starts at ln(vocab) and decays,
+                // with small per-rank noise the loss allreduce averages out.
+                let loss = (96f32).ln() * 0.985f32.powi(step as i32) + 0.02 * noise[0];
+                *last_secs = sw.elapsed().as_secs_f64();
+                Ok((loss, grads))
+            }
+        }
+    }
+
+    fn last_exec_secs(&self) -> f64 {
+        match self {
+            StepRunner::Pjrt { exec, .. } => exec.last_exec_secs,
+            StepRunner::Synthetic { last_secs, .. } => *last_secs,
+        }
     }
 }
 
@@ -140,7 +313,11 @@ fn fit_codec_costs(
 
 /// Measure the collective cost at a few payload sizes. Must be executed by
 /// every rank simultaneously (it runs real collectives).
-fn fit_comm_costs(comm: &mut Comm, cfg: &TrainConfig, total_params: usize) -> FittedCost {
+fn fit_comm_costs(
+    comm: &mut Comm,
+    cfg: &TrainConfig,
+    total_params: usize,
+) -> anyhow::Result<FittedCost> {
     let mut sampler = CostSampler::new();
     let sizes = [1usize << 10, 1 << 14, 1 << 18, (total_params / 2).max(1 << 19)];
     for &n in &sizes {
@@ -152,19 +329,19 @@ fn fit_comm_costs(comm: &mut Comm, cfg: &TrainConfig, total_params: usize) -> Fi
                 Collective::AllReduce => {
                     let mut buf = vec![0u8; wire.div_ceil(4) * 4];
                     let codec = cfg.codec.build(n);
-                    comm.allreduce_wire(&mut buf, codec.as_ref());
+                    comm.allreduce_wire(&mut buf, codec.as_ref())?;
                 }
                 Collective::AllGather => {
-                    let _ = comm.allgather(vec![0u8; wire]);
+                    let _ = comm.allgather(vec![0u8; wire])?;
                 }
             }
             best = best.min(sw.elapsed().as_secs_f64());
         }
         sampler.record(n, best);
     }
-    sampler
+    Ok(sampler
         .fit()
-        .unwrap_or(FittedCost { b: 1e-5, g: 1e-9, r2: 0.0 })
+        .unwrap_or(FittedCost { b: 1e-5, g: 1e-9, r2: 0.0 }))
 }
 
 /// Cost models fitted during warmup — the online scheduler's priors.
@@ -193,6 +370,7 @@ fn resolve_schedule(
     comm: &mut Comm,
     cfg: &TrainConfig,
     meta: &StepMeta,
+    profile: &ModelProfile,
     measured_step_secs: f64,
 ) -> anyhow::Result<(Partition, usize, WarmupFits)> {
     let n = meta.tensors.len();
@@ -209,7 +387,7 @@ fn resolve_schedule(
     }
 
     // Comm costs involve all ranks — measure before rank 0 diverges.
-    let comm_cost = fit_comm_costs(comm, cfg, meta.total_params());
+    let comm_cost = fit_comm_costs(comm, cfg, meta.total_params())?;
     let mut fits = WarmupFits {
         comm: Some(comm_cost),
         ..Default::default()
@@ -225,7 +403,6 @@ fn resolve_schedule(
                 fits.dec = Some(dec);
                 // Backward durations: measured step time split by the
                 // profile's FLOPs shares (same shape as the simulator).
-                let profile = meta.to_profile();
                 let total_flops = profile.total_flops().max(f64::MIN_POSITIVE);
                 let bwd = measured_step_secs * (1.0 - profile.fwd_frac);
                 let bwd_dur: Vec<f64> = profile
@@ -262,11 +439,11 @@ fn resolve_schedule(
         };
         // Broadcast bounds as a JSON payload.
         let mut payload = p.bounds_to_json().to_string_compact().into_bytes();
-        comm.broadcast(0, &mut payload);
+        comm.broadcast(0, &mut payload)?;
         p
     } else {
         let mut payload = Vec::new();
-        comm.broadcast(0, &mut payload);
+        comm.broadcast(0, &mut payload)?;
         let v = Value::parse(std::str::from_utf8(&payload)?)
             .map_err(|e| anyhow::anyhow!("partition broadcast: {e}"))?;
         Partition::from_json_bounds(n, &v)
@@ -303,162 +480,172 @@ pub fn init_params(meta: &StepMeta, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
-/// Run one data-parallel training job; returns rank 0's result.
-pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
-    let meta_path = std::path::Path::new(&cfg.artifact)
-        .parent()
-        .map(|d| d.join("meta.json"))
-        .ok_or_else(|| anyhow::anyhow!("artifact path has no parent dir"))?;
-    let meta = StepMeta::load(&meta_path, "e2e")?;
-    anyhow::ensure!(
-        meta.batch == cfg.batch_per_worker && meta.seq_len == cfg.seq_len,
-        "config batch/seq ({}, {}) must match the AOT artifact ({}, {}) — \
-         re-run `make artifacts` after changing the model config",
-        cfg.batch_per_worker,
-        cfg.seq_len,
-        meta.batch,
-        meta.seq_len
-    );
-    let corpus = SyntheticCorpus::generate(cfg.seed ^ 0xDA7A, 400_000.max(cfg.workers * 50_000));
+/// One rank's full training run — identical regardless of transport.
+fn train_rank(
+    comm: &mut Comm,
+    cfg: &TrainConfig,
+    setup: &TrainSetup,
+) -> anyhow::Result<RunResult> {
+    let rank = comm.rank();
+    let meta = &setup.meta;
+    let mut params = init_params(meta, cfg.seed);
+    let sizes_fwd: Vec<usize> = meta.tensors.iter().map(|t| t.elems).collect();
 
-    let results: Vec<anyhow::Result<Option<RunResult>>> =
-        run_comm_group(cfg.workers, |comm: &mut Comm| -> anyhow::Result<Option<RunResult>> {
-            let rank = comm.rank();
-            let mut step_exec = TrainStep::load(&cfg.artifact, meta.clone())?;
-            let mut params = init_params(&meta, cfg.seed);
-            let sizes_fwd: Vec<usize> = meta.tensors.iter().map(|t| t.elems).collect();
-            // DGC carries its own momentum correction (it transmits an
-            // accumulated-velocity stream); stacking optimizer momentum on
-            // top would double-apply it (DGC paper Alg. 1).
-            let momentum = match cfg.codec {
-                crate::compression::CodecKind::Dgc { .. } => 0.0,
-                _ => cfg.momentum,
-            };
-            let mut opt = SgdMomentum::new(cfg.lr, momentum, &sizes_fwd);
-            let mut batcher = Batcher::new(
-                &corpus,
+    let mut runner = if cfg.synthetic.is_some() {
+        StepRunner::Synthetic {
+            sizes_fwd: sizes_fwd.clone(),
+            seed: cfg.seed,
+            rank,
+            next_step: 0,
+            last_secs: 0.0,
+        }
+    } else {
+        let corpus = setup
+            .corpus
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("artifact mode requires a corpus"))?;
+        StepRunner::Pjrt {
+            exec: TrainStep::load(&cfg.artifact, meta.clone())?,
+            batcher: Batcher::new(
+                corpus,
                 rank,
                 comm.world(),
                 cfg.batch_per_worker,
                 cfg.seq_len,
                 cfg.seed,
-            );
-            let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ ((rank as u64) << 17));
+            ),
+        }
+    };
 
-            // --- warm-up: one step to measure compute time ----------------
-            let (x, y) = batcher.next_batch();
-            let (_, _) = step_exec.run(&params, &x, &y)?;
-            let mut step_secs = step_exec.last_exec_secs;
-            // Average the measured step time so all ranks feed rank 0's
-            // search comparable numbers on a time-sliced CPU.
-            let mut t = [step_secs as f32];
-            comm.allreduce_f32(&mut t);
-            step_secs = (t[0] / comm.world() as f32) as f64;
+    // DGC carries its own momentum correction (it transmits an
+    // accumulated-velocity stream); stacking optimizer momentum on
+    // top would double-apply it (DGC paper Alg. 1).
+    let momentum = match cfg.codec {
+        crate::compression::CodecKind::Dgc { .. } => 0.0,
+        _ => cfg.momentum,
+    };
+    let mut opt = SgdMomentum::new(cfg.lr, momentum, &sizes_fwd);
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ ((rank as u64) << 17));
 
-            // --- schedule --------------------------------------------------
-            let (partition, warmup_evals, fits) =
-                resolve_schedule(comm, cfg, &meta, step_secs)?;
-            let mut exchange = GradExchange::new(
-                cfg.codec,
-                partition.clone(),
-                meta.sizes_backprop_order(),
-            )
-            .with_mode(cfg.pipeline);
+    // --- warm-up: one step to measure compute time ----------------------
+    let (_, _) = runner.run(&params)?;
+    let mut step_secs = runner.last_exec_secs();
+    // Average the measured step time so all ranks feed rank 0's
+    // search comparable numbers on a time-sliced CPU.
+    let mut t = [step_secs as f32];
+    comm.allreduce_f32(&mut t)?;
+    step_secs = (t[0] / comm.world() as f32) as f64;
 
-            // --- online rescheduler (measure → search → repartition) -------
-            // Only meaningful for the searched schedule; static specs have
-            // nothing to re-search.
-            let online = cfg.sched_mode == SchedulingMode::Online
-                && matches!(cfg.schedule, ScheduleSpec::MergeComp { .. });
-            let mut driver = if online {
-                let profile = meta.to_profile();
-                let bwd_shares = profile.bwd_flop_shares();
-                let search = match cfg.schedule {
-                    ScheduleSpec::MergeComp { y_max, alpha } => SearchParams { y_max, alpha },
-                    _ => SearchParams::default(),
-                };
-                let dcfg = DriverConfig {
-                    interval: cfg.resched_interval.max(1),
-                    ewma: cfg.resched_ewma.clamp(1e-3, 1.0),
-                    hysteresis: cfg.resched_eps.max(0.0),
-                    search,
-                    min_samples: 8,
-                };
-                // The warmup decode fit measured one payload; the engine's
-                // per-group decode samples include the allgather fan-in, so
-                // scale the prior to match.
-                let fanin = match cfg.codec.collective() {
-                    Collective::AllReduce => 1,
-                    Collective::AllGather => comm.world().saturating_sub(1).max(1),
-                } as f64;
-                let dec_prior = fits.dec.map(|d| FittedCost {
-                    b: d.b * fanin,
-                    g: d.g * fanin,
-                    r2: d.r2,
-                });
-                let est = CostEstimator::new(dcfg.ewma, fits.enc, dec_prior, fits.comm);
-                Some(Driver::new(
-                    dcfg,
-                    est,
-                    meta.sizes_backprop_order(),
-                    bwd_shares,
-                    profile.fwd_frac,
-                    partition.clone(),
-                ))
-            } else {
-                None
-            };
+    // --- schedule --------------------------------------------------------
+    let (partition, warmup_evals, fits) =
+        resolve_schedule(comm, cfg, meta, &setup.profile, step_secs)?;
+    let mut exchange = GradExchange::new(
+        cfg.codec,
+        partition.clone(),
+        meta.sizes_backprop_order(),
+    )
+    .with_mode(cfg.pipeline);
 
-            // --- training loop ---------------------------------------------
-            let t0 = Stopwatch::start();
-            let mut records = Vec::new();
-            let mut sum_exchange = ExchangeStats::default();
-            let mut sum_step = 0.0f64;
-            let mut last_loss = 0f32;
-            for step in 0..cfg.steps {
-                let (x, y) = batcher.next_batch();
-                let (loss, grads_fwd) = step_exec.run(&params, &x, &y)?;
-                sum_step += step_exec.last_exec_secs;
+    // --- online rescheduler (measure → search → repartition) -------------
+    // Only meaningful for the searched schedule; static specs have
+    // nothing to re-search.
+    let online = cfg.sched_mode == SchedulingMode::Online
+        && matches!(cfg.schedule, ScheduleSpec::MergeComp { .. });
+    let mut driver = if online {
+        let bwd_shares = setup.profile.bwd_flop_shares();
+        let search = match cfg.schedule {
+            ScheduleSpec::MergeComp { y_max, alpha } => SearchParams { y_max, alpha },
+            _ => SearchParams::default(),
+        };
+        let dcfg = DriverConfig {
+            interval: cfg.resched_interval.max(1),
+            ewma: cfg.resched_ewma.clamp(1e-3, 1.0),
+            hysteresis: cfg.resched_eps.max(0.0),
+            search,
+            min_samples: 8,
+        };
+        // The warmup decode fit measured one payload; the engine's
+        // per-group decode samples include the allgather fan-in, so
+        // scale the prior to match.
+        let fanin = match cfg.codec.collective() {
+            Collective::AllReduce => 1,
+            Collective::AllGather => comm.world().saturating_sub(1).max(1),
+        } as f64;
+        let dec_prior = fits.dec.map(|d| FittedCost {
+            b: d.b * fanin,
+            g: d.g * fanin,
+            r2: d.r2,
+        });
+        let est = CostEstimator::new(dcfg.ewma, fits.enc, dec_prior, fits.comm);
+        Some(Driver::new(
+            dcfg,
+            est,
+            meta.sizes_backprop_order(),
+            bwd_shares,
+            setup.profile.fwd_frac,
+            partition.clone(),
+        ))
+    } else {
+        None
+    };
 
-                // Reorder to backprop order for the exchange, then back.
-                let mut grads_bp: Vec<Vec<f32>> = grads_fwd.into_iter().rev().collect();
-                let stats = exchange.exchange(comm, &mut grads_bp, &mut rng);
-                sum_exchange.accumulate(&stats);
-                let grads_fwd: Vec<Vec<f32>> = grads_bp.into_iter().rev().collect();
+    // --- training loop ---------------------------------------------------
+    let t0 = Stopwatch::start();
+    let mut records = Vec::new();
+    let mut sum_exchange = ExchangeStats::default();
+    let mut sum_step = 0.0f64;
+    let mut last_loss = 0f32;
+    for step in 0..cfg.steps {
+        let (loss, grads_fwd) = runner.run(&params)?;
+        sum_step += runner.last_exec_secs();
 
-                opt.step(&mut params, &grads_fwd);
+        // Reorder to backprop order for the exchange, then back.
+        let mut grads_bp: Vec<Vec<f32>> = grads_fwd.into_iter().rev().collect();
+        let stats = exchange
+            .exchange(comm, &mut grads_bp, &mut rng)
+            .map_err(|e| anyhow::anyhow!("step {step}: gradient exchange failed: {e}"))?;
+        sum_exchange.accumulate(&stats);
+        let grads_fwd: Vec<Vec<f32>> = grads_bp.into_iter().rev().collect();
 
-                // Online loop: feed measurements; at reschedule boundaries
-                // rank 0 re-searches and the epoch-tagged broadcast applies
-                // any switch on every rank at the same step, remapping EF
-                // state bit-exactly.
-                if let Some(d) = driver.as_mut() {
-                    d.observe(exchange.group_samples(), step_exec.last_exec_secs);
-                    if d.due(step) {
-                        let decision = if rank == 0 { d.decide() } else { Decision::Keep };
-                        if let Some(new_partition) = d.sync(comm, decision)? {
-                            exchange.repartition(new_partition)?;
-                        }
-                    }
-                }
+        opt.step(&mut params, &grads_fwd);
 
-                // Mean loss across workers for logging.
-                let mut l = [loss];
-                comm.allreduce_f32(&mut l);
-                last_loss = l[0] / comm.world() as f32;
-                if rank == 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
-                    records.push(StepRecord {
-                        step,
-                        loss: last_loss,
-                        elapsed: t0.elapsed().as_secs_f64(),
-                        exchange: stats,
-                    });
+        // Online loop: feed measurements; at reschedule boundaries
+        // rank 0 re-searches and the epoch-tagged broadcast applies
+        // any switch on every rank at the same step, remapping EF
+        // state bit-exactly.
+        if let Some(d) = driver.as_mut() {
+            d.observe(exchange.group_samples(), runner.last_exec_secs());
+            if d.due(step) {
+                let decision = if rank == 0 { d.decide() } else { Decision::Keep };
+                if let Some(new_partition) = d.sync(comm, decision)? {
+                    exchange.repartition(new_partition)?;
                 }
             }
+        }
 
-            // --- held-out evaluation ---------------------------------------
+        // Mean loss across workers for logging.
+        let mut l = [loss];
+        comm.allreduce_f32(&mut l)?;
+        last_loss = l[0] / comm.world() as f32;
+        if rank == 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            records.push(StepRecord {
+                step,
+                loss: last_loss,
+                elapsed: t0.elapsed().as_secs_f64(),
+                exchange: stats,
+            });
+        }
+    }
+
+    // --- held-out evaluation ---------------------------------------------
+    let eval_loss = match &mut runner {
+        StepRunner::Pjrt { exec, .. } => {
+            let corpus = setup
+                .corpus
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("artifact mode requires a corpus"))?;
             let mut eval_batcher = Batcher::new(
-                &corpus,
+                corpus,
                 rank,
                 comm.world(),
                 cfg.batch_per_worker,
@@ -469,44 +656,86 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
             let eval_batches = 4;
             for _ in 0..eval_batches {
                 let (x, y) = eval_batcher.next_batch();
-                let (loss, _) = step_exec.run(&params, &x, &y)?;
+                let (loss, _) = exec.run(&params, &x, &y)?;
                 eval_sum += loss;
             }
             let mut e = [eval_sum / eval_batches as f32];
-            comm.allreduce_f32(&mut e);
-            let eval_loss = e[0] / comm.world() as f32;
+            comm.allreduce_f32(&mut e)?;
+            e[0] / comm.world() as f32
+        }
+        // Synthetic losses carry no held-out signal; report the final
+        // (already rank-averaged) training loss. No collective here, so
+        // the op sequence stays symmetric across ranks by construction.
+        StepRunner::Synthetic { .. } => last_loss,
+    };
 
-            if rank != 0 {
-                return Ok(None);
+    let steps = cfg.steps.max(1) as f64;
+    let (reschedules, online_evals, schedule_epoch) = driver
+        .as_ref()
+        .map(|d| (d.reschedules, d.search_evals, d.epoch()))
+        .unwrap_or((0, 0, 0));
+    Ok(RunResult {
+        rank,
+        records,
+        partition: exchange.partition().clone(),
+        final_train_loss: last_loss,
+        eval_loss,
+        mean_step_secs: sum_step / steps,
+        mean_exchange: sum_exchange.scaled(steps),
+        search_evals: warmup_evals + online_evals,
+        reschedules,
+        schedule_epoch,
+        total_bytes_sent: sum_exchange.bytes_sent,
+        steps: cfg.steps,
+        param_digest: params_digest(&params),
+    })
+}
+
+/// Run one data-parallel training job.
+///
+/// - `transport = inproc`: spawns all `cfg.workers` ranks as threads in
+///   this process and returns **rank 0's** result (any rank failing fails
+///   the run).
+/// - `transport = tcp`: this process is rank `cfg.rank` of `cfg.workers`;
+///   bootstraps through `cfg.rendezvous` and returns **this rank's**
+///   result. Launch one process per rank (`mergecomp launch` automates the
+///   single-machine case).
+pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
+    let setup = prepare_setup(cfg)?;
+    match cfg.transport {
+        TransportKind::InProc => {
+            let results: Vec<anyhow::Result<RunResult>> =
+                run_comm_group(cfg.workers, |comm: &mut Comm| train_rank(comm, cfg, &setup));
+            let mut rank0 = None;
+            for r in results {
+                let r = r.map_err(|e| anyhow::anyhow!("worker failed: {e}"))?;
+                if r.rank == 0 {
+                    rank0 = Some(r);
+                }
             }
-            let steps = cfg.steps.max(1) as f64;
-            let (reschedules, online_evals, schedule_epoch) = driver
-                .as_ref()
-                .map(|d| (d.reschedules, d.search_evals, d.epoch()))
-                .unwrap_or((0, 0, 0));
-            Ok(Some(RunResult {
-                records,
-                partition: exchange.partition().clone(),
-                final_train_loss: last_loss,
-                eval_loss,
-                mean_step_secs: sum_step / steps,
-                mean_exchange: sum_exchange.scaled(steps),
-                search_evals: warmup_evals + online_evals,
-                reschedules,
-                schedule_epoch,
-                total_bytes_sent: sum_exchange.bytes_sent,
-                steps: cfg.steps,
-            }))
-        });
-
-    for r in &results {
-        if let Err(e) = r {
-            anyhow::bail!("worker failed: {e}");
+            rank0.ok_or_else(|| anyhow::anyhow!("rank 0 produced no result"))
+        }
+        TransportKind::Tcp => {
+            anyhow::ensure!(
+                cfg.rank < cfg.workers,
+                "--rank {} out of range for --world {}",
+                cfg.rank,
+                cfg.workers
+            );
+            let tcp_cfg = TcpConfig {
+                rank: cfg.rank,
+                world: cfg.workers,
+                rendezvous: cfg.rendezvous.clone(),
+                advertise_host: cfg.advertise_host.clone(),
+                timeout: std::time::Duration::from_secs(cfg.bootstrap_timeout_secs.max(1)),
+            };
+            let ep = tcp_endpoint(&tcp_cfg, None)?;
+            let mut comm = Comm::new(ep);
+            let result = train_rank(&mut comm, cfg, &setup)?;
+            // Final barrier: no rank tears its sockets down while a peer
+            // still has collectives in flight.
+            comm.barrier()?;
+            Ok(result)
         }
     }
-    results
-        .into_iter()
-        .filter_map(|r| r.ok().flatten())
-        .next()
-        .ok_or_else(|| anyhow::anyhow!("rank 0 produced no result"))
 }

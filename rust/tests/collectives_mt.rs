@@ -1,6 +1,6 @@
 //! Multi-threaded collective stress + failure injection.
 
-use mergecomp::collectives::{mesh, run_comm_group, Comm};
+use mergecomp::collectives::{mesh, run_comm_group, Comm, TransportError};
 use mergecomp::util::rng::Xoshiro256;
 
 /// Randomized allreduce fuzz: many rounds, random sizes, all world sizes —
@@ -18,7 +18,7 @@ fn allreduce_fuzz() {
                 let mut data: Vec<f32> = (0..n)
                     .map(|i| ((c.rank() + 1) * (i + round + 1)) as f32)
                     .collect();
-                c.allreduce_f32(&mut data);
+                c.allreduce_f32(&mut data).unwrap();
                 let factor: f32 = (1..=c.world()).map(|r| r as f32).sum();
                 for (i, v) in data.iter().enumerate() {
                     ok &= (*v - (i + round + 1) as f32 * factor).abs() < 1e-2;
@@ -39,7 +39,7 @@ fn allgather_fuzz() {
         for _ in 0..50 {
             let len = rng.gen_range(300);
             let payload: Vec<u8> = (0..len).map(|i| (c.rank() * 31 + i) as u8).collect();
-            let all = c.allgather(payload);
+            let all = c.allgather(payload).unwrap();
             for (src, p) in all.iter().enumerate() {
                 // Can't know the remote length (it's random per rank), but
                 // contents must be consistent with the generator pattern.
@@ -64,15 +64,15 @@ fn mixed_collectives_with_skew() {
                 // Skew: one rank is slow each round.
                 std::thread::sleep(std::time::Duration::from_micros(200));
             }
-            let g = c.allgather(vec![c.rank() as u8, i as u8]);
+            let g = c.allgather(vec![c.rank() as u8, i as u8]).unwrap();
             for (src, p) in g.iter().enumerate() {
                 ok &= p == &vec![src as u8, i as u8];
             }
             let mut v = vec![1.0f32; 7];
-            c.allreduce_f32(&mut v);
+            c.allreduce_f32(&mut v).unwrap();
             ok &= v.iter().all(|&x| x == 3.0);
             let mut b = if c.rank() == 1 { vec![9, i as u8] } else { vec![] };
-            c.broadcast(1, &mut b);
+            c.broadcast(1, &mut b).unwrap();
             ok &= b == vec![9, i as u8];
         }
         ok
@@ -81,27 +81,59 @@ fn mixed_collectives_with_skew() {
 }
 
 /// Failure injection: when a rank dies (drops its endpoint without
-/// participating), peers that try to reach it must fail loudly — a hang
-/// would be the bug.
+/// participating), peers that try to reach it must fail with a typed
+/// `TransportError` naming the dead peer — a hang or a process-poisoning
+/// panic would be the bug.
 #[test]
-fn dead_rank_is_detected_not_hung() {
+fn dead_rank_is_a_typed_error_not_a_hang() {
     let endpoints = mesh(2);
     let mut it = endpoints.into_iter();
     let ep0 = it.next().unwrap();
     let ep1 = it.next().unwrap();
     // Rank 1 dies immediately.
     drop(ep1);
-    let outcome = std::thread::spawn(move || {
+    let err = std::thread::spawn(move || {
         let mut comm = Comm::new(ep0);
-        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let mut v = vec![1.0f32; 8];
-            comm.allreduce_f32(&mut v);
-        }));
-        r.is_err()
+        let mut v = vec![1.0f32; 8];
+        comm.allreduce_f32(&mut v).unwrap_err()
     })
     .join()
     .unwrap();
-    assert!(outcome, "collective against a dead rank must panic, not hang");
+    match err {
+        TransportError::PeerGone { rank, peer, tag, .. } => {
+            assert_eq!(rank, 0);
+            assert_eq!(peer, 1);
+            assert!(tag.is_some(), "error must carry the failing tag");
+        }
+        other => panic!("expected PeerGone, got {other}"),
+    }
+}
+
+/// Failure injection on the RECEIVE path with surviving bystanders: in a
+/// 3-rank mesh a dead peer must surface as `PeerGone` to a rank blocked in
+/// recv — with world >= 3 the inbox channel never disconnects (other live
+/// ranks hold senders), so this specifically exercises the in-band
+/// peer-down notification rather than channel teardown.
+#[test]
+fn dead_rank_detected_by_blocked_receiver_world_three() {
+    use mergecomp::collectives::run_group;
+    let results = run_group(3, |mut ep| {
+        if ep.rank() == 1 {
+            // Rank 1 dies without participating.
+            return None;
+        }
+        // Ranks 0 and 2 block waiting on rank 1.
+        match ep.recv(1, 77) {
+            Err(TransportError::PeerGone { peer, tag, .. }) => {
+                assert_eq!(peer, 1);
+                assert_eq!(tag, Some(77));
+                None
+            }
+            Ok(_) => Some("unexpected message from a dead rank".to_string()),
+            Err(other) => Some(format!("wrong error: {other}")),
+        }
+    });
+    assert_eq!(results, vec![None, None, None]);
 }
 
 /// Endpoint byte accounting under concurrency.
@@ -109,10 +141,10 @@ fn dead_rank_is_detected_not_hung() {
 fn byte_accounting_sums_over_collectives() {
     let results = run_comm_group(2, |c| {
         let before = c.bytes_sent();
-        let _ = c.allgather(vec![0u8; 1000]);
+        let _ = c.allgather(vec![0u8; 1000]).unwrap();
         let mid = c.bytes_sent();
         let mut v = vec![0f32; 250]; // 1000 bytes
-        c.allreduce_f32(&mut v);
+        c.allreduce_f32(&mut v).unwrap();
         let after = c.bytes_sent();
         (mid - before, after - mid)
     });

@@ -59,7 +59,7 @@ fn distributed_quadratic_converges_under_compression() {
                             .collect()
                     })
                     .collect();
-                ex.exchange(comm, &mut grads, &mut rng);
+                ex.exchange(comm, &mut grads, &mut rng).unwrap();
                 opt.step(&mut params, &grads);
             }
             // Final distance to optimum.
@@ -198,7 +198,7 @@ fn bytes_on_wire_match_cost_model_charging() {
             );
             let mut rng = Xoshiro256::seed_from_u64(comm.rank() as u64);
             let mut grads = vec![vec![0.5f32; n_elems]];
-            ex.exchange(comm, &mut grads, &mut rng).bytes_sent
+            ex.exchange(comm, &mut grads, &mut rng).unwrap().bytes_sent
         });
         let wire = kind.wire_size(n_elems);
         let expect = match kind.collective() {

@@ -1,0 +1,124 @@
+//! Real multi-process smoke: launch 4 separate `mergecomp` OS processes
+//! over loopback TCP (`mergecomp train --transport tcp` worker mode, via
+//! the same launcher CI's `multiproc-smoke` job uses) and assert
+//!
+//! 1. every rank exits 0,
+//! 2. every rank reports the same final-parameter digest, and
+//! 3. that digest is bit-identical to the SAME config run in-process over
+//!    the channel mesh — the acceptance criterion of the transport PR.
+//!
+//! Uses the synthetic step source (tiny profile) so no PJRT/XLA artifacts
+//! are needed, and a static schedule so the partition is deterministic
+//! across transports.
+
+use mergecomp::compression::CodecKind;
+use mergecomp::config::{ScheduleSpec, TrainConfig};
+use mergecomp::training::{launch_local, train, LaunchOptions};
+use std::time::Duration;
+
+/// The worker binary cargo built for this test run.
+const BIN: &str = env!("CARGO_BIN_EXE_mergecomp");
+
+fn smoke_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mergecomp-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn four_tcp_processes_match_inproc_bit_exactly() {
+    let world = 4;
+    let steps = 3;
+    let opts = LaunchOptions {
+        binary: BIN.into(),
+        world,
+        rendezvous: None,
+        out_dir: smoke_dir("multiproc"),
+        train_flags: [
+            "--synthetic",
+            "tiny",
+            "--codec",
+            "efsignsgd",
+            "--schedule",
+            "naive:2",
+            "--steps",
+            "3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        timeout: Duration::from_secs(240),
+    };
+    let report = launch_local(&opts).unwrap();
+    for r in &report.ranks {
+        assert_eq!(
+            r.exit_code,
+            Some(0),
+            "rank {} failed — log at {}",
+            r.rank,
+            r.log_path.display()
+        );
+    }
+    assert!(report.digests_match, "per-process digests diverged: {report:?}");
+
+    // The in-process reference: identical config over the channel mesh.
+    let cfg = TrainConfig {
+        workers: world,
+        steps,
+        codec: CodecKind::EfSignSgd,
+        schedule: ScheduleSpec::NaiveEven { y: 2 },
+        synthetic: Some("tiny".to_string()),
+        log_every: steps,
+        ..TrainConfig::default()
+    };
+    let inproc = train(&cfg).unwrap();
+    let want = format!("{:016x}", inproc.param_digest);
+    for r in &report.ranks {
+        assert_eq!(
+            r.param_digest.as_deref(),
+            Some(want.as_str()),
+            "rank {}: TCP process digest differs from the in-process mesh",
+            r.rank
+        );
+    }
+    let _ = std::fs::remove_dir_all(&opts.out_dir);
+}
+
+#[test]
+fn launcher_reports_failing_ranks_instead_of_hanging() {
+    // A config the worker must reject (unknown codec): every rank exits
+    // nonzero and the report says so.
+    let opts = LaunchOptions {
+        binary: BIN.into(),
+        world: 2,
+        rendezvous: None,
+        out_dir: smoke_dir("multiproc-fail"),
+        train_flags: ["--synthetic", "tiny", "--codec", "not-a-codec"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        timeout: Duration::from_secs(120),
+    };
+    let report = launch_local(&opts).unwrap();
+    assert!(!report.all_exited_zero);
+    assert!(!report.ok());
+    let _ = std::fs::remove_dir_all(&opts.out_dir);
+}
+
+#[test]
+fn single_process_tcp_world_of_one_runs() {
+    // Degenerate world: the TCP path with no peers still completes (no
+    // rendezvous traffic at all) — guards the bootstrap's world==1 path.
+    let cfg = TrainConfig {
+        workers: 1,
+        steps: 2,
+        codec: CodecKind::Fp32,
+        schedule: ScheduleSpec::FullMerge,
+        synthetic: Some("tiny".to_string()),
+        transport: mergecomp::collectives::TransportKind::Tcp,
+        rank: 0,
+        log_every: 2,
+        ..TrainConfig::default()
+    };
+    let r = train(&cfg).unwrap();
+    assert_eq!(r.rank, 0);
+    assert_eq!(r.steps, 2);
+}

@@ -87,7 +87,7 @@ fn run_with_detour(
                 }
             }
             let mut grads = step_grads(c.rank(), step, &sizes);
-            ex.exchange(c, &mut grads, &mut rng);
+            ex.exchange(c, &mut grads, &mut rng).unwrap();
             last = grads;
         }
         (last, ex.state_digest())
@@ -248,7 +248,7 @@ fn drifting_bandwidth_drives_consistent_repartition_on_all_ranks() {
 
         for step in 0..steps {
             let mut grads = step_grads(c.rank(), step, &wire_sizes);
-            ex.exchange(c, &mut grads, &mut rng);
+            ex.exchange(c, &mut grads, &mut rng).unwrap();
 
             let g_now = if step < drift_at { g_pre } else { g_post };
             let samples = synth_samples(driver.partition(), &model_sizes, b, g_now);
@@ -263,7 +263,7 @@ fn drifting_bandwidth_drives_consistent_repartition_on_all_ranks() {
 
         // One more exchange after all switches: ranks must still agree.
         let mut grads = step_grads(c.rank(), 999, &wire_sizes);
-        ex.exchange(c, &mut grads, &mut rng);
+        ex.exchange(c, &mut grads, &mut rng).unwrap();
         (
             driver.epoch(),
             driver.partition().bounds().to_vec(),

@@ -52,7 +52,7 @@ fn run_mode(
         let mut last = Vec::new();
         for step in 0..STEPS {
             let mut grads = step_grads(c.rank(), step, &sizes);
-            let stats = ex.exchange(c, &mut grads, &mut rng);
+            let stats = ex.exchange(c, &mut grads, &mut rng).unwrap();
             total.accumulate(&stats);
             last = grads;
         }

@@ -24,6 +24,33 @@ fn cfg(workers: usize, steps: usize, codec: CodecKind, schedule: ScheduleSpec) -
 }
 
 #[test]
+fn synthetic_source_trains_without_artifacts_and_is_deterministic() {
+    // No PJRT needed: the synthetic step source runs everywhere (this is
+    // the path CI's multi-process smoke job exercises). Two identical runs
+    // must agree bit-for-bit — the premise of the cross-process digest
+    // comparison in tests/multiproc_launch.rs.
+    let c = TrainConfig {
+        workers: 2,
+        steps: 4,
+        codec: CodecKind::EfSignSgd,
+        schedule: ScheduleSpec::NaiveEven { y: 2 },
+        synthetic: Some("tiny".to_string()),
+        log_every: 2,
+        ..TrainConfig::default()
+    };
+    let r = train(&c).unwrap();
+    assert_eq!(r.rank, 0);
+    assert_eq!(r.steps, 4);
+    assert!(r.total_bytes_sent > 0);
+    assert!(!r.records.is_empty());
+    let r2 = train(&c).unwrap();
+    assert_eq!(
+        r.param_digest, r2.param_digest,
+        "synthetic training must be run-to-run deterministic"
+    );
+}
+
+#[test]
 fn two_worker_mergecomp_training_reduces_loss() {
     if !artifacts_ready() {
         eprintln!("skipping: artifacts not built");

@@ -1,0 +1,319 @@
+//! Transport equivalence: the collectives (and therefore the whole
+//! exchange engine) must be **bit-identical** whether they run over the
+//! in-process channel mesh or over real loopback TCP sockets.
+//!
+//! This is the safety net under `--transport tcp`: sockets change *how*
+//! bytes move, never *what* arrives. For every paper codec a 4-rank,
+//! 3-step exchange over `InProcTransport` and over `TcpTransport` must
+//! produce bit-identical averaged gradients, identical error-feedback
+//! state, and identical bytes-on-wire accounting (same harness as
+//! `tests/pipeline_equivalence.rs`). Tag-matching property tests
+//! (out-of-order delivery, interleaved collectives) run against both
+//! backends.
+
+use mergecomp::collectives::{
+    run_comm_group, run_comm_group_tcp, run_group, run_tcp_group, Comm, Endpoint,
+};
+use mergecomp::compression::CodecKind;
+use mergecomp::scheduler::Partition;
+use mergecomp::training::{GradExchange, PipelineMode};
+use mergecomp::util::proptest::{check, Gen};
+use mergecomp::util::rng::Xoshiro256;
+
+const WORLD: usize = 4;
+const STEPS: usize = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    InProc,
+    Tcp,
+}
+
+const BACKENDS: [Backend; 2] = [Backend::InProc, Backend::Tcp];
+
+fn run_comm_on<T: Send>(
+    backend: Backend,
+    world: usize,
+    f: impl Fn(&mut Comm) -> T + Send + Sync,
+) -> Vec<T> {
+    match backend {
+        Backend::InProc => run_comm_group(world, f),
+        Backend::Tcp => run_comm_group_tcp(world, f),
+    }
+}
+
+fn run_ep_on<T: Send>(
+    backend: Backend,
+    world: usize,
+    f: impl Fn(Endpoint) -> T + Send + Sync,
+) -> Vec<T> {
+    match backend {
+        Backend::InProc => run_group(world, f),
+        Backend::Tcp => run_tcp_group(world, f),
+    }
+}
+
+/// Per-tensor sizes (backprop order) exercising uneven groups, sub-word
+/// tails for the bit-packed codecs, and multi-bucket QSGD groups.
+fn tensor_sizes() -> Vec<usize> {
+    vec![700, 33, 512, 129, 64, 257]
+}
+
+/// Deterministic per-step synthetic gradients, identical across backends.
+fn step_grads(rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng =
+        Xoshiro256::seed_from_u64(0x7C9 ^ ((rank as u64) << 32) ^ ((step as u64) << 8));
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 0.5);
+            g
+        })
+        .collect()
+}
+
+/// Run `STEPS` exchanges on one backend; return every rank's final
+/// gradients, codec-state digest, and bytes sent.
+fn run_backend(
+    backend: Backend,
+    kind: CodecKind,
+    partition: Partition,
+    mode: PipelineMode,
+) -> Vec<(Vec<Vec<f32>>, u64, u64)> {
+    let sizes = tensor_sizes();
+    run_comm_on(backend, WORLD, move |c| {
+        let mut ex = GradExchange::new(kind, partition.clone(), sizes.clone()).with_mode(mode);
+        let mut rng = Xoshiro256::seed_from_u64(42 + c.rank() as u64);
+        let mut bytes = 0u64;
+        let mut last = Vec::new();
+        for step in 0..STEPS {
+            let mut grads = step_grads(c.rank(), step, &sizes);
+            let stats = ex.exchange(c, &mut grads, &mut rng).unwrap();
+            bytes += stats.bytes_sent;
+            last = grads;
+        }
+        (last, ex.state_digest(), bytes)
+    })
+}
+
+fn assert_bit_identical(kind: CodecKind, a: &[Vec<f32>], b: &[Vec<f32>]) {
+    assert_eq!(a.len(), b.len());
+    for (t, (ta, tb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ta.len(), tb.len(), "{}: tensor {t} length", kind.name());
+        for (i, (va, vb)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{}: tensor {t} idx {i}: inproc {va} vs tcp {vb}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn inproc_and_tcp_bit_identical_for_all_paper_codecs() {
+    let n = tensor_sizes().len();
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    for kind in kinds {
+        for partition in [Partition::naive_even(n, 3), Partition::full_merge(n)] {
+            let inproc =
+                run_backend(Backend::InProc, kind, partition.clone(), PipelineMode::Pipelined);
+            let tcp = run_backend(Backend::Tcp, kind, partition.clone(), PipelineMode::Pipelined);
+            for (rank, (i, t)) in inproc.iter().zip(&tcp).enumerate() {
+                assert_bit_identical(kind, &i.0, &t.0);
+                assert_eq!(
+                    i.1,
+                    t.1,
+                    "{} {partition}: rank {rank} EF state diverged across transports",
+                    kind.name()
+                );
+                assert_eq!(
+                    i.2,
+                    t.2,
+                    "{} {partition}: rank {rank} bytes-on-wire diverged across transports",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn serial_mode_also_transport_invariant() {
+    let n = tensor_sizes().len();
+    for kind in [CodecKind::Fp16, CodecKind::EfSignSgd, CodecKind::Dgc { ratio: 0.1 }] {
+        let p = Partition::naive_even(n, 2);
+        let inproc = run_backend(Backend::InProc, kind, p.clone(), PipelineMode::Serial);
+        let tcp = run_backend(Backend::Tcp, kind, p, PipelineMode::Serial);
+        for (i, t) in inproc.iter().zip(&tcp) {
+            assert_bit_identical(kind, &i.0, &t.0);
+            assert_eq!(i.1, t.1, "{}: serial EF state diverged", kind.name());
+        }
+    }
+}
+
+/// Generator: a random permutation of 0..k (the receive order for tags
+/// sent in natural order). Shrinks towards shorter prefixes.
+struct PermGen {
+    max: usize,
+}
+
+impl Gen for PermGen {
+    type Value = Vec<usize>;
+    fn generate(&self, rng: &mut Xoshiro256) -> Vec<usize> {
+        let k = 1 + rng.gen_range(self.max);
+        let mut v: Vec<usize> = (0..k).collect();
+        for i in (1..k).rev() {
+            let j = rng.gen_range(i + 1);
+            v.swap(i, j);
+        }
+        v
+    }
+    fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            // A shorter permutation: keep relative order of the survivors.
+            let half: Vec<usize> = v.iter().copied().filter(|&t| t < v.len() / 2).collect();
+            if !half.is_empty() {
+                out.push(half);
+            }
+            out.push(vec![0]);
+        }
+        out.retain(|c| c != v);
+        out
+    }
+}
+
+/// Property: messages sent with tags 0..k in order can be received in ANY
+/// order, on both backends — the stash must hold everything that arrives
+/// early, and same-tag FIFO is preserved.
+#[test]
+fn prop_out_of_order_delivery_both_backends() {
+    check("out-of-order tag delivery", 8, PermGen { max: 8 }, |order| {
+        for backend in BACKENDS {
+            let ord = order.clone();
+            let results = run_ep_on(backend, 2, move |mut ep| {
+                let k = ord.len();
+                if ep.rank() == 0 {
+                    for t in 0..k {
+                        ep.send(1, t as u64, vec![t as u8, 0xAB]).unwrap();
+                    }
+                    Vec::new()
+                } else {
+                    ord.iter()
+                        .map(|&t| ep.recv(0, t as u64).unwrap())
+                        .collect::<Vec<_>>()
+                }
+            });
+            for (i, &t) in order.iter().enumerate() {
+                if results[1][i] != vec![t as u8, 0xAB] {
+                    return Err(format!(
+                        "{backend:?}: receive {i} of tag {t} got {:?}",
+                        results[1][i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Generator for small interleaved-collective schedules:
+/// (rounds, payload length).
+struct ScheduleGen;
+
+impl Gen for ScheduleGen {
+    type Value = (usize, usize);
+    fn generate(&self, rng: &mut Xoshiro256) -> (usize, usize) {
+        (1 + rng.gen_range(4), 1 + rng.gen_range(600))
+    }
+    fn shrink(&self, &(r, l): &(usize, usize)) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        if r > 1 {
+            out.push((1, l));
+        }
+        if l > 1 {
+            out.push((r, 1));
+            out.push((r, l / 2));
+        }
+        out.retain(|c| *c != (r, l));
+        out
+    }
+}
+
+/// Property: an interleaved mix of allgather + allreduce + broadcast
+/// produces identical results over both backends (tag sequencing isolates
+/// the operations identically).
+#[test]
+fn prop_interleaved_collectives_agree_across_backends() {
+    check("interleaved collectives", 6, ScheduleGen, |&(rounds, len)| {
+        let mut per_backend = Vec::new();
+        for backend in BACKENDS {
+            let results = run_comm_on(backend, 3, move |c| {
+                let mut log: Vec<Vec<u8>> = Vec::new();
+                for round in 0..rounds {
+                    let payload = vec![(c.rank() * 7 + round) as u8; len];
+                    let g = c.allgather(payload).unwrap();
+                    log.extend(g);
+                    let mut v = vec![(round + 1) as f32; 5];
+                    c.allreduce_f32(&mut v).unwrap();
+                    log.push(v.iter().map(|&x| x as u8).collect());
+                    let mut b = if c.rank() == round % 3 {
+                        vec![0xEE, round as u8]
+                    } else {
+                        Vec::new()
+                    };
+                    c.broadcast(round % 3, &mut b).unwrap();
+                    log.push(b);
+                }
+                log
+            });
+            per_backend.push(results);
+        }
+        if per_backend[0] != per_backend[1] {
+            return Err(format!(
+                "rounds={rounds} len={len}: inproc and tcp logs diverged"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Interleaved sends from several peers with rank-skewed timing: the
+/// stash must demultiplex per (source, tag) on both backends.
+#[test]
+fn skewed_multi_peer_interleaving_both_backends() {
+    for backend in BACKENDS {
+        let results = run_ep_on(backend, WORLD, move |mut ep| {
+            let me = ep.rank();
+            for burst in 0..3u64 {
+                if me == (burst as usize) % WORLD {
+                    std::thread::sleep(std::time::Duration::from_micros(300));
+                }
+                for d in 0..WORLD {
+                    if d != me {
+                        ep.send(d, burst, vec![me as u8, burst as u8]).unwrap();
+                    }
+                }
+            }
+            // Receive everything in REVERSE burst order from each peer.
+            let mut ok = true;
+            for burst in (0..3u64).rev() {
+                for s in 0..WORLD {
+                    if s != me {
+                        let m = ep.recv(s, burst).unwrap();
+                        ok &= m == vec![s as u8, burst as u8];
+                    }
+                }
+            }
+            ok
+        });
+        assert!(
+            results.into_iter().all(|b| b),
+            "{backend:?}: interleaved multi-peer delivery broke tag matching"
+        );
+    }
+}
