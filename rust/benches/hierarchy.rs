@@ -1,0 +1,220 @@
+//! Hierarchical vs flat collectives on a two-level fabric.
+//!
+//! Two planes, one verdict:
+//!
+//! - **Measured**: the same multi-group exchange runs on an 8-rank
+//!   in-process cluster split over 2 synthetic nodes, once with the flat
+//!   ring and once with the two-level route. Byte accounting is exact and
+//!   deterministic, so the acceptance assert is on **inter-node bytes**:
+//!   the two-level exchange must push fewer bytes across the node boundary
+//!   than the flat ring, for every paper codec.
+//! - **Predicted**: `netsim::hierarchy` prices both routes on an
+//!   NVLink-intra × TCP-inter fabric; the two-level exchange must also be
+//!   faster end-to-end (that's the exposed inter-node *time* the scheduler
+//!   cares about).
+//!
+//! Outputs: `results/hierarchy.csv` and `results/BENCH_hierarchy.json`
+//! (uploaded by the nightly bench job).
+
+#[path = "harness.rs"]
+mod harness;
+
+use mergecomp::collectives::{run_comm_group, CommRoute, TopologySpec};
+use mergecomp::compression::CodecKind;
+use mergecomp::metrics::write_json;
+use mergecomp::netsim::TwoLevelFabric;
+use mergecomp::profiles::transformer_lm;
+use mergecomp::scheduler::Partition;
+use mergecomp::training::{ExchangeStats, GradExchange, PipelineMode};
+use mergecomp::util::json::Value;
+use mergecomp::util::rng::Xoshiro256;
+
+const WORLD: usize = 8;
+const NODES: usize = 2;
+const GROUPS: usize = 4;
+const STEPS: usize = 3;
+
+fn synth_grads(rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seed_from_u64(0xD1 ^ ((rank as u64) << 20) ^ (step as u64));
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 0.02);
+            g
+        })
+        .collect()
+}
+
+/// Run the exchange loop under one route; returns per-step mean stats
+/// summed over **all ranks** (inter-node traffic is asymmetric per rank —
+/// flat-ring inter hops exist only at node boundaries, two-level inter
+/// traffic only at leaders — so only the group total is meaningful).
+/// Serial mode keeps the thread count at WORLD on CI runners; byte
+/// accounting is schedule-independent anyway.
+fn run_route(
+    kind: CodecKind,
+    partition: &Partition,
+    sizes: &[usize],
+    route: CommRoute,
+) -> ExchangeStats {
+    let partition = partition.clone();
+    let sizes = sizes.to_vec();
+    let results = run_comm_group(WORLD, move |c| {
+        c.set_topology(TopologySpec::Nodes(NODES).build(WORLD).unwrap())
+            .unwrap();
+        c.set_route(route);
+        let mut ex = GradExchange::new(kind, partition.clone(), sizes.clone())
+            .with_mode(PipelineMode::Serial);
+        let mut rng = Xoshiro256::seed_from_u64(1000 + c.rank() as u64);
+        let mut total = ExchangeStats::default();
+        for step in 0..STEPS {
+            let mut grads = synth_grads(c.rank(), step, &sizes);
+            let stats = ex.exchange(c, &mut grads, &mut rng).expect("exchange");
+            total.accumulate(&stats);
+        }
+        total.scaled(STEPS as f64)
+    });
+    let mut group_total = ExchangeStats::default();
+    for r in &results {
+        group_total.accumulate(r);
+    }
+    group_total
+}
+
+fn main() {
+    let profile = transformer_lm(4, 128, 512, 2048, 64);
+    let sizes = profile.sizes_backprop_order();
+    let n = profile.num_tensors();
+    let total_params = profile.total_params();
+    let partition = Partition::naive_even(n, GROUPS);
+    let fabric = TwoLevelFabric::nvlink_tcp(NODES);
+
+    harness::section(&format!(
+        "Hierarchical vs flat collectives — {} ({} tensors, {} params), {} workers over {} nodes",
+        profile.name, n, total_params, WORLD, NODES
+    ));
+
+    let mut csv = harness::csv(
+        "hierarchy",
+        &[
+            "codec",
+            "flat_inter_bytes",
+            "hier_inter_bytes",
+            "inter_bytes_ratio",
+            "flat_total_bytes",
+            "hier_total_bytes",
+            "sim_flat_secs",
+            "sim_hier_secs",
+            "sim_speedup",
+            "sim_flat_inter_secs",
+            "sim_hier_inter_secs",
+        ],
+    );
+
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    let mut rows = Vec::new();
+    let mut agg_flat_inter = 0u64;
+    let mut agg_hier_inter = 0u64;
+
+    for kind in kinds {
+        // --- measured plane: exact inter-node byte accounting ------------
+        let flat = run_route(kind, &partition, &sizes, CommRoute::Flat);
+        let hier = run_route(kind, &partition, &sizes, CommRoute::TwoLevel);
+        assert!(
+            hier.inter_bytes_sent < flat.inter_bytes_sent,
+            "{}: two-level exchange crossed MORE node-boundary bytes than the flat ring \
+             ({} vs {})",
+            kind.name(),
+            hier.inter_bytes_sent,
+            flat.inter_bytes_sent
+        );
+        agg_flat_inter += flat.inter_bytes_sent;
+        agg_hier_inter += hier.inter_bytes_sent;
+
+        // --- predicted plane: end-to-end + exposed inter time ------------
+        let per_group = total_params / GROUPS;
+        let (sim_flat, sim_hier) = fabric.group_comm(kind, WORLD, per_group);
+        assert!(
+            sim_hier.seconds < sim_flat.seconds,
+            "{}: predicted two-level time {} not below flat {} on NVLink×TCP",
+            kind.name(),
+            sim_hier.seconds,
+            sim_flat.seconds
+        );
+        let ratio = hier.inter_bytes_sent as f64 / flat.inter_bytes_sent.max(1) as f64;
+        let speedup = sim_flat.seconds / sim_hier.seconds.max(1e-12);
+
+        println!(
+            "{:<10} inter bytes {:>9} -> {:>9} ({:>5.2}x)   sim {:>9.2}ms -> {:>8.2}ms ({speedup:>5.2}x)",
+            kind.name(),
+            flat.inter_bytes_sent,
+            hier.inter_bytes_sent,
+            1.0 / ratio.max(1e-12),
+            sim_flat.seconds * 1e3,
+            sim_hier.seconds * 1e3,
+        );
+        csv.rowd(&[
+            &kind.name(),
+            &flat.inter_bytes_sent,
+            &hier.inter_bytes_sent,
+            &ratio,
+            &flat.bytes_sent,
+            &hier.bytes_sent,
+            &sim_flat.seconds,
+            &sim_hier.seconds,
+            &speedup,
+            &sim_flat.inter_secs,
+            &sim_hier.inter_secs,
+        ])
+        .unwrap();
+
+        rows.push(Value::from_pairs(vec![
+            ("codec", Value::from(kind.name())),
+            ("flat_inter_bytes", Value::from(flat.inter_bytes_sent)),
+            ("hier_inter_bytes", Value::from(hier.inter_bytes_sent)),
+            ("inter_bytes_ratio", Value::from(ratio)),
+            ("flat_total_bytes", Value::from(flat.bytes_sent)),
+            ("hier_total_bytes", Value::from(hier.bytes_sent)),
+            ("flat_comm_inter_secs", Value::from(flat.comm_inter_secs)),
+            ("hier_comm_inter_secs", Value::from(hier.comm_inter_secs)),
+            ("sim_flat_secs", Value::from(sim_flat.seconds)),
+            ("sim_hier_secs", Value::from(sim_hier.seconds)),
+            ("sim_flat_inter_secs", Value::from(sim_flat.inter_secs)),
+            ("sim_hier_inter_secs", Value::from(sim_hier.inter_secs)),
+            ("sim_speedup", Value::from(speedup)),
+        ]));
+    }
+
+    println!(
+        "\naggregate inter-node bytes/step: flat {agg_flat_inter} -> two-level {agg_hier_inter} \
+         ({:.1}% saved)",
+        100.0 * (1.0 - agg_hier_inter as f64 / agg_flat_inter.max(1) as f64)
+    );
+    assert!(agg_hier_inter < agg_flat_inter);
+
+    let summary = Value::from_pairs(vec![
+        ("bench", Value::from("hierarchy")),
+        ("profile", Value::from(profile.name.clone())),
+        ("world", Value::from(WORLD)),
+        ("nodes", Value::from(NODES)),
+        ("groups", Value::from(partition.num_groups())),
+        ("steps", Value::from(STEPS)),
+        ("total_params", Value::from(total_params)),
+        ("fabric_intra", Value::from(fabric.intra.name)),
+        ("fabric_inter", Value::from(fabric.inter.name)),
+        ("agg_flat_inter_bytes", Value::from(agg_flat_inter)),
+        ("agg_hier_inter_bytes", Value::from(agg_hier_inter)),
+        (
+            "agg_inter_bytes_saved_frac",
+            Value::from(1.0 - agg_hier_inter as f64 / agg_flat_inter.max(1) as f64),
+        ),
+        ("codecs", Value::Arr(rows)),
+    ]);
+    write_json("results/BENCH_hierarchy.json", &summary)
+        .unwrap_or_else(|e| panic!("writing BENCH_hierarchy.json: {e}"));
+
+    harness::done("hierarchy");
+    println!("summary JSON: results/BENCH_hierarchy.json");
+}

@@ -8,35 +8,55 @@
 use super::transport::TransportError;
 use super::Comm;
 
-/// Ring allgather: world-1 steps; at step s each rank forwards the payload
-/// it received at step s-1 (starting with its own) to the right neighbour.
-/// Bytes moved per rank: sum of all other ranks' payload sizes — bandwidth
-/// optimal for a ring.
-pub fn ring_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
-    let world = comm.world();
-    let rank = comm.rank();
-    let mut out: Vec<Vec<u8>> = vec![Vec::new(); world];
-    if world == 1 {
-        out[0] = mine;
+/// Ring allgather among `members` (a sorted subset of ranks containing the
+/// calling rank): |members|-1 steps; at step s each member forwards the
+/// payload it received at step s-1 (starting with its own) to the right
+/// neighbour. Returns payloads indexed by **position in `members`**. `base`
+/// is the first of the `|members|` tags the operation may use (reserved by
+/// the caller so non-participating ranks stay tag-aligned).
+pub(crate) fn subset_ring_allgather(
+    comm: &mut Comm,
+    members: &[usize],
+    base: u64,
+    mine: Vec<u8>,
+) -> Result<Vec<Vec<u8>>, TransportError> {
+    let l = members.len();
+    let me = members
+        .iter()
+        .position(|&m| m == comm.rank())
+        .expect("calling rank must be a member of the ring subset");
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); l];
+    out[me] = mine;
+    if l == 1 {
         return Ok(out);
     }
-    let base = comm.next_tags(world as u64);
-    let right = (rank + 1) % world;
-    let left = (rank + world - 1) % world;
+    let right = members[(me + 1) % l];
+    let left = members[(me + l - 1) % l];
 
-    out[rank] = mine;
-    // The payload that rank holds and forwards at step s originates from
-    // rank (rank - s) mod world.
-    for s in 0..world - 1 {
-        let fwd_src = (rank + world - s) % world;
-        // Tag by originating rank so a slow rank can never alias payloads.
+    // The payload that member me holds and forwards at step s originates
+    // from member (me - s) mod l.
+    for s in 0..l - 1 {
+        let fwd_src = (me + l - s) % l;
+        // Tag by originating member so a slow rank can never alias payloads.
         comm.ep
             .send(right, base + fwd_src as u64, out[fwd_src].clone())?;
-        let recv_src = (rank + world - s - 1) % world;
+        let recv_src = (me + l - s - 1) % l;
         let payload = comm.ep.recv(left, base + recv_src as u64)?;
         out[recv_src] = payload;
     }
     Ok(out)
+}
+
+/// Flat ring allgather over all ranks: bytes moved per rank are the sum of
+/// all other ranks' payload sizes — bandwidth optimal for a ring.
+pub fn ring_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
+    let world = comm.world();
+    if world == 1 {
+        return Ok(vec![mine]);
+    }
+    let base = comm.next_tags(world as u64);
+    let members: Vec<usize> = (0..world).collect();
+    subset_ring_allgather(comm, &members, base, mine)
 }
 
 /// Barrier: a zero-byte allgather.

@@ -4,10 +4,15 @@
 //!
 //! 1. Every rank binds a **data listener** on an ephemeral port.
 //! 2. Rank 0 listens on the rendezvous address; every other rank dials it
-//!    (with retry until the deadline) and sends `HELLO <rank> <data-addr>`.
+//!    (with retry until the deadline) and sends
+//!    `HELLO <rank> <data-addr> <node>` — the node label is the rank's
+//!    position in the configured [`Topology`](super::Topology) (`n0`,
+//!    `n1`, …), which lets the trainer cross-check that every launched
+//!    process was handed the same `--topology`.
 //! 3. Once all `world - 1` hellos have arrived, rank 0 answers each peer
-//!    with the full peer table: `TABLE <addr0> <addr1> … <addrW-1>`. The
-//!    rendezvous connections then close — they carry no training traffic.
+//!    with the full peer table: `TABLE <addr0>/<node0> … <addrW-1>/<nodeW-1>`.
+//!    The rendezvous connections then close — they carry no training
+//!    traffic.
 //! 4. Mesh formation ([`connect_mesh`]): every rank dials all ranks
 //!    **below** it (handshake line `PEER <rank>`) and accepts one
 //!    connection from every rank above it, yielding one stream per peer.
@@ -84,7 +89,45 @@ fn accept_with_deadline(
     }
 }
 
-/// Run the rendezvous: every rank learns every rank's data address.
+/// One peer in the rendezvous table: its data address and the node label
+/// it registered with (`n<id>` from the configured topology; `-` when the
+/// peer did not say).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeerEntry {
+    pub addr: String,
+    pub node: String,
+}
+
+impl PeerEntry {
+    fn to_wire(&self) -> String {
+        format!("{}/{}", self.addr, self.node)
+    }
+
+    fn from_wire(entry: &str) -> PeerEntry {
+        match entry.split_once('/') {
+            Some((addr, node)) => PeerEntry {
+                addr: addr.to_string(),
+                node: node.to_string(),
+            },
+            // Tolerate a label-less entry (pre-topology peers).
+            None => PeerEntry {
+                addr: entry.to_string(),
+                node: "-".to_string(),
+            },
+        }
+    }
+}
+
+fn validate_node_label(label: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !label.is_empty() && !label.contains(char::is_whitespace) && !label.contains('/'),
+        "node label '{label}' must be non-empty with no whitespace or '/'"
+    );
+    Ok(())
+}
+
+/// Run the rendezvous: every rank learns every rank's data address and
+/// node label.
 ///
 /// `hosted`: rank 0 may pass a pre-bound listener (tests bind port 0 to
 /// pick a free port); otherwise rank 0 binds `rendezvous_addr` itself.
@@ -93,12 +136,17 @@ pub fn exchange_peer_table(
     world: usize,
     rendezvous_addr: &str,
     my_data_addr: &str,
+    my_node_label: &str,
     hosted: Option<TcpListener>,
     deadline: Instant,
-) -> anyhow::Result<Vec<String>> {
+) -> anyhow::Result<Vec<PeerEntry>> {
     anyhow::ensure!(rank < world, "rank {rank} out of range for world {world}");
+    validate_node_label(my_node_label)?;
     if world == 1 {
-        return Ok(vec![my_data_addr.to_string()]);
+        return Ok(vec![PeerEntry {
+            addr: my_data_addr.to_string(),
+            node: my_node_label.to_string(),
+        }]);
     }
     if rank == 0 {
         let listener = match hosted {
@@ -106,8 +154,11 @@ pub fn exchange_peer_table(
             None => TcpListener::bind(rendezvous_addr)
                 .map_err(|e| anyhow::anyhow!("binding rendezvous {rendezvous_addr}: {e}"))?,
         };
-        let mut table: Vec<Option<String>> = vec![None; world];
-        table[0] = Some(my_data_addr.to_string());
+        let mut table: Vec<Option<PeerEntry>> = vec![None; world];
+        table[0] = Some(PeerEntry {
+            addr: my_data_addr.to_string(),
+            node: my_node_label.to_string(),
+        });
         let mut peers: Vec<(usize, TcpStream)> = Vec::with_capacity(world - 1);
         while peers.len() < world - 1 {
             let mut stream = accept_with_deadline(&listener, deadline, "rendezvous hello")?;
@@ -124,16 +175,21 @@ pub fn exchange_peer_table(
             let addr = parts
                 .next()
                 .ok_or_else(|| anyhow::anyhow!("rendezvous: missing addr in '{line}'"))?;
+            let node = parts.next().unwrap_or("-");
             anyhow::ensure!(peer > 0 && peer < world, "rendezvous: rank {peer} out of range");
             anyhow::ensure!(
                 table[peer].is_none(),
                 "rendezvous: duplicate registration for rank {peer}"
             );
-            table[peer] = Some(addr.to_string());
+            table[peer] = Some(PeerEntry {
+                addr: addr.to_string(),
+                node: node.to_string(),
+            });
             peers.push((peer, stream));
         }
-        let table: Vec<String> = table.into_iter().map(|a| a.unwrap()).collect();
-        let reply = format!("TABLE {}\n", table.join(" "));
+        let table: Vec<PeerEntry> = table.into_iter().map(|a| a.unwrap()).collect();
+        let entries: Vec<String> = table.iter().map(PeerEntry::to_wire).collect();
+        let reply = format!("TABLE {}\n", entries.join(" "));
         for (peer, mut stream) in peers {
             stream
                 .write_all(reply.as_bytes())
@@ -150,7 +206,7 @@ pub fn exchange_peer_table(
             .set_read_timeout(Some(remaining))
             .map_err(|e| anyhow::anyhow!("read timeout: {e}"))?;
         stream
-            .write_all(format!("HELLO {rank} {my_data_addr}\n").as_bytes())
+            .write_all(format!("HELLO {rank} {my_data_addr} {my_node_label}\n").as_bytes())
             .map_err(|e| anyhow::anyhow!("sending hello: {e}"))?;
         let line = read_line_raw(&mut stream, 8192)?;
         let mut parts = line.split_whitespace();
@@ -158,7 +214,7 @@ pub fn exchange_peer_table(
             parts.next() == Some("TABLE"),
             "rendezvous: expected TABLE, got '{line}'"
         );
-        let table: Vec<String> = parts.map(str::to_string).collect();
+        let table: Vec<PeerEntry> = parts.map(PeerEntry::from_wire).collect();
         anyhow::ensure!(
             table.len() == world,
             "rendezvous: table has {} entries, expected {world}",
@@ -239,12 +295,12 @@ mod tests {
     }
 
     #[test]
-    fn rendezvous_distributes_consistent_table() {
+    fn rendezvous_distributes_consistent_table_with_node_labels() {
         let world = 4;
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let rdv = listener.local_addr().unwrap().to_string();
         let mut hosted = Some(listener);
-        let tables: Vec<Vec<String>> = std::thread::scope(|s| {
+        let tables: Vec<Vec<PeerEntry>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..world)
                 .map(|rank| {
                     let hosted = if rank == 0 { hosted.take() } else { None };
@@ -255,6 +311,8 @@ mod tests {
                             world,
                             &rdv,
                             &format!("127.0.0.1:{}", 9000 + rank),
+                            // Ranks 0–1 on node 0, ranks 2–3 on node 1.
+                            &format!("n{}", rank / 2),
                             hosted,
                             deadline(),
                         )
@@ -267,17 +325,37 @@ mod tests {
         for t in &tables {
             assert_eq!(t, &tables[0]);
             assert_eq!(t.len(), world);
-            for (r, addr) in t.iter().enumerate() {
-                assert_eq!(addr, &format!("127.0.0.1:{}", 9000 + r));
+            for (r, entry) in t.iter().enumerate() {
+                assert_eq!(entry.addr, format!("127.0.0.1:{}", 9000 + r));
+                assert_eq!(entry.node, format!("n{}", r / 2));
             }
         }
     }
 
     #[test]
     fn world_of_one_needs_no_network() {
-        let t =
-            exchange_peer_table(0, 1, "127.0.0.1:1", "127.0.0.1:9000", None, deadline()).unwrap();
-        assert_eq!(t, vec!["127.0.0.1:9000".to_string()]);
+        let t = exchange_peer_table(0, 1, "127.0.0.1:1", "127.0.0.1:9000", "n0", None, deadline())
+            .unwrap();
+        assert_eq!(
+            t,
+            vec![PeerEntry { addr: "127.0.0.1:9000".to_string(), node: "n0".to_string() }]
+        );
+    }
+
+    #[test]
+    fn bad_node_labels_rejected_and_unlabelled_entries_tolerated() {
+        for bad in ["", "two words", "a/b"] {
+            assert!(
+                exchange_peer_table(0, 1, "127.0.0.1:1", "127.0.0.1:9000", bad, None, deadline())
+                    .is_err(),
+                "label '{bad}' should be rejected"
+            );
+        }
+        let e = PeerEntry::from_wire("127.0.0.1:9000");
+        assert_eq!(e.addr, "127.0.0.1:9000");
+        assert_eq!(e.node, "-");
+        let e = PeerEntry::from_wire("127.0.0.1:9000/n3");
+        assert_eq!(e.node, "n3");
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Two-level (topology-aware) collectives: intra-node reduce/gather to the
+//! node leader, an inter-node ring **among leaders only**, then an
+//! intra-node broadcast — the hierarchy MG-WFBP and ScaleCom show flat
+//! rings need on multi-node fabrics.
+//!
+//! Why: a flat ring drags `2·(w−1)/w · S` bytes per rank across *every*
+//! link class, so the slow inter-node fabric gates all `2·(w−1)` steps.
+//! The two-level exchange confines the slow level to a ring over the `L`
+//! node leaders (`2·(L−1)` steps, `2·(L−1)/L · S` bytes per leader), while
+//! the cheap intra-node level absorbs the member fan-in/fan-out. The
+//! measured per-level split (`CommBreakdown`) feeds the scheduler's
+//! per-level α+β·size fits (`scheduler::estimator`), and the predicted
+//! counterpart lives in `netsim::hierarchy`.
+//!
+//! ## Exactness
+//!
+//! - **Allgather codecs** (every compressed scheme in paper Table 1): the
+//!   two-level path is **bit-identical to the flat ring unconditionally**.
+//!   Leaders exchange *concatenated frames* of their node's encoded
+//!   payloads; every rank ends up with the same rank-indexed payload table
+//!   the flat allgather delivers, and decodes it in the same rank order —
+//!   no floating-point reduction happens on the wire at all.
+//! - **Allreduce codecs** (FP32/FP16): sums are deterministic on every
+//!   rank (leader folds its members in ascending rank order, then the
+//!   leader ring reduces node partials), but the reduction *grouping*
+//!   differs from the flat ring's, so results are bit-identical exactly
+//!   when the sums involved are exact in the wire precision — the same
+//!   caveat NCCL documents for tree vs ring reductions.
+//!   `tests/hierarchy_equivalence.rs` pins both properties.
+//!
+//! Tag discipline: each operation reserves `3·world + 1` tags on **every**
+//! rank (leader or member) so rank-local tag sequences stay aligned across
+//! the whole group even though only leaders run the inter-node stage.
+
+use super::allgather::subset_ring_allgather;
+use super::ring::subset_ring_allreduce_bytes;
+use super::transport::TransportError;
+use super::Comm;
+use crate::compression::Codec;
+use crate::util::stats::Stopwatch;
+
+/// Per-level timing of one hierarchical collective, as measured by the
+/// calling rank. Leaders attribute the inter-node ring to `inter_secs`;
+/// non-leaders spend the same wall time blocked in the intra-node fan-out
+/// stage (their `inter_secs` is 0) — rank 0, which drives the scheduler's
+/// cost fits, is always a leader.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommBreakdown {
+    /// Seconds in the intra-node stages (member→leader fan-in and
+    /// leader→member fan-out).
+    pub intra_secs: f64,
+    /// Seconds in the inter-node stage (the ring among node leaders).
+    pub inter_secs: f64,
+}
+
+/// Tags one hierarchical collective may use; reserved identically on every
+/// rank. Layout: `[0, world)` intra fan-in (by node-local index),
+/// `[world, 3·world)` the leader ring, `[3·world]` intra fan-out.
+pub(crate) fn hier_tag_slots(world: usize) -> u64 {
+    3 * world as u64 + 1
+}
+
+/// Two-level allreduce of a codec wire buffer (FP32/FP16): intra-node fold
+/// to the leader, ring allreduce among leaders, intra-node broadcast.
+pub fn hier_allreduce_wire(
+    comm: &mut Comm,
+    data: &mut [u8],
+    codec: &dyn Codec,
+) -> Result<(), TransportError> {
+    let world = comm.world();
+    let rank = comm.rank();
+    if world == 1 || data.is_empty() {
+        return Ok(());
+    }
+    let align = codec.wire_align();
+    assert_eq!(
+        data.len() % align,
+        0,
+        "buffer length must be a multiple of the element size"
+    );
+    let members = comm.topology().node_members_of(rank).to_vec();
+    let leaders = comm.topology().leaders();
+    let leader = members[0];
+    let base = comm.next_tags(hier_tag_slots(world));
+    let ring_base = base + world as u64;
+    let fanout_tag = base + 3 * world as u64;
+
+    // Stage A — intra-node fan-in: the leader folds member buffers in
+    // ascending rank order (deterministic; no election traffic).
+    let sw = Stopwatch::start();
+    if rank == leader {
+        for (idx, &m) in members.iter().enumerate().skip(1) {
+            let incoming = comm.ep.recv(m, base + idx as u64)?;
+            codec.reduce_wire(data, &incoming);
+        }
+    } else {
+        let idx = members
+            .iter()
+            .position(|&m| m == rank)
+            .expect("rank missing from its own node");
+        comm.ep.send(leader, base + idx as u64, data.to_vec())?;
+    }
+    let mut intra_secs = sw.elapsed().as_secs_f64();
+
+    // Stage B — inter-node ring among leaders over the node partials.
+    let sw = Stopwatch::start();
+    if rank == leader && leaders.len() > 1 {
+        subset_ring_allreduce_bytes(comm, &leaders, ring_base, data, align, &|a, b| {
+            codec.reduce_wire(a, b)
+        })?;
+    }
+    let inter_secs = sw.elapsed().as_secs_f64();
+
+    // Stage C — intra-node fan-out of the fully reduced buffer.
+    let sw = Stopwatch::start();
+    if rank == leader {
+        for &m in members.iter().skip(1) {
+            comm.ep.send(m, fanout_tag, data.to_vec())?;
+        }
+    } else {
+        let reduced = comm.ep.recv(leader, fanout_tag)?;
+        debug_assert_eq!(reduced.len(), data.len());
+        data.copy_from_slice(&reduced);
+    }
+    intra_secs += sw.elapsed().as_secs_f64();
+
+    comm.note_breakdown(CommBreakdown {
+        intra_secs,
+        inter_secs: if rank == leader { inter_secs } else { 0.0 },
+    });
+    Ok(())
+}
+
+/// Two-level allgather (variable-size payloads): members hand their
+/// payloads to the leader, leaders ring-exchange **concatenated node
+/// frames**, the leader fans the full rank-indexed table back out. The
+/// result is exactly what the flat ring allgather returns, on every rank.
+pub fn hier_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
+    let world = comm.world();
+    let rank = comm.rank();
+    if world == 1 {
+        return Ok(vec![mine]);
+    }
+    let members = comm.topology().node_members_of(rank).to_vec();
+    let leaders = comm.topology().leaders();
+    let node_lists: Vec<Vec<usize>> = (0..comm.topology().num_nodes())
+        .map(|n| comm.topology().node_members(n).to_vec())
+        .collect();
+    let my_node = comm.topology().node_of(rank);
+    let leader = members[0];
+    let base = comm.next_tags(hier_tag_slots(world));
+    let ring_base = base + world as u64;
+    let fanout_tag = base + 3 * world as u64;
+
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); world];
+
+    // Stage A — intra-node fan-in of raw payloads.
+    let sw = Stopwatch::start();
+    if rank == leader {
+        out[rank] = mine;
+        for (idx, &m) in members.iter().enumerate().skip(1) {
+            out[m] = comm.ep.recv(m, base + idx as u64)?;
+        }
+    } else {
+        let idx = members
+            .iter()
+            .position(|&m| m == rank)
+            .expect("rank missing from its own node");
+        comm.ep.send(leader, base + idx as u64, mine)?;
+    }
+    let mut intra_secs = sw.elapsed().as_secs_f64();
+
+    // Stage B — leaders exchange concatenated node frames (one
+    // length-prefixed entry per member, ascending rank order).
+    let sw = Stopwatch::start();
+    if rank == leader && leaders.len() > 1 {
+        let frame = encode_frame(&members, &out);
+        let gathered = subset_ring_allgather(comm, &leaders, ring_base, frame)?;
+        for (node, frame) in gathered.iter().enumerate() {
+            if node != my_node {
+                decode_frame_into(&node_lists[node], frame, &mut out)?;
+            }
+        }
+    }
+    let inter_secs = sw.elapsed().as_secs_f64();
+
+    // Stage C — intra-node fan-out of the full rank-indexed table.
+    let sw = Stopwatch::start();
+    if rank == leader {
+        if members.len() > 1 {
+            let all_ranks: Vec<usize> = (0..world).collect();
+            let table = encode_frame(&all_ranks, &out);
+            for &m in members.iter().skip(1) {
+                comm.ep.send(m, fanout_tag, table.clone())?;
+            }
+        }
+    } else {
+        let table = comm.ep.recv(leader, fanout_tag)?;
+        let all_ranks: Vec<usize> = (0..world).collect();
+        decode_frame_into(&all_ranks, &table, &mut out)?;
+    }
+    intra_secs += sw.elapsed().as_secs_f64();
+
+    comm.note_breakdown(CommBreakdown {
+        intra_secs,
+        inter_secs: if rank == leader { inter_secs } else { 0.0 },
+    });
+    Ok(out)
+}
+
+/// Concatenate `out[r]` for each rank in `ranks` as `[u32 len][bytes]`
+/// entries, in the given (ascending) order.
+fn encode_frame(ranks: &[usize], out: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize = ranks.iter().map(|&r| 4 + out[r].len()).sum();
+    let mut frame = Vec::with_capacity(total);
+    for &r in ranks {
+        frame.extend_from_slice(&(out[r].len() as u32).to_le_bytes());
+        frame.extend_from_slice(&out[r]);
+    }
+    frame
+}
+
+/// Inverse of [`encode_frame`]: scatter the entries back into `out` at the
+/// given rank indices. A malformed frame is a transport-level failure (it
+/// can only come from a corrupt or truncated peer stream).
+fn decode_frame_into(
+    ranks: &[usize],
+    frame: &[u8],
+    out: &mut [Vec<u8>],
+) -> Result<(), TransportError> {
+    let corrupt = |what: &str| TransportError::Disconnected {
+        detail: format!("hierarchical allgather: corrupt node frame ({what})"),
+    };
+    let mut off = 0usize;
+    for &r in ranks {
+        let hdr = frame
+            .get(off..off + 4)
+            .ok_or_else(|| corrupt("truncated length header"))?;
+        let len = u32::from_le_bytes(hdr.try_into().unwrap()) as usize;
+        off += 4;
+        let payload = frame
+            .get(off..off + len)
+            .ok_or_else(|| corrupt("truncated payload"))?;
+        out[r] = payload.to_vec();
+        off += len;
+    }
+    if off != frame.len() {
+        return Err(corrupt("trailing bytes"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_preserves_payloads() {
+        let out = vec![vec![1u8, 2], Vec::new(), vec![9u8; 5], vec![7u8]];
+        let ranks = vec![0usize, 2, 3];
+        let frame = encode_frame(&ranks, &out);
+        assert_eq!(frame.len(), 4 * 3 + 2 + 5 + 1);
+        let mut back = vec![Vec::new(); 4];
+        decode_frame_into(&ranks, &frame, &mut back).unwrap();
+        assert_eq!(back[0], out[0]);
+        assert!(back[1].is_empty(), "rank 1 is not in the frame");
+        assert_eq!(back[2], out[2]);
+        assert_eq!(back[3], out[3]);
+    }
+
+    #[test]
+    fn corrupt_frames_fail_loudly() {
+        let mut out = vec![Vec::new(); 2];
+        // Truncated header.
+        assert!(decode_frame_into(&[0], &[1, 0, 0], &mut out).is_err());
+        // Header promises more payload than exists.
+        assert!(decode_frame_into(&[0], &[5, 0, 0, 0, 1], &mut out).is_err());
+        // Trailing garbage after the last entry.
+        assert!(decode_frame_into(&[0], &[1, 0, 0, 0, 7, 9], &mut out).is_err());
+        // Exact fit parses.
+        assert!(decode_frame_into(&[0], &[1, 0, 0, 0, 7], &mut out).is_ok());
+        assert_eq!(out[0], vec![7]);
+    }
+}

@@ -11,29 +11,66 @@
 //! Failure semantics: every collective returns `Result<_,
 //! [`TransportError`]>`. A peer dying mid-collective fails the operation
 //! with the rank/peer/tag context instead of panicking the worker.
+//!
+//! Topology: a [`Comm`] carries a [`Topology`] (rank→node mapping) and a
+//! [`CommRoute`]. With a non-trivial topology the gradient collectives
+//! (`allgather`, `allreduce_wire`) run the **two-level** exchange in
+//! [`hierarchical`] — intra-node fan-in to the node leader, an inter-node
+//! ring among leaders only, intra-node fan-out — instead of the flat ring,
+//! and the per-level timing split is available via
+//! [`Comm::take_last_breakdown`].
 
 pub mod allgather;
 pub mod bootstrap;
+pub mod hierarchical;
 pub mod nonblocking;
 pub mod ring;
 pub mod tcp;
+pub mod topology;
 pub mod transport;
 
+pub use hierarchical::CommBreakdown;
 pub use nonblocking::{lane_scope, CommCompletion, CommHandle, CommLane, CommOutcome};
-pub use tcp::{run_tcp_group, tcp_endpoint, TcpConfig, TcpTransport};
+pub use tcp::{run_tcp_group, tcp_endpoint, tcp_endpoint_with_nodes, TcpConfig, TcpTransport};
+pub use topology::{Topology, TopologySpec};
 pub use transport::{
     mesh, run_group, Endpoint, InProcTransport, Transport, TransportError, TransportKind,
 };
 
-/// Communicator: an endpoint plus a per-group op counter.
+/// Which algorithm the gradient collectives use (the f32 loss/metric
+/// allreduce always rings flat — it moves a handful of bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CommRoute {
+    /// Single-level ring over all ranks (the historical path).
+    #[default]
+    Flat,
+    /// Two-level exchange over the attached [`Topology`]
+    /// (see [`hierarchical`]).
+    TwoLevel,
+}
+
+/// Communicator: an endpoint plus a per-group op counter and the topology
+/// the collectives route over.
 pub struct Comm {
     pub ep: Endpoint,
     seq: u64,
+    topology: Topology,
+    route: CommRoute,
+    /// Per-level timing of the most recent routed collective (set by the
+    /// hierarchical path, cleared by every collective).
+    last_breakdown: Option<CommBreakdown>,
 }
 
 impl Comm {
     pub fn new(ep: Endpoint) -> Self {
-        Self { ep, seq: 0 }
+        let world = ep.world();
+        Self {
+            ep,
+            seq: 0,
+            topology: Topology::flat(world),
+            route: CommRoute::Flat,
+            last_breakdown: None,
+        }
     }
 
     pub fn rank(&self) -> usize {
@@ -55,37 +92,112 @@ impl Comm {
         self.ep.bytes_sent()
     }
 
+    /// Attach a topology. Every rank must attach the same one (the route
+    /// is part of the symmetric-SPMD contract, exactly like the collective
+    /// call sequence). A trivial topology (one node, or all-singleton
+    /// nodes) keeps the flat route; anything else switches the gradient
+    /// collectives to the two-level exchange.
+    pub fn set_topology(&mut self, topology: Topology) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            topology.world() == self.world(),
+            "topology is for {} ranks but the communicator has {}",
+            topology.world(),
+            self.world()
+        );
+        self.route = if topology.is_trivial() {
+            CommRoute::Flat
+        } else {
+            CommRoute::TwoLevel
+        };
+        self.topology = topology;
+        Ok(())
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Override the route (e.g. run the flat ring over a node-labelled
+    /// topology to compare inter-node byte counts against the two-level
+    /// exchange — what `benches/hierarchy.rs` does).
+    pub fn set_route(&mut self, route: CommRoute) {
+        self.route = route;
+    }
+
+    pub fn route(&self) -> CommRoute {
+        self.route
+    }
+
+    pub(crate) fn note_breakdown(&mut self, b: CommBreakdown) {
+        self.last_breakdown = Some(b);
+    }
+
+    /// Per-level timing of the most recent `allgather`/`allreduce_wire`,
+    /// if it ran the two-level route. Consumed on read.
+    pub fn take_last_breakdown(&mut self) -> Option<CommBreakdown> {
+        self.last_breakdown.take()
+    }
+
+    /// Payload bytes this rank has sent to peers on **other** nodes
+    /// (under a flat topology every peer shares the node, so this is 0).
+    pub fn inter_node_bytes(&self) -> u64 {
+        let rank = self.rank();
+        self.ep
+            .per_peer_sent()
+            .iter()
+            .enumerate()
+            .filter(|&(peer, _)| !self.topology.same_node(rank, peer))
+            .map(|(_, &bytes)| bytes)
+            .sum()
+    }
+
     // -- collectives (implemented in submodules) ---------------------------
 
     /// Synchronize all ranks.
     pub fn barrier(&mut self) -> Result<(), TransportError> {
+        self.last_breakdown = None;
         allgather::barrier(self)
     }
 
     /// Root's payload ends up on every rank.
     pub fn broadcast(&mut self, root: usize, bytes: &mut Vec<u8>) -> Result<(), TransportError> {
+        self.last_breakdown = None;
         allgather::broadcast(self, root, bytes)
     }
 
     /// Every rank contributes a (variable-size) payload; all ranks get all
-    /// payloads, indexed by source rank.
+    /// payloads, indexed by source rank. Routed: flat ring, or the
+    /// two-level leader-concatenated exchange (bit-identical results).
     pub fn allgather(&mut self, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
-        allgather::ring_allgather(self, mine)
+        self.last_breakdown = None;
+        match self.route {
+            CommRoute::Flat => allgather::ring_allgather(self, mine),
+            CommRoute::TwoLevel => hierarchical::hier_allgather(self, mine),
+        }
     }
 
-    /// In-place ring allreduce over an f32 buffer (sum).
+    /// In-place ring allreduce over an f32 buffer (sum). Always flat: the
+    /// trainer uses it for scalar loss/metric reductions where a two-level
+    /// exchange would only add latency.
     pub fn allreduce_f32(&mut self, data: &mut [f32]) -> Result<(), TransportError> {
+        self.last_breakdown = None;
         ring::allreduce_f32(self, data)
     }
 
-    /// In-place ring allreduce over a wire-format buffer, reducing with the
-    /// codec's `reduce_wire` (FP32/FP16 payloads).
+    /// In-place allreduce over a wire-format buffer, reducing with the
+    /// codec's `reduce_wire` (FP32/FP16 payloads). Routed: flat ring, or
+    /// the two-level reduce (deterministic; see [`hierarchical`] for the
+    /// exactness contract).
     pub fn allreduce_wire(
         &mut self,
         data: &mut [u8],
         codec: &dyn crate::compression::Codec,
     ) -> Result<(), TransportError> {
-        ring::allreduce_wire(self, data, codec)
+        self.last_breakdown = None;
+        match self.route {
+            CommRoute::Flat => ring::allreduce_wire(self, data, codec),
+            CommRoute::TwoLevel => hierarchical::hier_allreduce_wire(self, data, codec),
+        }
     }
 }
 
@@ -152,6 +264,97 @@ mod tests {
         });
         assert_eq!(results[0].0, vec![vec![7]]);
         assert_eq!(results[0].1, vec![3.0]);
+    }
+
+    #[test]
+    fn two_level_allgather_matches_flat_ring() {
+        // 6 ranks split 4+2 (non-divisible): the routed allgather must
+        // return exactly what the flat ring returns, on every rank.
+        let results = run_comm_group(6, |c| {
+            let flat = c.allgather(vec![c.rank() as u8; c.rank() + 1]).unwrap();
+            c.set_topology(Topology::from_sizes(&[4, 2]).unwrap()).unwrap();
+            assert_eq!(c.route(), CommRoute::TwoLevel);
+            let hier = c.allgather(vec![c.rank() as u8; c.rank() + 1]).unwrap();
+            let breakdown = c.take_last_breakdown();
+            (flat, hier, breakdown)
+        });
+        for (rank, (flat, hier, breakdown)) in results.iter().enumerate() {
+            assert_eq!(flat, hier, "rank {rank}");
+            let b = breakdown.expect("two-level route records a breakdown");
+            assert!(b.intra_secs >= 0.0 && b.inter_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn two_level_allreduce_sums_exactly_on_integer_grads() {
+        use crate::compression::{Codec as _, CodecKind, Encoded};
+        let n = 48;
+        let results = run_comm_group(6, move |c| {
+            c.set_topology(Topology::from_sizes(&[4, 2]).unwrap()).unwrap();
+            // Integer-valued f32s: any reduction grouping sums exactly.
+            let g: Vec<f32> = (0..n).map(|i| (c.rank() * 10 + i % 7) as f32).collect();
+            let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(0);
+            let mut codec = CodecKind::Fp32.build(n);
+            let enc = codec.encode(&g, &mut rng);
+            let mut wire = enc.bytes;
+            c.allreduce_wire(&mut wire, codec.as_ref()).unwrap();
+            let mut out = vec![0f32; n];
+            codec.decode(&Encoded { bytes: wire, n }, &mut out);
+            out
+        });
+        for r in &results {
+            for (i, v) in r.iter().enumerate() {
+                // Σ_rank (10·rank + i%7) over ranks 0..6; Σ rank = 15.
+                let want = (10 * 15 + 6 * (i % 7)) as f32;
+                assert_eq!(*v, want, "elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn trivial_topologies_keep_the_flat_route() {
+        let results = run_comm_group(3, |c| {
+            c.set_topology(Topology::flat(3)).unwrap();
+            let single = c.route();
+            c.set_topology(Topology::balanced(3, 3).unwrap()).unwrap();
+            let singletons = c.route();
+            // Collectives still work after the re-attachments.
+            let g = c.allgather(vec![c.rank() as u8]).unwrap();
+            (single, singletons, g)
+        });
+        for (single, singletons, g) in results {
+            assert_eq!(single, CommRoute::Flat);
+            assert_eq!(singletons, CommRoute::Flat);
+            assert_eq!(g, vec![vec![0], vec![1], vec![2]]);
+        }
+    }
+
+    #[test]
+    fn topology_world_mismatch_rejected() {
+        let results = run_comm_group(2, |c| c.set_topology(Topology::flat(3)).is_err());
+        assert!(results.into_iter().all(|e| e));
+    }
+
+    #[test]
+    fn inter_node_bytes_counted_against_topology() {
+        // Under a 2+2 split, rank 0's flat-ring neighbour (rank 1) is
+        // intra-node, so a flat allgather from rank 0 crosses no node
+        // boundary — while rank 1 forwards everything to rank 2 inter-node.
+        let results = run_comm_group(4, |c| {
+            c.set_topology(Topology::from_sizes(&[2, 2]).unwrap()).unwrap();
+            c.set_route(CommRoute::Flat);
+            c.allgather(vec![0u8; 10]).unwrap();
+            (c.inter_node_bytes(), c.bytes_sent())
+        });
+        for (rank, (inter, total)) in results.iter().enumerate() {
+            assert_eq!(*total, 30, "rank {rank} forwards 3 payloads");
+            match rank {
+                // Ranks 0 and 2 send to an intra-node right neighbour.
+                0 | 2 => assert_eq!(*inter, 0, "rank {rank}"),
+                // Ranks 1 and 3 send to the next node.
+                _ => assert_eq!(*inter, 30, "rank {rank}"),
+            }
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! [`CommHandle::wait`], carried through from whichever backend the `Comm`
 //! runs over.
 
+use super::hierarchical::CommBreakdown;
 use super::transport::TransportError;
 use super::Comm;
 use crate::compression::{CodecKind, Collective};
@@ -43,6 +44,12 @@ pub struct CommCompletion {
     /// Seconds the comm lane spent inside this collective (includes time
     /// blocked on peers — the real occupancy of the comm resource).
     pub secs: f64,
+    /// Per-level timing when the collective ran the two-level route
+    /// (`None` on the flat ring).
+    pub breakdown: Option<CommBreakdown>,
+    /// Payload bytes this collective sent to peers on other nodes (0 under
+    /// a flat topology).
+    pub inter_bytes: u64,
 }
 
 enum Op {
@@ -125,6 +132,7 @@ pub fn lane_scope<R>(comm: &mut Comm, f: impl FnOnce(&CommLane) -> R) -> (R, f64
         let worker = s.spawn(move || {
             let mut busy = 0.0f64;
             while let Ok(job) = jrx.recv() {
+                let inter_before = comm.inter_node_bytes();
                 let sw = Stopwatch::start();
                 let result = match job.op {
                     Op::AllReduce { mut wire, kind, n } => {
@@ -136,12 +144,17 @@ pub fn lane_scope<R>(comm: &mut Comm, f: impl FnOnce(&CommLane) -> R) -> (R, f64
                 };
                 let secs = sw.elapsed().as_secs_f64();
                 busy += secs;
+                let breakdown = comm.take_last_breakdown();
+                let inter_bytes = comm.inter_node_bytes() - inter_before;
                 // A dropped handle just means the caller didn't care about
                 // the result; the collective itself already ran on every
                 // rank, so ignore the send error.
-                let _ = job
-                    .done
-                    .send(result.map(|outcome| CommCompletion { outcome, secs }));
+                let _ = job.done.send(result.map(|outcome| CommCompletion {
+                    outcome,
+                    secs,
+                    breakdown,
+                    inter_bytes,
+                }));
             }
             busy
         });

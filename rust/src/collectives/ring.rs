@@ -31,16 +31,26 @@ fn chunk_bounds(len: usize, world: usize, align: usize) -> Vec<(usize, usize)> {
     bounds
 }
 
-/// Generic ring allreduce over bytes with a caller-supplied reducer.
-fn ring_allreduce_bytes(
+/// Generic ring allreduce over bytes with a caller-supplied reducer,
+/// running among `members` (a sorted subset of ranks that must contain the
+/// calling rank). The flat path passes all ranks; the hierarchical path
+/// passes the node leaders. `base` is the first of the `2·|members|` tags
+/// the operation may use — the caller reserves them so every rank's tag
+/// sequence stays aligned whether or not it participates.
+pub(crate) fn subset_ring_allreduce_bytes(
     comm: &mut Comm,
+    members: &[usize],
+    base: u64,
     data: &mut [u8],
     align: usize,
     reduce: &dyn Fn(&mut [u8], &[u8]),
 ) -> Result<(), TransportError> {
-    let world = comm.world();
-    let rank = comm.rank();
-    if world == 1 || data.is_empty() {
+    let l = members.len();
+    let me = members
+        .iter()
+        .position(|&m| m == comm.rank())
+        .expect("calling rank must be a member of the ring subset");
+    if l == 1 || data.is_empty() {
         return Ok(());
     }
     assert_eq!(
@@ -48,17 +58,15 @@ fn ring_allreduce_bytes(
         0,
         "buffer length must be a multiple of the element size"
     );
-    let bounds = chunk_bounds(data.len(), world, align);
-    let right = (rank + 1) % world;
-    let left = (rank + world - 1) % world;
-    // 2·(world−1) steps total; tag per step.
-    let base = comm.next_tags(2 * world as u64);
+    let bounds = chunk_bounds(data.len(), l, align);
+    let right = members[(me + 1) % l];
+    let left = members[(me + l - 1) % l];
 
-    // Phase 1 — reduce-scatter: after world-1 steps, rank r owns the fully
-    // reduced chunk (r+1) mod world.
-    for s in 0..world - 1 {
-        let send_c = (rank + world - s) % world;
-        let recv_c = (rank + world - s - 1) % world;
+    // Phase 1 — reduce-scatter: after l-1 steps, member m owns the fully
+    // reduced chunk (m+1) mod l.
+    for s in 0..l - 1 {
+        let send_c = (me + l - s) % l;
+        let recv_c = (me + l - s - 1) % l;
         let (lo, hi) = bounds[send_c];
         comm.ep.send(right, base + s as u64, data[lo..hi].to_vec())?;
         let incoming = comm.ep.recv(left, base + s as u64)?;
@@ -67,17 +75,34 @@ fn ring_allreduce_bytes(
     }
 
     // Phase 2 — allgather of the reduced chunks.
-    for s in 0..world - 1 {
-        let send_c = (rank + 1 + world - s) % world;
-        let recv_c = (rank + world - s) % world;
+    for s in 0..l - 1 {
+        let send_c = (me + 1 + l - s) % l;
+        let recv_c = (me + l - s) % l;
         let (lo, hi) = bounds[send_c];
         comm.ep
-            .send(right, base + (world - 1 + s) as u64, data[lo..hi].to_vec())?;
-        let incoming = comm.ep.recv(left, base + (world - 1 + s) as u64)?;
+            .send(right, base + (l - 1 + s) as u64, data[lo..hi].to_vec())?;
+        let incoming = comm.ep.recv(left, base + (l - 1 + s) as u64)?;
         let (lo, hi) = bounds[recv_c];
         data[lo..hi].copy_from_slice(&incoming);
     }
     Ok(())
+}
+
+/// Flat ring allreduce over all ranks (reserves its own tags).
+fn ring_allreduce_bytes(
+    comm: &mut Comm,
+    data: &mut [u8],
+    align: usize,
+    reduce: &dyn Fn(&mut [u8], &[u8]),
+) -> Result<(), TransportError> {
+    let world = comm.world();
+    if world == 1 || data.is_empty() {
+        return Ok(());
+    }
+    // 2·(world−1) steps total; tag per step.
+    let base = comm.next_tags(2 * world as u64);
+    let members: Vec<usize> = (0..world).collect();
+    subset_ring_allreduce_bytes(comm, &members, base, data, align, reduce)
 }
 
 /// In-place f32 sum allreduce.
@@ -226,6 +251,32 @@ mod tests {
         });
         for r in &results {
             assert!(r.iter().all(|&v| v == 3.0), "{:?}", &r[..4]);
+        }
+    }
+
+    #[test]
+    fn subset_ring_sums_among_members_only() {
+        // Ranks {0, 2, 3} of a 4-rank world run a ring; rank 1 idles. The
+        // hierarchical collectives use exactly this to ring over leaders.
+        let results = run_comm_group(4, |c| {
+            let members = vec![0usize, 2, 3];
+            if !members.iter().any(|&m| m == c.rank()) {
+                return Vec::new();
+            }
+            let base = c.next_tags(2 * members.len() as u64);
+            let mut data = vec![c.rank() as u8 + 1; 9];
+            subset_ring_allreduce_bytes(c, &members, base, &mut data, 1, &|a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x = x.wrapping_add(*y);
+                }
+            })
+            .unwrap();
+            data
+        });
+        assert!(results[1].is_empty());
+        for r in [0usize, 2, 3] {
+            // 1 + 3 + 4 from ranks 0, 2, 3.
+            assert_eq!(results[r], vec![8u8; 9], "member rank {r}");
         }
     }
 

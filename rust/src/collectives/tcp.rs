@@ -52,6 +52,11 @@ pub struct TcpConfig {
     /// Host this rank binds its data listener on and advertises to peers
     /// (must be routable from the other ranks; loopback for single-host).
     pub advertise_host: String,
+    /// Node label this rank registers in the rendezvous TABLE (`n<id>`
+    /// from the configured topology). The trainer cross-checks every
+    /// peer's label against its own `--topology`, catching launches where
+    /// ranks were handed different topologies.
+    pub node_label: String,
     /// Bootstrap deadline: rendezvous + mesh formation must finish within
     /// this budget (dial retries included).
     pub timeout: Duration,
@@ -64,6 +69,7 @@ impl Default for TcpConfig {
             world: 1,
             rendezvous: "127.0.0.1:29500".to_string(),
             advertise_host: "127.0.0.1".to_string(),
+            node_label: "n0".to_string(),
             timeout: Duration::from_secs(60),
         }
     }
@@ -84,6 +90,8 @@ pub struct TcpTransport {
     world: usize,
     writers: Vec<Option<PeerWriter>>,
     inbox: Receiver<Msg>,
+    /// Node label each rank registered during the rendezvous.
+    peer_nodes: Vec<String>,
     bytes_sent: u64,
     msgs_sent: u64,
 }
@@ -119,10 +127,13 @@ impl TcpTransport {
             cfg.world,
             &cfg.rendezvous,
             &my_addr,
+            &cfg.node_label,
             hosted_rendezvous,
             deadline,
         )?;
-        let conns = bootstrap::connect_mesh(cfg.rank, cfg.world, &table, &listener, deadline)?;
+        let peer_nodes: Vec<String> = table.iter().map(|e| e.node.clone()).collect();
+        let addrs: Vec<String> = table.into_iter().map(|e| e.addr).collect();
+        let conns = bootstrap::connect_mesh(cfg.rank, cfg.world, &addrs, &listener, deadline)?;
 
         let (inbox_tx, inbox) = channel::<Msg>();
         let mut writers: Vec<Option<PeerWriter>> = Vec::with_capacity(cfg.world);
@@ -162,9 +173,16 @@ impl TcpTransport {
             world: cfg.world,
             writers,
             inbox,
+            peer_nodes,
             bytes_sent: 0,
             msgs_sent: 0,
         })
+    }
+
+    /// Node label each rank registered during the rendezvous, indexed by
+    /// rank.
+    pub fn peer_nodes(&self) -> &[String] {
+        &self.peer_nodes
     }
 
     fn peer_gone(&self, peer: usize, tag: u64, detail: String) -> TransportError {
@@ -344,10 +362,19 @@ pub fn tcp_endpoint(
     cfg: &TcpConfig,
     hosted_rendezvous: Option<TcpListener>,
 ) -> anyhow::Result<Endpoint> {
-    Ok(Endpoint::new(Box::new(TcpTransport::connect(
-        cfg,
-        hosted_rendezvous,
-    )?)))
+    Ok(tcp_endpoint_with_nodes(cfg, hosted_rendezvous)?.0)
+}
+
+/// Like [`tcp_endpoint`], but also returns the node label every rank
+/// registered in the rendezvous TABLE (indexed by rank) — the trainer
+/// cross-checks these against its own `--topology`.
+pub fn tcp_endpoint_with_nodes(
+    cfg: &TcpConfig,
+    hosted_rendezvous: Option<TcpListener>,
+) -> anyhow::Result<(Endpoint, Vec<String>)> {
+    let transport = TcpTransport::connect(cfg, hosted_rendezvous)?;
+    let nodes = transport.peer_nodes().to_vec();
+    Ok((Endpoint::new(Box::new(transport)), nodes))
 }
 
 /// Run a closure on every rank of a fresh TCP group over loopback, one OS
@@ -480,6 +507,37 @@ mod tests {
             }
         });
         assert_eq!(results, vec![None, None]);
+    }
+
+    #[test]
+    fn node_labels_propagate_through_rendezvous() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let rendezvous = listener.local_addr().unwrap().to_string();
+        let mut hosted = Some(listener);
+        let labels: Vec<Vec<String>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2usize)
+                .map(|rank| {
+                    let hosted = if rank == 0 { hosted.take() } else { None };
+                    let rendezvous = rendezvous.clone();
+                    s.spawn(move || {
+                        let cfg = TcpConfig {
+                            rank,
+                            world: 2,
+                            rendezvous,
+                            node_label: format!("n{rank}"),
+                            ..TcpConfig::default()
+                        };
+                        let (ep, nodes) = tcp_endpoint_with_nodes(&cfg, hosted).unwrap();
+                        drop(ep);
+                        nodes
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for l in &labels {
+            assert_eq!(l, &vec!["n0".to_string(), "n1".to_string()]);
+        }
     }
 
     #[test]

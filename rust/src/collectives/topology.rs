@@ -1,0 +1,344 @@
+//! Cluster topology: which ranks share a node, and who leads each node.
+//!
+//! The paper's testbed is a single 8-GPU box, so its collectives treat all
+//! ranks as one flat NVLink-or-PCIe mesh. Multi-node deployments are not
+//! flat: intra-node links (NVLink/shared memory) are orders of magnitude
+//! faster than the inter-node fabric (TCP/IB), and a flat ring drags every
+//! byte across the slow level `2·(w−1)/w` times. [`Topology`] is the
+//! rank→node mapping the two-level collectives in
+//! [`hierarchical`](super::hierarchical) exchange over: intra-node traffic
+//! stays inside a node, and only the **node leaders** (lowest rank of each
+//! node, deterministic on every rank without election traffic) talk across
+//! the inter-node level.
+//!
+//! [`TopologySpec`] is the config/CLI-facing description
+//! (`--topology flat|nodes=G|nodes=a+b+…`); [`TopologySpec::build`] turns
+//! it into a concrete [`Topology`] for a world size. Ranks are assigned to
+//! nodes in contiguous blocks, which matches how `mergecomp launch` (and
+//! any sane multi-node launcher) numbers ranks: node 0 hosts ranks
+//! `0..s0`, node 1 hosts `s0..s0+s1`, and so on.
+
+use std::fmt;
+
+/// Rank→node mapping for one communicator world.
+///
+/// Invariants (enforced by every constructor): node ids are dense
+/// (`0..num_nodes`), every node is non-empty, and each node's member list
+/// is sorted ascending — the leader of a node is its lowest rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// `node_of[rank]` = node id.
+    node_of: Vec<usize>,
+    /// `nodes[n]` = sorted ranks on node `n`.
+    nodes: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// The degenerate single-level topology: every rank on one node. The
+    /// collectives treat it (and the all-singletons case) as "no
+    /// hierarchy" and route flat.
+    pub fn flat(world: usize) -> Topology {
+        assert!(world >= 1);
+        Topology {
+            node_of: vec![0; world],
+            nodes: vec![(0..world).collect()],
+        }
+    }
+
+    /// `num_nodes` contiguous blocks of near-equal size (the first
+    /// `world % num_nodes` nodes get one extra rank) — what
+    /// `--topology nodes=G` builds.
+    pub fn balanced(world: usize, num_nodes: usize) -> anyhow::Result<Topology> {
+        anyhow::ensure!(num_nodes >= 1, "need at least one node");
+        anyhow::ensure!(
+            num_nodes <= world,
+            "{num_nodes} nodes cannot host only {world} ranks"
+        );
+        let base = world / num_nodes;
+        let rem = world % num_nodes;
+        let sizes: Vec<usize> = (0..num_nodes)
+            .map(|n| base + usize::from(n < rem))
+            .collect();
+        Topology::from_sizes(&sizes)
+    }
+
+    /// Contiguous blocks of explicit sizes (`--topology nodes=4+2` for a
+    /// 6-rank world split 4 and 2).
+    pub fn from_sizes(sizes: &[usize]) -> anyhow::Result<Topology> {
+        anyhow::ensure!(!sizes.is_empty(), "topology needs at least one node");
+        anyhow::ensure!(
+            sizes.iter().all(|&s| s >= 1),
+            "every node must host at least one rank (got {sizes:?})"
+        );
+        let world: usize = sizes.iter().sum();
+        let mut node_of = Vec::with_capacity(world);
+        let mut nodes = Vec::with_capacity(sizes.len());
+        let mut next = 0;
+        for (n, &s) in sizes.iter().enumerate() {
+            nodes.push((next..next + s).collect());
+            node_of.extend((0..s).map(|_| n));
+            next += s;
+        }
+        Ok(Topology { node_of, nodes })
+    }
+
+    /// Arbitrary (not necessarily contiguous) mapping: `node_of[rank]` =
+    /// node id. Ids must be dense `0..K` with every node non-empty.
+    pub fn from_node_of(node_of: Vec<usize>) -> anyhow::Result<Topology> {
+        anyhow::ensure!(!node_of.is_empty(), "topology needs at least one rank");
+        let num_nodes = node_of.iter().max().unwrap() + 1;
+        let mut nodes = vec![Vec::new(); num_nodes];
+        for (rank, &n) in node_of.iter().enumerate() {
+            nodes[n].push(rank);
+        }
+        for (n, members) in nodes.iter().enumerate() {
+            anyhow::ensure!(!members.is_empty(), "node {n} has no ranks (ids must be dense)");
+        }
+        Ok(Topology { node_of, nodes })
+    }
+
+    pub fn world(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Node hosting `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of[rank]
+    }
+
+    /// Sorted ranks on node `node`.
+    pub fn node_members(&self, node: usize) -> &[usize] {
+        &self.nodes[node]
+    }
+
+    /// Sorted ranks sharing `rank`'s node (including `rank` itself).
+    pub fn node_members_of(&self, rank: usize) -> &[usize] {
+        &self.nodes[self.node_of[rank]]
+    }
+
+    /// The leader of `node`: its lowest rank. Deterministic on every rank,
+    /// so leader election needs no communication.
+    pub fn leader_of(&self, node: usize) -> usize {
+        self.nodes[node][0]
+    }
+
+    /// One leader per node, in node-id order.
+    pub fn leaders(&self) -> Vec<usize> {
+        self.nodes.iter().map(|m| m[0]).collect()
+    }
+
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.leader_of(self.node_of[rank]) == rank
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+
+    /// Largest node size (the fan-in the leader stages serialize over).
+    pub fn max_node_size(&self) -> usize {
+        self.nodes.iter().map(Vec::len).max().unwrap_or(1)
+    }
+
+    /// True when there is no real hierarchy: a single node, or one rank per
+    /// node. Either way a two-level exchange degenerates to the flat ring,
+    /// so `Comm` routes flat.
+    pub fn is_trivial(&self) -> bool {
+        self.num_nodes() <= 1 || self.num_nodes() == self.world()
+    }
+
+    /// The node label this rank advertises during the TCP bootstrap
+    /// (carried in the rendezvous `TABLE`, cross-checked by the trainer).
+    pub fn node_label(&self, rank: usize) -> String {
+        format!("n{}", self.node_of[rank])
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sizes: Vec<String> = self.nodes.iter().map(|m| m.len().to_string()).collect();
+        write!(f, "{} ranks over {} nodes ({})", self.world(), self.num_nodes(), sizes.join("+"))
+    }
+}
+
+/// Config/CLI-facing topology description; [`TopologySpec::build`] turns it
+/// into a [`Topology`] once the world size is known.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum TopologySpec {
+    /// Single-level: the historical flat ring over all ranks.
+    #[default]
+    Flat,
+    /// `nodes=G`: G near-equal contiguous node groups.
+    Nodes(usize),
+    /// `nodes=a+b+…`: explicit contiguous node sizes (must sum to world).
+    Sized(Vec<usize>),
+}
+
+impl TopologySpec {
+    /// Parse `flat`, `nodes=G`, or `nodes=a+b+…` (the `--topology` flag).
+    pub fn parse(spec: &str) -> anyhow::Result<TopologySpec> {
+        let s = spec.trim().to_ascii_lowercase();
+        if s == "flat" {
+            return Ok(TopologySpec::Flat);
+        }
+        let Some(rest) = s.strip_prefix("nodes=") else {
+            anyhow::bail!("unknown topology '{spec}' (flat|nodes=G|nodes=a+b+...)");
+        };
+        if rest.contains('+') {
+            let sizes: Vec<usize> = rest
+                .split('+')
+                .map(|p| {
+                    p.parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("bad node size '{p}' in topology '{spec}'"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            anyhow::ensure!(
+                sizes.iter().all(|&x| x >= 1),
+                "node sizes must be >= 1 in topology '{spec}'"
+            );
+            Ok(TopologySpec::Sized(sizes))
+        } else {
+            let g: usize = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad node count in topology '{spec}'"))?;
+            anyhow::ensure!(g >= 1, "topology needs at least one node");
+            Ok(TopologySpec::Nodes(g))
+        }
+    }
+
+    /// Canonical name (round-trips through [`TopologySpec::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            TopologySpec::Flat => "flat".to_string(),
+            TopologySpec::Nodes(g) => format!("nodes={g}"),
+            TopologySpec::Sized(sizes) => {
+                let parts: Vec<String> = sizes.iter().map(|s| s.to_string()).collect();
+                format!("nodes={}", parts.join("+"))
+            }
+        }
+    }
+
+    /// Concretize for a world size.
+    pub fn build(&self, world: usize) -> anyhow::Result<Topology> {
+        match self {
+            TopologySpec::Flat => Ok(Topology::flat(world)),
+            TopologySpec::Nodes(g) => Topology::balanced(world, *g),
+            TopologySpec::Sized(sizes) => {
+                let sum: usize = sizes.iter().sum();
+                anyhow::ensure!(
+                    sum == world,
+                    "topology '{}' hosts {sum} ranks but the world is {world}",
+                    self.name()
+                );
+                Topology::from_sizes(sizes)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_is_one_node_and_trivial() {
+        let t = Topology::flat(4);
+        assert_eq!(t.world(), 4);
+        assert_eq!(t.num_nodes(), 1);
+        assert!(t.is_trivial());
+        assert_eq!(t.leaders(), vec![0]);
+        assert!(t.same_node(0, 3));
+    }
+
+    #[test]
+    fn balanced_splits_contiguously_with_remainder_up_front() {
+        let t = Topology::balanced(6, 4).unwrap();
+        assert_eq!(t.num_nodes(), 4);
+        assert_eq!(t.node_members(0), &[0, 1]);
+        assert_eq!(t.node_members(1), &[2, 3]);
+        assert_eq!(t.node_members(2), &[4]);
+        assert_eq!(t.node_members(3), &[5]);
+        assert_eq!(t.leaders(), vec![0, 2, 4, 5]);
+        assert!(!t.is_trivial());
+    }
+
+    #[test]
+    fn sized_split_handles_non_divisible_worlds() {
+        let t = Topology::from_sizes(&[4, 2]).unwrap();
+        assert_eq!(t.world(), 6);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.leader_of(1), 4);
+        assert!(t.is_leader(0));
+        assert!(t.is_leader(4));
+        assert!(!t.is_leader(5));
+        assert_eq!(t.max_node_size(), 4);
+        assert_eq!(t.node_label(5), "n1");
+    }
+
+    #[test]
+    fn singleton_nodes_are_trivial() {
+        let t = Topology::balanced(3, 3).unwrap();
+        assert!(t.is_trivial());
+        assert_eq!(t.leaders(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn from_node_of_accepts_non_contiguous_and_rejects_sparse_ids() {
+        let t = Topology::from_node_of(vec![0, 1, 0, 1]).unwrap();
+        assert_eq!(t.node_members(0), &[0, 2]);
+        assert_eq!(t.node_members(1), &[1, 3]);
+        assert_eq!(t.leader_of(1), 1);
+        assert!(Topology::from_node_of(vec![0, 2]).is_err());
+        assert!(Topology::from_node_of(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn constructors_reject_degenerate_input() {
+        assert!(Topology::balanced(2, 3).is_err());
+        assert!(Topology::balanced(2, 0).is_err());
+        assert!(Topology::from_sizes(&[]).is_err());
+        assert!(Topology::from_sizes(&[2, 0]).is_err());
+    }
+
+    #[test]
+    fn spec_parse_roundtrips() {
+        for (text, spec) in [
+            ("flat", TopologySpec::Flat),
+            ("nodes=2", TopologySpec::Nodes(2)),
+            ("nodes=4+2", TopologySpec::Sized(vec![4, 2])),
+            ("nodes=1+2+1", TopologySpec::Sized(vec![1, 2, 1])),
+        ] {
+            let parsed = TopologySpec::parse(text).unwrap();
+            assert_eq!(parsed, spec);
+            assert_eq!(TopologySpec::parse(&parsed.name()).unwrap(), parsed);
+        }
+        assert!(TopologySpec::parse("star").is_err());
+        assert!(TopologySpec::parse("nodes=").is_err());
+        assert!(TopologySpec::parse("nodes=4+x").is_err());
+        assert!(TopologySpec::parse("nodes=0").is_err());
+        assert!(TopologySpec::parse("nodes=4+0").is_err());
+        assert_eq!(TopologySpec::default(), TopologySpec::Flat);
+    }
+
+    #[test]
+    fn spec_build_validates_world() {
+        let t = TopologySpec::parse("nodes=4+2").unwrap().build(6).unwrap();
+        assert_eq!(t.num_nodes(), 2);
+        assert!(TopologySpec::Sized(vec![4, 2]).build(7).is_err());
+        assert_eq!(TopologySpec::Flat.build(3).unwrap(), Topology::flat(3));
+        let b = TopologySpec::Nodes(2).build(8).unwrap();
+        assert_eq!(b.node_members(0), &[0, 1, 2, 3]);
+        assert_eq!(b.node_members(1), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn display_shows_shape() {
+        let t = Topology::from_sizes(&[4, 2]).unwrap();
+        assert_eq!(t.to_string(), "6 ranks over 2 nodes (4+2)");
+    }
+}

@@ -123,14 +123,19 @@ pub struct Endpoint {
     stash: HashMap<(usize, u64), Vec<Vec<u8>>>,
     /// Peers reported down by the backend (via [`CTRL_PEER_DOWN_TAG`]).
     dead: HashMap<usize, String>,
+    /// Payload bytes successfully sent to each peer — the per-destination
+    /// split `Comm::inter_node_bytes` classifies against the topology.
+    per_peer_sent: Vec<u64>,
 }
 
 impl Endpoint {
     pub fn new(transport: Box<dyn Transport>) -> Endpoint {
+        let world = transport.world();
         Endpoint {
             transport,
             stash: HashMap::new(),
             dead: HashMap::new(),
+            per_peer_sent: vec![0; world],
         }
     }
 
@@ -152,10 +157,23 @@ impl Endpoint {
         self.transport.msgs_sent()
     }
 
+    /// Payload bytes successfully sent to each peer, indexed by rank.
+    pub fn per_peer_sent(&self) -> &[u64] {
+        &self.per_peer_sent
+    }
+
+    /// Payload bytes successfully sent to one peer.
+    pub fn bytes_sent_to(&self, peer: usize) -> u64 {
+        self.per_peer_sent[peer]
+    }
+
     pub fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError> {
         assert!(to < self.world(), "rank {to} out of range");
         assert_ne!(to, self.rank(), "self-send is a bug in the collective");
-        self.transport.send(to, tag, bytes)
+        let len = bytes.len() as u64;
+        self.transport.send(to, tag, bytes)?;
+        self.per_peer_sent[to] += len;
+        Ok(())
     }
 
     /// Blocking tag-matched receive.
@@ -416,6 +434,23 @@ mod tests {
         });
         assert_eq!(results[0], 128);
         assert_eq!(results[1], 0);
+    }
+
+    #[test]
+    fn per_peer_accounting_splits_by_destination() {
+        let results = run_group(3, |mut ep| {
+            if ep.rank() == 0 {
+                ep.send(1, 0, vec![0u8; 10]).unwrap();
+                ep.send(2, 0, vec![0u8; 25]).unwrap();
+                (ep.bytes_sent_to(1), ep.per_peer_sent().to_vec())
+            } else {
+                ep.recv(0, 0).unwrap();
+                (0, ep.per_peer_sent().to_vec())
+            }
+        });
+        assert_eq!(results[0].0, 10);
+        assert_eq!(results[0].1, vec![0, 10, 25]);
+        assert_eq!(results[1].1, vec![0, 0, 0]);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Training-run configuration for the real execution plane.
 
 use super::{ScheduleSpec, SchedulingMode};
-use crate::collectives::TransportKind;
+use crate::collectives::{TopologySpec, TransportKind};
 use crate::compression::CodecKind;
 use crate::coordinator::PipelineMode;
 use crate::util::cli::Args;
@@ -17,6 +17,11 @@ pub struct TrainConfig {
     pub workers: usize,
     /// Which transport the collectives run over.
     pub transport: TransportKind,
+    /// Cluster topology (`--topology flat|nodes=G|nodes=a+b+…`). Non-flat
+    /// topologies route the gradient collectives through the two-level
+    /// (intra-node / inter-node) exchange; every rank must be launched
+    /// with the same value (the TCP bootstrap cross-checks node labels).
+    pub topology: TopologySpec,
     /// This process's rank (TCP transport only; inproc spawns all ranks).
     pub rank: usize,
     /// Rendezvous address: rank 0 listens, every other rank dials.
@@ -73,6 +78,7 @@ impl Default for TrainConfig {
         Self {
             workers: 2,
             transport: TransportKind::InProc,
+            topology: TopologySpec::Flat,
             rank: 0,
             rendezvous: "127.0.0.1:29500".to_string(),
             advertise_host: "127.0.0.1".to_string(),
@@ -106,6 +112,7 @@ impl TrainConfig {
         Ok(TrainConfig {
             workers: v.usize_or("workers", d.workers),
             transport: TransportKind::from_name(v.str_or("transport", d.transport.name()))?,
+            topology: TopologySpec::parse(v.str_or("topology", &d.topology.name()))?,
             rank: v.usize_or("rank", d.rank),
             rendezvous: v.str_or("rendezvous", &d.rendezvous).to_string(),
             advertise_host: v.str_or("advertise_host", &d.advertise_host).to_string(),
@@ -144,6 +151,9 @@ impl TrainConfig {
         self.workers = args.usize_or("workers", self.workers);
         if let Some(t) = args.str("transport") {
             self.transport = TransportKind::from_name(t)?;
+        }
+        if let Some(t) = args.str("topology") {
+            self.topology = TopologySpec::parse(t)?;
         }
         self.rank = args.usize_or("rank", self.rank);
         if let Some(r) = args.str("rendezvous") {
@@ -198,6 +208,7 @@ impl TrainConfig {
         Value::from_pairs(vec![
             ("workers", Value::from(self.workers)),
             ("transport", Value::from(self.transport.name())),
+            ("topology", Value::from(self.topology.name())),
             ("rank", Value::from(self.rank)),
             ("rendezvous", Value::from(self.rendezvous.clone())),
             ("advertise_host", Value::from(self.advertise_host.clone())),
@@ -324,6 +335,34 @@ mod tests {
             ["x", "--transport", "smoke-signals"].iter().map(|s| s.to_string()),
         );
         assert!(TrainConfig::default().apply_cli(&args).is_err());
+    }
+
+    #[test]
+    fn topology_roundtrips_json_and_cli() {
+        let d = TrainConfig::default();
+        assert_eq!(d.topology, TopologySpec::Flat);
+        let j = d.to_json();
+        assert_eq!(TrainConfig::from_json(&j).unwrap().topology, TopologySpec::Flat);
+
+        let v = Value::parse(r#"{"topology": "nodes=4+2"}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.topology, TopologySpec::Sized(vec![4, 2]));
+        let j = c.to_json();
+        assert_eq!(
+            TrainConfig::from_json(&j).unwrap().topology,
+            TopologySpec::Sized(vec![4, 2])
+        );
+
+        let args =
+            Args::parse(["x", "--topology", "nodes=2"].iter().map(|s| s.to_string()));
+        let c = TrainConfig::default().apply_cli(&args).unwrap();
+        assert_eq!(c.topology, TopologySpec::Nodes(2));
+
+        let args =
+            Args::parse(["x", "--topology", "mesh"].iter().map(|s| s.to_string()));
+        assert!(TrainConfig::default().apply_cli(&args).is_err());
+        let v = Value::parse(r#"{"topology": "nodes=0"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -216,6 +216,7 @@ impl ExchangeEngine {
             group_log[j].encode_secs = enc_secs;
 
             // --- communicate (blocking, on this thread) --------------------
+            let inter_before = comm.inter_node_bytes();
             let sw = Stopwatch::start();
             let outcome = match collective {
                 Collective::AllReduce => {
@@ -228,6 +229,13 @@ impl ExchangeEngine {
             stats.comm_secs += comm_secs;
             group_log[j].comm_secs = comm_secs;
             group_log[j].comm_exposed_secs = comm_secs;
+            let inter_secs = comm
+                .take_last_breakdown()
+                .map(|b| b.inter_secs)
+                .unwrap_or(0.0);
+            stats.comm_inter_secs += inter_secs;
+            group_log[j].comm_inter_secs = inter_secs;
+            stats.inter_bytes_sent += comm.inter_node_bytes() - inter_before;
 
             // --- decode + scatter: the SAME helper the pipelined path uses,
             // so the bit-identical guarantee is structural.
@@ -318,8 +326,6 @@ impl ExchangeEngine {
 
                     // --- drain group j−1 (its comm overlapped our encode) ---
                     if let Some((pj, ph)) = inflight.replace((j, handle)) {
-                        let before =
-                            (stats.comm_secs, stats.comm_exposed_secs, stats.decode_secs);
                         complete_group(
                             pj,
                             ph,
@@ -333,14 +339,11 @@ impl ExchangeEngine {
                             world,
                             rank,
                             &mut stats,
+                            group_log,
                         )?;
-                        group_log[pj].comm_secs = stats.comm_secs - before.0;
-                        group_log[pj].comm_exposed_secs = stats.comm_exposed_secs - before.1;
-                        group_log[pj].decode_secs = stats.decode_secs - before.2;
                     }
                 }
                 if let Some((pj, ph)) = inflight.take() {
-                    let before = (stats.comm_secs, stats.comm_exposed_secs, stats.decode_secs);
                     complete_group(
                         pj,
                         ph,
@@ -354,10 +357,8 @@ impl ExchangeEngine {
                         world,
                         rank,
                         &mut stats,
+                        group_log,
                     )?;
-                    group_log[pj].comm_secs = stats.comm_secs - before.0;
-                    group_log[pj].comm_exposed_secs = stats.comm_exposed_secs - before.1;
-                    group_log[pj].decode_secs = stats.decode_secs - before.2;
                 }
                 Ok(())
             });
@@ -368,8 +369,10 @@ impl ExchangeEngine {
     }
 }
 
-/// Wait for group `j`'s collective, then hand its outcome to
-/// [`finish_group`]. Pipelined path only; the wait is the *exposed* comm.
+/// Wait for group `j`'s collective, hand its outcome to [`finish_group`],
+/// and write the group's comm/decode timings into `group_log[j]` (as
+/// deltas of the running stats). Pipelined path only; the wait is the
+/// *exposed* comm.
 #[allow(clippy::too_many_arguments)]
 fn complete_group(
     j: usize,
@@ -384,15 +387,28 @@ fn complete_group(
     world: f32,
     rank: usize,
     stats: &mut ExchangeStats,
+    group_log: &mut [GroupSample],
 ) -> Result<(), TransportError> {
+    let before = (
+        stats.comm_secs,
+        stats.comm_exposed_secs,
+        stats.decode_secs,
+        stats.comm_inter_secs,
+    );
     // Only the time actually spent blocked here is *exposed* comm.
     let sw = Stopwatch::start();
     let done = handle.wait()?;
     stats.comm_exposed_secs += sw.elapsed().as_secs_f64();
     stats.comm_secs += done.secs;
+    stats.comm_inter_secs += done.breakdown.map(|b| b.inter_secs).unwrap_or(0.0);
+    stats.inter_bytes_sent += done.inter_bytes;
     finish_group(
         j, done.outcome, codecs, partition, sizes, flat, grads, wire_pool, n, world, rank, stats,
     );
+    group_log[j].comm_secs = stats.comm_secs - before.0;
+    group_log[j].comm_exposed_secs = stats.comm_exposed_secs - before.1;
+    group_log[j].decode_secs = stats.decode_secs - before.2;
+    group_log[j].comm_inter_secs = stats.comm_inter_secs - before.3;
     Ok(())
 }
 
@@ -611,6 +627,59 @@ mod tests {
         let mut eng =
             ExchangeEngine::new(CodecKind::Fp32, Partition::layer_wise(3), vec![4, 5, 6]);
         assert!(eng.repartition(Partition::layer_wise(2)).is_err());
+    }
+
+    #[test]
+    fn two_level_route_is_result_invisible_but_stats_visible() {
+        use crate::collectives::Topology;
+        let sizes = vec![40usize, 25, 70, 15];
+        for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            let run = |two_level: bool| {
+                let sizes2 = sizes.clone();
+                run_comm_group(4, move |c| {
+                    if two_level {
+                        c.set_topology(Topology::from_sizes(&[2, 2]).unwrap()).unwrap();
+                    }
+                    let mut eng = ExchangeEngine::new(
+                        CodecKind::EfSignSgd,
+                        Partition::naive_even(4, 2),
+                        sizes2.clone(),
+                    );
+                    let mut rng = Xoshiro256::seed_from_u64(11 + c.rank() as u64);
+                    let mut grads = make_grads(c.rank(), &sizes2);
+                    let stats = eng.exchange(c, &mut grads, &mut rng, mode).unwrap();
+                    let samples = eng.group_samples().to_vec();
+                    (grads, eng.state_digest(), stats, samples)
+                })
+            };
+            let flat = run(false);
+            let hier = run(true);
+            for (rank, ((fg, fd, fs, _), (hg, hd, hs, samples))) in
+                flat.iter().zip(&hier).enumerate()
+            {
+                // EF-SignSGD rides allgather: the two-level exchange is
+                // bit-identical to the flat ring, gradients and EF state.
+                assert_eq!(fg, hg, "{}: rank {rank} grads diverged", mode.name());
+                assert_eq!(fd, hd, "{}: rank {rank} EF state diverged", mode.name());
+                // Flat topology crosses no node boundary; the 2+2 split
+                // must record real inter-node traffic and timing.
+                assert_eq!(fs.inter_bytes_sent, 0);
+                assert_eq!(fs.comm_inter_secs, 0.0);
+                if rank % 2 == 0 {
+                    // Ranks 0 and 2 lead their nodes: they ring inter-node
+                    // and their samples time that stage.
+                    assert!(hs.inter_bytes_sent > 0, "leader rank {rank}");
+                    assert!(hs.comm_inter_secs > 0.0, "leader rank {rank}");
+                    // The per-group split must actually reach the samples
+                    // the estimator's two_level_fit consumes.
+                    let sample_inter: f64 = samples.iter().map(|s| s.comm_inter_secs).sum();
+                    assert!(sample_inter > 0.0, "leader rank {rank} samples lost the split");
+                } else {
+                    // Members only talk to their leader (intra-node).
+                    assert_eq!(hs.inter_bytes_sent, 0, "member rank {rank}");
+                }
+            }
+        }
     }
 
     #[test]

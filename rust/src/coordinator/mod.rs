@@ -77,6 +77,12 @@ pub struct GroupSample {
     pub encode_secs: f64,
     pub comm_secs: f64,
     pub comm_exposed_secs: f64,
+    /// Portion of `comm_secs` spent in the **inter-node** stage of a
+    /// two-level collective (0 on the flat route, and on non-leader ranks,
+    /// whose wall time hides inside the intra fan-out wait). Rank 0 — the
+    /// rank whose estimator drives the schedule search — is always a node
+    /// leader, so its samples carry the real inter-level timings.
+    pub comm_inter_secs: f64,
     pub decode_secs: f64,
 }
 
@@ -95,7 +101,16 @@ pub struct ExchangeStats {
     /// *exposed* remainder after pipeline overlap. Equals `comm_secs` in
     /// `Serial` mode by definition.
     pub comm_exposed_secs: f64,
+    /// Portion of `comm_secs` spent in the inter-node stage of two-level
+    /// collectives (0 on the flat route; leader-measured, see
+    /// [`GroupSample::comm_inter_secs`]).
+    pub comm_inter_secs: f64,
     pub bytes_sent: u64,
+    /// Payload bytes sent to peers on **other** nodes of the attached
+    /// topology — the traffic that crosses the slow fabric level. 0 under
+    /// a flat topology; under a node topology it is the quantity the
+    /// two-level exchange exists to shrink (`benches/hierarchy.rs`).
+    pub inter_bytes_sent: u64,
     pub groups: usize,
 }
 
@@ -131,7 +146,9 @@ impl ExchangeStats {
         self.comm_secs += other.comm_secs;
         self.decode_secs += other.decode_secs;
         self.comm_exposed_secs += other.comm_exposed_secs;
+        self.comm_inter_secs += other.comm_inter_secs;
         self.bytes_sent += other.bytes_sent;
+        self.inter_bytes_sent += other.inter_bytes_sent;
         self.groups = other.groups;
     }
 
@@ -142,7 +159,9 @@ impl ExchangeStats {
             comm_secs: self.comm_secs / steps,
             decode_secs: self.decode_secs / steps,
             comm_exposed_secs: self.comm_exposed_secs / steps,
+            comm_inter_secs: self.comm_inter_secs / steps,
             bytes_sent: (self.bytes_sent as f64 / steps) as u64,
+            inter_bytes_sent: (self.inter_bytes_sent as f64 / steps) as u64,
             groups: self.groups,
         }
     }
@@ -168,7 +187,9 @@ mod tests {
             comm_secs: 4.0,
             decode_secs: 0.5,
             comm_exposed_secs: 1.0,
+            comm_inter_secs: 2.0,
             bytes_sent: 10,
+            inter_bytes_sent: 4,
             groups: 2,
         };
         assert!((s.total_secs() - 5.5).abs() < 1e-12);
@@ -180,8 +201,12 @@ mod tests {
         acc.accumulate(&s);
         acc.accumulate(&s);
         assert!((acc.comm_secs - 8.0).abs() < 1e-12);
+        assert!((acc.comm_inter_secs - 4.0).abs() < 1e-12);
+        assert_eq!(acc.inter_bytes_sent, 8);
         let mean = acc.scaled(2.0);
         assert!((mean.comm_secs - 4.0).abs() < 1e-12);
+        assert!((mean.comm_inter_secs - 2.0).abs() < 1e-12);
+        assert_eq!(mean.inter_bytes_sent, 4);
         assert_eq!(mean.groups, 2);
     }
 }

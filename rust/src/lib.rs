@@ -5,11 +5,13 @@
 //! (cs.DC 2021), built as a three-layer Rust + JAX + Pallas stack:
 //!
 //! - **L3 (this crate)** — the coordinator: gradient codecs, collectives
-//!   (blocking + non-blocking comm-lane), the pipelined exchange engine
-//!   (`coordinator/`) that overlaps encode/comm/decode in the measured
-//!   plane, the MergeComp partition scheduler (paper Alg. 2), a
-//!   discrete-event timeline simulator of the paper's V100 testbed, and a
-//!   real data-parallel trainer that executes AOT-compiled JAX train steps
+//!   (blocking + non-blocking comm-lane; flat ring or the topology-aware
+//!   **two-level hierarchical exchange** over node groups), the pipelined
+//!   exchange engine (`coordinator/`) that overlaps encode/comm/decode in
+//!   the measured plane, the MergeComp partition scheduler (paper Alg. 2)
+//!   with per-level cost fits, a discrete-event timeline simulator of the
+//!   paper's V100 testbed (incl. two-level netsim fabrics), and a real
+//!   data-parallel trainer that executes AOT-compiled JAX train steps
 //!   through the PJRT C API.
 //! - **L2 (python/compile/model.py)** — transformer LM forward/backward in
 //!   JAX, lowered once to HLO text (`make artifacts`).

@@ -51,12 +51,14 @@ fn print_usage() {
            train     --workers N --codec C --schedule S [--steps K] [--config f.json]\n\
                      [--sched-mode online|warmup|fixed] [--resched-interval K]\n\
                      [--resched-ewma W] [--resched-eps E]\n\
+                     [--topology flat|nodes=G|nodes=a+b+...]  (two-level collectives)\n\
                      [--transport inproc|tcp --rank N --world W\n\
                       --rendezvous HOST:PORT [--advertise HOST]\n\
                       [--bootstrap-timeout-secs S]]\n\
                      [--synthetic [PROFILE]]   (no PJRT needed; CI smoke path)\n\
            launch    --workers N [--rendezvous HOST:PORT] [--out-dir D]\n\
-                     [--timeout-secs S] + any train flags (forwarded to all ranks)\n\
+                     [--timeout-secs S] + any train flags (forwarded to all ranks;\n\
+                     --topology nodes=G maps the local processes onto G synthetic nodes)\n\
            simulate  --model M --codec C --fabric F --workers a,b,c --schedule S\n\
            search    --model M --codec C --fabric F --workers N [--ymax Y] [--alpha A]\n\
            overhead  --codec C [--sizes 64,1024,...]\n\
@@ -85,7 +87,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
     let cfg = base.apply_cli(args)?;
     println!(
-        "training: {} workers ({} transport{}), codec {}, schedule {}, {} steps{}",
+        "training: {} workers ({} transport{}, topology {}), codec {}, schedule {}, {} steps{}",
         cfg.workers,
         cfg.transport.name(),
         if cfg.transport == mergecomp::collectives::TransportKind::Tcp {
@@ -93,6 +95,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         } else {
             String::new()
         },
+        cfg.topology.name(),
         cfg.codec.name(),
         cfg.schedule.name(),
         cfg.steps,
@@ -174,6 +177,11 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         train_flags,
         timeout: std::time::Duration::from_secs(args.u64_or("timeout-secs", 600)),
     };
+    if let Some(t) = args.str("topology") {
+        // Forwarded verbatim to every worker: the launcher maps the local
+        // process group onto the synthetic nodes the spec describes.
+        println!("topology: {t} (each worker derives its node from its rank)");
+    }
     println!("launching {world} local TCP workers (results in {out_dir}/)");
     let report = mergecomp::training::launch_local(&opts)?;
     println!("rendezvous: {}", report.rendezvous);

@@ -1,0 +1,286 @@
+//! Two-level fabric models: a fast intra-node link class (NVLink/PCIe)
+//! under a slow inter-node one (TCP), and the analytic costs of running
+//! either the **flat ring** or the **two-level exchange**
+//! (`collectives::hierarchical`) across them.
+//!
+//! The flat ring's cost on a hierarchical fabric is gated by its slowest
+//! link: with contiguous node blocks, `nodes` of the ring's hops cross the
+//! inter-node fabric, and since every rank advances in lockstep, all
+//! `2·(w−1)` steps pay the slow link's latency and bandwidth. The
+//! two-level exchange instead pays the slow level only for a ring over the
+//! `L` node leaders — `2·(L−1)` steps on `1/L`-sized chunks — which is why
+//! hierarchical collectives keep the paper's scaling-factor story alive
+//! off the single-box testbed. `benches/hierarchy.rs` emits these
+//! predictions next to the measured inter-node byte counts
+//! (`results/BENCH_hierarchy.json`).
+
+use super::Fabric;
+use crate::compression::{CodecKind, Collective};
+
+/// A two-level fabric: `nodes` machines, each hosting a contiguous block
+/// of ranks wired by `intra`, with the machines connected by `inter`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TwoLevelFabric {
+    pub intra: Fabric,
+    pub inter: Fabric,
+    pub nodes: usize,
+}
+
+/// Predicted cost of one collective on a [`TwoLevelFabric`].
+#[derive(Debug, Clone, Copy)]
+pub struct HierCost {
+    /// End-to-end seconds (intra + inter stages, serialized).
+    pub seconds: f64,
+    /// Seconds attributable to the intra-node level.
+    pub intra_secs: f64,
+    /// Seconds attributable to the inter-node level.
+    pub inter_secs: f64,
+    /// Total bytes crossing the inter-node fabric (summed over all links).
+    pub inter_bytes: f64,
+}
+
+impl TwoLevelFabric {
+    pub fn new(intra: Fabric, inter: Fabric, nodes: usize) -> TwoLevelFabric {
+        assert!(nodes >= 1);
+        TwoLevelFabric { intra, inter, nodes }
+    }
+
+    /// The headline multi-node scenario: NVLink inside each box, TCP
+    /// between boxes.
+    pub fn nvlink_tcp(nodes: usize) -> TwoLevelFabric {
+        TwoLevelFabric::new(Fabric::nvlink(), Fabric::tcp(), nodes)
+    }
+
+    /// PCIe boxes over TCP (the paper's MPI testbed, scaled out).
+    pub fn pcie_tcp(nodes: usize) -> TwoLevelFabric {
+        TwoLevelFabric::new(Fabric::pcie(), Fabric::tcp(), nodes)
+    }
+
+    /// Largest node size under contiguous near-even placement.
+    fn max_node_size(&self, world: usize) -> f64 {
+        (world as f64 / self.nodes as f64).ceil()
+    }
+
+    /// Flat ring allreduce of `bytes` on this fabric: every one of the
+    /// `2·(w−1)` lockstep steps is gated by the slowest link in the ring.
+    pub fn flat_allreduce(&self, world: usize, bytes: f64) -> HierCost {
+        if world <= 1 {
+            return HierCost { seconds: 0.0, intra_secs: 0.0, inter_secs: 0.0, inter_bytes: 0.0 };
+        }
+        let w = world as f64;
+        let steps = 2.0 * (w - 1.0);
+        let chunk = bytes / w;
+        let step_secs = if self.nodes > 1 {
+            let slow = self.inter.alpha + chunk / self.inter.beta_eff(self.nodes);
+            let fast = self.intra.alpha + chunk / self.intra.beta_eff(world);
+            slow.max(fast)
+        } else {
+            self.intra.alpha + chunk / self.intra.beta_eff(world)
+        };
+        let inter_bytes = if self.nodes > 1 {
+            self.nodes as f64 * steps * chunk
+        } else {
+            0.0
+        };
+        let seconds = steps * step_secs;
+        HierCost {
+            seconds,
+            intra_secs: if self.nodes > 1 { 0.0 } else { seconds },
+            inter_secs: if self.nodes > 1 { seconds } else { 0.0 },
+            inter_bytes,
+        }
+    }
+
+    /// Two-level allreduce of `bytes`: serialized member→leader fan-in,
+    /// a ring over the `nodes` leaders, serialized leader→member fan-out.
+    pub fn hier_allreduce(&self, world: usize, bytes: f64) -> HierCost {
+        if world <= 1 {
+            return HierCost { seconds: 0.0, intra_secs: 0.0, inter_secs: 0.0, inter_bytes: 0.0 };
+        }
+        let l = self.nodes as f64;
+        let m = self.max_node_size(world);
+        // Fan-in and fan-out each move (m−1) full buffers over intra links.
+        let intra_secs = 2.0 * (m - 1.0) * (self.intra.alpha + bytes / self.intra.beta);
+        let (inter_secs, inter_bytes) = if self.nodes > 1 {
+            let steps = 2.0 * (l - 1.0);
+            let chunk = bytes / l;
+            (
+                steps * (self.inter.alpha + chunk / self.inter.beta_eff(self.nodes)),
+                l * steps * chunk,
+            )
+        } else {
+            (0.0, 0.0)
+        };
+        HierCost {
+            seconds: intra_secs + inter_secs,
+            intra_secs,
+            inter_secs,
+            inter_bytes,
+        }
+    }
+
+    /// Flat ring allgather where every rank contributes `bytes_per_rank`.
+    pub fn flat_allgather(&self, world: usize, bytes_per_rank: f64) -> HierCost {
+        if world <= 1 {
+            return HierCost { seconds: 0.0, intra_secs: 0.0, inter_secs: 0.0, inter_bytes: 0.0 };
+        }
+        let w = world as f64;
+        let steps = w - 1.0;
+        let step_secs = if self.nodes > 1 {
+            let slow = self.inter.alpha + bytes_per_rank / self.inter.beta_eff(self.nodes);
+            let fast = self.intra.alpha + bytes_per_rank / self.intra.beta_eff(world);
+            slow.max(fast)
+        } else {
+            self.intra.alpha + bytes_per_rank / self.intra.beta_eff(world)
+        };
+        let inter_bytes = if self.nodes > 1 {
+            self.nodes as f64 * steps * bytes_per_rank
+        } else {
+            0.0
+        };
+        let seconds = steps * step_secs;
+        HierCost {
+            seconds,
+            intra_secs: if self.nodes > 1 { 0.0 } else { seconds },
+            inter_secs: if self.nodes > 1 { seconds } else { 0.0 },
+            inter_bytes,
+        }
+    }
+
+    /// Two-level allgather: member payloads fan in to the leader, leaders
+    /// ring-exchange node frames (`m·s` bytes each), the full table
+    /// (`w·s` bytes) fans back out.
+    pub fn hier_allgather(&self, world: usize, bytes_per_rank: f64) -> HierCost {
+        if world <= 1 {
+            return HierCost { seconds: 0.0, intra_secs: 0.0, inter_secs: 0.0, inter_bytes: 0.0 };
+        }
+        let l = self.nodes as f64;
+        let m = self.max_node_size(world);
+        let w = world as f64;
+        let fan_in = (m - 1.0) * (self.intra.alpha + bytes_per_rank / self.intra.beta);
+        let fan_out = (m - 1.0) * (self.intra.alpha + w * bytes_per_rank / self.intra.beta);
+        let (inter_secs, inter_bytes) = if self.nodes > 1 {
+            let frame = m * bytes_per_rank;
+            let steps = l - 1.0;
+            (
+                steps * (self.inter.alpha + frame / self.inter.beta_eff(self.nodes)),
+                l * steps * frame,
+            )
+        } else {
+            (0.0, 0.0)
+        };
+        HierCost {
+            seconds: fan_in + fan_out + inter_secs,
+            intra_secs: fan_in + fan_out,
+            inter_secs,
+            inter_bytes,
+        }
+    }
+
+    /// Predicted (flat, two-level) cost of synchronizing an `elems`-element
+    /// group compressed with `kind` — the collective follows paper Table 1,
+    /// the wire size is the codec's exact one.
+    pub fn group_comm(&self, kind: CodecKind, world: usize, elems: usize) -> (HierCost, HierCost) {
+        let wire = kind.wire_size(elems) as f64;
+        match kind.collective() {
+            Collective::AllReduce => (
+                self.flat_allreduce(world, wire),
+                self.hier_allreduce(world, wire),
+            ),
+            Collective::AllGather => (
+                self.flat_allgather(world, wire),
+                self.hier_allgather(world, wire),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> TwoLevelFabric {
+        TwoLevelFabric::nvlink_tcp(2)
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_when_inter_is_slow() {
+        let f = fabric();
+        let world = 8;
+        for bytes in [1e6, 25.6e6, 400e6] {
+            let flat = f.flat_allreduce(world, bytes);
+            let hier = f.hier_allreduce(world, bytes);
+            assert!(
+                hier.seconds < flat.seconds,
+                "{bytes}B allreduce: hier {} vs flat {}",
+                hier.seconds,
+                flat.seconds
+            );
+            let flat = f.flat_allgather(world, bytes / world as f64);
+            let hier = f.hier_allgather(world, bytes / world as f64);
+            assert!(
+                hier.seconds < flat.seconds,
+                "{bytes}B allgather: hier {} vs flat {}",
+                hier.seconds,
+                flat.seconds
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_moves_fewer_inter_node_bytes() {
+        let f = fabric();
+        let world = 8;
+        let bytes = 100e6;
+        // Flat ring: 2 boundary links × 2·(w−1)·S/w each = 3.5·S.
+        let flat = f.flat_allreduce(world, bytes);
+        assert!((flat.inter_bytes - 3.5 * bytes).abs() / bytes < 1e-9);
+        // Leader ring: 2 leaders × 2·(L−1)/L·S each = 2·S.
+        let hier = f.hier_allreduce(world, bytes);
+        assert!((hier.inter_bytes - 2.0 * bytes).abs() / bytes < 1e-9);
+        assert!(hier.inter_bytes < flat.inter_bytes);
+
+        // Allgather: flat crosses each boundary (w−1)·s times; the leader
+        // ring moves (L−1) node frames of m·s per leader.
+        let s = 1e6;
+        let flat = f.flat_allgather(world, s);
+        assert!((flat.inter_bytes - 2.0 * 7.0 * s).abs() / s < 1e-9);
+        let hier = f.hier_allgather(world, s);
+        assert!((hier.inter_bytes - 2.0 * 4.0 * s).abs() / s < 1e-9);
+        assert!(hier.inter_bytes < flat.inter_bytes);
+    }
+
+    #[test]
+    fn single_node_degenerates_to_intra_only() {
+        let f = TwoLevelFabric::new(Fabric::nvlink(), Fabric::tcp(), 1);
+        let c = f.flat_allreduce(8, 1e6);
+        assert_eq!(c.inter_bytes, 0.0);
+        assert_eq!(c.inter_secs, 0.0);
+        assert!(c.intra_secs > 0.0);
+        let h = f.hier_allreduce(8, 1e6);
+        assert_eq!(h.inter_bytes, 0.0);
+        // Solo world costs nothing.
+        assert_eq!(f.flat_allgather(1, 1e6).seconds, 0.0);
+        assert_eq!(f.hier_allgather(1, 1e6).seconds, 0.0);
+    }
+
+    #[test]
+    fn group_comm_picks_the_table_1_collective() {
+        let f = fabric();
+        let (flat_ar, hier_ar) = f.group_comm(CodecKind::Fp32, 8, 1 << 20);
+        let (flat_ag, hier_ag) = f.group_comm(CodecKind::EfSignSgd, 8, 1 << 20);
+        // Compressed payloads are ~32x smaller; every cost must reflect it.
+        assert!(flat_ag.seconds < flat_ar.seconds / 4.0);
+        assert!(hier_ag.seconds < hier_ar.seconds / 4.0);
+    }
+
+    #[test]
+    fn non_divisible_worlds_use_the_ceiling_node_size() {
+        let f = TwoLevelFabric::nvlink_tcp(4);
+        // world=6 over 4 nodes: 2+2+1+1 — the fan-in serializes over the
+        // largest node (2 ranks ⇒ 1 transfer).
+        let c = f.hier_allreduce(6, 1e6);
+        assert!(c.intra_secs > 0.0);
+        assert!(c.inter_secs > 0.0);
+    }
+}

@@ -15,9 +15,11 @@
 
 pub mod cost;
 pub mod drift;
+pub mod hierarchy;
 
 pub use cost::{CollectiveCost, CostModel};
 pub use drift::NetScenario;
+pub use hierarchy::{HierCost, TwoLevelFabric};
 
 /// A communication fabric: per-message latency + effective bandwidth +
 /// shared-bus contention.
@@ -64,11 +66,25 @@ impl Fabric {
         }
     }
 
+    /// Datacenter TCP (10 GbE class): the inter-node level of a two-level
+    /// fabric. α covers the kernel/network stack round-trip; β is the
+    /// effective single-stream socket throughput; the shared ToR uplink
+    /// congests mildly as more node pairs talk.
+    pub fn tcp() -> Fabric {
+        Fabric {
+            name: "tcp",
+            alpha: 50e-6,
+            beta: 1.18e9,
+            contention: 0.15,
+        }
+    }
+
     pub fn from_name(name: &str) -> anyhow::Result<Fabric> {
         Ok(match name.to_ascii_lowercase().as_str() {
             "pcie" => Fabric::pcie(),
             "nvlink" => Fabric::nvlink(),
-            other => anyhow::bail!("unknown fabric '{other}' (pcie|nvlink)"),
+            "tcp" | "ethernet" | "10gbe" => Fabric::tcp(),
+            other => anyhow::bail!("unknown fabric '{other}' (pcie|nvlink|tcp)"),
         })
     }
 
@@ -118,6 +134,20 @@ mod tests {
     fn from_name_roundtrip() {
         assert_eq!(Fabric::from_name("pcie").unwrap(), Fabric::pcie());
         assert_eq!(Fabric::from_name("NVLink").unwrap(), Fabric::nvlink());
+        assert_eq!(Fabric::from_name("tcp").unwrap(), Fabric::tcp());
+        assert_eq!(Fabric::from_name("ethernet").unwrap(), Fabric::tcp());
         assert!(Fabric::from_name("infiniband").is_err());
+    }
+
+    #[test]
+    fn tcp_is_the_slow_level() {
+        // The inter-node fabric must be slower than both intra classes at
+        // bulk sizes — that ordering is what the two-level exchange
+        // (netsim::hierarchy) exploits.
+        let t = Fabric::tcp();
+        for bytes in [1usize << 20, 100 << 20] {
+            assert!(t.p2p(bytes) > Fabric::nvlink().p2p(bytes));
+            assert!(t.p2p(bytes) > Fabric::pcie().p2p(bytes));
+        }
     }
 }

@@ -5,6 +5,12 @@
 //! samples during warm-up steps and fits them here by least squares; the
 //! fit quality (R²) doubles as a runtime check that the assumption actually
 //! holds on the current hardware (`ablate_calibration` bench).
+//!
+//! On a hierarchical fabric the single `g(x)` hides which link class is
+//! actually the bottleneck, so [`TwoLevelCost`] keeps one α+β·size fit per
+//! level (intra-node, inter-node). The sum of two affine models is affine,
+//! so [`TwoLevelCost::combined`] plugs straight into the Eq.-7 objective —
+//! the search automatically optimizes against whichever level dominates.
 
 use crate::util::stats::linfit;
 
@@ -41,6 +47,36 @@ impl FittedCost {
 
     pub fn predict(&self, elems: usize) -> f64 {
         self.b + self.g * elems as f64
+    }
+}
+
+/// Per-level communication cost models for a two-level (hierarchical)
+/// fabric: intra-node stages and the inter-node leader ring, each fit as
+/// its own Assumption-5 affine model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TwoLevelCost {
+    /// Intra-node stages (member→leader fan-in + leader→member fan-out).
+    pub intra: FittedCost,
+    /// Inter-node stage (the ring among node leaders).
+    pub inter: FittedCost,
+}
+
+impl TwoLevelCost {
+    /// Total communication model: the levels run back-to-back, and the sum
+    /// of two affine models is affine — directly usable as the objective's
+    /// `g(x)`.
+    pub fn combined(&self) -> FittedCost {
+        FittedCost {
+            b: self.intra.b + self.inter.b,
+            g: self.intra.g + self.inter.g,
+            r2: self.intra.r2.min(self.inter.r2),
+        }
+    }
+
+    /// Does the inter-node level dominate the predicted cost at this group
+    /// size? (What the partition search is implicitly optimizing against.)
+    pub fn inter_dominates(&self, elems: usize) -> bool {
+        self.inter.predict(elems) >= self.intra.predict(elems)
     }
 }
 
@@ -115,6 +151,25 @@ mod tests {
     fn rejects_degenerate_input() {
         assert!(FittedCost::fit(&[(10, 1.0)]).is_err());
         assert!(FittedCost::fit(&[(10, 1.0), (10, 1.1)]).is_err());
+    }
+
+    #[test]
+    fn two_level_combined_is_the_sum_and_dominance_flips_with_size() {
+        // Intra: cheap latency, decent bandwidth. Inter: big latency, slow
+        // bandwidth — the multi-node regime.
+        let tl = TwoLevelCost {
+            intra: FittedCost { b: 1e-5, g: 1e-10, r2: 1.0 },
+            inter: FittedCost { b: 5e-4, g: 2e-9, r2: 0.9 },
+        };
+        let c = tl.combined();
+        assert!((c.b - 5.1e-4).abs() < 1e-12);
+        assert!((c.g - 2.1e-9).abs() < 1e-18);
+        assert_eq!(c.r2, 0.9);
+        assert!(tl.inter_dominates(1));
+        assert!(tl.inter_dominates(1 << 24));
+        // Flip the levels: intra dominates everywhere.
+        let tl = TwoLevelCost { intra: tl.inter, inter: tl.intra };
+        assert!(!tl.inter_dominates(1 << 20));
     }
 
     #[test]

@@ -174,6 +174,13 @@ impl Driver {
             Some(o) => o,
             None => return Decision::Keep,
         };
+        // On a hierarchical fabric, record which level the live fits say
+        // dominates (diagnostics; the objective already uses the combined
+        // per-level model).
+        if let Some(tl) = self.est.two_level_fit() {
+            self.metrics.gauge("resched.comm_inter_g", tl.inter.g);
+            self.metrics.gauge("resched.comm_intra_g", tl.intra.g);
+        }
         use super::objective::Objective as _;
         let f_current = obj.eval(&self.partition);
         let out = mergecomp_search(&mut obj, self.sizes.len(), self.cfg.search);
@@ -273,6 +280,7 @@ mod tests {
             encode_secs: enc,
             comm_secs: comm,
             comm_exposed_secs: comm,
+            comm_inter_secs: 0.0,
             decode_secs: dec,
         }
     }

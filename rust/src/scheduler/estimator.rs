@@ -19,7 +19,7 @@
 //! Once the partition has ≥ 2 distinct group sizes, the full weighted fit
 //! takes over.
 
-use super::costmodel::FittedCost;
+use super::costmodel::{FittedCost, TwoLevelCost};
 use super::objective::AnalyticObjective;
 use crate::coordinator::GroupSample;
 
@@ -155,11 +155,25 @@ impl Ewma {
 /// fan-in included), and the α+β·size collective cost — plus the EWMA'd
 /// compute-step time. One instance per worker; fed by
 /// [`GroupSample`]s from the exchange engine.
+///
+/// On a hierarchical fabric the samples additionally carry the inter-node
+/// share of each collective ([`GroupSample::comm_inter_secs`]), and the
+/// estimator keeps **per-level** fits alongside the total: `comm_inter`
+/// models the leader ring, `comm_intra` the intra-node stages. When
+/// per-level samples exist, [`CostEstimator::objective`] feeds the search
+/// their combined (summed) model — so Algorithm 2 optimizes against
+/// whichever link class actually dominates — and
+/// [`CostEstimator::two_level_fit`] exposes the split for diagnostics.
 #[derive(Debug, Clone)]
 pub struct CostEstimator {
     pub enc: EwmaCost,
     pub dec: EwmaCost,
+    /// Total collective cost (both levels; always fed).
     pub comm: EwmaCost,
+    /// Inter-node stage only (fed when samples carry a two-level split).
+    pub comm_inter: EwmaCost,
+    /// Intra-node stages only (fed alongside `comm_inter`).
+    pub comm_intra: EwmaCost,
     step_secs: Ewma,
 }
 
@@ -182,10 +196,16 @@ impl CostEstimator {
         dec_prior: Option<FittedCost>,
         comm_prior: Option<FittedCost>,
     ) -> Self {
+        // The per-level fits start from the total-comm prior: until real
+        // two-level samples arrive they are unused, and once they do the
+        // rescaled-prior fallback pulls each level towards its share.
+        let level_prior = comm_prior.unwrap_or_else(default_prior);
         Self {
             enc: EwmaCost::new(ewma, enc_prior.unwrap_or_else(default_prior)),
             dec: EwmaCost::new(ewma, dec_prior.unwrap_or_else(default_prior)),
             comm: EwmaCost::new(ewma, comm_prior.unwrap_or_else(default_prior)),
+            comm_inter: EwmaCost::new(ewma, level_prior),
+            comm_intra: EwmaCost::new(ewma, level_prior),
             step_secs: Ewma::new(ewma),
         }
     }
@@ -196,8 +216,22 @@ impl CostEstimator {
             self.enc.observe(s.elems, s.encode_secs);
             self.dec.observe(s.elems, s.decode_secs);
             self.comm.observe(s.elems, s.comm_secs);
+            if s.comm_inter_secs > 0.0 {
+                self.comm_inter.observe(s.elems, s.comm_inter_secs);
+                self.comm_intra
+                    .observe(s.elems, (s.comm_secs - s.comm_inter_secs).max(0.0));
+            }
         }
         self.step_secs.observe(compute_secs);
+    }
+
+    /// Per-level communication fits, once two-level samples have been
+    /// observed (`None` on a flat fabric).
+    pub fn two_level_fit(&self) -> Option<TwoLevelCost> {
+        (self.comm_inter.samples() > 0).then(|| TwoLevelCost {
+            intra: self.comm_intra.fit(),
+            inter: self.comm_inter.fit(),
+        })
     }
 
     /// EWMA'd compute (fwd+bwd) step seconds.
@@ -227,13 +261,20 @@ impl CostEstimator {
         assert_eq!(sizes.len(), bwd_shares.len());
         let bwd = step * (1.0 - fwd_frac);
         let bwd_dur: Vec<f64> = bwd_shares.iter().map(|s| bwd * s).collect();
+        // On a hierarchical fabric the per-level fits are better
+        // conditioned than the single total fit (each level's α and β are
+        // identified separately), and their sum is the same affine class.
+        let comm = match self.two_level_fit() {
+            Some(tl) => tl.combined(),
+            None => self.comm.fit(),
+        };
         Some(AnalyticObjective::new(
             bwd_dur,
             sizes,
             step * fwd_frac,
             self.enc.fit(),
             self.dec.fit(),
-            self.comm.fit(),
+            comm,
             1,
         ))
     }
@@ -250,6 +291,7 @@ mod tests {
             encode_secs: enc,
             comm_secs: comm,
             comm_exposed_secs: comm,
+            comm_inter_secs: 0.0,
             decode_secs: dec,
         }
     }
@@ -323,6 +365,38 @@ mod tests {
         let f = obj.eval(&crate::scheduler::Partition::full_merge(2));
         assert!(f > 1e-2, "objective includes the measured compute time");
         assert!(f.is_finite());
+    }
+
+    #[test]
+    fn two_level_fits_recover_each_level_and_feed_the_objective() {
+        let mut est = CostEstimator::new(0.2, None, None, None);
+        assert!(est.two_level_fit().is_none(), "flat samples leave no split");
+
+        // Intra: b=2e-5, g=1e-10. Inter: b=4e-4, g=3e-9 (dominant).
+        let (bi, gi) = (2e-5, 1e-10);
+        let (bx, gx) = (4e-4, 3e-9);
+        for _ in 0..60 {
+            for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+                let intra = bi + gi * n as f64;
+                let inter = bx + gx * n as f64;
+                let mut s = sample(n, 1e-5, intra + inter, 1e-5);
+                s.comm_inter_secs = inter;
+                est.observe_step(&[s], 1e-2);
+            }
+        }
+        let tl = est.two_level_fit().expect("two-level samples were fed");
+        assert!((tl.inter.b - bx).abs() / bx < 1e-3, "inter b = {}", tl.inter.b);
+        assert!((tl.inter.g - gx).abs() / gx < 1e-3, "inter g = {}", tl.inter.g);
+        assert!((tl.intra.b - bi).abs() / bi < 1e-2, "intra b = {}", tl.intra.b);
+        assert!(tl.inter_dominates(1 << 16));
+        // The combined model is what the objective consumes; it must match
+        // the total fit (the levels sum to the total by construction).
+        let total = est.comm.fit();
+        let combined = tl.combined();
+        let n = 1usize << 18;
+        let rel = (combined.predict(n) - total.predict(n)).abs() / total.predict(n);
+        assert!(rel < 1e-6, "combined vs total at {n}: rel {rel}");
+        assert!(est.objective(vec![100, 200], &[0.5, 0.5], 0.3).is_some());
     }
 
     #[test]

@@ -25,7 +25,7 @@
 use super::SimBreakdown;
 use crate::compression::{CodecKind, Collective};
 use crate::coordinator::{ExchangeStats, GroupSample};
-use crate::netsim::{Fabric, NetScenario};
+use crate::netsim::{Fabric, NetScenario, TwoLevelFabric};
 use crate::profiles::ModelProfile;
 use crate::scheduler::costmodel::FittedCost;
 use crate::scheduler::objective::{AnalyticObjective, Objective as _};
@@ -143,6 +143,35 @@ pub fn linear_plane(kind: CodecKind, fabric: &Fabric, world: usize) -> LinearPla
         }
     };
     LinearPlane { enc, dec, comm }
+}
+
+/// Affine comm model for `kind` on a two-level fabric under either route
+/// (flat ring vs the two-level exchange), extracted from the
+/// `netsim::hierarchy` cost functions. Exactly affine in elements as long
+/// as the same level gates every flat-ring step — true whenever the inter
+/// level is slower than intra, which is the whole point of the hierarchy.
+/// Together with [`linear_plane`]'s enc/dec fits this builds the synthetic
+/// measured plane for hierarchical-fabric scheduling experiments.
+pub fn two_level_comm_fit(
+    kind: CodecKind,
+    two: &TwoLevelFabric,
+    world: usize,
+    hierarchical: bool,
+) -> FittedCost {
+    let (h, d) = affine_wire(kind);
+    let secs = |elems: f64| {
+        let wire = h + d * elems;
+        match (kind.collective(), hierarchical) {
+            (Collective::AllReduce, false) => two.flat_allreduce(world, wire).seconds,
+            (Collective::AllReduce, true) => two.hier_allreduce(world, wire).seconds,
+            (Collective::AllGather, false) => two.flat_allgather(world, wire).seconds,
+            (Collective::AllGather, true) => two.hier_allgather(world, wire).seconds,
+        }
+    };
+    let n1 = (1usize << 20) as f64;
+    let s0 = secs(0.0);
+    let s1 = secs(n1);
+    FittedCost { b: s0, g: (s1 - s0) / n1, r2: 1.0 }
 }
 
 /// Eq.-7 objective for `profile` under the true costs of `plane`.
@@ -275,6 +304,7 @@ pub fn run_online_loop(
                     encode_secs: plane.enc.predict(elems),
                     comm_secs: plane.comm.predict(elems),
                     comm_exposed_secs: 0.0,
+                    comm_inter_secs: 0.0,
                     decode_secs: plane.dec.predict(elems),
                 }
             })
@@ -464,6 +494,45 @@ mod tests {
             report.reschedules <= 2,
             "bursty noise caused {} switches",
             report.reschedules
+        );
+    }
+
+    #[test]
+    fn two_level_fit_rewards_the_hierarchical_route_and_moves_the_search() {
+        let two = TwoLevelFabric::nvlink_tcp(2);
+        let world = 8;
+        for kind in [CodecKind::Fp32, CodecKind::EfSignSgd, CodecKind::Dgc { ratio: 0.01 }] {
+            let flat = two_level_comm_fit(kind, &two, world, false);
+            let hier = two_level_comm_fit(kind, &two, world, true);
+            for n in [1usize << 14, 1 << 20, 1 << 24] {
+                assert!(
+                    hier.predict(n) < flat.predict(n),
+                    "{} at {n}: hier {} vs flat {}",
+                    kind.name(),
+                    hier.predict(n),
+                    flat.predict(n)
+                );
+            }
+        }
+        // The Eq.-7 search against each comm model: the two-level route's
+        // optimum must beat the flat ring's on the same fabric.
+        let profile = transformer_100m();
+        let base = linear_plane(CodecKind::EfSignSgd, &Fabric::tcp(), world);
+        let search = SearchParams { y_max: 3, alpha: 0.02 };
+        let mut f_min = Vec::new();
+        for hierarchical in [false, true] {
+            let plane = LinearPlane {
+                comm: two_level_comm_fit(CodecKind::EfSignSgd, &two, world, hierarchical),
+                ..base
+            };
+            let mut obj = plane_objective(&profile, &plane);
+            f_min.push(mergecomp_search(&mut obj, profile.num_tensors(), search).f_min);
+        }
+        assert!(
+            f_min[1] < f_min[0],
+            "two-level optimum {} should beat flat {}",
+            f_min[1],
+            f_min[0]
         );
     }
 

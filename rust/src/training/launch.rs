@@ -11,6 +11,12 @@
 //! exited 0 and (b) every rank's `param_digest` equals rank 0's —
 //! synchronous SGD over a correct transport cannot produce anything else.
 //!
+//! Topology: `--topology nodes=G` (like every unrecognized flag) is
+//! forwarded verbatim to all workers, which maps the local process group
+//! onto `G` synthetic nodes — each rank derives its node from its rank, so
+//! one machine can rehearse the full two-level collective path (the
+//! rendezvous TABLE's node labels are cross-checked by every worker).
+//!
 //! [`RunResult`]: super::RunResult
 
 use crate::config::load_json;

@@ -27,7 +27,7 @@
 
 use super::exchange::{ExchangeStats, GradExchange};
 use super::optimizer::SgdMomentum;
-use crate::collectives::{run_comm_group, tcp_endpoint, Comm, TcpConfig, TransportKind};
+use crate::collectives::{run_comm_group, tcp_endpoint_with_nodes, Comm, TcpConfig, TransportKind};
 use crate::compression::{Codec as _, Collective};
 use crate::config::{ScheduleSpec, SchedulingMode, TrainConfig};
 use crate::data::{Batcher, SyntheticCorpus};
@@ -75,6 +75,10 @@ pub struct RunResult {
     /// Final schedule epoch (0 = never repartitioned).
     pub schedule_epoch: u64,
     pub total_bytes_sent: u64,
+    /// Bytes sent to peers on other nodes of the configured topology (0
+    /// under `--topology flat`) — the slow-fabric traffic the two-level
+    /// exchange minimizes.
+    pub total_inter_bytes_sent: u64,
     pub steps: usize,
     /// FNV-1a over the exact bit patterns of the final parameters —
     /// synchronous SGD means every rank must report the same value, and a
@@ -116,11 +120,19 @@ impl RunResult {
                 "comm_overlap_frac",
                 Value::from(self.mean_exchange.overlap_frac()),
             ),
+            (
+                "mean_comm_inter_secs",
+                Value::from(self.mean_exchange.comm_inter_secs),
+            ),
             ("mean_decode_secs", Value::from(self.mean_exchange.decode_secs)),
             ("search_evals", Value::from(self.search_evals)),
             ("reschedules", Value::from(self.reschedules)),
             ("schedule_epoch", Value::from(self.schedule_epoch)),
             ("total_bytes_sent", Value::from(self.total_bytes_sent)),
+            (
+                "total_inter_bytes_sent",
+                Value::from(self.total_inter_bytes_sent),
+            ),
             ("curve", Value::Arr(curve)),
         ])
     }
@@ -486,6 +498,10 @@ fn train_rank(
     cfg: &TrainConfig,
     setup: &TrainSetup,
 ) -> anyhow::Result<RunResult> {
+    // Attach the topology: identical on every rank (same config), so the
+    // routed collectives stay a symmetric SPMD program. A non-flat
+    // topology switches the gradient exchange to the two-level path.
+    comm.set_topology(cfg.topology.build(comm.world())?)?;
     let rank = comm.rank();
     let meta = &setup.meta;
     let mut params = init_params(meta, cfg.seed);
@@ -686,6 +702,7 @@ fn train_rank(
         reschedules,
         schedule_epoch,
         total_bytes_sent: sum_exchange.bytes_sent,
+        total_inter_bytes_sent: sum_exchange.inter_bytes_sent,
         steps: cfg.steps,
         param_digest: params_digest(&params),
     })
@@ -722,14 +739,30 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 cfg.rank,
                 cfg.workers
             );
+            let topo = cfg.topology.build(cfg.workers)?;
             let tcp_cfg = TcpConfig {
                 rank: cfg.rank,
                 world: cfg.workers,
                 rendezvous: cfg.rendezvous.clone(),
                 advertise_host: cfg.advertise_host.clone(),
+                node_label: topo.node_label(cfg.rank),
                 timeout: std::time::Duration::from_secs(cfg.bootstrap_timeout_secs.max(1)),
             };
-            let ep = tcp_endpoint(&tcp_cfg, None)?;
+            let (ep, peer_nodes) = tcp_endpoint_with_nodes(&tcp_cfg, None)?;
+            // Cross-check: every peer must have been launched with the
+            // same --topology, or its registered node label disagrees with
+            // the one this rank derives for it — mismatched topologies
+            // would make ranks route collectives differently and deadlock.
+            for (peer, label) in peer_nodes.iter().enumerate() {
+                let expect = topo.node_label(peer);
+                anyhow::ensure!(
+                    label == &expect,
+                    "rank {peer} registered node label '{label}' but this rank's \
+                     --topology {} places it on '{expect}' — all ranks must be \
+                     launched with the same --topology",
+                    cfg.topology.name()
+                );
+            }
             let mut comm = Comm::new(ep);
             let result = train_rank(&mut comm, cfg, &setup)?;
             // Final barrier: no rank tears its sockets down while a peer

@@ -1,0 +1,322 @@
+//! Hierarchy equivalence: the two-level (topology-aware) exchange must be
+//! **bit-identical** to the flat ring for every paper codec — gradients
+//! and error-feedback state — on both transports, including non-divisible
+//! world sizes (world=6 split nodes=4+2).
+//!
+//! Exactness contract (see `collectives::hierarchical`):
+//! - every compressed codec rides allgather, where the two-level path
+//!   delivers the *same rank-indexed payload table* as the flat ring and
+//!   each rank decodes it in the same rank order — bit-identical for any
+//!   gradients, so those cases run on random normal gradients;
+//! - FP32/FP16 ride allreduce, where the two-level reduction *grouping*
+//!   differs from the ring's, so bit-identity is exercised on dyadic
+//!   lattice gradients (k·2⁻⁶, |k| ≤ 64) whose sums are exact in both wire
+//!   precisions — any reduction grouping then yields the same bits.
+
+use mergecomp::collectives::{run_comm_group, run_comm_group_tcp, Comm, CommRoute, TopologySpec};
+use mergecomp::compression::{CodecKind, Collective};
+use mergecomp::scheduler::Partition;
+use mergecomp::training::{GradExchange, PipelineMode};
+use mergecomp::util::proptest::{check, Gen};
+use mergecomp::util::rng::Xoshiro256;
+
+const WORLD: usize = 6;
+const STEPS: usize = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    InProc,
+    Tcp,
+}
+
+fn run_comm_on<T: Send>(
+    backend: Backend,
+    world: usize,
+    f: impl Fn(&mut Comm) -> T + Send + Sync,
+) -> Vec<T> {
+    match backend {
+        Backend::InProc => run_comm_group(world, f),
+        Backend::Tcp => run_comm_group_tcp(world, f),
+    }
+}
+
+/// Per-tensor sizes (backprop order): uneven groups, sub-word tails for
+/// the bit-packed codecs, multi-bucket QSGD groups.
+fn tensor_sizes() -> Vec<usize> {
+    vec![700, 33, 512, 129, 64, 257]
+}
+
+/// Deterministic per-(rank, step) gradients. Allreduce codecs (FP32/FP16)
+/// get dyadic lattice values whose cross-rank sums are exact in f16;
+/// everything else gets random normals.
+fn step_grads(kind: CodecKind, rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng =
+        Xoshiro256::seed_from_u64(0x41E7 ^ ((rank as u64) << 32) ^ ((step as u64) << 8));
+    let lattice = kind.collective() == Collective::AllReduce;
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut g = vec![0f32; n];
+            if lattice {
+                for v in g.iter_mut() {
+                    // k·2⁻⁶ with k ∈ [−64, 64]: exact in f16, and sums over
+                    // ≤ 6 ranks stay exactly representable.
+                    let k = rng.gen_range(129) as i64 - 64;
+                    *v = k as f32 / 64.0;
+                }
+            } else {
+                rng.fill_normal_f32(&mut g, 0.5);
+            }
+            g
+        })
+        .collect()
+}
+
+/// Run `STEPS` exchanges under one route; returns every rank's final
+/// gradients and codec-state digest.
+fn run_route(
+    backend: Backend,
+    kind: CodecKind,
+    spec: &TopologySpec,
+    route: CommRoute,
+    mode: PipelineMode,
+    world: usize,
+    sizes: Vec<usize>,
+    partition: Partition,
+) -> Vec<(Vec<Vec<f32>>, u64)> {
+    let spec = spec.clone();
+    run_comm_on(backend, world, move |c| {
+        c.set_topology(spec.build(world).unwrap()).unwrap();
+        c.set_route(route);
+        let mut ex = GradExchange::new(kind, partition.clone(), sizes.clone()).with_mode(mode);
+        let mut rng = Xoshiro256::seed_from_u64(42 + c.rank() as u64);
+        let mut last = Vec::new();
+        for step in 0..STEPS {
+            let mut grads = step_grads(kind, c.rank(), step, &sizes);
+            ex.exchange(c, &mut grads, &mut rng).unwrap();
+            last = grads;
+        }
+        (last, ex.state_digest())
+    })
+}
+
+fn assert_routes_agree(
+    backend: Backend,
+    kind: CodecKind,
+    spec: &TopologySpec,
+    mode: PipelineMode,
+    world: usize,
+    sizes: Vec<usize>,
+    partition: Partition,
+) {
+    let flat = run_route(
+        backend,
+        kind,
+        spec,
+        CommRoute::Flat,
+        mode,
+        world,
+        sizes.clone(),
+        partition.clone(),
+    );
+    let hier = run_route(
+        backend,
+        kind,
+        spec,
+        CommRoute::TwoLevel,
+        mode,
+        world,
+        sizes,
+        partition,
+    );
+    for (rank, ((fg, fd), (hg, hd))) in flat.iter().zip(&hier).enumerate() {
+        for (t, (ft, ht)) in fg.iter().zip(hg).enumerate() {
+            assert_eq!(ft.len(), ht.len());
+            for (i, (a, b)) in ft.iter().zip(ht).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{:?} {} {} ({spec:?}): rank {rank} tensor {t} idx {i}: flat {a} vs hier {b}",
+                    backend,
+                    kind.name(),
+                    mode.name()
+                );
+            }
+        }
+        assert_eq!(
+            fd,
+            hd,
+            "{:?} {} {}: rank {rank} EF state diverged across routes",
+            backend,
+            kind.name(),
+            mode.name()
+        );
+    }
+}
+
+#[test]
+fn two_level_bit_identical_for_all_paper_codecs_inproc() {
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    // world=6 split 4+2 (non-divisible) and 2+2+2 (balanced).
+    for spec in [TopologySpec::Sized(vec![4, 2]), TopologySpec::Nodes(3)] {
+        for kind in &kinds {
+            for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+                assert_routes_agree(
+                    Backend::InProc,
+                    *kind,
+                    &spec,
+                    mode,
+                    WORLD,
+                    sizes.clone(),
+                    Partition::naive_even(n, 3),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn two_level_bit_identical_for_all_paper_codecs_over_tcp() {
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    let spec = TopologySpec::Sized(vec![4, 2]);
+    for kind in kinds {
+        assert_routes_agree(
+            Backend::Tcp,
+            kind,
+            &spec,
+            PipelineMode::Pipelined,
+            WORLD,
+            sizes.clone(),
+            Partition::naive_even(n, 2),
+        );
+    }
+}
+
+#[test]
+fn two_level_full_merge_and_layerwise_partitions_also_agree() {
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    let spec = TopologySpec::Sized(vec![4, 2]);
+    for partition in [Partition::full_merge(n), Partition::layer_wise(n)] {
+        for kind in [CodecKind::EfSignSgd, CodecKind::Fp16, CodecKind::Dgc { ratio: 0.01 }] {
+            assert_routes_agree(
+                Backend::InProc,
+                kind,
+                &spec,
+                PipelineMode::Pipelined,
+                WORLD,
+                sizes.clone(),
+                partition.clone(),
+            );
+        }
+    }
+}
+
+#[test]
+fn all_ranks_agree_under_two_level_route_with_arbitrary_grads() {
+    // Synchronous-SGD consistency (every rank holds identical averaged
+    // gradients) must hold under the two-level route for ANY gradients —
+    // including FP32 normals, where flat-vs-hier bits may differ but
+    // cross-rank bits may not (the leader broadcast makes this structural).
+    let sizes = tensor_sizes();
+    let results = run_comm_group(WORLD, move |c| {
+        c.set_topology(TopologySpec::Sized(vec![4, 2]).build(WORLD).unwrap())
+            .unwrap();
+        let mut ex = GradExchange::new(
+            CodecKind::Fp32,
+            Partition::naive_even(sizes.len(), 3),
+            sizes.clone(),
+        )
+        .with_mode(PipelineMode::Pipelined);
+        let mut rng = Xoshiro256::seed_from_u64(7 + c.rank() as u64);
+        let mut grads = step_grads(CodecKind::TopK { ratio: 0.1 }, c.rank(), 0, &sizes);
+        ex.exchange(c, &mut grads, &mut rng).unwrap();
+        grads
+    });
+    for (rank, r) in results.iter().enumerate() {
+        assert_eq!(r, &results[0], "rank {rank} diverged from rank 0");
+    }
+}
+
+/// Generator: a random node split (2–4 nodes of 1–2 ranks each, so worlds
+/// of 2–8) plus a codec and a group count. Shrinks towards fewer/smaller
+/// nodes.
+struct SplitGen;
+
+impl Gen for SplitGen {
+    type Value = (Vec<usize>, usize, usize);
+    fn generate(&self, rng: &mut Xoshiro256) -> (Vec<usize>, usize, usize) {
+        let nodes = 2 + rng.gen_range(3);
+        let split: Vec<usize> = (0..nodes).map(|_| 1 + rng.gen_range(2)).collect();
+        let codec_idx = rng.gen_range(CodecKind::paper_set().len());
+        let groups = 1 + rng.gen_range(3);
+        (split, codec_idx, groups)
+    }
+    fn shrink(&self, v: &(Vec<usize>, usize, usize)) -> Vec<(Vec<usize>, usize, usize)> {
+        let mut out = Vec::new();
+        if v.0.len() > 2 {
+            out.push((v.0[..2].to_vec(), v.1, v.2));
+        }
+        if v.0.iter().any(|&s| s > 1) {
+            out.push((v.0.iter().map(|_| 1).collect(), v.1, v.2));
+        }
+        if v.2 > 1 {
+            out.push((v.0.clone(), v.1, 1));
+        }
+        out.retain(|c| c != v);
+        out
+    }
+}
+
+/// Property: ANY contiguous node split agrees with the flat ring, for any
+/// paper codec (lattice grads make the FP32/FP16 sums exact).
+#[test]
+fn prop_random_node_splits_agree_with_flat_ring() {
+    let sizes = tensor_sizes();
+    check("random node splits", 10, SplitGen, |(split, codec_idx, groups)| {
+        let world: usize = split.iter().sum();
+        let kind = CodecKind::paper_set()[*codec_idx];
+        let spec = TopologySpec::Sized(split.clone());
+        let partition = Partition::naive_even(sizes.len(), (*groups).min(sizes.len()));
+        let run = |route: CommRoute| {
+            run_route(
+                Backend::InProc,
+                kind,
+                &spec,
+                route,
+                PipelineMode::Serial,
+                world,
+                sizes.clone(),
+                partition.clone(),
+            )
+        };
+        let flat = run(CommRoute::Flat);
+        let hier = run(CommRoute::TwoLevel);
+        for (rank, ((fg, fd), (hg, hd))) in flat.iter().zip(&hier).enumerate() {
+            if fd != hd {
+                return Err(format!(
+                    "{} split {split:?}: rank {rank} EF state diverged",
+                    kind.name()
+                ));
+            }
+            for (t, (ft, ht)) in fg.iter().zip(hg).enumerate() {
+                for (i, (a, b)) in ft.iter().zip(ht).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{} split {split:?}: rank {rank} tensor {t} idx {i}: \
+                             flat {a} vs hier {b}",
+                            kind.name()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -199,6 +199,7 @@ fn synth_samples(p: &Partition, sizes: &[usize], b: f64, g: f64) -> Vec<GroupSam
                 encode_secs: 1e-5,
                 comm_secs: b + g * elems as f64,
                 comm_exposed_secs: 0.0,
+                comm_inter_secs: 0.0,
                 decode_secs: 1e-5,
             }
         })

@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Cheap markdown link checker for the repo docs.
+
+Scans the top-level *.md files (README/DESIGN/EXPERIMENTS/ROADMAP/...) for
+inline links and validates every *relative* target against the working
+tree, so a moved or renamed file fails CI instead of rotting silently.
+
+Skipped: absolute URLs (http/https/mailto), pure in-page anchors (#...),
+and anything inside fenced code blocks. Anchors on relative links are
+stripped (the file's existence is what we pin).
+
+Usage: python3 tools/check_md_links.py [repo_root]
+Exit code 0 when every link resolves, 1 otherwise (targets listed).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def links_in(text: str):
+    """Yield link targets outside fenced code blocks."""
+    in_fence = False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield m.group(1)
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parent.parent
+    md_files = sorted(root.glob("*.md"))
+    if not md_files:
+        print(f"no markdown files found under {root}", file=sys.stderr)
+        return 1
+    broken = []
+    checked = 0
+    for md in md_files:
+        for target in links_in(md.read_text(encoding="utf-8")):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            checked += 1
+            resolved = (md.parent / rel).resolve()
+            if not resolved.exists():
+                broken.append(f"{md.relative_to(root)}: ({target}) -> {rel} does not exist")
+    for b in broken:
+        print(f"BROKEN  {b}")
+    print(f"checked {checked} relative links across {len(md_files)} files, {len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
