@@ -13,6 +13,12 @@
 //!   faster end-to-end (that's the exposed inter-node *time* the scheduler
 //!   cares about).
 //!
+//! Third plane — **route-aware schedule search**: on a fabric where
+//! inter-node cost dominates large groups only, the `(partition, route)`
+//! search must assign hierarchical routes to large groups and the flat
+//! ring to small ones, and the mixed schedule must beat both forced-flat
+//! and forced-hierarchical end-to-end.
+//!
 //! Outputs: `results/hierarchy.csv` and `results/BENCH_hierarchy.json`
 //! (uploaded by the nightly bench job).
 
@@ -22,9 +28,12 @@ mod harness;
 use mergecomp::collectives::{run_comm_group, CommRoute, TopologySpec};
 use mergecomp::compression::CodecKind;
 use mergecomp::metrics::write_json;
-use mergecomp::netsim::TwoLevelFabric;
+use mergecomp::netsim::{Fabric, TwoLevelFabric};
 use mergecomp::profiles::transformer_lm;
-use mergecomp::scheduler::Partition;
+use mergecomp::scheduler::costmodel::RouteCostModel;
+use mergecomp::scheduler::objective::AnalyticObjective;
+use mergecomp::scheduler::{mergecomp_search, Partition, RouteChoice, SearchParams};
+use mergecomp::simulator::validate::{linear_plane, shaped_route_fits};
 use mergecomp::training::{ExchangeStats, GradExchange, PipelineMode};
 use mergecomp::util::json::Value;
 use mergecomp::util::rng::Xoshiro256;
@@ -194,6 +203,114 @@ fn main() {
     );
     assert!(agg_hier_inter < agg_flat_inter);
 
+    // --- route-aware schedule search: auto vs forced ----------------------
+    // Fabric where inter-node cost dominates large groups only (see
+    // simulator::validate::shaped_route_fits), world=6 split 4+2 — the
+    // flat ring wins small groups (fewer serialized hops), the
+    // hierarchical exchange wins large ones (inter bandwidth).
+    harness::section("Route-aware schedule search (auto vs forced-flat vs forced-hierarchical)");
+    let route_world = 6usize;
+    let node_sizes = [4usize, 2];
+    // Launch-overhead-heavy intra links (50µs per hop, NVLink-class
+    // bandwidth) under a low-latency thin inter pipe: the flat ring wins
+    // small groups by 2·α_intra − α_inter = 70µs of serialized-hop
+    // latency, the hierarchy wins large ones on inter bandwidth;
+    // crossover ≈ 1.2M elements for EF-SignSGD.
+    let route_intra = Fabric::custom(50e-6, 6.0e10);
+    let route_inter = Fabric::custom(30e-6, 1.2e9);
+    let (flat_fit, split) =
+        shaped_route_fits(CodecKind::EfSignSgd, &route_intra, &route_inter, &node_sizes);
+    let route_costs = RouteCostModel { flat: flat_fit, hier: split.combined() };
+    // A run of small tensors followed by a few large ones: any group of
+    // smalls sits far under the crossover, any group holding a large
+    // tensor far above it, so the optimal partition holds groups on both
+    // sides. Communication dominates compute, so every comm second is on
+    // the critical path and the route choice of the small groups is
+    // end-to-end visible.
+    let route_sizes: Vec<usize> = [vec![8_000usize; 12], vec![4_000_000usize; 4]].concat();
+    let rn = route_sizes.len();
+    let (step_secs, fwd_frac) = (2e-3, 0.3);
+    let bwd = step_secs * (1.0 - fwd_frac);
+    let bwd_dur: Vec<f64> = vec![bwd / rn as f64; rn];
+    let host = linear_plane(CodecKind::EfSignSgd, &Fabric::nvlink(), route_world);
+    let mk_obj = |comm| {
+        AnalyticObjective::new(
+            bwd_dur.clone(),
+            route_sizes.clone(),
+            step_secs * fwd_frac,
+            host.enc,
+            host.dec,
+            comm,
+            1,
+        )
+    };
+    let search = SearchParams { y_max: 4, alpha: 0.0 };
+    let mut forced_flat = mk_obj(flat_fit);
+    let f_flat = mergecomp_search(&mut forced_flat, rn, search).f_min;
+    let mut forced_hier = mk_obj(split.combined());
+    let f_hier = mergecomp_search(&mut forced_hier, rn, search).f_min;
+    let mut auto = mk_obj(flat_fit).with_route_costs(route_costs);
+    let out = mergecomp_search(&mut auto, rn, search);
+    let f_auto = out.f_min;
+    let group_elems_r = out.partition.group_elems(&route_sizes);
+    println!(
+        "auto {:.3}ms vs forced-flat {:.3}ms / forced-hier {:.3}ms; groups {:?} routes {:?}",
+        f_auto * 1e3,
+        f_flat * 1e3,
+        f_hier * 1e3,
+        group_elems_r,
+        out.routes.iter().map(|r| r.name()).collect::<Vec<_>>(),
+    );
+    assert!(
+        f_auto < f_flat && f_auto < f_hier,
+        "auto-routed schedule {f_auto} must beat forced flat {f_flat} and forced hier {f_hier}"
+    );
+    assert!(
+        out.routes.contains(&RouteChoice::Flat)
+            && out.routes.contains(&RouteChoice::Hierarchical),
+        "expected a mixed schedule, got {:?}",
+        out.routes
+    );
+    // Flat groups are the small ones, hierarchical the large ones.
+    let max_flat = out
+        .routes
+        .iter()
+        .zip(&group_elems_r)
+        .filter(|(r, _)| **r == RouteChoice::Flat)
+        .map(|(_, &e)| e)
+        .max()
+        .unwrap();
+    let min_hier = out
+        .routes
+        .iter()
+        .zip(&group_elems_r)
+        .filter(|(r, _)| **r == RouteChoice::Hierarchical)
+        .map(|(_, &e)| e)
+        .min()
+        .unwrap();
+    assert!(
+        max_flat < min_hier,
+        "route assignment must split by size: flat up to {max_flat}, hier from {min_hier}"
+    );
+    let route_search = Value::from_pairs(vec![
+        ("codec", Value::from("efsignsgd")),
+        ("world", Value::from(route_world)),
+        ("node_sizes", Value::Arr(node_sizes.iter().map(|&s| Value::from(s)).collect())),
+        ("forced_flat_secs", Value::from(f_flat)),
+        ("forced_hier_secs", Value::from(f_hier)),
+        ("auto_secs", Value::from(f_auto)),
+        ("auto_speedup_vs_flat", Value::from(f_flat / f_auto)),
+        ("auto_speedup_vs_hier", Value::from(f_hier / f_auto)),
+        (
+            "routes",
+            Value::Arr(out.routes.iter().map(|r| Value::from(r.name())).collect()),
+        ),
+        (
+            "group_elems",
+            Value::Arr(group_elems_r.iter().map(|&e| Value::from(e)).collect()),
+        ),
+    ]);
+
     let summary = Value::from_pairs(vec![
         ("bench", Value::from("hierarchy")),
         ("profile", Value::from(profile.name.clone())),
@@ -210,6 +327,7 @@ fn main() {
             "agg_inter_bytes_saved_frac",
             Value::from(1.0 - agg_hier_inter as f64 / agg_flat_inter.max(1) as f64),
         ),
+        ("route_search", route_search),
         ("codecs", Value::Arr(rows)),
     ]);
     write_json("results/BENCH_hierarchy.json", &summary)

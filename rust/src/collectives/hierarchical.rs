@@ -1,36 +1,44 @@
-//! Two-level (topology-aware) collectives: intra-node reduce/gather to the
-//! node leader, an inter-node ring **among leaders only**, then an
-//! intra-node broadcast — the hierarchy MG-WFBP and ScaleCom show flat
-//! rings need on multi-node fabrics.
+//! Hierarchical (topology-aware) collectives: recursive fan-in along the
+//! topology's leader chain, a ring among the **top-level leaders only**,
+//! then a fan-out back down — the hierarchy MG-WFBP and ScaleCom show flat
+//! rings need on multi-node fabrics, generalized from two levels to the
+//! N-level hierarchies [`Topology`](super::Topology) can describe
+//! (`nodes=…;racks=…;…`).
 //!
 //! Why: a flat ring drags `2·(w−1)/w · S` bytes per rank across *every*
-//! link class, so the slow inter-node fabric gates all `2·(w−1)` steps.
-//! The two-level exchange confines the slow level to a ring over the `L`
-//! node leaders (`2·(L−1)` steps, `2·(L−1)/L · S` bytes per leader), while
-//! the cheap intra-node level absorbs the member fan-in/fan-out. The
-//! measured per-level split (`CommBreakdown`) feeds the scheduler's
-//! per-level α+β·size fits (`scheduler::estimator`), and the predicted
-//! counterpart lives in `netsim::hierarchy`.
+//! link class, so the slowest fabric gates all `2·(w−1)` steps. The
+//! hierarchical exchange confines the slow level to a ring over the `L`
+//! top-level leaders (`2·(L−1)` steps, `2·(L−1)/L · S` bytes per leader),
+//! while the cheaper lower levels absorb the member fan-in/fan-out stage
+//! by stage. The measured split (`CommBreakdown`: top ring vs everything
+//! below it) feeds the scheduler's per-level α+β·size fits
+//! (`scheduler::estimator`), and the predicted counterpart lives in
+//! `netsim::hierarchy`.
 //!
 //! ## Exactness
 //!
 //! - **Allgather codecs** (every compressed scheme in paper Table 1): the
-//!   two-level path is **bit-identical to the flat ring unconditionally**.
-//!   Leaders exchange *concatenated frames* of their node's encoded
-//!   payloads; every rank ends up with the same rank-indexed payload table
-//!   the flat allgather delivers, and decodes it in the same rank order —
-//!   no floating-point reduction happens on the wire at all.
+//!   hierarchical path is **bit-identical to the flat ring
+//!   unconditionally**. Leaders exchange *concatenated frames* of the
+//!   encoded payloads they hold; every rank ends up with the same
+//!   rank-indexed payload table the flat allgather delivers, and decodes
+//!   it in the same rank order — no floating-point reduction happens on
+//!   the wire at all. This is also why per-group **route switches**
+//!   (flat ↔ hierarchical, `tests/route_choice.rs`) are invisible to
+//!   gradients and EF state.
 //! - **Allreduce codecs** (FP32/FP16): sums are deterministic on every
-//!   rank (leader folds its members in ascending rank order, then the
-//!   leader ring reduces node partials), but the reduction *grouping*
+//!   rank (each leader folds its subordinates in ascending rank order,
+//!   then the top ring reduces the partials), but the reduction *grouping*
 //!   differs from the flat ring's, so results are bit-identical exactly
 //!   when the sums involved are exact in the wire precision — the same
 //!   caveat NCCL documents for tree vs ring reductions.
 //!   `tests/hierarchy_equivalence.rs` pins both properties.
 //!
-//! Tag discipline: each operation reserves `3·world + 1` tags on **every**
-//! rank (leader or member) so rank-local tag sequences stay aligned across
-//! the whole group even though only leaders run the inter-node stage.
+//! Tag discipline: each operation reserves `stages·(world+1) + 2·world`
+//! tags on **every** rank (leader or member) — one fan-in tag block plus a
+//! fan-out tag per stage, then the top ring's block — so rank-local tag
+//! sequences stay aligned across the whole group even though only leaders
+//! climb the chain.
 
 use super::allgather::subset_ring_allgather;
 use super::ring::subset_ring_allreduce_bytes;
@@ -40,28 +48,29 @@ use crate::compression::Codec;
 use crate::util::stats::Stopwatch;
 
 /// Per-level timing of one hierarchical collective, as measured by the
-/// calling rank. Leaders attribute the inter-node ring to `inter_secs`;
-/// non-leaders spend the same wall time blocked in the intra-node fan-out
-/// stage (their `inter_secs` is 0) — rank 0, which drives the scheduler's
-/// cost fits, is always a leader.
+/// calling rank. Top-level leaders attribute the top ring to `inter_secs`;
+/// other ranks spend the same wall time blocked in a fan-out wait (their
+/// `inter_secs` is 0) — rank 0, which drives the scheduler's cost fits, is
+/// always a top-level leader.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommBreakdown {
-    /// Seconds in the intra-node stages (member→leader fan-in and
-    /// leader→member fan-out).
+    /// Seconds in the fan stages (member→leader fan-in and leader→member
+    /// fan-out, every level below the top ring).
     pub intra_secs: f64,
-    /// Seconds in the inter-node stage (the ring among node leaders).
+    /// Seconds in the top ring among the topmost-level leaders.
     pub inter_secs: f64,
 }
 
 /// Tags one hierarchical collective may use; reserved identically on every
-/// rank. Layout: `[0, world)` intra fan-in (by node-local index),
-/// `[world, 3·world)` the leader ring, `[3·world]` intra fan-out.
-pub(crate) fn hier_tag_slots(world: usize) -> u64 {
-    3 * world as u64 + 1
+/// rank. Layout: stage `k` owns `[k·(world+1), k·(world+1)+world)` for
+/// fan-in (by participant index within the group) plus `k·(world+1)+world`
+/// for fan-out; the top ring owns the final `2·world` slots.
+pub(crate) fn hier_tag_slots(world: usize, stages: usize) -> u64 {
+    stages as u64 * (world as u64 + 1) + 2 * world as u64
 }
 
-/// Two-level allreduce of a codec wire buffer (FP32/FP16): intra-node fold
-/// to the leader, ring allreduce among leaders, intra-node broadcast.
+/// Hierarchical allreduce of a codec wire buffer (FP32/FP16): fold up the
+/// leader chain, ring allreduce among the top leaders, fan back out.
 pub fn hier_allreduce_wire(
     comm: &mut Comm,
     data: &mut [u8],
@@ -78,132 +87,175 @@ pub fn hier_allreduce_wire(
         0,
         "buffer length must be a multiple of the element size"
     );
-    let members = comm.topology().node_members_of(rank).to_vec();
-    let leaders = comm.topology().leaders();
-    let leader = members[0];
-    let base = comm.next_tags(hier_tag_slots(world));
-    let ring_base = base + world as u64;
-    let fanout_tag = base + 3 * world as u64;
+    let topo = comm.topology_shared();
+    let stages = topo.fan_stages();
+    let ring = topo.top_leaders();
+    let base = comm.next_tags(hier_tag_slots(world, stages.len()));
+    let ring_base = base + stages.len() as u64 * (world as u64 + 1);
 
-    // Stage A — intra-node fan-in: the leader folds member buffers in
-    // ascending rank order (deterministic; no election traffic).
-    let sw = Stopwatch::start();
-    if rank == leader {
-        for (idx, &m) in members.iter().enumerate().skip(1) {
-            let incoming = comm.ep.recv(m, base + idx as u64)?;
-            codec.reduce_wire(data, &incoming);
+    // Fan-in, bottom-up: at each stage the group leader folds the other
+    // participants' partials in ascending rank order (deterministic; no
+    // election traffic). A rank stops climbing once it is not the leader
+    // of its group.
+    let mut intra_secs = 0.0;
+    for (k, stage) in stages.iter().enumerate() {
+        let Some(group) = stage.iter().find(|g| g.contains(&rank)) else {
+            continue;
+        };
+        let stage_base = base + k as u64 * (world as u64 + 1);
+        let leader = group[0];
+        let sw = Stopwatch::start();
+        if rank == leader {
+            for (idx, &p) in group.iter().enumerate().skip(1) {
+                let incoming = comm.ep.recv(p, stage_base + idx as u64)?;
+                codec.reduce_wire(data, &incoming);
+            }
+        } else {
+            let idx = group
+                .iter()
+                .position(|&p| p == rank)
+                .expect("rank missing from its own fan group");
+            comm.ep.send(leader, stage_base + idx as u64, data.to_vec())?;
         }
-    } else {
-        let idx = members
-            .iter()
-            .position(|&m| m == rank)
-            .expect("rank missing from its own node");
-        comm.ep.send(leader, base + idx as u64, data.to_vec())?;
+        intra_secs += sw.elapsed().as_secs_f64();
+        if rank != leader {
+            break;
+        }
     }
-    let mut intra_secs = sw.elapsed().as_secs_f64();
 
-    // Stage B — inter-node ring among leaders over the node partials.
-    let sw = Stopwatch::start();
-    if rank == leader && leaders.len() > 1 {
-        subset_ring_allreduce_bytes(comm, &leaders, ring_base, data, align, &|a, b| {
+    // Top ring among the topmost leaders over the subtree partials.
+    let mut inter_secs = 0.0;
+    if ring.len() > 1 && ring.contains(&rank) {
+        let sw = Stopwatch::start();
+        subset_ring_allreduce_bytes(comm, ring, ring_base, data, align, &|a, b| {
             codec.reduce_wire(a, b)
         })?;
+        inter_secs = sw.elapsed().as_secs_f64();
     }
-    let inter_secs = sw.elapsed().as_secs_f64();
 
-    // Stage C — intra-node fan-out of the fully reduced buffer.
-    let sw = Stopwatch::start();
-    if rank == leader {
-        for &m in members.iter().skip(1) {
-            comm.ep.send(m, fanout_tag, data.to_vec())?;
+    // Fan-out, top-down: each group leader pushes the fully reduced buffer
+    // to its participants; they in turn lead the stage below.
+    for (k, stage) in stages.iter().enumerate().rev() {
+        let Some(group) = stage.iter().find(|g| g.contains(&rank)) else {
+            continue;
+        };
+        let fanout_tag = base + k as u64 * (world as u64 + 1) + world as u64;
+        let leader = group[0];
+        let sw = Stopwatch::start();
+        if rank == leader {
+            for &p in group.iter().skip(1) {
+                comm.ep.send(p, fanout_tag, data.to_vec())?;
+            }
+        } else {
+            let reduced = comm.ep.recv(leader, fanout_tag)?;
+            debug_assert_eq!(reduced.len(), data.len());
+            data.copy_from_slice(&reduced);
         }
-    } else {
-        let reduced = comm.ep.recv(leader, fanout_tag)?;
-        debug_assert_eq!(reduced.len(), data.len());
-        data.copy_from_slice(&reduced);
+        intra_secs += sw.elapsed().as_secs_f64();
     }
-    intra_secs += sw.elapsed().as_secs_f64();
 
     comm.note_breakdown(CommBreakdown {
         intra_secs,
-        inter_secs: if rank == leader { inter_secs } else { 0.0 },
+        inter_secs,
     });
     Ok(())
 }
 
-/// Two-level allgather (variable-size payloads): members hand their
-/// payloads to the leader, leaders ring-exchange **concatenated node
-/// frames**, the leader fans the full rank-indexed table back out. The
-/// result is exactly what the flat ring allgather returns, on every rank.
+/// Hierarchical allgather (variable-size payloads): participants hand
+/// length-prefixed frames of everything they hold up the leader chain, the
+/// top leaders ring-exchange **subtree frames**, and the full rank-indexed
+/// table fans back down. The result is exactly what the flat ring
+/// allgather returns, on every rank.
 pub fn hier_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {
         return Ok(vec![mine]);
     }
-    let members = comm.topology().node_members_of(rank).to_vec();
-    let leaders = comm.topology().leaders();
-    let node_lists: Vec<Vec<usize>> = (0..comm.topology().num_nodes())
-        .map(|n| comm.topology().node_members(n).to_vec())
-        .collect();
-    let my_node = comm.topology().node_of(rank);
-    let leader = members[0];
-    let base = comm.next_tags(hier_tag_slots(world));
-    let ring_base = base + world as u64;
-    let fanout_tag = base + 3 * world as u64;
+    let topo = comm.topology_shared();
+    let stages = topo.fan_stages();
+    let ring = topo.top_leaders();
+    let base = comm.next_tags(hier_tag_slots(world, stages.len()));
+    let ring_base = base + stages.len() as u64 * (world as u64 + 1);
 
     let mut out: Vec<Vec<u8>> = vec![Vec::new(); world];
+    out[rank] = mine;
 
-    // Stage A — intra-node fan-in of raw payloads.
-    let sw = Stopwatch::start();
-    if rank == leader {
-        out[rank] = mine;
-        for (idx, &m) in members.iter().enumerate().skip(1) {
-            out[m] = comm.ep.recv(m, base + idx as u64)?;
+    // Fan-in, bottom-up: a participant forwards a frame of every payload
+    // it holds (its own at stage 0, its whole subtree above that).
+    let mut intra_secs = 0.0;
+    for (k, stage) in stages.iter().enumerate() {
+        let Some(group) = stage.iter().find(|g| g.contains(&rank)) else {
+            continue;
+        };
+        let stage_base = base + k as u64 * (world as u64 + 1);
+        let leader = group[0];
+        let sw = Stopwatch::start();
+        if rank == leader {
+            for (idx, &p) in group.iter().enumerate().skip(1) {
+                let frame = comm.ep.recv(p, stage_base + idx as u64)?;
+                decode_frame_into(topo.held_cover(k, p), &frame, &mut out)?;
+            }
+        } else {
+            let idx = group
+                .iter()
+                .position(|&p| p == rank)
+                .expect("rank missing from its own fan group");
+            let frame = encode_frame(topo.held_cover(k, rank), &out);
+            comm.ep.send(leader, stage_base + idx as u64, frame)?;
         }
-    } else {
-        let idx = members
-            .iter()
-            .position(|&m| m == rank)
-            .expect("rank missing from its own node");
-        comm.ep.send(leader, base + idx as u64, mine)?;
+        intra_secs += sw.elapsed().as_secs_f64();
+        if rank != leader {
+            break;
+        }
     }
-    let mut intra_secs = sw.elapsed().as_secs_f64();
 
-    // Stage B — leaders exchange concatenated node frames (one
-    // length-prefixed entry per member, ascending rank order).
-    let sw = Stopwatch::start();
-    if rank == leader && leaders.len() > 1 {
-        let frame = encode_frame(&members, &out);
-        let gathered = subset_ring_allgather(comm, &leaders, ring_base, frame)?;
-        for (node, frame) in gathered.iter().enumerate() {
-            if node != my_node {
-                decode_frame_into(&node_lists[node], frame, &mut out)?;
+    // Top ring: leaders exchange their full-subtree frames.
+    let mut inter_secs = 0.0;
+    if ring.len() > 1 && ring.contains(&rank) {
+        let sw = Stopwatch::start();
+        let frame = encode_frame(topo.held_cover(stages.len(), rank), &out);
+        let gathered = subset_ring_allgather(comm, ring, ring_base, frame)?;
+        for (pos, frame) in gathered.iter().enumerate() {
+            let p = ring[pos];
+            if p != rank {
+                decode_frame_into(topo.held_cover(stages.len(), p), frame, &mut out)?;
             }
         }
+        inter_secs = sw.elapsed().as_secs_f64();
     }
-    let inter_secs = sw.elapsed().as_secs_f64();
 
-    // Stage C — intra-node fan-out of the full rank-indexed table.
-    let sw = Stopwatch::start();
-    if rank == leader {
-        if members.len() > 1 {
-            let all_ranks: Vec<usize> = (0..world).collect();
-            let table = encode_frame(&all_ranks, &out);
-            for &m in members.iter().skip(1) {
-                comm.ep.send(m, fanout_tag, table.clone())?;
+    // Fan-out, top-down: the full rank-indexed table travels down the
+    // chain unchanged. It is encoded at most once per rank — a leader
+    // that received the table frame from the stage above forwards those
+    // exact bytes instead of re-encoding the identical table.
+    let all_ranks: Vec<usize> = (0..world).collect();
+    let mut table: Option<Vec<u8>> = None;
+    for (k, stage) in stages.iter().enumerate().rev() {
+        let Some(group) = stage.iter().find(|g| g.contains(&rank)) else {
+            continue;
+        };
+        let fanout_tag = base + k as u64 * (world as u64 + 1) + world as u64;
+        let leader = group[0];
+        let sw = Stopwatch::start();
+        if rank == leader {
+            if group.len() > 1 {
+                let frame = table.get_or_insert_with(|| encode_frame(&all_ranks, &out));
+                for &p in group.iter().skip(1) {
+                    comm.ep.send(p, fanout_tag, frame.clone())?;
+                }
             }
+        } else {
+            let frame = comm.ep.recv(leader, fanout_tag)?;
+            decode_frame_into(&all_ranks, &frame, &mut out)?;
+            table = Some(frame);
         }
-    } else {
-        let table = comm.ep.recv(leader, fanout_tag)?;
-        let all_ranks: Vec<usize> = (0..world).collect();
-        decode_frame_into(&all_ranks, &table, &mut out)?;
+        intra_secs += sw.elapsed().as_secs_f64();
     }
-    intra_secs += sw.elapsed().as_secs_f64();
 
     comm.note_breakdown(CommBreakdown {
         intra_secs,
-        inter_secs: if rank == leader { inter_secs } else { 0.0 },
+        inter_secs,
     });
     Ok(out)
 }
@@ -280,5 +332,13 @@ mod tests {
         // Exact fit parses.
         assert!(decode_frame_into(&[0], &[1, 0, 0, 0, 7], &mut out).is_ok());
         assert_eq!(out[0], vec![7]);
+    }
+
+    #[test]
+    fn tag_slots_cover_every_stage_and_the_ring() {
+        // Two-level (1 stage): world + 1 fan tags + 2·world ring tags.
+        assert_eq!(hier_tag_slots(6, 1), 6 + 1 + 12);
+        // Three-level (2 stages): one more (world+1) block.
+        assert_eq!(hier_tag_slots(6, 2), 2 * 7 + 12);
     }
 }

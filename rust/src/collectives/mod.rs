@@ -12,13 +12,18 @@
 //! [`TransportError`]>`. A peer dying mid-collective fails the operation
 //! with the rank/peer/tag context instead of panicking the worker.
 //!
-//! Topology: a [`Comm`] carries a [`Topology`] (rank→node mapping) and a
-//! [`CommRoute`]. With a non-trivial topology the gradient collectives
-//! (`allgather`, `allreduce_wire`) run the **two-level** exchange in
-//! [`hierarchical`] — intra-node fan-in to the node leader, an inter-node
-//! ring among leaders only, intra-node fan-out — instead of the flat ring,
-//! and the per-level timing split is available via
-//! [`Comm::take_last_breakdown`].
+//! Topology: a [`Comm`] carries a [`Topology`] (rank→node mapping,
+//! optionally extended by racks/pods levels) and a [`CommRoute`]. With a
+//! non-trivial topology the gradient collectives (`allgather`,
+//! `allreduce_wire`) run the **hierarchical** exchange in [`hierarchical`]
+//! — fan-in up the leader chain, a ring among the top-level leaders only,
+//! fan-out back down — instead of the flat ring, and the per-level timing
+//! split is available via [`Comm::take_last_breakdown`]. The route is
+//! per-collective state ([`Comm::set_route`]): the exchange engine flips
+//! it per tensor group when the scheduler emits per-group
+//! [`RouteChoice`](crate::scheduler::RouteChoice)s, so small groups can
+//! ride the flat ring while large groups go hierarchical within the same
+//! step.
 
 pub mod allgather;
 pub mod bootstrap;
@@ -32,7 +37,7 @@ pub mod transport;
 pub use hierarchical::CommBreakdown;
 pub use nonblocking::{lane_scope, CommCompletion, CommHandle, CommLane, CommOutcome};
 pub use tcp::{run_tcp_group, tcp_endpoint, tcp_endpoint_with_nodes, TcpConfig, TcpTransport};
-pub use topology::{Topology, TopologySpec};
+pub use topology::{LevelShape, LevelSpec, Topology, TopologySpec, TOPOLOGY_GRAMMAR};
 pub use transport::{
     mesh, run_group, Endpoint, InProcTransport, Transport, TransportError, TransportKind,
 };
@@ -44,17 +49,20 @@ pub enum CommRoute {
     /// Single-level ring over all ranks (the historical path).
     #[default]
     Flat,
-    /// Two-level exchange over the attached [`Topology`]
-    /// (see [`hierarchical`]).
+    /// Hierarchical exchange over the attached [`Topology`], recursing
+    /// over however many levels it has (see [`hierarchical`]). The name
+    /// predates N-level topologies; "two-level" is the common case.
     TwoLevel,
 }
 
 /// Communicator: an endpoint plus a per-group op counter and the topology
-/// the collectives route over.
+/// the collectives route over. The topology is shared (`Arc`) so the
+/// hierarchical collectives can hold it across their mutable endpoint
+/// use without deep-copying the fan-stage structure per call.
 pub struct Comm {
     pub ep: Endpoint,
     seq: u64,
-    topology: Topology,
+    topology: std::sync::Arc<Topology>,
     route: CommRoute,
     /// Per-level timing of the most recent routed collective (set by the
     /// hierarchical path, cleared by every collective).
@@ -67,7 +75,7 @@ impl Comm {
         Self {
             ep,
             seq: 0,
-            topology: Topology::flat(world),
+            topology: std::sync::Arc::new(Topology::flat(world)),
             route: CommRoute::Flat,
             last_breakdown: None,
         }
@@ -109,7 +117,7 @@ impl Comm {
         } else {
             CommRoute::TwoLevel
         };
-        self.topology = topology;
+        self.topology = std::sync::Arc::new(topology);
         Ok(())
     }
 
@@ -117,11 +125,38 @@ impl Comm {
         &self.topology
     }
 
-    /// Override the route (e.g. run the flat ring over a node-labelled
-    /// topology to compare inter-node byte counts against the two-level
-    /// exchange — what `benches/hierarchy.rs` does).
+    /// Cheap shared handle on the attached topology — what the
+    /// hierarchical collectives hold while they drive the endpoint.
+    pub(crate) fn topology_shared(&self) -> std::sync::Arc<Topology> {
+        std::sync::Arc::clone(&self.topology)
+    }
+
+    /// Override the route: run the flat ring over a node-labelled topology
+    /// (to compare inter-node byte counts against the hierarchical
+    /// exchange, as `benches/hierarchy.rs` does), or flip routes per
+    /// tensor group (the exchange engine, following the scheduler's
+    /// per-group [`RouteChoice`](crate::scheduler::RouteChoice)s). On a
+    /// trivial topology the hierarchical route is meaningless, so it
+    /// clamps to `Flat` — deterministically on every rank, which keeps the
+    /// SPMD tag sequences aligned.
     pub fn set_route(&mut self, route: CommRoute) {
-        self.route = route;
+        self.route = if self.topology.is_trivial() {
+            CommRoute::Flat
+        } else {
+            route
+        };
+    }
+
+    /// Restore the topology-default route (`TwoLevel` for a non-trivial
+    /// topology, `Flat` otherwise) — what the exchange engine calls after
+    /// a per-group-routed exchange so collectives outside the engine see a
+    /// canonical route regardless of which group ran last.
+    pub fn reset_route(&mut self) {
+        self.route = if self.topology.is_trivial() {
+            CommRoute::Flat
+        } else {
+            CommRoute::TwoLevel
+        };
     }
 
     pub fn route(&self) -> CommRoute {
@@ -308,6 +343,72 @@ mod tests {
                 let want = (10 * 15 + 6 * (i % 7)) as f32;
                 assert_eq!(*v, want, "elem {i}");
             }
+        }
+    }
+
+    #[test]
+    fn three_level_allgather_matches_flat_ring() {
+        // 8 ranks, 4 nodes of 2, 2 racks of 2 nodes: the recursion climbs
+        // two fan stages and rings over the two rack leaders, yet must
+        // return exactly what the flat ring returns, on every rank.
+        let results = run_comm_group(8, |c| {
+            let flat = c.allgather(vec![c.rank() as u8; c.rank() + 1]).unwrap();
+            let spec = TopologySpec::parse("nodes=4;racks=2").unwrap();
+            c.set_topology(spec.build(8).unwrap()).unwrap();
+            assert_eq!(c.route(), CommRoute::TwoLevel);
+            let hier = c.allgather(vec![c.rank() as u8; c.rank() + 1]).unwrap();
+            (flat, hier, c.take_last_breakdown())
+        });
+        for (rank, (flat, hier, breakdown)) in results.iter().enumerate() {
+            assert_eq!(flat, hier, "rank {rank}");
+            let b = breakdown.expect("hierarchical route records a breakdown");
+            assert!(b.intra_secs >= 0.0 && b.inter_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn three_level_allreduce_sums_exactly_on_integer_grads() {
+        use crate::compression::{Codec as _, CodecKind, Encoded};
+        let n = 32;
+        let results = run_comm_group(6, move |c| {
+            // world=6: uneven nodes (1+1+2+2) under 2 racks.
+            let spec = TopologySpec::parse("nodes=1+1+2+2;racks=2+2").unwrap();
+            c.set_topology(spec.build(6).unwrap()).unwrap();
+            let g: Vec<f32> = (0..n).map(|i| (c.rank() * 10 + i % 5) as f32).collect();
+            let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(0);
+            let mut codec = CodecKind::Fp32.build(n);
+            let enc = codec.encode(&g, &mut rng);
+            let mut wire = enc.bytes;
+            c.allreduce_wire(&mut wire, codec.as_ref()).unwrap();
+            let mut out = vec![0f32; n];
+            codec.decode(&Encoded { bytes: wire, n }, &mut out);
+            out
+        });
+        for r in &results {
+            for (i, v) in r.iter().enumerate() {
+                // Σ_rank (10·rank + i%5) over ranks 0..6; Σ rank = 15.
+                let want = (10 * 15 + 6 * (i % 5)) as f32;
+                assert_eq!(*v, want, "elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn set_route_clamps_to_flat_on_trivial_topologies() {
+        let results = run_comm_group(2, |c| {
+            // Default topology is flat: a hierarchical override must clamp.
+            c.set_route(CommRoute::TwoLevel);
+            let clamped = c.route();
+            c.set_topology(Topology::from_sizes(&[1, 1]).unwrap()).unwrap();
+            c.set_route(CommRoute::TwoLevel);
+            let singleton = c.route();
+            c.reset_route();
+            (clamped, singleton, c.route())
+        });
+        for (clamped, singleton, reset) in results {
+            assert_eq!(clamped, CommRoute::Flat);
+            assert_eq!(singleton, CommRoute::Flat);
+            assert_eq!(reset, CommRoute::Flat);
         }
     }
 

@@ -23,7 +23,7 @@
 
 use super::hierarchical::CommBreakdown;
 use super::transport::TransportError;
-use super::Comm;
+use super::{Comm, CommRoute};
 use crate::compression::{CodecKind, Collective};
 use crate::util::stats::Stopwatch;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -65,6 +65,10 @@ enum Op {
 
 struct Job {
     op: Op,
+    /// Route to apply on the lane's communicator before this collective
+    /// (`None` keeps whatever route is already set) — how the exchange
+    /// engine runs per-group [`CommRoute`]s through the comm lane.
+    route: Option<CommRoute>,
     done: Sender<Result<CommCompletion, TransportError>>,
 }
 
@@ -97,24 +101,47 @@ impl CommLane {
     /// its own instance and the caller's codec state is never shared across
     /// threads.
     pub fn start_allreduce(&self, wire: Vec<u8>, kind: CodecKind, n: usize) -> CommHandle {
+        self.start_allreduce_routed(wire, kind, n, None)
+    }
+
+    /// [`CommLane::start_allreduce`] with an explicit per-collective
+    /// [`CommRoute`] applied on the lane's communicator first (`None`
+    /// keeps the current route).
+    pub fn start_allreduce_routed(
+        &self,
+        wire: Vec<u8>,
+        kind: CodecKind,
+        n: usize,
+        route: Option<CommRoute>,
+    ) -> CommHandle {
         assert_eq!(
             kind.collective(),
             Collective::AllReduce,
             "{}: start_allreduce needs an allreduce codec",
             kind.name()
         );
-        self.submit(Op::AllReduce { wire, kind, n })
+        self.submit(Op::AllReduce { wire, kind, n }, route)
     }
 
     /// Begin a variable-size allgather of this rank's payload.
     pub fn start_allgather(&self, wire: Vec<u8>) -> CommHandle {
-        self.submit(Op::AllGather { wire })
+        self.start_allgather_routed(wire, None)
     }
 
-    fn submit(&self, op: Op) -> CommHandle {
+    /// [`CommLane::start_allgather`] with an explicit per-collective
+    /// [`CommRoute`] (`None` keeps the current route).
+    pub fn start_allgather_routed(
+        &self,
+        wire: Vec<u8>,
+        route: Option<CommRoute>,
+    ) -> CommHandle {
+        self.submit(Op::AllGather { wire }, route)
+    }
+
+    fn submit(&self, op: Op, route: Option<CommRoute>) -> CommHandle {
         let (done, rx) = channel();
         self.jobs
-            .send(Job { op, done })
+            .send(Job { op, route, done })
             .expect("comm lane is gone (worker thread died)");
         CommHandle { rx }
     }
@@ -132,6 +159,9 @@ pub fn lane_scope<R>(comm: &mut Comm, f: impl FnOnce(&CommLane) -> R) -> (R, f64
         let worker = s.spawn(move || {
             let mut busy = 0.0f64;
             while let Ok(job) = jrx.recv() {
+                if let Some(route) = job.route {
+                    comm.set_route(route);
+                }
                 let inter_before = comm.inter_node_bytes();
                 let sw = Stopwatch::start();
                 let result = match job.op {
@@ -274,7 +304,11 @@ mod tests {
         // Emulate a lane that died before running the op: the job (and its
         // completion sender) is dropped without a reply.
         lane.jobs
-            .send(Job { op: Op::AllGather { wire: vec![] }, done })
+            .send(Job {
+                op: Op::AllGather { wire: vec![] },
+                route: None,
+                done,
+            })
             .unwrap();
         drop(jrx);
         drop(lane);

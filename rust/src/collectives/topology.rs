@@ -1,36 +1,73 @@
-//! Cluster topology: which ranks share a node, and who leads each node.
+//! Cluster topology: which ranks share a node (and which nodes share a
+//! rack, and so on), plus who leads each level.
 //!
 //! The paper's testbed is a single 8-GPU box, so its collectives treat all
 //! ranks as one flat NVLink-or-PCIe mesh. Multi-node deployments are not
 //! flat: intra-node links (NVLink/shared memory) are orders of magnitude
-//! faster than the inter-node fabric (TCP/IB), and a flat ring drags every
-//! byte across the slow level `2·(w−1)/w` times. [`Topology`] is the
-//! rank→node mapping the two-level collectives in
-//! [`hierarchical`](super::hierarchical) exchange over: intra-node traffic
-//! stays inside a node, and only the **node leaders** (lowest rank of each
-//! node, deterministic on every rank without election traffic) talk across
-//! the inter-node level.
+//! faster than the inter-node fabric (TCP/IB), which is itself faster than
+//! a cross-rack or cross-site link. [`Topology`] is the rank→node mapping —
+//! optionally extended by further grouping levels (racks, pods, …) — that
+//! the hierarchical collectives in [`hierarchical`](super::hierarchical)
+//! exchange over: traffic stays inside a level whenever it can, and only
+//! the **leaders** of each level (lowest covered rank, deterministic on
+//! every rank without election traffic) talk across the next level up.
 //!
 //! [`TopologySpec`] is the config/CLI-facing description
-//! (`--topology flat|nodes=G|nodes=a+b+…`); [`TopologySpec::build`] turns
-//! it into a concrete [`Topology`] for a world size. Ranks are assigned to
-//! nodes in contiguous blocks, which matches how `mergecomp launch` (and
-//! any sane multi-node launcher) numbers ranks: node 0 hosts ranks
-//! `0..s0`, node 1 hosts `s0..s0+s1`, and so on.
+//! (`--topology flat|nodes=G|nodes=a+b+…`, extendable level by level as
+//! `nodes=…;racks=…;pods=…`); [`TopologySpec::build`] turns it into a
+//! concrete [`Topology`] for a world size. Ranks are assigned to nodes in
+//! contiguous blocks, and nodes to racks in contiguous blocks, which
+//! matches how `mergecomp launch` (and any sane multi-node launcher)
+//! numbers ranks: node 0 hosts ranks `0..s0`, node 1 hosts `s0..s0+s1`,
+//! and so on.
 
 use std::fmt;
 
-/// Rank→node mapping for one communicator world.
+/// The `--topology` grammar, echoed by every parse/build error so a typo
+/// in a launch script fails with the accepted syntax in hand.
+pub const TOPOLOGY_GRAMMAR: &str =
+    "flat | nodes=G | nodes=a+b+... [;LEVEL=G | ;LEVEL=a+b+...]* \
+     (LEVEL is a name like 'racks'; each level groups the previous one)";
+
+/// Rank→node mapping for one communicator world, optionally extended by
+/// upper grouping levels (racks over nodes, pods over racks, …).
 ///
-/// Invariants (enforced by every constructor): node ids are dense
-/// (`0..num_nodes`), every node is non-empty, and each node's member list
-/// is sorted ascending — the leader of a node is its lowest rank.
+/// Invariants (enforced by every constructor): unit ids are dense at every
+/// level (`0..count`), every unit is non-empty, and each unit's member
+/// list is sorted ascending — the leader of a unit is its lowest covered
+/// rank.
+///
+/// ```
+/// use mergecomp::collectives::Topology;
+/// let t = Topology::from_sizes(&[4, 2]).unwrap();
+/// assert_eq!(t.world(), 6);
+/// assert_eq!(t.leaders(), vec![0, 4]);
+/// assert!(t.is_leader(4) && !t.is_leader(5));
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Topology {
     /// `node_of[rank]` = node id.
     node_of: Vec<usize>,
     /// `nodes[n]` = sorted ranks on node `n`.
     nodes: Vec<Vec<usize>>,
+    /// Upper grouping levels: `upper[0]` groups node ids into racks,
+    /// `upper[1]` groups rack ids into pods, … Each entry is a list of
+    /// groups, each a sorted list of lower-level unit ids. Empty for the
+    /// classic (at most two-level) topology.
+    upper: Vec<Vec<Vec<usize>>>,
+    /// Names of the upper levels ("racks", "pods", …), parallel to `upper`.
+    upper_names: Vec<String>,
+    // -- caches (pure functions of the fields above, rebuilt by every
+    // -- constructor and by push_level; borrowed by the per-group
+    // -- hot path in `hierarchical`) ------------------------------------
+    /// Fan stages: `stages[k]` is the participant groups of stage `k`.
+    stages: Vec<Vec<Vec<usize>>>,
+    /// Members of the top ring (leaders of the topmost level's units).
+    ring: Vec<usize>,
+    /// Held covers per stage: `held[k]` lists `(participant, covered
+    /// ranks)` for stage `k`; `held[num_stages()]` holds the ring
+    /// members' full subtrees.
+    held: Vec<Vec<(usize, Vec<usize>)>>,
 }
 
 impl Topology {
@@ -39,10 +76,52 @@ impl Topology {
     /// hierarchy" and route flat.
     pub fn flat(world: usize) -> Topology {
         assert!(world >= 1);
-        Topology {
-            node_of: vec![0; world],
-            nodes: vec![(0..world).collect()],
+        Topology::assemble(
+            vec![0; world],
+            vec![(0..world).collect()],
+            Vec::new(),
+            Vec::new(),
+        )
+    }
+
+    /// Build from validated fields and populate the derived caches.
+    fn assemble(
+        node_of: Vec<usize>,
+        nodes: Vec<Vec<usize>>,
+        upper: Vec<Vec<Vec<usize>>>,
+        upper_names: Vec<String>,
+    ) -> Topology {
+        let mut t = Topology {
+            node_of,
+            nodes,
+            upper,
+            upper_names,
+            stages: Vec::new(),
+            ring: Vec::new(),
+            held: Vec::new(),
+        };
+        t.rebuild_cache();
+        t
+    }
+
+    /// Recompute the fan-stage / ring / cover caches from the core
+    /// fields.
+    fn rebuild_cache(&mut self) {
+        self.stages = self.compute_fan_stages();
+        let top = self.num_stages() - 1;
+        self.ring = (0..self.units_at(top))
+            .map(|u| self.unit_leader(top, u))
+            .collect();
+        let nstages = self.stages.len();
+        let mut held = Vec::with_capacity(nstages + 1);
+        held.push((0..self.world()).map(|r| (r, vec![r])).collect());
+        for k in 1..=nstages {
+            let level = (0..self.units_at(k - 1))
+                .map(|u| (self.unit_leader(k - 1, u), self.cover(k - 1, u)))
+                .collect();
+            held.push(level);
         }
+        self.held = held;
     }
 
     /// `num_nodes` contiguous blocks of near-equal size (the first
@@ -54,12 +133,7 @@ impl Topology {
             num_nodes <= world,
             "{num_nodes} nodes cannot host only {world} ranks"
         );
-        let base = world / num_nodes;
-        let rem = world % num_nodes;
-        let sizes: Vec<usize> = (0..num_nodes)
-            .map(|n| base + usize::from(n < rem))
-            .collect();
-        Topology::from_sizes(&sizes)
+        Topology::from_sizes(&balanced_sizes(world, num_nodes))
     }
 
     /// Contiguous blocks of explicit sizes (`--topology nodes=4+2` for a
@@ -79,7 +153,7 @@ impl Topology {
             node_of.extend((0..s).map(|_| n));
             next += s;
         }
-        Ok(Topology { node_of, nodes })
+        Ok(Topology::assemble(node_of, nodes, Vec::new(), Vec::new()))
     }
 
     /// Arbitrary (not necessarily contiguous) mapping: `node_of[rank]` =
@@ -94,7 +168,41 @@ impl Topology {
         for (n, members) in nodes.iter().enumerate() {
             anyhow::ensure!(!members.is_empty(), "node {n} has no ranks (ids must be dense)");
         }
-        Ok(Topology { node_of, nodes })
+        Ok(Topology::assemble(node_of, nodes, Vec::new(), Vec::new()))
+    }
+
+    /// Stack one more grouping level on top of the current topmost one:
+    /// `groups[g]` lists the lower-level unit ids (nodes for the first
+    /// call, racks for the second, …) forming upper unit `g`. Ids must be
+    /// dense, each used exactly once.
+    pub fn push_level(&mut self, name: &str, groups: Vec<Vec<usize>>) -> anyhow::Result<()> {
+        let units_below = self.units_at(self.upper.len());
+        anyhow::ensure!(!groups.is_empty(), "level '{name}' needs at least one group");
+        let mut seen = vec![false; units_below];
+        for (g, members) in groups.iter().enumerate() {
+            anyhow::ensure!(!members.is_empty(), "level '{name}' group {g} is empty");
+            for &u in members {
+                anyhow::ensure!(
+                    u < units_below,
+                    "level '{name}' group {g} references unit {u}, but the level \
+                     below has only {units_below} units"
+                );
+                anyhow::ensure!(!seen[u], "level '{name}': unit {u} appears twice");
+                seen[u] = true;
+            }
+        }
+        anyhow::ensure!(
+            seen.iter().all(|&s| s),
+            "level '{name}' must cover every unit of the level below"
+        );
+        let mut groups = groups;
+        for members in groups.iter_mut() {
+            members.sort_unstable();
+        }
+        self.upper.push(groups);
+        self.upper_names.push(name.to_string());
+        self.rebuild_cache();
+        Ok(())
     }
 
     pub fn world(&self) -> usize {
@@ -103,6 +211,23 @@ impl Topology {
 
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Number of fan-in stages a hierarchical exchange runs: 1 (nodes)
+    /// plus one per upper level.
+    pub fn num_stages(&self) -> usize {
+        1 + self.upper.len()
+    }
+
+    /// Number of units at hierarchy level `level` (0 = nodes, 1 = the
+    /// first upper level, …; `level == num_stages()` would be the single
+    /// implicit root).
+    fn units_at(&self, level: usize) -> usize {
+        if level == 0 {
+            self.nodes.len()
+        } else {
+            self.upper[level - 1].len()
+        }
     }
 
     /// Node hosting `rank`.
@@ -139,30 +264,200 @@ impl Topology {
         self.node_of[a] == self.node_of[b]
     }
 
+    /// All ranks covered by unit `u` at hierarchy level `level` (level 0 =
+    /// nodes), sorted ascending.
+    pub fn cover(&self, level: usize, u: usize) -> Vec<usize> {
+        if level == 0 {
+            return self.nodes[u].clone();
+        }
+        let mut out = Vec::new();
+        for &lower in &self.upper[level - 1][u] {
+            out.extend(self.cover(level - 1, lower));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// The leader (lowest covered rank) of unit `u` at `level`. The
+    /// minimum is taken over the lower units' *leader ranks*, not their
+    /// unit ids — the two differ when `from_node_of` built a
+    /// non-contiguous mapping.
+    pub fn unit_leader(&self, level: usize, u: usize) -> usize {
+        if level == 0 {
+            self.nodes[u][0]
+        } else {
+            self.upper[level - 1][u]
+                .iter()
+                .map(|&l| self.unit_leader(level - 1, l))
+                .min()
+                .expect("every unit is non-empty")
+        }
+    }
+
+    /// The fan-in stages of a hierarchical exchange, bottom-up. Stage `k`
+    /// is a list of participant groups: at stage 0 each group is a node's
+    /// full member list; at stage `k ≥ 1` each group holds the leaders of
+    /// the level-`(k−1)` units forming one level-`k` unit. The leader of a
+    /// group is always its first (lowest) rank. Served from the prebuilt
+    /// cache.
+    pub fn fan_stages(&self) -> &[Vec<Vec<usize>>] {
+        &self.stages
+    }
+
+    fn compute_fan_stages(&self) -> Vec<Vec<Vec<usize>>> {
+        let mut stages = vec![self.nodes.clone()];
+        for (k, level) in self.upper.iter().enumerate() {
+            let groups = level
+                .iter()
+                .map(|units| {
+                    let mut g: Vec<usize> =
+                        units.iter().map(|&u| self.unit_leader(k, u)).collect();
+                    g.sort_unstable();
+                    g
+                })
+                .collect();
+            stages.push(groups);
+        }
+        stages
+    }
+
+    /// Leaders of the topmost-level units, in unit order — the members of
+    /// the hierarchical exchange's top ring. Served from the prebuilt
+    /// cache.
+    pub fn top_leaders(&self) -> &[usize] {
+        &self.ring
+    }
+
+    /// The set of ranks whose payloads a participant `p` of fan stage
+    /// `stage` already holds when that stage begins: only itself at stage
+    /// 0; the cover of the level-`(stage−1)` unit it leads otherwise.
+    /// `stage == num_stages()` gives a top leader's full subtree (what it
+    /// contributes to the top ring). Served from the prebuilt cache — the
+    /// hierarchical collectives call this per peer per stage.
+    pub fn held_cover(&self, stage: usize, p: usize) -> &[usize] {
+        self.held[stage]
+            .iter()
+            .find(|(participant, _)| *participant == p)
+            .map(|(_, cover)| cover.as_slice())
+            .unwrap_or_else(|| panic!("rank {p} holds no cover at stage {stage}"))
+    }
+
     /// Largest node size (the fan-in the leader stages serialize over).
     pub fn max_node_size(&self) -> usize {
         self.nodes.iter().map(Vec::len).max().unwrap_or(1)
     }
 
-    /// True when there is no real hierarchy: a single node, or one rank per
-    /// node. Either way a two-level exchange degenerates to the flat ring,
-    /// so `Comm` routes flat.
+    /// True when there is no real hierarchy: a single node, or one rank
+    /// per node, with no upper levels. Either way a hierarchical exchange
+    /// degenerates to the flat ring, so `Comm` routes flat. An explicit
+    /// upper level is always honored (grouping singleton nodes into racks
+    /// is a real two-stage hierarchy).
     pub fn is_trivial(&self) -> bool {
-        self.num_nodes() <= 1 || self.num_nodes() == self.world()
+        if self.world() == 1 {
+            return true;
+        }
+        self.upper.is_empty() && (self.num_nodes() <= 1 || self.num_nodes() == self.world())
     }
 
     /// The node label this rank advertises during the TCP bootstrap
     /// (carried in the rendezvous `TABLE`, cross-checked by the trainer).
+    /// Encodes the full level chain (`n1`, or `n1.racks0.pods0` for
+    /// deeper hierarchies) so ranks launched with mismatched `--topology`
+    /// specs disagree at *any* level and fail at bootstrap.
     pub fn node_label(&self, rank: usize) -> String {
-        format!("n{}", self.node_of[rank])
+        let mut unit = self.node_of[rank];
+        let mut label = format!("n{unit}");
+        for (k, level) in self.upper.iter().enumerate() {
+            let g = level
+                .iter()
+                .position(|units| units.contains(&unit))
+                .expect("upper levels cover every unit");
+            label.push_str(&format!(".{}{}", self.upper_names[k], g));
+            unit = g;
+        }
+        label
     }
 }
 
 impl fmt::Display for Topology {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         let sizes: Vec<String> = self.nodes.iter().map(|m| m.len().to_string()).collect();
-        write!(f, "{} ranks over {} nodes ({})", self.world(), self.num_nodes(), sizes.join("+"))
+        write!(
+            f,
+            "{} ranks over {} nodes ({})",
+            self.world(),
+            self.num_nodes(),
+            sizes.join("+")
+        )?;
+        for (k, level) in self.upper.iter().enumerate() {
+            let sizes: Vec<String> = level.iter().map(|g| g.len().to_string()).collect();
+            write!(f, ", {}={}", self.upper_names[k], sizes.join("+"))?;
+        }
+        Ok(())
     }
+}
+
+/// Near-even contiguous split of `count` units into `groups` groups (the
+/// first `count % groups` groups get one extra unit).
+fn balanced_sizes(count: usize, groups: usize) -> Vec<usize> {
+    let base = count / groups;
+    let rem = count % groups;
+    (0..groups).map(|g| base + usize::from(g < rem)).collect()
+}
+
+/// One level's shape in a [`TopologySpec`]: a group count (near-even
+/// contiguous split) or explicit group sizes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LevelShape {
+    /// `G` near-even contiguous groups.
+    Count(usize),
+    /// Explicit contiguous group sizes (must sum to the unit count of the
+    /// level below).
+    Sizes(Vec<usize>),
+}
+
+impl LevelShape {
+    fn name(&self) -> String {
+        match self {
+            LevelShape::Count(g) => g.to_string(),
+            LevelShape::Sizes(sizes) => {
+                let parts: Vec<String> = sizes.iter().map(|s| s.to_string()).collect();
+                parts.join("+")
+            }
+        }
+    }
+
+    /// Concrete group sizes once the unit count of the level below is
+    /// known.
+    fn resolve(&self, units: usize, level: &str, spec: &str) -> anyhow::Result<Vec<usize>> {
+        match self {
+            LevelShape::Count(g) => {
+                anyhow::ensure!(
+                    *g >= 1 && *g <= units,
+                    "topology '{spec}': level '{level}' asks for {g} groups of {units} \
+                     units; expected {TOPOLOGY_GRAMMAR}"
+                );
+                Ok(balanced_sizes(units, *g))
+            }
+            LevelShape::Sizes(sizes) => {
+                let sum: usize = sizes.iter().sum();
+                anyhow::ensure!(
+                    sum == units,
+                    "topology '{spec}': level '{level}' sizes sum to {sum} but the level \
+                     below has {units} units; expected {TOPOLOGY_GRAMMAR}"
+                );
+                Ok(sizes.clone())
+            }
+        }
+    }
+}
+
+/// One named level of an N-level [`TopologySpec`] (`racks=2`,
+/// `pods=1+2`, …).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LevelSpec {
+    pub name: String,
+    pub shape: LevelShape,
 }
 
 /// Config/CLI-facing topology description; [`TopologySpec::build`] turns it
@@ -176,37 +471,94 @@ pub enum TopologySpec {
     Nodes(usize),
     /// `nodes=a+b+…`: explicit contiguous node sizes (must sum to world).
     Sized(Vec<usize>),
+    /// `nodes=…;racks=…;…`: an explicit N-level hierarchy. The first
+    /// level groups ranks into nodes; each subsequent level groups the
+    /// previous level's units into named upper units (racks, pods, …).
+    Levels(Vec<LevelSpec>),
 }
 
 impl TopologySpec {
-    /// Parse `flat`, `nodes=G`, or `nodes=a+b+…` (the `--topology` flag).
+    /// Parse the `--topology` flag: `flat`, `nodes=G`, `nodes=a+b+…`, or
+    /// the N-level form `nodes=…;racks=…;…`. Errors echo the offending
+    /// input and the accepted grammar.
     pub fn parse(spec: &str) -> anyhow::Result<TopologySpec> {
         let s = spec.trim().to_ascii_lowercase();
         if s == "flat" {
             return Ok(TopologySpec::Flat);
         }
-        let Some(rest) = s.strip_prefix("nodes=") else {
-            anyhow::bail!("unknown topology '{spec}' (flat|nodes=G|nodes=a+b+...)");
-        };
-        if rest.contains('+') {
-            let sizes: Vec<usize> = rest
+        let segments: Vec<&str> = s.split(';').collect();
+        let mut levels = Vec::with_capacity(segments.len());
+        for (i, seg) in segments.iter().enumerate() {
+            let Some((name, shape)) = seg.split_once('=') else {
+                anyhow::bail!(
+                    "unknown topology '{spec}' (segment '{seg}' has no '='); \
+                     expected {TOPOLOGY_GRAMMAR}"
+                );
+            };
+            let name = name.trim();
+            anyhow::ensure!(
+                !name.is_empty()
+                    && name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+                "topology '{spec}': bad level name '{name}'; expected {TOPOLOGY_GRAMMAR}"
+            );
+            if i == 0 {
+                anyhow::ensure!(
+                    name == "nodes",
+                    "topology '{spec}': the first level must be 'nodes', got '{name}'; \
+                     expected {TOPOLOGY_GRAMMAR}"
+                );
+            }
+            let shape = Self::parse_shape(shape, name, spec)?;
+            levels.push(LevelSpec {
+                name: name.to_string(),
+                shape,
+            });
+        }
+        // Single-segment specs keep the historical variants so existing
+        // configs and matches keep working unchanged.
+        if levels.len() == 1 {
+            return Ok(match levels.remove(0).shape {
+                LevelShape::Count(g) => TopologySpec::Nodes(g),
+                LevelShape::Sizes(sizes) => TopologySpec::Sized(sizes),
+            });
+        }
+        Ok(TopologySpec::Levels(levels))
+    }
+
+    fn parse_shape(shape: &str, level: &str, spec: &str) -> anyhow::Result<LevelShape> {
+        if shape.contains('+') {
+            let sizes: Vec<usize> = shape
                 .split('+')
                 .map(|p| {
-                    p.parse::<usize>()
-                        .map_err(|_| anyhow::anyhow!("bad node size '{p}' in topology '{spec}'"))
+                    p.parse::<usize>().map_err(|_| {
+                        anyhow::anyhow!(
+                            "topology '{spec}': bad size '{p}' in level '{level}'; \
+                             expected {TOPOLOGY_GRAMMAR}"
+                        )
+                    })
                 })
                 .collect::<anyhow::Result<_>>()?;
             anyhow::ensure!(
                 sizes.iter().all(|&x| x >= 1),
-                "node sizes must be >= 1 in topology '{spec}'"
+                "topology '{spec}': level '{level}' sizes must be >= 1; \
+                 expected {TOPOLOGY_GRAMMAR}"
             );
-            Ok(TopologySpec::Sized(sizes))
+            Ok(LevelShape::Sizes(sizes))
         } else {
-            let g: usize = rest
-                .parse()
-                .map_err(|_| anyhow::anyhow!("bad node count in topology '{spec}'"))?;
-            anyhow::ensure!(g >= 1, "topology needs at least one node");
-            Ok(TopologySpec::Nodes(g))
+            let g: usize = shape.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "topology '{spec}': bad group count '{shape}' in level '{level}'; \
+                     expected {TOPOLOGY_GRAMMAR}"
+                )
+            })?;
+            anyhow::ensure!(
+                g >= 1,
+                "topology '{spec}': level '{level}' needs at least one group; \
+                 expected {TOPOLOGY_GRAMMAR}"
+            );
+            Ok(LevelShape::Count(g))
         }
     }
 
@@ -218,6 +570,13 @@ impl TopologySpec {
             TopologySpec::Sized(sizes) => {
                 let parts: Vec<String> = sizes.iter().map(|s| s.to_string()).collect();
                 format!("nodes={}", parts.join("+"))
+            }
+            TopologySpec::Levels(levels) => {
+                let parts: Vec<String> = levels
+                    .iter()
+                    .map(|l| format!("{}={}", l.name, l.shape.name()))
+                    .collect();
+                parts.join(";")
             }
         }
     }
@@ -231,10 +590,29 @@ impl TopologySpec {
                 let sum: usize = sizes.iter().sum();
                 anyhow::ensure!(
                     sum == world,
-                    "topology '{}' hosts {sum} ranks but the world is {world}",
+                    "topology '{}' hosts {sum} ranks but the world is {world}; \
+                     expected {TOPOLOGY_GRAMMAR}",
                     self.name()
                 );
                 Topology::from_sizes(sizes)
+            }
+            TopologySpec::Levels(levels) => {
+                let spec = self.name();
+                let node_sizes = levels[0].shape.resolve(world, "nodes", &spec)?;
+                let mut topo = Topology::from_sizes(&node_sizes)?;
+                let mut units = node_sizes.len();
+                for level in &levels[1..] {
+                    let group_sizes = level.shape.resolve(units, &level.name, &spec)?;
+                    let mut groups = Vec::with_capacity(group_sizes.len());
+                    let mut next = 0;
+                    for &s in &group_sizes {
+                        groups.push((next..next + s).collect());
+                        next += s;
+                    }
+                    topo.push_level(&level.name, groups)?;
+                    units = group_sizes.len();
+                }
+                Ok(topo)
             }
         }
     }
@@ -252,6 +630,8 @@ mod tests {
         assert!(t.is_trivial());
         assert_eq!(t.leaders(), vec![0]);
         assert!(t.same_node(0, 3));
+        assert_eq!(t.num_stages(), 1);
+        assert_eq!(t.top_leaders(), vec![0]);
     }
 
     #[test]
@@ -278,6 +658,7 @@ mod tests {
         assert!(!t.is_leader(5));
         assert_eq!(t.max_node_size(), 4);
         assert_eq!(t.node_label(5), "n1");
+        assert_eq!(t.top_leaders(), vec![0, 4]);
     }
 
     #[test]
@@ -312,6 +693,19 @@ mod tests {
             ("nodes=2", TopologySpec::Nodes(2)),
             ("nodes=4+2", TopologySpec::Sized(vec![4, 2])),
             ("nodes=1+2+1", TopologySpec::Sized(vec![1, 2, 1])),
+            (
+                "nodes=4+2;racks=2",
+                TopologySpec::Levels(vec![
+                    LevelSpec {
+                        name: "nodes".to_string(),
+                        shape: LevelShape::Sizes(vec![4, 2]),
+                    },
+                    LevelSpec {
+                        name: "racks".to_string(),
+                        shape: LevelShape::Count(2),
+                    },
+                ]),
+            ),
         ] {
             let parsed = TopologySpec::parse(text).unwrap();
             assert_eq!(parsed, spec);
@@ -326,6 +720,28 @@ mod tests {
     }
 
     #[test]
+    fn parse_errors_echo_spec_and_grammar() {
+        // The satellite bugfix: a bad spec must name itself AND the
+        // accepted grammar in the error, at parse and at build time.
+        for bad in ["star", "nodes=4+x", "racks=2;nodes=4", "nodes=2;=3", "nodes=2;racks=zz"] {
+            let err = TopologySpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains(bad), "error '{err}' must echo '{bad}'");
+            assert!(
+                err.contains("nodes=a+b+..."),
+                "error '{err}' must state the grammar"
+            );
+        }
+        let err = TopologySpec::Sized(vec![4, 2]).build(7).unwrap_err().to_string();
+        assert!(err.contains("nodes=4+2") && err.contains("nodes=a+b+..."));
+        let err = TopologySpec::parse("nodes=4+2;racks=3")
+            .unwrap()
+            .build(6)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("racks") && err.contains("nodes=a+b+..."));
+    }
+
+    #[test]
     fn spec_build_validates_world() {
         let t = TopologySpec::parse("nodes=4+2").unwrap().build(6).unwrap();
         assert_eq!(t.num_nodes(), 2);
@@ -337,8 +753,77 @@ mod tests {
     }
 
     #[test]
+    fn three_level_spec_builds_leader_chain() {
+        // 8 ranks, 4 nodes of 2, 2 racks of 2 nodes.
+        let t = TopologySpec::parse("nodes=4;racks=2").unwrap().build(8).unwrap();
+        assert_eq!(t.num_nodes(), 4);
+        assert_eq!(t.num_stages(), 2);
+        assert!(!t.is_trivial());
+        // Stage 0: the nodes; stage 1: node leaders grouped by rack.
+        let stages = t.fan_stages();
+        assert_eq!(stages[0], vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]]);
+        assert_eq!(stages[1], vec![vec![0, 2], vec![4, 6]]);
+        assert_eq!(t.top_leaders(), vec![0, 4]);
+        assert_eq!(t.cover(1, 0), vec![0, 1, 2, 3]);
+        assert_eq!(t.cover(1, 1), vec![4, 5, 6, 7]);
+        assert_eq!(t.unit_leader(1, 1), 4);
+        // Labels carry the whole chain, so a rank launched with a
+        // different rack split disagrees at bootstrap.
+        assert_eq!(t.node_label(3), "n1.racks0");
+        assert_eq!(t.node_label(6), "n3.racks1");
+    }
+
+    #[test]
+    fn uneven_three_level_builds() {
+        // world=6: nodes 1+1+2+2, racks 2+2 (first two nodes vs last two).
+        let t = TopologySpec::parse("nodes=1+1+2+2;racks=2+2")
+            .unwrap()
+            .build(6)
+            .unwrap();
+        let stages = t.fan_stages();
+        assert_eq!(stages[0], vec![vec![0], vec![1], vec![2, 3], vec![4, 5]]);
+        assert_eq!(stages[1], vec![vec![0, 1], vec![2, 4]]);
+        assert_eq!(t.top_leaders(), vec![0, 2]);
+        // Singleton nodes under explicit racks are NOT trivial: the rack
+        // stage is a real hierarchy.
+        let t = TopologySpec::parse("nodes=6;racks=2").unwrap().build(6).unwrap();
+        assert!(!t.is_trivial());
+        assert_eq!(t.fan_stages()[1], vec![vec![0, 1, 2], vec![3, 4, 5]]);
+    }
+
+    #[test]
+    fn non_contiguous_nodes_elect_leaders_by_rank_not_unit_id() {
+        // node0 = {1, 3}, node1 = {0, 2}: node ids and leader ranks
+        // disagree. Racks over them must elect by lowest covered RANK.
+        let mut t = Topology::from_node_of(vec![1, 0, 1, 0]).unwrap();
+        assert_eq!(t.leaders(), vec![1, 0]);
+        t.push_level("racks", vec![vec![0, 1]]).unwrap();
+        assert_eq!(t.unit_leader(1, 0), 0, "leader is rank 0, not node 0's leader");
+        assert_eq!(t.top_leaders(), vec![0]);
+        // The fan stage and the cached covers agree with that election.
+        let stages = t.fan_stages();
+        assert_eq!(stages[1], vec![vec![0, 1]]);
+        assert_eq!(t.held_cover(2, 0), &[0, 1, 2, 3]);
+        assert_eq!(t.held_cover(1, 0), &[0, 2]);
+        assert_eq!(t.held_cover(1, 1), &[1, 3]);
+    }
+
+    #[test]
+    fn push_level_validates_coverage() {
+        let mut t = Topology::from_sizes(&[2, 2]).unwrap();
+        assert!(t.push_level("racks", vec![vec![0], vec![0]]).is_err());
+        assert!(t.push_level("racks", vec![vec![0]]).is_err());
+        assert!(t.push_level("racks", vec![vec![0, 2]]).is_err());
+        assert!(t.push_level("racks", vec![vec![1, 0]]).is_ok());
+        assert_eq!(t.num_stages(), 2);
+        assert_eq!(t.top_leaders(), vec![0]);
+    }
+
+    #[test]
     fn display_shows_shape() {
         let t = Topology::from_sizes(&[4, 2]).unwrap();
         assert_eq!(t.to_string(), "6 ranks over 2 nodes (4+2)");
+        let t = TopologySpec::parse("nodes=4;racks=2").unwrap().build(8).unwrap();
+        assert_eq!(t.to_string(), "8 ranks over 4 nodes (2+2+2+2), racks=2+2");
     }
 }

@@ -4,6 +4,7 @@ use super::{ScheduleSpec, SchedulingMode};
 use crate::collectives::{TopologySpec, TransportKind};
 use crate::compression::CodecKind;
 use crate::coordinator::PipelineMode;
+use crate::scheduler::RouteMode;
 use crate::util::cli::Args;
 use crate::util::json::Value;
 
@@ -22,6 +23,12 @@ pub struct TrainConfig {
     /// (intra-node / inter-node) exchange; every rank must be launched
     /// with the same value (the TCP bootstrap cross-checks node labels).
     pub topology: TopologySpec,
+    /// Collective-route policy on a non-flat topology
+    /// (`--route auto|flat|hierarchical`). `Auto` lets Algorithm 2 pick
+    /// flat vs hierarchical per tensor group from the fitted per-level
+    /// costs (online scheduling only); the forced modes pin every group.
+    /// Ignored under `--topology flat`.
+    pub route: RouteMode,
     /// This process's rank (TCP transport only; inproc spawns all ranks).
     pub rank: usize,
     /// Rendezvous address: rank 0 listens, every other rank dials.
@@ -79,6 +86,7 @@ impl Default for TrainConfig {
             workers: 2,
             transport: TransportKind::InProc,
             topology: TopologySpec::Flat,
+            route: RouteMode::Auto,
             rank: 0,
             rendezvous: "127.0.0.1:29500".to_string(),
             advertise_host: "127.0.0.1".to_string(),
@@ -113,6 +121,7 @@ impl TrainConfig {
             workers: v.usize_or("workers", d.workers),
             transport: TransportKind::from_name(v.str_or("transport", d.transport.name()))?,
             topology: TopologySpec::parse(v.str_or("topology", &d.topology.name()))?,
+            route: RouteMode::from_name(v.str_or("route", d.route.name()))?,
             rank: v.usize_or("rank", d.rank),
             rendezvous: v.str_or("rendezvous", &d.rendezvous).to_string(),
             advertise_host: v.str_or("advertise_host", &d.advertise_host).to_string(),
@@ -154,6 +163,9 @@ impl TrainConfig {
         }
         if let Some(t) = args.str("topology") {
             self.topology = TopologySpec::parse(t)?;
+        }
+        if let Some(r) = args.str("route") {
+            self.route = RouteMode::from_name(r)?;
         }
         self.rank = args.usize_or("rank", self.rank);
         if let Some(r) = args.str("rendezvous") {
@@ -209,6 +221,7 @@ impl TrainConfig {
             ("workers", Value::from(self.workers)),
             ("transport", Value::from(self.transport.name())),
             ("topology", Value::from(self.topology.name())),
+            ("route", Value::from(self.route.name())),
             ("rank", Value::from(self.rank)),
             ("rendezvous", Value::from(self.rendezvous.clone())),
             ("advertise_host", Value::from(self.advertise_host.clone())),
@@ -362,6 +375,26 @@ mod tests {
             Args::parse(["x", "--topology", "mesh"].iter().map(|s| s.to_string()));
         assert!(TrainConfig::default().apply_cli(&args).is_err());
         let v = Value::parse(r#"{"topology": "nodes=0"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn route_mode_roundtrips_json_and_cli() {
+        let d = TrainConfig::default();
+        assert_eq!(d.route, RouteMode::Auto);
+        let j = d.to_json();
+        assert_eq!(TrainConfig::from_json(&j).unwrap().route, RouteMode::Auto);
+
+        let v = Value::parse(r#"{"route": "hierarchical"}"#).unwrap();
+        assert_eq!(TrainConfig::from_json(&v).unwrap().route, RouteMode::Hierarchical);
+
+        let args = Args::parse(["x", "--route", "flat"].iter().map(|s| s.to_string()));
+        let c = TrainConfig::default().apply_cli(&args).unwrap();
+        assert_eq!(c.route, RouteMode::Flat);
+
+        let args = Args::parse(["x", "--route", "scenic"].iter().map(|s| s.to_string()));
+        assert!(TrainConfig::default().apply_cli(&args).is_err());
+        let v = Value::parse(r#"{"route": "scenic"}"#).unwrap();
         assert!(TrainConfig::from_json(&v).is_err());
     }
 

@@ -22,9 +22,9 @@
 //! transport itself does.
 
 use super::{ExchangeStats, GroupSample, PipelineMode};
-use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome, TransportError};
+use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome, CommRoute, TransportError};
 use crate::compression::{Codec, CodecKind, Collective};
-use crate::scheduler::Partition;
+use crate::scheduler::{Partition, RouteChoice};
 use crate::util::rng::Xoshiro256;
 use crate::util::stats::Stopwatch;
 
@@ -37,6 +37,11 @@ pub struct ExchangeEngine {
     /// One stateful codec per group (EF granularity = group, §4.2).
     codecs: Vec<Box<dyn Codec>>,
     group_elems: Vec<usize>,
+    /// Per-group collective routes from the scheduler (`None` = every
+    /// group rides the communicator's global route). Part of the
+    /// symmetric-SPMD contract: every rank must install the same vector
+    /// (the driver's epoch broadcast guarantees it).
+    routes: Option<Vec<RouteChoice>>,
     /// Double-buffered merge/decode scratch: slot `j % 2` serves group `j`,
     /// so the in-flight group's decode buffer survives while the next
     /// group merges into the other slot.
@@ -59,6 +64,7 @@ impl ExchangeEngine {
             sizes: sizes_backprop,
             codecs,
             group_elems,
+            routes: None,
             flats: [Vec::with_capacity(max_group), Vec::with_capacity(max_group)],
             wire_pool: Vec::new(),
             group_log: Vec::new(),
@@ -71,6 +77,53 @@ impl ExchangeEngine {
 
     pub fn partition(&self) -> &Partition {
         &self.partition
+    }
+
+    /// Install per-group collective routes (one per group; `None` reverts
+    /// every group to the communicator's global route). Routes are
+    /// schedule state exactly like the partition: every rank must install
+    /// the same vector at the same step.
+    pub fn set_routes(&mut self, routes: Option<Vec<RouteChoice>>) -> anyhow::Result<()> {
+        if let Some(r) = &routes {
+            anyhow::ensure!(
+                r.len() == self.partition.num_groups(),
+                "set_routes: {} routes for {} groups",
+                r.len(),
+                self.partition.num_groups()
+            );
+        }
+        self.routes = routes;
+        Ok(())
+    }
+
+    /// Current per-group routes (`None` = global route).
+    pub fn routes(&self) -> Option<&[RouteChoice]> {
+        self.routes.as_deref()
+    }
+
+    /// The [`CommRoute`] each group will actually run under `comm`:
+    /// per-group choices (or the global route), clamped to `Flat` on a
+    /// trivial topology — mirroring `Comm::set_route` so the recorded
+    /// [`GroupSample::route`] always matches the executed collective.
+    fn effective_routes(&self, comm: &Comm) -> Vec<CommRoute> {
+        let trivial = comm.topology().is_trivial();
+        let global = comm.route();
+        (0..self.partition.num_groups())
+            .map(|j| {
+                let r = match &self.routes {
+                    Some(rs) => match rs[j] {
+                        RouteChoice::Flat => CommRoute::Flat,
+                        RouteChoice::Hierarchical => CommRoute::TwoLevel,
+                    },
+                    None => global,
+                };
+                if trivial {
+                    CommRoute::Flat
+                } else {
+                    r
+                }
+            })
+            .collect()
     }
 
     /// Fingerprint of all per-group codec state (EF residuals, momentum).
@@ -140,6 +193,11 @@ impl ExchangeEngine {
         self.partition = new;
         self.group_elems = group_elems;
         self.codecs = codecs;
+        // Routes are per-group, so they cannot survive a re-grouping:
+        // revert to the global route until the caller installs a vector
+        // sized for the new partition (the trainer does both from the
+        // same schedule broadcast).
+        self.routes = None;
         self.group_log.clear();
         Ok(())
     }
@@ -157,10 +215,18 @@ impl ExchangeEngine {
         mode: PipelineMode,
     ) -> Result<ExchangeStats, TransportError> {
         assert_eq!(grads.len(), self.sizes.len());
-        match mode {
+        let routed = self.routes.is_some();
+        let result = match mode {
             PipelineMode::Serial => self.exchange_serial(comm, grads, rng),
             PipelineMode::Pipelined => self.exchange_pipelined(comm, grads, rng),
+        };
+        // Restore the canonical route even when the exchange failed
+        // mid-group: a per-group route must never leak into collectives
+        // outside the engine.
+        if routed {
+            comm.reset_route();
         }
+        result
     }
 
     /// Legacy schedule: encode → collective → decode strictly per group on
@@ -180,6 +246,8 @@ impl ExchangeEngine {
         };
         let bytes_before = comm.bytes_sent();
         let collective = self.kind.collective();
+        let routed = self.routes.is_some();
+        let effective = self.effective_routes(comm);
 
         let ExchangeEngine {
             kind: _,
@@ -187,6 +255,7 @@ impl ExchangeEngine {
             sizes,
             codecs,
             group_elems,
+            routes: _,
             flats,
             wire_pool,
             group_log,
@@ -198,6 +267,7 @@ impl ExchangeEngine {
             let n = group_elems[j];
             group_log[j].group = j;
             group_log[j].elems = n;
+            group_log[j].route = effective[j];
 
             // --- merge -----------------------------------------------------
             let flat = &mut flats[0];
@@ -216,6 +286,9 @@ impl ExchangeEngine {
             group_log[j].encode_secs = enc_secs;
 
             // --- communicate (blocking, on this thread) --------------------
+            if routed {
+                comm.set_route(effective[j]);
+            }
             let inter_before = comm.inter_node_bytes();
             let sw = Stopwatch::start();
             let outcome = match collective {
@@ -279,6 +352,8 @@ impl ExchangeEngine {
         };
         let bytes_before = comm.bytes_sent();
         let collective = self.kind.collective();
+        let routed = self.routes.is_some();
+        let effective = self.effective_routes(comm);
 
         // Disjoint field borrows so the lane closure can mutate scratch
         // state while `comm` itself lives on the comm-lane thread.
@@ -288,6 +363,7 @@ impl ExchangeEngine {
             sizes,
             codecs,
             group_elems,
+            routes: _,
             flats,
             wire_pool,
             group_log,
@@ -295,6 +371,7 @@ impl ExchangeEngine {
         group_log.clear();
         group_log.resize(y, GroupSample::default());
 
+        let effective = &effective;
         let (result, _lane_busy) =
             lane_scope(comm, |lane| -> Result<(), TransportError> {
                 let mut inflight: Option<(usize, CommHandle)> = None;
@@ -302,6 +379,7 @@ impl ExchangeEngine {
                     let n = group_elems[j];
                     group_log[j].group = j;
                     group_log[j].elems = n;
+                    group_log[j].route = effective[j];
 
                     // --- merge + encode group j (overlaps group j−1's comm)
                     let flat = &mut flats[j % 2];
@@ -319,9 +397,12 @@ impl ExchangeEngine {
                     group_log[j].encode_secs = enc_secs;
 
                     // --- hand group j to the comm lane ----------------------
+                    let route = if routed { Some(effective[j]) } else { None };
                     let handle = match collective {
-                        Collective::AllReduce => lane.start_allreduce(wire, *kind, n),
-                        Collective::AllGather => lane.start_allgather(wire),
+                        Collective::AllReduce => {
+                            lane.start_allreduce_routed(wire, *kind, n, route)
+                        }
+                        Collective::AllGather => lane.start_allgather_routed(wire, route),
                     };
 
                     // --- drain group j−1 (its comm overlapped our encode) ---
@@ -680,6 +761,64 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn per_group_routes_are_result_invisible_and_recorded() {
+        use crate::collectives::{CommRoute, Topology};
+        use crate::scheduler::RouteChoice;
+        let sizes = vec![40usize, 25, 70, 15];
+        for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            let run = |routes: Option<Vec<RouteChoice>>| {
+                let sizes2 = sizes.clone();
+                run_comm_group(4, move |c| {
+                    c.set_topology(Topology::from_sizes(&[2, 2]).unwrap()).unwrap();
+                    let mut eng = ExchangeEngine::new(
+                        CodecKind::EfSignSgd,
+                        Partition::naive_even(4, 2),
+                        sizes2.clone(),
+                    );
+                    eng.set_routes(routes.clone()).unwrap();
+                    let mut rng = Xoshiro256::seed_from_u64(21 + c.rank() as u64);
+                    let mut grads = make_grads(c.rank(), &sizes2);
+                    eng.exchange(c, &mut grads, &mut rng, mode).unwrap();
+                    let samples = eng.group_samples().to_vec();
+                    // The engine restores the topology-default route after
+                    // a routed exchange.
+                    (grads, eng.state_digest(), samples, c.route())
+                })
+            };
+            let plain = run(None);
+            let mixed = run(Some(vec![RouteChoice::Flat, RouteChoice::Hierarchical]));
+            for (rank, ((pg, pd, psamples, _), (mg, md, msamples, after))) in
+                plain.iter().zip(&mixed).enumerate()
+            {
+                // EF-SignSGD rides allgather: both routes are bit-identical
+                // to the flat ring, so mixing them per group changes
+                // nothing in gradients or EF state.
+                assert_eq!(pg, mg, "{}: rank {rank} grads diverged", mode.name());
+                assert_eq!(pd, md, "{}: rank {rank} EF state diverged", mode.name());
+                // Global route (no engine routes): both groups hierarchical.
+                assert!(psamples.iter().all(|s| s.route == CommRoute::TwoLevel));
+                // Mixed: the recorded per-group routes match the install.
+                assert_eq!(msamples[0].route, CommRoute::Flat, "{}", mode.name());
+                assert_eq!(msamples[1].route, CommRoute::TwoLevel, "{}", mode.name());
+                assert_eq!(*after, CommRoute::TwoLevel, "route not reset");
+            }
+        }
+    }
+
+    #[test]
+    fn set_routes_validates_group_count_and_repartition_clears() {
+        use crate::scheduler::RouteChoice;
+        let mut eng =
+            ExchangeEngine::new(CodecKind::Fp32, Partition::naive_even(3, 2), vec![4, 5, 6]);
+        assert!(eng.set_routes(Some(vec![RouteChoice::Flat])).is_err());
+        eng.set_routes(Some(vec![RouteChoice::Flat, RouteChoice::Hierarchical]))
+            .unwrap();
+        assert_eq!(eng.routes().unwrap().len(), 2);
+        eng.repartition(Partition::layer_wise(3)).unwrap();
+        assert!(eng.routes().is_none(), "repartition must clear per-group routes");
     }
 
     #[test]

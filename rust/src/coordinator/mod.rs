@@ -74,14 +74,20 @@ pub struct GroupSample {
     pub group: usize,
     /// Elements merged into the group.
     pub elems: usize,
+    /// Which collective route this group's exchange actually ran — per
+    /// group, now that the scheduler can mix flat and hierarchical routes
+    /// within one step. The estimator files `comm_secs` under the right
+    /// per-route fit with it.
+    pub route: crate::collectives::CommRoute,
     pub encode_secs: f64,
     pub comm_secs: f64,
     pub comm_exposed_secs: f64,
     /// Portion of `comm_secs` spent in the **inter-node** stage of a
-    /// two-level collective (0 on the flat route, and on non-leader ranks,
-    /// whose wall time hides inside the intra fan-out wait). Rank 0 — the
-    /// rank whose estimator drives the schedule search — is always a node
-    /// leader, so its samples carry the real inter-level timings.
+    /// hierarchical collective (0 on the flat route, and on non-leader
+    /// ranks, whose wall time hides inside the intra fan-out wait). Rank 0
+    /// — the rank whose estimator drives the schedule search — is always a
+    /// top-level leader, so its samples carry the real inter-level
+    /// timings.
     pub comm_inter_secs: f64,
     pub decode_secs: f64,
 }

@@ -51,7 +51,9 @@ fn print_usage() {
            train     --workers N --codec C --schedule S [--steps K] [--config f.json]\n\
                      [--sched-mode online|warmup|fixed] [--resched-interval K]\n\
                      [--resched-ewma W] [--resched-eps E]\n\
-                     [--topology flat|nodes=G|nodes=a+b+...]  (two-level collectives)\n\
+                     [--topology flat|nodes=G|nodes=a+b+...[;racks=...]]\n\
+                     [--route auto|flat|hierarchical]  (auto: Algorithm 2 picks\n\
+                      flat vs hierarchical per tensor group from the live fits)\n\
                      [--transport inproc|tcp --rank N --world W\n\
                       --rendezvous HOST:PORT [--advertise HOST]\n\
                       [--bootstrap-timeout-secs S]]\n\
@@ -117,6 +119,21 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             result.reschedules,
             result.schedule_epoch
         );
+        if !result.final_routes.is_empty() {
+            let routes: Vec<&str> = result.final_routes.iter().map(|r| r.name()).collect();
+            println!("routes: [{}]", routes.join(", "));
+        }
+        if let Some(tl) = result.two_level_fit {
+            println!(
+                "per-level comm fits: intra b={:.3e} g={:.3e}, inter b={:.3e} g={:.3e} \
+                 (inter dominates at 1M elems: {})",
+                tl.intra.b,
+                tl.intra.g,
+                tl.inter.b,
+                tl.inter.g,
+                tl.inter_dominates(1 << 20)
+            );
+        }
         for r in &result.records {
             println!(
                 "  step {:>5}  loss {:.4}  t={:.1}s  exch={}",

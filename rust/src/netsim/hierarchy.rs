@@ -195,6 +195,209 @@ impl TwoLevelFabric {
     }
 }
 
+/// How deep a collective recurses over a [`ThreeLevelFabric`]'s hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteDepth {
+    /// One flat ring over all ranks — every step gated by the WAN.
+    Flat,
+    /// Node fan-in, then a ring over **all** node leaders (which still
+    /// crosses the WAN on every lap).
+    TwoLevel,
+    /// Node fan-in, rack fan-in, then a ring over the rack leaders only —
+    /// the WAN carries just `2·(R−1)` chunked steps.
+    ThreeLevel,
+}
+
+/// A three-level fabric: `racks` racks of `nodes_per_rack` nodes, each
+/// node a contiguous block of ranks wired by `intra`; nodes within a rack
+/// talk over `inter`, racks over `wan` — the NVLink × TCP × WAN-ish stack
+/// the N-level topology (`nodes=…;racks=…`) routes over.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThreeLevelFabric {
+    pub intra: Fabric,
+    pub inter: Fabric,
+    pub wan: Fabric,
+    pub nodes_per_rack: usize,
+    pub racks: usize,
+}
+
+impl ThreeLevelFabric {
+    pub fn new(
+        intra: Fabric,
+        inter: Fabric,
+        wan: Fabric,
+        nodes_per_rack: usize,
+        racks: usize,
+    ) -> ThreeLevelFabric {
+        assert!(nodes_per_rack >= 1 && racks >= 1);
+        ThreeLevelFabric {
+            intra,
+            inter,
+            wan,
+            nodes_per_rack,
+            racks,
+        }
+    }
+
+    /// The headline geo-distributed scenario: NVLink inside each box, TCP
+    /// inside each rack, a WAN-class link between racks.
+    pub fn nvlink_tcp_wan(nodes_per_rack: usize, racks: usize) -> ThreeLevelFabric {
+        ThreeLevelFabric::new(Fabric::nvlink(), Fabric::tcp(), Fabric::wan(), nodes_per_rack, racks)
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.nodes_per_rack * self.racks
+    }
+
+    /// Ranks per node under contiguous near-even placement.
+    fn ranks_per_node(&self, world: usize) -> f64 {
+        (world as f64 / self.num_nodes() as f64).ceil()
+    }
+
+    /// Allreduce of `bytes` at the given recursion depth. `inter_secs` /
+    /// `inter_bytes` account the **WAN** level (the slowest link class).
+    pub fn allreduce(&self, world: usize, bytes: f64, depth: RouteDepth) -> HierCost {
+        if world <= 1 {
+            return HierCost { seconds: 0.0, intra_secs: 0.0, inter_secs: 0.0, inter_bytes: 0.0 };
+        }
+        let w = world as f64;
+        let m = self.ranks_per_node(world);
+        let l = self.num_nodes() as f64;
+        let npr = self.nodes_per_rack as f64;
+        let r = self.racks as f64;
+        let multi_rack = self.racks > 1;
+        // A ring that spans racks is gated by the WAN on every lockstep
+        // step; a single-rack ring is gated by the rack fabric.
+        let ring = |steps: f64, chunk: f64| -> (f64, f64) {
+            if multi_rack {
+                let secs = steps * (self.wan.alpha + chunk / self.wan.beta_eff(self.racks));
+                (secs, r * steps * chunk)
+            } else {
+                (steps * (self.inter.alpha + chunk / self.inter.beta_eff(world)), 0.0)
+            }
+        };
+        let node_fan = 2.0 * (m - 1.0) * (self.intra.alpha + bytes / self.intra.beta);
+        match depth {
+            RouteDepth::Flat => {
+                let (secs, wan_bytes) = ring(2.0 * (w - 1.0), bytes / w);
+                HierCost {
+                    seconds: secs,
+                    intra_secs: 0.0,
+                    inter_secs: if multi_rack { secs } else { 0.0 },
+                    inter_bytes: wan_bytes,
+                }
+            }
+            RouteDepth::TwoLevel => {
+                let (ring_secs, wan_bytes) = ring(2.0 * (l - 1.0), bytes / l);
+                HierCost {
+                    seconds: node_fan + ring_secs,
+                    intra_secs: node_fan,
+                    inter_secs: if multi_rack { ring_secs } else { 0.0 },
+                    inter_bytes: wan_bytes,
+                }
+            }
+            RouteDepth::ThreeLevel => {
+                let rack_fan =
+                    2.0 * (npr - 1.0) * (self.inter.alpha + bytes / self.inter.beta);
+                let (wan_secs, wan_bytes) = if multi_rack {
+                    let steps = 2.0 * (r - 1.0);
+                    let chunk = bytes / r;
+                    (
+                        steps * (self.wan.alpha + chunk / self.wan.beta_eff(self.racks)),
+                        r * steps * chunk,
+                    )
+                } else {
+                    (0.0, 0.0)
+                };
+                HierCost {
+                    seconds: node_fan + rack_fan + wan_secs,
+                    intra_secs: node_fan + rack_fan,
+                    inter_secs: wan_secs,
+                    inter_bytes: wan_bytes,
+                }
+            }
+        }
+    }
+
+    /// Allgather where every rank contributes `bytes_per_rank`, at the
+    /// given recursion depth. WAN accounting as in
+    /// [`ThreeLevelFabric::allreduce`].
+    pub fn allgather(&self, world: usize, bytes_per_rank: f64) -> [HierCost; 3] {
+        if world <= 1 {
+            let z = HierCost { seconds: 0.0, intra_secs: 0.0, inter_secs: 0.0, inter_bytes: 0.0 };
+            return [z, z, z];
+        }
+        let s = bytes_per_rank;
+        let w = world as f64;
+        let m = self.ranks_per_node(world);
+        let l = self.num_nodes() as f64;
+        let npr = self.nodes_per_rack as f64;
+        let r = self.racks as f64;
+        let multi_rack = self.racks > 1;
+        let ring = |steps: f64, frame: f64| -> (f64, f64) {
+            if multi_rack {
+                let secs = steps * (self.wan.alpha + frame / self.wan.beta_eff(self.racks));
+                (secs, r * steps * frame)
+            } else {
+                (steps * (self.inter.alpha + frame / self.inter.beta_eff(world)), 0.0)
+            }
+        };
+        let node_fan = (m - 1.0) * (self.intra.alpha + s / self.intra.beta)
+            + (m - 1.0) * (self.intra.alpha + w * s / self.intra.beta);
+        // Flat.
+        let (secs, wan_bytes) = ring(w - 1.0, s);
+        let flat = HierCost {
+            seconds: secs,
+            intra_secs: 0.0,
+            inter_secs: if multi_rack { secs } else { 0.0 },
+            inter_bytes: wan_bytes,
+        };
+        // Two-level: node-frame ring over all node leaders.
+        let (ring_secs, wan_bytes) = ring(l - 1.0, m * s);
+        let two = HierCost {
+            seconds: node_fan + ring_secs,
+            intra_secs: node_fan,
+            inter_secs: if multi_rack { ring_secs } else { 0.0 },
+            inter_bytes: wan_bytes,
+        };
+        // Three-level: rack fan-in of node frames + full-table fan-out,
+        // rack-frame ring over rack leaders only.
+        let rack_fan = (npr - 1.0) * (self.inter.alpha + m * s / self.inter.beta)
+            + (npr - 1.0) * (self.inter.alpha + w * s / self.inter.beta);
+        let (wan_secs, wan_bytes) = if multi_rack {
+            let steps = r - 1.0;
+            let frame = w / r * s;
+            (
+                steps * (self.wan.alpha + frame / self.wan.beta_eff(self.racks)),
+                r * steps * frame,
+            )
+        } else {
+            (0.0, 0.0)
+        };
+        let three = HierCost {
+            seconds: node_fan + rack_fan + wan_secs,
+            intra_secs: node_fan + rack_fan,
+            inter_secs: wan_secs,
+            inter_bytes: wan_bytes,
+        };
+        [flat, two, three]
+    }
+
+    /// Predicted cost of synchronizing an `elems`-element group compressed
+    /// with `kind` at each recursion depth (`[flat, two, three]`).
+    pub fn group_comm(&self, kind: CodecKind, world: usize, elems: usize) -> [HierCost; 3] {
+        let wire = kind.wire_size(elems) as f64;
+        match kind.collective() {
+            Collective::AllReduce => [
+                self.allreduce(world, wire, RouteDepth::Flat),
+                self.allreduce(world, wire, RouteDepth::TwoLevel),
+                self.allreduce(world, wire, RouteDepth::ThreeLevel),
+            ],
+            Collective::AllGather => self.allgather(world, wire),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +475,49 @@ mod tests {
         // Compressed payloads are ~32x smaller; every cost must reflect it.
         assert!(flat_ag.seconds < flat_ar.seconds / 4.0);
         assert!(hier_ag.seconds < hier_ar.seconds / 4.0);
+    }
+
+    #[test]
+    fn three_level_recursion_pays_off_iff_the_wan_gap_is_real() {
+        // 8 ranks, 2 racks × 2 nodes × 2 ranks, NVLink × TCP × WAN.
+        let f = ThreeLevelFabric::nvlink_tcp_wan(2, 2);
+        let world = 8;
+        for bytes in [10e6, 100e6, 400e6] {
+            let flat = f.allreduce(world, bytes, RouteDepth::Flat);
+            let two = f.allreduce(world, bytes, RouteDepth::TwoLevel);
+            let three = f.allreduce(world, bytes, RouteDepth::ThreeLevel);
+            assert!(two.seconds < flat.seconds, "{bytes}B: two {two:?} vs flat {flat:?}");
+            assert!(three.seconds < two.seconds, "{bytes}B: three {three:?} vs two {two:?}");
+            assert!(three.inter_bytes < two.inter_bytes);
+            assert!(two.inter_bytes < flat.inter_bytes);
+            let [ag_flat, ag_two, ag_three] = f.allgather(world, bytes / world as f64);
+            assert!(ag_three.seconds < ag_two.seconds && ag_two.seconds < ag_flat.seconds);
+        }
+        // Flip the gap: with the "WAN" as fast as the rack fabric, the
+        // extra rack stage is pure overhead and two-level wins — the
+        // ordering the route search must track.
+        let no_gap = ThreeLevelFabric::new(Fabric::nvlink(), Fabric::tcp(), Fabric::tcp(), 2, 2);
+        for bytes in [10e6, 100e6] {
+            let two = no_gap.allreduce(world, bytes, RouteDepth::TwoLevel);
+            let three = no_gap.allreduce(world, bytes, RouteDepth::ThreeLevel);
+            assert!(
+                two.seconds < three.seconds,
+                "{bytes}B without a gap: two {} vs three {}",
+                two.seconds,
+                three.seconds
+            );
+        }
+    }
+
+    #[test]
+    fn three_level_group_comm_single_rack_degenerates() {
+        let f = ThreeLevelFabric::new(Fabric::nvlink(), Fabric::tcp(), Fabric::wan(), 2, 1);
+        let c = f.allreduce(4, 1e6, RouteDepth::ThreeLevel);
+        assert_eq!(c.inter_bytes, 0.0);
+        assert_eq!(c.inter_secs, 0.0);
+        let [flat, _, _] = f.group_comm(CodecKind::EfSignSgd, 4, 1 << 20);
+        assert!(flat.seconds > 0.0);
+        assert_eq!(f.allreduce(1, 1e6, RouteDepth::Flat).seconds, 0.0);
     }
 
     #[test]

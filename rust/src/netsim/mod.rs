@@ -19,7 +19,7 @@ pub mod hierarchy;
 
 pub use cost::{CollectiveCost, CostModel};
 pub use drift::NetScenario;
-pub use hierarchy::{HierCost, TwoLevelFabric};
+pub use hierarchy::{HierCost, RouteDepth, ThreeLevelFabric, TwoLevelFabric};
 
 /// A communication fabric: per-message latency + effective bandwidth +
 /// shared-bus contention.
@@ -79,12 +79,25 @@ impl Fabric {
         }
     }
 
+    /// Cross-site / cross-region link ("WAN-ish"): long round trips and a
+    /// thin effective pipe — the third level of a
+    /// [`ThreeLevelFabric`](hierarchy::ThreeLevelFabric), above TCP.
+    pub fn wan() -> Fabric {
+        Fabric {
+            name: "wan",
+            alpha: 1.5e-3,
+            beta: 1.25e8,
+            contention: 0.1,
+        }
+    }
+
     pub fn from_name(name: &str) -> anyhow::Result<Fabric> {
         Ok(match name.to_ascii_lowercase().as_str() {
             "pcie" => Fabric::pcie(),
             "nvlink" => Fabric::nvlink(),
             "tcp" | "ethernet" | "10gbe" => Fabric::tcp(),
-            other => anyhow::bail!("unknown fabric '{other}' (pcie|nvlink|tcp)"),
+            "wan" => Fabric::wan(),
+            other => anyhow::bail!("unknown fabric '{other}' (pcie|nvlink|tcp|wan)"),
         })
     }
 
@@ -137,6 +150,16 @@ mod tests {
         assert_eq!(Fabric::from_name("tcp").unwrap(), Fabric::tcp());
         assert_eq!(Fabric::from_name("ethernet").unwrap(), Fabric::tcp());
         assert!(Fabric::from_name("infiniband").is_err());
+    }
+
+    #[test]
+    fn wan_is_slower_than_every_other_level() {
+        let w = Fabric::wan();
+        for bytes in [1usize << 10, 1 << 20, 100 << 20] {
+            assert!(w.p2p(bytes) > Fabric::tcp().p2p(bytes));
+            assert!(w.p2p(bytes) > Fabric::nvlink().p2p(bytes));
+        }
+        assert_eq!(Fabric::from_name("wan").unwrap(), Fabric::wan());
     }
 
     #[test]

@@ -50,14 +50,36 @@ impl FittedCost {
     }
 }
 
-/// Per-level communication cost models for a two-level (hierarchical)
-/// fabric: intra-node stages and the inter-node leader ring, each fit as
-/// its own Assumption-5 affine model.
+/// Per-level communication cost models for a hierarchical fabric: the fan
+/// (intra) stages and the top-leader ring (inter), each fit as its own
+/// Assumption-5 affine model. (On an N-level topology "inter" is the
+/// topmost ring and "intra" lumps every fan stage below it — the split
+/// [`CommBreakdown`](crate::collectives::CommBreakdown) reports.)
+///
+/// The per-level split is what lets the scheduler reason about *routes*,
+/// not just partitions: [`TwoLevelCost::combined`] prices the hierarchical
+/// exchange, [`TwoLevelCost::flat_equivalent`] converts the inter-level
+/// fit into the flat ring's implied cost, and [`RouteCostModel`] feeds
+/// both to Algorithm 2 so each group rides whichever route its size
+/// favors.
+///
+/// ```
+/// use mergecomp::scheduler::costmodel::{FittedCost, TwoLevelCost};
+/// let tl = TwoLevelCost {
+///     intra: FittedCost { b: 1e-5, g: 1e-10, r2: 1.0 },
+///     inter: FittedCost { b: 5e-4, g: 2e-9, r2: 1.0 },
+/// };
+/// // The combined model is the sum of the levels (affine again):
+/// let c = tl.combined();
+/// assert!((c.predict(1000) - (tl.intra.predict(1000) + tl.inter.predict(1000))).abs() < 1e-12);
+/// // Here the inter level dominates at every size:
+/// assert!(tl.inter_dominates(1) && tl.inter_dominates(1 << 24));
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TwoLevelCost {
-    /// Intra-node stages (member→leader fan-in + leader→member fan-out).
+    /// Fan stages (member→leader fan-in + leader→member fan-out).
     pub intra: FittedCost,
-    /// Inter-node stage (the ring among node leaders).
+    /// Top ring among the topmost-level leaders.
     pub inter: FittedCost,
 }
 
@@ -77,6 +99,69 @@ impl TwoLevelCost {
     /// size? (What the partition search is implicitly optimizing against.)
     pub fn inter_dominates(&self, elems: usize) -> bool {
         self.inter.predict(elems) >= self.intra.predict(elems)
+    }
+
+    /// The **flat ring's** implied cost model on the same fabric, derived
+    /// from the inter-level fit alone — how the scheduler prices the route
+    /// it is *not* currently running, before any flat samples exist.
+    ///
+    /// Derivation: the inter fit models the leader ring — `2(L−1)` steps
+    /// for an allreduce, each paying the slow link's latency `α` plus a
+    /// `1/L`-sized chunk over its bandwidth `β` — so `b = 2(L−1)·α` and
+    /// `g = 2(L−1)/L · c` with `c` the per-element wire cost. A flat ring
+    /// over all `w` ranks is gated by the same slow link on **every** one
+    /// of its `2(w−1)` steps (that is the hierarchy's whole premise), so
+    /// its implied model is `b·(w−1)/(L−1)` and `g·(w−1)·L/(w·(L−1))`.
+    /// The allgather conversion works out to the same two factors under
+    /// near-even node splits (`m = w/L` members per node), so one formula
+    /// serves both collectives; uneven splits make it an approximation,
+    /// which live flat samples replace as soon as any group actually
+    /// rides the flat ring. `nodes` is the size `L` of the ring the inter
+    /// fit actually timed — the **top** ring
+    /// (`Topology::top_leaders().len()`) on an N-level topology.
+    pub fn flat_equivalent(&self, world: usize, nodes: usize) -> FittedCost {
+        if world <= 1 || nodes <= 1 || nodes >= world {
+            return self.combined();
+        }
+        let w = world as f64;
+        let l = nodes as f64;
+        FittedCost {
+            b: self.inter.b * (w - 1.0) / (l - 1.0),
+            g: self.inter.g * (w - 1.0) * l / (w * (l - 1.0)),
+            r2: self.inter.r2,
+        }
+    }
+}
+
+/// Fitted cost of synchronizing a group under each available route — the
+/// objective Algorithm 2 minimizes over when the search space is
+/// `(partition, per-group route)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteCostModel {
+    /// Flat ring over all ranks.
+    pub flat: FittedCost,
+    /// Hierarchical exchange (both levels, i.e. [`TwoLevelCost::combined`]).
+    pub hier: FittedCost,
+}
+
+impl RouteCostModel {
+    pub fn cost(&self, route: super::search::RouteChoice) -> FittedCost {
+        match route {
+            super::search::RouteChoice::Flat => self.flat,
+            super::search::RouteChoice::Hierarchical => self.hier,
+        }
+    }
+
+    /// The cheaper route for a group of `elems` elements and its predicted
+    /// cost. Ties break to `Flat` deterministically (fewer moving parts).
+    pub fn best(&self, elems: usize) -> (super::search::RouteChoice, f64) {
+        let f = self.flat.predict(elems);
+        let h = self.hier.predict(elems);
+        if h < f {
+            (super::search::RouteChoice::Hierarchical, h)
+        } else {
+            (super::search::RouteChoice::Flat, f)
+        }
     }
 }
 
@@ -170,6 +255,48 @@ mod tests {
         // Flip the levels: intra dominates everywhere.
         let tl = TwoLevelCost { intra: tl.inter, inter: tl.intra };
         assert!(!tl.inter_dominates(1 << 20));
+    }
+
+    #[test]
+    fn flat_equivalent_inverts_the_ring_geometry() {
+        use crate::scheduler::RouteChoice;
+        // Leader ring over L=2 nodes of w=8 ranks: 2(L−1)=2 steps of
+        // chunk x/2. α=50µs per step, c=1ns/elem on the slow link.
+        let (alpha, c) = (50e-6, 1e-9);
+        let (l, w) = (2.0f64, 8.0f64);
+        let inter = FittedCost {
+            b: 2.0 * (l - 1.0) * alpha,
+            g: 2.0 * (l - 1.0) / l * c,
+            r2: 1.0,
+        };
+        let tl = TwoLevelCost {
+            intra: FittedCost { b: 0.0, g: 0.0, r2: 1.0 },
+            inter,
+        };
+        let flat = tl.flat_equivalent(8, 2);
+        // Flat ring: 2(w−1) steps of α, chunk x/w over the same link.
+        assert!((flat.b - 2.0 * (w - 1.0) * alpha).abs() < 1e-12, "b = {}", flat.b);
+        assert!((flat.g - 2.0 * (w - 1.0) / w * c).abs() < 1e-20, "g = {}", flat.g);
+        // Degenerate shapes fall back to the combined model.
+        assert_eq!(tl.flat_equivalent(1, 1), tl.combined());
+        assert_eq!(tl.flat_equivalent(8, 8), tl.combined());
+
+        // A route model over (flat, hier): latency favors flat at small
+        // sizes once the hier path pays real fan-stage latency.
+        let rc = RouteCostModel {
+            flat,
+            hier: TwoLevelCost {
+                intra: FittedCost { b: 3e-4, g: 1e-11, r2: 1.0 },
+                inter,
+            }
+            .combined(),
+        };
+        let (small, _) = rc.best(1);
+        let (large, _) = rc.best(1 << 24);
+        assert_eq!(small, RouteChoice::Flat);
+        assert_eq!(large, RouteChoice::Hierarchical);
+        assert_eq!(rc.cost(RouteChoice::Flat), rc.flat);
+        assert_eq!(rc.cost(RouteChoice::Hierarchical), rc.hier);
     }
 
     #[test]

@@ -28,11 +28,20 @@
 //! strictly — a malformed payload is an error, never a silently-dropped
 //! bound.
 //!
+//! **Routes ride the same broadcast.** On a hierarchical fabric the
+//! schedule is `(partition, per-group route)`: [`Driver::with_routing`]
+//! makes each re-search score candidate groups under both the flat ring
+//! and the hierarchical exchange (the estimator's per-level fits), and an
+//! adopted switch carries one [`RouteChoice`] per group inside the same
+//! `{epoch, bounds, routes}` payload — a route flip lands on the same
+//! step on every rank, which keeps collective tag sequences aligned and
+//! the flip bit-invisible to gradients (`tests/route_choice.rs`).
+//!
 //! [`AnalyticObjective`]: super::objective::AnalyticObjective
 
 use super::estimator::CostEstimator;
 use super::partition::Partition;
-use super::search::{mergecomp_search, SearchParams};
+use super::search::{mergecomp_search, RouteChoice, SearchParams};
 use crate::collectives::Comm;
 use crate::coordinator::GroupSample;
 use crate::metrics::MetricsRegistry;
@@ -70,15 +79,36 @@ impl Default for DriverConfig {
 /// Outcome of one rank-0 reschedule attempt.
 #[derive(Debug, Clone)]
 pub enum Decision {
-    /// Keep the current partition (not enough data, search returned the
-    /// same partition, or the predicted gain was below ε).
+    /// Keep the current schedule (not enough data, search returned the
+    /// same `(partition, routes)`, or the predicted gain was below ε).
     Keep,
-    /// Adopt `partition`; the objective predicts `f_new` vs `f_current`.
+    /// Adopt `(partition, routes)`; the objective predicts `f_new` vs
+    /// `f_current`. `routes` is empty when per-group routing is off.
     Switch {
         partition: Partition,
+        routes: Vec<RouteChoice>,
         f_current: f64,
         f_new: f64,
     },
+}
+
+/// One adopted schedule switch, as returned by [`Driver::sync`]: the
+/// caller repartitions its exchange engine and (when non-empty) installs
+/// the per-group routes.
+#[derive(Debug, Clone)]
+pub struct ScheduleUpdate {
+    pub partition: Partition,
+    /// One route per group; empty = keep the communicator's global route.
+    pub routes: Vec<RouteChoice>,
+}
+
+/// Per-group route search configuration (only `RouteMode::Auto` reaches
+/// the driver; forced modes pin the communicator's global route and never
+/// need per-group state).
+#[derive(Debug, Clone, Copy)]
+struct Routing {
+    world: usize,
+    nodes: usize,
 }
 
 /// The online rescheduler for one training run. All ranks construct one
@@ -93,6 +123,10 @@ pub struct Driver {
     bwd_shares: Vec<f64>,
     fwd_frac: f64,
     partition: Partition,
+    /// Per-group routes of the current schedule; empty when per-group
+    /// routing is off (the communicator's global route applies).
+    routes: Vec<RouteChoice>,
+    routing: Option<Routing>,
     epoch: u64,
     /// Number of adopted partition switches.
     pub reschedules: usize,
@@ -119,11 +153,28 @@ impl Driver {
             bwd_shares,
             fwd_frac,
             partition: initial,
+            routes: Vec::new(),
+            routing: None,
             epoch: 0,
             reschedules: 0,
             search_evals: 0,
             metrics: MetricsRegistry::new(),
         }
+    }
+
+    /// Enable per-group route search (`--route auto` on a non-trivial
+    /// topology): every re-search scores candidate groups under both the
+    /// flat ring and the hierarchical exchange, and switches carry one
+    /// [`RouteChoice`] per group. Initial routes are all-hierarchical —
+    /// the communicator's default on a non-trivial topology — so the
+    /// estimator sees per-level samples from the first step. `nodes` is
+    /// the **top ring's** member count (`Topology::top_leaders().len()`,
+    /// the stage the measured inter split times — equal to the node count
+    /// only on two-level topologies).
+    pub fn with_routing(mut self, world: usize, nodes: usize) -> Self {
+        self.routes = vec![RouteChoice::Hierarchical; self.partition.num_groups()];
+        self.routing = Some(Routing { world, nodes });
+        self
     }
 
     pub fn config(&self) -> &DriverConfig {
@@ -132,6 +183,11 @@ impl Driver {
 
     pub fn partition(&self) -> &Partition {
         &self.partition
+    }
+
+    /// Per-group routes of the current schedule (empty = global route).
+    pub fn routes(&self) -> &[RouteChoice] {
+        &self.routes
     }
 
     pub fn epoch(&self) -> u64 {
@@ -181,61 +237,100 @@ impl Driver {
             self.metrics.gauge("resched.comm_inter_g", tl.inter.g);
             self.metrics.gauge("resched.comm_intra_g", tl.intra.g);
         }
+        // Route search: attach the per-route comm models so Algorithm 2
+        // minimizes over (partition, per-group route).
+        if let Some(r) = self.routing {
+            obj.set_route_costs(self.est.route_costs(r.world, r.nodes));
+        }
         use super::objective::Objective as _;
-        let f_current = obj.eval(&self.partition);
+        let f_current = obj.eval_with_routes(&self.partition, &self.routes);
         let out = mergecomp_search(&mut obj, self.sizes.len(), self.cfg.search);
         self.search_evals += obj.evals();
+        let new_routes = if self.routing.is_some() {
+            if out.routes.is_empty() {
+                // No route model identified yet: stay on the hierarchy.
+                vec![RouteChoice::Hierarchical; out.partition.num_groups()]
+            } else {
+                out.routes
+            }
+        } else {
+            Vec::new()
+        };
         let gain = (f_current - out.f_min) / f_current.max(f64::MIN_POSITIVE);
         self.metrics.observe("resched.predicted_gain", gain);
-        if out.partition == self.partition || gain <= self.cfg.hysteresis {
+        let unchanged = out.partition == self.partition && new_routes == self.routes;
+        if unchanged || gain <= self.cfg.hysteresis {
             return Decision::Keep;
         }
         Decision::Switch {
             partition: out.partition,
+            routes: new_routes,
             f_current,
             f_new: out.f_min,
         }
     }
 
-    /// Adopt a new partition locally, bumping the epoch. Used directly by
-    /// the single-process simulation loop; the trainer goes through
-    /// [`Driver::sync`] so every rank switches on the same step.
-    pub fn apply(&mut self, partition: Partition) {
+    /// Adopt a new `(partition, routes)` locally, bumping the epoch. Used
+    /// directly by the single-process simulation loop; the trainer goes
+    /// through [`Driver::sync`] so every rank switches on the same step.
+    /// An empty `routes` means "no per-group routing".
+    pub fn apply(&mut self, partition: Partition, routes: Vec<RouteChoice>) {
         assert_eq!(partition.num_tensors(), self.sizes.len());
+        if !routes.is_empty() {
+            assert_eq!(routes.len(), partition.num_groups(), "one route per group");
+        }
         self.partition = partition;
+        self.metrics.gauge(
+            "resched.flat_groups",
+            routes.iter().filter(|&&r| r == RouteChoice::Flat).count() as f64,
+        );
+        self.routes = routes;
         self.epoch += 1;
         self.reschedules += 1;
         self.metrics.incr("resched.switches", 1);
         self.metrics.gauge("resched.epoch", self.epoch as f64);
     }
 
-    /// Distribute one reschedule decision: rank 0 folds `decision` into its
-    /// schedule state and broadcasts `{epoch, bounds}`; followers adopt the
-    /// broadcast schedule iff its epoch is ahead of theirs (strictly parsed
-    /// — any malformed bound is an error). Every rank must call this at the
-    /// same step (`due`). Returns the new partition when this rank switched
-    /// (the caller then remaps its exchange engine).
+    /// Distribute one reschedule decision: rank 0 folds `decision` into
+    /// its schedule state and broadcasts `{epoch, bounds, routes}`;
+    /// followers adopt the broadcast schedule iff its epoch is ahead of
+    /// theirs (strictly parsed — any malformed bound or route token is an
+    /// error). Every rank must call this at the same step (`due`). Returns
+    /// the new `(partition, routes)` when this rank switched (the caller
+    /// then remaps its exchange engine and installs the routes).
     pub fn sync(
         &mut self,
         comm: &mut Comm,
         decision: Decision,
-    ) -> anyhow::Result<Option<Partition>> {
+    ) -> anyhow::Result<Option<ScheduleUpdate>> {
         let n = self.sizes.len();
         if comm.rank() == 0 {
             let switched = match decision {
-                Decision::Switch { partition, .. } => {
-                    self.apply(partition);
+                Decision::Switch {
+                    partition, routes, ..
+                } => {
+                    self.apply(partition, routes);
                     true
                 }
                 Decision::Keep => false,
             };
+            let routes_json = Value::Arr(
+                self.routes
+                    .iter()
+                    .map(|r| Value::from(r.name()))
+                    .collect(),
+            );
             let payload = Value::from_pairs(vec![
                 ("epoch", Value::from(self.epoch)),
                 ("bounds", self.partition.bounds_to_json()),
+                ("routes", routes_json),
             ]);
             let mut bytes = payload.to_string_compact().into_bytes();
             comm.broadcast(0, &mut bytes)?;
-            Ok(switched.then(|| self.partition.clone()))
+            Ok(switched.then(|| ScheduleUpdate {
+                partition: self.partition.clone(),
+                routes: self.routes.clone(),
+            }))
         } else {
             let mut bytes = Vec::new();
             comm.broadcast(0, &mut bytes)?;
@@ -260,16 +355,47 @@ impl Driver {
                 .get("bounds")
                 .ok_or_else(|| anyhow::anyhow!("schedule broadcast: missing bounds"))?;
             let partition = Partition::from_json_bounds(n, bounds)?;
-            self.apply(partition.clone());
-            Ok(Some(partition))
+            let routes = parse_routes(&v, partition.num_groups())?;
+            self.apply(partition.clone(), routes.clone());
+            Ok(Some(ScheduleUpdate { partition, routes }))
         }
     }
+}
+
+/// Strict parse of the broadcast's `routes` array: every entry must be a
+/// known route token, and a non-empty list must have one entry per group —
+/// a malformed route is an error, never a silently-defaulted one (the same
+/// contract as the partition bounds).
+fn parse_routes(v: &Value, groups: usize) -> anyhow::Result<Vec<RouteChoice>> {
+    let routes_v = v
+        .get("routes")
+        .ok_or_else(|| anyhow::anyhow!("schedule broadcast: missing routes"))?;
+    let arr = routes_v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("schedule broadcast: routes is not an array"))?;
+    let routes = arr
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let token = t
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("schedule broadcast: routes[{i}] not a string"))?;
+            RouteChoice::from_name(token)
+                .map_err(|e| anyhow::anyhow!("schedule broadcast: routes[{i}]: {e}"))
+        })
+        .collect::<anyhow::Result<Vec<RouteChoice>>>()?;
+    anyhow::ensure!(
+        routes.is_empty() || routes.len() == groups,
+        "schedule broadcast: {} routes for {groups} groups",
+        routes.len()
+    );
+    Ok(routes)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::run_comm_group;
+    use crate::collectives::{run_comm_group, CommRoute};
     use crate::coordinator::GroupSample;
     use crate::scheduler::costmodel::FittedCost;
 
@@ -277,6 +403,7 @@ mod tests {
         GroupSample {
             group: 0,
             elems,
+            route: CommRoute::Flat,
             encode_secs: enc,
             comm_secs: comm,
             comm_exposed_secs: comm,
@@ -347,10 +474,11 @@ mod tests {
         // backward compute, so some multi-group partition beats full merge.
         feed(&mut d, 1e-6, 5e-7, 60);
         match d.decide() {
-            Decision::Switch { partition, f_current, f_new } => {
+            Decision::Switch { partition, routes, f_current, f_new } => {
                 assert!(partition.num_groups() > 1);
+                assert!(routes.is_empty(), "no routing enabled");
                 assert!(f_new < f_current);
-                d.apply(partition);
+                d.apply(partition, routes);
             }
             Decision::Keep => panic!("expected a switch under comm-dominated costs"),
         }
@@ -365,13 +493,16 @@ mod tests {
     }
 
     #[test]
-    fn sync_applies_same_epoch_and_partition_on_all_ranks() {
+    fn sync_applies_same_epoch_partition_and_routes_on_all_ranks() {
+        use crate::scheduler::RouteChoice::{Flat, Hierarchical};
         let results = run_comm_group(3, |c| {
-            let mut d = driver_with(10, 0.05, 8);
-            // Rank 0 decides a switch; followers pass Keep (ignored).
+            let mut d = driver_with(10, 0.05, 8).with_routing(3, 2);
+            // Rank 0 decides a switch with mixed routes; followers pass
+            // Keep (ignored).
             let decision = if c.rank() == 0 {
                 Decision::Switch {
                     partition: Partition::naive_even(8, 3),
+                    routes: vec![Flat, Hierarchical, Flat],
                     f_current: 1.0,
                     f_new: 0.5,
                 }
@@ -379,13 +510,80 @@ mod tests {
                 Decision::Keep
             };
             let switched = d.sync(c, decision).unwrap();
-            (d.epoch(), d.partition().bounds().to_vec(), switched.is_some())
+            (
+                d.epoch(),
+                d.partition().bounds().to_vec(),
+                d.routes().to_vec(),
+                switched.is_some(),
+            )
         });
-        for (epoch, bounds, switched) in &results {
+        for (epoch, bounds, routes, switched) in &results {
             assert_eq!(*epoch, 1);
             assert_eq!(bounds, results[0].1.as_slice());
+            assert_eq!(routes, &vec![Flat, Hierarchical, Flat]);
             assert!(*switched);
         }
+    }
+
+    #[test]
+    fn route_search_flips_groups_to_flat_when_the_hierarchy_stops_paying() {
+        // Routing over 8 ranks / 2 nodes. The hierarchical samples carry a
+        // huge intra (fan-stage) cost next to a tiny inter ring, so the
+        // flat ring implied by the inter fit is far cheaper at every size:
+        // the re-search must flip every group's route to Flat.
+        let mut d = driver_with(10, 0.05, 8).with_routing(8, 2);
+        assert_eq!(d.routes(), &[RouteChoice::Hierarchical]);
+        let (bi, gi) = (2e-2, 1e-7);
+        let (bx, gx) = (1e-6, 1e-9);
+        let mk = |elems: usize| {
+            let inter = bx + gx * elems as f64;
+            let mut s = sample(elems, 1e-5, bi + gi * elems as f64 + inter, 1e-5);
+            s.route = CommRoute::TwoLevel;
+            s.comm_inter_secs = inter;
+            s
+        };
+        for _ in 0..60 {
+            d.observe(&[mk(4_000), mk(36_000)], 4e-2);
+        }
+        match d.decide() {
+            Decision::Switch { partition, routes, f_current, f_new } => {
+                assert!(f_new < f_current);
+                assert_eq!(routes.len(), partition.num_groups());
+                assert!(
+                    routes.iter().all(|&r| r == RouteChoice::Flat),
+                    "expected all-flat routes, got {routes:?}"
+                );
+                d.apply(partition, routes);
+            }
+            Decision::Keep => panic!("expected a route switch away from the hierarchy"),
+        }
+        assert!(d.routes().iter().all(|&r| r == RouteChoice::Flat));
+        // Stationary conditions: no thrash back.
+        for _ in 0..60 {
+            d.observe(&[mk(4_000), mk(36_000)], 4e-2);
+        }
+        assert!(matches!(d.decide(), Decision::Keep));
+    }
+
+    #[test]
+    fn parse_routes_is_strict() {
+        let ok = Value::parse(r#"{"routes": ["flat", "hier"]}"#).unwrap();
+        assert_eq!(
+            parse_routes(&ok, 2).unwrap(),
+            vec![RouteChoice::Flat, RouteChoice::Hierarchical]
+        );
+        let empty = Value::parse(r#"{"routes": []}"#).unwrap();
+        assert!(parse_routes(&empty, 3).unwrap().is_empty());
+        // Wrong count, unknown token, wrong types, missing key: all errors.
+        assert!(parse_routes(&ok, 3).is_err());
+        let bad = Value::parse(r#"{"routes": ["flat", "warp"]}"#).unwrap();
+        assert!(parse_routes(&bad, 2).is_err());
+        let bad = Value::parse(r#"{"routes": [1, 2]}"#).unwrap();
+        assert!(parse_routes(&bad, 2).is_err());
+        let bad = Value::parse(r#"{"routes": "flat"}"#).unwrap();
+        assert!(parse_routes(&bad, 1).is_err());
+        let bad = Value::parse(r#"{"epoch": 1}"#).unwrap();
+        assert!(parse_routes(&bad, 1).is_err());
     }
 
     #[test]

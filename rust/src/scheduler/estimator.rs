@@ -19,8 +19,9 @@
 //! Once the partition has ≥ 2 distinct group sizes, the full weighted fit
 //! takes over.
 
-use super::costmodel::{FittedCost, TwoLevelCost};
+use super::costmodel::{FittedCost, RouteCostModel, TwoLevelCost};
 use super::objective::AnalyticObjective;
+use crate::collectives::CommRoute;
 use crate::coordinator::GroupSample;
 
 /// Minimum coefficient of variation of the (weighted) sizes before the
@@ -168,12 +169,17 @@ impl Ewma {
 pub struct CostEstimator {
     pub enc: EwmaCost,
     pub dec: EwmaCost,
-    /// Total collective cost (both levels; always fed).
+    /// Total collective cost (every sample regardless of route; the
+    /// fallback model when no per-route split exists).
     pub comm: EwmaCost,
-    /// Inter-node stage only (fed when samples carry a two-level split).
+    /// Inter-node stage only (fed by hierarchical-routed samples that
+    /// carry a per-level split).
     pub comm_inter: EwmaCost,
     /// Intra-node stages only (fed alongside `comm_inter`).
     pub comm_intra: EwmaCost,
+    /// Flat-routed samples only — the measured side of the flat/hier
+    /// route comparison once any group actually rides the flat ring.
+    pub comm_flat: EwmaCost,
     step_secs: Ewma,
 }
 
@@ -206,31 +212,61 @@ impl CostEstimator {
             comm: EwmaCost::new(ewma, comm_prior.unwrap_or_else(default_prior)),
             comm_inter: EwmaCost::new(ewma, level_prior),
             comm_intra: EwmaCost::new(ewma, level_prior),
+            comm_flat: EwmaCost::new(ewma, level_prior),
             step_secs: Ewma::new(ewma),
         }
     }
 
     /// Record one step's per-group timings plus the measured compute time.
+    /// Each sample files under the fits of the route it actually ran:
+    /// flat-routed groups feed `comm_flat`, hierarchical-routed groups
+    /// with a per-level split feed `comm_inter`/`comm_intra`, and every
+    /// sample feeds the route-agnostic total.
     pub fn observe_step(&mut self, samples: &[GroupSample], compute_secs: f64) {
         for s in samples {
             self.enc.observe(s.elems, s.encode_secs);
             self.dec.observe(s.elems, s.decode_secs);
             self.comm.observe(s.elems, s.comm_secs);
-            if s.comm_inter_secs > 0.0 {
-                self.comm_inter.observe(s.elems, s.comm_inter_secs);
-                self.comm_intra
-                    .observe(s.elems, (s.comm_secs - s.comm_inter_secs).max(0.0));
+            match s.route {
+                CommRoute::Flat => self.comm_flat.observe(s.elems, s.comm_secs),
+                CommRoute::TwoLevel => {
+                    if s.comm_inter_secs > 0.0 {
+                        self.comm_inter.observe(s.elems, s.comm_inter_secs);
+                        self.comm_intra
+                            .observe(s.elems, (s.comm_secs - s.comm_inter_secs).max(0.0));
+                    }
+                }
             }
         }
         self.step_secs.observe(compute_secs);
     }
 
-    /// Per-level communication fits, once two-level samples have been
+    /// Per-level communication fits, once hierarchical samples have been
     /// observed (`None` on a flat fabric).
     pub fn two_level_fit(&self) -> Option<TwoLevelCost> {
         (self.comm_inter.samples() > 0).then(|| TwoLevelCost {
             intra: self.comm_intra.fit(),
             inter: self.comm_inter.fit(),
+        })
+    }
+
+    /// Per-route comm models for the `(partition, route)` search, once
+    /// the hierarchy has been observed. The hierarchical side is the
+    /// combined per-level fit; the flat side is the live flat fit when any
+    /// group has actually ridden the flat ring, and the ring-geometry
+    /// conversion [`TwoLevelCost::flat_equivalent`] before that. `None`
+    /// until hierarchical samples exist — there is then nothing to choose
+    /// between, and the search keeps the global route.
+    pub fn route_costs(&self, world: usize, nodes: usize) -> Option<RouteCostModel> {
+        let tl = self.two_level_fit()?;
+        let flat = if self.comm_flat.samples() > 0 {
+            self.comm_flat.fit()
+        } else {
+            tl.flat_equivalent(world, nodes)
+        };
+        Some(RouteCostModel {
+            flat,
+            hier: tl.combined(),
         })
     }
 
@@ -288,6 +324,7 @@ mod tests {
         GroupSample {
             group: 0,
             elems,
+            route: CommRoute::Flat,
             encode_secs: enc,
             comm_secs: comm,
             comm_exposed_secs: comm,
@@ -380,6 +417,7 @@ mod tests {
                 let intra = bi + gi * n as f64;
                 let inter = bx + gx * n as f64;
                 let mut s = sample(n, 1e-5, intra + inter, 1e-5);
+                s.route = CommRoute::TwoLevel;
                 s.comm_inter_secs = inter;
                 est.observe_step(&[s], 1e-2);
             }
@@ -397,6 +435,44 @@ mod tests {
         let rel = (combined.predict(n) - total.predict(n)).abs() / total.predict(n);
         assert!(rel < 1e-6, "combined vs total at {n}: rel {rel}");
         assert!(est.objective(vec![100, 200], &[0.5, 0.5], 0.3).is_some());
+    }
+
+    #[test]
+    fn route_costs_derive_flat_until_flat_samples_arrive() {
+        let (world, nodes) = (8usize, 2usize);
+        let mut est = CostEstimator::new(0.2, None, None, None);
+        assert!(est.route_costs(world, nodes).is_none(), "no hierarchy observed yet");
+
+        // Hierarchical samples only: the flat side must come from the
+        // ring-geometry conversion of the inter fit.
+        let (bi, gi) = (2e-5, 1e-10);
+        let (bx, gx) = (4e-4, 3e-9);
+        for _ in 0..60 {
+            for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+                let inter = bx + gx * n as f64;
+                let mut s = sample(n, 1e-5, bi + gi * n as f64 + inter, 1e-5);
+                s.route = CommRoute::TwoLevel;
+                s.comm_inter_secs = inter;
+                est.observe_step(&[s], 1e-2);
+            }
+        }
+        let rc = est.route_costs(world, nodes).expect("hierarchy observed");
+        let derived = est.two_level_fit().unwrap().flat_equivalent(world, nodes);
+        assert!((rc.flat.b - derived.b).abs() < 1e-12);
+        assert!((rc.flat.g - derived.g).abs() < 1e-18);
+        assert!((rc.hier.b - (bi + bx)).abs() / (bi + bx) < 1e-2);
+
+        // Once flat-routed samples flow, the measured flat fit replaces
+        // the derived one.
+        let (fb, fg) = (9e-4, 8e-9);
+        for _ in 0..60 {
+            for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+                est.observe_step(&[sample(n, 1e-5, fb + fg * n as f64, 1e-5)], 1e-2);
+            }
+        }
+        let rc = est.route_costs(world, nodes).unwrap();
+        assert!((rc.flat.b - fb).abs() / fb < 1e-2, "flat b = {}", rc.flat.b);
+        assert!((rc.flat.g - fg).abs() / fg < 1e-3, "flat g = {}", rc.flat.g);
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //! - [`objective`]: the Eq. (7) iteration-time objective F(X_y).
 //! - [`search`]: Algorithm 2 — the heuristic that finds a near-optimal
 //!   partition with binary search over the unimodal F(X_2) (Theorem 3),
-//!   extended to y > 2 one cut at a time.
+//!   extended to y > 2 one cut at a time; on hierarchical fabrics the
+//!   search space is `(partition, per-group route)` and the outcome
+//!   carries one [`RouteChoice`] per group.
 //! - [`driver`]: the measure → search → repartition loop: periodic
 //!   re-search against live fits, hysteresis against thrash, and the
 //!   epoch-tagged broadcast that applies switches consistently on every
@@ -24,8 +26,8 @@ pub mod objective;
 pub mod partition;
 pub mod search;
 
-pub use costmodel::FittedCost;
-pub use driver::{Decision, Driver, DriverConfig};
+pub use costmodel::{FittedCost, RouteCostModel, TwoLevelCost};
+pub use driver::{Decision, Driver, DriverConfig, ScheduleUpdate};
 pub use estimator::CostEstimator;
 pub use partition::Partition;
-pub use search::{mergecomp_search, SearchOutcome, SearchParams};
+pub use search::{mergecomp_search, RouteChoice, RouteMode, SearchOutcome, SearchParams};

@@ -13,7 +13,9 @@
 //!   time (real plane: the trainer runs a few steps under the candidate
 //!   partition — the paper's "less than 50 iterations" warm-up search).
 
+use super::costmodel::RouteCostModel;
 use super::partition::Partition;
+use super::search::RouteChoice;
 use crate::simulator::{simulate, SimSetup};
 
 /// Anything that can score a candidate partition (lower is better).
@@ -21,6 +23,13 @@ pub trait Objective {
     fn eval(&mut self, p: &Partition) -> f64;
     /// Number of evaluations performed (search-budget accounting).
     fn evals(&self) -> usize;
+    /// The per-group routes `eval` implicitly priced `p` under. The
+    /// default (empty) means the objective has no route freedom — callers
+    /// keep the communicator's global route. [`AnalyticObjective`]
+    /// overrides this once a [`RouteCostModel`] is attached.
+    fn routes(&self, _p: &Partition) -> Vec<RouteChoice> {
+        Vec::new()
+    }
 }
 
 /// Exact Eq.-7 objective on the simulator plane.
@@ -86,10 +95,15 @@ pub struct AnalyticObjective {
     pub enc: super::costmodel::FittedCost,
     /// Fitted decode-path cost per received payload.
     pub dec: super::costmodel::FittedCost,
-    /// Fitted collective cost for a group of x elements.
+    /// Fitted collective cost for a group of x elements (the global-route
+    /// model; superseded per group when `route_costs` is attached).
     pub comm: super::costmodel::FittedCost,
     /// Payloads decoded per group (world−1 for allgather, 1 for allreduce).
     pub dec_fanin: usize,
+    /// Per-route comm models: when present, each group is priced under
+    /// the cheaper of flat/hierarchical — the `(partition, route)` search
+    /// space — and [`AnalyticObjective::routes`] reports the choices.
+    route_costs: Option<RouteCostModel>,
     evals: usize,
 }
 
@@ -112,14 +126,41 @@ impl AnalyticObjective {
             dec,
             comm,
             dec_fanin: dec_fanin.max(1),
+            route_costs: None,
             evals: 0,
         }
     }
-}
 
-impl Objective for AnalyticObjective {
-    fn eval(&mut self, p: &Partition) -> f64 {
+    /// Attach per-route comm models, turning the search space into
+    /// `(partition, per-group route)`.
+    pub fn with_route_costs(mut self, route_costs: RouteCostModel) -> Self {
+        self.route_costs = Some(route_costs);
+        self
+    }
+
+    pub fn set_route_costs(&mut self, route_costs: Option<RouteCostModel>) {
+        self.route_costs = route_costs;
+    }
+
+    pub fn route_costs(&self) -> Option<&RouteCostModel> {
+        self.route_costs.as_ref()
+    }
+
+    /// Comm cost of one group: forced route, best route (when a route
+    /// model is attached), or the global-route model.
+    fn comm_secs(&self, elems: usize, forced: Option<RouteChoice>) -> f64 {
+        match (&self.route_costs, forced) {
+            (Some(rc), Some(route)) => rc.cost(route).predict(elems),
+            (Some(rc), None) => rc.best(elems).1,
+            (None, _) => self.comm.predict(elems),
+        }
+    }
+
+    fn eval_inner(&mut self, p: &Partition, forced: Option<&[RouteChoice]>) -> f64 {
         self.evals += 1;
+        if let Some(routes) = forced {
+            assert_eq!(routes.len(), p.num_groups(), "one route per group");
+        }
         // Same two-resource WFBP timeline as simulator::timeline, driven by
         // the fitted costs.
         let y = p.num_groups();
@@ -134,7 +175,7 @@ impl Objective for AnalyticObjective {
             }
             gpu_t += self.enc.predict(elems);
             let start = gpu_t.max(comm_free);
-            comm_free = start + self.comm.predict(elems);
+            comm_free = start + self.comm_secs(elems, forced.map(|r| r[j]));
             comm_done[j] = comm_free;
         }
         for j in 0..y {
@@ -144,8 +185,36 @@ impl Objective for AnalyticObjective {
         gpu_t
     }
 
+    /// Score `p` with every group pinned to the given route — how the
+    /// driver prices the *current* `(partition, routes)` schedule so that
+    /// route-only improvements register as predicted gain.
+    pub fn eval_with_routes(&mut self, p: &Partition, routes: &[RouteChoice]) -> f64 {
+        if routes.is_empty() {
+            return self.eval_inner(p, None);
+        }
+        self.eval_inner(p, Some(routes))
+    }
+}
+
+impl Objective for AnalyticObjective {
+    fn eval(&mut self, p: &Partition) -> f64 {
+        self.eval_inner(p, None)
+    }
+
     fn evals(&self) -> usize {
         self.evals
+    }
+
+    fn routes(&self, p: &Partition) -> Vec<RouteChoice> {
+        let Some(rc) = &self.route_costs else {
+            return Vec::new();
+        };
+        (0..p.num_groups())
+            .map(|j| {
+                let elems: usize = p.group_range(j).map(|i| self.sizes[i]).sum();
+                rc.best(elems).0
+            })
+            .collect()
     }
 }
 
@@ -175,6 +244,13 @@ impl<'o> Memo<'o> {
 
     pub fn evals(&self) -> usize {
         self.inner.evals()
+    }
+
+    /// The inner objective's route recommendation for `p` (not cached —
+    /// it is pure given the fitted models and only queried once per
+    /// search).
+    pub fn routes(&self, p: &Partition) -> Vec<RouteChoice> {
+        self.inner.routes(p)
     }
 }
 
@@ -218,6 +294,44 @@ mod tests {
         let f2 = memo.eval(&p);
         assert_eq!(f1, f2);
         assert_eq!(memo.evals(), 1, "second eval served from cache");
+    }
+
+    #[test]
+    fn route_aware_objective_prices_each_group_under_the_cheaper_route() {
+        use super::super::costmodel::{FittedCost, RouteCostModel};
+        // Flat: cheap latency, steep slope. Hier: big latency, shallow
+        // slope. Crossover near 21k elements.
+        let flat = FittedCost { b: 1e-5, g: 1e-8, r2: 1.0 };
+        let hier = FittedCost { b: 2e-4, g: 1e-9, r2: 1.0 };
+        let rc = RouteCostModel { flat, hier };
+        let zero = FittedCost { b: 0.0, g: 0.0, r2: 1.0 };
+        let sizes = vec![100usize, 1_000_000];
+        let mut obj = AnalyticObjective::new(
+            vec![1e-3, 1e-3],
+            sizes,
+            1e-3,
+            zero,
+            zero,
+            flat,
+            1,
+        )
+        .with_route_costs(rc);
+        let p = Partition::layer_wise(2);
+        let f_auto = obj.eval(&p);
+        let routes = obj.routes(&p);
+        assert_eq!(routes, vec![RouteChoice::Flat, RouteChoice::Hierarchical]);
+        // Forced-uniform routes can never beat the per-group minimum.
+        let f_flat = obj.eval_with_routes(&p, &[RouteChoice::Flat, RouteChoice::Flat]);
+        let f_hier = obj.eval_with_routes(
+            &p,
+            &[RouteChoice::Hierarchical, RouteChoice::Hierarchical],
+        );
+        assert!(f_auto <= f_flat + 1e-15 && f_auto <= f_hier + 1e-15);
+        // Pinning the objective's own choices reproduces the auto score.
+        assert_eq!(obj.eval_with_routes(&p, &routes), f_auto);
+        // Without a route model, no routes are reported.
+        obj.set_route_costs(None);
+        assert!(obj.routes(&p).is_empty());
     }
 
     #[test]

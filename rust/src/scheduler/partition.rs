@@ -12,6 +12,19 @@
 /// `bounds` has `y+1` entries: group `j` covers tensor indices
 /// `bounds[j]..bounds[j+1]` (backprop order), `bounds[0] == 0`,
 /// `bounds[y] == n`.
+///
+/// ```
+/// use mergecomp::scheduler::Partition;
+/// let p = Partition::from_cuts(5, vec![2]);
+/// assert_eq!(p.num_groups(), 2);
+/// assert_eq!(p.group_range(1), 2..5);
+/// assert_eq!(p.group_elems(&[10, 20, 30, 40, 50]), vec![30, 120]);
+/// // Bounds round-trip through the schedule broadcast's JSON wire form,
+/// // and malformed payloads are errors, never silently-dropped bounds:
+/// let wire = p.bounds_to_json();
+/// assert_eq!(Partition::from_json_bounds(5, &wire).unwrap(), p);
+/// assert!(Partition::try_from_bounds(5, vec![0, 2, 2, 5]).is_err());
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Partition {
     bounds: Vec<usize>,

@@ -14,9 +14,102 @@
 //!   `y`-group partition is worse than the `(y−1)`-group one or improves it
 //!   by less than `α·F_min(y−1)` — the diminishing-returns rule that makes
 //!   `Y = 2` the paper's recommended setting (§5.2).
+//!
+//! **Route-aware search.** On a hierarchical fabric the search space is
+//! `(partition, per-group route)`, not partitions alone: each candidate
+//! group is scored under both the flat ring and the hierarchical exchange
+//! (the per-level α+β·size fits of
+//! [`RouteCostModel`](super::costmodel::RouteCostModel)), the cheaper one
+//! wins, and [`SearchOutcome::routes`] records one [`RouteChoice`] per
+//! group of the winning partition. Because the route decomposes per group,
+//! minimizing over routes inside the objective searches the product space
+//! exactly — no extra enumeration. Objectives without route freedom return
+//! no routes and callers keep the communicator's global route.
 
 use super::objective::{Memo, Objective};
 use super::partition::Partition;
+
+/// Which collective algorithm one tensor group rides — the scheduler-side
+/// counterpart of [`CommRoute`](crate::collectives::CommRoute), chosen per
+/// group by Algorithm 2 from the fitted per-level costs.
+///
+/// ```
+/// use mergecomp::scheduler::RouteChoice;
+/// let r = RouteChoice::from_name("hier").unwrap();
+/// assert_eq!(r, RouteChoice::Hierarchical);
+/// assert_eq!(RouteChoice::from_name(r.name()).unwrap(), r);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouteChoice {
+    /// Single-level ring over all ranks.
+    #[default]
+    Flat,
+    /// The hierarchical exchange over the attached topology (fan-in up
+    /// the leader chain, top-leader ring, fan-out).
+    Hierarchical,
+}
+
+impl RouteChoice {
+    /// Wire token used in the epoch-tagged schedule broadcast.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouteChoice::Flat => "flat",
+            RouteChoice::Hierarchical => "hier",
+        }
+    }
+
+    /// Strict inverse of [`RouteChoice::name`] (any other token is an
+    /// error — a malformed route must never be silently defaulted).
+    pub fn from_name(name: &str) -> anyhow::Result<RouteChoice> {
+        Ok(match name {
+            "flat" => RouteChoice::Flat,
+            "hier" => RouteChoice::Hierarchical,
+            other => anyhow::bail!("unknown route '{other}' (flat|hier)"),
+        })
+    }
+}
+
+/// Config/CLI-facing route policy (`--route auto|flat|hierarchical`):
+/// let the search pick per group, or pin every group to one route.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouteMode {
+    /// Algorithm 2 chooses per group from the fitted per-level costs.
+    #[default]
+    Auto,
+    /// Every group rides the flat ring.
+    Flat,
+    /// Every group rides the hierarchical exchange.
+    Hierarchical,
+}
+
+impl RouteMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouteMode::Auto => "auto",
+            RouteMode::Flat => "flat",
+            RouteMode::Hierarchical => "hierarchical",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<RouteMode> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "auto" => RouteMode::Auto,
+            "flat" => RouteMode::Flat,
+            "hierarchical" | "hier" | "two-level" | "twolevel" => RouteMode::Hierarchical,
+            other => anyhow::bail!("unknown route mode '{other}' (auto|flat|hierarchical)"),
+        })
+    }
+
+    /// The uniform per-group choice a forced mode pins (`None` for
+    /// `Auto`).
+    pub fn forced(&self) -> Option<RouteChoice> {
+        match self {
+            RouteMode::Auto => None,
+            RouteMode::Flat => Some(RouteChoice::Flat),
+            RouteMode::Hierarchical => Some(RouteChoice::Hierarchical),
+        }
+    }
+}
 
 /// Algorithm 2 inputs: Y (max groups) and α (marginal-benefit threshold).
 #[derive(Debug, Clone, Copy)]
@@ -40,6 +133,12 @@ impl Default for SearchParams {
 pub struct SearchOutcome {
     pub partition: Partition,
     pub f_min: f64,
+    /// One [`RouteChoice`] per group of `partition`, when the objective
+    /// has route freedom (a fitted [`RouteCostModel`]); empty otherwise —
+    /// callers then keep the communicator's global route.
+    ///
+    /// [`RouteCostModel`]: super::costmodel::RouteCostModel
+    pub routes: Vec<RouteChoice>,
     /// Best objective found for each explored y (1-indexed by position 0 = y 1).
     pub per_y: Vec<(usize, f64)>,
     /// Objective evaluations spent (the paper reports < 50 iterations for
@@ -195,9 +294,11 @@ pub fn mergecomp_search(
         }
     }
 
+    let routes = memo.routes(&best);
     SearchOutcome {
         partition: best,
         f_min,
+        routes,
         per_y,
         evals: memo.evals(),
     }
@@ -260,6 +361,41 @@ mod tests {
         );
         // O(log N) evals, not O(N): the paper's <50-iterations claim.
         assert!(out.evals < 50, "used {} evals", out.evals);
+    }
+
+    #[test]
+    fn search_reports_routes_when_the_objective_has_route_freedom() {
+        use crate::scheduler::costmodel::{FittedCost, RouteCostModel};
+        use crate::scheduler::objective::AnalyticObjective;
+        let zero = FittedCost { b: 0.0, g: 0.0, r2: 1.0 };
+        let flat = FittedCost { b: 1e-5, g: 1e-8, r2: 1.0 };
+        let hier = FittedCost { b: 2e-4, g: 1e-9, r2: 1.0 };
+        let sizes: Vec<usize> = [vec![100usize; 4], vec![1_000_000usize; 4]].concat();
+        let mut obj =
+            AnalyticObjective::new(vec![1e-3; 8], sizes, 1e-3, zero, zero, flat, 1)
+                .with_route_costs(RouteCostModel { flat, hier });
+        let out = mergecomp_search(&mut obj, 8, SearchParams { y_max: 3, alpha: 0.0 });
+        assert_eq!(out.routes.len(), out.partition.num_groups());
+        // A route-free objective reports no routes.
+        let (mut sim, n) = sim_objective(CodecKind::EfSignSgd, 4);
+        let out = mergecomp_search(&mut sim, n, SearchParams::default());
+        assert!(out.routes.is_empty());
+    }
+
+    #[test]
+    fn route_names_are_strict() {
+        assert!(RouteChoice::from_name("warp").is_err());
+        assert!(RouteMode::from_name("scenic").is_err());
+        assert_eq!(RouteMode::from_name("two-level").unwrap(), RouteMode::Hierarchical);
+        assert_eq!(RouteMode::Auto.forced(), None);
+        assert_eq!(RouteMode::Flat.forced(), Some(RouteChoice::Flat));
+        assert_eq!(
+            RouteMode::Hierarchical.forced(),
+            Some(RouteChoice::Hierarchical)
+        );
+        for m in [RouteMode::Auto, RouteMode::Flat, RouteMode::Hierarchical] {
+            assert_eq!(RouteMode::from_name(m.name()).unwrap(), m);
+        }
     }
 
     #[test]

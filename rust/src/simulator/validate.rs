@@ -25,9 +25,9 @@
 use super::SimBreakdown;
 use crate::compression::{CodecKind, Collective};
 use crate::coordinator::{ExchangeStats, GroupSample};
-use crate::netsim::{Fabric, NetScenario, TwoLevelFabric};
+use crate::netsim::{Fabric, HierCost, NetScenario, RouteDepth, ThreeLevelFabric, TwoLevelFabric};
 use crate::profiles::ModelProfile;
-use crate::scheduler::costmodel::FittedCost;
+use crate::scheduler::costmodel::{FittedCost, TwoLevelCost};
 use crate::scheduler::objective::{AnalyticObjective, Objective as _};
 use crate::scheduler::{mergecomp_search, CostEstimator, Decision, Driver, DriverConfig, Partition};
 use crate::simulator::OverheadModel;
@@ -174,6 +174,129 @@ pub fn two_level_comm_fit(
     FittedCost { b: s0, g: (s1 - s0) / n1, r2: 1.0 }
 }
 
+/// The synthetic ground truth for route-choice experiments on a two-level
+/// fabric: the flat route's affine comm model plus the hierarchical
+/// route's **per-level split** (`TwoLevelCost { intra, inter }` — exactly
+/// the decomposition the estimator fits from `CommBreakdown` samples, so
+/// a simulated measurement loop can feed the driver per-level timings and
+/// compare its route choices against this oracle).
+pub fn two_level_route_fits(
+    kind: CodecKind,
+    two: &TwoLevelFabric,
+    world: usize,
+) -> (FittedCost, TwoLevelCost) {
+    let (h, d) = affine_wire(kind);
+    let hier = |elems: f64| -> HierCost {
+        let wire = h + d * elems;
+        match kind.collective() {
+            Collective::AllReduce => two.hier_allreduce(world, wire),
+            Collective::AllGather => two.hier_allgather(world, wire),
+        }
+    };
+    let n1 = (1usize << 20) as f64;
+    let (c0, c1) = (hier(0.0), hier(n1));
+    let fit = |a: f64, b: f64| FittedCost { b: a, g: (b - a) / n1, r2: 1.0 };
+    (
+        two_level_comm_fit(kind, two, world, false),
+        TwoLevelCost {
+            intra: fit(c0.intra_secs, c1.intra_secs),
+            inter: fit(c0.inter_secs, c1.inter_secs),
+        },
+    )
+}
+
+/// Route-choice ground truth for an **allgather** codec on an explicitly
+/// shaped two-level fabric (`node_sizes`, e.g. `[4, 2]` — the real split,
+/// not the balanced approximation): affine `(flat, hier per-level split)`
+/// models in *elements*.
+///
+/// Pricing follows the measured plane rather than the lockstep worst-link
+/// model:
+///
+/// - **flat ring** (non-lockstep pipeline, which is what the tagged
+///   transport actually runs): pipeline fill pays one latency per hop of
+///   the ring — `(w−L)` intra hops plus `L` boundary hops — and steady
+///   state moves the `w−1` payloads through the slowest link class.
+/// - **hierarchical**: the leader *serializes* its fan — `(m−1)` receives
+///   of `s` plus `(m−1)` sends of the full `w·s` table over the intra
+///   fabric, with `m` the **largest** node — while the leader ring moves
+///   `L−1` node frames of `m·s` over the inter fabric.
+///
+/// This is the regime where the route choice is real: the flat ring wins
+/// small groups whenever `α_inter < (2m−2−w+L)·α_intra` (fewer serialized
+/// hops), while the hierarchical exchange wins large groups as soon as
+/// the inter bandwidth gap dominates — i.e. "inter-node cost dominates
+/// for large groups only".
+pub fn shaped_route_fits(
+    kind: CodecKind,
+    intra: &Fabric,
+    inter: &Fabric,
+    node_sizes: &[usize],
+) -> (FittedCost, TwoLevelCost) {
+    assert_eq!(
+        kind.collective(),
+        Collective::AllGather,
+        "shaped_route_fits prices the allgather collectives"
+    );
+    let (h, d) = affine_wire(kind);
+    let w = node_sizes.iter().sum::<usize>() as f64;
+    let l = node_sizes.len() as f64;
+    let m = node_sizes.iter().copied().max().unwrap_or(1) as f64;
+    let slow_beta = inter.beta.min(intra.beta);
+    let fit = |b: f64, g_per_byte: f64| FittedCost {
+        b: b + g_per_byte * h,
+        g: g_per_byte * d,
+        r2: 1.0,
+    };
+    let flat = fit(
+        (w - l) * intra.alpha + l * inter.alpha,
+        (w - 1.0) / slow_beta,
+    );
+    let hier_intra = fit(
+        2.0 * (m - 1.0) * intra.alpha,
+        (m - 1.0) * (1.0 + w) / intra.beta,
+    );
+    let hier_inter = fit((l - 1.0) * inter.alpha, (l - 1.0) * m / inter.beta);
+    (
+        flat,
+        TwoLevelCost {
+            intra: hier_intra,
+            inter: hier_inter,
+        },
+    )
+}
+
+/// Affine comm model for `kind` on a three-level fabric at the given
+/// recursion depth — the three-route analogue of [`two_level_comm_fit`].
+pub fn three_level_comm_fit(
+    kind: CodecKind,
+    three: &ThreeLevelFabric,
+    world: usize,
+    depth: RouteDepth,
+) -> FittedCost {
+    let (h, d) = affine_wire(kind);
+    let secs = |elems: f64| {
+        let wire = h + d * elems;
+        let costs = match kind.collective() {
+            Collective::AllReduce => [
+                three.allreduce(world, wire, RouteDepth::Flat),
+                three.allreduce(world, wire, RouteDepth::TwoLevel),
+                three.allreduce(world, wire, RouteDepth::ThreeLevel),
+            ],
+            Collective::AllGather => three.allgather(world, wire),
+        };
+        match depth {
+            RouteDepth::Flat => costs[0].seconds,
+            RouteDepth::TwoLevel => costs[1].seconds,
+            RouteDepth::ThreeLevel => costs[2].seconds,
+        }
+    };
+    let n1 = (1usize << 20) as f64;
+    let s0 = secs(0.0);
+    let s1 = secs(n1);
+    FittedCost { b: s0, g: (s1 - s0) / n1, r2: 1.0 }
+}
+
 /// Eq.-7 objective for `profile` under the true costs of `plane`.
 pub fn plane_objective(profile: &ModelProfile, plane: &LinearPlane) -> AnalyticObjective {
     let bwd = profile.iter_compute_s * (1.0 - profile.fwd_frac);
@@ -301,6 +424,7 @@ pub fn run_online_loop(
                 GroupSample {
                     group: j,
                     elems,
+                    route: crate::collectives::CommRoute::Flat,
                     encode_secs: plane.enc.predict(elems),
                     comm_secs: plane.comm.predict(elems),
                     comm_exposed_secs: 0.0,
@@ -312,8 +436,11 @@ pub fn run_online_loop(
         driver.observe(&samples, profile.iter_compute_s);
 
         if driver.due(step) {
-            if let Decision::Switch { partition, .. } = driver.decide() {
-                driver.apply(partition);
+            if let Decision::Switch {
+                partition, routes, ..
+            } = driver.decide()
+            {
+                driver.apply(partition, routes);
             }
         }
 
@@ -533,6 +660,76 @@ mod tests {
             "two-level optimum {} should beat flat {}",
             f_min[1],
             f_min[0]
+        );
+    }
+
+    #[test]
+    fn shaped_route_fits_cross_over_with_group_size() {
+        use crate::scheduler::costmodel::RouteCostModel;
+        use crate::scheduler::RouteChoice;
+        // world=6 split 4+2, NVLink intra, a low-latency thin inter pipe:
+        // inter cost dominates large groups only, so the flat ring wins
+        // small groups (fewer serialized hops) and the hierarchical
+        // exchange wins large ones.
+        let inter = Fabric::custom(30e-6, 1.2e9);
+        let (flat, split) =
+            shaped_route_fits(CodecKind::EfSignSgd, &Fabric::nvlink(), &inter, &[4, 2]);
+        let rc = RouteCostModel { flat, hier: split.combined() };
+        assert_eq!(rc.best(10_000).0, RouteChoice::Flat);
+        assert_eq!(rc.best(4_000_000).0, RouteChoice::Hierarchical);
+        assert!(!split.inter_dominates(10_000), "latency regime: intra fan dominates");
+        assert!(split.inter_dominates(4_000_000), "bandwidth regime: inter dominates");
+    }
+
+    #[test]
+    fn route_fits_split_sums_to_the_total_hier_cost() {
+        let two = TwoLevelFabric::nvlink_tcp(2);
+        for kind in [CodecKind::Fp32, CodecKind::EfSignSgd] {
+            let (flat, split) = two_level_route_fits(kind, &two, 8);
+            let total = two_level_comm_fit(kind, &two, 8, true);
+            for n in [0usize, 1 << 14, 1 << 22] {
+                let sum = split.intra.predict(n) + split.inter.predict(n);
+                let rel = (sum - total.predict(n)).abs() / total.predict(n).max(1e-12);
+                assert!(rel < 1e-9, "{} at {n}: split sum off by {rel}", kind.name());
+            }
+            // And the flat side matches the existing flat fit.
+            let flat2 = two_level_comm_fit(kind, &two, 8, false);
+            assert_eq!(flat, flat2);
+        }
+    }
+
+    #[test]
+    fn three_level_fabric_moves_the_searched_optimum_when_the_gap_flips() {
+        let profile = transformer_100m();
+        let world = 8;
+        let search = SearchParams { y_max: 3, alpha: 0.02 };
+        let base = linear_plane(CodecKind::EfSignSgd, &Fabric::tcp(), world);
+        let f_for = |fabric: &ThreeLevelFabric, depth: RouteDepth| {
+            let plane = LinearPlane {
+                comm: three_level_comm_fit(CodecKind::EfSignSgd, fabric, world, depth),
+                ..base
+            };
+            let mut obj = plane_objective(&profile, &plane);
+            mergecomp_search(&mut obj, profile.num_tensors(), search).f_min
+        };
+        // Real WAN gap: each extra recursion level moves the optimum down.
+        let wan = ThreeLevelFabric::nvlink_tcp_wan(2, 2);
+        let (flat, two, three) = (
+            f_for(&wan, RouteDepth::Flat),
+            f_for(&wan, RouteDepth::TwoLevel),
+            f_for(&wan, RouteDepth::ThreeLevel),
+        );
+        assert!(three < two, "three-level optimum {three} should beat two-level {two}");
+        assert!(two < flat, "two-level optimum {two} should beat flat {flat}");
+        // Gap flipped (the "WAN" is just rack fabric): the rack stage is
+        // pure overhead and the searched optimum moves back to two-level.
+        let no_gap =
+            ThreeLevelFabric::new(Fabric::nvlink(), Fabric::tcp(), Fabric::tcp(), 2, 2);
+        let two = f_for(&no_gap, RouteDepth::TwoLevel);
+        let three = f_for(&no_gap, RouteDepth::ThreeLevel);
+        assert!(
+            two < three,
+            "without a WAN gap two-level {two} should beat three-level {three}"
         );
     }
 

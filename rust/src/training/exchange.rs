@@ -15,7 +15,7 @@ use crate::collectives::{Comm, TransportError};
 use crate::compression::CodecKind;
 use crate::coordinator::ExchangeEngine;
 pub use crate::coordinator::{ExchangeStats, GroupSample, PipelineMode};
-use crate::scheduler::Partition;
+use crate::scheduler::{Partition, RouteChoice};
 use crate::util::rng::Xoshiro256;
 
 /// One worker's exchange state for a fixed (codec, partition) pair — a thin
@@ -73,6 +73,18 @@ impl GradExchange {
     /// [`crate::coordinator::ExchangeEngine::repartition`]).
     pub fn repartition(&mut self, new: Partition) -> anyhow::Result<()> {
         self.engine.repartition(new)
+    }
+
+    /// Install per-group collective routes (`None` reverts to the
+    /// communicator's global route); see
+    /// [`crate::coordinator::ExchangeEngine::set_routes`].
+    pub fn set_routes(&mut self, routes: Option<Vec<RouteChoice>>) -> anyhow::Result<()> {
+        self.engine.set_routes(routes)
+    }
+
+    /// Current per-group routes (`None` = global route).
+    pub fn routes(&self) -> Option<&[RouteChoice]> {
+        self.engine.routes()
     }
 
     /// Codec state planes flattened to full-model length (test support).

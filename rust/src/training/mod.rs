@@ -15,7 +15,7 @@ pub mod launch;
 mod optimizer;
 mod trainer;
 
-pub use exchange::{ExchangeStats, GradExchange, PipelineMode};
+pub use exchange::{ExchangeStats, GradExchange, GroupSample, PipelineMode};
 pub use launch::{launch_local, LaunchOptions, LaunchReport, RankOutcome};
 pub use optimizer::SgdMomentum;
 pub use trainer::{

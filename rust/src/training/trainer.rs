@@ -27,15 +27,19 @@
 
 use super::exchange::{ExchangeStats, GradExchange};
 use super::optimizer::SgdMomentum;
-use crate::collectives::{run_comm_group, tcp_endpoint_with_nodes, Comm, TcpConfig, TransportKind};
+use crate::collectives::{
+    run_comm_group, tcp_endpoint_with_nodes, Comm, CommRoute, TcpConfig, TransportKind,
+};
 use crate::compression::{Codec as _, Collective};
 use crate::config::{ScheduleSpec, SchedulingMode, TrainConfig};
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::profiles::ModelProfile;
 use crate::runtime::{StepMeta, TensorMeta, TrainStep};
-use crate::scheduler::costmodel::{CostSampler, FittedCost};
+use crate::scheduler::costmodel::{CostSampler, FittedCost, TwoLevelCost};
 use crate::scheduler::objective::AnalyticObjective;
-use crate::scheduler::{CostEstimator, Decision, Driver, DriverConfig, Partition, SearchParams};
+use crate::scheduler::{
+    CostEstimator, Decision, Driver, DriverConfig, Partition, RouteChoice, RouteMode, SearchParams,
+};
 use crate::util::json::Value;
 use crate::util::rng::Xoshiro256;
 use crate::util::stats::Stopwatch;
@@ -63,6 +67,15 @@ pub struct RunResult {
     /// The partition in effect when training *ended* (online mode may have
     /// switched away from the warmup choice).
     pub partition: Partition,
+    /// Per-group collective routes in effect when training ended (empty =
+    /// every group on the topology's global route). Non-empty only under
+    /// `--route auto` on a non-flat topology once the driver has adopted a
+    /// routed schedule.
+    pub final_routes: Vec<RouteChoice>,
+    /// The live per-level comm fits at the end of the run (`None` on flat
+    /// fabrics or non-online schedules) — the per-level α+β·size slopes
+    /// the driver logs and the route search decides with.
+    pub two_level_fit: Option<TwoLevelCost>,
     pub final_train_loss: f32,
     pub eval_loss: f32,
     pub mean_step_secs: f64,
@@ -107,6 +120,21 @@ impl RunResult {
                 self.partition.bounds().iter().map(|&b| Value::from(b)).collect(),
             )),
             ("groups", Value::from(self.partition.num_groups())),
+            ("routes", Value::Arr(
+                self.final_routes.iter().map(|r| Value::from(r.name())).collect(),
+            )),
+            (
+                "comm_intra_g",
+                self.two_level_fit
+                    .map(|tl| Value::from(tl.intra.g))
+                    .unwrap_or(Value::Null),
+            ),
+            (
+                "comm_inter_g",
+                self.two_level_fit
+                    .map(|tl| Value::from(tl.inter.g))
+                    .unwrap_or(Value::Null),
+            ),
             ("final_train_loss", Value::from(self.final_train_loss as f64)),
             ("eval_loss", Value::from(self.eval_loss as f64)),
             ("mean_step_secs", Value::from(self.mean_step_secs)),
@@ -500,8 +528,14 @@ fn train_rank(
 ) -> anyhow::Result<RunResult> {
     // Attach the topology: identical on every rank (same config), so the
     // routed collectives stay a symmetric SPMD program. A non-flat
-    // topology switches the gradient exchange to the two-level path.
+    // topology switches the gradient exchange to the hierarchical path;
+    // `--route flat` forces the flat ring over it instead, and
+    // `--route auto` (the default) additionally lets the online scheduler
+    // re-route per tensor group.
     comm.set_topology(cfg.topology.build(comm.world())?)?;
+    if cfg.route == RouteMode::Flat {
+        comm.set_route(CommRoute::Flat);
+    }
     let rank = comm.rank();
     let meta = &setup.meta;
     let mut params = init_params(meta, cfg.seed);
@@ -593,14 +627,23 @@ fn train_rank(
             r2: d.r2,
         });
         let est = CostEstimator::new(dcfg.ewma, fits.enc, dec_prior, fits.comm);
-        Some(Driver::new(
+        let mut d = Driver::new(
             dcfg,
             est,
             meta.sizes_backprop_order(),
             bwd_shares,
             setup.profile.fwd_frac,
             partition.clone(),
-        ))
+        );
+        // Per-group route search: only meaningful when there is a real
+        // hierarchy to route over and the policy is Auto. The ring size
+        // handed to the route model is the TOP ring's (the stage the
+        // measured inter split times), not the node count — they differ
+        // on N-level topologies.
+        if cfg.route == RouteMode::Auto && !comm.topology().is_trivial() {
+            d = d.with_routing(comm.world(), comm.topology().top_leaders().len());
+        }
+        Some(d)
     } else {
         None
     };
@@ -628,13 +671,15 @@ fn train_rank(
         // Online loop: feed measurements; at reschedule boundaries
         // rank 0 re-searches and the epoch-tagged broadcast applies
         // any switch on every rank at the same step, remapping EF
-        // state bit-exactly.
+        // state bit-exactly and installing the per-group routes.
         if let Some(d) = driver.as_mut() {
             d.observe(exchange.group_samples(), runner.last_exec_secs());
             if d.due(step) {
                 let decision = if rank == 0 { d.decide() } else { Decision::Keep };
-                if let Some(new_partition) = d.sync(comm, decision)? {
-                    exchange.repartition(new_partition)?;
+                if let Some(update) = d.sync(comm, decision)? {
+                    exchange.repartition(update.partition)?;
+                    let routes = (!update.routes.is_empty()).then_some(update.routes);
+                    exchange.set_routes(routes)?;
                 }
             }
         }
@@ -690,10 +735,14 @@ fn train_rank(
         .as_ref()
         .map(|d| (d.reschedules, d.search_evals, d.epoch()))
         .unwrap_or((0, 0, 0));
+    let final_routes = exchange.routes().map(|r| r.to_vec()).unwrap_or_default();
+    let two_level_fit = driver.as_ref().and_then(|d| d.estimator().two_level_fit());
     Ok(RunResult {
         rank,
         records,
         partition: exchange.partition().clone(),
+        final_routes,
+        two_level_fit,
         final_train_loss: last_loss,
         eval_loss,
         mean_step_secs: sum_step / steps,

@@ -196,6 +196,7 @@ fn synth_samples(p: &Partition, sizes: &[usize], b: f64, g: f64) -> Vec<GroupSam
             GroupSample {
                 group: j,
                 elems,
+                route: mergecomp::collectives::CommRoute::Flat,
                 encode_secs: 1e-5,
                 comm_secs: b + g * elems as f64,
                 comm_exposed_secs: 0.0,
@@ -256,8 +257,8 @@ fn drifting_bandwidth_drives_consistent_repartition_on_all_ranks() {
             driver.observe(&samples, 4e-2);
             if driver.due(step) {
                 let decision = if c.rank() == 0 { driver.decide() } else { Decision::Keep };
-                if let Some(p) = driver.sync(c, decision).unwrap() {
-                    ex.repartition(p).unwrap();
+                if let Some(update) = driver.sync(c, decision).unwrap() {
+                    ex.repartition(update.partition).unwrap();
                 }
             }
         }

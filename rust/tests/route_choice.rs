@@ -1,0 +1,387 @@
+//! Route choice: per-group flat vs hierarchical collectives as a
+//! *scheduled* variable.
+//!
+//! Two properties pinned here:
+//!
+//! 1. **Route flips are bit-invisible.** Switching a group (or the whole
+//!    schedule) between the flat ring and the hierarchical exchange
+//!    mid-run must not change a single bit of the aggregated gradients or
+//!    the error-feedback state — on the in-process mesh AND over real TCP
+//!    sockets, at world=6 split `nodes=4+2`, for every paper codec. (The
+//!    allgather codecs are bit-identical across routes unconditionally;
+//!    FP32/FP16 are exercised on dyadic lattice gradients whose sums are
+//!    exact in wire precision — the same contract as
+//!    `tests/hierarchy_equivalence.rs`.)
+//!
+//! 2. **The online loop converges to the oracle route.** When a netsim
+//!    drift flips `TwoLevelCost::inter_dominates` (the inter level goes
+//!    from irrelevant to dominant), the driver's `(partition, route)`
+//!    schedule must reach the route-aware oracle's objective within 3
+//!    reschedule intervals — adopting hierarchical routes for the large
+//!    groups it previously ran flat.
+
+use mergecomp::collectives::{run_comm_group, run_comm_group_tcp, Comm, CommRoute, TopologySpec};
+use mergecomp::compression::{CodecKind, Collective};
+use mergecomp::netsim::Fabric;
+use mergecomp::scheduler::costmodel::RouteCostModel;
+use mergecomp::scheduler::objective::AnalyticObjective;
+use mergecomp::scheduler::{
+    mergecomp_search, CostEstimator, Decision, Driver, DriverConfig, FittedCost, Partition,
+    RouteChoice, SearchParams, TwoLevelCost,
+};
+use mergecomp::simulator::validate::{linear_plane, shaped_route_fits};
+use mergecomp::training::{GradExchange, GroupSample, PipelineMode};
+use mergecomp::util::rng::Xoshiro256;
+
+const WORLD: usize = 6;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    InProc,
+    Tcp,
+}
+
+fn run_comm_on<T: Send>(
+    backend: Backend,
+    world: usize,
+    f: impl Fn(&mut Comm) -> T + Send + Sync,
+) -> Vec<T> {
+    match backend {
+        Backend::InProc => run_comm_group(world, f),
+        Backend::Tcp => run_comm_group_tcp(world, f),
+    }
+}
+
+/// Per-tensor sizes (backprop order): uneven groups, sub-word tails.
+fn tensor_sizes() -> Vec<usize> {
+    vec![700, 33, 512, 129, 64, 257]
+}
+
+/// Deterministic per-(rank, step) gradients; dyadic lattice values for the
+/// allreduce codecs so any reduction grouping sums exactly.
+fn step_grads(kind: CodecKind, rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng =
+        Xoshiro256::seed_from_u64(0x707E ^ ((rank as u64) << 32) ^ ((step as u64) << 8));
+    let lattice = kind.collective() == Collective::AllReduce;
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut g = vec![0f32; n];
+            if lattice {
+                for v in g.iter_mut() {
+                    let k = rng.gen_range(129) as i64 - 64;
+                    *v = k as f32 / 64.0;
+                }
+            } else {
+                rng.fill_normal_f32(&mut g, 0.5);
+            }
+            g
+        })
+        .collect()
+}
+
+/// The per-step route schedule a flipping run walks through: global
+/// default (hierarchical), all-flat, mixed, the mirror mix — every flip a
+/// schedule switch mid-run.
+fn flip_schedule(step: usize) -> Option<Vec<RouteChoice>> {
+    use RouteChoice::{Flat, Hierarchical};
+    match step % 4 {
+        0 => None,
+        1 => Some(vec![Flat, Flat]),
+        2 => Some(vec![Flat, Hierarchical]),
+        _ => Some(vec![Hierarchical, Flat]),
+    }
+}
+
+/// Run `steps` exchanges; with `flip`, [`flip_schedule`] installs the
+/// per-group routes before each step (`None` = communicator default).
+/// Returns final grads + EF digest per rank.
+fn run_with_routes(
+    backend: Backend,
+    kind: CodecKind,
+    mode: PipelineMode,
+    steps: usize,
+    force_flat_global: bool,
+    flip: bool,
+) -> Vec<(Vec<Vec<f32>>, u64)> {
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    run_comm_on(backend, WORLD, move |c| {
+        c.set_topology(TopologySpec::Sized(vec![4, 2]).build(WORLD).unwrap())
+            .unwrap();
+        if force_flat_global {
+            c.set_route(CommRoute::Flat);
+        }
+        let mut ex =
+            GradExchange::new(kind, Partition::naive_even(n, 2), sizes.clone()).with_mode(mode);
+        let mut rng = Xoshiro256::seed_from_u64(42 + c.rank() as u64);
+        let mut last = Vec::new();
+        for step in 0..steps {
+            if flip {
+                ex.set_routes(flip_schedule(step)).unwrap();
+            }
+            let mut grads = step_grads(kind, c.rank(), step, &sizes);
+            ex.exchange(c, &mut grads, &mut rng).unwrap();
+            last = grads;
+        }
+        (last, ex.state_digest())
+    })
+}
+
+fn assert_flips_invisible(backend: Backend, kind: CodecKind, mode: PipelineMode) {
+    let steps = 4;
+    let reference = run_with_routes(backend, kind, mode, steps, true, false);
+    let flipped = run_with_routes(backend, kind, mode, steps, false, true);
+    for (rank, ((rg, rd), (fg, fd))) in reference.iter().zip(&flipped).enumerate() {
+        for (t, (rt, ft)) in rg.iter().zip(fg).enumerate() {
+            for (i, (a, b)) in rt.iter().zip(ft).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{:?} {} {}: rank {rank} tensor {t} idx {i}: {a} vs {b}",
+                    backend,
+                    kind.name(),
+                    mode.name()
+                );
+            }
+        }
+        assert_eq!(
+            rd,
+            fd,
+            "{:?} {} {}: rank {rank} EF state diverged across route flips",
+            backend,
+            kind.name(),
+            mode.name()
+        );
+    }
+}
+
+#[test]
+fn route_flips_bit_invisible_for_all_paper_codecs_inproc() {
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    for kind in kinds {
+        for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            assert_flips_invisible(Backend::InProc, kind, mode);
+        }
+    }
+}
+
+#[test]
+fn route_flips_bit_invisible_for_all_paper_codecs_over_tcp() {
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    for kind in kinds {
+        assert_flips_invisible(Backend::Tcp, kind, PipelineMode::Pipelined);
+    }
+}
+
+#[test]
+fn route_flips_bit_invisible_on_a_three_level_topology() {
+    // world=6 as 4 uneven nodes under 2 racks: the recursion climbs two
+    // fan stages; flipping between it and the flat ring must still be
+    // invisible.
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    for kind in [CodecKind::EfSignSgd, CodecKind::Fp16, CodecKind::Dgc { ratio: 0.1 }] {
+        let run = |hier_steps: bool| {
+            let sizes = sizes.clone();
+            run_comm_group(WORLD, move |c| {
+                let spec = TopologySpec::parse("nodes=1+1+2+2;racks=2+2").unwrap();
+                c.set_topology(spec.build(WORLD).unwrap()).unwrap();
+                let mut ex = GradExchange::new(kind, Partition::naive_even(n, 2), sizes.clone())
+                    .with_mode(PipelineMode::Pipelined);
+                let mut rng = Xoshiro256::seed_from_u64(7 + c.rank() as u64);
+                let mut last = Vec::new();
+                for step in 0..4 {
+                    // Alternate whole-schedule flips against an all-flat
+                    // reference.
+                    let choice = if hier_steps && step % 2 == 0 {
+                        RouteChoice::Hierarchical
+                    } else {
+                        RouteChoice::Flat
+                    };
+                    ex.set_routes(Some(vec![choice; 2])).unwrap();
+                    let mut grads = step_grads(kind, c.rank(), step, &sizes);
+                    ex.exchange(c, &mut grads, &mut rng).unwrap();
+                    last = grads;
+                }
+                (last, ex.state_digest())
+            })
+        };
+        let flat = run(false);
+        let flipped = run(true);
+        assert_eq!(flat, flipped, "{}: three-level route flips visible", kind.name());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Online route convergence under drift
+// ---------------------------------------------------------------------------
+
+/// Synthesize one step's GroupSamples for the driver's current
+/// `(partition, routes)` schedule from the shaped ground-truth fits.
+fn synth_route_samples(
+    driver: &Driver,
+    sizes: &[usize],
+    truth: &(FittedCost, TwoLevelCost),
+    enc: FittedCost,
+    dec: FittedCost,
+) -> Vec<GroupSample> {
+    let p = driver.partition();
+    let routes = driver.routes();
+    (0..p.num_groups())
+        .map(|j| {
+            let elems: usize = p.group_range(j).map(|i| sizes[i]).sum();
+            let hier = routes.is_empty() || routes[j] == RouteChoice::Hierarchical;
+            let (route, comm, inter) = if hier {
+                let intra = truth.1.intra.predict(elems);
+                let inter = truth.1.inter.predict(elems);
+                (CommRoute::TwoLevel, intra + inter, inter)
+            } else {
+                (CommRoute::Flat, truth.0.predict(elems), 0.0)
+            };
+            GroupSample {
+                group: j,
+                elems,
+                route,
+                encode_secs: enc.predict(elems),
+                comm_secs: comm,
+                comm_exposed_secs: 0.0,
+                comm_inter_secs: inter,
+                decode_secs: dec.predict(elems),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn online_loop_converges_to_the_oracle_route_after_inter_dominance_flips() {
+    let kind = CodecKind::EfSignSgd;
+    let node_sizes = [4usize, 2];
+    // Launch-overhead-heavy intra links under the inter pipe (same
+    // shaping as benches/hierarchy.rs): the flat ring owns the latency
+    // regime, the hierarchy the inter-bandwidth regime.
+    let intra = Fabric::custom(50e-6, 6.0e10);
+    // Pre-drift: a fat inter pipe — the flat ring wins everywhere and the
+    // inter level never dominates. Post-drift the inter bandwidth
+    // collapses ~17x: inter dominates large groups and the oracle
+    // schedule goes mixed (flat smalls, hierarchical larges).
+    let inter_pre = Fabric::custom(30e-6, 2e10);
+    let inter_post = Fabric::custom(30e-6, 1.2e9);
+    let truth_pre = shaped_route_fits(kind, &intra, &inter_pre, &node_sizes);
+    let truth_post = shaped_route_fits(kind, &intra, &inter_post, &node_sizes);
+    // The drift is exactly the inter-dominance flip the route search keys
+    // on.
+    assert!(!truth_pre.1.inter_dominates(4_000_000));
+    assert!(truth_post.1.inter_dominates(4_000_000));
+
+    // Model: a run of small tensors then a few large ones (far on either
+    // side of the ~1.2M-element route crossover), uniform backward
+    // shares; communication dominates compute so route choices are
+    // end-to-end visible.
+    let sizes: Vec<usize> = [vec![8_000usize; 12], vec![4_000_000usize; 4]].concat();
+    let n = sizes.len();
+    let (step_secs, fwd_frac) = (2e-3, 0.3);
+    let bwd_shares = vec![1.0 / n as f64; n];
+    let host = linear_plane(kind, &intra, WORLD);
+
+    let cfg = DriverConfig {
+        interval: 10,
+        ewma: 0.25,
+        hysteresis: 0.05,
+        search: SearchParams { y_max: 4, alpha: 0.0 },
+        min_samples: 8,
+    };
+    let est = CostEstimator::new(cfg.ewma, Some(host.enc), Some(host.dec), None);
+    let mut driver = Driver::new(
+        cfg,
+        est,
+        sizes.clone(),
+        bwd_shares.clone(),
+        fwd_frac,
+        Partition::full_merge(n),
+    )
+    .with_routing(WORLD, node_sizes.len());
+    assert_eq!(driver.routes(), &[RouteChoice::Hierarchical]);
+
+    // Truth-priced objective for scoring schedules (route-aware).
+    let truth_obj = |truth: &(FittedCost, TwoLevelCost)| {
+        let rc = RouteCostModel { flat: truth.0, hier: truth.1.combined() };
+        AnalyticObjective::new(
+            bwd_shares.iter().map(|s| step_secs * (1.0 - fwd_frac) * s).collect(),
+            sizes.clone(),
+            step_secs * fwd_frac,
+            host.enc,
+            host.dec,
+            truth.0,
+            1,
+        )
+        .with_route_costs(rc)
+    };
+
+    let drift_at = 40usize;
+    let steps = 100usize;
+    let deadline = drift_at + 3 * cfg.interval;
+
+    // The oracles: route-aware searches against the true costs on each
+    // side of the drift. Pre-drift the flat ring wins everywhere; post
+    // the schedule goes mixed (the inter bandwidth gap only pays for the
+    // large groups).
+    let mut pre_oracle = truth_obj(&truth_pre);
+    let pre_out = mergecomp_search(&mut pre_oracle, n, cfg.search);
+    assert!(
+        pre_out.routes.iter().all(|&r| r == RouteChoice::Flat),
+        "pre-drift oracle should be all-flat, got {:?}",
+        pre_out.routes
+    );
+    let mut oracle = truth_obj(&truth_post);
+    let oracle_out = mergecomp_search(&mut oracle, n, cfg.search);
+    assert!(
+        oracle_out.routes.contains(&RouteChoice::Hierarchical),
+        "post-drift oracle must route large groups hierarchically, got {:?}",
+        oracle_out.routes
+    );
+    let oracle_f = oracle_out.f_min;
+
+    let mut pre_drift_converged = false;
+    for step in 0..steps {
+        let truth = if step < drift_at { &truth_pre } else { &truth_post };
+        let samples = synth_route_samples(&driver, &sizes, truth, host.enc, host.dec);
+        driver.observe(&samples, step_secs);
+        if driver.due(step) {
+            if let Decision::Switch { partition, routes, .. } = driver.decide() {
+                driver.apply(partition, routes);
+            }
+        }
+        if step == drift_at - 1 {
+            // The driver must have escaped the all-hierarchical start and
+            // reached the pre-drift (all-flat) oracle's neighbourhood.
+            let mut scorer = truth_obj(&truth_pre);
+            let f = scorer.eval_with_routes(driver.partition(), driver.routes());
+            pre_drift_converged = f <= pre_out.f_min * 1.05;
+        }
+        if step >= deadline {
+            let mut scorer = truth_obj(&truth_post);
+            let f = scorer.eval_with_routes(driver.partition(), driver.routes());
+            assert!(
+                f <= oracle_f * 1.05,
+                "step {step}: schedule {} / {:?} prices {f} vs oracle {oracle_f} \
+                 (>5% off after the 3-interval deadline)",
+                driver.partition(),
+                driver.routes()
+            );
+            assert!(
+                driver.routes().contains(&RouteChoice::Hierarchical),
+                "step {step}: driver never re-adopted the hierarchy post-drift"
+            );
+        }
+    }
+    assert!(
+        pre_drift_converged,
+        "pre-drift schedule never reached the all-flat oracle's neighbourhood \
+         (final routes {:?})",
+        driver.routes()
+    );
+    assert!(driver.reschedules >= 2, "expected at least a pre- and post-drift switch");
+}

@@ -1,0 +1,192 @@
+#!/usr/bin/env python3
+"""Bench trend check: diff freshly produced results/BENCH_*.json against the
+previous nightly artifact and fail on significant regressions.
+
+Series are numeric leaves whose key matches the tracked patterns (times in
+seconds, byte counts) anywhere inside each BENCH_*.json file, addressed by
+their JSON path (per-codec rows are keyed by the row's "codec"/"bench"
+field rather than its array index, so reordering or adding codecs never
+misattributes a series; duplicate labels get an index suffix).
+
+Gating: only **deterministic** series can fail the job — byte counts and
+model-predicted timings (`sim_*`, the route-search objective values),
+which are exact arithmetic and identical across runners. Measured
+wall-clock timings on shared CI runners routinely wobble far beyond any
+useful threshold, so they are compared and reported (status "noisy") but
+never gate. A gated series regresses when the current value exceeds the
+previous one by more than --max-regress (fractional, default 0.15).
+Series absent on either side are reported but never fail the job;
+sub-microsecond timings are skipped entirely.
+
+Usage:
+  python3 tools/bench_trend.py --prev prev-bench --cur rust/results \
+      [--max-regress 0.15] [--summary "$GITHUB_STEP_SUMMARY"]
+
+Exit status: 0 = no regression (or nothing to compare), 1 = regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# Lower-is-better series: match on the leaf key.
+TRACKED_SUFFIXES = ("_secs", "_seconds", "_bytes")
+# Counters/metadata that merely describe the run, never a perf series.
+EXCLUDED_KEYS = {"steps", "world", "nodes", "groups", "total_params"}
+# Timings below this are scheduler noise on shared CI runners.
+MIN_SECONDS = 1e-6
+# Deterministic (gating) timing series: model-predicted, not measured.
+DETERMINISTIC_PREFIXES = ("sim_", "auto_", "forced_", "oracle_")
+
+
+def is_gating(path):
+    """Only deterministic series fail the job (see module docstring)."""
+    leaf = path.rsplit(".", 1)[-1]
+    if leaf.endswith("_bytes"):
+        return True
+    return leaf.startswith(DETERMINISTIC_PREFIXES)
+
+
+def flatten(node, path, out):
+    """Collect tracked numeric leaves as {path: value}."""
+    if isinstance(node, dict):
+        for key, val in sorted(node.items()):
+            flatten(val, f"{path}.{key}" if path else key, out)
+    elif isinstance(node, list):
+        seen = {}
+        for i, item in enumerate(node):
+            # Stable key for per-codec/per-bench rows; duplicate labels
+            # (e.g. two dgc ratios) get an index suffix instead of
+            # silently shadowing each other.
+            label = None
+            if isinstance(item, dict):
+                label = item.get("codec") or item.get("bench") or item.get("name")
+            if label is None:
+                label = str(i)
+            else:
+                n = seen.get(label, 0)
+                seen[label] = n + 1
+                if n:
+                    label = f"{label}#{n}"
+            flatten(item, f"{path}[{label}]", out)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        leaf = path.rsplit(".", 1)[-1]
+        if leaf in EXCLUDED_KEYS:
+            return
+        if not leaf.endswith(TRACKED_SUFFIXES):
+            return
+        if leaf.endswith(("_secs", "_seconds")) and node < MIN_SECONDS:
+            return
+        out[path] = float(node)
+
+
+def load_series(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    out = {}
+    flatten(data, "", out)
+    return out
+
+
+def compare(prev_dir, cur_dir, max_regress):
+    rows = []  # (file, series, prev, cur, delta_frac, status)
+    regressed = False
+    cur_files = sorted(
+        f for f in os.listdir(cur_dir) if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not cur_files:
+        print(f"bench-trend: no BENCH_*.json under {cur_dir}; nothing to check")
+        return rows, False
+    for name in cur_files:
+        prev_path = os.path.join(prev_dir, name)
+        cur = load_series(os.path.join(cur_dir, name))
+        if not os.path.exists(prev_path):
+            rows.append((name, "(whole file)", None, None, None, "new"))
+            continue
+        prev = load_series(prev_path)
+        for series, cur_val in sorted(cur.items()):
+            if series not in prev:
+                rows.append((name, series, None, cur_val, None, "new"))
+                continue
+            prev_val = prev[series]
+            if prev_val <= 0:
+                continue
+            delta = cur_val / prev_val - 1.0
+            if abs(delta) <= max_regress:
+                status = "ok"
+            elif not is_gating(series):
+                # Measured wall-clock on a shared runner: report, don't gate.
+                status = "noisy"
+            elif delta > max_regress:
+                status = "REGRESSED"
+                regressed = True
+            else:
+                status = "improved"
+            rows.append((name, series, prev_val, cur_val, delta, status))
+        for series in sorted(set(prev) - set(cur)):
+            rows.append((name, series, prev[series], None, None, "gone"))
+    return rows, regressed
+
+
+def render(rows, max_regress, fh):
+    print("## Bench trend vs previous nightly", file=fh)
+    print(
+        f"Failure threshold: >{max_regress:.0%} regression in any deterministic "
+        "series (byte counts, model-predicted timings); measured wall-clock "
+        "series are report-only (\"noisy\").",
+        file=fh,
+    )
+    print("", file=fh)
+    print("| file | series | previous | current | delta | status |", file=fh)
+    print("|------|--------|----------|---------|-------|--------|", file=fh)
+    interesting = [r for r in rows if r[5] != "ok"]
+    shown = interesting if interesting else rows[:20]
+    for name, series, prev, cur, delta, status in shown:
+        fmt = lambda v: "-" if v is None else f"{v:.6g}"
+        d = "-" if delta is None else f"{delta:+.1%}"
+        mark = "**REGRESSED**" if status == "REGRESSED" else status
+        print(f"| {name} | `{series}` | {fmt(prev)} | {fmt(cur)} | {d} | {mark} |", file=fh)
+    if not interesting:
+        print("", file=fh)
+        print(f"All {len(rows)} tracked series within threshold.", file=fh)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--prev", required=True, help="dir with the previous BENCH_*.json")
+    ap.add_argument("--cur", required=True, help="dir with the fresh BENCH_*.json")
+    ap.add_argument("--max-regress", type=float, default=0.15)
+    ap.add_argument("--summary", default=None, help="markdown summary output path (appended)")
+    args = ap.parse_args()
+
+    if not os.path.isdir(args.cur):
+        print(f"bench-trend: current results dir {args.cur} missing", file=sys.stderr)
+        return 1
+    if not os.path.isdir(args.prev) or not any(
+        f.startswith("BENCH_") for f in os.listdir(args.prev)
+    ):
+        print("bench-trend: no previous artifact to compare against; passing (first run?)")
+        return 0
+
+    rows, regressed = compare(args.prev, args.cur, args.max_regress)
+    render(rows, args.max_regress, sys.stdout)
+    if args.summary:
+        with open(args.summary, "a", encoding="utf-8") as fh:
+            render(rows, args.max_regress, fh)
+    if regressed:
+        bad = [r for r in rows if r[5] == "REGRESSED"]
+        print(
+            f"\nbench-trend: {len(bad)} series regressed by more than "
+            f"{args.max_regress:.0%}",
+            file=sys.stderr,
+        )
+        return 1
+    print("\nbench-trend: no regression beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
