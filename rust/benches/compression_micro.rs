@@ -1,19 +1,135 @@
-//! Micro-benchmarks of the rust gradient codecs (the L3 hot path): encode
-//! and decode throughput at a realistic merged-group size, plus wire sizes
-//! and compression ratios. Feeds EXPERIMENTS.md §Perf.
+//! Micro-benchmarks of the rust gradient codecs (the L3 hot path), in two
+//! layers:
+//!
+//! - **Codecs**: encode/decode p50 at a realistic merged-group size
+//!   (4M elements), timed twice — once through the runtime-dispatched SIMD
+//!   kernels and once with [`simd::set_forced_scalar`] — so every row
+//!   carries a same-run `*_speedup` ratio alongside wire sizes.
+//! - **Kernels**: the raw `compression/simd.rs` entry points at an
+//!   L2-resident size, where vector width (not DRAM bandwidth) sets the
+//!   ceiling. These are the series `tools/kernel_compare.py` lines up
+//!   against the L1 Pallas kernels.
+//!
+//! Emits `results/compression_micro.csv` (console-friendly rows) and
+//! `results/BENCH_compression.json` for `tools/bench_trend.py`: the
+//! `wire_bytes` leaves gate deterministically, the `*_secs` leaves are
+//! report-only wall clock, and the `*_speedup` leaves gate with inverted
+//! semantics (a drop is the regression).
+//!
+//! When a SIMD backend is active the run **fails** unless the bit-packing
+//! kernel and the sign-codec encode beat forced-scalar by ≥2× — the
+//! perf floor this bench exists to defend.
 
 #[path = "harness.rs"]
 mod harness;
 
-use mergecomp::compression::{Codec as _, CodecKind};
+use mergecomp::compression::{bitpack, simd, Codec as _, CodecKind};
+use mergecomp::metrics::write_json;
+use mergecomp::util::json::Value;
 use mergecomp::util::rng::Xoshiro256;
 use mergecomp::util::{fmt_bytes, fmt_secs};
 
+/// Merged-group size for the codec layer: 4M elements = 16 MB of f32.
+const CODEC_ELEMS: usize = 1 << 22;
+/// Kernel layer: 64K elements (256 KB) stays L2-resident so the ratio
+/// measures vectorization, not memory bandwidth.
+const KERNEL_ELEMS: usize = 1 << 16;
+
+/// p50 of `f` through the dispatched kernels, then again with the scalar
+/// path forced — the same closure, the same data, one binary.
+fn p50_both(budget_ms: f64, mut f: impl FnMut()) -> (f64, f64) {
+    simd::set_forced_scalar(false);
+    let dispatched = harness::time_fn(budget_ms, &mut f).p50;
+    simd::set_forced_scalar(true);
+    let scalar = harness::time_fn(budget_ms, &mut f).p50;
+    simd::set_forced_scalar(false);
+    (dispatched, scalar)
+}
+
 fn main() {
-    let n = 1 << 22; // 4M elements = 16 MB of f32 — half a merged ResNet50
+    let backend = simd::active_backend().to_string();
     let mut rng = Xoshiro256::seed_from_u64(7);
-    let mut g = vec![0f32; n];
+    let mut g = vec![0f32; CODEC_ELEMS];
     rng.fill_normal_f32(&mut g, 0.02);
+
+    let mut root = Value::obj();
+    root.set("backend", Value::Str(backend.clone()));
+    root.set("elems", Value::Num(CODEC_ELEMS as f64));
+    root.set("kernel_elems", Value::Num(KERNEL_ELEMS as f64));
+
+    // --- kernel layer ------------------------------------------------------
+    harness::section(&format!(
+        "simd kernels at {KERNEL_ELEMS} elements (backend: {backend})"
+    ));
+    let mut kernel_rows: Vec<Value> = Vec::new();
+    let mut kernel = |name: &str, f: &mut dyn FnMut()| -> f64 {
+        let (fast, slow) = p50_both(60.0, f);
+        let speedup = slow / fast;
+        println!(
+            "{name:<18} {backend} {:>10}  scalar {:>10}  speedup {speedup:>6.2}x",
+            fmt_secs(fast),
+            fmt_secs(slow),
+        );
+        let mut row = Value::obj();
+        row.set("bench", Value::Str(name.to_string()));
+        row.set("simd_secs", Value::Num(fast));
+        row.set("scalar_secs", Value::Num(slow));
+        row.set("kernel_speedup", Value::Num(speedup));
+        kernel_rows.push(row);
+        speedup
+    };
+
+    let gk: Vec<f32> = g[..KERNEL_ELEMS].to_vec();
+    let mut words = vec![0u32; KERNEL_ELEMS.div_ceil(32)];
+    let mut fout = vec![0f32; KERNEL_ELEMS];
+
+    let pack_speedup = kernel("bitpack_pack", &mut || {
+        simd::pack_sign_words(&gk, &mut words)
+    });
+    let mut packed = Vec::new();
+    bitpack::words_to_bytes(&words, &mut packed);
+    kernel("bitpack_unpack", &mut || {
+        simd::unpack_signs_bytes(&packed, KERNEL_ELEMS, 1.5, &mut fout)
+    });
+
+    let mut sign_codec = CodecKind::SignSgd.build(KERNEL_ELEMS);
+    let mut rng_k = Xoshiro256::seed_from_u64(11);
+    let mut sign_wire = Vec::new();
+    let sign_enc_speedup = kernel("sign_encode", &mut || {
+        sign_codec.encode_into(&gk, &mut rng_k, &mut sign_wire)
+    });
+
+    let mut momentum = vec![0f32; KERNEL_ELEMS];
+    kernel("signum_update", &mut || {
+        simd::signum_update(&mut momentum, &gk, 0.9)
+    });
+    kernel("abs_magnitudes", &mut || simd::abs_slice(&gk, &mut fout));
+    kernel("qsgd_quantize", &mut || {
+        simd::qsgd_ratios(&gk, 127.0, 127.0, &mut fout)
+    });
+
+    let mut half = vec![0u8; 2 * KERNEL_ELEMS];
+    kernel("f16_encode", &mut || simd::f16_encode_bytes(&gk, &mut half));
+    kernel("f16_decode", &mut || {
+        simd::f16_decode_bytes(&half, &mut fout)
+    });
+
+    let fields: Vec<u8> = (0..KERNEL_ELEMS).map(|i| (i % 3) as u8).collect();
+    let mut words2 = vec![0u32; KERNEL_ELEMS.div_ceil(16)];
+    kernel("terngrad_pack2", &mut || {
+        simd::pack2_words(&fields, &mut words2)
+    });
+
+    let mut acc: Vec<u8> = gk.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let other = acc.clone();
+    kernel("fp32_wire_reduce", &mut || {
+        simd::add_f32_bytes(&mut acc, &other)
+    });
+
+    root.set("kernels", Value::Arr(kernel_rows));
+
+    // --- codec layer -------------------------------------------------------
+    harness::section(&format!("codec throughput at {CODEC_ELEMS} elements"));
     let mut csv = harness::csv(
         "compression_micro",
         &[
@@ -23,47 +139,93 @@ fn main() {
             "decode_p50_s",
             "enc_gbps",
             "dec_gbps",
+            "encode_speedup",
+            "decode_speedup",
             "wire_bytes",
             "ratio",
         ],
     );
-
-    harness::section(&format!("codec throughput at {} elements", n));
+    let mut codec_rows: Vec<Value> = Vec::new();
     let mut kinds = CodecKind::paper_set();
     kinds.push(CodecKind::TernGrad);
     for kind in kinds {
-        let mut codec = kind.build(n);
+        // Deterministic wire size: one encode from a fresh codec + RNG, so
+        // the gating `wire_bytes` series never depends on iteration counts.
+        let wire_bytes = {
+            let mut sizer = kind.build(CODEC_ELEMS);
+            let mut srng = Xoshiro256::seed_from_u64(1);
+            let mut swire = Vec::new();
+            sizer.encode_into(&g, &mut srng, &mut swire);
+            swire.len()
+        };
+
+        let mut codec = kind.build(CODEC_ELEMS);
         let mut rng2 = Xoshiro256::seed_from_u64(1);
-        let enc_t = harness::time_fn(200.0, || {
-            let _ = codec.encode(&g, &mut rng2);
-        });
-        let enc = codec.encode(&g, &mut rng2);
-        let mut out = vec![0f32; n];
-        let dec_t = harness::time_fn(200.0, || {
-            codec.decode(&enc, &mut out);
-        });
-        let in_bytes = (4 * n) as f64;
-        let enc_gbps = in_bytes / enc_t.p50 / 1e9;
-        let dec_gbps = in_bytes / dec_t.p50 / 1e9;
-        let ratio = in_bytes / enc.wire_bytes() as f64;
+        let mut wire = Vec::new();
+        let (enc, enc_scalar) =
+            p50_both(120.0, || codec.encode_into(&g, &mut rng2, &mut wire));
+        let mut out = vec![0f32; CODEC_ELEMS];
+        let (dec, dec_scalar) = p50_both(120.0, || codec.decode_into(&wire, &mut out));
+
+        let in_bytes = (4 * CODEC_ELEMS) as f64;
+        let enc_gbps = in_bytes / enc / 1e9;
+        let dec_gbps = in_bytes / dec / 1e9;
+        let enc_speedup = enc_scalar / enc;
+        let dec_speedup = dec_scalar / dec;
+        let ratio = in_bytes / wire_bytes as f64;
         println!(
-            "{:<12} enc {:>10} ({enc_gbps:>6.2} GB/s)  dec {:>10} ({dec_gbps:>6.2} GB/s)  wire {:>10}  ratio {ratio:>7.1}x",
+            "{:<12} enc {:>10} ({enc_gbps:>6.2} GB/s, {enc_speedup:>5.2}x)  dec {:>10} ({dec_gbps:>6.2} GB/s, {dec_speedup:>5.2}x)  wire {:>10}  ratio {ratio:>7.1}x",
             kind.name(),
-            fmt_secs(enc_t.p50),
-            fmt_secs(dec_t.p50),
-            fmt_bytes(enc.wire_bytes()),
+            fmt_secs(enc),
+            fmt_secs(dec),
+            fmt_bytes(wire_bytes),
         );
         csv.rowd(&[
             &kind.name(),
-            &n,
-            &format!("{:.3e}", enc_t.p50),
-            &format!("{:.3e}", dec_t.p50),
+            &CODEC_ELEMS,
+            &format!("{enc:.3e}"),
+            &format!("{dec:.3e}"),
             &format!("{enc_gbps:.3}"),
             &format!("{dec_gbps:.3}"),
-            &enc.wire_bytes(),
+            &format!("{enc_speedup:.3}"),
+            &format!("{dec_speedup:.3}"),
+            &wire_bytes,
             &format!("{ratio:.2}"),
         ])
         .unwrap();
+
+        let mut row = Value::obj();
+        row.set("codec", Value::Str(kind.name().to_string()));
+        row.set("wire_bytes", Value::Num(wire_bytes as f64));
+        row.set("encode_simd_secs", Value::Num(enc));
+        row.set("encode_scalar_secs", Value::Num(enc_scalar));
+        row.set("decode_simd_secs", Value::Num(dec));
+        row.set("decode_scalar_secs", Value::Num(dec_scalar));
+        row.set("encode_speedup", Value::Num(enc_speedup));
+        row.set("decode_speedup", Value::Num(dec_speedup));
+        codec_rows.push(row);
+    }
+    root.set("codecs", Value::Arr(codec_rows));
+
+    write_json("results/BENCH_compression.json", &root)
+        .unwrap_or_else(|e| panic!("writing BENCH_compression.json: {e}"));
+    println!("\nwrote results/BENCH_compression.json (backend: {backend})");
+
+    // --- the perf floor this bench defends ---------------------------------
+    if backend == "scalar" {
+        println!("[compression_micro] scalar backend active; ≥2x SIMD gate skipped");
+    } else {
+        assert!(
+            pack_speedup >= 2.0,
+            "{backend} bitpack_pack only {pack_speedup:.2}x over scalar (floor: 2x)"
+        );
+        assert!(
+            sign_enc_speedup >= 2.0,
+            "{backend} sign_encode only {sign_enc_speedup:.2}x over scalar (floor: 2x)"
+        );
+        println!(
+            "[compression_micro] SIMD gate passed: bitpack_pack {pack_speedup:.2}x, sign_encode {sign_enc_speedup:.2}x (floor 2x)"
+        );
     }
     harness::done("compression_micro");
 }

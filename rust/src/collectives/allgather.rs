@@ -34,12 +34,14 @@ pub(crate) fn subset_ring_allgather(
     let left = members[(me + l - 1) % l];
 
     // The payload that member me holds and forwards at step s originates
-    // from member (me - s) mod l.
+    // from member (me - s) mod l. Forwarding borrows the held payload
+    // (`send_ref`) instead of cloning it; received payloads become the
+    // result, and the caller recycles them once decoded.
     for s in 0..l - 1 {
         let fwd_src = (me + l - s) % l;
         // Tag by originating member so a slow rank can never alias payloads.
         comm.ep
-            .send(right, base + fwd_src as u64, out[fwd_src].clone())?;
+            .send_ref(right, base + fwd_src as u64, &out[fwd_src])?;
         let recv_src = (me + l - s - 1) % l;
         let payload = comm.ep.recv(left, base + recv_src as u64)?;
         out[recv_src] = payload;
@@ -81,11 +83,11 @@ pub fn broadcast(
     let left = (rank + world - 1) % world;
     // Pass along the ring, root -> root+1 -> ... -> root-1.
     if rank == root {
-        comm.ep.send(right, base, bytes.clone())?;
+        comm.ep.send_ref(right, base, bytes)?;
     } else {
         *bytes = comm.ep.recv(left, base)?;
         if right != root {
-            comm.ep.send(right, base, bytes.clone())?;
+            comm.ep.send_ref(right, base, bytes)?;
         }
     }
     Ok(())

@@ -109,13 +109,14 @@ pub fn hier_allreduce_wire(
             for (idx, &p) in group.iter().enumerate().skip(1) {
                 let incoming = comm.ep.recv(p, stage_base + idx as u64)?;
                 codec.reduce_wire(data, &incoming);
+                comm.ep.recycle(incoming);
             }
         } else {
             let idx = group
                 .iter()
                 .position(|&p| p == rank)
                 .expect("rank missing from its own fan group");
-            comm.ep.send(leader, stage_base + idx as u64, data.to_vec())?;
+            comm.ep.send_ref(leader, stage_base + idx as u64, data)?;
         }
         intra_secs += sw.elapsed().as_secs_f64();
         if rank != leader {
@@ -144,12 +145,13 @@ pub fn hier_allreduce_wire(
         let sw = Stopwatch::start();
         if rank == leader {
             for &p in group.iter().skip(1) {
-                comm.ep.send(p, fanout_tag, data.to_vec())?;
+                comm.ep.send_ref(p, fanout_tag, data)?;
             }
         } else {
             let reduced = comm.ep.recv(leader, fanout_tag)?;
             debug_assert_eq!(reduced.len(), data.len());
             data.copy_from_slice(&reduced);
+            comm.ep.recycle(reduced);
         }
         intra_secs += sw.elapsed().as_secs_f64();
     }
@@ -195,6 +197,7 @@ pub fn hier_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, Tr
             for (idx, &p) in group.iter().enumerate().skip(1) {
                 let frame = comm.ep.recv(p, stage_base + idx as u64)?;
                 decode_frame_into(topo.held_cover(k, p), &frame, &mut out)?;
+                comm.ep.recycle(frame);
             }
         } else {
             let idx = group
@@ -216,11 +219,12 @@ pub fn hier_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, Tr
         let sw = Stopwatch::start();
         let frame = encode_frame(topo.held_cover(stages.len(), rank), &out);
         let gathered = subset_ring_allgather(comm, ring, ring_base, frame)?;
-        for (pos, frame) in gathered.iter().enumerate() {
+        for (pos, frame) in gathered.into_iter().enumerate() {
             let p = ring[pos];
             if p != rank {
-                decode_frame_into(topo.held_cover(stages.len(), p), frame, &mut out)?;
+                decode_frame_into(topo.held_cover(stages.len(), p), &frame, &mut out)?;
             }
+            comm.ep.recycle(frame);
         }
         inter_secs = sw.elapsed().as_secs_f64();
     }
@@ -242,7 +246,7 @@ pub fn hier_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, Tr
             if group.len() > 1 {
                 let frame = table.get_or_insert_with(|| encode_frame(&all_ranks, &out));
                 for &p in group.iter().skip(1) {
-                    comm.ep.send(p, fanout_tag, frame.clone())?;
+                    comm.ep.send_ref(p, fanout_tag, frame)?;
                 }
             }
         } else {
@@ -251,6 +255,9 @@ pub fn hier_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, Tr
             table = Some(frame);
         }
         intra_secs += sw.elapsed().as_secs_f64();
+    }
+    if let Some(frame) = table {
+        comm.ep.recycle(frame);
     }
 
     comm.note_breakdown(CommBreakdown {

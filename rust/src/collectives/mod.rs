@@ -39,7 +39,8 @@ pub use nonblocking::{lane_scope, CommCompletion, CommHandle, CommLane, CommOutc
 pub use tcp::{run_tcp_group, tcp_endpoint, tcp_endpoint_with_nodes, TcpConfig, TcpTransport};
 pub use topology::{LevelShape, LevelSpec, Topology, TopologySpec, TOPOLOGY_GRAMMAR};
 pub use transport::{
-    mesh, run_group, Endpoint, InProcTransport, Transport, TransportError, TransportKind,
+    mesh, run_group, AllocStats, BufferPool, Endpoint, InProcTransport, Transport,
+    TransportError, TransportKind,
 };
 
 /// Which algorithm the gradient collectives use (the f32 loss/metric

@@ -63,15 +63,18 @@ pub(crate) fn subset_ring_allreduce_bytes(
     let left = members[(me + l - 1) % l];
 
     // Phase 1 — reduce-scatter: after l-1 steps, member m owns the fully
-    // reduced chunk (m+1) mod l.
+    // reduced chunk (m+1) mod l. Sends borrow the chunk in place
+    // (`send_ref`), and every received buffer is recycled once reduced —
+    // the steady-state ring allocates nothing.
     for s in 0..l - 1 {
         let send_c = (me + l - s) % l;
         let recv_c = (me + l - s - 1) % l;
         let (lo, hi) = bounds[send_c];
-        comm.ep.send(right, base + s as u64, data[lo..hi].to_vec())?;
+        comm.ep.send_ref(right, base + s as u64, &data[lo..hi])?;
         let incoming = comm.ep.recv(left, base + s as u64)?;
         let (lo, hi) = bounds[recv_c];
         reduce(&mut data[lo..hi], &incoming);
+        comm.ep.recycle(incoming);
     }
 
     // Phase 2 — allgather of the reduced chunks.
@@ -80,10 +83,11 @@ pub(crate) fn subset_ring_allreduce_bytes(
         let recv_c = (me + l - s) % l;
         let (lo, hi) = bounds[send_c];
         comm.ep
-            .send(right, base + (l - 1 + s) as u64, data[lo..hi].to_vec())?;
+            .send_ref(right, base + (l - 1 + s) as u64, &data[lo..hi])?;
         let incoming = comm.ep.recv(left, base + (l - 1 + s) as u64)?;
         let (lo, hi) = bounds[recv_c];
         data[lo..hi].copy_from_slice(&incoming);
+        comm.ep.recycle(incoming);
     }
     Ok(())
 }

@@ -9,16 +9,21 @@
 //! The source rank is implicit per connection (established by the
 //! `PEER <rank>` handshake in `bootstrap.rs`). Threads per peer:
 //!
-//! - a **writer** thread drains a bounded outbound queue and writes frames
-//!   through a `BufWriter` (flushing whenever the queue runs dry), so
-//!   `Endpoint::send` never blocks on the network unless the queue is full
-//!   (real backpressure);
-//! - a **reader** thread reads frames and demuxes them into the same
-//!   single-inbox + stash structure the in-process channel mesh uses. On
-//!   EOF or connection reset it injects a [`CTRL_PEER_DOWN_TAG`] control
-//!   message, which `Endpoint::recv` surfaces as a typed
-//!   [`TransportError::PeerGone`] naming the rank, peer and tag — never a
-//!   hang, never a process-poisoning panic.
+//! - a **writer** thread drains a bounded outbound queue and writes each
+//!   frame with a single vectored write of header + payload (no
+//!   frame-assembly copy, no intermediate `BufWriter`), returning written
+//!   buffers to the transport's outbound [`BufferPool`]; `Endpoint::send`
+//!   never blocks on the network unless the queue is full (real
+//!   backpressure). A mid-frame write error is forwarded in-band as a
+//!   [`CTRL_PEER_DOWN_TAG`] message naming the peer, the failing tag and
+//!   how many queued frames were dropped with it;
+//! - a **reader** thread reads frames into buffers drawn from a receive
+//!   [`BufferPool`] (refilled by [`Endpoint::recycle`] after decode) and
+//!   demuxes them into the same single-inbox + stash structure the
+//!   in-process channel mesh uses. On EOF or connection reset it injects a
+//!   [`CTRL_PEER_DOWN_TAG`] control message, which `Endpoint::recv`
+//!   surfaces as a typed [`TransportError::PeerGone`] naming the rank,
+//!   peer and tag — never a hang, never a process-poisoning panic.
 //!
 //! Works identically whether the peers are OS processes (the
 //! `mergecomp train --transport tcp` worker mode, W processes over a real
@@ -26,8 +31,10 @@
 //! transport-equivalence tests to drive real sockets over loopback).
 
 use super::bootstrap;
-use super::transport::{Endpoint, Msg, Transport, TransportError, CTRL_PEER_DOWN_TAG};
-use std::io::{BufWriter, Read, Write};
+use super::transport::{
+    AllocStats, BufferPool, Endpoint, Msg, Transport, TransportError, CTRL_PEER_DOWN_TAG,
+};
+use std::io::{IoSlice, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -41,6 +48,11 @@ const MAX_FRAME_BYTES: usize = 1 << 31;
 
 /// Outbound frames queued per peer before `send` blocks (backpressure).
 const OUTBOUND_QUEUE_DEPTH: usize = 128;
+
+/// Buffers each of the two per-transport pools (outbound, receive) keeps.
+/// Outbound must cover the frames parked in every peer's queue; 2× the
+/// queue depth leaves slack for buffers in flight through the writers.
+const TCP_POOL_CAP: usize = 2 * OUTBOUND_QUEUE_DEPTH;
 
 /// Connection parameters for one rank of a TCP group.
 #[derive(Debug, Clone)]
@@ -92,6 +104,11 @@ pub struct TcpTransport {
     inbox: Receiver<Msg>,
     /// Node label each rank registered during the rendezvous.
     peer_nodes: Vec<String>,
+    /// Outbound free list: writer threads return frames here after the
+    /// vectored write, `send_ref` draws from it.
+    out_pool: Arc<BufferPool>,
+    /// Receive free list: reader threads draw from it, `recycle` refills.
+    recv_pool: Arc<BufferPool>,
     bytes_sent: u64,
     msgs_sent: u64,
 }
@@ -136,6 +153,8 @@ impl TcpTransport {
         let conns = bootstrap::connect_mesh(cfg.rank, cfg.world, &addrs, &listener, deadline)?;
 
         let (inbox_tx, inbox) = channel::<Msg>();
+        let out_pool = BufferPool::new(TCP_POOL_CAP);
+        let recv_pool = BufferPool::new(TCP_POOL_CAP);
         let mut writers: Vec<Option<PeerWriter>> = Vec::with_capacity(cfg.world);
         for (peer, conn) in conns.into_iter().enumerate() {
             let Some(stream) = conn else {
@@ -150,14 +169,28 @@ impl TcpTransport {
             let failed = Arc::new(Mutex::new(None));
             let (queue, queue_rx) = sync_channel::<(u64, Vec<u8>)>(OUTBOUND_QUEUE_DEPTH);
             let writer_failed = Arc::clone(&failed);
+            let writer_tx = inbox_tx.clone();
+            let writer_pool = Arc::clone(&out_pool);
+            let rank = cfg.rank;
             let handle = std::thread::Builder::new()
                 .name(format!("tcp-w{}-{peer}", cfg.rank))
-                .spawn(move || writer_loop(write_half, queue_rx, writer_failed))
+                .spawn(move || {
+                    writer_loop(
+                        rank,
+                        peer,
+                        write_half,
+                        queue_rx,
+                        writer_failed,
+                        writer_tx,
+                        writer_pool,
+                    )
+                })
                 .map_err(|e| anyhow::anyhow!("spawning writer thread: {e}"))?;
             let reader_tx = inbox_tx.clone();
+            let reader_pool = Arc::clone(&recv_pool);
             std::thread::Builder::new()
                 .name(format!("tcp-r{}-{peer}", cfg.rank))
-                .spawn(move || reader_loop(peer, stream, reader_tx))
+                .spawn(move || reader_loop(peer, stream, reader_tx, reader_pool))
                 .map_err(|e| anyhow::anyhow!("spawning reader thread: {e}"))?;
             writers.push(Some(PeerWriter {
                 queue,
@@ -174,6 +207,8 @@ impl TcpTransport {
             writers,
             inbox,
             peer_nodes,
+            out_pool,
+            recv_pool,
             bytes_sent: 0,
             msgs_sent: 0,
         })
@@ -249,6 +284,26 @@ impl Transport for TcpTransport {
         }
     }
 
+    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), TransportError> {
+        // Steady state: the writer thread has already returned a written
+        // frame to the pool, so this copies into recycled capacity and
+        // allocates nothing.
+        let mut buf = self.out_pool.take();
+        buf.extend_from_slice(bytes);
+        self.send(to, tag, buf)
+    }
+
+    fn recycle(&mut self, buf: Vec<u8>) {
+        self.recv_pool.put(buf);
+    }
+
+    fn alloc_stats(&self) -> AllocStats {
+        AllocStats {
+            send_pool_misses: self.out_pool.misses(),
+            recv_pool_misses: self.recv_pool.misses(),
+        }
+    }
+
     fn bytes_sent(&self) -> u64 {
         self.bytes_sent
     }
@@ -276,59 +331,93 @@ impl Drop for TcpTransport {
     }
 }
 
-fn record_failure(failed: &Arc<Mutex<Option<String>>>, e: std::io::Error) {
+fn record_failure(failed: &Arc<Mutex<Option<String>>>, detail: &str) {
     let mut slot = failed.lock().unwrap();
     if slot.is_none() {
-        *slot = Some(e.to_string());
+        *slot = Some(detail.to_string());
     }
 }
 
+/// Write one frame as a single vectored write of header + payload — the
+/// payload goes from the queued buffer straight to the kernel, with no
+/// frame-assembly copy. Partial writes walk the logical concatenation.
 fn write_frame(w: &mut impl Write, tag: u64, payload: &[u8]) -> std::io::Result<()> {
     let mut header = [0u8; 12];
     header[..8].copy_from_slice(&tag.to_le_bytes());
     header[8..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
-    w.write_all(&header)?;
-    w.write_all(payload)
+    let total = header.len() + payload.len();
+    let mut written = 0usize;
+    while written < total {
+        let n = if written < header.len() {
+            w.write_vectored(&[IoSlice::new(&header[written..]), IoSlice::new(payload)])?
+        } else {
+            w.write(&payload[written - header.len()..])?
+        };
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "socket accepted zero bytes mid-frame",
+            ));
+        }
+        written += n;
+    }
+    Ok(())
 }
 
 /// Drain the outbound queue, writing frames until the queue closes (clean
-/// shutdown) or the socket errors (peer gone). Flushes whenever the queue
-/// runs dry so latency never waits on the buffer filling.
+/// shutdown) or the socket errors (peer gone). Written buffers go back to
+/// the outbound pool so the steady-state send path never allocates. A
+/// write error is recorded for future `send`s AND injected in-band as
+/// [`CTRL_PEER_DOWN_TAG`] so a blocked `recv` on this peer fails fast —
+/// the message names the peer, the mid-frame tag, and how many queued
+/// frames died with it.
 fn writer_loop(
-    stream: TcpStream,
+    rank: usize,
+    peer: usize,
+    mut stream: TcpStream,
     rx: Receiver<(u64, Vec<u8>)>,
     failed: Arc<Mutex<Option<String>>>,
+    inbox: Sender<Msg>,
+    pool: Arc<BufferPool>,
 ) {
-    let mut w = BufWriter::with_capacity(1 << 16, &stream);
-    'outer: while let Ok(mut msg) = rx.recv() {
-        loop {
-            if let Err(e) = write_frame(&mut w, msg.0, &msg.1) {
-                record_failure(&failed, e);
-                break 'outer;
-            }
-            match rx.try_recv() {
-                Ok(next) => msg = next,
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
-                    if let Err(e) = w.flush() {
-                        record_failure(&failed, e);
-                        break 'outer;
-                    }
-                    break;
-                }
-            }
+    while let Ok((tag, payload)) = rx.recv() {
+        if let Err(e) = write_frame(&mut stream, tag, &payload) {
+            let queued = rx.try_iter().count();
+            let detail = writer_error_detail(rank, peer, tag, queued, &e);
+            record_failure(&failed, &detail);
+            let _ = inbox.send((peer, CTRL_PEER_DOWN_TAG, detail.into_bytes()));
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
         }
+        pool.put(payload);
     }
-    let _ = w.flush();
-    drop(w);
     // FIN: tells the peer's reader this rank is done sending.
     let _ = stream.shutdown(Shutdown::Write);
 }
 
-/// Read frames from one peer and demux them into the shared inbox. On any
+/// What a failed writer reports: which frame died (peer + tag) and how
+/// many queued frames were lost behind it — the detail `Endpoint::recv`
+/// surfaces inside [`TransportError::PeerGone`].
+fn writer_error_detail(
+    rank: usize,
+    peer: usize,
+    tag: u64,
+    queued: usize,
+    e: &std::io::Error,
+) -> String {
+    format!(
+        "rank {rank}: write to peer {peer} failed mid-frame \
+         (tag {tag}, {queued} queued frames dropped): {e}"
+    )
+}
+
+/// Read frames from one peer and demux them into the shared inbox,
+/// reusing payload buffers from the receive pool (refilled by
+/// [`Endpoint::recycle`] once the collective has decoded them). On any
 /// error (EOF after the peer's FIN, connection reset) a control message
 /// marks the peer down, then the socket is drained so the peer's writer
 /// can never block on a full kernel buffer during teardown.
-fn reader_loop(peer: usize, mut stream: TcpStream, inbox: Sender<Msg>) {
+fn reader_loop(peer: usize, mut stream: TcpStream, inbox: Sender<Msg>, pool: Arc<BufferPool>) {
     let mut header = [0u8; 12];
     loop {
         if let Err(e) = stream.read_exact(&mut header) {
@@ -342,7 +431,8 @@ fn reader_loop(peer: usize, mut stream: TcpStream, inbox: Sender<Msg>) {
             let _ = inbox.send((peer, CTRL_PEER_DOWN_TAG, msg.into_bytes()));
             return;
         }
-        let mut payload = vec![0u8; len];
+        let mut payload = pool.take();
+        payload.resize(len, 0);
         if let Err(e) = stream.read_exact(&mut payload) {
             let _ = inbox.send((peer, CTRL_PEER_DOWN_TAG, e.to_string().into_bytes()));
             return;
@@ -538,6 +628,76 @@ mod tests {
         for l in &labels {
             assert_eq!(l, &vec!["n0".to_string(), "n1".to_string()]);
         }
+    }
+
+    /// A `Write` that accepts at most `budget[i]` bytes on the i-th call
+    /// (unlimited once the budget runs out), capturing everything — drives
+    /// the partial-write loop in `write_frame` through every split point.
+    struct Dribble {
+        out: Vec<u8>,
+        budget: std::collections::VecDeque<usize>,
+    }
+
+    impl Write for Dribble {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = self.budget.pop_front().unwrap_or(buf.len()).min(buf.len());
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn write_vectored(&mut self, bufs: &[IoSlice]) -> std::io::Result<usize> {
+            let mut budget = self.budget.pop_front().unwrap_or(usize::MAX);
+            let mut n = 0;
+            for b in bufs {
+                let take = budget.min(b.len());
+                self.out.extend_from_slice(&b[..take]);
+                n += take;
+                budget -= take;
+                if budget == 0 {
+                    break;
+                }
+            }
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_frame_survives_partial_vectored_writes() {
+        let payload: Vec<u8> = (0..300u32).map(|i| i as u8).collect();
+        // Split inside the header (5, 3), across the header/payload
+        // boundary (10), and inside the payload (1, 200).
+        let mut w = Dribble {
+            out: Vec::new(),
+            budget: [5usize, 3, 10, 1, 200].into_iter().collect(),
+        };
+        write_frame(&mut w, 0xDEAD_BEEF, &payload).unwrap();
+        assert_eq!(&w.out[..8], &0xDEAD_BEEFu64.to_le_bytes());
+        assert_eq!(&w.out[8..12], &(300u32).to_le_bytes());
+        assert_eq!(&w.out[12..], &payload[..]);
+    }
+
+    #[test]
+    fn write_frame_zero_length_write_is_an_error() {
+        let mut w = Dribble {
+            out: Vec::new(),
+            budget: [4usize, 0].into_iter().collect(),
+        };
+        let err = write_frame(&mut w, 1, &[9u8; 8]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WriteZero);
+    }
+
+    #[test]
+    fn writer_error_detail_names_peer_tag_and_queue() {
+        let e = std::io::Error::new(std::io::ErrorKind::BrokenPipe, "broken pipe");
+        let d = writer_error_detail(0, 3, 17, 5, &e);
+        assert!(d.contains("peer 3"), "{d}");
+        assert!(d.contains("tag 17"), "{d}");
+        assert!(d.contains("5 queued frames"), "{d}");
+        assert!(d.contains("broken pipe"), "{d}");
     }
 
     #[test]

@@ -22,7 +22,9 @@
 
 use std::collections::HashMap;
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 
 /// A message in flight: (source, tag, payload).
 pub type Msg = (usize, u64, Vec<u8>);
@@ -70,6 +72,60 @@ impl fmt::Display for TransportError {
 
 impl std::error::Error for TransportError {}
 
+/// Pool-miss counters for the steady-state send/receive hot paths. A miss
+/// is a `take` the pool could not serve from its free list (i.e. a fresh
+/// allocation); after warm-up both counters must stay flat — asserted by
+/// `tests/transport_equivalence.rs`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    pub send_pool_misses: u64,
+    pub recv_pool_misses: u64,
+}
+
+/// A bounded free list of byte buffers shared by the hot send/receive
+/// paths. [`BufferPool::take`] hands out an *empty* buffer that keeps its
+/// previous capacity, so in steady state filling it allocates nothing;
+/// [`BufferPool::put`] returns one, dropping it when the pool is full so
+/// memory stays bounded.
+pub struct BufferPool {
+    bufs: Mutex<Vec<Vec<u8>>>,
+    misses: AtomicU64,
+    cap: usize,
+}
+
+impl BufferPool {
+    pub fn new(cap: usize) -> Arc<BufferPool> {
+        Arc::new(BufferPool {
+            bufs: Mutex::new(Vec::new()),
+            misses: AtomicU64::new(0),
+            cap,
+        })
+    }
+
+    /// An empty buffer, reusing pooled capacity when available.
+    pub fn take(&self) -> Vec<u8> {
+        if let Some(buf) = self.bufs.lock().unwrap().pop() {
+            return buf;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Vec::new()
+    }
+
+    /// Return a buffer for reuse (cleared; dropped when the pool is full).
+    pub fn put(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < self.cap {
+            bufs.push(buf);
+        }
+    }
+
+    /// Total `take` calls that had to allocate fresh.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
 /// A point-to-point message mover between `world` ranks. Implementations
 /// deliver messages from any peer in arrival order; the [`Endpoint`] above
 /// them restores `(from, tag)` matching.
@@ -78,6 +134,20 @@ pub trait Transport: Send {
     fn world(&self) -> usize;
     /// Send one tagged payload to `to` (never `self.rank()`).
     fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError>;
+    /// Borrowed-payload send: the transport copies `bytes` into its own
+    /// (pooled) outbound buffer, so the caller keeps ownership and the
+    /// steady-state path allocates nothing. Backends without a pool fall
+    /// back to cloning into an owned [`Transport::send`].
+    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), TransportError> {
+        self.send(to, tag, bytes.to_vec())
+    }
+    /// Return a payload buffer received via [`Transport::next_msg`] for
+    /// reuse on the receive path (no-op for backends without a pool).
+    fn recycle(&mut self, _buf: Vec<u8>) {}
+    /// Pool-miss counters for the send/receive hot paths.
+    fn alloc_stats(&self) -> AllocStats {
+        AllocStats::default()
+    }
     /// Blocking: the next inbound message from any peer.
     fn next_msg(&mut self) -> Result<Msg, TransportError>;
     /// Non-blocking variant of [`Transport::next_msg`].
@@ -176,6 +246,29 @@ impl Endpoint {
         Ok(())
     }
 
+    /// Borrowed-payload send — same accounting as [`Endpoint::send`], but
+    /// the caller keeps ownership of `bytes` (the transport copies into a
+    /// pooled outbound buffer instead of taking a fresh `Vec`).
+    pub fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), TransportError> {
+        assert!(to < self.world(), "rank {to} out of range");
+        assert_ne!(to, self.rank(), "self-send is a bug in the collective");
+        let len = bytes.len() as u64;
+        self.transport.send_ref(to, tag, bytes)?;
+        self.per_peer_sent[to] += len;
+        Ok(())
+    }
+
+    /// Return a buffer obtained from [`Endpoint::recv`] once its contents
+    /// have been consumed, so the receive path can reuse it.
+    pub fn recycle(&mut self, buf: Vec<u8>) {
+        self.transport.recycle(buf);
+    }
+
+    /// Pool-miss counters for the send/receive hot paths.
+    pub fn alloc_stats(&self) -> AllocStats {
+        self.transport.alloc_stats()
+    }
+
     /// Blocking tag-matched receive.
     pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>, TransportError> {
         if let Some(m) = self.take_stashed(from, tag) {
@@ -262,9 +355,15 @@ pub struct InProcTransport {
     /// senders[d] delivers to rank d's inbox.
     senders: Vec<Sender<Msg>>,
     inbox: Receiver<Msg>,
+    /// Free list shared by the whole mesh: a buffer sent by one rank is
+    /// recycled by its receiver back into the same pool.
+    pool: Arc<BufferPool>,
     bytes_sent: u64,
     msgs_sent: u64,
 }
+
+/// Buffers the in-process mesh keeps on its shared free list.
+const INPROC_POOL_CAP: usize = 256;
 
 impl Transport for InProcTransport {
     fn rank(&self) -> usize {
@@ -305,6 +404,25 @@ impl Transport for InProcTransport {
         }
     }
 
+    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), TransportError> {
+        let mut buf = self.pool.take();
+        buf.extend_from_slice(bytes);
+        self.send(to, tag, buf)
+    }
+
+    fn recycle(&mut self, buf: Vec<u8>) {
+        self.pool.put(buf);
+    }
+
+    fn alloc_stats(&self) -> AllocStats {
+        // One pool serves the whole mesh; its miss count is reported as
+        // send-side (a sent buffer IS the received buffer in-process).
+        AllocStats {
+            send_pool_misses: self.pool.misses(),
+            recv_pool_misses: 0,
+        }
+    }
+
     fn bytes_sent(&self) -> u64 {
         self.bytes_sent
     }
@@ -338,6 +456,7 @@ pub fn mesh(world: usize) -> Vec<Endpoint> {
         senders.push(s);
         receivers.push(r);
     }
+    let pool = BufferPool::new(INPROC_POOL_CAP);
     receivers
         .into_iter()
         .enumerate()
@@ -347,6 +466,7 @@ pub fn mesh(world: usize) -> Vec<Endpoint> {
                 world,
                 senders: senders.clone(),
                 inbox,
+                pool: Arc::clone(&pool),
                 bytes_sent: 0,
                 msgs_sent: 0,
             }))
@@ -506,6 +626,48 @@ mod tests {
             }
             other => panic!("expected PeerGone, got {other}"),
         }
+    }
+
+    #[test]
+    fn send_ref_and_recycle_reuse_buffers() {
+        let mut eps = mesh(2);
+        let mut ep1 = eps.pop().unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        let payload = vec![7u8; 64];
+        for t in 0..8u64 {
+            ep0.send_ref(1, t, &payload).unwrap();
+            let m = ep1.recv(0, t).unwrap();
+            assert_eq!(m, payload);
+            ep1.recycle(m);
+        }
+        // First send misses (pool empty); every later send reuses the
+        // buffer rank 1 recycled into the shared mesh pool.
+        assert_eq!(ep0.alloc_stats().send_pool_misses, 1);
+        assert_eq!(ep0.bytes_sent(), 8 * 64);
+        assert_eq!(ep0.per_peer_sent(), &[0, 8 * 64]);
+    }
+
+    #[test]
+    fn buffer_pool_caps_and_counts_misses() {
+        let pool = BufferPool::new(2);
+        let a = pool.take();
+        assert_eq!(pool.misses(), 1);
+        pool.put(a);
+        let b = pool.take();
+        assert_eq!(pool.misses(), 1, "pooled buffer served without a miss");
+        let mut c = pool.take();
+        assert_eq!(pool.misses(), 2);
+        c.extend_from_slice(&[1, 2, 3]);
+        let cap = c.capacity();
+        pool.put(c);
+        let c2 = pool.take();
+        assert!(c2.is_empty(), "pooled buffers come back cleared");
+        assert!(c2.capacity() >= cap, "capacity survives the round trip");
+        // Overfilling the pool drops buffers instead of growing unbounded.
+        pool.put(b);
+        pool.put(c2);
+        pool.put(Vec::new());
+        assert_eq!(pool.bufs.lock().unwrap().len(), 2);
     }
 
     #[test]

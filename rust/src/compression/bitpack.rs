@@ -4,21 +4,28 @@
 //! `(i % per_word) * width` of word `i / per_word`. The layout is fixed so
 //! payloads from different workers can be compared/combined bit-for-bit.
 
+use super::simd;
+
+/// View u32 words as their little-endian wire bytes without copying.
+/// Byte order matches the wire because the build targets little-endian
+/// only (enforced by a `compile_error!` in `collectives/ring.rs`).
+#[inline]
+fn word_bytes(words: &[u32]) -> &[u8] {
+    // Safety: u32 → u8 only narrows alignment, and all words.len()*4
+    // bytes are initialized.
+    unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, words.len() * 4) }
+}
+
 /// Pack one bit per element: bit set ⇔ `grad[i] >= 0`.
 /// Output has `n.div_ceil(32)` words; trailing bits of the last word are 0.
+///
+/// Branch-free sign extraction: IEEE sign bit clear => >= +0.0.
+/// (-0.0 encodes as negative; decode maps it to -scale, which is
+/// fine — the value was 0 and EF re-captures the tiny error.)
 pub fn pack_signs(grad: &[f32], out: &mut Vec<u32>) {
     out.clear();
     out.resize(grad.len().div_ceil(32), 0);
-    for (i, chunk) in grad.chunks(32).enumerate() {
-        let mut word = 0u32;
-        for (j, &v) in chunk.iter().enumerate() {
-            // Branch-free sign extraction: IEEE sign bit clear => >= +0.0.
-            // (-0.0 encodes as negative; decode maps it to -scale, which is
-            // fine — the value was 0 and EF re-captures the tiny error.)
-            word |= (((v.to_bits() >> 31) ^ 1) & 1) << j;
-        }
-        out[i] = word;
-    }
+    simd::pack_sign_words(grad, out);
 }
 
 /// Unpack sign bits: `out[i] = +scale` if bit set else `-scale`.
@@ -26,27 +33,14 @@ pub fn pack_signs(grad: &[f32], out: &mut Vec<u32>) {
 pub fn unpack_signs(words: &[u32], n: usize, scale: f32, out: &mut [f32]) {
     assert!(out.len() >= n);
     assert!(words.len() >= n.div_ceil(32));
-    let mag = scale.to_bits() & 0x7FFF_FFFF;
-    for (chunk, &word) in out[..n].chunks_mut(32).zip(words) {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            let bit = (word >> j) & 1;
-            *o = f32::from_bits(mag | ((bit ^ 1) << 31));
-        }
-    }
+    simd::unpack_signs_bytes(word_bytes(words), n, scale, out);
 }
 
 /// Accumulate `weight * (±scale)` for each sign bit into `out`.
 pub fn unpack_signs_add(words: &[u32], n: usize, scale: f32, weight: f32, out: &mut [f32]) {
     assert!(out.len() >= n);
-    let ws = weight * scale;
-    let mag = ws.to_bits() & 0x7FFF_FFFF;
-    let sgn = (ws.to_bits() >> 31) & 1;
-    for (chunk, &word) in out[..n].chunks_mut(32).zip(words) {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            let bit = ((word >> j) & 1) ^ 1 ^ sgn;
-            *o += f32::from_bits(mag | (bit << 31));
-        }
-    }
+    assert!(words.len() >= n.div_ceil(32));
+    simd::unpack_signs_add_bytes(word_bytes(words), n, scale, weight, out);
 }
 
 /// Iterate u32 words straight out of a little-endian byte buffer without
@@ -62,41 +56,21 @@ pub fn words_iter(bytes: &[u8]) -> impl Iterator<Item = u32> + '_ {
 pub fn unpack_signs_bytes(bytes: &[u8], n: usize, scale: f32, out: &mut [f32]) {
     assert!(out.len() >= n);
     assert!(bytes.len() >= n.div_ceil(32) * 4);
-    let mag = scale.to_bits() & 0x7FFF_FFFF;
-    for (chunk, word) in out[..n].chunks_mut(32).zip(words_iter(bytes)) {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            let bit = (word >> j) & 1;
-            *o = f32::from_bits(mag | ((bit ^ 1) << 31));
-        }
-    }
+    simd::unpack_signs_bytes(bytes, n, scale, out);
 }
 
 /// Branch-free accumulate directly from wire bytes.
 pub fn unpack_signs_add_bytes(bytes: &[u8], n: usize, scale: f32, weight: f32, out: &mut [f32]) {
     assert!(out.len() >= n);
-    let ws = weight * scale;
-    let mag = ws.to_bits() & 0x7FFF_FFFF;
-    let sgn = (ws.to_bits() >> 31) & 1;
-    for (chunk, word) in out[..n].chunks_mut(32).zip(words_iter(bytes)) {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            let bit = ((word >> j) & 1) ^ 1 ^ sgn;
-            *o += f32::from_bits(mag | (bit << 31));
-        }
-    }
+    assert!(bytes.len() >= n.div_ceil(32) * 4);
+    simd::unpack_signs_add_bytes(bytes, n, scale, weight, out);
 }
 
 /// Pack 2-bit fields (values 0..=3), 16 per word.
 pub fn pack2(fields: &[u8], out: &mut Vec<u32>) {
     out.clear();
     out.resize(fields.len().div_ceil(16), 0);
-    for (i, chunk) in fields.chunks(16).enumerate() {
-        let mut word = 0u32;
-        for (j, &v) in chunk.iter().enumerate() {
-            debug_assert!(v < 4);
-            word |= ((v & 0b11) as u32) << (2 * j);
-        }
-        out[i] = word;
-    }
+    simd::pack2_words(fields, out);
 }
 
 /// Unpack 2-bit fields.
@@ -109,12 +83,10 @@ pub fn unpack2(words: &[u32], n: usize, out: &mut Vec<u8>) {
     }
 }
 
-/// Serialize u32 words little-endian into bytes (appending).
+/// Serialize u32 words little-endian into bytes (appending). One bulk
+/// copy — the per-word loop showed up in encode profiles.
 pub fn words_to_bytes(words: &[u32], out: &mut Vec<u8>) {
-    out.reserve(words.len() * 4);
-    for w in words {
-        out.extend_from_slice(&w.to_le_bytes());
-    }
+    out.extend_from_slice(word_bytes(words));
 }
 
 /// View a little-endian byte slice as u32 words (copies; alignment-safe).

@@ -15,7 +15,7 @@
 //! branch-free predicated mask instead of a data-dependent gather); see
 //! DESIGN.md §Hardware-Adaptation.
 
-use super::{digest_f32s, sparse, Codec, CodecKind, STATE_DIGEST_SEED};
+use super::{digest_f32s, simd, sparse, Codec, CodecKind, STATE_DIGEST_SEED};
 use crate::util::rng::Xoshiro256;
 
 /// How many elements the threshold estimator samples (DGC uses ~0.1%–1% of
@@ -32,6 +32,12 @@ pub struct Dgc {
     momentum: f32,
     /// Accumulated velocity v — doubles as the EF memory.
     velocity: Vec<f32>,
+    // Scratch buffers reused across steps (§Perf: selection used to
+    // allocate four Vecs per encode).
+    idx_scratch: Vec<u32>,
+    sel_scratch: Vec<u32>,
+    mag_scratch: Vec<f32>,
+    val_scratch: Vec<f32>,
 }
 
 impl Dgc {
@@ -43,6 +49,10 @@ impl Dgc {
             momentum_buf: Some(vec![0f32; n]),
             momentum: 0.9,
             velocity: vec![0f32; n],
+            idx_scratch: Vec::new(),
+            sel_scratch: Vec::new(),
+            mag_scratch: Vec::new(),
+            val_scratch: Vec::new(),
         }
     }
 
@@ -56,16 +66,19 @@ impl Dgc {
     }
 
     /// Estimate the magnitude threshold that keeps ~k elements by sampling.
-    fn threshold(values: &[f32], k: usize, rng: &mut Xoshiro256) -> f32 {
+    /// `mags` is caller-owned scratch (contents clobbered).
+    fn threshold(values: &[f32], k: usize, rng: &mut Xoshiro256, mags: &mut Vec<f32>) -> f32 {
         let s = sample_count(values.len());
-        let mut mags: Vec<f32> = if s == values.len() {
-            values.iter().map(|v| v.abs()).collect()
+        if s == values.len() {
+            simd::abs_into(values, mags);
         } else {
-            rng.sample_indices(values.len(), s)
-                .into_iter()
-                .map(|i| values[i].abs())
-                .collect()
-        };
+            mags.clear();
+            mags.extend(
+                rng.sample_indices(values.len(), s)
+                    .into_iter()
+                    .map(|i| values[i].abs()),
+            );
+        }
         // Keep-fraction within the sample mirrors the global ratio.
         let keep = ((k as f64 / values.len() as f64) * s as f64).round() as usize;
         let keep = keep.clamp(1, s);
@@ -104,41 +117,62 @@ impl Codec for Dgc {
         }
 
         let k = sparse::k_for(self.n, self.ratio);
-        let thr = Self::threshold(&self.velocity, k, rng);
+        let thr = Self::threshold(&self.velocity, k, rng, &mut self.mag_scratch);
 
         // Select everything with |v| >= thr. When the sampled threshold
         // underestimates (heavy ties), fall back to DGC's hierarchical
         // selection: exact top-`cap` among the candidates, bounding the
         // payload at 2k.
         let cap = (2 * k).min(self.n);
-        let mut idx: Vec<u32> = Vec::new();
+        self.idx_scratch.clear();
         for (i, v) in self.velocity.iter().enumerate() {
             // thr == 0 happens when most of the velocity is drained; exact
             // zeros carry no information, never send them.
             if v.abs() >= thr && *v != 0.0 {
-                idx.push(i as u32);
+                self.idx_scratch.push(i as u32);
             }
         }
-        if idx.len() > cap {
-            let cand_vals: Vec<f32> = idx.iter().map(|&i| self.velocity[i as usize]).collect();
-            let keep = super::topk::select_topk_indices(&cand_vals, cap, rng);
-            idx = keep.into_iter().map(|p| idx[p as usize]).collect();
+        if self.idx_scratch.len() > cap {
+            // Candidate magnitudes are precomputed so the quickselect probes
+            // a flat buffer (bit-identical to comparing .abs() per probe).
+            self.mag_scratch.clear();
+            self.mag_scratch.extend(
+                self.idx_scratch
+                    .iter()
+                    .map(|&i| self.velocity[i as usize].abs()),
+            );
+            super::topk::select_topk_indices_into(
+                &self.mag_scratch,
+                cap,
+                rng,
+                &mut self.sel_scratch,
+            );
+            // Remap candidate positions back to tensor indices, in place.
+            for p in self.sel_scratch.iter_mut() {
+                *p = self.idx_scratch[*p as usize];
+            }
+            std::mem::swap(&mut self.idx_scratch, &mut self.sel_scratch);
         }
-        if idx.is_empty() {
+        if self.idx_scratch.is_empty() {
             // Degenerate all-zero group: send the first element.
-            idx.push(0);
+            self.idx_scratch.push(0);
         }
-        let val: Vec<f32> = idx.iter().map(|&i| self.velocity[i as usize]).collect();
+        self.val_scratch.clear();
+        self.val_scratch.extend(
+            self.idx_scratch
+                .iter()
+                .map(|&i| self.velocity[i as usize]),
+        );
 
         // v[sent] = 0, u[sent] = 0.
-        for &i in &idx {
+        for &i in &self.idx_scratch {
             self.velocity[i as usize] = 0.0;
             if let Some(u) = &mut self.momentum_buf {
                 u[i as usize] = 0.0;
             }
         }
 
-        sparse::encode_into(&idx, &val, out);
+        sparse::encode_into(&self.idx_scratch, &self.val_scratch, out);
     }
 
     fn decode_into(&self, wire: &[u8], out: &mut [f32]) {

@@ -3,7 +3,7 @@
 //! allreduce (paper Table 1). The half-precision conversion is implemented
 //! here because no `half` crate exists in the offline image.
 
-use super::{bitpack, Codec, CodecKind};
+use super::{simd, Codec, CodecKind};
 use crate::util::rng::Xoshiro256;
 
 // ---------------------------------------------------------------------------
@@ -143,17 +143,11 @@ impl Codec for Fp32 {
 
     fn reduce_wire(&self, a: &mut [u8], b: &[u8]) {
         assert_eq!(a.len(), b.len());
-        for i in (0..a.len()).step_by(4) {
-            let x = bitpack::read_f32(a, i) + bitpack::read_f32(b, i);
-            a[i..i + 4].copy_from_slice(&x.to_le_bytes());
-        }
+        simd::add_f32_bytes(a, b);
     }
 
     fn scale_wire(&self, a: &mut [u8], factor: f32) {
-        for i in (0..a.len()).step_by(4) {
-            let x = bitpack::read_f32(a, i) * factor;
-            a[i..i + 4].copy_from_slice(&x.to_le_bytes());
-        }
+        simd::scale_f32_bytes(a, factor);
     }
 }
 
@@ -184,12 +178,12 @@ impl Codec for Fp16 {
         assert_eq!(grad.len(), self.n);
         out.clear();
         out.resize(2 * grad.len(), 0);
-        encode_f16_buf(grad, out);
+        simd::f16_encode_bytes(grad, out);
     }
 
     fn decode_into(&self, wire: &[u8], out: &mut [f32]) {
         assert!(wire.len() >= 2 * self.n, "short fp16 payload");
-        decode_f16_buf(wire, &mut out[..self.n]);
+        simd::f16_decode_bytes(wire, &mut out[..self.n]);
     }
 
     fn reduce_wire(&self, a: &mut [u8], b: &[u8]) {
@@ -215,83 +209,9 @@ impl Codec for Fp16 {
     }
 }
 
-// ---------------------------------------------------------------------------
-// Bulk f16 conversion (§Perf): F16C SIMD (8 lanes) when the CPU has it,
-// scalar fallback otherwise. The SIMD path uses round-to-nearest-even like
-// the scalar one; overflow saturation is patched scalar-wise afterwards
-// (rare: |v| > 65504), keeping the no-inf wire guarantee.
-// ---------------------------------------------------------------------------
-
-fn encode_f16_buf(src: &[f32], dst: &mut [u8]) {
-    debug_assert_eq!(dst.len(), 2 * src.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if is_x86_feature_detected!("f16c") {
-            unsafe { encode_f16_f16c(src, dst) };
-            return;
-        }
-    }
-    for (v, d) in src.iter().zip(dst.chunks_exact_mut(2)) {
-        d.copy_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
-    }
-}
-
-fn decode_f16_buf(src: &[u8], dst: &mut [f32]) {
-    debug_assert!(src.len() >= 2 * dst.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if is_x86_feature_detected!("f16c") {
-            unsafe { decode_f16_f16c(src, dst) };
-            return;
-        }
-    }
-    for (d, s) in dst.iter_mut().zip(src.chunks_exact(2)) {
-        *d = f16_bits_to_f32(u16::from_le_bytes([s[0], s[1]]));
-    }
-}
-
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "f16c")]
-unsafe fn encode_f16_f16c(src: &[f32], dst: &mut [u8]) {
-    use std::arch::x86_64::*;
-    let chunks = src.len() / 8;
-    for i in 0..chunks {
-        let v = _mm256_loadu_ps(src.as_ptr().add(8 * i));
-        let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(v);
-        _mm_storeu_si128(dst.as_mut_ptr().add(16 * i) as *mut __m128i, h);
-    }
-    for i in 8 * chunks..src.len() {
-        let b = f32_to_f16_bits(src[i]).to_le_bytes();
-        dst[2 * i] = b[0];
-        dst[2 * i + 1] = b[1];
-    }
-    // Patch finite overflows: hardware emits ±inf, our wire format
-    // saturates to ±65504. Scan the (half-size) OUTPUT for inf patterns —
-    // overflow is rare, so this is a read-mostly sweep.
-    for (i, h2) in dst.chunks_exact_mut(2).enumerate() {
-        let h = u16::from_le_bytes([h2[0], h2[1]]);
-        if h & 0x7FFF == 0x7C00 {
-            let b = f32_to_f16_bits(src[i]).to_le_bytes();
-            h2[0] = b[0];
-            h2[1] = b[1];
-        }
-    }
-}
-
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "f16c")]
-unsafe fn decode_f16_f16c(src: &[u8], dst: &mut [f32]) {
-    use std::arch::x86_64::*;
-    let chunks = dst.len() / 8;
-    for i in 0..chunks {
-        let h = _mm_loadu_si128(src.as_ptr().add(16 * i) as *const __m128i);
-        let v = _mm256_cvtph_ps(h);
-        _mm256_storeu_ps(dst.as_mut_ptr().add(8 * i), v);
-    }
-    for i in 8 * chunks..dst.len() {
-        dst[i] = f16_bits_to_f32(u16::from_le_bytes([src[2 * i], src[2 * i + 1]]));
-    }
-}
+// Bulk f16 conversion lives in `super::simd` (F16C kernels + the scalar
+// reference built on `f32_to_f16_bits`/`f16_bits_to_f32` above), so fp16
+// shares the same dispatch/force-scalar switches as every other kernel.
 
 #[cfg(test)]
 mod tests {

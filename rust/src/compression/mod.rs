@@ -29,6 +29,7 @@ pub mod fp;
 pub mod qsgd;
 pub mod randk;
 pub mod sign;
+pub mod simd;
 pub mod sparse;
 pub mod terngrad;
 pub mod topk;

@@ -14,7 +14,7 @@
 //!
 //! Stochastic rounding makes the compressor unbiased: `E[Q(v)] = v`.
 
-use super::{bitpack, Codec, CodecKind};
+use super::{bitpack, simd, Codec, CodecKind};
 use crate::util::rng::Xoshiro256;
 
 /// Elements sharing one codebook norm.
@@ -23,7 +23,8 @@ pub const BUCKET: usize = 512;
 pub struct Qsgd {
     n: usize,
     bits: u8,
-    levels: u32, // s = 2^(bits-1) - 1
+    levels: u32,      // s = 2^(bits-1) - 1
+    ratios: Vec<f32>, // scratch: vectorized magnitude pass, reused per step
 }
 
 impl Qsgd {
@@ -36,6 +37,7 @@ impl Qsgd {
             n,
             bits,
             levels: (1u32 << (bits - 1)) - 1,
+            ratios: Vec::new(),
         }
     }
 
@@ -67,9 +69,13 @@ impl Codec for Qsgd {
             bitpack::push_f32(out, norm);
         }
         // Body: quantized levels. §Perf: multiply by the bucket's inverse
-        // norm instead of dividing per element. (A two-draws-per-u64 RNG
-        // batching variant was tried and REVERTED: the extra branch/state
-        // cost more than the saved xoshiro step — see EXPERIMENTS.md §Perf.)
+        // norm instead of dividing per element; the capped magnitude pass
+        // `(|v|*inv).min(s)` is vectorized into a scratch buffer, while
+        // the stochastic-rounding draw stays scalar — the RNG stream is
+        // strictly sequential. (A two-draws-per-u64 RNG batching variant
+        // was tried and REVERTED: the extra branch/state cost more than
+        // the saved xoshiro step — see EXPERIMENTS.md §Perf.)
+        self.ratios.resize(BUCKET.min(self.n), 0.0);
         for (b, chunk) in grad.chunks(BUCKET).enumerate() {
             let norm = bitpack::read_f32(out, 4 * b);
             if norm == 0.0 {
@@ -77,8 +83,9 @@ impl Codec for Qsgd {
                 continue;
             }
             let inv = s / norm;
-            for &v in chunk {
-                let ratio = (v.abs() * inv).min(s);
+            let ratios = &mut self.ratios[..chunk.len()];
+            simd::qsgd_ratios(chunk, inv, s, ratios);
+            for (&v, &ratio) in chunk.iter().zip(ratios.iter()) {
                 let floor = ratio.floor();
                 // Stochastic rounding: round up with prob = frac(ratio).
                 let frac = ratio - floor;
@@ -98,11 +105,7 @@ impl Codec for Qsgd {
             // §Perf: hoist the per-bucket scale out of the element loop.
             let scale = bitpack::read_f32(wire, 4 * b) * inv_s;
             let base = body + b * BUCKET;
-            for (j, o) in chunk.iter_mut().enumerate() {
-                let q = wire[base + j];
-                let mag = scale * (q & 0x7F) as f32;
-                *o = f32::from_bits(mag.to_bits() | ((q as u32 & 0x80) << 24));
-            }
+            simd::qsgd_decode(&wire[base..base + chunk.len()], scale, chunk);
         }
     }
 
@@ -114,12 +117,7 @@ impl Codec for Qsgd {
         for (b, chunk) in out[..self.n].chunks_mut(BUCKET).enumerate() {
             let scale = bitpack::read_f32(wire, 4 * b) * inv_s;
             let base = body + b * BUCKET;
-            for (j, o) in chunk.iter_mut().enumerate() {
-                let q = wire[base + j];
-                let mag = scale * (q & 0x7F) as f32;
-                let v = f32::from_bits(mag.to_bits() | ((q as u32 & 0x80) << 24));
-                *o += weight * v;
-            }
+            simd::qsgd_decode_add(&wire[base..base + chunk.len()], scale, weight, chunk);
         }
     }
 }

@@ -12,8 +12,8 @@
 //! All four pack 32 signs per `u32` word ([`bitpack`]), i.e. a 32× payload
 //! reduction, and synchronize via allgather (paper Table 1).
 
-use super::bitpack;
 use super::error_feedback::Residual;
+use super::{bitpack, simd};
 use super::{digest_f32s, Codec, CodecKind, STATE_DIGEST_SEED};
 use crate::util::rng::Xoshiro256;
 
@@ -117,21 +117,7 @@ impl Codec for EfSignSgd {
 
         self.words.clear();
         self.words.resize(self.n.div_ceil(32), 0);
-        let mag = scale.to_bits() & 0x7FFF_FFFF;
-        for ((chunk, rchunk), word) in corrected
-            .chunks(32)
-            .zip(residual.chunks_mut(32))
-            .zip(self.words.iter_mut())
-        {
-            let mut w = 0u32;
-            for (j, (c, r)) in chunk.iter().zip(rchunk.iter_mut()).enumerate() {
-                let sign_bit = c.to_bits() >> 31; // 1 = negative
-                w |= (sign_bit ^ 1) << j;
-                // decoded = ±scale with the same sign bit.
-                *r = c - f32::from_bits(mag | (sign_bit << 31));
-            }
-            *word = w;
-        }
+        simd::pack_signs_residual(&corrected, residual, scale, &mut self.words);
 
         out.clear();
         out.reserve(8 + self.words.len() * 4);
@@ -228,19 +214,13 @@ impl Codec for OneBit {
 
         self.words.clear();
         self.words.resize(self.n.div_ceil(32), 0);
-        for ((chunk, rchunk), word) in corrected
-            .chunks(32)
-            .zip(residual.chunks_mut(32))
-            .zip(self.words.iter_mut())
-        {
-            let mut w = 0u32;
-            for (j, (c, r)) in chunk.iter().zip(rchunk.iter_mut()).enumerate() {
-                let neg = c.to_bits() >> 31;
-                w |= (neg ^ 1) << j;
-                *r = c - if neg == 0 { pos_mean } else { neg_mean };
-            }
-            *word = w;
-        }
+        simd::pack_signs_residual_centroids(
+            &corrected,
+            residual,
+            pos_mean,
+            neg_mean,
+            &mut self.words,
+        );
 
         out.clear();
         out.reserve(12 + self.words.len() * 4);
@@ -330,9 +310,7 @@ impl Codec for Signum {
 
     fn encode_into(&mut self, grad: &[f32], _rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
-        for (m, g) in self.momentum.iter_mut().zip(grad) {
-            *m = self.beta * *m + (1.0 - self.beta) * g;
-        }
+        simd::signum_update(&mut self.momentum, grad, self.beta);
         bitpack::pack_signs(&self.momentum, &mut self.words);
         out.clear();
         out.reserve(4 + self.words.len() * 4);

@@ -1,0 +1,1204 @@
+//! Vectorized codec kernels with a mandatory scalar fallback.
+//!
+//! Every hot loop in the compression layer (sign packing/unpacking, the
+//! Signum momentum update, magnitude passes, QSGD quantize/dequantize,
+//! TernGrad 2-bit packing, and the Fp32 wire reduce) dispatches through
+//! this module. The contract is strict **bit-identity**: for any input,
+//! the SIMD path must produce exactly the bytes/bits the scalar path
+//! produces, so the pipeline/transport/hierarchy equivalence suites keep
+//! passing regardless of which path ran. That contract shapes what is
+//! vectorized at all:
+//!
+//! - Elementwise ops (bit manipulation, a single mul/add/sub per element,
+//!   `abs` = sign-bit clear, `min`, int→float conversion of values ≤ 127)
+//!   are exact in IEEE-754 and vectorize freely.
+//! - Sequential `f64` accumulation chains (EFSignSGD's L1 mean, OneBit's
+//!   centroid sums, QSGD's per-bucket norms) are **not** reassociable
+//!   without changing bits — they stay scalar in the codecs.
+//! - FMA is never used: `a*b + c` must round twice, as scalar code does.
+//! - RNG draws stay strictly sequential (QSGD/TernGrad); batching was
+//!   tried and reverted because it reorders the stream.
+//!
+//! Backend selection is runtime: AVX2 via `is_x86_feature_detected!` on
+//! x86-64, NEON unconditionally on aarch64 (baseline feature), scalar
+//! everywhere else. Two independent switches force the scalar path:
+//!
+//! - the `force-scalar` cargo feature compiles the SIMD backends out
+//!   entirely (the CI leg that keeps the fallback green), and
+//! - [`set_forced_scalar`] flips a process-global at runtime so one
+//!   binary can time/compare both paths (used by
+//!   `benches/compression_micro.rs` and `tests/simd_equivalence.rs`).
+//!
+//! Kernels not implemented for a backend silently fall back to scalar —
+//! the scalar module is the reference implementation and the only one
+//! that must exist.
+#![allow(clippy::needless_range_loop)]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static FORCE_SCALAR_RT: AtomicBool = AtomicBool::new(false);
+
+/// Force (or un-force) the scalar reference path at runtime, process-wide.
+///
+/// Benches and equivalence tests use this to run both paths inside one
+/// binary. Racing toggles are harmless for correctness because each
+/// kernel call reads the flag once and both paths are bit-identical.
+pub fn set_forced_scalar(on: bool) {
+    FORCE_SCALAR_RT.store(on, Ordering::Relaxed);
+}
+
+/// True when the scalar path is forced, by the `force-scalar` cargo
+/// feature or by [`set_forced_scalar`].
+#[inline]
+pub fn forced_scalar() -> bool {
+    cfg!(feature = "force-scalar") || FORCE_SCALAR_RT.load(Ordering::Relaxed)
+}
+
+/// Name of the kernel backend calls would dispatch to right now:
+/// `"avx2"`, `"neon"`, or `"scalar"`.
+pub fn active_backend() -> &'static str {
+    if forced_scalar() {
+        return "scalar";
+    }
+    detected_backend()
+}
+
+#[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+fn detected_backend() -> &'static str {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+#[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+fn detected_backend() -> &'static str {
+    "neon"
+}
+
+#[cfg(any(
+    feature = "force-scalar",
+    not(any(target_arch = "x86_64", target_arch = "aarch64"))
+))]
+fn detected_backend() -> &'static str {
+    "scalar"
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch wrappers. Each wrapper owns the debug-time shape checks; the
+// backend kernels assume they hold.
+// ---------------------------------------------------------------------------
+
+/// Pack IEEE sign bits of `grad` into `words` (bit set ⇔ non-negative,
+/// so `-0.0` packs as negative, matching scalar `to_bits() >> 31`).
+/// `words.len()` must be `grad.len().div_ceil(32)`.
+pub fn pack_sign_words(grad: &[f32], words: &mut [u32]) {
+    debug_assert_eq!(words.len(), grad.len().div_ceil(32));
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::pack_sign_words(grad, words) };
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+    if !forced_scalar() {
+        return neon::pack_sign_words(grad, words);
+    }
+    scalar::pack_sign_words(grad, words)
+}
+
+/// Unpack `n` sign bits from little-endian packed `bytes` into
+/// `out[..n]` as `±scale` (bit set → `+scale`).
+/// `bytes.len()` must be at least `n.div_ceil(32) * 4`.
+pub fn unpack_signs_bytes(bytes: &[u8], n: usize, scale: f32, out: &mut [f32]) {
+    debug_assert!(bytes.len() >= n.div_ceil(32) * 4);
+    debug_assert!(out.len() >= n);
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::unpack_signs_bytes(bytes, n, scale, out) };
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+    if !forced_scalar() {
+        return neon::unpack_signs_bytes(bytes, n, scale, out);
+    }
+    scalar::unpack_signs_bytes(bytes, n, scale, out)
+}
+
+/// Accumulate `weight * ±scale` decoded from packed sign `bytes` into
+/// `out[..n]` — the majority-vote reduce primitive for the sign codecs.
+pub fn unpack_signs_add_bytes(bytes: &[u8], n: usize, scale: f32, weight: f32, out: &mut [f32]) {
+    debug_assert!(bytes.len() >= n.div_ceil(32) * 4);
+    debug_assert!(out.len() >= n);
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::unpack_signs_add_bytes(bytes, n, scale, weight, out) };
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+    if !forced_scalar() {
+        return neon::unpack_signs_add_bytes(bytes, n, scale, weight, out);
+    }
+    scalar::unpack_signs_add_bytes(bytes, n, scale, weight, out)
+}
+
+/// EFSignSGD second pass, fused: pack the sign of each `corrected[i]`
+/// into `words` and write the new residual
+/// `corrected[i] - copysign(scale, corrected[i])` into `residual[i]`.
+pub fn pack_signs_residual(corrected: &[f32], residual: &mut [f32], scale: f32, words: &mut [u32]) {
+    debug_assert_eq!(corrected.len(), residual.len());
+    debug_assert_eq!(words.len(), corrected.len().div_ceil(32));
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::pack_signs_residual(corrected, residual, scale, words) };
+    }
+    scalar::pack_signs_residual(corrected, residual, scale, words)
+}
+
+/// OneBit second pass, fused: pack the sign of each `corrected[i]` and
+/// write the residual against the matching cluster centroid
+/// (`pos_mean` for non-negative values, `neg_mean` otherwise).
+pub fn pack_signs_residual_centroids(
+    corrected: &[f32],
+    residual: &mut [f32],
+    pos_mean: f32,
+    neg_mean: f32,
+    words: &mut [u32],
+) {
+    debug_assert_eq!(corrected.len(), residual.len());
+    debug_assert_eq!(words.len(), corrected.len().div_ceil(32));
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe {
+            x86::pack_signs_residual_centroids(corrected, residual, pos_mean, neg_mean, words)
+        };
+    }
+    scalar::pack_signs_residual_centroids(corrected, residual, pos_mean, neg_mean, words)
+}
+
+/// Signum momentum update: `m = beta*m + (1-beta)*g`, elementwise, with
+/// the two products rounded separately (no FMA) exactly as scalar does.
+pub fn signum_update(momentum: &mut [f32], grad: &[f32], beta: f32) {
+    debug_assert_eq!(momentum.len(), grad.len());
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::signum_update(momentum, grad, beta) };
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+    if !forced_scalar() {
+        return neon::signum_update(momentum, grad, beta);
+    }
+    scalar::signum_update(momentum, grad, beta)
+}
+
+/// `out[i] = |src[i]|` (sign-bit clear — bit-identical to `f32::abs`,
+/// including on NaN). The magnitude pass feeding TopK/DGC selection.
+pub fn abs_slice(src: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::abs_slice(src, out) };
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+    if !forced_scalar() {
+        return neon::abs_slice(src, out);
+    }
+    scalar::abs_slice(src, out)
+}
+
+/// Resize `out` to `src.len()` and fill it with magnitudes via
+/// [`abs_slice`] — the scratch-buffer-friendly form.
+pub fn abs_into(src: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(src.len(), 0.0);
+    abs_slice(src, out);
+}
+
+/// QSGD ratio pass: `out[i] = (|chunk[i]| * inv).min(cap)`. The
+/// stochastic-rounding draw that consumes these stays scalar (sequential
+/// RNG stream).
+pub fn qsgd_ratios(chunk: &[f32], inv: f32, cap: f32, out: &mut [f32]) {
+    debug_assert_eq!(chunk.len(), out.len());
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::qsgd_ratios(chunk, inv, cap, out) };
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+    if !forced_scalar() {
+        return neon::qsgd_ratios(chunk, inv, cap, out);
+    }
+    scalar::qsgd_ratios(chunk, inv, cap, out)
+}
+
+/// QSGD dequantize: `out[i]` gets magnitude `scale * (qs[i] & 0x7F)`
+/// with the quantized sign bit OR-ed into the float's sign position.
+pub fn qsgd_decode(qs: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(qs.len(), out.len());
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::qsgd_decode(qs, scale, out) };
+    }
+    scalar::qsgd_decode(qs, scale, out)
+}
+
+/// QSGD dequantize-accumulate: `out[i] += weight * decode(qs[i])`.
+pub fn qsgd_decode_add(qs: &[u8], scale: f32, weight: f32, out: &mut [f32]) {
+    debug_assert_eq!(qs.len(), out.len());
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::qsgd_decode_add(qs, scale, weight, out) };
+    }
+    scalar::qsgd_decode_add(qs, scale, weight, out)
+}
+
+/// Elementwise f32 add over little-endian wire buffers:
+/// `acc[i] += other[i]` per 4-byte lane. Trailing bytes (< 4) untouched.
+pub fn add_f32_bytes(acc: &mut [u8], other: &[u8]) {
+    debug_assert_eq!(acc.len(), other.len());
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::add_f32_bytes(acc, other) };
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+    if !forced_scalar() {
+        return neon::add_f32_bytes(acc, other);
+    }
+    scalar::add_f32_bytes(acc, other)
+}
+
+/// Elementwise f32 scale over a little-endian wire buffer.
+pub fn scale_f32_bytes(buf: &mut [u8], factor: f32) {
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::scale_f32_bytes(buf, factor) };
+    }
+    #[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+    if !forced_scalar() {
+        return neon::scale_f32_bytes(buf, factor);
+    }
+    scalar::scale_f32_bytes(buf, factor)
+}
+
+/// Bulk f32 → IEEE binary16 bytes (LE), round-to-nearest-even, with
+/// finite overflow saturating to ±65504 — the wire must never carry a
+/// half inf for a finite input. `dst.len()` must be `2 * src.len()`.
+/// x86 uses F16C (8 lanes) with a scalar fix-up pass for the rare
+/// saturation case; everywhere else runs the scalar reference in `fp`.
+pub fn f16_encode_bytes(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), 2 * src.len());
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("f16c") {
+        return unsafe { x86::f16_encode_bytes(src, dst) };
+    }
+    scalar::f16_encode_bytes(src, dst)
+}
+
+/// Bulk IEEE binary16 bytes (LE) → f32. `src.len()` must be at least
+/// `2 * dst.len()`.
+pub fn f16_decode_bytes(src: &[u8], dst: &mut [f32]) {
+    debug_assert!(src.len() >= 2 * dst.len());
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("f16c") {
+        return unsafe { x86::f16_decode_bytes(src, dst) };
+    }
+    scalar::f16_decode_bytes(src, dst)
+}
+
+/// Pack 2-bit fields (TernGrad trits) 16-per-word, field `j` at bit
+/// `2*j`. `words.len()` must be `fields.len().div_ceil(16)`. Values are
+/// masked to 2 bits exactly like the scalar packer.
+pub fn pack2_words(fields: &[u8], words: &mut [u32]) {
+    debug_assert_eq!(words.len(), fields.len().div_ceil(16));
+    #[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+    if !forced_scalar() && std::arch::is_x86_feature_detected!("avx2") {
+        return unsafe { x86::pack2_words(fields, words) };
+    }
+    scalar::pack2_words(fields, words)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference implementations. These ARE the semantics; every SIMD
+// kernel must match them bit-for-bit and uses them for tail elements.
+// ---------------------------------------------------------------------------
+
+pub(crate) mod scalar {
+    pub fn pack_sign_words(grad: &[f32], words: &mut [u32]) {
+        for (chunk, w) in grad.chunks(32).zip(words.iter_mut()) {
+            let mut word = 0u32;
+            for (j, v) in chunk.iter().enumerate() {
+                word |= (((v.to_bits() >> 31) ^ 1) & 1) << j;
+            }
+            *w = word;
+        }
+    }
+
+    pub fn unpack_signs_bytes(bytes: &[u8], n: usize, scale: f32, out: &mut [f32]) {
+        let mag = scale.to_bits() & 0x7FFF_FFFF;
+        let mut i = 0;
+        for chunk in bytes.chunks_exact(4) {
+            if i >= n {
+                break;
+            }
+            let word = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            let mut j = 0;
+            while j < 32 && i < n {
+                let bit = (word >> j) & 1;
+                out[i] = f32::from_bits(mag | ((bit ^ 1) << 31));
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+
+    pub fn unpack_signs_add_bytes(bytes: &[u8], n: usize, scale: f32, weight: f32, out: &mut [f32]) {
+        let ws = weight * scale;
+        let mag = ws.to_bits() & 0x7FFF_FFFF;
+        let sgn = (ws.to_bits() >> 31) & 1;
+        let mut i = 0;
+        for chunk in bytes.chunks_exact(4) {
+            if i >= n {
+                break;
+            }
+            let word = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            let mut j = 0;
+            while j < 32 && i < n {
+                let bit = ((word >> j) & 1) ^ 1 ^ sgn;
+                out[i] += f32::from_bits(mag | (bit << 31));
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+
+    pub fn pack_signs_residual(
+        corrected: &[f32],
+        residual: &mut [f32],
+        scale: f32,
+        words: &mut [u32],
+    ) {
+        let mag = scale.to_bits() & 0x7FFF_FFFF;
+        for ((chunk, res), w) in corrected
+            .chunks(32)
+            .zip(residual.chunks_mut(32))
+            .zip(words.iter_mut())
+        {
+            let mut word = 0u32;
+            for (j, (c, r)) in chunk.iter().zip(res.iter_mut()).enumerate() {
+                let sign_bit = c.to_bits() >> 31;
+                word |= (sign_bit ^ 1) << j;
+                *r = c - f32::from_bits(mag | (sign_bit << 31));
+            }
+            *w = word;
+        }
+    }
+
+    pub fn pack_signs_residual_centroids(
+        corrected: &[f32],
+        residual: &mut [f32],
+        pos_mean: f32,
+        neg_mean: f32,
+        words: &mut [u32],
+    ) {
+        for ((chunk, res), w) in corrected
+            .chunks(32)
+            .zip(residual.chunks_mut(32))
+            .zip(words.iter_mut())
+        {
+            let mut word = 0u32;
+            for (j, (c, r)) in chunk.iter().zip(res.iter_mut()).enumerate() {
+                let neg = c.to_bits() >> 31;
+                word |= (neg ^ 1) << j;
+                *r = c - if neg == 0 { pos_mean } else { neg_mean };
+            }
+            *w = word;
+        }
+    }
+
+    pub fn signum_update(momentum: &mut [f32], grad: &[f32], beta: f32) {
+        let omb = 1.0 - beta;
+        for (m, g) in momentum.iter_mut().zip(grad) {
+            *m = beta * *m + omb * g;
+        }
+    }
+
+    pub fn abs_slice(src: &[f32], out: &mut [f32]) {
+        for (o, v) in out.iter_mut().zip(src) {
+            *o = f32::from_bits(v.to_bits() & 0x7FFF_FFFF);
+        }
+    }
+
+    pub fn qsgd_ratios(chunk: &[f32], inv: f32, cap: f32, out: &mut [f32]) {
+        for (o, v) in out.iter_mut().zip(chunk) {
+            *o = (v.abs() * inv).min(cap);
+        }
+    }
+
+    pub fn qsgd_decode(qs: &[u8], scale: f32, out: &mut [f32]) {
+        for (o, &q) in out.iter_mut().zip(qs) {
+            let mag = scale * (q & 0x7F) as f32;
+            *o = f32::from_bits(mag.to_bits() | ((q as u32 & 0x80) << 24));
+        }
+    }
+
+    pub fn qsgd_decode_add(qs: &[u8], scale: f32, weight: f32, out: &mut [f32]) {
+        for (o, &q) in out.iter_mut().zip(qs) {
+            let mag = scale * (q & 0x7F) as f32;
+            let v = f32::from_bits(mag.to_bits() | ((q as u32 & 0x80) << 24));
+            *o += weight * v;
+        }
+    }
+
+    pub fn add_f32_bytes(acc: &mut [u8], other: &[u8]) {
+        for (a, b) in acc.chunks_exact_mut(4).zip(other.chunks_exact(4)) {
+            let x = f32::from_le_bytes([a[0], a[1], a[2], a[3]]);
+            let y = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            a.copy_from_slice(&(x + y).to_le_bytes());
+        }
+    }
+
+    pub fn scale_f32_bytes(buf: &mut [u8], factor: f32) {
+        for a in buf.chunks_exact_mut(4) {
+            let x = f32::from_le_bytes([a[0], a[1], a[2], a[3]]) * factor;
+            a.copy_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn pack2_words(fields: &[u8], words: &mut [u32]) {
+        for (chunk, w) in fields.chunks(16).zip(words.iter_mut()) {
+            let mut word = 0u32;
+            for (j, &v) in chunk.iter().enumerate() {
+                debug_assert!(v < 4, "pack2 field out of range: {v}");
+                word |= ((v & 0b11) as u32) << (2 * j);
+            }
+            *w = word;
+        }
+    }
+
+    pub fn f16_encode_bytes(src: &[f32], dst: &mut [u8]) {
+        for (v, d) in src.iter().zip(dst.chunks_exact_mut(2)) {
+            d.copy_from_slice(&crate::compression::fp::f32_to_f16_bits(*v).to_le_bytes());
+        }
+    }
+
+    pub fn f16_decode_bytes(src: &[u8], dst: &mut [f32]) {
+        for (d, s) in dst.iter_mut().zip(src.chunks_exact(2)) {
+            *d = crate::compression::fp::f16_bits_to_f32(u16::from_le_bytes([s[0], s[1]]));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend. All functions are `unsafe fn` gated on a runtime AVX2
+// check at the dispatch site; loads/stores are unaligned-safe (`loadu`/
+// `storeu`). Tails below one vector width run the scalar reference.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+mod x86 {
+    use super::scalar;
+    use std::arch::x86_64::*;
+
+    /// Spread the 16 bits of `x` to even bit positions of a u32.
+    #[inline]
+    fn spread16(x: u16) -> u32 {
+        let mut x = x as u32;
+        x = (x | (x << 8)) & 0x00FF_00FF;
+        x = (x | (x << 4)) & 0x0F0F_0F0F;
+        x = (x | (x << 2)) & 0x3333_3333;
+        x = (x | (x << 1)) & 0x5555_5555;
+        x
+    }
+
+    /// Interleave two 16-bit masks: bit `j` of `lo` → bit `2j`, bit `j`
+    /// of `hi` → bit `2j+1`.
+    #[inline]
+    fn interleave16(lo: u16, hi: u16) -> u32 {
+        spread16(lo) | (spread16(hi) << 1)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack_sign_words(grad: &[f32], words: &mut [u32]) {
+        let full = grad.len() / 32;
+        for i in 0..full {
+            let base = grad.as_ptr().add(i * 32);
+            // movemask collects the IEEE sign bits: 1 = negative.
+            let m0 = _mm256_movemask_ps(_mm256_loadu_ps(base)) as u32;
+            let m1 = _mm256_movemask_ps(_mm256_loadu_ps(base.add(8))) as u32;
+            let m2 = _mm256_movemask_ps(_mm256_loadu_ps(base.add(16))) as u32;
+            let m3 = _mm256_movemask_ps(_mm256_loadu_ps(base.add(24))) as u32;
+            words[i] = !(m0 | (m1 << 8) | (m2 << 16) | (m3 << 24));
+        }
+        scalar::pack_sign_words(&grad[full * 32..], &mut words[full..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_signs_bytes(bytes: &[u8], n: usize, scale: f32, out: &mut [f32]) {
+        let mag = _mm256_set1_epi32((scale.to_bits() & 0x7FFF_FFFF) as i32);
+        let one = _mm256_set1_epi32(1);
+        let lane_ids = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        let full_words = n / 32;
+        for wi in 0..full_words {
+            let word = u32::from_le_bytes([
+                bytes[4 * wi],
+                bytes[4 * wi + 1],
+                bytes[4 * wi + 2],
+                bytes[4 * wi + 3],
+            ]);
+            let wv = _mm256_set1_epi32(word as i32);
+            for g in 0..4 {
+                let sh = _mm256_add_epi32(lane_ids, _mm256_set1_epi32((8 * g) as i32));
+                let bits = _mm256_and_si256(_mm256_srlv_epi32(wv, sh), one);
+                let sign = _mm256_slli_epi32::<31>(_mm256_xor_si256(bits, one));
+                let val = _mm256_castsi256_ps(_mm256_or_si256(mag, sign));
+                _mm256_storeu_ps(out.as_mut_ptr().add(wi * 32 + g * 8), val);
+            }
+        }
+        let done = full_words * 32;
+        scalar::unpack_signs_bytes(&bytes[full_words * 4..], n - done, scale, &mut out[done..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_signs_add_bytes(
+        bytes: &[u8],
+        n: usize,
+        scale: f32,
+        weight: f32,
+        out: &mut [f32],
+    ) {
+        let ws = weight * scale;
+        let sgn = (ws.to_bits() >> 31) & 1;
+        let mag = _mm256_set1_epi32((ws.to_bits() & 0x7FFF_FFFF) as i32);
+        let one = _mm256_set1_epi32(1);
+        let flip = _mm256_set1_epi32((1 ^ sgn) as i32);
+        let lane_ids = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        let full_words = n / 32;
+        for wi in 0..full_words {
+            let word = u32::from_le_bytes([
+                bytes[4 * wi],
+                bytes[4 * wi + 1],
+                bytes[4 * wi + 2],
+                bytes[4 * wi + 3],
+            ]);
+            let wv = _mm256_set1_epi32(word as i32);
+            for g in 0..4 {
+                let p = out.as_mut_ptr().add(wi * 32 + g * 8);
+                let sh = _mm256_add_epi32(lane_ids, _mm256_set1_epi32((8 * g) as i32));
+                let bits = _mm256_and_si256(_mm256_srlv_epi32(wv, sh), one);
+                let sb = _mm256_slli_epi32::<31>(_mm256_xor_si256(bits, flip));
+                let add = _mm256_castsi256_ps(_mm256_or_si256(mag, sb));
+                _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), add));
+            }
+        }
+        let done = full_words * 32;
+        scalar::unpack_signs_add_bytes(
+            &bytes[full_words * 4..],
+            n - done,
+            scale,
+            weight,
+            &mut out[done..],
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack_signs_residual(
+        corrected: &[f32],
+        residual: &mut [f32],
+        scale: f32,
+        words: &mut [u32],
+    ) {
+        let mag = _mm256_set1_epi32((scale.to_bits() & 0x7FFF_FFFF) as i32);
+        let smask = _mm256_set1_epi32(0x8000_0000u32 as i32);
+        let full = corrected.len() / 32;
+        for i in 0..full {
+            let mut neg = 0u32;
+            for g in 0..4 {
+                let off = i * 32 + g * 8;
+                let c = _mm256_loadu_ps(corrected.as_ptr().add(off));
+                neg |= (_mm256_movemask_ps(c) as u32) << (8 * g);
+                // copysign(scale, c): magnitude bits OR c's sign bit.
+                let dec = _mm256_or_si256(mag, _mm256_and_si256(_mm256_castps_si256(c), smask));
+                let r = _mm256_sub_ps(c, _mm256_castsi256_ps(dec));
+                _mm256_storeu_ps(residual.as_mut_ptr().add(off), r);
+            }
+            words[i] = !neg;
+        }
+        let done = full * 32;
+        scalar::pack_signs_residual(
+            &corrected[done..],
+            &mut residual[done..],
+            scale,
+            &mut words[full..],
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack_signs_residual_centroids(
+        corrected: &[f32],
+        residual: &mut [f32],
+        pos_mean: f32,
+        neg_mean: f32,
+        words: &mut [u32],
+    ) {
+        let pos = _mm256_set1_ps(pos_mean);
+        let negm = _mm256_set1_ps(neg_mean);
+        let full = corrected.len() / 32;
+        for i in 0..full {
+            let mut neg = 0u32;
+            for g in 0..4 {
+                let off = i * 32 + g * 8;
+                let c = _mm256_loadu_ps(corrected.as_ptr().add(off));
+                neg |= (_mm256_movemask_ps(c) as u32) << (8 * g);
+                // blendv keys on the sign bit of c: negative → neg_mean.
+                let dec = _mm256_blendv_ps(pos, negm, c);
+                let r = _mm256_sub_ps(c, dec);
+                _mm256_storeu_ps(residual.as_mut_ptr().add(off), r);
+            }
+            words[i] = !neg;
+        }
+        let done = full * 32;
+        scalar::pack_signs_residual_centroids(
+            &corrected[done..],
+            &mut residual[done..],
+            pos_mean,
+            neg_mean,
+            &mut words[full..],
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn signum_update(momentum: &mut [f32], grad: &[f32], beta: f32) {
+        let bv = _mm256_set1_ps(beta);
+        let ov = _mm256_set1_ps(1.0 - beta);
+        let full = momentum.len() / 8;
+        for i in 0..full {
+            let pm = momentum.as_mut_ptr().add(i * 8);
+            let m = _mm256_loadu_ps(pm);
+            let g = _mm256_loadu_ps(grad.as_ptr().add(i * 8));
+            // Two rounded products then an add — never FMA, to match scalar.
+            let r = _mm256_add_ps(_mm256_mul_ps(bv, m), _mm256_mul_ps(ov, g));
+            _mm256_storeu_ps(pm, r);
+        }
+        scalar::signum_update(&mut momentum[full * 8..], &grad[full * 8..], beta);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn abs_slice(src: &[f32], out: &mut [f32]) {
+        let mask = _mm256_set1_epi32(0x7FFF_FFFF);
+        let full = src.len() / 8;
+        for i in 0..full {
+            let v = _mm256_loadu_ps(src.as_ptr().add(i * 8));
+            let a = _mm256_castsi256_ps(_mm256_and_si256(_mm256_castps_si256(v), mask));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i * 8), a);
+        }
+        scalar::abs_slice(&src[full * 8..], &mut out[full * 8..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn qsgd_ratios(chunk: &[f32], inv: f32, cap: f32, out: &mut [f32]) {
+        let mask = _mm256_set1_epi32(0x7FFF_FFFF);
+        let iv = _mm256_set1_ps(inv);
+        let cv = _mm256_set1_ps(cap);
+        let full = chunk.len() / 8;
+        for i in 0..full {
+            let v = _mm256_loadu_ps(chunk.as_ptr().add(i * 8));
+            let a = _mm256_castsi256_ps(_mm256_and_si256(_mm256_castps_si256(v), mask));
+            // min_ps(x, cap) returns cap when x is NaN, matching f32::min.
+            let r = _mm256_min_ps(_mm256_mul_ps(a, iv), cv);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i * 8), r);
+        }
+        scalar::qsgd_ratios(&chunk[full * 8..], inv, cap, &mut out[full * 8..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn qsgd_decode(qs: &[u8], scale: f32, out: &mut [f32]) {
+        let sv = _mm256_set1_ps(scale);
+        let lvl_mask = _mm256_set1_epi32(0x7F);
+        let sgn_mask = _mm256_set1_epi32(0x80);
+        let full = qs.len() / 8;
+        for i in 0..full {
+            let q8 = _mm_loadl_epi64(qs.as_ptr().add(i * 8) as *const __m128i);
+            let q32 = _mm256_cvtepu8_epi32(q8);
+            let level = _mm256_and_si256(q32, lvl_mask);
+            // cvt is exact for 0..=127; mul matches scalar `scale * level`.
+            let magf = _mm256_mul_ps(_mm256_cvtepi32_ps(level), sv);
+            let sign = _mm256_slli_epi32::<24>(_mm256_and_si256(q32, sgn_mask));
+            let v = _mm256_castsi256_ps(_mm256_or_si256(_mm256_castps_si256(magf), sign));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i * 8), v);
+        }
+        let done = full * 8;
+        scalar::qsgd_decode(&qs[done..], scale, &mut out[done..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn qsgd_decode_add(qs: &[u8], scale: f32, weight: f32, out: &mut [f32]) {
+        let sv = _mm256_set1_ps(scale);
+        let wv = _mm256_set1_ps(weight);
+        let lvl_mask = _mm256_set1_epi32(0x7F);
+        let sgn_mask = _mm256_set1_epi32(0x80);
+        let full = qs.len() / 8;
+        for i in 0..full {
+            let p = out.as_mut_ptr().add(i * 8);
+            let q8 = _mm_loadl_epi64(qs.as_ptr().add(i * 8) as *const __m128i);
+            let q32 = _mm256_cvtepu8_epi32(q8);
+            let level = _mm256_and_si256(q32, lvl_mask);
+            let magf = _mm256_mul_ps(_mm256_cvtepi32_ps(level), sv);
+            let sign = _mm256_slli_epi32::<24>(_mm256_and_si256(q32, sgn_mask));
+            let v = _mm256_castsi256_ps(_mm256_or_si256(_mm256_castps_si256(magf), sign));
+            _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), _mm256_mul_ps(wv, v)));
+        }
+        let done = full * 8;
+        scalar::qsgd_decode_add(&qs[done..], scale, weight, &mut out[done..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_f32_bytes(acc: &mut [u8], other: &[u8]) {
+        let lanes = acc.len() / 4;
+        let full = lanes / 8;
+        for i in 0..full {
+            let pa = acc.as_mut_ptr().add(i * 32) as *mut f32;
+            let pb = other.as_ptr().add(i * 32) as *const f32;
+            let s = _mm256_add_ps(_mm256_loadu_ps(pa), _mm256_loadu_ps(pb));
+            _mm256_storeu_ps(pa, s);
+        }
+        scalar::add_f32_bytes(&mut acc[full * 32..], &other[full * 32..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_f32_bytes(buf: &mut [u8], factor: f32) {
+        let fv = _mm256_set1_ps(factor);
+        let lanes = buf.len() / 4;
+        let full = lanes / 8;
+        for i in 0..full {
+            let p = buf.as_mut_ptr().add(i * 32) as *mut f32;
+            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), fv));
+        }
+        scalar::scale_f32_bytes(&mut buf[full * 32..], factor);
+    }
+
+    #[target_feature(enable = "f16c")]
+    pub unsafe fn f16_encode_bytes(src: &[f32], dst: &mut [u8]) {
+        let chunks = src.len() / 8;
+        for i in 0..chunks {
+            let v = _mm256_loadu_ps(src.as_ptr().add(8 * i));
+            let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(v);
+            _mm_storeu_si128(dst.as_mut_ptr().add(16 * i) as *mut __m128i, h);
+        }
+        for i in 8 * chunks..src.len() {
+            let b = crate::compression::fp::f32_to_f16_bits(src[i]).to_le_bytes();
+            dst[2 * i] = b[0];
+            dst[2 * i + 1] = b[1];
+        }
+        // Patch finite overflows: hardware emits ±inf, our wire format
+        // saturates to ±65504. Scan the (half-size) OUTPUT for inf
+        // patterns — overflow is rare, so this is a read-mostly sweep.
+        for (i, h2) in dst.chunks_exact_mut(2).enumerate() {
+            let h = u16::from_le_bytes([h2[0], h2[1]]);
+            if h & 0x7FFF == 0x7C00 {
+                let b = crate::compression::fp::f32_to_f16_bits(src[i]).to_le_bytes();
+                h2[0] = b[0];
+                h2[1] = b[1];
+            }
+        }
+    }
+
+    #[target_feature(enable = "f16c")]
+    pub unsafe fn f16_decode_bytes(src: &[u8], dst: &mut [f32]) {
+        let chunks = dst.len() / 8;
+        for i in 0..chunks {
+            let h = _mm_loadu_si128(src.as_ptr().add(16 * i) as *const __m128i);
+            let v = _mm256_cvtph_ps(h);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(8 * i), v);
+        }
+        for i in 8 * chunks..dst.len() {
+            dst[i] = crate::compression::fp::f16_bits_to_f32(u16::from_le_bytes([
+                src[2 * i],
+                src[2 * i + 1],
+            ]));
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack2_words(fields: &[u8], words: &mut [u32]) {
+        let one = _mm256_set1_epi8(1);
+        let two = _mm256_set1_epi8(2);
+        let full = fields.len() / 32;
+        for i in 0..full {
+            let v = _mm256_loadu_si256(fields.as_ptr().add(i * 32) as *const __m256i);
+            let m0 = _mm256_movemask_epi8(_mm256_cmpeq_epi8(_mm256_and_si256(v, one), one)) as u32;
+            let m1 = _mm256_movemask_epi8(_mm256_cmpeq_epi8(_mm256_and_si256(v, two), two)) as u32;
+            words[2 * i] = interleave16(m0 as u16, m1 as u16);
+            words[2 * i + 1] = interleave16((m0 >> 16) as u16, (m1 >> 16) as u16);
+        }
+        let done = full * 32;
+        scalar::pack2_words(&fields[done..], &mut words[2 * full..]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON backend. NEON is a baseline aarch64 feature, so these are safe
+// functions with unsafe intrinsic blocks inside — no runtime detection.
+// Byte-buffer kernels load via `vld1q_u8` (1-byte alignment) and
+// reinterpret, which matches `from_le_bytes` on little-endian aarch64.
+// Kernels without a NEON variant fall back to scalar at dispatch.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+mod neon {
+    use super::scalar;
+    use std::arch::aarch64::*;
+
+    pub fn pack_sign_words(grad: &[f32], words: &mut [u32]) {
+        let full = grad.len() / 32;
+        unsafe {
+            let weights = vld1q_u32([1u32, 2, 4, 8].as_ptr());
+            for i in 0..full {
+                let mut neg = 0u32;
+                for g in 0..8 {
+                    let v = vld1q_f32(grad.as_ptr().add(i * 32 + g * 4));
+                    let s = vshrq_n_u32::<31>(vreinterpretq_u32_f32(v));
+                    neg |= vaddvq_u32(vmulq_u32(s, weights)) << (4 * g);
+                }
+                words[i] = !neg;
+            }
+        }
+        scalar::pack_sign_words(&grad[full * 32..], &mut words[full..]);
+    }
+
+    pub fn unpack_signs_bytes(bytes: &[u8], n: usize, scale: f32, out: &mut [f32]) {
+        let full_words = n / 32;
+        unsafe {
+            let magv = vdupq_n_u32(scale.to_bits() & 0x7FFF_FFFF);
+            let onev = vdupq_n_u32(1);
+            for wi in 0..full_words {
+                let word = u32::from_le_bytes([
+                    bytes[4 * wi],
+                    bytes[4 * wi + 1],
+                    bytes[4 * wi + 2],
+                    bytes[4 * wi + 3],
+                ]);
+                let wv = vdupq_n_u32(word);
+                for g in 0..8 {
+                    let b = (4 * g) as i32;
+                    // Negative vshlq shifts right by the lane's bit index.
+                    let shv = vld1q_s32([-b, -(b + 1), -(b + 2), -(b + 3)].as_ptr());
+                    let bits = vandq_u32(vshlq_u32(wv, shv), onev);
+                    let sgn = vshlq_n_u32::<31>(veorq_u32(bits, onev));
+                    let val = vreinterpretq_f32_u32(vorrq_u32(magv, sgn));
+                    vst1q_f32(out.as_mut_ptr().add(wi * 32 + g * 4), val);
+                }
+            }
+        }
+        let done = full_words * 32;
+        scalar::unpack_signs_bytes(&bytes[full_words * 4..], n - done, scale, &mut out[done..]);
+    }
+
+    pub fn unpack_signs_add_bytes(bytes: &[u8], n: usize, scale: f32, weight: f32, out: &mut [f32]) {
+        let ws = weight * scale;
+        let sgn = (ws.to_bits() >> 31) & 1;
+        let full_words = n / 32;
+        unsafe {
+            let magv = vdupq_n_u32(ws.to_bits() & 0x7FFF_FFFF);
+            let onev = vdupq_n_u32(1);
+            let flipv = vdupq_n_u32(1 ^ sgn);
+            for wi in 0..full_words {
+                let word = u32::from_le_bytes([
+                    bytes[4 * wi],
+                    bytes[4 * wi + 1],
+                    bytes[4 * wi + 2],
+                    bytes[4 * wi + 3],
+                ]);
+                let wv = vdupq_n_u32(word);
+                for g in 0..8 {
+                    let b = (4 * g) as i32;
+                    let shv = vld1q_s32([-b, -(b + 1), -(b + 2), -(b + 3)].as_ptr());
+                    let bits = vandq_u32(vshlq_u32(wv, shv), onev);
+                    let sb = vshlq_n_u32::<31>(veorq_u32(bits, flipv));
+                    let add = vreinterpretq_f32_u32(vorrq_u32(magv, sb));
+                    let p = out.as_mut_ptr().add(wi * 32 + g * 4);
+                    vst1q_f32(p, vaddq_f32(vld1q_f32(p), add));
+                }
+            }
+        }
+        let done = full_words * 32;
+        scalar::unpack_signs_add_bytes(
+            &bytes[full_words * 4..],
+            n - done,
+            scale,
+            weight,
+            &mut out[done..],
+        );
+    }
+
+    pub fn signum_update(momentum: &mut [f32], grad: &[f32], beta: f32) {
+        let full = momentum.len() / 4;
+        unsafe {
+            let bv = vdupq_n_f32(beta);
+            let ov = vdupq_n_f32(1.0 - beta);
+            for i in 0..full {
+                let pm = momentum.as_mut_ptr().add(i * 4);
+                let m = vld1q_f32(pm);
+                let g = vld1q_f32(grad.as_ptr().add(i * 4));
+                // Separate rounded products + add — never vfmaq.
+                let r = vaddq_f32(vmulq_f32(bv, m), vmulq_f32(ov, g));
+                vst1q_f32(pm, r);
+            }
+        }
+        scalar::signum_update(&mut momentum[full * 4..], &grad[full * 4..], beta);
+    }
+
+    pub fn abs_slice(src: &[f32], out: &mut [f32]) {
+        let full = src.len() / 4;
+        unsafe {
+            for i in 0..full {
+                let v = vld1q_f32(src.as_ptr().add(i * 4));
+                vst1q_f32(out.as_mut_ptr().add(i * 4), vabsq_f32(v));
+            }
+        }
+        scalar::abs_slice(&src[full * 4..], &mut out[full * 4..]);
+    }
+
+    pub fn qsgd_ratios(chunk: &[f32], inv: f32, cap: f32, out: &mut [f32]) {
+        let full = chunk.len() / 4;
+        unsafe {
+            let iv = vdupq_n_f32(inv);
+            let cv = vdupq_n_f32(cap);
+            for i in 0..full {
+                let v = vld1q_f32(chunk.as_ptr().add(i * 4));
+                let r = vminq_f32(vmulq_f32(vabsq_f32(v), iv), cv);
+                vst1q_f32(out.as_mut_ptr().add(i * 4), r);
+            }
+        }
+        scalar::qsgd_ratios(&chunk[full * 4..], inv, cap, &mut out[full * 4..]);
+    }
+
+    pub fn add_f32_bytes(acc: &mut [u8], other: &[u8]) {
+        let lanes = acc.len() / 4;
+        let full = lanes / 4;
+        unsafe {
+            for i in 0..full {
+                let pa = acc.as_mut_ptr().add(i * 16);
+                let pb = other.as_ptr().add(i * 16);
+                let a = vreinterpretq_f32_u8(vld1q_u8(pa));
+                let b = vreinterpretq_f32_u8(vld1q_u8(pb));
+                vst1q_u8(pa, vreinterpretq_u8_f32(vaddq_f32(a, b)));
+            }
+        }
+        scalar::add_f32_bytes(&mut acc[full * 16..], &other[full * 16..]);
+    }
+
+    pub fn scale_f32_bytes(buf: &mut [u8], factor: f32) {
+        let lanes = buf.len() / 4;
+        let full = lanes / 4;
+        unsafe {
+            let fv = vdupq_n_f32(factor);
+            for i in 0..full {
+                let p = buf.as_mut_ptr().add(i * 16);
+                let v = vreinterpretq_f32_u8(vld1q_u8(p));
+                vst1q_u8(p, vreinterpretq_u8_f32(vmulq_f32(v, fv)));
+            }
+        }
+        scalar::scale_f32_bytes(&mut buf[full * 16..], factor);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut v = vec![0f32; n];
+        rng.fill_normal_f32(&mut v, 1.0);
+        // Exercise the signed-zero edge explicitly.
+        if n > 1 {
+            v[0] = 0.0;
+            v[1] = -0.0;
+        }
+        v
+    }
+
+    fn lens() -> Vec<usize> {
+        let mut v: Vec<usize> = (0..=67).collect();
+        v.extend([128, 500, 1000]);
+        v
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: idx {i}: {x} vs {y}");
+        }
+    }
+
+    fn words_as_bytes(words: &[u32]) -> Vec<u8> {
+        words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn backend_name_is_known() {
+        assert!(["avx2", "neon", "scalar"].contains(&active_backend()));
+    }
+
+    #[test]
+    fn forced_scalar_override_roundtrip() {
+        set_forced_scalar(true);
+        assert_eq!(active_backend(), "scalar");
+        assert!(forced_scalar());
+        set_forced_scalar(false);
+    }
+
+    #[test]
+    fn pack_sign_words_matches_scalar() {
+        for n in lens() {
+            let g = data(n, 0x5EED ^ n as u64);
+            let mut a = vec![0u32; n.div_ceil(32)];
+            let mut b = vec![0u32; n.div_ceil(32)];
+            pack_sign_words(&g, &mut a);
+            scalar::pack_sign_words(&g, &mut b);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn unpack_signs_matches_scalar() {
+        for n in lens() {
+            let g = data(n, 0xAB ^ n as u64);
+            let mut words = vec![0u32; n.div_ceil(32)];
+            scalar::pack_sign_words(&g, &mut words);
+            let bytes = words_as_bytes(&words);
+            for scale in [1.0f32, 0.37, -2.5] {
+                let mut a = vec![0f32; n];
+                let mut b = vec![0f32; n];
+                unpack_signs_bytes(&bytes, n, scale, &mut a);
+                scalar::unpack_signs_bytes(&bytes, n, scale, &mut b);
+                assert_bits_eq(&a, &b, &format!("unpack n={n} scale={scale}"));
+
+                let mut aa = data(n, 7);
+                let mut bb = aa.clone();
+                unpack_signs_add_bytes(&bytes, n, scale, -0.75, &mut aa);
+                scalar::unpack_signs_add_bytes(&bytes, n, scale, -0.75, &mut bb);
+                assert_bits_eq(&aa, &bb, &format!("unpack_add n={n} scale={scale}"));
+            }
+        }
+    }
+
+    #[test]
+    fn pack_signs_residual_matches_scalar() {
+        for n in lens() {
+            let c = data(n, 0xC0FFEE ^ n as u64);
+            let mut ra = vec![0f32; n];
+            let mut rb = vec![0f32; n];
+            let mut wa = vec![0u32; n.div_ceil(32)];
+            let mut wb = vec![0u32; n.div_ceil(32)];
+            pack_signs_residual(&c, &mut ra, 0.42, &mut wa);
+            scalar::pack_signs_residual(&c, &mut rb, 0.42, &mut wb);
+            assert_eq!(wa, wb, "residual words n={n}");
+            assert_bits_eq(&ra, &rb, &format!("residual n={n}"));
+
+            ra.iter_mut().for_each(|v| *v = 0.0);
+            rb.iter_mut().for_each(|v| *v = 0.0);
+            pack_signs_residual_centroids(&c, &mut ra, 0.9, -1.3, &mut wa);
+            scalar::pack_signs_residual_centroids(&c, &mut rb, 0.9, -1.3, &mut wb);
+            assert_eq!(wa, wb, "centroid words n={n}");
+            assert_bits_eq(&ra, &rb, &format!("centroid residual n={n}"));
+        }
+    }
+
+    #[test]
+    fn signum_and_abs_match_scalar() {
+        for n in lens() {
+            let g = data(n, 0x51 ^ n as u64);
+            let mut ma = data(n, 0x52 ^ n as u64);
+            let mut mb = ma.clone();
+            signum_update(&mut ma, &g, 0.9);
+            scalar::signum_update(&mut mb, &g, 0.9);
+            assert_bits_eq(&ma, &mb, &format!("signum n={n}"));
+
+            let mut aa = vec![0f32; n];
+            let mut ab = vec![0f32; n];
+            abs_slice(&g, &mut aa);
+            scalar::abs_slice(&g, &mut ab);
+            assert_bits_eq(&aa, &ab, &format!("abs n={n}"));
+        }
+    }
+
+    #[test]
+    fn qsgd_kernels_match_scalar() {
+        for n in lens() {
+            let g = data(n, 0x9D ^ n as u64);
+            let mut ra = vec![0f32; n];
+            let mut rb = vec![0f32; n];
+            qsgd_ratios(&g, 63.5, 127.0, &mut ra);
+            scalar::qsgd_ratios(&g, 63.5, 127.0, &mut rb);
+            assert_bits_eq(&ra, &rb, &format!("ratios n={n}"));
+
+            let mut rng = Xoshiro256::seed_from_u64(0xDEC0 ^ n as u64);
+            let qs: Vec<u8> = (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect();
+            let mut da = vec![0f32; n];
+            let mut db = vec![0f32; n];
+            qsgd_decode(&qs, 0.031, &mut da);
+            scalar::qsgd_decode(&qs, 0.031, &mut db);
+            assert_bits_eq(&da, &db, &format!("decode n={n}"));
+
+            let mut xa = data(n, 3);
+            let mut xb = xa.clone();
+            qsgd_decode_add(&qs, 0.031, 0.25, &mut xa);
+            scalar::qsgd_decode_add(&qs, 0.031, 0.25, &mut xb);
+            assert_bits_eq(&xa, &xb, &format!("decode_add n={n}"));
+        }
+    }
+
+    #[test]
+    fn wire_buffer_kernels_match_scalar() {
+        for n in lens() {
+            let a = data(n, 0xF0 ^ n as u64);
+            let b = data(n, 0xF1 ^ n as u64);
+            let bytes_of = |v: &[f32]| -> Vec<u8> {
+                v.iter().flat_map(|x| x.to_le_bytes()).collect()
+            };
+            let mut wa = bytes_of(&a);
+            let mut wb = bytes_of(&a);
+            let other = bytes_of(&b);
+            add_f32_bytes(&mut wa, &other);
+            scalar::add_f32_bytes(&mut wb, &other);
+            assert_eq!(wa, wb, "add_f32_bytes n={n}");
+
+            scale_f32_bytes(&mut wa, 1.0 / 3.0);
+            scalar::scale_f32_bytes(&mut wb, 1.0 / 3.0);
+            assert_eq!(wa, wb, "scale_f32_bytes n={n}");
+        }
+    }
+
+    #[test]
+    fn f16_kernels_match_scalar() {
+        for n in lens() {
+            let mut g = data(n, 0x16 ^ n as u64);
+            if n > 4 {
+                g[2] = 1e6; // finite overflow → hits the saturation patch
+                g[3] = -1e6;
+                g[4] = f32::INFINITY;
+            }
+            let mut ea = vec![0u8; 2 * n];
+            let mut eb = vec![0u8; 2 * n];
+            f16_encode_bytes(&g, &mut ea);
+            scalar::f16_encode_bytes(&g, &mut eb);
+            assert_eq!(ea, eb, "f16 encode n={n}");
+            let mut da = vec![0f32; n];
+            let mut db = vec![0f32; n];
+            f16_decode_bytes(&ea, &mut da);
+            scalar::f16_decode_bytes(&eb, &mut db);
+            assert_bits_eq(&da, &db, &format!("f16 decode n={n}"));
+        }
+    }
+
+    #[test]
+    fn pack2_matches_scalar() {
+        for n in lens() {
+            let mut rng = Xoshiro256::seed_from_u64(0x22 ^ n as u64);
+            let fields: Vec<u8> = (0..n).map(|_| (rng.gen_range(3)) as u8).collect();
+            let mut a = vec![0u32; n.div_ceil(16)];
+            let mut b = vec![0u32; n.div_ceil(16)];
+            pack2_words(&fields, &mut a);
+            scalar::pack2_words(&fields, &mut b);
+            assert_eq!(a, b, "pack2 n={n}");
+        }
+    }
+}

@@ -7,46 +7,62 @@
 //! Top-k as evaluated in the paper carries no error feedback (DGC is the
 //! EF/momentum-corrected variant).
 
-use super::{sparse, Codec, CodecKind};
+use super::{simd, sparse, Codec, CodecKind};
 use crate::util::rng::Xoshiro256;
 
 pub struct TopK {
     n: usize,
     ratio: f64,
+    // Scratch buffers reused across steps (§Perf: the per-call index
+    // permutation allocation dominated small-group encodes).
+    idx_scratch: Vec<u32>,
+    mag_scratch: Vec<f32>,
+    val_scratch: Vec<f32>,
 }
 
 impl TopK {
     pub fn new(n: usize, ratio: f64) -> Self {
         assert!(ratio > 0.0 && ratio <= 1.0, "ratio must be in (0, 1]");
-        Self { n, ratio }
+        Self {
+            n,
+            ratio,
+            idx_scratch: Vec::new(),
+            mag_scratch: Vec::new(),
+            val_scratch: Vec::new(),
+        }
     }
 }
 
-/// Select the indices of the k largest |values| (exact, expected O(n)).
-/// Returns indices in unspecified order.
-pub fn select_topk_indices(values: &[f32], k: usize, rng: &mut Xoshiro256) -> Vec<u32> {
-    assert!(k <= values.len());
+/// Select the indices of the `k` largest entries of `mags` into a
+/// caller-owned buffer (exact, expected O(n), allocation-free when the
+/// buffer has capacity). `mags` must hold **precomputed magnitudes**
+/// (see [`simd::abs_into`]); comparing them directly is bit-identical to
+/// comparing `.abs()` per probe since `abs` is exact. Result order is
+/// unspecified.
+pub fn select_topk_indices_into(mags: &[f32], k: usize, rng: &mut Xoshiro256, idx: &mut Vec<u32>) {
+    assert!(k <= mags.len());
+    idx.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
-    if k == values.len() {
-        return (0..values.len() as u32).collect();
+    idx.extend(0..mags.len() as u32);
+    if k == mags.len() {
+        return;
     }
-    // Quickselect on an index permutation by |value| descending.
-    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    // Quickselect on the index permutation by magnitude descending.
     let mut lo = 0usize;
     let mut hi = idx.len();
     let target = k;
     while hi - lo > 1 {
         // Random pivot defeats adversarial orderings.
         let pivot_i = lo + rng.gen_range(hi - lo);
-        let pivot = values[idx[pivot_i] as usize].abs();
+        let pivot = mags[idx[pivot_i] as usize];
         // 3-way partition: > pivot | == pivot | < pivot
         let mut lt = lo; // end of ">" region
         let mut gt = hi; // start of "<" region
         let mut i = lo;
         while i < gt {
-            let v = values[idx[i] as usize].abs();
+            let v = mags[idx[i] as usize];
             if v > pivot {
                 idx.swap(i, lt);
                 lt += 1;
@@ -69,6 +85,15 @@ pub fn select_topk_indices(values: &[f32], k: usize, rng: &mut Xoshiro256) -> Ve
         }
     }
     idx.truncate(k);
+}
+
+/// Allocating convenience around [`select_topk_indices_into`]: takes raw
+/// signed values and selects by |value|.
+pub fn select_topk_indices(values: &[f32], k: usize, rng: &mut Xoshiro256) -> Vec<u32> {
+    let mut mags = vec![0f32; values.len()];
+    simd::abs_slice(values, &mut mags);
+    let mut idx = Vec::new();
+    select_topk_indices_into(&mags, k, rng, &mut idx);
     idx
 }
 
@@ -84,9 +109,12 @@ impl Codec for TopK {
     fn encode_into(&mut self, grad: &[f32], rng: &mut Xoshiro256, out: &mut Vec<u8>) {
         assert_eq!(grad.len(), self.n);
         let k = sparse::k_for(self.n, self.ratio);
-        let idx = select_topk_indices(grad, k, rng);
-        let val: Vec<f32> = idx.iter().map(|&i| grad[i as usize]).collect();
-        sparse::encode_into(&idx, &val, out);
+        simd::abs_into(grad, &mut self.mag_scratch);
+        select_topk_indices_into(&self.mag_scratch, k, rng, &mut self.idx_scratch);
+        self.val_scratch.clear();
+        self.val_scratch
+            .extend(self.idx_scratch.iter().map(|&i| grad[i as usize]));
+        sparse::encode_into(&self.idx_scratch, &self.val_scratch, out);
     }
 
     fn decode_into(&self, wire: &[u8], out: &mut [f32]) {

@@ -17,9 +17,11 @@
 //! process — the trainer turns it into a step-level error with context.
 //!
 //! Allocation discipline: merge/decode scratch is double-buffered
-//! (`flats`), and wire payloads cycle through `wire_pool`, so the
-//! steady-state hot path performs no heap allocation beyond what the
-//! transport itself does.
+//! (`flats`), encode targets cycle through `wire_pool`, and gathered peer
+//! payloads are handed back to the transport's receive pool (`retired` →
+//! `Endpoint::recycle`) once decoded — so the steady-state hot path
+//! performs no heap allocation end to end (asserted across the TCP
+//! backend in `tests/transport_equivalence.rs`).
 
 use super::{ExchangeStats, GroupSample, PipelineMode};
 use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome, CommRoute, TransportError};
@@ -48,6 +50,12 @@ pub struct ExchangeEngine {
     flats: [Vec<f32>; 2],
     /// Recycled wire buffers (encode targets / returned payloads).
     wire_pool: Vec<Vec<u8>>,
+    /// Peer payloads consumed this exchange, awaiting return to the
+    /// transport's receive pool ([`crate::collectives::Endpoint::recycle`]).
+    /// Drained at the end of every [`ExchangeEngine::exchange`]; kept on
+    /// the engine so `finish_group` can run on the compute lane while
+    /// `comm` lives on the comm lane.
+    retired: Vec<Vec<u8>>,
     /// Per-group timings of the most recent exchange (one entry per group,
     /// overwritten each step) — the online scheduler's measurement feed.
     group_log: Vec<GroupSample>,
@@ -67,6 +75,7 @@ impl ExchangeEngine {
             routes: None,
             flats: [Vec::with_capacity(max_group), Vec::with_capacity(max_group)],
             wire_pool: Vec::new(),
+            retired: Vec::new(),
             group_log: Vec::new(),
         }
     }
@@ -226,6 +235,12 @@ impl ExchangeEngine {
         if routed {
             comm.reset_route();
         }
+        // Hand every consumed peer payload back to the transport's receive
+        // pool (even on failure — the buffers are still reusable), so the
+        // steady-state receive path never allocates.
+        for buf in self.retired.drain(..) {
+            comm.ep.recycle(buf);
+        }
         result
     }
 
@@ -258,6 +273,7 @@ impl ExchangeEngine {
             routes: _,
             flats,
             wire_pool,
+            retired,
             group_log,
         } = self;
         group_log.clear();
@@ -322,6 +338,7 @@ impl ExchangeEngine {
                 &mut flats[0],
                 grads,
                 wire_pool,
+                retired,
                 n,
                 world,
                 rank,
@@ -366,6 +383,7 @@ impl ExchangeEngine {
             routes: _,
             flats,
             wire_pool,
+            retired,
             group_log,
         } = self;
         group_log.clear();
@@ -416,6 +434,7 @@ impl ExchangeEngine {
                             &mut flats[pj % 2],
                             grads,
                             wire_pool,
+                            retired,
                             group_elems[pj],
                             world,
                             rank,
@@ -434,6 +453,7 @@ impl ExchangeEngine {
                         &mut flats[pj % 2],
                         grads,
                         wire_pool,
+                        retired,
                         group_elems[pj],
                         world,
                         rank,
@@ -464,6 +484,7 @@ fn complete_group(
     flat: &mut Vec<f32>,
     grads: &mut [Vec<f32>],
     wire_pool: &mut Vec<Vec<u8>>,
+    retired: &mut Vec<Vec<u8>>,
     n: usize,
     world: f32,
     rank: usize,
@@ -484,7 +505,19 @@ fn complete_group(
     stats.comm_inter_secs += done.breakdown.map(|b| b.inter_secs).unwrap_or(0.0);
     stats.inter_bytes_sent += done.inter_bytes;
     finish_group(
-        j, done.outcome, codecs, partition, sizes, flat, grads, wire_pool, n, world, rank, stats,
+        j,
+        done.outcome,
+        codecs,
+        partition,
+        sizes,
+        flat,
+        grads,
+        wire_pool,
+        retired,
+        n,
+        world,
+        rank,
+        stats,
     );
     group_log[j].comm_secs = stats.comm_secs - before.0;
     group_log[j].comm_exposed_secs = stats.comm_exposed_secs - before.1;
@@ -494,9 +527,11 @@ fn complete_group(
 }
 
 /// Decode + average a completed collective into `flat`, scatter into the
-/// per-tensor gradient buffers, and recycle wire buffers. Shared by the
-/// Serial and Pipelined schedules — one copy of the arithmetic keeps the
-/// two modes bit-identical by construction.
+/// per-tensor gradient buffers, and recycle wire buffers: this rank's own
+/// encode target returns to `wire_pool`, while peer payloads are parked in
+/// `retired` for the transport's receive pool. Shared by the Serial and
+/// Pipelined schedules — one copy of the arithmetic keeps the two modes
+/// bit-identical by construction.
 #[allow(clippy::too_many_arguments)]
 fn finish_group(
     j: usize,
@@ -507,6 +542,7 @@ fn finish_group(
     flat: &mut Vec<f32>,
     grads: &mut [Vec<f32>],
     wire_pool: &mut Vec<Vec<u8>>,
+    retired: &mut Vec<Vec<u8>>,
     n: usize,
     world: f32,
     rank: usize,
@@ -522,7 +558,7 @@ fn finish_group(
             stats.decode_secs += sw.elapsed().as_secs_f64();
             wire_pool.push(wire);
         }
-        CommOutcome::Gathered(mut payloads) => {
+        CommOutcome::Gathered(payloads) => {
             let sw = Stopwatch::start();
             flat.clear();
             flat.resize(n, 0.0);
@@ -531,7 +567,17 @@ fn finish_group(
                 codecs[j].decode_add_into(bytes, flat, w);
             }
             stats.decode_secs += sw.elapsed().as_secs_f64();
-            wire_pool.push(std::mem::take(&mut payloads[rank]));
+            for (src, payload) in payloads.into_iter().enumerate() {
+                if src == rank {
+                    // This rank's own submission: reuse it as a future
+                    // encode target.
+                    wire_pool.push(payload);
+                } else {
+                    // A peer's frame from the transport receive path: park
+                    // it for `Endpoint::recycle` at the end of the exchange.
+                    retired.push(payload);
+                }
+            }
         }
     }
 

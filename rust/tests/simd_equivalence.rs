@@ -1,0 +1,228 @@
+//! SIMD ↔ scalar equivalence: for every paper codec and a sweep of
+//! lane-unaligned lengths, the runtime-dispatched kernels must produce
+//! **bit-identical** wire bytes, decodes, accumulating decodes, and
+//! error-feedback state to the forced-scalar reference — and a full
+//! multi-step exchange over both transports must be bit-identical
+//! whichever path ran. This is the proof obligation behind the
+//! `compression/simd.rs` contract: vectorization changes *how fast*
+//! bytes are produced, never *which* bytes.
+//!
+//! `simd::set_forced_scalar` is process-global, so every test here
+//! serializes on one mutex. Under `--features force-scalar` both runs
+//! take the scalar path and the comparisons degenerate to
+//! self-consistency checks — still a valid regression net.
+
+use mergecomp::collectives::{run_comm_group, run_comm_group_tcp, Comm};
+use mergecomp::compression::{simd, CodecKind};
+use mergecomp::scheduler::Partition;
+use mergecomp::training::{GradExchange, PipelineMode};
+use mergecomp::util::rng::Xoshiro256;
+use std::sync::Mutex;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn all_kinds() -> Vec<CodecKind> {
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    kinds
+}
+
+/// Lengths covering every remainder class the kernels care about: the
+/// 8-lane f32 vectors (AVX2/NEON), the 32-element sign words, and QSGD's
+/// 512-element buckets (1030 spans two full buckets plus a tail).
+const LENGTHS: [usize; 18] = [
+    1, 3, 7, 8, 9, 31, 32, 33, 63, 65, 127, 129, 255, 257, 511, 513, 700, 1030,
+];
+
+/// Everything observable about a codec over a 3-step run, as raw bits.
+#[derive(PartialEq, Eq, Debug)]
+struct Trace {
+    wires: Vec<Vec<u8>>,
+    decodes: Vec<Vec<u32>>,
+    decode_adds: Vec<Vec<u32>>,
+    digest: u64,
+}
+
+fn trace_codec(kind: CodecKind, n: usize, forced: bool) -> Trace {
+    simd::set_forced_scalar(forced);
+    let mut codec = kind.build(n);
+    let mut rng = Xoshiro256::seed_from_u64(0x51AD ^ ((n as u64) << 16));
+    let mut grad_rng = Xoshiro256::seed_from_u64(0xBEEF ^ n as u64);
+    let mut trace = Trace {
+        wires: Vec::new(),
+        decodes: Vec::new(),
+        decode_adds: Vec::new(),
+        digest: 0,
+    };
+    // Three steps so stateful codecs (EF residuals, momentum, DGC
+    // velocity) exercise their update loops, not just a cold encode.
+    for _step in 0..3 {
+        let mut grad = vec![0f32; n];
+        grad_rng.fill_normal_f32(&mut grad, 0.5);
+        let mut wire = Vec::new();
+        codec.encode_into(&grad, &mut rng, &mut wire);
+
+        let mut flat = vec![0f32; n];
+        codec.decode_into(&wire, &mut flat);
+        trace
+            .decodes
+            .push(flat.iter().map(|v| v.to_bits()).collect());
+
+        // The allgather average path: accumulate into a non-zero buffer
+        // with a non-trivial weight.
+        let mut acc = vec![0.125f32; n];
+        codec.decode_add_into(&wire, &mut acc, 0.25);
+        trace
+            .decode_adds
+            .push(acc.iter().map(|v| v.to_bits()).collect());
+
+        trace.wires.push(wire);
+    }
+    trace.digest = codec.state_digest();
+    simd::set_forced_scalar(false);
+    trace
+}
+
+#[test]
+fn codecs_bit_identical_simd_vs_scalar_across_unaligned_lengths() {
+    let _g = lock();
+    let backend = simd::active_backend();
+    for kind in all_kinds() {
+        for &n in &LENGTHS {
+            let dispatched = trace_codec(kind, n, false);
+            let scalar = trace_codec(kind, n, true);
+            assert_eq!(
+                dispatched.wires,
+                scalar.wires,
+                "{} n={n}: {backend} wire bytes diverged from scalar",
+                kind.name()
+            );
+            assert_eq!(
+                dispatched.decodes,
+                scalar.decodes,
+                "{} n={n}: {backend} decode diverged from scalar",
+                kind.name()
+            );
+            assert_eq!(
+                dispatched.decode_adds,
+                scalar.decode_adds,
+                "{} n={n}: {backend} accumulating decode diverged from scalar",
+                kind.name()
+            );
+            assert_eq!(
+                dispatched.digest,
+                scalar.digest,
+                "{} n={n}: {backend} EF/momentum state diverged from scalar",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Reduce-on-the-wire (FP32/FP16 allreduce) also rides SIMD kernels; the
+/// reduced buffer must come out bit-identical.
+#[test]
+fn wire_reduce_bit_identical_simd_vs_scalar() {
+    let _g = lock();
+    for kind in [CodecKind::Fp32, CodecKind::Fp16] {
+        for &n in &LENGTHS {
+            let run = |forced: bool| {
+                simd::set_forced_scalar(forced);
+                let mut codec = kind.build(n);
+                let mut rng = Xoshiro256::seed_from_u64(9);
+                let mut a = vec![0f32; n];
+                let mut b = vec![0f32; n];
+                Xoshiro256::seed_from_u64(n as u64).fill_normal_f32(&mut a, 1.0);
+                Xoshiro256::seed_from_u64(n as u64 + 1).fill_normal_f32(&mut b, 1.0);
+                let mut wa = Vec::new();
+                let mut wb = Vec::new();
+                codec.encode_into(&a, &mut rng, &mut wa);
+                codec.encode_into(&b, &mut rng, &mut wb);
+                codec.reduce_wire(&mut wa, &wb);
+                simd::set_forced_scalar(false);
+                wa
+            };
+            assert_eq!(
+                run(false),
+                run(true),
+                "{} n={n}: wire reduce diverged from scalar",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn exchange_bit_identical_simd_vs_scalar_on_both_transports() {
+    let _g = lock();
+    // Sizes with sub-word tails and an uneven split over two groups.
+    let sizes = vec![257usize, 64, 33];
+    for kind in all_kinds() {
+        for tcp in [false, true] {
+            let run = |forced: bool| {
+                simd::set_forced_scalar(forced);
+                let sizes2 = sizes.clone();
+                let f = move |c: &mut Comm| {
+                    let mut ex =
+                        GradExchange::new(kind, Partition::naive_even(3, 2), sizes2.clone())
+                            .with_mode(PipelineMode::Pipelined);
+                    let mut rng = Xoshiro256::seed_from_u64(5 + c.rank() as u64);
+                    let mut last: Vec<Vec<f32>> = Vec::new();
+                    for step in 0..2u64 {
+                        let mut grads: Vec<Vec<f32>> = sizes2
+                            .iter()
+                            .enumerate()
+                            .map(|(t, &m)| {
+                                let seed =
+                                    (step * 31 + t as u64) ^ ((c.rank() as u64) << 20);
+                                let mut g = vec![0f32; m];
+                                Xoshiro256::seed_from_u64(seed).fill_normal_f32(&mut g, 0.5);
+                                g
+                            })
+                            .collect();
+                        ex.exchange(c, &mut grads, &mut rng).unwrap();
+                        last = grads;
+                    }
+                    let bits: Vec<Vec<u32>> = last
+                        .iter()
+                        .map(|t| t.iter().map(|v| v.to_bits()).collect())
+                        .collect();
+                    (bits, ex.state_digest())
+                };
+                let out = if tcp {
+                    run_comm_group_tcp(2, f)
+                } else {
+                    run_comm_group(2, f)
+                };
+                simd::set_forced_scalar(false);
+                out
+            };
+            let dispatched = run(false);
+            let scalar = run(true);
+            assert_eq!(
+                dispatched,
+                scalar,
+                "{} (tcp={tcp}): dispatched and forced-scalar exchanges diverged",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn forcing_scalar_switches_the_reported_backend() {
+    let _g = lock();
+    simd::set_forced_scalar(true);
+    assert_eq!(simd::active_backend(), "scalar");
+    simd::set_forced_scalar(false);
+    if cfg!(feature = "force-scalar") {
+        assert_eq!(simd::active_backend(), "scalar");
+        assert!(simd::forced_scalar());
+    } else {
+        assert!(!simd::forced_scalar());
+    }
+}

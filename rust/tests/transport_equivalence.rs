@@ -282,6 +282,97 @@ fn prop_interleaved_collectives_agree_across_backends() {
     });
 }
 
+/// Steady-state allocation discipline at the endpoint level: a lockstep
+/// request/ack exchange over TCP where both sides use `send_ref` and
+/// `recycle`. 200 frames move in each direction; the buffer pools must
+/// satisfy all but a startup handful from recycled buffers — zero
+/// per-frame heap allocation, amortized.
+#[test]
+fn tcp_endpoint_steady_state_send_ref_and_recycle_do_not_allocate() {
+    const ROUNDS: u64 = 200;
+    let results = run_tcp_group(2, |mut ep| {
+        let me = ep.rank();
+        let peer = 1 - me;
+        for round in 0..ROUNDS {
+            if me == 0 {
+                ep.send_ref(peer, round, &[0xC3u8; 1024]).unwrap();
+                let ack = ep.recv(peer, round).unwrap();
+                assert_eq!(ack, [round as u8]);
+                ep.recycle(ack);
+            } else {
+                let payload = ep.recv(peer, round).unwrap();
+                assert_eq!(payload.len(), 1024);
+                ep.recycle(payload);
+                ep.send_ref(peer, round, &[round as u8]).unwrap();
+            }
+        }
+        ep.alloc_stats()
+    });
+    for (rank, stats) in results.iter().enumerate() {
+        // The writer thread returns a buffer to the pool just after the
+        // kernel accepts the frame, so a couple of frames can race the
+        // next `send_ref` — but misses must stay O(1), not O(frames).
+        assert!(
+            stats.send_pool_misses <= 4,
+            "rank {rank}: {} send-pool misses over {ROUNDS} frames",
+            stats.send_pool_misses
+        );
+        assert!(
+            stats.recv_pool_misses <= 4,
+            "rank {rank}: {} recv-pool misses over {ROUNDS} frames",
+            stats.recv_pool_misses
+        );
+    }
+}
+
+/// Steady-state allocation discipline end to end: a full multi-step
+/// `GradExchange` over TCP. Pool misses measure how many wire buffers were
+/// ever heap-allocated; after warm-up every frame must ride a recycled
+/// buffer, so total misses stay bounded by a small multiple of ONE step's
+/// frame count no matter how many steps run.
+#[test]
+fn tcp_gradexchange_steady_state_allocations_are_bounded() {
+    const SS_STEPS: usize = 10;
+    let n = tensor_sizes().len();
+    // Frames each rank sends per collective in a 4-rank flat ring:
+    // allgather forwards l-1 = 3 payloads, allreduce 2(l-1) = 6 chunks.
+    for (kind, frames_per_collective) in
+        [(CodecKind::EfSignSgd, 3u64), (CodecKind::Fp16, 6u64)]
+    {
+        let sizes = tensor_sizes();
+        let results = run_comm_group_tcp(WORLD, move |c| {
+            let mut ex = GradExchange::new(kind, Partition::naive_even(n, 3), sizes.clone())
+                .with_mode(PipelineMode::Pipelined);
+            let mut rng = Xoshiro256::seed_from_u64(7 + c.rank() as u64);
+            for step in 0..SS_STEPS {
+                let mut grads = step_grads(c.rank(), step, &sizes);
+                ex.exchange(c, &mut grads, &mut rng).unwrap();
+            }
+            c.ep.alloc_stats()
+        });
+        let frames_per_step = 3 * frames_per_collective; // 3 groups
+        let total_frames = SS_STEPS as u64 * frames_per_step;
+        // 3x one step's frames: covers pool warm-up plus the handful of
+        // in-flight buffers that race the writer threads — far below the
+        // per-frame-allocation count of `total_frames`.
+        let bound = 3 * frames_per_step;
+        for (rank, stats) in results.iter().enumerate() {
+            assert!(
+                stats.send_pool_misses <= bound,
+                "{}: rank {rank}: {} send-pool misses over {total_frames} frames (bound {bound})",
+                kind.name(),
+                stats.send_pool_misses
+            );
+            assert!(
+                stats.recv_pool_misses <= bound,
+                "{}: rank {rank}: {} recv-pool misses over {total_frames} frames (bound {bound})",
+                kind.name(),
+                stats.recv_pool_misses
+            );
+        }
+    }
+}
+
 /// Interleaved sends from several peers with rank-skewed timing: the
 /// stash must demultiplex per (source, tag) on both backends.
 #[test]

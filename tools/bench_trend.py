@@ -3,20 +3,23 @@
 previous nightly artifact and fail on significant regressions.
 
 Series are numeric leaves whose key matches the tracked patterns (times in
-seconds, byte counts) anywhere inside each BENCH_*.json file, addressed by
-their JSON path (per-codec rows are keyed by the row's "codec"/"bench"
-field rather than its array index, so reordering or adding codecs never
-misattributes a series; duplicate labels get an index suffix).
+seconds, byte counts, speedup ratios) anywhere inside each BENCH_*.json
+file, addressed by their JSON path (per-codec rows are keyed by the row's
+"codec"/"bench" field rather than its array index, so reordering or adding
+codecs never misattributes a series; duplicate labels get an index suffix).
 
-Gating: only **deterministic** series can fail the job — byte counts and
-model-predicted timings (`sim_*`, the route-search objective values),
-which are exact arithmetic and identical across runners. Measured
-wall-clock timings on shared CI runners routinely wobble far beyond any
-useful threshold, so they are compared and reported (status "noisy") but
-never gate. A gated series regresses when the current value exceeds the
-previous one by more than --max-regress (fractional, default 0.15).
-Series absent on either side are reported but never fail the job;
-sub-microsecond timings are skipped entirely.
+Gating: only series stable enough to act on can fail the job — byte
+counts and model-predicted timings (`sim_*`, the route-search objective
+values), which are exact arithmetic and identical across runners, plus
+`*_speedup` ratios (SIMD-vs-forced-scalar from the SAME binary and run,
+so runner noise largely divides out). Measured wall-clock `*_secs` series
+on shared CI runners wobble far beyond any useful threshold, so they are
+compared and reported (status "noisy") but never gate. A gated series
+regresses when it moves by more than --max-regress (fractional, default
+0.15) in its bad direction: UP for lower-is-better series (times, bytes),
+DOWN for the higher-is-better `*_speedup` ratios. Series absent on either
+side are reported but never fail the job; sub-microsecond timings are
+skipped entirely.
 
 Usage:
   python3 tools/bench_trend.py --prev prev-bench --cur rust/results \
@@ -32,8 +35,11 @@ import json
 import os
 import sys
 
-# Lower-is-better series: match on the leaf key.
-TRACKED_SUFFIXES = ("_secs", "_seconds", "_bytes")
+# Tracked series: match on the leaf key. Everything is lower-is-better
+# except `_speedup` (see HIGHER_IS_BETTER_SUFFIXES).
+TRACKED_SUFFIXES = ("_secs", "_seconds", "_bytes", "_speedup")
+# Higher-is-better leaves: the regression direction flips.
+HIGHER_IS_BETTER_SUFFIXES = ("_speedup",)
 # Counters/metadata that merely describe the run, never a perf series.
 EXCLUDED_KEYS = {"steps", "world", "nodes", "groups", "total_params"}
 # Timings below this are scheduler noise on shared CI runners.
@@ -43,11 +49,16 @@ DETERMINISTIC_PREFIXES = ("sim_", "auto_", "forced_", "oracle_")
 
 
 def is_gating(path):
-    """Only deterministic series fail the job (see module docstring)."""
+    """Only deterministic/same-run series fail the job (see docstring)."""
     leaf = path.rsplit(".", 1)[-1]
-    if leaf.endswith("_bytes"):
+    if leaf.endswith("_bytes") or leaf.endswith("_speedup"):
         return True
     return leaf.startswith(DETERMINISTIC_PREFIXES)
+
+
+def is_higher_better(path):
+    """Leaves where a DROP (not a rise) is the regression."""
+    return path.rsplit(".", 1)[-1].endswith(HIGHER_IS_BETTER_SUFFIXES)
 
 
 def flatten(node, path, out):
@@ -115,12 +126,15 @@ def compare(prev_dir, cur_dir, max_regress):
             if prev_val <= 0:
                 continue
             delta = cur_val / prev_val - 1.0
+            # Fractional move in the series' bad direction: up for times
+            # and bytes, down for speedup ratios.
+            worse = -delta if is_higher_better(series) else delta
             if abs(delta) <= max_regress:
                 status = "ok"
             elif not is_gating(series):
                 # Measured wall-clock on a shared runner: report, don't gate.
                 status = "noisy"
-            elif delta > max_regress:
+            elif worse > max_regress:
                 status = "REGRESSED"
                 regressed = True
             else:
@@ -134,9 +148,10 @@ def compare(prev_dir, cur_dir, max_regress):
 def render(rows, max_regress, fh):
     print("## Bench trend vs previous nightly", file=fh)
     print(
-        f"Failure threshold: >{max_regress:.0%} regression in any deterministic "
-        "series (byte counts, model-predicted timings); measured wall-clock "
-        "series are report-only (\"noisy\").",
+        f"Failure threshold: >{max_regress:.0%} move in the bad direction for "
+        "any gated series (byte counts and model-predicted timings go up; "
+        "`*_speedup` ratios go down); measured wall-clock series are "
+        "report-only (\"noisy\").",
         file=fh,
     )
     print("", file=fh)

@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Line up the rust SIMD codec kernels against the L1 Pallas kernels.
+
+Reads ``rust/results/BENCH_compression.json`` (produced by
+``cargo bench --bench compression_micro``), times the corresponding Pallas
+kernels under ``python/compile/kernels/`` on the same element count, and
+writes a side-by-side table to ``results/KERNEL_COMPARE.json``.
+
+The two sides answer different questions and the numbers are NOT directly
+comparable as hardware throughput: the rust kernels are explicit AVX2/NEON
+intrinsics on the host, while the Pallas kernels run ``interpret=True``
+(the CPU PJRT plugin cannot execute Mosaic custom-calls), so the Pallas
+timings measure the *dataflow* of the TPU kernel schedule, not silicon.
+The table exists to keep both implementations of the same math honest
+against each other — see EXPERIMENTS.md ("Pallas vs rust kernels") for the
+full recipe and how to read the output.
+
+jax-optional: exits 0 with a note when jax is missing (the offline rust CI
+image does not ship it), so the tool can sit in any pipeline unconditionally.
+
+Usage:
+  python3 tools/kernel_compare.py \
+      [--bench-json rust/results/BENCH_compression.json] \
+      [--out results/KERNEL_COMPARE.json] [--elems N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+# rust kernel series name -> (pallas kernel name, note)
+PAIRINGS = [
+    ("abs_magnitudes", "abs_sum", "magnitude pass (|x| sweep vs gridded |x| reduction)"),
+    ("sign_encode", "scaled_sign", "sign encode (pack+scale vs sign*scale tiles)"),
+    ("bitpack_pack", "scaled_sign", "sign-bit packing vs the sign stage of scaled_sign"),
+    ("qsgd_quantize", "threshold_mask", "elementwise quantize vs predicated mask"),
+    ("terngrad_pack2", "dgc_compress", "2-bit pack vs DGC sampled-threshold compress"),
+]
+
+
+def time_fn(fn, budget_ms=200.0):
+    """p50 seconds of fn() with a warmup call (absorbs jax jit compile)."""
+    t0 = time.perf_counter()
+    fn()
+    once = max(time.perf_counter() - t0, 1e-9)
+    iters = max(3, min(200, int(budget_ms / 1e3 / once)))
+    samples = []
+    for _ in range(iters):
+        t = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t)
+    return statistics.median(samples), iters
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--bench-json",
+        default="rust/results/BENCH_compression.json",
+        help="rust bench output to pair against",
+    )
+    ap.add_argument("--out", default="results/KERNEL_COMPARE.json")
+    ap.add_argument(
+        "--elems",
+        type=int,
+        default=None,
+        help="element count for the pallas side (default: kernel_elems from the rust json)",
+    )
+    ap.add_argument("--budget-ms", type=float, default=200.0)
+    args = ap.parse_args()
+
+    try:
+        import jax  # noqa: F401
+        import jax.numpy as jnp
+        import numpy as np
+    except ImportError as e:
+        print(f"kernel-compare: jax unavailable ({e}); nothing to compare — skipping")
+        return 0
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(repo, "python"))
+    from compile.kernels import compress
+
+    rust = {}
+    backend = "unknown"
+    elems = args.elems or 64 * 1024
+    if os.path.exists(args.bench_json):
+        with open(args.bench_json, "r", encoding="utf-8") as fh:
+            bench = json.load(fh)
+        backend = bench.get("backend", "unknown")
+        if args.elems is None and "kernel_elems" in bench:
+            elems = int(bench["kernel_elems"])
+        for row in bench.get("kernels", []):
+            rust[row["bench"]] = row
+    else:
+        print(
+            f"kernel-compare: {args.bench_json} missing (run `cargo bench --bench "
+            "compression_micro` first); timing the pallas side alone"
+        )
+
+    x = jnp.asarray(
+        (np.random.RandomState(7).randn(elems) * 0.02).astype(np.float32)
+    )
+    pallas_fns = {
+        "abs_sum": lambda: compress.abs_sum_pallas(x).block_until_ready(),
+        "scaled_sign": lambda: compress.scaled_sign_pallas(x).block_until_ready(),
+        "threshold_mask": lambda: compress.threshold_mask_pallas(x, 0.01).block_until_ready(),
+        "dgc_compress": lambda: compress.dgc_compress_pallas(x, ratio=0.01).block_until_ready(),
+    }
+
+    pallas_p50 = {}
+    print(f"kernel-compare: pallas (interpret=True) at {elems} elements")
+    for name, fn in pallas_fns.items():
+        p50, iters = time_fn(fn, args.budget_ms)
+        pallas_p50[name] = p50
+        print(f"  {name:<16} p50 {p50 * 1e3:9.3f} ms  ({iters} iters)")
+
+    rows = []
+    print(f"\nkernel-compare: rust ({backend}) vs pallas dataflow")
+    for rust_name, pallas_name, note in PAIRINGS:
+        r = rust.get(rust_name)
+        row = {
+            "bench": f"{rust_name}~{pallas_name}",
+            "rust_kernel": rust_name,
+            "pallas_kernel": pallas_name,
+            "note": note,
+            "pallas_interpret_secs": pallas_p50[pallas_name],
+        }
+        if r is not None:
+            row["rust_simd_secs"] = r["simd_secs"]
+            row["rust_scalar_secs"] = r["scalar_secs"]
+            print(
+                f"  {rust_name:<16} rust {r['simd_secs'] * 1e6:9.2f} us   "
+                f"{pallas_name:<14} pallas {pallas_p50[pallas_name] * 1e3:9.3f} ms"
+            )
+        rows.append(row)
+
+    out = {
+        "elems": elems,
+        "rust_backend": backend,
+        "pallas_mode": "interpret",
+        "caveat": "pallas timings are interpreter dataflow, not TPU silicon",
+        "pairs": rows,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w", encoding="utf-8") as fh:
+        json.dump(out, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"\nkernel-compare: wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
