@@ -108,7 +108,11 @@ pub fn hier_allreduce_wire(
         if rank == leader {
             for (idx, &p) in group.iter().enumerate().skip(1) {
                 let incoming = comm.ep.recv(p, stage_base + idx as u64)?;
-                codec.reduce_wire(data, &incoming);
+                codec
+                    .reduce_wire(data, &incoming)
+                    .map_err(|e| TransportError::Codec {
+                        detail: e.to_string(),
+                    })?;
                 comm.ep.recycle(incoming);
             }
         } else {
@@ -129,7 +133,11 @@ pub fn hier_allreduce_wire(
     if ring.len() > 1 && ring.contains(&rank) {
         let sw = Stopwatch::start();
         subset_ring_allreduce_bytes(comm, ring, ring_base, data, align, &|a, b| {
-            codec.reduce_wire(a, b)
+            codec
+                .reduce_wire(a, b)
+                .map_err(|e| TransportError::Codec {
+                    detail: e.to_string(),
+                })
         })?;
         inter_secs = sw.elapsed().as_secs_f64();
     }

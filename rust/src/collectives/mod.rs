@@ -229,6 +229,16 @@ impl Comm {
         data: &mut [u8],
         codec: &dyn crate::compression::Codec,
     ) -> Result<(), TransportError> {
+        // Reject a misdispatched codec before any cross-rank traffic: once
+        // a rank is mid-ring a reduce failure would strand its peers.
+        if codec.collective() != crate::compression::Collective::AllReduce {
+            return Err(TransportError::Codec {
+                detail: format!(
+                    "{}: allreduce_wire needs an allreduce codec",
+                    codec.kind().name()
+                ),
+            });
+        }
         self.last_breakdown = None;
         match self.route {
             CommRoute::Flat => ring::allreduce_wire(self, data, codec),

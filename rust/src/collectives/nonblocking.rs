@@ -114,12 +114,16 @@ impl CommLane {
         n: usize,
         route: Option<CommRoute>,
     ) -> CommHandle {
-        assert_eq!(
-            kind.collective(),
-            Collective::AllReduce,
-            "{}: start_allreduce needs an allreduce codec",
-            kind.name()
-        );
+        // Validation fires on submit, before any cross-rank traffic — but
+        // as a typed error through the handle, not a panic: a mixed-codec
+        // engine that misroutes a group must fail the step, not the process.
+        if kind.collective() != Collective::AllReduce {
+            let (done, rx) = channel();
+            let _ = done.send(Err(TransportError::Codec {
+                detail: format!("{}: start_allreduce needs an allreduce codec", kind.name()),
+            }));
+            return CommHandle { rx };
+        }
         self.submit(Op::AllReduce { wire, kind, n }, route)
     }
 
@@ -287,13 +291,20 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "allreduce codec")]
     fn allgather_codec_rejected_for_allreduce() {
         use crate::compression::CodecKind;
-        // Validation fires on submit, before any cross-rank traffic.
+        // Validation fires on submit, before any cross-rank traffic, and
+        // surfaces as a typed error through the handle — never a panic.
         let (jobs, _jrx) = channel();
         let lane = CommLane { jobs };
-        let _ = lane.start_allreduce(vec![0u8; 4], CodecKind::SignSgd, 8);
+        let handle = lane.start_allreduce(vec![0u8; 4], CodecKind::SignSgd, 8);
+        match handle.wait() {
+            Err(TransportError::Codec { detail }) => {
+                assert!(detail.contains("signsgd"), "detail must name the codec: {detail}");
+            }
+            Err(other) => panic!("wrong error: {other}"),
+            Ok(_) => panic!("allgather codec must be rejected"),
+        }
     }
 
     #[test]

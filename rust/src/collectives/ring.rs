@@ -43,7 +43,7 @@ pub(crate) fn subset_ring_allreduce_bytes(
     base: u64,
     data: &mut [u8],
     align: usize,
-    reduce: &dyn Fn(&mut [u8], &[u8]),
+    reduce: &dyn Fn(&mut [u8], &[u8]) -> Result<(), TransportError>,
 ) -> Result<(), TransportError> {
     let l = members.len();
     let me = members
@@ -73,7 +73,7 @@ pub(crate) fn subset_ring_allreduce_bytes(
         comm.ep.send_ref(right, base + s as u64, &data[lo..hi])?;
         let incoming = comm.ep.recv(left, base + s as u64)?;
         let (lo, hi) = bounds[recv_c];
-        reduce(&mut data[lo..hi], &incoming);
+        reduce(&mut data[lo..hi], &incoming)?;
         comm.ep.recycle(incoming);
     }
 
@@ -97,7 +97,7 @@ fn ring_allreduce_bytes(
     comm: &mut Comm,
     data: &mut [u8],
     align: usize,
-    reduce: &dyn Fn(&mut [u8], &[u8]),
+    reduce: &dyn Fn(&mut [u8], &[u8]) -> Result<(), TransportError>,
 ) -> Result<(), TransportError> {
     let world = comm.world();
     if world == 1 || data.is_empty() {
@@ -125,6 +125,7 @@ pub fn allreduce_f32(comm: &mut Comm, data: &mut [f32]) -> Result<(), TransportE
             let xb = f32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]]);
             a[i..i + 4].copy_from_slice(&(xa + xb).to_le_bytes());
         }
+        Ok(())
     })?;
     // On big-endian targets the byte reinterpretation above would be wrong;
     // all supported targets (x86-64, aarch64) are little-endian.
@@ -143,7 +144,11 @@ pub fn allreduce_wire(
         return Ok(());
     }
     ring_allreduce_bytes(comm, data, codec.wire_align(), &|a, b| {
-        codec.reduce_wire(a, b)
+        codec
+            .reduce_wire(a, b)
+            .map_err(|e| TransportError::Codec {
+                detail: e.to_string(),
+            })
     })
 }
 
@@ -273,6 +278,7 @@ mod tests {
                 for (x, y) in a.iter_mut().zip(b) {
                     *x = x.wrapping_add(*y);
                 }
+                Ok(())
             })
             .unwrap();
             data

@@ -51,6 +51,11 @@ pub enum TransportError {
     },
     /// The whole fabric is gone (mesh torn down, comm lane dead).
     Disconnected { detail: String },
+    /// A codec was dispatched to a collective it cannot serve (e.g. an
+    /// allgather codec handed to the wire allreduce). The detail names the
+    /// codec — and, when the exchange engine raises it, the group index —
+    /// so a mixed-codec schedule bug reads as a step failure, not an abort.
+    Codec { detail: String },
 }
 
 impl fmt::Display for TransportError {
@@ -65,6 +70,9 @@ impl fmt::Display for TransportError {
             }
             TransportError::Disconnected { detail } => {
                 write!(f, "transport disconnected: {detail}")
+            }
+            TransportError::Codec { detail } => {
+                write!(f, "codec dispatch: {detail}")
             }
         }
     }

@@ -141,13 +141,15 @@ impl Codec for Fp32 {
         }
     }
 
-    fn reduce_wire(&self, a: &mut [u8], b: &[u8]) {
+    fn reduce_wire(&self, a: &mut [u8], b: &[u8]) -> anyhow::Result<()> {
         assert_eq!(a.len(), b.len());
         simd::add_f32_bytes(a, b);
+        Ok(())
     }
 
-    fn scale_wire(&self, a: &mut [u8], factor: f32) {
+    fn scale_wire(&self, a: &mut [u8], factor: f32) -> anyhow::Result<()> {
         simd::scale_f32_bytes(a, factor);
+        Ok(())
     }
 }
 
@@ -186,7 +188,7 @@ impl Codec for Fp16 {
         simd::f16_decode_bytes(wire, &mut out[..self.n]);
     }
 
-    fn reduce_wire(&self, a: &mut [u8], b: &[u8]) {
+    fn reduce_wire(&self, a: &mut [u8], b: &[u8]) -> anyhow::Result<()> {
         assert_eq!(a.len(), b.len());
         for i in (0..a.len()).step_by(2) {
             let xa = f16_bits_to_f32(u16::from_le_bytes([a[i], a[i + 1]]));
@@ -194,14 +196,16 @@ impl Codec for Fp16 {
             let s = f32_to_f16_bits(xa + xb);
             a[i..i + 2].copy_from_slice(&s.to_le_bytes());
         }
+        Ok(())
     }
 
-    fn scale_wire(&self, a: &mut [u8], factor: f32) {
+    fn scale_wire(&self, a: &mut [u8], factor: f32) -> anyhow::Result<()> {
         for i in (0..a.len()).step_by(2) {
             let x = f16_bits_to_f32(u16::from_le_bytes([a[i], a[i + 1]]));
             let s = f32_to_f16_bits(x * factor);
             a[i..i + 2].copy_from_slice(&s.to_le_bytes());
         }
+        Ok(())
     }
 
     fn wire_align(&self) -> usize {
@@ -290,8 +294,8 @@ mod tests {
         let g2: Vec<f32> = g.iter().map(|x| x * 3.0).collect();
         let enc2 = codec.encode(&g2, &mut rng);
         let mut wire = enc.bytes.clone();
-        codec.reduce_wire(&mut wire, &enc2.bytes);
-        codec.scale_wire(&mut wire, 0.25);
+        codec.reduce_wire(&mut wire, &enc2.bytes).unwrap();
+        codec.scale_wire(&mut wire, 0.25).unwrap();
         let sum = Encoded { bytes: wire, n };
         codec.decode(&sum, &mut out);
         for i in 0..n {

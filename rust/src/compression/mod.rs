@@ -47,8 +47,9 @@ pub enum Collective {
 
 /// Compression scheme + hyperparameters. The paper's defaults: 99% sparsity
 /// for sparsification (ratio = 0.01) and 8 bits for QSGD.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub enum CodecKind {
+    #[default]
     Fp32,
     Fp16,
     Qsgd { bits: u8 },
@@ -152,6 +153,35 @@ impl CodecKind {
             // f32 scale + 2 bits per element
             CodecKind::TernGrad => 8 + n.div_ceil(16) * 4,
         }
+    }
+
+    /// Affine approximation of [`CodecKind::wire_size`]: `(header, density)`
+    /// such that `wire_size(n) ≈ header + density·n` bytes. This is what the
+    /// scheduler's comm cost model uses to price a codec it has never run:
+    /// one fitted α+β·bytes plane for the fabric, converted per codec via
+    /// the density. Exact for every scheme except DGC, whose threshold
+    /// selection sends a variable payload around the nominal k.
+    pub fn wire_affine(&self) -> (f64, f64) {
+        match self {
+            CodecKind::Fp32 => (0.0, 4.0),
+            CodecKind::Fp16 => (0.0, 2.0),
+            CodecKind::Qsgd { .. } => (0.0, 1.0 + 4.0 / qsgd::BUCKET as f64),
+            CodecKind::TopK { ratio } | CodecKind::RandK { ratio } | CodecKind::Dgc { ratio } => {
+                (4.0, 8.0 * ratio)
+            }
+            CodecKind::SignSgd | CodecKind::Signum { .. } => (4.0, 4.0 / 32.0),
+            CodecKind::EfSignSgd => (8.0, 4.0 / 32.0),
+            CodecKind::OneBit => (12.0, 4.0 / 32.0),
+            CodecKind::TernGrad => (8.0, 4.0 / 16.0),
+        }
+    }
+
+    /// [`CodecKind::wire_affine`] evaluated at `n` elements, rounded to
+    /// whole bytes — the x-coordinate the scheduler's byte-based comm fits
+    /// file collective timings under.
+    pub fn wire_bytes(&self, n: usize) -> usize {
+        let (h, d) = self.wire_affine();
+        (h + d * n as f64).round() as usize
     }
 
     /// Instantiate a stateful codec for an `n`-element tensor group.
@@ -286,9 +316,12 @@ pub trait Codec: Send {
         );
     }
 
-    /// Elementwise `a += b` in wire format (AllReduce codecs only).
-    fn reduce_wire(&self, _a: &mut [u8], _b: &[u8]) {
-        panic!("{}: reduce_wire on an allgather codec", self.kind().name());
+    /// Elementwise `a += b` in wire format (AllReduce codecs only). On an
+    /// allgather codec this is a dispatch error — surfaced as a typed
+    /// `Err` naming the codec, never a panic, so a mixed-codec engine that
+    /// misroutes a group fails the step instead of aborting the process.
+    fn reduce_wire(&self, _a: &mut [u8], _b: &[u8]) -> anyhow::Result<()> {
+        anyhow::bail!("{}: reduce_wire on an allgather codec", self.kind().name())
     }
 
     /// Wire element size in bytes — ring-allreduce chunk boundaries must
@@ -297,9 +330,10 @@ pub trait Codec: Send {
         4
     }
 
-    /// Scale the wire payload in place (AllReduce codecs only).
-    fn scale_wire(&self, _a: &mut [u8], _factor: f32) {
-        panic!("{}: scale_wire on an allgather codec", self.kind().name());
+    /// Scale the wire payload in place (AllReduce codecs only); same
+    /// dispatch-error contract as [`Codec::reduce_wire`].
+    fn scale_wire(&self, _a: &mut [u8], _factor: f32) -> anyhow::Result<()> {
+        anyhow::bail!("{}: scale_wire on an allgather codec", self.kind().name())
     }
 
     fn name(&self) -> &'static str {

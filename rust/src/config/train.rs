@@ -4,7 +4,7 @@ use super::{ScheduleSpec, SchedulingMode};
 use crate::collectives::{TopologySpec, TransportKind};
 use crate::compression::CodecKind;
 use crate::coordinator::PipelineMode;
-use crate::scheduler::RouteMode;
+use crate::scheduler::{CodecMode, RouteMode};
 use crate::util::cli::Args;
 use crate::util::json::Value;
 
@@ -49,6 +49,17 @@ pub struct TrainConfig {
     pub lr: f32,
     pub momentum: f32,
     pub codec: CodecKind,
+    /// Codec-selection policy (`--codec auto` or `--codec-mode auto|fixed`).
+    /// `Auto` puts the codec on Algorithm 2's search axes: the online
+    /// scheduler prices every group under each pool codec (FP32 always
+    /// included) and the schedule broadcast carries one codec per group.
+    /// `Fixed` (default) pins every group to `codec`. Online MergeComp
+    /// scheduling only; other modes ignore it.
+    pub codec_mode: CodecMode,
+    /// Predicted-seconds penalty the objective charges a candidate group
+    /// whose codec differs from any spanned tensor's current codec —
+    /// dampens codec thrash on top of the relative hysteresis ε.
+    pub codec_switch_cost: f64,
     pub schedule: ScheduleSpec,
     /// When the schedule is resolved: continuously (`Online`, via the
     /// scheduler driver), once from warmup (`Warmup`), or never measured
@@ -96,6 +107,8 @@ impl Default for TrainConfig {
             lr: 0.05,
             momentum: 0.9,
             codec: CodecKind::Fp32,
+            codec_mode: CodecMode::Fixed,
+            codec_switch_cost: 0.0,
             schedule: ScheduleSpec::MergeComp { y_max: 2, alpha: 0.02 },
             sched_mode: SchedulingMode::Online,
             resched_interval: 25,
@@ -117,6 +130,15 @@ impl TrainConfig {
     /// Load from a JSON object (missing keys keep defaults).
     pub fn from_json(v: &Value) -> anyhow::Result<TrainConfig> {
         let d = TrainConfig::default();
+        // `"codec": "auto"` is sugar for codec_mode=auto with the default
+        // base codec (an explicit `codec_mode` key still wins below).
+        let codec_raw = v.str_or("codec", "fp32");
+        let codec_is_auto = codec_raw.eq_ignore_ascii_case("auto");
+        let codec = if codec_is_auto { d.codec } else { CodecKind::from_name(codec_raw)? };
+        let codec_mode = CodecMode::from_name(v.str_or(
+            "codec_mode",
+            if codec_is_auto { "auto" } else { d.codec_mode.name() },
+        ))?;
         Ok(TrainConfig {
             workers: v.usize_or("workers", d.workers),
             transport: TransportKind::from_name(v.str_or("transport", d.transport.name()))?,
@@ -133,7 +155,9 @@ impl TrainConfig {
             steps: v.usize_or("steps", d.steps),
             lr: v.f64_or("lr", d.lr as f64) as f32,
             momentum: v.f64_or("momentum", d.momentum as f64) as f32,
-            codec: CodecKind::from_name(v.str_or("codec", "fp32"))?,
+            codec,
+            codec_mode,
+            codec_switch_cost: v.f64_or("codec_switch_cost", d.codec_switch_cost),
             schedule: ScheduleSpec::parse(v.str_or("schedule", "mergecomp"))?,
             sched_mode: SchedulingMode::from_name(v.str_or("sched_mode", d.sched_mode.name()))?,
             resched_interval: v.usize_or("resched_interval", d.resched_interval),
@@ -184,8 +208,18 @@ impl TrainConfig {
         self.lr = args.f64_or("lr", self.lr as f64) as f32;
         self.momentum = args.f64_or("momentum", self.momentum as f64) as f32;
         if let Some(c) = args.str("codec") {
-            self.codec = CodecKind::from_name(c)?;
+            // `--codec auto` flips the selection policy and keeps the
+            // configured base codec; any other value pins a codec.
+            if c.eq_ignore_ascii_case("auto") {
+                self.codec_mode = CodecMode::Auto;
+            } else {
+                self.codec = CodecKind::from_name(c)?;
+            }
         }
+        if let Some(m) = args.str("codec-mode") {
+            self.codec_mode = CodecMode::from_name(m)?;
+        }
+        self.codec_switch_cost = args.f64_or("codec-switch-cost", self.codec_switch_cost);
         if let Some(s) = args.str("schedule") {
             // `--schedule online|warmup|fixed` selects the scheduling mode
             // (the ISSUE-facing shorthand); anything else is a partition
@@ -234,6 +268,8 @@ impl TrainConfig {
             ("lr", Value::from(self.lr as f64)),
             ("momentum", Value::from(self.momentum as f64)),
             ("codec", Value::from(self.codec.name())),
+            ("codec_mode", Value::from(self.codec_mode.name())),
+            ("codec_switch_cost", Value::from(self.codec_switch_cost)),
             ("schedule", Value::from(self.schedule.name())),
             ("sched_mode", Value::from(self.sched_mode.name())),
             ("resched_interval", Value::from(self.resched_interval)),
@@ -395,6 +431,48 @@ mod tests {
         let args = Args::parse(["x", "--route", "scenic"].iter().map(|s| s.to_string()));
         assert!(TrainConfig::default().apply_cli(&args).is_err());
         let v = Value::parse(r#"{"route": "scenic"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn codec_auto_selects_mode_not_codec() {
+        let d = TrainConfig::default();
+        assert_eq!(d.codec_mode, CodecMode::Fixed);
+        assert_eq!(d.codec_switch_cost, 0.0);
+
+        // CLI: `--codec auto` flips the mode, leaves the base codec alone.
+        let args = Args::parse(
+            ["x", "--codec", "auto", "--codec-switch-cost", "0.01"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = TrainConfig { codec: CodecKind::EfSignSgd, ..TrainConfig::default() }
+            .apply_cli(&args)
+            .unwrap();
+        assert_eq!(c.codec_mode, CodecMode::Auto);
+        assert_eq!(c.codec, CodecKind::EfSignSgd);
+        assert_eq!(c.codec_switch_cost, 0.01);
+
+        // JSON sugar + roundtrip through to_json.
+        let v = Value::parse(r#"{"codec": "auto"}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.codec_mode, CodecMode::Auto);
+        assert_eq!(c.codec, CodecKind::Fp32);
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.codec_mode, CodecMode::Auto);
+        assert_eq!(c2.codec, CodecKind::Fp32);
+
+        // Explicit codec-mode knob, and a pinned codec alongside auto mode.
+        let args = Args::parse(
+            ["x", "--codec", "efsignsgd", "--codec-mode", "auto"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = TrainConfig::default().apply_cli(&args).unwrap();
+        assert_eq!(c.codec, CodecKind::EfSignSgd);
+        assert_eq!(c.codec_mode, CodecMode::Auto);
+
+        let v = Value::parse(r#"{"codec_mode": "sometimes"}"#).unwrap();
         assert!(TrainConfig::from_json(&v).is_err());
     }
 

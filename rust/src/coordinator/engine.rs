@@ -30,13 +30,19 @@ use crate::scheduler::{Partition, RouteChoice};
 use crate::util::rng::Xoshiro256;
 use crate::util::stats::Stopwatch;
 
-/// One worker's exchange engine for a fixed (codec, partition) pair.
+/// One worker's exchange engine for a (base codec, partition) pair, with
+/// optional per-group codec overrides from the scheduler's codec search.
 pub struct ExchangeEngine {
+    /// The configured base codec: what every group starts on, what a
+    /// repartition normalizes back to, and what [`ExchangeEngine::set_codecs`]
+    /// `None` reverts to.
     kind: CodecKind,
     partition: Partition,
     /// Per-tensor element counts, backprop order.
     sizes: Vec<usize>,
-    /// One stateful codec per group (EF granularity = group, §4.2).
+    /// One stateful codec per group (EF granularity = group, §4.2). Groups
+    /// may run different kinds under `--codec auto`; each group's
+    /// collective is dispatched off its own codec's kind.
     codecs: Vec<Box<dyn Codec>>,
     group_elems: Vec<usize>,
     /// Per-group collective routes from the scheduler (`None` = every
@@ -110,6 +116,55 @@ impl ExchangeEngine {
         self.routes.as_deref()
     }
 
+    /// The codec kind each group currently runs (all equal to
+    /// [`ExchangeEngine::kind`] unless [`ExchangeEngine::set_codecs`]
+    /// installed overrides).
+    pub fn group_codecs(&self) -> Vec<CodecKind> {
+        self.codecs.iter().map(|c| c.kind()).collect()
+    }
+
+    /// Install per-group codecs (one per group; `None` reverts every group
+    /// to the engine's base codec). Codecs are schedule state exactly like
+    /// the partition and routes: every rank must install the same vector
+    /// at the same step, or ranks would issue mismatched collectives.
+    ///
+    /// **Error-feedback policy.** A group that keeps its kind is untouched
+    /// (state and all). A group that flips kinds carries its state planes
+    /// into the new codec when the plane shapes are compatible — same
+    /// nonzero plane count, e.g. one EF residual plane for
+    /// `efsignsgd ↔ onebit`, or DGC's two planes across a ratio change —
+    /// making the flip bit-invisible to a flip back
+    /// (`tests/codec_choice.rs`). Otherwise the new codec starts with
+    /// fresh (zero) state: a reset, which is exactly the cost the
+    /// scheduler's codec switch penalty amortizes.
+    pub fn set_codecs(&mut self, kinds: Option<Vec<CodecKind>>) -> anyhow::Result<()> {
+        let target = match kinds {
+            Some(ks) => {
+                anyhow::ensure!(
+                    ks.len() == self.partition.num_groups(),
+                    "set_codecs: {} codecs for {} groups",
+                    ks.len(),
+                    self.partition.num_groups()
+                );
+                ks
+            }
+            None => vec![self.kind; self.partition.num_groups()],
+        };
+        for (j, &k) in target.iter().enumerate() {
+            if self.codecs[j].kind() == k {
+                continue;
+            }
+            let mut fresh = k.build(self.group_elems[j]);
+            let old = self.codecs[j].state_planes();
+            if !old.is_empty() && old.len() == fresh.state_planes().len() {
+                fresh.load_state_planes(&old);
+            }
+            drop(old);
+            self.codecs[j] = fresh;
+        }
+        Ok(())
+    }
+
     /// The [`CommRoute`] each group will actually run under `comm`:
     /// per-group choices (or the global route), clamped to `Flat` on a
     /// trivial topology — mirroring `Comm::set_route` so the recorded
@@ -155,17 +210,25 @@ impl ExchangeEngine {
     /// The codec state planes flattened to full-model length (backprop
     /// order), one vector per plane. Partition-independent: re-chunking the
     /// groups must leave this bit-identical (see [`ExchangeEngine::repartition`]).
+    /// Under mixed per-group codecs the plane count is the maximum over
+    /// groups, with a group's missing planes reading as zeros (the state a
+    /// fresh codec of the wider kind would hold there).
     pub fn flat_state(&self) -> Vec<Vec<f32>> {
         let total: usize = self.sizes.iter().sum();
         let n_planes = self
             .codecs
-            .first()
+            .iter()
             .map(|c| c.state_planes().len())
+            .max()
             .unwrap_or(0);
         let mut planes = vec![Vec::with_capacity(total); n_planes];
-        for codec in &self.codecs {
-            for (flat, plane) in planes.iter_mut().zip(codec.state_planes()) {
-                flat.extend_from_slice(plane);
+        for (codec, &n) in self.codecs.iter().zip(&self.group_elems) {
+            let cplanes = codec.state_planes();
+            for (p, flat) in planes.iter_mut().enumerate() {
+                match cplanes.get(p) {
+                    Some(plane) => flat.extend_from_slice(plane),
+                    None => flat.resize(flat.len() + n, 0.0),
+                }
             }
         }
         planes
@@ -186,6 +249,17 @@ impl ExchangeEngine {
         );
         if new == self.partition {
             return Ok(());
+        }
+
+        // Mixed per-group codecs cannot be re-chunked meaningfully — their
+        // state planes differ in kind across group boundaries that are
+        // about to move — so a repartition first normalizes every group
+        // back to the base codec under the `set_codecs` state policy
+        // (convert where plane shapes match, reset otherwise). The
+        // schedule broadcast that carried the new bounds reinstalls the
+        // per-group codecs sized for the new grouping right after.
+        if self.codecs.iter().any(|c| c.kind() != self.kind) {
+            self.set_codecs(None)?;
         }
 
         let flat_planes = self.flat_state();
@@ -260,7 +334,6 @@ impl ExchangeEngine {
             ..Default::default()
         };
         let bytes_before = comm.bytes_sent();
-        let collective = self.kind.collective();
         let routed = self.routes.is_some();
         let effective = self.effective_routes(comm);
 
@@ -281,9 +354,13 @@ impl ExchangeEngine {
 
         for j in 0..y {
             let n = group_elems[j];
+            // Mixed-codec schedules dispatch each group's collective off
+            // its own codec's kind.
+            let collective = codecs[j].kind().collective();
             group_log[j].group = j;
             group_log[j].elems = n;
             group_log[j].route = effective[j];
+            group_log[j].codec = codecs[j].kind();
 
             // --- merge -----------------------------------------------------
             let flat = &mut flats[0];
@@ -343,7 +420,7 @@ impl ExchangeEngine {
                 world,
                 rank,
                 &mut stats,
-            );
+            )?;
             group_log[j].decode_secs = stats.decode_secs - dec_before;
         }
 
@@ -368,14 +445,13 @@ impl ExchangeEngine {
             ..Default::default()
         };
         let bytes_before = comm.bytes_sent();
-        let collective = self.kind.collective();
         let routed = self.routes.is_some();
         let effective = self.effective_routes(comm);
 
         // Disjoint field borrows so the lane closure can mutate scratch
         // state while `comm` itself lives on the comm-lane thread.
         let ExchangeEngine {
-            kind,
+            kind: _,
             partition,
             sizes,
             codecs,
@@ -395,9 +471,13 @@ impl ExchangeEngine {
                 let mut inflight: Option<(usize, CommHandle)> = None;
                 for j in 0..y {
                     let n = group_elems[j];
+                    // Per-group dispatch: the group's own codec decides
+                    // which collective rides the lane.
+                    let gkind = codecs[j].kind();
                     group_log[j].group = j;
                     group_log[j].elems = n;
                     group_log[j].route = effective[j];
+                    group_log[j].codec = gkind;
 
                     // --- merge + encode group j (overlaps group j−1's comm)
                     let flat = &mut flats[j % 2];
@@ -416,9 +496,9 @@ impl ExchangeEngine {
 
                     // --- hand group j to the comm lane ----------------------
                     let route = if routed { Some(effective[j]) } else { None };
-                    let handle = match collective {
+                    let handle = match gkind.collective() {
                         Collective::AllReduce => {
-                            lane.start_allreduce_routed(wire, *kind, n, route)
+                            lane.start_allreduce_routed(wire, gkind, n, route)
                         }
                         Collective::AllGather => lane.start_allgather_routed(wire, route),
                     };
@@ -518,7 +598,7 @@ fn complete_group(
         world,
         rank,
         stats,
-    );
+    )?;
     group_log[j].comm_secs = stats.comm_secs - before.0;
     group_log[j].comm_exposed_secs = stats.comm_exposed_secs - before.1;
     group_log[j].decode_secs = stats.decode_secs - before.2;
@@ -532,6 +612,11 @@ fn complete_group(
 /// `retired` for the transport's receive pool. Shared by the Serial and
 /// Pipelined schedules — one copy of the arithmetic keeps the two modes
 /// bit-identical by construction.
+///
+/// The outcome shape must match the group codec's collective: handing an
+/// allreduce result to an allgather codec (or vice versa) is a typed
+/// [`TransportError::Codec`] naming the group and codec — the failure a
+/// mixed-codec schedule bug would otherwise surface as silent garbage.
 #[allow(clippy::too_many_arguments)]
 fn finish_group(
     j: usize,
@@ -547,9 +632,10 @@ fn finish_group(
     world: f32,
     rank: usize,
     stats: &mut ExchangeStats,
-) {
-    match outcome {
-        CommOutcome::Reduced(wire) => {
+) -> Result<(), TransportError> {
+    let kind = codecs[j].kind();
+    match (outcome, kind.collective()) {
+        (CommOutcome::Reduced(wire), Collective::AllReduce) => {
             let sw = Stopwatch::start();
             codecs[j].decode_into(&wire, flat);
             for v in flat.iter_mut() {
@@ -558,7 +644,7 @@ fn finish_group(
             stats.decode_secs += sw.elapsed().as_secs_f64();
             wire_pool.push(wire);
         }
-        CommOutcome::Gathered(payloads) => {
+        (CommOutcome::Gathered(payloads), Collective::AllGather) => {
             let sw = Stopwatch::start();
             flat.clear();
             flat.resize(n, 0.0);
@@ -579,6 +665,18 @@ fn finish_group(
                 }
             }
         }
+        (outcome, expected) => {
+            let got = match outcome {
+                CommOutcome::Reduced(_) => "an allreduce",
+                CommOutcome::Gathered(_) => "an allgather",
+            };
+            return Err(TransportError::Codec {
+                detail: format!(
+                    "group {j}: codec '{}' expects {expected:?} but received {got} outcome",
+                    kind.name()
+                ),
+            });
+        }
     }
 
     let mut off = 0;
@@ -587,6 +685,7 @@ fn finish_group(
         grads[i].copy_from_slice(&flat[off..off + len]);
         off += len;
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -865,6 +964,109 @@ mod tests {
         assert_eq!(eng.routes().unwrap().len(), 2);
         eng.repartition(Partition::layer_wise(3)).unwrap();
         assert!(eng.routes().is_none(), "repartition must clear per-group routes");
+    }
+
+    #[test]
+    fn mixed_codec_groups_dispatch_their_own_collectives() {
+        // Group 0 rides FP32 allreduce, group 1 a sign-compressed
+        // allgather: one exchange, two collectives, and the FP32 group's
+        // mean must stay exact while the samples record each group's
+        // codec. Both pipeline modes must agree bit-for-bit.
+        let sizes = vec![32usize, 48, 16];
+        let run = |mode: PipelineMode| {
+            let sizes2 = sizes.clone();
+            run_comm_group(2, move |c| {
+                let mut eng = ExchangeEngine::new(
+                    CodecKind::Fp32,
+                    Partition::naive_even(3, 2),
+                    sizes2.clone(),
+                );
+                eng.set_codecs(Some(vec![CodecKind::Fp32, CodecKind::EfSignSgd]))
+                    .unwrap();
+                let mut rng = Xoshiro256::seed_from_u64(13 + c.rank() as u64);
+                let mut grads = make_grads(c.rank(), &sizes2);
+                eng.exchange(c, &mut grads, &mut rng, mode).unwrap();
+                let samples = eng.group_samples().to_vec();
+                (grads, eng.state_digest(), samples)
+            })
+        };
+        let serial = run(PipelineMode::Serial);
+        let pipelined = run(PipelineMode::Pipelined);
+        assert_eq!(serial, pipelined, "mixed-codec modes diverged");
+        for (grads, _, samples) in &serial {
+            assert_eq!(samples[0].codec, CodecKind::Fp32);
+            assert_eq!(samples[1].codec, CodecKind::EfSignSgd);
+            // The FP32 group (tensors 0 and 1) is an exact mean.
+            for (t, buf) in grads.iter().take(2).enumerate() {
+                for (i, v) in buf.iter().enumerate() {
+                    let want = 1.5 * (t as f32 + 1.0) + i as f32 * 0.001;
+                    assert!((v - want).abs() < 1e-4, "t={t} i={i}: {v} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn set_codecs_validates_carries_and_resets_state() {
+        let mut eng = ExchangeEngine::new(
+            CodecKind::EfSignSgd,
+            Partition::naive_even(2, 2),
+            vec![24, 40],
+        );
+        // Wrong count is an error.
+        assert!(eng.set_codecs(Some(vec![CodecKind::Fp32])).is_err());
+
+        // Give the EF codecs nonzero residual state.
+        let planes: Vec<Vec<f32>> = vec![(0..64).map(|i| i as f32 * 0.25).collect()];
+        {
+            let views: Vec<&[f32]> = vec![&planes[0][..24]];
+            eng.codecs[0].load_state_planes(&views);
+            let views: Vec<&[f32]> = vec![&planes[0][24..]];
+            eng.codecs[1].load_state_planes(&views);
+        }
+        let digest = eng.state_digest();
+
+        // efsignsgd → onebit: same single-plane shape, state carries.
+        eng.set_codecs(Some(vec![CodecKind::OneBit, CodecKind::EfSignSgd]))
+            .unwrap();
+        assert_eq!(
+            eng.group_codecs(),
+            vec![CodecKind::OneBit, CodecKind::EfSignSgd]
+        );
+        let carried = eng.flat_state();
+        assert_eq!(carried.len(), 1);
+        assert!(
+            carried[0]
+                .iter()
+                .zip(&planes[0])
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "matched-plane flip must carry EF state"
+        );
+        // Flip back: bit-identical to the original engine.
+        eng.set_codecs(None).unwrap();
+        assert_eq!(eng.state_digest(), digest, "round-trip flip changed state");
+
+        // efsignsgd → fp32 (0 planes) → efsignsgd: a reset, state zeroed.
+        eng.set_codecs(Some(vec![CodecKind::Fp32, CodecKind::Fp32]))
+            .unwrap();
+        eng.set_codecs(None).unwrap();
+        assert!(
+            eng.flat_state()[0].iter().all(|&v| v == 0.0),
+            "plane-incompatible flip must reset EF state"
+        );
+    }
+
+    #[test]
+    fn repartition_normalizes_mixed_codecs_to_base() {
+        let mut eng = ExchangeEngine::new(
+            CodecKind::EfSignSgd,
+            Partition::naive_even(3, 2),
+            vec![4, 5, 6],
+        );
+        eng.set_codecs(Some(vec![CodecKind::OneBit, CodecKind::Fp32]))
+            .unwrap();
+        eng.repartition(Partition::layer_wise(3)).unwrap();
+        assert_eq!(eng.group_codecs(), vec![CodecKind::EfSignSgd; 3]);
     }
 
     #[test]

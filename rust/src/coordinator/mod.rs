@@ -79,6 +79,11 @@ pub struct GroupSample {
     /// within one step. The estimator files `comm_secs` under the right
     /// per-route fit with it.
     pub route: crate::collectives::CommRoute,
+    /// Which codec the group actually ran — per group, now that the
+    /// scheduler can mix codecs within one step. The estimator files
+    /// encode/decode timings under the right per-codec fit and converts
+    /// `comm_secs` to wire bytes with it.
+    pub codec: crate::compression::CodecKind,
     pub encode_secs: f64,
     pub comm_secs: f64,
     pub comm_exposed_secs: f64,

@@ -54,6 +54,10 @@ fn print_usage() {
                      [--topology flat|nodes=G|nodes=a+b+...[;racks=...]]\n\
                      [--route auto|flat|hierarchical]  (auto: Algorithm 2 picks\n\
                       flat vs hierarchical per tensor group from the live fits)\n\
+                     [--codec auto] [--codec-mode auto|fixed] [--codec-switch-cost S]\n\
+                      (auto: Algorithm 2 also picks each group's codec from a\n\
+                      pool — fp32 always included — using microcalibrated fits;\n\
+                      online scheduling only)\n\
                      [--transport inproc|tcp --rank N --world W\n\
                       --rendezvous HOST:PORT [--advertise HOST]\n\
                       [--bootstrap-timeout-secs S]]\n\
@@ -98,7 +102,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             String::new()
         },
         cfg.topology.name(),
-        cfg.codec.name(),
+        if cfg.codec_mode == mergecomp::scheduler::CodecMode::Auto {
+            format!("auto (base {})", cfg.codec.name())
+        } else {
+            cfg.codec.name().to_string()
+        },
         cfg.schedule.name(),
         cfg.steps,
         cfg.synthetic
@@ -122,6 +130,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         if !result.final_routes.is_empty() {
             let routes: Vec<&str> = result.final_routes.iter().map(|r| r.name()).collect();
             println!("routes: [{}]", routes.join(", "));
+        }
+        if result.final_codecs.iter().any(|&k| k != cfg.codec) {
+            let codecs: Vec<&str> = result.final_codecs.iter().map(|k| k.name()).collect();
+            println!("codecs: [{}]", codecs.join(", "));
         }
         if let Some(tl) = result.two_level_fit {
             println!(

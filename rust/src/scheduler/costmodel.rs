@@ -12,6 +12,7 @@
 //! so [`TwoLevelCost::combined`] plugs straight into the Eq.-7 objective —
 //! the search automatically optimizes against whichever level dominates.
 
+use crate::compression::CodecKind;
 use crate::util::stats::linfit;
 
 /// A fitted `t(x) = b + g·x` model with its fit quality.
@@ -47,6 +48,22 @@ impl FittedCost {
 
     pub fn predict(&self, elems: usize) -> f64 {
         self.b + self.g * elems as f64
+    }
+
+    /// Reinterpret a **wire-byte**-based fit (`t = b + g·bytes`) as an
+    /// element-based fit for `kind`, via its affine wire size
+    /// `bytes ≈ header + density·elems` ([`CodecKind::wire_affine`]).
+    ///
+    /// This is how one fitted fabric plane prices every codec, including
+    /// codecs that have never run: the collective's cost depends on the
+    /// bytes it moves, and the codec only enters through its wire density.
+    pub fn per_elems_for(&self, kind: CodecKind) -> FittedCost {
+        let (header, density) = kind.wire_affine();
+        FittedCost {
+            b: self.b + self.g * header,
+            g: self.g * density,
+            r2: self.r2,
+        }
     }
 }
 
@@ -162,6 +179,68 @@ impl RouteCostModel {
         } else {
             (super::search::RouteChoice::Flat, f)
         }
+    }
+}
+
+/// Fitted costs of synchronizing a group under one candidate codec: the
+/// encode path, the decode path (full group, fan-in included — matching
+/// the measured [`GroupSample`](crate::coordinator::GroupSample)
+/// semantics), and the collective cost converted to this codec's wire
+/// density (per route when the fabric is hierarchical).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodecCostEntry {
+    pub kind: CodecKind,
+    pub enc: FittedCost,
+    pub dec: FittedCost,
+    /// Collective cost under the global/flat route (element basis for
+    /// `kind`; superseded by `routes` when present).
+    pub comm: FittedCost,
+    /// Per-route collective costs for `kind`, when the hierarchy has been
+    /// observed — the joint `(codec, route)` choice prices both axes.
+    pub routes: Option<RouteCostModel>,
+}
+
+impl CodecCostEntry {
+    /// Collective cost of a group of `elems` elements: pinned to `route`
+    /// when given and a route model exists, else the cheaper route, else
+    /// the global model. Returns the route actually priced (`None` when
+    /// the entry has no route freedom).
+    pub fn comm_for(
+        &self,
+        elems: usize,
+        route: Option<super::search::RouteChoice>,
+    ) -> (Option<super::search::RouteChoice>, f64) {
+        match (&self.routes, route) {
+            (Some(rm), Some(r)) => (Some(r), rm.cost(r).predict(elems)),
+            (Some(rm), None) => {
+                let (r, c) = rm.best(elems);
+                (Some(r), c)
+            }
+            (None, r) => (r, self.comm.predict(elems)),
+        }
+    }
+}
+
+/// The codec axis of the schedule search: one [`CodecCostEntry`] per
+/// candidate codec (FP32 always included upstream, so "don't compress" is
+/// a first-class outcome), the incumbent codec of every tensor, and the
+/// switch cost the objective charges a group for abandoning its incumbent
+/// — pricing the error-feedback state conversion/reset a codec flip costs
+/// so the search doesn't thrash.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodecCostModel {
+    pub entries: Vec<CodecCostEntry>,
+    /// Seconds charged per group whose chosen codec differs from the
+    /// incumbent codec of any tensor it spans.
+    pub switch_cost: f64,
+    /// Incumbent codec per tensor, backprop order (empty = no incumbent,
+    /// e.g. the very first search — no switch penalty anywhere).
+    pub incumbent: Vec<CodecKind>,
+}
+
+impl CodecCostModel {
+    pub fn entry(&self, kind: CodecKind) -> Option<&CodecCostEntry> {
+        self.entries.iter().find(|e| e.kind == kind)
     }
 }
 
@@ -297,6 +376,71 @@ mod tests {
         assert_eq!(large, RouteChoice::Hierarchical);
         assert_eq!(rc.cost(RouteChoice::Flat), rc.flat);
         assert_eq!(rc.cost(RouteChoice::Hierarchical), rc.hier);
+    }
+
+    #[test]
+    fn per_elems_conversion_matches_exact_wire_sizes() {
+        // One fabric plane in bytes: α = 100µs, 1ns/byte.
+        let bytes_fit = FittedCost { b: 1e-4, g: 1e-9, r2: 1.0 };
+        for kind in CodecKind::paper_set() {
+            let f = bytes_fit.per_elems_for(kind);
+            for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+                let exact = bytes_fit.b + bytes_fit.g * kind.wire_size(n) as f64;
+                let rel = (f.predict(n) - exact).abs() / exact;
+                assert!(
+                    rel < 1e-3,
+                    "{} n={n}: affine {} vs exact {exact}",
+                    kind.name(),
+                    f.predict(n)
+                );
+            }
+        }
+        // FP32 is the identity up to the 4-bytes-per-element density.
+        let f = bytes_fit.per_elems_for(CodecKind::Fp32);
+        assert_eq!(f.b, bytes_fit.b);
+        assert_eq!(f.g, 4.0 * bytes_fit.g);
+        // A dense codec prices above a 1% sparsifier at bandwidth-bound
+        // sizes — the ordering the codec search exploits.
+        let dense = bytes_fit.per_elems_for(CodecKind::Fp32);
+        let sparse = bytes_fit.per_elems_for(CodecKind::TopK { ratio: 0.01 });
+        assert!(dense.predict(1 << 22) > sparse.predict(1 << 22));
+    }
+
+    #[test]
+    fn codec_entries_price_routes_jointly() {
+        use crate::scheduler::RouteChoice;
+        let flat = FittedCost { b: 1e-5, g: 1e-8, r2: 1.0 };
+        let hier = FittedCost { b: 2e-4, g: 1e-9, r2: 1.0 };
+        let zero = FittedCost { b: 0.0, g: 0.0, r2: 1.0 };
+        let entry = CodecCostEntry {
+            kind: CodecKind::Fp32,
+            enc: zero,
+            dec: zero,
+            comm: flat,
+            routes: Some(RouteCostModel { flat, hier }),
+        };
+        // Small groups ride flat, large ones hier; pinning overrides.
+        let (r, c) = entry.comm_for(100, None);
+        assert_eq!(r, Some(RouteChoice::Flat));
+        assert_eq!(c, flat.predict(100));
+        let (r, _) = entry.comm_for(1 << 24, None);
+        assert_eq!(r, Some(RouteChoice::Hierarchical));
+        let (r, c) = entry.comm_for(1 << 24, Some(RouteChoice::Flat));
+        assert_eq!(r, Some(RouteChoice::Flat));
+        assert_eq!(c, flat.predict(1 << 24));
+        // Without route freedom the global model applies.
+        let bare = CodecCostEntry { routes: None, ..entry };
+        let (r, c) = bare.comm_for(1 << 24, None);
+        assert_eq!(r, None);
+        assert_eq!(c, flat.predict(1 << 24));
+        // Model lookup by kind (PartialEq covers parameterized kinds).
+        let cm = CodecCostModel {
+            entries: vec![entry],
+            switch_cost: 0.0,
+            incumbent: Vec::new(),
+        };
+        assert!(cm.entry(CodecKind::Fp32).is_some());
+        assert!(cm.entry(CodecKind::Fp16).is_none());
     }
 
     #[test]

@@ -37,12 +37,25 @@
 //! step on every rank, which keeps collective tag sequences aligned and
 //! the flip bit-invisible to gradients (`tests/route_choice.rs`).
 //!
+//! **Codecs ride it too.** Under `--codec auto` the schedule is the full
+//! `(partition, per-group route, per-group codec)` triple:
+//! [`Driver::with_codecs`] hands each re-search a pool of candidate
+//! [`CodecKind`]s priced off the estimator's shared byte-space fabric
+//! plane and per-codec encode/decode fits, with a per-group switch cost
+//! charged against abandoning the incumbent codec (a codec change resets
+//! or converts error-feedback state, so it must *pay for itself*). An
+//! adopted switch carries one codec name per group inside the
+//! `{epoch, bounds, routes, codecs}` payload, parsed as strictly as the
+//! bounds; the engine applies the flip on the same step everywhere
+//! (`tests/codec_choice.rs`).
+//!
 //! [`AnalyticObjective`]: super::objective::AnalyticObjective
 
 use super::estimator::CostEstimator;
 use super::partition::Partition;
 use super::search::{mergecomp_search, RouteChoice, SearchParams};
 use crate::collectives::Comm;
+use crate::compression::CodecKind;
 use crate::coordinator::GroupSample;
 use crate::metrics::MetricsRegistry;
 use crate::util::json::Value;
@@ -80,13 +93,16 @@ impl Default for DriverConfig {
 #[derive(Debug, Clone)]
 pub enum Decision {
     /// Keep the current schedule (not enough data, search returned the
-    /// same `(partition, routes)`, or the predicted gain was below ε).
+    /// same `(partition, routes, codecs)`, or the predicted gain was
+    /// below ε).
     Keep,
-    /// Adopt `(partition, routes)`; the objective predicts `f_new` vs
-    /// `f_current`. `routes` is empty when per-group routing is off.
+    /// Adopt `(partition, routes, codecs)`; the objective predicts `f_new`
+    /// vs `f_current`. `routes` is empty when per-group routing is off,
+    /// `codecs` when the codec search is off.
     Switch {
         partition: Partition,
         routes: Vec<RouteChoice>,
+        codecs: Vec<CodecKind>,
         f_current: f64,
         f_new: f64,
     },
@@ -94,12 +110,14 @@ pub enum Decision {
 
 /// One adopted schedule switch, as returned by [`Driver::sync`]: the
 /// caller repartitions its exchange engine and (when non-empty) installs
-/// the per-group routes.
+/// the per-group routes and codecs.
 #[derive(Debug, Clone)]
 pub struct ScheduleUpdate {
     pub partition: Partition,
     /// One route per group; empty = keep the communicator's global route.
     pub routes: Vec<RouteChoice>,
+    /// One codec per group; empty = keep the configured global codec.
+    pub codecs: Vec<CodecKind>,
 }
 
 /// Per-group route search configuration (only `RouteMode::Auto` reaches
@@ -109,6 +127,22 @@ pub struct ScheduleUpdate {
 struct Routing {
     world: usize,
     nodes: usize,
+}
+
+/// Per-group codec search configuration (only `CodecMode::Auto` reaches
+/// the driver; fixed mode pins the configured codec and needs no
+/// per-group state).
+#[derive(Debug, Clone)]
+struct CodecAxis {
+    /// The configured training codec: the schedule every group starts on
+    /// and the fallback when the search reports no codec freedom.
+    base: CodecKind,
+    /// Candidate kinds each re-search prices per group (always contains
+    /// `base` and `Fp32`).
+    pool: Vec<CodecKind>,
+    /// Seconds the objective charges a group for leaving its incumbent
+    /// codec (EF-state conversion/reset amortization).
+    switch_cost: f64,
 }
 
 /// The online rescheduler for one training run. All ranks construct one
@@ -126,7 +160,11 @@ pub struct Driver {
     /// Per-group routes of the current schedule; empty when per-group
     /// routing is off (the communicator's global route applies).
     routes: Vec<RouteChoice>,
+    /// Per-group codecs of the current schedule; empty when the codec
+    /// search is off (the configured global codec applies).
+    codecs: Vec<CodecKind>,
     routing: Option<Routing>,
+    codec_axis: Option<CodecAxis>,
     epoch: u64,
     /// Number of adopted partition switches.
     pub reschedules: usize,
@@ -154,7 +192,9 @@ impl Driver {
             fwd_frac,
             partition: initial,
             routes: Vec::new(),
+            codecs: Vec::new(),
             routing: None,
+            codec_axis: None,
             epoch: 0,
             reschedules: 0,
             search_evals: 0,
@@ -177,6 +217,30 @@ impl Driver {
         self
     }
 
+    /// Enable per-group codec search (`--codec auto`): every re-search
+    /// prices candidate groups under each pool codec and switches carry
+    /// one [`CodecKind`] per group. `base` is the configured training
+    /// codec — every group starts on it, and it joins the pool along with
+    /// uncompressed FP32 (so the search can always decline to compress a
+    /// latency-bound group). `switch_cost` (seconds) is charged against
+    /// any group that abandons its incumbent codec, amortizing the
+    /// error-feedback reset a codec flip may cost.
+    pub fn with_codecs(mut self, base: CodecKind, pool: &[CodecKind], switch_cost: f64) -> Self {
+        let mut dedup: Vec<CodecKind> = Vec::new();
+        for k in [base, CodecKind::Fp32].iter().chain(pool) {
+            if !dedup.contains(k) {
+                dedup.push(*k);
+            }
+        }
+        self.codecs = vec![base; self.partition.num_groups()];
+        self.codec_axis = Some(CodecAxis {
+            base,
+            pool: dedup,
+            switch_cost: switch_cost.max(0.0),
+        });
+        self
+    }
+
     pub fn config(&self) -> &DriverConfig {
         &self.cfg
     }
@@ -188,6 +252,11 @@ impl Driver {
     /// Per-group routes of the current schedule (empty = global route).
     pub fn routes(&self) -> &[RouteChoice] {
         &self.routes
+    }
+
+    /// Per-group codecs of the current schedule (empty = global codec).
+    pub fn codecs(&self) -> &[CodecKind] {
+        &self.codecs
     }
 
     pub fn epoch(&self) -> u64 {
@@ -242,8 +311,20 @@ impl Driver {
         if let Some(r) = self.routing {
             obj.set_route_costs(self.est.route_costs(r.world, r.nodes));
         }
+        // Codec search: attach the per-codec cost entries so the search
+        // also minimizes over the per-group codec, with the incumbent
+        // assignment charged zero switch penalty.
+        if let Some(ca) = &self.codec_axis {
+            let routing = self.routing.map(|r| (r.world, r.nodes));
+            obj.set_codec_costs(self.est.codec_cost_model(
+                &ca.pool,
+                routing,
+                ca.switch_cost,
+                self.incumbent_codecs(),
+            ));
+        }
         use super::objective::Objective as _;
-        let f_current = obj.eval_with_routes(&self.partition, &self.routes);
+        let f_current = obj.eval_with_schedule(&self.partition, &self.routes, &self.codecs);
         let out = mergecomp_search(&mut obj, self.sizes.len(), self.cfg.search);
         self.search_evals += obj.evals();
         let new_routes = if self.routing.is_some() {
@@ -256,35 +337,80 @@ impl Driver {
         } else {
             Vec::new()
         };
+        let new_codecs = match &self.codec_axis {
+            Some(ca) => {
+                if out.codecs.is_empty() {
+                    // No codec model attached (e.g. empty pool): stay on
+                    // the configured codec everywhere.
+                    vec![ca.base; out.partition.num_groups()]
+                } else {
+                    out.codecs
+                }
+            }
+            None => Vec::new(),
+        };
         let gain = (f_current - out.f_min) / f_current.max(f64::MIN_POSITIVE);
         self.metrics.observe("resched.predicted_gain", gain);
-        let unchanged = out.partition == self.partition && new_routes == self.routes;
+        let unchanged = out.partition == self.partition
+            && new_routes == self.routes
+            && new_codecs == self.codecs;
         if unchanged || gain <= self.cfg.hysteresis {
             return Decision::Keep;
         }
         Decision::Switch {
             partition: out.partition,
             routes: new_routes,
+            codecs: new_codecs,
             f_current,
             f_new: out.f_min,
         }
     }
 
-    /// Adopt a new `(partition, routes)` locally, bumping the epoch. Used
-    /// directly by the single-process simulation loop; the trainer goes
-    /// through [`Driver::sync`] so every rank switches on the same step.
-    /// An empty `routes` means "no per-group routing".
-    pub fn apply(&mut self, partition: Partition, routes: Vec<RouteChoice>) {
+    /// The current per-tensor codec assignment (backprop order): each
+    /// tensor inherits its group's codec. This is what the objective's
+    /// switch-cost penalty is charged against, so a candidate group
+    /// spanning tensors that already run its chosen codec switches for
+    /// free even across a repartition.
+    fn incumbent_codecs(&self) -> Vec<CodecKind> {
+        if self.codecs.is_empty() {
+            return Vec::new();
+        }
+        (0..self.partition.num_groups())
+            .flat_map(|j| self.partition.group_range(j).map(move |_| self.codecs[j]))
+            .collect()
+    }
+
+    /// Adopt a new `(partition, routes, codecs)` locally, bumping the
+    /// epoch. Used directly by the single-process simulation loop; the
+    /// trainer goes through [`Driver::sync`] so every rank switches on the
+    /// same step. An empty `routes` means "no per-group routing"; an empty
+    /// `codecs` means "no per-group codec search".
+    pub fn apply(
+        &mut self,
+        partition: Partition,
+        routes: Vec<RouteChoice>,
+        codecs: Vec<CodecKind>,
+    ) {
         assert_eq!(partition.num_tensors(), self.sizes.len());
         if !routes.is_empty() {
             assert_eq!(routes.len(), partition.num_groups(), "one route per group");
+        }
+        if !codecs.is_empty() {
+            assert_eq!(codecs.len(), partition.num_groups(), "one codec per group");
         }
         self.partition = partition;
         self.metrics.gauge(
             "resched.flat_groups",
             routes.iter().filter(|&&r| r == RouteChoice::Flat).count() as f64,
         );
+        if let Some(ca) = &self.codec_axis {
+            self.metrics.gauge(
+                "resched.nonbase_codec_groups",
+                codecs.iter().filter(|&&k| k != ca.base).count() as f64,
+            );
+        }
         self.routes = routes;
+        self.codecs = codecs;
         self.epoch += 1;
         self.reschedules += 1;
         self.metrics.incr("resched.switches", 1);
@@ -292,12 +418,13 @@ impl Driver {
     }
 
     /// Distribute one reschedule decision: rank 0 folds `decision` into
-    /// its schedule state and broadcasts `{epoch, bounds, routes}`;
+    /// its schedule state and broadcasts `{epoch, bounds, routes, codecs}`;
     /// followers adopt the broadcast schedule iff its epoch is ahead of
-    /// theirs (strictly parsed — any malformed bound or route token is an
-    /// error). Every rank must call this at the same step (`due`). Returns
-    /// the new `(partition, routes)` when this rank switched (the caller
-    /// then remaps its exchange engine and installs the routes).
+    /// theirs (strictly parsed — any malformed bound, route, or codec
+    /// token is an error). Every rank must call this at the same step
+    /// (`due`). Returns the new `(partition, routes, codecs)` when this
+    /// rank switched (the caller then remaps its exchange engine and
+    /// installs the routes and codecs).
     pub fn sync(
         &mut self,
         comm: &mut Comm,
@@ -307,9 +434,12 @@ impl Driver {
         if comm.rank() == 0 {
             let switched = match decision {
                 Decision::Switch {
-                    partition, routes, ..
+                    partition,
+                    routes,
+                    codecs,
+                    ..
                 } => {
-                    self.apply(partition, routes);
+                    self.apply(partition, routes, codecs);
                     true
                 }
                 Decision::Keep => false,
@@ -320,16 +450,24 @@ impl Driver {
                     .map(|r| Value::from(r.name()))
                     .collect(),
             );
+            let codecs_json = Value::Arr(
+                self.codecs
+                    .iter()
+                    .map(|k| Value::from(k.name()))
+                    .collect(),
+            );
             let payload = Value::from_pairs(vec![
                 ("epoch", Value::from(self.epoch)),
                 ("bounds", self.partition.bounds_to_json()),
                 ("routes", routes_json),
+                ("codecs", codecs_json),
             ]);
             let mut bytes = payload.to_string_compact().into_bytes();
             comm.broadcast(0, &mut bytes)?;
             Ok(switched.then(|| ScheduleUpdate {
                 partition: self.partition.clone(),
                 routes: self.routes.clone(),
+                codecs: self.codecs.clone(),
             }))
         } else {
             let mut bytes = Vec::new();
@@ -356,8 +494,13 @@ impl Driver {
                 .ok_or_else(|| anyhow::anyhow!("schedule broadcast: missing bounds"))?;
             let partition = Partition::from_json_bounds(n, bounds)?;
             let routes = parse_routes(&v, partition.num_groups())?;
-            self.apply(partition.clone(), routes.clone());
-            Ok(Some(ScheduleUpdate { partition, routes }))
+            let codecs = parse_codecs(&v, partition.num_groups())?;
+            self.apply(partition.clone(), routes.clone(), codecs.clone());
+            Ok(Some(ScheduleUpdate {
+                partition,
+                routes,
+                codecs,
+            }))
         }
     }
 }
@@ -392,6 +535,37 @@ fn parse_routes(v: &Value, groups: usize) -> anyhow::Result<Vec<RouteChoice>> {
     Ok(routes)
 }
 
+/// Strict parse of the broadcast's `codecs` array, under the same
+/// contract as `parse_routes`: every entry must be a known codec name
+/// ([`CodecKind::from_name`]) and a non-empty list must have one entry per
+/// group. The pool only ever holds default-parameterized kinds, whose
+/// `name()` round-trips through `from_name` exactly.
+fn parse_codecs(v: &Value, groups: usize) -> anyhow::Result<Vec<CodecKind>> {
+    let codecs_v = v
+        .get("codecs")
+        .ok_or_else(|| anyhow::anyhow!("schedule broadcast: missing codecs"))?;
+    let arr = codecs_v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("schedule broadcast: codecs is not an array"))?;
+    let codecs = arr
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let token = t
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("schedule broadcast: codecs[{i}] not a string"))?;
+            CodecKind::from_name(token)
+                .map_err(|e| anyhow::anyhow!("schedule broadcast: codecs[{i}]: {e}"))
+        })
+        .collect::<anyhow::Result<Vec<CodecKind>>>()?;
+    anyhow::ensure!(
+        codecs.is_empty() || codecs.len() == groups,
+        "schedule broadcast: {} codecs for {groups} groups",
+        codecs.len()
+    );
+    Ok(codecs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,6 +578,7 @@ mod tests {
             group: 0,
             elems,
             route: CommRoute::Flat,
+            codec: crate::compression::CodecKind::Fp32,
             encode_secs: enc,
             comm_secs: comm,
             comm_exposed_secs: comm,
@@ -474,11 +649,12 @@ mod tests {
         // backward compute, so some multi-group partition beats full merge.
         feed(&mut d, 1e-6, 5e-7, 60);
         match d.decide() {
-            Decision::Switch { partition, routes, f_current, f_new } => {
+            Decision::Switch { partition, routes, codecs, f_current, f_new } => {
                 assert!(partition.num_groups() > 1);
                 assert!(routes.is_empty(), "no routing enabled");
+                assert!(codecs.is_empty(), "no codec search enabled");
                 assert!(f_new < f_current);
-                d.apply(partition, routes);
+                d.apply(partition, routes, codecs);
             }
             Decision::Keep => panic!("expected a switch under comm-dominated costs"),
         }
@@ -493,16 +669,20 @@ mod tests {
     }
 
     #[test]
-    fn sync_applies_same_epoch_partition_and_routes_on_all_ranks() {
+    fn sync_applies_same_epoch_partition_routes_and_codecs_on_all_ranks() {
+        use crate::compression::CodecKind::{EfSignSgd, Fp32};
         use crate::scheduler::RouteChoice::{Flat, Hierarchical};
         let results = run_comm_group(3, |c| {
-            let mut d = driver_with(10, 0.05, 8).with_routing(3, 2);
-            // Rank 0 decides a switch with mixed routes; followers pass
-            // Keep (ignored).
+            let mut d = driver_with(10, 0.05, 8)
+                .with_routing(3, 2)
+                .with_codecs(EfSignSgd, &[], 0.0);
+            // Rank 0 decides a switch with mixed routes and codecs;
+            // followers pass Keep (ignored).
             let decision = if c.rank() == 0 {
                 Decision::Switch {
                     partition: Partition::naive_even(8, 3),
                     routes: vec![Flat, Hierarchical, Flat],
+                    codecs: vec![EfSignSgd, Fp32, EfSignSgd],
                     f_current: 1.0,
                     f_new: 0.5,
                 }
@@ -514,13 +694,15 @@ mod tests {
                 d.epoch(),
                 d.partition().bounds().to_vec(),
                 d.routes().to_vec(),
+                d.codecs().to_vec(),
                 switched.is_some(),
             )
         });
-        for (epoch, bounds, routes, switched) in &results {
+        for (epoch, bounds, routes, codecs, switched) in &results {
             assert_eq!(*epoch, 1);
             assert_eq!(bounds, results[0].1.as_slice());
             assert_eq!(routes, &vec![Flat, Hierarchical, Flat]);
+            assert_eq!(codecs, &vec![EfSignSgd, Fp32, EfSignSgd]);
             assert!(*switched);
         }
     }
@@ -546,14 +728,14 @@ mod tests {
             d.observe(&[mk(4_000), mk(36_000)], 4e-2);
         }
         match d.decide() {
-            Decision::Switch { partition, routes, f_current, f_new } => {
+            Decision::Switch { partition, routes, codecs, f_current, f_new } => {
                 assert!(f_new < f_current);
                 assert_eq!(routes.len(), partition.num_groups());
                 assert!(
                     routes.iter().all(|&r| r == RouteChoice::Flat),
                     "expected all-flat routes, got {routes:?}"
                 );
-                d.apply(partition, routes);
+                d.apply(partition, routes, codecs);
             }
             Decision::Keep => panic!("expected a route switch away from the hierarchy"),
         }
@@ -563,6 +745,69 @@ mod tests {
             d.observe(&[mk(4_000), mk(36_000)], 4e-2);
         }
         assert!(matches!(d.decide(), Decision::Keep));
+    }
+
+    #[test]
+    fn codec_search_moves_comm_bound_groups_off_fp32() {
+        use crate::compression::CodecKind;
+        let cfg = DriverConfig {
+            interval: 10,
+            ewma: 0.25,
+            hysteresis: 0.05,
+            search: SearchParams { y_max: 3, alpha: 0.0 },
+            min_samples: 4,
+        };
+        // Seed a near-free 1-bit codec so the pool is priceable before it
+        // ever runs; FP32 traffic dominates the measured comm plane.
+        let mut est = CostEstimator::new(cfg.ewma, None, None, None);
+        let tiny = FittedCost { b: 1e-6, g: 1e-11, r2: 1.0 };
+        est.seed_codec(CodecKind::EfSignSgd, tiny, tiny);
+        let n = 8;
+        let mut d = Driver::new(
+            cfg,
+            est,
+            vec![10_000; n],
+            vec![1.0 / n as f64; n],
+            0.3,
+            Partition::full_merge(n),
+        )
+        .with_codecs(CodecKind::Fp32, &[CodecKind::EfSignSgd], 0.0);
+        assert_eq!(d.codecs(), &[CodecKind::Fp32], "starts on the base codec");
+        feed(&mut d, 1e-6, 5e-7, 60);
+        match d.decide() {
+            Decision::Switch { partition, routes, codecs, f_current, f_new } => {
+                assert!(f_new < f_current);
+                assert_eq!(codecs.len(), partition.num_groups(), "one codec per group");
+                assert!(
+                    codecs.contains(&CodecKind::EfSignSgd),
+                    "comm-bound groups should compress, got {codecs:?}"
+                );
+                d.apply(partition, routes, codecs);
+            }
+            Decision::Keep => panic!("expected a codec switch under comm-dominated costs"),
+        }
+        // Stationary conditions with the new incumbent: no thrash.
+        feed(&mut d, 1e-6, 5e-7, 60);
+        assert!(matches!(d.decide(), Decision::Keep));
+    }
+
+    #[test]
+    fn parse_codecs_is_strict() {
+        use crate::compression::CodecKind::{EfSignSgd, Fp32};
+        let ok = Value::parse(r#"{"codecs": ["fp32", "efsignsgd"]}"#).unwrap();
+        assert_eq!(parse_codecs(&ok, 2).unwrap(), vec![Fp32, EfSignSgd]);
+        let empty = Value::parse(r#"{"codecs": []}"#).unwrap();
+        assert!(parse_codecs(&empty, 3).unwrap().is_empty());
+        // Wrong count, unknown token, wrong types, missing key: all errors.
+        assert!(parse_codecs(&ok, 3).is_err());
+        let bad = Value::parse(r#"{"codecs": ["fp32", "zip"]}"#).unwrap();
+        assert!(parse_codecs(&bad, 2).is_err());
+        let bad = Value::parse(r#"{"codecs": [1, 2]}"#).unwrap();
+        assert!(parse_codecs(&bad, 2).is_err());
+        let bad = Value::parse(r#"{"codecs": "fp32"}"#).unwrap();
+        assert!(parse_codecs(&bad, 1).is_err());
+        let bad = Value::parse(r#"{"epoch": 1}"#).unwrap();
+        assert!(parse_codecs(&bad, 1).is_err());
     }
 
     #[test]

@@ -19,9 +19,12 @@
 //! Once the partition has ≥ 2 distinct group sizes, the full weighted fit
 //! takes over.
 
-use super::costmodel::{FittedCost, RouteCostModel, TwoLevelCost};
+use super::costmodel::{
+    CodecCostEntry, CodecCostModel, FittedCost, RouteCostModel, TwoLevelCost,
+};
 use super::objective::AnalyticObjective;
 use crate::collectives::CommRoute;
+use crate::compression::CodecKind;
 use crate::coordinator::GroupSample;
 
 /// Minimum coefficient of variation of the (weighted) sizes before the
@@ -152,10 +155,38 @@ impl Ewma {
     }
 }
 
-/// Rolling per-codec cost models: encode path, decode path (full group,
-/// fan-in included), and the α+β·size collective cost — plus the EWMA'd
-/// compute-step time. One instance per worker; fed by
-/// [`GroupSample`]s from the exchange engine.
+/// Per-codec rolling encode/decode fits, keyed by [`CodecKind`] (a `Vec`
+/// + `PartialEq` scan — the pool is a handful of kinds, and `CodecKind`
+/// carries `f64` payloads so it cannot be a hash key).
+#[derive(Debug, Clone)]
+struct CodecFit {
+    kind: CodecKind,
+    enc: EwmaCost,
+    dec: EwmaCost,
+}
+
+/// Rolling cost models: encode path, decode path (full group, fan-in
+/// included), and the α+β·**bytes** collective cost — plus the EWMA'd
+/// compute-step time. One instance per worker; fed by [`GroupSample`]s
+/// from the exchange engine.
+///
+/// **Comm fits live in wire-byte space.** The collective's cost depends on
+/// the bytes it moves, not on the pre-compression element count, so every
+/// comm sample files under `x = codec.wire_bytes(elems)`. One fabric plane
+/// then prices *every* codec — including codecs that have never run — via
+/// [`FittedCost::per_elems_for`]; the public accessors
+/// ([`CostEstimator::comm_fit`], [`CostEstimator::two_level_fit`],
+/// [`CostEstimator::route_costs`]) convert back to the element basis of
+/// the configured `base_codec`, which keeps the objective and every
+/// pre-codec-search caller unchanged.
+///
+/// **Encode/decode fits are keyed by codec.** Compression compute does
+/// depend on the scheme, so alongside the route-agnostic aggregates the
+/// estimator keeps one `(enc, dec)` fit per observed [`CodecKind`], and
+/// [`CostEstimator::seed_codec`] installs microcalibration priors so a
+/// codec is priceable before its first group ever runs —
+/// [`CostEstimator::codec_cost_model`] assembles the search's codec axis
+/// from both.
 ///
 /// On a hierarchical fabric the samples additionally carry the inter-node
 /// share of each collective ([`GroupSample::comm_inter_secs`]), and the
@@ -169,18 +200,26 @@ impl Ewma {
 pub struct CostEstimator {
     pub enc: EwmaCost,
     pub dec: EwmaCost,
-    /// Total collective cost (every sample regardless of route; the
-    /// fallback model when no per-route split exists).
+    /// Total collective cost in wire-byte space (every sample regardless
+    /// of route; the fallback model when no per-route split exists).
     pub comm: EwmaCost,
-    /// Inter-node stage only (fed by hierarchical-routed samples that
-    /// carry a per-level split).
+    /// Inter-node stage only, byte space (fed by hierarchical-routed
+    /// samples that carry a per-level split).
     pub comm_inter: EwmaCost,
-    /// Intra-node stages only (fed alongside `comm_inter`).
+    /// Intra-node stages only, byte space (fed alongside `comm_inter`).
     pub comm_intra: EwmaCost,
-    /// Flat-routed samples only — the measured side of the flat/hier
-    /// route comparison once any group actually rides the flat ring.
+    /// Flat-routed samples only, byte space — the measured side of the
+    /// flat/hier route comparison once any group actually rides the flat
+    /// ring.
     pub comm_flat: EwmaCost,
     step_secs: Ewma,
+    /// The codec whose element basis the public comm accessors convert to
+    /// (the configured training codec; FP32 by default).
+    base_codec: CodecKind,
+    /// Per-codec encode/decode fits (observed and/or seeded).
+    codec_fits: Vec<CodecFit>,
+    /// EWMA weight, kept to mint per-codec fits lazily.
+    ewma: f64,
 }
 
 /// Neutral priors when no warmup fit is available (loose V100-ish numbers;
@@ -195,7 +234,10 @@ fn default_prior() -> FittedCost {
 
 impl CostEstimator {
     /// `ewma` is the weight of each new group sample (the config's
-    /// `resched_ewma`); priors default when `None`.
+    /// `resched_ewma`); priors default when `None`. `comm_prior` is in
+    /// **wire-byte** space (`t = b + g·bytes`); callers holding an
+    /// element-based warmup fit convert it with the base codec's
+    /// [`CodecKind::wire_affine`] density first.
     pub fn new(
         ewma: f64,
         enc_prior: Option<FittedCost>,
@@ -214,6 +256,57 @@ impl CostEstimator {
             comm_intra: EwmaCost::new(ewma, level_prior),
             comm_flat: EwmaCost::new(ewma, level_prior),
             step_secs: Ewma::new(ewma),
+            base_codec: CodecKind::Fp32,
+            codec_fits: Vec::new(),
+            ewma,
+        }
+    }
+
+    /// Set the codec whose element basis the public comm accessors report
+    /// in (the configured training codec).
+    pub fn set_base_codec(&mut self, kind: CodecKind) {
+        self.base_codec = kind;
+    }
+
+    pub fn base_codec(&self) -> CodecKind {
+        self.base_codec
+    }
+
+    /// Install microcalibration priors for one codec's encode/decode fits,
+    /// so the codec axis can price it before its first group ever runs.
+    /// `dec` must carry full-group semantics (allgather fan-in baked in),
+    /// matching the measured [`GroupSample::decode_secs`]. A codec that
+    /// already has a fit keeps its observations (priors only re-anchor the
+    /// no-data fallback).
+    pub fn seed_codec(&mut self, kind: CodecKind, enc: FittedCost, dec: FittedCost) {
+        if self.codec_fits.iter().any(|c| c.kind == kind) {
+            return;
+        }
+        self.codec_fits.push(CodecFit {
+            kind,
+            enc: EwmaCost::new(self.ewma, enc),
+            dec: EwmaCost::new(self.ewma, dec),
+        });
+    }
+
+    fn codec_fit_mut(&mut self, kind: CodecKind) -> &mut CodecFit {
+        if let Some(i) = self.codec_fits.iter().position(|c| c.kind == kind) {
+            return &mut self.codec_fits[i];
+        }
+        self.codec_fits.push(CodecFit {
+            kind,
+            enc: EwmaCost::new(self.ewma, default_prior()),
+            dec: EwmaCost::new(self.ewma, default_prior()),
+        });
+        self.codec_fits.last_mut().unwrap()
+    }
+
+    /// This codec's encode/decode fits: observed/seeded when available,
+    /// the aggregate fits otherwise.
+    fn codec_io_fits(&self, kind: CodecKind) -> (FittedCost, FittedCost) {
+        match self.codec_fits.iter().find(|c| c.kind == kind) {
+            Some(c) => (c.enc.fit(), c.dec.fit()),
+            None => (self.enc.fit(), self.dec.fit()),
         }
     }
 
@@ -221,19 +314,25 @@ impl CostEstimator {
     /// Each sample files under the fits of the route it actually ran:
     /// flat-routed groups feed `comm_flat`, hierarchical-routed groups
     /// with a per-level split feed `comm_inter`/`comm_intra`, and every
-    /// sample feeds the route-agnostic total.
+    /// sample feeds the route-agnostic total. Comm samples are converted
+    /// to wire bytes through the codec that ran the group; encode/decode
+    /// samples additionally feed that codec's keyed fit.
     pub fn observe_step(&mut self, samples: &[GroupSample], compute_secs: f64) {
         for s in samples {
             self.enc.observe(s.elems, s.encode_secs);
             self.dec.observe(s.elems, s.decode_secs);
-            self.comm.observe(s.elems, s.comm_secs);
+            let cf = self.codec_fit_mut(s.codec);
+            cf.enc.observe(s.elems, s.encode_secs);
+            cf.dec.observe(s.elems, s.decode_secs);
+            let bytes = s.codec.wire_bytes(s.elems);
+            self.comm.observe(bytes, s.comm_secs);
             match s.route {
-                CommRoute::Flat => self.comm_flat.observe(s.elems, s.comm_secs),
+                CommRoute::Flat => self.comm_flat.observe(bytes, s.comm_secs),
                 CommRoute::TwoLevel => {
                     if s.comm_inter_secs > 0.0 {
-                        self.comm_inter.observe(s.elems, s.comm_inter_secs);
+                        self.comm_inter.observe(bytes, s.comm_inter_secs);
                         self.comm_intra
-                            .observe(s.elems, (s.comm_secs - s.comm_inter_secs).max(0.0));
+                            .observe(bytes, (s.comm_secs - s.comm_inter_secs).max(0.0));
                     }
                 }
             }
@@ -241,24 +340,35 @@ impl CostEstimator {
         self.step_secs.observe(compute_secs);
     }
 
-    /// Per-level communication fits, once hierarchical samples have been
-    /// observed (`None` on a flat fabric).
+    /// The total collective fit, converted to the base codec's element
+    /// basis (what the route-free objective consumes).
+    pub fn comm_fit(&self) -> FittedCost {
+        self.comm.fit().per_elems_for(self.base_codec)
+    }
+
+    /// Per-level communication fits in the base codec's element basis,
+    /// once hierarchical samples have been observed (`None` on a flat
+    /// fabric).
     pub fn two_level_fit(&self) -> Option<TwoLevelCost> {
+        self.two_level_fit_bytes().map(|tl| TwoLevelCost {
+            intra: tl.intra.per_elems_for(self.base_codec),
+            inter: tl.inter.per_elems_for(self.base_codec),
+        })
+    }
+
+    /// Per-level fits in raw wire-byte space (the codec-agnostic fabric
+    /// plane the codec axis converts per candidate).
+    fn two_level_fit_bytes(&self) -> Option<TwoLevelCost> {
         (self.comm_inter.samples() > 0).then(|| TwoLevelCost {
             intra: self.comm_intra.fit(),
             inter: self.comm_inter.fit(),
         })
     }
 
-    /// Per-route comm models for the `(partition, route)` search, once
-    /// the hierarchy has been observed. The hierarchical side is the
-    /// combined per-level fit; the flat side is the live flat fit when any
-    /// group has actually ridden the flat ring, and the ring-geometry
-    /// conversion [`TwoLevelCost::flat_equivalent`] before that. `None`
-    /// until hierarchical samples exist — there is then nothing to choose
-    /// between, and the search keeps the global route.
-    pub fn route_costs(&self, world: usize, nodes: usize) -> Option<RouteCostModel> {
-        let tl = self.two_level_fit()?;
+    /// Per-route comm models in wire-byte space. `None` until hierarchical
+    /// samples exist.
+    fn route_costs_bytes(&self, world: usize, nodes: usize) -> Option<RouteCostModel> {
+        let tl = self.two_level_fit_bytes()?;
         let flat = if self.comm_flat.samples() > 0 {
             self.comm_flat.fit()
         } else {
@@ -267,6 +377,71 @@ impl CostEstimator {
         Some(RouteCostModel {
             flat,
             hier: tl.combined(),
+        })
+    }
+
+    /// Per-route comm models for the `(partition, route)` search, in the
+    /// base codec's element basis, once the hierarchy has been observed.
+    /// The hierarchical side is the combined per-level fit; the flat side
+    /// is the live flat fit when any group has actually ridden the flat
+    /// ring, and the ring-geometry conversion
+    /// [`TwoLevelCost::flat_equivalent`] before that. `None` until
+    /// hierarchical samples exist — there is then nothing to choose
+    /// between, and the search keeps the global route.
+    pub fn route_costs(&self, world: usize, nodes: usize) -> Option<RouteCostModel> {
+        let rb = self.route_costs_bytes(world, nodes)?;
+        Some(RouteCostModel {
+            flat: rb.flat.per_elems_for(self.base_codec),
+            hier: rb.hier.per_elems_for(self.base_codec),
+        })
+    }
+
+    /// Assemble the codec axis for the schedule search: one
+    /// [`CodecCostEntry`] per pool codec, pricing its encode/decode from
+    /// the keyed fits (seeded or observed) and its collective cost from
+    /// the byte-based fabric plane converted through its wire density —
+    /// per route when `routing = Some((world, nodes))` and the hierarchy
+    /// has been observed. `incumbent` is the current per-tensor codec
+    /// assignment (backprop order); `switch_cost` is the seconds the
+    /// objective charges a group for abandoning its incumbent. `None` for
+    /// an empty pool.
+    pub fn codec_cost_model(
+        &self,
+        pool: &[CodecKind],
+        routing: Option<(usize, usize)>,
+        switch_cost: f64,
+        incumbent: Vec<CodecKind>,
+    ) -> Option<CodecCostModel> {
+        if pool.is_empty() {
+            return None;
+        }
+        // The codec-agnostic fabric plane: per-level combined when the
+        // hierarchy has been observed (better conditioned), total else.
+        let comm_bytes = match self.two_level_fit_bytes() {
+            Some(tl) => tl.combined(),
+            None => self.comm.fit(),
+        };
+        let route_bytes = routing.and_then(|(w, l)| self.route_costs_bytes(w, l));
+        let entries = pool
+            .iter()
+            .map(|&kind| {
+                let (enc, dec) = self.codec_io_fits(kind);
+                CodecCostEntry {
+                    kind,
+                    enc,
+                    dec,
+                    comm: comm_bytes.per_elems_for(kind),
+                    routes: route_bytes.map(|rb| RouteCostModel {
+                        flat: rb.flat.per_elems_for(kind),
+                        hier: rb.hier.per_elems_for(kind),
+                    }),
+                }
+            })
+            .collect();
+        Some(CodecCostModel {
+            entries,
+            switch_cost,
+            incumbent,
         })
     }
 
@@ -302,7 +477,7 @@ impl CostEstimator {
         // identified separately), and their sum is the same affine class.
         let comm = match self.two_level_fit() {
             Some(tl) => tl.combined(),
-            None => self.comm.fit(),
+            None => self.comm_fit(),
         };
         Some(AnalyticObjective::new(
             bwd_dur,
@@ -325,6 +500,7 @@ mod tests {
             group: 0,
             elems,
             route: CommRoute::Flat,
+            codec: CodecKind::Fp32,
             encode_secs: enc,
             comm_secs: comm,
             comm_exposed_secs: comm,
@@ -429,7 +605,7 @@ mod tests {
         assert!(tl.inter_dominates(1 << 16));
         // The combined model is what the objective consumes; it must match
         // the total fit (the levels sum to the total by construction).
-        let total = est.comm.fit();
+        let total = est.comm_fit();
         let combined = tl.combined();
         let n = 1usize << 18;
         let rel = (combined.predict(n) - total.predict(n)).abs() / total.predict(n);
@@ -473,6 +649,102 @@ mod tests {
         let rc = est.route_costs(world, nodes).unwrap();
         assert!((rc.flat.b - fb).abs() / fb < 1e-2, "flat b = {}", rc.flat.b);
         assert!((rc.flat.g - fg).abs() / fg < 1e-3, "flat g = {}", rc.flat.g);
+    }
+
+    #[test]
+    fn byte_basis_round_trips_through_the_base_codec() {
+        // Samples labeled with the base codec must reproduce the same
+        // element-basis fit the pre-codec estimator produced: the wire is
+        // 4·elems bytes for FP32, so filing at bytes and converting back
+        // is exact.
+        let (b, g) = (2e-4, 3e-9);
+        let mut est = CostEstimator::new(0.2, None, None, None);
+        for _ in 0..50 {
+            for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+                est.observe_step(&[sample(n, 1e-5, b + g * n as f64, 1e-5)], 1e-2);
+            }
+        }
+        let f = est.comm_fit();
+        assert!((f.b - b).abs() / b < 1e-6, "b = {}", f.b);
+        assert!((f.g - g).abs() / g < 1e-6, "g = {}", f.g);
+    }
+
+    #[test]
+    fn codec_model_prices_unobserved_codecs_from_the_fabric_plane() {
+        // Feed FP32 traffic only; the codec model must still price a
+        // 1-bit codec's comm from the shared byte fit (≈ wire-density
+        // ratio cheaper) and use its *seeded* encode/decode fits.
+        let (b, g) = (1e-4, 4e-9);
+        let mut est = CostEstimator::new(0.2, None, None, None);
+        for _ in 0..50 {
+            for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+                est.observe_step(&[sample(n, 2e-5, b + g * n as f64, 3e-5)], 1e-2);
+            }
+        }
+        let enc_seed = FittedCost { b: 5e-5, g: 2e-9, r2: 1.0 };
+        let dec_seed = FittedCost { b: 7e-5, g: 1e-9, r2: 1.0 };
+        est.seed_codec(CodecKind::EfSignSgd, enc_seed, dec_seed);
+
+        let cm = est
+            .codec_cost_model(
+                &[CodecKind::Fp32, CodecKind::EfSignSgd],
+                None,
+                0.0,
+                Vec::new(),
+            )
+            .expect("non-empty pool");
+        assert_eq!(cm.entries.len(), 2);
+        let fp32 = cm.entry(CodecKind::Fp32).unwrap();
+        let ef = cm.entry(CodecKind::EfSignSgd).unwrap();
+
+        let n = 1usize << 20;
+        // FP32's comm entry is the measured plane verbatim.
+        assert!((fp32.comm.predict(n) - (b + g * n as f64)).abs() < 1e-9);
+        // The sign codec moves 1/32 of the bytes: its slope must shrink by
+        // the density ratio (0.125 vs 4 bytes/elem).
+        let expect_g = g / 4.0 * 0.125;
+        assert!(
+            (ef.comm.g - expect_g).abs() / expect_g < 1e-6,
+            "ef comm g = {}",
+            ef.comm.g
+        );
+        // Encode/decode come from the seed, not the FP32 aggregates.
+        assert!((ef.enc.predict(n) - enc_seed.predict(n)).abs() < 1e-12);
+        assert!((ef.dec.predict(n) - dec_seed.predict(n)).abs() < 1e-12);
+        assert!(ef.routes.is_none(), "no hierarchy observed, no route split");
+
+        // Empty pool yields no model; seeding twice keeps the first fit.
+        assert!(est.codec_cost_model(&[], None, 0.0, Vec::new()).is_none());
+        est.seed_codec(CodecKind::EfSignSgd, default_prior(), default_prior());
+        let cm2 = est
+            .codec_cost_model(&[CodecKind::EfSignSgd], None, 0.0, Vec::new())
+            .unwrap();
+        let ef2 = cm2.entry(CodecKind::EfSignSgd).unwrap();
+        assert!((ef2.enc.predict(n) - enc_seed.predict(n)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observed_codec_traffic_overrides_the_seeded_io_fits() {
+        // A codec that actually runs gets its enc/dec fits from live
+        // samples, and its comm samples land on the shared byte plane.
+        let mut est = CostEstimator::new(0.2, None, None, None);
+        let (eb, eg) = (3e-5, 5e-10);
+        for _ in 0..50 {
+            for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+                let mut s = sample(n, eb + eg * n as f64, 1e-4 + 1e-9 * n as f64, 1e-5);
+                s.codec = CodecKind::EfSignSgd;
+                est.observe_step(&[s], 1e-2);
+            }
+        }
+        let cm = est
+            .codec_cost_model(&[CodecKind::EfSignSgd], None, 0.0, Vec::new())
+            .unwrap();
+        let ef = cm.entry(CodecKind::EfSignSgd).unwrap();
+        assert!((ef.enc.g - eg).abs() / eg < 1e-3, "enc g = {}", ef.enc.g);
+        // The byte plane saw 0.125-byte/elem traffic plus a 4-byte header:
+        // converting back to FP32 elems multiplies the slope by 32.
+        let f = est.comm_fit();
+        assert!((f.g - 1e-9 * 32.0).abs() / (32e-9) < 1e-2, "g = {}", f.g);
     }
 
     #[test]

@@ -26,8 +26,10 @@ pub mod objective;
 pub mod partition;
 pub mod search;
 
-pub use costmodel::{FittedCost, RouteCostModel, TwoLevelCost};
+pub use costmodel::{CodecCostEntry, CodecCostModel, FittedCost, RouteCostModel, TwoLevelCost};
 pub use driver::{Decision, Driver, DriverConfig, ScheduleUpdate};
 pub use estimator::CostEstimator;
 pub use partition::Partition;
-pub use search::{mergecomp_search, RouteChoice, RouteMode, SearchOutcome, SearchParams};
+pub use search::{
+    mergecomp_search, CodecMode, RouteChoice, RouteMode, SearchOutcome, SearchParams,
+};

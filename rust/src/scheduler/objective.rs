@@ -13,9 +13,10 @@
 //!   time (real plane: the trainer runs a few steps under the candidate
 //!   partition — the paper's "less than 50 iterations" warm-up search).
 
-use super::costmodel::RouteCostModel;
+use super::costmodel::{CodecCostModel, RouteCostModel};
 use super::partition::Partition;
 use super::search::RouteChoice;
+use crate::compression::CodecKind;
 use crate::simulator::{simulate, SimSetup};
 
 /// Anything that can score a candidate partition (lower is better).
@@ -28,6 +29,13 @@ pub trait Objective {
     /// keep the communicator's global route. [`AnalyticObjective`]
     /// overrides this once a [`RouteCostModel`] is attached.
     fn routes(&self, _p: &Partition) -> Vec<RouteChoice> {
+        Vec::new()
+    }
+    /// The per-group codecs `eval` implicitly priced `p` under. The
+    /// default (empty) means the objective has no codec freedom — callers
+    /// keep the configured codec everywhere. [`AnalyticObjective`]
+    /// overrides this once a [`CodecCostModel`] is attached.
+    fn codecs(&self, _p: &Partition) -> Vec<CodecKind> {
         Vec::new()
     }
 }
@@ -104,7 +112,23 @@ pub struct AnalyticObjective {
     /// the cheaper of flat/hierarchical — the `(partition, route)` search
     /// space — and [`AnalyticObjective::routes`] reports the choices.
     route_costs: Option<RouteCostModel>,
+    /// Per-codec cost models: when present, each group is priced under the
+    /// cheapest `(codec, route)` pair from the pool — the full
+    /// `(partition, route, codec)` search space — with the incumbent
+    /// switch penalty charged, and [`AnalyticObjective::codecs`] reports
+    /// the choices.
+    codec_costs: Option<CodecCostModel>,
     evals: usize,
+}
+
+/// The priced cost components of one candidate group.
+struct GroupPrice {
+    enc: f64,
+    comm: f64,
+    /// Full-group decode (fan-in already included).
+    dec: f64,
+    /// Codec-switch penalty (outside the timeline; charged additively).
+    penalty: f64,
 }
 
 impl AnalyticObjective {
@@ -127,6 +151,7 @@ impl AnalyticObjective {
             comm,
             dec_fanin: dec_fanin.max(1),
             route_costs: None,
+            codec_costs: None,
             evals: 0,
         }
     }
@@ -146,6 +171,21 @@ impl AnalyticObjective {
         self.route_costs.as_ref()
     }
 
+    /// Attach per-codec cost models, turning the search space into
+    /// `(partition, per-group route, per-group codec)`.
+    pub fn with_codec_costs(mut self, codec_costs: CodecCostModel) -> Self {
+        self.codec_costs = Some(codec_costs);
+        self
+    }
+
+    pub fn set_codec_costs(&mut self, codec_costs: Option<CodecCostModel>) {
+        self.codec_costs = codec_costs;
+    }
+
+    pub fn codec_costs(&self) -> Option<&CodecCostModel> {
+        self.codec_costs.as_ref()
+    }
+
     /// Comm cost of one group: forced route, best route (when a route
     /// model is attached), or the global-route model.
     fn comm_secs(&self, elems: usize, forced: Option<RouteChoice>) -> f64 {
@@ -156,10 +196,79 @@ impl AnalyticObjective {
         }
     }
 
-    fn eval_inner(&mut self, p: &Partition, forced: Option<&[RouteChoice]>) -> f64 {
+    /// Price one group under the objective's own (codec-free) fits.
+    fn base_price(&self, elems: usize, route: Option<RouteChoice>) -> GroupPrice {
+        GroupPrice {
+            enc: self.enc.predict(elems),
+            comm: self.comm_secs(elems, route),
+            dec: self.dec.predict(elems) * self.dec_fanin as f64,
+            penalty: 0.0,
+        }
+    }
+
+    /// Joint per-group `(codec, route)` choice: minimize the group's serial
+    /// cost (encode + collective + decode, plus the switch penalty when
+    /// the codec differs from the incumbent of any tensor the group spans)
+    /// over the candidate pool. Pinning `fcodec`/`froute` restricts the
+    /// choice — how the driver prices the *current* schedule. Because the
+    /// choice decomposes per group, minimizing inside the objective
+    /// searches the product space exactly, like the route axis.
+    fn choose(
+        &self,
+        p: &Partition,
+        j: usize,
+        elems: usize,
+        froute: Option<RouteChoice>,
+        fcodec: Option<CodecKind>,
+    ) -> (Option<CodecKind>, Option<RouteChoice>, GroupPrice) {
+        let Some(cm) = &self.codec_costs else {
+            return (None, froute, self.base_price(elems, froute));
+        };
+        let mut best: Option<(CodecKind, Option<RouteChoice>, GroupPrice, f64)> = None;
+        for entry in cm
+            .entries
+            .iter()
+            .filter(|e| fcodec.map(|k| e.kind == k).unwrap_or(true))
+        {
+            let (route, comm) = entry.comm_for(elems, froute);
+            let penalty = if cm.incumbent.is_empty()
+                || p.group_range(j).all(|i| cm.incumbent[i] == entry.kind)
+            {
+                0.0
+            } else {
+                cm.switch_cost
+            };
+            let price = GroupPrice {
+                enc: entry.enc.predict(elems),
+                comm,
+                dec: entry.dec.predict(elems),
+                penalty,
+            };
+            let total = price.enc + price.comm + price.dec + price.penalty;
+            if best.as_ref().map(|(_, _, _, bt)| total < *bt).unwrap_or(true) {
+                best = Some((entry.kind, route, price, total));
+            }
+        }
+        match best {
+            Some((kind, route, price, _)) => (Some(kind), route, price),
+            // A pinned codec absent from the pool: price it under the
+            // objective's own fits (they were measured under the incumbent).
+            None => (fcodec, froute, self.base_price(elems, froute)),
+        }
+    }
+
+    fn eval_inner(
+        &mut self,
+        p: &Partition,
+        forced_routes: Option<&[RouteChoice]>,
+        forced_codecs: Option<&[CodecKind]>,
+    ) -> f64 {
         self.evals += 1;
-        if let Some(routes) = forced {
+        if let Some(routes) = forced_routes {
             assert_eq!(routes.len(), p.num_groups(), "one route per group");
+        }
+        if let Some(codecs) = forced_codecs {
+            assert_eq!(codecs.len(), p.num_groups(), "one codec per group");
         }
         // Same two-resource WFBP timeline as simulator::timeline, driven by
         // the fitted costs.
@@ -167,38 +276,59 @@ impl AnalyticObjective {
         let mut gpu_t = self.fwd_time;
         let mut comm_free = 0.0f64;
         let mut comm_done = vec![0.0f64; y];
+        let mut dec_secs = vec![0.0f64; y];
+        let mut penalty = 0.0f64;
         for j in 0..y {
             let mut elems = 0usize;
             for i in p.group_range(j) {
                 gpu_t += self.bwd_dur[i];
                 elems += self.sizes[i];
             }
-            gpu_t += self.enc.predict(elems);
+            let (_, _, price) = self.choose(
+                p,
+                j,
+                elems,
+                forced_routes.map(|r| r[j]),
+                forced_codecs.map(|c| c[j]),
+            );
+            gpu_t += price.enc;
             let start = gpu_t.max(comm_free);
-            comm_free = start + self.comm_secs(elems, forced.map(|r| r[j]));
+            comm_free = start + price.comm;
             comm_done[j] = comm_free;
+            dec_secs[j] = price.dec;
+            penalty += price.penalty;
         }
         for j in 0..y {
-            let elems: usize = p.group_range(j).map(|i| self.sizes[i]).sum();
-            gpu_t = gpu_t.max(comm_done[j]) + self.dec.predict(elems) * self.dec_fanin as f64;
+            gpu_t = gpu_t.max(comm_done[j]) + dec_secs[j];
         }
-        gpu_t
+        gpu_t + penalty
     }
 
     /// Score `p` with every group pinned to the given route — how the
     /// driver prices the *current* `(partition, routes)` schedule so that
     /// route-only improvements register as predicted gain.
     pub fn eval_with_routes(&mut self, p: &Partition, routes: &[RouteChoice]) -> f64 {
-        if routes.is_empty() {
-            return self.eval_inner(p, None);
-        }
-        self.eval_inner(p, Some(routes))
+        self.eval_with_schedule(p, routes, &[])
+    }
+
+    /// Score `p` with every group pinned to the given route *and* codec —
+    /// the full current-schedule price when the codec axis is live. Empty
+    /// slices leave the corresponding axis free.
+    pub fn eval_with_schedule(
+        &mut self,
+        p: &Partition,
+        routes: &[RouteChoice],
+        codecs: &[CodecKind],
+    ) -> f64 {
+        let fr = (!routes.is_empty()).then_some(routes);
+        let fc = (!codecs.is_empty()).then_some(codecs);
+        self.eval_inner(p, fr, fc)
     }
 }
 
 impl Objective for AnalyticObjective {
     fn eval(&mut self, p: &Partition) -> f64 {
-        self.eval_inner(p, None)
+        self.eval_inner(p, None, None)
     }
 
     fn evals(&self) -> usize {
@@ -206,13 +336,35 @@ impl Objective for AnalyticObjective {
     }
 
     fn routes(&self, p: &Partition) -> Vec<RouteChoice> {
-        let Some(rc) = &self.route_costs else {
+        if self.route_costs.is_none() {
             return Vec::new();
-        };
+        }
         (0..p.num_groups())
             .map(|j| {
                 let elems: usize = p.group_range(j).map(|i| self.sizes[i]).sum();
-                rc.best(elems).0
+                // The joint (codec, route) choice when the codec axis is
+                // live; the plain route comparison otherwise.
+                match self.choose(p, j, elems, None, None) {
+                    (_, Some(route), _) => route,
+                    _ => self.route_costs.as_ref().unwrap().best(elems).0,
+                }
+            })
+            .collect()
+    }
+
+    fn codecs(&self, p: &Partition) -> Vec<CodecKind> {
+        if self
+            .codec_costs
+            .as_ref()
+            .map(|cm| cm.entries.is_empty())
+            .unwrap_or(true)
+        {
+            return Vec::new();
+        }
+        (0..p.num_groups())
+            .filter_map(|j| {
+                let elems: usize = p.group_range(j).map(|i| self.sizes[i]).sum();
+                self.choose(p, j, elems, None, None).0
             })
             .collect()
     }
@@ -251,6 +403,12 @@ impl<'o> Memo<'o> {
     /// search).
     pub fn routes(&self, p: &Partition) -> Vec<RouteChoice> {
         self.inner.routes(p)
+    }
+
+    /// The inner objective's codec recommendation for `p` (pure, queried
+    /// once per search, like [`Memo::routes`]).
+    pub fn codecs(&self, p: &Partition) -> Vec<CodecKind> {
+        self.inner.codecs(p)
     }
 }
 
@@ -332,6 +490,111 @@ mod tests {
         // Without a route model, no routes are reported.
         obj.set_route_costs(None);
         assert!(obj.routes(&p).is_empty());
+    }
+
+    #[test]
+    fn codec_aware_objective_picks_the_cheapest_codec_per_group() {
+        use super::super::costmodel::{CodecCostEntry, CodecCostModel, FittedCost};
+        let zero = FittedCost { b: 0.0, g: 0.0, r2: 1.0 };
+        // One fabric plane in bytes (50µs latency, 1ns/byte) converted per
+        // codec: FP32 is latency-free but dense; TopK pays a big encode
+        // cost but ships 0.8% of the bytes.
+        let wire = FittedCost { b: 5e-5, g: 1e-9, r2: 1.0 };
+        let topk = CodecKind::TopK { ratio: 0.01 };
+        let entries = vec![
+            CodecCostEntry {
+                kind: CodecKind::Fp32,
+                enc: zero,
+                dec: zero,
+                comm: wire.per_elems_for(CodecKind::Fp32),
+                routes: None,
+            },
+            CodecCostEntry {
+                kind: topk,
+                enc: FittedCost { b: 2e-4, g: 2e-9, r2: 1.0 },
+                dec: FittedCost { b: 1e-5, g: 1e-10, r2: 1.0 },
+                comm: wire.per_elems_for(topk),
+                routes: None,
+            },
+        ];
+        let sizes = vec![100usize, 4_000_000];
+        let mut obj = AnalyticObjective::new(
+            vec![1e-3, 1e-3],
+            sizes,
+            1e-3,
+            zero,
+            zero,
+            wire.per_elems_for(CodecKind::Fp32),
+            1,
+        )
+        .with_codec_costs(CodecCostModel {
+            entries,
+            switch_cost: 0.0,
+            incumbent: Vec::new(),
+        });
+        let p = Partition::layer_wise(2);
+        let f_auto = obj.eval(&p);
+        let codecs = obj.codecs(&p);
+        // Small latency-bound group: don't compress. Huge bandwidth-bound
+        // group: the sparsifier's encode cost pays for itself.
+        assert_eq!(codecs, vec![CodecKind::Fp32, topk]);
+        // Forced-uniform codecs can never beat the per-group minimum.
+        let f_fp32 = obj.eval_with_schedule(&p, &[], &[CodecKind::Fp32, CodecKind::Fp32]);
+        let f_topk = obj.eval_with_schedule(&p, &[], &[topk, topk]);
+        assert!(f_auto <= f_fp32 + 1e-15 && f_auto <= f_topk + 1e-15);
+        assert!(f_auto < f_fp32.min(f_topk), "the mix must strictly win here");
+        // Pinning the objective's own choices reproduces the auto score.
+        assert_eq!(obj.eval_with_schedule(&p, &[], &codecs), f_auto);
+        // Without a codec model, no codecs are reported.
+        obj.set_codec_costs(None);
+        assert!(obj.codecs(&p).is_empty());
+    }
+
+    #[test]
+    fn switch_cost_pins_the_incumbent_until_the_gain_clears_it() {
+        use super::super::costmodel::{CodecCostEntry, CodecCostModel, FittedCost};
+        let zero = FittedCost { b: 0.0, g: 0.0, r2: 1.0 };
+        // FP16 is marginally cheaper than the incumbent FP32 on this plane.
+        let mk = |g: f64| FittedCost { b: 1e-5, g, r2: 1.0 };
+        let entries = vec![
+            CodecCostEntry {
+                kind: CodecKind::Fp32,
+                enc: zero,
+                dec: zero,
+                comm: mk(4e-9),
+                routes: None,
+            },
+            CodecCostEntry {
+                kind: CodecKind::Fp16,
+                enc: zero,
+                dec: zero,
+                comm: mk(2e-9),
+                routes: None,
+            },
+        ];
+        let n = 100_000usize;
+        let gain = (4e-9 - 2e-9) * n as f64;
+        let with_cost = |switch_cost: f64| {
+            let mut obj = AnalyticObjective::new(
+                vec![1e-3],
+                vec![n],
+                1e-3,
+                zero,
+                zero,
+                mk(4e-9),
+                1,
+            )
+            .with_codec_costs(CodecCostModel {
+                entries: entries.clone(),
+                switch_cost,
+                incumbent: vec![CodecKind::Fp32],
+            });
+            obj.codecs(&Partition::full_merge(1))
+        };
+        // Below the per-step gain the switch goes through; above it the
+        // incumbent holds — no thrash on noise-level differences.
+        assert_eq!(with_cost(gain * 0.5), vec![CodecKind::Fp16]);
+        assert_eq!(with_cost(gain * 2.0), vec![CodecKind::Fp32]);
     }
 
     #[test]

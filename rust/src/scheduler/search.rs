@@ -25,9 +25,21 @@
 //! minimizing over routes inside the objective searches the product space
 //! exactly — no extra enumeration. Objectives without route freedom return
 //! no routes and callers keep the communicator's global route.
+//!
+//! **Codec-aware search.** Under `--codec auto` the space grows a third
+//! axis: `(partition, per-group route, per-group codec)`. Each candidate
+//! group is priced under every codec in the pool (per-codec encode/decode
+//! fits plus the byte-based fabric plane converted through each codec's
+//! wire density — [`CodecCostModel`](super::costmodel::CodecCostModel)),
+//! jointly with the route, and [`SearchOutcome::codecs`] records one
+//! [`CodecKind`] per group. FP32 always rides in the pool, so "don't
+//! compress" is a first-class outcome for latency-bound groups. Like the
+//! route axis, the codec choice decomposes per group, so minimizing inside
+//! the objective searches the product space exactly.
 
 use super::objective::{Memo, Objective};
 use super::partition::Partition;
+use crate::compression::CodecKind;
 
 /// Which collective algorithm one tensor group rides — the scheduler-side
 /// counterpart of [`CommRoute`](crate::collectives::CommRoute), chosen per
@@ -111,6 +123,37 @@ impl RouteMode {
     }
 }
 
+/// Config/CLI-facing codec policy: `--codec auto` lets Algorithm 2 pick a
+/// codec per group from the fitted per-codec costs; naming a codec pins
+/// every group to it (the pre-codec-search behavior).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CodecMode {
+    /// Every group runs the single configured codec.
+    #[default]
+    Fixed,
+    /// Algorithm 2 chooses `(partition, route, codec)` per group; FP32 is
+    /// always in the candidate pool so "don't compress" is a first-class
+    /// outcome.
+    Auto,
+}
+
+impl CodecMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecMode::Fixed => "fixed",
+            CodecMode::Auto => "auto",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<CodecMode> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "fixed" => CodecMode::Fixed,
+            "auto" => CodecMode::Auto,
+            other => anyhow::bail!("unknown codec mode '{other}' (fixed|auto)"),
+        })
+    }
+}
+
 /// Algorithm 2 inputs: Y (max groups) and α (marginal-benefit threshold).
 #[derive(Debug, Clone, Copy)]
 pub struct SearchParams {
@@ -139,6 +182,12 @@ pub struct SearchOutcome {
     ///
     /// [`RouteCostModel`]: super::costmodel::RouteCostModel
     pub routes: Vec<RouteChoice>,
+    /// One [`CodecKind`] per group of `partition`, when the objective has
+    /// codec freedom (an attached [`CodecCostModel`]); empty otherwise —
+    /// callers then keep the configured codec everywhere.
+    ///
+    /// [`CodecCostModel`]: super::costmodel::CodecCostModel
+    pub codecs: Vec<CodecKind>,
     /// Best objective found for each explored y (1-indexed by position 0 = y 1).
     pub per_y: Vec<(usize, f64)>,
     /// Objective evaluations spent (the paper reports < 50 iterations for
@@ -295,10 +344,12 @@ pub fn mergecomp_search(
     }
 
     let routes = memo.routes(&best);
+    let codecs = memo.codecs(&best);
     SearchOutcome {
         partition: best,
         f_min,
         routes,
+        codecs,
         per_y,
         evals: memo.evals(),
     }
@@ -380,6 +431,70 @@ mod tests {
         let (mut sim, n) = sim_objective(CodecKind::EfSignSgd, 4);
         let out = mergecomp_search(&mut sim, n, SearchParams::default());
         assert!(out.routes.is_empty());
+    }
+
+    #[test]
+    fn search_reports_codecs_when_the_objective_has_codec_freedom() {
+        use crate::scheduler::costmodel::{CodecCostEntry, CodecCostModel, FittedCost};
+        use crate::scheduler::objective::AnalyticObjective;
+        let zero = FittedCost { b: 0.0, g: 0.0, r2: 1.0 };
+        // Byte-priced fabric plane: FP32 is latency-free, TopK trades a
+        // real encode cost for 0.8% of the wire bytes.
+        let wire = FittedCost { b: 5e-5, g: 1e-9, r2: 1.0 };
+        let topk = CodecKind::TopK { ratio: 0.01 };
+        let entries = vec![
+            CodecCostEntry {
+                kind: CodecKind::Fp32,
+                enc: zero,
+                dec: zero,
+                comm: wire.per_elems_for(CodecKind::Fp32),
+                routes: None,
+            },
+            CodecCostEntry {
+                kind: topk,
+                enc: FittedCost { b: 2e-4, g: 2e-9, r2: 1.0 },
+                dec: FittedCost { b: 1e-5, g: 1e-10, r2: 1.0 },
+                comm: wire.per_elems_for(topk),
+                routes: None,
+            },
+        ];
+        let sizes: Vec<usize> = [vec![100usize; 4], vec![4_000_000usize; 4]].concat();
+        let mut obj = AnalyticObjective::new(
+            vec![1e-3; 8],
+            sizes,
+            1e-3,
+            zero,
+            zero,
+            wire.per_elems_for(CodecKind::Fp32),
+            1,
+        )
+        .with_codec_costs(CodecCostModel {
+            entries,
+            switch_cost: 0.0,
+            incumbent: Vec::new(),
+        });
+        let out = mergecomp_search(&mut obj, 8, SearchParams { y_max: 3, alpha: 0.0 });
+        assert_eq!(out.codecs.len(), out.partition.num_groups());
+        assert!(
+            out.codecs.contains(&topk),
+            "the huge tail must compress: {:?}",
+            out.codecs
+        );
+        // A codec-free objective reports no codecs.
+        let (mut sim, n) = sim_objective(CodecKind::EfSignSgd, 4);
+        let out = mergecomp_search(&mut sim, n, SearchParams::default());
+        assert!(out.codecs.is_empty());
+    }
+
+    #[test]
+    fn codec_mode_names_are_strict() {
+        assert!(CodecMode::from_name("turbo").is_err());
+        assert_eq!(CodecMode::from_name("auto").unwrap(), CodecMode::Auto);
+        assert_eq!(CodecMode::from_name("fixed").unwrap(), CodecMode::Fixed);
+        assert_eq!(CodecMode::default(), CodecMode::Fixed);
+        for m in [CodecMode::Auto, CodecMode::Fixed] {
+            assert_eq!(CodecMode::from_name(m.name()).unwrap(), m);
+        }
     }
 
     #[test]

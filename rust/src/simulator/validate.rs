@@ -27,7 +27,7 @@ use crate::compression::{CodecKind, Collective};
 use crate::coordinator::{ExchangeStats, GroupSample};
 use crate::netsim::{Fabric, HierCost, NetScenario, RouteDepth, ThreeLevelFabric, TwoLevelFabric};
 use crate::profiles::ModelProfile;
-use crate::scheduler::costmodel::{FittedCost, TwoLevelCost};
+use crate::scheduler::costmodel::{CodecCostEntry, CodecCostModel, FittedCost, TwoLevelCost};
 use crate::scheduler::objective::{AnalyticObjective, Objective as _};
 use crate::scheduler::{mergecomp_search, CostEstimator, Decision, Driver, DriverConfig, Partition};
 use crate::simulator::OverheadModel;
@@ -81,22 +81,12 @@ pub struct LinearPlane {
     pub comm: FittedCost,
 }
 
-/// Affine wire-size model `bytes(n) ≈ h + d·n` per codec (the exact
+/// Affine wire-size model `bytes(n) ≈ h + d·n` per codec — delegates to
+/// the single source of truth, [`CodecKind::wire_affine`] (the exact
 /// `wire_size` staircase without its sub-word rounding, so the synthetic
 /// plane is exactly linear and the EWMA fit can recover it bit-for-bit).
 fn affine_wire(kind: CodecKind) -> (f64, f64) {
-    match kind {
-        CodecKind::Fp32 => (0.0, 4.0),
-        CodecKind::Fp16 => (0.0, 2.0),
-        CodecKind::Qsgd { .. } => (0.0, 1.0 + 4.0 / 512.0),
-        CodecKind::TopK { ratio } | CodecKind::RandK { ratio } | CodecKind::Dgc { ratio } => {
-            (4.0, 8.0 * ratio)
-        }
-        CodecKind::SignSgd | CodecKind::Signum { .. } => (4.0, 4.0 / 32.0),
-        CodecKind::EfSignSgd => (8.0, 4.0 / 32.0),
-        CodecKind::OneBit => (12.0, 4.0 / 32.0),
-        CodecKind::TernGrad => (8.0, 4.0 / 16.0),
-    }
+    kind.wire_affine()
 }
 
 /// The true Assumption-5 coefficients for `kind` on `fabric` with `world`
@@ -316,6 +306,123 @@ pub fn plane_objective(profile: &ModelProfile, plane: &LinearPlane) -> AnalyticO
     )
 }
 
+// ---------------------------------------------------------------------------
+// Codec-axis validation plane
+// ---------------------------------------------------------------------------
+
+/// A provably heterogeneous codec regime for the `(partition, codec)`
+/// search: exactly-affine per-codec cost triples over a two-tensor model
+/// where **no single codec is optimal everywhere**, so a mixed schedule
+/// must strictly beat every forced one.
+///
+/// Construction (backprop order):
+/// - tensor 0 is a comm-bound bulk (10^8 elems, grads ready almost
+///   immediately) — FP32 moves 4 B/elem and pays seconds of wire time,
+///   while the bitmap codec moves 1/32 of that: compression wins by a
+///   wide margin despite its fixed encode cost;
+/// - tensor 1 is a tiny tail (10^3 elems) whose backward compute is long —
+///   its exchange sits fully exposed at the end of the step, and every
+///   compressed codec's fixed encode cost dwarfs the few bytes FP32 would
+///   have to move: not compressing wins.
+///
+/// The pool also carries a mid-rate sparse codec that is second-best on
+/// both groups — a decoy that a correct joint search must reject on both.
+/// Margins are engineered ≥5% under both overlapped and fully-serial
+/// timeline semantics.
+pub struct CodecRegime {
+    /// Tensor element counts, backprop order.
+    pub sizes: Vec<usize>,
+    /// Per-tensor backward durations, backprop order (seconds).
+    pub bwd_dur: Vec<f64>,
+    /// The full candidate pool's cost model (no incumbent, no switch cost).
+    pub model: CodecCostModel,
+}
+
+/// Build the regime. The [`CodecKind`]s are labels for the pool entries;
+/// their costs here are synthetic affine planes, not the calibrated
+/// [`OverheadModel`] — that keeps the winner provable by arithmetic.
+pub fn heterogeneous_codec_regime() -> CodecRegime {
+    let zero = FittedCost { b: 0.0, g: 0.0, r2: 1.0 };
+    let entry = |kind: CodecKind, enc: FittedCost, comm: FittedCost| CodecCostEntry {
+        kind,
+        enc,
+        dec: zero,
+        comm,
+        routes: None,
+    };
+    let model = CodecCostModel {
+        entries: vec![
+            // FP32: free encode, 4 B/elem on the wire.
+            entry(CodecKind::Fp32, zero, FittedCost { b: 1e-3, g: 4e-8, r2: 1.0 }),
+            // Bitmap EF codec: expensive fixed encode, 1/32 of the bytes.
+            entry(
+                CodecKind::EfSignSgd,
+                FittedCost { b: 0.5, g: 1e-10, r2: 1.0 },
+                FittedCost { b: 1e-3, g: 1.25e-9, r2: 1.0 },
+            ),
+            // Sparse decoy: mid encode cost, mid wire rate — second place
+            // on both the bulk and the tail.
+            entry(
+                CodecKind::TopK { ratio: 0.01 },
+                FittedCost { b: 0.2, g: 4e-9, r2: 1.0 },
+                FittedCost { b: 1e-3, g: 3.2e-9, r2: 1.0 },
+            ),
+        ],
+        switch_cost: 0.0,
+        incumbent: Vec::new(),
+    };
+    CodecRegime {
+        sizes: vec![100_000_000, 1_000],
+        bwd_dur: vec![0.02, 3.0],
+        model,
+    }
+}
+
+impl CodecRegime {
+    /// A fresh Eq.-7 objective over the regime's model shape with `model`
+    /// attached as the codec axis (`None`: price everything as FP32).
+    pub fn objective(&self, model: Option<CodecCostModel>) -> AnalyticObjective {
+        let zero = FittedCost { b: 0.0, g: 0.0, r2: 1.0 };
+        let fp32_comm = self
+            .model
+            .entry(CodecKind::Fp32)
+            .map(|e| e.comm)
+            .unwrap_or(zero);
+        let mut obj = AnalyticObjective::new(
+            self.bwd_dur.clone(),
+            self.sizes.clone(),
+            0.0,
+            zero,
+            zero,
+            fp32_comm,
+            1,
+        );
+        obj.set_codec_costs(model);
+        obj
+    }
+
+    /// The model restricted to a single codec — what a forced
+    /// `--codec <kind>` run prices every group with.
+    pub fn forced(&self, kind: CodecKind) -> CodecCostModel {
+        CodecCostModel {
+            entries: self
+                .model
+                .entries
+                .iter()
+                .filter(|e| e.kind == kind)
+                .cloned()
+                .collect(),
+            switch_cost: self.model.switch_cost,
+            incumbent: Vec::new(),
+        }
+    }
+
+    /// Every codec in the pool, entry order.
+    pub fn pool(&self) -> Vec<CodecKind> {
+        self.model.entries.iter().map(|e| e.kind).collect()
+    }
+}
+
 /// One step of the online-vs-baselines comparison.
 #[derive(Debug, Clone)]
 pub struct OnlineStepPoint {
@@ -425,6 +532,7 @@ pub fn run_online_loop(
                     group: j,
                     elems,
                     route: crate::collectives::CommRoute::Flat,
+                    codec: crate::compression::CodecKind::Fp32,
                     encode_secs: plane.enc.predict(elems),
                     comm_secs: plane.comm.predict(elems),
                     comm_exposed_secs: 0.0,
@@ -437,10 +545,13 @@ pub fn run_online_loop(
 
         if driver.due(step) {
             if let Decision::Switch {
-                partition, routes, ..
+                partition,
+                routes,
+                codecs,
+                ..
             } = driver.decide()
             {
-                driver.apply(partition, routes);
+                driver.apply(partition, routes, codecs);
             }
         }
 
@@ -731,6 +842,35 @@ mod tests {
             two < three,
             "without a WAN gap two-level {two} should beat three-level {three}"
         );
+    }
+
+    #[test]
+    fn heterogeneous_regime_rewards_a_mixed_codec_schedule() {
+        use crate::compression::CodecKind::{EfSignSgd, Fp32};
+        let regime = heterogeneous_codec_regime();
+        let search = SearchParams { y_max: 2, alpha: 0.01 };
+        let n = regime.sizes.len();
+
+        let mut obj = regime.objective(Some(regime.model.clone()));
+        let auto = mergecomp_search(&mut obj, n, search);
+        // The joint search must split the model and mix: the bitmap codec
+        // on the comm-bound bulk, FP32 on the exposed tail.
+        assert_eq!(auto.partition.num_groups(), 2, "bulk and tail must split");
+        assert_eq!(auto.codecs, vec![EfSignSgd, Fp32]);
+
+        // ... and the mixed optimum strictly beats every forced codec —
+        // by construction no single pool member is best on both groups.
+        for kind in regime.pool() {
+            let mut obj = regime.objective(Some(regime.forced(kind)));
+            let forced = mergecomp_search(&mut obj, n, search);
+            assert!(
+                auto.f_min < forced.f_min * 0.95,
+                "{}: forced {} vs mixed {}",
+                kind.name(),
+                forced.f_min,
+                auto.f_min
+            );
+        }
     }
 
     #[test]

@@ -87,6 +87,18 @@ impl GradExchange {
         self.engine.routes()
     }
 
+    /// Install per-group codecs (`None` reverts every group to the base
+    /// codec); see [`crate::coordinator::ExchangeEngine::set_codecs`] for
+    /// the error-feedback carry/reset policy.
+    pub fn set_codecs(&mut self, kinds: Option<Vec<CodecKind>>) -> anyhow::Result<()> {
+        self.engine.set_codecs(kinds)
+    }
+
+    /// The codec kind each group currently runs.
+    pub fn group_codecs(&self) -> Vec<CodecKind> {
+        self.engine.group_codecs()
+    }
+
     /// Codec state planes flattened to full-model length (test support).
     pub fn flat_state(&self) -> Vec<Vec<f32>> {
         self.engine.flat_state()

@@ -30,7 +30,7 @@ use super::optimizer::SgdMomentum;
 use crate::collectives::{
     run_comm_group, tcp_endpoint_with_nodes, Comm, CommRoute, TcpConfig, TransportKind,
 };
-use crate::compression::{Codec as _, Collective};
+use crate::compression::{Codec as _, CodecKind, Collective};
 use crate::config::{ScheduleSpec, SchedulingMode, TrainConfig};
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::profiles::ModelProfile;
@@ -38,7 +38,8 @@ use crate::runtime::{StepMeta, TensorMeta, TrainStep};
 use crate::scheduler::costmodel::{CostSampler, FittedCost, TwoLevelCost};
 use crate::scheduler::objective::AnalyticObjective;
 use crate::scheduler::{
-    CostEstimator, Decision, Driver, DriverConfig, Partition, RouteChoice, RouteMode, SearchParams,
+    CodecMode, CostEstimator, Decision, Driver, DriverConfig, Partition, RouteChoice, RouteMode,
+    SearchParams,
 };
 use crate::util::json::Value;
 use crate::util::rng::Xoshiro256;
@@ -72,6 +73,9 @@ pub struct RunResult {
     /// `--route auto` on a non-flat topology once the driver has adopted a
     /// routed schedule.
     pub final_routes: Vec<RouteChoice>,
+    /// Per-group codec in effect when training ended — the configured
+    /// codec everywhere unless `--codec auto` adopted a mixed schedule.
+    pub final_codecs: Vec<CodecKind>,
     /// The live per-level comm fits at the end of the run (`None` on flat
     /// fabrics or non-online schedules) — the per-level α+β·size slopes
     /// the driver logs and the route search decides with.
@@ -122,6 +126,9 @@ impl RunResult {
             ("groups", Value::from(self.partition.num_groups())),
             ("routes", Value::Arr(
                 self.final_routes.iter().map(|r| Value::from(r.name())).collect(),
+            )),
+            ("codecs", Value::Arr(
+                self.final_codecs.iter().map(|k| Value::from(k.name())).collect(),
             )),
             (
                 "comm_intra_g",
@@ -314,13 +321,36 @@ impl StepRunner {
     }
 }
 
-/// Measure codec encode+decode costs at a few group sizes (host-local, no
-/// comm) and fit the Assumption-5 models.
+/// The codec candidate pool under `--codec auto`: the configured base
+/// codec, FP32 ("don't compress" must stay a first-class outcome), and one
+/// representative of each overhead regime — a dense truncation (FP16), an
+/// EF bitmap (EFSignSGD), and a sparse top-k. Deduplicated, order-stable.
+fn codec_pool(cfg: &TrainConfig) -> Vec<CodecKind> {
+    let mut pool: Vec<CodecKind> = Vec::new();
+    for k in [
+        cfg.codec,
+        CodecKind::Fp32,
+        CodecKind::Fp16,
+        CodecKind::EfSignSgd,
+        CodecKind::TopK { ratio: 0.01 },
+    ] {
+        if !pool.contains(&k) {
+            pool.push(k);
+        }
+    }
+    pool
+}
+
+/// Measure one codec's encode+decode costs at a few group sizes
+/// (host-local, no comm) and fit the Assumption-5 models. Under
+/// `--codec auto` this runs once per pool codec so the scheduler can price
+/// codecs it has never run in production.
 fn fit_codec_costs(
-    cfg: &TrainConfig,
+    kind: CodecKind,
+    seed: u64,
     total_params: usize,
 ) -> anyhow::Result<(FittedCost, FittedCost)> {
-    let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ 0xC0DEC);
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xC0DEC);
     let mut enc_s = CostSampler::new();
     let mut dec_s = CostSampler::new();
     let sizes = [
@@ -330,7 +360,7 @@ fn fit_codec_costs(
         (total_params / 2).max(1 << 19),
     ];
     for &n in &sizes {
-        let mut codec = cfg.codec.build(n);
+        let mut codec = kind.build(n);
         let mut g = vec![0f32; n];
         rng.fill_normal_f32(&mut g, 0.02);
         let mut out = vec![0f32; n];
@@ -438,7 +468,7 @@ fn resolve_schedule(
         let spec = cfg.schedule;
         let p = match spec {
             ScheduleSpec::MergeComp { .. } => {
-                let (enc, dec) = fit_codec_costs(cfg, meta.total_params())?;
+                let (enc, dec) = fit_codec_costs(cfg.codec, cfg.seed, meta.total_params())?;
                 fits.enc = Some(enc);
                 fits.dec = Some(dec);
                 // Backward durations: measured step time split by the
@@ -617,16 +647,42 @@ fn train_rank(
         // The warmup decode fit measured one payload; the engine's
         // per-group decode samples include the allgather fan-in, so
         // scale the prior to match.
-        let fanin = match cfg.codec.collective() {
-            Collective::AllReduce => 1,
-            Collective::AllGather => comm.world().saturating_sub(1).max(1),
-        } as f64;
+        let fanin_of = |k: CodecKind| match k.collective() {
+            Collective::AllReduce => 1.0,
+            Collective::AllGather => comm.world().saturating_sub(1).max(1) as f64,
+        };
+        let fanin = fanin_of(cfg.codec);
         let dec_prior = fits.dec.map(|d| FittedCost {
             b: d.b * fanin,
             g: d.g * fanin,
             r2: d.r2,
         });
-        let est = CostEstimator::new(dcfg.ewma, fits.enc, dec_prior, fits.comm);
+        // The estimator's comm fits live in wire-byte space; the warmup
+        // fit sampled per element under the configured codec, so convert
+        // through its wire affine before seeding the prior.
+        let (header, density) = cfg.codec.wire_affine();
+        let comm_prior = fits.comm.map(|f| {
+            let g = f.g / density.max(f64::MIN_POSITIVE);
+            FittedCost { b: (f.b - g * header).max(0.0), g, r2: f.r2 }
+        });
+        let mut est = CostEstimator::new(dcfg.ewma, fits.enc, dec_prior, comm_prior);
+        est.set_base_codec(cfg.codec);
+        let auto_codecs = cfg.codec_mode == CodecMode::Auto;
+        let pool = codec_pool(cfg);
+        if auto_codecs && rank == 0 {
+            // One-shot local microcalibration: seed enc/dec fits for every
+            // pool codec so the search can price codecs that have never
+            // carried production traffic. Rank 0 only — it runs the search.
+            for &k in &pool {
+                let (enc, dec) = fit_codec_costs(k, cfg.seed, meta.total_params())?;
+                let f = fanin_of(k);
+                est.seed_codec(
+                    k,
+                    enc,
+                    FittedCost { b: dec.b * f, g: dec.g * f, r2: dec.r2 },
+                );
+            }
+        }
         let mut d = Driver::new(
             dcfg,
             est,
@@ -642,6 +698,11 @@ fn train_rank(
         // on N-level topologies.
         if cfg.route == RouteMode::Auto && !comm.topology().is_trivial() {
             d = d.with_routing(comm.world(), comm.topology().top_leaders().len());
+        }
+        // Codec axis: every rank installs it (the broadcast codecs must
+        // count against a consistent schedule state), only rank 0 searches.
+        if auto_codecs {
+            d = d.with_codecs(cfg.codec, &pool, cfg.codec_switch_cost);
         }
         Some(d)
     } else {
@@ -677,9 +738,15 @@ fn train_rank(
             if d.due(step) {
                 let decision = if rank == 0 { d.decide() } else { Decision::Keep };
                 if let Some(update) = d.sync(comm, decision)? {
+                    // Order matters: repartition first (it normalizes any
+                    // mixed codecs back to the base codec before state is
+                    // re-chunked), then the routes, then the per-group
+                    // codecs of the new schedule.
                     exchange.repartition(update.partition)?;
                     let routes = (!update.routes.is_empty()).then_some(update.routes);
                     exchange.set_routes(routes)?;
+                    let codecs = (!update.codecs.is_empty()).then_some(update.codecs);
+                    exchange.set_codecs(codecs)?;
                 }
             }
         }
@@ -736,12 +803,14 @@ fn train_rank(
         .map(|d| (d.reschedules, d.search_evals, d.epoch()))
         .unwrap_or((0, 0, 0));
     let final_routes = exchange.routes().map(|r| r.to_vec()).unwrap_or_default();
+    let final_codecs = exchange.group_codecs();
     let two_level_fit = driver.as_ref().and_then(|d| d.estimator().two_level_fit());
     Ok(RunResult {
         rank,
         records,
         partition: exchange.partition().clone(),
         final_routes,
+        final_codecs,
         two_level_fit,
         final_train_loss: last_loss,
         eval_loss,

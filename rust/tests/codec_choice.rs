@@ -1,0 +1,286 @@
+//! Codec choice: the per-group codec as a *scheduled* variable.
+//!
+//! Properties pinned here (the codec twin of `tests/route_choice.rs`):
+//!
+//! 1. **Matched-plane codec flips are bit-invisible.** Flipping a group's
+//!    codec away and back between steps (`C1 → C2 → C1`, where the two
+//!    kinds expose the same number of state planes, e.g. the one EF
+//!    residual plane of `efsignsgd ↔ onebit`) must not change a single bit
+//!    of the aggregated gradients or the codec state versus a run that
+//!    never flipped — on the in-process mesh AND over real TCP sockets,
+//!    in both pipeline modes. This is the carry half of
+//!    `ExchangeEngine::set_codecs`'s EF policy.
+//! 2. **Plane-mismatched flips reset exactly the claimed planes.** A flip
+//!    whose plane shapes don't line up (DGC's two planes → EF-SignSGD's
+//!    one) zeroes precisely the flipped group's planes; every other
+//!    group's state stays bit-identical. This is the reset half — the
+//!    cost the scheduler's codec switch penalty prices.
+//! 3. **A mixed schedule is transport-invariant.** The `[efsignsgd, fp32]`
+//!    schedule the codec search emits runs bit-identically over the
+//!    in-process mesh and TCP sockets, flips included.
+//! 4. **Misuse is a typed error**, not silent garbage: a codec vector of
+//!    the wrong arity names both counts.
+
+use mergecomp::collectives::{run_comm_group, run_comm_group_tcp, Comm};
+use mergecomp::compression::{CodecKind, Collective};
+use mergecomp::scheduler::Partition;
+use mergecomp::training::{GradExchange, PipelineMode};
+use mergecomp::util::rng::Xoshiro256;
+
+const WORLD: usize = 4;
+const GROUPS: usize = 2;
+const STEPS: usize = 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    InProc,
+    Tcp,
+}
+
+fn run_comm_on<T: Send>(
+    backend: Backend,
+    world: usize,
+    f: impl Fn(&mut Comm) -> T + Send + Sync,
+) -> Vec<T> {
+    match backend {
+        Backend::InProc => run_comm_group(world, f),
+        Backend::Tcp => run_comm_group_tcp(world, f),
+    }
+}
+
+/// Per-tensor sizes (backprop order): uneven groups, sub-word tails.
+fn tensor_sizes() -> Vec<usize> {
+    vec![300, 33, 256, 129]
+}
+
+/// Deterministic per-(rank, step) gradients; dyadic lattice values for the
+/// allreduce codecs so any reduction grouping sums exactly (same contract
+/// as `tests/route_choice.rs`).
+fn step_grads(kind: CodecKind, rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng =
+        Xoshiro256::seed_from_u64(0xC0DE ^ ((rank as u64) << 32) ^ ((step as u64) << 8));
+    let lattice = kind.collective() == Collective::AllReduce;
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut g = vec![0f32; n];
+            if lattice {
+                for v in g.iter_mut() {
+                    let k = rng.gen_range(129) as i64 - 64;
+                    *v = k as f32 / 64.0;
+                }
+            } else {
+                rng.fill_normal_f32(&mut g, 0.5);
+            }
+            g
+        })
+        .collect()
+}
+
+/// Run `STEPS` exchanges under `base`. With `flip`, before each step the
+/// schedule walks away to `other` and back (whole schedule, then one
+/// group, then a redundant reinstall of `base` — every `set_codecs` arm),
+/// so all exchanges still execute under `base` but the state has been
+/// carried through `other`'s planes and back repeatedly.
+fn run_with_flips(
+    backend: Backend,
+    base: CodecKind,
+    other: CodecKind,
+    mode: PipelineMode,
+    flip: bool,
+) -> Vec<(Vec<Vec<f32>>, u64)> {
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    run_comm_on(backend, WORLD, move |c| {
+        let mut ex = GradExchange::new(base, Partition::naive_even(n, GROUPS), sizes.clone())
+            .with_mode(mode);
+        let mut rng = Xoshiro256::seed_from_u64(42 + c.rank() as u64);
+        let mut last = Vec::new();
+        for step in 0..STEPS {
+            if flip {
+                match step % 3 {
+                    0 => ex.set_codecs(Some(vec![other; GROUPS])).unwrap(),
+                    1 => ex.set_codecs(Some(vec![other, base])).unwrap(),
+                    _ => ex.set_codecs(Some(vec![base; GROUPS])).unwrap(),
+                }
+                ex.set_codecs(None).unwrap();
+            }
+            let mut grads = step_grads(base, c.rank(), step, &sizes);
+            ex.exchange(c, &mut grads, &mut rng).unwrap();
+            last = grads;
+        }
+        (last, ex.state_digest())
+    })
+}
+
+/// Matched-plane pairs: one EF/momentum plane each for the sign family, a
+/// DGC ratio change over its two planes, and a stateless pair spanning the
+/// allreduce/allgather divide.
+fn matched_pairs() -> Vec<(CodecKind, CodecKind)> {
+    vec![
+        (CodecKind::EfSignSgd, CodecKind::OneBit),
+        (CodecKind::Signum { beta: 0.9 }, CodecKind::EfSignSgd),
+        (CodecKind::Dgc { ratio: 0.01 }, CodecKind::Dgc { ratio: 0.05 }),
+        (CodecKind::Fp16, CodecKind::TopK { ratio: 0.1 }),
+    ]
+}
+
+fn assert_flips_invisible(backend: Backend, base: CodecKind, other: CodecKind, mode: PipelineMode) {
+    let reference = run_with_flips(backend, base, other, mode, false);
+    let flipped = run_with_flips(backend, base, other, mode, true);
+    for (rank, ((rg, rd), (fg, fd))) in reference.iter().zip(&flipped).enumerate() {
+        for (t, (rt, ft)) in rg.iter().zip(fg).enumerate() {
+            for (i, (a, b)) in rt.iter().zip(ft).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{:?} {}<->{} {}: rank {rank} tensor {t} idx {i}: {a} vs {b}",
+                    backend,
+                    base.name(),
+                    other.name(),
+                    mode.name()
+                );
+            }
+        }
+        assert_eq!(
+            rd,
+            fd,
+            "{:?} {}<->{} {}: rank {rank} codec state diverged across flips",
+            backend,
+            base.name(),
+            other.name(),
+            mode.name()
+        );
+    }
+}
+
+#[test]
+fn matched_plane_codec_flips_bit_invisible_inproc() {
+    for (base, other) in matched_pairs() {
+        for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            assert_flips_invisible(Backend::InProc, base, other, mode);
+        }
+    }
+}
+
+#[test]
+fn matched_plane_codec_flips_bit_invisible_over_tcp() {
+    for (base, other) in matched_pairs() {
+        assert_flips_invisible(Backend::Tcp, base, other, PipelineMode::Pipelined);
+    }
+}
+
+#[test]
+fn plane_mismatched_flip_resets_exactly_the_claimed_planes() {
+    // Base DGC (two planes: velocity + momentum). Flip group 0 to
+    // EF-SignSGD (one plane): the policy must reset — group 0's planes
+    // read zero — while group 1's DGC state stays bit-identical.
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    let base = CodecKind::Dgc { ratio: 0.05 };
+    let results = run_comm_group(WORLD, move |c| {
+        let mut ex = GradExchange::new(base, Partition::naive_even(n, GROUPS), sizes.clone());
+        let mut rng = Xoshiro256::seed_from_u64(9 + c.rank() as u64);
+        for step in 0..2 {
+            let mut grads = step_grads(base, c.rank(), step, &sizes);
+            ex.exchange(c, &mut grads, &mut rng).unwrap();
+        }
+        let before = ex.flat_state();
+        assert_eq!(before.len(), 2, "DGC exposes velocity + momentum planes");
+        let g0: usize = ex.partition().group_elems(&sizes)[0];
+        assert!(
+            before.iter().any(|p| p[..g0].iter().any(|&v| v != 0.0)),
+            "fixture must accumulate nonzero DGC state before the flip"
+        );
+
+        ex.set_codecs(Some(vec![CodecKind::EfSignSgd, base])).unwrap();
+        let after = ex.flat_state();
+        (before, after, g0)
+    });
+    for (rank, (before, after, g0)) in results.iter().enumerate() {
+        // Mixed plane count = max over groups (DGC's two); group 0's
+        // missing second plane reads as zeros by construction, and its EF
+        // plane must have been freshly zeroed by the reset.
+        assert_eq!(after.len(), 2);
+        for (p, plane) in after.iter().enumerate() {
+            assert!(
+                plane[..*g0].iter().all(|&v| v == 0.0),
+                "rank {rank}: plane {p} of the flipped group not reset"
+            );
+            let same = plane[*g0..]
+                .iter()
+                .zip(&before[p][*g0..])
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "rank {rank}: plane {p} of the untouched group changed");
+        }
+    }
+}
+
+#[test]
+fn mixed_codec_schedule_bit_identical_across_transports() {
+    // The schedule the codec search emits on the heterogeneous regime —
+    // a compressed bulk group + an FP32 tail group — must run
+    // bit-identically over channels and sockets, including a mid-run
+    // flip from the all-base schedule into the mixed one.
+    let run = |backend: Backend| {
+        let sizes = tensor_sizes();
+        let n = sizes.len();
+        run_comm_on(backend, WORLD, move |c| {
+            let mut ex = GradExchange::new(
+                CodecKind::Fp32,
+                Partition::naive_even(n, GROUPS),
+                sizes.clone(),
+            )
+            .with_mode(PipelineMode::Pipelined);
+            let mut rng = Xoshiro256::seed_from_u64(31 + c.rank() as u64);
+            let mut last = Vec::new();
+            for step in 0..STEPS {
+                if step == 1 {
+                    ex.set_codecs(Some(vec![CodecKind::EfSignSgd, CodecKind::Fp32]))
+                        .unwrap();
+                }
+                // Lattice gradients: the FP32 group's ring reduction is
+                // exact in wire precision on both transports.
+                let mut grads = step_grads(CodecKind::Fp32, c.rank(), step, &sizes);
+                ex.exchange(c, &mut grads, &mut rng).unwrap();
+                last = grads;
+            }
+            (last, ex.state_digest(), ex.group_codecs())
+        })
+    };
+    let inproc = run(Backend::InProc);
+    let tcp = run(Backend::Tcp);
+    for (rank, (i, t)) in inproc.iter().zip(&tcp).enumerate() {
+        assert_eq!(
+            i.2,
+            vec![CodecKind::EfSignSgd, CodecKind::Fp32],
+            "rank {rank}: mixed schedule not installed"
+        );
+        assert_eq!(i, t, "rank {rank}: mixed schedule diverged across transports");
+    }
+    // And all workers agree with each other (synchronous SGD's contract).
+    for (rank, t) in inproc.iter().enumerate().skip(1) {
+        assert_eq!(t.0, inproc[0].0, "rank {rank} disagrees under the mixed schedule");
+    }
+}
+
+#[test]
+fn set_codecs_misuse_is_a_typed_error() {
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    let mut ex = GradExchange::new(
+        CodecKind::EfSignSgd,
+        Partition::naive_even(n, GROUPS),
+        sizes,
+    );
+    let err = ex
+        .set_codecs(Some(vec![CodecKind::Fp32]))
+        .expect_err("wrong arity must be rejected")
+        .to_string();
+    assert!(
+        err.contains("1 codecs") && err.contains("2 groups"),
+        "error must name both counts, got: {err}"
+    );
+    // The schedule is untouched after the rejected install.
+    assert_eq!(ex.group_codecs(), vec![CodecKind::EfSignSgd; GROUPS]);
+}

@@ -197,6 +197,7 @@ fn synth_samples(p: &Partition, sizes: &[usize], b: f64, g: f64) -> Vec<GroupSam
                 group: j,
                 elems,
                 route: mergecomp::collectives::CommRoute::Flat,
+                codec: mergecomp::compression::CodecKind::Fp32,
                 encode_secs: 1e-5,
                 comm_secs: b + g * elems as f64,
                 comm_exposed_secs: 0.0,

@@ -245,6 +245,7 @@ fn synth_route_samples(
                 group: j,
                 elems,
                 route,
+                codec: mergecomp::compression::CodecKind::Fp32,
                 encode_secs: enc.predict(elems),
                 comm_secs: comm,
                 comm_exposed_secs: 0.0,

@@ -142,7 +142,7 @@ fn wire_reduce_bit_identical_simd_vs_scalar() {
                 let mut wb = Vec::new();
                 codec.encode_into(&a, &mut rng, &mut wa);
                 codec.encode_into(&b, &mut rng, &mut wb);
-                codec.reduce_wire(&mut wa, &wb);
+                codec.reduce_wire(&mut wa, &wb).unwrap();
                 simd::set_forced_scalar(false);
                 wa
             };

@@ -9,8 +9,9 @@ file, addressed by their JSON path (per-codec rows are keyed by the row's
 codecs never misattributes a series; duplicate labels get an index suffix).
 
 Gating: only series stable enough to act on can fail the job — byte
-counts and model-predicted timings (`sim_*`, the route-search objective
-values), which are exact arithmetic and identical across runners, plus
+counts and model-predicted timings (`sim_*` and the `auto_`/`forced_`/
+`oracle_` objective values from the route- and codec-search benches),
+which are exact arithmetic and identical across runners, plus
 `*_speedup` ratios (SIMD-vs-forced-scalar from the SAME binary and run,
 so runner noise largely divides out). Measured wall-clock `*_secs` series
 on shared CI runners wobble far beyond any useful threshold, so they are
