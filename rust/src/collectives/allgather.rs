@@ -5,7 +5,7 @@
 //! ranks (DGC's selection count varies), which is exactly why allreduce
 //! cannot be used for sparse tensors (§3.1).
 
-use super::transport::TransportError;
+use super::transport::Error;
 use super::Comm;
 
 /// Ring allgather among `members` (a sorted subset of ranks containing the
@@ -19,7 +19,7 @@ pub(crate) fn subset_ring_allgather(
     members: &[usize],
     base: u64,
     mine: Vec<u8>,
-) -> Result<Vec<Vec<u8>>, TransportError> {
+) -> Result<Vec<Vec<u8>>, Error> {
     let l = members.len();
     let me = members
         .iter()
@@ -51,7 +51,7 @@ pub(crate) fn subset_ring_allgather(
 
 /// Flat ring allgather over all ranks: bytes moved per rank are the sum of
 /// all other ranks' payload sizes — bandwidth optimal for a ring.
-pub fn ring_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
+pub fn ring_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, Error> {
     let world = comm.world();
     if world == 1 {
         return Ok(vec![mine]);
@@ -62,7 +62,7 @@ pub fn ring_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, Tr
 }
 
 /// Barrier: a zero-byte allgather.
-pub fn barrier(comm: &mut Comm) -> Result<(), TransportError> {
+pub fn barrier(comm: &mut Comm) -> Result<(), Error> {
     let _ = ring_allgather(comm, Vec::new())?;
     Ok(())
 }
@@ -72,7 +72,7 @@ pub fn broadcast(
     comm: &mut Comm,
     root: usize,
     bytes: &mut Vec<u8>,
-) -> Result<(), TransportError> {
+) -> Result<(), Error> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {

@@ -5,10 +5,11 @@
 //! 1. Every rank binds a **data listener** on an ephemeral port.
 //! 2. Rank 0 listens on the rendezvous address; every other rank dials it
 //!    (with retry until the deadline) and sends
-//!    `HELLO <rank> <data-addr> <node>` — the node label is the rank's
-//!    position in the configured [`Topology`](super::Topology) (`n0`,
-//!    `n1`, …), which lets the trainer cross-check that every launched
-//!    process was handed the same `--topology`.
+//!    `HELLO <rank> <data-addr> <node> g<generation>` — the node label is
+//!    the rank's position in the configured [`Topology`](super::Topology)
+//!    (`n0`, `n1`, …), which lets the trainer cross-check that every
+//!    launched process was handed the same `--topology`; the generation
+//!    tag makes re-registration after a crash unambiguous (see below).
 //! 3. Once all `world - 1` hellos have arrived, rank 0 answers each peer
 //!    with the full peer table: `TABLE <addr0>/<node0> … <addrW-1>/<nodeW-1>`.
 //!    The rendezvous connections then close — they carry no training
@@ -22,6 +23,19 @@
 //! registered, every dial in step 4 targets a listener that is already
 //! bound — the only retries needed are against the rendezvous itself
 //! (rank 0's process may simply not have started yet).
+//!
+//! ## Generations and re-join
+//!
+//! A rank that dies during bootstrap and is relaunched re-dials the
+//! rendezvous and re-HELLOs. The [`Registry`] arbitrates with the
+//! generation tag: a re-HELLO with a **higher** generation replaces the
+//! stale entry (the restarted process supersedes its dead predecessor), a
+//! **lower** generation is silently ignored (a straggling pre-crash
+//! process), and an **equal** generation is a duplicate-registration error
+//! (two live processes claim the same rank). Peers without a tag are
+//! generation 0, which preserves the legacy strict behaviour: double
+//! registration is always an error until generations are used explicitly
+//! (`--generation`, bumped by the elastic relaunch path).
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -126,8 +140,153 @@ fn validate_node_label(label: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// A parsed `HELLO` registration line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    pub rank: usize,
+    pub addr: String,
+    pub node: String,
+    /// Bootstrap generation of the sender (0 when the line carries no
+    /// `g<gen>` token — legacy peers).
+    pub generation: u64,
+}
+
+impl Hello {
+    pub fn to_wire(&self) -> String {
+        format!("HELLO {} {} {} g{}", self.rank, self.addr, self.node, self.generation)
+    }
+}
+
+/// Parse a `HELLO <rank> <addr> [<node>] [g<gen>]` line. Pure — fed by the
+/// property tests with truncated/junk/duplicate-token input. `world` bounds
+/// the rank (rank 0 hosts the rendezvous and never HELLOs).
+pub fn parse_hello(line: &str, world: usize) -> anyhow::Result<Hello> {
+    let mut parts = line.split_whitespace();
+    anyhow::ensure!(parts.next() == Some("HELLO"), "rendezvous: expected HELLO, got '{line}'");
+    let rank: usize = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("rendezvous: bad rank in '{line}'"))?;
+    anyhow::ensure!(rank > 0 && rank < world, "rendezvous: rank {rank} out of range");
+    let addr = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("rendezvous: missing addr in '{line}'"))?;
+    anyhow::ensure!(!addr.contains('/'), "rendezvous: addr '{addr}' contains '/'");
+    let node = parts.next().unwrap_or("-");
+    validate_node_label(node)?;
+    let generation = match parts.next() {
+        None => 0,
+        Some(tok) => tok
+            .strip_prefix('g')
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("rendezvous: bad generation token in '{line}'"))?,
+    };
+    anyhow::ensure!(parts.next().is_none(), "rendezvous: trailing tokens in '{line}'");
+    Ok(Hello {
+        rank,
+        addr: addr.to_string(),
+        node: node.to_string(),
+        generation,
+    })
+}
+
+/// Parse a `TABLE <addr0/node0> …` line into exactly `world` entries. Pure
+/// — fed by the property tests with truncated/junk input.
+pub fn parse_table(line: &str, world: usize) -> anyhow::Result<Vec<PeerEntry>> {
+    let mut parts = line.split_whitespace();
+    anyhow::ensure!(parts.next() == Some("TABLE"), "rendezvous: expected TABLE, got '{line}'");
+    let table: Vec<PeerEntry> = parts.map(PeerEntry::from_wire).collect();
+    anyhow::ensure!(
+        table.len() == world,
+        "rendezvous: table has {} entries, expected {world}",
+        table.len()
+    );
+    Ok(table)
+}
+
+/// What [`Registry::register`] did with a `HELLO`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HelloOutcome {
+    /// First registration for this rank.
+    Registered,
+    /// A newer generation replaced a stale entry (the rank restarted
+    /// before the table was released).
+    Replaced,
+    /// Older generation than the registered one — ignored.
+    Stale,
+}
+
+/// Rank 0's registration table during the rendezvous, with the generation
+/// arbitration described in the module docs.
+#[derive(Debug)]
+pub struct Registry {
+    entries: Vec<Option<(PeerEntry, u64)>>,
+}
+
+impl Registry {
+    /// `self_entry` pre-registers rank 0 (the host never HELLOs itself).
+    pub fn new(world: usize, self_entry: PeerEntry) -> Registry {
+        assert!(world >= 1);
+        let mut entries: Vec<Option<(PeerEntry, u64)>> = vec![None; world];
+        entries[0] = Some((self_entry, 0));
+        Registry { entries }
+    }
+
+    /// Arbitrate one registration. Errors mean a protocol violation by a
+    /// live peer (duplicate same-generation registration); stale lines are
+    /// reported, not errored, so a straggler cannot wedge the bootstrap.
+    pub fn register(&mut self, h: &Hello) -> anyhow::Result<HelloOutcome> {
+        anyhow::ensure!(
+            h.rank > 0 && h.rank < self.entries.len(),
+            "rendezvous: rank {} out of range",
+            h.rank
+        );
+        let entry = PeerEntry { addr: h.addr.clone(), node: h.node.clone() };
+        match &self.entries[h.rank] {
+            None => {
+                self.entries[h.rank] = Some((entry, h.generation));
+                Ok(HelloOutcome::Registered)
+            }
+            Some((_, old_gen)) if h.generation > *old_gen => {
+                self.entries[h.rank] = Some((entry, h.generation));
+                Ok(HelloOutcome::Replaced)
+            }
+            Some((_, old_gen)) if h.generation < *old_gen => Ok(HelloOutcome::Stale),
+            Some(_) => anyhow::bail!(
+                "rendezvous: duplicate registration for rank {} (generation {})",
+                h.rank,
+                h.generation
+            ),
+        }
+    }
+
+    /// Registered generation for `rank`, if any.
+    pub fn generation(&self, rank: usize) -> Option<u64> {
+        self.entries.get(rank).and_then(|e| e.as_ref().map(|(_, g)| *g))
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.entries.iter().all(Option::is_some)
+    }
+
+    /// The finished table (every rank registered).
+    pub fn table(&self) -> anyhow::Result<Vec<PeerEntry>> {
+        self.entries
+            .iter()
+            .enumerate()
+            .map(|(r, e)| {
+                e.as_ref()
+                    .map(|(p, _)| p.clone())
+                    .ok_or_else(|| anyhow::anyhow!("rendezvous: rank {r} never registered"))
+            })
+            .collect()
+    }
+}
+
 /// Run the rendezvous: every rank learns every rank's data address and
-/// node label.
+/// node label. `generation` tags this process's registration so a
+/// relaunched rank supersedes its dead predecessor (see the module docs);
+/// pass 0 outside elastic restarts.
 ///
 /// `hosted`: rank 0 may pass a pre-bound listener (tests bind port 0 to
 /// pick a free port); otherwise rank 0 binds `rendezvous_addr` itself.
@@ -137,6 +296,7 @@ pub fn exchange_peer_table(
     rendezvous_addr: &str,
     my_data_addr: &str,
     my_node_label: &str,
+    generation: u64,
     hosted: Option<TcpListener>,
     deadline: Instant,
 ) -> anyhow::Result<Vec<PeerEntry>> {
@@ -154,47 +314,34 @@ pub fn exchange_peer_table(
             None => TcpListener::bind(rendezvous_addr)
                 .map_err(|e| anyhow::anyhow!("binding rendezvous {rendezvous_addr}: {e}"))?,
         };
-        let mut table: Vec<Option<PeerEntry>> = vec![None; world];
-        table[0] = Some(PeerEntry {
-            addr: my_data_addr.to_string(),
-            node: my_node_label.to_string(),
-        });
-        let mut peers: Vec<(usize, TcpStream)> = Vec::with_capacity(world - 1);
-        while peers.len() < world - 1 {
+        let mut registry = Registry::new(
+            world,
+            PeerEntry { addr: my_data_addr.to_string(), node: my_node_label.to_string() },
+        );
+        // One pending reply stream per rank; a replacing re-HELLO drops
+        // (closes) the dead predecessor's stream.
+        let mut streams: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+        while !registry.is_complete() {
             let mut stream = accept_with_deadline(&listener, deadline, "rendezvous hello")?;
             let line = read_line_raw(&mut stream, 512)?;
-            let mut parts = line.split_whitespace();
-            anyhow::ensure!(
-                parts.next() == Some("HELLO"),
-                "rendezvous: expected HELLO, got '{line}'"
-            );
-            let peer: usize = parts
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| anyhow::anyhow!("rendezvous: bad rank in '{line}'"))?;
-            let addr = parts
-                .next()
-                .ok_or_else(|| anyhow::anyhow!("rendezvous: missing addr in '{line}'"))?;
-            let node = parts.next().unwrap_or("-");
-            anyhow::ensure!(peer > 0 && peer < world, "rendezvous: rank {peer} out of range");
-            anyhow::ensure!(
-                table[peer].is_none(),
-                "rendezvous: duplicate registration for rank {peer}"
-            );
-            table[peer] = Some(PeerEntry {
-                addr: addr.to_string(),
-                node: node.to_string(),
-            });
-            peers.push((peer, stream));
+            let hello = parse_hello(&line, world)?;
+            match registry.register(&hello)? {
+                HelloOutcome::Registered | HelloOutcome::Replaced => {
+                    streams[hello.rank] = Some(stream);
+                }
+                HelloOutcome::Stale => drop(stream),
+            }
         }
-        let table: Vec<PeerEntry> = table.into_iter().map(|a| a.unwrap()).collect();
+        let table = registry.table()?;
         let entries: Vec<String> = table.iter().map(PeerEntry::to_wire).collect();
         let reply = format!("TABLE {}\n", entries.join(" "));
-        for (peer, mut stream) in peers {
-            stream
-                .write_all(reply.as_bytes())
-                .map_err(|e| anyhow::anyhow!("sending table to rank {peer}: {e}"))?;
-            let _ = stream.shutdown(Shutdown::Write);
+        for (peer, stream) in streams.iter_mut().enumerate() {
+            if let Some(stream) = stream {
+                stream
+                    .write_all(reply.as_bytes())
+                    .map_err(|e| anyhow::anyhow!("sending table to rank {peer}: {e}"))?;
+                let _ = stream.shutdown(Shutdown::Write);
+            }
         }
         Ok(table)
     } else {
@@ -205,22 +352,17 @@ pub fn exchange_peer_table(
         stream
             .set_read_timeout(Some(remaining))
             .map_err(|e| anyhow::anyhow!("read timeout: {e}"))?;
+        let hello = Hello {
+            rank,
+            addr: my_data_addr.to_string(),
+            node: my_node_label.to_string(),
+            generation,
+        };
         stream
-            .write_all(format!("HELLO {rank} {my_data_addr} {my_node_label}\n").as_bytes())
+            .write_all(format!("{}\n", hello.to_wire()).as_bytes())
             .map_err(|e| anyhow::anyhow!("sending hello: {e}"))?;
         let line = read_line_raw(&mut stream, 8192)?;
-        let mut parts = line.split_whitespace();
-        anyhow::ensure!(
-            parts.next() == Some("TABLE"),
-            "rendezvous: expected TABLE, got '{line}'"
-        );
-        let table: Vec<PeerEntry> = parts.map(PeerEntry::from_wire).collect();
-        anyhow::ensure!(
-            table.len() == world,
-            "rendezvous: table has {} entries, expected {world}",
-            table.len()
-        );
-        Ok(table)
+        parse_table(&line, world)
     }
 }
 
@@ -289,6 +431,8 @@ pub fn connect_mesh(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{check, Gen};
+    use crate::util::rng::Xoshiro256;
 
     fn deadline() -> Instant {
         Instant::now() + Duration::from_secs(20)
@@ -313,6 +457,7 @@ mod tests {
                             &format!("127.0.0.1:{}", 9000 + rank),
                             // Ranks 0–1 on node 0, ranks 2–3 on node 1.
                             &format!("n{}", rank / 2),
+                            0,
                             hosted,
                             deadline(),
                         )
@@ -333,9 +478,59 @@ mod tests {
     }
 
     #[test]
+    fn rejoining_rank_supersedes_its_dead_predecessor() {
+        // Rank 2 registers, "dies", and a relaunched process re-HELLOs with
+        // a higher generation and a new data address; rank 0 must release a
+        // table pointing at the replacement.
+        let world = 3;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let rdv = listener.local_addr().unwrap().to_string();
+        let host = {
+            let rdv = rdv.clone();
+            std::thread::spawn(move || {
+                exchange_peer_table(
+                    0,
+                    world,
+                    &rdv,
+                    "127.0.0.1:9000",
+                    "n0",
+                    0,
+                    Some(listener),
+                    deadline(),
+                )
+                .unwrap()
+            })
+        };
+        // First incarnation of rank 2: HELLO then die before the table.
+        {
+            let mut s = dial_with_retry(&rdv, deadline()).unwrap();
+            s.write_all(b"HELLO 2 127.0.0.1:9002 n1 g0\n").unwrap();
+            // Dropped: the connection closes without reading the table.
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let rdv1 = rdv.clone();
+        let second = std::thread::spawn(move || {
+            exchange_peer_table(2, world, &rdv1, "127.0.0.1:9102", "n1", 1, None, deadline())
+                .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let rank1 = std::thread::spawn(move || {
+            exchange_peer_table(1, world, &rdv, "127.0.0.1:9001", "n0", 0, None, deadline())
+                .unwrap()
+        });
+        let t0 = host.join().unwrap();
+        let t2 = second.join().unwrap();
+        let t1 = rank1.join().unwrap();
+        assert_eq!(t0, t1);
+        assert_eq!(t0, t2);
+        assert_eq!(t0[2].addr, "127.0.0.1:9102", "table must point at the relaunched rank 2");
+    }
+
+    #[test]
     fn world_of_one_needs_no_network() {
-        let t = exchange_peer_table(0, 1, "127.0.0.1:1", "127.0.0.1:9000", "n0", None, deadline())
-            .unwrap();
+        let t =
+            exchange_peer_table(0, 1, "127.0.0.1:1", "127.0.0.1:9000", "n0", 0, None, deadline())
+                .unwrap();
         assert_eq!(
             t,
             vec![PeerEntry { addr: "127.0.0.1:9000".to_string(), node: "n0".to_string() }]
@@ -346,8 +541,17 @@ mod tests {
     fn bad_node_labels_rejected_and_unlabelled_entries_tolerated() {
         for bad in ["", "two words", "a/b"] {
             assert!(
-                exchange_peer_table(0, 1, "127.0.0.1:1", "127.0.0.1:9000", bad, None, deadline())
-                    .is_err(),
+                exchange_peer_table(
+                    0,
+                    1,
+                    "127.0.0.1:1",
+                    "127.0.0.1:9000",
+                    bad,
+                    0,
+                    None,
+                    deadline()
+                )
+                .is_err(),
                 "label '{bad}' should be rejected"
             );
         }
@@ -356,6 +560,241 @@ mod tests {
         assert_eq!(e.node, "-");
         let e = PeerEntry::from_wire("127.0.0.1:9000/n3");
         assert_eq!(e.node, "n3");
+    }
+
+    #[test]
+    fn hello_parser_accepts_legacy_and_tagged_lines() {
+        let h = parse_hello("HELLO 2 127.0.0.1:9002 n1 g7", 4).unwrap();
+        assert_eq!(
+            h,
+            Hello {
+                rank: 2,
+                addr: "127.0.0.1:9002".to_string(),
+                node: "n1".to_string(),
+                generation: 7,
+            }
+        );
+        // Legacy forms: no generation, and no node label at all.
+        assert_eq!(parse_hello("HELLO 1 a:1 n0", 2).unwrap().generation, 0);
+        let h = parse_hello("HELLO 1 a:1", 2).unwrap();
+        assert_eq!((h.node.as_str(), h.generation), ("-", 0));
+
+        for bad in [
+            "HELO 1 a:1",            // wrong verb
+            "HELLO",                 // truncated
+            "HELLO x a:1",           // junk rank
+            "HELLO 0 a:1",           // rank 0 never HELLOs
+            "HELLO 4 a:1",           // out of range for world 4
+            "HELLO 1 a/b n0",        // '/' would corrupt the TABLE line
+            "HELLO 1 a:1 n0 7",       // generation without the g prefix
+            "HELLO 1 a:1 n0 gx",      // junk generation
+            "HELLO 1 a:1 n0 g1 tail", // trailing tokens
+        ] {
+            assert!(parse_hello(bad, 4).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn registry_arbitrates_generations() {
+        let mk = |gen: u64, addr: &str| Hello {
+            rank: 1,
+            addr: addr.to_string(),
+            node: "n0".to_string(),
+            generation: gen,
+        };
+        let r0 = PeerEntry { addr: "a0".to_string(), node: "n0".to_string() };
+        let mut reg = Registry::new(3, r0);
+        assert!(!reg.is_complete());
+        assert_eq!(reg.register(&mk(1, "a1")).unwrap(), HelloOutcome::Registered);
+        // Newer generation replaces; the table tracks the replacement.
+        assert_eq!(reg.register(&mk(2, "a1-new")).unwrap(), HelloOutcome::Replaced);
+        assert_eq!(reg.generation(1), Some(2));
+        // Stale and duplicate generations.
+        assert_eq!(reg.register(&mk(1, "a1-old")).unwrap(), HelloOutcome::Stale);
+        assert!(reg.register(&mk(2, "a1-dup")).is_err(), "same-generation duplicate");
+        // Out-of-range ranks never panic the registry.
+        assert!(reg.register(&Hello { rank: 0, ..mk(0, "x") }).is_err());
+        assert!(reg.register(&Hello { rank: 3, ..mk(0, "x") }).is_err());
+        // Table completes once rank 2 shows up, pointing at the newest gen.
+        assert!(reg.table().is_err());
+        assert_eq!(
+            reg.register(&Hello { rank: 2, ..mk(0, "a2") }).unwrap(),
+            HelloOutcome::Registered
+        );
+        assert!(reg.is_complete());
+        assert_eq!(reg.table().unwrap()[1].addr, "a1-new");
+    }
+
+    /// Generates syntactically valid `Hello` values (world is fixed by the
+    /// caller); shrinks towards rank 1 / generation 0 / short strings.
+    struct HelloGen {
+        world: usize,
+    }
+
+    impl Gen for HelloGen {
+        type Value = Hello;
+        fn generate(&self, rng: &mut Xoshiro256) -> Hello {
+            let token = |rng: &mut Xoshiro256, len: usize| -> String {
+                const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789.:-";
+                (0..1 + len)
+                    .map(|_| ALPHA[rng.gen_range(ALPHA.len())] as char)
+                    .collect()
+            };
+            Hello {
+                rank: 1 + rng.gen_range(self.world - 1),
+                addr: token(rng, rng.gen_range(20)),
+                node: token(rng, rng.gen_range(8)),
+                generation: rng.next_u64() % 1000,
+            }
+        }
+        fn shrink(&self, v: &Hello) -> Vec<Hello> {
+            let mut out = Vec::new();
+            if v.rank > 1 {
+                out.push(Hello { rank: 1, ..v.clone() });
+            }
+            if v.generation > 0 {
+                out.push(Hello { generation: 0, ..v.clone() });
+            }
+            if v.addr.len() > 1 {
+                out.push(Hello { addr: v.addr[..1].to_string(), ..v.clone() });
+            }
+            if v.node.len() > 1 {
+                out.push(Hello { node: v.node[..1].to_string(), ..v.clone() });
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn prop_hello_wire_roundtrip() {
+        let world = 64;
+        check("hello wire roundtrip", 300, HelloGen { world }, |h| {
+            // Addresses with '/' can't round-trip through the TABLE line;
+            // the parser rejects them, which is also a valid outcome.
+            match parse_hello(&h.to_wire(), world) {
+                Ok(back) if back == *h => Ok(()),
+                Ok(back) => Err(format!("parsed {back:?} from {h:?}")),
+                Err(_) if h.addr.contains('/') || h.node.contains('/') => Ok(()),
+                Err(e) => Err(format!("rejected valid line: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_hello_parser_survives_truncation_and_junk() {
+        // Truncating a valid line at any byte, or injecting junk bytes,
+        // must yield Ok-with-in-range-rank or Err — never a panic and never
+        // an out-of-range rank.
+        let world = 8;
+        check(
+            "hello truncation/junk",
+            400,
+            crate::util::proptest::gens::pair(
+                HelloGen { world },
+                crate::util::proptest::gens::usize_in(0..64),
+            ),
+            |(h, cut)| {
+                let wire = h.to_wire();
+                let cut = (*cut).min(wire.len());
+                let mutations = [
+                    wire[..cut].to_string(),                     // truncated
+                    format!("{} {}", wire, &wire[..cut]),        // duplicated tail
+                    wire.replace(' ', "  "),                     // extra separators
+                    format!("{}{}", &wire[..cut], "\u{7f}junk"), // junk bytes
+                ];
+                for m in mutations {
+                    if let Ok(h) = parse_hello(&m, world) {
+                        if h.rank == 0 || h.rank >= world {
+                            return Err(format!("out-of-range rank {} from '{m}'", h.rank));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_table_roundtrip_and_truncation() {
+        let world = 5;
+        check(
+            "table roundtrip/truncation",
+            300,
+            crate::util::proptest::gens::pair(
+                HelloGen { world },
+                crate::util::proptest::gens::usize_in(0..200),
+            ),
+            |(h, cut)| {
+                // Build a full table out of variations of the generated
+                // entry, serialize like rank 0 does, and reparse.
+                let table: Vec<PeerEntry> = (0..world)
+                    .map(|r| PeerEntry {
+                        addr: format!("{}:{r}", h.addr),
+                        node: h.node.clone(),
+                    })
+                    .collect();
+                let entries: Vec<String> = table.iter().map(PeerEntry::to_wire).collect();
+                let line = format!("TABLE {}", entries.join(" "));
+                if h.addr.contains('/') || h.node.contains('/') {
+                    return Ok(()); // '/' in tokens corrupts the framing
+                }
+                match parse_table(&line, world) {
+                    Ok(back) if back == table => {}
+                    other => return Err(format!("roundtrip failed: {other:?}")),
+                }
+                // A truncated line must never parse as a full table, and a
+                // wrong world size must be rejected.
+                let cut = (*cut).min(line.len().saturating_sub(1));
+                if let Ok(t) = parse_table(&line[..cut], world) {
+                    if t.len() != world {
+                        return Err("short parse returned wrong-size table".to_string());
+                    }
+                }
+                if parse_table(&line, world + 1).is_ok() {
+                    return Err("accepted table with wrong world size".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_registry_never_regresses_generations() {
+        // Any sequence of registrations leaves each rank at the maximum
+        // accepted generation, without panicking.
+        let world = 4;
+        check(
+            "registry generation monotonicity",
+            300,
+            crate::util::proptest::gens::usize_in(1..20),
+            |&n| {
+                let mut rng = Xoshiro256::seed_from_u64(n as u64 * 7919);
+                let r0 = PeerEntry { addr: "a0".to_string(), node: "-".to_string() };
+                let mut reg = Registry::new(world, r0);
+                let mut best: Vec<Option<u64>> = vec![None; world];
+                for i in 0..n {
+                    let h = Hello {
+                        rank: 1 + rng.gen_range(world - 1),
+                        addr: format!("addr{i}"),
+                        node: "-".to_string(),
+                        generation: rng.next_u64() % 4,
+                    };
+                    if let Ok(out) = reg.register(&h) {
+                        if out != HelloOutcome::Stale {
+                            best[h.rank] = Some(h.generation);
+                        }
+                    }
+                    let got = reg.generation(h.rank);
+                    if got < best[h.rank] {
+                        return Err(format!(
+                            "rank {} regressed: registry {got:?} < accepted {:?}",
+                            h.rank, best[h.rank]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

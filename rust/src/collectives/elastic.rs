@@ -1,0 +1,253 @@
+//! Degraded-world continuation: after a rank dies, the survivors remap
+//! themselves onto a dense `[0, S)` world **over their existing
+//! connections** — no re-bootstrap, no socket churn — and keep training at
+//! world−1 while the scheduler re-runs its search for the shrunk world.
+//!
+//! [`RemapTransport`] is the whole trick: it wraps the surviving backend,
+//! translates rank indices on every send/receive, and silently drops any
+//! frame from an excluded rank (stale data frames of the failed step, the
+//! dead rank's own teardown control frames) so the new world never
+//! observes the old one. `Comm::shrink_to_survivors` wires it in, resets
+//! the topology to flat over the survivors, and jumps the collective tag
+//! space to a fresh recovery stride — survivors may have consumed
+//! *different* tag counts in the step that failed (a rank whose sends all
+//! completed can be a group ahead of one that failed early), so continuing
+//! from a local counter would desynchronize the mesh.
+//!
+//! Re-expansion back to the full world goes through the checkpointed
+//! restart path (`--resume-step` + the rendezvous generation tag in
+//! `bootstrap`), not through live re-splicing of a grown mesh — restoring
+//! a bigger world's sockets mid-run is future work recorded in ROADMAP.
+
+use super::transport::{AllocStats, Error, Msg, Transport};
+
+/// Tag-space stride per recovery generation: after the N-th shrink the
+/// communicator's tags restart at `N * RECOVERY_TAG_STRIDE`, far above
+/// anything the failed generation consumed (a run burns a handful of tags
+/// per collective) and far below the reserved control tags near
+/// `u64::MAX`.
+pub const RECOVERY_TAG_STRIDE: u64 = 1 << 40;
+
+/// A [`Transport`] view presenting a surviving subset of ranks as a dense
+/// world `[0, S)`, over the wrapped backend's existing connections.
+pub struct RemapTransport {
+    inner: Box<dyn Transport>,
+    /// new rank -> old rank (the sorted survivor list).
+    old_of_new: Vec<usize>,
+    /// old rank -> new rank (`None`: excluded from the new world).
+    new_of_old: Vec<Option<usize>>,
+    /// This rank's position in the new world.
+    rank: usize,
+}
+
+impl RemapTransport {
+    /// Wrap `inner` so only `survivors` (sorted, unique, old-rank indices
+    /// including `inner.rank()`) exist, renumbered densely from 0.
+    /// Shrinking twice composes: a `RemapTransport` can wrap another.
+    pub fn new(inner: Box<dyn Transport>, survivors: &[usize]) -> anyhow::Result<RemapTransport> {
+        let old_world = inner.world();
+        anyhow::ensure!(!survivors.is_empty(), "survivor set must be non-empty");
+        anyhow::ensure!(
+            survivors.windows(2).all(|w| w[0] < w[1]),
+            "survivors must be sorted and unique"
+        );
+        anyhow::ensure!(
+            *survivors.last().unwrap() < old_world,
+            "survivor rank {} out of range for world {old_world}",
+            survivors.last().unwrap()
+        );
+        let mut new_of_old = vec![None; old_world];
+        for (new, &old) in survivors.iter().enumerate() {
+            new_of_old[old] = Some(new);
+        }
+        let rank = new_of_old[inner.rank()]
+            .ok_or_else(|| anyhow::anyhow!("rank {} is not in the survivor set", inner.rank()))?;
+        Ok(RemapTransport {
+            inner,
+            old_of_new: survivors.to_vec(),
+            new_of_old,
+            rank,
+        })
+    }
+
+    /// The old-rank identities of the new world, indexed by new rank.
+    pub fn survivors(&self) -> &[usize] {
+        &self.old_of_new
+    }
+
+    /// Translate an error's rank/peer fields from old to new numbering. A
+    /// peer outside the new world keeps no rank index (the context string
+    /// still names it) — it cannot be retried against anyway.
+    fn remap_error(&self, mut e: Error) -> Error {
+        e.rank = e.rank.and_then(|r| self.new_of_old.get(r).copied().flatten());
+        e.peer = e.peer.and_then(|p| self.new_of_old.get(p).copied().flatten());
+        e
+    }
+}
+
+impl Transport for RemapTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.old_of_new.len()
+    }
+
+    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), Error> {
+        let old = self.old_of_new[to];
+        self.inner.send(old, tag, bytes).map_err(|e| self.remap_error(e))
+    }
+
+    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), Error> {
+        let old = self.old_of_new[to];
+        self.inner.send_ref(old, tag, bytes).map_err(|e| self.remap_error(e))
+    }
+
+    fn recycle(&mut self, buf: Vec<u8>) {
+        self.inner.recycle(buf);
+    }
+
+    fn alloc_stats(&self) -> AllocStats {
+        self.inner.alloc_stats()
+    }
+
+    fn next_msg(&mut self) -> Result<Msg, Error> {
+        loop {
+            let (src, tag, bytes) = self.inner.next_msg().map_err(|e| self.remap_error(e))?;
+            // Frames from excluded ranks — stale data from the failed
+            // step, or the dead rank's teardown control frames — must
+            // never surface in the new world.
+            if let Some(new_src) = self.new_of_old.get(src).copied().flatten() {
+                return Ok((new_src, tag, bytes));
+            }
+        }
+    }
+
+    fn try_next_msg(&mut self) -> Result<Option<Msg>, Error> {
+        loop {
+            match self.inner.try_next_msg().map_err(|e| self.remap_error(e))? {
+                None => return Ok(None),
+                Some((src, tag, bytes)) => {
+                    if let Some(new_src) = self.new_of_old.get(src).copied().flatten() {
+                        return Ok(Some((new_src, tag, bytes)));
+                    }
+                }
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+
+    fn msgs_sent(&self) -> u64 {
+        self.inner.msgs_sent()
+    }
+}
+
+/// Placeholder backend used only while `Comm::shrink_to_survivors` swaps
+/// the real transport out of its endpoint; every operation fails typed.
+pub(crate) struct NullTransport;
+
+impl Transport for NullTransport {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn world(&self) -> usize {
+        1
+    }
+
+    fn send(&mut self, _to: usize, _tag: u64, _bytes: Vec<u8>) -> Result<(), Error> {
+        Err(Error::disconnected("null transport (mid-shrink)"))
+    }
+
+    fn next_msg(&mut self) -> Result<Msg, Error> {
+        Err(Error::disconnected("null transport (mid-shrink)"))
+    }
+
+    fn try_next_msg(&mut self) -> Result<Option<Msg>, Error> {
+        Err(Error::disconnected("null transport (mid-shrink)"))
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        0
+    }
+
+    fn msgs_sent(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::transport::mesh_transports;
+    use super::*;
+
+    #[test]
+    fn remap_renumbers_and_translates() {
+        let ts = mesh_transports(4);
+        let mut remapped: Vec<RemapTransport> = Vec::new();
+        for (old, t) in ts.into_iter().enumerate() {
+            if old == 2 {
+                // Rank 2 is "dead": drop its transport entirely.
+                continue;
+            }
+            let r = RemapTransport::new(Box::new(t), &[0, 1, 3]).unwrap();
+            assert_eq!(r.world(), 3);
+            remapped.push(r);
+        }
+        // Old ranks 0,1,3 become new ranks 0,1,2.
+        assert_eq!(remapped[0].rank(), 0);
+        assert_eq!(remapped[1].rank(), 1);
+        assert_eq!(remapped[2].rank(), 2);
+        assert_eq!(remapped[2].survivors(), &[0, 1, 3]);
+    }
+
+    #[test]
+    fn frames_from_excluded_ranks_are_dropped() {
+        let mut ts = mesh_transports(3).into_iter();
+        let t0 = ts.next().unwrap();
+        let mut t1 = ts.next().unwrap();
+        let mut t2 = ts.next().unwrap();
+        // Rank 2 (to be excluded) sends a stale frame to 0, then rank 1
+        // sends a live one.
+        t2.send(0, 7, vec![99]).unwrap();
+        t1.send(0, 8, vec![42]).unwrap();
+        drop(t2);
+        drop(t1); // after this, CTRL teardown frames also sit in 0's inbox
+        let mut r0 = RemapTransport::new(Box::new(t0), &[0, 1]).unwrap();
+        // The stale frame from excluded rank 2 is skipped; rank 1's frame
+        // arrives with its (unchanged) dense index.
+        let (src, tag, bytes) = r0.next_msg().unwrap();
+        assert_eq!((src, tag), (1, 8));
+        assert_eq!(bytes, vec![42]);
+    }
+
+    #[test]
+    fn double_shrink_composes() {
+        let ts = mesh_transports(4);
+        let t1 = ts.into_iter().nth(1).unwrap();
+        // First shrink: world 4 -> survivors [0,1,3]; old rank 1 -> new 1.
+        let r = RemapTransport::new(Box::new(t1), &[0, 1, 3]).unwrap();
+        // Second shrink: new-world survivors [1,2] (old ranks 1 and 3).
+        let r2 = RemapTransport::new(Box::new(r), &[1, 2]).unwrap();
+        assert_eq!(r2.world(), 2);
+        assert_eq!(r2.rank(), 0);
+    }
+
+    #[test]
+    fn bad_survivor_sets_are_rejected() {
+        for survivors in [vec![], vec![1, 0], vec![0, 0], vec![0, 9]] {
+            let t = mesh_transports(3).remove(0);
+            assert!(
+                RemapTransport::new(Box::new(t), &survivors).is_err(),
+                "{survivors:?} must be rejected"
+            );
+        }
+        // Excluding the wrapped rank itself is also an error.
+        let t = mesh_transports(3).remove(1);
+        assert!(RemapTransport::new(Box::new(t), &[0, 2]).is_err());
+    }
+}

@@ -1,0 +1,485 @@
+//! On-wire fault injection: wrap any [`Transport`] in a [`FaultTransport`]
+//! shim that delays, rate-limits, or cuts individual links — so tests and
+//! benches can watch the online scheduler route around a straggler, and CI
+//! can SIGKILL-proof the elastic recovery path against realistic wire
+//! behaviour instead of only clean FINs.
+//!
+//! Faults are declared as a [`FaultPlan`] spec string (the
+//! `MERGECOMP_FAULTS` environment variable, or `RunPolicy.faults`):
+//!
+//! ```text
+//! rank=2,delay=2ms,jitter=1ms,rate=65536/100ms,drop-after=40,peers=0|1
+//! ```
+//!
+//! - `rank=K` — the plan applies only to rank K (absent: every rank);
+//! - `delay=D` — fixed extra latency per send (`ns`/`us`/`ms`/`s` suffix);
+//! - `jitter=J` — additional uniform random latency in `[0, J)` per send;
+//! - `rate=BYTES[/WINDOW]` — token-bucket rate limit: `BYTES` of bucket
+//!   capacity refilled every `WINDOW` (default window 1s), so sends block
+//!   once the bucket drains — the classic burst-then-throttle shape;
+//! - `drop-after=N` — after N successful sends to a peer the link is cut:
+//!   further sends fail as a recoverable peer-gone error and inbound
+//!   frames from that peer are replaced by a single in-band peer-down
+//!   control frame (a partition, as the survivors observe it);
+//! - `peers=A|B|…` — restrict every fault above to the named peer links.
+//!
+//! The shim sits *below* the [`Endpoint`] stash, exactly where a slow NIC
+//! or an overloaded switch would: collectives observe longer exchange
+//! times (the scheduler's cost models fit larger α/β for the straggled
+//! level) or typed link failures, never corrupted frames.
+
+use super::transport::{Error, Msg, Transport, CTRL_PEER_DOWN_TAG};
+use crate::util::rng::Xoshiro256;
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+/// Token bucket: `capacity` tokens (bytes), refilled continuously at
+/// `capacity / window` per second. [`TokenBucket::consume`] blocks the
+/// caller until the requested tokens are available — modelling a
+/// rate-limited link by sleeping the sender, the way a full NIC queue
+/// would apply backpressure.
+#[derive(Debug)]
+pub struct TokenBucket {
+    capacity: f64,
+    tokens: f64,
+    refill_per_sec: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// `size` bytes of burst capacity, refilled every `window`.
+    pub fn new(size: u64, window: Duration) -> TokenBucket {
+        let capacity = (size.max(1)) as f64;
+        let secs = window.as_secs_f64().max(1e-9);
+        TokenBucket {
+            capacity,
+            tokens: capacity,
+            refill_per_sec: capacity / secs,
+            last: Instant::now(),
+        }
+    }
+
+    fn refill(&mut self) {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.refill_per_sec).min(self.capacity);
+    }
+
+    /// Block until `n` tokens are available, then take them. Requests
+    /// larger than the bucket are clamped to its capacity (one full-bucket
+    /// wait), so an oversized frame is slowed, never deadlocked.
+    pub fn consume(&mut self, n: u64) {
+        let need = (n as f64).min(self.capacity);
+        loop {
+            self.refill();
+            if self.tokens >= need {
+                self.tokens -= need;
+                return;
+            }
+            let deficit = need - self.tokens;
+            let wait = deficit / self.refill_per_sec;
+            std::thread::sleep(Duration::from_secs_f64(wait.clamp(1e-6, 0.05)));
+        }
+    }
+}
+
+/// The faults applied to one rank's links (see the module doc for the
+/// spec grammar that builds it).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Fixed extra latency per send.
+    pub delay: Duration,
+    /// Additional uniform random latency in `[0, jitter)` per send.
+    pub jitter: Duration,
+    /// Token-bucket rate limit: (bucket size in bytes, refill window).
+    pub rate: Option<(u64, Duration)>,
+    /// Cut each faulted link after this many successful sends to it.
+    pub drop_after: Option<u64>,
+    /// Restrict the faults to these peer links (`None`: all peers).
+    pub peers: Option<Vec<usize>>,
+}
+
+impl FaultSpec {
+    /// Whether the spec perturbs anything at all.
+    pub fn is_noop(&self) -> bool {
+        self.delay.is_zero()
+            && self.jitter.is_zero()
+            && self.rate.is_none()
+            && self.drop_after.is_none()
+    }
+
+    fn targets(&self, peer: usize) -> bool {
+        match &self.peers {
+            Some(ps) => ps.contains(&peer),
+            None => true,
+        }
+    }
+}
+
+/// A parsed fault plan: which rank it applies to, and what it does there.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Rank the plan applies to (`None`: every rank).
+    pub rank: Option<usize>,
+    pub spec: FaultSpec,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see the module doc for the grammar). An empty
+    /// string is a no-op plan.
+    pub fn parse(s: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for item in s.split(',').map(str::trim).filter(|i| !i.is_empty()) {
+            let (key, val) = item
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec item '{item}' is not key=value"))?;
+            match key.trim() {
+                "rank" => plan.rank = Some(val.trim().parse()?),
+                "delay" => plan.spec.delay = parse_duration(val)?,
+                "jitter" => plan.spec.jitter = parse_duration(val)?,
+                "rate" => {
+                    let (bytes, window) = match val.split_once('/') {
+                        Some((b, w)) => (b.trim().parse()?, parse_duration(w)?),
+                        None => (val.trim().parse()?, Duration::from_secs(1)),
+                    };
+                    anyhow::ensure!(bytes > 0, "rate needs a positive byte budget");
+                    plan.spec.rate = Some((bytes, window));
+                }
+                "drop-after" | "drop_after" => plan.spec.drop_after = Some(val.trim().parse()?),
+                "peers" => {
+                    let peers: Vec<usize> = val
+                        .split('|')
+                        .map(|p| p.trim().parse())
+                        .collect::<Result<_, _>>()?;
+                    anyhow::ensure!(!peers.is_empty(), "peers= needs at least one rank");
+                    plan.spec.peers = Some(peers);
+                }
+                other => anyhow::bail!(
+                    "unknown fault spec key '{other}' \
+                     (rank|delay|jitter|rate|drop-after|peers)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Whether this plan's faults run on `rank`.
+    pub fn applies_to(&self, rank: usize) -> bool {
+        !self.spec.is_noop() && self.rank.map_or(true, |r| r == rank)
+    }
+}
+
+/// Parse `250ns` / `10us` / `2ms` / `1s` (and bare seconds as `1.5`).
+fn parse_duration(s: &str) -> anyhow::Result<Duration> {
+    let s = s.trim();
+    let (num, scale) = if let Some(v) = s.strip_suffix("ns") {
+        (v, 1e-9)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1e-6)
+    } else if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        (s, 1.0)
+    };
+    let val: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad duration '{s}' (want e.g. 2ms, 500us, 1s)"))?;
+    anyhow::ensure!(val >= 0.0 && val.is_finite(), "duration '{s}' must be >= 0");
+    Ok(Duration::from_secs_f64(val * scale))
+}
+
+/// [`Transport`] shim injecting the faults of a [`FaultSpec`] on the send
+/// and receive paths of the wrapped backend. Deterministic given the seed
+/// (jitter draws from a seeded [`Xoshiro256`]); transparent when the spec
+/// targets none of the touched links.
+pub struct FaultTransport {
+    inner: Box<dyn Transport>,
+    spec: FaultSpec,
+    bucket: Option<TokenBucket>,
+    rng: Xoshiro256,
+    /// Successful sends per peer (drop-after accounting).
+    sent_to: Vec<u64>,
+    /// Links this shim has cut (drop-after exhausted).
+    cut: HashSet<usize>,
+    /// Cut links already surfaced to the receive path as a peer-down
+    /// control frame.
+    announced: HashSet<usize>,
+}
+
+impl FaultTransport {
+    pub fn new(inner: Box<dyn Transport>, spec: FaultSpec, seed: u64) -> FaultTransport {
+        let world = inner.world();
+        let bucket = spec.rate.map(|(bytes, window)| TokenBucket::new(bytes, window));
+        FaultTransport {
+            inner,
+            spec,
+            bucket,
+            rng: Xoshiro256::seed_from_u64(seed ^ 0xFA17_FA17),
+            sent_to: vec![0; world],
+            cut: HashSet::new(),
+            announced: HashSet::new(),
+        }
+    }
+
+    /// Links this shim has cut so far (test observability).
+    pub fn cut_links(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.cut.iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn cut_error(&self, peer: usize, tag: u64) -> Error {
+        Error::peer_gone(
+            self.inner.rank(),
+            peer,
+            Some(tag),
+            format!(
+                "fault injection: link to peer {peer} cut (drop-after={})",
+                self.spec.drop_after.unwrap_or(0)
+            ),
+        )
+    }
+
+    /// Apply pre-send faults for a payload of `len` bytes to `to`;
+    /// `Err` means the link is (now) cut.
+    fn before_send(&mut self, to: usize, tag: u64, len: usize) -> Result<(), Error> {
+        if !self.spec.targets(to) {
+            return Ok(());
+        }
+        if self.cut.contains(&to) {
+            return Err(self.cut_error(to, tag));
+        }
+        if let Some(limit) = self.spec.drop_after {
+            if self.sent_to[to] >= limit {
+                self.cut.insert(to);
+                return Err(self.cut_error(to, tag));
+            }
+        }
+        let mut wait = self.spec.delay;
+        if !self.spec.jitter.is_zero() {
+            let j = self.spec.jitter.as_nanos() as u64;
+            wait += Duration::from_nanos(self.rng.next_u64() % j.max(1));
+        }
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        if let Some(bucket) = &mut self.bucket {
+            bucket.consume(len as u64);
+        }
+        self.sent_to[to] += 1;
+        Ok(())
+    }
+
+    /// Filter one inbound message: data frames from a cut peer are
+    /// swallowed after a single synthesized peer-down control frame, so a
+    /// receiver blocked on a partitioned link fails typed instead of
+    /// consuming stale traffic.
+    fn filter(&mut self, msg: Msg) -> Option<Msg> {
+        let (src, tag, bytes) = msg;
+        if !self.cut.contains(&src) {
+            return Some((src, tag, bytes));
+        }
+        if self.announced.insert(src) {
+            let note = format!("fault injection: partitioned from peer {src}");
+            return Some((src, CTRL_PEER_DOWN_TAG, note.into_bytes()));
+        }
+        None
+    }
+}
+
+impl Transport for FaultTransport {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), Error> {
+        self.before_send(to, tag, bytes.len())?;
+        self.inner.send(to, tag, bytes)
+    }
+
+    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), Error> {
+        self.before_send(to, tag, bytes.len())?;
+        self.inner.send_ref(to, tag, bytes)
+    }
+
+    fn recycle(&mut self, buf: Vec<u8>) {
+        self.inner.recycle(buf);
+    }
+
+    fn alloc_stats(&self) -> super::transport::AllocStats {
+        self.inner.alloc_stats()
+    }
+
+    fn next_msg(&mut self) -> Result<Msg, Error> {
+        loop {
+            let msg = self.inner.next_msg()?;
+            if let Some(m) = self.filter(msg) {
+                return Ok(m);
+            }
+        }
+    }
+
+    fn try_next_msg(&mut self) -> Result<Option<Msg>, Error> {
+        while let Some(msg) = self.inner.try_next_msg()? {
+            if let Some(m) = self.filter(msg) {
+                return Ok(Some(m));
+            }
+        }
+        Ok(None)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+
+    fn msgs_sent(&self) -> u64 {
+        self.inner.msgs_sent()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::transport::{mesh_transports, Endpoint, ErrorKind};
+    use super::*;
+
+    #[test]
+    fn plan_parses_the_full_grammar() {
+        let spec = "rank=2, delay=2ms, jitter=1ms, rate=65536/100ms, drop-after=40, peers=0|1";
+        let p = FaultPlan::parse(spec).unwrap();
+        assert_eq!(p.rank, Some(2));
+        assert_eq!(p.spec.delay, Duration::from_millis(2));
+        assert_eq!(p.spec.jitter, Duration::from_millis(1));
+        assert_eq!(p.spec.rate, Some((65536, Duration::from_millis(100))));
+        assert_eq!(p.spec.drop_after, Some(40));
+        assert_eq!(p.spec.peers, Some(vec![0, 1]));
+        assert!(p.applies_to(2));
+        assert!(!p.applies_to(0));
+    }
+
+    #[test]
+    fn plan_defaults_and_rejects_junk() {
+        let p = FaultPlan::parse("").unwrap();
+        assert_eq!(p, FaultPlan::default());
+        assert!(!p.applies_to(0), "a no-op plan applies nowhere");
+        let all = FaultPlan::parse("delay=1ms").unwrap();
+        assert!(all.applies_to(0) && all.applies_to(7));
+        assert!(FaultPlan::parse("delay").is_err());
+        assert!(FaultPlan::parse("warp=9").is_err());
+        assert!(FaultPlan::parse("delay=fast").is_err());
+        assert!(FaultPlan::parse("rate=0").is_err());
+        assert!(FaultPlan::parse("peers=").is_err());
+    }
+
+    #[test]
+    fn durations_parse_all_suffixes() {
+        assert_eq!(parse_duration("250ns").unwrap(), Duration::from_nanos(250));
+        assert_eq!(parse_duration("10us").unwrap(), Duration::from_micros(10));
+        assert_eq!(parse_duration("2ms").unwrap(), Duration::from_millis(2));
+        assert_eq!(parse_duration("1s").unwrap(), Duration::from_secs(1));
+        assert_eq!(parse_duration("0.5").unwrap(), Duration::from_millis(500));
+        assert!(parse_duration("-1ms").is_err());
+    }
+
+    #[test]
+    fn token_bucket_throttles_to_the_configured_rate() {
+        // 1 KiB bucket refilled every 20ms = 50 KiB/s. Pushing 3 KiB must
+        // take at least the ~2 refills the burst does not cover.
+        let mut bucket = TokenBucket::new(1024, Duration::from_millis(20));
+        let start = Instant::now();
+        for _ in 0..3 {
+            bucket.consume(1024);
+        }
+        let elapsed = start.elapsed();
+        assert!(
+            elapsed >= Duration::from_millis(30),
+            "3 KiB through a 50 KiB/s bucket took only {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn oversized_request_is_clamped_not_deadlocked() {
+        let mut bucket = TokenBucket::new(64, Duration::from_millis(1));
+        // 10x the capacity: must complete (clamped to one full bucket).
+        bucket.consume(640);
+    }
+
+    #[test]
+    fn delay_fault_slows_the_link() {
+        let mut ts = mesh_transports(2).into_iter();
+        let spec = FaultSpec {
+            delay: Duration::from_millis(5),
+            ..FaultSpec::default()
+        };
+        let mut ep0 = Endpoint::new(Box::new(FaultTransport::new(
+            Box::new(ts.next().unwrap()),
+            spec,
+            0,
+        )));
+        let mut ep1 = Endpoint::new(Box::new(ts.next().unwrap()));
+        let start = Instant::now();
+        ep0.send(1, 0, vec![1, 2, 3]).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(5));
+        assert_eq!(ep1.recv(0, 0).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn drop_after_cuts_the_link_both_ways() {
+        let mut ts = mesh_transports(2).into_iter();
+        let spec = FaultSpec {
+            drop_after: Some(2),
+            ..FaultSpec::default()
+        };
+        let mut ep0 = Endpoint::new(Box::new(FaultTransport::new(
+            Box::new(ts.next().unwrap()),
+            spec,
+            0,
+        )));
+        let mut ep1 = Endpoint::new(Box::new(ts.next().unwrap()));
+        ep0.send(1, 0, vec![1]).unwrap();
+        ep0.send(1, 1, vec![2]).unwrap();
+        let err = ep0.send(1, 2, vec![3]).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::PeerGone);
+        assert!(err.is_recoverable());
+        assert!(err.to_string().contains("drop-after"), "{err}");
+        // The two pre-cut frames still arrive.
+        assert_eq!(ep1.recv(0, 0).unwrap(), vec![1]);
+        assert_eq!(ep1.recv(0, 1).unwrap(), vec![2]);
+        // Receive side of the cut link: inbound traffic from the peer is
+        // replaced by a peer-down control frame -> typed error, no hang.
+        ep1.send(0, 7, vec![9]).unwrap();
+        let err = ep0.recv(1, 7).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::PeerGone);
+        assert!(err.to_string().contains("partitioned"), "{err}");
+    }
+
+    #[test]
+    fn untargeted_peers_are_untouched() {
+        let mut ts = mesh_transports(3).into_iter();
+        let spec = FaultSpec {
+            drop_after: Some(0),
+            peers: Some(vec![2]),
+            ..FaultSpec::default()
+        };
+        let mut ep0 = Endpoint::new(Box::new(FaultTransport::new(
+            Box::new(ts.next().unwrap()),
+            spec,
+            0,
+        )));
+        let mut ep1 = Endpoint::new(Box::new(ts.next().unwrap()));
+        let _ep2 = Endpoint::new(Box::new(ts.next().unwrap()));
+        // Link to rank 1 is not in peers= — it works.
+        ep0.send(1, 0, vec![5]).unwrap();
+        assert_eq!(ep1.recv(0, 0).unwrap(), vec![5]);
+        // Link to rank 2 is cut from the first send.
+        let err = ep0.send(2, 0, vec![5]).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::PeerGone);
+    }
+}

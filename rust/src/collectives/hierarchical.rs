@@ -42,7 +42,7 @@
 
 use super::allgather::subset_ring_allgather;
 use super::ring::subset_ring_allreduce_bytes;
-use super::transport::TransportError;
+use super::transport::Error;
 use super::Comm;
 use crate::compression::Codec;
 use crate::util::stats::Stopwatch;
@@ -75,7 +75,7 @@ pub fn hier_allreduce_wire(
     comm: &mut Comm,
     data: &mut [u8],
     codec: &dyn Codec,
-) -> Result<(), TransportError> {
+) -> Result<(), Error> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 || data.is_empty() {
@@ -110,9 +110,7 @@ pub fn hier_allreduce_wire(
                 let incoming = comm.ep.recv(p, stage_base + idx as u64)?;
                 codec
                     .reduce_wire(data, &incoming)
-                    .map_err(|e| TransportError::Codec {
-                        detail: e.to_string(),
-                    })?;
+                    .map_err(|e| Error::codec(e.to_string()))?;
                 comm.ep.recycle(incoming);
             }
         } else {
@@ -135,9 +133,7 @@ pub fn hier_allreduce_wire(
         subset_ring_allreduce_bytes(comm, ring, ring_base, data, align, &|a, b| {
             codec
                 .reduce_wire(a, b)
-                .map_err(|e| TransportError::Codec {
-                    detail: e.to_string(),
-                })
+                .map_err(|e| Error::codec(e.to_string()))
         })?;
         inter_secs = sw.elapsed().as_secs_f64();
     }
@@ -176,7 +172,7 @@ pub fn hier_allreduce_wire(
 /// top leaders ring-exchange **subtree frames**, and the full rank-indexed
 /// table fans back down. The result is exactly what the flat ring
 /// allgather returns, on every rank.
-pub fn hier_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
+pub fn hier_allgather(comm: &mut Comm, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, Error> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {
@@ -294,9 +290,9 @@ fn decode_frame_into(
     ranks: &[usize],
     frame: &[u8],
     out: &mut [Vec<u8>],
-) -> Result<(), TransportError> {
-    let corrupt = |what: &str| TransportError::Disconnected {
-        detail: format!("hierarchical allgather: corrupt node frame ({what})"),
+) -> Result<(), Error> {
+    let corrupt = |what: &str| {
+        Error::disconnected(format!("hierarchical allgather: corrupt node frame ({what})"))
     };
     let mut off = 0usize;
     for &r in ranks {

@@ -9,7 +9,7 @@
 //! collectives themselves are backend-agnostic.
 //!
 //! Failure semantics: every collective returns `Result<_,
-//! [`TransportError`]>`. A peer dying mid-collective fails the operation
+//! [`Error`]>`. A peer dying mid-collective fails the operation
 //! with the rank/peer/tag context instead of panicking the worker.
 //!
 //! Topology: a [`Comm`] carries a [`Topology`] (rank→node mapping,
@@ -27,6 +27,8 @@
 
 pub mod allgather;
 pub mod bootstrap;
+pub mod elastic;
+pub mod faults;
 pub mod hierarchical;
 pub mod nonblocking;
 pub mod ring;
@@ -34,14 +36,19 @@ pub mod tcp;
 pub mod topology;
 pub mod transport;
 
+pub use bootstrap::{parse_hello, parse_table, Hello, HelloOutcome, PeerEntry, Registry};
+pub use elastic::{RemapTransport, RECOVERY_TAG_STRIDE};
+pub use faults::{FaultPlan, FaultSpec, FaultTransport};
 pub use hierarchical::CommBreakdown;
 pub use nonblocking::{lane_scope, CommCompletion, CommHandle, CommLane, CommOutcome};
 pub use tcp::{run_tcp_group, tcp_endpoint, tcp_endpoint_with_nodes, TcpConfig, TcpTransport};
 pub use topology::{LevelShape, LevelSpec, Topology, TopologySpec, TOPOLOGY_GRAMMAR};
 pub use transport::{
-    mesh, run_group, AllocStats, BufferPool, Endpoint, InProcTransport, Transport,
-    TransportError, TransportKind,
+    mesh, mesh_transports, run_group, AllocStats, BufferPool, Endpoint, Error, ErrorKind,
+    InProcTransport, Transport, TransportKind,
 };
+#[allow(deprecated)]
+pub use transport::TransportError;
 
 /// Which algorithm the gradient collectives use (the f32 loss/metric
 /// allreduce always rings flat — it moves a handful of bytes).
@@ -190,13 +197,13 @@ impl Comm {
     // -- collectives (implemented in submodules) ---------------------------
 
     /// Synchronize all ranks.
-    pub fn barrier(&mut self) -> Result<(), TransportError> {
+    pub fn barrier(&mut self) -> Result<(), Error> {
         self.last_breakdown = None;
         allgather::barrier(self)
     }
 
     /// Root's payload ends up on every rank.
-    pub fn broadcast(&mut self, root: usize, bytes: &mut Vec<u8>) -> Result<(), TransportError> {
+    pub fn broadcast(&mut self, root: usize, bytes: &mut Vec<u8>) -> Result<(), Error> {
         self.last_breakdown = None;
         allgather::broadcast(self, root, bytes)
     }
@@ -204,7 +211,7 @@ impl Comm {
     /// Every rank contributes a (variable-size) payload; all ranks get all
     /// payloads, indexed by source rank. Routed: flat ring, or the
     /// two-level leader-concatenated exchange (bit-identical results).
-    pub fn allgather(&mut self, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, TransportError> {
+    pub fn allgather(&mut self, mine: Vec<u8>) -> Result<Vec<Vec<u8>>, Error> {
         self.last_breakdown = None;
         match self.route {
             CommRoute::Flat => allgather::ring_allgather(self, mine),
@@ -215,7 +222,7 @@ impl Comm {
     /// In-place ring allreduce over an f32 buffer (sum). Always flat: the
     /// trainer uses it for scalar loss/metric reductions where a two-level
     /// exchange would only add latency.
-    pub fn allreduce_f32(&mut self, data: &mut [f32]) -> Result<(), TransportError> {
+    pub fn allreduce_f32(&mut self, data: &mut [f32]) -> Result<(), Error> {
         self.last_breakdown = None;
         ring::allreduce_f32(self, data)
     }
@@ -228,22 +235,76 @@ impl Comm {
         &mut self,
         data: &mut [u8],
         codec: &dyn crate::compression::Codec,
-    ) -> Result<(), TransportError> {
+    ) -> Result<(), Error> {
         // Reject a misdispatched codec before any cross-rank traffic: once
         // a rank is mid-ring a reduce failure would strand its peers.
         if codec.collective() != crate::compression::Collective::AllReduce {
-            return Err(TransportError::Codec {
-                detail: format!(
-                    "{}: allreduce_wire needs an allreduce codec",
-                    codec.kind().name()
-                ),
-            });
+            return Err(Error::codec(format!(
+                "{}: allreduce_wire needs an allreduce codec",
+                codec.kind().name()
+            )));
         }
         self.last_breakdown = None;
         match self.route {
             CommRoute::Flat => ring::allreduce_wire(self, data, codec),
             CommRoute::TwoLevel => hierarchical::hier_allreduce_wire(self, data, codec),
         }
+    }
+
+    // -- elastic recovery --------------------------------------------------
+
+    /// Shrink this communicator to `survivors` (sorted old-rank indices
+    /// including this rank) after a peer death, keeping the existing
+    /// transport connections: the endpoint's backend is rewrapped in a
+    /// [`RemapTransport`] that renumbers the survivors densely from 0 and
+    /// drops every in-flight frame from excluded ranks.
+    ///
+    /// Every surviving rank must call this with the **same** survivor set
+    /// (it is part of the SPMD contract, like the collective call
+    /// sequence). The shrink starts a new recovery generation: the abort
+    /// epoch increments (so stale [`transport::CTRL_ABORT_TAG`] frames
+    /// from the failed step are ignored), and the collective tag space
+    /// jumps to `generation * `[`RECOVERY_TAG_STRIDE`] — survivors may
+    /// have consumed *different* tag counts in the step that failed, so an
+    /// agreed jump is the only way to realign them. The topology resets to
+    /// flat over the shrunk world (the old rank→node mapping no longer
+    /// applies); callers re-attach a topology and re-run the schedule
+    /// search for the new world afterwards.
+    ///
+    /// Returns this rank's index in the shrunk world.
+    pub fn shrink_to_survivors(&mut self, survivors: &[usize]) -> anyhow::Result<usize> {
+        // Validate before swapping anything out of the endpoint, so a bad
+        // survivor set cannot strand the communicator on a dead transport.
+        anyhow::ensure!(!survivors.is_empty(), "survivor set must be non-empty");
+        anyhow::ensure!(
+            survivors.windows(2).all(|w| w[0] < w[1]),
+            "survivors must be sorted and unique"
+        );
+        anyhow::ensure!(
+            *survivors.last().unwrap() < self.world(),
+            "survivor rank {} out of range for world {}",
+            survivors.last().unwrap(),
+            self.world()
+        );
+        anyhow::ensure!(
+            survivors.contains(&self.rank()),
+            "rank {} is not in the survivor set {survivors:?}",
+            self.rank()
+        );
+        let generation = self.ep.abort_epoch() + 1;
+        let old = std::mem::replace(
+            &mut self.ep,
+            Endpoint::new(Box::new(elastic::NullTransport)),
+        );
+        let remap = RemapTransport::new(old.into_transport(), survivors)?;
+        self.ep = Endpoint::new(Box::new(remap));
+        self.ep.set_abort_epoch(generation);
+        self.seq = generation * RECOVERY_TAG_STRIDE;
+        let world = self.ep.world();
+        self.topology = std::sync::Arc::new(Topology::flat(world));
+        self.route = CommRoute::Flat;
+        self.last_breakdown = None;
+        Ok(self.ep.rank())
     }
 }
 

@@ -17,12 +17,12 @@
 //! exchange is bit-for-bit equivalent to the serial one.
 //!
 //! Failure semantics: a collective that dies mid-flight (peer gone,
-//! connection reset) surfaces as a typed [`TransportError`] from
+//! connection reset) surfaces as a typed [`Error`] from
 //! [`CommHandle::wait`], carried through from whichever backend the `Comm`
 //! runs over.
 
 use super::hierarchical::CommBreakdown;
-use super::transport::TransportError;
+use super::transport::Error;
 use super::{Comm, CommRoute};
 use crate::compression::{CodecKind, Collective};
 use crate::util::stats::Stopwatch;
@@ -69,23 +69,23 @@ struct Job {
     /// (`None` keeps whatever route is already set) — how the exchange
     /// engine runs per-group [`CommRoute`]s through the comm lane.
     route: Option<CommRoute>,
-    done: Sender<Result<CommCompletion, TransportError>>,
+    done: Sender<Result<CommCompletion, Error>>,
 }
 
 /// Waitable handle to an in-flight collective.
 pub struct CommHandle {
-    rx: Receiver<Result<CommCompletion, TransportError>>,
+    rx: Receiver<Result<CommCompletion, Error>>,
 }
 
 impl CommHandle {
     /// Block until the collective completes and take its result. A dead
-    /// peer mid-collective surfaces here as a typed [`TransportError`].
-    pub fn wait(self) -> Result<CommCompletion, TransportError> {
+    /// peer mid-collective surfaces here as a typed [`Error`].
+    pub fn wait(self) -> Result<CommCompletion, Error> {
         match self.rx.recv() {
             Ok(result) => result,
-            Err(_) => Err(TransportError::Disconnected {
-                detail: "comm lane terminated before completing the operation".to_string(),
-            }),
+            Err(_) => Err(Error::disconnected(
+                "comm lane terminated before completing the operation",
+            )),
         }
     }
 }
@@ -119,9 +119,10 @@ impl CommLane {
         // engine that misroutes a group must fail the step, not the process.
         if kind.collective() != Collective::AllReduce {
             let (done, rx) = channel();
-            let _ = done.send(Err(TransportError::Codec {
-                detail: format!("{}: start_allreduce needs an allreduce codec", kind.name()),
-            }));
+            let _ = done.send(Err(Error::codec(format!(
+                "{}: start_allreduce needs an allreduce codec",
+                kind.name()
+            ))));
             return CommHandle { rx };
         }
         self.submit(Op::AllReduce { wire, kind, n }, route)
@@ -203,6 +204,7 @@ pub fn lane_scope<R>(comm: &mut Comm, f: impl FnOnce(&CommLane) -> R) -> (R, f64
 #[cfg(test)]
 mod tests {
     use super::super::run_comm_group;
+    use super::super::transport::ErrorKind;
     use super::*;
     use crate::compression::Codec as _;
     use crate::util::rng::Xoshiro256;
@@ -299,8 +301,9 @@ mod tests {
         let lane = CommLane { jobs };
         let handle = lane.start_allreduce(vec![0u8; 4], CodecKind::SignSgd, 8);
         match handle.wait() {
-            Err(TransportError::Codec { detail }) => {
-                assert!(detail.contains("signsgd"), "detail must name the codec: {detail}");
+            Err(e) if e.kind() == ErrorKind::Codec => {
+                let detail = &e.context;
+                assert!(detail.contains("signsgd"), "context must name the codec: {detail}");
             }
             Err(other) => panic!("wrong error: {other}"),
             Ok(_) => panic!("allgather codec must be rejected"),
@@ -325,7 +328,7 @@ mod tests {
         drop(lane);
         let handle = CommHandle { rx };
         match handle.wait() {
-            Err(TransportError::Disconnected { .. }) => {}
+            Err(e) if e.kind() == ErrorKind::Disconnected => {}
             Err(other) => panic!("wrong error: {other}"),
             Ok(_) => panic!("expected an error from a dead lane"),
         }

@@ -9,7 +9,7 @@
 //!   codec's `reduce_wire` (FP16 sums in half precision on the wire exactly
 //!   like NCCL's `ncclFloat16` reduction would).
 
-use super::transport::TransportError;
+use super::transport::Error;
 use super::Comm;
 use crate::compression::Codec;
 
@@ -43,8 +43,8 @@ pub(crate) fn subset_ring_allreduce_bytes(
     base: u64,
     data: &mut [u8],
     align: usize,
-    reduce: &dyn Fn(&mut [u8], &[u8]) -> Result<(), TransportError>,
-) -> Result<(), TransportError> {
+    reduce: &dyn Fn(&mut [u8], &[u8]) -> Result<(), Error>,
+) -> Result<(), Error> {
     let l = members.len();
     let me = members
         .iter()
@@ -97,8 +97,8 @@ fn ring_allreduce_bytes(
     comm: &mut Comm,
     data: &mut [u8],
     align: usize,
-    reduce: &dyn Fn(&mut [u8], &[u8]) -> Result<(), TransportError>,
-) -> Result<(), TransportError> {
+    reduce: &dyn Fn(&mut [u8], &[u8]) -> Result<(), Error>,
+) -> Result<(), Error> {
     let world = comm.world();
     if world == 1 || data.is_empty() {
         return Ok(());
@@ -110,7 +110,7 @@ fn ring_allreduce_bytes(
 }
 
 /// In-place f32 sum allreduce.
-pub fn allreduce_f32(comm: &mut Comm, data: &mut [f32]) -> Result<(), TransportError> {
+pub fn allreduce_f32(comm: &mut Comm, data: &mut [f32]) -> Result<(), Error> {
     if comm.world() == 1 || data.is_empty() {
         return Ok(());
     }
@@ -139,16 +139,14 @@ pub fn allreduce_wire(
     comm: &mut Comm,
     data: &mut [u8],
     codec: &dyn Codec,
-) -> Result<(), TransportError> {
+) -> Result<(), Error> {
     if comm.world() == 1 || data.is_empty() {
         return Ok(());
     }
     ring_allreduce_bytes(comm, data, codec.wire_align(), &|a, b| {
         codec
             .reduce_wire(a, b)
-            .map_err(|e| TransportError::Codec {
-                detail: e.to_string(),
-            })
+            .map_err(|e| Error::codec(e.to_string()))
     })
 }
 

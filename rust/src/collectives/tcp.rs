@@ -22,7 +22,7 @@
 //!   demuxes them into the same single-inbox + stash structure the
 //!   in-process channel mesh uses. On EOF or connection reset it injects a
 //!   [`CTRL_PEER_DOWN_TAG`] control message, which `Endpoint::recv`
-//!   surfaces as a typed [`TransportError::PeerGone`] naming the rank,
+//!   surfaces as a typed [`Error::peer_gone`] naming the rank,
 //!   peer and tag — never a hang, never a process-poisoning panic.
 //!
 //! Works identically whether the peers are OS processes (the
@@ -31,8 +31,9 @@
 //! transport-equivalence tests to drive real sockets over loopback).
 
 use super::bootstrap;
+use super::faults::{FaultPlan, FaultTransport};
 use super::transport::{
-    AllocStats, BufferPool, Endpoint, Msg, Transport, TransportError, CTRL_PEER_DOWN_TAG,
+    AllocStats, BufferPool, Endpoint, Error, Msg, Transport, CTRL_PEER_DOWN_TAG,
 };
 use std::io::{IoSlice, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -72,6 +73,16 @@ pub struct TcpConfig {
     /// Bootstrap deadline: rendezvous + mesh formation must finish within
     /// this budget (dial retries included).
     pub timeout: Duration,
+    /// Bootstrap generation this rank registers with. A relaunched rank
+    /// re-HELLOs with a higher generation and supersedes its dead
+    /// predecessor's rendezvous entry (see `bootstrap.rs`); 0 outside
+    /// elastic restarts.
+    pub generation: u64,
+    /// On-wire fault plan injected below this rank's [`Endpoint`] when it
+    /// applies to `rank` ([`FaultPlan::applies_to`]). `None` also consults
+    /// the `MERGECOMP_FAULTS` environment variable, so chaos runs can
+    /// straggle a rank without plumbing flags through every launcher.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for TcpConfig {
@@ -83,6 +94,8 @@ impl Default for TcpConfig {
             advertise_host: "127.0.0.1".to_string(),
             node_label: "n0".to_string(),
             timeout: Duration::from_secs(60),
+            generation: 0,
+            faults: None,
         }
     }
 }
@@ -145,6 +158,7 @@ impl TcpTransport {
             &cfg.rendezvous,
             &my_addr,
             &cfg.node_label,
+            cfg.generation,
             hosted_rendezvous,
             deadline,
         )?;
@@ -220,13 +234,8 @@ impl TcpTransport {
         &self.peer_nodes
     }
 
-    fn peer_gone(&self, peer: usize, tag: u64, detail: String) -> TransportError {
-        TransportError::PeerGone {
-            rank: self.rank,
-            peer,
-            tag: Some(tag),
-            detail,
-        }
+    fn peer_gone(&self, peer: usize, tag: u64, detail: String) -> Error {
+        Error::peer_gone(self.rank, peer, Some(tag), detail)
     }
 }
 
@@ -239,7 +248,7 @@ impl Transport for TcpTransport {
         self.world
     }
 
-    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError> {
+    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), Error> {
         let len = bytes.len() as u64;
         if bytes.len() > MAX_FRAME_BYTES {
             return Err(self.peer_gone(
@@ -268,23 +277,23 @@ impl Transport for TcpTransport {
         Ok(())
     }
 
-    fn next_msg(&mut self) -> Result<Msg, TransportError> {
-        self.inbox.recv().map_err(|_| TransportError::Disconnected {
-            detail: "all peer connections closed".to_string(),
-        })
+    fn next_msg(&mut self) -> Result<Msg, Error> {
+        self.inbox
+            .recv()
+            .map_err(|_| Error::disconnected("all peer connections closed"))
     }
 
-    fn try_next_msg(&mut self) -> Result<Option<Msg>, TransportError> {
+    fn try_next_msg(&mut self) -> Result<Option<Msg>, Error> {
         match self.inbox.try_recv() {
             Ok(m) => Ok(Some(m)),
             Err(TryRecvError::Empty) => Ok(None),
-            Err(TryRecvError::Disconnected) => Err(TransportError::Disconnected {
-                detail: "all peer connections closed".to_string(),
-            }),
+            Err(TryRecvError::Disconnected) => {
+                Err(Error::disconnected("all peer connections closed"))
+            }
         }
     }
 
-    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), TransportError> {
+    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), Error> {
         // Steady state: the writer thread has already returned a written
         // frame to the pool, so this copies into recycled capacity and
         // allocates nothing.
@@ -397,7 +406,7 @@ fn writer_loop(
 
 /// What a failed writer reports: which frame died (peer + tag) and how
 /// many queued frames were lost behind it — the detail `Endpoint::recv`
-/// surfaces inside [`TransportError::PeerGone`].
+/// surfaces inside [`Error::peer_gone`].
 fn writer_error_detail(
     rank: usize,
     peer: usize,
@@ -458,13 +467,32 @@ pub fn tcp_endpoint(
 /// Like [`tcp_endpoint`], but also returns the node label every rank
 /// registered in the rendezvous TABLE (indexed by rank) — the trainer
 /// cross-checks these against its own `--topology`.
+///
+/// This is also where fault injection attaches: a plan from `cfg.faults`
+/// (or, when unset, the `MERGECOMP_FAULTS` environment variable) that
+/// applies to this rank wraps the socket transport in a [`FaultTransport`]
+/// before the [`Endpoint`] is built, so every collective — and the
+/// scheduler's cost measurements — sees the perturbed wire.
 pub fn tcp_endpoint_with_nodes(
     cfg: &TcpConfig,
     hosted_rendezvous: Option<TcpListener>,
 ) -> anyhow::Result<(Endpoint, Vec<String>)> {
     let transport = TcpTransport::connect(cfg, hosted_rendezvous)?;
     let nodes = transport.peer_nodes().to_vec();
-    Ok((Endpoint::new(Box::new(transport)), nodes))
+    let plan = match &cfg.faults {
+        Some(p) => Some(p.clone()),
+        None => match std::env::var("MERGECOMP_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => Some(FaultPlan::parse(&s)?),
+            _ => None,
+        },
+    };
+    let boxed: Box<dyn Transport> = match plan {
+        Some(plan) if plan.applies_to(cfg.rank) => {
+            Box::new(FaultTransport::new(Box::new(transport), plan.spec, cfg.rank as u64))
+        }
+        _ => Box::new(transport),
+    };
+    Ok((Endpoint::new(boxed), nodes))
 }
 
 /// Run a closure on every rank of a fresh TCP group over loopback, one OS
@@ -587,10 +615,10 @@ mod tests {
             // PeerGone naming rank, peer and tag.
             match ep.recv(1, 9) {
                 Ok(_) => Some("unexpected message".to_string()),
-                Err(TransportError::PeerGone { rank, peer, tag, .. }) => {
-                    assert_eq!(rank, 0);
-                    assert_eq!(peer, 1);
-                    assert_eq!(tag, Some(9));
+                Err(e) if e.is_recoverable() => {
+                    assert_eq!(e.rank, Some(0));
+                    assert_eq!(e.peer, Some(1));
+                    assert_eq!(e.tag, Some(9));
                     None
                 }
                 Err(other) => Some(format!("wrong error: {other}")),
@@ -698,6 +726,50 @@ mod tests {
         assert!(d.contains("tag 17"), "{d}");
         assert!(d.contains("5 queued frames"), "{d}");
         assert!(d.contains("broken pipe"), "{d}");
+    }
+
+    #[test]
+    fn configured_fault_plan_shims_the_endpoint() {
+        // Rank 0 carries a drop-after=1 plan: its first send to rank 1
+        // lands, the second fails typed with the fault shim's cut-link
+        // error — proving tcp_endpoint wires the shim below the Endpoint.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let rendezvous = listener.local_addr().unwrap().to_string();
+        let mut hosted = Some(listener);
+        let results: Vec<Option<String>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2usize)
+                .map(|rank| {
+                    let hosted = if rank == 0 { hosted.take() } else { None };
+                    let rendezvous = rendezvous.clone();
+                    s.spawn(move || {
+                        let faults = (rank == 0)
+                            .then(|| FaultPlan::parse("rank=0,drop-after=1").unwrap());
+                        let cfg = TcpConfig {
+                            rank,
+                            world: 2,
+                            rendezvous,
+                            faults,
+                            ..TcpConfig::default()
+                        };
+                        let mut ep = tcp_endpoint(&cfg, hosted).unwrap();
+                        if rank == 0 {
+                            ep.send(1, 1, vec![7]).unwrap();
+                            match ep.send(1, 2, vec![8]) {
+                                Err(e) if e.is_recoverable() && e.peer == Some(1) => None,
+                                other => Some(format!("expected cut link, got {other:?}")),
+                            }
+                        } else {
+                            match ep.recv(0, 1) {
+                                Ok(m) if m == vec![7] => None,
+                                other => Some(format!("bad first frame: {other:?}")),
+                            }
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results, vec![None, None]);
     }
 
     #[test]

@@ -16,15 +16,18 @@
 //!
 //! Every byte that crosses an endpoint is counted, so experiments can
 //! report exact bytes-on-wire per collective. Failures are **typed**: a
-//! dead peer surfaces as [`TransportError::PeerGone`] naming the rank, peer
-//! and tag instead of panicking the worker (the TCP backend maps connection
-//! reset onto the same error).
+//! dead peer surfaces as an [`Error`] classified [`ErrorKind::PeerGone`],
+//! naming the rank, peer and tag instead of panicking the worker (the TCP
+//! backend maps connection reset onto the same error). Recovery logic
+//! (the elastic trainer) branches on [`Error::is_recoverable`], not on
+//! ad-hoc variant patterns.
 
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// A message in flight: (source, tag, payload).
 pub type Msg = (usize, u64, Vec<u8>);
@@ -34,51 +37,179 @@ pub type Msg = (usize, u64, Vec<u8>);
 /// collectives: `Comm` tags count up from 0.
 pub const CTRL_PEER_DOWN_TAG: u64 = u64::MAX;
 
-/// Typed transport failure — what a collective returns when a peer dies
-/// mid-operation instead of poisoning the process.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum TransportError {
-    /// A specific peer is unreachable (worker thread died, connection
-    /// reset, socket closed).
-    PeerGone {
-        /// The rank observing the failure.
-        rank: usize,
-        /// The unreachable peer.
-        peer: usize,
-        /// The tag being sent/received when the failure surfaced, if any.
-        tag: Option<u64>,
-        detail: String,
-    },
-    /// The whole fabric is gone (mesh torn down, comm lane dead).
-    Disconnected { detail: String },
-    /// A codec was dispatched to a collective it cannot serve (e.g. an
-    /// allgather codec handed to the wire allreduce). The detail names the
-    /// codec — and, when the exchange engine raises it, the group index —
-    /// so a mixed-codec schedule bug reads as a step failure, not an abort.
-    Codec { detail: String },
+/// Reserved tag for the elastic abort protocol: a rank whose exchange
+/// failed recoverably broadcasts `ABORT {epoch, dead, detail}` so peers
+/// blocked mid-collective on a *live* rank (one that abandoned the failed
+/// operation) fail typed instead of hanging. Payload layout:
+/// `[epoch: u64 LE][dead: u64 LE][detail: utf8]`.
+pub const CTRL_ABORT_TAG: u64 = u64::MAX - 1;
+
+/// Encode an abort control payload (see [`CTRL_ABORT_TAG`]).
+pub fn encode_abort(epoch: u64, dead: usize, detail: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + detail.len());
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&(dead as u64).to_le_bytes());
+    out.extend_from_slice(detail.as_bytes());
+    out
 }
 
-impl fmt::Display for TransportError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+/// Decode an abort control payload; `None` if truncated.
+pub fn decode_abort(bytes: &[u8]) -> Option<(u64, usize, String)> {
+    if bytes.len() < 16 {
+        return None;
+    }
+    let epoch = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let dead = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let detail = String::from_utf8_lossy(&bytes[16..]).into_owned();
+    Some((epoch, dead, detail))
+}
+
+/// Classification of a transport failure — the field recovery logic
+/// matches on (`Error::kind`), instead of the ad-hoc enum-variant
+/// patterns the pre-elastic API required.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// A specific peer is unreachable (worker process died, connection
+    /// reset, socket closed). Recoverable: the surviving ranks can agree
+    /// on a shrunk world and continue.
+    PeerGone,
+    /// The whole fabric is gone (mesh torn down, comm lane dead).
+    Disconnected,
+    /// A codec was dispatched to a collective it cannot serve (e.g. an
+    /// allgather codec handed to the wire allreduce) — a schedule bug,
+    /// never recoverable by retry.
+    Codec,
+}
+
+impl ErrorKind {
+    pub fn name(&self) -> &'static str {
         match self {
-            TransportError::PeerGone { rank, peer, tag, detail } => {
-                write!(f, "rank {rank}: peer {peer} is gone")?;
-                if let Some(t) = tag {
+            ErrorKind::PeerGone => "peer-gone",
+            ErrorKind::Disconnected => "disconnected",
+            ErrorKind::Codec => "codec",
+        }
+    }
+}
+
+/// Structured transport failure: a [`ErrorKind`] classification plus where
+/// it happened (`rank` observing, `peer` involved, `tag` in flight) and
+/// free-form `context`. What a collective returns when a peer dies
+/// mid-operation instead of poisoning the process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    /// What failed — the classification recovery logic branches on.
+    pub kind: ErrorKind,
+    /// The rank observing the failure, when known.
+    pub rank: Option<usize>,
+    /// The peer involved in the failure (always set for
+    /// [`ErrorKind::PeerGone`]).
+    pub peer: Option<usize>,
+    /// The tag being sent/received when the failure surfaced, if any.
+    pub tag: Option<u64>,
+    /// Human-readable context (underlying I/O error, group index, …).
+    pub context: String,
+}
+
+impl Error {
+    /// A peer is unreachable: the recoverable failure class.
+    pub fn peer_gone(
+        rank: usize,
+        peer: usize,
+        tag: Option<u64>,
+        context: impl Into<String>,
+    ) -> Error {
+        Error {
+            kind: ErrorKind::PeerGone,
+            rank: Some(rank),
+            peer: Some(peer),
+            tag,
+            context: context.into(),
+        }
+    }
+
+    /// The whole fabric is gone.
+    pub fn disconnected(context: impl Into<String>) -> Error {
+        Error {
+            kind: ErrorKind::Disconnected,
+            rank: None,
+            peer: None,
+            tag: None,
+            context: context.into(),
+        }
+    }
+
+    /// A codec/collective dispatch mismatch (schedule bug).
+    pub fn codec(context: impl Into<String>) -> Error {
+        Error {
+            kind: ErrorKind::Codec,
+            rank: None,
+            peer: None,
+            tag: None,
+            context: context.into(),
+        }
+    }
+
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// Whether the failure class admits recovery without restarting the
+    /// process: `PeerGone` does (checkpoint + shrink to the surviving
+    /// world, or wait for the rank to re-join); `Disconnected` and
+    /// `Codec` do not.
+    pub fn is_recoverable(&self) -> bool {
+        matches!(self.kind, ErrorKind::PeerGone)
+    }
+
+    /// For recoverable failures, how long the caller should let the wire
+    /// settle (in-flight control frames, half-closed sockets) before
+    /// starting recovery actions; `None` for unrecoverable failures.
+    pub fn retry_after(&self) -> Option<Duration> {
+        if self.is_recoverable() {
+            Some(Duration::from_millis(100))
+        } else {
+            None
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            ErrorKind::PeerGone => {
+                if let Some(r) = self.rank {
+                    write!(f, "rank {r}: ")?;
+                }
+                match self.peer {
+                    Some(p) => write!(f, "peer {p} is gone")?,
+                    None => write!(f, "peer is gone")?,
+                }
+                if let Some(t) = self.tag {
                     write!(f, " (tag {t})")?;
                 }
-                write!(f, ": {detail}")
+                write!(f, ": {}", self.context)
             }
-            TransportError::Disconnected { detail } => {
-                write!(f, "transport disconnected: {detail}")
+            ErrorKind::Disconnected => {
+                write!(f, "transport disconnected: {}", self.context)
             }
-            TransportError::Codec { detail } => {
-                write!(f, "codec dispatch: {detail}")
+            ErrorKind::Codec => {
+                write!(f, "codec dispatch: {}", self.context)
             }
         }
     }
 }
 
-impl std::error::Error for TransportError {}
+impl std::error::Error for Error {}
+
+/// The pre-elastic name for [`Error`]. The flat enum variants
+/// (`TransportError::PeerGone { .. }` etc.) became [`Error::peer_gone`] /
+/// [`Error::disconnected`] / [`Error::codec`] constructors with an
+/// [`ErrorKind`] classification; match on `err.kind` instead of variants.
+#[deprecated(
+    since = "0.3.0",
+    note = "use collectives::transport::Error and match on ErrorKind / is_recoverable()"
+)]
+pub type TransportError = Error;
 
 /// Pool-miss counters for the steady-state send/receive hot paths. A miss
 /// is a `take` the pool could not serve from its free list (i.e. a fresh
@@ -141,12 +272,12 @@ pub trait Transport: Send {
     fn rank(&self) -> usize;
     fn world(&self) -> usize;
     /// Send one tagged payload to `to` (never `self.rank()`).
-    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError>;
+    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), Error>;
     /// Borrowed-payload send: the transport copies `bytes` into its own
     /// (pooled) outbound buffer, so the caller keeps ownership and the
     /// steady-state path allocates nothing. Backends without a pool fall
     /// back to cloning into an owned [`Transport::send`].
-    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), TransportError> {
+    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), Error> {
         self.send(to, tag, bytes.to_vec())
     }
     /// Return a payload buffer received via [`Transport::next_msg`] for
@@ -157,9 +288,9 @@ pub trait Transport: Send {
         AllocStats::default()
     }
     /// Blocking: the next inbound message from any peer.
-    fn next_msg(&mut self) -> Result<Msg, TransportError>;
+    fn next_msg(&mut self) -> Result<Msg, Error>;
     /// Non-blocking variant of [`Transport::next_msg`].
-    fn try_next_msg(&mut self) -> Result<Option<Msg>, TransportError>;
+    fn try_next_msg(&mut self) -> Result<Option<Msg>, Error>;
     /// Total payload bytes this rank has sent.
     fn bytes_sent(&self) -> u64;
     fn msgs_sent(&self) -> u64;
@@ -204,6 +335,10 @@ pub struct Endpoint {
     /// Payload bytes successfully sent to each peer — the per-destination
     /// split `Comm::inter_node_bytes` classifies against the topology.
     per_peer_sent: Vec<u64>,
+    /// Elastic recovery generation: [`CTRL_ABORT_TAG`] frames stamped with
+    /// an older epoch are leftovers from an already-completed recovery and
+    /// are dropped (see [`Endpoint::set_abort_epoch`]).
+    abort_epoch: u64,
 }
 
 impl Endpoint {
@@ -214,6 +349,7 @@ impl Endpoint {
             stash: HashMap::new(),
             dead: HashMap::new(),
             per_peer_sent: vec![0; world],
+            abort_epoch: 0,
         }
     }
 
@@ -245,7 +381,7 @@ impl Endpoint {
         self.per_peer_sent[peer]
     }
 
-    pub fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError> {
+    pub fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), Error> {
         assert!(to < self.world(), "rank {to} out of range");
         assert_ne!(to, self.rank(), "self-send is a bug in the collective");
         let len = bytes.len() as u64;
@@ -257,7 +393,7 @@ impl Endpoint {
     /// Borrowed-payload send — same accounting as [`Endpoint::send`], but
     /// the caller keeps ownership of `bytes` (the transport copies into a
     /// pooled outbound buffer instead of taking a fresh `Vec`).
-    pub fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), TransportError> {
+    pub fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), Error> {
         assert!(to < self.world(), "rank {to} out of range");
         assert_ne!(to, self.rank(), "self-send is a bug in the collective");
         let len = bytes.len() as u64;
@@ -278,7 +414,7 @@ impl Endpoint {
     }
 
     /// Blocking tag-matched receive.
-    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>, TransportError> {
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>, Error> {
         if let Some(m) = self.take_stashed(from, tag) {
             return Ok(m);
         }
@@ -295,6 +431,12 @@ impl Endpoint {
                 }
                 continue;
             }
+            if t == CTRL_ABORT_TAG {
+                if let Some(err) = self.note_abort(src, &bytes) {
+                    return Err(err);
+                }
+                continue;
+            }
             if src == from && t == tag {
                 return Ok(bytes);
             }
@@ -303,7 +445,7 @@ impl Endpoint {
     }
 
     /// Non-blocking probe used by failure-injection tests.
-    pub fn try_recv(&mut self, from: usize, tag: u64) -> Result<Option<Vec<u8>>, TransportError> {
+    pub fn try_recv(&mut self, from: usize, tag: u64) -> Result<Option<Vec<u8>>, Error> {
         if let Some(m) = self.take_stashed(from, tag) {
             return Ok(Some(m));
         }
@@ -313,6 +455,12 @@ impl Endpoint {
                 self.dead.insert(src, detail.clone());
                 if src == from {
                     return Err(self.peer_gone(from, Some(tag), detail));
+                }
+                continue;
+            }
+            if t == CTRL_ABORT_TAG {
+                if let Some(err) = self.note_abort(src, &bytes) {
+                    return Err(err);
                 }
                 continue;
             }
@@ -339,13 +487,89 @@ impl Endpoint {
         Some(m)
     }
 
-    fn peer_gone(&self, peer: usize, tag: Option<u64>, detail: String) -> TransportError {
-        TransportError::PeerGone {
-            rank: self.rank(),
-            peer,
-            tag,
-            detail,
+    fn peer_gone(&self, peer: usize, tag: Option<u64>, detail: String) -> Error {
+        Error::peer_gone(self.rank(), peer, tag, detail)
+    }
+
+    /// Process one inbound [`CTRL_ABORT_TAG`] frame: stale epochs (and
+    /// truncated payloads) are dropped; a current-epoch abort marks the
+    /// reported dead rank and returns the recoverable error the pending
+    /// operation should fail with — every survivor converges on blaming
+    /// the same dead rank, whichever peer told it first.
+    fn note_abort(&mut self, src: usize, bytes: &[u8]) -> Option<Error> {
+        let (epoch, dead, detail) = decode_abort(bytes)?;
+        if epoch < self.abort_epoch {
+            return None;
         }
+        let note = format!("peer {src} aborted (epoch {epoch}): {detail}");
+        self.dead.entry(dead).or_insert_with(|| note.clone());
+        Some(Error::peer_gone(self.rank(), dead, None, note))
+    }
+
+    /// Peers this endpoint has observed as dead (via the in-band
+    /// [`CTRL_PEER_DOWN_TAG`] control frame or a peer's abort broadcast),
+    /// in ascending rank order. The elastic trainer reads this after a
+    /// recoverable failure to decide which ranks the shrunk world
+    /// excludes.
+    pub fn dead_peers(&self) -> Vec<usize> {
+        let mut peers: Vec<usize> = self.dead.keys().copied().collect();
+        peers.sort_unstable();
+        peers
+    }
+
+    /// Drain any inbound control frames without blocking, so peer-down
+    /// notifications and abort broadcasts that raced a failed collective
+    /// are folded into the dead map before [`Endpoint::dead_peers`] is
+    /// read.
+    pub fn poll_control(&mut self) {
+        while let Ok(Some((src, t, bytes))) = self.transport.try_next_msg() {
+            if t == CTRL_PEER_DOWN_TAG {
+                let detail = String::from_utf8_lossy(&bytes).into_owned();
+                self.dead.insert(src, detail);
+            } else if t == CTRL_ABORT_TAG {
+                let _ = self.note_abort(src, &bytes);
+            } else {
+                self.stash.entry((src, t)).or_default().push(bytes);
+            }
+        }
+    }
+
+    /// Best-effort broadcast of an elastic abort (see [`CTRL_ABORT_TAG`])
+    /// to every peer except `dead` — peers blocked mid-collective on this
+    /// rank fail typed, naming the same dead rank, instead of hanging on
+    /// frames the abandoned collective will never send. Send failures are
+    /// ignored: an unreachable peer is already down.
+    pub fn broadcast_abort(&mut self, dead: usize, detail: &str) {
+        let payload = encode_abort(self.abort_epoch, dead, detail);
+        let me = self.rank();
+        for peer in 0..self.world() {
+            if peer == me || peer == dead {
+                continue;
+            }
+            let _ = self.transport.send(peer, CTRL_ABORT_TAG, payload.clone());
+        }
+    }
+
+    /// The current elastic recovery generation (see
+    /// [`Endpoint::set_abort_epoch`]).
+    pub fn abort_epoch(&self) -> u64 {
+        self.abort_epoch
+    }
+
+    /// Install the recovery generation. `Comm::shrink_to_survivors` bumps
+    /// this on the rebuilt endpoint so abort frames broadcast during the
+    /// recovery that just completed (stamped with the previous epoch) are
+    /// recognized as stale and dropped instead of failing the first
+    /// post-recovery collective.
+    pub fn set_abort_epoch(&mut self, epoch: u64) {
+        self.abort_epoch = epoch;
+    }
+
+    /// Tear the endpoint down to its backend, dropping the stash and dead
+    /// map. Used by elastic recovery to re-wrap surviving sockets in a
+    /// remapping shim (`collectives::elastic`) after a world shrink.
+    pub fn into_transport(self) -> Box<dyn Transport> {
+        self.transport
     }
 }
 
@@ -355,7 +579,7 @@ impl Endpoint {
 /// Dropping an endpoint notifies every peer in-band (the same
 /// [`CTRL_PEER_DOWN_TAG`] control message the TCP reader injects on EOF),
 /// so a rank blocked in `recv` on a dead peer gets a typed
-/// [`TransportError::PeerGone`] instead of hanging — per-sender FIFO means
+/// [`ErrorKind::PeerGone`] failure instead of hanging — per-sender FIFO means
 /// the control message can never overtake data the peer sent before dying.
 pub struct InProcTransport {
     rank: usize,
@@ -382,37 +606,34 @@ impl Transport for InProcTransport {
         self.world
     }
 
-    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), TransportError> {
+    fn send(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<(), Error> {
         self.bytes_sent += bytes.len() as u64;
         self.msgs_sent += 1;
         // Receiver hung up ⇒ worker died; the collective can't complete.
         self.senders[to]
             .send((self.rank, tag, bytes))
-            .map_err(|_| TransportError::PeerGone {
-                rank: self.rank,
-                peer: to,
-                tag: Some(tag),
-                detail: "worker thread died (inbox closed)".to_string(),
+            .map_err(|_| {
+                Error::peer_gone(self.rank, to, Some(tag), "worker thread died (inbox closed)")
             })
     }
 
-    fn next_msg(&mut self) -> Result<Msg, TransportError> {
-        self.inbox.recv().map_err(|_| TransportError::Disconnected {
-            detail: "mesh disconnected while receiving".to_string(),
-        })
+    fn next_msg(&mut self) -> Result<Msg, Error> {
+        self.inbox
+            .recv()
+            .map_err(|_| Error::disconnected("mesh disconnected while receiving"))
     }
 
-    fn try_next_msg(&mut self) -> Result<Option<Msg>, TransportError> {
+    fn try_next_msg(&mut self) -> Result<Option<Msg>, Error> {
         match self.inbox.try_recv() {
             Ok(m) => Ok(Some(m)),
             Err(TryRecvError::Empty) => Ok(None),
-            Err(TryRecvError::Disconnected) => Err(TransportError::Disconnected {
-                detail: "mesh disconnected while receiving".to_string(),
-            }),
+            Err(TryRecvError::Disconnected) => {
+                Err(Error::disconnected("mesh disconnected while receiving"))
+            }
         }
     }
 
-    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), TransportError> {
+    fn send_ref(&mut self, to: usize, tag: u64, bytes: &[u8]) -> Result<(), Error> {
         let mut buf = self.pool.take();
         buf.extend_from_slice(bytes);
         self.send(to, tag, buf)
@@ -456,6 +677,17 @@ impl Drop for InProcTransport {
 
 /// Build a fully-connected in-process mesh of `world` endpoints.
 pub fn mesh(world: usize) -> Vec<Endpoint> {
+    mesh_transports(world)
+        .into_iter()
+        .map(|t| Endpoint::new(Box::new(t)))
+        .collect()
+}
+
+/// The raw backends of a fully-connected in-process mesh, before the
+/// tag-matching [`Endpoint`] wrap. Fault-injection tests use this to
+/// interpose a [`crate::collectives::faults::FaultTransport`] shim between
+/// the backend and the endpoint.
+pub fn mesh_transports(world: usize) -> Vec<InProcTransport> {
     assert!(world >= 1);
     let mut senders = Vec::with_capacity(world);
     let mut receivers = Vec::with_capacity(world);
@@ -468,16 +700,14 @@ pub fn mesh(world: usize) -> Vec<Endpoint> {
     receivers
         .into_iter()
         .enumerate()
-        .map(|(rank, inbox)| {
-            Endpoint::new(Box::new(InProcTransport {
-                rank,
-                world,
-                senders: senders.clone(),
-                inbox,
-                pool: Arc::clone(&pool),
-                bytes_sent: 0,
-                msgs_sent: 0,
-            }))
+        .map(|(rank, inbox)| InProcTransport {
+            rank,
+            world,
+            senders: senders.clone(),
+            inbox,
+            pool: Arc::clone(&pool),
+            bytes_sent: 0,
+            msgs_sent: 0,
         })
         .collect()
 }
@@ -626,14 +856,23 @@ mod tests {
         let mut ep0 = eps.pop().unwrap();
         drop(ep1);
         let err = ep0.send(1, 3, vec![1]).unwrap_err();
-        match err {
-            TransportError::PeerGone { rank, peer, tag, .. } => {
-                assert_eq!(rank, 0);
-                assert_eq!(peer, 1);
-                assert_eq!(tag, Some(3));
-            }
-            other => panic!("expected PeerGone, got {other}"),
-        }
+        assert_eq!(err.kind(), ErrorKind::PeerGone, "got {err}");
+        assert_eq!(err.rank, Some(0));
+        assert_eq!(err.peer, Some(1));
+        assert_eq!(err.tag, Some(3));
+        assert!(err.is_recoverable());
+        assert!(err.retry_after().is_some());
+    }
+
+    #[test]
+    fn dead_peers_lists_control_notified_ranks() {
+        let mut eps = mesh(3);
+        let ep2 = eps.pop().unwrap();
+        let mut ep1 = eps.pop().unwrap();
+        let _ep0 = eps.remove(0);
+        drop(ep2);
+        ep1.poll_control();
+        assert_eq!(ep1.dead_peers(), vec![2]);
     }
 
     #[test]
@@ -689,15 +928,30 @@ mod tests {
 
     #[test]
     fn error_display_names_rank_peer_and_tag() {
-        let e = TransportError::PeerGone {
-            rank: 2,
-            peer: 0,
-            tag: Some(17),
-            detail: "connection reset".to_string(),
-        };
+        let e = Error::peer_gone(2, 0, Some(17), "connection reset");
         let s = e.to_string();
         assert!(s.contains("rank 2"), "{s}");
         assert!(s.contains("peer 0"), "{s}");
         assert!(s.contains("tag 17"), "{s}");
+    }
+
+    #[test]
+    fn error_classification_drives_recovery() {
+        let gone = Error::peer_gone(1, 3, None, "reset");
+        assert!(gone.is_recoverable());
+        assert_eq!(gone.retry_after(), Some(Duration::from_millis(100)));
+        for e in [Error::disconnected("lane dead"), Error::codec("bad dispatch")] {
+            assert!(!e.is_recoverable());
+            assert_eq!(e.retry_after(), None);
+        }
+        assert_eq!(ErrorKind::PeerGone.name(), "peer-gone");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_alias_still_names_the_error() {
+        // One-release compatibility shim: the old name must keep working.
+        let e: TransportError = Error::disconnected("legacy caller");
+        assert_eq!(e.kind(), ErrorKind::Disconnected);
     }
 }

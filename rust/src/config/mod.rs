@@ -2,9 +2,11 @@
 //! loaded from JSON files (util::json; serde is unavailable offline) with
 //! CLI-flag overrides applied on top.
 
+mod policy;
 mod schedule;
 mod train;
 
+pub use policy::{RunPolicy, RunPolicyBuilder};
 pub use schedule::{ScheduleSpec, SchedulingMode};
 pub use train::TrainConfig;
 

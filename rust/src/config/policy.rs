@@ -1,0 +1,301 @@
+//! [`RunPolicy`] — the typed recovery/fault policy of a training run.
+//!
+//! Everything elastic about a run lives here, separated from the model/
+//! schedule knobs of [`TrainConfig`](super::TrainConfig): checkpointing
+//! (where, how often), elastic degraded-world continuation, restore, fault
+//! injection, and the deterministic kill switch the chaos tests use. One
+//! `--policy <json|path>` flag sets the whole policy; the individual flags
+//! (`--elastic`, `--checkpoint-dir`, `--checkpoint-interval`, `--resume`,
+//! `--faults`, `--die-at-step`, `--die-rank`) remain shorthands layered on
+//! top of it.
+
+use crate::collectives::FaultPlan;
+use crate::util::cli::Args;
+use crate::util::json::Value;
+
+/// Recovery/fault policy of one training run. Build with
+/// [`RunPolicy::builder`] (library callers) or `--policy` / the shorthand
+/// flags (CLI); `default()` is the fully-inert policy — no checkpoints, no
+/// elasticity, no faults.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RunPolicy {
+    /// Continue at world−1 when a peer dies mid-run (degraded-world
+    /// continuation) instead of failing the step. Off: any peer failure is
+    /// fatal, as before.
+    pub elastic: bool,
+    /// Directory for per-rank snapshots (`ckpt-rank<N>.json`). `None`
+    /// disables checkpointing entirely.
+    pub checkpoint_dir: Option<String>,
+    /// Steps between periodic snapshots; 0 writes only the emergency
+    /// snapshot taken when a peer failure is detected. Requires
+    /// `checkpoint_dir`.
+    pub checkpoint_interval: usize,
+    /// Restore from `checkpoint_dir` at startup and continue from the
+    /// snapshotted step (synthetic step source only — resume needs the
+    /// deterministic gradient stream).
+    pub resume: bool,
+    /// On-wire fault plan spec (see [`FaultPlan::parse`] for the grammar),
+    /// injected below this rank's transport. Validated at build time.
+    pub faults: Option<String>,
+    /// Deterministic kill switch: the rank selected by `die_rank` calls
+    /// `std::process::abort()` at the start of this step — a hard kill with
+    /// no cleanup, as close to SIGKILL as a process can do to itself. The
+    /// chaos tests use it to stage mid-run rank loss reproducibly.
+    pub die_at_step: Option<usize>,
+    /// Which rank `die_at_step` kills (default 0).
+    pub die_rank: usize,
+}
+
+impl RunPolicy {
+    pub fn builder() -> RunPolicyBuilder {
+        RunPolicyBuilder { policy: RunPolicy::default() }
+    }
+
+    /// The parsed fault plan, if any (the spec was validated at build /
+    /// parse time, so this only fails on a hand-constructed policy).
+    pub fn fault_plan(&self) -> anyhow::Result<Option<FaultPlan>> {
+        match &self.faults {
+            Some(s) if !s.trim().is_empty() => Ok(Some(FaultPlan::parse(s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Cross-field validation (what [`RunPolicyBuilder::build`] and the
+    /// config loaders enforce).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let Some(s) = &self.faults {
+            FaultPlan::parse(s)?;
+        }
+        anyhow::ensure!(
+            self.checkpoint_interval == 0 || self.checkpoint_dir.is_some(),
+            "checkpoint_interval {} needs a checkpoint_dir",
+            self.checkpoint_interval
+        );
+        anyhow::ensure!(
+            !self.resume || self.checkpoint_dir.is_some(),
+            "resume needs a checkpoint_dir to restore from"
+        );
+        Ok(())
+    }
+
+    /// Load from a JSON object (missing keys keep the inert defaults);
+    /// validates cross-field constraints.
+    pub fn from_json(v: &Value) -> anyhow::Result<RunPolicy> {
+        let d = RunPolicy::default();
+        let policy = RunPolicy {
+            elastic: v.bool_or("elastic", d.elastic),
+            checkpoint_dir: v.get("checkpoint_dir").and_then(Value::as_str).map(String::from),
+            checkpoint_interval: v.usize_or("checkpoint_interval", d.checkpoint_interval),
+            resume: v.bool_or("resume", d.resume),
+            faults: v.get("faults").and_then(Value::as_str).map(String::from),
+            die_at_step: v.get("die_at_step").and_then(Value::as_usize),
+            die_rank: v.usize_or("die_rank", d.die_rank),
+        };
+        policy.validate()?;
+        Ok(policy)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::from_pairs(vec![
+            ("elastic", Value::from(self.elastic)),
+            (
+                "checkpoint_dir",
+                self.checkpoint_dir.clone().map(Value::from).unwrap_or(Value::Null),
+            ),
+            ("checkpoint_interval", Value::from(self.checkpoint_interval)),
+            ("resume", Value::from(self.resume)),
+            ("faults", self.faults.clone().map(Value::from).unwrap_or(Value::Null)),
+            (
+                "die_at_step",
+                self.die_at_step.map(Value::from).unwrap_or(Value::Null),
+            ),
+            ("die_rank", Value::from(self.die_rank)),
+        ])
+    }
+
+    /// Apply CLI overrides. `--policy <json|path>` replaces the whole
+    /// policy first (an inline value starts with `{`; anything else is a
+    /// file path); the shorthand flags then override individual fields.
+    pub fn apply_cli(mut self, args: &Args) -> anyhow::Result<RunPolicy> {
+        if let Some(p) = args.str("policy") {
+            let v = if p.trim_start().starts_with('{') {
+                Value::parse(p).map_err(|e| anyhow::anyhow!("--policy inline JSON: {e}"))?
+            } else {
+                super::load_json(p)?
+            };
+            self = RunPolicy::from_json(&v)?;
+        }
+        if args.str("elastic").is_some() {
+            self.elastic = args.bool("elastic");
+        }
+        if let Some(d) = args.str("checkpoint-dir") {
+            self.checkpoint_dir = Some(d.to_string());
+        }
+        if let Some(i) = args.usize("checkpoint-interval") {
+            self.checkpoint_interval = i;
+        }
+        if args.str("resume").is_some() {
+            self.resume = args.bool("resume");
+        }
+        if let Some(f) = args.str("faults") {
+            self.faults = Some(f.to_string());
+        }
+        if let Some(s) = args.usize("die-at-step") {
+            self.die_at_step = Some(s);
+        }
+        self.die_rank = args.usize_or("die-rank", self.die_rank);
+        self.validate()?;
+        Ok(self)
+    }
+}
+
+/// Fluent constructor for [`RunPolicy`]; [`RunPolicyBuilder::build`]
+/// validates the assembled policy.
+pub struct RunPolicyBuilder {
+    policy: RunPolicy,
+}
+
+impl RunPolicyBuilder {
+    pub fn elastic(mut self, on: bool) -> Self {
+        self.policy.elastic = on;
+        self
+    }
+
+    pub fn checkpoint_dir(mut self, dir: impl Into<String>) -> Self {
+        self.policy.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    pub fn checkpoint_interval(mut self, steps: usize) -> Self {
+        self.policy.checkpoint_interval = steps;
+        self
+    }
+
+    pub fn resume(mut self, on: bool) -> Self {
+        self.policy.resume = on;
+        self
+    }
+
+    pub fn faults(mut self, spec: impl Into<String>) -> Self {
+        self.policy.faults = Some(spec.into());
+        self
+    }
+
+    pub fn die_at_step(mut self, step: usize, rank: usize) -> Self {
+        self.policy.die_at_step = Some(step);
+        self.policy.die_rank = rank;
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<RunPolicy> {
+        self.policy.validate()?;
+        Ok(self.policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert_and_roundtrips() {
+        let p = RunPolicy::default();
+        assert!(!p.elastic && !p.resume && p.checkpoint_dir.is_none());
+        assert!(p.fault_plan().unwrap().is_none());
+        let back = RunPolicy::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn builder_builds_and_validates() {
+        let p = RunPolicy::builder()
+            .elastic(true)
+            .checkpoint_dir("ckpts")
+            .checkpoint_interval(25)
+            .faults("rank=2,delay=2ms")
+            .die_at_step(30, 2)
+            .build()
+            .unwrap();
+        assert!(p.elastic);
+        assert_eq!(p.checkpoint_dir.as_deref(), Some("ckpts"));
+        assert_eq!(p.checkpoint_interval, 25);
+        assert_eq!(p.die_at_step, Some(30));
+        assert_eq!(p.die_rank, 2);
+        let plan = p.fault_plan().unwrap().unwrap();
+        assert_eq!(plan.rank, Some(2));
+
+        // Interval without a dir, resume without a dir, junk fault specs:
+        // all rejected at build time.
+        assert!(RunPolicy::builder().checkpoint_interval(5).build().is_err());
+        assert!(RunPolicy::builder().resume(true).build().is_err());
+        assert!(
+            RunPolicy::builder().faults("warp=9").build().is_err(),
+            "fault spec must be validated at build time"
+        );
+    }
+
+    #[test]
+    fn json_roundtrips_full_policy() {
+        let p = RunPolicy::builder()
+            .elastic(true)
+            .checkpoint_dir("out/ck")
+            .checkpoint_interval(10)
+            .resume(true)
+            .faults("delay=1ms")
+            .die_at_step(7, 1)
+            .build()
+            .unwrap();
+        let back = RunPolicy::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // Malformed embedded fault spec fails the load.
+        let mut v = p.to_json();
+        v.set("faults", Value::from("rate=0"));
+        assert!(RunPolicy::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn cli_policy_flag_and_shorthands() {
+        // Inline --policy JSON replaces the policy wholesale.
+        let args = Args::parse(
+            ["x", "--policy", r#"{"elastic": true, "checkpoint_dir": "ck"}"#]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let p = RunPolicy::default().apply_cli(&args).unwrap();
+        assert!(p.elastic);
+        assert_eq!(p.checkpoint_dir.as_deref(), Some("ck"));
+
+        // Shorthands override on top of --policy.
+        let args = Args::parse(
+            [
+                "x",
+                "--policy",
+                r#"{"elastic": true}"#,
+                "--elastic",
+                "false",
+                "--checkpoint-dir",
+                "other",
+                "--checkpoint-interval",
+                "5",
+                "--die-at-step",
+                "12",
+                "--die-rank",
+                "3",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let p = RunPolicy::default().apply_cli(&args).unwrap();
+        assert!(!p.elastic);
+        assert_eq!(p.checkpoint_dir.as_deref(), Some("other"));
+        assert_eq!(p.checkpoint_interval, 5);
+        assert_eq!(p.die_at_step, Some(12));
+        assert_eq!(p.die_rank, 3);
+
+        // Bare --elastic is boolean-true; bad inline JSON is an error.
+        let args = Args::parse(["x", "--elastic"].iter().map(|s| s.to_string()));
+        assert!(RunPolicy::default().apply_cli(&args).unwrap().elastic);
+        let args = Args::parse(["x", "--policy", "{oops"].iter().map(|s| s.to_string()));
+        assert!(RunPolicy::default().apply_cli(&args).is_err());
+    }
+}

@@ -1,6 +1,6 @@
 //! Training-run configuration for the real execution plane.
 
-use super::{ScheduleSpec, SchedulingMode};
+use super::{RunPolicy, ScheduleSpec, SchedulingMode};
 use crate::collectives::{TopologySpec, TransportKind};
 use crate::compression::CodecKind;
 use crate::coordinator::PipelineMode;
@@ -89,6 +89,12 @@ pub struct TrainConfig {
     pub search_steps: usize,
     /// Optional JSONL output path for per-step records.
     pub out: Option<String>,
+    /// Recovery/fault policy: checkpointing, elastic degraded-world
+    /// continuation, restore, and fault injection. Set wholesale with
+    /// `--policy <json|path>` or field-by-field with the shorthand flags
+    /// (`--elastic`, `--checkpoint-dir`, `--checkpoint-interval`,
+    /// `--resume`, `--faults`, `--die-at-step`, `--die-rank`).
+    pub policy: RunPolicy,
 }
 
 impl Default for TrainConfig {
@@ -122,6 +128,7 @@ impl Default for TrainConfig {
             log_every: 10,
             search_steps: 3,
             out: None,
+            policy: RunPolicy::default(),
         }
     }
 }
@@ -171,6 +178,10 @@ impl TrainConfig {
             log_every: v.usize_or("log_every", d.log_every),
             search_steps: v.usize_or("search_steps", d.search_steps),
             out: v.get("out").and_then(Value::as_str).map(String::from),
+            policy: match v.get("policy") {
+                Some(p) => RunPolicy::from_json(p)?,
+                None => d.policy,
+            },
         })
     }
 
@@ -247,6 +258,7 @@ impl TrainConfig {
         if let Some(o) = args.str("out") {
             self.out = Some(o.to_string());
         }
+        self.policy = self.policy.apply_cli(args)?;
         Ok(self)
     }
 
@@ -282,6 +294,7 @@ impl TrainConfig {
             ("artifact", Value::from(self.artifact.clone())),
             ("log_every", Value::from(self.log_every)),
             ("search_steps", Value::from(self.search_steps)),
+            ("policy", self.policy.to_json()),
         ])
     }
 }
@@ -538,5 +551,41 @@ mod tests {
         assert_eq!(c.sched_mode, SchedulingMode::Fixed);
         assert_eq!(c.resched_interval, 11);
         assert_eq!(c.resched_ewma, 0.5);
+    }
+
+    #[test]
+    fn policy_roundtrips_and_takes_cli() {
+        // Default policy is inert and survives the JSON round trip.
+        let d = TrainConfig::default();
+        assert_eq!(d.policy, RunPolicy::default());
+        let c = TrainConfig::from_json(&d.to_json()).unwrap();
+        assert_eq!(c.policy, RunPolicy::default());
+
+        // A nested policy object loads and round-trips through to_json.
+        let v = Value::parse(
+            r#"{"policy": {"elastic": true, "checkpoint_dir": "ck", "checkpoint_interval": 9}}"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert!(c.policy.elastic);
+        assert_eq!(c.policy.checkpoint_dir.as_deref(), Some("ck"));
+        assert_eq!(c.policy.checkpoint_interval, 9);
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.policy, c.policy);
+
+        // Shorthand flags reach the nested policy through apply_cli.
+        let args = Args::parse(
+            ["x", "--elastic", "--checkpoint-dir", "out/ck", "--die-at-step", "30"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = TrainConfig::default().apply_cli(&args).unwrap();
+        assert!(c.policy.elastic);
+        assert_eq!(c.policy.checkpoint_dir.as_deref(), Some("out/ck"));
+        assert_eq!(c.policy.die_at_step, Some(30));
+
+        // Invalid nested policy fails the config load.
+        let v = Value::parse(r#"{"policy": {"resume": true}}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
     }
 }

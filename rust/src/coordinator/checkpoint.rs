@@ -1,0 +1,385 @@
+//! Versioned on-disk snapshots of the full exchange state — the restore
+//! half of elastic training.
+//!
+//! A [`Checkpoint`] captures everything a rank needs to resume a run
+//! **bit-exactly**: the adopted schedule (partition bounds, per-group
+//! routes and codecs, the schedule epoch it was broadcast under), every
+//! codec's error-feedback state flattened to model-length planes
+//! (`flat_state` form), the parameters, and the optimizer's momentum
+//! buffers. Floats are serialized as their IEEE-754 bit patterns (`u32`,
+//! which a JSON f64 represents exactly), so a save → load round trip
+//! changes nothing — not even NaN payloads or signed zeros. The recorded
+//! `param_digest` is re-derived on load and any mismatch is a hard error:
+//! a truncated or hand-edited snapshot must never silently resume.
+//!
+//! Writes go through a temp file + atomic rename, so a rank killed
+//! mid-write (the exact scenario checkpoints exist for) leaves the previous
+//! snapshot intact. The trainer writes one on `--checkpoint-interval`
+//! boundaries and again on a recoverable peer failure, before shrinking the
+//! world (the "emergency" snapshot a re-joining rank restores from).
+
+use std::path::{Path, PathBuf};
+
+use crate::compression::CodecKind;
+use crate::scheduler::{Partition, RouteChoice};
+use crate::training::params_digest;
+use crate::util::json::Value;
+
+/// Bump when the on-disk layout changes incompatibly; `load` refuses
+/// snapshots from any other version rather than guessing.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// One rank's complete resumable state at a step boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Completed optimizer steps; a resumed run continues at this index.
+    pub step: usize,
+    /// World size the snapshot was taken under (a degraded-world snapshot
+    /// records the shrunk size).
+    pub world: usize,
+    /// Rank that wrote the snapshot.
+    pub rank: usize,
+    /// Run seed — cross-checked on restore so a snapshot cannot resume a
+    /// differently-seeded run undetected.
+    pub seed: u64,
+    /// The run's base codec (`--codec`).
+    pub base_codec: CodecKind,
+    /// Adopted partition bounds over the backprop-ordered tensors.
+    pub bounds: Vec<usize>,
+    /// Per-group collective routes (empty = communicator's global route).
+    pub routes: Vec<RouteChoice>,
+    /// Per-group codecs (empty = base codec everywhere).
+    pub codecs: Vec<CodecKind>,
+    /// Schedule epoch the adopted schedule was broadcast under.
+    pub schedule_epoch: u64,
+    /// Per-tensor parameters, forward order.
+    pub params: Vec<Vec<f32>>,
+    /// Per-tensor optimizer momentum, forward order.
+    pub velocity: Vec<Vec<f32>>,
+    /// Codec state planes flattened to full model length
+    /// ([`crate::coordinator::ExchangeEngine::flat_state`] form).
+    pub codec_state: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    /// Conventional snapshot path for `rank` under `dir`.
+    pub fn rank_path(dir: &Path, rank: usize) -> PathBuf {
+        dir.join(format!("ckpt-rank{rank}.json"))
+    }
+
+    /// The partition the snapshot's schedule state describes, validated
+    /// against the recorded tensor count.
+    pub fn partition(&self) -> anyhow::Result<Partition> {
+        Partition::try_from_bounds(self.params.len(), self.bounds.clone())
+    }
+
+    /// Digest of the snapshotted parameters (the integrity field `load`
+    /// re-derives, and the value a resumed run's `param_digest` must match
+    /// at the same step).
+    pub fn param_digest(&self) -> u64 {
+        params_digest(&self.params)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::from_pairs(vec![
+            ("version", Value::from(CHECKPOINT_VERSION)),
+            ("step", Value::from(self.step)),
+            ("world", Value::from(self.world)),
+            ("rank", Value::from(self.rank)),
+            ("seed", Value::from(self.seed)),
+            ("codec", Value::from(self.base_codec.name())),
+            ("bounds", Value::Arr(self.bounds.iter().map(|&b| Value::from(b)).collect())),
+            (
+                "routes",
+                Value::Arr(self.routes.iter().map(|r| Value::from(r.name())).collect()),
+            ),
+            (
+                "codecs",
+                Value::Arr(self.codecs.iter().map(|c| Value::from(c.name())).collect()),
+            ),
+            ("schedule_epoch", Value::from(self.schedule_epoch)),
+            ("param_digest", Value::from(format!("{:016x}", self.param_digest()))),
+            ("params", planes_to_json(&self.params)),
+            ("velocity", planes_to_json(&self.velocity)),
+            ("codec_state", planes_to_json(&self.codec_state)),
+        ])
+    }
+
+    /// Strict inverse of [`Checkpoint::to_json`]: unknown version, missing
+    /// or mistyped fields, malformed bounds, shape mismatches, and a
+    /// param-digest mismatch are all errors — never a best-effort resume.
+    pub fn from_json(v: &Value) -> anyhow::Result<Checkpoint> {
+        let version = field_u64(v, "version")?;
+        anyhow::ensure!(
+            version == CHECKPOINT_VERSION,
+            "checkpoint version {version} (this build reads {CHECKPOINT_VERSION})"
+        );
+        let params = planes_from_json(field(v, "params")?, "params")?;
+        let recorded = field_str(v, "param_digest")?;
+        let want = u64::from_str_radix(recorded, 16)
+            .map_err(|e| anyhow::anyhow!("checkpoint param_digest '{recorded}': {e}"))?;
+        let got = params_digest(&params);
+        anyhow::ensure!(
+            got == want,
+            "checkpoint integrity: params digest {got:016x} != recorded {want:016x}"
+        );
+        let velocity = planes_from_json(field(v, "velocity")?, "velocity")?;
+        anyhow::ensure!(
+            velocity.len() == params.len(),
+            "checkpoint: {} velocity tensors for {} param tensors",
+            velocity.len(),
+            params.len()
+        );
+        for (t, (p, vel)) in params.iter().zip(&velocity).enumerate() {
+            anyhow::ensure!(
+                p.len() == vel.len(),
+                "checkpoint: tensor {t} has {} params but {} velocity elements",
+                p.len(),
+                vel.len()
+            );
+        }
+        let bounds = field(v, "bounds")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint bounds: not an array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                b.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint bounds[{i}]: not a usize ({b:?})"))
+            })
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        let partition = Partition::try_from_bounds(params.len(), bounds.clone())?;
+        let routes = field(v, "routes")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint routes: not an array"))?
+            .iter()
+            .map(|r| {
+                r.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint route {r:?}: not a string"))
+                    .and_then(RouteChoice::from_name)
+            })
+            .collect::<anyhow::Result<Vec<RouteChoice>>>()?;
+        anyhow::ensure!(
+            routes.is_empty() || routes.len() == partition.num_groups(),
+            "checkpoint: {} routes for {} groups",
+            routes.len(),
+            partition.num_groups()
+        );
+        let codecs = field(v, "codecs")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint codecs: not an array"))?
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint codec {c:?}: not a string"))
+                    .and_then(CodecKind::from_name)
+            })
+            .collect::<anyhow::Result<Vec<CodecKind>>>()?;
+        anyhow::ensure!(
+            codecs.is_empty() || codecs.len() == partition.num_groups(),
+            "checkpoint: {} codecs for {} groups",
+            codecs.len(),
+            partition.num_groups()
+        );
+        Ok(Checkpoint {
+            step: field_u64(v, "step")? as usize,
+            world: field_u64(v, "world")? as usize,
+            rank: field_u64(v, "rank")? as usize,
+            seed: field_u64(v, "seed")?,
+            base_codec: CodecKind::from_name(field_str(v, "codec")?)?,
+            bounds,
+            routes,
+            codecs,
+            schedule_epoch: field_u64(v, "schedule_epoch")?,
+            params,
+            velocity,
+            codec_state: planes_from_json(field(v, "codec_state")?, "codec_state")?,
+        })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path`. A rank killed mid-write leaves the previous snapshot intact.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| anyhow::anyhow!("checkpoint mkdir {}: {e}", dir.display()))?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string_compact())
+            .map_err(|e| anyhow::anyhow!("checkpoint write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("checkpoint rename to {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("checkpoint read {}: {e}", path.display()))?;
+        let v = Value::parse(&text)
+            .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))?;
+        Checkpoint::from_json(&v)
+            .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))
+    }
+}
+
+fn field<'a>(v: &'a Value, key: &str) -> anyhow::Result<&'a Value> {
+    v.get(key).ok_or_else(|| anyhow::anyhow!("checkpoint: missing field '{key}'"))
+}
+
+fn field_u64(v: &Value, key: &str) -> anyhow::Result<u64> {
+    field(v, key)?
+        .as_usize()
+        .map(|n| n as u64)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint field '{key}': not an unsigned integer"))
+}
+
+fn field_str<'a>(v: &'a Value, key: &str) -> anyhow::Result<&'a str> {
+    field(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("checkpoint field '{key}': not a string"))
+}
+
+/// Per-tensor f32 planes as nested arrays of `u32` bit patterns — every
+/// pattern is exactly representable as a JSON f64, so the encoding is
+/// lossless for all f32 values including NaNs and signed zeros.
+fn planes_to_json(planes: &[Vec<f32>]) -> Value {
+    Value::Arr(
+        planes
+            .iter()
+            .map(|p| Value::Arr(p.iter().map(|&x| Value::from(x.to_bits() as u64)).collect()))
+            .collect(),
+    )
+}
+
+fn planes_from_json(v: &Value, what: &str) -> anyhow::Result<Vec<Vec<f32>>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("checkpoint {what}: not an array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(t, plane)| {
+            let inner = plane
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint {what}[{t}]: not an array"))?;
+            inner
+                .iter()
+                .enumerate()
+                .map(|(i, b)| {
+                    let bits = b.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("checkpoint {what}[{t}][{i}]: not a bit pattern ({b:?})")
+                    })?;
+                    anyhow::ensure!(
+                        bits <= u32::MAX as usize,
+                        "checkpoint {what}[{t}][{i}]: {bits} exceeds a u32 bit pattern"
+                    );
+                    Ok(f32::from_bits(bits as u32))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 17,
+            world: 4,
+            rank: 1,
+            seed: 42,
+            base_codec: CodecKind::EfSignSgd,
+            bounds: vec![0, 2, 3],
+            routes: vec![RouteChoice::Flat, RouteChoice::Hierarchical],
+            codecs: vec![CodecKind::EfSignSgd, CodecKind::Fp32],
+            schedule_epoch: 3,
+            // Awkward values on purpose: subnormal, -0.0, f32::MAX, and
+            // irrationals that don't round-trip through decimal printing.
+            params: vec![vec![0.1, -0.0, f32::MIN_POSITIVE / 8.0], vec![1.0 / 3.0]],
+            velocity: vec![vec![f32::MAX, -2.5e-7, 0.0], vec![-1.0 / 7.0]],
+            codec_state: vec![vec![3.14159, -0.001, 7.0, 1e-30]],
+        }
+    }
+
+    fn bits(planes: &[Vec<f32>]) -> Vec<Vec<u32>> {
+        planes.iter().map(|p| p.iter().map(|x| x.to_bits()).collect()).collect()
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let c = sample();
+        let text = c.to_json().to_string_compact();
+        let back = Checkpoint::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(bits(&back.params), bits(&c.params));
+        assert_eq!(bits(&back.velocity), bits(&c.velocity));
+        assert_eq!(bits(&back.codec_state), bits(&c.codec_state));
+        assert_eq!(back.partition().unwrap(), c.partition().unwrap());
+    }
+
+    #[test]
+    fn nan_payloads_survive() {
+        let mut c = sample();
+        c.params[0][0] = f32::from_bits(0x7fc0_1234); // NaN with a payload
+        let text = c.to_json().to_string_compact();
+        let back = Checkpoint::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.params[0][0].to_bits(), 0x7fc0_1234);
+    }
+
+    #[test]
+    fn save_load_round_trips_on_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("mergecomp-ckpt-test-{}", std::process::id()));
+        let path = Checkpoint::rank_path(&dir, 1);
+        let c = sample();
+        c.save(&path).unwrap();
+        // Saving again overwrites atomically (the rename path).
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tampered_params_fail_the_digest_check() {
+        let c = sample();
+        let mut v = c.to_json();
+        // Flip one parameter bit pattern in the serialized form.
+        if let Value::Obj(m) = &mut v {
+            if let Some(Value::Arr(planes)) = m.get_mut("params") {
+                if let Value::Arr(p0) = &mut planes[0] {
+                    p0[0] = Value::from(0x3f80_0000u64); // 1.0f32
+                }
+            }
+        }
+        let err = Checkpoint::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("integrity"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_and_malformed_fields_are_errors() {
+        let c = sample();
+        let mut v = c.to_json();
+        v.set("version", Value::from(CHECKPOINT_VERSION + 1));
+        assert!(Checkpoint::from_json(&v).is_err());
+
+        let mut v = c.to_json();
+        v.set("bounds", Value::parse("[0, 2, 2, 3]").unwrap());
+        assert!(Checkpoint::from_json(&v).is_err(), "degenerate bounds");
+
+        let mut v = c.to_json();
+        v.set("routes", Value::parse(r#"["flat"]"#).unwrap());
+        assert!(Checkpoint::from_json(&v).is_err(), "route/group count mismatch");
+
+        let mut v = c.to_json();
+        if let Value::Obj(m) = &mut v {
+            m.remove("param_digest");
+        }
+        assert!(Checkpoint::from_json(&v).is_err(), "missing digest");
+
+        // Truncated file: parse error surfaces, not a panic.
+        let text = c.to_json().to_string_compact();
+        assert!(Value::parse(&text[..text.len() / 2]).is_err());
+    }
+}

@@ -13,7 +13,7 @@
 //! the engine sees only `Comm`, so sockets vs channels cannot change a bit.
 //!
 //! Failure semantics: a peer dying mid-collective fails the exchange with a
-//! typed [`TransportError`] (rank, peer, tag) instead of poisoning the
+//! typed [`Error`] (rank, peer, tag) instead of poisoning the
 //! process — the trainer turns it into a step-level error with context.
 //!
 //! Allocation discipline: merge/decode scratch is double-buffered
@@ -24,7 +24,7 @@
 //! backend in `tests/transport_equivalence.rs`).
 
 use super::{ExchangeStats, GroupSample, PipelineMode};
-use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome, CommRoute, TransportError};
+use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome, CommRoute, Error};
 use crate::compression::{Codec, CodecKind, Collective};
 use crate::scheduler::{Partition, RouteChoice};
 use crate::util::rng::Xoshiro256;
@@ -234,6 +234,37 @@ impl ExchangeEngine {
         planes
     }
 
+    /// Inverse of [`ExchangeEngine::flat_state`]: install codec state from
+    /// full-model-length planes (backprop order) — the checkpoint-restore
+    /// path. Callers must first restore the partition and per-group codecs
+    /// the planes were captured under; each group then consumes as many
+    /// leading planes as its codec holds (mirroring the zero-fill that
+    /// `flat_state` applies to a group's missing planes).
+    pub fn load_flat_state(&mut self, planes: &[Vec<f32>]) -> anyhow::Result<()> {
+        let total: usize = self.sizes.iter().sum();
+        for (p, plane) in planes.iter().enumerate() {
+            anyhow::ensure!(
+                plane.len() == total,
+                "load_flat_state: plane {p} has {} elements, model has {total}",
+                plane.len()
+            );
+        }
+        let mut off = 0;
+        for (codec, &n) in self.codecs.iter_mut().zip(&self.group_elems) {
+            let want = codec.state_planes().len();
+            anyhow::ensure!(
+                want <= planes.len(),
+                "load_flat_state: codec '{}' holds {want} planes but only {} supplied",
+                codec.kind().name(),
+                planes.len()
+            );
+            let views: Vec<&[f32]> = planes[..want].iter().map(|p| &p[off..off + n]).collect();
+            codec.load_state_planes(&views);
+            off += n;
+        }
+        Ok(())
+    }
+
     /// Switch to a new partition over the same tensors, remapping all codec
     /// state (EF residuals, momentum, DGC velocity) into the new grouping
     /// **bit-exactly**: groups concatenate tensors in backprop order, so the
@@ -288,7 +319,7 @@ impl ExchangeEngine {
     /// Aggregate gradients across the group. `grads` holds per-tensor
     /// buffers in **backprop order**; on success each buffer contains the
     /// mean of the (compressed) gradients over all workers. A dead rank
-    /// fails the step with a typed [`TransportError`] naming the peer and
+    /// fails the step with a typed [`Error`] naming the peer and
     /// tag.
     pub fn exchange(
         &mut self,
@@ -296,7 +327,7 @@ impl ExchangeEngine {
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
         mode: PipelineMode,
-    ) -> Result<ExchangeStats, TransportError> {
+    ) -> Result<ExchangeStats, Error> {
         assert_eq!(grads.len(), self.sizes.len());
         let routed = self.routes.is_some();
         let result = match mode {
@@ -325,7 +356,7 @@ impl ExchangeEngine {
         comm: &mut Comm,
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
-    ) -> Result<ExchangeStats, TransportError> {
+    ) -> Result<ExchangeStats, Error> {
         let world = comm.world() as f32;
         let rank = comm.rank();
         let y = self.partition.num_groups();
@@ -436,7 +467,7 @@ impl ExchangeEngine {
         comm: &mut Comm,
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
-    ) -> Result<ExchangeStats, TransportError> {
+    ) -> Result<ExchangeStats, Error> {
         let world = comm.world() as f32;
         let rank = comm.rank();
         let y = self.partition.num_groups();
@@ -467,7 +498,7 @@ impl ExchangeEngine {
 
         let effective = &effective;
         let (result, _lane_busy) =
-            lane_scope(comm, |lane| -> Result<(), TransportError> {
+            lane_scope(comm, |lane| -> Result<(), Error> {
                 let mut inflight: Option<(usize, CommHandle)> = None;
                 for j in 0..y {
                     let n = group_elems[j];
@@ -570,7 +601,7 @@ fn complete_group(
     rank: usize,
     stats: &mut ExchangeStats,
     group_log: &mut [GroupSample],
-) -> Result<(), TransportError> {
+) -> Result<(), Error> {
     let before = (
         stats.comm_secs,
         stats.comm_exposed_secs,
@@ -615,7 +646,7 @@ fn complete_group(
 ///
 /// The outcome shape must match the group codec's collective: handing an
 /// allreduce result to an allgather codec (or vice versa) is a typed
-/// [`TransportError::Codec`] naming the group and codec — the failure a
+/// [`Error::codec`] naming the group and codec — the failure a
 /// mixed-codec schedule bug would otherwise surface as silent garbage.
 #[allow(clippy::too_many_arguments)]
 fn finish_group(
@@ -632,7 +663,7 @@ fn finish_group(
     world: f32,
     rank: usize,
     stats: &mut ExchangeStats,
-) -> Result<(), TransportError> {
+) -> Result<(), Error> {
     let kind = codecs[j].kind();
     match (outcome, kind.collective()) {
         (CommOutcome::Reduced(wire), Collective::AllReduce) => {
@@ -670,12 +701,10 @@ fn finish_group(
                 CommOutcome::Reduced(_) => "an allreduce",
                 CommOutcome::Gathered(_) => "an allgather",
             };
-            return Err(TransportError::Codec {
-                detail: format!(
-                    "group {j}: codec '{}' expects {expected:?} but received {got} outcome",
-                    kind.name()
-                ),
-            });
+            return Err(Error::codec(format!(
+                "group {j}: codec '{}' expects {expected:?} but received {got} outcome",
+                kind.name()
+            )));
         }
     }
 
@@ -846,6 +875,35 @@ mod tests {
             grads
         });
         assert_eq!(results[0], results[1], "ranks diverged after repartition");
+    }
+
+    #[test]
+    fn flat_state_round_trips_through_load() {
+        let sizes = vec![40usize, 25, 70];
+        let results = run_comm_group(2, move |c| {
+            let mut eng = ExchangeEngine::new(
+                CodecKind::EfSignSgd,
+                Partition::naive_even(3, 2),
+                sizes.clone(),
+            );
+            let mut rng = Xoshiro256::seed_from_u64(31 + c.rank() as u64);
+            let mut grads = make_grads(c.rank(), &sizes);
+            eng.exchange(c, &mut grads, &mut rng, PipelineMode::Serial)
+                .unwrap();
+            (eng.flat_state(), eng.state_digest())
+        });
+        for (planes, digest) in results {
+            let mut fresh = ExchangeEngine::new(
+                CodecKind::EfSignSgd,
+                Partition::naive_even(3, 2),
+                vec![40, 25, 70],
+            );
+            assert_ne!(fresh.state_digest(), digest, "exchange must build EF state");
+            fresh.load_flat_state(&planes).unwrap();
+            assert_eq!(fresh.state_digest(), digest, "restore must be bit-exact");
+            // Shape violations are typed errors, not silent truncation.
+            assert!(fresh.load_flat_state(&[vec![0.0; 10]]).is_err());
+        }
     }
 
     #[test]

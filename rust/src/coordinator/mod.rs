@@ -27,8 +27,10 @@
 //! of the simulator's `comm_total` / `comm_exposed` split, and the quantity
 //! Eq. 7's Σp(x_i) overlap term hides.
 
+pub mod checkpoint;
 pub mod engine;
 
+pub use checkpoint::{Checkpoint, CHECKPOINT_VERSION};
 pub use engine::ExchangeEngine;
 
 /// How the exchange engine schedules encode / collective / decode.

@@ -62,9 +62,17 @@ fn print_usage() {
                       --rendezvous HOST:PORT [--advertise HOST]\n\
                       [--bootstrap-timeout-secs S]]\n\
                      [--synthetic [PROFILE]]   (no PJRT needed; CI smoke path)\n\
+                     [--policy f.json|'{{...}}']  (typed run policy: elastic,\n\
+                      checkpointing, fault injection — see DESIGN.md)\n\
+                     [--elastic] [--checkpoint-dir D] [--checkpoint-interval K]\n\
+                     [--resume] [--faults SPEC] [--die-at-step K --die-rank R]\n\
+                      (shorthands over --policy; SPEC grammar e.g.\n\
+                      rank=2,delay=2ms,jitter=1ms,rate=65536/100ms,drop-after=40)\n\
            launch    --workers N [--rendezvous HOST:PORT] [--out-dir D]\n\
-                     [--timeout-secs S] + any train flags (forwarded to all ranks;\n\
-                     --topology nodes=G maps the local processes onto G synthetic nodes)\n\
+                     [--timeout-secs S] [--expect-dead R1,R2] + any train flags\n\
+                     (forwarded to all ranks; --topology nodes=G maps the local\n\
+                     processes onto G synthetic nodes; --expect-dead excludes\n\
+                     chaos-killed ranks from the aggregate verdict)\n\
            simulate  --model M --codec C --fabric F --workers a,b,c --schedule S\n\
            search    --model M --codec C --fabric F --workers N [--ymax Y] [--alpha A]\n\
            overhead  --codec C [--sizes 64,1024,...]\n\
@@ -118,6 +126,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     // The digest line is the cross-process agreement contract: `launch`
     // (and the CI smoke job) compare it across ranks.
     println!("rank {} param digest {:016x}", result.rank, result.param_digest);
+    if let Some(s) = result.resumed_from_step {
+        println!("rank {} resumed from a checkpoint at step {s}", result.rank);
+    }
+    if result.recoveries > 0 {
+        println!(
+            "rank {} survived {} elastic recover{}; finished at world size {}",
+            result.rank,
+            result.recoveries,
+            if result.recoveries == 1 { "y" } else { "ies" },
+            result.world_at_end
+        );
+    }
     if result.rank == 0 {
         println!(
             "partition: {} groups, bounds {:?} ({} search evals, {} online reschedules, epoch {})",
@@ -188,7 +208,23 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         "transport",
         "rank",
         "out",
+        "expect-dead",
     ];
+    // Chaos runs: ranks listed here are expected to die mid-run (pair with
+    // the forwarded --elastic/--die-at-step/--die-rank train flags); the
+    // aggregate verdict is computed over the survivors.
+    let expect_dead: Vec<usize> = match args.str("expect-dead") {
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("--expect-dead '{s}': {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?,
+        None => Vec::new(),
+    };
     let mut train_flags = Vec::new();
     for (k, v) in &args.flags {
         if LAUNCHER_FLAGS.contains(&k.as_str()) {
@@ -205,6 +241,7 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         out_dir: out_dir.into(),
         train_flags,
         timeout: std::time::Duration::from_secs(args.u64_or("timeout-secs", 600)),
+        expect_dead,
     };
     if let Some(t) = args.str("topology") {
         // Forwarded verbatim to every worker: the launcher maps the local
@@ -225,13 +262,13 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
     }
     anyhow::ensure!(
         report.all_exited_zero,
-        "not every rank exited 0 — see the per-rank logs in {out_dir}/"
+        "not every surviving rank exited 0 — see the per-rank logs in {out_dir}/"
     );
     anyhow::ensure!(
         report.digests_match,
-        "param digests diverged across ranks — transport bug, see {out_dir}/"
+        "param digests diverged across surviving ranks — transport bug, see {out_dir}/"
     );
-    println!("all {world} ranks exited 0 with identical param digests");
+    println!("all surviving ranks ({world} launched) exited 0 with identical param digests");
     Ok(())
 }
 

@@ -417,6 +417,47 @@ impl Driver {
         self.metrics.gauge("resched.epoch", self.epoch as f64);
     }
 
+    /// Restore the adopted schedule from a checkpoint: the
+    /// `(partition, routes, codecs)` triple and the epoch it was adopted
+    /// under. Unlike [`Driver::apply`] this neither bumps the epoch nor
+    /// counts as a reschedule — the switch happened in a previous
+    /// incarnation of the run; this driver merely resumes from it.
+    /// Counters (`reschedules`, `search_evals`) restart at zero: they
+    /// describe this process's work. The estimator's fits also restart
+    /// cold and re-warm from live measurements.
+    pub fn restore_schedule(
+        &mut self,
+        partition: Partition,
+        routes: Vec<RouteChoice>,
+        codecs: Vec<CodecKind>,
+        epoch: u64,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            partition.num_tensors() == self.sizes.len(),
+            "restore_schedule: partition is over {} tensors, driver has {}",
+            partition.num_tensors(),
+            self.sizes.len()
+        );
+        anyhow::ensure!(
+            routes.is_empty() || routes.len() == partition.num_groups(),
+            "restore_schedule: {} routes for {} groups",
+            routes.len(),
+            partition.num_groups()
+        );
+        anyhow::ensure!(
+            codecs.is_empty() || codecs.len() == partition.num_groups(),
+            "restore_schedule: {} codecs for {} groups",
+            codecs.len(),
+            partition.num_groups()
+        );
+        self.partition = partition;
+        self.routes = routes;
+        self.codecs = codecs;
+        self.epoch = epoch;
+        self.metrics.gauge("resched.epoch", self.epoch as f64);
+        Ok(())
+    }
+
     /// Distribute one reschedule decision: rank 0 folds `decision` into
     /// its schedule state and broadcasts `{epoch, bounds, routes, codecs}`;
     /// followers adopt the broadcast schedule iff its epoch is ahead of

@@ -11,7 +11,7 @@
 //! schedule. Both modes are bit-identical in results and codec state (see
 //! `tests/pipeline_equivalence.rs`).
 
-use crate::collectives::{Comm, TransportError};
+use crate::collectives::{Comm, Error};
 use crate::compression::CodecKind;
 use crate::coordinator::ExchangeEngine;
 pub use crate::coordinator::{ExchangeStats, GroupSample, PipelineMode};
@@ -99,21 +99,31 @@ impl GradExchange {
         self.engine.group_codecs()
     }
 
-    /// Codec state planes flattened to full-model length (test support).
+    /// Codec state planes flattened to full-model length (test support,
+    /// checkpointing).
     pub fn flat_state(&self) -> Vec<Vec<f32>> {
         self.engine.flat_state()
+    }
+
+    /// Overwrite all per-group codec state from full-model-length planes —
+    /// the inverse of [`GradExchange::flat_state`], used by checkpoint
+    /// restore; see [`crate::coordinator::ExchangeEngine::load_flat_state`].
+    pub fn load_flat_state(&mut self, planes: &[Vec<f32>]) -> anyhow::Result<()> {
+        self.engine.load_flat_state(planes)
     }
 
     /// Aggregate gradients across the group. `grads` holds per-tensor
     /// buffers in **backprop order**; on success each buffer contains the
     /// mean of the (compressed) gradients over all workers. A dead rank
-    /// fails the step with a typed [`TransportError`].
+    /// fails the step with a typed [`Error`] whose
+    /// [`is_recoverable`](Error::is_recoverable) classification drives the
+    /// trainer's elastic recovery.
     pub fn exchange(
         &mut self,
         comm: &mut Comm,
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
-    ) -> Result<ExchangeStats, TransportError> {
+    ) -> Result<ExchangeStats, Error> {
         self.engine.exchange(comm, grads, rng, self.mode)
     }
 }

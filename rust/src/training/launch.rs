@@ -19,6 +19,7 @@
 //!
 //! [`RunResult`]: super::RunResult
 
+use super::trainer::RESULT_SCHEMA_VERSION;
 use crate::config::load_json;
 use std::path::{Path, PathBuf};
 use std::process::{Command, Stdio};
@@ -40,14 +41,22 @@ pub struct LaunchOptions {
     pub train_flags: Vec<String>,
     /// Kill the whole group after this budget.
     pub timeout: Duration,
+    /// Ranks expected to die mid-run (chaos runs: `--die-at-step` under
+    /// `--elastic`). Their exit codes and missing results do not fail the
+    /// aggregate verdict; `all_exited_zero` and `digests_match` are
+    /// computed over the survivors only.
+    pub expect_dead: Vec<usize>,
 }
 
 /// One worker process's fate.
 #[derive(Debug, Clone)]
 pub struct RankOutcome {
     pub rank: usize,
-    /// Exit code; `None` if the process was killed (timeout).
+    /// Exit code; `None` if the process was killed (timeout/signal).
     pub exit_code: Option<i32>,
+    /// The `"schema"` field of the rank's JSON result, if it exited 0
+    /// (`None` for pre-versioning outputs).
+    pub schema: Option<u64>,
     /// `param_digest` parsed from the rank's JSON result, if it exited 0.
     pub param_digest: Option<String>,
     pub out_path: PathBuf,
@@ -60,8 +69,10 @@ pub struct LaunchReport {
     pub world: usize,
     pub rendezvous: String,
     pub ranks: Vec<RankOutcome>,
+    /// Every rank not listed in `expect_dead` exited 0.
     pub all_exited_zero: bool,
-    /// True iff every rank's digest is present and equal to rank 0's.
+    /// True iff every surviving rank's digest is present and equal to the
+    /// first survivor's.
     pub digests_match: bool,
 }
 
@@ -161,26 +172,50 @@ pub fn launch_local(opts: &LaunchOptions) -> anyhow::Result<LaunchReport> {
 
     let mut ranks = Vec::with_capacity(opts.world);
     for (i, (rank, _child, out_path, log_path)) in children.into_iter().enumerate() {
-        let param_digest = if exit_codes[i] == Some(0) {
-            load_json(&out_path)
-                .ok()
-                .and_then(|v| v.get("param_digest").and_then(|d| d.as_str().map(String::from)))
+        let (schema, param_digest) = if exit_codes[i] == Some(0) {
+            match load_json(&out_path) {
+                Ok(v) => (
+                    v.get("schema").and_then(|s| s.as_usize()).map(|s| s as u64),
+                    v.get("param_digest").and_then(|d| d.as_str().map(String::from)),
+                ),
+                Err(_) => (None, None),
+            }
         } else {
-            None
+            (None, None)
         };
         ranks.push(RankOutcome {
             rank,
             exit_code: exit_codes[i],
+            schema,
             param_digest,
             out_path,
             log_path,
         });
     }
-    let all_exited_zero = ranks.iter().all(|r| r.exit_code == Some(0));
-    let digests_match = match ranks.first().and_then(|r| r.param_digest.as_ref()) {
-        Some(d0) => ranks.iter().all(|r| r.param_digest.as_ref() == Some(d0)),
-        None => false,
-    };
+    // Fail fast on mixed result schemas: aggregating outputs written by
+    // different builds (or by one pre-versioning build, schema `None`) is
+    // a hard error — a digest comparison across layouts proves nothing.
+    let schemas: std::collections::BTreeSet<Option<u64>> = ranks
+        .iter()
+        .filter(|r| r.exit_code == Some(0) && !opts.expect_dead.contains(&r.rank))
+        .map(|r| r.schema)
+        .collect();
+    anyhow::ensure!(
+        schemas.len() <= 1,
+        "mixed result schemas across ranks: {schemas:?} — every worker must run the same \
+         build (this one writes schema {RESULT_SCHEMA_VERSION})"
+    );
+    let all_exited_zero;
+    let digests_match;
+    {
+        let survivors: Vec<&RankOutcome> =
+            ranks.iter().filter(|r| !opts.expect_dead.contains(&r.rank)).collect();
+        all_exited_zero = survivors.iter().all(|r| r.exit_code == Some(0));
+        digests_match = match survivors.first().and_then(|r| r.param_digest.as_ref()) {
+            Some(d0) => survivors.iter().all(|r| r.param_digest.as_ref() == Some(d0)),
+            None => false,
+        };
+    }
     Ok(LaunchReport {
         world: opts.world,
         rendezvous,
@@ -230,6 +265,7 @@ mod tests {
             out_dir: std::env::temp_dir().join("mergecomp-launch-empty"),
             train_flags: vec![],
             timeout: Duration::from_secs(1),
+            expect_dead: vec![],
         };
         assert!(launch_local(&opts).is_err());
     }

@@ -20,4 +20,5 @@ pub use launch::{launch_local, LaunchOptions, LaunchReport, RankOutcome};
 pub use optimizer::SgdMomentum;
 pub use trainer::{
     init_params as trainer_init_params, params_digest, train, RunResult, StepRecord,
+    RESULT_SCHEMA_VERSION,
 };

@@ -28,6 +28,33 @@ impl SgdMomentum {
         self.lr
     }
 
+    /// Per-tensor momentum buffers (construction order) — checkpointed
+    /// alongside the parameters so a restored run resumes bit-exactly.
+    pub fn velocity(&self) -> &[Vec<f32>] {
+        &self.velocity
+    }
+
+    /// Overwrite the momentum buffers from a checkpoint. Shapes must match
+    /// construction exactly.
+    pub fn load_velocity(&mut self, velocity: &[Vec<f32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            velocity.len() == self.velocity.len(),
+            "load_velocity: {} tensors, optimizer has {}",
+            velocity.len(),
+            self.velocity.len()
+        );
+        for (t, (src, dst)) in velocity.iter().zip(&mut self.velocity).enumerate() {
+            anyhow::ensure!(
+                src.len() == dst.len(),
+                "load_velocity: tensor {t} has {} elements, optimizer has {}",
+                src.len(),
+                dst.len()
+            );
+            dst.copy_from_slice(src);
+        }
+        Ok(())
+    }
+
     /// Apply one update. `params` and `grads` are per-tensor buffers in the
     /// same order as construction.
     pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {

@@ -25,13 +25,16 @@
 //! every rank reports [`RunResult::param_digest`] so a launcher can assert
 //! cross-process agreement.
 
+use std::path::{Path, PathBuf};
+
 use super::exchange::{ExchangeStats, GradExchange};
 use super::optimizer::SgdMomentum;
 use crate::collectives::{
-    run_comm_group, tcp_endpoint_with_nodes, Comm, CommRoute, TcpConfig, TransportKind,
+    run_comm_group, tcp_endpoint_with_nodes, Comm, CommRoute, Error, TcpConfig, TransportKind,
 };
 use crate::compression::{Codec as _, CodecKind, Collective};
 use crate::config::{ScheduleSpec, SchedulingMode, TrainConfig};
+use crate::coordinator::Checkpoint;
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::profiles::ModelProfile;
 use crate::runtime::{StepMeta, TensorMeta, TrainStep};
@@ -44,6 +47,17 @@ use crate::scheduler::{
 use crate::util::json::Value;
 use crate::util::rng::Xoshiro256;
 use crate::util::stats::Stopwatch;
+
+/// Version of the [`RunResult::to_json`] layout (the `"schema"` field, and
+/// the first key in the object). Bump whenever a field is added, removed,
+/// or changes meaning; `mergecomp launch` refuses to aggregate rank outputs
+/// with mixed schemas. Every field is documented in `DESIGN.md`.
+pub const RESULT_SCHEMA_VERSION: u64 = 2;
+
+/// Cap on elastic recovery rounds within a single training step — each
+/// round shrinks the world by at least one rank, so this only trips on a
+/// cascade of failures (at which point bailing out beats thrashing).
+const MAX_RECOVERIES_PER_STEP: usize = 4;
 
 /// One logged step.
 #[derive(Debug, Clone)]
@@ -101,6 +115,14 @@ pub struct RunResult {
     /// synchronous SGD means every rank must report the same value, and a
     /// run over TCP must match the same config over the in-process mesh.
     pub param_digest: u64,
+    /// World size when training ended — smaller than the configured world
+    /// if elastic recovery shrank the run around dead ranks.
+    pub world_at_end: usize,
+    /// Elastic recovery rounds this rank performed (0 = no peer was lost).
+    pub recoveries: usize,
+    /// The completed-step count the run resumed from (`--resume`), `None`
+    /// for a fresh run.
+    pub resumed_from_step: Option<usize>,
 }
 
 impl RunResult {
@@ -117,9 +139,16 @@ impl RunResult {
             })
             .collect();
         Value::from_pairs(vec![
+            ("schema", Value::from(RESULT_SCHEMA_VERSION)),
             ("config", cfg.to_json()),
             ("rank", Value::from(self.rank)),
             ("param_digest", Value::from(format!("{:016x}", self.param_digest))),
+            ("world_at_end", Value::from(self.world_at_end)),
+            ("recoveries", Value::from(self.recoveries)),
+            (
+                "resumed_from_step",
+                self.resumed_from_step.map(Value::from).unwrap_or(Value::Null),
+            ),
             ("partition_bounds", Value::Arr(
                 self.partition.bounds().iter().map(|&b| Value::from(b)).collect(),
             )),
@@ -317,6 +346,21 @@ impl StepRunner {
         match self {
             StepRunner::Pjrt { exec, .. } => exec.last_exec_secs,
             StepRunner::Synthetic { last_secs, .. } => *last_secs,
+        }
+    }
+
+    /// Force the synthetic stream position — checkpoint resume fast-forwards
+    /// past already-completed steps, and an elastic retry rewinds the failed
+    /// step. Each synthetic draw reseeds from `(seed, rank, step)`, so the
+    /// position fully determines the stream. Returns `false` for the PJRT
+    /// runner: a consumed batch cannot be replayed.
+    fn seek(&mut self, next: u64) -> bool {
+        match self {
+            StepRunner::Pjrt { .. } => false,
+            StepRunner::Synthetic { next_step, .. } => {
+                *next_step = next;
+                true
+            }
         }
     }
 }
@@ -550,6 +594,254 @@ pub fn init_params(meta: &StepMeta, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// The gradient-exchange RNG for one step: a pure function of
+/// `(seed, rank, step)`, so a resumed or elastically-retried step draws
+/// exactly the randomness (stochastic rounding, sparsifier sampling) the
+/// uninterrupted run drew. The previous stream-across-steps RNG made a
+/// restored run diverge on its first stochastic encode.
+fn exchange_rng(seed: u64, rank: usize, step: usize) -> Xoshiro256 {
+    Xoshiro256::seed_from_u64(
+        seed ^ 0xE8C0_0000_0000_0001
+            ^ ((rank as u64) << 17)
+            ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
+
+/// Build the online rescheduling driver for the communicator's **current**
+/// world — called once after warmup, and again after an elastic shrink
+/// (the searched schedule must be re-derived for the surviving world).
+/// Returns `None` when the config doesn't run the online scheduler.
+fn build_driver(
+    comm: &Comm,
+    cfg: &TrainConfig,
+    meta: &StepMeta,
+    profile: &ModelProfile,
+    fits: WarmupFits,
+    partition: &Partition,
+) -> anyhow::Result<Option<Driver>> {
+    let online = cfg.sched_mode == SchedulingMode::Online
+        && matches!(cfg.schedule, ScheduleSpec::MergeComp { .. });
+    if !online {
+        return Ok(None);
+    }
+    let bwd_shares = profile.bwd_flop_shares();
+    let search = match cfg.schedule {
+        ScheduleSpec::MergeComp { y_max, alpha } => SearchParams { y_max, alpha },
+        _ => SearchParams::default(),
+    };
+    let dcfg = DriverConfig {
+        interval: cfg.resched_interval.max(1),
+        ewma: cfg.resched_ewma.clamp(1e-3, 1.0),
+        hysteresis: cfg.resched_eps.max(0.0),
+        search,
+        min_samples: 8,
+    };
+    // The warmup decode fit measured one payload; the engine's
+    // per-group decode samples include the allgather fan-in, so
+    // scale the prior to match.
+    let fanin_of = |k: CodecKind| match k.collective() {
+        Collective::AllReduce => 1.0,
+        Collective::AllGather => comm.world().saturating_sub(1).max(1) as f64,
+    };
+    let fanin = fanin_of(cfg.codec);
+    let dec_prior = fits.dec.map(|d| FittedCost {
+        b: d.b * fanin,
+        g: d.g * fanin,
+        r2: d.r2,
+    });
+    // The estimator's comm fits live in wire-byte space; the warmup
+    // fit sampled per element under the configured codec, so convert
+    // through its wire affine before seeding the prior.
+    let (header, density) = cfg.codec.wire_affine();
+    let comm_prior = fits.comm.map(|f| {
+        let g = f.g / density.max(f64::MIN_POSITIVE);
+        FittedCost { b: (f.b - g * header).max(0.0), g, r2: f.r2 }
+    });
+    let mut est = CostEstimator::new(dcfg.ewma, fits.enc, dec_prior, comm_prior);
+    est.set_base_codec(cfg.codec);
+    let auto_codecs = cfg.codec_mode == CodecMode::Auto;
+    let pool = codec_pool(cfg);
+    if auto_codecs && comm.rank() == 0 {
+        // One-shot local microcalibration: seed enc/dec fits for every
+        // pool codec so the search can price codecs that have never
+        // carried production traffic. Rank 0 only — it runs the search.
+        for &k in &pool {
+            let (enc, dec) = fit_codec_costs(k, cfg.seed, meta.total_params())?;
+            let f = fanin_of(k);
+            est.seed_codec(k, enc, FittedCost { b: dec.b * f, g: dec.g * f, r2: dec.r2 });
+        }
+    }
+    let mut d = Driver::new(
+        dcfg,
+        est,
+        meta.sizes_backprop_order(),
+        bwd_shares,
+        profile.fwd_frac,
+        partition.clone(),
+    );
+    // Per-group route search: only meaningful when there is a real
+    // hierarchy to route over and the policy is Auto. The ring size
+    // handed to the route model is the TOP ring's (the stage the
+    // measured inter split times), not the node count — they differ
+    // on N-level topologies.
+    if cfg.route == RouteMode::Auto && !comm.topology().is_trivial() {
+        d = d.with_routing(comm.world(), comm.topology().top_leaders().len());
+    }
+    // Codec axis: every rank installs it (the broadcast codecs must
+    // count against a consistent schedule state), only rank 0 searches.
+    if auto_codecs {
+        d = d.with_codecs(cfg.codec, &pool, cfg.codec_switch_cost);
+    }
+    Ok(Some(d))
+}
+
+/// Snapshot the full resumable state after `completed_steps` optimizer
+/// steps to `dir`'s per-rank checkpoint file (atomic rename).
+#[allow(clippy::too_many_arguments)]
+fn write_checkpoint(
+    dir: &Path,
+    completed_steps: usize,
+    world: usize,
+    rank: usize,
+    cfg: &TrainConfig,
+    exchange: &GradExchange,
+    driver: Option<&Driver>,
+    params: &[Vec<f32>],
+    velocity: &[Vec<f32>],
+) -> anyhow::Result<()> {
+    let ckpt = Checkpoint {
+        step: completed_steps,
+        world,
+        rank,
+        seed: cfg.seed,
+        base_codec: cfg.codec,
+        bounds: exchange.partition().bounds().to_vec(),
+        routes: exchange.routes().map(|r| r.to_vec()).unwrap_or_default(),
+        codecs: exchange.group_codecs(),
+        schedule_epoch: driver.map(|d| d.epoch()).unwrap_or(0),
+        params: params.to_vec(),
+        velocity: velocity.to_vec(),
+        codec_state: exchange.flat_state(),
+    };
+    ckpt.save(&Checkpoint::rank_path(dir, rank))
+}
+
+/// Elastic recovery after a recoverable exchange failure at `step`:
+/// roll the codec state back to the pre-step snapshot, write an emergency
+/// checkpoint, agree on the surviving world, shrink the communicator, and
+/// rebuild the online driver for it. On return the caller re-runs `step`
+/// over the shrunk world. `reporting_rank` is this rank's **original**
+/// identity (checkpoint naming, gradient stream) — the communicator's rank
+/// may change under it.
+#[allow(clippy::too_many_arguments)]
+fn recover_from_peer_loss(
+    comm: &mut Comm,
+    cfg: &TrainConfig,
+    meta: &StepMeta,
+    profile: &ModelProfile,
+    fits: WarmupFits,
+    step: usize,
+    err: &Error,
+    exchange: &mut GradExchange,
+    driver: &mut Option<Driver>,
+    params: &[Vec<f32>],
+    velocity: &[Vec<f32>],
+    state_backup: &[Vec<f32>],
+    ckpt_dir: Option<&Path>,
+    reporting_rank: usize,
+) -> anyhow::Result<()> {
+    // 1. Roll codec state back to the pre-step snapshot: groups that
+    //    encoded before the wire died consumed their EF accumulators, and
+    //    the retry must not double-apply that feedback.
+    exchange.load_flat_state(state_backup)?;
+
+    // 2. Emergency snapshot under `<dir>/emergency/` — written before any
+    //    communicator surgery, so even a failed recovery leaves restorable
+    //    state. A separate subdirectory keeps it from clobbering the
+    //    interval snapshots a full-world restart resumes from (survivors
+    //    would overwrite theirs at `step`, the dead rank cannot).
+    if let Some(dir) = ckpt_dir {
+        write_checkpoint(
+            &dir.join("emergency"),
+            step,
+            comm.world(),
+            reporting_rank,
+            cfg,
+            exchange,
+            driver.as_ref(),
+            params,
+            velocity,
+        )?;
+    }
+
+    // 3. Tell every peer which rank died (idempotent across survivors —
+    //    stale frames are dropped by abort-epoch filtering), then let
+    //    in-flight control traffic settle.
+    let first_dead = err
+        .peer
+        .ok_or_else(|| anyhow::anyhow!("recoverable exchange error names no peer: {err}"))?;
+    comm.ep.broadcast_abort(first_dead, &err.context);
+    if let Some(wait) = err.retry_after() {
+        std::thread::sleep(wait);
+    }
+
+    // 4. The surviving world: everyone we have not seen die, directly or
+    //    via a peer's abort broadcast. Old-world rank numbering.
+    let mut dead = comm.ep.dead_peers();
+    if !dead.contains(&first_dead) {
+        dead.push(first_dead);
+    }
+    let survivors: Vec<usize> = (0..comm.world()).filter(|r| !dead.contains(r)).collect();
+    let new_rank = comm.shrink_to_survivors(&survivors)?;
+
+    // 5. Survivor agreement: synchronous SGD means every survivor must
+    //    hold identical (step, params). A mismatch survivor set (two ranks
+    //    observed different cascades) or diverged state is unrecoverable —
+    //    better a loud bail than a silently forked run.
+    let digest = params_digest(params);
+    let mut tag = Vec::with_capacity(16);
+    tag.extend_from_slice(&(step as u64).to_le_bytes());
+    tag.extend_from_slice(&digest.to_le_bytes());
+    let all = comm.allgather(tag.clone())?;
+    for (peer, t) in all.iter().enumerate() {
+        anyhow::ensure!(
+            t == &tag,
+            "elastic recovery: shrunk-world rank {peer} disagrees on (step, param digest) at \
+             step {step} — survivors diverged, cannot continue"
+        );
+    }
+
+    // 6. The shrink reset the topology flat (the old rank→node map no
+    //    longer applies), so per-group routes from the old hierarchy are
+    //    meaningless: revert to the global route. Per-group codecs stay —
+    //    they are world-independent.
+    exchange.set_routes(None)?;
+
+    // 7. Rebuild the online driver against the shrunk world, carrying the
+    //    adopted schedule and epoch over so the next reschedule broadcast
+    //    stays within every survivor's accepted epoch window.
+    if let Some(old) = driver.as_ref() {
+        let epoch = old.epoch();
+        let mut rebuilt = build_driver(comm, cfg, meta, profile, fits, exchange.partition())?;
+        if let Some(d) = rebuilt.as_mut() {
+            d.restore_schedule(
+                exchange.partition().clone(),
+                Vec::new(),
+                exchange.group_codecs(),
+                epoch,
+            )?;
+        }
+        *driver = rebuilt;
+    }
+
+    eprintln!(
+        "rank {reporting_rank}: peers {dead:?} lost at step {step}; continuing as rank \
+         {new_rank} of {}",
+        comm.world()
+    );
+    Ok(())
+}
+
 /// One rank's full training run — identical regardless of transport.
 fn train_rank(
     comm: &mut Comm,
@@ -566,9 +858,59 @@ fn train_rank(
     if cfg.route == RouteMode::Flat {
         comm.set_route(CommRoute::Flat);
     }
+    // This rank's *original* identity: checkpoint naming, the synthetic
+    // gradient stream, and RNG seeding all key off it. `comm.rank()` can
+    // change under us when elastic recovery renumbers the shrunk world, so
+    // lead-rank checks below always re-read it dynamically.
     let rank = comm.rank();
     let meta = &setup.meta;
-    let mut params = init_params(meta, cfg.seed);
+    let policy = &cfg.policy;
+    let elastic = policy.elastic;
+    let ckpt_dir: Option<PathBuf> = policy.checkpoint_dir.as_ref().map(PathBuf::from);
+    anyhow::ensure!(
+        (!elastic && !policy.resume) || cfg.synthetic.is_some(),
+        "--elastic and --resume require --synthetic: the PJRT batch stream cannot be rewound \
+         to replay a failed or already-completed step"
+    );
+
+    // Restore this rank's snapshot before anything touches the wire; the
+    // cheap local checks (seed, world, rank) catch a mispointed
+    // --checkpoint-dir without involving the peers.
+    let restore: Option<Checkpoint> = if policy.resume {
+        let dir = ckpt_dir
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("--resume requires --checkpoint-dir"))?;
+        let c = Checkpoint::load(&Checkpoint::rank_path(dir, rank))?;
+        anyhow::ensure!(
+            c.seed == cfg.seed,
+            "checkpoint was written by a run with --seed {}, this run has {}",
+            c.seed,
+            cfg.seed
+        );
+        anyhow::ensure!(
+            c.world == comm.world(),
+            "checkpoint was written at world {} but this run has {} ranks — relaunch with \
+             --world {}",
+            c.world,
+            comm.world(),
+            c.world
+        );
+        anyhow::ensure!(c.rank == rank, "checkpoint is rank {}'s, this is rank {rank}", c.rank);
+        anyhow::ensure!(
+            c.base_codec.name() == cfg.codec.name(),
+            "checkpoint was written under --codec {}, this run has {}",
+            c.base_codec.name(),
+            cfg.codec.name()
+        );
+        Some(c)
+    } else {
+        None
+    };
+
+    let mut params = match &restore {
+        Some(c) => c.params.clone(),
+        None => init_params(meta, cfg.seed),
+    };
     let sizes_fwd: Vec<usize> = meta.tensors.iter().map(|t| t.elems).collect();
 
     let mut runner = if cfg.synthetic.is_some() {
@@ -605,138 +947,158 @@ fn train_rank(
         _ => cfg.momentum,
     };
     let mut opt = SgdMomentum::new(cfg.lr, momentum, &sizes_fwd);
-    let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ ((rank as u64) << 17));
 
-    // --- warm-up: one step to measure compute time ----------------------
-    let (_, _) = runner.run(&params)?;
-    let mut step_secs = runner.last_exec_secs();
-    // Average the measured step time so all ranks feed rank 0's
-    // search comparable numbers on a time-sliced CPU.
-    let mut t = [step_secs as f32];
-    comm.allreduce_f32(&mut t)?;
-    step_secs = (t[0] / comm.world() as f32) as f64;
-
-    // --- schedule --------------------------------------------------------
-    let (partition, warmup_evals, fits) =
-        resolve_schedule(comm, cfg, meta, &setup.profile, step_secs)?;
+    // --- warm-up + schedule ----------------------------------------------
+    let (partition, warmup_evals, fits) = if let Some(c) = &restore {
+        // A resumed run re-adopts the checkpointed schedule verbatim
+        // instead of re-searching: a fresh timing-based search could pick
+        // a different partition and break bit-exactness against the
+        // uninterrupted run. The online estimator restarts cold and
+        // re-warms from live measurements (see Driver::restore_schedule).
+        // Cross-check that every rank restored the same interval boundary
+        // before any real traffic flows.
+        let mut tag = Vec::with_capacity(16);
+        tag.extend_from_slice(&(c.step as u64).to_le_bytes());
+        tag.extend_from_slice(&c.param_digest().to_le_bytes());
+        let all = comm.allgather(tag.clone())?;
+        for (peer, t) in all.iter().enumerate() {
+            anyhow::ensure!(
+                t == &tag,
+                "resume mismatch: rank {peer} restored a different (step, param digest) than \
+                 rank {rank} — all ranks must resume from snapshots of the same interval \
+                 boundary"
+            );
+        }
+        (c.partition()?, 0usize, WarmupFits::default())
+    } else {
+        // One step to measure compute time; average the measurement so all
+        // ranks feed rank 0's search comparable numbers on a time-sliced
+        // CPU.
+        let (_, _) = runner.run(&params)?;
+        let mut step_secs = runner.last_exec_secs();
+        let mut t = [step_secs as f32];
+        comm.allreduce_f32(&mut t)?;
+        step_secs = (t[0] / comm.world() as f32) as f64;
+        resolve_schedule(comm, cfg, meta, &setup.profile, step_secs)?
+    };
     let mut exchange = GradExchange::new(
         cfg.codec,
         partition.clone(),
         meta.sizes_backprop_order(),
     )
     .with_mode(cfg.pipeline);
+    if let Some(c) = &restore {
+        if !c.routes.is_empty() {
+            exchange.set_routes(Some(c.routes.clone()))?;
+        }
+        if !c.codecs.is_empty() {
+            exchange.set_codecs(Some(c.codecs.clone()))?;
+        }
+        // Last: set_codecs carries/resets EF state, and the snapshot's
+        // planes must win over whatever that policy left behind.
+        exchange.load_flat_state(&c.codec_state)?;
+        opt.load_velocity(&c.velocity)?;
+    }
 
     // --- online rescheduler (measure → search → repartition) -------------
     // Only meaningful for the searched schedule; static specs have
     // nothing to re-search.
-    let online = cfg.sched_mode == SchedulingMode::Online
-        && matches!(cfg.schedule, ScheduleSpec::MergeComp { .. });
-    let mut driver = if online {
-        let bwd_shares = setup.profile.bwd_flop_shares();
-        let search = match cfg.schedule {
-            ScheduleSpec::MergeComp { y_max, alpha } => SearchParams { y_max, alpha },
-            _ => SearchParams::default(),
-        };
-        let dcfg = DriverConfig {
-            interval: cfg.resched_interval.max(1),
-            ewma: cfg.resched_ewma.clamp(1e-3, 1.0),
-            hysteresis: cfg.resched_eps.max(0.0),
-            search,
-            min_samples: 8,
-        };
-        // The warmup decode fit measured one payload; the engine's
-        // per-group decode samples include the allgather fan-in, so
-        // scale the prior to match.
-        let fanin_of = |k: CodecKind| match k.collective() {
-            Collective::AllReduce => 1.0,
-            Collective::AllGather => comm.world().saturating_sub(1).max(1) as f64,
-        };
-        let fanin = fanin_of(cfg.codec);
-        let dec_prior = fits.dec.map(|d| FittedCost {
-            b: d.b * fanin,
-            g: d.g * fanin,
-            r2: d.r2,
-        });
-        // The estimator's comm fits live in wire-byte space; the warmup
-        // fit sampled per element under the configured codec, so convert
-        // through its wire affine before seeding the prior.
-        let (header, density) = cfg.codec.wire_affine();
-        let comm_prior = fits.comm.map(|f| {
-            let g = f.g / density.max(f64::MIN_POSITIVE);
-            FittedCost { b: (f.b - g * header).max(0.0), g, r2: f.r2 }
-        });
-        let mut est = CostEstimator::new(dcfg.ewma, fits.enc, dec_prior, comm_prior);
-        est.set_base_codec(cfg.codec);
-        let auto_codecs = cfg.codec_mode == CodecMode::Auto;
-        let pool = codec_pool(cfg);
-        if auto_codecs && rank == 0 {
-            // One-shot local microcalibration: seed enc/dec fits for every
-            // pool codec so the search can price codecs that have never
-            // carried production traffic. Rank 0 only — it runs the search.
-            for &k in &pool {
-                let (enc, dec) = fit_codec_costs(k, cfg.seed, meta.total_params())?;
-                let f = fanin_of(k);
-                est.seed_codec(
-                    k,
-                    enc,
-                    FittedCost { b: dec.b * f, g: dec.g * f, r2: dec.r2 },
-                );
-            }
-        }
-        let mut d = Driver::new(
-            dcfg,
-            est,
-            meta.sizes_backprop_order(),
-            bwd_shares,
-            setup.profile.fwd_frac,
-            partition.clone(),
-        );
-        // Per-group route search: only meaningful when there is a real
-        // hierarchy to route over and the policy is Auto. The ring size
-        // handed to the route model is the TOP ring's (the stage the
-        // measured inter split times), not the node count — they differ
-        // on N-level topologies.
-        if cfg.route == RouteMode::Auto && !comm.topology().is_trivial() {
-            d = d.with_routing(comm.world(), comm.topology().top_leaders().len());
-        }
-        // Codec axis: every rank installs it (the broadcast codecs must
-        // count against a consistent schedule state), only rank 0 searches.
-        if auto_codecs {
-            d = d.with_codecs(cfg.codec, &pool, cfg.codec_switch_cost);
-        }
-        Some(d)
-    } else {
-        None
-    };
+    let mut driver = build_driver(comm, cfg, meta, &setup.profile, fits, &partition)?;
+    if let (Some(d), Some(c)) = (driver.as_mut(), &restore) {
+        d.restore_schedule(partition.clone(), c.routes.clone(), c.codecs.clone(), c.schedule_epoch)?;
+    }
 
     // --- training loop ---------------------------------------------------
+    // A fresh run's warmup consumed synthetic step 0, so loop step S draws
+    // runner step S+1; a resumed run fast-forwards to the same position so
+    // the gradient streams line up with the uninterrupted run's.
+    let start_step = restore.as_ref().map(|c| c.step).unwrap_or(0);
+    if restore.is_some() {
+        anyhow::ensure!(
+            runner.seek(start_step as u64 + 1),
+            "--resume requires the synthetic step source"
+        );
+    }
     let t0 = Stopwatch::start();
     let mut records = Vec::new();
     let mut sum_exchange = ExchangeStats::default();
     let mut sum_step = 0.0f64;
     let mut last_loss = 0f32;
-    for step in 0..cfg.steps {
-        let (loss, grads_fwd) = runner.run(&params)?;
-        sum_step += runner.last_exec_secs();
+    let mut recoveries = 0usize;
+    for step in start_step..cfg.steps {
+        if policy.die_at_step == Some(step) && rank == policy.die_rank {
+            // The chaos hook: a hard exit with no unwinding or socket
+            // shutdown, indistinguishable from a SIGKILLed worker — peers
+            // learn about it from the wire, not from us.
+            eprintln!("rank {rank}: --die-at-step {step}: aborting process");
+            std::process::abort();
+        }
 
-        // Reorder to backprop order for the exchange, then back.
-        let mut grads_bp: Vec<Vec<f32>> = grads_fwd.into_iter().rev().collect();
-        let stats = exchange
-            .exchange(comm, &mut grads_bp, &mut rng)
-            .map_err(|e| anyhow::anyhow!("step {step}: gradient exchange failed: {e}"))?;
+        let mut attempt = 0usize;
+        let (loss, stats) = loop {
+            // Elastic runs snapshot codec state before the exchange: a
+            // partially-failed exchange leaves EF accumulators consumed
+            // for the groups that encoded before the wire died, and the
+            // retry must start from the pre-step state.
+            let state_backup = elastic.then(|| exchange.flat_state());
+            let (loss, grads_fwd) = runner.run(&params)?;
+            let step_secs = runner.last_exec_secs();
+
+            // Reorder to backprop order for the exchange, then back.
+            let mut grads_bp: Vec<Vec<f32>> = grads_fwd.into_iter().rev().collect();
+            let mut rng = exchange_rng(cfg.seed, rank, step);
+            match exchange.exchange(comm, &mut grads_bp, &mut rng) {
+                Ok(stats) => {
+                    sum_step += step_secs;
+                    let grads_fwd: Vec<Vec<f32>> = grads_bp.into_iter().rev().collect();
+                    opt.step(&mut params, &grads_fwd);
+                    break (loss, stats);
+                }
+                Err(e) => {
+                    let recoverable = elastic
+                        && e.is_recoverable()
+                        && attempt < MAX_RECOVERIES_PER_STEP
+                        && comm.world() > 1;
+                    if !recoverable {
+                        return Err(anyhow::anyhow!("step {step}: gradient exchange failed: {e}"));
+                    }
+                    attempt += 1;
+                    recoveries += 1;
+                    recover_from_peer_loss(
+                        comm,
+                        cfg,
+                        meta,
+                        &setup.profile,
+                        fits,
+                        step,
+                        &e,
+                        &mut exchange,
+                        &mut driver,
+                        &params,
+                        opt.velocity(),
+                        state_backup.as_deref().unwrap_or(&[]),
+                        ckpt_dir.as_deref(),
+                        rank,
+                    )?;
+                    // Rewind the gradient stream so the retried step draws
+                    // the same per-rank gradients it failed with.
+                    anyhow::ensure!(
+                        runner.seek(step as u64 + 1),
+                        "elastic retry requires the synthetic step source"
+                    );
+                }
+            }
+        };
         sum_exchange.accumulate(&stats);
-        let grads_fwd: Vec<Vec<f32>> = grads_bp.into_iter().rev().collect();
-
-        opt.step(&mut params, &grads_fwd);
 
         // Online loop: feed measurements; at reschedule boundaries
-        // rank 0 re-searches and the epoch-tagged broadcast applies
+        // the lead rank re-searches and the epoch-tagged broadcast applies
         // any switch on every rank at the same step, remapping EF
         // state bit-exactly and installing the per-group routes.
         if let Some(d) = driver.as_mut() {
             d.observe(exchange.group_samples(), runner.last_exec_secs());
             if d.due(step) {
-                let decision = if rank == 0 { d.decide() } else { Decision::Keep };
+                let decision = if comm.rank() == 0 { d.decide() } else { Decision::Keep };
                 if let Some(update) = d.sync(comm, decision)? {
                     // Order matters: repartition first (it normalizes any
                     // mixed codecs back to the base codec before state is
@@ -755,13 +1117,33 @@ fn train_rank(
         let mut l = [loss];
         comm.allreduce_f32(&mut l)?;
         last_loss = l[0] / comm.world() as f32;
-        if rank == 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+        if comm.rank() == 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
             records.push(StepRecord {
                 step,
                 loss: last_loss,
                 elapsed: t0.elapsed().as_secs_f64(),
                 exchange: stats,
             });
+        }
+
+        // Interval snapshot, written after the optimizer applied `step`
+        // (so it records `step + 1` completed steps). Every rank writes
+        // its own file at the same boundary — the agreement a later
+        // `--resume` cross-checks.
+        if let Some(dir) = &ckpt_dir {
+            if policy.checkpoint_interval > 0 && (step + 1) % policy.checkpoint_interval == 0 {
+                write_checkpoint(
+                    dir,
+                    step + 1,
+                    comm.world(),
+                    rank,
+                    cfg,
+                    &exchange,
+                    driver.as_ref(),
+                    &params,
+                    opt.velocity(),
+                )?;
+            }
         }
     }
 
@@ -797,7 +1179,9 @@ fn train_rank(
         StepRunner::Synthetic { .. } => last_loss,
     };
 
-    let steps = cfg.steps.max(1) as f64;
+    // Means are over the steps this process actually executed (a resumed
+    // run skips the checkpointed prefix).
+    let steps = cfg.steps.saturating_sub(start_step).max(1) as f64;
     let (reschedules, online_evals, schedule_epoch) = driver
         .as_ref()
         .map(|d| (d.reschedules, d.search_evals, d.epoch()))
@@ -823,7 +1207,19 @@ fn train_rank(
         total_inter_bytes_sent: sum_exchange.inter_bytes_sent,
         steps: cfg.steps,
         param_digest: params_digest(&params),
+        world_at_end: comm.world(),
+        recoveries,
+        resumed_from_step: restore.as_ref().map(|c| c.step),
     })
+}
+
+/// The bootstrap generation for this process: a relaunched rank re-HELLOs
+/// with a generation above its dead predecessor's so the rendezvous
+/// supersedes the stale registration (`MERGECOMP_GENERATION`, default 0 =
+/// first launch). An environment variable rather than a flag because the
+/// supervisor relaunching the rank sets it, not the user.
+fn bootstrap_generation() -> u64 {
+    std::env::var("MERGECOMP_GENERATION").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
 }
 
 /// Run one data-parallel training job.
@@ -865,6 +1261,8 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 advertise_host: cfg.advertise_host.clone(),
                 node_label: topo.node_label(cfg.rank),
                 timeout: std::time::Duration::from_secs(cfg.bootstrap_timeout_secs.max(1)),
+                generation: bootstrap_generation(),
+                faults: cfg.policy.fault_plan()?,
             };
             let (ep, peer_nodes) = tcp_endpoint_with_nodes(&tcp_cfg, None)?;
             // Cross-check: every peer must have been launched with the

@@ -1,6 +1,6 @@
 //! Multi-threaded collective stress + failure injection.
 
-use mergecomp::collectives::{mesh, run_comm_group, Comm, TransportError};
+use mergecomp::collectives::{mesh, run_comm_group, Comm, ErrorKind};
 use mergecomp::util::rng::Xoshiro256;
 
 /// Randomized allreduce fuzz: many rounds, random sizes, all world sizes —
@@ -82,7 +82,7 @@ fn mixed_collectives_with_skew() {
 
 /// Failure injection: when a rank dies (drops its endpoint without
 /// participating), peers that try to reach it must fail with a typed
-/// `TransportError` naming the dead peer — a hang or a process-poisoning
+/// transport `Error` naming the dead peer — a hang or a process-poisoning
 /// panic would be the bug.
 #[test]
 fn dead_rank_is_a_typed_error_not_a_hang() {
@@ -99,14 +99,11 @@ fn dead_rank_is_a_typed_error_not_a_hang() {
     })
     .join()
     .unwrap();
-    match err {
-        TransportError::PeerGone { rank, peer, tag, .. } => {
-            assert_eq!(rank, 0);
-            assert_eq!(peer, 1);
-            assert!(tag.is_some(), "error must carry the failing tag");
-        }
-        other => panic!("expected PeerGone, got {other}"),
-    }
+    assert_eq!(err.kind(), ErrorKind::PeerGone, "got {err}");
+    assert_eq!(err.rank, Some(0));
+    assert_eq!(err.peer, Some(1));
+    assert!(err.tag.is_some(), "error must carry the failing tag");
+    assert!(err.is_recoverable(), "a dead peer is the recoverable class");
 }
 
 /// Failure injection on the RECEIVE path with surviving bystanders: in a
@@ -124,9 +121,9 @@ fn dead_rank_detected_by_blocked_receiver_world_three() {
         }
         // Ranks 0 and 2 block waiting on rank 1.
         match ep.recv(1, 77) {
-            Err(TransportError::PeerGone { peer, tag, .. }) => {
-                assert_eq!(peer, 1);
-                assert_eq!(tag, Some(77));
+            Err(e) if e.kind() == ErrorKind::PeerGone => {
+                assert_eq!(e.peer, Some(1));
+                assert_eq!(e.tag, Some(77));
                 None
             }
             Ok(_) => Some("unexpected message from a dead rank".to_string()),
@@ -134,6 +131,49 @@ fn dead_rank_detected_by_blocked_receiver_world_three() {
         }
     });
     assert_eq!(results, vec![None, None, None]);
+}
+
+/// Elastic shrink end-to-end: rank 2 of four dies mid-run. Survivors that
+/// detect the death directly broadcast an abort so peers blocked mid-ring
+/// on a *live* rank unblock with the same typed error; then everyone
+/// agrees on the shrunk world, remaps over the existing connections, and
+/// keeps running collectives at world−1.
+#[test]
+fn survivors_shrink_and_continue_after_death() {
+    let results = run_comm_group(4, |c| {
+        if c.rank() == 2 {
+            // Rank 2 dies without participating.
+            return None;
+        }
+        let mut v = vec![1.0f32; 64];
+        let err = match c.allreduce_f32(&mut v) {
+            Err(e) => e,
+            Ok(()) => return Some("allreduce succeeded without rank 2".to_string()),
+        };
+        if !err.is_recoverable() {
+            return Some(format!("unrecoverable error class: {err}"));
+        }
+        match err.peer {
+            Some(2) => {}
+            _ => return Some(format!("error does not name the dead rank: {err}")),
+        }
+        // Unblock any survivor still waiting on us mid-ring, then agree on
+        // the shrunk world: all ranks minus the dead one.
+        c.ep.broadcast_abort(2, "test: rank 2 died");
+        let new_rank = c.shrink_to_survivors(&[0, 1, 3]).unwrap();
+        // The shrunk world must be fully operational.
+        let g = c.allgather(vec![new_rank as u8]).unwrap();
+        if g != vec![vec![0], vec![1], vec![2]] {
+            return Some(format!("bad allgather on shrunk world: {g:?}"));
+        }
+        let mut x = vec![1.0f32; 16];
+        c.allreduce_f32(&mut x).unwrap();
+        if x.iter().any(|&e| e != 3.0) {
+            return Some(format!("bad allreduce on shrunk world: {x:?}"));
+        }
+        None
+    });
+    assert_eq!(results, vec![None, None, None, None]);
 }
 
 /// Endpoint byte accounting under concurrency.

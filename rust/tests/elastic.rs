@@ -1,0 +1,232 @@
+//! Elastic training end to end: checkpoint/restore bit-exactness, and the
+//! kill-one-rank chaos path over real TCP processes.
+//!
+//! Three contracts pinned here:
+//!
+//! 1. **Resume is bit-exact.** Train K steps with interval checkpoints,
+//!    restart from the snapshot, run to N: the final parameter digest must
+//!    equal an uninterrupted N-step run's, bit for bit (the per-step
+//!    exchange RNG and the flattened EF-state planes make this possible).
+//! 2. **Degraded-world continuation.** Kill one of 4 worker processes
+//!    mid-run (`--die-at-step`, a `std::process::abort` indistinguishable
+//!    from SIGKILL): under `--elastic` the survivors agree on the shrunk
+//!    world, retry the failed step at world−1, finish, and exit 0 with
+//!    matching digests.
+//! 3. **Re-expansion via checkpointed restart.** Relaunching the full
+//!    world with `--resume` restores everyone (including the previously
+//!    dead rank) from the last full-world interval snapshot and reproduces
+//!    the uninterrupted run's digest exactly.
+
+use mergecomp::compression::CodecKind;
+use mergecomp::config::{load_json, RunPolicy, ScheduleSpec, SchedulingMode, TrainConfig};
+use mergecomp::training::{launch_local, train, LaunchOptions};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// The worker binary cargo built for this test run.
+const BIN: &str = env!("CARGO_BIN_EXE_mergecomp");
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mergecomp-elastic-{tag}-{}", std::process::id()))
+}
+
+/// The shared deterministic config: synthetic source, EF codec (so the
+/// checkpointed error-feedback planes actually matter), static schedule
+/// (a timing-based search could legitimately differ across runs and break
+/// digest comparisons).
+fn base_cfg(world: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        workers: world,
+        steps,
+        codec: CodecKind::EfSignSgd,
+        schedule: ScheduleSpec::NaiveEven { y: 2 },
+        sched_mode: SchedulingMode::Fixed,
+        synthetic: Some("tiny".to_string()),
+        log_every: steps.max(1),
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn resume_from_interval_checkpoint_is_bit_exact_inproc() {
+    let ckpt = tmp_dir("resume-inproc");
+    let _ = std::fs::remove_dir_all(&ckpt);
+
+    // Uninterrupted reference: 6 steps straight through.
+    let reference = train(&base_cfg(2, 6)).unwrap();
+
+    // Interrupted run: 4 steps with a snapshot at the step-4 boundary...
+    let mut first = base_cfg(2, 4);
+    first.policy = RunPolicy {
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        checkpoint_interval: 4,
+        ..RunPolicy::default()
+    };
+    let halted = train(&first).unwrap();
+    assert_ne!(halted.param_digest, reference.param_digest, "4-step != 6-step state");
+
+    // ...then a fresh process restores it and runs the remaining 2 steps.
+    let mut second = base_cfg(2, 6);
+    second.policy = RunPolicy {
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        resume: true,
+        ..RunPolicy::default()
+    };
+    let resumed = train(&second).unwrap();
+    assert_eq!(resumed.resumed_from_step, Some(4));
+    assert_eq!(
+        resumed.param_digest, reference.param_digest,
+        "resumed run diverged from the uninterrupted run"
+    );
+
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn kill_one_rank_then_rejoin_via_checkpointed_restart_over_tcp() {
+    let world = 4;
+    let ckpt = tmp_dir("chaos-ckpt");
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let ckpt_flag = ckpt.to_string_lossy().into_owned();
+
+    let flags = |extra: &[&str]| -> Vec<String> {
+        let mut v: Vec<String> = [
+            "--synthetic",
+            "tiny",
+            "--codec",
+            "efsignsgd",
+            "--schedule",
+            "naive:2",
+            "--sched-mode",
+            "fixed",
+            "--steps",
+            "6",
+            "--log-every",
+            "6",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        v.extend(extra.iter().map(|s| s.to_string()));
+        v
+    };
+
+    // Reference: the same config uninterrupted.
+    let ref_opts = LaunchOptions {
+        binary: BIN.into(),
+        world,
+        rendezvous: None,
+        out_dir: tmp_dir("chaos-ref"),
+        train_flags: flags(&[]),
+        timeout: Duration::from_secs(240),
+        expect_dead: vec![],
+    };
+    let ref_report = launch_local(&ref_opts).unwrap();
+    assert!(ref_report.ok(), "reference run failed: {ref_report:?}");
+    let want_digest = ref_report.ranks[0].param_digest.clone().unwrap();
+
+    // Chaos run: interval snapshot at the step-4 boundary (full world),
+    // rank 2 hard-aborts at the start of step 5, survivors must recover
+    // and finish at world 3. `--checkpoint-interval 4` over 6 steps means
+    // the main snapshot dir is never overwritten post-shrink, so it still
+    // holds a consistent full-world boundary for the restart below.
+    let chaos_opts = LaunchOptions {
+        binary: BIN.into(),
+        world,
+        rendezvous: None,
+        out_dir: tmp_dir("chaos-run"),
+        train_flags: flags(&[
+            "--elastic",
+            "--checkpoint-dir",
+            &ckpt_flag,
+            "--checkpoint-interval",
+            "4",
+            "--die-at-step",
+            "5",
+            "--die-rank",
+            "2",
+        ]),
+        timeout: Duration::from_secs(240),
+        expect_dead: vec![2],
+    };
+    let chaos = launch_local(&chaos_opts).unwrap();
+    assert_ne!(chaos.ranks[2].exit_code, Some(0), "rank 2 was supposed to die");
+    assert!(
+        chaos.all_exited_zero,
+        "survivors did not all exit 0 — degraded continuation failed: {chaos:?}"
+    );
+    assert!(chaos.digests_match, "survivor digests diverged: {chaos:?}");
+    let rank0 = load_json(&chaos.ranks[0].out_path).unwrap();
+    assert_eq!(rank0.get("world_at_end").and_then(|v| v.as_usize()), Some(3));
+    assert!(
+        rank0.get("recoveries").and_then(|v| v.as_usize()).unwrap_or(0) >= 1,
+        "rank 0 reported no elastic recovery: {rank0:?}"
+    );
+
+    // Re-expansion: relaunch the FULL world with --resume. Every rank
+    // (including the one that died) restores the step-4 full-world
+    // snapshot and replays steps 4..6 — the digest must be bit-identical
+    // to the uninterrupted reference.
+    let rejoin_opts = LaunchOptions {
+        binary: BIN.into(),
+        world,
+        rendezvous: None,
+        out_dir: tmp_dir("chaos-rejoin"),
+        train_flags: flags(&["--elastic", "--checkpoint-dir", &ckpt_flag, "--resume"]),
+        timeout: Duration::from_secs(240),
+        expect_dead: vec![],
+    };
+    let rejoin = launch_local(&rejoin_opts).unwrap();
+    assert!(rejoin.ok(), "checkpointed restart failed: {rejoin:?}");
+    for r in &rejoin.ranks {
+        assert_eq!(
+            r.param_digest.as_deref(),
+            Some(want_digest.as_str()),
+            "rank {}: resumed digest differs from the never-failed run",
+            r.rank
+        );
+    }
+    let rank0 = load_json(&rejoin.ranks[0].out_path).unwrap();
+    assert_eq!(rank0.get("resumed_from_step").and_then(|v| v.as_usize()), Some(4));
+
+    for d in [&ref_opts.out_dir, &chaos_opts.out_dir, &rejoin_opts.out_dir, &ckpt] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn resume_refuses_mismatched_seed_and_world() {
+    let ckpt = tmp_dir("resume-guards");
+    let _ = std::fs::remove_dir_all(&ckpt);
+
+    let mut first = base_cfg(2, 4);
+    first.policy = RunPolicy {
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        checkpoint_interval: 4,
+        ..RunPolicy::default()
+    };
+    train(&first).unwrap();
+
+    // Wrong seed: the snapshot records the run seed and must refuse.
+    let mut wrong_seed = base_cfg(2, 6);
+    wrong_seed.seed ^= 1;
+    wrong_seed.policy = RunPolicy {
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        resume: true,
+        ..RunPolicy::default()
+    };
+    let err = train(&wrong_seed).unwrap_err().to_string();
+    assert!(err.contains("--seed"), "{err}");
+
+    // Wrong world: a 2-rank snapshot cannot resume a 3-rank run.
+    let mut wrong_world = base_cfg(3, 6);
+    wrong_world.policy = RunPolicy {
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        resume: true,
+        ..RunPolicy::default()
+    };
+    let err = train(&wrong_world).unwrap_err().to_string();
+    assert!(err.contains("world"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&ckpt);
+}

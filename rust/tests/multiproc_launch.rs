@@ -46,6 +46,7 @@ fn four_tcp_processes_match_inproc_bit_exactly() {
         .map(|s| s.to_string())
         .collect(),
         timeout: Duration::from_secs(240),
+        expect_dead: vec![],
     };
     let report = launch_local(&opts).unwrap();
     for r in &report.ranks {
@@ -96,6 +97,7 @@ fn launcher_reports_failing_ranks_instead_of_hanging() {
             .map(|s| s.to_string())
             .collect(),
         timeout: Duration::from_secs(120),
+        expect_dead: vec![],
     };
     let report = launch_local(&opts).unwrap();
     assert!(!report.all_exited_zero);

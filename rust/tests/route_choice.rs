@@ -351,8 +351,8 @@ fn online_loop_converges_to_the_oracle_route_after_inter_dominance_flips() {
         let samples = synth_route_samples(&driver, &sizes, truth, host.enc, host.dec);
         driver.observe(&samples, step_secs);
         if driver.due(step) {
-            if let Decision::Switch { partition, routes, .. } = driver.decide() {
-                driver.apply(partition, routes);
+            if let Decision::Switch { partition, routes, codecs, .. } = driver.decide() {
+                driver.apply(partition, routes, codecs);
             }
         }
         if step == drift_at - 1 {

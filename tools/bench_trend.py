@@ -19,8 +19,11 @@ compared and reported (status "noisy") but never gate. A gated series
 regresses when it moves by more than --max-regress (fractional, default
 0.15) in its bad direction: UP for lower-is-better series (times, bytes),
 DOWN for the higher-is-better `*_speedup` ratios. Series absent on either
-side are reported but never fail the job; sub-microsecond timings are
-skipped entirely.
+side are reported but never fail the job — in particular, a series (or a
+whole BENCH_*.json file) appearing for the first time has no baseline and
+is *informational* (status "new (info)") until the next run records one,
+so landing a new bench can never fail the trend gate. Sub-microsecond
+timings are skipped entirely.
 
 Usage:
   python3 tools/bench_trend.py --prev prev-bench --cur rust/results \
@@ -116,12 +119,14 @@ def compare(prev_dir, cur_dir, max_regress):
         prev_path = os.path.join(prev_dir, name)
         cur = load_series(os.path.join(cur_dir, name))
         if not os.path.exists(prev_path):
-            rows.append((name, "(whole file)", None, None, None, "new"))
+            # First appearance of this bench file: informational only —
+            # it becomes a gating baseline on the next run.
+            rows.append((name, "(whole file)", None, None, None, "new (info)"))
             continue
         prev = load_series(prev_path)
         for series, cur_val in sorted(cur.items()):
             if series not in prev:
-                rows.append((name, series, None, cur_val, None, "new"))
+                rows.append((name, series, None, cur_val, None, "new (info)"))
                 continue
             prev_val = prev[series]
             if prev_val <= 0:
@@ -152,7 +157,8 @@ def render(rows, max_regress, fh):
         f"Failure threshold: >{max_regress:.0%} move in the bad direction for "
         "any gated series (byte counts and model-predicted timings go up; "
         "`*_speedup` ratios go down); measured wall-clock series are "
-        "report-only (\"noisy\").",
+        "report-only (\"noisy\"); series with no previous baseline are "
+        "informational (\"new (info)\") and never gate.",
         file=fh,
     )
     print("", file=fh)
