@@ -31,6 +31,7 @@ pub mod elastic;
 pub mod faults;
 pub mod hierarchical;
 pub mod nonblocking;
+pub mod reduce_scatter;
 pub mod ring;
 pub mod tcp;
 pub mod topology;
@@ -41,6 +42,7 @@ pub use elastic::{RemapTransport, RECOVERY_TAG_STRIDE};
 pub use faults::{FaultPlan, FaultSpec, FaultTransport};
 pub use hierarchical::CommBreakdown;
 pub use nonblocking::{lane_scope, CommCompletion, CommHandle, CommLane, CommOutcome};
+pub use reduce_scatter::shard_elems;
 pub use tcp::{run_tcp_group, tcp_endpoint, tcp_endpoint_with_nodes, TcpConfig, TcpTransport};
 pub use topology::{LevelShape, LevelSpec, Topology, TopologySpec, TOPOLOGY_GRAMMAR};
 pub use transport::{
@@ -248,6 +250,35 @@ impl Comm {
         match self.route {
             CommRoute::Flat => ring::allreduce_wire(self, data, codec),
             CommRoute::TwoLevel => hierarchical::hier_allreduce_wire(self, data, codec),
+        }
+    }
+
+    /// In-place reduce-scatter over a wire-format buffer (FP32/FP16): on
+    /// return, the owned byte range — see [`reduce_scatter`] for the
+    /// ownership rule — holds this rank's fully reduced shard, bit-identical
+    /// to what [`Comm::allreduce_wire`] would have left there; the rest of
+    /// the buffer is partial-sum garbage and must not be consumed. Routed:
+    /// flat ring phase 1, or the hierarchical fallback (full hierarchical
+    /// allreduce, ownership at the consumer).
+    pub fn reduce_scatter_wire(
+        &mut self,
+        data: &mut [u8],
+        codec: &dyn crate::compression::Codec,
+    ) -> Result<(usize, usize), Error> {
+        // Same pre-traffic guard as allreduce_wire: a misdispatched codec
+        // mid-ring would strand the peers.
+        if codec.collective() != crate::compression::Collective::AllReduce {
+            return Err(Error::codec(format!(
+                "{}: reduce_scatter_wire needs an allreduce codec",
+                codec.kind().name()
+            )));
+        }
+        self.last_breakdown = None;
+        match self.route {
+            CommRoute::Flat => reduce_scatter::ring_reduce_scatter_wire(self, data, codec),
+            CommRoute::TwoLevel => {
+                reduce_scatter::hier_reduce_scatter_wire(self, data, codec)
+            }
         }
     }
 

@@ -31,7 +31,11 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 /// What a completed collective hands back.
 pub enum CommOutcome {
     /// Allreduce: the wire buffer, reduced in place across ranks (summed,
-    /// not yet averaged — identical to `Comm::allreduce_wire`).
+    /// not yet averaged — identical to `Comm::allreduce_wire`). A
+    /// reduce-scatter completes through this variant too — only the owned
+    /// chunk (a pure function of `(len, world, rank)`, see
+    /// [`super::reduce_scatter`]) is valid then, which the submitter knows
+    /// from having chosen the operation.
     Reduced(Vec<u8>),
     /// Allgather: every rank's payload, indexed by source rank. Entry
     /// `[rank]` is the very buffer this rank submitted (reusable).
@@ -54,6 +58,11 @@ pub struct CommCompletion {
 
 enum Op {
     AllReduce {
+        wire: Vec<u8>,
+        kind: CodecKind,
+        n: usize,
+    },
+    ReduceScatter {
         wire: Vec<u8>,
         kind: CodecKind,
         n: usize,
@@ -128,6 +137,28 @@ impl CommLane {
         self.submit(Op::AllReduce { wire, kind, n }, route)
     }
 
+    /// Begin an in-place wire-format reduce-scatter (FP32/FP16) with an
+    /// explicit per-collective [`CommRoute`] (`None` keeps the current
+    /// route). Completes as [`CommOutcome::Reduced`]; only the owned chunk
+    /// of the returned buffer is valid (see [`super::reduce_scatter`]).
+    pub fn start_reduce_scatter_routed(
+        &self,
+        wire: Vec<u8>,
+        kind: CodecKind,
+        n: usize,
+        route: Option<CommRoute>,
+    ) -> CommHandle {
+        if kind.collective() != Collective::AllReduce {
+            let (done, rx) = channel();
+            let _ = done.send(Err(Error::codec(format!(
+                "{}: start_reduce_scatter needs an allreduce codec",
+                kind.name()
+            ))));
+            return CommHandle { rx };
+        }
+        self.submit(Op::ReduceScatter { wire, kind, n }, route)
+    }
+
     /// Begin a variable-size allgather of this rank's payload.
     pub fn start_allgather(&self, wire: Vec<u8>) -> CommHandle {
         self.start_allgather_routed(wire, None)
@@ -174,6 +205,11 @@ pub fn lane_scope<R>(comm: &mut Comm, f: impl FnOnce(&CommLane) -> R) -> (R, f64
                         let reducer = kind.build(n);
                         comm.allreduce_wire(&mut wire, reducer.as_ref())
                             .map(|()| CommOutcome::Reduced(wire))
+                    }
+                    Op::ReduceScatter { mut wire, kind, n } => {
+                        let reducer = kind.build(n);
+                        comm.reduce_scatter_wire(&mut wire, reducer.as_ref())
+                            .map(|_owned| CommOutcome::Reduced(wire))
                     }
                     Op::AllGather { wire } => comm.allgather(wire).map(CommOutcome::Gathered),
                 };
@@ -289,6 +325,54 @@ mod tests {
         });
         for (blocking, reduced) in results {
             assert_eq!(blocking, reduced, "async allreduce must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn async_reduce_scatter_owned_chunk_matches_blocking_allreduce() {
+        use crate::compression::CodecKind;
+        let n = 53; // ragged over 3 ranks
+        let results = run_comm_group(3, move |c| {
+            let mut rng = Xoshiro256::seed_from_u64(11 + c.rank() as u64);
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 1.0);
+            let mut codec = CodecKind::Fp32.build(n);
+            let mut wire = Vec::new();
+            codec.encode_into(&g, &mut rng, &mut wire);
+
+            let mut blocking = wire.clone();
+            c.allreduce_wire(&mut blocking, codec.as_ref()).unwrap();
+            let (elo, ehi) = super::super::shard_elems(n, c.world(), c.rank());
+
+            let (completion, _) = lane_scope(c, |lane| {
+                lane.start_reduce_scatter_routed(wire, CodecKind::Fp32, n, None)
+                    .wait()
+                    .unwrap()
+            });
+            let scattered = match completion.outcome {
+                CommOutcome::Reduced(w) => w,
+                _ => panic!("wrong outcome variant"),
+            };
+            (
+                blocking[4 * elo..4 * ehi].to_vec(),
+                scattered[4 * elo..4 * ehi].to_vec(),
+            )
+        });
+        for (blocking, scattered) in results {
+            assert_eq!(blocking, scattered, "owned chunk must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn allgather_codec_rejected_for_reduce_scatter() {
+        use crate::compression::CodecKind;
+        let (jobs, _jrx) = channel();
+        let lane = CommLane { jobs };
+        let handle = lane.start_reduce_scatter_routed(vec![0u8; 4], CodecKind::TopK { ratio: 0.01 }, 8, None);
+        match handle.wait() {
+            Err(e) if e.kind() == ErrorKind::Codec => {}
+            Err(other) => panic!("wrong error: {other}"),
+            Ok(_) => panic!("allgather codec must be rejected"),
         }
     }
 

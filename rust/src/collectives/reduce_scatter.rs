@@ -1,0 +1,192 @@
+//! Reduce-scatter for the sharded exchange mode.
+//!
+//! The sharded exchange (DESIGN.md "Sharded exchange") replaces the ring
+//! allreduce's second phase with nothing: each rank keeps only the chunk it
+//! finished reducing, the optimizer updates that shard, and an allgather of
+//! the *updated parameters* replaces the allgather of reduced gradients.
+//!
+//! Bit-exactness contract: the reduce-scatter here IS phase 1 of the full
+//! ring ([`ring::subset_ring_reduce_scatter_bytes`]) — same schedule, same
+//! tag layout, same reduce order — so the chunk a rank owns is bit-identical
+//! to the bytes the full allreduce would have left there. Ownership is a
+//! pure function of `(len, world, align, rank)`: rank `r` owns chunk
+//! `(r+1) mod world` of the [`ring::chunk_bounds`] split (what phase 1
+//! leaves fully reduced at ring position `r`). The same rule is applied on
+//! every route, so a per-group route flip never reshards state.
+//!
+//! The hierarchical route currently runs the full hierarchical allreduce
+//! and takes ownership at the consumer: the comm bytes are unchanged but
+//! the memory win (optimizer state ∝ 1/world) is intact, and the result is
+//! trivially bit-identical to the full exchange on the same route. A true
+//! hierarchical reduce-scatter (fan-in, leader ring phase 1 only, scatter
+//! inside the node) is future work.
+
+use super::ring::{chunk_bounds, subset_ring_reduce_scatter_bytes};
+use super::transport::Error;
+use super::{hierarchical, Comm};
+use crate::compression::Codec;
+
+/// Element range `[lo, hi)` of the shard rank `r` owns in an `elems`-long
+/// flat buffer sharded over `world` ranks — the element-space twin of the
+/// wire-chunk split the ring uses (`chunk_bounds(len, world, wire_align)`
+/// maps to exactly this range once byte offsets are divided by the
+/// per-element wire width, for every fixed-width allreduce codec).
+///
+/// This is the shard-ownership contract shared by the exchange engine, the
+/// sharded optimizer, and the checkpoint layer: keep it a pure function.
+pub fn shard_elems(elems: usize, world: usize, rank: usize) -> (usize, usize) {
+    assert!(rank < world, "rank {rank} out of range for world {world}");
+    if world == 1 {
+        return (0, elems);
+    }
+    let bounds = chunk_bounds(elems, world, 1);
+    bounds[(rank + 1) % world]
+}
+
+/// Flat ring reduce-scatter over a codec wire buffer: phase 1 of the ring
+/// allreduce, stopping once this rank's chunk is fully reduced. Returns the
+/// owned byte range; the rest of `data` holds partial sums and must not be
+/// consumed. Reserves the same `2·world` tag window the full allreduce
+/// would, so the per-collective tag budget is mode-independent.
+pub(crate) fn ring_reduce_scatter_wire(
+    comm: &mut Comm,
+    data: &mut [u8],
+    codec: &dyn Codec,
+) -> Result<(usize, usize), Error> {
+    let world = comm.world();
+    if world == 1 || data.is_empty() {
+        return Ok((0, data.len()));
+    }
+    let base = comm.next_tags(2 * world as u64);
+    let members: Vec<usize> = (0..world).collect();
+    subset_ring_reduce_scatter_bytes(comm, &members, base, data, codec.wire_align(), &|a, b| {
+        codec
+            .reduce_wire(a, b)
+            .map_err(|e| Error::codec(e.to_string()))
+    })
+}
+
+/// Hierarchical "reduce-scatter": the full hierarchical allreduce with
+/// ownership taken at the consumer (see the module docs for why). The
+/// owned range follows the same `(rank+1) mod world` chunk rule as the
+/// flat ring, so shard ownership is route-invariant.
+pub(crate) fn hier_reduce_scatter_wire(
+    comm: &mut Comm,
+    data: &mut [u8],
+    codec: &dyn Codec,
+) -> Result<(usize, usize), Error> {
+    hierarchical::hier_allreduce_wire(comm, data, codec)?;
+    let world = comm.world();
+    if world == 1 || data.is_empty() {
+        return Ok((0, data.len()));
+    }
+    let bounds = chunk_bounds(data.len(), world, codec.wire_align());
+    Ok(bounds[(comm.rank() + 1) % world])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_comm_group, Topology};
+    use super::*;
+    use crate::compression::{Codec as _, CodecKind};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn shard_elems_partition_the_buffer() {
+        for (elems, world) in [(101usize, 4usize), (7, 3), (12, 12), (3, 5), (64, 1)] {
+            let mut covered = vec![0u8; elems];
+            for r in 0..world {
+                let (lo, hi) = shard_elems(elems, world, r);
+                assert!(lo <= hi && hi <= elems);
+                for c in covered.iter_mut().take(hi).skip(lo) {
+                    *c += 1;
+                }
+            }
+            assert!(
+                covered.iter().all(|&c| c == 1),
+                "elems={elems} world={world}: every element owned exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_elems_matches_wire_chunk_ownership() {
+        // The element-space rule must agree with the byte-space chunk the
+        // ring's phase 1 leaves on each rank, for both allreduce widths.
+        for (elems, world) in [(101usize, 4usize), (33, 3), (5, 8)] {
+            for width in [4usize, 2] {
+                let wire_bounds = chunk_bounds(elems * width, world, width);
+                for r in 0..world {
+                    let (lo, hi) = shard_elems(elems, world, r);
+                    let (wlo, whi) = wire_bounds[(r + 1) % world];
+                    assert_eq!((wlo / width, whi / width), (lo, hi));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_reduce_scatter_owned_bytes_match_full_allreduce() {
+        for kind in [CodecKind::Fp32, CodecKind::Fp16] {
+            let n = 101usize; // ragged over 4 ranks
+            let results = run_comm_group(4, move |c| {
+                let mut rng = Xoshiro256::seed_from_u64(7 + c.rank() as u64);
+                let mut g = vec![0f32; n];
+                rng.fill_normal_f32(&mut g, 1.0);
+                let mut codec = kind.build(n);
+                let mut rng_e = Xoshiro256::seed_from_u64(1);
+                let enc = codec.encode(&g, &mut rng_e);
+
+                let mut full = enc.bytes.clone();
+                c.allreduce_wire(&mut full, codec.as_ref()).unwrap();
+
+                let mut rs = enc.bytes.clone();
+                let (lo, hi) =
+                    ring_reduce_scatter_wire(c, &mut rs, codec.as_ref()).unwrap();
+                (full[lo..hi].to_vec(), rs[lo..hi].to_vec())
+            });
+            for (rank, (full_chunk, rs_chunk)) in results.iter().enumerate() {
+                assert_eq!(full_chunk, rs_chunk, "{} rank {rank}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn hier_wrapper_owns_the_same_range_and_bytes() {
+        let n = 67usize;
+        let results = run_comm_group(6, move |c| {
+            c.set_topology(Topology::from_sizes(&[4, 2]).unwrap()).unwrap();
+            // Integer-valued grads so any reduction grouping sums exactly.
+            let g: Vec<f32> = (0..n).map(|i| (c.rank() + i % 5) as f32).collect();
+            let mut codec = CodecKind::Fp32.build(n);
+            let mut rng = Xoshiro256::seed_from_u64(1);
+            let enc = codec.encode(&g, &mut rng);
+
+            let mut full = enc.bytes.clone();
+            c.allreduce_wire(&mut full, codec.as_ref()).unwrap();
+
+            let mut rs = enc.bytes.clone();
+            let (lo, hi) = hier_reduce_scatter_wire(c, &mut rs, codec.as_ref()).unwrap();
+            let (elo, ehi) = shard_elems(n, c.world(), c.rank());
+            assert_eq!((lo / 4, hi / 4), (elo, ehi), "route-invariant ownership");
+            (full[lo..hi].to_vec(), rs[lo..hi].to_vec())
+        });
+        for (rank, (full_chunk, rs_chunk)) in results.iter().enumerate() {
+            assert_eq!(full_chunk, rs_chunk, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn world_of_one_owns_everything() {
+        let results = run_comm_group(1, |c| {
+            let mut codec = CodecKind::Fp32.build(3);
+            let mut rng = Xoshiro256::seed_from_u64(0);
+            let enc = codec.encode(&[1.0, 2.0, 3.0], &mut rng);
+            let mut wire = enc.bytes.clone();
+            let range = ring_reduce_scatter_wire(c, &mut wire, codec.as_ref()).unwrap();
+            (range, wire == enc.bytes)
+        });
+        assert_eq!(results[0].0, (0, 12));
+        assert!(results[0].1, "no peers: buffer untouched");
+    }
+}

@@ -15,7 +15,10 @@ use crate::compression::Codec;
 
 /// Chunk boundaries for splitting `len` bytes into `world` pieces aligned
 /// to `align` bytes (element size; 4 covers both f32 and 2-byte f16 pairs).
-fn chunk_bounds(len: usize, world: usize, align: usize) -> Vec<(usize, usize)> {
+/// This split is the shard-ownership contract: the sharded exchange mode
+/// and the checkpoint layer both derive per-rank ownership from it, so it
+/// must stay a pure function of `(len, world, align)`.
+pub(crate) fn chunk_bounds(len: usize, world: usize, align: usize) -> Vec<(usize, usize)> {
     let elems = len / align;
     let base = elems / world;
     let rem = elems % world;
@@ -53,29 +56,12 @@ pub(crate) fn subset_ring_allreduce_bytes(
     if l == 1 || data.is_empty() {
         return Ok(());
     }
-    assert_eq!(
-        data.len() % align,
-        0,
-        "buffer length must be a multiple of the element size"
-    );
+    // Phase 1 — reduce-scatter (shared with the sharded exchange mode so
+    // both modes reduce in the exact same order, bit for bit).
+    subset_ring_reduce_scatter_bytes(comm, members, base, data, align, reduce)?;
     let bounds = chunk_bounds(data.len(), l, align);
     let right = members[(me + 1) % l];
     let left = members[(me + l - 1) % l];
-
-    // Phase 1 — reduce-scatter: after l-1 steps, member m owns the fully
-    // reduced chunk (m+1) mod l. Sends borrow the chunk in place
-    // (`send_ref`), and every received buffer is recycled once reduced —
-    // the steady-state ring allocates nothing.
-    for s in 0..l - 1 {
-        let send_c = (me + l - s) % l;
-        let recv_c = (me + l - s - 1) % l;
-        let (lo, hi) = bounds[send_c];
-        comm.ep.send_ref(right, base + s as u64, &data[lo..hi])?;
-        let incoming = comm.ep.recv(left, base + s as u64)?;
-        let (lo, hi) = bounds[recv_c];
-        reduce(&mut data[lo..hi], &incoming)?;
-        comm.ep.recycle(incoming);
-    }
 
     // Phase 2 — allgather of the reduced chunks.
     for s in 0..l - 1 {
@@ -90,6 +76,52 @@ pub(crate) fn subset_ring_allreduce_bytes(
         comm.ep.recycle(incoming);
     }
     Ok(())
+}
+
+/// Phase 1 of the ring on its own — reduce-scatter: after `l−1` steps,
+/// member `m` holds the fully reduced chunk `(m+1) mod l` of `data` (the
+/// rest of the buffer is partial-sum garbage). Returns the byte range of
+/// the chunk this rank owns. Sends borrow the chunk in place (`send_ref`)
+/// and every received buffer is recycled once reduced — the steady-state
+/// ring allocates nothing. `base` is the first tag of the caller's
+/// reserved window; only `l−1` tags are consumed, but callers that may
+/// later run the allgather phase should reserve the full `2·l` so the tag
+/// sequence matches the full allreduce step for step.
+pub(crate) fn subset_ring_reduce_scatter_bytes(
+    comm: &mut Comm,
+    members: &[usize],
+    base: u64,
+    data: &mut [u8],
+    align: usize,
+    reduce: &dyn Fn(&mut [u8], &[u8]) -> Result<(), Error>,
+) -> Result<(usize, usize), Error> {
+    let l = members.len();
+    let me = members
+        .iter()
+        .position(|&m| m == comm.rank())
+        .expect("calling rank must be a member of the ring subset");
+    if l == 1 || data.is_empty() {
+        return Ok((0, data.len()));
+    }
+    assert_eq!(
+        data.len() % align,
+        0,
+        "buffer length must be a multiple of the element size"
+    );
+    let bounds = chunk_bounds(data.len(), l, align);
+    let right = members[(me + 1) % l];
+    let left = members[(me + l - 1) % l];
+    for s in 0..l - 1 {
+        let send_c = (me + l - s) % l;
+        let recv_c = (me + l - s - 1) % l;
+        let (lo, hi) = bounds[send_c];
+        comm.ep.send_ref(right, base + s as u64, &data[lo..hi])?;
+        let incoming = comm.ep.recv(left, base + s as u64)?;
+        let (lo, hi) = bounds[recv_c];
+        reduce(&mut data[lo..hi], &incoming)?;
+        comm.ep.recycle(incoming);
+    }
+    Ok(bounds[(me + 1) % l])
 }
 
 /// Flat ring allreduce over all ranks (reserves its own tags).
@@ -285,6 +317,52 @@ mod tests {
         for r in [0usize, 2, 3] {
             // 1 + 3 + 4 from ranks 0, 2, 3.
             assert_eq!(results[r], vec![8u8; 9], "member rank {r}");
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_owned_chunk_matches_full_allreduce() {
+        // The standalone phase 1 must leave each member's owned chunk
+        // bit-identical to what the full ring allreduce produces there —
+        // the contract the sharded exchange mode is built on. 101 floats
+        // over 4 ranks exercises ragged chunks.
+        let n = 101usize;
+        for world in [2usize, 3, 4] {
+            let results = run_comm_group(world, move |c| {
+                let mk = |rank: usize| -> Vec<u8> {
+                    (0..n)
+                        .flat_map(|i| ((i * (rank + 1)) as f32).to_le_bytes())
+                        .collect()
+                };
+                let reduce = |a: &mut [u8], b: &[u8]| -> Result<(), Error> {
+                    for i in (0..a.len()).step_by(4) {
+                        let xa = f32::from_le_bytes([a[i], a[i + 1], a[i + 2], a[i + 3]]);
+                        let xb = f32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]]);
+                        a[i..i + 4].copy_from_slice(&(xa + xb).to_le_bytes());
+                    }
+                    Ok(())
+                };
+                let members: Vec<usize> = (0..c.world()).collect();
+                let mut full = mk(c.rank());
+                let base = c.next_tags(2 * members.len() as u64);
+                subset_ring_allreduce_bytes(c, &members, base, &mut full, 4, &reduce)
+                    .unwrap();
+                let mut rs = mk(c.rank());
+                let base = c.next_tags(2 * members.len() as u64);
+                let (lo, hi) =
+                    subset_ring_reduce_scatter_bytes(c, &members, base, &mut rs, 4, &reduce)
+                        .unwrap();
+                (full[lo..hi].to_vec(), rs[lo..hi].to_vec(), lo, hi)
+            });
+            let mut covered = vec![false; n * 4];
+            for (full_chunk, rs_chunk, lo, hi) in &results {
+                assert_eq!(full_chunk, rs_chunk, "world={world}");
+                for b in covered.iter_mut().take(*hi).skip(*lo) {
+                    assert!(!*b, "chunks overlap");
+                    *b = true;
+                }
+            }
+            assert!(covered.iter().all(|&b| b), "chunks must cover the buffer");
         }
     }
 

@@ -3,7 +3,7 @@
 use super::{RunPolicy, ScheduleSpec, SchedulingMode};
 use crate::collectives::{TopologySpec, TransportKind};
 use crate::compression::CodecKind;
-use crate::coordinator::PipelineMode;
+use crate::coordinator::{ExchangeMode, PipelineMode};
 use crate::scheduler::{CodecMode, RouteMode};
 use crate::util::cli::Args;
 use crate::util::json::Value;
@@ -77,6 +77,16 @@ pub struct TrainConfig {
     /// collective with neighbouring groups' encode/decode (bit-identical
     /// results; see `coordinator/`).
     pub pipeline: PipelineMode,
+    /// Gradient-distribution mode (`--exchange-mode full|sharded`). `Full`
+    /// leaves every rank with the full averaged gradient and full optimizer
+    /// state; `Sharded` runs reduce-scatter + parameter allgather so each
+    /// rank holds only its 1/world shard of optimizer state (DESIGN.md
+    /// "Sharded exchange"). Bit-identical final parameters either way.
+    pub exchange_mode: ExchangeMode,
+    /// Gradient accumulation: average `accum_steps` micro-batch gradients
+    /// locally before each exchange+update (`--accum-steps N`). 1 (the
+    /// default) is exactly the legacy single-micro-step behavior.
+    pub accum_steps: usize,
     pub seed: u64,
     /// Per-worker batch size (must match the AOT-compiled step artifact).
     pub batch_per_worker: usize,
@@ -121,6 +131,8 @@ impl Default for TrainConfig {
             resched_ewma: 0.1,
             resched_eps: 0.05,
             pipeline: PipelineMode::Pipelined,
+            exchange_mode: ExchangeMode::Full,
+            accum_steps: 1,
             seed: 42,
             batch_per_worker: 8,
             seq_len: 128,
@@ -171,6 +183,10 @@ impl TrainConfig {
             resched_ewma: v.f64_or("resched_ewma", d.resched_ewma),
             resched_eps: v.f64_or("resched_eps", d.resched_eps),
             pipeline: PipelineMode::from_name(v.str_or("pipeline", d.pipeline.name()))?,
+            exchange_mode: ExchangeMode::from_name(
+                v.str_or("exchange_mode", d.exchange_mode.name()),
+            )?,
+            accum_steps: v.usize_or("accum_steps", d.accum_steps),
             seed: v.f64_or("seed", d.seed as f64) as u64,
             batch_per_worker: v.usize_or("batch_per_worker", d.batch_per_worker),
             seq_len: v.usize_or("seq_len", d.seq_len),
@@ -249,6 +265,11 @@ impl TrainConfig {
         if let Some(p) = args.str("pipeline") {
             self.pipeline = PipelineMode::from_name(p)?;
         }
+        if let Some(m) = args.str("exchange-mode") {
+            self.exchange_mode = ExchangeMode::from_name(m)?;
+        }
+        self.accum_steps = args.usize_or("accum-steps", self.accum_steps);
+        anyhow::ensure!(self.accum_steps >= 1, "--accum-steps must be >= 1");
         self.seed = args.u64_or("seed", self.seed);
         self.log_every = args.usize_or("log-every", self.log_every);
         self.search_steps = args.usize_or("search-steps", self.search_steps);
@@ -288,6 +309,8 @@ impl TrainConfig {
             ("resched_ewma", Value::from(self.resched_ewma)),
             ("resched_eps", Value::from(self.resched_eps)),
             ("pipeline", Value::from(self.pipeline.name())),
+            ("exchange_mode", Value::from(self.exchange_mode.name())),
+            ("accum_steps", Value::from(self.accum_steps)),
             ("seed", Value::from(self.seed)),
             ("batch_per_worker", Value::from(self.batch_per_worker)),
             ("seq_len", Value::from(self.seq_len)),
@@ -349,6 +372,42 @@ mod tests {
         let c = c.apply_cli(&args).unwrap();
         assert_eq!(c.pipeline, PipelineMode::Pipelined);
         let v = Value::parse(r#"{"pipeline": "bogus"}"#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn exchange_mode_and_accum_overrides() {
+        let d = TrainConfig::default();
+        assert_eq!(d.exchange_mode, ExchangeMode::Full);
+        assert_eq!(d.accum_steps, 1);
+        let c = TrainConfig::from_json(&d.to_json()).unwrap();
+        assert_eq!(c.exchange_mode, ExchangeMode::Full);
+        assert_eq!(c.accum_steps, 1);
+
+        let v = Value::parse(r#"{"exchange_mode": "sharded", "accum_steps": 4}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.exchange_mode, ExchangeMode::Sharded);
+        assert_eq!(c.accum_steps, 4);
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.exchange_mode, ExchangeMode::Sharded);
+        assert_eq!(c2.accum_steps, 4);
+
+        let args = Args::parse(
+            ["x", "--exchange-mode", "full", "--accum-steps", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = c.apply_cli(&args).unwrap();
+        assert_eq!(c.exchange_mode, ExchangeMode::Full);
+        assert_eq!(c.accum_steps, 2);
+
+        let args = Args::parse(
+            ["x", "--exchange-mode", "mirrored"].iter().map(|s| s.to_string()),
+        );
+        assert!(TrainConfig::default().apply_cli(&args).is_err());
+        let args = Args::parse(["x", "--accum-steps", "0"].iter().map(|s| s.to_string()));
+        assert!(TrainConfig::default().apply_cli(&args).is_err());
+        let v = Value::parse(r#"{"exchange_mode": "bogus"}"#).unwrap();
         assert!(TrainConfig::from_json(&v).is_err());
     }
 

@@ -20,14 +20,18 @@
 
 use std::path::{Path, PathBuf};
 
+use super::ExchangeMode;
 use crate::compression::CodecKind;
 use crate::scheduler::{Partition, RouteChoice};
 use crate::training::params_digest;
 use crate::util::json::Value;
 
 /// Bump when the on-disk layout changes incompatibly; `load` refuses
-/// snapshots from any other version rather than guessing.
-pub const CHECKPOINT_VERSION: u64 = 1;
+/// snapshots from any newer (or unknown) version rather than guessing.
+/// Version 2 added `exchange_mode` (and, under the sharded mode, records
+/// velocity as full-length planes zeroed outside the owning rank's shard);
+/// version-1 snapshots still load, as implicitly `exchange_mode = full`.
+pub const CHECKPOINT_VERSION: u64 = 2;
 
 /// One rank's complete resumable state at a step boundary.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,6 +56,12 @@ pub struct Checkpoint {
     pub codecs: Vec<CodecKind>,
     /// Schedule epoch the adopted schedule was broadcast under.
     pub schedule_epoch: u64,
+    /// Exchange mode the run was using (`full` | `sharded`). Shard
+    /// ownership under `sharded` is fully derivable from `world`, `bounds`,
+    /// and the `shard_elems` contract, so no explicit shard map is stored;
+    /// `velocity` planes carry zeros outside this rank's owned spans.
+    /// Version-1 snapshots load as `Full`.
+    pub exchange_mode: ExchangeMode,
     /// Per-tensor parameters, forward order.
     pub params: Vec<Vec<f32>>,
     /// Per-tensor optimizer momentum, forward order.
@@ -98,6 +108,7 @@ impl Checkpoint {
                 Value::Arr(self.codecs.iter().map(|c| Value::from(c.name())).collect()),
             ),
             ("schedule_epoch", Value::from(self.schedule_epoch)),
+            ("exchange_mode", Value::from(self.exchange_mode.name())),
             ("param_digest", Value::from(format!("{:016x}", self.param_digest()))),
             ("params", planes_to_json(&self.params)),
             ("velocity", planes_to_json(&self.velocity)),
@@ -111,9 +122,16 @@ impl Checkpoint {
     pub fn from_json(v: &Value) -> anyhow::Result<Checkpoint> {
         let version = field_u64(v, "version")?;
         anyhow::ensure!(
-            version == CHECKPOINT_VERSION,
-            "checkpoint version {version} (this build reads {CHECKPOINT_VERSION})"
+            version == 1 || version == CHECKPOINT_VERSION,
+            "checkpoint version {version} (this build reads 1..={CHECKPOINT_VERSION})"
         );
+        // exchange_mode arrived in version 2; a v1 snapshot could only have
+        // been written by the full exchange.
+        let exchange_mode = if version >= 2 {
+            ExchangeMode::from_name(field_str(v, "exchange_mode")?)?
+        } else {
+            ExchangeMode::Full
+        };
         let params = planes_from_json(field(v, "params")?, "params")?;
         let recorded = field_str(v, "param_digest")?;
         let want = u64::from_str_radix(recorded, 16)
@@ -191,10 +209,29 @@ impl Checkpoint {
             routes,
             codecs,
             schedule_epoch: field_u64(v, "schedule_epoch")?,
+            exchange_mode,
             params,
             velocity,
             codec_state: planes_from_json(field(v, "codec_state")?, "codec_state")?,
         })
+    }
+
+    /// Refuse to resume under a different exchange mode than the snapshot
+    /// was written in: the two modes lay optimizer state out differently
+    /// (full per-tensor momentum vs zero-padded shard planes), so a silent
+    /// cross-mode resume would corrupt the optimizer trajectory. The
+    /// trainer calls this before adopting a restored snapshot.
+    pub fn ensure_exchange_mode(&self, configured: ExchangeMode) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.exchange_mode == configured,
+            "checkpoint was written under '--exchange-mode {}' but this run is configured \
+             with '--exchange-mode {}'; re-run with '--exchange-mode {}' to resume it \
+             (or start fresh without --resume)",
+            self.exchange_mode.name(),
+            configured.name(),
+            self.exchange_mode.name()
+        );
+        Ok(())
     }
 
     /// Write atomically: serialize to `<path>.tmp`, then rename over
@@ -294,6 +331,7 @@ mod tests {
             routes: vec![RouteChoice::Flat, RouteChoice::Hierarchical],
             codecs: vec![CodecKind::EfSignSgd, CodecKind::Fp32],
             schedule_epoch: 3,
+            exchange_mode: ExchangeMode::Full,
             // Awkward values on purpose: subnormal, -0.0, f32::MAX, and
             // irrationals that don't round-trip through decimal printing.
             params: vec![vec![0.1, -0.0, f32::MIN_POSITIVE / 8.0], vec![1.0 / 3.0]],
@@ -355,6 +393,46 @@ mod tests {
         }
         let err = Checkpoint::from_json(&v).unwrap_err().to_string();
         assert!(err.contains("integrity"), "{err}");
+    }
+
+    #[test]
+    fn exchange_mode_round_trips_and_v1_loads_as_full() {
+        let mut c = sample();
+        c.exchange_mode = ExchangeMode::Sharded;
+        let back =
+            Checkpoint::from_json(&Value::parse(&c.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.exchange_mode, ExchangeMode::Sharded);
+
+        // A version-1 snapshot (no exchange_mode field) is implicitly Full.
+        let mut v = sample().to_json();
+        v.set("version", Value::from(1u64));
+        if let Value::Obj(m) = &mut v {
+            m.remove("exchange_mode");
+        }
+        let back = Checkpoint::from_json(&v).unwrap();
+        assert_eq!(back.exchange_mode, ExchangeMode::Full);
+
+        // Version 2 requires the field.
+        let mut v = sample().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.remove("exchange_mode");
+        }
+        assert!(Checkpoint::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn mode_mismatch_is_actionable() {
+        let c = sample();
+        c.ensure_exchange_mode(ExchangeMode::Full).unwrap();
+        let err = c.ensure_exchange_mode(ExchangeMode::Sharded).unwrap_err().to_string();
+        assert!(err.contains("--exchange-mode full"), "{err}");
+        assert!(err.contains("--exchange-mode sharded"), "{err}");
+
+        let mut s = sample();
+        s.exchange_mode = ExchangeMode::Sharded;
+        s.ensure_exchange_mode(ExchangeMode::Sharded).unwrap();
+        assert!(s.ensure_exchange_mode(ExchangeMode::Full).is_err());
     }
 
     #[test]

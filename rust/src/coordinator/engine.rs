@@ -23,8 +23,10 @@
 //! performs no heap allocation end to end (asserted across the TCP
 //! backend in `tests/transport_equivalence.rs`).
 
-use super::{ExchangeStats, GroupSample, PipelineMode};
-use crate::collectives::{lane_scope, Comm, CommHandle, CommOutcome, CommRoute, Error};
+use super::{ExchangeMode, ExchangeStats, GroupSample, PipelineMode};
+use crate::collectives::{
+    lane_scope, shard_elems, Comm, CommHandle, CommOutcome, CommRoute, Error,
+};
 use crate::compression::{Codec, CodecKind, Collective};
 use crate::scheduler::{Partition, RouteChoice};
 use crate::util::rng::Xoshiro256;
@@ -316,6 +318,22 @@ impl ExchangeEngine {
         Ok(())
     }
 
+    /// Per-group element counts of the current partition (backprop order).
+    pub fn group_elems(&self) -> &[usize] {
+        &self.group_elems
+    }
+
+    /// The element range (within each group's flat buffer) that `rank`
+    /// owns in [`ExchangeMode::Sharded`] — a pure function of the group
+    /// sizes and the world, identical on every rank and every route (see
+    /// [`crate::collectives::reduce_scatter`]).
+    pub fn owned_group_ranges(&self, world: usize, rank: usize) -> Vec<(usize, usize)> {
+        self.group_elems
+            .iter()
+            .map(|&n| shard_elems(n, world, rank))
+            .collect()
+    }
+
     /// Aggregate gradients across the group. `grads` holds per-tensor
     /// buffers in **backprop order**; on success each buffer contains the
     /// mean of the (compressed) gradients over all workers. A dead rank
@@ -328,11 +346,36 @@ impl ExchangeEngine {
         rng: &mut Xoshiro256,
         mode: PipelineMode,
     ) -> Result<ExchangeStats, Error> {
+        self.exchange_mode(comm, grads, rng, mode, ExchangeMode::Full)
+    }
+
+    /// [`ExchangeEngine::exchange`] with an explicit [`ExchangeMode`].
+    ///
+    /// In [`ExchangeMode::Sharded`], allreduce-codec groups run only the
+    /// reduce-scatter phase of the ring: on return, a group's scattered
+    /// gradients are the true mean **only inside this rank's owned element
+    /// range** ([`ExchangeEngine::owned_group_ranges`]); the rest of the
+    /// group holds deterministic partial-sum residue that must not be
+    /// consumed. Allgather-codec groups are communicated exactly as in
+    /// full mode (every rank still decodes every payload — the memory win
+    /// for them is optimizer-state sharding at the consumer), so their
+    /// gradients stay valid everywhere. Encode order, RNG draws, EF
+    /// updates, tag sequencing, and the owned range's arithmetic are all
+    /// bit-identical to full mode (`tests/sharded_equivalence.rs`).
+    pub fn exchange_mode(
+        &mut self,
+        comm: &mut Comm,
+        grads: &mut [Vec<f32>],
+        rng: &mut Xoshiro256,
+        mode: PipelineMode,
+        xmode: ExchangeMode,
+    ) -> Result<ExchangeStats, Error> {
         assert_eq!(grads.len(), self.sizes.len());
         let routed = self.routes.is_some();
+        let sharded = xmode == ExchangeMode::Sharded;
         let result = match mode {
-            PipelineMode::Serial => self.exchange_serial(comm, grads, rng),
-            PipelineMode::Pipelined => self.exchange_pipelined(comm, grads, rng),
+            PipelineMode::Serial => self.exchange_serial(comm, grads, rng, sharded),
+            PipelineMode::Pipelined => self.exchange_pipelined(comm, grads, rng, sharded),
         };
         // Restore the canonical route even when the exchange failed
         // mid-group: a per-group route must never leak into collectives
@@ -356,6 +399,7 @@ impl ExchangeEngine {
         comm: &mut Comm,
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
+        sharded: bool,
     ) -> Result<ExchangeStats, Error> {
         let world = comm.world() as f32;
         let rank = comm.rank();
@@ -417,7 +461,11 @@ impl ExchangeEngine {
             let sw = Stopwatch::start();
             let outcome = match collective {
                 Collective::AllReduce => {
-                    comm.allreduce_wire(&mut wire, codecs[j].as_ref())?;
+                    if sharded {
+                        comm.reduce_scatter_wire(&mut wire, codecs[j].as_ref())?;
+                    } else {
+                        comm.allreduce_wire(&mut wire, codecs[j].as_ref())?;
+                    }
                     CommOutcome::Reduced(wire)
                 }
                 Collective::AllGather => CommOutcome::Gathered(comm.allgather(wire)?),
@@ -467,6 +515,7 @@ impl ExchangeEngine {
         comm: &mut Comm,
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
+        sharded: bool,
     ) -> Result<ExchangeStats, Error> {
         let world = comm.world() as f32;
         let rank = comm.rank();
@@ -528,6 +577,9 @@ impl ExchangeEngine {
                     // --- hand group j to the comm lane ----------------------
                     let route = if routed { Some(effective[j]) } else { None };
                     let handle = match gkind.collective() {
+                        Collective::AllReduce if sharded => {
+                            lane.start_reduce_scatter_routed(wire, gkind, n, route)
+                        }
                         Collective::AllReduce => {
                             lane.start_allreduce_routed(wire, gkind, n, route)
                         }
@@ -1125,6 +1177,68 @@ mod tests {
             .unwrap();
         eng.repartition(Partition::layer_wise(3)).unwrap();
         assert_eq!(eng.group_codecs(), vec![CodecKind::EfSignSgd; 3]);
+    }
+
+    #[test]
+    fn sharded_exchange_owned_spans_match_full_mode() {
+        // Full 3-step / all-codec / both-transport equivalence lives in
+        // tests/sharded_equivalence.rs; this is the in-module smoke check:
+        // allreduce codecs must agree on the owned span, allgather codecs
+        // everywhere.
+        let sizes = vec![41usize, 25, 70]; // 136 elems, ragged over 3 ranks
+        for kind in [CodecKind::Fp32, CodecKind::Fp16, CodecKind::EfSignSgd] {
+            for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+                let run = |xmode: ExchangeMode| {
+                    let sizes2 = sizes.clone();
+                    run_comm_group(3, move |c| {
+                        let mut eng = ExchangeEngine::new(
+                            kind,
+                            Partition::naive_even(3, 2),
+                            sizes2.clone(),
+                        );
+                        let mut rng = Xoshiro256::seed_from_u64(5 + c.rank() as u64);
+                        let mut grads = make_grads(c.rank(), &sizes2);
+                        eng.exchange_mode(c, &mut grads, &mut rng, mode, xmode)
+                            .unwrap();
+                        let owned = eng.owned_group_ranges(c.world(), c.rank());
+                        (grads, eng.state_digest(), owned)
+                    })
+                };
+                let full = run(ExchangeMode::Full);
+                let sharded = run(ExchangeMode::Sharded);
+                for (rank, ((fg, fd, owned), (sg, sd, _))) in
+                    full.iter().zip(&sharded).enumerate()
+                {
+                    assert_eq!(fd, sd, "{} {}: EF state diverged", kind.name(), mode.name());
+                    if kind.collective() == Collective::AllGather {
+                        assert_eq!(fg, sg, "{} rank {rank}: allgather codecs agree everywhere", kind.name());
+                        continue;
+                    }
+                    // Allreduce codecs: compare only the owned spans, via
+                    // the group-flat → tensor-offset mapping.
+                    let p = Partition::naive_even(3, 2);
+                    for (j, &(lo, hi)) in owned.iter().enumerate() {
+                        let mut off = 0;
+                        for i in p.group_range(j) {
+                            let len = sizes[i];
+                            for e in 0..len {
+                                let flat_idx = off + e;
+                                if flat_idx >= lo && flat_idx < hi {
+                                    assert_eq!(
+                                        fg[i][e].to_bits(),
+                                        sg[i][e].to_bits(),
+                                        "{} {} rank {rank} group {j} tensor {i} elem {e}",
+                                        kind.name(),
+                                        mode.name()
+                                    );
+                                }
+                            }
+                            off += len;
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -63,6 +63,40 @@ impl PipelineMode {
     }
 }
 
+/// How the exchange distributes the reduced gradient — and with it, who
+/// holds optimizer state (DESIGN.md "Sharded exchange").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExchangeMode {
+    /// Every rank ends the exchange with the full averaged gradient and
+    /// holds full optimizer state (the legacy path, and the default).
+    #[default]
+    Full,
+    /// Per scheduled group, each rank finishes the exchange owning only its
+    /// shard of the averaged gradient (reduce-scatter for allreduce codecs;
+    /// shard-at-the-consumer for allgather codecs), updates only its shard
+    /// of the optimizer state, and an allgather of updated parameter shards
+    /// restores full parameters everywhere. Per-rank optimizer memory drops
+    /// to ≈ 1/world of the full mode's.
+    Sharded,
+}
+
+impl ExchangeMode {
+    pub fn from_name(name: &str) -> anyhow::Result<ExchangeMode> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "full" => ExchangeMode::Full,
+            "sharded" | "shard" | "zero" => ExchangeMode::Sharded,
+            other => anyhow::bail!("unknown exchange mode '{other}' (full|sharded)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExchangeMode::Full => "full",
+            ExchangeMode::Sharded => "sharded",
+        }
+    }
+}
+
 /// One group's measured exchange timings from a single step — the raw
 /// observations the online [`CostEstimator`] fits its rolling Assumption-5
 /// models from. `comm_secs` is the collective's full occupancy (the α+β·size
@@ -191,6 +225,15 @@ mod tests {
         }
         assert!(PipelineMode::from_name("warp-drive").is_err());
         assert_eq!(PipelineMode::default(), PipelineMode::Serial);
+    }
+
+    #[test]
+    fn exchange_mode_names_roundtrip() {
+        for m in [ExchangeMode::Full, ExchangeMode::Sharded] {
+            assert_eq!(ExchangeMode::from_name(m.name()).unwrap(), m);
+        }
+        assert!(ExchangeMode::from_name("mirrored").is_err());
+        assert_eq!(ExchangeMode::default(), ExchangeMode::Full);
     }
 
     #[test]

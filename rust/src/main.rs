@@ -58,6 +58,11 @@ fn print_usage() {
                       (auto: Algorithm 2 also picks each group's codec from a\n\
                       pool — fp32 always included — using microcalibrated fits;\n\
                       online scheduling only)\n\
+                     [--exchange-mode full|sharded]  (sharded: reduce-scatter +\n\
+                      parameter allgather; each rank keeps 1/world of the\n\
+                      optimizer state, bit-identical results — DESIGN.md)\n\
+                     [--accum-steps N]  (average N micro-batch gradients\n\
+                      locally before each exchange+update)\n\
                      [--transport inproc|tcp --rank N --world W\n\
                       --rendezvous HOST:PORT [--advertise HOST]\n\
                       [--bootstrap-timeout-secs S]]\n\

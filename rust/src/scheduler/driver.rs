@@ -52,6 +52,7 @@
 //! [`AnalyticObjective`]: super::objective::AnalyticObjective
 
 use super::estimator::CostEstimator;
+use super::objective::ShardedCost;
 use super::partition::Partition;
 use super::search::{mergecomp_search, RouteChoice, SearchParams};
 use crate::collectives::Comm;
@@ -165,6 +166,10 @@ pub struct Driver {
     codecs: Vec<CodecKind>,
     routing: Option<Routing>,
     codec_axis: Option<CodecAxis>,
+    /// `Some(base codec)` when the run exchanges under `--exchange-mode
+    /// sharded`: every re-search prices the reduce-scatter + parameter
+    /// allgather byte pattern instead of the full allreduce.
+    sharded: Option<CodecKind>,
     epoch: u64,
     /// Number of adopted partition switches.
     pub reschedules: usize,
@@ -195,6 +200,7 @@ impl Driver {
             codecs: Vec::new(),
             routing: None,
             codec_axis: None,
+            sharded: None,
             epoch: 0,
             reschedules: 0,
             search_evals: 0,
@@ -238,6 +244,17 @@ impl Driver {
             pool: dedup,
             switch_cost: switch_cost.max(0.0),
         });
+        self
+    }
+
+    /// Price re-searches for the sharded exchange (`--exchange-mode
+    /// sharded`): AllReduce-codec groups on the flat ring are charged
+    /// half their allreduce cost (the reduce-scatter phase alone), and
+    /// every group additionally pays the uncompressed-FP32 allgather of
+    /// the updated parameter shards. `base` is the configured training
+    /// codec (the objective's price floor when the codec search is off).
+    pub fn with_sharded_exchange(mut self, base: CodecKind) -> Self {
+        self.sharded = Some(base);
         self
     }
 
@@ -322,6 +339,14 @@ impl Driver {
                 ca.switch_cost,
                 self.incumbent_codecs(),
             ));
+        }
+        // Sharded exchange: reprice every candidate's comm term as
+        // reduce-scatter + FP32 parameter allgather.
+        if let Some(base) = self.sharded {
+            obj.set_sharded_exchange(Some(ShardedCost {
+                fp32_comm: self.est.fp32_comm_fit(),
+                base_codec: base,
+            }));
         }
         use super::objective::Objective as _;
         let f_current = obj.eval_with_schedule(&self.partition, &self.routes, &self.codecs);

@@ -346,6 +346,19 @@ impl CostEstimator {
         self.comm.fit().per_elems_for(self.base_codec)
     }
 
+    /// The total collective fit in uncompressed-FP32 element space — the
+    /// cost basis for the sharded mode's parameter allgather, which always
+    /// moves raw f32 shards regardless of the gradient codec. Uses the
+    /// per-level combined fit when the hierarchy has been observed, like
+    /// [`CostEstimator::codec_cost_model`].
+    pub fn fp32_comm_fit(&self) -> FittedCost {
+        let bytes = match self.two_level_fit_bytes() {
+            Some(tl) => tl.combined(),
+            None => self.comm.fit(),
+        };
+        bytes.per_elems_for(CodecKind::Fp32)
+    }
+
     /// Per-level communication fits in the base codec's element basis,
     /// once hierarchical samples have been observed (`None` on a flat
     /// fabric).

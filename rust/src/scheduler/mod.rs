@@ -28,6 +28,7 @@ pub mod search;
 
 pub use costmodel::{CodecCostEntry, CodecCostModel, FittedCost, RouteCostModel, TwoLevelCost};
 pub use driver::{Decision, Driver, DriverConfig, ScheduleUpdate};
+pub use objective::ShardedCost;
 pub use estimator::CostEstimator;
 pub use partition::Partition;
 pub use search::{

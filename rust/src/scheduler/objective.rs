@@ -13,11 +13,50 @@
 //!   time (real plane: the trainer runs a few steps under the candidate
 //!   partition — the paper's "less than 50 iterations" warm-up search).
 
-use super::costmodel::{CodecCostModel, RouteCostModel};
+use super::costmodel::{CodecCostModel, FittedCost, RouteCostModel};
 use super::partition::Partition;
 use super::search::RouteChoice;
-use crate::compression::CodecKind;
+use crate::compression::{CodecKind, Collective};
 use crate::simulator::{simulate, SimSetup};
+
+/// Pricing for the sharded exchange (DESIGN.md "Sharded exchange"): the
+/// flat-route reduce-scatter skips the allreduce's allgather phase (× 0.5
+/// for allreduce codecs — the hierarchical route runs the full allreduce
+/// and saves nothing), and every group additionally pays an allgather of
+/// updated **uncompressed f32 parameter shards**, 4·elems·(w−1)/w bytes —
+/// half an uncompressed ring allreduce of the group, whatever the gradient
+/// codec. With an FP32 base codec on the flat route the two adjustments
+/// cancel exactly: sharded ties full-mode wall-clock while holding 1/world
+/// of the optimizer state (the textbook RS+AG ≡ allreduce identity the
+/// simulator scenario in `simulator/validate.rs` pins down).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedCost {
+    /// Collective fit in an uncompressed-f32-element basis (what the
+    /// parameter-shard allgather ships).
+    pub fp32_comm: FittedCost,
+    /// The run's base codec — groups without a codec model are priced
+    /// under its collective type.
+    pub base_codec: CodecKind,
+}
+
+impl ShardedCost {
+    /// The parameter-shard allgather price for a group of `elems`.
+    fn param_allgather(&self, elems: usize) -> f64 {
+        0.5 * self.fp32_comm.predict(elems)
+    }
+
+    /// Scale a gradient-collective price for the sharded exchange: the
+    /// flat-route reduce-scatter is half the allreduce; allgather codecs
+    /// and the hierarchical route communicate exactly as full mode.
+    fn scale_comm(&self, kind: CodecKind, route: Option<RouteChoice>, comm: f64) -> f64 {
+        let flat = route.unwrap_or(RouteChoice::Flat) == RouteChoice::Flat;
+        if kind.collective() == Collective::AllReduce && flat {
+            0.5 * comm
+        } else {
+            comm
+        }
+    }
+}
 
 /// Anything that can score a candidate partition (lower is better).
 pub trait Objective {
@@ -118,6 +157,9 @@ pub struct AnalyticObjective {
     /// switch penalty charged, and [`AnalyticObjective::codecs`] reports
     /// the choices.
     codec_costs: Option<CodecCostModel>,
+    /// When present, every group's comm price is adjusted for the sharded
+    /// exchange's reduce-scatter + parameter-allgather byte pattern.
+    sharded: Option<ShardedCost>,
     evals: usize,
 }
 
@@ -152,6 +194,7 @@ impl AnalyticObjective {
             dec_fanin: dec_fanin.max(1),
             route_costs: None,
             codec_costs: None,
+            sharded: None,
             evals: 0,
         }
     }
@@ -186,21 +229,56 @@ impl AnalyticObjective {
         self.codec_costs.as_ref()
     }
 
-    /// Comm cost of one group: forced route, best route (when a route
-    /// model is attached), or the global-route model.
-    fn comm_secs(&self, elems: usize, forced: Option<RouteChoice>) -> f64 {
-        match (&self.route_costs, forced) {
-            (Some(rc), Some(route)) => rc.cost(route).predict(elems),
-            (Some(rc), None) => rc.best(elems).1,
-            (None, _) => self.comm.predict(elems),
-        }
+    /// Attach the sharded-exchange pricing (see [`ShardedCost`]).
+    pub fn with_sharded_exchange(mut self, sharded: ShardedCost) -> Self {
+        self.sharded = Some(sharded);
+        self
+    }
+
+    pub fn set_sharded_exchange(&mut self, sharded: Option<ShardedCost>) {
+        self.sharded = sharded;
+    }
+
+    pub fn sharded_exchange(&self) -> Option<&ShardedCost> {
+        self.sharded.as_ref()
+    }
+
+    /// Comm cost of one group under `kind`: forced route, best route (when
+    /// a route model is attached, compared under the sharded adjustment so
+    /// the route choice and the price agree), or the global-route model.
+    fn comm_secs(&self, kind: CodecKind, elems: usize, forced: Option<RouteChoice>) -> f64 {
+        let grad = match (&self.route_costs, forced) {
+            (Some(rc), Some(route)) => {
+                let c = rc.cost(route).predict(elems);
+                match &self.sharded {
+                    Some(sc) => sc.scale_comm(kind, Some(route), c),
+                    None => c,
+                }
+            }
+            (Some(rc), None) => match &self.sharded {
+                Some(sc) => [RouteChoice::Flat, RouteChoice::Hierarchical]
+                    .into_iter()
+                    .map(|r| sc.scale_comm(kind, Some(r), rc.cost(r).predict(elems)))
+                    .fold(f64::INFINITY, f64::min),
+                None => rc.best(elems).1,
+            },
+            (None, _) => {
+                let c = self.comm.predict(elems);
+                match &self.sharded {
+                    Some(sc) => sc.scale_comm(kind, forced, c),
+                    None => c,
+                }
+            }
+        };
+        grad + self.sharded.map(|sc| sc.param_allgather(elems)).unwrap_or(0.0)
     }
 
     /// Price one group under the objective's own (codec-free) fits.
     fn base_price(&self, elems: usize, route: Option<RouteChoice>) -> GroupPrice {
+        let kind = self.sharded.map(|sc| sc.base_codec).unwrap_or(CodecKind::Fp32);
         GroupPrice {
             enc: self.enc.predict(elems),
-            comm: self.comm_secs(elems, route),
+            comm: self.comm_secs(kind, elems, route),
             dec: self.dec.predict(elems) * self.dec_fanin as f64,
             penalty: 0.0,
         }
@@ -230,7 +308,10 @@ impl AnalyticObjective {
             .iter()
             .filter(|e| fcodec.map(|k| e.kind == k).unwrap_or(true))
         {
-            let (route, comm) = entry.comm_for(elems, froute);
+            let (route, mut comm) = entry.comm_for(elems, froute);
+            if let Some(sc) = &self.sharded {
+                comm = sc.scale_comm(entry.kind, route, comm) + sc.param_allgather(elems);
+            }
             let penalty = if cm.incumbent.is_empty()
                 || p.group_range(j).all(|i| cm.incumbent[i] == entry.kind)
             {
@@ -595,6 +676,53 @@ mod tests {
         // incumbent holds — no thrash on noise-level differences.
         assert_eq!(with_cost(gain * 0.5), vec![CodecKind::Fp16]);
         assert_eq!(with_cost(gain * 2.0), vec![CodecKind::Fp32]);
+    }
+
+    #[test]
+    fn sharded_pricing_ties_fp32_and_charges_the_param_allgather() {
+        use super::super::costmodel::FittedCost;
+        let zero = FittedCost { b: 0.0, g: 0.0, r2: 1.0 };
+        let comm = FittedCost { b: 1e-5, g: 1e-9, r2: 1.0 };
+        let n = 50_000usize;
+        let mk = |c: FittedCost| {
+            AnalyticObjective::new(vec![1e-3], vec![n], 1e-3, zero, zero, c, 1)
+        };
+        let p = Partition::full_merge(1);
+        // One group ⇒ eval = fwd + bwd + enc + comm + dec, so comm-price
+        // changes show up in the score verbatim.
+        let full = mk(comm).eval(&p);
+
+        // FP32 base: ½·allreduce (the reduce-scatter) + ½·fp32 allreduce
+        // (the parameter-shard allgather) = the full allreduce — exact tie.
+        let mut obj = mk(comm).with_sharded_exchange(ShardedCost {
+            fp32_comm: comm,
+            base_codec: CodecKind::Fp32,
+        });
+        assert!((obj.eval(&p) - full).abs() < 1e-12, "fp32 sharded must tie full mode");
+
+        // Allgather codec: the gradient collective is unchanged; the param
+        // allgather is pure extra.
+        let mut obj = mk(comm).with_sharded_exchange(ShardedCost {
+            fp32_comm: comm,
+            base_codec: CodecKind::EfSignSgd,
+        });
+        let want = full + 0.5 * comm.predict(n);
+        assert!((obj.eval(&p) - want).abs() < 1e-12);
+
+        // FP16 (allreduce on a cheaper wire): ½ codec comm + ½ fp32 comm.
+        let half = FittedCost { b: 1e-5, g: 5e-10, r2: 1.0 };
+        let fp16_full = mk(half).eval(&p);
+        let mut obj = mk(half).with_sharded_exchange(ShardedCost {
+            fp32_comm: comm,
+            base_codec: CodecKind::Fp16,
+        });
+        let want = fp16_full - 0.5 * half.predict(n) + 0.5 * comm.predict(n);
+        assert!((obj.eval(&p) - want).abs() < 1e-12);
+
+        // The knob detaches cleanly.
+        obj.set_sharded_exchange(None);
+        assert!(obj.sharded_exchange().is_none());
+        assert!((obj.eval(&p) - fp16_full).abs() < 1e-12);
     }
 
     #[test]

@@ -29,7 +29,10 @@ use crate::netsim::{Fabric, HierCost, NetScenario, RouteDepth, ThreeLevelFabric,
 use crate::profiles::ModelProfile;
 use crate::scheduler::costmodel::{CodecCostEntry, CodecCostModel, FittedCost, TwoLevelCost};
 use crate::scheduler::objective::{AnalyticObjective, Objective as _};
-use crate::scheduler::{mergecomp_search, CostEstimator, Decision, Driver, DriverConfig, Partition};
+use crate::scheduler::{
+    mergecomp_search, CostEstimator, Decision, Driver, DriverConfig, Partition, SearchParams,
+    ShardedCost,
+};
 use crate::simulator::OverheadModel;
 
 /// One (simulated, measured) overlap comparison.
@@ -285,6 +288,73 @@ pub fn three_level_comm_fit(
     let s0 = secs(0.0);
     let s1 = secs(n1);
     FittedCost { b: s0, g: (s1 - s0) / n1, r2: 1.0 }
+}
+
+/// One point of the sharded-vs-full exchange tradeoff on a flat fabric:
+/// the same searched partition priced under both `--exchange-mode`s, plus
+/// the per-rank optimizer-state footprint of each.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedTradeoff {
+    /// Eq.-7 iteration seconds pricing the full allreduce exchange.
+    pub full_secs: f64,
+    /// The same partition priced as reduce-scatter + FP32 parameter
+    /// allgather (what `--exchange-mode sharded` runs).
+    pub sharded_secs: f64,
+    /// Replicated per-rank momentum bytes under the full exchange.
+    pub full_opt_bytes: u64,
+    /// The largest rank's momentum shard under the sharded exchange.
+    pub sharded_opt_bytes: u64,
+}
+
+/// The analytic ground truth for the sharded exchange's headline claim:
+/// on a flat fabric with an uncompressed (FP32) stream, the textbook ring
+/// allreduce IS a reduce-scatter followed by an allgather — so splitting
+/// the update across ranks costs **zero** extra wall-clock while the
+/// per-rank optimizer state shrinks by ~`world`. (Compressed codecs trade
+/// some of that tie away: the parameter allgather stays uncompressed —
+/// `objective.rs` unit-tests price that side.)
+pub fn sharded_exchange_tradeoff(
+    profile: &ModelProfile,
+    fabric: &Fabric,
+    world: usize,
+    search: SearchParams,
+) -> ShardedTradeoff {
+    use crate::collectives::shard_elems;
+    let plane = linear_plane(CodecKind::Fp32, fabric, world);
+    let mut full = plane_objective(profile, &plane);
+    let partition = mergecomp_search(&mut full, profile.num_tensors(), search).partition;
+    let full_secs = full.eval(&partition);
+
+    let mut sharded = plane_objective(profile, &plane);
+    sharded.set_sharded_exchange(Some(ShardedCost {
+        fp32_comm: plane.comm,
+        base_codec: CodecKind::Fp32,
+    }));
+    let sharded_secs = sharded.eval(&partition);
+
+    let sizes = profile.sizes_backprop_order();
+    let total: usize = sizes.iter().sum();
+    let group_elems: Vec<usize> = (0..partition.num_groups())
+        .map(|j| partition.group_range(j).map(|i| sizes[i]).sum())
+        .collect();
+    let sharded_opt_bytes = (0..world)
+        .map(|r| {
+            group_elems
+                .iter()
+                .map(|&n| {
+                    let (lo, hi) = shard_elems(n, world, r);
+                    4 * (hi - lo) as u64
+                })
+                .sum::<u64>()
+        })
+        .max()
+        .unwrap_or(0);
+    ShardedTradeoff {
+        full_secs,
+        sharded_secs,
+        full_opt_bytes: 4 * total as u64,
+        sharded_opt_bytes,
+    }
 }
 
 /// Eq.-7 objective for `profile` under the true costs of `plane`.
@@ -871,6 +941,37 @@ mod tests {
                 auto.f_min
             );
         }
+    }
+
+    #[test]
+    fn sharded_exchange_saves_memory_without_losing_wall_clock() {
+        let profile = transformer_100m();
+        let world = 4;
+        let t = sharded_exchange_tradeoff(
+            &profile,
+            &Fabric::pcie(),
+            world,
+            SearchParams { y_max: 3, alpha: 0.02 },
+        );
+        // FP32 on the flat ring: reduce-scatter + parameter allgather is
+        // exactly the two phases of the ring allreduce — a wall-clock tie.
+        let rel = (t.sharded_secs - t.full_secs).abs() / t.full_secs.max(1e-12);
+        assert!(
+            rel < 1e-12,
+            "sharded {} vs full {} (rel {rel})",
+            t.sharded_secs,
+            t.full_secs
+        );
+        // ... while the per-rank optimizer state drops by ~world (the
+        // largest shard carries at most one alignment chunk of slack).
+        assert!(t.sharded_opt_bytes < t.full_opt_bytes, "no memory win");
+        assert!(
+            (t.sharded_opt_bytes as f64) < t.full_opt_bytes as f64 / (world as f64 - 1.0),
+            "shard {} too large vs full {} / {}",
+            t.sharded_opt_bytes,
+            t.full_opt_bytes,
+            world
+        );
     }
 
     #[test]

@@ -14,7 +14,7 @@
 use crate::collectives::{Comm, Error};
 use crate::compression::CodecKind;
 use crate::coordinator::ExchangeEngine;
-pub use crate::coordinator::{ExchangeStats, GroupSample, PipelineMode};
+pub use crate::coordinator::{ExchangeMode, ExchangeStats, GroupSample, PipelineMode};
 use crate::scheduler::{Partition, RouteChoice};
 use crate::util::rng::Xoshiro256;
 
@@ -23,6 +23,7 @@ use crate::util::rng::Xoshiro256;
 pub struct GradExchange {
     engine: ExchangeEngine,
     mode: PipelineMode,
+    xmode: ExchangeMode,
 }
 
 impl GradExchange {
@@ -33,11 +34,22 @@ impl GradExchange {
         GradExchange {
             engine: ExchangeEngine::new(kind, partition, sizes_backprop),
             mode: PipelineMode::default(),
+            xmode: ExchangeMode::default(),
         }
     }
 
     pub fn with_mode(mut self, mode: PipelineMode) -> Self {
         self.mode = mode;
+        self
+    }
+
+    /// Select the gradient-distribution mode (DESIGN.md "Sharded exchange").
+    /// Under [`ExchangeMode::Sharded`], after [`GradExchange::exchange`]
+    /// only the spans reported by [`GradExchange::owned_group_ranges`] hold
+    /// valid averaged gradients for allreduce-codec groups; allgather-codec
+    /// groups stay fully valid everywhere.
+    pub fn with_exchange_mode(mut self, xmode: ExchangeMode) -> Self {
+        self.xmode = xmode;
         self
     }
 
@@ -49,8 +61,24 @@ impl GradExchange {
         self.mode
     }
 
+    pub fn exchange_mode(&self) -> ExchangeMode {
+        self.xmode
+    }
+
     pub fn partition(&self) -> &Partition {
         self.engine.partition()
+    }
+
+    /// Merged element count per scheduled group (backprop flat order).
+    pub fn group_elems(&self) -> &[usize] {
+        self.engine.group_elems()
+    }
+
+    /// Element span `[lo, hi)` of each group's flat buffer that `rank` owns
+    /// under the sharded exchange — the shard-ownership contract shared
+    /// with the sharded optimizer and the checkpoint layer.
+    pub fn owned_group_ranges(&self, world: usize, rank: usize) -> Vec<(usize, usize)> {
+        self.engine.owned_group_ranges(world, rank)
     }
 
     pub fn kind(&self) -> CodecKind {
@@ -124,7 +152,7 @@ impl GradExchange {
         grads: &mut [Vec<f32>],
         rng: &mut Xoshiro256,
     ) -> Result<ExchangeStats, Error> {
-        self.engine.exchange(comm, grads, rng, self.mode)
+        self.engine.exchange_mode(comm, grads, rng, self.mode, self.xmode)
     }
 }
 

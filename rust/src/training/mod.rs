@@ -15,9 +15,9 @@ pub mod launch;
 mod optimizer;
 mod trainer;
 
-pub use exchange::{ExchangeStats, GradExchange, GroupSample, PipelineMode};
+pub use exchange::{ExchangeMode, ExchangeStats, GradExchange, GroupSample, PipelineMode};
 pub use launch::{launch_local, LaunchOptions, LaunchReport, RankOutcome};
-pub use optimizer::SgdMomentum;
+pub use optimizer::{SgdMomentum, ShardedSgdMomentum};
 pub use trainer::{
     init_params as trainer_init_params, params_digest, train, RunResult, StepRecord,
     RESULT_SCHEMA_VERSION,

@@ -76,6 +76,156 @@ impl SgdMomentum {
     }
 }
 
+/// Sharded SGD + momentum for the sharded exchange mode: each rank holds
+/// momentum only for the element spans it owns (one span per scheduled
+/// group, by the [`crate::collectives::shard_elems`] contract) and updates
+/// only those spans; the trainer allgathers the updated parameter shards
+/// afterwards. The span arithmetic replicates [`SgdMomentum::step`]
+/// operation-for-operation — including the μ = 0 fast path that never
+/// touches `v` — so sharded parameters are bit-identical to full mode's.
+pub struct ShardedSgdMomentum {
+    lr: f32,
+    mu: f32,
+    /// Owned-span momentum per scheduled group (group-flat element order).
+    velocity: Vec<Vec<f32>>,
+    /// Owned element span `[lo, hi)` within each group's flat buffer.
+    spans: Vec<(usize, usize)>,
+    /// Total merged elements per group (full-plane export shape).
+    group_elems: Vec<usize>,
+}
+
+impl ShardedSgdMomentum {
+    /// `spans[j]` is this rank's owned range of group `j`'s flat buffer
+    /// (from [`crate::coordinator::ExchangeEngine::owned_group_ranges`]).
+    pub fn new(
+        lr: f32,
+        mu: f32,
+        group_elems: &[usize],
+        spans: &[(usize, usize)],
+    ) -> ShardedSgdMomentum {
+        assert!(lr > 0.0);
+        assert!((0.0..1.0).contains(&mu));
+        assert_eq!(group_elems.len(), spans.len());
+        for (j, &(lo, hi)) in spans.iter().enumerate() {
+            assert!(lo <= hi && hi <= group_elems[j], "group {j}: bad span");
+        }
+        ShardedSgdMomentum {
+            lr,
+            mu,
+            velocity: spans.iter().map(|&(lo, hi)| vec![0f32; hi - lo]).collect(),
+            spans: spans.to_vec(),
+            group_elems: group_elems.to_vec(),
+        }
+    }
+
+    pub fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    pub fn spans(&self) -> &[(usize, usize)] {
+        &self.spans
+    }
+
+    /// Owned-span momentum buffers (group order) — the elastic rollback
+    /// backup unit.
+    pub fn velocity(&self) -> &[Vec<f32>] {
+        &self.velocity
+    }
+
+    /// Overwrite the owned-span momentum (inverse of
+    /// [`ShardedSgdMomentum::velocity`]); shapes must match construction.
+    pub fn load_velocity(&mut self, velocity: &[Vec<f32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            velocity.len() == self.velocity.len(),
+            "load_velocity: {} groups, optimizer has {}",
+            velocity.len(),
+            self.velocity.len()
+        );
+        for (j, (src, dst)) in velocity.iter().zip(&mut self.velocity).enumerate() {
+            anyhow::ensure!(
+                src.len() == dst.len(),
+                "load_velocity: group {j} has {} elements, optimizer owns {}",
+                src.len(),
+                dst.len()
+            );
+            dst.copy_from_slice(src);
+        }
+        Ok(())
+    }
+
+    /// Bytes of live optimizer state on this rank (the sharded mode's
+    /// memory win: ≈ full-mode bytes / world).
+    pub fn state_bytes(&self) -> u64 {
+        self.velocity.iter().map(|v| 4 * v.len() as u64).sum()
+    }
+
+    /// Update this rank's owned span of group `j`. `params` and `grads`
+    /// are the group's **full** flat buffers (backprop merge order); only
+    /// `[lo, hi)` is read and written.
+    pub fn step_group(&mut self, j: usize, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.group_elems[j]);
+        assert_eq!(grads.len(), self.group_elems[j]);
+        let (lo, hi) = self.spans[j];
+        let v = &mut self.velocity[j];
+        if self.mu == 0.0 {
+            for (pi, gi) in params[lo..hi].iter_mut().zip(&grads[lo..hi]) {
+                *pi -= self.lr * gi;
+            }
+        } else {
+            for ((pi, gi), vi) in
+                params[lo..hi].iter_mut().zip(&grads[lo..hi]).zip(v.iter_mut())
+            {
+                *vi = self.mu * *vi + gi;
+                *pi -= self.lr * *vi;
+            }
+        }
+    }
+
+    /// Export momentum as full-group-length planes with zeros outside the
+    /// owned span — the checkpoint/reshard interchange format: summing
+    /// (or span-slicing) all ranks' planes reconstructs the full momentum.
+    pub fn export_group_planes(&self) -> Vec<Vec<f32>> {
+        self.spans
+            .iter()
+            .zip(&self.velocity)
+            .zip(&self.group_elems)
+            .map(|((&(lo, _hi), v), &n)| {
+                let mut plane = vec![0f32; n];
+                plane[lo..lo + v.len()].copy_from_slice(v);
+                plane
+            })
+            .collect()
+    }
+
+    /// Load momentum from full-group-length planes, taking only this
+    /// rank's owned span of each (inverse of
+    /// [`ShardedSgdMomentum::export_group_planes`], and the reshard entry
+    /// point after a repartition or world change).
+    pub fn load_group_planes(&mut self, planes: &[Vec<f32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            planes.len() == self.velocity.len(),
+            "load_group_planes: {} planes, optimizer has {} groups",
+            planes.len(),
+            self.velocity.len()
+        );
+        for (j, plane) in planes.iter().enumerate() {
+            anyhow::ensure!(
+                plane.len() == self.group_elems[j],
+                "load_group_planes: group {j} plane has {} elements, group has {}",
+                plane.len(),
+                self.group_elems[j]
+            );
+            let (lo, hi) = self.spans[j];
+            self.velocity[j].copy_from_slice(&plane[lo..hi]);
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +245,59 @@ mod tests {
         opt.step(&mut p, &[vec![1.0]]); // v=1, p=-1
         opt.step(&mut p, &[vec![1.0]]); // v=1.5, p=-2.5
         assert_eq!(p[0][0], -2.5);
+    }
+
+    #[test]
+    fn sharded_spans_match_full_update_bitwise() {
+        // Two "ranks" each updating their owned span must reproduce the
+        // full optimizer's bits over the whole buffer, μ ∈ {0, 0.9}.
+        for mu in [0.0f32, 0.9] {
+            let n = 11usize;
+            let spans = [(0usize, 6usize), (6, 11)];
+            let mut full = SgdMomentum::new(0.05, mu, &[n]);
+            let mut p_full = vec![(0..n).map(|i| i as f32 * 0.3 - 1.0).collect::<Vec<f32>>()];
+            let mut p_shard = p_full[0].clone();
+            let mut shards: Vec<ShardedSgdMomentum> = spans
+                .iter()
+                .map(|s| ShardedSgdMomentum::new(0.05, mu, &[n], &[*s]))
+                .collect();
+            for step in 0..3 {
+                let g: Vec<f32> = (0..n).map(|i| (i + step) as f32 * 0.11 - 0.5).collect();
+                full.step(&mut p_full, &[g.clone()]);
+                for s in &mut shards {
+                    s.step_group(0, &mut p_shard, &g);
+                }
+            }
+            for i in 0..n {
+                assert_eq!(
+                    p_full[0][i].to_bits(),
+                    p_shard[i].to_bits(),
+                    "mu={mu} elem {i}"
+                );
+            }
+            let bytes: u64 = shards.iter().map(|s| s.state_bytes()).sum();
+            assert_eq!(bytes, 4 * n as u64);
+        }
+    }
+
+    #[test]
+    fn sharded_planes_roundtrip() {
+        let mut opt = ShardedSgdMomentum::new(1.0, 0.5, &[4, 3], &[(1, 3), (0, 2)]);
+        let mut p0 = vec![0f32; 4];
+        let mut p1 = vec![0f32; 3];
+        opt.step_group(0, &mut p0, &[1.0, 2.0, 3.0, 4.0]);
+        opt.step_group(1, &mut p1, &[5.0, 6.0, 7.0]);
+        let planes = opt.export_group_planes();
+        assert_eq!(planes[0], vec![0.0, 2.0, 3.0, 0.0]);
+        assert_eq!(planes[1], vec![5.0, 6.0, 0.0]);
+
+        let mut fresh = ShardedSgdMomentum::new(1.0, 0.5, &[4, 3], &[(1, 3), (0, 2)]);
+        fresh.load_group_planes(&planes).unwrap();
+        assert_eq!(fresh.velocity(), opt.velocity());
+        assert!(fresh.load_group_planes(&[vec![0.0; 4]]).is_err());
+        assert!(fresh
+            .load_group_planes(&[vec![0.0; 5], vec![0.0; 3]])
+            .is_err());
     }
 
     #[test]

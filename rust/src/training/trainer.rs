@@ -28,13 +28,14 @@
 use std::path::{Path, PathBuf};
 
 use super::exchange::{ExchangeStats, GradExchange};
-use super::optimizer::SgdMomentum;
+use super::optimizer::{SgdMomentum, ShardedSgdMomentum};
 use crate::collectives::{
-    run_comm_group, tcp_endpoint_with_nodes, Comm, CommRoute, Error, TcpConfig, TransportKind,
+    run_comm_group, shard_elems, tcp_endpoint_with_nodes, Comm, CommRoute, Error, TcpConfig,
+    TransportKind,
 };
 use crate::compression::{Codec as _, CodecKind, Collective};
 use crate::config::{ScheduleSpec, SchedulingMode, TrainConfig};
-use crate::coordinator::Checkpoint;
+use crate::coordinator::{Checkpoint, ExchangeMode};
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::profiles::ModelProfile;
 use crate::runtime::{StepMeta, TensorMeta, TrainStep};
@@ -42,7 +43,7 @@ use crate::scheduler::costmodel::{CostSampler, FittedCost, TwoLevelCost};
 use crate::scheduler::objective::AnalyticObjective;
 use crate::scheduler::{
     CodecMode, CostEstimator, Decision, Driver, DriverConfig, Partition, RouteChoice, RouteMode,
-    SearchParams,
+    SearchParams, ShardedCost,
 };
 use crate::util::json::Value;
 use crate::util::rng::Xoshiro256;
@@ -52,7 +53,10 @@ use crate::util::stats::Stopwatch;
 /// the first key in the object). Bump whenever a field is added, removed,
 /// or changes meaning; `mergecomp launch` refuses to aggregate rank outputs
 /// with mixed schemas. Every field is documented in `DESIGN.md`.
-pub const RESULT_SCHEMA_VERSION: u64 = 2;
+///
+/// v3 added `exchange_mode`, `optimizer_state_bytes`, and
+/// `peak_memory_bytes` (the sharded-exchange memory accounting).
+pub const RESULT_SCHEMA_VERSION: u64 = 3;
 
 /// Cap on elastic recovery rounds within a single training step — each
 /// round shrinks the world by at least one rank, so this only trips on a
@@ -123,6 +127,16 @@ pub struct RunResult {
     /// The completed-step count the run resumed from (`--resume`), `None`
     /// for a fresh run.
     pub resumed_from_step: Option<usize>,
+    /// How parameters were synchronized (`--exchange-mode`): `Full`
+    /// replicates the optimizer everywhere, `Sharded` reduce-scatters
+    /// gradients and allgathers updated parameter shards.
+    pub exchange_mode: ExchangeMode,
+    /// Bytes of live optimizer (momentum) state on THIS rank at the end of
+    /// the run — ≈ `full_bytes / world_at_end` under the sharded exchange.
+    pub optimizer_state_bytes: u64,
+    /// Modeled peak training-state bytes on this rank: parameters +
+    /// gradients (4 B/elem each) + optimizer state + codec (EF) state.
+    pub peak_memory_bytes: u64,
 }
 
 impl RunResult {
@@ -149,6 +163,12 @@ impl RunResult {
                 "resumed_from_step",
                 self.resumed_from_step.map(Value::from).unwrap_or(Value::Null),
             ),
+            ("exchange_mode", Value::from(self.exchange_mode.name())),
+            (
+                "optimizer_state_bytes",
+                Value::from(self.optimizer_state_bytes),
+            ),
+            ("peak_memory_bytes", Value::from(self.peak_memory_bytes)),
             ("partition_bounds", Value::Arr(
                 self.partition.bounds().iter().map(|&b| Value::from(b)).collect(),
             )),
@@ -538,6 +558,24 @@ fn resolve_schedule(
                     comm_cost,
                     fanin,
                 );
+                // Sharded exchange reprices comm as reduce-scatter + FP32
+                // parameter allgather. The warmup comm fit is per element
+                // under the configured codec; convert it to wire-byte
+                // space through the codec's wire affine, then to the FP32
+                // element basis the allgather term is charged in.
+                if cfg.exchange_mode == ExchangeMode::Sharded {
+                    let (header, density) = cfg.codec.wire_affine();
+                    let g = comm_cost.g / density.max(f64::MIN_POSITIVE);
+                    let bytes = FittedCost {
+                        b: (comm_cost.b - g * header).max(0.0),
+                        g,
+                        r2: comm_cost.r2,
+                    };
+                    obj.set_sharded_exchange(Some(ShardedCost {
+                        fp32_comm: bytes.per_elems_for(CodecKind::Fp32),
+                        base_codec: cfg.codec,
+                    }));
+                }
                 let out = spec.resolve(n, &mut obj);
                 evals = {
                     use crate::scheduler::objective::Objective as _;
@@ -605,6 +643,220 @@ fn exchange_rng(seed: u64, rank: usize, step: usize) -> Xoshiro256 {
             ^ ((rank as u64) << 17)
             ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
     )
+}
+
+/// The rank's optimizer, shaped by `--exchange-mode`: `Full` replicates
+/// the momentum on every rank; `Sharded` holds only the owned spans of
+/// the Algorithm-2 groups and relies on the parameter allgather in
+/// [`sharded_update`] for the rest of the model.
+enum Opt {
+    Full(SgdMomentum),
+    Sharded(ShardedSgdMomentum),
+}
+
+impl Opt {
+    /// Velocity in the checkpoint interchange format: full-length
+    /// per-tensor planes in forward (parameter) order. The sharded
+    /// optimizer exports zeros outside its owned spans — summing every
+    /// rank's planes reconstructs the full momentum, and the owner's
+    /// span survives a same-schedule `--resume` slice verbatim.
+    fn velocity_tensors(&self, sizes_fwd: &[usize]) -> Vec<Vec<f32>> {
+        match self {
+            Opt::Full(o) => o.velocity().to_vec(),
+            Opt::Sharded(o) => {
+                // Group planes concatenate to the model-flat buffer in
+                // backprop tensor order; split per tensor and reverse.
+                let mut flat: Vec<f32> = Vec::new();
+                for p in o.export_group_planes() {
+                    flat.extend_from_slice(&p);
+                }
+                let mut planes: Vec<Vec<f32>> = Vec::with_capacity(sizes_fwd.len());
+                let mut off = 0;
+                for &n in sizes_fwd.iter().rev() {
+                    planes.push(flat[off..off + n].to_vec());
+                    off += n;
+                }
+                planes.reverse();
+                planes
+            }
+        }
+    }
+
+    /// Bytes of live momentum state on this rank.
+    fn state_bytes(&self, total_params: usize) -> u64 {
+        match self {
+            Opt::Full(_) => 4 * total_params as u64,
+            Opt::Sharded(o) => o.state_bytes(),
+        }
+    }
+}
+
+/// Convert checkpoint-format velocity (full-length per-tensor planes,
+/// forward order) into per-group planes in the engine's merge order —
+/// what [`ShardedSgdMomentum::load_group_planes`] slices its spans from.
+fn group_planes_from_tensors(velocity_fwd: &[Vec<f32>], group_elems: &[usize]) -> Vec<Vec<f32>> {
+    let mut flat: Vec<f32> = Vec::new();
+    for t in velocity_fwd.iter().rev() {
+        flat.extend_from_slice(t);
+    }
+    let mut planes = Vec::with_capacity(group_elems.len());
+    let mut off = 0;
+    for &n in group_elems {
+        planes.push(flat[off..off + n].to_vec());
+        off += n;
+    }
+    planes
+}
+
+/// One sharded optimizer step: per scheduled group, update this rank's
+/// owned span and allgather every rank's updated parameter shard (raw
+/// little-endian f32 — the shards are disjoint and cover the group, so
+/// the gather rebuilds identical full parameters everywhere).
+///
+/// `grads_bp` holds the exchanged gradients in backprop tensor order;
+/// under an AllReduce codec only the owned span of each group is
+/// meaningful on this rank, and [`ShardedSgdMomentum::step_group`] reads
+/// exactly that span.
+fn sharded_update(
+    comm: &mut Comm,
+    opt: &mut ShardedSgdMomentum,
+    exchange: &GradExchange,
+    params: &mut [Vec<f32>],
+    grads_bp: &[Vec<f32>],
+) -> anyhow::Result<()> {
+    let n = params.len();
+    let world = comm.world();
+    for j in 0..exchange.partition().num_groups() {
+        let range = exchange.partition().group_range(j);
+        let elems = exchange.group_elems()[j];
+        // Flatten the group from forward-order params into the engine's
+        // merge order (backprop tensor concatenation).
+        let mut pflat = Vec::with_capacity(elems);
+        let mut gflat = Vec::with_capacity(elems);
+        for bp in range.clone() {
+            pflat.extend_from_slice(&params[n - 1 - bp]);
+            gflat.extend_from_slice(&grads_bp[bp]);
+        }
+        opt.step_group(j, &mut pflat, &gflat);
+        let (lo, hi) = opt.spans()[j];
+        let mut mine = Vec::with_capacity((hi - lo) * 4);
+        for v in &pflat[lo..hi] {
+            mine.extend_from_slice(&v.to_le_bytes());
+        }
+        let all = comm.allgather(mine)?;
+        anyhow::ensure!(
+            all.len() == world,
+            "sharded update: parameter allgather returned {} payloads for world {world}",
+            all.len()
+        );
+        for (src, payload) in all.iter().enumerate() {
+            let (slo, shi) = shard_elems(elems, world, src);
+            anyhow::ensure!(
+                payload.len() == (shi - slo) * 4,
+                "sharded update: group {j} rank {src} sent {} bytes, its shard is {}",
+                payload.len(),
+                (shi - slo) * 4
+            );
+            for (i, c) in payload.chunks_exact(4).enumerate() {
+                pflat[slo + i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        let mut off = 0;
+        for bp in range {
+            let t = &mut params[n - 1 - bp];
+            t.copy_from_slice(&pflat[off..off + t.len()]);
+            off += t.len();
+        }
+    }
+    Ok(())
+}
+
+/// Re-shard the momentum after the group bounds or the world changed
+/// (online repartition, elastic shrink): every rank contributes its
+/// owned spans as zero-padded model-flat planes, the element-wise sum
+/// reconstructs the full momentum (spans are disjoint), and each rank
+/// keeps its NEW owned spans. A span whose old owner died contributes
+/// nothing — momentum there restarts at zero, deterministically on
+/// every survivor. Collective: all ranks must call this together.
+fn reshard_sharded(
+    comm: &mut Comm,
+    old: &ShardedSgdMomentum,
+    mu: f32,
+    exchange: &GradExchange,
+) -> anyhow::Result<ShardedSgdMomentum> {
+    let mut mine: Vec<u8> = Vec::new();
+    for p in old.export_group_planes() {
+        for v in &p {
+            mine.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let group_elems = exchange.group_elems().to_vec();
+    let total: usize = group_elems.iter().sum();
+    anyhow::ensure!(
+        mine.len() == total * 4,
+        "velocity reshard: old optimizer covers {} bytes, model has {}",
+        mine.len(),
+        total * 4
+    );
+    let all = comm.allgather(mine)?;
+    let mut flat = vec![0f32; total];
+    for (src, payload) in all.iter().enumerate() {
+        anyhow::ensure!(
+            payload.len() == total * 4,
+            "velocity reshard: rank {src} sent {} bytes, expected {}",
+            payload.len(),
+            total * 4
+        );
+        for (i, c) in payload.chunks_exact(4).enumerate() {
+            flat[i] += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    }
+    let spans = exchange.owned_group_ranges(comm.world(), comm.rank());
+    let mut fresh = ShardedSgdMomentum::new(old.lr(), mu, &group_elems, &spans);
+    let mut off = 0;
+    let planes: Vec<Vec<f32>> = group_elems
+        .iter()
+        .map(|&ge| {
+            let p = flat[off..off + ge].to_vec();
+            off += ge;
+            p
+        })
+        .collect();
+    fresh.load_group_planes(&planes)?;
+    Ok(fresh)
+}
+
+/// Run `accum` forward/backward micro-steps and average their gradients
+/// (and losses). `accum == 1` is bit-for-bit the legacy single-step path
+/// — no scaling pass touches the gradients. Returns the summed compute
+/// seconds alongside.
+fn run_accum(
+    runner: &mut StepRunner,
+    params: &[Vec<f32>],
+    accum: usize,
+) -> anyhow::Result<(f32, Vec<Vec<f32>>, f64)> {
+    let (mut loss, mut grads) = runner.run(params)?;
+    let mut secs = runner.last_exec_secs();
+    for _ in 1..accum {
+        let (l, g) = runner.run(params)?;
+        secs += runner.last_exec_secs();
+        loss += l;
+        for (a, b) in grads.iter_mut().zip(&g) {
+            for (ai, bi) in a.iter_mut().zip(b) {
+                *ai += bi;
+            }
+        }
+    }
+    if accum > 1 {
+        let inv = 1.0 / accum as f32;
+        loss *= inv;
+        for t in grads.iter_mut() {
+            for v in t.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+    Ok((loss, grads, secs))
 }
 
 /// Build the online rescheduling driver for the communicator's **current**
@@ -692,6 +944,11 @@ fn build_driver(
     if auto_codecs {
         d = d.with_codecs(cfg.codec, &pool, cfg.codec_switch_cost);
     }
+    // Sharded exchange: every re-search prices the reduce-scatter +
+    // parameter-allgather byte pattern instead of the full allreduce.
+    if cfg.exchange_mode == ExchangeMode::Sharded {
+        d = d.with_sharded_exchange(cfg.codec);
+    }
     Ok(Some(d))
 }
 
@@ -715,6 +972,7 @@ fn write_checkpoint(
         rank,
         seed: cfg.seed,
         base_codec: cfg.codec,
+        exchange_mode: cfg.exchange_mode,
         bounds: exchange.partition().bounds().to_vec(),
         routes: exchange.routes().map(|r| r.to_vec()).unwrap_or_default(),
         codecs: exchange.group_codecs(),
@@ -902,6 +1160,10 @@ fn train_rank(
             c.base_codec.name(),
             cfg.codec.name()
         );
+        // A full-mode snapshot holds replicated momentum, a sharded one
+        // only this rank's spans — resuming across modes would silently
+        // corrupt the optimizer state, so it is refused outright.
+        c.ensure_exchange_mode(cfg.exchange_mode)?;
         Some(c)
     } else {
         None
@@ -946,7 +1208,6 @@ fn train_rank(
         crate::compression::CodecKind::Dgc { .. } => 0.0,
         _ => cfg.momentum,
     };
-    let mut opt = SgdMomentum::new(cfg.lr, momentum, &sizes_fwd);
 
     // --- warm-up + schedule ----------------------------------------------
     let (partition, warmup_evals, fits) = if let Some(c) = &restore {
@@ -973,20 +1234,43 @@ fn train_rank(
     } else {
         // One step to measure compute time; average the measurement so all
         // ranks feed rank 0's search comparable numbers on a time-sliced
-        // CPU.
+        // CPU. Under --accum-steps the schedule amortizes one exchange
+        // over `accum` micro-steps, so the compute term scales with it.
         let (_, _) = runner.run(&params)?;
         let mut step_secs = runner.last_exec_secs();
         let mut t = [step_secs as f32];
         comm.allreduce_f32(&mut t)?;
         step_secs = (t[0] / comm.world() as f32) as f64;
-        resolve_schedule(comm, cfg, meta, &setup.profile, step_secs)?
+        resolve_schedule(
+            comm,
+            cfg,
+            meta,
+            &setup.profile,
+            step_secs * cfg.accum_steps.max(1) as f64,
+        )?
     };
     let mut exchange = GradExchange::new(
         cfg.codec,
         partition.clone(),
         meta.sizes_backprop_order(),
     )
-    .with_mode(cfg.pipeline);
+    .with_mode(cfg.pipeline)
+    .with_exchange_mode(cfg.exchange_mode);
+    // The optimizer's shape follows the exchange mode: sharded mode owns
+    // one momentum span per scheduled group (so it must be built against
+    // the resolved partition), full mode replicates everything.
+    let mut opt = match cfg.exchange_mode {
+        ExchangeMode::Full => Opt::Full(SgdMomentum::new(cfg.lr, momentum, &sizes_fwd)),
+        ExchangeMode::Sharded => {
+            let spans = exchange.owned_group_ranges(comm.world(), comm.rank());
+            Opt::Sharded(ShardedSgdMomentum::new(
+                cfg.lr,
+                momentum,
+                exchange.group_elems(),
+                &spans,
+            ))
+        }
+    };
     if let Some(c) = &restore {
         if !c.routes.is_empty() {
             exchange.set_routes(Some(c.routes.clone()))?;
@@ -997,7 +1281,17 @@ fn train_rank(
         // Last: set_codecs carries/resets EF state, and the snapshot's
         // planes must win over whatever that policy left behind.
         exchange.load_flat_state(&c.codec_state)?;
-        opt.load_velocity(&c.velocity)?;
+        match &mut opt {
+            Opt::Full(o) => o.load_velocity(&c.velocity)?,
+            // The snapshot stores full-length per-tensor planes (zeros
+            // outside this rank's spans); the same schedule and world are
+            // guaranteed above, so slicing the owned spans restores the
+            // momentum bit-exactly.
+            Opt::Sharded(o) => o.load_group_planes(&group_planes_from_tensors(
+                &c.velocity,
+                exchange.group_elems(),
+            ))?,
+        }
     }
 
     // --- online rescheduler (measure → search → repartition) -------------
@@ -1010,12 +1304,14 @@ fn train_rank(
 
     // --- training loop ---------------------------------------------------
     // A fresh run's warmup consumed synthetic step 0, so loop step S draws
-    // runner step S+1; a resumed run fast-forwards to the same position so
-    // the gradient streams line up with the uninterrupted run's.
+    // runner steps S·accum+1 ..= S·accum+accum (exactly S+1 when accum=1);
+    // a resumed run fast-forwards to the same position so the gradient
+    // streams line up with the uninterrupted run's.
+    let accum = cfg.accum_steps.max(1);
     let start_step = restore.as_ref().map(|c| c.step).unwrap_or(0);
     if restore.is_some() {
         anyhow::ensure!(
-            runner.seek(start_step as u64 + 1),
+            runner.seek(start_step as u64 * accum as u64 + 1),
             "--resume requires the synthetic step source"
         );
     }
@@ -1035,14 +1331,13 @@ fn train_rank(
         }
 
         let mut attempt = 0usize;
-        let (loss, stats) = loop {
+        let (loss, stats, compute_secs) = loop {
             // Elastic runs snapshot codec state before the exchange: a
             // partially-failed exchange leaves EF accumulators consumed
             // for the groups that encoded before the wire died, and the
             // retry must start from the pre-step state.
             let state_backup = elastic.then(|| exchange.flat_state());
-            let (loss, grads_fwd) = runner.run(&params)?;
-            let step_secs = runner.last_exec_secs();
+            let (loss, grads_fwd, step_secs) = run_accum(&mut runner, &params, accum)?;
 
             // Reorder to backprop order for the exchange, then back.
             let mut grads_bp: Vec<Vec<f32>> = grads_fwd.into_iter().rev().collect();
@@ -1050,9 +1345,17 @@ fn train_rank(
             match exchange.exchange(comm, &mut grads_bp, &mut rng) {
                 Ok(stats) => {
                     sum_step += step_secs;
-                    let grads_fwd: Vec<Vec<f32>> = grads_bp.into_iter().rev().collect();
-                    opt.step(&mut params, &grads_fwd);
-                    break (loss, stats);
+                    match &mut opt {
+                        Opt::Full(o) => {
+                            let grads_fwd: Vec<Vec<f32>> =
+                                grads_bp.into_iter().rev().collect();
+                            o.step(&mut params, &grads_fwd);
+                        }
+                        Opt::Sharded(o) => {
+                            sharded_update(comm, o, &exchange, &mut params, &grads_bp)?;
+                        }
+                    }
+                    break (loss, stats, step_secs);
                 }
                 Err(e) => {
                     let recoverable = elastic
@@ -1064,6 +1367,7 @@ fn train_rank(
                     }
                     attempt += 1;
                     recoveries += 1;
+                    let velocity = opt.velocity_tensors(&sizes_fwd);
                     recover_from_peer_loss(
                         comm,
                         cfg,
@@ -1075,15 +1379,22 @@ fn train_rank(
                         &mut exchange,
                         &mut driver,
                         &params,
-                        opt.velocity(),
+                        &velocity,
                         state_backup.as_deref().unwrap_or(&[]),
                         ckpt_dir.as_deref(),
                         rank,
                     )?;
+                    // The shrink changed the ownership map: every element
+                    // span moves to its new owner, and spans whose owner
+                    // died restart momentum at zero on every survivor.
+                    if let Opt::Sharded(o) = &opt {
+                        let fresh = reshard_sharded(comm, o, momentum, &exchange)?;
+                        opt = Opt::Sharded(fresh);
+                    }
                     // Rewind the gradient stream so the retried step draws
                     // the same per-rank gradients it failed with.
                     anyhow::ensure!(
-                        runner.seek(step as u64 + 1),
+                        runner.seek(step as u64 * accum as u64 + 1),
                         "elastic retry requires the synthetic step source"
                     );
                 }
@@ -1096,7 +1407,7 @@ fn train_rank(
         // any switch on every rank at the same step, remapping EF
         // state bit-exactly and installing the per-group routes.
         if let Some(d) = driver.as_mut() {
-            d.observe(exchange.group_samples(), runner.last_exec_secs());
+            d.observe(exchange.group_samples(), compute_secs);
             if d.due(step) {
                 let decision = if comm.rank() == 0 { d.decide() } else { Decision::Keep };
                 if let Some(update) = d.sync(comm, decision)? {
@@ -1109,6 +1420,13 @@ fn train_rank(
                     exchange.set_routes(routes)?;
                     let codecs = (!update.codecs.is_empty()).then_some(update.codecs);
                     exchange.set_codecs(codecs)?;
+                    // New group bounds → new ownership map: move every
+                    // momentum span to its new owner bit-exactly (same
+                    // element, same value, different custodian).
+                    if let Opt::Sharded(o) = &opt {
+                        let fresh = reshard_sharded(comm, o, momentum, &exchange)?;
+                        opt = Opt::Sharded(fresh);
+                    }
                 }
             }
         }
@@ -1141,7 +1459,7 @@ fn train_rank(
                     &exchange,
                     driver.as_ref(),
                     &params,
-                    opt.velocity(),
+                    &opt.velocity_tensors(&sizes_fwd),
                 )?;
             }
         }
@@ -1189,6 +1507,13 @@ fn train_rank(
     let final_routes = exchange.routes().map(|r| r.to_vec()).unwrap_or_default();
     let final_codecs = exchange.group_codecs();
     let two_level_fit = driver.as_ref().and_then(|d| d.estimator().two_level_fit());
+    // Per-rank memory accounting (the sharded exchange's selling point):
+    // params + one live gradient set at 4 B/elem each, plus momentum —
+    // full/world-ish under sharded — plus the rank-local EF planes.
+    let total_params: usize = sizes_fwd.iter().sum();
+    let optimizer_state_bytes = opt.state_bytes(total_params);
+    let codec_state_bytes: u64 = exchange.flat_state().iter().map(|p| 4 * p.len() as u64).sum();
+    let peak_memory_bytes = 8 * total_params as u64 + optimizer_state_bytes + codec_state_bytes;
     Ok(RunResult {
         rank,
         records,
@@ -1210,6 +1535,9 @@ fn train_rank(
         world_at_end: comm.world(),
         recoveries,
         resumed_from_step: restore.as_ref().map(|c| c.step),
+        exchange_mode: cfg.exchange_mode,
+        optimizer_state_bytes,
+        peak_memory_bytes,
     })
 }
 

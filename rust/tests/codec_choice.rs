@@ -21,8 +21,11 @@
 //! 4. **Misuse is a typed error**, not silent garbage: a codec vector of
 //!    the wrong arity names both counts.
 
-use mergecomp::collectives::{run_comm_group, run_comm_group_tcp, Comm};
-use mergecomp::compression::{CodecKind, Collective};
+mod common;
+
+use common::{run_comm_on, small_tensor_sizes, step_grads_for, Backend};
+use mergecomp::collectives::run_comm_group;
+use mergecomp::compression::CodecKind;
 use mergecomp::scheduler::Partition;
 use mergecomp::training::{GradExchange, PipelineMode};
 use mergecomp::util::rng::Xoshiro256;
@@ -31,51 +34,8 @@ const WORLD: usize = 4;
 const GROUPS: usize = 2;
 const STEPS: usize = 4;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Backend {
-    InProc,
-    Tcp,
-}
-
-fn run_comm_on<T: Send>(
-    backend: Backend,
-    world: usize,
-    f: impl Fn(&mut Comm) -> T + Send + Sync,
-) -> Vec<T> {
-    match backend {
-        Backend::InProc => run_comm_group(world, f),
-        Backend::Tcp => run_comm_group_tcp(world, f),
-    }
-}
-
-/// Per-tensor sizes (backprop order): uneven groups, sub-word tails.
-fn tensor_sizes() -> Vec<usize> {
-    vec![300, 33, 256, 129]
-}
-
-/// Deterministic per-(rank, step) gradients; dyadic lattice values for the
-/// allreduce codecs so any reduction grouping sums exactly (same contract
-/// as `tests/route_choice.rs`).
-fn step_grads(kind: CodecKind, rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
-    let mut rng =
-        Xoshiro256::seed_from_u64(0xC0DE ^ ((rank as u64) << 32) ^ ((step as u64) << 8));
-    let lattice = kind.collective() == Collective::AllReduce;
-    sizes
-        .iter()
-        .map(|&n| {
-            let mut g = vec![0f32; n];
-            if lattice {
-                for v in g.iter_mut() {
-                    let k = rng.gen_range(129) as i64 - 64;
-                    *v = k as f32 / 64.0;
-                }
-            } else {
-                rng.fill_normal_f32(&mut g, 0.5);
-            }
-            g
-        })
-        .collect()
-}
+/// This suite's historical gradient-fixture seed.
+const SEED: u64 = 0xC0DE;
 
 /// Run `STEPS` exchanges under `base`. With `flip`, before each step the
 /// schedule walks away to `other` and back (whole schedule, then one
@@ -89,7 +49,7 @@ fn run_with_flips(
     mode: PipelineMode,
     flip: bool,
 ) -> Vec<(Vec<Vec<f32>>, u64)> {
-    let sizes = tensor_sizes();
+    let sizes = small_tensor_sizes();
     let n = sizes.len();
     run_comm_on(backend, WORLD, move |c| {
         let mut ex = GradExchange::new(base, Partition::naive_even(n, GROUPS), sizes.clone())
@@ -105,7 +65,7 @@ fn run_with_flips(
                 }
                 ex.set_codecs(None).unwrap();
             }
-            let mut grads = step_grads(base, c.rank(), step, &sizes);
+            let mut grads = step_grads_for(base, SEED, c.rank(), step, &sizes);
             ex.exchange(c, &mut grads, &mut rng).unwrap();
             last = grads;
         }
@@ -175,14 +135,14 @@ fn plane_mismatched_flip_resets_exactly_the_claimed_planes() {
     // Base DGC (two planes: velocity + momentum). Flip group 0 to
     // EF-SignSGD (one plane): the policy must reset — group 0's planes
     // read zero — while group 1's DGC state stays bit-identical.
-    let sizes = tensor_sizes();
+    let sizes = small_tensor_sizes();
     let n = sizes.len();
     let base = CodecKind::Dgc { ratio: 0.05 };
     let results = run_comm_group(WORLD, move |c| {
         let mut ex = GradExchange::new(base, Partition::naive_even(n, GROUPS), sizes.clone());
         let mut rng = Xoshiro256::seed_from_u64(9 + c.rank() as u64);
         for step in 0..2 {
-            let mut grads = step_grads(base, c.rank(), step, &sizes);
+            let mut grads = step_grads_for(base, SEED, c.rank(), step, &sizes);
             ex.exchange(c, &mut grads, &mut rng).unwrap();
         }
         let before = ex.flat_state();
@@ -223,7 +183,7 @@ fn mixed_codec_schedule_bit_identical_across_transports() {
     // bit-identically over channels and sockets, including a mid-run
     // flip from the all-base schedule into the mixed one.
     let run = |backend: Backend| {
-        let sizes = tensor_sizes();
+        let sizes = small_tensor_sizes();
         let n = sizes.len();
         run_comm_on(backend, WORLD, move |c| {
             let mut ex = GradExchange::new(
@@ -241,7 +201,7 @@ fn mixed_codec_schedule_bit_identical_across_transports() {
                 }
                 // Lattice gradients: the FP32 group's ring reduction is
                 // exact in wire precision on both transports.
-                let mut grads = step_grads(CodecKind::Fp32, c.rank(), step, &sizes);
+                let mut grads = step_grads_for(CodecKind::Fp32, SEED, c.rank(), step, &sizes);
                 ex.exchange(c, &mut grads, &mut rng).unwrap();
                 last = grads;
             }
@@ -266,7 +226,7 @@ fn mixed_codec_schedule_bit_identical_across_transports() {
 
 #[test]
 fn set_codecs_misuse_is_a_typed_error() {
-    let sizes = tensor_sizes();
+    let sizes = small_tensor_sizes();
     let n = sizes.len();
     let mut ex = GradExchange::new(
         CodecKind::EfSignSgd,

@@ -1,0 +1,140 @@
+//! Shared harness for the cross-mode equivalence suites
+//! (`tests/{pipeline,transport,hierarchy,simd,sharded}_equivalence.rs` and
+//! `tests/codec_choice.rs`): the transport-selecting runners, the canonical
+//! codec list, the per-suite deterministic gradient fixtures, and the
+//! bit-exact comparison.
+//!
+//! Every suite keeps its historical RNG seed (passed in by the caller) so
+//! the shared helpers reproduce exactly the gradient streams the suites
+//! were originally pinned on.
+#![allow(dead_code)]
+
+use mergecomp::collectives::{
+    run_comm_group, run_comm_group_tcp, run_group, run_tcp_group, Comm, Endpoint,
+};
+use mergecomp::compression::{CodecKind, Collective};
+use mergecomp::util::rng::Xoshiro256;
+
+/// Which wire the collectives run over: the in-process channel mesh or
+/// real loopback TCP sockets. The equivalence contracts must hold on both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    InProc,
+    Tcp,
+}
+
+pub const BACKENDS: [Backend; 2] = [Backend::InProc, Backend::Tcp];
+
+pub fn run_comm_on<T: Send>(
+    backend: Backend,
+    world: usize,
+    f: impl Fn(&mut Comm) -> T + Send + Sync,
+) -> Vec<T> {
+    match backend {
+        Backend::InProc => run_comm_group(world, f),
+        Backend::Tcp => run_comm_group_tcp(world, f),
+    }
+}
+
+pub fn run_ep_on<T: Send>(
+    backend: Backend,
+    world: usize,
+    f: impl Fn(Endpoint) -> T + Send + Sync,
+) -> Vec<T> {
+    match backend {
+        Backend::InProc => run_group(world, f),
+        Backend::Tcp => run_tcp_group(world, f),
+    }
+}
+
+/// Every codec the equivalence nets must hold for: the paper set plus
+/// TernGrad.
+pub fn all_kinds() -> Vec<CodecKind> {
+    let mut kinds = CodecKind::paper_set();
+    kinds.push(CodecKind::TernGrad);
+    kinds
+}
+
+/// Per-tensor sizes (backprop order) exercising uneven groups, sub-word
+/// tails for the bit-packed codecs, and multi-bucket QSGD groups.
+pub fn tensor_sizes() -> Vec<usize> {
+    vec![700, 33, 512, 129, 64, 257]
+}
+
+/// The compact variant `tests/codec_choice.rs` pins its fixtures on.
+pub fn small_tensor_sizes() -> Vec<usize> {
+    vec![300, 33, 256, 129]
+}
+
+fn step_rng(seed: u64, rank: usize, step: usize) -> Xoshiro256 {
+    Xoshiro256::seed_from_u64(seed ^ ((rank as u64) << 32) ^ ((step as u64) << 8))
+}
+
+/// Deterministic per-(rank, step) random-normal gradients, identical
+/// across the modes/backends/routes a suite compares.
+pub fn step_grads_normal(seed: u64, rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng = step_rng(seed, rank, step);
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g, 0.5);
+            g
+        })
+        .collect()
+}
+
+/// Codec-aware variant: allreduce codecs (FP32/FP16) get dyadic lattice
+/// values k·2⁻⁶ with k ∈ [−64, 64] — exact in f16, and sums over a handful
+/// of ranks stay exactly representable, so ANY reduction grouping yields
+/// the same bits. Everything else (the allgather codecs) gets random
+/// normals.
+pub fn step_grads_for(
+    kind: CodecKind,
+    seed: u64,
+    rank: usize,
+    step: usize,
+    sizes: &[usize],
+) -> Vec<Vec<f32>> {
+    let mut rng = step_rng(seed, rank, step);
+    let lattice = kind.collective() == Collective::AllReduce;
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut g = vec![0f32; n];
+            if lattice {
+                for v in g.iter_mut() {
+                    let k = rng.gen_range(129) as i64 - 64;
+                    *v = k as f32 / 64.0;
+                }
+            } else {
+                rng.fill_normal_f32(&mut g, 0.5);
+            }
+            g
+        })
+        .collect()
+}
+
+/// Bit-exact comparison (== on f32 bit patterns distinguishes everything
+/// but NaN payloads, which the codecs never produce from finite input).
+/// `label` names the two sides for the failure message, e.g.
+/// `"serial vs pipelined"`.
+pub fn assert_bit_identical(label: &str, kind: CodecKind, a: &[Vec<f32>], b: &[Vec<f32>]) {
+    assert_eq!(a.len(), b.len());
+    for (t, (ta, tb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            ta.len(),
+            tb.len(),
+            "{} ({label}): tensor {t} length",
+            kind.name()
+        );
+        for (i, (va, vb)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{} ({label}): tensor {t} idx {i}: {va} vs {vb}",
+                kind.name()
+            );
+        }
+    }
+}

@@ -19,7 +19,7 @@
 
 use mergecomp::compression::CodecKind;
 use mergecomp::config::{load_json, RunPolicy, ScheduleSpec, SchedulingMode, TrainConfig};
-use mergecomp::training::{launch_local, train, LaunchOptions};
+use mergecomp::training::{launch_local, train, ExchangeMode, LaunchOptions};
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -183,6 +183,201 @@ fn kill_one_rank_then_rejoin_via_checkpointed_restart_over_tcp() {
             r.param_digest.as_deref(),
             Some(want_digest.as_str()),
             "rank {}: resumed digest differs from the never-failed run",
+            r.rank
+        );
+    }
+    let rank0 = load_json(&rejoin.ranks[0].out_path).unwrap();
+    assert_eq!(rank0.get("resumed_from_step").and_then(|v| v.as_usize()), Some(4));
+
+    for d in [&ref_opts.out_dir, &chaos_opts.out_dir, &rejoin_opts.out_dir, &ckpt] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+/// `base_cfg` with the sharded exchange: reduce-scatter + parameter
+/// allgather, optimizer momentum sharded by group ownership.
+fn sharded_cfg(world: usize, steps: usize) -> TrainConfig {
+    let mut cfg = base_cfg(world, steps);
+    cfg.exchange_mode = ExchangeMode::Sharded;
+    cfg
+}
+
+#[test]
+fn sharded_resume_from_interval_checkpoint_is_bit_exact_inproc() {
+    let ckpt = tmp_dir("resume-sharded");
+    let _ = std::fs::remove_dir_all(&ckpt);
+
+    // Uninterrupted sharded reference — which must itself agree bit for
+    // bit with full mode (the sharded exchange's core contract).
+    let reference = train(&sharded_cfg(2, 6)).unwrap();
+    let full = train(&base_cfg(2, 6)).unwrap();
+    assert_eq!(
+        reference.param_digest, full.param_digest,
+        "sharded run diverged from full mode"
+    );
+
+    // Interrupted sharded run: snapshot at the step-4 boundary. Each
+    // rank's v2 snapshot records the sharded mode and its own momentum
+    // shard as zero-padded planes.
+    let mut first = sharded_cfg(2, 4);
+    first.policy = RunPolicy {
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        checkpoint_interval: 4,
+        ..RunPolicy::default()
+    };
+    train(&first).unwrap();
+
+    // A fresh process restores the shard-aware snapshot and runs to 6.
+    let mut second = sharded_cfg(2, 6);
+    second.policy = RunPolicy {
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        resume: true,
+        ..RunPolicy::default()
+    };
+    let resumed = train(&second).unwrap();
+    assert_eq!(resumed.resumed_from_step, Some(4));
+    assert_eq!(
+        resumed.param_digest, reference.param_digest,
+        "sharded resume diverged from the uninterrupted sharded run"
+    );
+
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn resume_refuses_exchange_mode_mismatch() {
+    // A full-mode snapshot holds complete per-rank momentum; a sharded
+    // resume would silently mix ownership conventions. The v2 checkpoint
+    // records the mode and the trainer must refuse the cross-mode load
+    // with an error naming the flag to fix.
+    let ckpt = tmp_dir("resume-xmode");
+    let _ = std::fs::remove_dir_all(&ckpt);
+
+    let mut first = base_cfg(2, 4);
+    first.policy = RunPolicy {
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        checkpoint_interval: 4,
+        ..RunPolicy::default()
+    };
+    train(&first).unwrap();
+
+    let mut wrong_mode = sharded_cfg(2, 6);
+    wrong_mode.policy = RunPolicy {
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        resume: true,
+        ..RunPolicy::default()
+    };
+    let err = train(&wrong_mode).unwrap_err().to_string();
+    assert!(err.contains("--exchange-mode"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn kill_one_rank_under_sharded_elastic_then_rejoin_over_tcp() {
+    // The sharded twin of the chaos test above: rank 2 hard-aborts at the
+    // start of step 5 under `--exchange-mode sharded --elastic`. The
+    // survivors must agree on the shrunk world, reshard the momentum
+    // ownership map to world−1 (the dead rank's spans restart at zero on
+    // every survivor identically), finish with matching digests — and a
+    // full-world `--resume` from the step-4 snapshot must reproduce the
+    // uninterrupted sharded run bit for bit.
+    let world = 4;
+    let ckpt = tmp_dir("sharded-chaos-ckpt");
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let ckpt_flag = ckpt.to_string_lossy().into_owned();
+
+    let flags = |extra: &[&str]| -> Vec<String> {
+        let mut v: Vec<String> = [
+            "--synthetic",
+            "tiny",
+            "--codec",
+            "efsignsgd",
+            "--schedule",
+            "naive:2",
+            "--sched-mode",
+            "fixed",
+            "--exchange-mode",
+            "sharded",
+            "--steps",
+            "6",
+            "--log-every",
+            "6",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        v.extend(extra.iter().map(|s| s.to_string()));
+        v
+    };
+
+    let ref_opts = LaunchOptions {
+        binary: BIN.into(),
+        world,
+        rendezvous: None,
+        out_dir: tmp_dir("sharded-chaos-ref"),
+        train_flags: flags(&[]),
+        timeout: Duration::from_secs(240),
+        expect_dead: vec![],
+    };
+    let ref_report = launch_local(&ref_opts).unwrap();
+    assert!(ref_report.ok(), "sharded reference run failed: {ref_report:?}");
+    let want_digest = ref_report.ranks[0].param_digest.clone().unwrap();
+
+    let chaos_opts = LaunchOptions {
+        binary: BIN.into(),
+        world,
+        rendezvous: None,
+        out_dir: tmp_dir("sharded-chaos-run"),
+        train_flags: flags(&[
+            "--elastic",
+            "--checkpoint-dir",
+            &ckpt_flag,
+            "--checkpoint-interval",
+            "4",
+            "--die-at-step",
+            "5",
+            "--die-rank",
+            "2",
+        ]),
+        timeout: Duration::from_secs(240),
+        expect_dead: vec![2],
+    };
+    let chaos = launch_local(&chaos_opts).unwrap();
+    assert_ne!(chaos.ranks[2].exit_code, Some(0), "rank 2 was supposed to die");
+    assert!(
+        chaos.all_exited_zero,
+        "survivors did not all exit 0 — sharded degraded continuation failed: {chaos:?}"
+    );
+    assert!(chaos.digests_match, "sharded survivor digests diverged: {chaos:?}");
+    let rank0 = load_json(&chaos.ranks[0].out_path).unwrap();
+    assert_eq!(rank0.get("world_at_end").and_then(|v| v.as_usize()), Some(3));
+    assert_eq!(
+        rank0.get("exchange_mode").and_then(|v| v.as_str().map(|s| s.to_string())),
+        Some("sharded".to_string())
+    );
+    assert!(
+        rank0.get("recoveries").and_then(|v| v.as_usize()).unwrap_or(0) >= 1,
+        "rank 0 reported no elastic recovery: {rank0:?}"
+    );
+
+    // Full-world rejoin from the step-4 shard-aware snapshots.
+    let rejoin_opts = LaunchOptions {
+        binary: BIN.into(),
+        world,
+        rendezvous: None,
+        out_dir: tmp_dir("sharded-chaos-rejoin"),
+        train_flags: flags(&["--elastic", "--checkpoint-dir", &ckpt_flag, "--resume"]),
+        timeout: Duration::from_secs(240),
+        expect_dead: vec![],
+    };
+    let rejoin = launch_local(&rejoin_opts).unwrap();
+    assert!(rejoin.ok(), "sharded checkpointed restart failed: {rejoin:?}");
+    for r in &rejoin.ranks {
+        assert_eq!(
+            r.param_digest.as_deref(),
+            Some(want_digest.as_str()),
+            "rank {}: sharded resumed digest differs from the never-failed run",
             r.rank
         );
     }

@@ -13,8 +13,11 @@
 //!   lattice gradients (k·2⁻⁶, |k| ≤ 64) whose sums are exact in both wire
 //!   precisions — any reduction grouping then yields the same bits.
 
-use mergecomp::collectives::{run_comm_group, run_comm_group_tcp, Comm, CommRoute, TopologySpec};
-use mergecomp::compression::{CodecKind, Collective};
+mod common;
+
+use common::{all_kinds, run_comm_on, step_grads_for, tensor_sizes, Backend};
+use mergecomp::collectives::{run_comm_group, CommRoute, TopologySpec};
+use mergecomp::compression::CodecKind;
 use mergecomp::scheduler::Partition;
 use mergecomp::training::{GradExchange, PipelineMode};
 use mergecomp::util::proptest::{check, Gen};
@@ -23,57 +26,12 @@ use mergecomp::util::rng::Xoshiro256;
 const WORLD: usize = 6;
 const STEPS: usize = 3;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Backend {
-    InProc,
-    Tcp,
-}
-
-fn run_comm_on<T: Send>(
-    backend: Backend,
-    world: usize,
-    f: impl Fn(&mut Comm) -> T + Send + Sync,
-) -> Vec<T> {
-    match backend {
-        Backend::InProc => run_comm_group(world, f),
-        Backend::Tcp => run_comm_group_tcp(world, f),
-    }
-}
-
-/// Per-tensor sizes (backprop order): uneven groups, sub-word tails for
-/// the bit-packed codecs, multi-bucket QSGD groups.
-fn tensor_sizes() -> Vec<usize> {
-    vec![700, 33, 512, 129, 64, 257]
-}
-
-/// Deterministic per-(rank, step) gradients. Allreduce codecs (FP32/FP16)
-/// get dyadic lattice values whose cross-rank sums are exact in f16;
-/// everything else gets random normals.
-fn step_grads(kind: CodecKind, rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
-    let mut rng =
-        Xoshiro256::seed_from_u64(0x41E7 ^ ((rank as u64) << 32) ^ ((step as u64) << 8));
-    let lattice = kind.collective() == Collective::AllReduce;
-    sizes
-        .iter()
-        .map(|&n| {
-            let mut g = vec![0f32; n];
-            if lattice {
-                for v in g.iter_mut() {
-                    // k·2⁻⁶ with k ∈ [−64, 64]: exact in f16, and sums over
-                    // ≤ 6 ranks stay exactly representable.
-                    let k = rng.gen_range(129) as i64 - 64;
-                    *v = k as f32 / 64.0;
-                }
-            } else {
-                rng.fill_normal_f32(&mut g, 0.5);
-            }
-            g
-        })
-        .collect()
-}
+/// This suite's historical gradient-fixture seed.
+const SEED: u64 = 0x41E7;
 
 /// Run `STEPS` exchanges under one route; returns every rank's final
 /// gradients and codec-state digest.
+#[allow(clippy::too_many_arguments)]
 fn run_route(
     backend: Backend,
     kind: CodecKind,
@@ -92,7 +50,7 @@ fn run_route(
         let mut rng = Xoshiro256::seed_from_u64(42 + c.rank() as u64);
         let mut last = Vec::new();
         for step in 0..STEPS {
-            let mut grads = step_grads(kind, c.rank(), step, &sizes);
+            let mut grads = step_grads_for(kind, SEED, c.rank(), step, &sizes);
             ex.exchange(c, &mut grads, &mut rng).unwrap();
             last = grads;
         }
@@ -158,15 +116,13 @@ fn assert_routes_agree(
 fn two_level_bit_identical_for_all_paper_codecs_inproc() {
     let sizes = tensor_sizes();
     let n = sizes.len();
-    let mut kinds = CodecKind::paper_set();
-    kinds.push(CodecKind::TernGrad);
     // world=6 split 4+2 (non-divisible) and 2+2+2 (balanced).
     for spec in [TopologySpec::Sized(vec![4, 2]), TopologySpec::Nodes(3)] {
-        for kind in &kinds {
+        for kind in all_kinds() {
             for mode in [PipelineMode::Serial, PipelineMode::Pipelined] {
                 assert_routes_agree(
                     Backend::InProc,
-                    *kind,
+                    kind,
                     &spec,
                     mode,
                     WORLD,
@@ -182,10 +138,8 @@ fn two_level_bit_identical_for_all_paper_codecs_inproc() {
 fn two_level_bit_identical_for_all_paper_codecs_over_tcp() {
     let sizes = tensor_sizes();
     let n = sizes.len();
-    let mut kinds = CodecKind::paper_set();
-    kinds.push(CodecKind::TernGrad);
     let spec = TopologySpec::Sized(vec![4, 2]);
-    for kind in kinds {
+    for kind in all_kinds() {
         assert_routes_agree(
             Backend::Tcp,
             kind,
@@ -235,7 +189,7 @@ fn all_ranks_agree_under_two_level_route_with_arbitrary_grads() {
         )
         .with_mode(PipelineMode::Pipelined);
         let mut rng = Xoshiro256::seed_from_u64(7 + c.rank() as u64);
-        let mut grads = step_grads(CodecKind::TopK { ratio: 0.1 }, c.rank(), 0, &sizes);
+        let mut grads = step_grads_for(CodecKind::TopK { ratio: 0.1 }, SEED, c.rank(), 0, &sizes);
         ex.exchange(c, &mut grads, &mut rng).unwrap();
         grads
     });

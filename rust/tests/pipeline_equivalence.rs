@@ -8,6 +8,9 @@
 //! j+1 over the collective of group j), but the sequence of codec calls,
 //! RNG draws, collective tags, and accumulation arithmetic is unchanged.
 
+mod common;
+
+use common::{all_kinds, assert_bit_identical, step_grads_normal, tensor_sizes};
 use mergecomp::collectives::run_comm_group;
 use mergecomp::compression::CodecKind;
 use mergecomp::scheduler::Partition;
@@ -17,25 +20,8 @@ use mergecomp::util::rng::Xoshiro256;
 const STEPS: usize = 3;
 const WORLD: usize = 3;
 
-/// Per-tensor sizes (backprop order) exercising uneven groups, sub-word
-/// tails for the bit-packed codecs, and multi-bucket QSGD groups.
-fn tensor_sizes() -> Vec<usize> {
-    vec![700, 33, 512, 129, 64, 257]
-}
-
-/// Deterministic per-step synthetic gradients, identical across modes.
-fn step_grads(rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
-    let mut rng =
-        Xoshiro256::seed_from_u64(0x5EED ^ ((rank as u64) << 32) ^ ((step as u64) << 8));
-    sizes
-        .iter()
-        .map(|&n| {
-            let mut g = vec![0f32; n];
-            rng.fill_normal_f32(&mut g, 0.5);
-            g
-        })
-        .collect()
-}
+/// This suite's historical gradient-fixture seed.
+const SEED: u64 = 0x5EED;
 
 /// Run `STEPS` exchanges in one mode; return every rank's final gradients,
 /// codec-state digest, and summed stats.
@@ -51,7 +37,7 @@ fn run_mode(
         let mut total = ExchangeStats::default();
         let mut last = Vec::new();
         for step in 0..STEPS {
-            let mut grads = step_grads(c.rank(), step, &sizes);
+            let mut grads = step_grads_normal(SEED, c.rank(), step, &sizes);
             let stats = ex.exchange(c, &mut grads, &mut rng).unwrap();
             total.accumulate(&stats);
             last = grads;
@@ -60,29 +46,10 @@ fn run_mode(
     })
 }
 
-/// Bit-exact comparison (== on f32 distinguishes everything but NaN
-/// payloads, which the codecs never produce from finite input).
-fn assert_bit_identical(kind: CodecKind, a: &[Vec<f32>], b: &[Vec<f32>]) {
-    assert_eq!(a.len(), b.len());
-    for (t, (ta, tb)) in a.iter().zip(b).enumerate() {
-        assert_eq!(ta.len(), tb.len(), "{}: tensor {t} length", kind.name());
-        for (i, (va, vb)) in ta.iter().zip(tb).enumerate() {
-            assert_eq!(
-                va.to_bits(),
-                vb.to_bits(),
-                "{}: tensor {t} idx {i}: serial {va} vs pipelined {vb}",
-                kind.name()
-            );
-        }
-    }
-}
-
 #[test]
 fn serial_and_pipelined_bit_identical_for_all_paper_codecs() {
     let n = tensor_sizes().len();
-    let mut kinds = CodecKind::paper_set();
-    kinds.push(CodecKind::TernGrad);
-    for kind in kinds {
+    for kind in all_kinds() {
         for partition in [
             Partition::naive_even(n, 3),
             Partition::full_merge(n),
@@ -91,7 +58,7 @@ fn serial_and_pipelined_bit_identical_for_all_paper_codecs() {
             let serial = run_mode(kind, partition.clone(), PipelineMode::Serial);
             let pipelined = run_mode(kind, partition.clone(), PipelineMode::Pipelined);
             for (rank, (s, p)) in serial.iter().zip(&pipelined).enumerate() {
-                assert_bit_identical(kind, &s.0, &p.0);
+                assert_bit_identical("serial vs pipelined", kind, &s.0, &p.0);
                 assert_eq!(
                     s.1,
                     p.1,

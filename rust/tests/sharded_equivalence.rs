@@ -1,0 +1,491 @@
+//! Sharded-exchange conformance: `ExchangeMode::Sharded` (reduce-scatter
+//! the gradients, step only the owned parameter shard, allgather the
+//! updated shards — DESIGN.md "Sharded exchange") must end **bit-identical**
+//! to `ExchangeMode::Full` — final parameters, codec/EF state, and the
+//! owned spans of the optimizer momentum — for every paper codec (plus
+//! TernGrad), on both transports, in both pipeline modes, on the flat ring
+//! and the two-level nodes=4+2 route, and for arbitrary contiguous
+//! partitions and non-divisible world sizes (property test).
+//!
+//! The memory side of the contract is pinned too: per-rank optimizer state
+//! under sharding is ≈ full-mode bytes / world (within the ±1-element
+//! chunk imbalance per group), and the shards sum to exactly the full
+//! state. The trainer-level tests close the loop end to end: `train()`
+//! with `--exchange-mode sharded` reproduces the full-mode parameter
+//! digest bit for bit (with and without `--accum-steps`), and reports the
+//! shrunken optimizer-state/peak-memory accounting in its RunResult.
+
+mod common;
+
+use common::{all_kinds, assert_bit_identical, run_comm_on, step_grads_normal, tensor_sizes, Backend};
+use mergecomp::collectives::{shard_elems, Comm, CommRoute, TopologySpec};
+use mergecomp::compression::CodecKind;
+use mergecomp::config::{ScheduleSpec, SchedulingMode, TrainConfig};
+use mergecomp::scheduler::Partition;
+use mergecomp::training::{
+    train, ExchangeMode, GradExchange, PipelineMode, SgdMomentum, ShardedSgdMomentum,
+};
+use mergecomp::util::proptest::{check, Gen};
+use mergecomp::util::rng::Xoshiro256;
+
+const STEPS: usize = 3;
+const LR: f32 = 0.05;
+const MU: f32 = 0.9;
+
+/// This suite's gradient-fixture seed.
+const SEED: u64 = 0x5A2D;
+
+/// Everything observable about one rank at the end of a mini training run
+/// (all buffers in backprop tensor order, momentum as per-group planes).
+struct RankEnd {
+    /// Final per-tensor parameters.
+    params: Vec<Vec<f32>>,
+    /// Per-group full-length momentum planes: the complete momentum in
+    /// full mode, zeros outside the owned span in sharded mode.
+    velocity: Vec<Vec<f32>>,
+    /// Owned element span per group ((0, elems) in full mode).
+    spans: Vec<(usize, usize)>,
+    /// Codec/EF state digest.
+    digest: u64,
+    /// Live optimizer-state bytes on this rank.
+    opt_bytes: u64,
+}
+
+enum Opt {
+    Full(SgdMomentum),
+    Sharded(ShardedSgdMomentum),
+}
+
+/// The trainer's sharded update, restated independently over
+/// backprop-order buffers: step the owned span of each group, then
+/// allgather every rank's updated parameter shard (little-endian f32
+/// bytes) and scatter the group back into the per-tensor buffers.
+fn sharded_step(
+    comm: &mut Comm,
+    opt: &mut ShardedSgdMomentum,
+    ex: &GradExchange,
+    params: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+) {
+    let world = comm.world();
+    for j in 0..ex.partition().num_groups() {
+        let range = ex.partition().group_range(j);
+        let elems = ex.group_elems()[j];
+        let mut pflat = Vec::with_capacity(elems);
+        let mut gflat = Vec::with_capacity(elems);
+        for bp in range.clone() {
+            pflat.extend_from_slice(&params[bp]);
+            gflat.extend_from_slice(&grads[bp]);
+        }
+        opt.step_group(j, &mut pflat, &gflat);
+        let (lo, hi) = opt.spans()[j];
+        let mut mine = Vec::with_capacity((hi - lo) * 4);
+        for v in &pflat[lo..hi] {
+            mine.extend_from_slice(&v.to_le_bytes());
+        }
+        let all = comm.allgather(mine).unwrap();
+        assert_eq!(all.len(), world, "group {j}: short parameter allgather");
+        for (src, payload) in all.iter().enumerate() {
+            let (slo, shi) = shard_elems(elems, world, src);
+            assert_eq!(payload.len(), (shi - slo) * 4, "group {j} rank {src} shard size");
+            for (i, b) in payload.chunks_exact(4).enumerate() {
+                pflat[slo + i] = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+        }
+        let mut off = 0;
+        for bp in range {
+            let t = &mut params[bp];
+            t.copy_from_slice(&pflat[off..off + t.len()]);
+            off += t.len();
+        }
+    }
+}
+
+/// Run `STEPS` steps of exchange + SGD-momentum update in one exchange
+/// mode; returns every rank's end state. Parameters start identical on
+/// every rank (synchronous SGD's invariant).
+fn run_end(
+    backend: Backend,
+    kind: CodecKind,
+    partition: Partition,
+    pmode: PipelineMode,
+    xmode: ExchangeMode,
+    world: usize,
+    sizes: Vec<usize>,
+    spec: Option<TopologySpec>,
+) -> Vec<RankEnd> {
+    run_comm_on(backend, world, move |c| {
+        if let Some(spec) = &spec {
+            c.set_topology(spec.build(world).unwrap()).unwrap();
+            c.set_route(CommRoute::TwoLevel);
+        }
+        let mut ex = GradExchange::new(kind, partition.clone(), sizes.clone())
+            .with_mode(pmode)
+            .with_exchange_mode(xmode);
+        let group_elems = ex.group_elems().to_vec();
+        let mut opt = match xmode {
+            ExchangeMode::Full => Opt::Full(SgdMomentum::new(LR, MU, &sizes)),
+            ExchangeMode::Sharded => {
+                let spans = ex.owned_group_ranges(c.world(), c.rank());
+                Opt::Sharded(ShardedSgdMomentum::new(LR, MU, &group_elems, &spans))
+            }
+        };
+        let mut params: Vec<Vec<f32>> = sizes
+            .iter()
+            .enumerate()
+            .map(|(t, &n)| {
+                let mut p = vec![0f32; n];
+                Xoshiro256::seed_from_u64(0xBA5E ^ ((t as u64) << 4)).fill_normal_f32(&mut p, 1.0);
+                p
+            })
+            .collect();
+        let mut rng = Xoshiro256::seed_from_u64(42 + c.rank() as u64);
+        for step in 0..STEPS {
+            let mut grads = step_grads_normal(SEED, c.rank(), step, &sizes);
+            ex.exchange(c, &mut grads, &mut rng).unwrap();
+            match &mut opt {
+                Opt::Full(o) => o.step(&mut params, &grads),
+                Opt::Sharded(o) => sharded_step(c, o, &ex, &mut params, &grads),
+            }
+        }
+        let total: usize = sizes.iter().sum();
+        let (velocity, spans, opt_bytes) = match &opt {
+            Opt::Full(o) => {
+                let planes: Vec<Vec<f32>> = (0..ex.partition().num_groups())
+                    .map(|j| {
+                        let mut plane = Vec::with_capacity(group_elems[j]);
+                        for bp in ex.partition().group_range(j) {
+                            plane.extend_from_slice(&o.velocity()[bp]);
+                        }
+                        plane
+                    })
+                    .collect();
+                let spans: Vec<(usize, usize)> =
+                    group_elems.iter().map(|&n| (0usize, n)).collect();
+                (planes, spans, 4 * total as u64)
+            }
+            Opt::Sharded(o) => (o.export_group_planes(), o.spans().to_vec(), o.state_bytes()),
+        };
+        RankEnd {
+            params,
+            velocity,
+            spans,
+            digest: ex.state_digest(),
+            opt_bytes,
+        }
+    })
+}
+
+/// The cross-mode contract, as a Result so the property test can shrink:
+/// bit-identical params and codec state; momentum bits match on owned
+/// spans and read zero elsewhere; shards partition the full state's bytes
+/// with per-rank size ≈ full/world.
+fn compare_modes(
+    kind: CodecKind,
+    full: &[RankEnd],
+    sharded: &[RankEnd],
+    world: usize,
+) -> Result<(), String> {
+    let groups = full[0].velocity.len();
+    for (rank, (f, s)) in full.iter().zip(sharded).enumerate() {
+        for (t, (ft, st)) in f.params.iter().zip(&s.params).enumerate() {
+            for (i, (a, b)) in ft.iter().zip(st).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "{} rank {rank} tensor {t} idx {i}: full {a} vs sharded {b}",
+                        kind.name()
+                    ));
+                }
+            }
+        }
+        if f.digest != s.digest {
+            return Err(format!(
+                "{} rank {rank}: codec/EF state diverged across exchange modes",
+                kind.name()
+            ));
+        }
+        for (j, (fp, sp)) in f.velocity.iter().zip(&s.velocity).enumerate() {
+            if fp.len() != sp.len() {
+                return Err(format!("{} rank {rank} group {j}: plane length", kind.name()));
+            }
+            let (lo, hi) = s.spans[j];
+            for i in 0..fp.len() {
+                if (lo..hi).contains(&i) {
+                    if fp[i].to_bits() != sp[i].to_bits() {
+                        return Err(format!(
+                            "{} rank {rank} group {j} elem {i}: momentum full {} vs sharded {}",
+                            kind.name(),
+                            fp[i],
+                            sp[i]
+                        ));
+                    }
+                } else if sp[i] != 0.0 {
+                    return Err(format!(
+                        "{} rank {rank} group {j} elem {i}: momentum outside the owned span",
+                        kind.name()
+                    ));
+                }
+            }
+        }
+    }
+    // Memory contract: the shards tile the full state exactly, and each
+    // rank holds ≈ 1/world of it (chunking skews at most one element —
+    // 4 bytes — per group, plus integer-division remainder spread).
+    let total: u64 = full[0].opt_bytes;
+    let shard_sum: u64 = sharded.iter().map(|s| s.opt_bytes).sum();
+    if shard_sum != total {
+        return Err(format!(
+            "{}: shards sum to {shard_sum} bytes, full state is {total}",
+            kind.name()
+        ));
+    }
+    let per = total / world as u64;
+    let slack = 4 * (groups as u64 + 1);
+    for (rank, s) in sharded.iter().enumerate() {
+        if s.opt_bytes > per + slack || s.opt_bytes + slack < per {
+            return Err(format!(
+                "{} rank {rank}: {} optimizer bytes, expected ≈ {per} (full {total} / world {world})",
+                kind.name(),
+                s.opt_bytes
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn assert_modes_agree(kind: CodecKind, full: &[RankEnd], sharded: &[RankEnd], world: usize) {
+    if let Err(msg) = compare_modes(kind, full, sharded, world) {
+        panic!("{msg}");
+    }
+    // Belt and braces: the helper above compares bit patterns manually;
+    // keep the shared assertion on the parameter buffers too.
+    for (f, s) in full.iter().zip(sharded) {
+        assert_bit_identical("full vs sharded", kind, &f.params, &s.params);
+    }
+}
+
+#[test]
+fn full_and_sharded_bit_identical_for_all_paper_codecs_inproc() {
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    const WORLD: usize = 4;
+    for kind in all_kinds() {
+        for pmode in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            let partition = Partition::naive_even(n, 3);
+            let full = run_end(
+                Backend::InProc,
+                kind,
+                partition.clone(),
+                pmode,
+                ExchangeMode::Full,
+                WORLD,
+                sizes.clone(),
+                None,
+            );
+            let sharded = run_end(
+                Backend::InProc,
+                kind,
+                partition,
+                pmode,
+                ExchangeMode::Sharded,
+                WORLD,
+                sizes.clone(),
+                None,
+            );
+            assert_modes_agree(kind, &full, &sharded, WORLD);
+        }
+    }
+}
+
+#[test]
+fn full_and_sharded_bit_identical_over_tcp() {
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    const WORLD: usize = 4;
+    for kind in all_kinds() {
+        let partition = Partition::naive_even(n, 2);
+        let full = run_end(
+            Backend::Tcp,
+            kind,
+            partition.clone(),
+            PipelineMode::Pipelined,
+            ExchangeMode::Full,
+            WORLD,
+            sizes.clone(),
+            None,
+        );
+        let sharded = run_end(
+            Backend::Tcp,
+            kind,
+            partition,
+            PipelineMode::Pipelined,
+            ExchangeMode::Sharded,
+            WORLD,
+            sizes.clone(),
+            None,
+        );
+        assert_modes_agree(kind, &full, &sharded, WORLD);
+    }
+}
+
+#[test]
+fn full_and_sharded_bit_identical_under_two_level_route() {
+    // world=6 split nodes=4+2: hierarchical-route groups communicate the
+    // same bytes in both modes (the memory win is optimizer-state-only),
+    // so the equivalence must hold bit for bit with the SAME route on
+    // both sides — no lattice gradients needed.
+    let sizes = tensor_sizes();
+    let n = sizes.len();
+    const WORLD: usize = 6;
+    let spec = TopologySpec::Sized(vec![4, 2]);
+    for kind in all_kinds() {
+        let partition = Partition::naive_even(n, 3);
+        let full = run_end(
+            Backend::InProc,
+            kind,
+            partition.clone(),
+            PipelineMode::Pipelined,
+            ExchangeMode::Full,
+            WORLD,
+            sizes.clone(),
+            Some(spec.clone()),
+        );
+        let sharded = run_end(
+            Backend::InProc,
+            kind,
+            partition,
+            PipelineMode::Pipelined,
+            ExchangeMode::Sharded,
+            WORLD,
+            sizes.clone(),
+            Some(spec.clone()),
+        );
+        assert_modes_agree(kind, &full, &sharded, WORLD);
+    }
+}
+
+/// Generator: a random world size (2–5, so non-divisible splits of every
+/// tensor-size remainder class), a random contiguous partition of the 6
+/// tensors (random cut set), and a paper codec. Shrinks towards world 2,
+/// fewer cuts, and codec 0 (FP32).
+struct CaseGen;
+
+impl Gen for CaseGen {
+    type Value = (usize, Vec<usize>, usize);
+    fn generate(&self, rng: &mut Xoshiro256) -> (usize, Vec<usize>, usize) {
+        let world = 2 + rng.gen_range(4);
+        let n = tensor_sizes().len();
+        let cuts: Vec<usize> = (1..n).filter(|_| rng.gen_range(2) == 1).collect();
+        let codec_idx = rng.gen_range(CodecKind::paper_set().len());
+        (world, cuts, codec_idx)
+    }
+    fn shrink(&self, v: &(usize, Vec<usize>, usize)) -> Vec<(usize, Vec<usize>, usize)> {
+        let mut out = Vec::new();
+        if v.0 > 2 {
+            out.push((2, v.1.clone(), v.2));
+        }
+        if !v.1.is_empty() {
+            out.push((v.0, Vec::new(), v.2));
+            out.push((v.0, v.1[..v.1.len() / 2].to_vec(), v.2));
+        }
+        if v.2 > 0 {
+            out.push((v.0, v.1.clone(), 0));
+        }
+        out.retain(|c| c != v);
+        out
+    }
+}
+
+/// Property: the cross-mode contract holds for ANY contiguous partition
+/// (including non-divisible group/world splits) and any paper codec.
+#[test]
+fn prop_random_partitions_and_worlds_agree_across_modes() {
+    let sizes = tensor_sizes();
+    check("sharded vs full over random partitions", 8, CaseGen, |(world, cuts, codec_idx)| {
+        let kind = CodecKind::paper_set()[*codec_idx];
+        let partition = Partition::from_cuts(sizes.len(), cuts.clone());
+        let run = |xmode: ExchangeMode| {
+            run_end(
+                Backend::InProc,
+                kind,
+                partition.clone(),
+                PipelineMode::Serial,
+                xmode,
+                *world,
+                sizes.clone(),
+                None,
+            )
+        };
+        let full = run(ExchangeMode::Full);
+        let sharded = run(ExchangeMode::Sharded);
+        compare_modes(kind, &full, &sharded, *world)
+            .map_err(|e| format!("world {world} cuts {cuts:?}: {e}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Trainer-level conformance: the real `train()` entry point.
+// ---------------------------------------------------------------------------
+
+fn trainer_cfg(xmode: ExchangeMode, accum: usize) -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        steps: 6,
+        codec: CodecKind::EfSignSgd,
+        schedule: ScheduleSpec::NaiveEven { y: 2 },
+        sched_mode: SchedulingMode::Fixed,
+        synthetic: Some("tiny".to_string()),
+        log_every: 6,
+        exchange_mode: xmode,
+        accum_steps: accum,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn trainer_sharded_digest_matches_full_and_shrinks_optimizer_state() {
+    let full = train(&trainer_cfg(ExchangeMode::Full, 1)).unwrap();
+    let sharded = train(&trainer_cfg(ExchangeMode::Sharded, 1)).unwrap();
+    assert_eq!(full.exchange_mode, ExchangeMode::Full);
+    assert_eq!(sharded.exchange_mode, ExchangeMode::Sharded);
+    assert_eq!(
+        full.param_digest, sharded.param_digest,
+        "--exchange-mode sharded must reproduce full-mode parameters bit for bit"
+    );
+    // RunResult is rank 0's view: its momentum shard is ≈ 1/world of the
+    // full state (±1 element per group, 2 groups here).
+    assert!(full.optimizer_state_bytes > 0);
+    let per = full.optimizer_state_bytes / 4;
+    assert!(
+        sharded.optimizer_state_bytes <= per + 64
+            && sharded.optimizer_state_bytes + 64 >= per,
+        "rank 0 holds {} optimizer bytes, expected ≈ {per} (full {} / world 4)",
+        sharded.optimizer_state_bytes,
+        full.optimizer_state_bytes
+    );
+    assert!(
+        sharded.peak_memory_bytes < full.peak_memory_bytes,
+        "sharded peak memory {} must undercut full {}",
+        sharded.peak_memory_bytes,
+        full.peak_memory_bytes
+    );
+}
+
+#[test]
+fn trainer_grad_accumulation_is_mode_invariant() {
+    // `--accum-steps 2` draws a different gradient stream (two
+    // micro-batches averaged per update), so it must change the trajectory
+    // versus accum=1 — but full and sharded must still agree bit for bit
+    // on the accumulated stream.
+    let full = train(&trainer_cfg(ExchangeMode::Full, 2)).unwrap();
+    let sharded = train(&trainer_cfg(ExchangeMode::Sharded, 2)).unwrap();
+    assert_eq!(
+        full.param_digest, sharded.param_digest,
+        "accumulated runs diverged across exchange modes"
+    );
+    let accum1 = train(&trainer_cfg(ExchangeMode::Full, 1)).unwrap();
+    assert_ne!(
+        full.param_digest, accum1.param_digest,
+        "accum=2 must draw a different gradient stream than accum=1"
+    );
+}

@@ -12,6 +12,9 @@
 //! take the scalar path and the comparisons degenerate to
 //! self-consistency checks — still a valid regression net.
 
+mod common;
+
+use common::all_kinds;
 use mergecomp::collectives::{run_comm_group, run_comm_group_tcp, Comm};
 use mergecomp::compression::{simd, CodecKind};
 use mergecomp::scheduler::Partition;
@@ -23,12 +26,6 @@ static SERIAL: Mutex<()> = Mutex::new(());
 
 fn lock() -> std::sync::MutexGuard<'static, ()> {
     SERIAL.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-fn all_kinds() -> Vec<CodecKind> {
-    let mut kinds = CodecKind::paper_set();
-    kinds.push(CodecKind::TernGrad);
-    kinds
 }
 
 /// Lengths covering every remainder class the kernels care about: the

@@ -11,9 +11,13 @@
 //! (out-of-order delivery, interleaved collectives) run against both
 //! backends.
 
-use mergecomp::collectives::{
-    run_comm_group, run_comm_group_tcp, run_group, run_tcp_group, Comm, Endpoint,
+mod common;
+
+use common::{
+    all_kinds, assert_bit_identical, run_comm_on, run_ep_on, step_grads_normal, tensor_sizes,
+    Backend, BACKENDS,
 };
+use mergecomp::collectives::run_tcp_group;
 use mergecomp::compression::CodecKind;
 use mergecomp::scheduler::Partition;
 use mergecomp::training::{GradExchange, PipelineMode};
@@ -23,55 +27,8 @@ use mergecomp::util::rng::Xoshiro256;
 const WORLD: usize = 4;
 const STEPS: usize = 3;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Backend {
-    InProc,
-    Tcp,
-}
-
-const BACKENDS: [Backend; 2] = [Backend::InProc, Backend::Tcp];
-
-fn run_comm_on<T: Send>(
-    backend: Backend,
-    world: usize,
-    f: impl Fn(&mut Comm) -> T + Send + Sync,
-) -> Vec<T> {
-    match backend {
-        Backend::InProc => run_comm_group(world, f),
-        Backend::Tcp => run_comm_group_tcp(world, f),
-    }
-}
-
-fn run_ep_on<T: Send>(
-    backend: Backend,
-    world: usize,
-    f: impl Fn(Endpoint) -> T + Send + Sync,
-) -> Vec<T> {
-    match backend {
-        Backend::InProc => run_group(world, f),
-        Backend::Tcp => run_tcp_group(world, f),
-    }
-}
-
-/// Per-tensor sizes (backprop order) exercising uneven groups, sub-word
-/// tails for the bit-packed codecs, and multi-bucket QSGD groups.
-fn tensor_sizes() -> Vec<usize> {
-    vec![700, 33, 512, 129, 64, 257]
-}
-
-/// Deterministic per-step synthetic gradients, identical across backends.
-fn step_grads(rank: usize, step: usize, sizes: &[usize]) -> Vec<Vec<f32>> {
-    let mut rng =
-        Xoshiro256::seed_from_u64(0x7C9 ^ ((rank as u64) << 32) ^ ((step as u64) << 8));
-    sizes
-        .iter()
-        .map(|&n| {
-            let mut g = vec![0f32; n];
-            rng.fill_normal_f32(&mut g, 0.5);
-            g
-        })
-        .collect()
-}
+/// This suite's historical gradient-fixture seed.
+const SEED: u64 = 0x7C9;
 
 /// Run `STEPS` exchanges on one backend; return every rank's final
 /// gradients, codec-state digest, and bytes sent.
@@ -88,7 +45,7 @@ fn run_backend(
         let mut bytes = 0u64;
         let mut last = Vec::new();
         for step in 0..STEPS {
-            let mut grads = step_grads(c.rank(), step, &sizes);
+            let mut grads = step_grads_normal(SEED, c.rank(), step, &sizes);
             let stats = ex.exchange(c, &mut grads, &mut rng).unwrap();
             bytes += stats.bytes_sent;
             last = grads;
@@ -97,33 +54,16 @@ fn run_backend(
     })
 }
 
-fn assert_bit_identical(kind: CodecKind, a: &[Vec<f32>], b: &[Vec<f32>]) {
-    assert_eq!(a.len(), b.len());
-    for (t, (ta, tb)) in a.iter().zip(b).enumerate() {
-        assert_eq!(ta.len(), tb.len(), "{}: tensor {t} length", kind.name());
-        for (i, (va, vb)) in ta.iter().zip(tb).enumerate() {
-            assert_eq!(
-                va.to_bits(),
-                vb.to_bits(),
-                "{}: tensor {t} idx {i}: inproc {va} vs tcp {vb}",
-                kind.name()
-            );
-        }
-    }
-}
-
 #[test]
 fn inproc_and_tcp_bit_identical_for_all_paper_codecs() {
     let n = tensor_sizes().len();
-    let mut kinds = CodecKind::paper_set();
-    kinds.push(CodecKind::TernGrad);
-    for kind in kinds {
+    for kind in all_kinds() {
         for partition in [Partition::naive_even(n, 3), Partition::full_merge(n)] {
             let inproc =
                 run_backend(Backend::InProc, kind, partition.clone(), PipelineMode::Pipelined);
             let tcp = run_backend(Backend::Tcp, kind, partition.clone(), PipelineMode::Pipelined);
             for (rank, (i, t)) in inproc.iter().zip(&tcp).enumerate() {
-                assert_bit_identical(kind, &i.0, &t.0);
+                assert_bit_identical("inproc vs tcp", kind, &i.0, &t.0);
                 assert_eq!(
                     i.1,
                     t.1,
@@ -149,7 +89,7 @@ fn serial_mode_also_transport_invariant() {
         let inproc = run_backend(Backend::InProc, kind, p.clone(), PipelineMode::Serial);
         let tcp = run_backend(Backend::Tcp, kind, p, PipelineMode::Serial);
         for (i, t) in inproc.iter().zip(&tcp) {
-            assert_bit_identical(kind, &i.0, &t.0);
+            assert_bit_identical("inproc vs tcp", kind, &i.0, &t.0);
             assert_eq!(i.1, t.1, "{}: serial EF state diverged", kind.name());
         }
     }
@@ -340,12 +280,12 @@ fn tcp_gradexchange_steady_state_allocations_are_bounded() {
         [(CodecKind::EfSignSgd, 3u64), (CodecKind::Fp16, 6u64)]
     {
         let sizes = tensor_sizes();
-        let results = run_comm_group_tcp(WORLD, move |c| {
+        let results = run_comm_on(Backend::Tcp, WORLD, move |c| {
             let mut ex = GradExchange::new(kind, Partition::naive_even(n, 3), sizes.clone())
                 .with_mode(PipelineMode::Pipelined);
             let mut rng = Xoshiro256::seed_from_u64(7 + c.rank() as u64);
             for step in 0..SS_STEPS {
-                let mut grads = step_grads(c.rank(), step, &sizes);
+                let mut grads = step_grads_normal(SEED, c.rank(), step, &sizes);
                 ex.exchange(c, &mut grads, &mut rng).unwrap();
             }
             c.ep.alloc_stats()
