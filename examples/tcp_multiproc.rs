@@ -40,6 +40,8 @@ fn main() -> anyhow::Result<()> {
         .map(|s| s.to_string())
         .collect(),
         timeout: Duration::from_secs(240),
+        expect_dead: vec![],
+        rejoin: vec![],
     };
     println!("launching {} TCP worker processes over loopback…", opts.world);
     let report = launch_local(&opts)?;

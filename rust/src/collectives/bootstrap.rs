@@ -149,17 +149,31 @@ pub struct Hello {
     /// Bootstrap generation of the sender (0 when the line carries no
     /// `g<gen>` token — legacy peers).
     pub generation: u64,
+    /// Whitespace-free run-config token (`c<token>` on the wire): the
+    /// sender's `seed=…:codec=…:topo=…:xmode=…` fingerprint. Rank 0
+    /// refuses registration (a `REFUSE` reply) when a peer's token
+    /// differs from its own, so a joiner launched with a mismatched
+    /// codec/topology/seed fails at HELLO with an actionable error
+    /// instead of training to a divergent digest. `None` on legacy lines
+    /// (no cross-check).
+    pub config: Option<String>,
 }
 
 impl Hello {
     pub fn to_wire(&self) -> String {
-        format!("HELLO {} {} {} g{}", self.rank, self.addr, self.node, self.generation)
+        let mut line =
+            format!("HELLO {} {} {} g{}", self.rank, self.addr, self.node, self.generation);
+        if let Some(cfg) = &self.config {
+            line.push_str(" c");
+            line.push_str(cfg);
+        }
+        line
     }
 }
 
-/// Parse a `HELLO <rank> <addr> [<node>] [g<gen>]` line. Pure — fed by the
-/// property tests with truncated/junk/duplicate-token input. `world` bounds
-/// the rank (rank 0 hosts the rendezvous and never HELLOs).
+/// Parse a `HELLO <rank> <addr> [<node>] [g<gen>] [c<config>]` line. Pure
+/// — fed by the property tests with truncated/junk/duplicate-token input.
+/// `world` bounds the rank (rank 0 hosts the rendezvous and never HELLOs).
 pub fn parse_hello(line: &str, world: usize) -> anyhow::Result<Hello> {
     let mut parts = line.split_whitespace();
     anyhow::ensure!(parts.next() == Some("HELLO"), "rendezvous: expected HELLO, got '{line}'");
@@ -174,12 +188,30 @@ pub fn parse_hello(line: &str, world: usize) -> anyhow::Result<Hello> {
     anyhow::ensure!(!addr.contains('/'), "rendezvous: addr '{addr}' contains '/'");
     let node = parts.next().unwrap_or("-");
     validate_node_label(node)?;
-    let generation = match parts.next() {
+    let mut tok = parts.next();
+    let generation = match tok {
+        Some(t) if t.starts_with('g') => {
+            let gen = t
+                .strip_prefix('g')
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("rendezvous: bad generation token in '{line}'"))?;
+            tok = parts.next();
+            gen
+        }
         None => 0,
-        Some(tok) => tok
-            .strip_prefix('g')
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| anyhow::anyhow!("rendezvous: bad generation token in '{line}'"))?,
+        // A non-g token here can only be a config token; the generation
+        // defaults to 0 (the legacy strict behaviour).
+        Some(_) => 0,
+    };
+    let config = match tok {
+        None => None,
+        Some(t) => {
+            let cfg = t.strip_prefix('c').ok_or_else(|| {
+                anyhow::anyhow!("rendezvous: unexpected token '{t}' in '{line}'")
+            })?;
+            anyhow::ensure!(!cfg.is_empty(), "rendezvous: empty config token in '{line}'");
+            Some(cfg.to_string())
+        }
     };
     anyhow::ensure!(parts.next().is_none(), "rendezvous: trailing tokens in '{line}'");
     Ok(Hello {
@@ -187,7 +219,45 @@ pub fn parse_hello(line: &str, world: usize) -> anyhow::Result<Hello> {
         addr: addr.to_string(),
         node: node.to_string(),
         generation,
+        config,
     })
+}
+
+/// Human-readable explanation of a config-token mismatch, naming the CLI
+/// flag behind the first differing `key=value` component (so the error a
+/// refused joiner sees says *which* of `--seed` / `--codec` /
+/// `--topology` / `--exchange-mode` to fix).
+pub fn describe_config_mismatch(mine: &str, theirs: &str) -> String {
+    fn flag_for(key: &str) -> String {
+        match key {
+            "seed" => "--seed".to_string(),
+            "codec" => "--codec".to_string(),
+            "topo" => "--topology".to_string(),
+            "xmode" => "--exchange-mode".to_string(),
+            other => format!("--{other}"),
+        }
+    }
+    let a: Vec<&str> = mine.split(':').collect();
+    let b: Vec<&str> = theirs.split(':').collect();
+    if a.len() == b.len() {
+        for (ka, kb) in a.iter().zip(&b) {
+            if ka == kb {
+                continue;
+            }
+            if let (Some((key_a, va)), Some((key_b, vb))) = (ka.split_once('='), kb.split_once('='))
+            {
+                if key_a == key_b {
+                    return format!(
+                        "{} mismatch: the group runs '{va}' but the joining rank was launched \
+                         with '{vb}'",
+                        flag_for(key_a)
+                    );
+                }
+            }
+            break;
+        }
+    }
+    format!("config mismatch: the group token is '{mine}', the joining rank sent '{theirs}'")
 }
 
 /// Parse a `TABLE <addr0/node0> …` line into exactly `world` entries. Pure
@@ -288,8 +358,17 @@ impl Registry {
 /// relaunched rank supersedes its dead predecessor (see the module docs);
 /// pass 0 outside elastic restarts.
 ///
+/// `config_token`: when `Some`, non-zero ranks attach it to their HELLO
+/// and rank 0 cross-checks every attached token against its own —
+/// a mismatch (e.g. a hot-joiner launched with a different
+/// `--codec`/`--topology`/`--seed`) is answered with a `REFUSE <detail>`
+/// line and fails the bootstrap on both sides with an error naming the
+/// offending flag. Tokens are only checked when both sides supply one, so
+/// legacy peers interoperate.
+///
 /// `hosted`: rank 0 may pass a pre-bound listener (tests bind port 0 to
 /// pick a free port); otherwise rank 0 binds `rendezvous_addr` itself.
+#[allow(clippy::too_many_arguments)]
 pub fn exchange_peer_table(
     rank: usize,
     world: usize,
@@ -297,11 +376,18 @@ pub fn exchange_peer_table(
     my_data_addr: &str,
     my_node_label: &str,
     generation: u64,
+    config_token: Option<&str>,
     hosted: Option<TcpListener>,
     deadline: Instant,
 ) -> anyhow::Result<Vec<PeerEntry>> {
     anyhow::ensure!(rank < world, "rank {rank} out of range for world {world}");
     validate_node_label(my_node_label)?;
+    if let Some(cfg) = config_token {
+        anyhow::ensure!(
+            !cfg.is_empty() && !cfg.contains(char::is_whitespace),
+            "config token '{cfg}' must be non-empty with no whitespace"
+        );
+    }
     if world == 1 {
         return Ok(vec![PeerEntry {
             addr: my_data_addr.to_string(),
@@ -325,6 +411,19 @@ pub fn exchange_peer_table(
             let mut stream = accept_with_deadline(&listener, deadline, "rendezvous hello")?;
             let line = read_line_raw(&mut stream, 512)?;
             let hello = parse_hello(&line, world)?;
+            if let (Some(mine), Some(theirs)) = (config_token, hello.config.as_deref()) {
+                if mine != theirs {
+                    let detail = describe_config_mismatch(mine, theirs);
+                    // Tell the offender why before failing the bootstrap:
+                    // the joiner surfaces this line as its own error.
+                    let _ = stream.write_all(format!("REFUSE {detail}\n").as_bytes());
+                    let _ = stream.shutdown(Shutdown::Write);
+                    anyhow::bail!(
+                        "rendezvous: refused registration from rank {}: {detail}",
+                        hello.rank
+                    );
+                }
+            }
             match registry.register(&hello)? {
                 HelloOutcome::Registered | HelloOutcome::Replaced => {
                     streams[hello.rank] = Some(stream);
@@ -357,11 +456,15 @@ pub fn exchange_peer_table(
             addr: my_data_addr.to_string(),
             node: my_node_label.to_string(),
             generation,
+            config: config_token.map(str::to_string),
         };
         stream
             .write_all(format!("{}\n", hello.to_wire()).as_bytes())
             .map_err(|e| anyhow::anyhow!("sending hello: {e}"))?;
         let line = read_line_raw(&mut stream, 8192)?;
+        if let Some(detail) = line.strip_prefix("REFUSE ") {
+            anyhow::bail!("rendezvous: registration refused by the group: {detail}");
+        }
         parse_table(&line, world)
     }
 }
@@ -458,6 +561,7 @@ mod tests {
                             // Ranks 0–1 on node 0, ranks 2–3 on node 1.
                             &format!("n{}", rank / 2),
                             0,
+                            None,
                             hosted,
                             deadline(),
                         )
@@ -495,6 +599,7 @@ mod tests {
                     "127.0.0.1:9000",
                     "n0",
                     0,
+                    None,
                     Some(listener),
                     deadline(),
                 )
@@ -510,12 +615,12 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         let rdv1 = rdv.clone();
         let second = std::thread::spawn(move || {
-            exchange_peer_table(2, world, &rdv1, "127.0.0.1:9102", "n1", 1, None, deadline())
+            exchange_peer_table(2, world, &rdv1, "127.0.0.1:9102", "n1", 1, None, None, deadline())
                 .unwrap()
         });
         std::thread::sleep(Duration::from_millis(50));
         let rank1 = std::thread::spawn(move || {
-            exchange_peer_table(1, world, &rdv, "127.0.0.1:9001", "n0", 0, None, deadline())
+            exchange_peer_table(1, world, &rdv, "127.0.0.1:9001", "n0", 0, None, None, deadline())
                 .unwrap()
         });
         let t0 = host.join().unwrap();
@@ -528,9 +633,18 @@ mod tests {
 
     #[test]
     fn world_of_one_needs_no_network() {
-        let t =
-            exchange_peer_table(0, 1, "127.0.0.1:1", "127.0.0.1:9000", "n0", 0, None, deadline())
-                .unwrap();
+        let t = exchange_peer_table(
+            0,
+            1,
+            "127.0.0.1:1",
+            "127.0.0.1:9000",
+            "n0",
+            0,
+            None,
+            None,
+            deadline(),
+        )
+        .unwrap();
         assert_eq!(
             t,
             vec![PeerEntry { addr: "127.0.0.1:9000".to_string(), node: "n0".to_string() }]
@@ -548,6 +662,7 @@ mod tests {
                     "127.0.0.1:9000",
                     bad,
                     0,
+                    None,
                     None,
                     deadline()
                 )
@@ -572,23 +687,31 @@ mod tests {
                 addr: "127.0.0.1:9002".to_string(),
                 node: "n1".to_string(),
                 generation: 7,
+                config: None,
             }
         );
         // Legacy forms: no generation, and no node label at all.
         assert_eq!(parse_hello("HELLO 1 a:1 n0", 2).unwrap().generation, 0);
         let h = parse_hello("HELLO 1 a:1", 2).unwrap();
         assert_eq!((h.node.as_str(), h.generation), ("-", 0));
+        // Config-tagged forms, with and without a generation.
+        let h = parse_hello("HELLO 2 a:2 n1 g3 cseed=1:codec=topk", 4).unwrap();
+        assert_eq!((h.generation, h.config.as_deref()), (3, Some("seed=1:codec=topk")));
+        let h = parse_hello("HELLO 2 a:2 n1 cseed=1", 4).unwrap();
+        assert_eq!((h.generation, h.config.as_deref()), (0, Some("seed=1")));
 
         for bad in [
-            "HELO 1 a:1",            // wrong verb
-            "HELLO",                 // truncated
-            "HELLO x a:1",           // junk rank
-            "HELLO 0 a:1",           // rank 0 never HELLOs
-            "HELLO 4 a:1",           // out of range for world 4
-            "HELLO 1 a/b n0",        // '/' would corrupt the TABLE line
-            "HELLO 1 a:1 n0 7",       // generation without the g prefix
-            "HELLO 1 a:1 n0 gx",      // junk generation
-            "HELLO 1 a:1 n0 g1 tail", // trailing tokens
+            "HELO 1 a:1",                // wrong verb
+            "HELLO",                     // truncated
+            "HELLO x a:1",               // junk rank
+            "HELLO 0 a:1",               // rank 0 never HELLOs
+            "HELLO 4 a:1",               // out of range for world 4
+            "HELLO 1 a/b n0",            // '/' would corrupt the TABLE line
+            "HELLO 1 a:1 n0 7",          // generation without the g prefix
+            "HELLO 1 a:1 n0 gx",         // junk generation
+            "HELLO 1 a:1 n0 g1 tail",    // trailing tokens
+            "HELLO 1 a:1 n0 g1 c",       // empty config token
+            "HELLO 1 a:1 n0 g1 cx tail", // trailing tokens after config
         ] {
             assert!(parse_hello(bad, 4).is_err(), "'{bad}' should be rejected");
         }
@@ -601,6 +724,7 @@ mod tests {
             addr: addr.to_string(),
             node: "n0".to_string(),
             generation: gen,
+            config: None,
         };
         let r0 = PeerEntry { addr: "a0".to_string(), node: "n0".to_string() };
         let mut reg = Registry::new(3, r0);
@@ -625,6 +749,113 @@ mod tests {
         assert_eq!(reg.table().unwrap()[1].addr, "a1-new");
     }
 
+    #[test]
+    fn mismatch_description_names_the_offending_flag() {
+        let mine = "seed=000000000000002a:codec=topk:topo=flat:xmode=full";
+        let theirs = "seed=000000000000002a:codec=randomk:topo=flat:xmode=full";
+        let d = describe_config_mismatch(mine, theirs);
+        assert!(d.contains("--codec"), "should name the flag: {d}");
+        assert!(d.contains("topk") && d.contains("randomk"), "should show both values: {d}");
+        let d = describe_config_mismatch("seed=1:topo=ring", "seed=2:topo=ring");
+        assert!(d.contains("--seed"), "{d}");
+        let d = describe_config_mismatch("xmode=full", "xmode=sharded");
+        assert!(d.contains("--exchange-mode"), "{d}");
+        let d = describe_config_mismatch("topo=flat", "topo=two-level");
+        assert!(d.contains("--topology"), "{d}");
+        // Structurally different tokens fall back to quoting both sides.
+        let d = describe_config_mismatch("a=1:b=2", "weird");
+        assert!(d.contains("a=1:b=2") && d.contains("weird"), "{d}");
+    }
+
+    #[test]
+    fn mismatched_config_is_refused_in_both_directions() {
+        // The host errors naming the offending rank; the joiner errors with
+        // the REFUSE detail naming the flag to fix. Both sides must fail —
+        // a refused joiner must never receive a peer table.
+        let world = 2;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let rdv = listener.local_addr().unwrap().to_string();
+        let host = {
+            let rdv = rdv.clone();
+            std::thread::spawn(move || {
+                exchange_peer_table(
+                    0,
+                    world,
+                    &rdv,
+                    "127.0.0.1:9000",
+                    "n0",
+                    0,
+                    Some("seed=1:codec=topk"),
+                    Some(listener),
+                    deadline(),
+                )
+            })
+        };
+        let joiner = std::thread::spawn(move || {
+            exchange_peer_table(
+                1,
+                world,
+                &rdv,
+                "127.0.0.1:9001",
+                "n0",
+                0,
+                Some("seed=1:codec=randomk"),
+                None,
+                deadline(),
+            )
+        });
+        let host_err = host.join().unwrap().unwrap_err().to_string();
+        assert!(
+            host_err.contains("refused registration from rank 1") && host_err.contains("--codec"),
+            "host error should name the rank and the flag: {host_err}"
+        );
+        let join_err = joiner.join().unwrap().unwrap_err().to_string();
+        assert!(
+            join_err.contains("registration refused")
+                && join_err.contains("--codec")
+                && join_err.contains("topk")
+                && join_err.contains("randomk"),
+            "joiner error should carry the actionable detail: {join_err}"
+        );
+    }
+
+    #[test]
+    fn matching_config_tokens_bootstrap_normally_and_legacy_peers_skip_the_check() {
+        let world = 3;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let rdv = listener.local_addr().unwrap().to_string();
+        let mut hosted = Some(listener);
+        let tables: Vec<Vec<PeerEntry>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..world)
+                .map(|rank| {
+                    let hosted = if rank == 0 { hosted.take() } else { None };
+                    let rdv = rdv.clone();
+                    s.spawn(move || {
+                        // Rank 2 is a legacy peer with no token: rank 0 only
+                        // checks tokens that are actually attached.
+                        let token = if rank == 2 { None } else { Some("seed=7:codec=fp32") };
+                        exchange_peer_table(
+                            rank,
+                            world,
+                            &rdv,
+                            &format!("127.0.0.1:{}", 9100 + rank),
+                            "n0",
+                            0,
+                            token,
+                            hosted,
+                            deadline(),
+                        )
+                        .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for t in &tables {
+            assert_eq!(t, &tables[0]);
+        }
+    }
+
     /// Generates syntactically valid `Hello` values (world is fixed by the
     /// caller); shrinks towards rank 1 / generation 0 / short strings.
     struct HelloGen {
@@ -645,6 +876,11 @@ mod tests {
                 addr: token(rng, rng.gen_range(20)),
                 node: token(rng, rng.gen_range(8)),
                 generation: rng.next_u64() % 1000,
+                config: if rng.gen_range(2) == 0 {
+                    None
+                } else {
+                    Some(token(rng, rng.gen_range(16)))
+                },
             }
         }
         fn shrink(&self, v: &Hello) -> Vec<Hello> {
@@ -660,6 +896,9 @@ mod tests {
             }
             if v.node.len() > 1 {
                 out.push(Hello { node: v.node[..1].to_string(), ..v.clone() });
+            }
+            if v.config.is_some() {
+                out.push(Hello { config: None, ..v.clone() });
             }
             out
         }

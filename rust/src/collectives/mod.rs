@@ -33,6 +33,7 @@ pub mod hierarchical;
 pub mod nonblocking;
 pub mod reduce_scatter;
 pub mod ring;
+pub mod snapshot;
 pub mod tcp;
 pub mod topology;
 pub mod transport;
@@ -43,6 +44,7 @@ pub use faults::{FaultPlan, FaultSpec, FaultTransport};
 pub use hierarchical::CommBreakdown;
 pub use nonblocking::{lane_scope, CommCompletion, CommHandle, CommLane, CommOutcome};
 pub use reduce_scatter::shard_elems;
+pub use snapshot::{recv_snapshot, send_snapshot, JOIN_TAG, SNAPSHOT_TAG};
 pub use tcp::{run_tcp_group, tcp_endpoint, tcp_endpoint_with_nodes, TcpConfig, TcpTransport};
 pub use topology::{LevelShape, LevelSpec, Topology, TopologySpec, TOPOLOGY_GRAMMAR};
 pub use transport::{
@@ -336,6 +338,48 @@ impl Comm {
         self.route = CommRoute::Flat;
         self.last_breakdown = None;
         Ok(self.ep.rank())
+    }
+
+    /// Swap in a freshly bootstrapped endpoint (the hot re-join path: the
+    /// old mesh grew a replacement rank, so survivors and the joiner all
+    /// re-ran the rendezvous and hold brand-new connections). The world and
+    /// rank must be unchanged — growing back to the original world is the
+    /// point. Like [`Comm::shrink_to_survivors`] this starts recovery
+    /// generation `generation`: the abort epoch and the collective tag
+    /// space jump in lockstep on every rank (survivors may have consumed
+    /// different tag counts in the failed step), and the topology resets to
+    /// flat — callers re-attach the real topology afterwards, exactly as
+    /// at first bootstrap.
+    pub fn adopt_endpoint(&mut self, ep: Endpoint, generation: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ep.world() == self.world(),
+            "adopted endpoint has world {} but the communicator has {}",
+            ep.world(),
+            self.world()
+        );
+        anyhow::ensure!(
+            ep.rank() == self.rank(),
+            "adopted endpoint has rank {} but the communicator is rank {}",
+            ep.rank(),
+            self.rank()
+        );
+        self.ep = ep;
+        self.align_generation(generation);
+        let world = self.ep.world();
+        self.topology = std::sync::Arc::new(Topology::flat(world));
+        self.route = CommRoute::Flat;
+        self.last_breakdown = None;
+        Ok(())
+    }
+
+    /// Jump to recovery generation `generation`: abort epoch and tag space
+    /// move together, mirroring [`Comm::shrink_to_survivors`]. A hot
+    /// joiner calls this on its fresh communicator so its tag sequence
+    /// lands exactly where the survivors' [`Comm::adopt_endpoint`] put
+    /// theirs.
+    pub fn align_generation(&mut self, generation: u64) {
+        self.ep.set_abort_epoch(generation);
+        self.seq = generation * RECOVERY_TAG_STRIDE;
     }
 }
 

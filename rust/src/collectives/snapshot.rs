@@ -1,0 +1,469 @@
+//! Chunked snapshot streaming for the online-join protocol.
+//!
+//! When a rank hot-joins a live group, rank 0 streams it the current
+//! training snapshot (a serialized [`crate::coordinator::Checkpoint`])
+//! over the data fabric. Snapshots are far larger than any single
+//! collective frame the steady state moves, so the transfer is framed as
+//! a fixed-size **header frame** followed by raw payload **chunks**, all
+//! on a reserved tag:
+//!
+//! | tag | purpose |
+//! |-----|---------|
+//! | [`JOIN_TAG`] (`u64::MAX - 17`) | rank 0's authoritative `JOIN {generation, step}` announcement |
+//! | [`SNAPSHOT_TAG`] (`u64::MAX - 16`) | snapshot header frame + payload chunks, rank 0 → joiner |
+//!
+//! Both sit far above the sequence-numbered collective tag space (which
+//! counts up from `generation * RECOVERY_TAG_STRIDE`) and below the
+//! control tags ([`CTRL_PEER_DOWN_TAG`](super::transport::CTRL_PEER_DOWN_TAG),
+//! [`CTRL_ABORT_TAG`](super::transport::CTRL_ABORT_TAG)), so a snapshot
+//! in flight can never collide with either.
+//!
+//! The header records the total payload length, the chunk size, the chunk
+//! count, and an FNV-1a digest of the whole payload. The [`Endpoint`]
+//! stash is FIFO per `(source, tag)`, so chunks arrive in order; the
+//! [`Assembler`] validates every chunk length against the header and the
+//! reassembled bytes against the digest, so a truncated or corrupted
+//! stream surfaces as a typed [`Error`] ([`ErrorKind::Protocol`]) instead
+//! of silently resuming from garbage. The framing functions are pure
+//! (no sockets), which is what the property suite drives.
+
+use super::transport::{Endpoint, Error, ErrorKind};
+
+/// Reserved tag for rank 0's `JOIN {generation, step}` announcement at
+/// the start of a hot re-join (see [`encode_join`]).
+pub const JOIN_TAG: u64 = u64::MAX - 17;
+
+/// Reserved tag carrying the snapshot header frame and its payload
+/// chunks.
+pub const SNAPSHOT_TAG: u64 = u64::MAX - 16;
+
+/// First four bytes of every header frame ("MCSS" little-endian).
+pub const SNAPSHOT_MAGIC: u32 = 0x4D43_5353;
+
+/// Bump when the frame layout changes incompatibly.
+pub const SNAPSHOT_STREAM_VERSION: u32 = 1;
+
+/// Serialized size of a [`FrameHeader`].
+pub const HEADER_LEN: usize = 32;
+
+/// Default chunk size for [`send_snapshot`] (1 MiB — far below the
+/// transport's frame ceiling, large enough that header overhead is
+/// negligible).
+pub const SNAPSHOT_CHUNK_BYTES: usize = 1 << 20;
+
+/// FNV-1a over a byte string — the integrity digest the header carries.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// The decoded header frame of a snapshot stream: layout
+/// `[magic u32][version u32][total_len u64][chunk_len u32][chunk_count
+/// u32][digest u64]`, all little-endian.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Total payload bytes across all chunks.
+    pub total_len: u64,
+    /// Bytes per chunk (every chunk but the last is exactly this long).
+    pub chunk_len: u32,
+    /// Number of payload chunks that follow the header
+    /// (`ceil(total_len / chunk_len)`; 0 for an empty payload).
+    pub chunk_count: u32,
+    /// FNV-1a digest of the whole payload.
+    pub digest: u64,
+}
+
+impl FrameHeader {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN);
+        out.extend_from_slice(&SNAPSHOT_MAGIC.to_le_bytes());
+        out.extend_from_slice(&SNAPSHOT_STREAM_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.total_len.to_le_bytes());
+        out.extend_from_slice(&self.chunk_len.to_le_bytes());
+        out.extend_from_slice(&self.chunk_count.to_le_bytes());
+        out.extend_from_slice(&self.digest.to_le_bytes());
+        out
+    }
+}
+
+/// Frame a payload: the header frame followed by `ceil(len / chunk_len)`
+/// raw chunks. Pure — the property tests drive it directly.
+///
+/// # Panics
+///
+/// If `chunk_len` is 0 or exceeds `u32::MAX`.
+pub fn encode_frames(payload: &[u8], chunk_len: usize) -> Vec<Vec<u8>> {
+    assert!(
+        chunk_len >= 1 && chunk_len <= u32::MAX as usize,
+        "snapshot chunk_len {chunk_len} out of range"
+    );
+    let header = FrameHeader {
+        total_len: payload.len() as u64,
+        chunk_len: chunk_len as u32,
+        chunk_count: payload.len().div_ceil(chunk_len) as u32,
+        digest: fnv64(payload),
+    };
+    let mut frames = Vec::with_capacity(1 + header.chunk_count as usize);
+    frames.push(header.encode());
+    for chunk in payload.chunks(chunk_len) {
+        frames.push(chunk.to_vec());
+    }
+    frames
+}
+
+/// Decode and validate a header frame. Wrong length, bad magic, an
+/// unknown version, a zero chunk length, or a chunk count inconsistent
+/// with `total_len` are all typed errors.
+pub fn decode_header(bytes: &[u8]) -> Result<FrameHeader, Error> {
+    if bytes.len() != HEADER_LEN {
+        return Err(Error::protocol(format!(
+            "snapshot header: {} bytes, expected {HEADER_LEN}",
+            bytes.len()
+        )));
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != SNAPSHOT_MAGIC {
+        return Err(Error::protocol(format!(
+            "snapshot header: bad magic {magic:#010x}"
+        )));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != SNAPSHOT_STREAM_VERSION {
+        return Err(Error::protocol(format!(
+            "snapshot header: version {version} (this build speaks {SNAPSHOT_STREAM_VERSION})"
+        )));
+    }
+    let header = FrameHeader {
+        total_len: u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+        chunk_len: u32::from_le_bytes(bytes[16..20].try_into().unwrap()),
+        chunk_count: u32::from_le_bytes(bytes[20..24].try_into().unwrap()),
+        digest: u64::from_le_bytes(bytes[24..32].try_into().unwrap()),
+    };
+    if header.chunk_len == 0 {
+        return Err(Error::protocol("snapshot header: zero chunk length"));
+    }
+    let want = header.total_len.div_ceil(header.chunk_len as u64);
+    if header.chunk_count as u64 != want {
+        return Err(Error::protocol(format!(
+            "snapshot header: {} chunks for {} bytes at {}-byte chunks (expected {want})",
+            header.chunk_count, header.total_len, header.chunk_len
+        )));
+    }
+    Ok(header)
+}
+
+/// Reassembles a snapshot from its chunks, validating every chunk length
+/// against the header and the final bytes against the payload digest.
+#[derive(Debug)]
+pub struct Assembler {
+    header: FrameHeader,
+    buf: Vec<u8>,
+    received: u32,
+}
+
+impl Assembler {
+    pub fn new(header: FrameHeader) -> Assembler {
+        Assembler {
+            header,
+            buf: Vec::with_capacity(header.total_len as usize),
+            received: 0,
+        }
+    }
+
+    /// Accept the next chunk, in stream order. Overruns and wrong-size
+    /// chunks (a mid-stream truncation) are typed errors.
+    pub fn push(&mut self, chunk: &[u8]) -> Result<(), Error> {
+        if self.received >= self.header.chunk_count {
+            return Err(Error::protocol(format!(
+                "snapshot stream: chunk {} beyond the advertised {}",
+                self.received + 1,
+                self.header.chunk_count
+            )));
+        }
+        let last = self.received + 1 == self.header.chunk_count;
+        let want = if last {
+            self.header.total_len as usize - self.buf.len()
+        } else {
+            self.header.chunk_len as usize
+        };
+        if chunk.len() != want {
+            return Err(Error::protocol(format!(
+                "snapshot stream: chunk {} is {} bytes, expected {want}",
+                self.received,
+                chunk.len()
+            )));
+        }
+        self.buf.extend_from_slice(chunk);
+        self.received += 1;
+        Ok(())
+    }
+
+    /// Finish the stream: every advertised chunk must have arrived and
+    /// the reassembled payload must match the header digest.
+    pub fn finish(self) -> Result<Vec<u8>, Error> {
+        if self.received != self.header.chunk_count {
+            return Err(Error::protocol(format!(
+                "snapshot stream truncated: {} of {} chunks arrived",
+                self.received, self.header.chunk_count
+            )));
+        }
+        let got = fnv64(&self.buf);
+        if got != self.header.digest {
+            return Err(Error::protocol(format!(
+                "snapshot stream corrupted: payload digest {got:016x} != advertised {:016x}",
+                self.header.digest
+            )));
+        }
+        Ok(self.buf)
+    }
+}
+
+/// Stream a snapshot payload to `to` on [`SNAPSHOT_TAG`] in
+/// `chunk_len`-byte chunks.
+pub fn send_snapshot_chunked(
+    ep: &mut Endpoint,
+    to: usize,
+    payload: &[u8],
+    chunk_len: usize,
+) -> Result<(), Error> {
+    for frame in encode_frames(payload, chunk_len) {
+        ep.send(to, SNAPSHOT_TAG, frame)?;
+    }
+    Ok(())
+}
+
+/// [`send_snapshot_chunked`] at the default chunk size.
+pub fn send_snapshot(ep: &mut Endpoint, to: usize, payload: &[u8]) -> Result<(), Error> {
+    send_snapshot_chunked(ep, to, payload, SNAPSHOT_CHUNK_BYTES)
+}
+
+/// Receive one snapshot stream from `from`: header frame, then exactly
+/// the advertised chunks. A peer dying mid-stream surfaces as the
+/// transport's typed [`ErrorKind::PeerGone`] from the pending receive; a
+/// malformed stream as [`ErrorKind::Protocol`]. Never hangs past the
+/// transport's own failure detection.
+pub fn recv_snapshot(ep: &mut Endpoint, from: usize) -> Result<Vec<u8>, Error> {
+    let header = decode_header(&ep.recv(from, SNAPSHOT_TAG)?)?;
+    let mut asm = Assembler::new(header);
+    for _ in 0..header.chunk_count {
+        let chunk = ep.recv(from, SNAPSHOT_TAG)?;
+        asm.push(&chunk)?;
+        ep.recycle(chunk);
+    }
+    asm.finish()
+}
+
+/// Encode rank 0's join announcement: `[generation u64 LE][step u64 LE]`,
+/// sent to every peer on [`JOIN_TAG`] before the snapshot stream.
+pub fn encode_join(generation: u64, step: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    out.extend_from_slice(&generation.to_le_bytes());
+    out.extend_from_slice(&step.to_le_bytes());
+    out
+}
+
+/// Decode a join announcement into `(generation, step)`.
+pub fn decode_join(bytes: &[u8]) -> Result<(u64, u64), Error> {
+    if bytes.len() != 16 {
+        return Err(Error::protocol(format!(
+            "join announcement: {} bytes, expected 16",
+            bytes.len()
+        )));
+    }
+    let generation = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let step = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    Ok((generation, step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::transport::mesh;
+    use crate::util::proptest::{check, gens};
+
+    fn roundtrip(payload: &[u8], chunk_len: usize) -> Vec<u8> {
+        let frames = encode_frames(payload, chunk_len);
+        let header = decode_header(&frames[0]).unwrap();
+        let mut asm = Assembler::new(header);
+        for chunk in &frames[1..] {
+            asm.push(chunk).unwrap();
+        }
+        asm.finish().unwrap()
+    }
+
+    #[test]
+    fn frames_roundtrip_empty_exact_and_ragged() {
+        // Empty payload: header only, zero chunks.
+        assert_eq!(roundtrip(b"", 8), b"");
+        assert_eq!(encode_frames(b"", 8).len(), 1);
+        // Exact multiple of the chunk size.
+        let exact: Vec<u8> = (0..64u8).collect();
+        assert_eq!(roundtrip(&exact, 16), exact);
+        // Ragged tail shorter than a chunk.
+        let ragged: Vec<u8> = (0..61u8).collect();
+        assert_eq!(roundtrip(&ragged, 16), ragged);
+        // Single chunk larger than the payload.
+        assert_eq!(roundtrip(b"abc", 1024), b"abc");
+    }
+
+    #[test]
+    fn truncated_stream_is_a_typed_error_not_a_hang() {
+        let payload: Vec<u8> = (0..100u8).collect();
+        let frames = encode_frames(&payload, 16);
+        let header = decode_header(&frames[0]).unwrap();
+        let mut asm = Assembler::new(header);
+        for chunk in &frames[1..frames.len() - 1] {
+            asm.push(chunk).unwrap();
+        }
+        let err = asm.finish().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Protocol, "got {err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
+        assert!(!err.is_recoverable());
+    }
+
+    #[test]
+    fn corrupted_payload_fails_the_digest_check() {
+        let payload: Vec<u8> = (0..40u8).collect();
+        let mut frames = encode_frames(&payload, 16);
+        frames[1][0] ^= 0xff;
+        let header = decode_header(&frames[0]).unwrap();
+        let mut asm = Assembler::new(header);
+        for chunk in &frames[1..] {
+            asm.push(chunk).unwrap();
+        }
+        let err = asm.finish().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Protocol);
+        assert!(err.to_string().contains("corrupted"), "{err}");
+    }
+
+    #[test]
+    fn malformed_headers_are_rejected() {
+        let good = encode_frames(b"xyz", 2).remove(0);
+        assert!(decode_header(&good[..HEADER_LEN - 1]).is_err(), "short header");
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 1;
+        assert!(decode_header(&bad_magic).is_err(), "bad magic");
+        let mut bad_version = good.clone();
+        bad_version[4] = 99;
+        assert!(decode_header(&bad_version).is_err(), "unknown version");
+        let mut zero_chunk = good.clone();
+        zero_chunk[16..20].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_header(&zero_chunk).is_err(), "zero chunk length");
+        let mut bad_count = good.clone();
+        bad_count[20..24].copy_from_slice(&7u32.to_le_bytes());
+        assert!(decode_header(&bad_count).is_err(), "inconsistent chunk count");
+    }
+
+    #[test]
+    fn wrong_size_and_surplus_chunks_are_rejected() {
+        let payload: Vec<u8> = (0..32u8).collect();
+        let frames = encode_frames(&payload, 16);
+        let header = decode_header(&frames[0]).unwrap();
+        let mut asm = Assembler::new(header);
+        assert!(asm.push(&frames[1][..7]).is_err(), "short mid-stream chunk");
+        let mut asm = Assembler::new(header);
+        asm.push(&frames[1]).unwrap();
+        asm.push(&frames[2]).unwrap();
+        assert!(asm.push(b"extra").is_err(), "surplus chunk");
+    }
+
+    #[test]
+    fn join_announcement_roundtrips() {
+        let wire = encode_join(3, 17);
+        assert_eq!(decode_join(&wire).unwrap(), (3, 17));
+        assert!(decode_join(&wire[..10]).is_err());
+        assert_eq!(
+            decode_join(&wire[..10]).unwrap_err().kind(),
+            ErrorKind::Protocol
+        );
+    }
+
+    #[test]
+    fn endpoint_stream_roundtrips_multi_chunk_payloads() {
+        let mut eps = mesh(2);
+        let mut ep1 = eps.pop().unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        // 10_000 bytes at 1 KiB chunks: 10 frames, ragged tail.
+        let payload: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        send_snapshot_chunked(&mut ep0, 1, &payload, 1024).unwrap();
+        let got = recv_snapshot(&mut ep1, 0).unwrap();
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn prop_frames_roundtrip_for_random_shapes() {
+        check(
+            "snapshot framing roundtrip",
+            300,
+            gens::pair(gens::usize_in(0..5000), gens::usize_in(1..600)),
+            |&(len, chunk_len)| {
+                let payload: Vec<u8> = (0..len).map(|i| (i * 37 % 256) as u8).collect();
+                let frames = encode_frames(&payload, chunk_len);
+                let header = decode_header(&frames[0])
+                    .map_err(|e| format!("header rejected: {e}"))?;
+                if header.chunk_count as usize != len.div_ceil(chunk_len) {
+                    return Err(format!("chunk count {}", header.chunk_count));
+                }
+                let mut asm = Assembler::new(header);
+                for chunk in &frames[1..] {
+                    asm.push(chunk).map_err(|e| format!("push: {e}"))?;
+                }
+                let got = asm.finish().map_err(|e| format!("finish: {e}"))?;
+                if got != payload {
+                    return Err("payload mismatch after reassembly".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncation_never_passes_validation() {
+        // Dropping any suffix of the chunk list (or cutting bytes off one
+        // chunk) must yield a typed error from push/finish — never Ok.
+        check(
+            "snapshot truncation detected",
+            300,
+            gens::pair(gens::usize_in(1..3000), gens::usize_in(1..400)),
+            |&(len, chunk_len)| {
+                let payload: Vec<u8> = (0..len).map(|i| (i * 13 % 256) as u8).collect();
+                let frames = encode_frames(&payload, chunk_len);
+                let header = decode_header(&frames[0]).unwrap();
+                let chunks = &frames[1..];
+                for keep in 0..chunks.len() {
+                    let mut asm = Assembler::new(header);
+                    let mut failed = false;
+                    for chunk in &chunks[..keep] {
+                        if asm.push(chunk).is_err() {
+                            failed = true;
+                            break;
+                        }
+                    }
+                    if !failed && asm.finish().is_ok() {
+                        return Err(format!("{keep}/{} chunks passed", chunks.len()));
+                    }
+                }
+                // Cut the final chunk short by one byte.
+                let mut asm = Assembler::new(header);
+                let mut failed = false;
+                for chunk in &chunks[..chunks.len() - 1] {
+                    if asm.push(chunk).is_err() {
+                        failed = true;
+                        break;
+                    }
+                }
+                let last = &chunks[chunks.len() - 1];
+                if !failed && last.len() > 1 && asm.push(&last[..last.len() - 1]).is_ok() {
+                    return Err("short final chunk accepted".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+}

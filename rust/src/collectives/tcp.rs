@@ -83,6 +83,13 @@ pub struct TcpConfig {
     /// the `MERGECOMP_FAULTS` environment variable, so chaos runs can
     /// straggle a rank without plumbing flags through every launcher.
     pub faults: Option<FaultPlan>,
+    /// Run-config fingerprint attached to this rank's HELLO and
+    /// cross-checked by rank 0 during the rendezvous (see
+    /// [`bootstrap::exchange_peer_table`]): a joiner launched with a
+    /// mismatched `--codec`/`--topology`/`--seed` is refused at HELLO with
+    /// an error naming the flag, instead of training to a divergent
+    /// digest. `None` skips the check (legacy peers).
+    pub config_token: Option<String>,
 }
 
 impl Default for TcpConfig {
@@ -96,6 +103,7 @@ impl Default for TcpConfig {
             timeout: Duration::from_secs(60),
             generation: 0,
             faults: None,
+            config_token: None,
         }
     }
 }
@@ -159,6 +167,7 @@ impl TcpTransport {
             &my_addr,
             &cfg.node_label,
             cfg.generation,
+            cfg.config_token.as_deref(),
             hosted_rendezvous,
             deadline,
         )?;

@@ -79,6 +79,11 @@ pub enum ErrorKind {
     /// allgather codec handed to the wire allreduce) — a schedule bug,
     /// never recoverable by retry.
     Codec,
+    /// A malformed, truncated, or corrupted control/snapshot frame — a
+    /// protocol violation by a live peer (or a torn stream), never
+    /// recoverable by retry. Raised by the join/snapshot framing in
+    /// [`crate::collectives::snapshot`].
+    Protocol,
 }
 
 impl ErrorKind {
@@ -87,6 +92,7 @@ impl ErrorKind {
             ErrorKind::PeerGone => "peer-gone",
             ErrorKind::Disconnected => "disconnected",
             ErrorKind::Codec => "codec",
+            ErrorKind::Protocol => "protocol",
         }
     }
 }
@@ -149,6 +155,18 @@ impl Error {
         }
     }
 
+    /// A malformed or truncated control/snapshot frame (see
+    /// [`ErrorKind::Protocol`]).
+    pub fn protocol(context: impl Into<String>) -> Error {
+        Error {
+            kind: ErrorKind::Protocol,
+            rank: None,
+            peer: None,
+            tag: None,
+            context: context.into(),
+        }
+    }
+
     pub fn kind(&self) -> ErrorKind {
         self.kind
     }
@@ -194,6 +212,9 @@ impl fmt::Display for Error {
             }
             ErrorKind::Codec => {
                 write!(f, "codec dispatch: {}", self.context)
+            }
+            ErrorKind::Protocol => {
+                write!(f, "protocol: {}", self.context)
             }
         }
     }
@@ -940,11 +961,16 @@ mod tests {
         let gone = Error::peer_gone(1, 3, None, "reset");
         assert!(gone.is_recoverable());
         assert_eq!(gone.retry_after(), Some(Duration::from_millis(100)));
-        for e in [Error::disconnected("lane dead"), Error::codec("bad dispatch")] {
+        for e in [
+            Error::disconnected("lane dead"),
+            Error::codec("bad dispatch"),
+            Error::protocol("torn stream"),
+        ] {
             assert!(!e.is_recoverable());
             assert_eq!(e.retry_after(), None);
         }
         assert_eq!(ErrorKind::PeerGone.name(), "peer-gone");
+        assert_eq!(ErrorKind::Protocol.name(), "protocol");
     }
 
     #[test]

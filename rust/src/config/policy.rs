@@ -41,9 +41,24 @@ pub struct RunPolicy {
     /// `std::process::abort()` at the start of this step — a hard kill with
     /// no cleanup, as close to SIGKILL as a process can do to itself. The
     /// chaos tests use it to stage mid-run rank loss reproducibly.
+    /// Ignored when `join` is set, so a respawned replacement for the dead
+    /// rank does not immediately re-die at the same step.
     pub die_at_step: Option<usize>,
     /// Which rank `die_at_step` kills (default 0).
     pub die_rank: usize,
+    /// This process is a *replacement* for a dead rank: instead of running
+    /// the normal bootstrap-and-train path it re-HELLOs into the live
+    /// group's re-rendezvous, receives the replicated state streamed by
+    /// rank 0, merges it with its own last interval checkpoint (EF/codec
+    /// planes, sharded velocity), and resumes mid-run (DESIGN.md "Online
+    /// join"). Requires `checkpoint_dir` and the TCP transport; mutually
+    /// exclusive with `resume`.
+    pub join: bool,
+    /// How long (seconds) survivors of a peer loss wait at the
+    /// re-rendezvous for a replacement rank before giving up and falling
+    /// back to the elastic shrink path. 0 (default) disables hot re-join
+    /// entirely — peer loss always shrinks the world.
+    pub rejoin_wait_secs: u64,
 }
 
 impl RunPolicy {
@@ -75,6 +90,16 @@ impl RunPolicy {
             !self.resume || self.checkpoint_dir.is_some(),
             "resume needs a checkpoint_dir to restore from"
         );
+        anyhow::ensure!(
+            !self.join || self.checkpoint_dir.is_some(),
+            "join needs a checkpoint_dir: the joiner restores its rank-local \
+             EF/codec (and sharded velocity) planes from its own interval checkpoint"
+        );
+        anyhow::ensure!(
+            !(self.join && self.resume),
+            "join and resume are mutually exclusive: a joiner's restore point \
+             comes from the live group's snapshot stream, not from disk alone"
+        );
         Ok(())
     }
 
@@ -90,6 +115,8 @@ impl RunPolicy {
             faults: v.get("faults").and_then(Value::as_str).map(String::from),
             die_at_step: v.get("die_at_step").and_then(Value::as_usize),
             die_rank: v.usize_or("die_rank", d.die_rank),
+            join: v.bool_or("join", d.join),
+            rejoin_wait_secs: v.usize_or("rejoin_wait_secs", d.rejoin_wait_secs as usize) as u64,
         };
         policy.validate()?;
         Ok(policy)
@@ -110,6 +137,8 @@ impl RunPolicy {
                 self.die_at_step.map(Value::from).unwrap_or(Value::Null),
             ),
             ("die_rank", Value::from(self.die_rank)),
+            ("join", Value::from(self.join)),
+            ("rejoin_wait_secs", Value::from(self.rejoin_wait_secs as usize)),
         ])
     }
 
@@ -144,6 +173,12 @@ impl RunPolicy {
             self.die_at_step = Some(s);
         }
         self.die_rank = args.usize_or("die-rank", self.die_rank);
+        if args.str("join").is_some() {
+            self.join = args.bool("join");
+        }
+        if let Some(w) = args.usize("rejoin-wait-secs") {
+            self.rejoin_wait_secs = w as u64;
+        }
         self.validate()?;
         Ok(self)
     }
@@ -184,6 +219,16 @@ impl RunPolicyBuilder {
     pub fn die_at_step(mut self, step: usize, rank: usize) -> Self {
         self.policy.die_at_step = Some(step);
         self.policy.die_rank = rank;
+        self
+    }
+
+    pub fn join(mut self, on: bool) -> Self {
+        self.policy.join = on;
+        self
+    }
+
+    pub fn rejoin_wait_secs(mut self, secs: u64) -> Self {
+        self.policy.rejoin_wait_secs = secs;
         self
     }
 
@@ -232,6 +277,23 @@ mod tests {
             RunPolicy::builder().faults("warp=9").build().is_err(),
             "fault spec must be validated at build time"
         );
+        // Join without a dir, and join+resume together, are rejected too.
+        assert!(RunPolicy::builder().join(true).build().is_err());
+        assert!(RunPolicy::builder()
+            .checkpoint_dir("ck")
+            .join(true)
+            .resume(true)
+            .build()
+            .is_err());
+        let p = RunPolicy::builder()
+            .checkpoint_dir("ck")
+            .checkpoint_interval(1)
+            .join(true)
+            .rejoin_wait_secs(30)
+            .build()
+            .unwrap();
+        assert!(p.join);
+        assert_eq!(p.rejoin_wait_secs, 30);
     }
 
     #[test]
@@ -243,6 +305,7 @@ mod tests {
             .resume(true)
             .faults("delay=1ms")
             .die_at_step(7, 1)
+            .rejoin_wait_secs(45)
             .build()
             .unwrap();
         let back = RunPolicy::from_json(&p.to_json()).unwrap();

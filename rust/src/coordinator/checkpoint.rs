@@ -18,7 +18,11 @@
 //! boundaries and again on a recoverable peer failure, before shrinking the
 //! world (the "emergency" snapshot a re-joining rank restores from).
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::ExchangeMode;
 use crate::compression::CodecKind;
@@ -234,21 +238,74 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// The serialized form as bytes — what the hot-join protocol streams
+    /// over [`crate::collectives::snapshot`] and [`Checkpoint::from_bytes`]
+    /// reverses.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_json().to_string_compact().into_bytes()
+    }
+
+    /// Strict inverse of [`Checkpoint::to_bytes`] (same validation as
+    /// [`Checkpoint::from_json`], including the param-digest check).
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Checkpoint> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("checkpoint stream: non-utf8 payload: {e}"))?;
+        let v = Value::parse(text).map_err(|e| anyhow::anyhow!("checkpoint stream: {e}"))?;
+        Checkpoint::from_json(&v)
+    }
+
+    /// Like [`Checkpoint::to_bytes`], but reusing `cache`d per-plane JSON
+    /// fragments for planes whose digest is unchanged since the previous
+    /// call — the dirty-plane tracking behind incremental interval
+    /// checkpoints (EF planes for groups that didn't exchange, frozen
+    /// tensors, zero shards all serialize for free). The output parses to
+    /// the same [`Checkpoint`] as the uncached form; only the JSON key
+    /// order differs.
+    pub fn to_bytes_cached(&self, cache: &mut PlaneCache) -> Vec<u8> {
+        let scalars = Value::from_pairs(vec![
+            ("version", Value::from(CHECKPOINT_VERSION)),
+            ("step", Value::from(self.step)),
+            ("world", Value::from(self.world)),
+            ("rank", Value::from(self.rank)),
+            ("seed", Value::from(self.seed)),
+            ("codec", Value::from(self.base_codec.name())),
+            ("bounds", Value::Arr(self.bounds.iter().map(|&b| Value::from(b)).collect())),
+            (
+                "routes",
+                Value::Arr(self.routes.iter().map(|r| Value::from(r.name())).collect()),
+            ),
+            (
+                "codecs",
+                Value::Arr(self.codecs.iter().map(|c| Value::from(c.name())).collect()),
+            ),
+            ("schedule_epoch", Value::from(self.schedule_epoch)),
+            ("exchange_mode", Value::from(self.exchange_mode.name())),
+            ("param_digest", Value::from(format!("{:016x}", self.param_digest()))),
+        ]);
+        let mut text = scalars.to_string_compact();
+        debug_assert!(text.ends_with('}'));
+        text.pop();
+        text.push_str(",\"params\":");
+        cache.render_section(PlaneSection::Params, &self.params, &mut text);
+        text.push_str(",\"velocity\":");
+        cache.render_section(PlaneSection::Velocity, &self.velocity, &mut text);
+        text.push_str(",\"codec_state\":");
+        cache.render_section(PlaneSection::CodecState, &self.codec_state, &mut text);
+        text.push('}');
+        text.into_bytes()
+    }
+
     /// Write atomically: serialize to `<path>.tmp`, then rename over
     /// `path`. A rank killed mid-write leaves the previous snapshot intact.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)
-                    .map_err(|e| anyhow::anyhow!("checkpoint mkdir {}: {e}", dir.display()))?;
-            }
-        }
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, self.to_json().to_string_compact())
-            .map_err(|e| anyhow::anyhow!("checkpoint write {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| anyhow::anyhow!("checkpoint rename to {}: {e}", path.display()))?;
-        Ok(())
+        write_atomic(path, &self.to_bytes())
+    }
+
+    /// [`Checkpoint::save`] with the incremental serializer: planes
+    /// unchanged since `cache` last saw this snapshot path are not
+    /// re-serialized. Same tmp + atomic-rename durability.
+    pub fn save_with_cache(&self, path: &Path, cache: &mut PlaneCache) -> anyhow::Result<()> {
+        write_atomic(path, &self.to_bytes_cached(cache))
     }
 
     pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
@@ -258,6 +315,239 @@ impl Checkpoint {
             .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))?;
         Checkpoint::from_json(&v)
             .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))
+    }
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow::anyhow!("checkpoint mkdir {}: {e}", dir.display()))?;
+        }
+    }
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, bytes)
+        .map_err(|e| anyhow::anyhow!("checkpoint write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("checkpoint rename to {}: {e}", path.display()))?;
+    Ok(())
+}
+
+#[derive(Clone, Copy)]
+enum PlaneSection {
+    Params,
+    Velocity,
+    CodecState,
+}
+
+/// Per-plane serialization cache for one snapshot path: each entry pairs a
+/// plane's content digest with its rendered JSON fragment, so interval
+/// checkpoints only pay serialization cost for planes that actually
+/// changed since the previous write. Held by the [`AsyncCheckpointer`]'s
+/// writer thread, one per path.
+#[derive(Debug, Default)]
+pub struct PlaneCache {
+    params: Vec<(u64, String)>,
+    velocity: Vec<(u64, String)>,
+    codec_state: Vec<(u64, String)>,
+    reused: u64,
+    rendered: u64,
+}
+
+impl PlaneCache {
+    pub fn new() -> PlaneCache {
+        PlaneCache::default()
+    }
+
+    /// Planes served from cache across all renders (dirty-plane tracking
+    /// observability, asserted by the tests).
+    pub fn reused(&self) -> u64 {
+        self.reused
+    }
+
+    /// Planes that had to be (re-)serialized across all renders.
+    pub fn rendered(&self) -> u64 {
+        self.rendered
+    }
+
+    fn render_section(&mut self, section: PlaneSection, planes: &[Vec<f32>], out: &mut String) {
+        // Split the counter borrows from the entry borrow by hand: each
+        // section owns a distinct Vec but shares the two counters.
+        let (entries, reused, rendered) = match section {
+            PlaneSection::Params => (&mut self.params, &mut self.reused, &mut self.rendered),
+            PlaneSection::Velocity => (&mut self.velocity, &mut self.reused, &mut self.rendered),
+            PlaneSection::CodecState => {
+                (&mut self.codec_state, &mut self.reused, &mut self.rendered)
+            }
+        };
+        entries.truncate(planes.len());
+        out.push('[');
+        for (i, plane) in planes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let digest = params_digest(std::slice::from_ref(plane));
+            if entries.get(i).is_some_and(|(d, _)| *d == digest) {
+                *reused += 1;
+                out.push_str(&entries[i].1);
+                continue;
+            }
+            *rendered += 1;
+            let frag = Value::Arr(
+                plane.iter().map(|&x| Value::from(x.to_bits() as u64)).collect(),
+            )
+            .to_string_compact();
+            out.push_str(&frag);
+            if i < entries.len() {
+                entries[i] = (digest, frag);
+            } else {
+                entries.push((digest, frag));
+            }
+        }
+        out.push(']');
+    }
+}
+
+enum Job {
+    Write(PathBuf, Checkpoint),
+    Flush(mpsc::Sender<()>),
+}
+
+struct AsyncShared {
+    /// Wall-clock seconds the writer thread spent serializing + writing —
+    /// time the training step no longer pays (`ckpt_async_write_secs`).
+    write_secs: Mutex<f64>,
+    writes: AtomicU64,
+    /// First write failure, surfaced by the next `submit`/`flush`.
+    last_error: Mutex<Option<String>>,
+    /// Artificial per-write stall (test hook: makes "the write is slow but
+    /// the step doesn't block" deterministically observable).
+    write_delay: Duration,
+}
+
+/// Background interval-checkpoint writer: `submit` clones nothing and does
+/// no IO on the caller's thread — the snapshot (already cloned off the hot
+/// path by the caller) crosses a channel to a writer thread that
+/// serializes incrementally (one [`PlaneCache`] per path) and writes with
+/// tmp + atomic-rename. Write failures are latched and surfaced by the
+/// next `submit` or `flush` rather than lost. Dropping the handle joins
+/// the thread after it drains the queue.
+pub struct AsyncCheckpointer {
+    tx: Option<mpsc::Sender<Job>>,
+    shared: Arc<AsyncShared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Default for AsyncCheckpointer {
+    fn default() -> Self {
+        AsyncCheckpointer::new()
+    }
+}
+
+impl AsyncCheckpointer {
+    pub fn new() -> AsyncCheckpointer {
+        AsyncCheckpointer::with_write_delay(Duration::ZERO)
+    }
+
+    /// Test constructor: every write additionally sleeps `write_delay`
+    /// first, making the async-vs-blocking distinction deterministic.
+    pub fn with_write_delay(write_delay: Duration) -> AsyncCheckpointer {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let shared = Arc::new(AsyncShared {
+            write_secs: Mutex::new(0.0),
+            writes: AtomicU64::new(0),
+            last_error: Mutex::new(None),
+            write_delay,
+        });
+        let worker = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("ckpt-writer".to_string())
+            .spawn(move || {
+                let mut caches: HashMap<PathBuf, PlaneCache> = HashMap::new();
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Write(path, ckpt) => {
+                            let start = Instant::now();
+                            if !worker.write_delay.is_zero() {
+                                std::thread::sleep(worker.write_delay);
+                            }
+                            let cache = caches.entry(path.clone()).or_default();
+                            match ckpt.save_with_cache(&path, cache) {
+                                Ok(()) => {
+                                    worker.writes.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(e) => {
+                                    let mut slot = worker.last_error.lock().unwrap();
+                                    if slot.is_none() {
+                                        *slot = Some(e.to_string());
+                                    }
+                                }
+                            }
+                            *worker.write_secs.lock().unwrap() +=
+                                start.elapsed().as_secs_f64();
+                        }
+                        Job::Flush(ack) => {
+                            // FIFO channel: every Write submitted before the
+                            // flush has already been processed.
+                            let _ = ack.send(());
+                        }
+                    }
+                }
+            })
+            .expect("spawning checkpoint writer thread");
+        AsyncCheckpointer { tx: Some(tx), shared, handle: Some(handle) }
+    }
+
+    /// Queue one snapshot write. Off the hot path: the only cost here is
+    /// the channel send. Surfaces a failure from any *earlier* write.
+    pub fn submit(&self, path: PathBuf, ckpt: Checkpoint) -> anyhow::Result<()> {
+        if let Some(e) = self.shared.last_error.lock().unwrap().clone() {
+            anyhow::bail!("async checkpoint write failed: {e}");
+        }
+        self.tx
+            .as_ref()
+            .expect("submit after drop")
+            .send(Job::Write(path, ckpt))
+            .map_err(|_| anyhow::anyhow!("checkpoint writer thread exited"))
+    }
+
+    /// Block until every previously submitted write has been completed (or
+    /// failed), then surface any latched failure. Called at end of run and
+    /// before a planned `abort()` so no snapshot is torn.
+    pub fn flush(&self) -> anyhow::Result<()> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("flush after drop")
+            .send(Job::Flush(ack_tx))
+            .map_err(|_| anyhow::anyhow!("checkpoint writer thread exited"))?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("checkpoint writer thread exited mid-flush"))?;
+        if let Some(e) = self.shared.last_error.lock().unwrap().clone() {
+            anyhow::bail!("async checkpoint write failed: {e}");
+        }
+        Ok(())
+    }
+
+    /// Seconds the writer thread has spent on completed writes — the
+    /// `ckpt_async_write_secs` RunResult field (time hidden from steps).
+    pub fn write_secs(&self) -> f64 {
+        *self.shared.write_secs.lock().unwrap()
+    }
+
+    /// Completed (successful) snapshot writes.
+    pub fn writes(&self) -> u64 {
+        self.shared.writes.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for AsyncCheckpointer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -433,6 +723,92 @@ mod tests {
         s.exchange_mode = ExchangeMode::Sharded;
         s.ensure_exchange_mode(ExchangeMode::Sharded).unwrap();
         assert!(s.ensure_exchange_mode(ExchangeMode::Full).is_err());
+    }
+
+    #[test]
+    fn cached_serialization_parses_identically_and_tracks_dirty_planes() {
+        let mut c = sample();
+        let mut cache = PlaneCache::new();
+        // First render: every plane is a miss.
+        let back = Checkpoint::from_bytes(&c.to_bytes_cached(&mut cache)).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back, Checkpoint::from_bytes(&c.to_bytes()).unwrap());
+        let total = (c.params.len() + c.velocity.len() + c.codec_state.len()) as u64;
+        assert_eq!((cache.rendered(), cache.reused()), (total, 0));
+        // Unchanged snapshot: everything comes from cache.
+        let back = Checkpoint::from_bytes(&c.to_bytes_cached(&mut cache)).unwrap();
+        assert_eq!(back, c);
+        assert_eq!((cache.rendered(), cache.reused()), (total, total));
+        // Dirty one plane: exactly one re-serialization.
+        c.params[1][0] = 9.25;
+        c.step += 1;
+        let back = Checkpoint::from_bytes(&c.to_bytes_cached(&mut cache)).unwrap();
+        assert_eq!(back, c);
+        assert_eq!((cache.rendered(), cache.reused()), (total + 1, 2 * total - 1));
+    }
+
+    #[test]
+    fn async_checkpointer_writes_in_background_and_flushes() {
+        let dir = std::env::temp_dir()
+            .join(format!("mergecomp-async-ckpt-{}", std::process::id()));
+        let path = Checkpoint::rank_path(&dir, 1);
+        let ckptr = AsyncCheckpointer::new();
+        let mut c = sample();
+        ckptr.submit(path.clone(), c.clone()).unwrap();
+        ckptr.flush().unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
+        assert_eq!(ckptr.writes(), 1);
+        // A second interval snapshot overwrites the first (same path, so
+        // the writer's PlaneCache serves the unchanged planes).
+        c.step += 1;
+        c.params[0][0] += 1.0;
+        ckptr.submit(path.clone(), c.clone()).unwrap();
+        ckptr.flush().unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
+        assert_eq!(ckptr.writes(), 2);
+        assert!(ckptr.write_secs() >= 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn async_checkpointer_surfaces_write_errors_on_flush() {
+        let dir = std::env::temp_dir()
+            .join(format!("mergecomp-async-ckpt-err-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Parent "directory" is a regular file: create_dir_all must fail.
+        let blocker = dir.join("not-a-dir");
+        std::fs::write(&blocker, b"x").unwrap();
+        let ckptr = AsyncCheckpointer::new();
+        ckptr.submit(blocker.join("ckpt.json"), sample()).unwrap();
+        let err = ckptr.flush().unwrap_err().to_string();
+        assert!(err.contains("checkpoint"), "{err}");
+        // The latched failure also poisons the next submit.
+        let err = ckptr.submit(blocker.join("ckpt.json"), sample()).unwrap_err().to_string();
+        assert!(err.contains("checkpoint"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn submitting_is_cheap_even_when_the_write_is_slow() {
+        // The step-timing claim behind async interval checkpoints: a write
+        // that takes 150 ms must not stall the submitting (training)
+        // thread. The artificial delay makes the distinction deterministic
+        // even on a slow CI box.
+        let dir = std::env::temp_dir()
+            .join(format!("mergecomp-async-ckpt-slow-{}", std::process::id()));
+        let path = Checkpoint::rank_path(&dir, 0);
+        let ckptr = AsyncCheckpointer::with_write_delay(Duration::from_millis(150));
+        let start = Instant::now();
+        ckptr.submit(path.clone(), sample()).unwrap();
+        let exposed = start.elapsed();
+        assert!(
+            exposed < Duration::from_millis(50),
+            "submit exposed {exposed:?} of a 150 ms write to the step"
+        );
+        ckptr.flush().unwrap();
+        assert!(ckptr.write_secs() >= 0.15, "hidden write time: {}", ckptr.write_secs());
+        assert_eq!(Checkpoint::load(&path).unwrap(), sample());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

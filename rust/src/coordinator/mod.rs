@@ -30,7 +30,7 @@
 pub mod checkpoint;
 pub mod engine;
 
-pub use checkpoint::{Checkpoint, CHECKPOINT_VERSION};
+pub use checkpoint::{AsyncCheckpointer, Checkpoint, PlaneCache, CHECKPOINT_VERSION};
 pub use engine::ExchangeEngine;
 
 /// How the exchange engine schedules encode / collective / decode.

@@ -73,11 +73,18 @@ fn print_usage() {
                      [--resume] [--faults SPEC] [--die-at-step K --die-rank R]\n\
                       (shorthands over --policy; SPEC grammar e.g.\n\
                       rank=2,delay=2ms,jitter=1ms,rate=65536/100ms,drop-after=40)\n\
+                     [--join] [--rejoin-wait-secs S]  (hot re-join: --join marks\n\
+                      this process a replacement for a dead rank; survivors wait\n\
+                      S seconds at the re-rendezvous before shrinking instead —\n\
+                      DESIGN.md \"Online join\")\n\
            launch    --workers N [--rendezvous HOST:PORT] [--out-dir D]\n\
-                     [--timeout-secs S] [--expect-dead R1,R2] + any train flags\n\
+                     [--timeout-secs S] [--expect-dead R1,R2] [--rejoin R1,R2]\n\
+                     + any train flags\n\
                      (forwarded to all ranks; --topology nodes=G maps the local\n\
                      processes onto G synthetic nodes; --expect-dead excludes\n\
-                     chaos-killed ranks from the aggregate verdict)\n\
+                     chaos-killed ranks from the aggregate verdict; --rejoin\n\
+                     respawns a dead rank once with --join so it streams back\n\
+                     into the live group)\n\
            simulate  --model M --codec C --fabric F --workers a,b,c --schedule S\n\
            search    --model M --codec C --fabric F --workers N [--ymax Y] [--alpha A]\n\
            overhead  --codec C [--sizes 64,1024,...]\n\
@@ -140,6 +147,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             result.rank,
             result.recoveries,
             if result.recoveries == 1 { "y" } else { "ies" },
+            result.world_at_end
+        );
+    }
+    if result.joins > 0 {
+        println!(
+            "rank {} took part in {} hot re-join{}; finished at world size {}",
+            result.rank,
+            result.joins,
+            if result.joins == 1 { "" } else { "s" },
             result.world_at_end
         );
     }
@@ -214,22 +230,29 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         "rank",
         "out",
         "expect-dead",
+        "rejoin",
     ];
     // Chaos runs: ranks listed here are expected to die mid-run (pair with
     // the forwarded --elastic/--die-at-step/--die-rank train flags); the
     // aggregate verdict is computed over the survivors.
-    let expect_dead: Vec<usize> = match args.str("expect-dead") {
-        Some(list) => list
-            .split(',')
-            .filter(|s| !s.trim().is_empty())
-            .map(|s| {
-                s.trim()
-                    .parse::<usize>()
-                    .map_err(|e| anyhow::anyhow!("--expect-dead '{s}': {e}"))
-            })
-            .collect::<anyhow::Result<_>>()?,
-        None => Vec::new(),
+    let parse_ranks = |flag: &str| -> anyhow::Result<Vec<usize>> {
+        match args.str(flag) {
+            Some(list) => list
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("--{flag} '{s}': {e}"))
+                })
+                .collect::<anyhow::Result<_>>(),
+            None => Ok(Vec::new()),
+        }
     };
+    let expect_dead = parse_ranks("expect-dead")?;
+    // Hot re-join: ranks listed here are respawned once with --join when
+    // they die; the replacement's result stands in for the rank.
+    let rejoin = parse_ranks("rejoin")?;
     let mut train_flags = Vec::new();
     for (k, v) in &args.flags {
         if LAUNCHER_FLAGS.contains(&k.as_str()) {
@@ -247,6 +270,7 @@ fn cmd_launch(args: &Args) -> anyhow::Result<()> {
         train_flags,
         timeout: std::time::Duration::from_secs(args.u64_or("timeout-secs", 600)),
         expect_dead,
+        rejoin,
     };
     if let Some(t) = args.str("topology") {
         // Forwarded verbatim to every worker: the launcher maps the local

@@ -1,0 +1,244 @@
+//! The online join protocol: grow a shrunk-or-about-to-shrink world back
+//! to full size **without restarting the run** (DESIGN.md "Online join").
+//!
+//! Two halves, one collective program:
+//!
+//! - **Survivors** ([`hot_rejoin_survivor`]): after a peer loss (and the
+//!   usual rollback + emergency snapshot), instead of shrinking they
+//!   re-run the rendezvous at the *full* configured world with a bumped
+//!   generation and wait up to `rejoin_wait_secs` for a replacement rank
+//!   to HELLO in. Rank 0 announces `(generation, resume step)` on
+//!   [`JOIN_TAG`] and streams each joiner the replicated state as a
+//!   chunk-framed [`Checkpoint`] on `SNAPSHOT_TAG`; everyone then adopts
+//!   the fresh endpoint, re-attaches the topology, and cross-checks
+//!   `(step, param digest)` before the retried step runs at full world.
+//! - **The joiner** ([`receive_join_snapshot`]): a respawned process
+//!   launched with `--join`. Its bootstrap *is* the re-rendezvous; it
+//!   then learns the generation and resume step from the JOIN
+//!   announcement, receives the snapshot stream, and merges it with its
+//!   own last interval checkpoint — replicated state (params, schedule,
+//!   full-mode velocity) comes off the wire, rank-local state (EF/codec
+//!   planes, sharded velocity spans) comes from its own disk, because
+//!   no survivor ever held it.
+//!
+//! The merge is only sound when the joiner's local snapshot sits at the
+//! exact step the group resumes from — which `--checkpoint-interval 1`
+//! guarantees (every completed step leaves a restorable snapshot, written
+//! asynchronously so the hot path does not pay for it).
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::collectives::snapshot::{decode_join, encode_join};
+use crate::collectives::{
+    recv_snapshot, send_snapshot, tcp_endpoint_with_nodes, Comm, CommRoute, TcpConfig, JOIN_TAG,
+};
+use crate::config::TrainConfig;
+use crate::coordinator::{Checkpoint, ExchangeMode};
+use crate::scheduler::RouteMode;
+
+/// The compatibility token every rank registers at the rendezvous
+/// (`HELLO ... c<token>`). Rank 0 refuses a HELLO whose token disagrees
+/// with its own, so a joiner relaunched with the wrong `--seed`,
+/// `--codec`, `--topology`, or `--exchange-mode` is rejected with an
+/// actionable error instead of silently corrupting the run.
+pub(crate) fn config_token(cfg: &TrainConfig) -> String {
+    format!(
+        "seed={:016x}:codec={}:topo={}:xmode={}",
+        cfg.seed,
+        cfg.codec.name(),
+        cfg.topology.name(),
+        cfg.exchange_mode.name()
+    )
+}
+
+/// Survivor half of the hot re-join at `step` (the step being retried;
+/// equivalently, the number of completed optimizer steps). `dead` lists
+/// the lost ranks in old-world numbering; `snapshot` is rank 0's
+/// replicated-state checkpoint (`None` on every other rank); `digest` is
+/// the FNV-1a digest of the current parameters.
+///
+/// On success the communicator runs the *full* configured world again,
+/// with the topology re-attached exactly as `train_rank` attaches it at
+/// startup — the joined group's collective program (reduction order
+/// included) is indistinguishable from a never-failed run's. On failure
+/// before the endpoint swap the old communicator is untouched and the
+/// caller falls back to the elastic shrink; on failure after the swap the
+/// joiners are told to abort and the shrink fallback operates on the new
+/// endpoint with the same dead set.
+pub(crate) fn hot_rejoin_survivor(
+    comm: &mut Comm,
+    cfg: &TrainConfig,
+    step: usize,
+    dead: &[usize],
+    snapshot: Option<&Checkpoint>,
+    digest: u64,
+) -> anyhow::Result<()> {
+    let world = cfg.workers;
+    anyhow::ensure!(
+        comm.world() == world,
+        "hot re-join requires the full-world communicator (have {}, configured {world}) — a \
+         previously shrunk run cannot re-grow",
+        comm.world()
+    );
+    anyhow::ensure!(
+        snapshot.is_some() == (comm.rank() == 0),
+        "hot re-join: exactly rank 0 streams the snapshot"
+    );
+    // The generation every post-join frame is tagged with: one above the
+    // abort epoch the loss bumped us to, so stale old-generation traffic
+    // is filtered on arrival.
+    let generation = comm.ep.abort_epoch() + 1;
+
+    // Re-rendezvous at full world. Rank 0 re-binds the original
+    // rendezvous address (the bootstrap listener is not held open between
+    // uses); everyone else dials with retry, which also covers the
+    // joiner racing ahead of slow survivors. A timeout here — no
+    // replacement showed up within `rejoin_wait_secs` — leaves the old
+    // endpoint untouched.
+    let topo = cfg.topology.build(world)?;
+    let tcp_cfg = TcpConfig {
+        rank: comm.rank(),
+        world,
+        rendezvous: cfg.rendezvous.clone(),
+        advertise_host: cfg.advertise_host.clone(),
+        node_label: topo.node_label(comm.rank()),
+        timeout: Duration::from_secs(cfg.policy.rejoin_wait_secs.max(1)),
+        generation,
+        faults: None,
+        config_token: Some(config_token(cfg)),
+    };
+    let (mut ep, _peer_nodes) = tcp_endpoint_with_nodes(&tcp_cfg, None)?;
+
+    // JOIN announcement + snapshot stream, on the raw endpoint before
+    // adoption (control traffic, not part of the tagged collective
+    // sequence). Rank 0 is authoritative for the (generation, step) pair;
+    // survivors sanity-check it against their own computation.
+    if comm.rank() == 0 {
+        let snap = snapshot.expect("checked above");
+        for peer in 1..world {
+            ep.send(peer, JOIN_TAG, encode_join(generation, step as u64))?;
+        }
+        for &d in dead {
+            let mut c = snap.clone();
+            c.rank = d;
+            send_snapshot(&mut ep, d, &c.to_bytes())?;
+        }
+    } else {
+        let (g, s) = decode_join(&ep.recv(0, JOIN_TAG)?)?;
+        anyhow::ensure!(
+            g == generation && s == step as u64,
+            "hot re-join: rank 0 announced generation {g} / step {s} but this survivor computed \
+             generation {generation} / step {step} — survivors disagree on the join point"
+        );
+    }
+
+    // Point of no return: swap the communicator onto the full-world
+    // endpoint. Everything after this must either succeed or abort the
+    // joiners before erroring, so nobody blocks on a half-joined group.
+    comm.adopt_endpoint(ep, generation)?;
+    let verify = |comm: &mut Comm| -> anyhow::Result<()> {
+        comm.barrier()?;
+        // Re-attach the topology exactly as train_rank does at startup
+        // (the joiner runs that very code): hierarchical reduction order
+        // is part of bit-exactness, so the joined world must route — and
+        // reduce — like the original one.
+        comm.set_topology(cfg.topology.build(world)?)?;
+        if cfg.route == RouteMode::Flat {
+            comm.set_route(CommRoute::Flat);
+        }
+        let mut tag = Vec::with_capacity(16);
+        tag.extend_from_slice(&(step as u64).to_le_bytes());
+        tag.extend_from_slice(&digest.to_le_bytes());
+        let all = comm.allgather(tag.clone())?;
+        for (peer, t) in all.iter().enumerate() {
+            anyhow::ensure!(
+                t == &tag,
+                "hot re-join: rank {peer} disagrees on (step, param digest) at step {step} — \
+                 the joined world diverged, cannot continue"
+            );
+        }
+        Ok(())
+    };
+    if let Err(e) = verify(comm) {
+        for &d in dead {
+            comm.ep.broadcast_abort(d, &format!("hot re-join failed: {e}"));
+        }
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// Joiner half: called right after the `--join` process's bootstrap (its
+/// re-rendezvous), before `train_rank`. Returns the restore point the
+/// training loop resumes from: the streamed replicated state merged with
+/// this rank's own interval checkpoint.
+pub(crate) fn receive_join_snapshot(
+    comm: &mut Comm,
+    cfg: &TrainConfig,
+) -> anyhow::Result<Checkpoint> {
+    anyhow::ensure!(
+        cfg.rank != 0,
+        "--join: rank 0 hosts the rendezvous and streams the snapshot; it cannot hot-join a \
+         live group"
+    );
+    let (generation, step) = decode_join(&comm.ep.recv(0, JOIN_TAG)?)?;
+    comm.align_generation(generation);
+    let streamed = Checkpoint::from_bytes(&recv_snapshot(&mut comm.ep, 0)?)?;
+    anyhow::ensure!(
+        streamed.step == step as usize,
+        "--join: rank 0 announced resume step {step} but streamed a step-{} snapshot",
+        streamed.step
+    );
+    anyhow::ensure!(
+        streamed.rank == cfg.rank,
+        "--join: rank 0 streamed rank {}'s snapshot to rank {}",
+        streamed.rank,
+        cfg.rank
+    );
+
+    // Merge: replicated state off the wire, rank-local state from this
+    // rank's own last interval snapshot. The EF/codec planes a dead rank
+    // accumulated exist nowhere else — without them (or with stale ones)
+    // the joined run would diverge from the never-failed run.
+    let dir = cfg
+        .policy
+        .checkpoint_dir
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("--join requires --checkpoint-dir"))?;
+    let path = Checkpoint::rank_path(Path::new(dir), cfg.rank);
+    let local = Checkpoint::load(&path).map_err(|e| {
+        anyhow::anyhow!(
+            "--join: cannot load this rank's interval checkpoint ({}): {e} — hot join restores \
+             rank-local EF/codec planes from disk; run with --checkpoint-dir/--checkpoint-interval \
+             so the dying rank left one behind",
+            path.display()
+        )
+    })?;
+    anyhow::ensure!(
+        local.step == streamed.step,
+        "--join: this rank's interval checkpoint is at step {} but the group resumes at step {} \
+         — rank-local EF planes must match the join boundary exactly; run with \
+         --checkpoint-interval 1 so every completed step leaves a snapshot",
+        local.step,
+        streamed.step
+    );
+    anyhow::ensure!(
+        local.bounds == streamed.bounds && local.codecs == streamed.codecs,
+        "--join: this rank's interval checkpoint was written under a different schedule \
+         (bounds/codecs) than the live group's — its EF planes do not line up with the group \
+         boundaries"
+    );
+    let mut merged = streamed;
+    merged.codec_state = local.codec_state;
+    if merged.exchange_mode == ExchangeMode::Sharded {
+        // Sharded velocity spans are rank-local too; the streamed planes
+        // are rank 0's and zero outside rank 0's spans.
+        merged.velocity = local.velocity;
+    }
+    // Mirror the survivors' post-adoption barrier; the (step, digest)
+    // cross-check that completes the join handshake is train_rank's
+    // standard restore verification.
+    comm.barrier()?;
+    Ok(merged)
+}

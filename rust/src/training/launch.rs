@@ -46,6 +46,13 @@ pub struct LaunchOptions {
     /// aggregate verdict; `all_exited_zero` and `digests_match` are
     /// computed over the survivors only.
     pub expect_dead: Vec<usize>,
+    /// Ranks to respawn **once** with `--join` (and a bumped
+    /// `MERGECOMP_GENERATION`) if they exit nonzero mid-run — the
+    /// supervisor half of the hot re-join protocol. The replacement's
+    /// exit code and result stand in for the rank in the aggregate
+    /// verdict, so a rejoined rank must finish 0 with a matching digest
+    /// (do not also list it in `expect_dead`).
+    pub rejoin: Vec<usize>,
 }
 
 /// One worker process's fate.
@@ -108,17 +115,27 @@ pub fn launch_local(opts: &LaunchOptions) -> anyhow::Result<LaunchReport> {
         None => format!("127.0.0.1:{}", free_loopback_port()?),
     };
 
-    let mut children = Vec::with_capacity(opts.world);
-    for rank in 0..opts.world {
-        let out_path = opts.out_dir.join(format!("rank{rank}.json"));
-        let log_path = opts.out_dir.join(format!("rank{rank}.log"));
-        let log = std::fs::File::create(&log_path)
-            .map_err(|e| anyhow::anyhow!("creating {}: {e}", log_path.display()))?;
+    // One spawn recipe for both lives of a rank: the original worker, and
+    // (for ranks listed in `rejoin`) its `--join` replacement, which
+    // re-HELLOs into the surviving group with a bumped generation and
+    // appends to the same log so the death and the rejoin read as one
+    // story.
+    let spawn_rank = |rank: usize,
+                      out_path: &Path,
+                      log_path: &Path,
+                      join: bool|
+     -> anyhow::Result<std::process::Child> {
+        let log = if join {
+            std::fs::OpenOptions::new().append(true).create(true).open(log_path)
+        } else {
+            std::fs::File::create(log_path)
+        }
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", log_path.display()))?;
         let log_err = log
             .try_clone()
             .map_err(|e| anyhow::anyhow!("cloning log handle: {e}"))?;
-        let child = Command::new(&opts.binary)
-            .arg("train")
+        let mut cmd = Command::new(&opts.binary);
+        cmd.arg("train")
             .arg("--transport")
             .arg("tcp")
             .arg("--rank")
@@ -128,13 +145,23 @@ pub fn launch_local(opts: &LaunchOptions) -> anyhow::Result<LaunchReport> {
             .arg("--rendezvous")
             .arg(&rendezvous)
             .arg("--out")
-            .arg(&out_path)
-            .args(&opts.train_flags)
-            .stdin(Stdio::null())
+            .arg(out_path)
+            .args(&opts.train_flags);
+        if join {
+            cmd.arg("--join").env("MERGECOMP_GENERATION", "1");
+        }
+        cmd.stdin(Stdio::null())
             .stdout(Stdio::from(log))
             .stderr(Stdio::from(log_err))
             .spawn()
-            .map_err(|e| anyhow::anyhow!("spawning rank {rank} ({}): {e}", opts.binary.display()))?;
+            .map_err(|e| anyhow::anyhow!("spawning rank {rank} ({}): {e}", opts.binary.display()))
+    };
+
+    let mut children = Vec::with_capacity(opts.world);
+    for rank in 0..opts.world {
+        let out_path = opts.out_dir.join(format!("rank{rank}.json"));
+        let log_path = opts.out_dir.join(format!("rank{rank}.log"));
+        let child = spawn_rank(rank, &out_path, &log_path, false)?;
         children.push((rank, child, out_path, log_path));
     }
 
@@ -142,6 +169,7 @@ pub fn launch_local(opts: &LaunchOptions) -> anyhow::Result<LaunchReport> {
     let deadline = Instant::now() + opts.timeout;
     let mut exit_codes: Vec<Option<i32>> = vec![None; opts.world];
     let mut done = vec![false; opts.world];
+    let mut respawned = vec![false; opts.world];
     while done.iter().any(|d| !d) {
         for (i, (_rank, child, _, _)) in children.iter_mut().enumerate() {
             if done[i] {
@@ -154,6 +182,23 @@ pub fn launch_local(opts: &LaunchOptions) -> anyhow::Result<LaunchReport> {
                 }
                 Ok(None) => {}
                 Err(e) => anyhow::bail!("waiting on rank {i}: {e}"),
+            }
+        }
+        // Hot re-join: a rank listed in `rejoin` that died gets exactly one
+        // replacement, launched with `--join` so it streams the live
+        // group's state instead of bootstrapping from scratch.
+        for i in 0..opts.world {
+            if done[i]
+                && exit_codes[i] != Some(0)
+                && !respawned[i]
+                && opts.rejoin.contains(&children[i].0)
+            {
+                let (rank, _, out_path, log_path) = &children[i];
+                let child = spawn_rank(*rank, out_path, log_path, true)?;
+                children[i].1 = child;
+                done[i] = false;
+                exit_codes[i] = None;
+                respawned[i] = true;
             }
         }
         if done.iter().any(|d| !d) {
@@ -266,6 +311,7 @@ mod tests {
             train_flags: vec![],
             timeout: Duration::from_secs(1),
             expect_dead: vec![],
+            rejoin: vec![],
         };
         assert!(launch_local(&opts).is_err());
     }

@@ -11,6 +11,7 @@
 //! step loop in [`trainer`].
 
 mod exchange;
+mod join;
 pub mod launch;
 mod optimizer;
 mod trainer;
@@ -19,6 +20,6 @@ pub use exchange::{ExchangeMode, ExchangeStats, GradExchange, GroupSample, Pipel
 pub use launch::{launch_local, LaunchOptions, LaunchReport, RankOutcome};
 pub use optimizer::{SgdMomentum, ShardedSgdMomentum};
 pub use trainer::{
-    init_params as trainer_init_params, params_digest, train, RunResult, StepRecord,
-    RESULT_SCHEMA_VERSION,
+    init_params as trainer_init_params, params_digest, reshard_sharded, sharded_update, train,
+    RunResult, StepRecord, RESULT_SCHEMA_VERSION,
 };

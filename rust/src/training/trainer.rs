@@ -28,6 +28,7 @@
 use std::path::{Path, PathBuf};
 
 use super::exchange::{ExchangeStats, GradExchange};
+use super::join;
 use super::optimizer::{SgdMomentum, ShardedSgdMomentum};
 use crate::collectives::{
     run_comm_group, shard_elems, tcp_endpoint_with_nodes, Comm, CommRoute, Error, TcpConfig,
@@ -35,7 +36,7 @@ use crate::collectives::{
 };
 use crate::compression::{Codec as _, CodecKind, Collective};
 use crate::config::{ScheduleSpec, SchedulingMode, TrainConfig};
-use crate::coordinator::{Checkpoint, ExchangeMode};
+use crate::coordinator::{AsyncCheckpointer, Checkpoint, ExchangeMode};
 use crate::data::{Batcher, SyntheticCorpus};
 use crate::profiles::ModelProfile;
 use crate::runtime::{StepMeta, TensorMeta, TrainStep};
@@ -56,7 +57,10 @@ use crate::util::stats::Stopwatch;
 ///
 /// v3 added `exchange_mode`, `optimizer_state_bytes`, and
 /// `peak_memory_bytes` (the sharded-exchange memory accounting).
-pub const RESULT_SCHEMA_VERSION: u64 = 3;
+/// v4 added `joins` (hot re-joins this rank participated in) and
+/// `ckpt_async_write_secs` (background interval-checkpoint write time —
+/// cost the training step no longer pays).
+pub const RESULT_SCHEMA_VERSION: u64 = 4;
 
 /// Cap on elastic recovery rounds within a single training step — each
 /// round shrinks the world by at least one rank, so this only trips on a
@@ -123,7 +127,16 @@ pub struct RunResult {
     /// if elastic recovery shrank the run around dead ranks.
     pub world_at_end: usize,
     /// Elastic recovery rounds this rank performed (0 = no peer was lost).
+    /// A peer loss repaired by a hot re-join counts under `joins` instead.
     pub recoveries: usize,
+    /// Hot re-joins this rank took part in: the number of times a
+    /// replacement rank was streamed back into the group (survivors), or 1
+    /// on a rank that itself joined via `--join`.
+    pub joins: usize,
+    /// Seconds the background checkpoint writer spent serializing and
+    /// persisting interval snapshots — work the synchronous path used to
+    /// charge to the step it landed on, now fully off the hot path.
+    pub ckpt_async_write_secs: f64,
     /// The completed-step count the run resumed from (`--resume`), `None`
     /// for a fresh run.
     pub resumed_from_step: Option<usize>,
@@ -159,6 +172,7 @@ impl RunResult {
             ("param_digest", Value::from(format!("{:016x}", self.param_digest))),
             ("world_at_end", Value::from(self.world_at_end)),
             ("recoveries", Value::from(self.recoveries)),
+            ("joins", Value::from(self.joins)),
             (
                 "resumed_from_step",
                 self.resumed_from_step.map(Value::from).unwrap_or(Value::Null),
@@ -169,6 +183,10 @@ impl RunResult {
                 Value::from(self.optimizer_state_bytes),
             ),
             ("peak_memory_bytes", Value::from(self.peak_memory_bytes)),
+            (
+                "ckpt_async_write_secs",
+                Value::from(self.ckpt_async_write_secs),
+            ),
             ("partition_bounds", Value::Arr(
                 self.partition.bounds().iter().map(|&b| Value::from(b)).collect(),
             )),
@@ -717,7 +735,7 @@ fn group_planes_from_tensors(velocity_fwd: &[Vec<f32>], group_elems: &[usize]) -
 /// under an AllReduce codec only the owned span of each group is
 /// meaningful on this rank, and [`ShardedSgdMomentum::step_group`] reads
 /// exactly that span.
-fn sharded_update(
+pub fn sharded_update(
     comm: &mut Comm,
     opt: &mut ShardedSgdMomentum,
     exchange: &GradExchange,
@@ -778,7 +796,7 @@ fn sharded_update(
 /// keeps its NEW owned spans. A span whose old owner died contributes
 /// nothing — momentum there restarts at zero, deterministically on
 /// every survivor. Collective: all ranks must call this together.
-fn reshard_sharded(
+pub fn reshard_sharded(
     comm: &mut Comm,
     old: &ShardedSgdMomentum,
     mu: f32,
@@ -952,11 +970,14 @@ fn build_driver(
     Ok(Some(d))
 }
 
-/// Snapshot the full resumable state after `completed_steps` optimizer
-/// steps to `dir`'s per-rank checkpoint file (atomic rename).
+/// Assemble the full resumable state after `completed_steps` optimizer
+/// steps into a [`Checkpoint`] value. Cloning the planes here is the only
+/// cost the caller pays on the hot path — serialization and IO happen in
+/// [`write_checkpoint`] (synchronous emergency snapshots) or in the
+/// [`AsyncCheckpointer`]'s background thread (interval snapshots), and the
+/// same value is what rank 0 streams to a hot joiner.
 #[allow(clippy::too_many_arguments)]
-fn write_checkpoint(
-    dir: &Path,
+fn build_checkpoint(
     completed_steps: usize,
     world: usize,
     rank: usize,
@@ -965,8 +986,8 @@ fn write_checkpoint(
     driver: Option<&Driver>,
     params: &[Vec<f32>],
     velocity: &[Vec<f32>],
-) -> anyhow::Result<()> {
-    let ckpt = Checkpoint {
+) -> Checkpoint {
+    Checkpoint {
         step: completed_steps,
         world,
         rank,
@@ -980,34 +1001,50 @@ fn write_checkpoint(
         params: params.to_vec(),
         velocity: velocity.to_vec(),
         codec_state: exchange.flat_state(),
-    };
-    ckpt.save(&Checkpoint::rank_path(dir, rank))
+    }
 }
 
-/// Elastic recovery after a recoverable exchange failure at `step`:
-/// roll the codec state back to the pre-step snapshot, write an emergency
-/// checkpoint, agree on the surviving world, shrink the communicator, and
-/// rebuild the online driver for it. On return the caller re-runs `step`
-/// over the shrunk world. `reporting_rank` is this rank's **original**
-/// identity (checkpoint naming, gradient stream) — the communicator's rank
-/// may change under it.
+/// Snapshot the full resumable state after `completed_steps` optimizer
+/// steps to `dir`'s per-rank checkpoint file (atomic rename),
+/// synchronously — the emergency path, where durability beats latency.
 #[allow(clippy::too_many_arguments)]
-fn recover_from_peer_loss(
+fn write_checkpoint(
+    dir: &Path,
+    completed_steps: usize,
+    world: usize,
+    rank: usize,
+    cfg: &TrainConfig,
+    exchange: &GradExchange,
+    driver: Option<&Driver>,
+    params: &[Vec<f32>],
+    velocity: &[Vec<f32>],
+) -> anyhow::Result<()> {
+    build_checkpoint(completed_steps, world, rank, cfg, exchange, driver, params, velocity)
+        .save(&Checkpoint::rank_path(dir, rank))
+}
+
+/// The transport-independent first half of elastic recovery at `step`:
+/// roll the codec state back to the pre-step snapshot, write an emergency
+/// checkpoint, broadcast the loss, let control traffic settle, and agree
+/// locally on the dead set (old-world rank numbering, returned). The
+/// caller then either hot re-joins replacements for the dead ranks
+/// ([`join::hot_rejoin_survivor`]) or shrinks the world around them
+/// ([`shrink_after_peer_loss`]). `reporting_rank` is this rank's
+/// **original** identity (checkpoint naming, gradient stream).
+#[allow(clippy::too_many_arguments)]
+fn recover_prologue(
     comm: &mut Comm,
     cfg: &TrainConfig,
-    meta: &StepMeta,
-    profile: &ModelProfile,
-    fits: WarmupFits,
     step: usize,
     err: &Error,
     exchange: &mut GradExchange,
-    driver: &mut Option<Driver>,
+    driver: Option<&Driver>,
     params: &[Vec<f32>],
     velocity: &[Vec<f32>],
     state_backup: &[Vec<f32>],
     ckpt_dir: Option<&Path>,
     reporting_rank: usize,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<Vec<usize>> {
     // 1. Roll codec state back to the pre-step snapshot: groups that
     //    encoded before the wire died consumed their EF accumulators, and
     //    the retry must not double-apply that feedback.
@@ -1026,7 +1063,7 @@ fn recover_from_peer_loss(
             reporting_rank,
             cfg,
             exchange,
-            driver.as_ref(),
+            driver,
             params,
             velocity,
         )?;
@@ -1043,12 +1080,35 @@ fn recover_from_peer_loss(
         std::thread::sleep(wait);
     }
 
-    // 4. The surviving world: everyone we have not seen die, directly or
-    //    via a peer's abort broadcast. Old-world rank numbering.
+    // 4. The dead set: everyone we have seen die, directly or via a
+    //    peer's abort broadcast. Old-world rank numbering.
     let mut dead = comm.ep.dead_peers();
     if !dead.contains(&first_dead) {
         dead.push(first_dead);
     }
+    dead.sort_unstable();
+    Ok(dead)
+}
+
+/// Degraded-world second half of elastic recovery: shrink the
+/// communicator around `dead`, cross-check survivor agreement, drop the
+/// now-meaningless per-group routes, and rebuild the online driver for
+/// the shrunk world. On return the caller re-runs `step` over it. The
+/// communicator's rank may change under `reporting_rank` here.
+#[allow(clippy::too_many_arguments)]
+fn shrink_after_peer_loss(
+    comm: &mut Comm,
+    cfg: &TrainConfig,
+    meta: &StepMeta,
+    profile: &ModelProfile,
+    fits: WarmupFits,
+    step: usize,
+    dead: &[usize],
+    exchange: &mut GradExchange,
+    driver: &mut Option<Driver>,
+    params: &[Vec<f32>],
+    reporting_rank: usize,
+) -> anyhow::Result<()> {
     let survivors: Vec<usize> = (0..comm.world()).filter(|r| !dead.contains(r)).collect();
     let new_rank = comm.shrink_to_survivors(&survivors)?;
 
@@ -1101,10 +1161,14 @@ fn recover_from_peer_loss(
 }
 
 /// One rank's full training run — identical regardless of transport.
+/// `join` carries a hot joiner's restore point (the streamed snapshot
+/// merged with its local interval checkpoint, see
+/// [`join::receive_join_snapshot`]); `None` everywhere else.
 fn train_rank(
     comm: &mut Comm,
     cfg: &TrainConfig,
     setup: &TrainSetup,
+    join: Option<Checkpoint>,
 ) -> anyhow::Result<RunResult> {
     // Attach the topology: identical on every rank (same config), so the
     // routed collectives stay a symmetric SPMD program. A non-flat
@@ -1126,19 +1190,34 @@ fn train_rank(
     let elastic = policy.elastic;
     let ckpt_dir: Option<PathBuf> = policy.checkpoint_dir.as_ref().map(PathBuf::from);
     anyhow::ensure!(
-        (!elastic && !policy.resume) || cfg.synthetic.is_some(),
-        "--elastic and --resume require --synthetic: the PJRT batch stream cannot be rewound \
-         to replay a failed or already-completed step"
+        (!elastic && !policy.resume && !policy.join) || cfg.synthetic.is_some(),
+        "--elastic, --resume, and --join require --synthetic: the PJRT batch stream cannot be \
+         rewound to replay a failed or already-completed step"
     );
+    // Interval snapshots go through a background writer: the step only
+    // pays for assembling the Checkpoint value (plane clones);
+    // serialization and the tmp-file + atomic-rename IO run on the
+    // writer thread, whose accumulated time the run reports as
+    // `ckpt_async_write_secs` instead of inflating the steps it lands on.
+    let ckptr = (ckpt_dir.is_some() && policy.checkpoint_interval > 0)
+        .then(AsyncCheckpointer::new);
 
     // Restore this rank's snapshot before anything touches the wire; the
     // cheap local checks (seed, world, rank) catch a mispointed
-    // --checkpoint-dir without involving the peers.
-    let restore: Option<Checkpoint> = if policy.resume {
+    // --checkpoint-dir (or a mis-streamed join snapshot) without
+    // involving the peers.
+    let joined = join.is_some();
+    let restore: Option<Checkpoint> = if join.is_some() {
+        join
+    } else if policy.resume {
         let dir = ckpt_dir
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("--resume requires --checkpoint-dir"))?;
-        let c = Checkpoint::load(&Checkpoint::rank_path(dir, rank))?;
+        Some(Checkpoint::load(&Checkpoint::rank_path(dir, rank))?)
+    } else {
+        None
+    };
+    if let Some(c) = &restore {
         anyhow::ensure!(
             c.seed == cfg.seed,
             "checkpoint was written by a run with --seed {}, this run has {}",
@@ -1164,10 +1243,7 @@ fn train_rank(
         // only this rank's spans — resuming across modes would silently
         // corrupt the optimizer state, so it is refused outright.
         c.ensure_exchange_mode(cfg.exchange_mode)?;
-        Some(c)
-    } else {
-        None
-    };
+    }
 
     let mut params = match &restore {
         Some(c) => c.params.clone(),
@@ -1312,7 +1388,7 @@ fn train_rank(
     if restore.is_some() {
         anyhow::ensure!(
             runner.seek(start_step as u64 * accum as u64 + 1),
-            "--resume requires the synthetic step source"
+            "--resume/--join require the synthetic step source"
         );
     }
     let t0 = Stopwatch::start();
@@ -1321,11 +1397,19 @@ fn train_rank(
     let mut sum_step = 0.0f64;
     let mut last_loss = 0f32;
     let mut recoveries = 0usize;
+    let mut joins = usize::from(joined);
     for step in start_step..cfg.steps {
-        if policy.die_at_step == Some(step) && rank == policy.die_rank {
+        if policy.die_at_step == Some(step) && rank == policy.die_rank && !policy.join {
             // The chaos hook: a hard exit with no unwinding or socket
             // shutdown, indistinguishable from a SIGKILLed worker — peers
-            // learn about it from the wire, not from us.
+            // learn about it from the wire, not from us. A `--join`
+            // replacement ignores the switch, or it would re-die at the
+            // very step it rejoined. Drain the background checkpoint
+            // writer first: the replacement restores this rank's EF
+            // planes from the snapshot we are about to leave behind.
+            if let Some(w) = ckptr.as_ref() {
+                let _ = w.flush();
+            }
             eprintln!("rank {rank}: --die-at-step {step}: aborting process");
             std::process::abort();
         }
@@ -1366,30 +1450,93 @@ fn train_rank(
                         return Err(anyhow::anyhow!("step {step}: gradient exchange failed: {e}"));
                     }
                     attempt += 1;
-                    recoveries += 1;
                     let velocity = opt.velocity_tensors(&sizes_fwd);
-                    recover_from_peer_loss(
+                    let dead = recover_prologue(
                         comm,
                         cfg,
-                        meta,
-                        &setup.profile,
-                        fits,
                         step,
                         &e,
                         &mut exchange,
-                        &mut driver,
+                        driver.as_ref(),
                         &params,
                         &velocity,
                         state_backup.as_deref().unwrap_or(&[]),
                         ckpt_dir.as_deref(),
                         rank,
                     )?;
-                    // The shrink changed the ownership map: every element
-                    // span moves to its new owner, and spans whose owner
-                    // died restart momentum at zero on every survivor.
-                    if let Opt::Sharded(o) = &opt {
-                        let fresh = reshard_sharded(comm, o, momentum, &exchange)?;
-                        opt = Opt::Sharded(fresh);
+                    // Prefer growing the world back over shrinking it:
+                    // when a rejoin window is configured, every survivor
+                    // re-runs the rendezvous at full world and waits for
+                    // a replacement launched with `--join`. Only the
+                    // full-world TCP group can re-grow (a previous shrink
+                    // renumbered ranks; rank 0 must survive to host the
+                    // rendezvous and stream the snapshot).
+                    let try_rejoin = policy.rejoin_wait_secs > 0
+                        && matches!(cfg.transport, TransportKind::Tcp)
+                        && comm.world() == cfg.workers
+                        && !dead.contains(&0);
+                    let mut rejoined = false;
+                    if try_rejoin {
+                        let snapshot = (comm.rank() == 0).then(|| {
+                            build_checkpoint(
+                                step,
+                                comm.world(),
+                                0,
+                                cfg,
+                                &exchange,
+                                driver.as_ref(),
+                                &params,
+                                &velocity,
+                            )
+                        });
+                        match join::hot_rejoin_survivor(
+                            comm,
+                            cfg,
+                            step,
+                            &dead,
+                            snapshot.as_ref(),
+                            params_digest(&params),
+                        ) {
+                            Ok(()) => {
+                                rejoined = true;
+                                joins += 1;
+                                eprintln!(
+                                    "rank {rank}: peers {dead:?} hot re-joined at step {step}; \
+                                     continuing at full world {}",
+                                    comm.world()
+                                );
+                            }
+                            Err(join_err) => eprintln!(
+                                "rank {rank}: hot re-join at step {step} failed ({join_err}); \
+                                 falling back to elastic shrink"
+                            ),
+                        }
+                    }
+                    if !rejoined {
+                        recoveries += 1;
+                        shrink_after_peer_loss(
+                            comm,
+                            cfg,
+                            meta,
+                            &setup.profile,
+                            fits,
+                            step,
+                            &dead,
+                            &mut exchange,
+                            &mut driver,
+                            &params,
+                            rank,
+                        )?;
+                        // The shrink changed the ownership map: every
+                        // element span moves to its new owner, and spans
+                        // whose owner died restart momentum at zero on
+                        // every survivor. A rejoin keeps the world and the
+                        // ownership map intact (the joiner restored its
+                        // own spans from disk), so it needs no reshard.
+                        if let Opt::Sharded(o) = &opt {
+                            let fresh = reshard_sharded(comm, o, momentum, &exchange)?;
+                            opt = Opt::Sharded(fresh);
+                        }
                     }
                     // Rewind the gradient stream so the retried step draws
                     // the same per-rank gradients it failed with.
@@ -1444,14 +1591,15 @@ fn train_rank(
             });
         }
 
-        // Interval snapshot, written after the optimizer applied `step`
-        // (so it records `step + 1` completed steps). Every rank writes
-        // its own file at the same boundary — the agreement a later
-        // `--resume` cross-checks.
-        if let Some(dir) = &ckpt_dir {
-            if policy.checkpoint_interval > 0 && (step + 1) % policy.checkpoint_interval == 0 {
-                write_checkpoint(
-                    dir,
+        // Interval snapshot, taken after the optimizer applied `step` (so
+        // it records `step + 1` completed steps). Every rank snapshots
+        // its own state at the same boundary — the agreement a later
+        // `--resume` (or hot `--join`) cross-checks. Only the state clone
+        // happens here; the background writer serializes it (re-rendering
+        // only planes whose bits changed) and persists it atomically.
+        if let (Some(dir), Some(w)) = (&ckpt_dir, &ckptr) {
+            if (step + 1) % policy.checkpoint_interval == 0 {
+                let ckpt = build_checkpoint(
                     step + 1,
                     comm.world(),
                     rank,
@@ -1460,7 +1608,8 @@ fn train_rank(
                     driver.as_ref(),
                     &params,
                     &opt.velocity_tensors(&sizes_fwd),
-                )?;
+                );
+                w.submit(Checkpoint::rank_path(dir, rank), ckpt)?;
             }
         }
     }
@@ -1514,6 +1663,16 @@ fn train_rank(
     let optimizer_state_bytes = opt.state_bytes(total_params);
     let codec_state_bytes: u64 = exchange.flat_state().iter().map(|p| 4 * p.len() as u64).sum();
     let peak_memory_bytes = 8 * total_params as u64 + optimizer_state_bytes + codec_state_bytes;
+    // Drain the background checkpoint writer (surfacing any write error it
+    // latched) and report its accumulated write time — the cost the hot
+    // path no longer pays.
+    let ckpt_async_write_secs = match &ckptr {
+        Some(w) => {
+            w.flush()?;
+            w.write_secs()
+        }
+        None => 0.0,
+    };
     Ok(RunResult {
         rank,
         records,
@@ -1534,10 +1693,12 @@ fn train_rank(
         param_digest: params_digest(&params),
         world_at_end: comm.world(),
         recoveries,
+        joins,
         resumed_from_step: restore.as_ref().map(|c| c.step),
         exchange_mode: cfg.exchange_mode,
         optimizer_state_bytes,
         peak_memory_bytes,
+        ckpt_async_write_secs,
     })
 }
 
@@ -1561,10 +1722,14 @@ fn bootstrap_generation() -> u64 {
 ///   single-machine case).
 pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
     let setup = prepare_setup(cfg)?;
+    anyhow::ensure!(
+        !cfg.policy.join || matches!(cfg.transport, TransportKind::Tcp),
+        "--join requires --transport tcp: a hot joiner re-HELLOs into a live process group"
+    );
     match cfg.transport {
         TransportKind::InProc => {
             let results: Vec<anyhow::Result<RunResult>> =
-                run_comm_group(cfg.workers, |comm: &mut Comm| train_rank(comm, cfg, &setup));
+                run_comm_group(cfg.workers, |comm: &mut Comm| train_rank(comm, cfg, &setup, None));
             let mut rank0 = None;
             for r in results {
                 let r = r.map_err(|e| anyhow::anyhow!("worker failed: {e}"))?;
@@ -1591,6 +1756,7 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 timeout: std::time::Duration::from_secs(cfg.bootstrap_timeout_secs.max(1)),
                 generation: bootstrap_generation(),
                 faults: cfg.policy.fault_plan()?,
+                config_token: Some(join::config_token(cfg)),
             };
             let (ep, peer_nodes) = tcp_endpoint_with_nodes(&tcp_cfg, None)?;
             // Cross-check: every peer must have been launched with the
@@ -1608,7 +1774,15 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<RunResult> {
                 );
             }
             let mut comm = Comm::new(ep);
-            let result = train_rank(&mut comm, cfg, &setup)?;
+            // A `--join` process's bootstrap WAS the group's re-rendezvous;
+            // collect the snapshot stream before entering the training
+            // loop at the announced resume step.
+            let join_ckpt = if cfg.policy.join {
+                Some(join::receive_join_snapshot(&mut comm, cfg)?)
+            } else {
+                None
+            };
+            let result = train_rank(&mut comm, cfg, &setup, join_ckpt)?;
             // Final barrier: no rank tears its sockets down while a peer
             // still has collectives in flight.
             comm.barrier()?;

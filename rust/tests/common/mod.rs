@@ -1,8 +1,10 @@
 //! Shared harness for the cross-mode equivalence suites
-//! (`tests/{pipeline,transport,hierarchy,simd,sharded}_equivalence.rs` and
-//! `tests/codec_choice.rs`): the transport-selecting runners, the canonical
-//! codec list, the per-suite deterministic gradient fixtures, and the
-//! bit-exact comparison.
+//! (`tests/{pipeline,transport,hierarchy,simd,sharded}_equivalence.rs`,
+//! `tests/codec_choice.rs`, and the chaos suites `tests/elastic.rs` /
+//! `tests/join.rs` / `tests/faults_reroute.rs`): the transport-selecting
+//! runners, the canonical codec list, the per-suite deterministic gradient
+//! fixtures, the bit-exact comparison, the faulty-TCP thread-group runner,
+//! and the real-process [`ChaosHarness`].
 //!
 //! Every suite keeps its historical RNG seed (passed in by the caller) so
 //! the shared helpers reproduce exactly the gradient streams the suites
@@ -10,10 +12,16 @@
 #![allow(dead_code)]
 
 use mergecomp::collectives::{
-    run_comm_group, run_comm_group_tcp, run_group, run_tcp_group, Comm, Endpoint,
+    run_comm_group, run_comm_group_tcp, run_group, run_tcp_group, tcp_endpoint_with_nodes, Comm,
+    Endpoint, FaultPlan, TcpConfig,
 };
 use mergecomp::compression::{CodecKind, Collective};
+use mergecomp::config::load_json;
+use mergecomp::training::{launch_local, LaunchOptions, LaunchReport};
+use mergecomp::util::json::Value;
 use mergecomp::util::rng::Xoshiro256;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 /// Which wire the collectives run over: the in-process channel mesh or
 /// real loopback TCP sockets. The equivalence contracts must hold on both.
@@ -113,6 +121,144 @@ pub fn step_grads_for(
             g
         })
         .collect()
+}
+
+/// Run a fresh `world`-rank loopback TCP group — one OS thread per rank,
+/// real sockets, the production bootstrap — optionally injecting an
+/// on-wire [`FaultPlan`] below every rank's transport (exactly as
+/// `--faults` would inject it in a training run), and return every rank's
+/// result of `f`. The fault-plan twin of [`run_comm_on`]'s TCP arm.
+pub fn run_comm_tcp_faulty<T: Send>(
+    world: usize,
+    faults: Option<FaultPlan>,
+    f: impl Fn(&mut Comm) -> T + Send + Sync,
+) -> Vec<T> {
+    let listener =
+        std::net::TcpListener::bind("127.0.0.1:0").expect("binding loopback rendezvous");
+    let rendezvous = listener.local_addr().expect("rendezvous addr").to_string();
+    let mut hosted = Some(listener);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let hosted = if rank == 0 { hosted.take() } else { None };
+                let rendezvous = rendezvous.clone();
+                let faults = faults.clone();
+                let f = &f;
+                scope.spawn(move || {
+                    let cfg = TcpConfig { rank, world, rendezvous, faults, ..TcpConfig::default() };
+                    let (ep, _nodes) =
+                        tcp_endpoint_with_nodes(&cfg, hosted).expect("tcp bootstrap");
+                    let mut comm = Comm::new(ep);
+                    f(&mut comm)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    })
+}
+
+/// Spawn-kill-rejoin chaos over real worker *processes*: a thin builder on
+/// the [`launch_local`] supervisor that spawns a `--transport tcp` world of
+/// `mergecomp train` processes, optionally hard-kills chosen ranks at
+/// chosen steps (`--die-at-step`, a `std::process::abort`
+/// indistinguishable from SIGKILL), optionally hot re-joins them
+/// (`--join` respawn with a bumped generation), and hands back the
+/// aggregate report plus each rank's full RunResult JSON.
+pub struct ChaosHarness {
+    world: usize,
+    out_dir: PathBuf,
+    train_flags: Vec<String>,
+    expect_dead: Vec<usize>,
+    rejoin: Vec<usize>,
+    timeout: Duration,
+}
+
+impl ChaosHarness {
+    /// A fresh harness for `world` worker processes; `tag` names the
+    /// scratch directory for per-rank results and logs.
+    pub fn new(tag: &str, world: usize) -> ChaosHarness {
+        let out_dir =
+            std::env::temp_dir().join(format!("mergecomp-chaos-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&out_dir);
+        ChaosHarness {
+            world,
+            out_dir,
+            train_flags: Vec::new(),
+            expect_dead: Vec::new(),
+            rejoin: Vec::new(),
+            timeout: Duration::from_secs(240),
+        }
+    }
+
+    /// Append train flags, forwarded verbatim to every worker.
+    pub fn flags(mut self, flags: &[&str]) -> ChaosHarness {
+        self.train_flags.extend(flags.iter().map(|s| s.to_string()));
+        self
+    }
+
+    /// Hard-abort `rank` at the top of `step`. The rank's nonzero exit and
+    /// missing result are expected and excluded from the aggregate verdict
+    /// (combine with a `--elastic` flag so the survivors continue).
+    pub fn kill_rank(mut self, rank: usize, step: usize) -> ChaosHarness {
+        self.train_flags.extend(
+            ["--die-at-step", &step.to_string(), "--die-rank", &rank.to_string()]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        self.expect_dead.push(rank);
+        self
+    }
+
+    /// Respawn `rank` once with `--join` after it dies. The replacement's
+    /// exit code and digest stand in for the rank in the verdict, so the
+    /// rank is no longer expected dead: a failed hot re-join fails the run.
+    pub fn rejoin_rank(mut self, rank: usize) -> ChaosHarness {
+        self.expect_dead.retain(|&r| r != rank);
+        self.rejoin.push(rank);
+        self
+    }
+
+    /// The scratch directory (also handy as a `--checkpoint-dir` parent).
+    pub fn out_dir(&self) -> &Path {
+        &self.out_dir
+    }
+
+    /// Spawn the world over loopback TCP, supervise it to completion, and
+    /// return the per-rank outcomes plus the aggregate verdict.
+    pub fn run(&self) -> LaunchReport {
+        let opts = LaunchOptions {
+            binary: PathBuf::from(env!("CARGO_BIN_EXE_mergecomp")),
+            world: self.world,
+            rendezvous: None,
+            out_dir: self.out_dir.clone(),
+            train_flags: self.train_flags.clone(),
+            timeout: self.timeout,
+            expect_dead: self.expect_dead.clone(),
+            rejoin: self.rejoin.clone(),
+        };
+        launch_local(&opts).expect("launching chaos world")
+    }
+
+    /// Rank `rank`'s full RunResult JSON from `report` (panics with the
+    /// rank's log path if it left none — it died or never wrote).
+    pub fn rank_result(&self, report: &LaunchReport, rank: usize) -> Value {
+        let out = &report.ranks[rank];
+        load_json(&out.out_path).unwrap_or_else(|e| {
+            panic!(
+                "rank {rank} left no RunResult ({e}); exit code {:?}, log at {}",
+                out.exit_code,
+                out.log_path.display()
+            )
+        })
+    }
+
+    /// Remove the scratch directory.
+    pub fn cleanup(&self) {
+        let _ = std::fs::remove_dir_all(&self.out_dir);
+    }
 }
 
 /// Bit-exact comparison (== on f32 bit patterns distinguishes everything

@@ -17,14 +17,13 @@
 //!    dead rank) from the last full-world interval snapshot and reproduces
 //!    the uninterrupted run's digest exactly.
 
-use mergecomp::compression::CodecKind;
-use mergecomp::config::{load_json, RunPolicy, ScheduleSpec, SchedulingMode, TrainConfig};
-use mergecomp::training::{launch_local, train, ExchangeMode, LaunchOptions};
-use std::path::PathBuf;
-use std::time::Duration;
+mod common;
 
-/// The worker binary cargo built for this test run.
-const BIN: &str = env!("CARGO_BIN_EXE_mergecomp");
+use common::ChaosHarness;
+use mergecomp::compression::CodecKind;
+use mergecomp::config::{RunPolicy, ScheduleSpec, SchedulingMode, TrainConfig};
+use mergecomp::training::{train, ExchangeMode};
+use std::path::PathBuf;
 
 fn tmp_dir(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("mergecomp-elastic-{tag}-{}", std::process::id()))
@@ -82,6 +81,23 @@ fn resume_from_interval_checkpoint_is_bit_exact_inproc() {
     let _ = std::fs::remove_dir_all(&ckpt);
 }
 
+/// The shared worker flags for the process-level chaos runs: same
+/// deterministic config as [`base_cfg`], as CLI flags.
+const CHAOS_FLAGS: [&str; 12] = [
+    "--synthetic",
+    "tiny",
+    "--codec",
+    "efsignsgd",
+    "--schedule",
+    "naive:2",
+    "--sched-mode",
+    "fixed",
+    "--steps",
+    "6",
+    "--log-every",
+    "6",
+];
+
 #[test]
 fn kill_one_rank_then_rejoin_via_checkpointed_restart_over_tcp() {
     let world = 4;
@@ -89,39 +105,9 @@ fn kill_one_rank_then_rejoin_via_checkpointed_restart_over_tcp() {
     let _ = std::fs::remove_dir_all(&ckpt);
     let ckpt_flag = ckpt.to_string_lossy().into_owned();
 
-    let flags = |extra: &[&str]| -> Vec<String> {
-        let mut v: Vec<String> = [
-            "--synthetic",
-            "tiny",
-            "--codec",
-            "efsignsgd",
-            "--schedule",
-            "naive:2",
-            "--sched-mode",
-            "fixed",
-            "--steps",
-            "6",
-            "--log-every",
-            "6",
-        ]
-        .iter()
-        .map(|s| s.to_string())
-        .collect();
-        v.extend(extra.iter().map(|s| s.to_string()));
-        v
-    };
-
     // Reference: the same config uninterrupted.
-    let ref_opts = LaunchOptions {
-        binary: BIN.into(),
-        world,
-        rendezvous: None,
-        out_dir: tmp_dir("chaos-ref"),
-        train_flags: flags(&[]),
-        timeout: Duration::from_secs(240),
-        expect_dead: vec![],
-    };
-    let ref_report = launch_local(&ref_opts).unwrap();
+    let reference = ChaosHarness::new("elastic-ref", world).flags(&CHAOS_FLAGS);
+    let ref_report = reference.run();
     assert!(ref_report.ok(), "reference run failed: {ref_report:?}");
     let want_digest = ref_report.ranks[0].param_digest.clone().unwrap();
 
@@ -130,33 +116,18 @@ fn kill_one_rank_then_rejoin_via_checkpointed_restart_over_tcp() {
     // and finish at world 3. `--checkpoint-interval 4` over 6 steps means
     // the main snapshot dir is never overwritten post-shrink, so it still
     // holds a consistent full-world boundary for the restart below.
-    let chaos_opts = LaunchOptions {
-        binary: BIN.into(),
-        world,
-        rendezvous: None,
-        out_dir: tmp_dir("chaos-run"),
-        train_flags: flags(&[
-            "--elastic",
-            "--checkpoint-dir",
-            &ckpt_flag,
-            "--checkpoint-interval",
-            "4",
-            "--die-at-step",
-            "5",
-            "--die-rank",
-            "2",
-        ]),
-        timeout: Duration::from_secs(240),
-        expect_dead: vec![2],
-    };
-    let chaos = launch_local(&chaos_opts).unwrap();
+    let chaos_run = ChaosHarness::new("elastic-chaos", world)
+        .flags(&CHAOS_FLAGS)
+        .flags(&["--elastic", "--checkpoint-dir", &ckpt_flag, "--checkpoint-interval", "4"])
+        .kill_rank(2, 5);
+    let chaos = chaos_run.run();
     assert_ne!(chaos.ranks[2].exit_code, Some(0), "rank 2 was supposed to die");
     assert!(
         chaos.all_exited_zero,
         "survivors did not all exit 0 — degraded continuation failed: {chaos:?}"
     );
     assert!(chaos.digests_match, "survivor digests diverged: {chaos:?}");
-    let rank0 = load_json(&chaos.ranks[0].out_path).unwrap();
+    let rank0 = chaos_run.rank_result(&chaos, 0);
     assert_eq!(rank0.get("world_at_end").and_then(|v| v.as_usize()), Some(3));
     assert!(
         rank0.get("recoveries").and_then(|v| v.as_usize()).unwrap_or(0) >= 1,
@@ -167,16 +138,10 @@ fn kill_one_rank_then_rejoin_via_checkpointed_restart_over_tcp() {
     // (including the one that died) restores the step-4 full-world
     // snapshot and replays steps 4..6 — the digest must be bit-identical
     // to the uninterrupted reference.
-    let rejoin_opts = LaunchOptions {
-        binary: BIN.into(),
-        world,
-        rendezvous: None,
-        out_dir: tmp_dir("chaos-rejoin"),
-        train_flags: flags(&["--elastic", "--checkpoint-dir", &ckpt_flag, "--resume"]),
-        timeout: Duration::from_secs(240),
-        expect_dead: vec![],
-    };
-    let rejoin = launch_local(&rejoin_opts).unwrap();
+    let restart = ChaosHarness::new("elastic-restart", world)
+        .flags(&CHAOS_FLAGS)
+        .flags(&["--elastic", "--checkpoint-dir", &ckpt_flag, "--resume"]);
+    let rejoin = restart.run();
     assert!(rejoin.ok(), "checkpointed restart failed: {rejoin:?}");
     for r in &rejoin.ranks {
         assert_eq!(
@@ -186,12 +151,13 @@ fn kill_one_rank_then_rejoin_via_checkpointed_restart_over_tcp() {
             r.rank
         );
     }
-    let rank0 = load_json(&rejoin.ranks[0].out_path).unwrap();
+    let rank0 = restart.rank_result(&rejoin, 0);
     assert_eq!(rank0.get("resumed_from_step").and_then(|v| v.as_usize()), Some(4));
 
-    for d in [&ref_opts.out_dir, &chaos_opts.out_dir, &rejoin_opts.out_dir, &ckpt] {
-        let _ = std::fs::remove_dir_all(d);
+    for h in [&reference, &chaos_run, &restart] {
+        h.cleanup();
     }
+    let _ = std::fs::remove_dir_all(&ckpt);
 }
 
 /// `base_cfg` with the sharded exchange: reduce-scatter + parameter
@@ -286,71 +252,27 @@ fn kill_one_rank_under_sharded_elastic_then_rejoin_over_tcp() {
     let ckpt = tmp_dir("sharded-chaos-ckpt");
     let _ = std::fs::remove_dir_all(&ckpt);
     let ckpt_flag = ckpt.to_string_lossy().into_owned();
+    let sharded = ["--exchange-mode", "sharded"];
 
-    let flags = |extra: &[&str]| -> Vec<String> {
-        let mut v: Vec<String> = [
-            "--synthetic",
-            "tiny",
-            "--codec",
-            "efsignsgd",
-            "--schedule",
-            "naive:2",
-            "--sched-mode",
-            "fixed",
-            "--exchange-mode",
-            "sharded",
-            "--steps",
-            "6",
-            "--log-every",
-            "6",
-        ]
-        .iter()
-        .map(|s| s.to_string())
-        .collect();
-        v.extend(extra.iter().map(|s| s.to_string()));
-        v
-    };
-
-    let ref_opts = LaunchOptions {
-        binary: BIN.into(),
-        world,
-        rendezvous: None,
-        out_dir: tmp_dir("sharded-chaos-ref"),
-        train_flags: flags(&[]),
-        timeout: Duration::from_secs(240),
-        expect_dead: vec![],
-    };
-    let ref_report = launch_local(&ref_opts).unwrap();
+    let reference =
+        ChaosHarness::new("sharded-elastic-ref", world).flags(&CHAOS_FLAGS).flags(&sharded);
+    let ref_report = reference.run();
     assert!(ref_report.ok(), "sharded reference run failed: {ref_report:?}");
     let want_digest = ref_report.ranks[0].param_digest.clone().unwrap();
 
-    let chaos_opts = LaunchOptions {
-        binary: BIN.into(),
-        world,
-        rendezvous: None,
-        out_dir: tmp_dir("sharded-chaos-run"),
-        train_flags: flags(&[
-            "--elastic",
-            "--checkpoint-dir",
-            &ckpt_flag,
-            "--checkpoint-interval",
-            "4",
-            "--die-at-step",
-            "5",
-            "--die-rank",
-            "2",
-        ]),
-        timeout: Duration::from_secs(240),
-        expect_dead: vec![2],
-    };
-    let chaos = launch_local(&chaos_opts).unwrap();
+    let chaos_run = ChaosHarness::new("sharded-elastic-chaos", world)
+        .flags(&CHAOS_FLAGS)
+        .flags(&sharded)
+        .flags(&["--elastic", "--checkpoint-dir", &ckpt_flag, "--checkpoint-interval", "4"])
+        .kill_rank(2, 5);
+    let chaos = chaos_run.run();
     assert_ne!(chaos.ranks[2].exit_code, Some(0), "rank 2 was supposed to die");
     assert!(
         chaos.all_exited_zero,
         "survivors did not all exit 0 — sharded degraded continuation failed: {chaos:?}"
     );
     assert!(chaos.digests_match, "sharded survivor digests diverged: {chaos:?}");
-    let rank0 = load_json(&chaos.ranks[0].out_path).unwrap();
+    let rank0 = chaos_run.rank_result(&chaos, 0);
     assert_eq!(rank0.get("world_at_end").and_then(|v| v.as_usize()), Some(3));
     assert_eq!(
         rank0.get("exchange_mode").and_then(|v| v.as_str().map(|s| s.to_string())),
@@ -362,16 +284,11 @@ fn kill_one_rank_under_sharded_elastic_then_rejoin_over_tcp() {
     );
 
     // Full-world rejoin from the step-4 shard-aware snapshots.
-    let rejoin_opts = LaunchOptions {
-        binary: BIN.into(),
-        world,
-        rendezvous: None,
-        out_dir: tmp_dir("sharded-chaos-rejoin"),
-        train_flags: flags(&["--elastic", "--checkpoint-dir", &ckpt_flag, "--resume"]),
-        timeout: Duration::from_secs(240),
-        expect_dead: vec![],
-    };
-    let rejoin = launch_local(&rejoin_opts).unwrap();
+    let restart = ChaosHarness::new("sharded-elastic-restart", world)
+        .flags(&CHAOS_FLAGS)
+        .flags(&sharded)
+        .flags(&["--elastic", "--checkpoint-dir", &ckpt_flag, "--resume"]);
+    let rejoin = restart.run();
     assert!(rejoin.ok(), "sharded checkpointed restart failed: {rejoin:?}");
     for r in &rejoin.ranks {
         assert_eq!(
@@ -381,12 +298,13 @@ fn kill_one_rank_under_sharded_elastic_then_rejoin_over_tcp() {
             r.rank
         );
     }
-    let rank0 = load_json(&rejoin.ranks[0].out_path).unwrap();
+    let rank0 = restart.rank_result(&rejoin, 0);
     assert_eq!(rank0.get("resumed_from_step").and_then(|v| v.as_usize()), Some(4));
 
-    for d in [&ref_opts.out_dir, &chaos_opts.out_dir, &rejoin_opts.out_dir, &ckpt] {
-        let _ = std::fs::remove_dir_all(d);
+    for h in [&reference, &chaos_run, &restart] {
+        h.cleanup();
     }
+    let _ = std::fs::remove_dir_all(&ckpt);
 }
 
 #[test]

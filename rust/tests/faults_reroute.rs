@@ -9,11 +9,12 @@
 //! rank=2,delay=10ms` would inject it in a training run, so what this test
 //! measures is the production wiring, not a simulation.
 
-use mergecomp::collectives::{tcp_endpoint_with_nodes, Comm, FaultPlan, TcpConfig};
+mod common;
+
+use mergecomp::collectives::FaultPlan;
 use mergecomp::scheduler::costmodel::CostSampler;
 use mergecomp::scheduler::objective::AnalyticObjective;
 use mergecomp::scheduler::{mergecomp_search, FittedCost, SearchParams};
-use std::net::TcpListener;
 use std::time::{Duration, Instant};
 
 const WORLD: usize = 4;
@@ -22,55 +23,35 @@ const WORLD: usize = 4;
 /// ~6 × this on top of the clean time — far above loopback noise.
 const DELAY: Duration = Duration::from_millis(10);
 
-/// Run a fresh 4-rank loopback TCP group (one OS thread per rank, real
-/// sockets), time `allreduce_f32` at several payload sizes on every rank,
-/// and return rank 0's fitted `B + γ·x` collective cost.
+/// Run a fresh 4-rank loopback TCP group (the shared
+/// [`common::run_comm_tcp_faulty`] thread-per-rank runner), time
+/// `allreduce_f32` at several payload sizes on every rank, and return
+/// rank 0's fitted `B + γ·x` collective cost.
 fn measure_comm_fit(faults: Option<FaultPlan>) -> FittedCost {
-    let listener = TcpListener::bind("127.0.0.1:0").expect("binding loopback rendezvous");
-    let rendezvous = listener.local_addr().expect("rendezvous addr").to_string();
-    let mut hosted = Some(listener);
     let sizes = [4 * 1024usize, 64 * 1024, 256 * 1024];
-
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..WORLD)
-            .map(|rank| {
-                let hosted = if rank == 0 { hosted.take() } else { None };
-                let rendezvous = rendezvous.clone();
-                let faults = faults.clone();
-                scope.spawn(move || -> anyhow::Result<FittedCost> {
-                    let cfg = TcpConfig {
-                        rank,
-                        world: WORLD,
-                        rendezvous,
-                        faults,
-                        ..TcpConfig::default()
-                    };
-                    let (ep, _nodes) = tcp_endpoint_with_nodes(&cfg, hosted)?;
-                    let mut comm = Comm::new(ep);
-                    let mut sampler = CostSampler::new();
-                    for &n in &sizes {
-                        let mut buf = vec![1.0f32; n];
-                        // One untimed pass per size warms sockets/pools.
-                        comm.allreduce_f32(&mut buf)?;
-                        let mut best = f64::INFINITY;
-                        for _ in 0..3 {
-                            let t0 = Instant::now();
-                            comm.allreduce_f32(&mut buf)?;
-                            best = best.min(t0.elapsed().as_secs_f64());
-                        }
-                        sampler.record(n, best);
-                    }
-                    comm.barrier()?;
-                    sampler.fit()
-                })
-            })
-            .collect();
-        let mut fits: Vec<FittedCost> = handles
-            .into_iter()
-            .map(|h| h.join().expect("rank thread panicked").expect("rank failed"))
-            .collect();
-        fits.swap_remove(0)
-    })
+    let per_rank = common::run_comm_tcp_faulty(WORLD, faults, |comm| -> anyhow::Result<FittedCost> {
+        let mut sampler = CostSampler::new();
+        for &n in &sizes {
+            let mut buf = vec![1.0f32; n];
+            // One untimed pass per size warms sockets/pools.
+            comm.allreduce_f32(&mut buf)?;
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                comm.allreduce_f32(&mut buf)?;
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            sampler.record(n, best);
+        }
+        comm.barrier()?;
+        sampler.fit()
+    });
+    let mut fits: Vec<FittedCost> = per_rank
+        .into_iter()
+        .enumerate()
+        .map(|(r, res)| res.unwrap_or_else(|e| panic!("rank {r} failed: {e}")))
+        .collect();
+    fits.swap_remove(0)
 }
 
 /// A 12-tensor synthetic model whose backward pass overlaps well with

@@ -1,0 +1,685 @@
+//! Hot re-join conformance: growing the world back online must be
+//! **bit-invisible** — a run that loses a rank and hot re-joins it at
+//! step S finishes with exactly the bits of a run that never failed.
+//!
+//! Four layers pinned here:
+//!
+//! 1. **Engine-level matrix.** A mini training loop (the trainer's exact
+//!    exchange → update → checkpoint choreography) simulates the join at
+//!    step S: the joiner discards all in-memory state, restores replicated
+//!    state from rank 0's snapshot stream (over the live communicator's
+//!    snapshot tags) merged with its own interval checkpoint, and the
+//!    group cross-checks `(step, digest)` — for every paper codec ×
+//!    {inproc, tcp} × {Serial, Pipelined} × {Full, Sharded}.
+//! 2. **Process-level chaos.** A real 4-process TCP world loses rank 2 to
+//!    a hard abort and hot re-joins it via the launcher's `--rejoin`
+//!    supervision; every rank (replacement included) must report the
+//!    never-failed digest at full world.
+//! 3. **Snapshot-stream properties.** Chunk framing round-trips whole
+//!    random-shaped checkpoints (empty planes, ragged chunks, multi-chunk
+//!    payloads); truncation is a typed error, never a resume-from-garbage.
+//! 4. **Async interval checkpoints.** Submitting a snapshot must not
+//!    inflate the step it lands on even when the writer is slow, and the
+//!    trainer must account the background write time in its RunResult.
+
+mod common;
+
+use common::{
+    assert_bit_identical, run_comm_on, small_tensor_sizes, step_grads_for, Backend, ChaosHarness,
+};
+use mergecomp::collectives::snapshot::{decode_header, encode_frames, Assembler};
+use mergecomp::collectives::{
+    recv_snapshot, send_snapshot, tcp_endpoint_with_nodes, Comm, TcpConfig,
+};
+use mergecomp::compression::CodecKind;
+use mergecomp::config::{RunPolicy, ScheduleSpec, SchedulingMode, TrainConfig};
+use mergecomp::coordinator::{AsyncCheckpointer, Checkpoint};
+use mergecomp::scheduler::Partition;
+use mergecomp::training::{
+    params_digest, sharded_update, train, ExchangeMode, GradExchange, PipelineMode, SgdMomentum,
+    ShardedSgdMomentum,
+};
+use mergecomp::util::proptest::{check, gens};
+use mergecomp::util::rng::Xoshiro256;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+const SEED: u64 = 0x6A01_17C0_FFEE;
+const LR: f32 = 0.05;
+const MU: f32 = 0.9;
+const WORLD: usize = 2;
+const STEPS: usize = 5;
+/// The step the joiner re-enters at (so its interval checkpoint carries
+/// `JOIN_AT` completed steps and the group resumes there).
+const JOIN_AT: usize = 3;
+const JOINER: usize = 1;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mergecomp-join-{tag}-{}", std::process::id()))
+}
+
+/// Deterministic rank-independent initial parameters (forward order).
+fn init_params(sizes_fwd: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seed_from_u64(SEED ^ 0xAB);
+    sizes_fwd
+        .iter()
+        .map(|&n| {
+            let mut p = vec![0f32; n];
+            rng.fill_normal_f32(&mut p, 1.0);
+            p
+        })
+        .collect()
+}
+
+/// The per-(rank, step) stateless exchange RNG — same construction in the
+/// reference and the hot-joined run, so a restored rank re-derives the
+/// exact stream it would have used had it never died.
+fn exchange_rng(rank: usize, step: usize) -> Xoshiro256 {
+    Xoshiro256::seed_from_u64(SEED ^ ((rank as u64) << 32) ^ ((step as u64) << 8) ^ 0xE)
+}
+
+/// Checkpoint-format velocity → per-group planes in the engine's merge
+/// order (the trainer's interchange convention: full-length forward-order
+/// tensors, reversed and split by group element counts).
+fn group_planes_from_tensors(velocity_fwd: &[Vec<f32>], group_elems: &[usize]) -> Vec<Vec<f32>> {
+    let mut flat: Vec<f32> = Vec::new();
+    for t in velocity_fwd.iter().rev() {
+        flat.extend_from_slice(t);
+    }
+    let mut planes = Vec::with_capacity(group_elems.len());
+    let mut off = 0;
+    for &n in group_elems {
+        planes.push(flat[off..off + n].to_vec());
+        off += n;
+    }
+    planes
+}
+
+/// The mini-loop's optimizer, mirroring the trainer's full/sharded split.
+enum MiniOpt {
+    Full(SgdMomentum),
+    Sharded(ShardedSgdMomentum),
+}
+
+impl MiniOpt {
+    fn new(
+        xmode: ExchangeMode,
+        exchange: &GradExchange,
+        world: usize,
+        rank: usize,
+        sizes_fwd: &[usize],
+    ) -> MiniOpt {
+        match xmode {
+            ExchangeMode::Full => MiniOpt::Full(SgdMomentum::new(LR, MU, sizes_fwd)),
+            ExchangeMode::Sharded => MiniOpt::Sharded(ShardedSgdMomentum::new(
+                LR,
+                MU,
+                exchange.group_elems(),
+                &exchange.owned_group_ranges(world, rank),
+            )),
+        }
+    }
+
+    /// Velocity in the checkpoint interchange format (full-length
+    /// per-tensor planes, forward order; sharded exports zeros outside
+    /// the owned spans).
+    fn velocity_tensors(&self, sizes_fwd: &[usize]) -> Vec<Vec<f32>> {
+        match self {
+            MiniOpt::Full(o) => o.velocity().to_vec(),
+            MiniOpt::Sharded(o) => {
+                let mut flat: Vec<f32> = Vec::new();
+                for p in o.export_group_planes() {
+                    flat.extend_from_slice(&p);
+                }
+                let mut planes: Vec<Vec<f32>> = Vec::with_capacity(sizes_fwd.len());
+                let mut off = 0;
+                for &n in sizes_fwd.iter().rev() {
+                    planes.push(flat[off..off + n].to_vec());
+                    off += n;
+                }
+                planes.reverse();
+                planes
+            }
+        }
+    }
+
+    fn load(&mut self, velocity: &[Vec<f32>], exchange: &GradExchange) {
+        match self {
+            MiniOpt::Full(o) => o.load_velocity(velocity).unwrap(),
+            MiniOpt::Sharded(o) => o
+                .load_group_planes(&group_planes_from_tensors(velocity, exchange.group_elems()))
+                .unwrap(),
+        }
+    }
+
+    fn update(
+        &mut self,
+        comm: &mut Comm,
+        exchange: &GradExchange,
+        params: &mut [Vec<f32>],
+        grads_bp: &[Vec<f32>],
+    ) {
+        match self {
+            MiniOpt::Full(o) => {
+                let grads_fwd: Vec<Vec<f32>> = grads_bp.iter().rev().cloned().collect();
+                o.step(params, &grads_fwd);
+            }
+            MiniOpt::Sharded(o) => {
+                sharded_update(comm, o, exchange, params, grads_bp).unwrap();
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn mini_ckpt(
+    step: usize,
+    world: usize,
+    rank: usize,
+    kind: CodecKind,
+    xmode: ExchangeMode,
+    exchange: &GradExchange,
+    params: &[Vec<f32>],
+    velocity: Vec<Vec<f32>>,
+) -> Checkpoint {
+    Checkpoint {
+        step,
+        world,
+        rank,
+        seed: SEED,
+        base_codec: kind,
+        bounds: exchange.partition().bounds().to_vec(),
+        routes: exchange.routes().map(|r| r.to_vec()).unwrap_or_default(),
+        codecs: exchange.group_codecs(),
+        schedule_epoch: 0,
+        exchange_mode: xmode,
+        params: params.to_vec(),
+        velocity,
+        codec_state: exchange.flat_state(),
+    }
+}
+
+/// One mini training run per rank: exchange → optimizer step, with the
+/// trainer's state layout. With `join` set, the joiner writes its interval
+/// checkpoint at the `JOIN_AT` boundary, then at the top of step `JOIN_AT`
+/// discards *all* in-memory state and rebuilds it from rank 0's snapshot
+/// stream merged with that local checkpoint — the join protocol's state
+/// choreography over a live communicator — and the whole group runs the
+/// post-join `(step, digest)` cross-check. Returns per-rank final
+/// `(params, exchange state digest)`.
+fn mini_run(
+    kind: CodecKind,
+    backend: Backend,
+    pipeline: PipelineMode,
+    xmode: ExchangeMode,
+    join: bool,
+    dir: &Path,
+) -> Vec<(Vec<Vec<f32>>, u64)> {
+    let sizes_bp = small_tensor_sizes();
+    let sizes_fwd: Vec<usize> = sizes_bp.iter().rev().copied().collect();
+    let partition = Partition::naive_even(sizes_bp.len(), 2);
+    let dir = dir.to_path_buf();
+    run_comm_on(backend, WORLD, move |comm| {
+        let rank = comm.rank();
+        let world = comm.world();
+        let fresh_exchange = || {
+            GradExchange::new(kind, partition.clone(), sizes_bp.clone())
+                .with_mode(pipeline)
+                .with_exchange_mode(xmode)
+        };
+        let mut exchange = fresh_exchange();
+        let mut params = init_params(&sizes_fwd);
+        let mut opt = MiniOpt::new(xmode, &exchange, world, rank, &sizes_fwd);
+        for step in 0..STEPS {
+            if join && step == JOIN_AT {
+                if rank == 0 {
+                    // Survivor half: stream the replicated state, re-ranked
+                    // for the joiner, over the snapshot tags.
+                    let mut c = mini_ckpt(
+                        JOIN_AT,
+                        world,
+                        0,
+                        kind,
+                        xmode,
+                        &exchange,
+                        &params,
+                        opt.velocity_tensors(&sizes_fwd),
+                    );
+                    c.rank = JOINER;
+                    send_snapshot(&mut comm.ep, JOINER, &c.to_bytes()).unwrap();
+                }
+                if rank == JOINER {
+                    // The process death: every in-memory plane is gone.
+                    params.iter_mut().flatten().for_each(|v| *v = f32::NAN);
+                    exchange = fresh_exchange();
+                    opt = MiniOpt::new(xmode, &exchange, world, rank, &sizes_fwd);
+
+                    // Joiner half: replicated state off the wire,
+                    // rank-local state (EF/codec planes, sharded velocity)
+                    // from this rank's own interval checkpoint.
+                    let streamed =
+                        Checkpoint::from_bytes(&recv_snapshot(&mut comm.ep, 0).unwrap()).unwrap();
+                    let local = Checkpoint::load(&Checkpoint::rank_path(&dir, rank)).unwrap();
+                    assert_eq!(streamed.step, JOIN_AT);
+                    assert_eq!(streamed.rank, JOINER);
+                    assert_eq!(local.step, streamed.step);
+                    assert_eq!(local.bounds, streamed.bounds);
+                    assert_eq!(local.codecs, streamed.codecs);
+                    let mut merged = streamed;
+                    merged.codec_state = local.codec_state;
+                    if xmode == ExchangeMode::Sharded {
+                        merged.velocity = local.velocity;
+                    }
+                    params = merged.params.clone();
+                    exchange.load_flat_state(&merged.codec_state).unwrap();
+                    opt.load(&merged.velocity, &exchange);
+                }
+                // The whole group: post-join barrier and (step, digest)
+                // cross-check, as in the real protocol.
+                comm.barrier().unwrap();
+                let mut tag = Vec::with_capacity(16);
+                tag.extend_from_slice(&(JOIN_AT as u64).to_le_bytes());
+                tag.extend_from_slice(&params_digest(&params).to_le_bytes());
+                let all = comm.allgather(tag.clone()).unwrap();
+                for (peer, t) in all.iter().enumerate() {
+                    assert_eq!(t, &tag, "rank {peer} disagrees on (step, digest) after the join");
+                }
+            }
+
+            let mut grads_bp = step_grads_for(kind, SEED, rank, step, &sizes_bp);
+            let mut rng = exchange_rng(rank, step);
+            exchange.exchange(comm, &mut grads_bp, &mut rng).unwrap();
+            opt.update(comm, &exchange, &mut params, &grads_bp);
+
+            // The interval-checkpoint boundary the join restores from:
+            // only the future joiner needs its file here.
+            if join && rank == JOINER && step + 1 == JOIN_AT {
+                mini_ckpt(
+                    step + 1,
+                    world,
+                    rank,
+                    kind,
+                    xmode,
+                    &exchange,
+                    &params,
+                    opt.velocity_tensors(&sizes_fwd),
+                )
+                .save(&Checkpoint::rank_path(&dir, rank))
+                .unwrap();
+            }
+        }
+        (params, exchange.state_digest())
+    })
+}
+
+/// The conformance check: a hot-joined run's final parameters AND codec
+/// state must be bit-identical to the never-failed run's, on every rank.
+fn check_join_invisible(
+    kind: CodecKind,
+    backend: Backend,
+    pipeline: PipelineMode,
+    xmode: ExchangeMode,
+) {
+    let tag = format!("{}-{:?}-{:?}-{:?}", kind.name(), backend, pipeline, xmode).to_lowercase();
+    let dir = tmp_dir(&tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    let reference = mini_run(kind, backend, pipeline, xmode, false, &dir);
+    let joined = mini_run(kind, backend, pipeline, xmode, true, &dir);
+    for (rank, (r, j)) in reference.iter().zip(&joined).enumerate() {
+        assert_bit_identical(
+            &format!("never-failed vs hot-joined, rank {rank}, {tag}"),
+            kind,
+            &r.0,
+            &j.0,
+        );
+        assert_eq!(
+            r.1, j.1,
+            "{}: exchange state digest diverged after the join (rank {rank}, {tag})",
+            kind.name()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn join_matrix(backend: Backend, xmode: ExchangeMode) {
+    for kind in CodecKind::paper_set() {
+        for pipeline in [PipelineMode::Serial, PipelineMode::Pipelined] {
+            check_join_invisible(kind, backend, pipeline, xmode);
+        }
+    }
+}
+
+#[test]
+fn hot_join_is_bit_invisible_full_inproc() {
+    join_matrix(Backend::InProc, ExchangeMode::Full);
+}
+
+#[test]
+fn hot_join_is_bit_invisible_full_tcp() {
+    join_matrix(Backend::Tcp, ExchangeMode::Full);
+}
+
+#[test]
+fn hot_join_is_bit_invisible_sharded_inproc() {
+    join_matrix(Backend::InProc, ExchangeMode::Sharded);
+}
+
+#[test]
+fn hot_join_is_bit_invisible_sharded_tcp() {
+    join_matrix(Backend::Tcp, ExchangeMode::Sharded);
+}
+
+// ---------------------------------------------------------------------
+// Process-level chaos: real workers, real death, real hot re-join.
+// ---------------------------------------------------------------------
+
+/// Kill rank 2 of a real 4-process TCP world at the top of step 5, let the
+/// launcher respawn it with `--join`, and require the full group — the
+/// replacement included — to finish at full world with the never-failed
+/// run's digest.
+fn process_level_rejoin_case(tag: &str, extra: &[&str]) {
+    let world = 4;
+    let ckpt = tmp_dir(&format!("ckpt-{tag}"));
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let ckpt_flag = ckpt.to_string_lossy().into_owned();
+    let base = [
+        "--synthetic",
+        "tiny",
+        "--codec",
+        "efsignsgd",
+        "--schedule",
+        "naive:2",
+        "--sched-mode",
+        "fixed",
+        "--steps",
+        "8",
+        "--log-every",
+        "8",
+    ];
+
+    let reference = ChaosHarness::new(&format!("proc-ref-{tag}"), world).flags(&base).flags(extra);
+    let ref_report = reference.run();
+    assert!(ref_report.ok(), "reference run failed: {ref_report:?}");
+    let want_digest = ref_report.ranks[0].param_digest.clone().unwrap();
+
+    // `--checkpoint-interval 1` so the dying rank leaves a snapshot at the
+    // exact join boundary; `--rejoin-wait-secs` arms the survivors' grow
+    // path instead of the elastic shrink.
+    let chaos = ChaosHarness::new(&format!("proc-hot-{tag}"), world)
+        .flags(&base)
+        .flags(extra)
+        .flags(&[
+            "--elastic",
+            "--checkpoint-dir",
+            &ckpt_flag,
+            "--checkpoint-interval",
+            "1",
+            "--rejoin-wait-secs",
+            "120",
+        ])
+        .kill_rank(2, 5)
+        .rejoin_rank(2);
+    let report = chaos.run();
+    assert!(
+        report.ok(),
+        "hot re-join run failed (a rank exited nonzero or digests diverged): {report:?}"
+    );
+    for r in &report.ranks {
+        assert_eq!(
+            r.param_digest.as_deref(),
+            Some(want_digest.as_str()),
+            "rank {}: hot-joined digest differs from the never-failed run",
+            r.rank
+        );
+    }
+    let rank0 = chaos.rank_result(&report, 0);
+    assert_eq!(
+        rank0.get("world_at_end").and_then(|v| v.as_usize()),
+        Some(world),
+        "the group shrank instead of re-growing: {rank0:?}"
+    );
+    assert!(
+        rank0.get("joins").and_then(|v| v.as_usize()).unwrap_or(0) >= 1,
+        "rank 0 reported no hot re-join: {rank0:?}"
+    );
+    assert_eq!(
+        rank0.get("recoveries").and_then(|v| v.as_usize()),
+        Some(0),
+        "the survivors took the shrink path, not the join path: {rank0:?}"
+    );
+    let rank2 = chaos.rank_result(&report, 2);
+    assert_eq!(
+        rank2.get("joins").and_then(|v| v.as_usize()),
+        Some(1),
+        "the replacement did not report itself as a joiner: {rank2:?}"
+    );
+    assert_eq!(
+        rank2.get("resumed_from_step").and_then(|v| v.as_usize()),
+        Some(5),
+        "the replacement resumed from the wrong step: {rank2:?}"
+    );
+
+    reference.cleanup();
+    chaos.cleanup();
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn process_level_hot_rejoin_matches_never_failed_run() {
+    process_level_rejoin_case("full", &[]);
+}
+
+#[test]
+fn process_level_sharded_hot_rejoin_matches_never_failed_run() {
+    process_level_rejoin_case("sharded", &["--exchange-mode", "sharded"]);
+}
+
+/// A joiner relaunched with the wrong config must be refused at HELLO on
+/// both sides: the joiner's bootstrap fails with an error naming the flag
+/// to fix, and rank 0 fails (rather than admitting a divergent peer).
+#[test]
+fn mismatched_joiner_config_is_refused_at_hello() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let rendezvous = listener.local_addr().unwrap().to_string();
+    let mut hosted = Some(listener);
+    let errs: Vec<Option<String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|rank| {
+                let hosted = if rank == 0 { hosted.take() } else { None };
+                let rendezvous = rendezvous.clone();
+                scope.spawn(move || {
+                    let token = if rank == 0 {
+                        "seed=0000000000000000:codec=efsignsgd:topo=flat:xmode=full"
+                    } else {
+                        "seed=0000000000000000:codec=qsgd:topo=flat:xmode=full"
+                    };
+                    let cfg = TcpConfig {
+                        rank,
+                        world: 2,
+                        rendezvous,
+                        config_token: Some(token.to_string()),
+                        timeout: Duration::from_secs(30),
+                        ..TcpConfig::default()
+                    };
+                    tcp_endpoint_with_nodes(&cfg, hosted).err().map(|e| e.to_string())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+    });
+    let joiner_err = errs[1].as_ref().expect("the mismatched joiner must be refused, not admitted");
+    assert!(
+        joiner_err.contains("--codec"),
+        "joiner's refusal does not name the offending flag: {joiner_err}"
+    );
+    let host_err = errs[0].as_ref().expect("rank 0 must fail the bootstrap, not admit the peer");
+    assert!(
+        host_err.contains("--codec"),
+        "rank 0's refusal does not name the offending flag: {host_err}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Snapshot-stream properties over whole checkpoints.
+// ---------------------------------------------------------------------
+
+/// A structurally valid checkpoint with arbitrary plane shapes: `sizes`
+/// gives the per-tensor lengths (zeros allowed — empty planes), and the
+/// partition is a naive split so `bounds` always validates.
+fn shaped_ckpt(sizes: &[usize], fill: &mut Xoshiro256) -> Checkpoint {
+    let plane = |n: usize, fill: &mut Xoshiro256| {
+        let mut p = vec![0f32; n];
+        fill.fill_normal_f32(&mut p, 1.0);
+        p
+    };
+    let params: Vec<Vec<f32>> = sizes.iter().map(|&n| plane(n, fill)).collect();
+    let velocity: Vec<Vec<f32>> = sizes.iter().map(|&n| plane(n, fill)).collect();
+    let codec_state: Vec<Vec<f32>> = sizes.iter().map(|&n| plane(n, fill)).collect();
+    Checkpoint {
+        step: 7,
+        world: 4,
+        rank: 2,
+        seed: SEED,
+        base_codec: CodecKind::EfSignSgd,
+        bounds: Partition::naive_even(sizes.len(), 2).bounds().to_vec(),
+        routes: vec![],
+        codecs: vec![],
+        schedule_epoch: 3,
+        exchange_mode: ExchangeMode::Full,
+        params,
+        velocity,
+        codec_state,
+    }
+}
+
+#[test]
+fn prop_snapshot_stream_roundtrips_whole_checkpoints() {
+    // Random plane shapes (including empty planes) × chunk sizes that
+    // never divide the payload evenly: the reassembled bytes must parse
+    // back to an equal checkpoint.
+    check(
+        "checkpoint survives the chunked snapshot stream",
+        60,
+        gens::pair(gens::tensor_sizes(1..6, 400), gens::usize_in(3..2000)),
+        |(sizes, chunk_len)| {
+            let mut sizes = sizes.clone();
+            // Force an empty plane into half the cases.
+            if sizes.len() % 2 == 0 {
+                sizes[0] = 0;
+            }
+            let mut fill = Xoshiro256::seed_from_u64(SEED ^ sizes.len() as u64);
+            let ckpt = shaped_ckpt(&sizes, &mut fill);
+            let payload = ckpt.to_bytes();
+            let frames = encode_frames(&payload, *chunk_len);
+            let header = decode_header(&frames[0]).map_err(|e| format!("header: {e}"))?;
+            let mut asm = Assembler::new(header);
+            for chunk in &frames[1..] {
+                asm.push(chunk).map_err(|e| format!("push: {e}"))?;
+            }
+            let bytes = asm.finish().map_err(|e| format!("finish: {e}"))?;
+            if bytes != payload {
+                return Err("reassembled bytes differ from the serialized checkpoint".into());
+            }
+            let got = Checkpoint::from_bytes(&bytes).map_err(|e| format!("from_bytes: {e}"))?;
+            if got != ckpt {
+                return Err("checkpoint changed across the stream".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_truncated_checkpoint_stream_is_a_typed_error() {
+    // Dropping the tail of the stream must surface as a typed transport
+    // error from finish() — never an Ok() that would resume from garbage.
+    check(
+        "truncated checkpoint stream detected",
+        40,
+        gens::pair(gens::tensor_sizes(1..5, 300), gens::usize_in(5..700)),
+        |(sizes, chunk_len)| {
+            let mut fill = Xoshiro256::seed_from_u64(SEED ^ *chunk_len as u64);
+            let payload = shaped_ckpt(sizes, &mut fill).to_bytes();
+            let frames = encode_frames(&payload, *chunk_len);
+            if frames.len() < 2 {
+                return Ok(()); // empty payload: nothing to truncate
+            }
+            let header = decode_header(&frames[0]).unwrap();
+            let mut asm = Assembler::new(header);
+            for chunk in &frames[1..frames.len() - 1] {
+                asm.push(chunk).map_err(|e| format!("honest chunk rejected: {e}"))?;
+            }
+            match asm.finish() {
+                Ok(_) => Err("truncated stream passed validation".into()),
+                Err(e) if e.to_string().contains("truncated") => Ok(()),
+                Err(e) => Err(format!("wrong error for truncation: {e}")),
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Async interval checkpoints: off the hot path, and accounted.
+// ---------------------------------------------------------------------
+
+#[test]
+fn slow_checkpoint_writes_do_not_inflate_the_submitting_step() {
+    let dir = tmp_dir("async-timing");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = Checkpoint::rank_path(&dir, 0);
+    let delay = Duration::from_millis(200);
+    let w = AsyncCheckpointer::with_write_delay(delay);
+    let mut fill = Xoshiro256::seed_from_u64(SEED);
+    let ckpt = shaped_ckpt(&[64, 0, 33], &mut fill);
+    for step in 0..3 {
+        let t0 = Instant::now();
+        w.submit(path.clone(), ckpt.clone()).unwrap();
+        let on_step = t0.elapsed();
+        assert!(
+            on_step < delay / 4,
+            "step {step}: submit took {on_step:?} against a {delay:?} writer — the \
+             checkpoint write is inflating the step it lands on"
+        );
+    }
+    w.flush().unwrap();
+    assert_eq!(w.writes(), 3, "every submitted snapshot must be persisted");
+    assert!(
+        w.write_secs() >= 0.5,
+        "the injected write delay must show up in the accounted background time, got {}",
+        w.write_secs()
+    );
+    // The last submitted snapshot must be on disk, intact.
+    assert_eq!(Checkpoint::load(&path).unwrap(), ckpt);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn run_result_accounts_background_checkpoint_writes() {
+    let dir = tmp_dir("async-accounting");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = TrainConfig {
+        workers: 2,
+        steps: 4,
+        codec: CodecKind::EfSignSgd,
+        schedule: ScheduleSpec::NaiveEven { y: 2 },
+        sched_mode: SchedulingMode::Fixed,
+        synthetic: Some("tiny".to_string()),
+        log_every: 4,
+        policy: RunPolicy {
+            checkpoint_dir: Some(dir.to_string_lossy().into_owned()),
+            checkpoint_interval: 1,
+            ..RunPolicy::default()
+        },
+        ..TrainConfig::default()
+    };
+    let r = train(&cfg).unwrap();
+    assert_eq!(r.joins, 0, "a plain run must not report hot re-joins");
+    assert!(
+        r.ckpt_async_write_secs > 0.0,
+        "4 interval snapshots were written but no background write time was accounted"
+    );
+    // Every interval boundary left a loadable snapshot at the final step.
+    let ckpt = Checkpoint::load(&Checkpoint::rank_path(&dir, 0)).unwrap();
+    assert_eq!(ckpt.step, 4);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -47,6 +47,7 @@ fn four_tcp_processes_match_inproc_bit_exactly() {
         .collect(),
         timeout: Duration::from_secs(240),
         expect_dead: vec![],
+        rejoin: vec![],
     };
     let report = launch_local(&opts).unwrap();
     for r in &report.ranks {
@@ -98,6 +99,7 @@ fn launcher_reports_failing_ranks_instead_of_hanging() {
             .collect(),
         timeout: Duration::from_secs(120),
         expect_dead: vec![],
+        rejoin: vec![],
     };
     let report = launch_local(&opts).unwrap();
     assert!(!report.all_exited_zero);
